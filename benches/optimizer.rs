@@ -1,0 +1,94 @@
+//! Master-side update-rule micro-benchmarks — the L3 request-path hot loop.
+//!
+//! The master apply is memory-bandwidth bound (every algorithm streams 2–4
+//! k-length f32 vectors once); the report prints effective GB/s so the
+//! §Perf pass can compare against the machine's triad roofline.
+//!
+//! Run: cargo bench --bench optimizer [-- <filter>]
+
+use dana::math;
+use dana::optim::{make_algorithm, Algorithm, AlgorithmKind, Step};
+use dana::util::bench::BenchSuite;
+use dana::util::rng::Rng;
+
+const K: usize = 101_386; // mlp_c10 parameter count
+const N_WORKERS: usize = 8;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let theta0: Vec<f32> = (0..K).map(|_| rng.normal() as f32).collect();
+    let grad: Vec<f32> = (0..K).map(|_| 0.01 * rng.normal() as f32).collect();
+    let s = Step { eta: 0.05, gamma: 0.9, lambda: 1.0 };
+
+    let mut b = BenchSuite::new("optimizer");
+
+    // raw fused loops (the primitives every rule composes)
+    let bytes_triad = (3 * K * 4) as u64;
+    {
+        let mut theta = theta0.clone();
+        b.bench_with_bytes("math/apply_update(asgd core)", Some((2 * K * 4) as u64), || {
+            math::apply_update(&mut theta, &grad, 0.05);
+        });
+    }
+    {
+        let mut theta = theta0.clone();
+        let mut v = vec![0.0f32; K];
+        b.bench_with_bytes("math/momentum_step", Some(bytes_triad), || {
+            math::momentum_step(&mut theta, &mut v, &grad, 0.9, 0.05);
+        });
+    }
+    {
+        let mut theta = theta0.clone();
+        let mut v = vec![0.0f32; K];
+        let mut vsum = vec![0.0f32; K];
+        b.bench_with_bytes("math/dana_fused_update", Some((4 * K * 4) as u64), || {
+            math::dana_fused_update(&mut theta, &mut v, &mut vsum, &grad, 0.9, 0.05);
+        });
+    }
+    {
+        let mut hat = vec![0.0f32; K];
+        let vsum = theta0.clone();
+        b.bench_with_bytes("math/lookahead(send path)", Some(bytes_triad), || {
+            math::lookahead(&mut hat, &theta0, &vsum, 0.9, 0.05);
+        });
+    }
+    {
+        let mut g = grad.clone();
+        b.bench_with_bytes("math/dc_adjust", Some(bytes_triad), || {
+            math::dc_adjust(&mut g, &theta0, &theta0, 1.0);
+        });
+    }
+    {
+        b.bench_with_bytes("math/sub_norm(gap metric)", Some((2 * K * 4) as u64), || {
+            std::hint::black_box(math::sub_norm(&theta0, &grad));
+        });
+    }
+
+    // full master_apply per algorithm (one push through the trait object)
+    for kind in AlgorithmKind::ALL {
+        let mut alg = make_algorithm(kind, &theta0, N_WORKERS);
+        let sent = theta0.clone();
+        let mut w = 0usize;
+        b.bench(&format!("master_apply/{}", kind.name()), || {
+            alg.master_apply(w, &grad, &sent, s);
+            w = (w + 1) % N_WORKERS;
+        });
+    }
+
+    // the O(k) incremental v0 (paper Appendix A.2) vs the naive O(kN) sum
+    {
+        use dana::optim::dana_zero::DanaZero;
+        let mut d = DanaZero::new(&theta0, N_WORKERS);
+        for w in 0..N_WORKERS {
+            d.master_apply(w, &grad, &theta0, s);
+        }
+        b.bench("dana_vsum/incremental(O(k))", || {
+            d.master_apply(0, &grad, &theta0, s);
+        });
+        b.bench("dana_vsum/full_recompute(O(kN))", || {
+            std::hint::black_box(d.recompute_vsum());
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,64 @@
+//! PJRT runtime latency: AOT train/eval step execution per variant, plus
+//! the DANA-master-update-as-XLA-kernel ablation (native fused loop vs the
+//! L1 Pallas kernel executed through PJRT).
+//!
+//! Run: cargo bench --bench runtime [-- <filter>]   (needs `make artifacts`)
+
+use dana::config::default_artifacts_dir;
+use dana::runtime::{Engine, Input};
+use dana::util::bench::BenchSuite;
+use dana::util::rng::Rng;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("runtime bench skipped: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::cpu(&dir).unwrap();
+    let mut b = BenchSuite::new("runtime");
+
+    for name in ["mlp_c10_ref", "mlp_c10", "mlp_inet_ref", "lm_small_ref"] {
+        let model = engine.load_model(name).unwrap();
+        let v = engine.manifest().variant(name).unwrap().clone();
+        let params = engine.init_params(name).unwrap();
+        let gy = dana::runtime::manifest::read_i32_file(&v.golden_y).unwrap();
+        if v.x_dtype == "f32" {
+            let gx = dana::runtime::manifest::read_f32_file(&v.golden_x).unwrap();
+            b.bench(&format!("train_step/{name}"), || {
+                std::hint::black_box(
+                    model.train_step(&params, Input::F32(&gx), &gy).unwrap(),
+                );
+            });
+            b.bench(&format!("eval_step/{name}"), || {
+                std::hint::black_box(model.eval_step(&params, Input::F32(&gx), &gy).unwrap());
+            });
+        } else {
+            let gx = dana::runtime::manifest::read_i32_file(&v.golden_x).unwrap();
+            b.bench(&format!("train_step/{name}"), || {
+                std::hint::black_box(
+                    model.train_step(&params, Input::I32(&gx), &gy).unwrap(),
+                );
+            });
+        }
+    }
+
+    // Ablation: the fused DANA master update, native loop vs PJRT kernel.
+    let uk = engine.load_update_kernel().unwrap();
+    let k = uk.k();
+    let mut rng = Rng::new(3);
+    let mk = |rng: &mut Rng| -> Vec<f32> { (0..k).map(|_| rng.normal() as f32).collect() };
+    let (mut theta, mut v, mut vsum, g) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    b.bench_with_bytes(
+        "master_update_native/131072",
+        Some((4 * k * 4) as u64),
+        || {
+            dana::math::dana_fused_update(&mut theta, &mut v, &mut vsum, &g, 0.9, 0.05);
+        },
+    );
+    b.bench_with_bytes("master_update_xla/131072", Some((4 * k * 4) as u64), || {
+        std::hint::black_box(uk.apply(0.9, 0.05, &theta, &v, &vsum, &g).unwrap());
+    });
+
+    b.finish();
+}

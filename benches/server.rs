@@ -1,0 +1,69 @@
+//! Parameter-server throughput: full pull→push cycles per second per
+//! algorithm, including schedule evaluation, sent-copy bookkeeping and the
+//! metrics tap.  The paper reports the master saturating around ~20 workers
+//! (§C.1); this bench gives the per-update master cost that bounds it.
+//!
+//! Run: cargo bench --bench server [-- <filter>]
+
+use dana::optim::{make_algorithm, AlgorithmKind, LrSchedule, ScheduleConfig};
+use dana::server::ParameterServer;
+use dana::util::bench::BenchSuite;
+use dana::util::rng::Rng;
+
+const K: usize = 101_386;
+const N: usize = 8;
+
+fn schedule() -> LrSchedule {
+    LrSchedule::new(ScheduleConfig {
+        steps_per_epoch: 100,
+        n_workers: N,
+        ..ScheduleConfig::default()
+    })
+}
+
+fn main() {
+    let mut rng = Rng::new(2);
+    let theta0: Vec<f32> = (0..K).map(|_| rng.normal() as f32).collect();
+    let grad: Vec<f32> = (0..K).map(|_| 0.01 * rng.normal() as f32).collect();
+
+    let mut b = BenchSuite::new("server");
+    for kind in [
+        AlgorithmKind::Asgd,
+        AlgorithmKind::DanaSlim,
+        AlgorithmKind::DanaZero,
+        AlgorithmKind::DanaDc,
+        AlgorithmKind::DcAsgd,
+        AlgorithmKind::YellowFin,
+    ] {
+        let mut ps = ParameterServer::new(make_algorithm(kind, &theta0, N), schedule(), N);
+        for w in 0..N {
+            ps.pull(w);
+        }
+        let mut w = 0usize;
+        b.bench(&format!("pull_push/{}", kind.name()), || {
+            ps.push(w, &grad);
+            std::hint::black_box(ps.pull(w));
+            w = (w + 1) % N;
+        });
+    }
+
+    // metrics tap cost (gap = one fused norm pass over k)
+    {
+        let mut ps = ParameterServer::new(
+            make_algorithm(AlgorithmKind::DanaZero, &theta0, N),
+            schedule(),
+            N,
+        );
+        ps.metrics.set_every(1);
+        for w in 0..N {
+            ps.pull(w);
+        }
+        let mut w = 0usize;
+        b.bench("pull_push/dana-zero+metrics", || {
+            ps.push(w, &grad);
+            std::hint::black_box(ps.pull(w));
+            w = (w + 1) % N;
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,65 @@
+//! End-to-end experiment throughput — one timed miniature of each paper
+//! table/figure family, so `cargo bench` tracks the cost of the full
+//! reproduction harness (the actual figures are regenerated with
+//! `dana experiment <id>`, see DESIGN.md §5).
+//!
+//! Run: cargo bench --bench tables [-- <filter>]   (needs `make artifacts`)
+
+use dana::config::{default_artifacts_dir, TrainConfig, Workload};
+use dana::optim::AlgorithmKind;
+use dana::runtime::Engine;
+use dana::sim::gamma::Environment;
+use dana::sim::speedup;
+use dana::train::{sim_trainer, ssgd};
+use dana::util::bench::BenchSuite;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("tables bench skipped: run `make artifacts` first");
+        return;
+    }
+    std::env::set_var("BENCH_SAMPLE_MS", "200");
+    std::env::set_var("BENCH_SAMPLES", "3");
+    let engine = Engine::cpu(&dir).unwrap();
+    let mut b = BenchSuite::new("tables");
+
+    // Fig 2 / 11 family: one instrumented gap run (1 epoch, N=8)
+    b.bench("fig2_gap_run_1epoch", || {
+        let mut cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaZero, 8, 1.0);
+        cfg.metrics_every = 10;
+        std::hint::black_box(sim_trainer::run(&cfg, &engine).unwrap());
+    });
+
+    // Fig 4 / Tables 2-4 family: one accuracy cell (1 epoch, N=16)
+    b.bench("fig4_accuracy_cell_1epoch", || {
+        let cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 16, 1.0);
+        std::hint::black_box(sim_trainer::run(&cfg, &engine).unwrap());
+    });
+
+    // Fig 7 / Table 5 family: one ImageNet-proxy cell (0.5 epoch, N=32)
+    b.bench("fig7_imagenet_cell_halfepoch", || {
+        let cfg = TrainConfig::preset(Workload::ImageNet, AlgorithmKind::DanaSlim, 32, 0.5);
+        std::hint::black_box(sim_trainer::run(&cfg, &engine).unwrap());
+    });
+
+    // Fig 9 / Table 1 family: one SSGD round set (0.5 epoch, total batch 1024)
+    b.bench("table1_ssgd_halfepoch", || {
+        let cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 0.5)
+            .with_batch(128);
+        std::hint::black_box(ssgd::run(&cfg, &engine).unwrap());
+    });
+
+    // Fig 12 family: pure timing sweep
+    b.bench("fig12_speedup_sweep", || {
+        std::hint::black_box(speedup::speedup_sweep(
+            Environment::Heterogeneous,
+            &[8, 32],
+            128,
+            30,
+            2,
+        ));
+    });
+
+    b.finish();
+}

@@ -1,0 +1,54 @@
+//! Gap study (paper Section 3, Fig 2): train the same schedule under every
+//! algorithm and watch the gap — the RMSE distance between the parameters a
+//! gradient was computed on and the parameters it is applied to.
+//!
+//! Demonstrates the paper's central claim directly: all algorithms share
+//! the identical lag, but the momentum algorithms' *gap* differs by an
+//! order of magnitude, and the gap (not the lag) predicts final accuracy.
+//!
+//! Run with:  cargo run --release --example gap_study
+
+use dana::config::{default_artifacts_dir, TrainConfig, Workload};
+use dana::optim::AlgorithmKind;
+use dana::runtime::Engine;
+use dana::train::sim_trainer;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::cpu(&default_artifacts_dir())?;
+    let algorithms = [
+        AlgorithmKind::Asgd,
+        AlgorithmKind::NagAsgd,
+        AlgorithmKind::Lwp,
+        AlgorithmKind::MultiAsgd,
+        AlgorithmKind::DanaZero,
+        AlgorithmKind::DanaSlim,
+    ];
+    println!("training the CIFAR-10 proxy on 8 async workers, 6 epochs each\n");
+    println!(
+        "{:<11} {:>10} {:>9} {:>10} {:>8}",
+        "algorithm", "mean gap", "mean lag", "final err", "diverged"
+    );
+    let mut rows = Vec::new();
+    for alg in algorithms {
+        let mut cfg = TrainConfig::preset(Workload::C10, alg, 8, 6.0);
+        cfg.metrics_every = 5;
+        let rep = sim_trainer::run(&cfg, &engine)?;
+        println!(
+            "{:<11} {:>10.3e} {:>9.1} {:>9.2}% {:>8}",
+            alg.name(),
+            rep.mean_gap,
+            rep.mean_lag,
+            rep.final_test_error,
+            rep.diverged
+        );
+        rows.push((alg, rep.mean_gap, rep.final_test_error));
+    }
+    // The paper's Fig 2(b)/§5.3 ordering: identical lag, but
+    // gap(NAG-ASGD) >> gap(DANA) ~ gap(ASGD), and small gap <-> low error.
+    let gap = |k: AlgorithmKind| rows.iter().find(|r| r.0 == k).unwrap().1;
+    let ratio = gap(AlgorithmKind::NagAsgd) / gap(AlgorithmKind::DanaZero);
+    println!("\nNAG-ASGD / DANA-Zero gap ratio: {ratio:.1}x (paper: ~an order of magnitude)");
+    anyhow::ensure!(ratio > 3.0, "gap ordering did not reproduce");
+    println!("gap_study OK");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Quickstart: load an AOT artifact, train the CIFAR-10 proxy for a couple
+//! of epochs with DANA-Slim on 8 simulated asynchronous workers, and
+//! evaluate — the whole public API in ~30 lines.
+//!
+//! Run with:  cargo run --release --example quickstart
+
+use dana::config::{default_artifacts_dir, TrainConfig, Workload};
+use dana::optim::AlgorithmKind;
+use dana::runtime::Engine;
+use dana::train::sim_trainer;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Open the artifacts directory produced by `make artifacts`.
+    let engine = Engine::cpu(&default_artifacts_dir())?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 2. Describe the experiment: workload proxy, algorithm, cluster size.
+    let mut cfg = TrainConfig::preset(
+        Workload::C10,           // ResNet-20/CIFAR-10 proxy
+        AlgorithmKind::DanaSlim, // the paper's zero-overhead variant
+        8,                       // asynchronous workers
+        4.0,                     // epochs
+    );
+    cfg.eval_every_epochs = 1.0;
+
+    // 3. Train on the simulated asynchronous cluster (real gradients via
+    //    the PJRT runtime; gamma-distributed execution times).
+    let report = sim_trainer::run(&cfg, &engine)?;
+
+    // 4. Inspect results.
+    for p in &report.curve {
+        println!(
+            "epoch {:4.1}  test error {:5.2}%  test loss {:.4}",
+            p.epoch, p.test_error, p.test_loss
+        );
+    }
+    println!("final: {}", report.summary());
+    anyhow::ensure!(report.final_test_error < 20.0, "quickstart failed to learn");
+    println!("quickstart OK");
+    Ok(())
+}

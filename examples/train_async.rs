@@ -1,0 +1,78 @@
+//! END-TO-END DRIVER: asynchronous training of a char-level transformer LM
+//! with real OS-thread workers — every layer of the stack composing:
+//!
+//!   Pallas kernels (L1)  →  JAX transformer fwd/bwd (L2, AOT to HLO text)
+//!   →  PJRT CPU runtime  →  rust parameter server + DANA-Slim (L3)
+//!   →  N worker threads, each with its own PJRT client, training
+//!      asynchronously against a Markov char corpus.
+//!
+//! Runs a few hundred master steps and logs the loss curve; the reference
+//! run is recorded in EXPERIMENTS.md §E2E.  Python is never involved — the
+//! binary consumes only `artifacts/`.
+//!
+//! Run with:  cargo run --release --example train_async [-- --workers 4 --steps 400 --mode real]
+
+use dana::config::{default_artifacts_dir, TrainConfig, Workload};
+use dana::optim::AlgorithmKind;
+use dana::runtime::Engine;
+use dana::train::{real_async, sim_trainer};
+use dana::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse_env(false)?;
+    let workers = args.parse_or::<usize>("workers", 4)?;
+    let steps = args.parse_or::<u64>("steps", 600)?;
+    // "real" = OS threads + one PJRT client per worker (wall-clock async);
+    // "sim"  = gamma-clock simulation (deterministic, single-threaded).
+    let mode = args.str_or("mode", "real");
+    args.finish()?;
+
+    let engine = Engine::cpu(&default_artifacts_dir())?;
+    let mut cfg = TrainConfig::preset(Workload::LmSmall, AlgorithmKind::DanaSlim, workers, 1.0);
+    cfg.epochs = steps as f64 / cfg.schedule.steps_per_epoch as f64;
+    cfg.schedule.decay_epochs = vec![cfg.epochs * 0.75];
+    cfg.eval_every_epochs = cfg.epochs / 8.0;
+
+    let v = engine.manifest().variant(&cfg.variant_name())?;
+    println!(
+        "end-to-end: {} ({} params) | DANA-Slim | {workers} async workers | {steps} master steps | mode={mode}",
+        v.name, v.param_count
+    );
+    println!("corpus: seeded 2nd-order Markov chain, 64-char vocab (entropy floor ~1.2 nats)\n");
+
+    let t0 = std::time::Instant::now();
+    let report = match mode.as_str() {
+        "real" => real_async::run(&cfg, &engine)?,
+        "sim" => sim_trainer::run(&cfg, &engine)?,
+        other => anyhow::bail!("mode {other:?} (real|sim)"),
+    };
+
+    println!("loss curve (train, sampled):");
+    for (step, loss) in report.loss_curve.iter().step_by(4) {
+        println!("  step {step:>5}  loss {loss:.4}");
+    }
+    println!("\neval curve:");
+    for p in &report.curve {
+        println!(
+            "  epoch {:5.2}  token loss {:.4}  token err {:5.2}%",
+            p.epoch, p.test_loss, p.test_error
+        );
+    }
+    let throughput = report.steps as f64 / report.wall_secs;
+    println!(
+        "\nfinal token loss {:.4} (started ~4.16 = ln 64) | {:.1} master steps/s | {:.1}s wall",
+        report.final_test_loss, throughput, t0.elapsed().as_secs_f64()
+    );
+    anyhow::ensure!(!report.diverged, "training diverged");
+    // ln(64) = 4.159 is the no-skill starting point; the momentum-safe
+    // async η descends steadily but needs ~2k steps to approach the ~1.2
+    // nat Markov floor — the default 600-step demo must clear 4.0.
+    let bar = if steps >= 2000 { 2.5 } else { 4.159 - 0.00025 * steps as f64 };
+    anyhow::ensure!(
+        report.final_test_loss < bar,
+        "loss did not descend enough: {} (bar {bar})",
+        report.final_test_loss
+    );
+    println!("train_async OK");
+    Ok(())
+}

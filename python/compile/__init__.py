@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas models lowered AOT to HLO text.
+
+Nothing in this package is imported at runtime; the rust coordinator only
+consumes the ``artifacts/`` directory that :mod:`compile.aot` produces.
+"""

@@ -1,0 +1,228 @@
+"""AOT compile path: lower every model variant to HLO text + manifest.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); the rust
+runtime consumes only the ``artifacts/`` directory.  Interchange is HLO
+*text*, not serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Per variant this emits:
+  <name>.train.hlo.txt   train_step(params, x, y) -> (loss, grads)
+  <name>.eval.hlo.txt    eval_step(params, x, y)  -> (loss, correct)
+  <name>.init.f32        raw little-endian f32 initial parameters
+  <name>.golden.x.{f32,i32} / .y.i32   fixed input batch
+plus golden loss/grad values in manifest.json so the rust integration tests
+can verify the runtime end-to-end against python numerics.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--only name1,name2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as mlp_model
+from . import transformer as lm_model
+from .kernels.update import momentum_lookahead_update
+
+FORMAT_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT artifact bundle: a model architecture at a fixed batch shape."""
+
+    name: str
+    kind: str  # "mlp" | "lm"
+    cfg: object
+    batch: int
+
+    def data_shapes(self):
+        if self.kind == "mlp":
+            x = (self.batch, self.cfg.in_dim)
+            y = (self.batch,)
+            x_dtype = "f32"
+        else:
+            x = (self.batch, self.cfg.seq)
+            y = (self.batch, self.cfg.seq)
+            x_dtype = "i32"
+        return x, y, x_dtype
+
+
+def variants() -> list[Variant]:
+    mlp = mlp_model.MLPConfig
+    lm = lm_model.LMConfig
+    return [
+        # CIFAR-10 proxy (paper: ResNet-20/CIFAR-10). Pallas hot path.
+        Variant("mlp_c10", "mlp", mlp(128, (256, 256), 10, "relu", True), 128),
+        # Same architecture lowered through the pure-jnp reference path:
+        # independent build of the same math, used for cross-checking and as
+        # the fast CPU variant for full experiment grids.
+        Variant("mlp_c10_ref", "mlp", mlp(128, (256, 256), 10, "relu", False), 128),
+        # WRN-16-4/CIFAR-10 proxy: same dataset as mlp_c10, wider student.
+        Variant("mlp_wrn10_ref", "mlp", mlp(128, (384, 384), 10, "relu", False), 128),
+        # CIFAR-100 proxy (paper: WRN-16-4/CIFAR-100).
+        Variant("mlp_c100_ref", "mlp", mlp(128, (256, 256), 100, "relu", False), 128),
+        # Alternate-batch builds of the C10 proxy for the total-batch-size
+        # scaling study (paper Fig 9 / Table 1: 8 workers x {32..256}/GPU).
+        Variant("mlp_c10_b32_ref", "mlp", mlp(128, (256, 256), 10, "relu", False), 32),
+        Variant("mlp_c10_b64_ref", "mlp", mlp(128, (256, 256), 10, "relu", False), 64),
+        Variant("mlp_c10_b256_ref", "mlp", mlp(128, (256, 256), 10, "relu", False), 256),
+        # ImageNet proxy (paper: ResNet-50/ImageNet); smaller batch keeps the
+        # 64-worker sweeps tractable on CPU (DESIGN.md §3).
+        Variant("mlp_inet_ref", "mlp", mlp(128, (256, 384), 100, "relu", False), 64),
+        # End-to-end char-LM workload (examples/train_async.rs).
+        Variant("lm_small_ref", "lm", lm(64, 64, 128, 4, 2, 512, False), 16),
+        # Pallas-kernel build of the same LM (validation + kernel demo).
+        Variant("lm_small", "lm", lm(64, 64, 128, 4, 2, 512, True), 16),
+    ]
+
+
+def _golden_inputs(v: Variant, seed: int = 1234):
+    """Deterministic input batch for the golden cross-check."""
+    rng = np.random.default_rng(seed)
+    x_shape, y_shape, x_dtype = v.data_shapes()
+    if v.kind == "mlp":
+        x = rng.standard_normal(x_shape, dtype=np.float32)
+        y = rng.integers(0, v.cfg.classes, size=y_shape).astype(np.int32)
+    else:
+        x = rng.integers(0, v.cfg.vocab, size=x_shape).astype(np.int32)
+        y = rng.integers(0, v.cfg.vocab, size=y_shape).astype(np.int32)
+    return x, y
+
+
+def build_variant(v: Variant, out_dir: str) -> dict:
+    t0 = time.time()
+    if v.kind == "mlp":
+        train_step, eval_step, flat0 = mlp_model.make_steps(v.cfg)
+    else:
+        train_step, eval_step, flat0 = lm_model.make_steps(v.cfg)
+    p = int(flat0.shape[0])
+    x_shape, y_shape, x_dtype = v.data_shapes()
+    x_spec = jax.ShapeDtypeStruct(x_shape, jnp.float32 if x_dtype == "f32" else jnp.int32)
+    y_spec = jax.ShapeDtypeStruct(y_shape, jnp.int32)
+    p_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+
+    train_hlo = to_hlo_text(jax.jit(train_step).lower(p_spec, x_spec, y_spec))
+    eval_hlo = to_hlo_text(jax.jit(eval_step).lower(p_spec, x_spec, y_spec))
+
+    files = {
+        "train": f"{v.name}.train.hlo.txt",
+        "eval": f"{v.name}.eval.hlo.txt",
+        "init": f"{v.name}.init.f32",
+        "golden_x": f"{v.name}.golden.x.{x_dtype}",
+        "golden_y": f"{v.name}.golden.y.i32",
+    }
+    with open(os.path.join(out_dir, files["train"]), "w") as f:
+        f.write(train_hlo)
+    with open(os.path.join(out_dir, files["eval"]), "w") as f:
+        f.write(eval_hlo)
+    np.asarray(flat0).astype("<f4").tofile(os.path.join(out_dir, files["init"]))
+
+    # Golden cross-check: run the *python* step on a fixed batch and record
+    # the numbers the rust runtime must reproduce from the HLO artifact.
+    gx, gy = _golden_inputs(v)
+    gx.astype("<f4" if x_dtype == "f32" else "<i4").tofile(
+        os.path.join(out_dir, files["golden_x"])
+    )
+    gy.astype("<i4").tofile(os.path.join(out_dir, files["golden_y"]))
+    loss, grads = jax.jit(train_step)(flat0, gx, gy)
+    eloss, ecorrect = jax.jit(eval_step)(flat0, gx, gy)
+    grads = np.asarray(grads)
+
+    entry = {
+        "name": v.name,
+        "kind": v.kind,
+        "param_count": p,
+        "batch": v.batch,
+        "x_shape": list(x_shape),
+        "y_shape": list(y_shape),
+        "x_dtype": x_dtype,
+        "arch": dataclasses.asdict(v.cfg),
+        "files": files,
+        "golden": {
+            "loss": float(loss),
+            "grad_l2": float(np.linalg.norm(grads)),
+            "grad_prefix": [float(g) for g in grads[:8]],
+            "eval_loss": float(eloss),
+            "eval_correct": float(ecorrect),
+        },
+    }
+    print(f"  {v.name}: P={p} train_hlo={len(train_hlo)//1024}KiB "
+          f"loss={float(loss):.4f} ({time.time()-t0:.1f}s)")
+    return entry
+
+
+def build_update_kernel(out_dir: str, k: int = 1 << 17) -> dict:
+    """Lower the fused DANA master-update kernel (ablation artifact)."""
+    s = jax.ShapeDtypeStruct((1,), jnp.float32)
+    vec = jax.ShapeDtypeStruct((k,), jnp.float32)
+    fn = lambda gamma, eta, th, v, vs, g: momentum_lookahead_update(
+        gamma, eta, th, v, vs, g
+    )
+    hlo = to_hlo_text(jax.jit(fn).lower(s, s, vec, vec, vec, vec))
+    fname = "update.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(hlo)
+    # golden
+    rng = np.random.default_rng(7)
+    th, v, vs, g = (rng.standard_normal(k).astype(np.float32) for _ in range(4))
+    outs = momentum_lookahead_update(
+        jnp.array([0.9]), jnp.array([0.05]),
+        jnp.asarray(th), jnp.asarray(v), jnp.asarray(vs), jnp.asarray(g),
+    )
+    golden = {
+        "seed": 7,
+        "gamma": 0.9,
+        "eta": 0.05,
+        "out_l2": [float(np.linalg.norm(np.asarray(o))) for o in outs],
+    }
+    print(f"  update kernel: k={k} hlo={len(hlo)//1024}KiB")
+    return {"k": k, "file": fname, "golden": golden}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated variant names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    entries = []
+    for v in variants():
+        if only and v.name not in only:
+            continue
+        entries.append(build_variant(v, args.out_dir))
+    manifest = {
+        "format_version": FORMAT_VERSION,
+        "jax_version": jax.__version__,
+        "variants": entries,
+        "update_kernel": build_update_kernel(args.out_dir),
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json ({len(entries)} variants)")
+
+
+if __name__ == "__main__":
+    main()

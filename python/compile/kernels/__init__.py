@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the model HLO).
+
+All kernels are authored for TPU-style tiling (BlockSpec grids sized for
+VMEM/MXU) but lowered with ``interpret=True`` so the resulting HLO runs on
+the CPU PJRT client that the rust runtime uses.  Correctness is pinned to
+the pure-jnp oracles in :mod:`compile.kernels.ref` by the pytest/hypothesis
+suite.
+"""
+
+from .matmul import matmul  # noqa: F401
+from .dense import make_dense, dense_fwd_only  # noqa: F401
+from .update import momentum_lookahead_update  # noqa: F401

@@ -1,0 +1,114 @@
+"""Tiled matmul Pallas kernel — the MXU-shaped building block.
+
+TPU mapping of the paper's GPU hot loop (see DESIGN.md §Hardware-Adaptation):
+the grid is ``(M/bm, N/bn, K/bk)`` with the K axis innermost so each output
+block stays resident while partial products accumulate — the BlockSpec
+expression of the HBM↔VMEM schedule a CUDA kernel would express with
+threadblocks + shared memory.  Block sizes default to MXU-friendly 128 and
+are shrunk to the largest divisor of the dimension so the grid tiles exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Preferred (MXU-aligned) tile edge.  8x128 is the fp32 VREG tile on TPU;
+# 128x128 feeds the MXU systolic array at full width.
+_PREF_BLOCK = 128
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap (always >= 1)."""
+    d = min(n, cap)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+def pick_block(n: int, pref: int = _PREF_BLOCK) -> int:
+    """Choose a tile edge for a dimension of size ``n``.
+
+    Exact tiling keeps the kernel free of masking logic; for the model sizes
+    this library lowers (powers of two and multiples of 8) this always finds
+    a block within 2x of the preference.
+    """
+    return _largest_divisor_leq(n, pref)
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    # K-axis is grid dim 2: zero the output block on the first visit, then
+    # accumulate partial products on every revisit.  f32 accumulation.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """``x @ y`` via a tiled Pallas kernel.
+
+    Args:
+      x: ``f32[M, K]``.
+      y: ``f32[K, N]``.
+      block_m/block_n/block_k: tile edges; default = largest divisor of the
+        dimension that is <= 128.
+      interpret: keep ``True`` for CPU-PJRT lowering (Mosaic custom-calls are
+        TPU-only); the BlockSpec structure is identical either way.
+
+    Returns:
+      ``[M, N]`` in the promoted dtype of the inputs.
+    """
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[0]:
+        raise ValueError(f"matmul shape mismatch: {x.shape} @ {y.shape}")
+    m, k = x.shape
+    _, n = y.shape
+    bm = block_m or pick_block(m)
+    bn = block_n or pick_block(n)
+    bk = block_k or pick_block(k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"blocks ({bm},{bn},{bk}) must divide ({m},{n},{k})")
+    out_dtype = jnp.promote_types(x.dtype, y.dtype)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(x, y)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Resident VMEM footprint of one grid step (x, y and o blocks).
+
+    Used by DESIGN.md §Perf to check the tiling against the ~16 MiB VMEM
+    budget of a TPU core without running on TPU hardware.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of 128x128x128 MXU issue slots a (bm, bn, bk) tile fills."""
+    fill = lambda b: min(b, 128) / 128.0
+    return fill(bm) * fill(bn) * fill(bk)

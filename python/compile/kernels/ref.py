@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+The pytest/hypothesis suite sweeps shapes and dtypes and asserts
+``assert_allclose(kernel(...), ref(...))``.  These functions are also what
+the ``*_ref`` (non-pallas) AOT artifact variants lower, giving the rust
+integration tests a second, independently-built executable to cross-check.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Oracle for kernels.matmul: plain f32-accumulated matmul."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(
+        jnp.promote_types(x.dtype, y.dtype)
+    )
+
+
+def _act_ref(z, name: str):
+    return {
+        "linear": lambda t: t,
+        "relu": lambda t: jnp.maximum(t, 0.0),
+        "gelu": jax.nn.gelu,
+        "tanh": jnp.tanh,
+    }[name](z)
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "relu"):
+    """Oracle for kernels.dense: act(x @ w + b)."""
+    return _act_ref(x @ w + b, act)
+
+
+def dense_pre_ref(x, w, b):
+    """Pre-activation oracle (dense kernel's second output)."""
+    return x @ w + b
+
+
+def momentum_lookahead_update_ref(gamma, eta, theta, v, vsum, g):
+    """Oracle for kernels.update — DANA-Zero master step, Eq 10/11 + A.2."""
+    gamma = jnp.asarray(gamma).reshape(())
+    eta = jnp.asarray(eta).reshape(())
+    v_new = gamma * v + g
+    theta_new = theta - eta * v_new
+    vsum_new = vsum - v + v_new
+    hat = theta_new - eta * gamma * vsum_new
+    return theta_new, v_new, vsum_new, hat

@@ -1,0 +1,87 @@
+"""Fused DANA master update as a Pallas kernel (paper Appendix A.2).
+
+One master step of DANA-Zero touches four k-length vectors:
+
+    v'    = gamma * v + g                  (per-worker momentum, Eq 10)
+    theta'= theta - eta * v'               (master weights)
+    vsum' = vsum - v + v'                  (O(k) incremental v^0)
+    hat   = theta' - eta * gamma * vsum'   (look-ahead sent to the worker,
+                                            Eq 11)
+
+This kernel fuses all four into a single pass so every element of the five
+input streams is read exactly once — the memory-bandwidth-bound hot loop the
+rust master executes on the request path (``math::dana_fused_update``).  The
+Pallas version exists (a) to demonstrate the L1 expression of the paper's
+O(k) trick and (b) as an ablation artifact the rust runtime can execute via
+PJRT instead of the native loop (bench `master_update_xla`).
+
+Scalars arrive as ``f32[1]`` tensors (eta decays over training, so they
+cannot be baked into the HLO).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _largest_divisor_leq
+
+# 1-D tile: 8 f32 VREG lanes x 128 sublanes.
+_PREF_VEC_BLOCK = 8 * 128
+
+
+def _update_kernel(gamma_ref, eta_ref, theta_ref, v_ref, vsum_ref, g_ref,
+                   theta_o, v_o, vsum_o, hat_o):
+    gamma = gamma_ref[0]
+    eta = eta_ref[0]
+    v_new = gamma * v_ref[...] + g_ref[...]
+    theta_new = theta_ref[...] - eta * v_new
+    vsum_new = vsum_ref[...] - v_ref[...] + v_new
+    v_o[...] = v_new
+    theta_o[...] = theta_new
+    vsum_o[...] = vsum_new
+    hat_o[...] = theta_new - eta * gamma * vsum_new
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def momentum_lookahead_update(
+    gamma: jax.Array,
+    eta: jax.Array,
+    theta: jax.Array,
+    v: jax.Array,
+    vsum: jax.Array,
+    g: jax.Array,
+    *,
+    block: int | None = None,
+    interpret: bool = True,
+):
+    """Fused DANA-Zero master step over flat ``f32[k]`` state.
+
+    Args:
+      gamma, eta: ``f32[1]`` momentum coefficient and learning rate.
+      theta, v, vsum, g: ``f32[k]`` master weights, this worker's momentum,
+        the momentum sum ``v^0``, and the incoming gradient.
+
+    Returns:
+      ``(theta', v', vsum', theta_hat)`` — all ``f32[k]``.
+    """
+    (k,) = theta.shape
+    if v.shape != (k,) or vsum.shape != (k,) or g.shape != (k,):
+        raise ValueError("all state vectors must share shape")
+    blk = block or _largest_divisor_leq(k, _PREF_VEC_BLOCK)
+    if k % blk:
+        raise ValueError(f"block {blk} must divide k={k}")
+    scalar_spec = pl.BlockSpec((1,), lambda i: (0,))
+    vec_spec = pl.BlockSpec((blk,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((k,), theta.dtype)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=(k // blk,),
+        in_specs=[scalar_spec, scalar_spec] + [vec_spec] * 4,
+        out_specs=[vec_spec] * 4,
+        out_shape=[out_shape] * 4,
+        interpret=interpret,
+    )(gamma, eta, theta, v, vsum, g)

@@ -1,0 +1,99 @@
+"""Layer-2 model: MLP classifier over flat parameters (CIFAR-proxy student).
+
+The paper's CIFAR/ImageNet conv nets are substituted by an MLP student on a
+synthetic teacher task (DESIGN.md §3): gradient-staleness dynamics depend on
+the optimizer state geometry (eta, gamma, N, lag distribution), not on
+convolutions, and an MLP keeps the CPU-PJRT step cost low enough to sweep
+the paper's full algorithm x worker-count grids.
+
+Interface consumed by the rust runtime (all shapes static at AOT time):
+
+    train_step(params f32[P], x f32[B, D], y i32[B]) -> (loss f32[], grads f32[P])
+    eval_step(params f32[P], x f32[B, D], y i32[B])  -> (loss f32[], correct f32[])
+
+Parameters are a single flat vector (ravel_pytree ordering) so the rust
+optimizer layer works on contiguous ``&[f32]`` with zero reshaping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.dense import make_dense
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    """Architecture + lowering options for one MLP variant."""
+
+    in_dim: int = 128
+    hidden: tuple[int, ...] = (256, 256)
+    classes: int = 10
+    act: str = "relu"
+    use_pallas: bool = True
+    seed: int = 0
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        return (self.in_dim, *self.hidden, self.classes)
+
+
+def init_params(cfg: MLPConfig):
+    """He-initialised parameter pytree: [(W0, b0), (W1, b1), ...]."""
+    key = jax.random.PRNGKey(cfg.seed)
+    layers = []
+    dims = cfg.dims
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / din)
+        w = scale * jax.random.normal(sub, (din, dout), jnp.float32)
+        b = jnp.zeros((dout,), jnp.float32)
+        layers.append((w, b))
+    return layers
+
+
+def param_count(cfg: MLPConfig) -> int:
+    dims = cfg.dims
+    return sum(din * dout + dout for din, dout in zip(dims[:-1], dims[1:]))
+
+
+def _forward(cfg: MLPConfig, params, x):
+    """Logits. Hidden layers use the fused L1 dense kernel; the final
+    (classes-wide, often non-128-divisible) projection stays jnp."""
+    dense = make_dense(cfg.act, use_pallas=cfg.use_pallas)
+    h = x
+    for w, b in params[:-1]:
+        h = dense(h, w, b)
+    w, b = params[-1]
+    return h @ w + b
+
+
+def _ce_loss(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def make_steps(cfg: MLPConfig) -> tuple[Callable, Callable, jax.Array]:
+    """Build (train_step, eval_step, flat_init) for one variant."""
+    params0 = init_params(cfg)
+    flat0, unravel = ravel_pytree(params0)
+
+    def loss_fn(flat, x, y):
+        return _ce_loss(_forward(cfg, unravel(flat), x), y)
+
+    def train_step(flat, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(flat, x, y)
+        return loss, grads
+
+    def eval_step(flat, x, y):
+        logits = _forward(cfg, unravel(flat), x)
+        loss = _ce_loss(logits, y)
+        correct = jnp.sum((jnp.argmax(logits, axis=1) == y)).astype(jnp.float32)
+        return loss, correct
+
+    return train_step, eval_step, flat0

@@ -1,0 +1,153 @@
+"""Layer-2 model: decoder-only char-level transformer LM.
+
+This is the end-to-end driver workload (``examples/train_async.rs``): the
+rust coordinator trains it asynchronously with DANA-Slim on a synthetic
+Markov char corpus and logs the loss curve (EXPERIMENTS.md §E2E).  Sizes are
+configurable; the default ``lm_small`` fits a few-hundred-step CPU run, and
+``lm_medium`` exists for longer runs.  (The paper's ResNet-50/ImageNet
+workload is a scale substitution — see DESIGN.md §3.)
+
+Interface (mirrors model.py, flat f32 params):
+
+    train_step(params f32[P], x i32[B, T], y i32[B, T]) -> (loss f32[], grads f32[P])
+    eval_step  -> (loss f32[], correct f32[])   # correct = token-level hits
+
+QKV/output/MLP projections route through the L1 fused dense / matmul Pallas
+kernels when ``use_pallas`` is set; attention softmax and layernorm stay in
+jnp (they lower to fused XLA ops already).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.dense import make_dense
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    vocab: int = 64
+    seq: int = 64
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    use_pallas: bool = False
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.d_model % self.n_heads == 0
+
+
+def init_params(cfg: LMConfig):
+    key = jax.random.PRNGKey(cfg.seed)
+
+    def nrm(key, shape, scale):
+        return scale * jax.random.normal(key, shape, jnp.float32)
+
+    keys = iter(jax.random.split(key, 4 + 8 * cfg.n_layers))
+    d = cfg.d_model
+    params = {
+        "tok_emb": nrm(next(keys), (cfg.vocab, d), 0.02),
+        "pos_emb": nrm(next(keys), (cfg.seq, d), 0.02),
+        "head_w": nrm(next(keys), (d, cfg.vocab), d ** -0.5),
+        "head_b": jnp.zeros((cfg.vocab,), jnp.float32),
+        "blocks": [],
+    }
+    for _ in range(cfg.n_layers):
+        blk = {
+            "ln1_g": jnp.ones((d,), jnp.float32),
+            "ln1_b": jnp.zeros((d,), jnp.float32),
+            "qkv_w": nrm(next(keys), (d, 3 * d), d ** -0.5),
+            "qkv_b": jnp.zeros((3 * d,), jnp.float32),
+            "out_w": nrm(next(keys), (d, d), d ** -0.5),
+            "out_b": jnp.zeros((d,), jnp.float32),
+            "ln2_g": jnp.ones((d,), jnp.float32),
+            "ln2_b": jnp.zeros((d,), jnp.float32),
+            "ff1_w": nrm(next(keys), (d, cfg.d_ff), d ** -0.5),
+            "ff1_b": jnp.zeros((cfg.d_ff,), jnp.float32),
+            "ff2_w": nrm(next(keys), (cfg.d_ff, d), cfg.d_ff ** -0.5),
+            "ff2_b": jnp.zeros((d,), jnp.float32),
+        }
+        params["blocks"].append(blk)
+    return params
+
+
+def param_count(cfg: LMConfig) -> int:
+    flat, _ = ravel_pytree(init_params(cfg))
+    return int(flat.shape[0])
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(cfg: LMConfig, blk, h, dense_lin):
+    b, t, d = h.shape
+    nh, hd = cfg.n_heads, d // cfg.n_heads
+    x = _layernorm(h, blk["ln1_g"], blk["ln1_b"])
+    qkv = dense_lin(x.reshape(b * t, d), blk["qkv_w"], blk["qkv_b"]).reshape(
+        b, t, 3, nh, hd
+    )
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, t, d)
+    o = dense_lin(o.reshape(b * t, d), blk["out_w"], blk["out_b"]).reshape(b, t, d)
+    return h + o
+
+
+def _mlp(cfg: LMConfig, blk, h, dense_lin, dense_gelu):
+    b, t, d = h.shape
+    x = _layernorm(h, blk["ln2_g"], blk["ln2_b"]).reshape(b * t, d)
+    x = dense_gelu(x, blk["ff1_w"], blk["ff1_b"])
+    x = dense_lin(x, blk["ff2_w"], blk["ff2_b"])
+    return h + x.reshape(b, t, d)
+
+
+def _forward(cfg: LMConfig, params, tokens):
+    dense_lin = make_dense("linear", use_pallas=cfg.use_pallas)
+    dense_gelu = make_dense("gelu", use_pallas=cfg.use_pallas)
+    b, t = tokens.shape
+    h = params["tok_emb"][tokens] + params["pos_emb"][None, :t]
+    for blk in params["blocks"]:
+        h = _attention(cfg, blk, h, dense_lin)
+        h = _mlp(cfg, blk, h, dense_lin, dense_gelu)
+    logits = h.reshape(b * t, cfg.d_model) @ params["head_w"] + params["head_b"]
+    return logits.reshape(b, t, cfg.vocab)
+
+
+def _ce_loss(logits, y):
+    logp = jax.nn.log_softmax(logits)
+    picked = jnp.take_along_axis(logp, y[..., None], axis=-1)
+    return -jnp.mean(picked)
+
+
+def make_steps(cfg: LMConfig) -> tuple[Callable, Callable, jax.Array]:
+    """Build (train_step, eval_step, flat_init) for one LM variant."""
+    params0 = init_params(cfg)
+    flat0, unravel = ravel_pytree(params0)
+
+    def loss_fn(flat, x, y):
+        return _ce_loss(_forward(cfg, unravel(flat), x), y)
+
+    def train_step(flat, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(flat, x, y)
+        return loss, grads
+
+    def eval_step(flat, x, y):
+        logits = _forward(cfg, unravel(flat), x)
+        loss = _ce_loss(logits, y)
+        correct = jnp.sum(jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        return loss, correct
+
+    return train_step, eval_step, flat0

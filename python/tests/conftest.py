@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests are run from the python/ directory (``make test-py``); make the
+# compile package importable regardless of invocation cwd.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

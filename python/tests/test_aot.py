@@ -1,0 +1,104 @@
+"""AOT artifact pipeline tests: manifest schema + golden reproducibility."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as mlp
+from compile import transformer as lm
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def load_manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+class TestVariants:
+    def test_variant_names_unique(self):
+        names = [v.name for v in aot.variants()]
+        assert len(names) == len(set(names))
+
+    def test_pallas_ref_pairs_share_arch(self):
+        byname = {v.name: v for v in aot.variants()}
+        for base in ("mlp_c10", "lm_small"):
+            a, b = byname[base].cfg, byname[base + "_ref"].cfg
+            # identical architectures, differing only in the lowering path
+            assert b == type(a)(**{**a.__dict__, "use_pallas": b.use_pallas})
+
+    def test_data_shapes(self):
+        for v in aot.variants():
+            x, y, xd = v.data_shapes()
+            assert x[0] == v.batch
+            if v.kind == "mlp":
+                assert xd == "f32" and y == (v.batch,)
+            else:
+                assert xd == "i32" and y == x
+
+
+@needs_artifacts
+class TestManifest:
+    def test_schema(self):
+        m = load_manifest()
+        assert m["format_version"] == aot.FORMAT_VERSION
+        assert len(m["variants"]) >= 4
+        for v in m["variants"]:
+            for key in ("name", "kind", "param_count", "batch", "files", "golden"):
+                assert key in v, f"{v['name']} missing {key}"
+            for f in v["files"].values():
+                assert os.path.exists(os.path.join(ART, f)), f
+
+    def test_hlo_text_is_parseable_header(self):
+        m = load_manifest()
+        for v in m["variants"]:
+            with open(os.path.join(ART, v["files"]["train"])) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), v["name"]
+
+    def test_init_params_sized_correctly(self):
+        m = load_manifest()
+        for v in m["variants"]:
+            init = os.path.join(ART, v["files"]["init"])
+            assert os.path.getsize(init) == 4 * v["param_count"]
+
+    def test_pallas_and_ref_goldens_match(self):
+        # Two independently lowered builds of the same architecture must
+        # agree on the golden batch — kernel path changes nothing numeric.
+        m = load_manifest()
+        byname = {v["name"]: v for v in m["variants"]}
+        for base in ("mlp_c10", "lm_small"):
+            if base in byname and base + "_ref" in byname:
+                a, b = byname[base]["golden"], byname[base + "_ref"]["golden"]
+                np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-5)
+                np.testing.assert_allclose(a["grad_l2"], b["grad_l2"], rtol=1e-4)
+
+    @pytest.mark.slow
+    def test_golden_reproduces(self):
+        # Rebuild the python step and check it still produces the manifest's
+        # golden numbers (guards against drift between aot.py and model.py).
+        m = load_manifest()
+        v = next(x for x in m["variants"] if x["name"] == "mlp_c10_ref")
+        cfg = mlp.MLPConfig(**v["arch"])
+        cfg = mlp.MLPConfig(**{**v["arch"], "hidden": tuple(v["arch"]["hidden"])})
+        train, _, flat0 = mlp.make_steps(cfg)
+        x = np.fromfile(
+            os.path.join(ART, v["files"]["golden_x"]), dtype="<f4"
+        ).reshape(v["x_shape"])
+        y = np.fromfile(os.path.join(ART, v["files"]["golden_y"]), dtype="<i4")
+        loss, grads = train(flat0, x, y)
+        np.testing.assert_allclose(float(loss), v["golden"]["loss"], rtol=1e-5)
+        np.testing.assert_allclose(
+            float(np.linalg.norm(np.asarray(grads))), v["golden"]["grad_l2"], rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(grads)[:8], v["golden"]["grad_prefix"], rtol=1e-4, atol=1e-7
+        )

@@ -1,0 +1,169 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle, hypothesis shape sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, make_dense, momentum_lookahead_update
+from compile.kernels.dense import dense_fwd_only, ACTIVATIONS
+from compile.kernels.matmul import pick_block, vmem_bytes, mxu_utilization_estimate
+from compile.kernels import ref
+
+# Hypothesis x jit is slow-ish; keep example counts tight but meaningful.
+KERNEL_SETTINGS = dict(max_examples=15, deadline=None)
+
+dims = st.sampled_from([1, 2, 3, 4, 8, 16, 24, 32, 64, 96, 128, 160, 256])
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+class TestMatmul:
+    @settings(**KERNEL_SETTINGS)
+    @given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**16))
+    def test_matches_ref_f32(self, m, k, n, seed):
+        x = _rand(seed, (m, k), jnp.float32)
+        y = _rand(seed + 1, (k, n), jnp.float32)
+        # K-split tiles accumulate in a different order than the oracle's
+        # single dot — bitwise equality is not expected, closeness is.
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=6, deadline=None)
+    @given(m=st.sampled_from([8, 32, 64]), seed=st.integers(0, 100))
+    def test_matches_ref_bf16_inputs(self, m, seed):
+        # bf16 storage with f32 accumulation — MXU-native dtype contract.
+        x = _rand(seed, (m, 64), jnp.bfloat16)
+        y = _rand(seed + 1, (64, m), jnp.bfloat16)
+        got = matmul(x, y)
+        want = ref.matmul_ref(x, y)
+        assert got.dtype == want.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            got.astype(np.float32), want.astype(np.float32), rtol=2e-2, atol=2e-2
+        )
+
+    def test_explicit_blocks(self):
+        x = _rand(0, (64, 96), jnp.float32)
+        y = _rand(1, (96, 40), jnp.float32)
+        out = matmul(x, y, block_m=16, block_n=8, block_k=24)
+        np.testing.assert_allclose(out, ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_rejects_bad_shapes(self):
+        x = jnp.zeros((4, 5))
+        y = jnp.zeros((6, 4))
+        with pytest.raises(ValueError):
+            matmul(x, y)
+
+    def test_rejects_non_dividing_blocks(self):
+        x = jnp.zeros((4, 4))
+        with pytest.raises(ValueError):
+            matmul(x, x, block_m=3)
+
+    def test_pick_block_divides(self):
+        for n in range(1, 400):
+            b = pick_block(n)
+            assert n % b == 0 and 1 <= b <= 128
+
+    def test_vmem_budget_default_tiles(self):
+        # 128^3 f32 tiling must fit well under a 16 MiB VMEM core budget.
+        assert vmem_bytes(128, 128, 128) < 16 * 2**20 // 8
+        assert mxu_utilization_estimate(128, 128, 128) == 1.0
+        assert mxu_utilization_estimate(64, 128, 128) == 0.5
+
+
+class TestDense:
+    @settings(**KERNEL_SETTINGS)
+    @given(
+        m=st.sampled_from([8, 16, 64, 128]),
+        k=st.sampled_from([16, 32, 96]),
+        n=st.sampled_from([8, 32, 128]),
+        act=st.sampled_from(ACTIVATIONS),
+        seed=st.integers(0, 2**16),
+    )
+    def test_forward_matches_ref(self, m, k, n, act, seed):
+        x = _rand(seed, (m, k), jnp.float32)
+        w = _rand(seed + 1, (k, n), jnp.float32) * 0.2
+        b = _rand(seed + 2, (n,), jnp.float32)
+        out, z = dense_fwd_only(x, w, b, act=act)
+        np.testing.assert_allclose(
+            out, ref.dense_ref(x, w, b, act), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(z, ref.dense_pre_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(act=st.sampled_from(ACTIVATIONS), seed=st.integers(0, 2**16))
+    def test_vjp_matches_autodiff(self, act, seed):
+        x = _rand(seed, (32, 48), jnp.float32)
+        w = _rand(seed + 1, (48, 16), jnp.float32) * 0.2
+        b = _rand(seed + 2, (16,), jnp.float32)
+        dense = make_dense(act, use_pallas=True)
+        f = lambda x_, w_, b_: jnp.sum(jnp.sin(dense(x_, w_, b_)))
+        f_ref = lambda x_, w_, b_: jnp.sum(jnp.sin(ref.dense_ref(x_, w_, b_, act)))
+        got = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+        want = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+        for g, r in zip(got, want):
+            np.testing.assert_allclose(g, r, rtol=1e-4, atol=1e-4)
+
+    def test_ref_path_factory(self):
+        dense = make_dense("relu", use_pallas=False)
+        x = _rand(0, (8, 8), jnp.float32)
+        w = jnp.eye(8)
+        b = jnp.zeros((8,))
+        np.testing.assert_allclose(dense(x, w, b), jnp.maximum(x, 0.0))
+
+    def test_unknown_activation_rejected(self):
+        with pytest.raises(ValueError):
+            make_dense("swish-ish")
+
+
+class TestUpdateKernel:
+    @settings(**KERNEL_SETTINGS)
+    @given(
+        k=st.sampled_from([8, 128, 1024, 4096, 5120]),
+        gamma=st.floats(0.0, 0.99),
+        eta=st.floats(1e-4, 0.5),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, k, gamma, eta, seed):
+        mk = lambda i: _rand(seed + i, (k,), jnp.float32)
+        theta, v, vsum, g = mk(0), mk(1), mk(2), mk(3)
+        got = momentum_lookahead_update(
+            jnp.array([gamma], jnp.float32), jnp.array([eta], jnp.float32),
+            theta, v, vsum, g,
+        )
+        want = ref.momentum_lookahead_update_ref(gamma, eta, theta, v, vsum, g)
+        for o, r in zip(got, want):
+            np.testing.assert_allclose(o, r, rtol=1e-5, atol=1e-5)
+
+    def test_zero_gamma_reduces_to_sgd(self):
+        k = 256
+        theta = _rand(0, (k,), jnp.float32)
+        g = _rand(1, (k,), jnp.float32)
+        zeros = jnp.zeros((k,))
+        th2, v2, vs2, hat = momentum_lookahead_update(
+            jnp.array([0.0]), jnp.array([0.1]), theta, zeros, zeros, g
+        )
+        np.testing.assert_allclose(th2, theta - 0.1 * g, rtol=1e-6)
+        np.testing.assert_allclose(hat, th2, rtol=1e-6)  # no look-ahead at gamma=0
+
+    def test_vsum_invariant(self):
+        # vsum' - vsum == v' - v (the O(k) incremental identity, Appendix A.2)
+        k = 512
+        mk = lambda i: _rand(i, (k,), jnp.float32)
+        theta, v, vsum, g = mk(0), mk(1), mk(2), mk(3)
+        th2, v2, vs2, _ = momentum_lookahead_update(
+            jnp.array([0.9]), jnp.array([0.05]), theta, v, vsum, g
+        )
+        np.testing.assert_allclose(vs2 - vsum, v2 - v, rtol=1e-5, atol=1e-6)
+
+    def test_shape_mismatch_rejected(self):
+        with pytest.raises(ValueError):
+            momentum_lookahead_update(
+                jnp.array([0.9]), jnp.array([0.1]),
+                jnp.zeros((8,)), jnp.zeros((8,)), jnp.zeros((8,)), jnp.zeros((4,)),
+            )

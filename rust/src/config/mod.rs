@@ -1,0 +1,295 @@
+//! Experiment configuration: presets mirroring the paper's Appendix A.5
+//! hyperparameters, JSON-file loading and CLI overrides.
+//!
+//! A [`TrainConfig`] fully describes one training run: which AOT variant to
+//! execute, which dataset proxy, which algorithm, the cluster (N workers,
+//! homo/hetero), the schedule, and the step budget.  Experiments construct
+//! these from presets; the `dana train` CLI can also read one from a JSON
+//! file and override fields with flags.
+
+use crate::optim::{AlgorithmKind, ScheduleConfig};
+use crate::sim::Environment;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Which workload (model + dataset proxy) to train.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// ResNet-20 / CIFAR-10 proxy (`mlp_c10*` artifacts).
+    C10,
+    /// WRN-16-4 / CIFAR-10 proxy (`mlp_wrn10_ref`): same dataset as C10,
+    /// wider student.
+    WrnC10,
+    /// WRN-16-4 / CIFAR-100 proxy (`mlp_c100_ref`).
+    C100,
+    /// ResNet-50 / ImageNet proxy (`mlp_inet_ref`).
+    ImageNet,
+    /// Char-LM end-to-end workload (`lm_small_ref`).
+    LmSmall,
+}
+
+impl Workload {
+    pub const ALL: [Workload; 5] = [
+        Workload::C10,
+        Workload::WrnC10,
+        Workload::C100,
+        Workload::ImageNet,
+        Workload::LmSmall,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::C10 => "c10",
+            Workload::WrnC10 => "wrn_c10",
+            Workload::C100 => "c100",
+            Workload::ImageNet => "imagenet",
+            Workload::LmSmall => "lm",
+        }
+    }
+
+    /// Default per-worker batch size for the workload.
+    pub fn default_batch(self) -> usize {
+        match self {
+            Workload::C10 | Workload::WrnC10 | Workload::C100 => 128,
+            Workload::ImageNet => 64,
+            Workload::LmSmall => 16,
+        }
+    }
+}
+
+impl std::str::FromStr for Workload {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "c10" | "cifar10" => Ok(Workload::C10),
+            "wrn_c10" | "wrn10" => Ok(Workload::WrnC10),
+            "c100" | "cifar100" => Ok(Workload::C100),
+            "imagenet" | "inet" => Ok(Workload::ImageNet),
+            "lm" | "lm_small" => Ok(Workload::LmSmall),
+            other => {
+                anyhow::bail!("unknown workload {other:?} (c10|wrn_c10|c100|imagenet|lm)")
+            }
+        }
+    }
+}
+
+/// Everything needed to run one training experiment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub workload: Workload,
+    pub algorithm: AlgorithmKind,
+    pub n_workers: usize,
+    pub env: Environment,
+    pub epochs: f64,
+    pub schedule: ScheduleConfig,
+    /// Use the Pallas-kernel artifact variant (validation path) instead of
+    /// the pure-jnp reference build.
+    pub use_pallas: bool,
+    /// Per-worker batch override (None = workload default). Only the C10
+    /// workload ships alternate-batch artifacts (b32/b64/b256) — used by
+    /// the Fig 9 / Table 1 total-batch-size scaling experiments.
+    pub batch_override: Option<usize>,
+    pub seed: u64,
+    pub artifacts_dir: PathBuf,
+    /// Record gap/lag metrics every n master steps (0 = off).
+    pub metrics_every: u64,
+    /// Evaluate every n epochs (0 = only at the end).
+    pub eval_every_epochs: f64,
+}
+
+impl TrainConfig {
+    /// Paper-preset for one workload at N workers.
+    ///
+    /// Schedules are the Appendix A.5 recipes with the epoch axis scaled to
+    /// proxy length (DESIGN.md §3): the CIFAR recipe's 160 epochs with decay
+    /// at [80, 120] becomes `epochs` with decays at [1/2, 3/4]; warmup stays
+    /// 5/160 of the run. CIFAR-100's WRN recipe decays x0.2 at
+    /// [0.3, 0.6, 0.8]; ImageNet decays x0.1 at [1/3, 2/3].
+    pub fn preset(workload: Workload, algorithm: AlgorithmKind, n_workers: usize, epochs: f64) -> Self {
+        // Base learning rates are the proxy's single-worker-tuned values
+        // (the paper's policy: hyperparameters tuned for one worker, reused
+        // across cluster sizes). η=0.05 places the proxy's stability margin
+        // where ResNet-20+BN's sits under the paper's η=0.1, so the
+        // divergence crossovers land at paper-like worker counts — see
+        // DESIGN.md §3 and EXPERIMENTS.md §Calibration.
+        let (base_eta, gamma, decay_factor, decay_frac): (f32, f32, f32, &[f64]) =
+            match workload {
+                Workload::C10 => (0.05, 0.9, 0.1, &[0.5, 0.75]),
+                // WRN-16-4 recipe: decay x0.2 at 60/120/160 of 200 epochs
+                Workload::WrnC10 => (0.05, 0.9, 0.2, &[0.3, 0.6, 0.8]),
+                Workload::C100 => (0.05, 0.9, 0.2, &[0.3, 0.6, 0.8]),
+                Workload::ImageNet => (0.05, 0.9, 0.1, &[1.0 / 3.0, 2.0 / 3.0]),
+                Workload::LmSmall => (0.005, 0.9, 0.1, &[0.75]),
+            };
+        let (train_size, batch) = match workload {
+            Workload::C10 | Workload::WrnC10 => (12_800, 128),
+            Workload::C100 => (12_800, 128),
+            Workload::ImageNet => (25_600, 64),
+            Workload::LmSmall => (8_192, 16),
+        };
+        let steps_per_epoch = train_size / batch;
+        let warmup = (5.0 / 160.0 * epochs).min(epochs * 0.25);
+        TrainConfig {
+            workload,
+            algorithm,
+            n_workers,
+            env: Environment::Homogeneous,
+            epochs,
+            schedule: ScheduleConfig {
+                base_eta,
+                gamma,
+                // λ=1 is the proxy-calibrated DC strength (the paper's λ=2
+                // at its gradient scale; the Taylor term is cubic in the
+                // gradient so it tracks the workload).
+                lambda: 1.0,
+                warmup_epochs: warmup,
+                decay_epochs: decay_frac.iter().map(|f| f * epochs).collect(),
+                decay_factor,
+                steps_per_epoch,
+                n_workers,
+            },
+            use_pallas: false,
+            batch_override: None,
+            seed: 1,
+            artifacts_dir: default_artifacts_dir(),
+            metrics_every: 0,
+            eval_every_epochs: 0.0,
+        }
+    }
+
+    /// Set a per-worker batch override and rescale steps/epoch to match.
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        let train_size = self.schedule.steps_per_epoch * self.batch();
+        self.batch_override = Some(batch);
+        self.schedule.steps_per_epoch = train_size / batch;
+        self
+    }
+
+    /// The AOT artifact this config executes.
+    pub fn variant_name(&self) -> String {
+        let base = match (self.workload, self.use_pallas) {
+            (Workload::C10, true) => "mlp_c10",
+            (Workload::C10, false) => "mlp_c10_ref",
+            (Workload::WrnC10, _) => "mlp_wrn10_ref",
+            (Workload::C100, _) => "mlp_c100_ref",
+            (Workload::ImageNet, _) => "mlp_inet_ref",
+            (Workload::LmSmall, true) => "lm_small",
+            (Workload::LmSmall, false) => "lm_small_ref",
+        };
+        match self.batch_override {
+            Some(b) if b != self.workload.default_batch() => {
+                assert!(
+                    self.workload == Workload::C10 && !self.use_pallas,
+                    "batch-override artifacts exist only for c10 ref"
+                );
+                format!("mlp_c10_b{b}_ref")
+            }
+            _ => base.to_string(),
+        }
+    }
+
+    pub fn total_master_steps(&self) -> u64 {
+        (self.epochs * self.schedule.steps_per_epoch as f64).round() as u64
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch_override.unwrap_or(self.workload.default_batch())
+    }
+
+    /// Apply overrides from a parsed JSON object (keys are optional).
+    pub fn apply_json(&mut self, j: &Json) -> anyhow::Result<()> {
+        if let Some(v) = j.get("workload") {
+            self.workload = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("workload must be a string"))?
+                .parse()?;
+        }
+        if let Some(v) = j.get("algorithm") {
+            self.algorithm = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("algorithm must be a string"))?
+                .parse()?;
+        }
+        if let Some(v) = j.get("n_workers") {
+            self.n_workers = v.as_usize().ok_or_else(|| anyhow::anyhow!("bad n_workers"))?;
+            self.schedule.n_workers = self.n_workers;
+        }
+        if let Some(v) = j.get("env") {
+            self.env = v.as_str().ok_or_else(|| anyhow::anyhow!("bad env"))?.parse()?;
+        }
+        if let Some(v) = j.get("epochs") {
+            self.epochs = v.as_f64().ok_or_else(|| anyhow::anyhow!("bad epochs"))?;
+        }
+        if let Some(v) = j.get("base_eta") {
+            self.schedule.base_eta = v.as_f64().ok_or_else(|| anyhow::anyhow!("bad base_eta"))? as f32;
+        }
+        if let Some(v) = j.get("gamma") {
+            self.schedule.gamma = v.as_f64().ok_or_else(|| anyhow::anyhow!("bad gamma"))? as f32;
+        }
+        if let Some(v) = j.get("seed") {
+            self.seed = v.as_usize().ok_or_else(|| anyhow::anyhow!("bad seed"))? as u64;
+        }
+        if let Some(v) = j.get("use_pallas") {
+            self.use_pallas = v.as_bool().ok_or_else(|| anyhow::anyhow!("bad use_pallas"))?;
+        }
+        Ok(())
+    }
+
+    pub fn from_json_file(path: &Path) -> anyhow::Result<TrainConfig> {
+        let j = Json::parse_file(path)?;
+        let mut cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
+        cfg.apply_json(&j)?;
+        Ok(cfg)
+    }
+}
+
+/// `$DANA_ARTIFACTS` or `<crate root>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("DANA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_scales_schedule() {
+        let c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
+        assert_eq!(c.schedule.decay_epochs, vec![10.0, 15.0]);
+        assert_eq!(c.schedule.steps_per_epoch, 100);
+        assert_eq!(c.total_master_steps(), 2000);
+        assert!((c.schedule.warmup_epochs - 0.625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workload_parse_round_trip() {
+        for w in [Workload::C10, Workload::C100, Workload::ImageNet, Workload::LmSmall] {
+            assert_eq!(w.name().parse::<Workload>().unwrap(), w);
+        }
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
+        let j = Json::parse(
+            r#"{"algorithm":"nag-asgd","n_workers":16,"env":"hetero","gamma":0.95}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.algorithm, AlgorithmKind::NagAsgd);
+        assert_eq!(c.n_workers, 16);
+        assert_eq!(c.schedule.n_workers, 16);
+        assert_eq!(c.env, Environment::Heterogeneous);
+        assert_eq!(c.schedule.gamma, 0.95);
+    }
+
+    #[test]
+    fn bad_json_values_error() {
+        let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
+        let j = Json::parse(r#"{"algorithm":42}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+    }
+}

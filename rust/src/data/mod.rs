@@ -1,0 +1,22 @@
+//! Synthetic datasets — the paper's CIFAR/ImageNet substitution (DESIGN.md
+//! §3) and the char corpus for the end-to-end LM driver.
+
+pub mod synth;
+pub mod text;
+
+/// A classification batch: `x` is row-major `f32[B, D]`, `y` is `i32[B]`.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub batch: usize,
+}
+
+/// A token batch for LM training: `x`/`y` are `i32[B, T]`.
+#[derive(Debug, Clone)]
+pub struct TokenBatch {
+    pub x: Vec<i32>,
+    pub y: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}

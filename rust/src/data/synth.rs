@@ -1,0 +1,280 @@
+//! Gaussian-mixture synthetic classification datasets — the CIFAR/ImageNet
+//! proxies (DESIGN.md §3).
+//!
+//! Each class is an isotropic Gaussian around a random centroid; `noise`
+//! sets the overlap (and thus the achievable test error), `label_noise`
+//! adds an irreducible floor.  The separations are calibrated so the
+//! single-worker baseline lands near the paper's baselines (~92% for the
+//! CIFAR-10 proxy, ~75% for the 100-class proxies), leaving the full
+//! dynamic range for the staleness effects the figures measure: a diverged
+//! run drops to chance (10%/1%), exactly as in the paper's tables.
+//! Generation is fully deterministic in the seed, so every algorithm trains
+//! on an identical stream (the paper's controlled-schedule methodology).
+
+use super::Batch;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SynthSpec {
+    pub in_dim: usize,
+    pub classes: usize,
+    /// Within-class noise stddev (centroids are N(0, I)).
+    pub noise: f32,
+    pub train_size: usize,
+    pub test_size: usize,
+    /// Probability a label is resampled uniformly (irreducible error).
+    pub label_noise: f64,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// CIFAR-10 proxy (pairs with the `mlp_c10*` / `mlp_wrn10_ref`
+    /// artifacts): baseline lands near the paper's 91.6%.
+    pub fn c10() -> Self {
+        SynthSpec {
+            in_dim: 128,
+            classes: 10,
+            noise: 3.0,
+            train_size: 12_800,
+            test_size: 2_048,
+            label_noise: 0.02,
+            seed: 0xC1FA_0010,
+        }
+    }
+
+    /// CIFAR-100 proxy (pairs with `mlp_c100_ref`): 100 tighter-packed
+    /// classes, baseline near the paper's ~77%.
+    pub fn c100() -> Self {
+        SynthSpec {
+            classes: 100,
+            noise: 3.2,
+            label_noise: 0.05,
+            seed: 0xC1FA_0100,
+            ..Self::c10()
+        }
+    }
+
+    /// ImageNet proxy (pairs with `mlp_inet_ref`): more classes, more data.
+    pub fn imagenet() -> Self {
+        SynthSpec {
+            in_dim: 128,
+            classes: 100,
+            noise: 3.0,
+            train_size: 25_600,
+            test_size: 4_096,
+            label_noise: 0.05,
+            seed: 0x1A6E_0001,
+        }
+    }
+}
+
+/// Materialized dataset (train + test splits).
+#[derive(Debug, Clone)]
+pub struct SynthDataset {
+    pub spec: SynthSpec,
+    train_x: Vec<f32>,
+    train_y: Vec<i32>,
+    test_x: Vec<f32>,
+    test_y: Vec<i32>,
+}
+
+impl SynthDataset {
+    pub fn generate(spec: SynthSpec) -> Self {
+        let mut rng = Rng::new(spec.seed);
+        let mut centers = vec![0.0f32; spec.classes * spec.in_dim];
+        rng.fill_normal_f32(&mut centers, 0.0, 1.0);
+
+        // Normalize to unit per-coordinate variance (as image datasets are
+        // standardized): keeps the class-separation ratio while holding the
+        // loss curvature at the scale the paper's η=0.1 recipe expects.
+        let scale = 1.0 / (1.0 + spec.noise * spec.noise).sqrt();
+        let gen_split = |n: usize, rng: &mut Rng| {
+            let d = spec.in_dim;
+            let mut xs = vec![0.0f32; n * d];
+            let mut ys = vec![0i32; n];
+            for i in 0..n {
+                let mut label = rng.below(spec.classes as u64) as usize;
+                let c = &centers[label * d..(label + 1) * d];
+                let x = &mut xs[i * d..(i + 1) * d];
+                for (xj, &cj) in x.iter_mut().zip(c) {
+                    *xj = scale * (cj + spec.noise * rng.normal() as f32);
+                }
+                if rng.uniform() < spec.label_noise {
+                    label = rng.below(spec.classes as u64) as usize;
+                }
+                ys[i] = label as i32;
+            }
+            (xs, ys)
+        };
+        let (train_x, train_y) = gen_split(spec.train_size, &mut rng);
+        let (test_x, test_y) = gen_split(spec.test_size, &mut rng);
+        SynthDataset { spec, train_x, train_y, test_x, test_y }
+    }
+
+    pub fn train_size(&self) -> usize {
+        self.spec.train_size
+    }
+
+    pub fn test_size(&self) -> usize {
+        self.spec.test_size
+    }
+
+    /// Assemble a train batch from explicit indices.
+    pub fn train_batch(&self, indices: &[usize]) -> Batch {
+        let d = self.spec.in_dim;
+        let mut x = vec![0.0f32; indices.len() * d];
+        let mut y = vec![0i32; indices.len()];
+        for (b, &idx) in indices.iter().enumerate() {
+            x[b * d..(b + 1) * d].copy_from_slice(&self.train_x[idx * d..(idx + 1) * d]);
+            y[b] = self.train_y[idx];
+        }
+        Batch { x, y, batch: indices.len() }
+    }
+
+    /// Test batches of exactly `batch` rows (the AOT eval shape); a final
+    /// ragged remainder is dropped (test sizes are chosen divisible).
+    pub fn test_batches(&self, batch: usize) -> Vec<Batch> {
+        let n = self.spec.test_size / batch;
+        (0..n)
+            .map(|i| {
+                let d = self.spec.in_dim;
+                let lo = i * batch;
+                Batch {
+                    x: self.test_x[lo * d..(lo + batch) * d].to_vec(),
+                    y: self.test_y[lo..lo + batch].to_vec(),
+                    batch,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Epoch-shuffled batch index stream: each draw pulls the next `batch`
+/// indices, reshuffling at epoch boundaries.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    order: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(train_size: usize, batch: usize, seed: u64) -> Self {
+        assert!(batch <= train_size);
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..train_size).collect();
+        rng.shuffle(&mut order);
+        Batcher { order, cursor: 0, batch, rng }
+    }
+
+    pub fn next_indices(&mut self) -> Vec<usize> {
+        if self.cursor + self.batch > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+        }
+        let out = self.order[self.cursor..self.cursor + self.batch].to_vec();
+        self.cursor += self.batch;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SynthSpec {
+        SynthSpec {
+            in_dim: 8,
+            classes: 4,
+            noise: 1.0,
+            train_size: 64,
+            test_size: 32,
+            label_noise: 0.0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = SynthDataset::generate(tiny());
+        let b = SynthDataset::generate(tiny());
+        assert_eq!(a.train_x, b.train_x);
+        assert_eq!(a.test_y, b.test_y);
+    }
+
+    #[test]
+    fn labels_in_range_and_diverse() {
+        let d = SynthDataset::generate(tiny());
+        let mut seen = vec![false; 4];
+        for &y in &d.train_y {
+            assert!((0..4).contains(&y));
+            seen[y as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all classes present");
+    }
+
+    #[test]
+    fn low_noise_task_is_nearest_centroid_solvable() {
+        // With noise << centroid separation, a nearest-centroid rule on the
+        // regenerated centers classifies (almost) perfectly.
+        let spec = SynthSpec { noise: 0.05, ..tiny() };
+        let data = SynthDataset::generate(spec);
+        let mut rng = Rng::new(spec.seed);
+        let mut centers = vec![0.0f32; spec.classes * spec.in_dim];
+        rng.fill_normal_f32(&mut centers, 0.0, 1.0);
+        let batch = data.test_batches(32).remove(0);
+        let mut correct = 0;
+        for i in 0..32 {
+            let x = &batch.x[i * 8..(i + 1) * 8];
+            let best = (0..4)
+                .min_by(|&a, &b| {
+                    let da = crate::math::sub_norm(x, &centers[a * 8..(a + 1) * 8]);
+                    let db = crate::math::sub_norm(x, &centers[b * 8..(b + 1) * 8]);
+                    da.total_cmp(&db)
+                })
+                .unwrap();
+            if best as i32 == batch.y[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 31, "nearest centroid got {correct}/32");
+    }
+
+    #[test]
+    fn batch_assembly_matches_source() {
+        let d = SynthDataset::generate(tiny());
+        let b = d.train_batch(&[3, 0]);
+        assert_eq!(b.batch, 2);
+        assert_eq!(b.x[..8], d.train_x[3 * 8..4 * 8]);
+        assert_eq!(b.y[0], d.train_y[3]);
+    }
+
+    #[test]
+    fn test_batches_tile_the_split() {
+        let d = SynthDataset::generate(tiny());
+        let bs = d.test_batches(16);
+        assert_eq!(bs.len(), 2);
+        assert!(bs.iter().all(|b| b.batch == 16));
+    }
+
+    #[test]
+    fn batcher_covers_epoch_without_repeats() {
+        let mut b = Batcher::new(100, 10, 3);
+        let mut seen = vec![0u32; 100];
+        for _ in 0..10 {
+            for i in b.next_indices() {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "first epoch must be a permutation");
+    }
+
+    #[test]
+    fn batcher_reshuffles_across_epochs() {
+        let mut b = Batcher::new(20, 20, 3);
+        let e1 = b.next_indices();
+        let e2 = b.next_indices();
+        assert_ne!(e1, e2);
+    }
+}

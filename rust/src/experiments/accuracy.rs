@@ -1,0 +1,228 @@
+//! Accuracy experiments: Fig 4 (final error vs N), Fig 5 (convergence at
+//! N=8), and the CIFAR tables 2–4.
+
+use super::ExpOptions;
+use crate::config::{TrainConfig, Workload};
+use crate::optim::AlgorithmKind;
+use crate::runtime::Engine;
+use crate::train::{baseline, sim_trainer, TrainReport};
+use crate::sim::Environment;
+use crate::util::csvw::{fnum, CsvWriter};
+use crate::util::stats;
+
+/// One grid cell: algorithm x worker-count, aggregated over seeds.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub alg: AlgorithmKind,
+    pub n: usize,
+    pub errors: Vec<f64>,
+    pub diverged: usize,
+}
+
+impl Cell {
+    pub fn mean(&self) -> f64 {
+        stats::summarize(&self.errors).mean
+    }
+
+    pub fn std(&self) -> f64 {
+        stats::summarize(&self.errors).std
+    }
+}
+
+pub(super) fn quick_epochs(opts: &ExpOptions) -> f64 {
+    if opts.quick {
+        6.0
+    } else {
+        24.0
+    }
+}
+
+/// Run the (algorithms x worker-counts x seeds) grid for one workload.
+pub fn run_grid(
+    opts: &ExpOptions,
+    engine: &Engine,
+    workload: Workload,
+    algs: &[AlgorithmKind],
+    ns: &[usize],
+    epochs: f64,
+    env: Environment,
+) -> anyhow::Result<Vec<Cell>> {
+    let mut cells = Vec::new();
+    for &alg in algs {
+        for &n in ns {
+            let mut cell = Cell { alg, n, errors: Vec::new(), diverged: 0 };
+            for seed in 0..opts.seeds {
+                let mut cfg = TrainConfig::preset(workload, alg, n, epochs);
+                cfg.env = env;
+                cfg.seed = seed + 1;
+                cfg.artifacts_dir = opts.artifacts_dir.clone();
+                let rep = sim_trainer::run(&cfg, engine)?;
+                if rep.diverged {
+                    cell.diverged += 1;
+                }
+                cell.errors.push(rep.final_test_error);
+            }
+            println!(
+                "  {:<11} N={:<3} err={:6.2}% ± {:5.2}{}",
+                alg.name(),
+                n,
+                cell.mean(),
+                cell.std(),
+                if cell.diverged > 0 {
+                    format!("  ({}/{} diverged)", cell.diverged, opts.seeds)
+                } else {
+                    String::new()
+                }
+            );
+            cells.push(cell);
+        }
+    }
+    Ok(cells)
+}
+
+/// Baseline error for one workload (the dashed line in every figure).
+pub fn baseline_error(
+    opts: &ExpOptions,
+    engine: &Engine,
+    workload: Workload,
+    epochs: f64,
+) -> anyhow::Result<f64> {
+    let mut cfg = TrainConfig::preset(workload, AlgorithmKind::DanaSlim, 1, epochs);
+    cfg.artifacts_dir = opts.artifacts_dir.clone();
+    let rep = baseline::run(&cfg, engine)?;
+    Ok(rep.final_test_error)
+}
+
+fn write_grid_csv(
+    opts: &ExpOptions,
+    name: &str,
+    workload: Workload,
+    cells: &[Cell],
+    base_err: f64,
+) -> anyhow::Result<()> {
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join(format!("{name}.csv")),
+        &["workload", "algorithm", "n_workers", "mean_err", "std_err", "diverged", "baseline_err"],
+    )?;
+    for c in cells {
+        w.row(&[
+            workload.name().to_string(),
+            c.alg.name().to_string(),
+            c.n.to_string(),
+            fnum(c.mean()),
+            fnum(c.std()),
+            c.diverged.to_string(),
+            fnum(base_err),
+        ])?;
+    }
+    Ok(())
+}
+
+fn worker_grid(opts: &ExpOptions) -> Vec<usize> {
+    if opts.quick {
+        vec![4, 8, 16, 32]
+    } else {
+        vec![4, 8, 12, 16, 20, 24, 28, 32]
+    }
+}
+
+/// Fig 4: final test error vs number of workers, per workload panel.
+pub fn fig4(opts: &ExpOptions) -> anyhow::Result<()> {
+    let engine = Engine::cpu(&opts.artifacts_dir)?;
+    let panels: &[Workload] = if opts.quick {
+        &[Workload::C10, Workload::C100]
+    } else {
+        &[Workload::C10, Workload::WrnC10, Workload::C100]
+    };
+    let epochs = quick_epochs(opts);
+    for &wl in panels {
+        println!("fig4 panel: {} (epochs={epochs})", wl.name());
+        let base = baseline_error(opts, &engine, wl, epochs)?;
+        println!("  baseline err={base:.2}%");
+        let cells = run_grid(
+            opts,
+            &engine,
+            wl,
+            &AlgorithmKind::PAPER_SET,
+            &worker_grid(opts),
+            epochs,
+            Environment::Homogeneous,
+        )?;
+        write_grid_csv(opts, &format!("fig4_{}", wl.name()), wl, &cells, base)?;
+    }
+    Ok(())
+}
+
+/// Fig 5: test-error convergence curves, 8 workers, all algorithms.
+pub fn fig5(opts: &ExpOptions) -> anyhow::Result<()> {
+    let engine = Engine::cpu(&opts.artifacts_dir)?;
+    let epochs = quick_epochs(opts);
+    let wl = Workload::C10;
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("fig5.csv"),
+        &["algorithm", "epoch", "test_error", "test_loss"],
+    )?;
+    // baseline curve
+    let mut cfg = TrainConfig::preset(wl, AlgorithmKind::DanaSlim, 1, epochs);
+    cfg.artifacts_dir = opts.artifacts_dir.clone();
+    cfg.eval_every_epochs = epochs / 12.0;
+    let rep = baseline::run(&cfg, &engine)?;
+    dump_curve(&mut w, "baseline", &rep)?;
+    for alg in AlgorithmKind::PAPER_SET {
+        let mut cfg = TrainConfig::preset(wl, alg, 8, epochs);
+        cfg.artifacts_dir = opts.artifacts_dir.clone();
+        cfg.eval_every_epochs = epochs / 12.0;
+        let rep = sim_trainer::run(&cfg, &engine)?;
+        println!("  {}", rep.summary());
+        dump_curve(&mut w, alg.name(), &rep)?;
+    }
+    Ok(())
+}
+
+fn dump_curve(w: &mut CsvWriter, name: &str, rep: &TrainReport) -> anyhow::Result<()> {
+    for p in &rep.curve {
+        w.row(&[
+            name.to_string(),
+            fnum(p.epoch),
+            fnum(p.test_error),
+            fnum(p.test_loss),
+        ])?;
+    }
+    Ok(())
+}
+
+/// Tables 2–4: the full algorithm x N grid for one workload, printed in the
+/// paper's row format (mean ± std accuracy, baseline in the header).
+pub fn table(opts: &ExpOptions, workload: Workload, id: &str) -> anyhow::Result<()> {
+    let engine = Engine::cpu(&opts.artifacts_dir)?;
+    let epochs = quick_epochs(opts);
+    let base = baseline_error(opts, &engine, workload, epochs)?;
+    let algs = AlgorithmKind::PAPER_SET;
+    let ns = worker_grid(opts);
+    let cells = run_grid(
+        opts,
+        &engine,
+        workload,
+        &algs,
+        &ns,
+        epochs,
+        Environment::Homogeneous,
+    )?;
+    write_grid_csv(opts, id, workload, &cells, base)?;
+    // paper-style table: rows = N, columns = algorithms, accuracy%.
+    println!("\n{id}: {} final test ACCURACY (baseline {:.2}%)", workload.name(), 100.0 - base);
+    print!("{:>8} |", "#Workers");
+    for a in algs {
+        print!(" {:>18} |", a.name());
+    }
+    println!();
+    for &n in &ns {
+        print!("{n:>8} |");
+        for a in algs {
+            let c = cells.iter().find(|c| c.alg == a && c.n == n).unwrap();
+            print!(" {:>11.2} ± {:<4.2} |", 100.0 - c.mean(), c.std());
+        }
+        println!();
+    }
+    Ok(())
+}

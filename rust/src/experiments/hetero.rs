@@ -1,0 +1,126 @@
+//! Heterogeneous-environment experiments: Fig 6, Fig 13, Table 6.
+
+use super::accuracy::{baseline_error, quick_epochs, run_grid};
+use super::ExpOptions;
+use crate::config::{TrainConfig, Workload};
+use crate::optim::AlgorithmKind;
+use crate::runtime::Engine;
+use crate::sim::Environment;
+use crate::train::sim_trainer;
+use crate::util::csvw::{fnum, CsvWriter};
+
+const HETERO_ALGS: [AlgorithmKind; 5] = [
+    AlgorithmKind::DanaDc,
+    AlgorithmKind::DanaSlim,
+    AlgorithmKind::DcAsgd,
+    AlgorithmKind::MultiAsgd,
+    AlgorithmKind::NagAsgd,
+];
+
+fn worker_grid(opts: &ExpOptions) -> Vec<usize> {
+    if opts.quick {
+        vec![4, 8, 16, 32]
+    } else {
+        vec![4, 8, 16, 24, 32]
+    }
+}
+
+/// Fig 6: final test error vs N in the heterogeneous environment.
+pub fn fig6(opts: &ExpOptions) -> anyhow::Result<()> {
+    let engine = Engine::cpu(&opts.artifacts_dir)?;
+    let epochs = quick_epochs(opts);
+    let base = baseline_error(opts, &engine, Workload::C10, epochs)?;
+    println!("fig6: hetero CIFAR-10 proxy (baseline err={base:.2}%)");
+    let cells = run_grid(
+        opts,
+        &engine,
+        Workload::C10,
+        &HETERO_ALGS,
+        &worker_grid(opts),
+        epochs,
+        Environment::Heterogeneous,
+    )?;
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("fig6.csv"),
+        &["algorithm", "n_workers", "mean_err", "std_err", "baseline_err"],
+    )?;
+    for c in &cells {
+        w.row(&[
+            c.alg.name().to_string(),
+            c.n.to_string(),
+            fnum(c.mean()),
+            fnum(c.std()),
+            fnum(base),
+        ])?;
+    }
+    Ok(())
+}
+
+/// Fig 13: hetero final error (a) + convergence curves at N=8 (b).
+pub fn fig13(opts: &ExpOptions) -> anyhow::Result<()> {
+    let engine = Engine::cpu(&opts.artifacts_dir)?;
+    let epochs = quick_epochs(opts);
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("fig13.csv"),
+        &["algorithm", "epoch", "test_error", "sim_time"],
+    )?;
+    for alg in HETERO_ALGS {
+        let mut cfg = TrainConfig::preset(Workload::C10, alg, 8, epochs);
+        cfg.env = Environment::Heterogeneous;
+        cfg.eval_every_epochs = epochs / 12.0;
+        cfg.artifacts_dir = opts.artifacts_dir.clone();
+        let rep = sim_trainer::run(&cfg, &engine)?;
+        println!("  {}", rep.summary());
+        for p in &rep.curve {
+            w.row(&[
+                alg.name().to_string(),
+                fnum(p.epoch),
+                fnum(p.test_error),
+                fnum(p.sim_time),
+            ])?;
+        }
+    }
+    Ok(())
+}
+
+/// Table 6: heterogeneous final accuracies (paper row format).
+pub fn table6(opts: &ExpOptions) -> anyhow::Result<()> {
+    let engine = Engine::cpu(&opts.artifacts_dir)?;
+    let epochs = quick_epochs(opts);
+    let base = baseline_error(opts, &engine, Workload::C10, epochs)?;
+    let ns = worker_grid(opts);
+    let cells = run_grid(
+        opts,
+        &engine,
+        Workload::C10,
+        &HETERO_ALGS,
+        &ns,
+        epochs,
+        Environment::Heterogeneous,
+    )?;
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("table6.csv"),
+        &["algorithm", "n_workers", "mean_acc", "std"],
+    )?;
+    println!("\ntable6: hetero ResNet-20/C10 proxy ACCURACY (baseline {:.2}%)", 100.0 - base);
+    print!("{:>8} |", "#Workers");
+    for a in HETERO_ALGS {
+        print!(" {:>18} |", a.name());
+    }
+    println!();
+    for &n in &ns {
+        print!("{n:>8} |");
+        for a in HETERO_ALGS {
+            let c = cells.iter().find(|c| c.alg == a && c.n == n).unwrap();
+            print!(" {:>11.2} ± {:<4.2} |", 100.0 - c.mean(), c.std());
+            w.row(&[
+                a.name().to_string(),
+                n.to_string(),
+                fnum(100.0 - c.mean()),
+                fnum(c.std()),
+            ])?;
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! ImageNet-proxy experiments: Fig 7 (large-N error + convergence) and
+//! Table 5 (up to 128 workers).
+
+use super::accuracy::{baseline_error, run_grid};
+use super::ExpOptions;
+use crate::config::{TrainConfig, Workload};
+use crate::optim::AlgorithmKind;
+use crate::runtime::Engine;
+use crate::sim::Environment;
+use crate::train::sim_trainer;
+use crate::util::csvw::{fnum, CsvWriter};
+
+// Table 5's algorithm columns (includes LWP, unlike the CIFAR tables).
+const INET_ALGS: [AlgorithmKind; 7] = [
+    AlgorithmKind::DanaDc,
+    AlgorithmKind::DanaSlim,
+    AlgorithmKind::DcAsgd,
+    AlgorithmKind::MultiAsgd,
+    AlgorithmKind::NagAsgd,
+    AlgorithmKind::YellowFin,
+    AlgorithmKind::Lwp,
+];
+
+fn epochs(opts: &ExpOptions) -> f64 {
+    if opts.quick {
+        3.0
+    } else {
+        12.0
+    }
+}
+
+/// Fig 7(a): final error for N in {16, 32, 48, 64};
+/// Fig 7(b): convergence curves at N=32.
+pub fn fig7(opts: &ExpOptions) -> anyhow::Result<()> {
+    let engine = Engine::cpu(&opts.artifacts_dir)?;
+    let e = epochs(opts);
+    let wl = Workload::ImageNet;
+    let base = baseline_error(opts, &engine, wl, e)?;
+    println!("fig7: ImageNet proxy (baseline err={base:.2}%)");
+    let ns: &[usize] = if opts.quick { &[16, 32, 64] } else { &[16, 32, 48, 64] };
+    let cells = run_grid(
+        opts,
+        &engine,
+        wl,
+        &INET_ALGS,
+        ns,
+        e,
+        Environment::Homogeneous,
+    )?;
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("fig7a.csv"),
+        &["algorithm", "n_workers", "mean_err", "std_err", "baseline_err"],
+    )?;
+    for c in &cells {
+        w.row(&[
+            c.alg.name().to_string(),
+            c.n.to_string(),
+            fnum(c.mean()),
+            fnum(c.std()),
+            fnum(base),
+        ])?;
+    }
+    // 7(b): convergence at N=32
+    let mut wb = CsvWriter::create(
+        &opts.out_dir.join("fig7b.csv"),
+        &["algorithm", "epoch", "test_error"],
+    )?;
+    for alg in [AlgorithmKind::DanaDc, AlgorithmKind::DanaSlim, AlgorithmKind::MultiAsgd, AlgorithmKind::NagAsgd] {
+        let mut cfg = TrainConfig::preset(wl, alg, 32, e);
+        cfg.eval_every_epochs = e / 10.0;
+        cfg.artifacts_dir = opts.artifacts_dir.clone();
+        let rep = sim_trainer::run(&cfg, &engine)?;
+        println!("  {}", rep.summary());
+        for p in &rep.curve {
+            wb.row(&[alg.name().to_string(), fnum(p.epoch), fnum(p.test_error)])?;
+        }
+    }
+    Ok(())
+}
+
+/// Table 5: final accuracies for N in {16, 32, 48, 64, 128}.
+pub fn table5(opts: &ExpOptions) -> anyhow::Result<()> {
+    let engine = Engine::cpu(&opts.artifacts_dir)?;
+    let e = epochs(opts);
+    let wl = Workload::ImageNet;
+    let base = baseline_error(opts, &engine, wl, e)?;
+    let ns: Vec<usize> = if opts.quick {
+        vec![16, 32, 64]
+    } else {
+        vec![16, 32, 48, 64, 128]
+    };
+    let cells = run_grid(opts, &engine, wl, &INET_ALGS, &ns, e, Environment::Homogeneous)?;
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("table5.csv"),
+        &["algorithm", "n_workers", "mean_acc", "diverged"],
+    )?;
+    println!("\ntable5: ImageNet proxy ACCURACY (baseline {:.2}%)", 100.0 - base);
+    print!("{:>8} |", "#Workers");
+    for a in INET_ALGS {
+        print!(" {:>11} |", a.name());
+    }
+    println!();
+    for &n in &ns {
+        print!("{n:>8} |");
+        for a in INET_ALGS {
+            let c = cells.iter().find(|c| c.alg == a && c.n == n).unwrap();
+            let acc = 100.0 - c.mean();
+            if c.diverged as u64 == opts.seeds {
+                print!(" {:>11} |", "NaN");
+            } else {
+                print!(" {acc:>10.2}% |", );
+            }
+            w.row(&[
+                a.name().to_string(),
+                n.to_string(),
+                fnum(acc),
+                c.diverged.to_string(),
+            ])?;
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+//! (Populated by the per-figure modules; see DESIGN.md §5 for the index.)
+
+pub mod accuracy;
+pub mod gap;
+pub mod hetero;
+pub mod imagenet;
+pub mod speedup;
+
+use std::path::PathBuf;
+
+/// Shared experiment options (CLI-controlled).
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Quick mode: reduced steps/seeds/worker grids, shape-preserving.
+    pub quick: bool,
+    pub seeds: u64,
+    pub out_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            quick: true,
+            seeds: 2,
+            out_dir: PathBuf::from("results"),
+            artifacts_dir: crate::config::default_artifacts_dir(),
+        }
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "fig2a", "fig2b", "fig3", "fig4", "fig5", "fig6", "fig7", "fig9", "fig10",
+    "fig11", "fig12", "fig13", "table1", "table2", "table3", "table4", "table5",
+    "table6",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<()> {
+    match id {
+        "fig2a" => gap::fig2a(opts),
+        "fig2b" => gap::fig2b(opts),
+        "fig11" => gap::fig11(opts),
+        "fig3" => speedup::fig3(opts),
+        "fig12" => speedup::fig12(opts),
+        "fig10" => speedup::fig10(opts),
+        "fig9" => speedup::fig9(opts),
+        "table1" => speedup::table1(opts),
+        "fig4" => accuracy::fig4(opts),
+        "fig5" => accuracy::fig5(opts),
+        "table2" => accuracy::table(opts, crate::config::Workload::C10, "table2"),
+        "table3" => accuracy::table(opts, crate::config::Workload::C10, "table3"),
+        "table4" => accuracy::table(opts, crate::config::Workload::C100, "table4"),
+        "fig7" => imagenet::fig7(opts),
+        "table5" => imagenet::table5(opts),
+        "fig6" => hetero::fig6(opts),
+        "fig13" => hetero::fig13(opts),
+        "table6" => hetero::table6(opts),
+        "all" => {
+            for id in ALL_IDS {
+                println!("=== {id} ===");
+                run(id, opts)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment {other:?}; known: {}, all", ALL_IDS.join(", ")),
+    }
+}

@@ -1,0 +1,237 @@
+//! Timing/scaling experiments: Fig 3 (gamma pdfs), Fig 9 (total-batch-size
+//! scaling), Fig 10 (cloud speedup + error), Fig 12 (theoretical speedup),
+//! Table 1 (accuracy/time/speedup per total batch).
+
+use super::ExpOptions;
+use crate::config::{TrainConfig, Workload};
+use crate::optim::AlgorithmKind;
+use crate::runtime::Engine;
+use crate::sim::gamma::{Environment, ExecTimeModel};
+use crate::sim::speedup as sp;
+use crate::train::{sim_trainer, ssgd};
+use crate::util::csvw::{fnum, CsvWriter};
+use crate::util::rng::Rng;
+
+/// Fig 3: empirical pdf of batch execution time, homo vs hetero.
+pub fn fig3(opts: &ExpOptions) -> anyhow::Result<()> {
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("fig3.csv"),
+        &["env", "bucket_lo", "bucket_hi", "prob"],
+    )?;
+    let b = 128usize;
+    let samples = if opts.quick { 200_000 } else { 1_000_000 };
+    for env in [Environment::Homogeneous, Environment::Heterogeneous] {
+        // resample the cluster every 800 draws so machine-level variance
+        // shows up in the pdf (as in Fig 3's "many clusters" view)
+        let mut all = Vec::with_capacity(samples);
+        let mut seed = 0u64;
+        while all.len() < samples {
+            let mut rng = Rng::new(seed);
+            seed += 1;
+            let m = ExecTimeModel::new(env, 8, b, &mut rng);
+            for j in 0..8 {
+                for _ in 0..100 {
+                    all.push(m.sample(j, &mut rng));
+                }
+            }
+        }
+        let tail = all.iter().filter(|&&t| t > 1.25 * b as f64).count() as f64
+            / all.len() as f64;
+        let mean = all.iter().sum::<f64>() / all.len() as f64;
+        println!(
+            "  {env:?}: mean={mean:.1} (B={b}), P[t > 1.25B] = {:.1}% (paper: homo 1%, hetero 27.9%)",
+            100.0 * tail
+        );
+        // histogram over [0, 4B) in 64 buckets
+        let buckets = 64usize;
+        let hi = 4.0 * b as f64;
+        let mut counts = vec![0usize; buckets];
+        for &t in &all {
+            let i = ((t / hi) * buckets as f64) as usize;
+            counts[i.min(buckets - 1)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            w.row(&[
+                format!("{env:?}"),
+                fnum(i as f64 * hi / buckets as f64),
+                fnum((i + 1) as f64 * hi / buckets as f64),
+                fnum(c as f64 / all.len() as f64),
+            ])?;
+        }
+    }
+    Ok(())
+}
+
+/// Fig 12: theoretical async/sync speedup from the gamma model alone.
+pub fn fig12(opts: &ExpOptions) -> anyhow::Result<()> {
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("fig12.csv"),
+        &["env", "n_workers", "async_speedup", "sync_speedup"],
+    )?;
+    let ns: Vec<usize> = if opts.quick {
+        vec![1, 2, 4, 8, 16, 32, 64]
+    } else {
+        vec![1, 2, 4, 8, 12, 16, 24, 32, 48, 64]
+    };
+    let (bpw, seeds) = if opts.quick { (60, 4) } else { (200, 10) };
+    for env in [Environment::Homogeneous, Environment::Heterogeneous] {
+        let pts = sp::speedup_sweep(env, &ns, 128, bpw, seeds);
+        println!("  {env:?}:");
+        for p in &pts {
+            println!(
+                "    N={:<3} async={:6.2}x sync={:6.2}x (ratio {:.2})",
+                p.n_workers,
+                p.async_speedup,
+                p.sync_speedup,
+                p.async_speedup / p.sync_speedup
+            );
+            w.row(&[
+                format!("{env:?}"),
+                p.n_workers.to_string(),
+                fnum(p.async_speedup),
+                fnum(p.sync_speedup),
+            ])?;
+        }
+    }
+    println!("  (paper Fig 12: async near-linear; sync plateaus, badly under hetero)");
+    Ok(())
+}
+
+/// Fig 10: DANA-Slim speedup (solid) + final error (dashed) vs N — the
+/// cloud experiment reproduced over the simulated cluster.
+pub fn fig10(opts: &ExpOptions) -> anyhow::Result<()> {
+    let engine = Engine::cpu(&opts.artifacts_dir)?;
+    let epochs = if opts.quick { 5.0 } else { 16.0 };
+    let ns: Vec<usize> = if opts.quick {
+        vec![1, 4, 8, 16, 24]
+    } else {
+        vec![1, 2, 4, 8, 12, 16, 20, 24]
+    };
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("fig10.csv"),
+        &["n_workers", "speedup", "test_error"],
+    )?;
+    println!("fig10: DANA-Slim on simulated cloud (CIFAR-10 proxy, epochs={epochs})");
+    let mut base_time = None;
+    for &n in &ns {
+        let mut cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, n, epochs);
+        cfg.artifacts_dir = opts.artifacts_dir.clone();
+        let rep = sim_trainer::run(&cfg, &engine)?;
+        let t = rep.sim_time;
+        let speedup = match base_time {
+            None => {
+                base_time = Some(t);
+                1.0
+            }
+            Some(b) => b / t,
+        };
+        println!(
+            "  N={n:<3} speedup={speedup:6.2}x err={:6.2}%",
+            rep.final_test_error
+        );
+        w.row(&[n.to_string(), fnum(speedup), fnum(rep.final_test_error)])?;
+    }
+    Ok(())
+}
+
+const TABLE1_BATCHES: [usize; 4] = [256, 512, 1024, 2048];
+
+/// Fig 9 / Table 1 shared runs: 8 workers, total batch in {256..2048}
+/// (per-worker batch = total/8), DANA-Slim vs Multi-ASGD vs SSGD.
+fn batch_scaling_runs(
+    opts: &ExpOptions,
+    engine: &Engine,
+    total_batch: usize,
+    epochs: f64,
+    curves: bool,
+) -> anyhow::Result<Vec<(String, crate::train::TrainReport)>> {
+    let per_worker = total_batch / 8;
+    let mk_cfg = |alg| {
+        let mut cfg = TrainConfig::preset(Workload::C10, alg, 8, epochs).with_batch(per_worker);
+        cfg.artifacts_dir = opts.artifacts_dir.clone();
+        if curves {
+            cfg.eval_every_epochs = epochs / 10.0;
+        }
+        cfg
+    };
+    let mut out = Vec::new();
+    for alg in [AlgorithmKind::DanaSlim, AlgorithmKind::MultiAsgd] {
+        let rep = sim_trainer::run(&mk_cfg(alg), engine)?;
+        out.push((alg.name().to_string(), rep));
+    }
+    let rep = ssgd::run(&mk_cfg(AlgorithmKind::DanaSlim), engine)?;
+    out.push(("ssgd".to_string(), rep));
+    Ok(out)
+}
+
+/// Fig 9: final error (a) + convergence at total batch 2048 (b).
+pub fn fig9(opts: &ExpOptions) -> anyhow::Result<()> {
+    let engine = Engine::cpu(&opts.artifacts_dir)?;
+    let epochs = if opts.quick { 5.0 } else { 16.0 };
+    let mut wa = CsvWriter::create(
+        &opts.out_dir.join("fig9a.csv"),
+        &["algorithm", "total_batch", "test_error"],
+    )?;
+    println!("fig9: total-batch-size scaling, 8 workers (epochs={epochs})");
+    for &tb in &TABLE1_BATCHES {
+        let runs = batch_scaling_runs(opts, &engine, tb, epochs, false)?;
+        for (name, rep) in &runs {
+            println!("  B={tb:<5} {:<10} err={:6.2}%", name, rep.final_test_error);
+            wa.row(&[name.clone(), tb.to_string(), fnum(rep.final_test_error)])?;
+        }
+    }
+    // 9(b): convergence curves at total batch 2048
+    let mut wb = CsvWriter::create(
+        &opts.out_dir.join("fig9b.csv"),
+        &["algorithm", "epoch", "test_error", "sim_time"],
+    )?;
+    for (name, rep) in batch_scaling_runs(opts, &engine, 2048, epochs, true)? {
+        for p in &rep.curve {
+            wb.row(&[name.clone(), fnum(p.epoch), fnum(p.test_error), fnum(p.sim_time)])?;
+        }
+    }
+    Ok(())
+}
+
+/// Table 1: accuracy / simulated time / speedup-over-1-worker per total
+/// batch size.
+pub fn table1(opts: &ExpOptions) -> anyhow::Result<()> {
+    let engine = Engine::cpu(&opts.artifacts_dir)?;
+    let epochs = if opts.quick { 5.0 } else { 16.0 };
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("table1.csv"),
+        &["total_batch", "algorithm", "accuracy", "sim_time", "speedup"],
+    )?;
+    println!("\ntable1: 8-worker scaling (simulated time units; speedup vs 1 worker)");
+    println!(
+        "{:>10} | {:<10} | {:>9} | {:>12} | {:>8}",
+        "TotalBatch", "Algorithm", "Accuracy", "SimTime", "Speedup"
+    );
+    for &tb in &TABLE1_BATCHES {
+        let per_worker = tb / 8;
+        // single-worker reference time for the same number of batches
+        let steps = {
+            let cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, epochs)
+                .with_batch(per_worker);
+            cfg.total_master_steps() as usize
+        };
+        let base_time = sp::single_worker_time(Environment::Homogeneous, per_worker, steps, 99);
+        for (name, rep) in batch_scaling_runs(opts, &engine, tb, epochs, false)? {
+            let speedup = base_time / rep.sim_time;
+            println!(
+                "{tb:>10} | {name:<10} | {:>8.2}% | {:>12.0} | {speedup:>7.2}x",
+                100.0 - rep.final_test_error,
+                rep.sim_time
+            );
+            w.row(&[
+                tb.to_string(),
+                name,
+                fnum(100.0 - rep.final_test_error),
+                fnum(rep.sim_time),
+                fnum(speedup),
+            ])?;
+        }
+    }
+    println!("  (paper Table 1 shape: ASGD speedup > SSGD; accuracy comparable)");
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! # DANA — Taming Momentum in a Distributed Asynchronous Environment
+//!
+//! Full reproduction of Hakimi, Barkai, Gabel & Schuster (2019) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the asynchronous parameter-server
+//!   coordinator: every update rule evaluated in the paper
+//!   ([`optim`]), the parameter server with gap/lag instrumentation
+//!   ([`server`]), the gamma execution-time cluster simulator ([`sim`]),
+//!   training drivers ([`train`]) and the experiment harness that
+//!   regenerates each paper table/figure ([`experiments`]).
+//! * **Layer 2/1 (python, build-time)** — JAX models whose dense hot paths
+//!   are Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
+//! * **Runtime bridge** — [`runtime`] loads the artifacts through the PJRT
+//!   CPU client (`xla` crate) so Python is never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for measured reproductions.
+
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod math;
+pub mod optim;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod train;
+pub mod util;

@@ -1,0 +1,178 @@
+//! `dana` — CLI entrypoint for the DANA reproduction.
+//!
+//! Subcommands:
+//!   train       run one training experiment (async / ssgd / baseline)
+//!   experiment  regenerate a paper table/figure (or `all`)
+//!   simulate    pure timing simulation (no model execution)
+//!   info        artifact manifest + platform report
+//!
+//! Examples:
+//!   dana train --algorithm dana-slim --workers 8 --epochs 10
+//!   dana train --mode real --algorithm dana-slim --workers 4 --workload lm
+//!   dana experiment fig4 --full --seeds 3
+//!   dana simulate --env hetero --workers 32
+
+use dana::config::{TrainConfig, Workload};
+use dana::experiments::{self, ExpOptions};
+use dana::optim::AlgorithmKind;
+use dana::runtime::Engine;
+use dana::sim::Environment;
+use dana::train::{baseline, real_async, sim_trainer, ssgd};
+use dana::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: dana <train|experiment|simulate|info> [options]
+  train      --algorithm A --workers N [--workload c10|wrn_c10|c100|imagenet|lm]
+             [--epochs E] [--env homo|hetero] [--mode sim|real|ssgd|baseline]
+             [--seed S] [--eta X] [--gamma X] [--metrics-every K]
+             [--config file.json] [--use-pallas] [--artifacts DIR]
+  experiment <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|fig12|fig13|
+              table1..table6|all> [--full] [--seeds K] [--out DIR] [--artifacts DIR]
+  simulate   --workers N [--env homo|hetero] [--batches-per-worker K] [--batch B]
+  info       [--artifacts DIR]";
+
+fn run() -> anyhow::Result<()> {
+    let mut args = Args::parse_env(true)?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&mut args),
+        Some("experiment") => cmd_experiment(&mut args),
+        Some("simulate") => cmd_simulate(&mut args),
+        Some("info") => cmd_info(&mut args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn artifacts_dir(args: &mut Args) -> PathBuf {
+    args.opt_str("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(dana::config::default_artifacts_dir)
+}
+
+fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
+    let workload: Workload = args.str_or("workload", "c10").parse()?;
+    let algorithm: AlgorithmKind = args.str_or("algorithm", "dana-slim").parse()?;
+    let workers = args.parse_or::<usize>("workers", 8)?;
+    let epochs = args.parse_or::<f64>("epochs", 10.0)?;
+    let mut cfg = TrainConfig::preset(workload, algorithm, workers, epochs);
+    if let Some(path) = args.opt_str("config") {
+        let j = dana::util::json::Json::parse_file(std::path::Path::new(&path))?;
+        cfg.apply_json(&j)?;
+    }
+    cfg.env = args.str_or("env", "homo").parse()?;
+    cfg.seed = args.parse_or::<u64>("seed", 1)?;
+    if let Some(eta) = args.opt_parse::<f32>("eta")? {
+        cfg.schedule.base_eta = eta;
+    }
+    if let Some(g) = args.opt_parse::<f32>("gamma")? {
+        cfg.schedule.gamma = g;
+    }
+    if let Some(w) = args.opt_parse::<f64>("warmup")? {
+        cfg.schedule.warmup_epochs = w;
+    }
+    if let Some(l) = args.opt_parse::<f32>("lambda")? {
+        cfg.schedule.lambda = l;
+    }
+    cfg.metrics_every = args.parse_or::<u64>("metrics-every", 0)?;
+    cfg.use_pallas = args.flag("use-pallas");
+    cfg.eval_every_epochs = args.parse_or::<f64>("eval-every", 0.0)?;
+    cfg.artifacts_dir = artifacts_dir(args);
+    let mode = args.str_or("mode", "sim");
+    args.finish()?;
+
+    let engine = Engine::cpu(&cfg.artifacts_dir)?;
+    println!(
+        "training {} / {} on {} worker(s), {} epochs ({} master steps), mode={mode}",
+        cfg.variant_name(),
+        cfg.algorithm.name(),
+        cfg.n_workers,
+        cfg.epochs,
+        cfg.total_master_steps()
+    );
+    let report = match mode.as_str() {
+        "sim" => sim_trainer::run(&cfg, &engine)?,
+        "real" => real_async::run(&cfg, &engine)?,
+        "ssgd" => ssgd::run(&cfg, &engine)?,
+        "baseline" => baseline::run(&cfg, &engine)?,
+        other => anyhow::bail!("unknown mode {other:?} (sim|real|ssgd|baseline)"),
+    };
+    println!("{}", report.summary());
+    for p in &report.curve {
+        println!(
+            "  epoch {:6.2}  err {:6.2}%  loss {:.4}",
+            p.epoch, p.test_error, p.test_loss
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &mut Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("experiment id required\n{USAGE}"))?;
+    let opts = ExpOptions {
+        quick: !args.flag("full"),
+        seeds: args.parse_or::<u64>("seeds", 2)?,
+        out_dir: PathBuf::from(args.str_or("out", "results")),
+        artifacts_dir: artifacts_dir(args),
+    };
+    args.finish()?;
+    let t0 = std::time::Instant::now();
+    experiments::run(&id, &opts)?;
+    println!(
+        "experiment {id} done in {:.1}s (results in {})",
+        t0.elapsed().as_secs_f64(),
+        opts.out_dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
+    let workers = args.parse_or::<usize>("workers", 8)?;
+    let env: Environment = args.str_or("env", "homo").parse()?;
+    let bpw = args.parse_or::<usize>("batches-per-worker", 100)?;
+    let batch = args.parse_or::<usize>("batch", 128)?;
+    let seeds = args.parse_or::<u64>("seeds", 5)?;
+    args.finish()?;
+    let pts = dana::sim::speedup::speedup_sweep(env, &[workers], batch, bpw, seeds);
+    for p in pts {
+        println!(
+            "{env:?} N={}: async {:.2}x, sync {:.2}x (async/sync {:.2})",
+            p.n_workers,
+            p.async_speedup,
+            p.sync_speedup,
+            p.async_speedup / p.sync_speedup
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &mut Args) -> anyhow::Result<()> {
+    let dir = artifacts_dir(args);
+    args.finish()?;
+    let engine = Engine::cpu(&dir)?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts: {}", dir.display());
+    for v in &engine.manifest().variants {
+        println!(
+            "  {:<18} kind={:<4} P={:<8} batch={:<4} x{:?} golden_loss={:.4}",
+            v.name, v.kind, v.param_count, v.batch, v.x_shape, v.golden.loss
+        );
+    }
+    if let Some(uk) = &engine.manifest().update_kernel {
+        println!("  update kernel: k={}", uk.k);
+    }
+    Ok(())
+}

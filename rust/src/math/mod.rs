@@ -1,0 +1,369 @@
+//! Flat f32 vector kernels — the L3 request-path hot loops.
+//!
+//! Every master-side update rule in `optim/` is a composition of these
+//! single-pass fused loops over `f32[k]` state.  They are written as
+//! straight slice iterations (bounds-check-free via `zip`) so LLVM
+//! auto-vectorizes them; the perf pass (EXPERIMENTS.md §Perf) measures them
+//! against the memory-bandwidth roofline, and `benches/optimizer.rs` tracks
+//! regressions.  The fused DANA step mirrors the L1 Pallas kernel
+//! `python/compile/kernels/update.py` one-to-one.
+
+/// y += a * x
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (y, x) in y.iter_mut().zip(x) {
+        *y += a * *x;
+    }
+}
+
+/// y = x (memcpy wrapper for symmetry).
+pub fn copy(y: &mut [f32], x: &[f32]) {
+    y.copy_from_slice(x);
+}
+
+/// x *= a
+pub fn scale(x: &mut [f32], a: f32) {
+    for x in x.iter_mut() {
+        *x *= a;
+    }
+}
+
+/// out = a - b
+pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert!(out.len() == a.len() && a.len() == b.len());
+    for ((o, a), b) in out.iter_mut().zip(a).zip(b) {
+        *o = a - b;
+    }
+}
+
+/// dot(a, b) with f64 accumulation (4-way unrolled: a single f64
+/// accumulator serializes the loop on its ~4-cycle add latency; four
+/// independent partials let the FMA pipes overlap — see §Perf).
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let (ac, ar) = a.split_at(a.len() & !3);
+    let (bc, br) = b.split_at(b.len() & !3);
+    for (ca, cb) in ac.chunks_exact(4).zip(bc.chunks_exact(4)) {
+        for i in 0..4 {
+            acc[i] += ca[i] as f64 * cb[i] as f64;
+        }
+    }
+    let mut tail = 0.0;
+    for (&x, &y) in ar.iter().zip(br) {
+        tail += x as f64 * y as f64;
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// ||a||_2^2 in f64 (4-way unrolled, see [`dot`]).
+pub fn norm2_sq(a: &[f32]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let (chunks, rest) = a.split_at(a.len() & !3);
+    for c in chunks.chunks_exact(4) {
+        for i in 0..4 {
+            acc[i] += c[i] as f64 * c[i] as f64;
+        }
+    }
+    let mut tail = 0.0;
+    for &x in rest {
+        tail += x as f64 * x as f64;
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// ||a - b||_2 without materializing the difference (gap hot path;
+/// 4-way unrolled, see [`dot`]).
+pub fn sub_norm(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 8];
+    let (ac, ar) = a.split_at(a.len() & !7);
+    let (bc, br) = b.split_at(b.len() & !7);
+    for (ca, cb) in ac.chunks_exact(8).zip(bc.chunks_exact(8)) {
+        for i in 0..8 {
+            let d = ca[i] as f64 - cb[i] as f64;
+            acc[i] += d * d;
+        }
+    }
+    let mut tail = 0.0;
+    for (&x, &y) in ar.iter().zip(br) {
+        let d = x as f64 - y as f64;
+        tail += d * d;
+    }
+    (acc.iter().sum::<f64>() + tail).sqrt()
+}
+
+/// Momentum accumulate + SGD apply in one pass (Eq 2):
+/// `v = gamma*v + g; theta -= eta*v`.
+pub fn momentum_step(theta: &mut [f32], v: &mut [f32], g: &[f32], gamma: f32, eta: f32) {
+    debug_assert!(theta.len() == v.len() && v.len() == g.len());
+    for ((t, v), g) in theta.iter_mut().zip(v.iter_mut()).zip(g) {
+        let vn = gamma * *v + *g;
+        *v = vn;
+        *t -= eta * vn;
+    }
+}
+
+/// Fused DANA-Zero master step (paper Eq 10/11 + Appendix A.2), mirroring
+/// the L1 kernel `momentum_lookahead_update`:
+///
+/// ```text
+/// v'    = gamma*v + g
+/// theta'= theta - eta*v'
+/// vsum' = vsum - v + v'
+/// ```
+/// `v`, `theta`, `vsum` update in place; one pass, each stream touched once.
+pub fn dana_fused_update(
+    theta: &mut [f32],
+    v: &mut [f32],
+    vsum: &mut [f32],
+    g: &[f32],
+    gamma: f32,
+    eta: f32,
+) {
+    debug_assert!(theta.len() == v.len() && v.len() == vsum.len() && vsum.len() == g.len());
+    for (((t, v), vs), g) in theta
+        .iter_mut()
+        .zip(v.iter_mut())
+        .zip(vsum.iter_mut())
+        .zip(g)
+    {
+        let v_new = gamma * *v + *g;
+        *t -= eta * v_new;
+        *vs += v_new - *v;
+        *v = v_new;
+    }
+}
+
+/// DANA look-ahead send (Eq 11): `hat = theta - eta*gamma*vsum`.
+pub fn lookahead(hat: &mut [f32], theta: &[f32], vsum: &[f32], gamma: f32, eta: f32) {
+    debug_assert!(hat.len() == theta.len() && theta.len() == vsum.len());
+    let c = eta * gamma;
+    for ((h, t), vs) in hat.iter_mut().zip(theta).zip(vsum) {
+        *h = t - c * vs;
+    }
+}
+
+/// DC-ASGD gradient adjustment (Eq 17):
+/// `g_hat = g + lambda * g⊙g⊙(theta_master - theta_sent)`, in place on `g`.
+pub fn dc_adjust(g: &mut [f32], theta_master: &[f32], theta_sent: &[f32], lambda: f32) {
+    debug_assert!(g.len() == theta_master.len() && g.len() == theta_sent.len());
+    for ((g, &tm), &ts) in g.iter_mut().zip(theta_master).zip(theta_sent) {
+        *g += lambda * *g * *g * (tm - ts);
+    }
+}
+
+/// DC-ASGD fused apply (Alg 10 lines 2–4 in one pass): compensate the
+/// gradient toward the master's position, then momentum-update and apply —
+/// touching each of the four streams once instead of three passes + a copy.
+pub fn dc_momentum_step(
+    theta: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    sent: &[f32],
+    gamma: f32,
+    eta: f32,
+    lambda: f32,
+) {
+    debug_assert!(theta.len() == v.len() && v.len() == g.len() && g.len() == sent.len());
+    for (((t, v), &g), &s) in theta.iter_mut().zip(v.iter_mut()).zip(g).zip(sent) {
+        let ghat = g + lambda * g * g * (*t - s);
+        let vn = gamma * *v + ghat;
+        *v = vn;
+        *t -= eta * vn;
+    }
+}
+
+/// DANA-DC fused apply (Alg 7 in one pass): delay compensation + per-worker
+/// momentum + master update + incremental v⁰ maintenance.
+#[allow(clippy::too_many_arguments)]
+pub fn dc_dana_fused_update(
+    theta: &mut [f32],
+    v: &mut [f32],
+    vsum: &mut [f32],
+    g: &[f32],
+    sent: &[f32],
+    gamma: f32,
+    eta: f32,
+    lambda: f32,
+) {
+    debug_assert!(
+        theta.len() == v.len()
+            && v.len() == vsum.len()
+            && vsum.len() == g.len()
+            && g.len() == sent.len()
+    );
+    for ((((t, v), vs), &g), &s) in theta
+        .iter_mut()
+        .zip(v.iter_mut())
+        .zip(vsum.iter_mut())
+        .zip(g)
+        .zip(sent)
+    {
+        let ghat = g + lambda * g * g * (*t - s);
+        let v_new = gamma * *v + ghat;
+        *t -= eta * v_new;
+        *vs += v_new - *v;
+        *v = v_new;
+    }
+}
+
+/// Bengio-NAG / DANA-Slim worker update vector (Alg 6 send):
+/// `v = gamma*v + g` then the *sent* vector is `gamma*v + g`
+/// evaluated with the *new* v, i.e. `send = gamma*v_new + g`.
+/// Computes v in place and writes the send vector.
+pub fn slim_worker_update(send: &mut [f32], v: &mut [f32], g: &[f32], gamma: f32) {
+    debug_assert!(send.len() == v.len() && v.len() == g.len());
+    for ((s, v), g) in send.iter_mut().zip(v.iter_mut()).zip(g) {
+        let v_new = gamma * *v + *g;
+        *v = v_new;
+        *s = gamma * v_new + *g;
+    }
+}
+
+/// theta -= eta * u  (plain ASGD master apply).
+pub fn apply_update(theta: &mut [f32], u: &[f32], eta: f32) {
+    axpy(theta, -eta, u);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(n: usize, f: impl Fn(usize) -> f32) -> Vec<f32> {
+        (0..n).map(f).collect()
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let mut y = v(5, |i| i as f32);
+        axpy(&mut y, 2.0, &v(5, |_| 1.0));
+        assert_eq!(y, v(5, |i| i as f32 + 2.0));
+    }
+
+    #[test]
+    fn dot_and_norms() {
+        let a = [3.0f32, 4.0];
+        assert_eq!(dot(&a, &a), 25.0);
+        assert_eq!(norm2_sq(&a), 25.0);
+        assert_eq!(sub_norm(&a, &[0.0, 0.0]), 5.0);
+    }
+
+    #[test]
+    fn momentum_step_matches_equations() {
+        // One step of Eq 2 by hand.
+        let mut theta = [1.0f32, 2.0];
+        let mut vel = [0.5f32, -0.5];
+        momentum_step(&mut theta, &mut vel, &[0.1, 0.2], 0.9, 0.1);
+        assert!((vel[0] - (0.9 * 0.5 + 0.1)).abs() < 1e-7);
+        assert!((theta[0] - (1.0 - 0.1 * vel[0])).abs() < 1e-7);
+    }
+
+    #[test]
+    fn dana_fused_matches_sequential_reference() {
+        let k = 257;
+        let g = v(k, |i| (i as f32 * 0.37).sin());
+        let mut theta = v(k, |i| i as f32 * 0.01);
+        let mut vel = v(k, |i| (i as f32 * 0.11).cos());
+        let mut vsum = v(k, |i| (i as f32 * 0.05).sin() * 2.0);
+        let (t0, v0, s0) = (theta.clone(), vel.clone(), vsum.clone());
+        dana_fused_update(&mut theta, &mut vel, &mut vsum, &g, 0.9, 0.05);
+        for i in 0..k {
+            let v_new = 0.9 * v0[i] + g[i];
+            assert!((vel[i] - v_new).abs() < 1e-6);
+            assert!((theta[i] - (t0[i] - 0.05 * v_new)).abs() < 1e-6);
+            assert!((vsum[i] - (s0[i] - v0[i] + v_new)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lookahead_is_eq11() {
+        let theta = [1.0f32, 2.0];
+        let vsum = [10.0f32, -10.0];
+        let mut hat = [0.0f32; 2];
+        lookahead(&mut hat, &theta, &vsum, 0.9, 0.1);
+        assert!((hat[0] - (1.0 - 0.09 * 10.0)).abs() < 1e-7);
+        assert!((hat[1] - (2.0 + 0.09 * 10.0)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn dc_adjust_is_eq17() {
+        let mut g = [2.0f32];
+        dc_adjust(&mut g, &[5.0], &[3.0], 0.5);
+        // g + 0.5 * 4 * 2 = 2 + 4
+        assert!((g[0] - 6.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn slim_send_vector() {
+        let mut vel = [1.0f32];
+        let mut send = [0.0f32];
+        slim_worker_update(&mut send, &mut vel, &[0.5], 0.8);
+        // v_new = 0.8 + 0.5 = 1.3 ; send = 0.8*1.3 + 0.5 = 1.54
+        assert!((vel[0] - 1.3).abs() < 1e-7);
+        assert!((send[0] - 1.54).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fused_dc_paths_match_unfused_composition() {
+        let k = 131;
+        let g = v(k, |i| (i as f32 * 0.21).sin() * 0.1);
+        let sent = v(k, |i| i as f32 * 0.01 - 0.5);
+        let (gamma, eta, lambda) = (0.9f32, 0.05f32, 1.5f32);
+        // reference: dc_adjust then momentum_step / dana_fused_update
+        let mut t1 = v(k, |i| (i as f32 * 0.13).cos());
+        let mut v1 = v(k, |i| (i as f32 * 0.07).sin());
+        let mut ghat = g.clone();
+        dc_adjust(&mut ghat, &t1, &sent, lambda);
+        let mut t1b = t1.clone();
+        let mut v1b = v1.clone();
+        momentum_step(&mut t1b, &mut v1b, &ghat, gamma, eta);
+        // fused
+        dc_momentum_step(&mut t1, &mut v1, &g, &sent, gamma, eta, lambda);
+        for i in 0..k {
+            assert!((t1[i] - t1b[i]).abs() < 1e-6);
+            assert!((v1[i] - v1b[i]).abs() < 1e-6);
+        }
+        // DANA-DC variant
+        let mut t2 = v(k, |i| (i as f32 * 0.13).cos());
+        let mut v2 = v(k, |i| (i as f32 * 0.07).sin());
+        let mut s2 = v(k, |i| (i as f32 * 0.03).cos());
+        let mut ghat2 = g.clone();
+        dc_adjust(&mut ghat2, &t2, &sent, lambda);
+        let (mut t2b, mut v2b, mut s2b) = (t2.clone(), v2.clone(), s2.clone());
+        dana_fused_update(&mut t2b, &mut v2b, &mut s2b, &ghat2, gamma, eta);
+        dc_dana_fused_update(&mut t2, &mut v2, &mut s2, &g, &sent, gamma, eta, lambda);
+        for i in 0..k {
+            assert!((t2[i] - t2b[i]).abs() < 1e-6);
+            assert!((v2[i] - v2b[i]).abs() < 1e-6);
+            assert!((s2[i] - s2b[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn unrolled_reductions_match_naive() {
+        // odd length exercises the tail path
+        let a = v(1027, |i| (i as f32 * 0.37).sin());
+        let b = v(1027, |i| (i as f32 * 0.11).cos());
+        let naive_dot: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        assert!((dot(&a, &b) - naive_dot).abs() < 1e-9 * (1.0 + naive_dot.abs()));
+        let naive_n2: f64 = a.iter().map(|&x| x as f64 * x as f64).sum();
+        assert!((norm2_sq(&a) - naive_n2).abs() < 1e-9 * naive_n2);
+        let naive_sn: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| (x as f64 - y as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        assert!((sub_norm(&a, &b) - naive_sn).abs() < 1e-9 * (1.0 + naive_sn));
+    }
+
+    #[test]
+    fn zero_gamma_momentum_is_sgd() {
+        let mut theta = [1.0f32];
+        let mut vel = [99.0f32];
+        momentum_step(&mut theta, &mut vel, &[2.0], 0.0, 0.5);
+        assert_eq!(vel[0], 2.0);
+        assert_eq!(theta[0], 0.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! Plain asynchronous SGD (paper Algorithm 2) — no momentum.
+//!
+//! The gap baseline of Section 3: its Δ is just the sum of the other
+//! workers' recent gradients (Eq 7), which is what DANA's look-ahead is
+//! engineered to match (Eq 12).
+
+use super::{Algorithm, AlgorithmKind, Step};
+use crate::math;
+
+#[derive(Debug, Clone)]
+pub struct Asgd {
+    theta: Vec<f32>,
+}
+
+impl Asgd {
+    pub fn new(theta0: &[f32]) -> Self {
+        Asgd { theta: theta0.to_vec() }
+    }
+}
+
+impl Algorithm for Asgd {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::Asgd
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    fn master_apply(&mut self, _worker: usize, msg: &[f32], _sent: &[f32], s: Step) {
+        math::apply_update(&mut self.theta, msg, s.eta);
+    }
+
+    fn set_theta(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn applies_plain_sgd_step() {
+        let mut a = Asgd::new(&[1.0, 2.0]);
+        let s = Step { eta: 0.5, ..Step::default() };
+        a.master_apply(0, &[1.0, -1.0], &[1.0, 2.0], s);
+        assert_eq!(a.theta(), &[0.5, 2.5]);
+    }
+
+    #[test]
+    fn workers_share_one_theta() {
+        let mut a = Asgd::new(&[0.0]);
+        let s = Step { eta: 1.0, ..Step::default() };
+        a.master_apply(0, &[1.0], &[0.0], s);
+        a.master_apply(3, &[1.0], &[0.0], s);
+        assert_eq!(a.theta(), &[-2.0]);
+    }
+}

@@ -1,0 +1,106 @@
+//! DANA-Slim (paper Algorithm 6, §4.2): DANA with zero master overhead.
+//!
+//! The Bengio-NAG re-parameterization `Θ_t = θ_t − ηγ Σⱼ vʲ` (Eq 15) folds
+//! the look-ahead into the trained parameters themselves.  The momentum
+//! vector moves to the worker; the master is *byte-identical to plain ASGD*
+//! (it just applies `θ ← θ − η·msg`), and the worker sends the combined
+//! update vector
+//!
+//! ```text
+//! v^i  <- gamma * v^i + g^i
+//! send gamma * v^i + g^i            (the Bengio-NAG update direction)
+//! ```
+//!
+//! Equation (16) shows the resulting Θ-trajectory equals DANA-Zero's up to
+//! the parameter switch — verified exactly by the integration test
+//! `dana_slim_equals_dana_zero`.
+
+use super::{Algorithm, AlgorithmKind, Step, WorkerState};
+use crate::math;
+
+#[derive(Debug, Clone)]
+pub struct DanaSlim {
+    theta: Vec<f32>,
+}
+
+impl DanaSlim {
+    pub fn new(theta0: &[f32]) -> Self {
+        DanaSlim { theta: theta0.to_vec() }
+    }
+}
+
+impl Algorithm for DanaSlim {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::DanaSlim
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Master half == ASGD (Algorithm 2). The message is the worker's
+    /// Bengio-NAG update vector, not a raw gradient (footnote 3: both live
+    /// in R^k, the master cannot tell and does not care).
+    fn master_apply(&mut self, _worker: usize, msg: &[f32], _sent: &[f32], s: Step) {
+        math::apply_update(&mut self.theta, msg, s.eta);
+    }
+
+    fn worker_message(&self, ws: &mut WorkerState, grad: &mut [f32], s: Step) {
+        if ws.v.len() != grad.len() {
+            ws.v = vec![0.0; grad.len()];
+        }
+        // v <- gamma*v + g ; msg <- gamma*v_new + g   (in place over grad)
+        let mut send = vec![0.0f32; grad.len()];
+        math::slim_worker_update(&mut send, &mut ws.v, grad, s.gamma);
+        grad.copy_from_slice(&send);
+    }
+
+    fn make_worker_state(&self) -> WorkerState {
+        WorkerState { v: vec![0.0; self.theta.len()] }
+    }
+
+    fn set_theta(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn master_is_plain_asgd() {
+        let mut slim = DanaSlim::new(&[1.0]);
+        let mut asgd = super::super::asgd::Asgd::new(&[1.0]);
+        let s = Step::default();
+        slim.master_apply(0, &[0.25], &[1.0], s);
+        asgd.master_apply(0, &[0.25], &[1.0], s);
+        assert_eq!(slim.theta(), asgd.theta());
+    }
+
+    #[test]
+    fn worker_sends_bengio_nag_vector() {
+        let slim = DanaSlim::new(&[0.0; 1]);
+        let mut ws = slim.make_worker_state();
+        let s = Step { eta: 0.1, gamma: 0.5, lambda: 0.0 };
+        let mut g = vec![1.0f32];
+        slim.worker_message(&mut ws, &mut g, s);
+        // v = 0.5*0 + 1 = 1 ; msg = 0.5*1 + 1 = 1.5
+        assert_eq!(ws.v, vec![1.0]);
+        assert_eq!(g, vec![1.5]);
+    }
+
+    #[test]
+    fn worker_state_is_per_worker() {
+        let slim = DanaSlim::new(&[0.0; 2]);
+        let mut wa = slim.make_worker_state();
+        let mut wb = slim.make_worker_state();
+        let s = Step { eta: 0.1, gamma: 0.9, lambda: 0.0 };
+        let mut g = vec![1.0f32, 1.0];
+        slim.worker_message(&mut wa, &mut g, s);
+        assert_eq!(wb.v, vec![0.0, 0.0]); // untouched
+        let mut g2 = vec![1.0f32, 1.0];
+        slim.worker_message(&mut wb, &mut g2, s);
+        assert_eq!(wa.v, wb.v);
+    }
+}

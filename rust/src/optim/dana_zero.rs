@@ -1,0 +1,158 @@
+//! DANA-Zero (paper Algorithm 4) — the paper's primary contribution.
+//!
+//! The master keeps one momentum vector per worker (Eq 10) plus their sum
+//! `v⁰ = Σᵢ vᶦ` maintained incrementally in O(k) (Appendix A.2), and sends
+//! each worker the *look-ahead* estimate of its own future position:
+//!
+//! ```text
+//! v^i   <- gamma * v^i + g^i
+//! theta <- theta - eta * v^i
+//! send  theta_hat = theta - eta * gamma * v0        (Eq 11)
+//! ```
+//!
+//! This is Nesterov's look-ahead generalized to N in-flight workers: the
+//! prediction folds in the momentum every other worker will apply before
+//! this worker's next gradient lands, which collapses the gap to ASGD's
+//! (Eq 12) and lets momentum survive asynchrony.
+//!
+//! The apply path is a single fused pass ([`crate::math::dana_fused_update`],
+//! mirrored 1:1 by the L1 Pallas kernel `kernels/update.py`).
+
+use super::{Algorithm, AlgorithmKind, Step};
+use crate::math;
+
+#[derive(Debug, Clone)]
+pub struct DanaZero {
+    theta: Vec<f32>,
+    /// Per-worker momentum vᶦ.
+    v: Vec<Vec<f32>>,
+    /// v⁰ = Σᵢ vᶦ, maintained incrementally (Appendix A.2).
+    vsum: Vec<f32>,
+}
+
+impl DanaZero {
+    pub fn new(theta0: &[f32], n_workers: usize) -> Self {
+        DanaZero {
+            theta: theta0.to_vec(),
+            v: vec![vec![0.0; theta0.len()]; n_workers],
+            vsum: vec![0.0; theta0.len()],
+        }
+    }
+
+    pub fn velocity(&self, worker: usize) -> &[f32] {
+        &self.v[worker]
+    }
+
+    pub fn velocity_sum(&self) -> &[f32] {
+        &self.vsum
+    }
+
+    /// Recompute v⁰ from scratch in O(k·N) — the naive path the paper's
+    /// Appendix A.2 optimizes away; kept for the invariant property test
+    /// and the ablation bench.
+    pub fn recompute_vsum(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.theta.len()];
+        for v in &self.v {
+            math::axpy(&mut out, 1.0, v);
+        }
+        out
+    }
+}
+
+impl Algorithm for DanaZero {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::DanaZero
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    fn master_apply(&mut self, worker: usize, msg: &[f32], _sent: &[f32], s: Step) {
+        math::dana_fused_update(
+            &mut self.theta,
+            &mut self.v[worker],
+            &mut self.vsum,
+            msg,
+            s.gamma,
+            s.eta,
+        );
+    }
+
+    fn master_send(&mut self, _worker: usize, out: &mut [f32], s: Step) {
+        math::lookahead(out, &self.theta, &self.vsum, s.gamma, s.eta);
+    }
+
+    fn rescale_momentum(&mut self, ratio: f32) {
+        for v in &mut self.v {
+            math::scale(v, ratio);
+        }
+        math::scale(&mut self.vsum, ratio);
+    }
+
+    fn set_theta(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step() -> Step {
+        Step { eta: 0.1, gamma: 0.9, lambda: 0.0 }
+    }
+
+    #[test]
+    fn incremental_vsum_matches_full_sum() {
+        let mut d = DanaZero::new(&vec![0.0; 33], 4);
+        let mut rng = crate::util::rng::Rng::new(5);
+        for i in 0..100 {
+            let g: Vec<f32> = (0..33).map(|_| rng.normal() as f32).collect();
+            let sent = d.theta().to_vec();
+            d.master_apply(i % 4, &g, &sent, step());
+        }
+        let full = d.recompute_vsum();
+        for (a, b) in d.velocity_sum().iter().zip(&full) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn n1_equals_sequential_nag() {
+        // Paper Algorithm 5: with one worker, the (master_send -> grad at
+        // hat -> master_apply) cycle IS Nesterov's accelerated gradient.
+        // Emulate NAG on a quadratic J(x) = 0.5*x^2 (grad = x).
+        let s = step();
+        let mut d = DanaZero::new(&[1.0], 1);
+        // sequential NAG reference
+        let (mut theta, mut v) = (1.0f32, 0.0f32);
+        for _ in 0..50 {
+            // DANA side: pull hat, compute grad at hat, apply
+            let mut hat = [0.0f32];
+            d.master_send(0, &mut hat, s);
+            let g = [hat[0]]; // grad of 0.5 x^2 at hat
+            let sent = hat;
+            d.master_apply(0, &g, &sent, s);
+            // NAG reference (Eq 3)
+            let hat_ref = theta - s.eta * s.gamma * v;
+            let g_ref = hat_ref;
+            v = s.gamma * v + g_ref;
+            theta -= s.eta * v;
+            assert!((d.theta()[0] - theta).abs() < 1e-6, "{} vs {theta}", d.theta()[0]);
+        }
+        assert!(theta.abs() < 1.0); // converging
+    }
+
+    #[test]
+    fn lookahead_send_uses_all_worker_momenta() {
+        let s = Step { eta: 1.0, gamma: 0.5, lambda: 0.0 };
+        let mut d = DanaZero::new(&[0.0], 2);
+        d.master_apply(0, &[1.0], &[0.0], s); // v0=1, theta=-1, vsum=1
+        d.master_apply(1, &[1.0], &[0.0], s); // v1=1, theta=-2, vsum=2
+        let mut out = [0.0f32];
+        d.master_send(0, &mut out, s);
+        // hat = -2 - 1*0.5*2 = -3
+        assert_eq!(out, [-3.0]);
+    }
+}

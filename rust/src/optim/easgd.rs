@@ -1,0 +1,170 @@
+//! EASGD — Elastic Averaging SGD (Zhang, Choromanska & LeCun 2015), with
+//! momentum (the EAMSGD variant).
+//!
+//! The paper's §6/§7 names EASGD as the future-work composition target
+//! ("we plan on adapting DANA ... in particular EASGD and YellowFin"); this
+//! module implements it as a first-class algorithm so the harness can
+//! compare it under the same schedules.
+//!
+//! Semantics: every worker trains its *own* replica `xᶦ` and exchanges an
+//! elastic force with the center `x̃` each communication round:
+//!
+//! ```text
+//! vᶦ  <- gamma*vᶦ + gᶦ ;  xᶦ <- xᶦ - eta*vᶦ        (local momentum SGD)
+//! d   =  alpha * (xᶦ - x̃)
+//! xᶦ <- xᶦ - d ;  x̃ <- x̃ + d                       (elastic exchange)
+//! ```
+//!
+//! In this parameter-server framing the replicas live on the master (the
+//! communication period is one push, the densest setting), the worker
+//! computes plain gradients against its replica, and the center `x̃` is
+//! what evaluation reads — faithful to the published update rule while
+//! fitting the pull/push API.  The moving rate follows the authors'
+//! recommendation `alpha = beta / N` with `beta = 0.9`.
+
+use super::{Algorithm, AlgorithmKind, Step};
+use crate::math;
+
+#[derive(Debug, Clone)]
+pub struct Easgd {
+    /// Center variable x̃ (what eval reads).
+    center: Vec<f32>,
+    /// Per-worker replicas xᶦ and momenta vᶦ.
+    x: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Elastic moving rate α.
+    alpha: f32,
+}
+
+impl Easgd {
+    pub fn new(theta0: &[f32], n_workers: usize) -> Self {
+        Easgd {
+            center: theta0.to_vec(),
+            x: vec![theta0.to_vec(); n_workers],
+            v: vec![vec![0.0; theta0.len()]; n_workers],
+            alpha: 0.9 / n_workers.max(1) as f32,
+        }
+    }
+
+    pub fn with_alpha(mut self, alpha: f32) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn alpha(&self) -> f32 {
+        self.alpha
+    }
+
+    pub fn replica(&self, worker: usize) -> &[f32] {
+        &self.x[worker]
+    }
+}
+
+impl Algorithm for Easgd {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::Easgd
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.center
+    }
+
+    fn master_apply(&mut self, worker: usize, msg: &[f32], _sent: &[f32], s: Step) {
+        // local momentum SGD on the replica, then the elastic exchange —
+        // one fused pass over (x, v, center, g).
+        let alpha = self.alpha;
+        for (((x, v), c), &g) in self.x[worker]
+            .iter_mut()
+            .zip(self.v[worker].iter_mut())
+            .zip(self.center.iter_mut())
+            .zip(msg)
+        {
+            let vn = s.gamma * *v + g;
+            *v = vn;
+            let mut xi = *x - s.eta * vn;
+            let d = alpha * (xi - *c);
+            xi -= d;
+            *c += d;
+            *x = xi;
+        }
+    }
+
+    /// The worker receives its own replica (it trains xᶦ, not x̃).
+    fn master_send(&mut self, worker: usize, out: &mut [f32], _s: Step) {
+        out.copy_from_slice(&self.x[worker]);
+    }
+
+    fn rescale_momentum(&mut self, ratio: f32) {
+        for v in &mut self.v {
+            math::scale(v, ratio);
+        }
+    }
+
+    fn set_theta(&mut self, theta: &[f32]) {
+        self.center.copy_from_slice(theta);
+        for x in &mut self.x {
+            x.copy_from_slice(theta);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn step() -> Step {
+        Step { eta: 0.05, gamma: 0.9, lambda: 0.0 }
+    }
+
+    #[test]
+    fn center_moves_toward_replicas() {
+        let mut e = Easgd::new(&[0.0], 2).with_alpha(0.25);
+        // worker 0 descends toward -inf on J = x (grad = 1)
+        e.master_apply(0, &[1.0], &[0.0], step());
+        assert!(e.replica(0)[0] < 0.0);
+        assert!(e.theta()[0] < 0.0, "center must be pulled along");
+        assert!(e.theta()[0] > e.replica(0)[0], "center lags the replica");
+    }
+
+    #[test]
+    fn elastic_force_is_symmetric() {
+        // What the center gains, the replica loses (total displacement
+        // preserved by the exchange term).
+        let mut e = Easgd::new(&[1.0], 1).with_alpha(0.25);
+        let s = Step { eta: 0.1, gamma: 0.0, lambda: 0.0 };
+        let c0 = e.theta()[0];
+        e.master_apply(0, &[2.0], &[1.0], s);
+        let x_before_exchange = 1.0 - 0.1 * 2.0;
+        let d = 0.25 * (x_before_exchange - c0);
+        assert!((e.theta()[0] - (c0 + d)).abs() < 1e-6);
+        assert!((e.replica(0)[0] - (x_before_exchange - d)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let k = 9;
+        let n = 4;
+        let theta0: Vec<f32> = (0..k).map(|i| 1.0 + i as f32 * 0.1).collect();
+        let mut e = Easgd::new(&theta0, n);
+        let mut rng = crate::util::rng::Rng::new(1);
+        for step_i in 0..2000 {
+            let w = rng.below(n as u64) as usize;
+            let g: Vec<f32> = e.replica(w).iter().map(|&x| x).collect(); // grad of 0.5x^2
+            let sent = e.replica(w).to_vec();
+            e.master_apply(w, &g, &sent, step());
+            let _ = step_i;
+        }
+        assert!(crate::math::norm2_sq(e.theta()) < 1e-3);
+    }
+
+    #[test]
+    fn workers_receive_their_replica() {
+        let mut e = Easgd::new(&[0.0, 0.0], 2);
+        e.master_apply(0, &[1.0, 1.0], &[0.0, 0.0], step());
+        let mut out = [0.0f32; 2];
+        e.master_send(0, &mut out, step());
+        assert_eq!(out, *e.replica(0));
+        e.master_send(1, &mut out, step());
+        assert_eq!(out, [0.0, 0.0], "worker 1's replica untouched");
+    }
+}

@@ -1,0 +1,93 @@
+//! Linear Weight Prediction (Kosson et al. 2020; paper Algorithm 3, §3.1).
+//!
+//! A *shared* momentum vector with a linear extrapolation send:
+//!
+//! ```text
+//! send  theta_hat = theta - tau * eta * v
+//! ```
+//!
+//! i.e. NAG's look-ahead scaled by the expected lag τ, assuming the same v
+//! is replayed for all τ upcoming updates.  In large clusters v drifts over
+//! the lag window, so the prediction misses — the paper shows LWP's gap
+//! only slightly below NAG-ASGD (Fig 2b).  The default τ is the steady-state
+//! expected lag of N equal workers (the N next updates the paper's DANA
+//! analysis predicts over).
+
+use super::{Algorithm, AlgorithmKind, Step};
+use crate::math;
+
+#[derive(Debug, Clone)]
+pub struct Lwp {
+    theta: Vec<f32>,
+    v: Vec<f32>,
+    /// Prediction horizon τ (defaults to the cluster size N).
+    tau: f32,
+}
+
+impl Lwp {
+    pub fn new(theta0: &[f32], n_workers: usize) -> Self {
+        Self::with_tau(theta0, n_workers as f32)
+    }
+
+    pub fn with_tau(theta0: &[f32], tau: f32) -> Self {
+        Lwp { theta: theta0.to_vec(), v: vec![0.0; theta0.len()], tau }
+    }
+
+    pub fn tau(&self) -> f32 {
+        self.tau
+    }
+}
+
+impl Algorithm for Lwp {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::Lwp
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    fn master_apply(&mut self, _worker: usize, msg: &[f32], _sent: &[f32], s: Step) {
+        // shared v <- gamma*v + g ; theta <- theta - eta*v
+        math::momentum_step(&mut self.theta, &mut self.v, msg, s.gamma, s.eta);
+    }
+
+    fn master_send(&mut self, _worker: usize, out: &mut [f32], s: Step) {
+        // theta_hat = theta - tau*eta*v
+        let c = self.tau * s.eta;
+        for ((o, &t), &v) in out.iter_mut().zip(&self.theta).zip(&self.v) {
+            *o = t - c * v;
+        }
+    }
+
+    fn rescale_momentum(&mut self, ratio: f32) {
+        math::scale(&mut self.v, ratio);
+    }
+
+    fn set_theta(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_extrapolates_tau_steps() {
+        let mut l = Lwp::with_tau(&[0.0], 3.0);
+        let s = Step { eta: 1.0, gamma: 0.0, lambda: 0.0 };
+        l.master_apply(0, &[1.0], &[0.0], s); // v=1, theta=-1
+        let mut out = [0.0f32];
+        l.master_send(0, &mut out, s);
+        assert_eq!(out, [-4.0]); // -1 - 3*1*1
+    }
+
+    #[test]
+    fn zero_momentum_state_sends_theta() {
+        let mut l = Lwp::new(&[5.0, -5.0], 8);
+        let mut out = [0.0f32; 2];
+        l.master_send(0, &mut out, Step::default());
+        assert_eq!(out, [5.0, -5.0]);
+    }
+}

@@ -1,0 +1,243 @@
+//! Asynchronous update rules — every algorithm the paper evaluates.
+//!
+//! Each algorithm implements [`Algorithm`]: the *master half* (how an
+//! incoming worker message mutates the master state and what parameters are
+//! sent back) and optionally a *worker half* (DANA-Slim keeps the momentum
+//! vector worker-side).  The parameter server ([`crate::server`]) owns the
+//! FIFO and metric instrumentation and drives this trait; the trait itself
+//! is schedule-agnostic — the learning rate and momentum for each step
+//! arrive in [`Step`].
+//!
+//! | Kind          | Paper | Master state                | Send              |
+//! |---------------|-------|-----------------------------|-------------------|
+//! | `Asgd`        | Alg 2 | θ                           | θ                 |
+//! | `NagAsgd`     | Alg 8 | θ, shared v                 | θ                 |
+//! | `MultiAsgd`   | Alg 9 | θ, per-worker vᶦ            | θ                 |
+//! | `DcAsgd`      | Alg 10| θ, per-worker vᶦ            | θ                 |
+//! | `Lwp`         | Alg 3 | θ, shared v                 | θ − τηv           |
+//! | `DanaZero`    | Alg 4 | θ, vᶦ, v⁰=Σvᶦ (O(k) A.2)    | θ − ηγv⁰          |
+//! | `DanaSlim`    | Alg 6 | θ (= ASGD master)           | θ (worker holds v)|
+//! | `DanaDc`      | Alg 7 | θ, vᶦ, v⁰                   | θ − ηγv⁰          |
+//! | `YellowFin`   | §5    | θ, shared v + tuner         | θ                 |
+//! | `Easgd`       | §6 (future work) | center x̃, replicas xᶦ, vᶦ | xᶦ     |
+
+pub mod asgd;
+pub mod dana_dc;
+pub mod dana_slim;
+pub mod dana_zero;
+pub mod dc_asgd;
+pub mod easgd;
+pub mod lwp;
+pub mod multi_asgd;
+pub mod nag_asgd;
+pub mod schedule;
+pub mod sgd;
+pub mod yellowfin;
+
+pub use schedule::{LrSchedule, ScheduleConfig};
+
+/// Per-step hyperparameters delivered by the schedule at apply time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Step {
+    /// Learning rate η (after warmup/decay).
+    pub eta: f32,
+    /// Momentum coefficient γ.
+    pub gamma: f32,
+    /// DC-ASGD delay-compensation strength λ.
+    pub lambda: f32,
+}
+
+impl Default for Step {
+    fn default() -> Self {
+        Step { eta: 0.1, gamma: 0.9, lambda: 2.0 }
+    }
+}
+
+/// Worker-side optimizer state. Only DANA-Slim populates `v`; for every
+/// other algorithm the worker is stateless (sends the raw gradient).
+#[derive(Debug, Clone, Default)]
+pub struct WorkerState {
+    pub v: Vec<f32>,
+}
+
+/// One asynchronous update rule (master + worker halves).
+pub trait Algorithm: Send {
+    fn kind(&self) -> AlgorithmKind;
+
+    /// Master parameters θ⁰ (what eval reads).
+    fn theta(&self) -> &[f32];
+
+    fn param_count(&self) -> usize {
+        self.theta().len()
+    }
+
+    /// Master: apply the message from `worker`. `sent` is the parameter
+    /// vector this worker received at pull time (the server retains it for
+    /// gap accounting; DC-ASGD's compensation term needs it too).
+    fn master_apply(&mut self, worker: usize, msg: &[f32], sent: &[f32], s: Step);
+
+    /// Master: write the parameters to send to `worker` into `out`.
+    /// Default: the current master parameters (plain ASGD behaviour).
+    fn master_send(&mut self, worker: usize, out: &mut [f32], s: Step) {
+        let _ = worker;
+        let _ = s;
+        out.copy_from_slice(self.theta());
+    }
+
+    /// Worker: turn a locally computed gradient into the message sent to the
+    /// master, updating worker-local state. Default: send the gradient.
+    fn worker_message(&self, ws: &mut WorkerState, grad: &mut [f32], s: Step) {
+        let _ = ws;
+        let _ = grad;
+        let _ = s;
+    }
+
+    /// Fresh worker-local state for one worker.
+    fn make_worker_state(&self) -> WorkerState {
+        WorkerState::default()
+    }
+
+    /// Momentum correction (Goyal et al. 2017): rescale momentum state when
+    /// the learning rate changes by `ratio = eta_new / eta_old`.
+    fn rescale_momentum(&mut self, ratio: f32) {
+        let _ = ratio;
+    }
+
+    /// Overwrite master parameters (checkpoint restore / tests).
+    fn set_theta(&mut self, theta: &[f32]);
+}
+
+/// Which update rule to instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgorithmKind {
+    Asgd,
+    NagAsgd,
+    MultiAsgd,
+    DcAsgd,
+    Lwp,
+    DanaZero,
+    DanaSlim,
+    DanaDc,
+    YellowFin,
+    Easgd,
+}
+
+impl AlgorithmKind {
+    pub const ALL: [AlgorithmKind; 10] = [
+        AlgorithmKind::Asgd,
+        AlgorithmKind::NagAsgd,
+        AlgorithmKind::MultiAsgd,
+        AlgorithmKind::DcAsgd,
+        AlgorithmKind::Lwp,
+        AlgorithmKind::DanaZero,
+        AlgorithmKind::DanaSlim,
+        AlgorithmKind::DanaDc,
+        AlgorithmKind::YellowFin,
+        AlgorithmKind::Easgd,
+    ];
+
+    /// The set compared in the paper's accuracy figures (Fig 4/5/7).
+    pub const PAPER_SET: [AlgorithmKind; 6] = [
+        AlgorithmKind::DanaDc,
+        AlgorithmKind::DanaSlim,
+        AlgorithmKind::DcAsgd,
+        AlgorithmKind::MultiAsgd,
+        AlgorithmKind::NagAsgd,
+        AlgorithmKind::YellowFin,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AlgorithmKind::Asgd => "asgd",
+            AlgorithmKind::NagAsgd => "nag-asgd",
+            AlgorithmKind::MultiAsgd => "multi-asgd",
+            AlgorithmKind::DcAsgd => "dc-asgd",
+            AlgorithmKind::Lwp => "lwp",
+            AlgorithmKind::DanaZero => "dana-zero",
+            AlgorithmKind::DanaSlim => "dana-slim",
+            AlgorithmKind::DanaDc => "dana-dc",
+            AlgorithmKind::YellowFin => "yellowfin",
+            AlgorithmKind::Easgd => "easgd",
+        }
+    }
+}
+
+impl std::str::FromStr for AlgorithmKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let norm = s.to_ascii_lowercase().replace('_', "-");
+        AlgorithmKind::ALL
+            .into_iter()
+            .find(|k| k.name() == norm)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown algorithm {s:?}; known: {}",
+                    AlgorithmKind::ALL.map(|k| k.name()).join(", ")
+                )
+            })
+    }
+}
+
+impl std::fmt::Display for AlgorithmKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Instantiate an algorithm over initial parameters for `n_workers`.
+pub fn make_algorithm(
+    kind: AlgorithmKind,
+    theta0: &[f32],
+    n_workers: usize,
+) -> Box<dyn Algorithm> {
+    match kind {
+        AlgorithmKind::Asgd => Box::new(asgd::Asgd::new(theta0)),
+        AlgorithmKind::NagAsgd => Box::new(nag_asgd::NagAsgd::new(theta0)),
+        AlgorithmKind::MultiAsgd => Box::new(multi_asgd::MultiAsgd::new(theta0, n_workers)),
+        AlgorithmKind::DcAsgd => Box::new(dc_asgd::DcAsgd::new(theta0, n_workers)),
+        AlgorithmKind::Lwp => Box::new(lwp::Lwp::new(theta0, n_workers)),
+        AlgorithmKind::DanaZero => Box::new(dana_zero::DanaZero::new(theta0, n_workers)),
+        AlgorithmKind::DanaSlim => Box::new(dana_slim::DanaSlim::new(theta0)),
+        AlgorithmKind::DanaDc => Box::new(dana_dc::DanaDc::new(theta0, n_workers)),
+        AlgorithmKind::YellowFin => Box::new(yellowfin::YellowFin::new(theta0)),
+        AlgorithmKind::Easgd => Box::new(easgd::Easgd::new(theta0, n_workers)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_round_trips_via_str() {
+        for k in AlgorithmKind::ALL {
+            assert_eq!(k.name().parse::<AlgorithmKind>().unwrap(), k);
+        }
+        assert!("nonsense".parse::<AlgorithmKind>().is_err());
+        assert_eq!(
+            "DANA_SLIM".parse::<AlgorithmKind>().unwrap(),
+            AlgorithmKind::DanaSlim
+        );
+    }
+
+    #[test]
+    fn factory_produces_matching_kind() {
+        let theta0 = vec![0.0f32; 16];
+        for k in AlgorithmKind::ALL {
+            let alg = make_algorithm(k, &theta0, 4);
+            assert_eq!(alg.kind(), k);
+            assert_eq!(alg.param_count(), 16);
+            assert_eq!(alg.theta(), &theta0[..]);
+        }
+    }
+
+    #[test]
+    fn default_send_is_theta() {
+        let theta0: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut alg = make_algorithm(AlgorithmKind::Asgd, &theta0, 2);
+        let mut out = vec![0.0; 8];
+        alg.master_send(0, &mut out, Step::default());
+        assert_eq!(out, theta0);
+    }
+}

@@ -1,0 +1,85 @@
+//! Multi-ASGD (paper Algorithm 9, Appendix A.1): per-worker momentum
+//! vectors at the master, *no* look-ahead.
+//!
+//! The paper's ablation: it fixes NAG-ASGD's multiplicity problem (each vᶦ
+//! sees only worker i's gradients) but still sends the stale θ⁰, so its gap
+//! remains momentum-sized.  Its mid-pack accuracy in Fig 4 demonstrates that
+//! per-worker momentum alone is not sufficient — the look-ahead is what
+//! closes the gap.
+
+use super::{Algorithm, AlgorithmKind, Step};
+use crate::math;
+
+#[derive(Debug, Clone)]
+pub struct MultiAsgd {
+    theta: Vec<f32>,
+    v: Vec<Vec<f32>>,
+}
+
+impl MultiAsgd {
+    pub fn new(theta0: &[f32], n_workers: usize) -> Self {
+        MultiAsgd {
+            theta: theta0.to_vec(),
+            v: vec![vec![0.0; theta0.len()]; n_workers],
+        }
+    }
+
+    pub fn velocity(&self, worker: usize) -> &[f32] {
+        &self.v[worker]
+    }
+}
+
+impl Algorithm for MultiAsgd {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::MultiAsgd
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    fn master_apply(&mut self, worker: usize, msg: &[f32], _sent: &[f32], s: Step) {
+        // v^i <- gamma*v^i + g^i ; theta <- theta - eta*v^i
+        math::momentum_step(&mut self.theta, &mut self.v[worker], msg, s.gamma, s.eta);
+    }
+
+    fn rescale_momentum(&mut self, ratio: f32) {
+        for v in &mut self.v {
+            math::scale(v, ratio);
+        }
+    }
+
+    fn set_theta(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn momenta_are_isolated_per_worker() {
+        let mut a = MultiAsgd::new(&[0.0], 2);
+        let s = Step { eta: 1.0, gamma: 0.5, lambda: 0.0 };
+        a.master_apply(0, &[1.0], &[0.0], s);
+        a.master_apply(1, &[1.0], &[0.0], s);
+        // each v starts at 0: v0 = v1 = 1.0 (no cross-contamination)
+        assert_eq!(a.velocity(0), &[1.0]);
+        assert_eq!(a.velocity(1), &[1.0]);
+        assert_eq!(a.theta(), &[-2.0]);
+    }
+
+    #[test]
+    fn single_worker_reduces_to_heavy_ball() {
+        let mut multi = MultiAsgd::new(&[0.0], 1);
+        let mut nag = super::super::nag_asgd::NagAsgd::new(&[0.0]);
+        let s = Step { eta: 0.1, gamma: 0.9, lambda: 0.0 };
+        for i in 0..10 {
+            let g = [(i as f32 * 0.7).sin()];
+            multi.master_apply(0, &g, &[0.0], s);
+            nag.master_apply(0, &g, &[0.0], s);
+        }
+        assert_eq!(multi.theta(), nag.theta());
+    }
+}

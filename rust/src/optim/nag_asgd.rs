@@ -1,0 +1,73 @@
+//! NAG-ASGD (paper Algorithm 8): one *shared* NAG optimizer at the master.
+//!
+//! The cautionary baseline of the paper — a single momentum vector absorbs
+//! every worker's gradients, so the momentum term both grows stale and is
+//! applied with multiplicity N.  Fig 2(b) shows its gap blowing up and
+//! Tables 2–5 show divergence beyond ~12–16 workers; reproducing that
+//! failure shape is part of the evaluation.
+
+use super::{Algorithm, AlgorithmKind, Step};
+use crate::math;
+
+#[derive(Debug, Clone)]
+pub struct NagAsgd {
+    theta: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl NagAsgd {
+    pub fn new(theta0: &[f32]) -> Self {
+        NagAsgd { theta: theta0.to_vec(), v: vec![0.0; theta0.len()] }
+    }
+
+    pub fn velocity(&self) -> &[f32] {
+        &self.v
+    }
+}
+
+impl Algorithm for NagAsgd {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::NagAsgd
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    fn master_apply(&mut self, _worker: usize, msg: &[f32], _sent: &[f32], s: Step) {
+        // v <- gamma*v + g ; theta <- theta - eta*v   (shared v)
+        math::momentum_step(&mut self.theta, &mut self.v, msg, s.gamma, s.eta);
+    }
+
+    fn rescale_momentum(&mut self, ratio: f32) {
+        math::scale(&mut self.v, ratio);
+    }
+
+    fn set_theta(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn momentum_accumulates_across_workers() {
+        let mut a = NagAsgd::new(&[0.0]);
+        let s = Step { eta: 1.0, gamma: 0.5, lambda: 0.0 };
+        a.master_apply(0, &[1.0], &[0.0], s); // v=1, theta=-1
+        a.master_apply(1, &[1.0], &[0.0], s); // v=1.5, theta=-2.5
+        assert_eq!(a.velocity(), &[1.5]);
+        assert_eq!(a.theta(), &[-2.5]);
+    }
+
+    #[test]
+    fn momentum_correction_rescales_v() {
+        let mut a = NagAsgd::new(&[0.0]);
+        let s = Step { eta: 1.0, gamma: 1.0, lambda: 0.0 };
+        a.master_apply(0, &[2.0], &[0.0], s);
+        a.rescale_momentum(0.5);
+        assert_eq!(a.velocity(), &[1.0]);
+    }
+}

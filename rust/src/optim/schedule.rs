@@ -1,0 +1,147 @@
+//! Learning-rate schedule: gradual warmup + step decay (Appendix A.5).
+//!
+//! All experiments share the paper's hyperparameter policy: the base η is
+//! the single-worker value from the architecture's original paper; for N
+//! workers it starts at `base/N` and ramps linearly to `base` over the
+//! first five epochs (Goyal et al. 2017), then decays by a fixed factor at
+//! scheduled epochs.  The server applies *momentum correction* — rescaling
+//! momentum state by `eta_new/eta_old` — whenever the schedule moves.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduleConfig {
+    /// Tuned single-worker learning rate.
+    pub base_eta: f32,
+    /// Momentum coefficient γ.
+    pub gamma: f32,
+    /// DC compensation strength λ.
+    pub lambda: f32,
+    /// Warmup duration in epochs (0 disables; paper uses 5).
+    pub warmup_epochs: f64,
+    /// Epochs at which η is multiplied by `decay_factor`.
+    pub decay_epochs: Vec<f64>,
+    pub decay_factor: f32,
+    /// Master updates per epoch (dataset_size / batch, aggregated over the
+    /// cluster — every master update consumes one batch).
+    pub steps_per_epoch: usize,
+    /// Cluster size N (warmup divides the initial η by N).
+    pub n_workers: usize,
+}
+
+impl Default for ScheduleConfig {
+    fn default() -> Self {
+        // the ResNet-20/CIFAR-10 recipe scaled: decay at 1/2 and 3/4 depth
+        ScheduleConfig {
+            base_eta: 0.1,
+            gamma: 0.9,
+            lambda: 2.0,
+            warmup_epochs: 5.0,
+            decay_epochs: vec![80.0, 120.0],
+            decay_factor: 0.1,
+            steps_per_epoch: 390,
+            n_workers: 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    cfg: ScheduleConfig,
+}
+
+impl LrSchedule {
+    pub fn new(cfg: ScheduleConfig) -> Self {
+        assert!(cfg.steps_per_epoch > 0, "steps_per_epoch must be positive");
+        assert!(cfg.n_workers > 0);
+        LrSchedule { cfg }
+    }
+
+    pub fn config(&self) -> &ScheduleConfig {
+        &self.cfg
+    }
+
+    pub fn epoch_of(&self, master_step: u64) -> f64 {
+        master_step as f64 / self.cfg.steps_per_epoch as f64
+    }
+
+    /// η at a master step: warmup ramp then multiplicative decay.
+    pub fn eta_at(&self, master_step: u64) -> f32 {
+        let c = &self.cfg;
+        let epoch = self.epoch_of(master_step);
+        let mut eta = c.base_eta;
+        if c.warmup_epochs > 0.0 && c.n_workers > 1 && epoch < c.warmup_epochs {
+            let start = c.base_eta / c.n_workers as f32;
+            let frac = (epoch / c.warmup_epochs) as f32;
+            eta = start + (c.base_eta - start) * frac;
+        }
+        for &d in &c.decay_epochs {
+            if epoch >= d {
+                eta *= c.decay_factor;
+            }
+        }
+        eta
+    }
+
+    pub fn gamma(&self) -> f32 {
+        self.cfg.gamma
+    }
+
+    pub fn step_at(&self, master_step: u64) -> super::Step {
+        super::Step {
+            eta: self.eta_at(master_step),
+            gamma: self.cfg.gamma,
+            lambda: self.cfg.lambda,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n: usize) -> ScheduleConfig {
+        ScheduleConfig {
+            base_eta: 0.1,
+            warmup_epochs: 5.0,
+            decay_epochs: vec![80.0, 120.0],
+            decay_factor: 0.1,
+            steps_per_epoch: 100,
+            n_workers: n,
+            ..ScheduleConfig::default()
+        }
+    }
+
+    #[test]
+    fn warmup_starts_at_base_over_n() {
+        let s = LrSchedule::new(cfg(8));
+        assert!((s.eta_at(0) - 0.1 / 8.0).abs() < 1e-7);
+        // ramped past start shortly after
+        assert!(s.eta_at(100) > s.eta_at(0));
+        // at warmup end: full base
+        assert!((s.eta_at(500) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_worker_has_no_warmup() {
+        let s = LrSchedule::new(cfg(1));
+        assert_eq!(s.eta_at(0), 0.1);
+    }
+
+    #[test]
+    fn decay_applies_multiplicatively() {
+        let s = LrSchedule::new(cfg(1));
+        assert!((s.eta_at(80 * 100) - 0.01).abs() < 1e-7);
+        assert!((s.eta_at(120 * 100) - 0.001).abs() < 1e-8);
+        assert!((s.eta_at(79 * 100) - 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn monotone_through_warmup() {
+        let s = LrSchedule::new(cfg(4));
+        let mut prev = 0.0;
+        for step in (0..500).step_by(10) {
+            let e = s.eta_at(step);
+            assert!(e >= prev, "warmup must be non-decreasing");
+            prev = e;
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Sequential optimizers (single worker) and the synchronous baseline.
+//!
+//! * [`Sgd`] — vanilla SGD (Eq 1).
+//! * [`HeavyBall`] — Polyak momentum (Eq 2).
+//! * [`Nag`] — Nesterov's accelerated gradient in look-ahead form (Eq 3):
+//!   the caller pulls `lookahead_params`, evaluates the gradient there, and
+//!   `apply`s it.  This is the paper's single-worker baseline.
+//! * [`BengioNag`] — the re-parameterized NAG (Eq 13/14): gradient is both
+//!   computed on and applied to Θ.  Trajectory-equivalent to [`Nag`]
+//!   (tested), and the basis of DANA-Slim.
+//! * [`SyncSgd`] — SSGD: N per-worker gradients averaged into one
+//!   Bengio-NAG step (the `DistributedDataParallel` baseline of §5.4).
+
+use crate::math;
+
+/// Vanilla SGD.
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub theta: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(theta0: &[f32]) -> Self {
+        Sgd { theta: theta0.to_vec() }
+    }
+
+    pub fn apply(&mut self, g: &[f32], eta: f32) {
+        math::apply_update(&mut self.theta, g, eta);
+    }
+}
+
+/// Polyak heavy-ball momentum (Eq 2), gradient evaluated at θ.
+#[derive(Debug, Clone)]
+pub struct HeavyBall {
+    pub theta: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl HeavyBall {
+    pub fn new(theta0: &[f32]) -> Self {
+        HeavyBall { theta: theta0.to_vec(), v: vec![0.0; theta0.len()] }
+    }
+
+    pub fn apply(&mut self, g: &[f32], eta: f32, gamma: f32) {
+        math::momentum_step(&mut self.theta, &mut self.v, g, gamma, eta);
+    }
+}
+
+/// Nesterov's accelerated gradient, look-ahead form (Eq 3).
+#[derive(Debug, Clone)]
+pub struct Nag {
+    pub theta: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Nag {
+    pub fn new(theta0: &[f32]) -> Self {
+        Nag { theta: theta0.to_vec(), v: vec![0.0; theta0.len()] }
+    }
+
+    /// θ̂ = θ − ηγv — where the gradient should be evaluated.
+    pub fn lookahead_params(&self, out: &mut [f32], eta: f32, gamma: f32) {
+        math::lookahead(out, &self.theta, &self.v, gamma, eta);
+    }
+
+    /// Apply a gradient computed at the look-ahead point.
+    pub fn apply(&mut self, g: &[f32], eta: f32, gamma: f32) {
+        math::momentum_step(&mut self.theta, &mut self.v, g, gamma, eta);
+    }
+}
+
+/// Bengio-NAG (Eq 13/14): Θ-parameterization with no look-ahead pull.
+#[derive(Debug, Clone)]
+pub struct BengioNag {
+    /// Θ = θ − ηγv (the trained representation).
+    pub theta: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl BengioNag {
+    pub fn new(theta0: &[f32]) -> Self {
+        BengioNag { theta: theta0.to_vec(), v: vec![0.0; theta0.len()] }
+    }
+
+    /// Θ ← Θ − η(γ·v_new + g) with v_new = γv + g (Eq 14).
+    pub fn apply(&mut self, g: &[f32], eta: f32, gamma: f32) {
+        for ((t, v), &g) in self.theta.iter_mut().zip(self.v.iter_mut()).zip(g) {
+            let v_new = gamma * *v + g;
+            *v = v_new;
+            *t -= eta * (gamma * v_new + g);
+        }
+    }
+}
+
+/// Synchronous data-parallel SGD with Nesterov momentum: the barrier
+/// baseline.  All N gradients (one per worker, same parameters) are
+/// averaged, then a single Bengio-NAG step is taken.
+#[derive(Debug, Clone)]
+pub struct SyncSgd {
+    inner: BengioNag,
+    accum: Vec<f32>,
+    pending: usize,
+    n_workers: usize,
+}
+
+impl SyncSgd {
+    pub fn new(theta0: &[f32], n_workers: usize) -> Self {
+        assert!(n_workers > 0);
+        SyncSgd {
+            inner: BengioNag::new(theta0),
+            accum: vec![0.0; theta0.len()],
+            pending: 0,
+            n_workers,
+        }
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.inner.theta
+    }
+
+    /// Contribute one worker's gradient; on the N-th the averaged NAG step
+    /// fires.  Returns true when the barrier released (step applied).
+    pub fn contribute(&mut self, g: &[f32], eta: f32, gamma: f32) -> bool {
+        math::axpy(&mut self.accum, 1.0, g);
+        self.pending += 1;
+        if self.pending == self.n_workers {
+            math::scale(&mut self.accum, 1.0 / self.n_workers as f32);
+            let avg = std::mem::replace(&mut self.accum, vec![0.0; g.len()]);
+            self.inner.apply(&avg, eta, gamma);
+            self.pending = 0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic J(x) = 0.5 xᵀ diag(k) x used across the tests.
+    fn quad_grad(theta: &[f32], ks: &[f32]) -> Vec<f32> {
+        theta.iter().zip(ks).map(|(&t, &k)| k * t).collect()
+    }
+
+    #[test]
+    fn nag_equals_bengio_nag_in_theta_big() {
+        // Eq 13: Θ_t = θ_t − ηγ v_{t-1}; both sequences must agree under
+        // that change of variables at every step.
+        let (eta, gamma) = (0.05f32, 0.9f32);
+        let ks = [1.0f32, 4.0, 0.25];
+        let mut nag = Nag::new(&[1.0, -1.0, 2.0]);
+        let mut ben = BengioNag::new(&[1.0, -1.0, 2.0]);
+        let mut hat = vec![0.0f32; 3];
+        for _ in 0..100 {
+            // NAG: gradient at the look-ahead point
+            nag.lookahead_params(&mut hat, eta, gamma);
+            let g = quad_grad(&hat, &ks);
+            nag.apply(&g, eta, gamma);
+            // Bengio: gradient at Θ itself
+            let gb = quad_grad(&ben.theta, &ks);
+            ben.apply(&gb, eta, gamma);
+            // check Θ = θ − ηγ v
+            for i in 0..3 {
+                let theta_big = nag.theta[i] - eta * gamma * nag.v[i];
+                assert!(
+                    (theta_big - ben.theta[i]).abs() < 1e-5,
+                    "{theta_big} vs {}",
+                    ben.theta[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn momentum_accelerates_on_quadratic() {
+        let ks = [1.0f32; 4];
+        let mut sgd = Sgd::new(&[1.0; 4]);
+        let mut hb = HeavyBall::new(&[1.0; 4]);
+        for _ in 0..60 {
+            let gs = quad_grad(&sgd.theta, &ks);
+            sgd.apply(&gs, 0.05);
+            let gh = quad_grad(&hb.theta, &ks);
+            hb.apply(&gh, 0.05, 0.9);
+        }
+        let d_sgd: f64 = math::norm2_sq(&sgd.theta);
+        let d_hb: f64 = math::norm2_sq(&hb.theta);
+        assert!(d_hb < d_sgd, "heavy ball should be ahead: {d_hb} vs {d_sgd}");
+    }
+
+    #[test]
+    fn ssgd_averages_before_stepping() {
+        let mut sync = SyncSgd::new(&[0.0], 2);
+        assert!(!sync.contribute(&[1.0], 1.0, 0.0));
+        assert_eq!(sync.theta(), &[0.0]); // barrier not yet released
+        assert!(sync.contribute(&[3.0], 1.0, 0.0));
+        // avg = 2.0, gamma=0 -> theta = -2
+        assert_eq!(sync.theta(), &[-2.0]);
+    }
+
+    #[test]
+    fn ssgd_n1_is_sequential() {
+        let mut sync = SyncSgd::new(&[1.0], 1);
+        let mut seq = BengioNag::new(&[1.0]);
+        for i in 0..20 {
+            let g = [(i as f32).sin()];
+            sync.contribute(&g, 0.1, 0.9);
+            seq.apply(&g, 0.1, 0.9);
+        }
+        assert_eq!(sync.theta(), &seq.theta[..]);
+    }
+}

@@ -1,0 +1,250 @@
+//! YellowFin with closed-loop momentum (Zhang & Mitliagkas 2019).
+//!
+//! An auto-tuning SGD baseline: learning rate and momentum are derived each
+//! step from three online statistics of the gradient stream —
+//!
+//! * **curvature range** `h_min..h_max`: extremes of `||g||²` over a sliding
+//!   window, EMA-smoothed,
+//! * **gradient variance** `C = E[||g||²] − ||E[g]||²` (per-coordinate EMA),
+//! * **distance to optimum** `D = E[||g||] / E[||g||²]`,
+//!
+//! then the *SingleStep* problem is solved in closed form (the cubic from
+//! the YF paper/code, `get_cubic_root`) for the target momentum μ and
+//! `lr = (1 − √μ)² / h_min`.
+//!
+//! The **closed-loop** extension for asynchronous training measures the
+//! *realized total* momentum (asynchrony adds implicit momentum —
+//! Mitliagkas et al. 2016) by projecting each master update onto the
+//! previous one, then feeds back the difference so that algorithmic +
+//! implicit momentum ≈ target.  Following the paper's §5 we initialize with
+//! `eta = 1e-4, gamma = 0`.
+//!
+//! Faithfulness note: this is reimplemented from the published description
+//! and the reference implementation's update equations; the sliding-window
+//! length (20), EMA β (0.999) and feedback gain (0.3) follow the reference
+//! defaults.  YellowFin is a *baseline* in this paper — the evaluation
+//! expects it to work at small N and degrade at scale (Tables 2–5).
+
+use super::{Algorithm, AlgorithmKind, Step};
+use crate::math;
+use std::collections::VecDeque;
+
+const WINDOW: usize = 20;
+const BETA: f64 = 0.999;
+const CLOSED_LOOP_GAIN: f64 = 0.3;
+
+#[derive(Debug, Clone)]
+pub struct YellowFin {
+    theta: Vec<f32>,
+    v: Vec<f32>,
+    /// EMA of the gradient (for the variance estimate C).
+    g_avg: Vec<f32>,
+    /// Previous master update (for realized-momentum measurement).
+    prev_update: Vec<f32>,
+    prev_prev_update: Vec<f32>,
+    h_window: VecDeque<f64>,
+    h_min_avg: f64,
+    h_max_avg: f64,
+    g_norm_avg: f64,
+    g_norm2_avg: f64,
+    dist_avg: f64,
+    /// Tuned values (EMA-smoothed outputs of SingleStep).
+    lr: f64,
+    mu: f64,
+    /// Closed-loop algorithmic momentum actually applied.
+    mu_alg: f64,
+    steps: u64,
+}
+
+impl YellowFin {
+    pub fn new(theta0: &[f32]) -> Self {
+        YellowFin {
+            theta: theta0.to_vec(),
+            v: vec![0.0; theta0.len()],
+            g_avg: vec![0.0; theta0.len()],
+            prev_update: vec![0.0; theta0.len()],
+            prev_prev_update: vec![0.0; theta0.len()],
+            h_window: VecDeque::with_capacity(WINDOW),
+            h_min_avg: 0.0,
+            h_max_avg: 0.0,
+            g_norm_avg: 0.0,
+            g_norm2_avg: 0.0,
+            dist_avg: 0.0,
+            lr: 1e-4, // paper §5: eta = 1e-4
+            mu: 0.0,  // paper §5: gamma = 0.0
+            mu_alg: 0.0,
+            steps: 0,
+        }
+    }
+
+    pub fn tuned_lr(&self) -> f64 {
+        self.lr
+    }
+
+    pub fn tuned_mu(&self) -> f64 {
+        self.mu_alg
+    }
+
+    /// Root of `x³ + p·x² + p·x − p = 0`-style SingleStep cubic, in the
+    /// closed form used by the reference implementation.
+    fn cubic_root(p: f64) -> f64 {
+        // w³ = −(√(p² + 4p³/27) + p)/2 ;  y = w − p/(3w) ;  x = y + 1
+        let w3 = (-(p * p + 4.0 / 27.0 * p * p * p).sqrt() - p) / 2.0;
+        let w = w3.signum() * w3.abs().powf(1.0 / 3.0);
+        let y = w - p / (3.0 * w);
+        y + 1.0
+    }
+
+    fn tune(&mut self, g: &[f32]) {
+        self.steps += 1;
+        let t = self.steps as f64;
+        // zero-debiased EMA helper
+        let debias = 1.0 - BETA.powf(t);
+        let ema = |avg: &mut f64, x: f64| {
+            *avg = BETA * *avg + (1.0 - BETA) * x;
+        };
+
+        let h = math::norm2_sq(g);
+        if self.h_window.len() == WINDOW {
+            self.h_window.pop_front();
+        }
+        self.h_window.push_back(h);
+        let h_min_t = self.h_window.iter().cloned().fold(f64::INFINITY, f64::min);
+        let h_max_t = self.h_window.iter().cloned().fold(0.0, f64::max);
+        ema(&mut self.h_min_avg, h_min_t);
+        ema(&mut self.h_max_avg, h_max_t);
+        ema(&mut self.g_norm_avg, h.sqrt());
+        ema(&mut self.g_norm2_avg, h);
+        for (a, &x) in self.g_avg.iter_mut().zip(g) {
+            *a = (BETA * *a as f64 + (1.0 - BETA) * x as f64) as f32;
+        }
+        // D = E[||g||]/E[||g||^2]
+        if self.g_norm2_avg > 0.0 {
+            let d = self.g_norm_avg / self.g_norm2_avg;
+            ema(&mut self.dist_avg, d);
+        }
+
+        let h_min = (self.h_min_avg / debias).max(1e-12);
+        let h_max = (self.h_max_avg / debias).max(h_min);
+        // C = E[||g||^2] - ||E[g]||^2 (debiased, clipped away from 0)
+        let c = (self.g_norm2_avg / debias
+            - math::norm2_sq(&self.g_avg) / (debias * debias))
+            .max(1e-12);
+        let d = (self.dist_avg / debias).max(1e-12);
+
+        // SingleStep: mu from the cubic + the condition-number lower bound.
+        let p = d * d * h_min * h_min / (2.0 * c);
+        let x = Self::cubic_root(p).clamp(0.0, 1.0 - 1e-6);
+        let dr = (h_max / h_min).sqrt();
+        let mu_cap = ((dr - 1.0) / (dr + 1.0)).powi(2);
+        let mu_t = (x * x).max(mu_cap).clamp(0.0, 0.9999);
+        let lr_t = (1.0 - mu_t.sqrt()).powi(2) / h_min;
+
+        // smooth the tuner outputs
+        self.mu = BETA * self.mu + (1.0 - BETA) * mu_t;
+        self.lr = BETA * self.lr + (1.0 - BETA) * lr_t;
+
+        // Closed loop: realized total momentum = projection of the latest
+        // update onto the previous one; drive mu_alg so total -> target.
+        let denom = math::norm2_sq(&self.prev_prev_update);
+        if denom > 1e-20 {
+            let realized =
+                math::dot(&self.prev_update, &self.prev_prev_update) / denom;
+            let err = self.mu - realized;
+            self.mu_alg = (self.mu_alg + CLOSED_LOOP_GAIN * err).clamp(0.0, 0.9999);
+        } else {
+            self.mu_alg = self.mu;
+        }
+    }
+}
+
+impl Algorithm for YellowFin {
+    fn kind(&self) -> AlgorithmKind {
+        AlgorithmKind::YellowFin
+    }
+
+    fn theta(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// The schedule's eta/gamma are ignored — YellowFin self-tunes.
+    fn master_apply(&mut self, _worker: usize, msg: &[f32], _sent: &[f32], _s: Step) {
+        self.tune(msg);
+        std::mem::swap(&mut self.prev_prev_update, &mut self.prev_update);
+        // v <- mu_alg*v + g ; theta <- theta - lr*v ; record update = -lr*v
+        let (mu, lr) = (self.mu_alg as f32, self.lr as f32);
+        for (((t, v), g), pu) in self
+            .theta
+            .iter_mut()
+            .zip(self.v.iter_mut())
+            .zip(msg)
+            .zip(self.prev_update.iter_mut())
+        {
+            let vn = mu * *v + *g;
+            *v = vn;
+            let upd = -lr * vn;
+            *t += upd;
+            *pu = upd;
+        }
+    }
+
+    fn rescale_momentum(&mut self, ratio: f32) {
+        math::scale(&mut self.v, ratio);
+    }
+
+    fn set_theta(&mut self, theta: &[f32]) {
+        self.theta.copy_from_slice(theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cubic_root_limits() {
+        // The YF cubic y³ + py + p = 0 with x = y+1 = √μ: small p (noisy /
+        // far from optimum) drives μ → 1, large p drives μ → 0.
+        let small = YellowFin::cubic_root(1e-9);
+        let large = YellowFin::cubic_root(1e9);
+        assert!(small > 0.98, "{small}");
+        assert!(large < 0.02, "{large}");
+        // the root actually satisfies the cubic at a moderate p
+        for p in [0.1, 1.0, 10.0] {
+            let x = YellowFin::cubic_root(p);
+            let y = x - 1.0;
+            let residual = y * y * y + p * y + p;
+            assert!(residual.abs() < 1e-6 * (1.0 + p), "p={p}: residual {residual}");
+        }
+    }
+
+    #[test]
+    fn tunes_on_quadratic_and_descends() {
+        // J(x) = 0.5*k*x^2 with mild noise: YF must reduce the loss.
+        let k = 4.0f32;
+        let mut yf = YellowFin::new(&[1.0, -1.0, 0.5, 2.0]);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let loss = |th: &[f32]| th.iter().map(|&x| 0.5 * k as f64 * (x as f64).powi(2)).sum::<f64>();
+        let l0 = loss(yf.theta());
+        for _ in 0..800 {
+            let g: Vec<f32> = yf
+                .theta()
+                .iter()
+                .map(|&x| k * x + 0.01 * rng.normal() as f32)
+                .collect();
+            let sent = yf.theta().to_vec();
+            yf.master_apply(0, &g, &sent, Step::default());
+        }
+        let l1 = loss(yf.theta());
+        assert!(l1 < 0.5 * l0, "l0={l0} l1={l1}");
+        assert!(yf.tuned_lr() > 0.0 && yf.tuned_lr().is_finite());
+        assert!((0.0..1.0).contains(&yf.tuned_mu()));
+    }
+
+    #[test]
+    fn initializes_at_paper_hyperparams() {
+        let yf = YellowFin::new(&[0.0]);
+        assert_eq!(yf.tuned_lr(), 1e-4);
+        assert_eq!(yf.tuned_mu(), 0.0);
+    }
+}

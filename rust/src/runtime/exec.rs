@@ -1,0 +1,204 @@
+//! Typed execution wrappers over compiled PJRT executables.
+
+use super::manifest::{UpdateKernel, Variant};
+
+/// Model input batch (MLP takes f32 features, the LM takes i32 tokens).
+#[derive(Debug, Clone, Copy)]
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+fn literal_1d_f32(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+fn literal_shaped_f32(data: &[f32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("reshape f32{dims:?}: {e:?}"))
+}
+
+fn literal_shaped_i32(data: &[i32], dims: &[usize]) -> anyhow::Result<xla::Literal> {
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("reshape i32{dims:?}: {e:?}"))
+}
+
+fn scalar_from(lit: &xla::Literal) -> anyhow::Result<f32> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("scalar read: {e:?}"))?
+        .first()
+        .copied()
+        .ok_or_else(|| anyhow::anyhow!("empty scalar literal"))
+}
+
+/// A compiled model variant: train + eval executables and shape metadata.
+pub struct Model {
+    variant: Variant,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+}
+
+impl Model {
+    pub(super) fn new(
+        variant: Variant,
+        train: xla::PjRtLoadedExecutable,
+        eval: xla::PjRtLoadedExecutable,
+    ) -> Self {
+        Model { variant, train, eval }
+    }
+
+    pub fn variant(&self) -> &Variant {
+        &self.variant
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.variant.param_count
+    }
+
+    pub fn batch(&self) -> usize {
+        self.variant.batch
+    }
+
+    fn inputs(&self, params: &[f32], x: Input<'_>, y: &[i32]) -> anyhow::Result<[xla::Literal; 3]> {
+        anyhow::ensure!(
+            params.len() == self.variant.param_count,
+            "params len {} != {}",
+            params.len(),
+            self.variant.param_count
+        );
+        let expect_x: usize = self.variant.x_shape.iter().product();
+        let expect_y: usize = self.variant.y_shape.iter().product();
+        anyhow::ensure!(y.len() == expect_y, "y len {} != {}", y.len(), expect_y);
+        let xl = match (x, self.variant.x_dtype.as_str()) {
+            (Input::F32(d), "f32") => {
+                anyhow::ensure!(d.len() == expect_x, "x len {} != {}", d.len(), expect_x);
+                literal_shaped_f32(d, &self.variant.x_shape)?
+            }
+            (Input::I32(d), "i32") => {
+                anyhow::ensure!(d.len() == expect_x, "x len {} != {}", d.len(), expect_x);
+                literal_shaped_i32(d, &self.variant.x_shape)?
+            }
+            (got, want) => anyhow::bail!(
+                "variant {} expects x dtype {want}, got {:?}",
+                self.variant.name,
+                match got {
+                    Input::F32(_) => "f32",
+                    Input::I32(_) => "i32",
+                }
+            ),
+        };
+        let yl = literal_shaped_i32(y, &self.variant.y_shape)?;
+        Ok([literal_1d_f32(params), xl, yl])
+    }
+
+    fn run2(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal; 3],
+    ) -> anyhow::Result<(xla::Literal, xla::Literal)> {
+        let result = exe
+            .execute::<xla::Literal>(inputs.as_slice())
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let mut parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 2, "expected 2 outputs, got {}", parts.len());
+        let second = parts.pop().unwrap();
+        let first = parts.pop().unwrap();
+        Ok((first, second))
+    }
+
+    /// `train_step(params, x, y) -> (loss, grads[P])`.
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        x: Input<'_>,
+        y: &[i32],
+    ) -> anyhow::Result<(f32, Vec<f32>)> {
+        let inputs = self.inputs(params, x, y)?;
+        let (loss, grads) = Self::run2(&self.train, &inputs)?;
+        let loss = scalar_from(&loss)?;
+        let grads = grads
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("grads read: {e:?}"))?;
+        anyhow::ensure!(grads.len() == self.variant.param_count, "bad grads len");
+        Ok((loss, grads))
+    }
+
+    /// `eval_step(params, x, y) -> (mean loss, correct count)`.
+    pub fn eval_step(
+        &self,
+        params: &[f32],
+        x: Input<'_>,
+        y: &[i32],
+    ) -> anyhow::Result<(f32, f32)> {
+        let inputs = self.inputs(params, x, y)?;
+        let (loss, correct) = Self::run2(&self.eval, &inputs)?;
+        Ok((scalar_from(&loss)?, scalar_from(&correct)?))
+    }
+}
+
+/// The fused DANA master-update kernel executed through PJRT (ablation
+/// against the native loop in `math::dana_fused_update`).
+pub struct UpdateKernelExec {
+    meta: UpdateKernel,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl UpdateKernelExec {
+    pub(super) fn new(meta: UpdateKernel, exe: xla::PjRtLoadedExecutable) -> Self {
+        UpdateKernelExec { meta, exe }
+    }
+
+    pub fn k(&self) -> usize {
+        self.meta.k
+    }
+
+    #[allow(clippy::type_complexity)]
+    pub fn apply(
+        &self,
+        gamma: f32,
+        eta: f32,
+        theta: &[f32],
+        v: &[f32],
+        vsum: &[f32],
+        g: &[f32],
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let k = self.meta.k;
+        for (name, s) in [("theta", theta), ("v", v), ("vsum", vsum), ("g", g)] {
+            anyhow::ensure!(s.len() == k, "{name} len {} != {k}", s.len());
+        }
+        let inputs = [
+            literal_1d_f32(&[gamma]),
+            literal_1d_f32(&[eta]),
+            literal_1d_f32(theta),
+            literal_1d_f32(v),
+            literal_1d_f32(vsum),
+            literal_1d_f32(g),
+        ];
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 4, "expected 4 outputs");
+        let mut out: Vec<Vec<f32>> = Vec::with_capacity(4);
+        for p in parts {
+            out.push(p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("read: {e:?}"))?);
+        }
+        let hat = out.pop().unwrap();
+        let vsum2 = out.pop().unwrap();
+        let v2 = out.pop().unwrap();
+        let theta2 = out.pop().unwrap();
+        Ok((theta2, v2, vsum2, hat))
+    }
+}

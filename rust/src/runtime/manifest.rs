@@ -1,0 +1,243 @@
+//! `artifacts/manifest.json` schema — the contract between the python
+//! compile path (`python/compile/aot.py`) and the rust runtime.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+pub const SUPPORTED_FORMAT: usize = 1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GoldenRecord {
+    pub loss: f64,
+    pub grad_l2: f64,
+    pub grad_prefix: Vec<f64>,
+    pub eval_loss: f64,
+    pub eval_correct: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    pub name: String,
+    /// "mlp" | "lm"
+    pub kind: String,
+    pub param_count: usize,
+    pub batch: usize,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    /// "f32" | "i32"
+    pub x_dtype: String,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub init_params: PathBuf,
+    pub golden_x: PathBuf,
+    pub golden_y: PathBuf,
+    pub golden: GoldenRecord,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct UpdateKernel {
+    pub k: usize,
+    pub file: PathBuf,
+    pub out_l2: Vec<f64>,
+    pub gamma: f64,
+    pub eta: f64,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<Variant>,
+    pub update_kernel: Option<UpdateKernel>,
+}
+
+fn req<'a>(j: &'a Json, key: &str, ctx: &str) -> anyhow::Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow::anyhow!("manifest: missing {ctx}.{key}"))
+}
+
+fn req_usize(j: &Json, key: &str, ctx: &str) -> anyhow::Result<usize> {
+    req(j, key, ctx)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("manifest: {ctx}.{key} not a usize"))
+}
+
+fn req_f64(j: &Json, key: &str, ctx: &str) -> anyhow::Result<f64> {
+    req(j, key, ctx)?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("manifest: {ctx}.{key} not a number"))
+}
+
+fn req_str(j: &Json, key: &str, ctx: &str) -> anyhow::Result<String> {
+    Ok(req(j, key, ctx)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("manifest: {ctx}.{key} not a string"))?
+        .to_string())
+}
+
+fn usize_arr(j: &Json, key: &str, ctx: &str) -> anyhow::Result<Vec<usize>> {
+    req(j, key, ctx)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("manifest: {ctx}.{key} not an array"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("{ctx}.{key}: bad element")))
+        .collect()
+}
+
+fn f64_arr(j: &Json, key: &str, ctx: &str) -> anyhow::Result<Vec<f64>> {
+    req(j, key, ctx)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("manifest: {ctx}.{key} not an array"))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("{ctx}.{key}: bad element")))
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`; verifies referenced files
+    /// exist and init-param sizes match declared param counts.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let fmt = req_usize(&j, "format_version", "root")?;
+        anyhow::ensure!(
+            fmt == SUPPORTED_FORMAT,
+            "manifest format {fmt} != supported {SUPPORTED_FORMAT}"
+        );
+        let mut variants = Vec::new();
+        for (i, vj) in req(&j, "variants", "root")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest: variants not an array"))?
+            .iter()
+            .enumerate()
+        {
+            let ctx = format!("variants[{i}]");
+            let files = req(vj, "files", &ctx)?;
+            let gold = req(vj, "golden", &ctx)?;
+            let path = |key: &str| -> anyhow::Result<PathBuf> {
+                Ok(dir.join(req_str(files, key, &format!("{ctx}.files"))?))
+            };
+            let v = Variant {
+                name: req_str(vj, "name", &ctx)?,
+                kind: req_str(vj, "kind", &ctx)?,
+                param_count: req_usize(vj, "param_count", &ctx)?,
+                batch: req_usize(vj, "batch", &ctx)?,
+                x_shape: usize_arr(vj, "x_shape", &ctx)?,
+                y_shape: usize_arr(vj, "y_shape", &ctx)?,
+                x_dtype: req_str(vj, "x_dtype", &ctx)?,
+                train_hlo: path("train")?,
+                eval_hlo: path("eval")?,
+                init_params: path("init")?,
+                golden_x: path("golden_x")?,
+                golden_y: path("golden_y")?,
+                golden: GoldenRecord {
+                    loss: req_f64(gold, "loss", &ctx)?,
+                    grad_l2: req_f64(gold, "grad_l2", &ctx)?,
+                    grad_prefix: f64_arr(gold, "grad_prefix", &ctx)?,
+                    eval_loss: req_f64(gold, "eval_loss", &ctx)?,
+                    eval_correct: req_f64(gold, "eval_correct", &ctx)?,
+                },
+            };
+            for p in [&v.train_hlo, &v.eval_hlo, &v.init_params, &v.golden_x, &v.golden_y] {
+                anyhow::ensure!(p.exists(), "manifest references missing file {}", p.display());
+            }
+            let init_bytes = std::fs::metadata(&v.init_params)?.len() as usize;
+            anyhow::ensure!(
+                init_bytes == 4 * v.param_count,
+                "{}: init file {} bytes != 4*{}",
+                v.name,
+                init_bytes,
+                v.param_count
+            );
+            variants.push(v);
+        }
+        let update_kernel = match j.get("update_kernel") {
+            None => None,
+            Some(uj) => {
+                let g = req(uj, "golden", "update_kernel")?;
+                Some(UpdateKernel {
+                    k: req_usize(uj, "k", "update_kernel")?,
+                    file: dir.join(req_str(uj, "file", "update_kernel")?),
+                    out_l2: f64_arr(g, "out_l2", "update_kernel.golden")?,
+                    gamma: req_f64(g, "gamma", "update_kernel.golden")?,
+                    eta: req_f64(g, "eta", "update_kernel.golden")?,
+                    seed: req_usize(g, "seed", "update_kernel.golden")? as u64,
+                })
+            }
+        };
+        Ok(Manifest { dir: dir.to_path_buf(), variants, update_kernel })
+    }
+
+    pub fn variant(&self, name: &str) -> anyhow::Result<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "variant {name:?} not in manifest (have: {})",
+                    self.variants.iter().map(|v| v.name.as_str()).collect::<Vec<_>>().join(", ")
+                )
+            })
+    }
+}
+
+/// Read a raw little-endian f32 file (e.g. `<name>.init.f32`).
+pub fn read_f32_file(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{}: not a multiple of 4", path.display());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Read a raw little-endian i32 file.
+pub fn read_i32_file(path: &Path) -> anyhow::Result<Vec<i32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{}: not a multiple of 4", path.display());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.variants.len() >= 4);
+        let v = m.variant("mlp_c10_ref").unwrap();
+        assert_eq!(v.kind, "mlp");
+        assert_eq!(v.x_shape[0], v.batch);
+        assert!(m.variant("nope").is_err());
+        let init = read_f32_file(&v.init_params).unwrap();
+        assert_eq!(init.len(), v.param_count);
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn f32_reader_round_trips() {
+        let dir = std::env::temp_dir().join(format!("mani_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.f32");
+        let vals = [1.5f32, -2.25, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_file(&p).unwrap(), vals);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

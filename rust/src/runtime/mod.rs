@@ -1,0 +1,193 @@
+//! PJRT runtime: load AOT artifacts and execute them from the request path.
+//!
+//! The bridge follows /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.  One [`Engine`] per thread (the
+//! `xla` wrapper types hold raw pointers and are not `Send`); the real-async
+//! trainer gives each worker thread its own engine, the simulated trainer
+//! runs everything on the driver thread.
+
+pub mod exec;
+pub mod manifest;
+
+pub use exec::{Input, Model, UpdateKernelExec};
+pub use manifest::{Manifest, Variant};
+
+use std::path::Path;
+
+/// A PJRT CPU client plus the manifest it serves artifacts from.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn cpu(artifacts_dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(Engine { client, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile_hlo(&self, path: &Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", path.display()))
+    }
+
+    /// Load + compile the train/eval executables of a variant.
+    pub fn load_model(&self, name: &str) -> anyhow::Result<Model> {
+        let v = self.manifest.variant(name)?.clone();
+        let train = self.compile_hlo(&v.train_hlo)?;
+        let eval = self.compile_hlo(&v.eval_hlo)?;
+        Ok(Model::new(v, train, eval))
+    }
+
+    /// Load + compile the fused DANA master-update kernel artifact
+    /// (ablation: execute the L1 kernel through PJRT instead of the native
+    /// rust loop).
+    pub fn load_update_kernel(&self) -> anyhow::Result<UpdateKernelExec> {
+        let uk = self
+            .manifest
+            .update_kernel
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("manifest has no update_kernel"))?
+            .clone();
+        let exe = self.compile_hlo(&uk.file)?;
+        Ok(UpdateKernelExec::new(uk, exe))
+    }
+
+    /// Initial parameters for a variant (the python-side init, so rust and
+    /// python training trajectories share a starting point).
+    pub fn init_params(&self, name: &str) -> anyhow::Result<Vec<f32>> {
+        let v = self.manifest.variant(name)?;
+        manifest::read_f32_file(&v.init_params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn engine_loads_and_reports_platform() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let e = Engine::cpu(&dir).unwrap();
+        assert_eq!(e.platform().to_lowercase(), "cpu");
+        assert!(e.manifest().variants.len() >= 4);
+    }
+
+    #[test]
+    fn golden_cross_check_mlp() {
+        // The core integration guarantee: the rust runtime executing the
+        // AOT artifact reproduces python's loss/grads on the golden batch.
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let e = Engine::cpu(&dir).unwrap();
+        for name in ["mlp_c10_ref", "mlp_c10"] {
+            let m = e.load_model(name).unwrap();
+            let v = e.manifest().variant(name).unwrap();
+            let params = e.init_params(name).unwrap();
+            let gx = manifest::read_f32_file(&v.golden_x).unwrap();
+            let gy = manifest::read_i32_file(&v.golden_y).unwrap();
+            let (loss, grads) = m.train_step(&params, Input::F32(&gx), &gy).unwrap();
+            assert!(
+                (loss as f64 - v.golden.loss).abs() < 1e-4,
+                "{name}: loss {loss} vs golden {}",
+                v.golden.loss
+            );
+            let l2 = crate::util::stats::l2_norm(&grads);
+            assert!(
+                (l2 - v.golden.grad_l2).abs() / v.golden.grad_l2 < 1e-3,
+                "{name}: grad_l2 {l2} vs {}",
+                v.golden.grad_l2
+            );
+            for (i, &want) in v.golden.grad_prefix.iter().enumerate() {
+                assert!(
+                    (grads[i] as f64 - want).abs() < 1e-5 + want.abs() * 1e-3,
+                    "{name}: grad[{i}] {} vs {want}",
+                    grads[i]
+                );
+            }
+            let (eloss, ecorr) = m.eval_step(&params, Input::F32(&gx), &gy).unwrap();
+            assert!((eloss as f64 - v.golden.eval_loss).abs() < 1e-4);
+            assert_eq!(ecorr as f64, v.golden.eval_correct);
+        }
+    }
+
+    #[test]
+    fn golden_cross_check_lm() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let e = Engine::cpu(&dir).unwrap();
+        let name = "lm_small_ref";
+        let m = e.load_model(name).unwrap();
+        let v = e.manifest().variant(name).unwrap();
+        let params = e.init_params(name).unwrap();
+        let gx = manifest::read_i32_file(&v.golden_x).unwrap();
+        let gy = manifest::read_i32_file(&v.golden_y).unwrap();
+        let (loss, grads) = m.train_step(&params, Input::I32(&gx), &gy).unwrap();
+        assert!((loss as f64 - v.golden.loss).abs() < 1e-4);
+        let l2 = crate::util::stats::l2_norm(&grads);
+        assert!((l2 - v.golden.grad_l2).abs() / v.golden.grad_l2 < 1e-3);
+    }
+
+    #[test]
+    fn update_kernel_matches_native_math() {
+        let Some(dir) = artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let e = Engine::cpu(&dir).unwrap();
+        let uk = e.load_update_kernel().unwrap();
+        let k = uk.k();
+        let mut rng = crate::util::rng::Rng::new(17);
+        let mk = |rng: &mut crate::util::rng::Rng| -> Vec<f32> {
+            (0..k).map(|_| rng.normal() as f32).collect()
+        };
+        let (theta, v, vsum, g) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let (t2, v2, s2, hat) = uk.apply(0.9, 0.05, &theta, &v, &vsum, &g).unwrap();
+        // native fused loop
+        let (mut tn, mut vn, mut sn) = (theta.clone(), v.clone(), vsum.clone());
+        crate::math::dana_fused_update(&mut tn, &mut vn, &mut sn, &g, 0.9, 0.05);
+        let mut hatn = vec![0.0; k];
+        crate::math::lookahead(&mut hatn, &tn, &sn, 0.9, 0.05);
+        for (a, b) in t2.iter().zip(&tn) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in v2.iter().zip(&vn) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in s2.iter().zip(&sn) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in hat.iter().zip(&hatn) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Gap / lag / gradient-norm instrumentation (paper Section 3, Fig 2 & 11).
+
+/// One sampled master-apply event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricRow {
+    pub step: u64,
+    pub worker: usize,
+    /// G(Δ) = ‖θ_now − θ_sent‖₂ / √k  — the paper's gap.
+    pub gap: f64,
+    /// Normalized gap G*(Δ) = ‖Δ‖ / ‖msg‖ (Appendix B.3).
+    pub norm_gap: f64,
+    /// τ — master updates since this worker's pull.
+    pub lag: u64,
+    pub eta: f32,
+    /// ‖msg‖₂ (gradient norm for gradient-sending algorithms).
+    pub msg_norm: f64,
+}
+
+/// Sampling recorder: keeps every `every`-th master step (0 = disabled).
+#[derive(Debug, Default)]
+pub struct MetricsRecorder {
+    every: u64,
+    rows: Vec<MetricRow>,
+}
+
+impl MetricsRecorder {
+    pub fn set_every(&mut self, every: u64) {
+        self.every = every;
+    }
+
+    pub fn wants(&self, step: u64) -> bool {
+        self.every > 0 && step % self.every == 0
+    }
+
+    pub fn record(&mut self, row: MetricRow) {
+        self.rows.push(row);
+    }
+
+    pub fn rows(&self) -> &[MetricRow] {
+        &self.rows
+    }
+
+    pub fn take_rows(&mut self) -> Vec<MetricRow> {
+        std::mem::take(&mut self.rows)
+    }
+
+    /// Mean gap over all recorded rows (Fig 2b summary statistic).
+    pub fn mean_gap(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().map(|r| r.gap).sum::<f64>() / self.rows.len() as f64
+    }
+
+    /// Mean lag over all recorded rows.
+    pub fn mean_lag(&self) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().map(|r| r.lag as f64).sum::<f64>() / self.rows.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(step: u64, gap: f64, lag: u64) -> MetricRow {
+        MetricRow { step, worker: 0, gap, norm_gap: 0.0, lag, eta: 0.1, msg_norm: 1.0 }
+    }
+
+    #[test]
+    fn disabled_by_default() {
+        let m = MetricsRecorder::default();
+        assert!(!m.wants(0));
+    }
+
+    #[test]
+    fn sampling_cadence() {
+        let mut m = MetricsRecorder::default();
+        m.set_every(10);
+        assert!(m.wants(0) && m.wants(20) && !m.wants(5));
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut m = MetricsRecorder::default();
+        m.set_every(1);
+        m.record(row(0, 1.0, 2));
+        m.record(row(1, 3.0, 4));
+        assert_eq!(m.mean_gap(), 2.0);
+        assert_eq!(m.mean_lag(), 3.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Event-driven cluster simulator.
+//!
+//! Drives the pull → compute(gamma-time) → push cycle of every worker on a
+//! virtual clock and yields master-apply events in completion order — the
+//! same methodology the paper uses for its §5.1/§5.2 simulations ("we
+//! simulate the workers' execution time using a gamma-distributed model").
+//! The [`crate::train::sim_trainer`] consumes these events and performs the
+//! *real* gradient computation (via the PJRT runtime) for each one, so the
+//! schedule is simulated but the learning dynamics are genuine.
+//!
+//! Synchronous mode (SSGD) implements the barrier: a round completes when
+//! the slowest worker finishes, which is the mechanism behind Fig 12's
+//! speedup comparison.
+
+use super::gamma::ExecTimeModel;
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One asynchronous completion: worker `worker` finishes a batch at `time`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Completion {
+    pub time: f64,
+    pub worker: usize,
+}
+
+// BinaryHeap is a max-heap; invert the order to pop the earliest event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct HeapItem(Completion);
+
+impl Eq for HeapItem {}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .0
+            .time
+            .total_cmp(&self.0.time)
+            .then_with(|| other.0.worker.cmp(&self.0.worker))
+    }
+}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Asynchronous schedule generator: an infinite stream of completions.
+pub struct AsyncSchedule {
+    model: ExecTimeModel,
+    rng: Rng,
+    heap: BinaryHeap<HeapItem>,
+    now: f64,
+}
+
+impl AsyncSchedule {
+    pub fn new(model: ExecTimeModel, mut rng: Rng) -> Self {
+        let mut heap = BinaryHeap::new();
+        for w in 0..model.n_workers() {
+            let t = model.sample(w, &mut rng);
+            heap.push(HeapItem(Completion { time: t, worker: w }));
+        }
+        AsyncSchedule { model, rng, heap, now: 0.0 }
+    }
+
+    /// Simulated time of the most recent completion.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Pop the next completion and immediately re-dispatch that worker on
+    /// its next batch (workers never idle in ASGD).
+    pub fn next_completion(&mut self) -> Completion {
+        let HeapItem(c) = self.heap.pop().expect("heap never empties");
+        self.now = c.time;
+        let dur = self.model.sample(c.worker, &mut self.rng);
+        self.heap.push(HeapItem(Completion { time: c.time + dur, worker: c.worker }));
+        c
+    }
+
+    /// Materialize the next `n` completions (for schedule-replay tests).
+    pub fn take(&mut self, n: usize) -> Vec<Completion> {
+        (0..n).map(|_| self.next_completion()).collect()
+    }
+}
+
+/// Synchronous schedule: rounds gated by the slowest worker.
+pub struct SyncSchedule {
+    model: ExecTimeModel,
+    rng: Rng,
+    now: f64,
+}
+
+impl SyncSchedule {
+    pub fn new(model: ExecTimeModel, rng: Rng) -> Self {
+        SyncSchedule { model, rng, now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Run one barrier round; returns the round's wall time (max over
+    /// workers) — every worker contributes exactly one batch.
+    pub fn next_round(&mut self) -> f64 {
+        let round = (0..self.model.n_workers())
+            .map(|w| self.model.sample(w, &mut self.rng))
+            .fold(0.0f64, f64::max);
+        self.now += round;
+        round
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::gamma::Environment;
+
+    fn model(env: Environment, n: usize, seed: u64) -> (ExecTimeModel, Rng) {
+        let mut rng = Rng::new(seed);
+        let m = ExecTimeModel::new(env, n, 128, &mut rng);
+        (m, rng)
+    }
+
+    #[test]
+    fn completions_are_time_ordered() {
+        let (m, rng) = model(Environment::Homogeneous, 8, 3);
+        let mut s = AsyncSchedule::new(m, rng);
+        let evts = s.take(500);
+        for w in evts.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+    }
+
+    #[test]
+    fn all_workers_participate() {
+        let (m, rng) = model(Environment::Homogeneous, 8, 4);
+        let mut s = AsyncSchedule::new(m, rng);
+        let evts = s.take(200);
+        let mut seen = [0usize; 8];
+        for e in &evts {
+            seen[e.worker] += 1;
+        }
+        for (w, &c) in seen.iter().enumerate() {
+            assert!(c > 10, "worker {w} starved: {c} completions");
+        }
+    }
+
+    #[test]
+    fn homo_throughput_is_near_linear() {
+        // N workers deliver ~N completions per mean batch time.
+        let (m, rng) = model(Environment::Homogeneous, 8, 5);
+        let mut s = AsyncSchedule::new(m, rng);
+        let k = 4000;
+        let evts = s.take(k);
+        let total_time = evts.last().unwrap().time;
+        let throughput = k as f64 / total_time; // completions per unit time
+        let ideal = 8.0 / 128.0;
+        assert!(
+            (throughput / ideal - 1.0).abs() < 0.1,
+            "throughput {throughput} vs ideal {ideal}"
+        );
+    }
+
+    #[test]
+    fn sync_rounds_are_slower_than_async_mean() {
+        // E[max of N gammas] > E[gamma]: the straggler penalty.
+        let (m, rng) = model(Environment::Heterogeneous, 8, 6);
+        let mut s = SyncSchedule::new(m, rng);
+        let mut total = 0.0;
+        for _ in 0..200 {
+            total += s.next_round();
+        }
+        let mean_round = total / 200.0;
+        assert!(mean_round > 128.0 * 1.1, "mean round {mean_round}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (m1, r1) = model(Environment::Heterogeneous, 4, 9);
+        let (m2, r2) = model(Environment::Heterogeneous, 4, 9);
+        let a = AsyncSchedule::new(m1, r1).take(100);
+        let b = AsyncSchedule::new(m2, r2).take(100);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hetero_fast_workers_dominate() {
+        let (m, rng) = model(Environment::Heterogeneous, 4, 11);
+        let fastest = (0..4)
+            .min_by(|&a, &b| m.machine_mean(a).total_cmp(&m.machine_mean(b)))
+            .unwrap();
+        let mut s = AsyncSchedule::new(m, rng);
+        let evts = s.take(1000);
+        let counts = evts.iter().filter(|e| e.worker == fastest).count();
+        assert!(counts > 250, "fastest worker should exceed fair share: {counts}");
+    }
+}

@@ -1,0 +1,193 @@
+//! CVB task-execution-time model (Ali et al. 2000; paper Appendix A.4,
+//! Algorithms 11 & 12).
+//!
+//! Batch execution times are gamma-distributed.  Two regimes:
+//!
+//! * **homogeneous** — all machines share one mean drawn once
+//!   (Algorithm 11); stragglers are transient (a different machine is slow
+//!   each epoch).  `V_mach = 0.1`.
+//! * **heterogeneous** — every machine draws its own persistent mean
+//!   (Algorithm 12); some machines are durably slow.  `V_mach = 0.6`.
+//!
+//! With `mu_task = mu_mach = B` the mean execution time is `B` simulated
+//! time units (Fig 3: both pdfs centred at 128 for B=128), and the paper's
+//! headline tail statistic — P(time > 1.25·mean) ≈ 1% homo vs 27.9% hetero —
+//! emerges from the composition; `tests` below pin it.
+
+use crate::util::rng::Rng;
+
+/// Variance parameters (paper values).
+pub const V_TASK: f64 = 0.1;
+pub const V_MACH_HOMO: f64 = 0.1;
+pub const V_MACH_HETERO: f64 = 0.6;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Environment {
+    Homogeneous,
+    Heterogeneous,
+}
+
+impl std::str::FromStr for Environment {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "homo" | "homogeneous" => Ok(Environment::Homogeneous),
+            "hetero" | "heterogeneous" => Ok(Environment::Heterogeneous),
+            other => anyhow::bail!("unknown environment {other:?} (homo|hetero)"),
+        }
+    }
+}
+
+/// Per-cluster execution-time sampler.
+#[derive(Debug, Clone)]
+pub struct ExecTimeModel {
+    env: Environment,
+    /// Mean batch time in simulated units (= batch size B).
+    mu: f64,
+    alpha_task: f64,
+    alpha_mach: f64,
+    /// Per-machine scale β_task[j] (heterogeneous) or the shared machine
+    /// scale (homogeneous).
+    beta_task: Vec<f64>,
+}
+
+impl ExecTimeModel {
+    /// Build the model for `n_workers` machines and batch size `batch`
+    /// (Algorithms 11/12 setup phase).
+    pub fn new(env: Environment, n_workers: usize, batch: usize, rng: &mut Rng) -> Self {
+        let mu = batch as f64;
+        let v_mach = match env {
+            Environment::Homogeneous => V_MACH_HOMO,
+            Environment::Heterogeneous => V_MACH_HETERO,
+        };
+        let alpha_task = 1.0 / (V_TASK * V_TASK);
+        let alpha_mach = 1.0 / (v_mach * v_mach);
+        let beta_task = match env {
+            Environment::Homogeneous => {
+                // Alg 11: q ~ G(alpha_task, mu/alpha_task) shared by all.
+                let q = rng.gamma(alpha_task, mu / alpha_task);
+                vec![q / alpha_mach; n_workers]
+            }
+            Environment::Heterogeneous => {
+                // Alg 12: p[j] ~ G(alpha_mach, mu/alpha_mach) per machine.
+                (0..n_workers)
+                    .map(|_| rng.gamma(alpha_mach, mu / alpha_mach) / alpha_task)
+                    .collect()
+            }
+        };
+        ExecTimeModel { env, mu, alpha_task, alpha_mach, beta_task }
+    }
+
+    pub fn env(&self) -> Environment {
+        self.env
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.beta_task.len()
+    }
+
+    /// Nominal mean batch time (B simulated units).
+    pub fn mean(&self) -> f64 {
+        self.mu
+    }
+
+    /// Persistent mean of machine `j` (heterogeneous: p[j]; homogeneous: q).
+    pub fn machine_mean(&self, j: usize) -> f64 {
+        match self.env {
+            Environment::Homogeneous => self.beta_task[j] * self.alpha_mach,
+            Environment::Heterogeneous => self.beta_task[j] * self.alpha_task,
+        }
+    }
+
+    /// Sample the execution time of one batch on machine `j`
+    /// (Alg 11/12 loop body).
+    pub fn sample(&self, j: usize, rng: &mut Rng) -> f64 {
+        match self.env {
+            Environment::Homogeneous => rng.gamma(self.alpha_mach, self.beta_task[j]),
+            Environment::Heterogeneous => rng.gamma(self.alpha_task, self.beta_task[j]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tail_prob(env: Environment, seeds: u64) -> (f64, f64) {
+        // Returns (overall mean / B, P[time > 1.25 * B]) across many
+        // cluster instantiations (the paper's Fig 3 statistic).
+        let b = 128usize;
+        let mut count = 0usize;
+        let mut total = 0usize;
+        let mut sum = 0.0;
+        for seed in 0..seeds {
+            let mut rng = Rng::new(seed);
+            let m = ExecTimeModel::new(env, 8, b, &mut rng);
+            for j in 0..8 {
+                for _ in 0..100 {
+                    let t = m.sample(j, &mut rng);
+                    sum += t;
+                    total += 1;
+                    if t > 1.25 * b as f64 {
+                        count += 1;
+                    }
+                }
+            }
+        }
+        (sum / total as f64 / b as f64, count as f64 / total as f64)
+    }
+
+    #[test]
+    fn homogeneous_mean_and_tail() {
+        let (mean_ratio, tail) = tail_prob(Environment::Homogeneous, 40);
+        assert!((mean_ratio - 1.0).abs() < 0.05, "mean ratio {mean_ratio}");
+        // paper: ~1% of iterations exceed 1.25x the mean
+        assert!(tail < 0.08, "homo tail {tail}");
+    }
+
+    #[test]
+    fn heterogeneous_mean_and_tail() {
+        let (mean_ratio, tail) = tail_prob(Environment::Heterogeneous, 40);
+        assert!((mean_ratio - 1.0).abs() < 0.15, "mean ratio {mean_ratio}");
+        // paper: 27.9% exceed 1.25x the mean — much heavier than homo
+        assert!(tail > 0.15, "hetero tail {tail}");
+    }
+
+    #[test]
+    fn hetero_machines_have_persistent_speeds() {
+        let mut rng = Rng::new(1);
+        let m = ExecTimeModel::new(Environment::Heterogeneous, 16, 128, &mut rng);
+        let means: Vec<f64> = (0..16).map(|j| m.machine_mean(j)).collect();
+        let spread = means.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            / means.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(spread > 1.2, "hetero machines should differ: spread {spread}");
+    }
+
+    #[test]
+    fn homo_machines_share_one_mean() {
+        let mut rng = Rng::new(1);
+        let m = ExecTimeModel::new(Environment::Homogeneous, 4, 128, &mut rng);
+        for j in 1..4 {
+            assert_eq!(m.machine_mean(0), m.machine_mean(j));
+        }
+    }
+
+    #[test]
+    fn samples_are_positive() {
+        let mut rng = Rng::new(2);
+        for env in [Environment::Homogeneous, Environment::Heterogeneous] {
+            let m = ExecTimeModel::new(env, 2, 32, &mut rng);
+            for _ in 0..1000 {
+                assert!(m.sample(0, &mut rng) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn env_parses() {
+        assert_eq!("homo".parse::<Environment>().unwrap(), Environment::Homogeneous);
+        assert_eq!("HETERO".parse::<Environment>().unwrap(), Environment::Heterogeneous);
+        assert!("x".parse::<Environment>().is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Cluster simulation: gamma execution-time model (Appendix A.4), event
+//! engine, and the theoretical speedup analysis (Fig 12).
+
+pub mod engine;
+pub mod gamma;
+pub mod speedup;
+
+pub use engine::{AsyncSchedule, Completion, SyncSchedule};
+pub use gamma::{Environment, ExecTimeModel};

@@ -1,0 +1,128 @@
+//! Theoretical speedup analysis (paper Fig 12, Fig 10's speedup curve,
+//! Table 1's time column).
+//!
+//! Pure timing simulation over the gamma execution-time model: how long do
+//! N workers take to process K total batches asynchronously (no barrier)
+//! versus synchronously (barrier per round)?  Communication overheads are
+//! not modelled, exactly as the paper notes — which makes the reported
+//! ASGD-over-SSGD advantage an *underestimate*.
+
+use super::engine::{AsyncSchedule, SyncSchedule};
+use super::gamma::{Environment, ExecTimeModel};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpeedupPoint {
+    pub n_workers: usize,
+    /// Speedup of async over 1 worker (batches/time normalized).
+    pub async_speedup: f64,
+    /// Speedup of sync over 1 worker.
+    pub sync_speedup: f64,
+}
+
+/// Time for one worker to process `k` batches (the speedup baseline).
+pub fn single_worker_time(env: Environment, batch: usize, k: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let m = ExecTimeModel::new(env, 1, batch, &mut rng);
+    let mut total = 0.0;
+    for _ in 0..k {
+        total += m.sample(0, &mut rng);
+    }
+    total
+}
+
+/// Wall time for `n` async workers to deliver `k` total batches.
+pub fn async_time(env: Environment, n: usize, batch: usize, k: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let m = ExecTimeModel::new(env, n, batch, &mut rng);
+    let fork = rng.fork(1);
+    let mut s = AsyncSchedule::new(m, fork);
+    let mut last = 0.0;
+    for _ in 0..k {
+        last = s.next_completion().time;
+    }
+    last
+}
+
+/// Wall time for `n` sync workers to deliver `k` total batches
+/// (ceil(k/n) barrier rounds).
+pub fn sync_time(env: Environment, n: usize, batch: usize, k: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let m = ExecTimeModel::new(env, n, batch, &mut rng);
+    let fork = rng.fork(1);
+    let mut s = SyncSchedule::new(m, fork);
+    let rounds = k.div_ceil(n);
+    for _ in 0..rounds {
+        s.next_round();
+    }
+    s.now()
+}
+
+/// Fig 12 sweep: speedup vs worker count, averaged over `seeds` cluster
+/// instantiations.
+pub fn speedup_sweep(
+    env: Environment,
+    worker_counts: &[usize],
+    batch: usize,
+    batches_per_worker: usize,
+    seeds: u64,
+) -> Vec<SpeedupPoint> {
+    worker_counts
+        .iter()
+        .map(|&n| {
+            let k = batches_per_worker * n;
+            let mut asy = 0.0;
+            let mut syn = 0.0;
+            for seed in 0..seeds {
+                // baseline processes the same k batches on one machine
+                let base = single_worker_time(env, batch, k, 1000 + seed);
+                asy += base / async_time(env, n, batch, k, seed);
+                syn += base / sync_time(env, n, batch, k, seed);
+            }
+            SpeedupPoint {
+                n_workers: n,
+                async_speedup: asy / seeds as f64,
+                sync_speedup: syn / seeds as f64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn async_scales_near_linearly_homo() {
+        let pts = speedup_sweep(Environment::Homogeneous, &[1, 8], 128, 40, 4);
+        let s8 = pts[1].async_speedup;
+        assert!(s8 > 7.0 && s8 < 9.0, "8-worker async speedup {s8}");
+    }
+
+    #[test]
+    fn sync_lags_async() {
+        for env in [Environment::Homogeneous, Environment::Heterogeneous] {
+            let pts = speedup_sweep(env, &[8], 128, 40, 4);
+            assert!(
+                pts[0].async_speedup > pts[0].sync_speedup,
+                "{env:?}: async {} <= sync {}",
+                pts[0].async_speedup,
+                pts[0].sync_speedup
+            );
+        }
+    }
+
+    #[test]
+    fn hetero_gap_is_dramatic() {
+        // Paper: ASGD up to ~6x faster than SSGD in heterogeneous clusters.
+        let pts = speedup_sweep(Environment::Heterogeneous, &[16], 128, 30, 6);
+        let ratio = pts[0].async_speedup / pts[0].sync_speedup;
+        assert!(ratio > 1.5, "hetero async/sync ratio {ratio}");
+    }
+
+    #[test]
+    fn single_worker_speedup_is_unity() {
+        let pts = speedup_sweep(Environment::Homogeneous, &[1], 128, 50, 4);
+        assert!((pts[0].async_speedup - 1.0).abs() < 0.2);
+    }
+}

@@ -1,0 +1,77 @@
+//! Single-worker sequential baseline (the paper's dashed line): NAG with
+//! the architecture's original hyperparameters — no staleness, ideal
+//! accuracy and convergence.
+
+use crate::config::TrainConfig;
+use crate::optim::sgd::Nag;
+use crate::optim::LrSchedule;
+use crate::runtime::Engine;
+use crate::sim::ExecTimeModel;
+use crate::train::data_source::{evaluate, DataSource};
+use crate::train::{EvalPoint, TrainReport};
+use crate::util::rng::Rng;
+
+/// Run the sequential NAG baseline for `cfg.epochs` (n_workers is ignored;
+/// the schedule uses N=1 semantics: no warmup division).
+pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
+    let t0 = std::time::Instant::now();
+    let model = engine.load_model(&cfg.variant_name())?;
+    let theta0 = engine.init_params(&cfg.variant_name())?;
+    let mut ds = DataSource::for_config(cfg);
+    let eval_set = ds.eval_set();
+
+    let mut sched_cfg = cfg.schedule.clone();
+    sched_cfg.n_workers = 1;
+    let schedule = LrSchedule::new(sched_cfg);
+
+    let mut cluster_rng = Rng::new(cfg.seed);
+    let exec_model = ExecTimeModel::new(cfg.env, 1, cfg.batch(), &mut cluster_rng);
+    let mut sim_time = 0.0;
+    let mut sample_rng = cluster_rng.fork(1);
+
+    let mut nag = Nag::new(&theta0);
+    let mut hat = vec![0.0f32; theta0.len()];
+    let total = cfg.total_master_steps();
+    let eval_every = if cfg.eval_every_epochs > 0.0 {
+        (cfg.eval_every_epochs * cfg.schedule.steps_per_epoch as f64).round() as u64
+    } else {
+        0
+    };
+    let loss_sample = (total / 200).max(1);
+
+    let mut report = TrainReport {
+        algorithm: "baseline".to_string(),
+        n_workers: 1,
+        ..TrainReport::default()
+    };
+
+    for step in 0..total {
+        let s = schedule.step_at(step);
+        let batch = ds.next_train();
+        nag.lookahead_params(&mut hat, s.eta, s.gamma);
+        let (loss, grads) = model.train_step(&hat, batch.input(), &batch.y)?;
+        nag.apply(&grads, s.eta, s.gamma);
+        sim_time += exec_model.sample(0, &mut sample_rng);
+        if step % loss_sample == 0 {
+            report.loss_curve.push((step, loss as f64));
+        }
+        if eval_every > 0 && (step + 1) % eval_every == 0 {
+            let (l, e) = evaluate(&model, &nag.theta, &eval_set)?;
+            report.curve.push(EvalPoint {
+                epoch: (step + 1) as f64 / cfg.schedule.steps_per_epoch as f64,
+                test_loss: l,
+                test_error: e,
+                sim_time,
+            });
+        }
+    }
+
+    let (loss, err) = evaluate(&model, &nag.theta, &eval_set)?;
+    report.final_test_loss = loss;
+    report.final_test_error = err;
+    report.diverged = !loss.is_finite();
+    report.sim_time = sim_time;
+    report.steps = total;
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(report)
+}

@@ -1,0 +1,175 @@
+//! Workload adapter: one interface over the classification proxies and the
+//! char-LM corpus, shaped to a concrete AOT variant.
+
+use crate::config::{TrainConfig, Workload};
+use crate::data::synth::{Batcher, SynthDataset, SynthSpec};
+use crate::data::text::CharCorpus;
+use crate::runtime::{Input, Model};
+use crate::util::rng::Rng;
+
+/// An owned input batch matching a variant's x dtype.
+#[derive(Debug, Clone)]
+pub struct OwnedBatch {
+    x_f32: Vec<f32>,
+    x_i32: Vec<i32>,
+    pub y: Vec<i32>,
+    /// Number of label positions (B for MLP, B*T for the LM) — the
+    /// denominator for accuracy.
+    pub label_count: usize,
+}
+
+impl OwnedBatch {
+    pub fn input(&self) -> Input<'_> {
+        if self.x_f32.is_empty() {
+            Input::I32(&self.x_i32)
+        } else {
+            Input::F32(&self.x_f32)
+        }
+    }
+}
+
+/// Deterministic train/test stream for one workload.
+pub enum DataSource {
+    Synth {
+        data: SynthDataset,
+        batcher: Batcher,
+        batch: usize,
+    },
+    Text {
+        corpus: CharCorpus,
+        rng: Rng,
+        batch: usize,
+        seq: usize,
+        eval: Vec<OwnedBatch>,
+    },
+}
+
+impl DataSource {
+    /// Build the workload's data stream (generation is seeded by the
+    /// config: every algorithm sees the identical batch sequence).
+    pub fn for_config(cfg: &TrainConfig) -> DataSource {
+        let batch = cfg.batch();
+        match cfg.workload {
+            Workload::C10 | Workload::WrnC10 | Workload::C100 | Workload::ImageNet => {
+                let spec = match cfg.workload {
+                    // WRN-C10 is the same dataset as C10 — only the student
+                    // architecture differs (as in the paper's panels).
+                    Workload::C10 | Workload::WrnC10 => SynthSpec::c10(),
+                    Workload::C100 => SynthSpec::c100(),
+                    _ => SynthSpec::imagenet(),
+                };
+                let data = SynthDataset::generate(spec);
+                let batcher = Batcher::new(data.train_size(), batch, cfg.seed ^ 0xBA7C);
+                DataSource::Synth { data, batcher, batch }
+            }
+            Workload::LmSmall => {
+                let corpus = CharCorpus::generate(64, 200_000, 0x7E47);
+                let seq = 64;
+                let eval = corpus
+                    .eval_batches(8, batch, seq)
+                    .into_iter()
+                    .map(|tb| OwnedBatch {
+                        x_f32: vec![],
+                        x_i32: tb.x,
+                        y: tb.y,
+                        label_count: batch * seq,
+                    })
+                    .collect();
+                DataSource::Text {
+                    corpus,
+                    rng: Rng::new(cfg.seed ^ 0x7397),
+                    batch,
+                    seq,
+                    eval,
+                }
+            }
+        }
+    }
+
+    /// Next training batch.
+    pub fn next_train(&mut self) -> OwnedBatch {
+        match self {
+            DataSource::Synth { data, batcher, batch } => {
+                let idx = batcher.next_indices();
+                let b = data.train_batch(&idx);
+                OwnedBatch { x_f32: b.x, x_i32: vec![], y: b.y, label_count: *batch }
+            }
+            DataSource::Text { corpus, rng, batch, seq, .. } => {
+                let tb = corpus.sample_batch(*batch, *seq, rng);
+                OwnedBatch {
+                    x_f32: vec![],
+                    x_i32: tb.x,
+                    y: tb.y,
+                    label_count: *batch * *seq,
+                }
+            }
+        }
+    }
+
+    /// Fixed evaluation batches.
+    pub fn eval_set(&self) -> Vec<OwnedBatch> {
+        match self {
+            DataSource::Synth { data, batch, .. } => data
+                .test_batches(*batch)
+                .into_iter()
+                .map(|b| OwnedBatch {
+                    x_f32: b.x,
+                    x_i32: vec![],
+                    y: b.y,
+                    label_count: *batch,
+                })
+                .collect(),
+            DataSource::Text { eval, .. } => eval.clone(),
+        }
+    }
+}
+
+/// Mean test loss + error(%) of `theta` over an eval set.
+pub fn evaluate(model: &Model, theta: &[f32], eval_set: &[OwnedBatch]) -> anyhow::Result<(f64, f64)> {
+    let mut loss_sum = 0.0;
+    let mut correct = 0.0;
+    let mut labels = 0usize;
+    for b in eval_set {
+        let (loss, corr) = model.eval_step(theta, b.input(), &b.y)?;
+        loss_sum += loss as f64;
+        correct += corr as f64;
+        labels += b.label_count;
+    }
+    let mean_loss = loss_sum / eval_set.len() as f64;
+    let err = 100.0 * (1.0 - correct / labels as f64);
+    Ok((mean_loss, err))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::AlgorithmKind;
+
+    #[test]
+    fn synth_batches_have_right_shape() {
+        let cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 4, 2.0);
+        let mut ds = DataSource::for_config(&cfg);
+        let b = ds.next_train();
+        assert_eq!(b.y.len(), 128);
+        assert_eq!(b.x_f32.len(), 128 * 128);
+        assert!(matches!(b.input(), Input::F32(_)));
+    }
+
+    #[test]
+    fn lm_batches_have_right_shape() {
+        let cfg = TrainConfig::preset(Workload::LmSmall, AlgorithmKind::DanaSlim, 4, 1.0);
+        let mut ds = DataSource::for_config(&cfg);
+        let b = ds.next_train();
+        assert_eq!(b.y.len(), 16 * 64);
+        assert!(matches!(b.input(), Input::I32(_)));
+        assert_eq!(ds.eval_set().len(), 8);
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 4, 2.0);
+        let mut a = DataSource::for_config(&cfg);
+        let mut b = DataSource::for_config(&cfg);
+        assert_eq!(a.next_train().y, b.next_train().y);
+    }
+}

@@ -1,0 +1,67 @@
+//! Training drivers: simulated-clock asynchronous training (the paper's
+//! §5.1/§5.2 methodology), real-thread asynchronous training (§5.4), the
+//! synchronous SSGD baseline and the single-worker baseline.
+
+pub mod baseline;
+pub mod data_source;
+pub mod real_async;
+pub mod sim_trainer;
+pub mod ssgd;
+
+pub use data_source::DataSource;
+
+/// One point of the evaluation curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalPoint {
+    pub epoch: f64,
+    pub test_loss: f64,
+    /// Test error in percent (100 - accuracy), the paper's y-axis.
+    pub test_error: f64,
+    /// Simulated time units elapsed (gamma model) at this point.
+    pub sim_time: f64,
+}
+
+/// Result of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub algorithm: String,
+    pub n_workers: usize,
+    pub final_test_error: f64,
+    pub final_test_loss: f64,
+    pub curve: Vec<EvalPoint>,
+    /// (master_step, train_loss) subsampled.
+    pub loss_curve: Vec<(u64, f64)>,
+    pub mean_gap: f64,
+    pub mean_lag: f64,
+    /// Gap trace (master_step, gap) when metrics were enabled.
+    pub gap_curve: Vec<(u64, f64)>,
+    /// Normalized gap trace (Appendix B.3).
+    pub norm_gap_curve: Vec<(u64, f64)>,
+    /// Gradient-norm trace (Fig 11a).
+    pub grad_norm_curve: Vec<(u64, f64)>,
+    /// Total simulated time units (async/ssgd modes).
+    pub sim_time: f64,
+    /// Wall-clock seconds spent in the driver.
+    pub wall_secs: f64,
+    /// Master steps executed.
+    pub steps: u64,
+    /// True if any eval produced a non-finite loss (divergence guard).
+    pub diverged: bool,
+}
+
+impl TrainReport {
+    /// Paper-style summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<11} N={:<3} err={:6.2}% loss={:8.4} gap={:.2e} lag={:5.1} simt={:.0} ({:.1}s)",
+            self.algorithm,
+            self.n_workers,
+            self.final_test_error,
+            self.final_test_loss,
+            self.mean_gap,
+            self.mean_lag,
+            self.sim_time,
+            self.wall_secs
+        )
+    }
+}

@@ -1,0 +1,202 @@
+//! Real-thread asynchronous training — the §5.4 setup scaled to this host.
+//!
+//! Every worker is an OS thread with its **own PJRT client + compiled
+//! executable** (the `xla` wrapper types are not `Send`, and separate
+//! clients avoid any contention on the execution path — the analogue of
+//! one process per GPU in the paper's Fig 8).  The master thread owns the
+//! [`ParameterServer`] and serves a plain FIFO over an mpsc channel; on
+//! every push it replies with freshly pulled parameters, exactly the
+//! pull→compute→push cycle of Algorithm 1.
+//!
+//! The worker-side optimizer transform (DANA-Slim's momentum) runs inside
+//! the worker thread via [`WorkerRule`] — state never crosses the channel,
+//! matching the paper's "completely eliminates the overhead at the master".
+
+use crate::config::TrainConfig;
+use crate::math;
+use crate::optim::{make_algorithm, AlgorithmKind, LrSchedule};
+use crate::runtime::Engine;
+use crate::server::ParameterServer;
+use crate::train::data_source::{evaluate, DataSource};
+use crate::train::{EvalPoint, TrainReport};
+use std::sync::mpsc;
+
+/// Worker-side message transform, replicated per thread.
+#[derive(Debug, Clone, Copy)]
+pub enum WorkerRule {
+    /// Send the raw gradient.
+    Passthrough,
+    /// DANA-Slim: keep momentum locally, send `gamma*v_new + g`.
+    Slim,
+}
+
+impl WorkerRule {
+    pub fn for_algorithm(kind: AlgorithmKind) -> WorkerRule {
+        match kind {
+            AlgorithmKind::DanaSlim => WorkerRule::Slim,
+            _ => WorkerRule::Passthrough,
+        }
+    }
+
+    fn apply(self, v: &mut Vec<f32>, grad: &mut [f32], gamma: f32) {
+        match self {
+            WorkerRule::Passthrough => {}
+            WorkerRule::Slim => {
+                if v.len() != grad.len() {
+                    *v = vec![0.0; grad.len()];
+                }
+                let mut send = vec![0.0f32; grad.len()];
+                math::slim_worker_update(&mut send, v, grad, gamma);
+                grad.copy_from_slice(&send);
+            }
+        }
+    }
+}
+
+enum ToWorker {
+    Params(Vec<f32>),
+    Stop,
+}
+
+struct FromWorker {
+    worker: usize,
+    msg: Vec<f32>,
+    loss: f32,
+}
+
+/// Run real-thread asynchronous training. Returns the report plus measured
+/// throughput (master steps / wall second).
+pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
+    let t0 = std::time::Instant::now();
+    let n = cfg.n_workers;
+    let variant = cfg.variant_name().to_string();
+    let theta0 = engine.init_params(&variant)?;
+    let model = engine.load_model(&variant)?; // master's eval copy
+    let eval_set = DataSource::for_config(cfg).eval_set();
+
+    let mut server = ParameterServer::new(
+        make_algorithm(cfg.algorithm, &theta0, n),
+        LrSchedule::new(cfg.schedule.clone()),
+        n,
+    );
+    server.metrics.set_every(cfg.metrics_every);
+    let rule = WorkerRule::for_algorithm(cfg.algorithm);
+    let gamma = cfg.schedule.gamma;
+
+    let (tx_master, rx_master) = mpsc::channel::<FromWorker>();
+    let mut to_workers: Vec<mpsc::Sender<ToWorker>> = Vec::with_capacity(n);
+
+    let total = cfg.total_master_steps();
+    let artifacts = cfg.artifacts_dir.clone();
+    let mut report = TrainReport {
+        algorithm: cfg.algorithm.name().to_string(),
+        n_workers: n,
+        ..TrainReport::default()
+    };
+    let eval_every = if cfg.eval_every_epochs > 0.0 {
+        (cfg.eval_every_epochs * cfg.schedule.steps_per_epoch as f64).round() as u64
+    } else {
+        0
+    };
+
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        for w in 0..n {
+            let (tx_w, rx_w) = mpsc::channel::<ToWorker>();
+            to_workers.push(tx_w);
+            let tx_master = tx_master.clone();
+            let mut wcfg = cfg.clone();
+            wcfg.seed = cfg.seed.wrapping_add(w as u64 * 7919);
+            let variant = variant.clone();
+            let artifacts = artifacts.clone();
+            scope.spawn(move || {
+                // Each worker owns a full engine: client + executable.
+                let engine = match Engine::cpu(&artifacts) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        eprintln!("worker {w}: engine init failed: {e}");
+                        return;
+                    }
+                };
+                let model = match engine.load_model(&variant) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        eprintln!("worker {w}: load failed: {e}");
+                        return;
+                    }
+                };
+                let mut ds = DataSource::for_config(&wcfg);
+                let mut v_local: Vec<f32> = vec![];
+                while let Ok(ToWorker::Params(params)) = rx_w.recv() {
+                    let batch = ds.next_train();
+                    match model.train_step(&params, batch.input(), &batch.y) {
+                        Ok((loss, mut grads)) => {
+                            rule.apply(&mut v_local, &mut grads, gamma);
+                            if tx_master
+                                .send(FromWorker { worker: w, msg: grads, loss })
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("worker {w}: step failed: {e}");
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+        drop(tx_master);
+
+        // Kick off: every worker gets initial (pulled) parameters.
+        for w in 0..n {
+            let p = server.pull(w).to_vec();
+            to_workers[w].send(ToWorker::Params(p)).ok();
+        }
+
+        let loss_sample = (total / 200).max(1);
+        for step in 0..total {
+            let FromWorker { worker, msg, loss } = rx_master
+                .recv()
+                .map_err(|_| anyhow::anyhow!("all workers died before step {step}"))?;
+            if step % loss_sample == 0 {
+                report.loss_curve.push((step, loss as f64));
+            }
+            if !loss.is_finite() {
+                report.diverged = true;
+            }
+            server.push(worker, &msg);
+            if step + 1 < total {
+                let p = server.pull(worker).to_vec();
+                to_workers[worker].send(ToWorker::Params(p)).ok();
+            }
+            if eval_every > 0 && (step + 1) % eval_every == 0 {
+                let (l, e) = evaluate(&model, server.theta(), &eval_set)?;
+                report.curve.push(EvalPoint {
+                    epoch: (step + 1) as f64 / cfg.schedule.steps_per_epoch as f64,
+                    test_loss: l,
+                    test_error: e,
+                    sim_time: t0.elapsed().as_secs_f64(),
+                });
+            }
+        }
+        for tx in &to_workers {
+            tx.send(ToWorker::Stop).ok();
+        }
+        Ok(())
+    })?;
+
+    let (loss, err) = evaluate(&model, server.theta(), &eval_set)?;
+    report.final_test_loss = loss;
+    report.final_test_error = err;
+    if !loss.is_finite() {
+        report.diverged = true;
+        report.final_test_error = 100.0;
+    }
+    report.mean_gap = server.metrics.mean_gap();
+    report.mean_lag = server.metrics.mean_lag();
+    report.steps = total;
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    report.sim_time = report.wall_secs; // real time is the clock here
+    Ok(report)
+}

@@ -1,0 +1,82 @@
+//! Synchronous SGD baseline (§5.4's DistributedDataParallel stand-in):
+//! N workers compute gradients on identical parameters, a barrier averages
+//! them, one Nesterov step fires per round.  Simulated round time is the
+//! slowest worker's gamma draw — the straggler penalty that Fig 12 and
+//! Table 1 quantify.
+
+use crate::config::TrainConfig;
+use crate::optim::sgd::SyncSgd;
+use crate::optim::LrSchedule;
+use crate::runtime::Engine;
+use crate::sim::{ExecTimeModel, SyncSchedule};
+use crate::train::data_source::{evaluate, DataSource};
+use crate::train::{EvalPoint, TrainReport};
+use crate::util::rng::Rng;
+
+/// Run SSGD for the same total batch budget as an async run of the same
+/// config (`cfg.total_master_steps()` batches overall).
+pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
+    let t0 = std::time::Instant::now();
+    let model = engine.load_model(&cfg.variant_name())?;
+    let theta0 = engine.init_params(&cfg.variant_name())?;
+    let mut ds = DataSource::for_config(cfg);
+    let eval_set = ds.eval_set();
+
+    let n = cfg.n_workers;
+    let schedule = LrSchedule::new(cfg.schedule.clone());
+    let mut cluster_rng = Rng::new(cfg.seed);
+    let exec_model = ExecTimeModel::new(cfg.env, n, cfg.batch(), &mut cluster_rng);
+    let mut rounds_clock = SyncSchedule::new(exec_model, cluster_rng.fork(1));
+
+    let mut sync = SyncSgd::new(&theta0, n);
+    let total = cfg.total_master_steps();
+    let rounds = (total as usize).div_ceil(n);
+    let eval_every_rounds = if cfg.eval_every_epochs > 0.0 {
+        ((cfg.eval_every_epochs * cfg.schedule.steps_per_epoch as f64) / n as f64).round() as usize
+    } else {
+        0
+    }
+    .max(if cfg.eval_every_epochs > 0.0 { 1 } else { 0 });
+    let loss_sample = (rounds / 200).max(1);
+
+    let mut report = TrainReport {
+        algorithm: "ssgd".to_string(),
+        n_workers: n,
+        ..TrainReport::default()
+    };
+
+    for round in 0..rounds {
+        // LR indexed by consumed batches (round*n) so decay epochs line up
+        // with the async runs.
+        let s = schedule.step_at((round * n) as u64);
+        let mut round_loss = 0.0;
+        for _ in 0..n {
+            let batch = ds.next_train();
+            let (loss, grads) = model.train_step(sync.theta(), batch.input(), &batch.y)?;
+            round_loss += loss as f64;
+            sync.contribute(&grads, s.eta, s.gamma);
+        }
+        rounds_clock.next_round();
+        if round % loss_sample == 0 {
+            report.loss_curve.push(((round * n) as u64, round_loss / n as f64));
+        }
+        if eval_every_rounds > 0 && (round + 1) % eval_every_rounds == 0 {
+            let (l, e) = evaluate(&model, sync.theta(), &eval_set)?;
+            report.curve.push(EvalPoint {
+                epoch: ((round + 1) * n) as f64 / cfg.schedule.steps_per_epoch as f64,
+                test_loss: l,
+                test_error: e,
+                sim_time: rounds_clock.now(),
+            });
+        }
+    }
+
+    let (loss, err) = evaluate(&model, sync.theta(), &eval_set)?;
+    report.final_test_loss = loss;
+    report.final_test_error = err;
+    report.diverged = !loss.is_finite();
+    report.sim_time = rounds_clock.now();
+    report.steps = total;
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(report)
+}

@@ -1,0 +1,184 @@
+//! Micro-benchmark harness (criterion replacement for `cargo bench`).
+//!
+//! Usage inside a `harness = false` bench target:
+//! ```ignore
+//! let mut b = BenchSuite::new("optimizer");
+//! b.bench("dana_zero_apply_100k", || { ... });
+//! b.finish();
+//! ```
+//! Each case is auto-calibrated to a target wall time, then timed over
+//! multiple samples; the report prints mean ± std and throughput when the
+//! case registers a byte count.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Debug, Clone)]
+pub struct CaseResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+    pub bytes_per_iter: Option<u64>,
+}
+
+pub struct BenchSuite {
+    group: String,
+    target_sample: Duration,
+    samples: usize,
+    results: Vec<CaseResult>,
+    filter: Option<String>,
+}
+
+impl BenchSuite {
+    pub fn new(group: &str) -> Self {
+        // `cargo bench -- <filter>` passes the filter as an arg.
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with('-'));
+        BenchSuite {
+            group: group.to_string(),
+            target_sample: Duration::from_millis(
+                std::env::var("BENCH_SAMPLE_MS")
+                    .ok()
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(60),
+            ),
+            samples: std::env::var("BENCH_SAMPLES")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(12),
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    fn skip(&self, name: &str) -> bool {
+        self.filter.as_ref().map(|f| !name.contains(f.as_str())).unwrap_or(false)
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
+        self.bench_with_bytes(name, None, f)
+    }
+
+    /// Benchmark with a bytes-touched-per-iteration figure so the report can
+    /// show effective memory bandwidth (the master loops are BW-bound).
+    pub fn bench_with_bytes<F: FnMut()>(&mut self, name: &str, bytes: Option<u64>, mut f: F) {
+        if self.skip(name) {
+            return;
+        }
+        // Calibrate: how many iters fill one sample window?
+        let mut iters = 1u64;
+        loop {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let el = t.elapsed();
+            if el >= self.target_sample / 4 || iters > 1 << 30 {
+                let scale = (self.target_sample.as_secs_f64() / el.as_secs_f64().max(1e-9))
+                    .clamp(1.0, 1e6);
+                iters = ((iters as f64) * scale).max(1.0) as u64;
+                break;
+            }
+            iters *= 8;
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t.elapsed().as_secs_f64() * 1e9 / iters as f64);
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+            / (times.len() - 1).max(1) as f64;
+        let res = CaseResult {
+            name: name.to_string(),
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            samples: self.samples,
+            iters_per_sample: iters,
+            bytes_per_iter: bytes,
+        };
+        println!("{}", format_result(&self.group, &res));
+        self.results.push(res);
+    }
+
+    /// Print the summary; returns results for programmatic use.
+    pub fn finish(self) -> Vec<CaseResult> {
+        println!(
+            "{}: {} case(s) done",
+            self.group,
+            self.results.len()
+        );
+        self.results
+    }
+}
+
+fn format_result(group: &str, r: &CaseResult) -> String {
+    let human = |ns: f64| -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.2} s", ns / 1e9)
+        }
+    };
+    let mut line = format!(
+        "{group}/{:<40} {:>12} ± {:>10}  (n={} x{})",
+        r.name,
+        human(r.mean_ns),
+        human(r.std_ns),
+        r.samples,
+        r.iters_per_sample
+    );
+    if let Some(bytes) = r.bytes_per_iter {
+        let gbs = bytes as f64 / r.mean_ns; // bytes/ns == GB/s
+        line.push_str(&format!("  {gbs:.2} GB/s"));
+    }
+    line
+}
+
+/// Keep a value alive and opaque to the optimizer.
+pub fn keep<T>(x: T) -> T {
+    black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("BENCH_SAMPLE_MS", "1");
+        std::env::set_var("BENCH_SAMPLES", "3");
+        let mut b = BenchSuite::new("selftest");
+        let mut acc = 0u64;
+        b.bench("add", || {
+            acc = keep(acc.wrapping_add(1));
+        });
+        let res = b.finish();
+        assert_eq!(res.len(), 1);
+        assert!(res[0].mean_ns > 0.0);
+    }
+
+    #[test]
+    fn format_includes_bandwidth() {
+        let r = CaseResult {
+            name: "x".into(),
+            mean_ns: 100.0,
+            std_ns: 1.0,
+            samples: 3,
+            iters_per_sample: 10,
+            bytes_per_iter: Some(400),
+        };
+        let s = format_result("g", &r);
+        assert!(s.contains("GB/s"), "{s}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Dependency-free command-line parsing (clap is not in the offline
+//! registry).  Supports `bin <subcommand> [positional...] [--flag]
+//! [--key value|--key=value]` with typed accessors and an auto-generated
+//! usage error on unknown keys.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I, expect_subcommand: bool) -> anyhow::Result<Args> {
+        let mut a = Args::default();
+        let mut it = it.into_iter().peekable();
+        if expect_subcommand {
+            if let Some(first) = it.peek() {
+                if !first.starts_with('-') {
+                    a.subcommand = it.next();
+                }
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" terminator: rest is positional
+                    a.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    a.opts.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn parse_env(expect_subcommand: bool) -> anyhow::Result<Args> {
+        Self::parse_from(std::env::args().skip(1), expect_subcommand)
+    }
+
+    /// Boolean flag (`--quick`), also honours `--quick=true/false`.
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.known.push(name.to_string());
+        if self.flags.iter().any(|f| f == name) {
+            return true;
+        }
+        matches!(self.opts.get(name).map(String::as_str), Some("true" | "1" | "yes"))
+    }
+
+    pub fn opt_str(&mut self, name: &str) -> Option<String> {
+        self.known.push(name.to_string());
+        self.opts.get(name).cloned()
+    }
+
+    pub fn str_or(&mut self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&mut self, name: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&mut self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list, e.g. `--workers 4,8,16`.
+    pub fn list_or<T: std::str::FromStr>(&mut self, name: &str, default: &[T]) -> anyhow::Result<Vec<T>>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| p.trim().parse::<T>().map_err(|e| anyhow::anyhow!("--{name} item {p:?}: {e}")))
+                .collect(),
+        }
+    }
+
+    /// Error out on any `--option` that no accessor consumed — typo guard.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        for k in self.opts.keys().chain(self.flags.iter()) {
+            if !self.known.iter().any(|n| n == k) {
+                anyhow::bail!(
+                    "unknown option --{k}; known: {}",
+                    self.known.join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, sub: bool) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from), sub).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB: a bare flag directly followed by a positional is ambiguous
+        // (`--quick x.json` reads as --quick=x.json); positionals go first
+        // or the flag uses --quick=true. This is the documented convention.
+        let mut a = parse("train x.json --variant mlp_c10 --workers=8 --quick", true);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_or("variant", ""), "mlp_c10");
+        assert_eq!(a.parse_or::<usize>("workers", 1).unwrap(), 8);
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["x.json"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn flag_with_explicit_value() {
+        let mut a = parse("run --quick=true --deep=false", true);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("deep"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn lists_parse() {
+        let mut a = parse("x --ns 4,8, 16", true);
+        // note: "16" after the space is positional; list only splits the value
+        assert_eq!(a.list_or::<usize>("ns", &[]).unwrap(), vec![4, 8]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let mut a = parse("run --oops 1", true);
+        let _ = a.flag("quick");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn flag_absent_is_false() {
+        let mut a = parse("run", true);
+        assert!(!a.flag("quick"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("run -- --not-an-option", true);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = parse("run", true);
+        assert_eq!(a.parse_or::<f64>("eta", 0.1).unwrap(), 0.1);
+        assert_eq!(a.str_or("mode", "homo"), "homo");
+    }
+}

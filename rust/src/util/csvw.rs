@@ -1,0 +1,83 @@
+//! Tiny CSV writer for experiment results (`results/<id>.csv`).
+
+use std::io::Write;
+use std::path::Path;
+
+pub struct CsvWriter {
+    file: std::fs::File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create `path` (parents included) and write the header row.
+    pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, cols: header.len() })
+    }
+
+    /// Write one row of already-formatted fields.
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.cols,
+            "csv row has {} fields, header has {}",
+            fields.len(),
+            self.cols
+        );
+        let escaped: Vec<String> = fields
+            .iter()
+            .map(|f| {
+                if f.contains(',') || f.contains('"') || f.contains('\n') {
+                    format!("\"{}\"", f.replace('"', "\"\""))
+                } else {
+                    f.clone()
+                }
+            })
+            .collect();
+        writeln!(self.file, "{}", escaped.join(","))?;
+        Ok(())
+    }
+}
+
+/// Format an f64 compactly for CSV cells.
+pub fn fnum(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e12 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join(format!("csvw_test_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "x,\"y\"".into()]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,\"\"y\"\"\"\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let dir = std::env::temp_dir().join(format!("csvw_test2_{}", std::process::id()));
+        let mut w = CsvWriter::create(&dir.join("t.csv"), &["a"]).unwrap();
+        assert!(w.row(&["1".into(), "2".into()]).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fnum_formats() {
+        assert_eq!(fnum(3.0), "3");
+        assert_eq!(fnum(0.125), "0.125000");
+    }
+}

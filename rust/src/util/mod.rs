@@ -1,0 +1,15 @@
+//! Dependency-free substrates: PRNG/distributions, JSON, CLI, statistics,
+//! CSV output, micro-benchmarking and thread parallelism.
+//!
+//! The offline registry only carries the `xla` crate closure, so everything
+//! the usual ecosystem would provide (`rand`, `serde`, `clap`, `criterion`,
+//! `rayon`) is implemented here from scratch, sized to what the paper's
+//! reproduction actually needs.
+
+pub mod bench;
+pub mod cli;
+pub mod csvw;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod stats;

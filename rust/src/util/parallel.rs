@@ -1,0 +1,107 @@
+//! Scoped-thread data parallelism (rayon is not in the offline registry).
+//!
+//! The master's O(k) update loops are memory-bandwidth bound; for the param
+//! sizes in this repo (1e5..1e6 f32) single-thread is usually fastest, but
+//! the chunked helper lets the perf pass measure the crossover and the
+//! benches exercise both paths.
+
+/// Number of worker threads to use by default (cores, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+/// Apply `f(chunk_index, chunk)` to disjoint mutable chunks of `data` in
+/// parallel across `threads` scoped threads.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(i, c));
+        }
+    });
+}
+
+/// Parallel map over items, preserving order.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let chunk = items.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ins, outs) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            let f = &f;
+            s.spawn(move || {
+                for (i, o) in ins.iter().zip(outs.iter_mut()) {
+                    *o = Some(f(i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything() {
+        let mut xs = vec![0u32; 1003];
+        par_chunks_mut(&mut xs, 4, |_, c| {
+            for x in c {
+                *x += 1;
+            }
+        });
+        assert!(xs.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let mut xs = vec![1i64; 10];
+        par_chunks_mut(&mut xs, 1, |i, c| {
+            assert_eq!(i, 0);
+            for x in c {
+                *x *= 3;
+            }
+        });
+        assert_eq!(xs, vec![3i64; 10]);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let xs: Vec<u64> = (0..100).collect();
+        let ys = par_map(&xs, 8, |&x| x * x);
+        assert_eq!(ys, xs.iter().map(|&x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        let mut e: Vec<u8> = vec![];
+        par_chunks_mut(&mut e, 4, |_, _| panic!("must not run"));
+        let out = par_map::<u8, u8, _>(&[], 4, |_| 0);
+        assert!(out.is_empty());
+    }
+}

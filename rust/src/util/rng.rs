@@ -1,0 +1,245 @@
+//! Deterministic PRNG + distribution sampling (no external crates).
+//!
+//! The registry mirror ships only the `xla` closure, so the usual
+//! `rand`/`rand_distr` stack is unavailable; this module provides the three
+//! samplers the paper's evaluation needs:
+//!
+//! * uniform / normal draws for data generation and schedules,
+//! * **gamma** draws for the CVB task-execution-time model (Ali et al. 2000,
+//!   paper Appendix A.4) via Marsaglia–Tsang with the alpha < 1 boost.
+//!
+//! Generator: xoshiro256++ seeded through SplitMix64 — fast, well-tested
+//! constants, and fully reproducible across runs/platforms.
+
+/// xoshiro256++ PRNG with SplitMix64 seeding.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the Box–Muller pair.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (SplitMix64 state expansion).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next_sm = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let s = [next_sm(), next_sm(), next_sm(), next_sm()];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream (for per-worker / per-seed forks).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) (Lemire-style rejection-free for our use).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // 128-bit multiply keeps bias < 2^-64 — negligible for simulation.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (pair-cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // u in (0,1] to keep ln finite.
+        let u = 1.0 - self.uniform();
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * v).sin_cos();
+        self.spare_normal = Some(r * s);
+        r * c
+    }
+
+    /// Normal with given mean/stddev.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Gamma(shape alpha, scale beta) via Marsaglia–Tsang (2000).
+    ///
+    /// For alpha < 1 uses the boost `G(alpha) = G(alpha+1) * U^(1/alpha)`.
+    pub fn gamma(&mut self, alpha: f64, beta: f64) -> f64 {
+        assert!(alpha > 0.0 && beta > 0.0, "gamma params must be positive");
+        if alpha < 1.0 {
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            return self.gamma(alpha + 1.0, beta) * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let (x, v) = loop {
+                let x = self.normal();
+                let v = 1.0 + c * x;
+                if v > 0.0 {
+                    break (x, v * v * v);
+                }
+            };
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * (x * x) * (x * x) {
+                return d * v * beta;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v * beta;
+            }
+        }
+    }
+
+    /// Fill a slice with N(0, std) f32 values.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for o in out.iter_mut() {
+            *o = self.normal_ms(mean as f64, std as f64) as f32;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval_and_centered() {
+        let mut r = Rng::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            m1 += z;
+            m2 += z * z;
+        }
+        let mean = m1 / n as f64;
+        let var = m2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn gamma_moments_match_theory() {
+        // E[G(a, b)] = a*b, Var = a*b^2 — covers both alpha branches.
+        let mut r = Rng::new(13);
+        for &(a, b) in &[(0.5, 2.0), (2.0, 0.5), (100.0, 1.28), (9.0, 3.0)] {
+            let n = 100_000;
+            let (mut m1, mut m2) = (0.0, 0.0);
+            for _ in 0..n {
+                let g = r.gamma(a, b);
+                assert!(g > 0.0);
+                m1 += g;
+                m2 += g * g;
+            }
+            let mean = m1 / n as f64;
+            let var = m2 / n as f64 - mean * mean;
+            assert!((mean / (a * b) - 1.0).abs() < 0.03, "mean a={a} b={b}: {mean}");
+            assert!((var / (a * b * b) - 1.0).abs() < 0.12, "var a={a} b={b}: {var}");
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = r.below(10) as usize;
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Rng::new(9);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let xs: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

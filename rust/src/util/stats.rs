@@ -1,0 +1,142 @@
+//! Small statistics toolkit: summaries, online accumulation, RMSE (the
+//! paper's *gap* metric is an RMSE — Section 3).
+
+/// Streaming mean/variance via Welford's algorithm.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator); 0 for n < 2.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Summary of a sample: mean, std, min, max, median.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize of empty sample");
+    let mut w = Welford::default();
+    let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in xs {
+        w.push(x);
+        min = min.min(x);
+        max = max.max(x);
+    }
+    Summary {
+        n: xs.len(),
+        mean: w.mean(),
+        std: w.std(),
+        min,
+        max,
+        median: quantile(xs, 0.5),
+    }
+}
+
+/// Quantile with linear interpolation (sorts a copy).
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty() && (0.0..=1.0).contains(&q));
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    let pos = q * (s.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// RMSE of a vector — the paper's gap:  G(d) = ||d||_2 / sqrt(k).
+pub fn rmse(d: &[f32]) -> f64 {
+    if d.is_empty() {
+        return 0.0;
+    }
+    let ss: f64 = d.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    (ss / d.len() as f64).sqrt()
+}
+
+/// L2 norm of an f32 slice in f64 accumulation.
+pub fn l2_norm(d: &[f32]) -> f64 {
+    d.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / 5.0;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn rmse_matches_definition() {
+        let d = [3.0f32, 4.0];
+        // ||d|| = 5, k = 2 -> 5/sqrt(2)
+        assert!((rmse(&d) - 5.0 / 2.0f64.sqrt()).abs() < 1e-9);
+        assert_eq!(rmse(&[]), 0.0);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = summarize(&[2.0, 1.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.median, 2.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+}

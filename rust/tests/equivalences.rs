@@ -1,0 +1,301 @@
+//! Algorithmic equivalence obligations from the paper (DESIGN.md §6):
+//! exact identities between update rules, tested end-to-end through the
+//! parameter-server machinery on synthetic objectives (no PJRT needed).
+
+use dana::optim::sgd::{BengioNag, Nag};
+use dana::optim::{make_algorithm, AlgorithmKind, LrSchedule, ScheduleConfig, Step};
+use dana::server::ParameterServer;
+use dana::util::rng::Rng;
+
+const K: usize = 37;
+
+fn flat_schedule(n: usize) -> LrSchedule {
+    LrSchedule::new(ScheduleConfig {
+        base_eta: 0.05,
+        gamma: 0.9,
+        lambda: 1.0,
+        warmup_epochs: 0.0,
+        decay_epochs: vec![],
+        decay_factor: 1.0,
+        steps_per_epoch: 100,
+        n_workers: n,
+        ..ScheduleConfig::default()
+    })
+}
+
+/// Quadratic objective J(x) = 0.5 Σ k_i x_i² with per-coordinate curvature.
+fn quad_grad(theta: &[f32], ks: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(theta.iter().zip(ks).map(|(&t, &k)| k * t));
+}
+
+fn curvatures() -> Vec<f32> {
+    (0..K).map(|i| 0.3 + 0.05 * (i as f32)).collect()
+}
+
+fn theta0() -> Vec<f32> {
+    (0..K).map(|i| ((i * 7 + 3) as f32 * 0.37).sin()).collect()
+}
+
+/// Paper Eq 11 vs Eq 15: DANA-Zero's look-ahead send θ̂ and DANA-Slim's
+/// master parameters Θ are THE SAME VECTOR, so both algorithms send
+/// identical parameters and follow identical trajectories when driven by
+/// the same gradient schedule.
+#[test]
+fn dana_slim_trajectory_equals_dana_zero() {
+    let n = 4;
+    let ks = curvatures();
+    let mut zero = ParameterServer::new(
+        make_algorithm(AlgorithmKind::DanaZero, &theta0(), n),
+        flat_schedule(n),
+        n,
+    );
+    let mut slim = ParameterServer::new(
+        make_algorithm(AlgorithmKind::DanaSlim, &theta0(), n),
+        flat_schedule(n),
+        n,
+    );
+    let mut slim_ws: Vec<_> = (0..n).map(|_| slim.algorithm().make_worker_state()).collect();
+    let mut zero_local = vec![vec![0.0f32; K]; n];
+    let mut slim_local = vec![vec![0.0f32; K]; n];
+    for w in 0..n {
+        zero_local[w].copy_from_slice(zero.pull(w));
+        slim_local[w].copy_from_slice(slim.pull(w));
+        assert_eq!(zero_local[w], slim_local[w], "initial sends differ");
+    }
+    let mut rng = Rng::new(42);
+    let mut g = Vec::new();
+    for step in 0..400 {
+        let w = rng.below(n as u64) as usize;
+        // DANA-Zero worker: compute grad at received θ̂, send raw gradient.
+        quad_grad(&zero_local[w], &ks, &mut g);
+        zero.push(w, &g);
+        zero_local[w].copy_from_slice(zero.pull(w));
+        // DANA-Slim worker: compute grad at received Θ, send γv+g.
+        quad_grad(&slim_local[w], &ks, &mut g);
+        let s = slim.current_step();
+        let mut msg = g.clone();
+        slim.algorithm().worker_message(&mut slim_ws[w], &mut msg, s);
+        slim.push(w, &msg);
+        slim_local[w].copy_from_slice(slim.pull(w));
+
+        for i in 0..K {
+            let a = zero_local[w][i];
+            let b = slim_local[w][i];
+            assert!(
+                (a - b).abs() < 1e-4,
+                "step {step}: sends diverged at [{i}]: {a} vs {b}"
+            );
+        }
+    }
+    // Eq 15 cross-check: Θ_slim = θ_zero − ηγ·v⁰ at rest.
+    let s = Step { eta: 0.05, gamma: 0.9, lambda: 1.0 };
+    let mut hat = vec![0.0f32; K];
+    zero.algorithm_mut().master_send(0, &mut hat, s);
+    for i in 0..K {
+        assert!((hat[i] - slim.theta()[i]).abs() < 1e-4);
+    }
+}
+
+/// Paper Algorithm 5: with one worker the DANA pull→grad→push cycle IS
+/// sequential NAG; and Bengio-NAG matches NAG under Θ = θ − ηγv (Eq 13).
+#[test]
+fn single_worker_dana_is_nag_is_bengio() {
+    let ks = curvatures();
+    let mut server = ParameterServer::new(
+        make_algorithm(AlgorithmKind::DanaZero, &theta0(), 1),
+        flat_schedule(1),
+        1,
+    );
+    let mut nag = Nag::new(&theta0());
+    let mut ben = BengioNag::new(&theta0());
+    let (eta, gamma) = (0.05, 0.9);
+    let mut hat = vec![0.0f32; K];
+    let mut g = Vec::new();
+    for _ in 0..200 {
+        // DANA through the server
+        let sent = server.pull(0).to_vec();
+        quad_grad(&sent, &ks, &mut g);
+        server.push(0, &g);
+        // sequential NAG
+        nag.lookahead_params(&mut hat, eta, gamma);
+        quad_grad(&hat, &ks, &mut g);
+        nag.apply(&g, eta, gamma);
+        // Bengio-NAG
+        quad_grad(&ben.theta.clone(), &ks, &mut g);
+        ben.apply(&g, eta, gamma);
+        for i in 0..K {
+            assert!((server.theta()[i] - nag.theta[i]).abs() < 1e-4);
+            let theta_big = nag.theta[i] - eta * gamma * nag.v[i];
+            assert!((theta_big - ben.theta[i]).abs() < 1e-4);
+        }
+    }
+    // and it converges on the quadratic
+    assert!(dana::math::norm2_sq(server.theta()) < 1e-3);
+}
+
+/// Paper Eq 12: with equal deterministic gradients, DANA's displacement
+/// `E[Δ_{t+τ}] = θ_{t+τ} − θ̂_t` equals ASGD's `−η Σᵢ g_prev(i)`.  The
+/// paper's sums run over all N workers' latest updates (prev(i, t+τ)
+/// *includes the pushing worker's own*), so the displacement is measured
+/// post-apply; in steady round-robin both sides are exactly N·η·g.
+#[test]
+fn eq12_dana_gap_equals_asgd_gap_in_expectation() {
+    let n = 6;
+    let eta = 0.05f64;
+    let g0 = 0.02f64;
+    let constant_grad = vec![g0 as f32; K];
+    let mut gaps = Vec::new();
+    for kind in [AlgorithmKind::Asgd, AlgorithmKind::DanaZero] {
+        let mut ps = ParameterServer::new(
+            make_algorithm(kind, &theta0(), n),
+            flat_schedule(n),
+            n,
+        );
+        let mut sent = vec![vec![0.0f32; K]; n];
+        for w in 0..n {
+            sent[w].copy_from_slice(ps.pull(w));
+        }
+        let mut tail = Vec::new();
+        for step in 0..600usize {
+            let w = step % n;
+            ps.push(w, &constant_grad);
+            // post-apply displacement vs what the worker computed on
+            if step >= 300 {
+                tail.push(dana::util::stats::rmse(
+                    &ps.theta()
+                        .iter()
+                        .zip(&sent[w])
+                        .map(|(a, b)| a - b)
+                        .collect::<Vec<f32>>(),
+                ));
+            }
+            sent[w].copy_from_slice(ps.pull(w));
+        }
+        gaps.push(tail.iter().sum::<f64>() / tail.len() as f64);
+    }
+    let (asgd, dana) = (gaps[0], gaps[1]);
+    let expected = n as f64 * eta * g0; // N·η·g per coordinate
+    assert!(
+        (dana / asgd - 1.0).abs() < 0.05,
+        "Eq 12 violated: ASGD gap {asgd:.3e} vs DANA gap {dana:.3e}"
+    );
+    assert!(
+        (asgd / expected - 1.0).abs() < 0.05,
+        "steady-state magnitude off: {asgd:.3e} vs {expected:.3e}"
+    );
+}
+
+/// NAG-ASGD's gap under the same constant-gradient schedule is ~1/(1-γ)
+/// larger — the momentum inflation DANA removes (Section 3, footnote 2).
+#[test]
+fn nag_asgd_gap_is_momentum_inflated() {
+    let n = 6;
+    let constant_grad = vec![0.02f32; K];
+    let mut gaps = Vec::new();
+    for kind in [AlgorithmKind::Asgd, AlgorithmKind::NagAsgd] {
+        let mut ps = ParameterServer::new(
+            make_algorithm(kind, &theta0(), n),
+            flat_schedule(n),
+            n,
+        );
+        ps.metrics.set_every(1);
+        for w in 0..n {
+            ps.pull(w);
+        }
+        for step in 0..600 {
+            let w = step % n;
+            ps.push(w, &constant_grad);
+            ps.pull(w);
+        }
+        let rows = ps.metrics.rows();
+        let tail = &rows[rows.len() / 2..];
+        gaps.push(tail.iter().map(|r| r.gap).sum::<f64>() / tail.len() as f64);
+    }
+    let ratio = gaps[1] / gaps[0];
+    // gamma = 0.9 -> momentum multiplies steady-state velocity by 10
+    assert!(
+        ratio > 5.0,
+        "NAG-ASGD gap should be ~1/(1-gamma) larger, got {ratio:.2}x"
+    );
+}
+
+/// DANA-DC with λ=0 equals DANA-Zero through the full server stack.
+#[test]
+fn dana_dc_lambda0_is_dana_zero() {
+    let n = 3;
+    let ks = curvatures();
+    let mut sched = flat_schedule(n).config().clone();
+    sched.lambda = 0.0;
+    let mk = |kind| {
+        ParameterServer::new(
+            make_algorithm(kind, &theta0(), n),
+            LrSchedule::new(sched.clone()),
+            n,
+        )
+    };
+    let mut dc = mk(AlgorithmKind::DanaDc);
+    let mut zero = mk(AlgorithmKind::DanaZero);
+    let mut rng = Rng::new(3);
+    let mut g = Vec::new();
+    for w in 0..n {
+        dc.pull(w);
+        zero.pull(w);
+    }
+    for _ in 0..200 {
+        let w = rng.below(n as u64) as usize;
+        let sent = dc.pull(w).to_vec();
+        quad_grad(&sent, &ks, &mut g);
+        dc.push(w, &g);
+        let sent_z = zero.pull(w).to_vec();
+        assert_eq!(sent, sent_z);
+        quad_grad(&sent_z, &ks, &mut g);
+        zero.push(w, &g);
+    }
+    for i in 0..K {
+        assert!((dc.theta()[i] - zero.theta()[i]).abs() < 1e-5);
+    }
+}
+
+/// Momentum correction (Goyal): after an LR decay, a NAG trajectory with
+/// correction matches a fresh NAG started from the same state with the
+/// momentum rescaled — i.e. no velocity overshoot glitch.
+#[test]
+fn momentum_correction_prevents_decay_glitch() {
+    let ks = curvatures();
+    let sched = ScheduleConfig {
+        base_eta: 0.05,
+        gamma: 0.9,
+        lambda: 1.0,
+        warmup_epochs: 0.0,
+        decay_epochs: vec![1.0],
+        decay_factor: 0.1,
+        steps_per_epoch: 50,
+        n_workers: 1,
+        ..ScheduleConfig::default()
+    };
+    let mut with = ParameterServer::new(
+        make_algorithm(AlgorithmKind::NagAsgd, &theta0(), 1),
+        LrSchedule::new(sched.clone()),
+        1,
+    );
+    let mut without = ParameterServer::new(
+        make_algorithm(AlgorithmKind::NagAsgd, &theta0(), 1),
+        LrSchedule::new(sched),
+        1,
+    )
+    .with_momentum_correction(false);
+    let mut g = Vec::new();
+    for ps in [&mut with, &mut without] {
+        for _ in 0..120 {
+            let sent = ps.pull(0).to_vec();
+            quad_grad(&sent, &ks, &mut g);
+            ps.push(0, &g);
+        }
+    }
+    // both converge on a quadratic, but the corrected run must not be worse
+    let jw = dana::math::norm2_sq(with.theta());
+    let jo = dana::math::norm2_sq(without.theta());
+    assert!(jw.is_finite() && jo.is_finite());
+    assert!(jw <= jo * 1.5, "correction made things worse: {jw} vs {jo}");
+}

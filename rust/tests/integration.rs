@@ -1,0 +1,175 @@
+//! Whole-stack integration tests: AOT artifacts → PJRT runtime → trainers.
+//! These need `make artifacts` to have run; they skip (with a note) when
+//! the artifacts directory is absent so `cargo test` stays meaningful in a
+//! fresh checkout.
+
+use dana::config::{default_artifacts_dir, TrainConfig, Workload};
+use dana::optim::AlgorithmKind;
+use dana::runtime::{Engine, Input};
+use dana::train::{baseline, real_async, sim_trainer, ssgd};
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping integration test: run `make artifacts` first");
+        None
+    }
+}
+
+/// The pallas-kernel build and the pure-jnp build of the same architecture
+/// must agree through the rust runtime end-to-end (independent lowerings of
+/// the same math, executed by the same PJRT client).
+#[test]
+fn pallas_and_ref_artifacts_agree_through_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::cpu(&dir).unwrap();
+    let a = engine.load_model("mlp_c10").unwrap();
+    let b = engine.load_model("mlp_c10_ref").unwrap();
+    let params = engine.init_params("mlp_c10").unwrap();
+    let v = engine.manifest().variant("mlp_c10").unwrap();
+    let gx = dana::runtime::manifest::read_f32_file(&v.golden_x).unwrap();
+    let gy = dana::runtime::manifest::read_i32_file(&v.golden_y).unwrap();
+    let (la, ga) = a.train_step(&params, Input::F32(&gx), &gy).unwrap();
+    let (lb, gb) = b.train_step(&params, Input::F32(&gx), &gy).unwrap();
+    assert!((la - lb).abs() < 1e-5, "{la} vs {lb}");
+    for (x, y) in ga.iter().zip(&gb) {
+        assert!((x - y).abs() < 1e-4 + 1e-3 * y.abs());
+    }
+}
+
+/// Same seed → identical simulated run (full determinism of the stack).
+#[test]
+fn sim_training_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::cpu(&dir).unwrap();
+    let mk = || {
+        let mut cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 4, 1.0);
+        cfg.seed = 7;
+        cfg.artifacts_dir = dir.clone();
+        cfg
+    };
+    let a = sim_trainer::run(&mk(), &engine).unwrap();
+    let b = sim_trainer::run(&mk(), &engine).unwrap();
+    assert_eq!(a.final_test_error, b.final_test_error);
+    assert_eq!(a.loss_curve, b.loss_curve);
+    assert_eq!(a.sim_time, b.sim_time);
+}
+
+/// Different seeds → different batch order → different trajectory.
+#[test]
+fn seeds_change_the_run() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::cpu(&dir).unwrap();
+    let mut a_cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 4, 1.0);
+    a_cfg.artifacts_dir = dir.clone();
+    let mut b_cfg = a_cfg.clone();
+    b_cfg.seed = a_cfg.seed + 1;
+    let a = sim_trainer::run(&a_cfg, &engine).unwrap();
+    let b = sim_trainer::run(&b_cfg, &engine).unwrap();
+    assert_ne!(a.loss_curve, b.loss_curve);
+}
+
+/// All four training modes produce a learning signal on the C10 proxy.
+#[test]
+fn all_modes_learn() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::cpu(&dir).unwrap();
+    let mut cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 4, 3.0);
+    cfg.artifacts_dir = dir.clone();
+    let sim = sim_trainer::run(&cfg, &engine).unwrap();
+    assert!(sim.final_test_error < 30.0, "sim: {}", sim.final_test_error);
+    let base = baseline::run(&cfg, &engine).unwrap();
+    assert!(base.final_test_error < 30.0, "baseline: {}", base.final_test_error);
+    let sync = ssgd::run(&cfg, &engine).unwrap();
+    assert!(sync.final_test_error < 30.0, "ssgd: {}", sync.final_test_error);
+    let mut rcfg = cfg.clone();
+    rcfg.epochs = 1.0; // real threads are slower; keep it short
+    let real = real_async::run(&rcfg, &engine).unwrap();
+    assert!(!real.diverged && real.final_test_error < 60.0, "real: {}", real.final_test_error);
+}
+
+/// The paper's headline qualitative claim, end to end: at 16 workers with
+/// momentum, NAG-ASGD falls apart while DANA-Slim stays near the baseline.
+#[test]
+fn dana_beats_nag_asgd_at_scale() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::cpu(&dir).unwrap();
+    let mk = |alg| {
+        let mut cfg = TrainConfig::preset(Workload::C10, alg, 16, 8.0);
+        cfg.artifacts_dir = dir.clone();
+        cfg
+    };
+    let dana = sim_trainer::run(&mk(AlgorithmKind::DanaSlim), &engine).unwrap();
+    let nag = sim_trainer::run(&mk(AlgorithmKind::NagAsgd), &engine).unwrap();
+    assert!(
+        dana.final_test_error + 10.0 < nag.final_test_error,
+        "dana {:.2}% vs nag {:.2}%",
+        dana.final_test_error,
+        nag.final_test_error
+    );
+    assert!(dana.final_test_error < 15.0, "dana degraded: {}", dana.final_test_error);
+}
+
+/// LM workload end-to-end through the simulated trainer (the e2e driver's
+/// assertion, in test form, at reduced length).
+#[test]
+fn lm_workload_descends() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::cpu(&dir).unwrap();
+    let mut cfg = TrainConfig::preset(Workload::LmSmall, AlgorithmKind::DanaSlim, 2, 0.3);
+    cfg.artifacts_dir = dir.clone();
+    let rep = sim_trainer::run(&cfg, &engine).unwrap();
+    assert!(!rep.diverged);
+    assert!(
+        rep.final_test_loss < 4.159,
+        "LM did not descend below ln(64): {}",
+        rep.final_test_loss
+    );
+}
+
+/// The eval path agrees with the golden record for every variant.
+#[test]
+fn eval_goldens_all_variants() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::cpu(&dir).unwrap();
+    for v in engine.manifest().variants.clone() {
+        let m = engine.load_model(&v.name).unwrap();
+        let params = engine.init_params(&v.name).unwrap();
+        let gy = dana::runtime::manifest::read_i32_file(&v.golden_y).unwrap();
+        let (loss, correct) = if v.x_dtype == "f32" {
+            let gx = dana::runtime::manifest::read_f32_file(&v.golden_x).unwrap();
+            m.eval_step(&params, Input::F32(&gx), &gy).unwrap()
+        } else {
+            let gx = dana::runtime::manifest::read_i32_file(&v.golden_x).unwrap();
+            m.eval_step(&params, Input::I32(&gx), &gy).unwrap()
+        };
+        assert!(
+            (loss as f64 - v.golden.eval_loss).abs() < 1e-4,
+            "{}: {loss} vs {}",
+            v.name,
+            v.golden.eval_loss
+        );
+        assert_eq!(correct as f64, v.golden.eval_correct, "{}", v.name);
+    }
+}
+
+/// Shape errors are rejected with a useful message, not a crash.
+#[test]
+fn runtime_rejects_bad_shapes() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::cpu(&dir).unwrap();
+    let m = engine.load_model("mlp_c10_ref").unwrap();
+    let params = engine.init_params("mlp_c10_ref").unwrap();
+    let y = vec![0i32; 128];
+    // wrong x length
+    assert!(m.train_step(&params, Input::F32(&[0.0; 7]), &y).is_err());
+    // wrong dtype
+    assert!(m.train_step(&params, Input::I32(&[0; 128 * 128]), &y).is_err());
+    // wrong param count
+    assert!(m
+        .train_step(&params[..10], Input::F32(&[0.0; 128 * 128]), &y)
+        .is_err());
+}
