@@ -3,10 +3,16 @@
 //! metrics tap.  The paper reports the master saturating around ~20 workers
 //! (§C.1); this bench gives the per-update master cost that bounds it.
 //!
+//! The second half is the sharded-vs-monolithic sweep: the same cycle at
+//! several parameter counts k and shard counts S, reporting effective
+//! memory bandwidth.  Small k is dominated by the scoped-thread fan-out
+//! (monolithic wins); past the crossover the sharded apply's parallel
+//! memory streams win — the table makes the crossover visible.
+//!
 //! Run: cargo bench --bench server [-- <filter>]
 
 use dana::optim::{make_algorithm, AlgorithmKind, LrSchedule, ScheduleConfig};
-use dana::server::ParameterServer;
+use dana::server::{ParameterServer, ShardedParameterServer};
 use dana::util::bench::BenchSuite;
 use dana::util::rng::Rng;
 
@@ -64,6 +70,75 @@ fn main() {
             std::hint::black_box(ps.pull(w));
             w = (w + 1) % N;
         });
+    }
+
+    // Sharded vs. monolithic sweep: same pull→push cycle, k × S grid.
+    // DANA-Zero touches 4 streams on push (θ, vᶦ, v⁰, g) and 3 on pull
+    // (θ, v⁰, sent), ~28 bytes/coordinate per cycle — the bytes figure
+    // makes the bandwidth ceiling comparable across rows.
+    let sweep_n = 4usize;
+    let sweep_schedule = || {
+        LrSchedule::new(ScheduleConfig {
+            steps_per_epoch: 100,
+            n_workers: sweep_n,
+            ..ScheduleConfig::default()
+        })
+    };
+    for &k in &[65_536usize, 1_048_576, 4_194_304] {
+        let mut rng = Rng::new(3);
+        let theta0: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let grad: Vec<f32> = (0..k).map(|_| 0.01 * rng.normal() as f32).collect();
+        let bytes = Some((k * 4 * 7) as u64);
+        let label_k = if k >= 1_048_576 {
+            format!("{}m", k / 1_048_576)
+        } else {
+            format!("{}k", k / 1024)
+        };
+
+        {
+            let mut ps = ParameterServer::new(
+                make_algorithm(AlgorithmKind::DanaZero, &theta0, sweep_n),
+                sweep_schedule(),
+                sweep_n,
+            );
+            for w in 0..sweep_n {
+                ps.pull(w);
+            }
+            let mut w = 0usize;
+            b.bench_with_bytes(&format!("sweep/dana-zero/k={label_k}/mono"), bytes, || {
+                ps.push(w, &grad);
+                std::hint::black_box(ps.pull(w));
+                w = (w + 1) % sweep_n;
+            });
+        }
+
+        for &shards in &[2usize, 4, 8] {
+            let mut ps = ShardedParameterServer::new(
+                AlgorithmKind::DanaZero,
+                &theta0,
+                sweep_schedule(),
+                sweep_n,
+                shards,
+            )
+            .with_threads(shards);
+            // retained pull buffer: measure the server's own memory traffic,
+            // not a per-cycle 4k-byte allocation the mono row doesn't pay
+            let mut buf = vec![0.0f32; k];
+            for w in 0..sweep_n {
+                ps.pull_into_buf(w, &mut buf);
+            }
+            let mut w = 0usize;
+            b.bench_with_bytes(
+                &format!("sweep/dana-zero/k={label_k}/S={shards}"),
+                bytes,
+                || {
+                    ps.push(w, &grad);
+                    ps.pull_into_buf(w, &mut buf);
+                    std::hint::black_box(&buf);
+                    w = (w + 1) % sweep_n;
+                },
+            );
+        }
     }
     b.finish();
 }

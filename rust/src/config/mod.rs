@@ -96,6 +96,9 @@ pub struct TrainConfig {
     pub metrics_every: u64,
     /// Evaluate every n epochs (0 = only at the end).
     pub eval_every_epochs: f64,
+    /// Parameter-server shards S (1 = monolithic master; >1 splits θ and
+    /// all per-worker state into S contiguous shards applied in parallel).
+    pub shards: usize,
 }
 
 impl TrainConfig {
@@ -155,6 +158,7 @@ impl TrainConfig {
             artifacts_dir: default_artifacts_dir(),
             metrics_every: 0,
             eval_every_epochs: 0.0,
+            shards: 1,
         }
     }
 
@@ -233,6 +237,9 @@ impl TrainConfig {
         if let Some(v) = j.get("use_pallas") {
             self.use_pallas = v.as_bool().ok_or_else(|| anyhow::anyhow!("bad use_pallas"))?;
         }
+        if let Some(v) = j.get("shards") {
+            self.shards = v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shards"))?;
+        }
         Ok(())
     }
 
@@ -274,8 +281,9 @@ mod tests {
     #[test]
     fn json_overrides_apply() {
         let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
+        assert_eq!(c.shards, 1, "preset must default to the monolithic master");
         let j = Json::parse(
-            r#"{"algorithm":"nag-asgd","n_workers":16,"env":"hetero","gamma":0.95}"#,
+            r#"{"algorithm":"nag-asgd","n_workers":16,"env":"hetero","gamma":0.95,"shards":8}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -284,6 +292,7 @@ mod tests {
         assert_eq!(c.schedule.n_workers, 16);
         assert_eq!(c.env, Environment::Heterogeneous);
         assert_eq!(c.schedule.gamma, 0.95);
+        assert_eq!(c.shards, 8);
     }
 
     #[test]

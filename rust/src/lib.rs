@@ -5,10 +5,11 @@
 //!
 //! * **Layer 3 (this crate)** — the asynchronous parameter-server
 //!   coordinator: every update rule evaluated in the paper
-//!   ([`optim`]), the parameter server with gap/lag instrumentation
-//!   ([`server`]), the gamma execution-time cluster simulator ([`sim`]),
-//!   training drivers ([`train`]) and the experiment harness that
-//!   regenerates each paper table/figure ([`experiments`]).
+//!   ([`optim`]), the parameter server with gap/lag instrumentation —
+//!   monolithic and sharded/lock-striped layouts behind one [`server::Master`]
+//!   interface ([`server`]), the gamma execution-time cluster simulator
+//!   ([`sim`]), training drivers ([`train`]) and the experiment harness
+//!   that regenerates each paper table/figure ([`experiments`]).
 //! * **Layer 2/1 (python, build-time)** — JAX models whose dense hot paths
 //!   are Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //! * **Runtime bridge** — [`runtime`] loads the artifacts through the PJRT

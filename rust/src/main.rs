@@ -32,7 +32,7 @@ const USAGE: &str = "usage: dana <train|experiment|simulate|info> [options]
   train      --algorithm A --workers N [--workload c10|wrn_c10|c100|imagenet|lm]
              [--epochs E] [--env homo|hetero] [--mode sim|real|ssgd|baseline]
              [--seed S] [--eta X] [--gamma X] [--metrics-every K]
-             [--config file.json] [--use-pallas] [--artifacts DIR]
+             [--shards S] [--config file.json] [--use-pallas] [--artifacts DIR]
   experiment <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|fig12|fig13|
               table1..table6|all> [--full] [--seeds K] [--out DIR] [--artifacts DIR]
   simulate   --workers N [--env homo|hetero] [--batches-per-worker K] [--batch B]
@@ -84,11 +84,18 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
         cfg.schedule.lambda = l;
     }
     cfg.metrics_every = args.parse_or::<u64>("metrics-every", 0)?;
+    // only override the config-file value when the flag is present
+    if let Some(shards) = args.opt_parse::<usize>("shards")? {
+        cfg.shards = shards.max(1);
+    }
     cfg.use_pallas = args.flag("use-pallas");
     cfg.eval_every_epochs = args.parse_or::<f64>("eval-every", 0.0)?;
     cfg.artifacts_dir = artifacts_dir(args);
     let mode = args.str_or("mode", "sim");
     args.finish()?;
+    if cfg.shards > 1 && matches!(mode.as_str(), "ssgd" | "baseline") {
+        anyhow::bail!("--shards applies only to --mode sim|real (got --mode {mode})");
+    }
 
     let engine = Engine::cpu(&cfg.artifacts_dir)?;
     println!(

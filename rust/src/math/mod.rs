@@ -72,9 +72,10 @@ pub fn norm2_sq(a: &[f32]) -> f64 {
     acc[0] + acc[1] + acc[2] + acc[3] + tail
 }
 
-/// ||a - b||_2 without materializing the difference (gap hot path;
-/// 4-way unrolled, see [`dot`]).
-pub fn sub_norm(a: &[f32], b: &[f32]) -> f64 {
+/// ||a - b||_2^2 without materializing the difference (8-way unrolled,
+/// see [`dot`]).  Additive across contiguous shards: the sharded server
+/// reduces per-shard partials with `+` before the final sqrt.
+pub fn sub_norm_sq(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0.0f64; 8];
     let (ac, ar) = a.split_at(a.len() & !7);
@@ -90,7 +91,12 @@ pub fn sub_norm(a: &[f32], b: &[f32]) -> f64 {
         let d = x as f64 - y as f64;
         tail += d * d;
     }
-    (acc.iter().sum::<f64>() + tail).sqrt()
+    acc.iter().sum::<f64>() + tail
+}
+
+/// ||a - b||_2 without materializing the difference (gap hot path).
+pub fn sub_norm(a: &[f32], b: &[f32]) -> f64 {
+    sub_norm_sq(a, b).sqrt()
 }
 
 /// Momentum accumulate + SGD apply in one pass (Eq 2):
@@ -356,6 +362,16 @@ mod tests {
             .sum::<f64>()
             .sqrt();
         assert!((sub_norm(&a, &b) - naive_sn).abs() < 1e-9 * (1.0 + naive_sn));
+    }
+
+    #[test]
+    fn sub_norm_sq_is_additive_over_shards() {
+        let a = v(101, |i| (i as f32 * 0.37).sin());
+        let b = v(101, |i| (i as f32 * 0.11).cos());
+        let whole = sub_norm_sq(&a, &b);
+        let split = sub_norm_sq(&a[..40], &b[..40]) + sub_norm_sq(&a[40..], &b[40..]);
+        assert!((whole - split).abs() < 1e-12 * (1.0 + whole));
+        assert!((sub_norm(&a, &b) - whole.sqrt()).abs() < 1e-12);
     }
 
     #[test]

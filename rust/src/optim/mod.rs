@@ -60,8 +60,47 @@ pub struct WorkerState {
     pub v: Vec<f32>,
 }
 
+/// Additive whole-vector statistics for the sharded two-phase apply.
+///
+/// Most update rules are purely elementwise, so a contiguous shard of their
+/// state evolves independently and sharding is trivially exact.  YellowFin
+/// is the exception: its tuner consumes global reductions (‖g‖², the
+/// gradient-mean norm, and the realized-momentum projection).  The sharded
+/// server therefore runs a two-phase apply: phase 1 collects these partial
+/// sums per shard ([`Algorithm::apply_stats`]), the server adds them up
+/// (every field is a plain sum over coordinates), and phase 2 applies the
+/// elementwise update with the *global* statistics
+/// ([`Algorithm::master_apply_with`]) — which keeps every shard's scalar
+/// tuner state in lockstep with the monolithic server's.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ApplyStats {
+    /// Σ msg² — squared norm of the incoming message.
+    pub msg_norm2: f64,
+    /// Σ (β·ḡ + (1−β)·msg)² — squared norm of the *post-EMA* gradient mean
+    /// (computable read-only before the EMA state is written).
+    pub g_avg_norm2: f64,
+    /// Σ prev_update · prev_prev_update (realized-momentum numerator).
+    pub prev_dot: f64,
+    /// Σ prev_prev_update² (realized-momentum denominator).
+    pub prev_norm2: f64,
+}
+
+impl ApplyStats {
+    /// Fold another shard's partials into this one (plain sums).
+    pub fn merge(&mut self, other: &ApplyStats) {
+        self.msg_norm2 += other.msg_norm2;
+        self.g_avg_norm2 += other.g_avg_norm2;
+        self.prev_dot += other.prev_dot;
+        self.prev_norm2 += other.prev_norm2;
+    }
+}
+
 /// One asynchronous update rule (master + worker halves).
-pub trait Algorithm: Send {
+///
+/// `Sync` is required so the sharded server can run its read-only phase-1
+/// statistics pass over shards from multiple threads; every implementation
+/// is plain owned data.
+pub trait Algorithm: Send + Sync {
     fn kind(&self) -> AlgorithmKind;
 
     /// Master parameters θ⁰ (what eval reads).
@@ -75,6 +114,36 @@ pub trait Algorithm: Send {
     /// vector this worker received at pull time (the server retains it for
     /// gap accounting; DC-ASGD's compensation term needs it too).
     fn master_apply(&mut self, worker: usize, msg: &[f32], sent: &[f32], s: Step);
+
+    /// True when [`Self::master_apply`] depends on whole-vector reductions,
+    /// i.e. a sharded apply must run the phase-1 statistics pass first.
+    /// Elementwise rules (everything except YellowFin) return false and the
+    /// sharded server skips the pass entirely.
+    fn needs_apply_stats(&self) -> bool {
+        false
+    }
+
+    /// Phase 1 of the sharded apply: additive partial statistics over this
+    /// instance's coordinate range.  Must be read-only; the server sums the
+    /// results across shards before phase 2.
+    fn apply_stats(&self, worker: usize, msg: &[f32], sent: &[f32]) -> ApplyStats {
+        let _ = (worker, msg, sent);
+        ApplyStats::default()
+    }
+
+    /// Phase 2 of the sharded apply: like [`Self::master_apply`] but with
+    /// globally reduced statistics.  Elementwise rules ignore `stats`.
+    fn master_apply_with(
+        &mut self,
+        worker: usize,
+        msg: &[f32],
+        sent: &[f32],
+        s: Step,
+        stats: &ApplyStats,
+    ) {
+        let _ = stats;
+        self.master_apply(worker, msg, sent, s);
+    }
 
     /// Master: write the parameters to send to `worker` into `out`.
     /// Default: the current master parameters (plain ASGD behaviour).
@@ -230,6 +299,32 @@ mod tests {
             assert_eq!(alg.param_count(), 16);
             assert_eq!(alg.theta(), &theta0[..]);
         }
+    }
+
+    #[test]
+    fn default_apply_with_matches_master_apply() {
+        let theta0: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        let mut a = make_algorithm(AlgorithmKind::NagAsgd, &theta0, 2);
+        let mut b = make_algorithm(AlgorithmKind::NagAsgd, &theta0, 2);
+        let g = vec![0.5f32; 8];
+        let sent = theta0.clone();
+        assert!(!a.needs_apply_stats());
+        let stats = a.apply_stats(0, &g, &sent);
+        assert_eq!(stats, ApplyStats::default());
+        a.master_apply_with(0, &g, &sent, Step::default(), &stats);
+        b.master_apply(0, &g, &sent, Step::default());
+        assert_eq!(a.theta(), b.theta());
+    }
+
+    #[test]
+    fn apply_stats_merge_is_fieldwise_sum() {
+        let mut a = ApplyStats { msg_norm2: 1.0, g_avg_norm2: 2.0, prev_dot: 3.0, prev_norm2: 4.0 };
+        let b = ApplyStats { msg_norm2: 0.5, g_avg_norm2: 0.25, prev_dot: -3.0, prev_norm2: 1.0 };
+        a.merge(&b);
+        assert_eq!(
+            a,
+            ApplyStats { msg_norm2: 1.5, g_avg_norm2: 2.25, prev_dot: 0.0, prev_norm2: 5.0 }
+        );
     }
 
     #[test]

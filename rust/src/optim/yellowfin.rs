@@ -25,7 +25,7 @@
 //! defaults.  YellowFin is a *baseline* in this paper — the evaluation
 //! expects it to work at small N and degrade at scale (Tables 2–5).
 
-use super::{Algorithm, AlgorithmKind, Step};
+use super::{Algorithm, AlgorithmKind, ApplyStats, Step};
 use crate::math;
 use std::collections::VecDeque;
 
@@ -95,7 +95,14 @@ impl YellowFin {
         y + 1.0
     }
 
-    fn tune(&mut self, g: &[f32]) {
+    /// One tuner step from globally reduced statistics (see [`ApplyStats`]).
+    ///
+    /// The scalar EMA state evolves from `stats` only, so every shard of a
+    /// sharded server — each fed the same cross-shard sums — tracks the
+    /// identical (μ, lr) trajectory as a monolithic instance.  The
+    /// per-coordinate EMA ḡ is still updated here over this instance's
+    /// slice of the gradient.
+    fn tune_with(&mut self, g: &[f32], stats: &ApplyStats) {
         self.steps += 1;
         let t = self.steps as f64;
         // zero-debiased EMA helper
@@ -104,7 +111,7 @@ impl YellowFin {
             *avg = BETA * *avg + (1.0 - BETA) * x;
         };
 
-        let h = math::norm2_sq(g);
+        let h = stats.msg_norm2;
         if self.h_window.len() == WINDOW {
             self.h_window.pop_front();
         }
@@ -126,10 +133,9 @@ impl YellowFin {
 
         let h_min = (self.h_min_avg / debias).max(1e-12);
         let h_max = (self.h_max_avg / debias).max(h_min);
-        // C = E[||g||^2] - ||E[g]||^2 (debiased, clipped away from 0)
-        let c = (self.g_norm2_avg / debias
-            - math::norm2_sq(&self.g_avg) / (debias * debias))
-            .max(1e-12);
+        // C = E[||g||^2] - ||E[g]||^2 (debiased, clipped away from 0);
+        // ||E[g]||^2 is the post-EMA mean norm from the phase-1 pass.
+        let c = (self.g_norm2_avg / debias - stats.g_avg_norm2 / (debias * debias)).max(1e-12);
         let d = (self.dist_avg / debias).max(1e-12);
 
         // SingleStep: mu from the cubic + the condition-number lower bound.
@@ -146,10 +152,8 @@ impl YellowFin {
 
         // Closed loop: realized total momentum = projection of the latest
         // update onto the previous one; drive mu_alg so total -> target.
-        let denom = math::norm2_sq(&self.prev_prev_update);
-        if denom > 1e-20 {
-            let realized =
-                math::dot(&self.prev_update, &self.prev_prev_update) / denom;
+        if stats.prev_norm2 > 1e-20 {
+            let realized = stats.prev_dot / stats.prev_norm2;
             let err = self.mu - realized;
             self.mu_alg = (self.mu_alg + CLOSED_LOOP_GAIN * err).clamp(0.0, 0.9999);
         } else {
@@ -168,8 +172,42 @@ impl Algorithm for YellowFin {
     }
 
     /// The schedule's eta/gamma are ignored — YellowFin self-tunes.
-    fn master_apply(&mut self, _worker: usize, msg: &[f32], _sent: &[f32], _s: Step) {
-        self.tune(msg);
+    /// Monolithic path: collect the statistics locally, then run the same
+    /// reduced apply the sharded server uses — one code path, one formula.
+    fn master_apply(&mut self, worker: usize, msg: &[f32], sent: &[f32], s: Step) {
+        let stats = self.apply_stats(worker, msg, sent);
+        self.master_apply_with(worker, msg, sent, s, &stats);
+    }
+
+    fn needs_apply_stats(&self) -> bool {
+        true
+    }
+
+    fn apply_stats(&self, _worker: usize, msg: &[f32], _sent: &[f32]) -> ApplyStats {
+        // Post-EMA gradient-mean norm, computed read-only: the phase-2
+        // update will set ḡ' = β·ḡ + (1−β)·g, so Σ ḡ'² is known now.
+        let mut g_avg_norm2 = 0.0f64;
+        for (&a, &x) in self.g_avg.iter().zip(msg) {
+            let next = BETA * a as f64 + (1.0 - BETA) * x as f64;
+            g_avg_norm2 += next * next;
+        }
+        ApplyStats {
+            msg_norm2: math::norm2_sq(msg),
+            g_avg_norm2,
+            prev_dot: math::dot(&self.prev_update, &self.prev_prev_update),
+            prev_norm2: math::norm2_sq(&self.prev_prev_update),
+        }
+    }
+
+    fn master_apply_with(
+        &mut self,
+        _worker: usize,
+        msg: &[f32],
+        _sent: &[f32],
+        _s: Step,
+        stats: &ApplyStats,
+    ) {
+        self.tune_with(msg, stats);
         std::mem::swap(&mut self.prev_prev_update, &mut self.prev_update);
         // v <- mu_alg*v + g ; theta <- theta - lr*v ; record update = -lr*v
         let (mu, lr) = (self.mu_alg as f32, self.lr as f32);

@@ -12,9 +12,66 @@
 //! completion order via [`ParameterServer::push`].
 
 pub mod metrics;
+pub mod sharded;
 
-use crate::optim::{Algorithm, LrSchedule, Step};
+use crate::optim::{make_algorithm, Algorithm, AlgorithmKind, LrSchedule, Step, WorkerState};
 use metrics::{MetricRow, MetricsRecorder};
+pub use sharded::{shard_bounds, ShardedParameterServer};
+
+/// Unified interface over the monolithic and sharded masters, so trainers
+/// are generic over the server layout.  Method names are distinct from the
+/// concrete servers' inherent methods (which keep their richer signatures,
+/// e.g. [`ParameterServer::pull`] returning a borrowed slice).
+pub trait Master: Send {
+    fn algo_kind(&self) -> AlgorithmKind;
+    fn workers(&self) -> usize;
+    /// Master steps applied so far.
+    fn steps_done(&self) -> u64;
+    /// Total parameter count k.
+    fn param_len(&self) -> usize;
+    /// Hyperparameters for the current master step.
+    fn step_now(&self) -> Step;
+    /// Master parameters assembled into one owned vector (for eval).
+    fn theta_vec(&self) -> Vec<f32>;
+    /// Worker pulls parameters (owned copy of what the algorithm sends).
+    fn pull_params(&mut self, worker: usize) -> Vec<f32>;
+    /// Worker pulls parameters into a caller-retained buffer (the sim
+    /// trainer's hot loop reuses one k-length buffer per worker instead of
+    /// allocating every master step).
+    fn pull_into(&mut self, worker: usize, out: &mut [f32]);
+    /// Worker delivers its message; returns the applied [`Step`].
+    fn push_update(&mut self, worker: usize, msg: &[f32]) -> Step;
+    /// Fresh worker-local optimizer state.
+    fn make_worker_state(&self) -> WorkerState;
+    /// Worker-side message transform (DANA-Slim's local momentum).
+    fn worker_transform(&self, ws: &mut WorkerState, grad: &mut [f32], s: Step);
+    fn metrics(&self) -> &MetricsRecorder;
+    fn metrics_mut(&mut self) -> &mut MetricsRecorder;
+}
+
+/// Build a master: monolithic for `n_shards <= 1`, sharded otherwise with
+/// the apply fan-out capped at `threads`.
+pub fn make_master(
+    kind: AlgorithmKind,
+    theta0: &[f32],
+    schedule: LrSchedule,
+    n_workers: usize,
+    n_shards: usize,
+    threads: usize,
+) -> Box<dyn Master> {
+    if n_shards <= 1 {
+        Box::new(ParameterServer::new(
+            make_algorithm(kind, theta0, n_workers),
+            schedule,
+            n_workers,
+        ))
+    } else {
+        Box::new(
+            ShardedParameterServer::new(kind, theta0, schedule, n_workers, n_shards)
+                .with_threads(threads),
+        )
+    }
+}
 
 pub struct ParameterServer {
     alg: Box<dyn Algorithm>,
@@ -138,6 +195,60 @@ impl ParameterServer {
     }
 }
 
+impl Master for ParameterServer {
+    fn algo_kind(&self) -> AlgorithmKind {
+        self.alg.kind()
+    }
+
+    fn workers(&self) -> usize {
+        self.sent.len()
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.master_step
+    }
+
+    fn param_len(&self) -> usize {
+        self.alg.param_count()
+    }
+
+    fn step_now(&self) -> Step {
+        self.schedule.step_at(self.master_step)
+    }
+
+    fn theta_vec(&self) -> Vec<f32> {
+        self.alg.theta().to_vec()
+    }
+
+    fn pull_params(&mut self, worker: usize) -> Vec<f32> {
+        self.pull(worker).to_vec()
+    }
+
+    fn pull_into(&mut self, worker: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.pull(worker));
+    }
+
+    fn push_update(&mut self, worker: usize, msg: &[f32]) -> Step {
+        self.push(worker, msg)
+    }
+
+    fn make_worker_state(&self) -> WorkerState {
+        self.alg.make_worker_state()
+    }
+
+    fn worker_transform(&self, ws: &mut WorkerState, grad: &mut [f32], s: Step) {
+        self.alg.worker_message(ws, grad, s)
+    }
+
+    fn metrics(&self) -> &MetricsRecorder {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut MetricsRecorder {
+        &mut self.metrics
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,6 +321,58 @@ mod tests {
         let rows = ps.metrics.rows();
         assert_eq!(rows[0].gap, 0.0);
         assert!(rows[1].gap > 0.0);
+    }
+
+    #[test]
+    fn master_trait_unifies_both_layouts() {
+        let theta0 = vec![1.0f32; 8];
+        let sched = || {
+            LrSchedule::new(ScheduleConfig {
+                warmup_epochs: 0.0,
+                decay_epochs: vec![],
+                steps_per_epoch: 10,
+                n_workers: 2,
+                ..ScheduleConfig::default()
+            })
+        };
+        for shards in [1usize, 4] {
+            let mut m = make_master(AlgorithmKind::DanaZero, &theta0, sched(), 2, shards, 2);
+            assert_eq!(m.param_len(), 8);
+            assert_eq!(m.workers(), 2);
+            assert_eq!(m.algo_kind(), AlgorithmKind::DanaZero);
+            let p = m.pull_params(0);
+            assert_eq!(p, theta0);
+            m.push_update(0, &[1.0; 8]);
+            assert_eq!(m.steps_done(), 1);
+            assert!(m.theta_vec()[0] < 1.0);
+        }
+    }
+
+    #[test]
+    fn sharded_layouts_match_monolithic_through_the_trait() {
+        let theta0: Vec<f32> = (0..11).map(|i| (i as f32 * 0.7).sin()).collect();
+        let sched = || {
+            LrSchedule::new(ScheduleConfig {
+                warmup_epochs: 0.0,
+                decay_epochs: vec![],
+                steps_per_epoch: 10,
+                n_workers: 2,
+                ..ScheduleConfig::default()
+            })
+        };
+        let mut mono = make_master(AlgorithmKind::DanaDc, &theta0, sched(), 2, 1, 1);
+        let mut shrd = make_master(AlgorithmKind::DanaDc, &theta0, sched(), 2, 3, 2);
+        for step in 0..30 {
+            let w = step % 2;
+            let a = mono.pull_params(w);
+            let b = shrd.pull_params(w);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-6, "step {step}: {x} vs {y}");
+            }
+            let g: Vec<f32> = a.iter().map(|&x| 0.1 * x + 0.01).collect();
+            mono.push_update(w, &g);
+            shrd.push_update(w, &g);
+        }
     }
 
     #[test]

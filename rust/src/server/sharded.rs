@@ -1,0 +1,474 @@
+//! Sharded, lock-striped parameter server — the master's O(k) hot path
+//! split across S contiguous shards and applied in parallel.
+//!
+//! The paper's scaling argument (§4.1, Appendix C.1) is that the master
+//! must stay O(k) per update or it becomes the bottleneck before the
+//! workers do; on a multicore host the next constant-factor lever is
+//! memory parallelism, so this server splits θ and *all* per-worker
+//! auxiliary state — momentum vectors vᶦ, the incremental v⁰, the
+//! retained `sent` copies DC-ASGD needs — into S contiguous shards, each
+//! owned by an independent [`Algorithm`] instance over its coordinate
+//! range.  `push`/`pull` fan the shards out over scoped threads; there is
+//! no shared mutable state between shards, so no locks are taken on the
+//! apply path (lock-striping degenerates to pure ownership).
+//!
+//! **Equivalence contract.**  Every update rule in `optim/` is elementwise
+//! over its state vectors, so a shard restricted to coordinates `[a, b)`
+//! performs bit-for-bit the operations the monolithic server performs on
+//! those coordinates — except for whole-vector *reductions*.  Two appear
+//! in the system:
+//!
+//! * gap/lag metrics: ‖θ−θ_sent‖ and ‖msg‖ are reduced across shards as
+//!   partial sums of squares ([`crate::math::sub_norm_sq`]);
+//! * YellowFin's tuner: handled by the two-phase apply protocol on the
+//!   trait ([`Algorithm::apply_stats`] → merge →
+//!   [`Algorithm::master_apply_with`]), which feeds every shard the same
+//!   globally reduced statistics so all shard-local scalar tuner states
+//!   evolve in lockstep with the monolithic instance.
+//!
+//! The property suite in `rust/tests/properties.rs` pins this contract for
+//! all ten `AlgorithmKind`s × S ∈ {1, 2, 7, 16} to ≤1e-5 relative
+//! tolerance (f64 reassociation across shard boundaries is the only
+//! permitted divergence).
+
+use super::metrics::{MetricRow, MetricsRecorder};
+use super::Master;
+use crate::math;
+use crate::optim::{
+    make_algorithm, Algorithm, AlgorithmKind, ApplyStats, LrSchedule, Step, WorkerState,
+};
+use std::ops::Range;
+
+/// Split `0..k` into `n_shards` contiguous near-equal ranges (lengths
+/// differ by at most one; shard count is clamped to `max(k, 1)` so no
+/// shard is empty for non-trivial k).
+pub fn shard_bounds(k: usize, n_shards: usize) -> Vec<Range<usize>> {
+    let s = n_shards.max(1).min(k.max(1));
+    let base = k / s;
+    let rem = k % s;
+    let mut out = Vec::with_capacity(s);
+    let mut start = 0;
+    for i in 0..s {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, k);
+    out
+}
+
+/// One shard: an algorithm instance over a contiguous coordinate range
+/// plus the per-worker `sent` copies restricted to that range.
+struct Shard {
+    alg: Box<dyn Algorithm>,
+    /// Parameters most recently sent to each worker, this shard's slice.
+    sent: Vec<Vec<f32>>,
+    range: Range<usize>,
+}
+
+/// Sharded drop-in for [`super::ParameterServer`]: same FIFO discipline,
+/// same schedule/momentum-correction/metrics semantics, state split into
+/// [`shard_bounds`] ranges and applied in parallel.
+pub struct ShardedParameterServer {
+    kind: AlgorithmKind,
+    shards: Vec<Shard>,
+    schedule: LrSchedule,
+    /// Master step at which each worker last pulled.
+    pulled_at: Vec<u64>,
+    /// Whether each worker holds valid pulled parameters.
+    has_pulled: Vec<bool>,
+    master_step: u64,
+    last_eta: f32,
+    momentum_correction: bool,
+    /// Scoped-thread fan-out width for push/pull (1 = serial).
+    threads: usize,
+    /// Total parameter count k.
+    k: usize,
+    pub metrics: MetricsRecorder,
+}
+
+impl ShardedParameterServer {
+    pub fn new(
+        kind: AlgorithmKind,
+        theta0: &[f32],
+        schedule: LrSchedule,
+        n_workers: usize,
+        n_shards: usize,
+    ) -> Self {
+        let bounds = shard_bounds(theta0.len(), n_shards);
+        let shards: Vec<Shard> = bounds
+            .iter()
+            .map(|r| Shard {
+                alg: make_algorithm(kind, &theta0[r.clone()], n_workers),
+                sent: vec![vec![0.0; r.len()]; n_workers],
+                range: r.clone(),
+            })
+            .collect();
+        let last_eta = schedule.eta_at(0);
+        ShardedParameterServer {
+            kind,
+            shards,
+            schedule,
+            pulled_at: vec![0; n_workers],
+            has_pulled: vec![false; n_workers],
+            master_step: 0,
+            last_eta,
+            momentum_correction: true,
+            threads: crate::util::parallel::default_threads(),
+            k: theta0.len(),
+            metrics: MetricsRecorder::default(),
+        }
+    }
+
+    /// Cap the scoped-thread fan-out (1 = serial shard loop; useful for
+    /// benchmarking the partition overhead in isolation).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn with_momentum_correction(mut self, on: bool) -> Self {
+        self.momentum_correction = on;
+        self
+    }
+
+    pub fn kind(&self) -> AlgorithmKind {
+        self.kind
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.pulled_at.len()
+    }
+
+    pub fn master_step(&self) -> u64 {
+        self.master_step
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.k
+    }
+
+    pub fn schedule(&self) -> &LrSchedule {
+        &self.schedule
+    }
+
+    /// Hyperparameters for the *current* master step.
+    pub fn current_step(&self) -> Step {
+        self.schedule.step_at(self.master_step)
+    }
+
+    /// Shard `i`'s algorithm instance (tests / introspection).
+    pub fn shard_algorithm(&self, i: usize) -> &dyn Algorithm {
+        self.shards[i].alg.as_ref()
+    }
+
+    /// Assemble the master parameters from all shards.
+    pub fn theta_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k];
+        for sh in &self.shards {
+            out[sh.range.clone()].copy_from_slice(sh.alg.theta());
+        }
+        out
+    }
+
+    /// Worker `worker` pulls parameters: each shard runs its algorithm's
+    /// `master_send` into the retained `sent` slice, in parallel, and the
+    /// slices are assembled into one contiguous vector.
+    pub fn pull(&mut self, worker: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k];
+        self.pull_into_buf(worker, &mut out);
+        out
+    }
+
+    /// Allocation-free pull into a caller-retained k-length buffer.
+    pub fn pull_into_buf(&mut self, worker: usize, out: &mut [f32]) {
+        assert_eq!(
+            out.len(),
+            self.k,
+            "pull buffer length {} != parameter count {}",
+            out.len(),
+            self.k
+        );
+        let s = self.schedule.step_at(self.master_step);
+        {
+            // Pre-split the output buffer into per-shard slots so each
+            // scoped thread owns disjoint destinations.
+            let mut pairs: Vec<(&mut Shard, &mut [f32])> = Vec::with_capacity(self.shards.len());
+            let mut rest: &mut [f32] = out;
+            for sh in self.shards.iter_mut() {
+                let take = std::mem::take(&mut rest);
+                let (slot, remainder) = take.split_at_mut(sh.range.len());
+                pairs.push((sh, slot));
+                rest = remainder;
+            }
+            crate::util::parallel::par_chunks_mut(&mut pairs, self.threads, |_, group| {
+                for (sh, slot) in group.iter_mut() {
+                    let mut buf = std::mem::take(&mut sh.sent[worker]);
+                    sh.alg.master_send(worker, &mut buf, s);
+                    slot.copy_from_slice(&buf);
+                    sh.sent[worker] = buf;
+                }
+            });
+        }
+        self.pulled_at[worker] = self.master_step;
+        self.has_pulled[worker] = true;
+    }
+
+    /// Worker `worker` delivers its message.  Mirrors the monolithic
+    /// server's push exactly: schedule + momentum correction, metric tap
+    /// (reduced across shards), then the (possibly two-phase) apply fanned
+    /// out over shards.  Returns the [`Step`] that was applied.
+    pub fn push(&mut self, worker: usize, msg: &[f32]) -> Step {
+        assert!(
+            self.has_pulled[worker],
+            "worker {worker} pushed before ever pulling"
+        );
+        assert_eq!(
+            msg.len(),
+            self.k,
+            "message length {} != parameter count {}",
+            msg.len(),
+            self.k
+        );
+        let s = self.schedule.step_at(self.master_step);
+        if self.momentum_correction && s.eta != self.last_eta && self.last_eta > 0.0 {
+            let ratio = s.eta / self.last_eta;
+            for sh in self.shards.iter_mut() {
+                sh.alg.rescale_momentum(ratio);
+            }
+        }
+        self.last_eta = s.eta;
+
+        if self.metrics.wants(self.master_step) {
+            let mut gap_sq = 0.0f64;
+            let mut msg_sq = 0.0f64;
+            for sh in &self.shards {
+                gap_sq += math::sub_norm_sq(sh.alg.theta(), &sh.sent[worker]);
+                msg_sq += math::norm2_sq(&msg[sh.range.clone()]);
+            }
+            let kf = self.k as f64;
+            let gap = gap_sq.sqrt() / kf.sqrt();
+            let msg_norm = msg_sq.sqrt();
+            let lag = self.master_step - self.pulled_at[worker];
+            self.metrics.record(MetricRow {
+                step: self.master_step,
+                worker,
+                gap,
+                norm_gap: if msg_norm > 0.0 { gap * kf.sqrt() / msg_norm } else { 0.0 },
+                lag,
+                eta: s.eta,
+                msg_norm,
+            });
+        }
+
+        // Phase 1: whole-vector statistics, reduced across shards.  Only
+        // rules with global reductions (YellowFin) pay for this pass; it is
+        // read-only, so it fans out like phase 2.
+        let mut stats = ApplyStats::default();
+        if self.shards[0].alg.needs_apply_stats() {
+            let partials = crate::util::parallel::par_map(&self.shards, self.threads, |sh| {
+                sh.alg.apply_stats(worker, &msg[sh.range.clone()], &sh.sent[worker])
+            });
+            for partial in &partials {
+                stats.merge(partial);
+            }
+        }
+
+        // Phase 2: elementwise apply, shards in parallel.
+        crate::util::parallel::par_chunks_mut(&mut self.shards, self.threads, |_, group| {
+            for sh in group.iter_mut() {
+                let r = sh.range.clone();
+                sh.alg.master_apply_with(worker, &msg[r], &sh.sent[worker], s, &stats);
+            }
+        });
+        self.master_step += 1;
+        s
+    }
+}
+
+impl Master for ShardedParameterServer {
+    fn algo_kind(&self) -> AlgorithmKind {
+        self.kind
+    }
+
+    fn workers(&self) -> usize {
+        self.n_workers()
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.master_step
+    }
+
+    fn param_len(&self) -> usize {
+        self.k
+    }
+
+    fn step_now(&self) -> Step {
+        self.current_step()
+    }
+
+    fn theta_vec(&self) -> Vec<f32> {
+        ShardedParameterServer::theta_vec(self)
+    }
+
+    fn pull_params(&mut self, worker: usize) -> Vec<f32> {
+        self.pull(worker)
+    }
+
+    fn pull_into(&mut self, worker: usize, out: &mut [f32]) {
+        self.pull_into_buf(worker, out);
+    }
+
+    fn push_update(&mut self, worker: usize, msg: &[f32]) -> Step {
+        self.push(worker, msg)
+    }
+
+    fn make_worker_state(&self) -> WorkerState {
+        // Worker state is full-length, not shard-length: size the momentum
+        // buffer to k when the algorithm keeps one (DANA-Slim).  The
+        // worker-side transform re-sizes on first use anyway, so this only
+        // preserves the monolithic server's eager allocation.
+        let mut ws = self.shards[0].alg.make_worker_state();
+        if !ws.v.is_empty() {
+            ws.v = vec![0.0; self.k];
+        }
+        ws
+    }
+
+    fn worker_transform(&self, ws: &mut WorkerState, grad: &mut [f32], s: Step) {
+        // The worker half is shard-agnostic (it only touches worker-local
+        // state and the full gradient), so any shard's instance serves.
+        self.shards[0].alg.worker_message(ws, grad, s);
+    }
+
+    fn metrics(&self) -> &MetricsRecorder {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut MetricsRecorder {
+        &mut self.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ScheduleConfig;
+
+    fn schedule(n: usize) -> LrSchedule {
+        LrSchedule::new(ScheduleConfig {
+            warmup_epochs: 0.0,
+            decay_epochs: vec![],
+            steps_per_epoch: 10,
+            n_workers: n,
+            ..ScheduleConfig::default()
+        })
+    }
+
+    // shard_bounds partition invariants are pinned by the randomized
+    // property `prop_shard_bounds_partition` in rust/tests/properties.rs.
+
+    #[test]
+    fn pull_push_cycle_advances_master() {
+        let mut ps = ShardedParameterServer::new(
+            AlgorithmKind::Asgd,
+            &[1.0f32; 10],
+            schedule(2),
+            2,
+            3,
+        );
+        let p = ps.pull(0);
+        assert_eq!(p, vec![1.0; 10]);
+        ps.push(0, &[1.0; 10]);
+        assert_eq!(ps.master_step(), 1);
+        assert!(ps.theta_vec()[0] < 1.0);
+        assert_eq!(ps.n_shards(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "pushed before ever pulling")]
+    fn push_without_pull_panics() {
+        let mut ps = ShardedParameterServer::new(
+            AlgorithmKind::Asgd,
+            &[1.0f32; 4],
+            schedule(2),
+            2,
+            2,
+        );
+        ps.push(1, &[0.0; 4]);
+    }
+
+    #[test]
+    fn shard_count_clamps_to_k() {
+        let ps = ShardedParameterServer::new(
+            AlgorithmKind::DanaZero,
+            &[0.5f32; 3],
+            schedule(1),
+            1,
+            16,
+        );
+        assert_eq!(ps.n_shards(), 3);
+        assert_eq!(ps.theta_vec(), vec![0.5; 3]);
+    }
+
+    #[test]
+    fn dana_lookahead_send_spans_shards() {
+        // After one update the look-ahead hat differs from theta on every
+        // coordinate, including across shard boundaries.
+        let k = 9;
+        let mut ps = ShardedParameterServer::new(
+            AlgorithmKind::DanaZero,
+            &vec![0.0f32; k],
+            schedule(2),
+            2,
+            4,
+        );
+        ps.pull(0);
+        ps.push(0, &vec![1.0f32; k]);
+        let theta = ps.theta_vec();
+        let hat = ps.pull(1);
+        for i in 0..k {
+            assert!(
+                (theta[i] - hat[i]).abs() > 0.0,
+                "coordinate {i}: look-ahead did not differ"
+            );
+        }
+    }
+
+    #[test]
+    fn serial_and_threaded_fanout_agree() {
+        let k = 37;
+        let theta0: Vec<f32> = (0..k).map(|i| (i as f32 * 0.3).sin()).collect();
+        let mut a = ShardedParameterServer::new(
+            AlgorithmKind::DanaDc,
+            &theta0,
+            schedule(3),
+            3,
+            5,
+        )
+        .with_threads(1);
+        let mut b = ShardedParameterServer::new(
+            AlgorithmKind::DanaDc,
+            &theta0,
+            schedule(3),
+            3,
+            5,
+        )
+        .with_threads(4);
+        let mut rng = crate::util::rng::Rng::new(9);
+        for step in 0..60 {
+            let w = (step % 3) as usize;
+            let pa = a.pull(w);
+            let pb = b.pull(w);
+            assert_eq!(pa, pb, "sends diverged at step {step}");
+            let g: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * 0.1).collect();
+            a.push(w, &g);
+            b.push(w, &g);
+        }
+        assert_eq!(a.theta_vec(), b.theta_vec());
+    }
+}

@@ -85,6 +85,20 @@ impl AsyncSchedule {
     }
 }
 
+/// The schedule is an infinite stream of completions; the iterator view
+/// lets consumers drive adapters over it (the equivalence property suite
+/// replays one gamma-model worker ordering into several servers).  Note
+/// the inherent [`AsyncSchedule::take`] shadows `Iterator::take` on the
+/// receiver itself — adapt through a borrow (`(&mut s).map(...)`) when the
+/// iterator combinators are wanted.
+impl Iterator for AsyncSchedule {
+    type Item = Completion;
+
+    fn next(&mut self) -> Option<Completion> {
+        Some(self.next_completion())
+    }
+}
+
 /// Synchronous schedule: rounds gated by the slowest worker.
 pub struct SyncSchedule {
     model: ExecTimeModel,
@@ -174,6 +188,17 @@ mod tests {
         }
         let mean_round = total / 200.0;
         assert!(mean_round > 128.0 * 1.1, "mean round {mean_round}");
+    }
+
+    #[test]
+    fn iterator_view_matches_next_completion() {
+        let (m1, r1) = model(Environment::Homogeneous, 4, 21);
+        let (m2, r2) = model(Environment::Homogeneous, 4, 21);
+        let mut a = AsyncSchedule::new(m1, r1);
+        let mut b = AsyncSchedule::new(m2, r2);
+        let via_iter: Vec<Completion> = Iterator::take(&mut a, 50).collect();
+        let via_calls: Vec<Completion> = (0..50).map(|_| b.next_completion()).collect();
+        assert_eq!(via_iter, via_calls);
     }
 
     #[test]

@@ -1,12 +1,20 @@
 //! Real-thread asynchronous training — the §5.4 setup scaled to this host.
 //!
-//! Every worker is an OS thread with its **own PJRT client + compiled
-//! executable** (the `xla` wrapper types are not `Send`, and separate
-//! clients avoid any contention on the execution path — the analogue of
-//! one process per GPU in the paper's Fig 8).  The master thread owns the
-//! [`ParameterServer`] and serves a plain FIFO over an mpsc channel; on
-//! every push it replies with freshly pulled parameters, exactly the
+//! Every worker is an OS thread with its **own** gradient source; the
+//! master thread owns the parameter server (monolithic or sharded, per
+//! `cfg.shards`) and serves a plain FIFO over an mpsc channel; on every
+//! push it replies with freshly pulled parameters, exactly the
 //! pull→compute→push cycle of Algorithm 1.
+//!
+//! The driver is split from the gradient computation so the concurrency
+//! machinery is testable without PJRT:
+//!
+//! * [`run`] wires a PJRT client + compiled executable per worker thread
+//!   (the `xla` wrapper types are not `Send`, and separate clients avoid
+//!   any contention on the execution path — the analogue of one process
+//!   per GPU in the paper's Fig 8);
+//! * [`run_synthetic`] wires a seeded noisy quadratic objective — the
+//!   deterministic concurrency stress harness used by `rust/tests/stress.rs`.
 //!
 //! The worker-side optimizer transform (DANA-Slim's momentum) runs inside
 //! the worker thread via [`WorkerRule`] — state never crosses the channel,
@@ -14,11 +22,12 @@
 
 use crate::config::TrainConfig;
 use crate::math;
-use crate::optim::{make_algorithm, AlgorithmKind, LrSchedule};
+use crate::optim::{AlgorithmKind, LrSchedule};
 use crate::runtime::Engine;
-use crate::server::ParameterServer;
+use crate::server::make_master;
 use crate::train::data_source::{evaluate, DataSource};
 use crate::train::{EvalPoint, TrainReport};
+use crate::util::rng::Rng;
 use std::sync::mpsc;
 
 /// Worker-side message transform, replicated per thread.
@@ -53,6 +62,11 @@ impl WorkerRule {
     }
 }
 
+/// Per-thread gradient source: `params -> (train loss, message)`.
+/// Created *inside* the worker thread (so it may hold non-`Send` handles
+/// like a PJRT client) and never crosses threads.
+pub type StepFn = Box<dyn FnMut(&[f32]) -> anyhow::Result<(f32, Vec<f32>)>>;
+
 enum ToWorker {
     Params(Vec<f32>),
     Stop,
@@ -64,22 +78,105 @@ struct FromWorker {
     loss: f32,
 }
 
-/// Run real-thread asynchronous training. Returns the report plus measured
-/// throughput (master steps / wall second).
+/// Run real-thread asynchronous training against the AOT/PJRT runtime.
 pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
-    let t0 = std::time::Instant::now();
-    let n = cfg.n_workers;
     let variant = cfg.variant_name().to_string();
     let theta0 = engine.init_params(&variant)?;
     let model = engine.load_model(&variant)?; // master's eval copy
     let eval_set = DataSource::for_config(cfg).eval_set();
+    let artifacts = cfg.artifacts_dir.clone();
+    let worker_cfg = cfg.clone();
+    let make_step = move |w: usize| -> anyhow::Result<StepFn> {
+        // Each worker owns a full engine: client + executable.
+        let engine = Engine::cpu(&artifacts)?;
+        let model = engine.load_model(&variant)?;
+        let mut wcfg = worker_cfg.clone();
+        wcfg.seed = worker_cfg.seed.wrapping_add(w as u64 * 7919);
+        let mut ds = DataSource::for_config(&wcfg);
+        Ok(Box::new(move |params: &[f32]| {
+            // keep the client alive for the executable's whole lifetime
+            let _ = &engine;
+            let batch = ds.next_train();
+            model.train_step(params, batch.input(), &batch.y)
+        }) as StepFn)
+    };
+    run_core(cfg, &theta0, &make_step, |theta| {
+        evaluate(&model, theta, &eval_set)
+    })
+}
 
-    let mut server = ParameterServer::new(
-        make_algorithm(cfg.algorithm, &theta0, n),
+/// Deterministic starting point for the synthetic objective.
+pub fn synthetic_theta0(k: usize) -> Vec<f32> {
+    (0..k).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect()
+}
+
+/// Per-coordinate curvatures of the synthetic quadratic (spread over a
+/// 4x condition range so momentum actually matters).
+pub fn synthetic_curvature(k: usize) -> Vec<f32> {
+    (0..k).map(|i| 0.25 + 0.5 * ((i % 8) as f32) / 8.0).collect()
+}
+
+/// Mean quadratic loss `J(θ) = ½·mean(cᵢ·θᵢ²)` of the synthetic objective.
+pub fn synthetic_loss(theta: &[f32], curv: &[f32]) -> f64 {
+    let mut loss = 0.0f64;
+    for (&t, &c) in theta.iter().zip(curv) {
+        loss += 0.5 * c as f64 * t as f64 * t as f64;
+    }
+    loss / theta.len().max(1) as f64
+}
+
+/// Run real-thread asynchronous training on a seeded noisy quadratic —
+/// no PJRT, no artifacts.  Exercises the full channel/threading/server
+/// machinery; the reported test loss is [`synthetic_loss`] at the master
+/// parameters (test error is a bounded percent proxy of the same).
+pub fn run_synthetic(cfg: &TrainConfig, k: usize) -> anyhow::Result<TrainReport> {
+    anyhow::ensure!(k > 0, "synthetic workload needs k > 0");
+    let theta0 = synthetic_theta0(k);
+    let curv = synthetic_curvature(k);
+    let seed = cfg.seed;
+    let make_step = {
+        let curv = curv.clone();
+        move |w: usize| -> anyhow::Result<StepFn> {
+            let curv = curv.clone();
+            let mut rng = Rng::new(seed ^ (w as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+            Ok(Box::new(move |params: &[f32]| {
+                let mut g = vec![0.0f32; params.len()];
+                for ((g, &p), &c) in g.iter_mut().zip(params).zip(&curv) {
+                    *g = c * p + 0.01 * rng.normal() as f32;
+                }
+                Ok((synthetic_loss(params, &curv) as f32, g))
+            }) as StepFn)
+        }
+    };
+    run_core(cfg, &theta0, &make_step, move |theta| {
+        let loss = synthetic_loss(theta, &curv);
+        Ok((loss, 100.0 * loss / (1.0 + loss)))
+    })
+}
+
+/// The generic driver: spawns `cfg.n_workers` threads, each built by
+/// `make_step`, and runs the master FIFO for `cfg.total_master_steps()`
+/// pushes.  `eval` maps master parameters to `(test loss, test error %)`.
+fn run_core<F>(
+    cfg: &TrainConfig,
+    theta0: &[f32],
+    make_step: &F,
+    mut eval: impl FnMut(&[f32]) -> anyhow::Result<(f64, f64)>,
+) -> anyhow::Result<TrainReport>
+where
+    F: Fn(usize) -> anyhow::Result<StepFn> + Sync,
+{
+    let t0 = std::time::Instant::now();
+    let n = cfg.n_workers;
+    let mut server = make_master(
+        cfg.algorithm,
+        theta0,
         LrSchedule::new(cfg.schedule.clone()),
         n,
+        cfg.shards,
+        crate::util::parallel::default_threads(),
     );
-    server.metrics.set_every(cfg.metrics_every);
+    server.metrics_mut().set_every(cfg.metrics_every);
     let rule = WorkerRule::for_algorithm(cfg.algorithm);
     let gamma = cfg.schedule.gamma;
 
@@ -87,7 +184,6 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
     let mut to_workers: Vec<mpsc::Sender<ToWorker>> = Vec::with_capacity(n);
 
     let total = cfg.total_master_steps();
-    let artifacts = cfg.artifacts_dir.clone();
     let mut report = TrainReport {
         algorithm: cfg.algorithm.name().to_string(),
         n_workers: n,
@@ -104,35 +200,21 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
             let (tx_w, rx_w) = mpsc::channel::<ToWorker>();
             to_workers.push(tx_w);
             let tx_master = tx_master.clone();
-            let mut wcfg = cfg.clone();
-            wcfg.seed = cfg.seed.wrapping_add(w as u64 * 7919);
-            let variant = variant.clone();
-            let artifacts = artifacts.clone();
             scope.spawn(move || {
-                // Each worker owns a full engine: client + executable.
-                let engine = match Engine::cpu(&artifacts) {
-                    Ok(e) => e,
+                let mut step = match make_step(w) {
+                    Ok(s) => s,
                     Err(e) => {
-                        eprintln!("worker {w}: engine init failed: {e}");
+                        eprintln!("worker {w}: init failed: {e}");
                         return;
                     }
                 };
-                let model = match engine.load_model(&variant) {
-                    Ok(m) => m,
-                    Err(e) => {
-                        eprintln!("worker {w}: load failed: {e}");
-                        return;
-                    }
-                };
-                let mut ds = DataSource::for_config(&wcfg);
                 let mut v_local: Vec<f32> = vec![];
                 while let Ok(ToWorker::Params(params)) = rx_w.recv() {
-                    let batch = ds.next_train();
-                    match model.train_step(&params, batch.input(), &batch.y) {
-                        Ok((loss, mut grads)) => {
-                            rule.apply(&mut v_local, &mut grads, gamma);
+                    match step(&params) {
+                        Ok((loss, mut msg)) => {
+                            rule.apply(&mut v_local, &mut msg, gamma);
                             if tx_master
-                                .send(FromWorker { worker: w, msg: grads, loss })
+                                .send(FromWorker { worker: w, msg, loss })
                                 .is_err()
                             {
                                 break;
@@ -149,9 +231,9 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
         drop(tx_master);
 
         // Kick off: every worker gets initial (pulled) parameters.
-        for w in 0..n {
-            let p = server.pull(w).to_vec();
-            to_workers[w].send(ToWorker::Params(p)).ok();
+        for (w, tx) in to_workers.iter().enumerate() {
+            let p = server.pull_params(w);
+            tx.send(ToWorker::Params(p)).ok();
         }
 
         let loss_sample = (total / 200).max(1);
@@ -159,19 +241,20 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
             let FromWorker { worker, msg, loss } = rx_master
                 .recv()
                 .map_err(|_| anyhow::anyhow!("all workers died before step {step}"))?;
+            debug_assert_eq!(server.steps_done(), step, "master step not monotone");
             if step % loss_sample == 0 {
                 report.loss_curve.push((step, loss as f64));
             }
             if !loss.is_finite() {
                 report.diverged = true;
             }
-            server.push(worker, &msg);
+            server.push_update(worker, &msg);
             if step + 1 < total {
-                let p = server.pull(worker).to_vec();
+                let p = server.pull_params(worker);
                 to_workers[worker].send(ToWorker::Params(p)).ok();
             }
             if eval_every > 0 && (step + 1) % eval_every == 0 {
-                let (l, e) = evaluate(&model, server.theta(), &eval_set)?;
+                let (l, e) = eval(&server.theta_vec())?;
                 report.curve.push(EvalPoint {
                     epoch: (step + 1) as f64 / cfg.schedule.steps_per_epoch as f64,
                     test_loss: l,
@@ -186,15 +269,15 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
         Ok(())
     })?;
 
-    let (loss, err) = evaluate(&model, server.theta(), &eval_set)?;
+    let (loss, err) = eval(&server.theta_vec())?;
     report.final_test_loss = loss;
     report.final_test_error = err;
     if !loss.is_finite() {
         report.diverged = true;
         report.final_test_error = 100.0;
     }
-    report.mean_gap = server.metrics.mean_gap();
-    report.mean_lag = server.metrics.mean_lag();
+    report.mean_gap = server.metrics().mean_gap();
+    report.mean_lag = server.metrics().mean_lag();
     report.steps = total;
     report.wall_secs = t0.elapsed().as_secs_f64();
     report.sim_time = report.wall_secs; // real time is the clock here

@@ -6,11 +6,16 @@
 //! seed sees the identical completion schedule and batch stream, which is
 //! exactly the controlled comparison the paper runs ("all algorithms share
 //! the same worker update schedules and therefore have an identical lag").
+//!
+//! The master is built through [`make_master`], so `cfg.shards > 1` runs
+//! the same experiment against the sharded, lock-striped server — the
+//! equivalence suite guarantees an identical trajectory up to f32
+//! reassociation.
 
 use crate::config::TrainConfig;
-use crate::optim::{make_algorithm, LrSchedule, WorkerState};
+use crate::optim::LrSchedule;
 use crate::runtime::Engine;
-use crate::server::ParameterServer;
+use crate::server::make_master;
 use crate::sim::{AsyncSchedule, ExecTimeModel};
 use crate::train::data_source::{evaluate, DataSource};
 use crate::train::{EvalPoint, TrainReport};
@@ -25,12 +30,15 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
     let eval_set = ds.eval_set();
 
     let n = cfg.n_workers;
-    let mut server = ParameterServer::new(
-        make_algorithm(cfg.algorithm, &theta0, n),
+    let mut server = make_master(
+        cfg.algorithm,
+        &theta0,
         LrSchedule::new(cfg.schedule.clone()),
         n,
+        cfg.shards,
+        crate::util::parallel::default_threads(),
     );
-    server.metrics.set_every(cfg.metrics_every);
+    server.metrics_mut().set_every(cfg.metrics_every);
 
     let mut cluster_rng = Rng::new(cfg.seed);
     let exec_model = ExecTimeModel::new(cfg.env, n, cfg.batch(), &mut cluster_rng);
@@ -38,10 +46,10 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
 
     // Worker-local state: pulled parameters + optimizer state (DANA-Slim).
     let mut local: Vec<Vec<f32>> = Vec::with_capacity(n);
-    let mut wstate: Vec<WorkerState> = Vec::with_capacity(n);
+    let mut wstate: Vec<_> = Vec::with_capacity(n);
     for w in 0..n {
-        local.push(server.pull(w).to_vec());
-        wstate.push(server.algorithm().make_worker_state());
+        local.push(server.pull_params(w));
+        wstate.push(server.make_worker_state());
     }
 
     let total = cfg.total_master_steps();
@@ -49,8 +57,7 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
         (cfg.eval_every_epochs * cfg.schedule.steps_per_epoch as f64).round() as u64
     } else {
         0
-    }
-    .max(0);
+    };
     let loss_sample = (total / 200).max(1);
 
     let mut report = TrainReport {
@@ -72,17 +79,15 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
         if !loss.is_finite() {
             report.diverged = true;
         }
-        let s = server.current_step();
-        server
-            .algorithm()
-            .worker_message(&mut wstate[w], &mut msg, s);
-        server.push(w, &msg);
-        // Immediately pull fresh parameters for the next batch.
-        let pulled = server.pull(w);
-        local[w].copy_from_slice(pulled);
+        let s = server.step_now();
+        server.worker_transform(&mut wstate[w], &mut msg, s);
+        server.push_update(w, &msg);
+        // Immediately pull fresh parameters for the next batch (into the
+        // retained per-worker buffer — no per-step allocation).
+        server.pull_into(w, &mut local[w]);
 
         if eval_every > 0 && (step + 1) % eval_every == 0 {
-            let (loss, err) = evaluate(&model, server.theta(), &eval_set)?;
+            let (loss, err) = evaluate(&model, &server.theta_vec(), &eval_set)?;
             if !loss.is_finite() {
                 report.diverged = true;
             }
@@ -95,7 +100,7 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
         }
     }
 
-    let (loss, err) = evaluate(&model, server.theta(), &eval_set)?;
+    let (loss, err) = evaluate(&model, &server.theta_vec(), &eval_set)?;
     report.final_test_loss = loss;
     report.final_test_error = err;
     if !loss.is_finite() {
@@ -103,9 +108,9 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
         // Paper convention: a diverged run scores chance accuracy.
         report.final_test_error = 100.0;
     }
-    report.mean_gap = server.metrics.mean_gap();
-    report.mean_lag = server.metrics.mean_lag();
-    for r in server.metrics.rows() {
+    report.mean_gap = server.metrics().mean_gap();
+    report.mean_lag = server.metrics().mean_lag();
+    for r in server.metrics().rows() {
         report.gap_curve.push((r.step, r.gap));
         report.norm_gap_curve.push((r.step, r.norm_gap));
         report.grad_norm_curve.push((r.step, r.msg_norm));

@@ -157,6 +157,18 @@ mod tests {
     }
 
     #[test]
+    fn shards_flag_round_trips() {
+        // the `dana train --shards S` spelling used by the sharded master
+        let mut a = parse("train --shards 7 --workers=8", true);
+        assert_eq!(a.parse_or::<usize>("shards", 1).unwrap(), 7);
+        assert_eq!(a.parse_or::<usize>("workers", 1).unwrap(), 8);
+        a.finish().unwrap();
+        // default when absent
+        let mut b = parse("train", true);
+        assert_eq!(b.parse_or::<usize>("shards", 1).unwrap(), 1);
+    }
+
+    #[test]
     fn unknown_option_rejected() {
         let mut a = parse("run --oops 1", true);
         let _ = a.flag("quick");

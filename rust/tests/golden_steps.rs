@@ -1,0 +1,183 @@
+//! Golden single-step unit tests: for each of the ten `AlgorithmKind`s,
+//! a hand-computed `master_apply` / `master_send` step on a tiny θ (k = 4)
+//! asserting the exact expected vectors, so optimizer regressions are
+//! caught at the unit level before any trajectory-level test fires.
+//!
+//! All constants are small powers of two (η = γ = λ = 1/2, inputs in
+//! {0, ±1/2, ±1, ±2}) so every product and sum below is exactly
+//! representable in f32 — the asserts are **exact**, not tolerance-based
+//! (except YellowFin, whose self-tuned learning rate is checked
+//! structurally against the tuner's own output).
+
+use dana::optim::easgd::Easgd;
+use dana::optim::{make_algorithm, Algorithm, AlgorithmKind, Step};
+
+const K: usize = 4;
+
+fn s() -> Step {
+    Step { eta: 0.5, gamma: 0.5, lambda: 0.5 }
+}
+
+fn theta0() -> Vec<f32> {
+    vec![1.0, 2.0, -1.0, 0.5]
+}
+
+fn grad() -> Vec<f32> {
+    vec![1.0, -1.0, 2.0, 0.0]
+}
+
+/// `sent` differing from θ by [0.5, 0, 1, 0] — exercises the DC term.
+fn sent() -> Vec<f32> {
+    vec![0.5, 2.0, -2.0, 0.5]
+}
+
+#[test]
+fn golden_asgd() {
+    // θ' = θ − η·g = [1−0.5, 2+0.5, −1−1, 0.5]
+    let mut a = make_algorithm(AlgorithmKind::Asgd, &theta0(), 2);
+    a.master_apply(0, &grad(), &sent(), s());
+    assert_eq!(a.theta(), &[0.5, 2.5, -2.0, 0.5]);
+}
+
+#[test]
+fn golden_dana_slim_master_is_asgd() {
+    // The master half is byte-identical to ASGD (Algorithm 6).
+    let mut a = make_algorithm(AlgorithmKind::DanaSlim, &theta0(), 2);
+    a.master_apply(0, &grad(), &sent(), s());
+    assert_eq!(a.theta(), &[0.5, 2.5, -2.0, 0.5]);
+}
+
+#[test]
+fn golden_dana_slim_worker_message() {
+    // v' = γ·0 + g = g ;  msg = γ·v' + g = 1.5·g   (Alg 6 send)
+    let a = make_algorithm(AlgorithmKind::DanaSlim, &theta0(), 2);
+    let mut ws = a.make_worker_state();
+    let mut msg = grad();
+    a.worker_message(&mut ws, &mut msg, s());
+    assert_eq!(ws.v, grad());
+    assert_eq!(msg, vec![1.5, -1.5, 3.0, 0.0]);
+}
+
+#[test]
+fn golden_nag_asgd_two_steps() {
+    // Shared v (Algorithm 8).  Step 1: v = g, θ = θ0 − 0.5·g.
+    // Step 2 (same g, other worker): v = 0.5·g + g = 1.5·g,
+    //   θ = [0.5, 2.5, −2, 0.5] − 0.5·1.5·g = [−0.25, 3.25, −3.5, 0.5].
+    let mut a = make_algorithm(AlgorithmKind::NagAsgd, &theta0(), 2);
+    a.master_apply(0, &grad(), &sent(), s());
+    assert_eq!(a.theta(), &[0.5, 2.5, -2.0, 0.5]);
+    a.master_apply(1, &grad(), &sent(), s());
+    assert_eq!(a.theta(), &[-0.25, 3.25, -3.5, 0.5]);
+}
+
+#[test]
+fn golden_multi_asgd_two_steps() {
+    // Per-worker v (Algorithm 9): worker 1's v starts at 0, so the second
+    // apply is NOT momentum-inflated: θ = [0.5, 2.5, −2, 0.5] − 0.5·g.
+    let mut a = make_algorithm(AlgorithmKind::MultiAsgd, &theta0(), 2);
+    a.master_apply(0, &grad(), &sent(), s());
+    assert_eq!(a.theta(), &[0.5, 2.5, -2.0, 0.5]);
+    a.master_apply(1, &grad(), &sent(), s());
+    assert_eq!(a.theta(), &[0.0, 3.0, -3.0, 0.5]);
+}
+
+#[test]
+fn golden_dc_asgd() {
+    // ĝ = g + λ·g⊙g⊙(θ−sent)  with θ−sent = [0.5, 0, 1, 0]:
+    //   ĝ = [1 + 0.5·1·0.5, −1 + 0, 2 + 0.5·4·1, 0] = [1.25, −1, 4, 0]
+    // v = ĝ ; θ' = θ − 0.5·ĝ = [0.375, 2.5, −3, 0.5].
+    let mut a = make_algorithm(AlgorithmKind::DcAsgd, &theta0(), 1);
+    a.master_apply(0, &grad(), &sent(), s());
+    assert_eq!(a.theta(), &[0.375, 2.5, -3.0, 0.5]);
+}
+
+#[test]
+fn golden_lwp() {
+    // Apply: shared v = g, θ = θ0 − 0.5·g (Algorithm 3).
+    // Send with τ = N = 4: θ̂ = θ − τ·η·v = θ − 2·g = [−1.5, 4.5, −6, 0.5].
+    let mut a = make_algorithm(AlgorithmKind::Lwp, &theta0(), 4);
+    a.master_apply(0, &grad(), &sent(), s());
+    assert_eq!(a.theta(), &[0.5, 2.5, -2.0, 0.5]);
+    let mut hat = vec![0.0f32; K];
+    a.master_send(0, &mut hat, s());
+    assert_eq!(hat, vec![-1.5, 4.5, -6.0, 0.5]);
+}
+
+#[test]
+fn golden_dana_zero() {
+    // Apply (Eq 10 + A.2): v⁰ = g, θ = θ0 − 0.5·g, v_sum = g.
+    // Send (Eq 11): θ̂ = θ − η·γ·v_sum = θ − 0.25·g = [0.25, 2.75, −2.5, 0.5].
+    let mut a = make_algorithm(AlgorithmKind::DanaZero, &theta0(), 2);
+    a.master_apply(0, &grad(), &sent(), s());
+    assert_eq!(a.theta(), &[0.5, 2.5, -2.0, 0.5]);
+    let mut hat = vec![0.0f32; K];
+    a.master_send(0, &mut hat, s());
+    assert_eq!(hat, vec![0.25, 2.75, -2.5, 0.5]);
+}
+
+#[test]
+fn golden_dana_dc() {
+    // ĝ = [1.25, −1, 4, 0] (as DC-ASGD), then the DANA bookkeeping:
+    //   v⁰ = ĝ ; θ' = θ − 0.5·ĝ = [0.375, 2.5, −3, 0.5] ; v_sum = ĝ.
+    // Send: θ̂ = θ' − 0.25·v_sum = [0.0625, 2.75, −4, 0.5].
+    let mut a = make_algorithm(AlgorithmKind::DanaDc, &theta0(), 2);
+    a.master_apply(0, &grad(), &sent(), s());
+    assert_eq!(a.theta(), &[0.375, 2.5, -3.0, 0.5]);
+    let mut hat = vec![0.0f32; K];
+    a.master_send(0, &mut hat, s());
+    assert_eq!(hat, vec![0.0625, 2.75, -4.0, 0.5]);
+}
+
+#[test]
+fn golden_easgd() {
+    // α = 1/4 (exact).  Worker replica: v = g, x = θ0 − 0.5·g = [0.5, 2.5, −2, 0.5].
+    // Elastic exchange against the center c = θ0:
+    //   d = α(x − c) = 0.25·[−0.5, 0.5, −1, 0] = [−0.125, 0.125, −0.25, 0]
+    //   x' = x − d = [0.625, 2.375, −1.75, 0.5]
+    //   c' = c + d = [0.875, 2.125, −1.25, 0.5]
+    let mut a = Easgd::new(&theta0(), 2).with_alpha(0.25);
+    a.master_apply(0, &grad(), &sent(), s());
+    assert_eq!(a.theta(), &[0.875, 2.125, -1.25, 0.5]);
+    assert_eq!(a.replica(0), &[0.625, 2.375, -1.75, 0.5]);
+    // Worker 1's replica is untouched and is what worker 1 receives.
+    let mut out = vec![0.0f32; K];
+    a.master_send(1, &mut out, s());
+    assert_eq!(out, theta0());
+}
+
+#[test]
+fn golden_yellowfin_first_step() {
+    // YellowFin ignores the schedule and self-tunes, so the golden check
+    // is structural: with zero initial momentum the first applied update
+    // is exactly θ' = θ0 − lr·g where lr is the tuner's post-step output,
+    // and the paper-§5 initialization bounds it near 1e-4.
+    let mut a = make_algorithm(AlgorithmKind::YellowFin, &theta0(), 1);
+    a.master_apply(0, &grad(), &sent(), s());
+    assert_eq!(a.kind(), AlgorithmKind::YellowFin);
+    // recover lr from the only zero-gradient coordinate staying fixed and
+    // a moved coordinate; then check all coordinates against θ0 − lr·g.
+    let th = a.theta();
+    let t0 = theta0();
+    let g = grad();
+    assert_eq!(th[3], t0[3], "zero-gradient coordinate must not move");
+    let lr = (t0[0] - th[0]) / g[0];
+    assert!(
+        lr > 9.0e-5 && lr < 5.0e-3,
+        "first-step lr {lr} outside the tuner's plausible band"
+    );
+    for i in 0..K {
+        let want = t0[i] - lr * g[i];
+        assert!(
+            (th[i] - want).abs() <= 1e-6 * (1.0 + want.abs()),
+            "coordinate {i}: {} vs {want}",
+            th[i]
+        );
+    }
+}
+
+/// The factory and the golden steps above cover every kind; this guard
+/// fails if a new AlgorithmKind is added without a golden test.
+#[test]
+fn golden_suite_covers_all_kinds() {
+    assert_eq!(AlgorithmKind::ALL.len(), 10, "add a golden test for the new algorithm");
+}

@@ -4,7 +4,7 @@
 
 use dana::optim::dana_zero::DanaZero;
 use dana::optim::{make_algorithm, Algorithm, AlgorithmKind, LrSchedule, ScheduleConfig, Step};
-use dana::server::ParameterServer;
+use dana::server::{shard_bounds, ParameterServer, ShardedParameterServer};
 use dana::sim::gamma::{Environment, ExecTimeModel};
 use dana::sim::AsyncSchedule;
 use dana::util::rng::Rng;
@@ -182,6 +182,133 @@ fn prop_gamma_moments() {
         let var = sum2 / m as f64 - mean * mean;
         assert!((mean / (alpha * beta) - 1.0).abs() < 0.05, "alpha={alpha} beta={beta}");
         assert!((var / (alpha * beta * beta) - 1.0).abs() < 0.25, "alpha={alpha} beta={beta}");
+    });
+}
+
+/// |a − b| ≤ abs + rel·|b| — the sharded-equivalence tolerance.  The only
+/// permitted divergence is f64 reassociation across shard boundaries
+/// (YellowFin's reduced tuner statistics), so the bound is tight.
+fn assert_close(a: f32, b: f32, ctx: &str) {
+    let tol = 1e-6 + 1e-5 * b.abs() as f64;
+    assert!(
+        (a as f64 - b as f64).abs() <= tol,
+        "{ctx}: sharded {a} vs monolithic {b}"
+    );
+}
+
+/// THE sharding contract (tentpole): for every algorithm and S ∈
+/// {1, 2, 7, 16}, a sharded server driven by the same pull/push sequence
+/// as a monolithic server sends the same parameters, applies the same
+/// updates, and reduces the same gap/lag metrics — over gamma-model worker
+/// schedules and randomized gradients, with k both above and below S (the
+/// clamp path).
+#[test]
+fn prop_sharded_server_equals_monolithic() {
+    let flat = |n: usize, steps_per_epoch: usize| {
+        LrSchedule::new(ScheduleConfig {
+            base_eta: 0.05,
+            gamma: 0.9,
+            lambda: 1.0,
+            warmup_epochs: 0.0,
+            // decay mid-run so momentum correction fires on both servers
+            decay_epochs: vec![2.0],
+            decay_factor: 0.5,
+            steps_per_epoch,
+            n_workers: n,
+            ..ScheduleConfig::default()
+        })
+    };
+    for kind in AlgorithmKind::ALL {
+        for &shards in &[1usize, 2, 7, 16] {
+            for_random_cases(2, |rng| {
+                let k = 3 + rng.below(45) as usize; // spans k < S and k >= S
+                let n = 1 + rng.below(4) as usize;
+                let theta0 = rand_vec(rng, k, 1.0);
+                let mut mono =
+                    ParameterServer::new(make_algorithm(kind, &theta0, n), flat(n, 20), n);
+                let mut shrd =
+                    ShardedParameterServer::new(kind, &theta0, flat(n, 20), n, shards)
+                        .with_threads(1 + rng.below(4) as usize);
+                mono.metrics.set_every(3);
+                shrd.metrics.set_every(3);
+
+                // Drive both servers with one gamma-model worker ordering.
+                let model =
+                    ExecTimeModel::new(Environment::Homogeneous, n, 32, &mut Rng::new(7));
+                let mut sched = AsyncSchedule::new(model, rng.fork(2));
+                let mut has_pulled = vec![false; n];
+                let order: Vec<usize> =
+                    Iterator::take(&mut sched, 80).map(|c| c.worker).collect();
+                for (step, &w) in order.iter().enumerate() {
+                    if !has_pulled[w] || rng.uniform() < 0.3 {
+                        let a = shrd.pull(w);
+                        let b = mono.pull(w).to_vec();
+                        for i in 0..k {
+                            assert_close(
+                                a[i],
+                                b[i],
+                                &format!("{kind} S={shards} step {step} send[{i}]"),
+                            );
+                        }
+                        has_pulled[w] = true;
+                    } else {
+                        let g = rand_vec(rng, k, 0.5);
+                        shrd.push(w, &g);
+                        mono.push(w, &g);
+                        assert_eq!(shrd.master_step(), mono.master_step());
+                    }
+                }
+                let (a, b) = (shrd.theta_vec(), mono.theta().to_vec());
+                for i in 0..k {
+                    assert_close(a[i], b[i], &format!("{kind} S={shards} theta[{i}]"));
+                }
+                // Metric reduction: same rows, same lag, same gap (within
+                // reassociation tolerance).
+                let (ra, rb) = (shrd.metrics.rows(), mono.metrics.rows());
+                assert_eq!(ra.len(), rb.len(), "{kind} S={shards}: metric row count");
+                for (x, y) in ra.iter().zip(rb) {
+                    assert_eq!(x.step, y.step);
+                    assert_eq!(x.worker, y.worker);
+                    assert_eq!(x.lag, y.lag);
+                    assert!(
+                        (x.gap - y.gap).abs() <= 1e-9 + 1e-5 * y.gap.abs(),
+                        "{kind} S={shards} step {}: gap {} vs {}",
+                        x.step,
+                        x.gap,
+                        y.gap
+                    );
+                    assert!(
+                        (x.msg_norm - y.msg_norm).abs() <= 1e-9 + 1e-5 * y.msg_norm.abs()
+                    );
+                }
+            });
+        }
+    }
+}
+
+/// shard_bounds is a partition: contiguous, complete, near-equal, and
+/// stable under any (k, S) including degenerate ones.
+#[test]
+fn prop_shard_bounds_partition() {
+    for_random_cases(40, |rng| {
+        let k = rng.below(2000) as usize;
+        let s = 1 + rng.below(64) as usize;
+        let b = shard_bounds(k, s);
+        assert_eq!(b[0].start, 0);
+        assert_eq!(b.last().unwrap().end, k);
+        let mut total = 0;
+        for w in b.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+        for r in &b {
+            total += r.len();
+            if k > 0 {
+                assert!(!r.is_empty(), "k={k} s={s}: empty shard");
+            }
+        }
+        assert_eq!(total, k);
+        let lens: Vec<usize> = b.iter().map(|r| r.len()).collect();
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
     });
 }
 
