@@ -9,9 +9,14 @@
 //! (monolithic wins); past the crossover the sharded apply's parallel
 //! memory streams win — the table makes the crossover visible.
 //!
+//! The `churn/...` rows measure the elastic-membership operations: the
+//! cost of one leave+rejoin cycle (per-worker state retire/alloc at k
+//! coordinates, fanned across shards in the sharded layout) and of a
+//! pull→push cycle running interleaved with continuous churn.
+//!
 //! Run: cargo bench --bench server [-- <filter>]
 
-use dana::optim::{make_algorithm, AlgorithmKind, LrSchedule, ScheduleConfig};
+use dana::optim::{make_algorithm, AlgorithmKind, LeavePolicy, LrSchedule, ScheduleConfig};
 use dana::server::{ParameterServer, ShardedParameterServer};
 use dana::util::bench::BenchSuite;
 use dana::util::rng::Rng;
@@ -47,7 +52,7 @@ fn main() {
         }
         let mut w = 0usize;
         b.bench(&format!("pull_push/{}", kind.name()), || {
-            ps.push(w, &grad);
+            ps.push(w, &grad).unwrap();
             std::hint::black_box(ps.pull(w));
             w = (w + 1) % N;
         });
@@ -66,7 +71,63 @@ fn main() {
         }
         let mut w = 0usize;
         b.bench("pull_push/dana-zero+metrics", || {
-            ps.push(w, &grad);
+            ps.push(w, &grad).unwrap();
+            std::hint::black_box(ps.pull(w));
+            w = (w + 1) % N;
+        });
+    }
+
+    // Elastic membership: cost of one leave + rejoin cycle (retire the
+    // leaver's O(k) momentum slot, reallocate it for the joiner), and a
+    // pull→push cycle with a membership change every 64 cycles — the
+    // steady-state overhead a churning cluster pays on the master.
+    for kind in [AlgorithmKind::DanaZero, AlgorithmKind::Easgd] {
+        let mut ps = ParameterServer::new(make_algorithm(kind, &theta0, N), schedule(), N);
+        for w in 0..N {
+            ps.pull(w);
+        }
+        b.bench(&format!("churn/leave_rejoin/{}", kind.name()), || {
+            ps.remove_worker(N - 1, LeavePolicy::Retire).unwrap();
+            let slot = ps.add_worker();
+            std::hint::black_box(slot);
+        });
+    }
+    {
+        let mut ps = ShardedParameterServer::new(
+            AlgorithmKind::DanaZero,
+            &theta0,
+            schedule(),
+            N,
+            8,
+        );
+        for w in 0..N {
+            ps.pull(w);
+        }
+        b.bench("churn/leave_rejoin/dana-zero/S=8", || {
+            ps.remove_worker(N - 1, LeavePolicy::Fold).unwrap();
+            let slot = ps.add_worker();
+            std::hint::black_box(slot);
+        });
+    }
+    {
+        let mut ps = ParameterServer::new(
+            make_algorithm(AlgorithmKind::DanaZero, &theta0, N),
+            schedule(),
+            N,
+        );
+        for w in 0..N {
+            ps.pull(w);
+        }
+        let mut w = 0usize;
+        let mut cycle = 0u64;
+        b.bench("churn/pull_push_with_churn/dana-zero", || {
+            cycle += 1;
+            if cycle % 64 == 0 {
+                ps.remove_worker(w, LeavePolicy::Retire).unwrap();
+                let slot = ps.add_worker();
+                ps.pull(slot);
+            }
+            ps.push(w, &grad).unwrap();
             std::hint::black_box(ps.pull(w));
             w = (w + 1) % N;
         });
@@ -106,7 +167,7 @@ fn main() {
             }
             let mut w = 0usize;
             b.bench_with_bytes(&format!("sweep/dana-zero/k={label_k}/mono"), bytes, || {
-                ps.push(w, &grad);
+                ps.push(w, &grad).unwrap();
                 std::hint::black_box(ps.pull(w));
                 w = (w + 1) % sweep_n;
             });
@@ -132,7 +193,7 @@ fn main() {
                 &format!("sweep/dana-zero/k={label_k}/S={shards}"),
                 bytes,
                 || {
-                    ps.push(w, &grad);
+                    ps.push(w, &grad).unwrap();
                     ps.pull_into_buf(w, &mut buf);
                     std::hint::black_box(&buf);
                     w = (w + 1) % sweep_n;

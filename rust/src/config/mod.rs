@@ -7,8 +7,8 @@
 //! these from presets; the `dana train` CLI can also read one from a JSON
 //! file and override fields with flags.
 
-use crate::optim::{AlgorithmKind, ScheduleConfig};
-use crate::sim::Environment;
+use crate::optim::{AlgorithmKind, LeavePolicy, ScheduleConfig};
+use crate::sim::{ChurnSchedule, Environment};
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
@@ -99,6 +99,13 @@ pub struct TrainConfig {
     /// Parameter-server shards S (1 = monolithic master; >1 splits θ and
     /// all per-worker state into S contiguous shards applied in parallel).
     pub shards: usize,
+    /// Cluster-membership churn events, pinned to fractions of the run
+    /// (empty = fixed membership, bit-for-bit the pre-elastic behavior).
+    /// CLI/JSON spec grammar: `"leave@0.3:2,join@0.5,slow@0.6:0=4x"`.
+    pub churn: ChurnSchedule,
+    /// What happens to a leaver's momentum (DANA family): retired from v⁰
+    /// or folded into a surviving worker's slot.
+    pub leave_policy: LeavePolicy,
 }
 
 impl TrainConfig {
@@ -159,6 +166,8 @@ impl TrainConfig {
             metrics_every: 0,
             eval_every_epochs: 0.0,
             shards: 1,
+            churn: ChurnSchedule::default(),
+            leave_policy: LeavePolicy::default(),
         }
     }
 
@@ -240,6 +249,18 @@ impl TrainConfig {
         if let Some(v) = j.get("shards") {
             self.shards = v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shards"))?;
         }
+        if let Some(v) = j.get("churn") {
+            self.churn = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("churn must be a spec string"))?
+                .parse()?;
+        }
+        if let Some(v) = j.get("leave_policy") {
+            self.leave_policy = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("leave_policy must be a string"))?
+                .parse()?;
+        }
         Ok(())
     }
 
@@ -282,8 +303,11 @@ mod tests {
     fn json_overrides_apply() {
         let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
         assert_eq!(c.shards, 1, "preset must default to the monolithic master");
+        assert!(c.churn.is_empty(), "preset must default to fixed membership");
+        assert_eq!(c.leave_policy, LeavePolicy::Retire);
         let j = Json::parse(
-            r#"{"algorithm":"nag-asgd","n_workers":16,"env":"hetero","gamma":0.95,"shards":8}"#,
+            r#"{"algorithm":"nag-asgd","n_workers":16,"env":"hetero","gamma":0.95,"shards":8,
+                "churn":"leave@0.3:2,join@0.5","leave_policy":"fold"}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -293,6 +317,17 @@ mod tests {
         assert_eq!(c.env, Environment::Heterogeneous);
         assert_eq!(c.schedule.gamma, 0.95);
         assert_eq!(c.shards, 8);
+        assert_eq!(c.churn.events.len(), 2);
+        assert_eq!(c.leave_policy, LeavePolicy::Fold);
+    }
+
+    #[test]
+    fn bad_churn_spec_errors() {
+        let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
+        let j = Json::parse(r#"{"churn":"nap@0.5"}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+        let j = Json::parse(r#"{"leave_policy":"meld"}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! Elastic-membership sweep: does DANA's staleness mitigation survive
+//! cluster churn?
+//!
+//! "Asynchrony begets Momentum" (Mitliagkas et al. 2016) shows the
+//! *effective* momentum of async SGD grows with the number of live
+//! workers, and staleness-aware methods (Zhang et al. 2015) modulate the
+//! step by observed staleness — which spikes exactly when membership
+//! shifts.  This sweep runs the paper's algorithm set over leave / join /
+//! straggler / composite-churn scenarios on the seeded synthetic quadratic
+//! (no PJRT, no artifacts: the simulated-clock driver
+//! [`sim_trainer::run_synthetic`] honors every cluster event including
+//! straggler onset) and reports the final-loss / gap / lag deltas against
+//! each algorithm's churn-free run.
+//!
+//! Run: `dana experiment churn [--full] [--out DIR]` → `churn.csv` + a
+//! printed table.  Both leave policies (retire / fold) are swept for the
+//! leave scenarios so the momentum-retirement knob is directly comparable.
+
+use super::ExpOptions;
+use crate::config::{TrainConfig, Workload};
+use crate::optim::{AlgorithmKind, LeavePolicy};
+use crate::sim::ChurnSchedule;
+use crate::train::sim_trainer;
+use crate::util::csvw::{fnum, CsvWriter};
+
+/// Parameter count of the synthetic quadratic (big enough that momentum
+/// and gap effects are not noise-dominated, small enough to sweep fast).
+const K: usize = 2048;
+const N_WORKERS: usize = 8;
+
+const SCENARIOS: [(&str, &str); 5] = [
+    ("static", ""),
+    ("leave", "leave@0.3:2"),
+    ("join", "join@0.5"),
+    ("straggler", "slow@0.5:0=4x"),
+    ("churny", "leave@0.25:1,join@0.4,slow@0.6:0=4x,leave@0.75"),
+];
+
+fn scenario_cfg(
+    alg: AlgorithmKind,
+    spec: &str,
+    policy: LeavePolicy,
+    epochs: f64,
+    seed: u64,
+) -> anyhow::Result<TrainConfig> {
+    let mut cfg = TrainConfig::preset(Workload::C10, alg, N_WORKERS, epochs);
+    cfg.seed = seed;
+    cfg.metrics_every = 5;
+    cfg.churn = ChurnSchedule::parse(spec)?;
+    cfg.leave_policy = policy;
+    Ok(cfg)
+}
+
+/// The churn scenario sweep (registered as experiment id `churn`).
+pub fn churn(opts: &ExpOptions) -> anyhow::Result<()> {
+    let epochs = if opts.quick { 4.0 } else { 16.0 };
+    let algs = AlgorithmKind::PAPER_SET;
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("churn.csv"),
+        &[
+            "algorithm",
+            "scenario",
+            "leave_policy",
+            "seed",
+            "final_loss",
+            "dloss_vs_static",
+            "mean_gap",
+            "dgap_vs_static",
+            "mean_lag",
+            "dlag_vs_static",
+            "joined",
+            "left",
+        ],
+    )?;
+    println!(
+        "churn sweep: {} algorithms x {} scenarios x {} seed(s), N={}, k={}",
+        algs.len(),
+        SCENARIOS.len(),
+        opts.seeds,
+        N_WORKERS,
+        K
+    );
+    println!(
+        "{:<11} {:<10} {:<7} {:>11} {:>11} {:>9} {:>9}",
+        "algorithm", "scenario", "policy", "final_loss", "dloss", "dgap", "dlag"
+    );
+    for alg in algs {
+        for seed in 1..=opts.seeds {
+            // churn-free reference for the deltas
+            let base =
+                sim_trainer::run_synthetic(&scenario_cfg(alg, "", LeavePolicy::Retire, epochs, seed)?, K)?;
+            for (name, spec) in SCENARIOS {
+                let has_leave = spec.contains("leave");
+                let policies: &[LeavePolicy] = if has_leave {
+                    &[LeavePolicy::Retire, LeavePolicy::Fold]
+                } else {
+                    &[LeavePolicy::Retire]
+                };
+                for &policy in policies {
+                    let rep = if spec.is_empty() {
+                        base.clone()
+                    } else {
+                        sim_trainer::run_synthetic(&scenario_cfg(alg, spec, policy, epochs, seed)?, K)?
+                    };
+                    let dloss = rep.final_test_loss - base.final_test_loss;
+                    let dgap = rep.mean_gap - base.mean_gap;
+                    let dlag = rep.mean_lag - base.mean_lag;
+                    println!(
+                        "{:<11} {:<10} {:<7} {:>11.3e} {:>+11.2e} {:>+9.2e} {:>+9.2}",
+                        alg.name(),
+                        name,
+                        policy.name(),
+                        rep.final_test_loss,
+                        dloss,
+                        dgap,
+                        dlag
+                    );
+                    w.row(&[
+                        alg.name().to_string(),
+                        name.to_string(),
+                        policy.name().to_string(),
+                        seed.to_string(),
+                        fnum(rep.final_test_loss),
+                        fnum(dloss),
+                        fnum(rep.mean_gap),
+                        fnum(dgap),
+                        fnum(rep.mean_lag),
+                        fnum(dlag),
+                        rep.workers_joined.to_string(),
+                        rep.workers_left.to_string(),
+                    ])?;
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -2,6 +2,7 @@
 //! (Populated by the per-figure modules; see DESIGN.md §5 for the index.)
 
 pub mod accuracy;
+pub mod churn;
 pub mod gap;
 pub mod hetero;
 pub mod imagenet;
@@ -30,11 +31,12 @@ impl Default for ExpOptions {
     }
 }
 
-/// All experiment ids, in paper order.
+/// All experiment ids, in paper order, plus this repo's own extensions
+/// (`churn`: the elastic-membership sweep, artifact-free).
 pub const ALL_IDS: &[&str] = &[
     "fig2a", "fig2b", "fig3", "fig4", "fig5", "fig6", "fig7", "fig9", "fig10",
     "fig11", "fig12", "fig13", "table1", "table2", "table3", "table4", "table5",
-    "table6",
+    "table6", "churn",
 ];
 
 /// Run one experiment by id.
@@ -58,6 +60,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<()> {
         "fig6" => hetero::fig6(opts),
         "fig13" => hetero::fig13(opts),
         "table6" => hetero::table6(opts),
+        "churn" => churn::churn(opts),
         "all" => {
             for id in ALL_IDS {
                 println!("=== {id} ===");

@@ -32,9 +32,12 @@ const USAGE: &str = "usage: dana <train|experiment|simulate|info> [options]
   train      --algorithm A --workers N [--workload c10|wrn_c10|c100|imagenet|lm]
              [--epochs E] [--env homo|hetero] [--mode sim|real|ssgd|baseline]
              [--seed S] [--eta X] [--gamma X] [--metrics-every K]
-             [--shards S] [--config file.json] [--use-pallas] [--artifacts DIR]
+             [--shards S] [--churn \"leave@0.3:2,join@0.5,slow@0.6:0=4x\"]
+             [--leave-policy retire|fold] [--config file.json] [--use-pallas]
+             [--artifacts DIR]
   experiment <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|fig12|fig13|
-              table1..table6|all> [--full] [--seeds K] [--out DIR] [--artifacts DIR]
+              table1..table6|churn|all> [--full] [--seeds K] [--out DIR]
+             [--artifacts DIR]
   simulate   --workers N [--env homo|hetero] [--batches-per-worker K] [--batch B]
   info       [--artifacts DIR]";
 
@@ -88,6 +91,12 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     if let Some(shards) = args.opt_parse::<usize>("shards")? {
         cfg.shards = shards.max(1);
     }
+    if let Some(churn) = args.opt_parse::<dana::sim::ChurnSchedule>("churn")? {
+        cfg.churn = churn;
+    }
+    if let Some(policy) = args.opt_parse::<dana::optim::LeavePolicy>("leave-policy")? {
+        cfg.leave_policy = policy;
+    }
     cfg.use_pallas = args.flag("use-pallas");
     cfg.eval_every_epochs = args.parse_or::<f64>("eval-every", 0.0)?;
     cfg.artifacts_dir = artifacts_dir(args);
@@ -95,6 +104,12 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     args.finish()?;
     if cfg.shards > 1 && matches!(mode.as_str(), "ssgd" | "baseline") {
         anyhow::bail!("--shards applies only to --mode sim|real (got --mode {mode})");
+    }
+    if !cfg.churn.is_empty() {
+        if matches!(mode.as_str(), "ssgd" | "baseline") {
+            anyhow::bail!("--churn applies only to --mode sim|real (got --mode {mode})");
+        }
+        cfg.churn.validate(cfg.n_workers)?;
     }
 
     let engine = Engine::cpu(&cfg.artifacts_dir)?;

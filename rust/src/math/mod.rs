@@ -227,6 +227,19 @@ pub fn slim_worker_update(send: &mut [f32], v: &mut [f32], g: &[f32], gamma: f32
     }
 }
 
+/// In-place variant of [`slim_worker_update`]: the gradient buffer becomes
+/// the send vector (`g[i]` is read before it is overwritten, so the
+/// arithmetic is bit-identical to the scratch-buffer version).  This is the
+/// per-step hot path of the DANA-Slim worker — no allocation.
+pub fn slim_worker_update_inplace(v: &mut [f32], g: &mut [f32], gamma: f32) {
+    debug_assert_eq!(v.len(), g.len());
+    for (v, g) in v.iter_mut().zip(g.iter_mut()) {
+        let v_new = gamma * *v + *g;
+        *v = v_new;
+        *g = gamma * v_new + *g;
+    }
+}
+
 /// theta -= eta * u  (plain ASGD master apply).
 pub fn apply_update(theta: &mut [f32], u: &[f32], eta: f32) {
     axpy(theta, -eta, u);
@@ -298,6 +311,19 @@ mod tests {
         dc_adjust(&mut g, &[5.0], &[3.0], 0.5);
         // g + 0.5 * 4 * 2 = 2 + 4
         assert!((g[0] - 6.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn slim_inplace_matches_scratch_version() {
+        let k = 65;
+        let g0 = v(k, |i| (i as f32 * 0.31).sin());
+        let v0 = v(k, |i| (i as f32 * 0.17).cos());
+        let (mut va, mut send) = (v0.clone(), vec![0.0f32; k]);
+        slim_worker_update(&mut send, &mut va, &g0, 0.9);
+        let (mut vb, mut gb) = (v0.clone(), g0.clone());
+        slim_worker_update_inplace(&mut vb, &mut gb, 0.9);
+        assert_eq!(va, vb);
+        assert_eq!(send, gb);
     }
 
     #[test]

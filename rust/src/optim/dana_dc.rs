@@ -6,14 +6,19 @@
 //! term accurate — the combination converges fastest in the paper's Fig 5
 //! and holds the highest accuracy at 128 workers (Table 5).
 
-use super::{Algorithm, AlgorithmKind, Step};
+use super::{Algorithm, AlgorithmKind, LeavePolicy, Step};
 use crate::math;
 
 #[derive(Debug, Clone)]
 pub struct DanaDc {
     theta: Vec<f32>,
+    /// Per-worker momentum vᶦ (retired slots zeroed).
     v: Vec<Vec<f32>>,
+    /// v⁰ = Σ live vᶦ, maintained incrementally through updates *and*
+    /// membership changes (Appendix A.2).
     vsum: Vec<f32>,
+    /// Slot liveness (elastic membership).
+    live: Vec<bool>,
 }
 
 impl DanaDc {
@@ -22,11 +27,30 @@ impl DanaDc {
             theta: theta0.to_vec(),
             v: vec![vec![0.0; theta0.len()]; n_workers],
             vsum: vec![0.0; theta0.len()],
+            live: vec![true; n_workers],
         }
+    }
+
+    pub fn velocity(&self, worker: usize) -> &[f32] {
+        &self.v[worker]
     }
 
     pub fn velocity_sum(&self) -> &[f32] {
         &self.vsum
+    }
+
+    pub fn is_live(&self, worker: usize) -> bool {
+        self.live.get(worker).copied().unwrap_or(false)
+    }
+
+    /// O(k·N) reference sum over all slots (retired slots are zero), for
+    /// the churn invariant property test.
+    pub fn recompute_vsum(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.theta.len()];
+        for v in &self.v {
+            math::axpy(&mut out, 1.0, v);
+        }
+        out
     }
 }
 
@@ -63,6 +87,20 @@ impl Algorithm for DanaDc {
             math::scale(v, ratio);
         }
         math::scale(&mut self.vsum, ratio);
+    }
+
+    fn add_worker(&mut self) -> usize {
+        super::join_momentum_slot(&mut self.live, &mut self.v, self.theta.len())
+    }
+
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) {
+        super::retire_momentum_slot(
+            &mut self.live,
+            &mut self.v,
+            worker,
+            policy,
+            Some(&mut self.vsum),
+        );
     }
 
     fn set_theta(&mut self, theta: &[f32]) {

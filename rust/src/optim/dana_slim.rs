@@ -50,9 +50,7 @@ impl Algorithm for DanaSlim {
             ws.v = vec![0.0; grad.len()];
         }
         // v <- gamma*v + g ; msg <- gamma*v_new + g   (in place over grad)
-        let mut send = vec![0.0f32; grad.len()];
-        math::slim_worker_update(&mut send, &mut ws.v, grad, s.gamma);
-        grad.copy_from_slice(&send);
+        math::slim_worker_update_inplace(&mut ws.v, grad, s.gamma);
     }
 
     fn make_worker_state(&self) -> WorkerState {

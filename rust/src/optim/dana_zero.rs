@@ -18,16 +18,20 @@
 //! The apply path is a single fused pass ([`crate::math::dana_fused_update`],
 //! mirrored 1:1 by the L1 Pallas kernel `kernels/update.py`).
 
-use super::{Algorithm, AlgorithmKind, Step};
+use super::{Algorithm, AlgorithmKind, LeavePolicy, Step};
 use crate::math;
 
 #[derive(Debug, Clone)]
 pub struct DanaZero {
     theta: Vec<f32>,
-    /// Per-worker momentum vᶦ.
+    /// Per-worker momentum vᶦ (retired slots are zeroed, so v⁰ = Σ over
+    /// *all* slots equals Σ over live slots).
     v: Vec<Vec<f32>>,
-    /// v⁰ = Σᵢ vᶦ, maintained incrementally (Appendix A.2).
+    /// v⁰ = Σ live vᶦ, maintained incrementally (Appendix A.2) — including
+    /// through membership changes ([`Algorithm::remove_worker`]).
     vsum: Vec<f32>,
+    /// Slot liveness (elastic membership).
+    live: Vec<bool>,
 }
 
 impl DanaZero {
@@ -36,6 +40,7 @@ impl DanaZero {
             theta: theta0.to_vec(),
             v: vec![vec![0.0; theta0.len()]; n_workers],
             vsum: vec![0.0; theta0.len()],
+            live: vec![true; n_workers],
         }
     }
 
@@ -47,9 +52,14 @@ impl DanaZero {
         &self.vsum
     }
 
+    pub fn is_live(&self, worker: usize) -> bool {
+        self.live.get(worker).copied().unwrap_or(false)
+    }
+
     /// Recompute v⁰ from scratch in O(k·N) — the naive path the paper's
     /// Appendix A.2 optimizes away; kept for the invariant property test
-    /// and the ablation bench.
+    /// and the ablation bench.  Retired slots are zero, so summing every
+    /// slot equals summing the live ones.
     pub fn recompute_vsum(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.theta.len()];
         for v in &self.v {
@@ -88,6 +98,24 @@ impl Algorithm for DanaZero {
             math::scale(v, ratio);
         }
         math::scale(&mut self.vsum, ratio);
+    }
+
+    fn add_worker(&mut self) -> usize {
+        // The joiner's vᶦ is zero, so v⁰ = Σ live vᶦ holds untouched.
+        super::join_momentum_slot(&mut self.live, &mut self.v, self.theta.len())
+    }
+
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) {
+        // Fold merges the leaver's momentum into the lowest surviving
+        // slot (v⁰ unchanged); Retire — or Fold with nobody left —
+        // subtracts it from v⁰.  Either way the A.2 invariant is exact.
+        super::retire_momentum_slot(
+            &mut self.live,
+            &mut self.v,
+            worker,
+            policy,
+            Some(&mut self.vsum),
+        );
     }
 
     fn set_theta(&mut self, theta: &[f32]) {
@@ -142,6 +170,46 @@ mod tests {
             assert!((d.theta()[0] - theta).abs() < 1e-6, "{} vs {theta}", d.theta()[0]);
         }
         assert!(theta.abs() < 1.0); // converging
+    }
+
+    #[test]
+    fn retire_subtracts_leaver_from_vsum() {
+        let s = Step { eta: 1.0, gamma: 0.5, lambda: 0.0 };
+        let mut d = DanaZero::new(&[0.0], 2);
+        d.master_apply(0, &[1.0], &[0.0], s); // v0=1
+        d.master_apply(1, &[2.0], &[0.0], s); // v1=2, vsum=3
+        d.remove_worker(1, LeavePolicy::Retire);
+        assert_eq!(d.velocity_sum(), &[1.0]);
+        assert_eq!(d.velocity(1), &[0.0]);
+        assert!(!d.is_live(1));
+    }
+
+    #[test]
+    fn fold_moves_leaver_momentum_to_survivor() {
+        let s = Step { eta: 1.0, gamma: 0.5, lambda: 0.0 };
+        let mut d = DanaZero::new(&[0.0], 2);
+        d.master_apply(0, &[1.0], &[0.0], s);
+        d.master_apply(1, &[2.0], &[0.0], s);
+        d.remove_worker(1, LeavePolicy::Fold);
+        assert_eq!(d.velocity_sum(), &[3.0], "fold keeps v0 intact");
+        assert_eq!(d.velocity(0), &[3.0], "survivor absorbed the momentum");
+        // folding the last worker degenerates to retire
+        d.remove_worker(0, LeavePolicy::Fold);
+        assert_eq!(d.velocity_sum(), &[0.0]);
+    }
+
+    #[test]
+    fn rejoin_reuses_lowest_retired_slot_with_zero_momentum() {
+        let s = Step { eta: 1.0, gamma: 0.5, lambda: 0.0 };
+        let mut d = DanaZero::new(&[0.0], 3);
+        d.master_apply(1, &[1.0], &[0.0], s);
+        d.remove_worker(1, LeavePolicy::Retire);
+        assert_eq!(d.add_worker(), 1);
+        assert_eq!(d.velocity(1), &[0.0]);
+        assert_eq!(d.add_worker(), 3, "no retired slot left: append");
+        assert_eq!(d.velocity(3), &[0.0]);
+        let full = d.recompute_vsum();
+        assert_eq!(d.velocity_sum(), &full[..]);
     }
 
     #[test]

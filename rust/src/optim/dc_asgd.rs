@@ -14,13 +14,15 @@
 //! in the paper's tables while DANA-DC (the same compensation applied on
 //! top of DANA's small gap) keeps working.
 
-use super::{Algorithm, AlgorithmKind, Step};
+use super::{Algorithm, AlgorithmKind, LeavePolicy, Step};
 use crate::math;
 
 #[derive(Debug, Clone)]
 pub struct DcAsgd {
     theta: Vec<f32>,
     v: Vec<Vec<f32>>,
+    /// Slot liveness (elastic membership).
+    live: Vec<bool>,
 }
 
 impl DcAsgd {
@@ -28,6 +30,7 @@ impl DcAsgd {
         DcAsgd {
             theta: theta0.to_vec(),
             v: vec![vec![0.0; theta0.len()]; n_workers],
+            live: vec![true; n_workers],
         }
     }
 }
@@ -58,6 +61,14 @@ impl Algorithm for DcAsgd {
         for v in &mut self.v {
             math::scale(v, ratio);
         }
+    }
+
+    fn add_worker(&mut self) -> usize {
+        super::join_momentum_slot(&mut self.live, &mut self.v, self.theta.len())
+    }
+
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) {
+        super::retire_momentum_slot(&mut self.live, &mut self.v, worker, policy, None);
     }
 
     fn set_theta(&mut self, theta: &[f32]) {

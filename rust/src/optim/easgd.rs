@@ -22,7 +22,7 @@
 //! fitting the pull/push API.  The moving rate follows the authors'
 //! recommendation `alpha = beta / N` with `beta = 0.9`.
 
-use super::{Algorithm, AlgorithmKind, Step};
+use super::{claim_slot, Algorithm, AlgorithmKind, LeavePolicy, Step};
 use crate::math;
 
 #[derive(Debug, Clone)]
@@ -34,6 +34,11 @@ pub struct Easgd {
     v: Vec<Vec<f32>>,
     /// Elastic moving rate α.
     alpha: f32,
+    /// Track α = β/N against the *live* worker count on membership
+    /// changes; disabled once [`Easgd::with_alpha`] pins it.
+    alpha_auto: bool,
+    /// Slot liveness (elastic membership).
+    live: Vec<bool>,
 }
 
 impl Easgd {
@@ -43,12 +48,22 @@ impl Easgd {
             x: vec![theta0.to_vec(); n_workers],
             v: vec![vec![0.0; theta0.len()]; n_workers],
             alpha: 0.9 / n_workers.max(1) as f32,
+            alpha_auto: true,
+            live: vec![true; n_workers],
         }
     }
 
     pub fn with_alpha(mut self, alpha: f32) -> Self {
         self.alpha = alpha;
+        self.alpha_auto = false;
         self
+    }
+
+    fn retune_alpha(&mut self) {
+        if self.alpha_auto {
+            let live = self.live.iter().filter(|&&l| l).count();
+            self.alpha = 0.9 / live.max(1) as f32;
+        }
     }
 
     pub fn alpha(&self) -> f32 {
@@ -98,6 +113,35 @@ impl Algorithm for Easgd {
         for v in &mut self.v {
             math::scale(v, ratio);
         }
+    }
+
+    fn add_worker(&mut self) -> usize {
+        let slot = claim_slot(&mut self.live);
+        if slot == self.x.len() {
+            self.x.push(self.center.clone());
+            self.v.push(vec![0.0; self.center.len()]);
+        } else {
+            // A joiner starts at the center with zero momentum.
+            self.x[slot].copy_from_slice(&self.center);
+            self.v[slot].fill(0.0);
+        }
+        self.retune_alpha();
+        slot
+    }
+
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) {
+        debug_assert!(self.live[worker], "remove of retired worker {worker}");
+        self.live[worker] = false;
+        if policy == LeavePolicy::Fold {
+            // One final elastic exchange: the center absorbs α·(xᶦ − x̃) of
+            // the leaver's progress before the replica is dropped.
+            let alpha = self.alpha;
+            for (c, &x) in self.center.iter_mut().zip(&self.x[worker]) {
+                *c += alpha * (x - *c);
+            }
+        }
+        self.v[worker].fill(0.0);
+        self.retune_alpha();
     }
 
     fn set_theta(&mut self, theta: &[f32]) {
@@ -155,6 +199,33 @@ mod tests {
             let _ = step_i;
         }
         assert!(crate::math::norm2_sq(e.theta()) < 1e-3);
+    }
+
+    #[test]
+    fn membership_retunes_alpha_and_joiner_starts_at_center() {
+        let mut e = Easgd::new(&[1.0], 3);
+        assert!((e.alpha() - 0.3).abs() < 1e-6);
+        e.remove_worker(2, LeavePolicy::Retire);
+        assert!((e.alpha() - 0.45).abs() < 1e-6, "alpha follows live count");
+        let slot = e.add_worker();
+        assert_eq!(slot, 2);
+        assert_eq!(e.replica(2), e.theta(), "joiner replica = center");
+        assert!((e.alpha() - 0.3).abs() < 1e-6);
+        // explicit alpha disables the auto-retune
+        let mut pinned = Easgd::new(&[1.0], 3).with_alpha(0.5);
+        pinned.remove_worker(0, LeavePolicy::Retire);
+        assert_eq!(pinned.alpha(), 0.5);
+    }
+
+    #[test]
+    fn fold_leave_runs_a_final_exchange() {
+        let mut e = Easgd::new(&[0.0], 2).with_alpha(0.25);
+        let s = Step { eta: 0.1, gamma: 0.0, lambda: 0.0 };
+        e.master_apply(0, &[2.0], &[0.0], s);
+        let (c, x) = (e.theta()[0], e.replica(0)[0]);
+        e.remove_worker(0, LeavePolicy::Fold);
+        let expect = c + 0.25 * (x - c);
+        assert!((e.theta()[0] - expect).abs() < 1e-6);
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! expected lag of N equal workers (the N next updates the paper's DANA
 //! analysis predicts over).
 
-use super::{Algorithm, AlgorithmKind, Step};
+use super::{Algorithm, AlgorithmKind, LeavePolicy, Step, ANY_SLOT};
 use crate::math;
 
 #[derive(Debug, Clone)]
@@ -22,15 +22,28 @@ pub struct Lwp {
     v: Vec<f32>,
     /// Prediction horizon τ (defaults to the cluster size N).
     tau: f32,
+    /// Live worker count; τ tracks it (the steady-state expected lag of N
+    /// equal workers) unless [`Lwp::with_tau`] pinned τ explicitly.
+    live: usize,
+    tau_auto: bool,
 }
 
 impl Lwp {
     pub fn new(theta0: &[f32], n_workers: usize) -> Self {
-        Self::with_tau(theta0, n_workers as f32)
+        let mut l = Self::with_tau(theta0, n_workers as f32);
+        l.live = n_workers;
+        l.tau_auto = true;
+        l
     }
 
     pub fn with_tau(theta0: &[f32], tau: f32) -> Self {
-        Lwp { theta: theta0.to_vec(), v: vec![0.0; theta0.len()], tau }
+        Lwp {
+            theta: theta0.to_vec(),
+            v: vec![0.0; theta0.len()],
+            tau,
+            live: tau.max(1.0) as usize,
+            tau_auto: false,
+        }
     }
 
     pub fn tau(&self) -> f32 {
@@ -64,6 +77,24 @@ impl Algorithm for Lwp {
         math::scale(&mut self.v, ratio);
     }
 
+    /// The momentum vector is shared, so membership only moves the
+    /// prediction horizon: τ tracks the live worker count (the expected
+    /// lag changes with the cluster size).
+    fn add_worker(&mut self) -> usize {
+        self.live += 1;
+        if self.tau_auto {
+            self.tau = self.live as f32;
+        }
+        ANY_SLOT
+    }
+
+    fn remove_worker(&mut self, _worker: usize, _policy: LeavePolicy) {
+        self.live = self.live.saturating_sub(1);
+        if self.tau_auto {
+            self.tau = self.live.max(1) as f32;
+        }
+    }
+
     fn set_theta(&mut self, theta: &[f32]) {
         self.theta.copy_from_slice(theta);
     }
@@ -81,6 +112,19 @@ mod tests {
         let mut out = [0.0f32];
         l.master_send(0, &mut out, s);
         assert_eq!(out, [-4.0]); // -1 - 3*1*1
+    }
+
+    #[test]
+    fn tau_tracks_live_workers_unless_pinned() {
+        let mut l = Lwp::new(&[0.0], 4);
+        assert_eq!(l.add_worker(), ANY_SLOT);
+        assert_eq!(l.tau(), 5.0);
+        l.remove_worker(0, LeavePolicy::Retire);
+        l.remove_worker(1, LeavePolicy::Fold);
+        assert_eq!(l.tau(), 3.0);
+        let mut pinned = Lwp::with_tau(&[0.0], 7.0);
+        pinned.add_worker();
+        assert_eq!(pinned.tau(), 7.0);
     }
 
     #[test]

@@ -60,6 +60,117 @@ pub struct WorkerState {
     pub v: Vec<f32>,
 }
 
+/// What happens to a departing worker's momentum (elastic membership).
+///
+/// The DANA invariant v⁰ = Σ live vᶦ (Appendix A.2) forces a choice when a
+/// worker leaves: its momentum either leaves with it or stays in the
+/// cluster.  Both policies preserve the invariant exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LeavePolicy {
+    /// The leaver's momentum is retired with it: v⁰ -= vᶦ, the slot is
+    /// zeroed.  The cluster forgets the leaver's velocity immediately.
+    #[default]
+    Retire,
+    /// The leaver's momentum is folded into the surviving cluster: vᶦ is
+    /// merged into the lowest live worker's slot (v⁰ unchanged), where it
+    /// keeps decaying through that worker's subsequent updates.  Falls back
+    /// to [`LeavePolicy::Retire`] when no other worker is live.
+    Fold,
+}
+
+impl LeavePolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            LeavePolicy::Retire => "retire",
+            LeavePolicy::Fold => "fold",
+        }
+    }
+}
+
+impl std::str::FromStr for LeavePolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "retire" => Ok(LeavePolicy::Retire),
+            "fold" => Ok(LeavePolicy::Fold),
+            other => anyhow::bail!("unknown leave policy {other:?} (retire|fold)"),
+        }
+    }
+}
+
+impl std::fmt::Display for LeavePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Sentinel returned by [`Algorithm::add_worker`] for shared-state rules:
+/// the rule keeps no per-worker vectors, so any slot id the caller assigns
+/// is acceptable.
+pub const ANY_SLOT: usize = usize::MAX;
+
+/// Claim the lowest retired slot in `live` (or append a new one) and mark
+/// it live.  This is THE deterministic slot-assignment rule — algorithms,
+/// both server layouts and the cluster simulator all use it, which is what
+/// keeps their independently tracked memberships in agreement.
+pub fn claim_slot(live: &mut Vec<bool>) -> usize {
+    match live.iter().position(|l| !l) {
+        Some(i) => {
+            live[i] = true;
+            i
+        }
+        None => {
+            live.push(true);
+            live.len() - 1
+        }
+    }
+}
+
+/// Join half of the per-worker-momentum membership rule shared by
+/// Multi-ASGD, DC-ASGD and the DANA family: claim a slot and make sure its
+/// momentum vector exists (retired slots were zeroed at leave time, so a
+/// reused slot is already a valid zero vᶦ).
+pub(crate) fn join_momentum_slot(
+    live: &mut Vec<bool>,
+    v: &mut Vec<Vec<f32>>,
+    k: usize,
+) -> usize {
+    let slot = claim_slot(live);
+    if slot == v.len() {
+        v.push(vec![0.0; k]);
+    }
+    slot
+}
+
+/// Leave half of the shared rule: zero the leaver's vᶦ after applying the
+/// policy — Fold merges it into the lowest surviving slot; Retire (or Fold
+/// with nobody left) subtracts it from the incremental v⁰ when the rule
+/// maintains one (`vsum: Some`, the DANA family) and simply drops it
+/// otherwise.  Keeps v⁰ = Σ live vᶦ exact in every case.
+pub(crate) fn retire_momentum_slot(
+    live: &mut [bool],
+    v: &mut [Vec<f32>],
+    worker: usize,
+    policy: LeavePolicy,
+    vsum: Option<&mut [f32]>,
+) {
+    debug_assert!(live[worker], "remove of retired worker {worker}");
+    live[worker] = false;
+    let mut leaver = std::mem::take(&mut v[worker]);
+    let fold_into = match policy {
+        LeavePolicy::Fold => live.iter().position(|&l| l),
+        LeavePolicy::Retire => None,
+    };
+    match (fold_into, vsum) {
+        (Some(j), _) => crate::math::axpy(&mut v[j], 1.0, &leaver),
+        (None, Some(vsum)) => crate::math::axpy(vsum, -1.0, &leaver),
+        (None, None) => {}
+    }
+    leaver.fill(0.0);
+    v[worker] = leaver;
+}
+
 /// Additive whole-vector statistics for the sharded two-phase apply.
 ///
 /// Most update rules are purely elementwise, so a contiguous shard of their
@@ -170,6 +281,26 @@ pub trait Algorithm: Send + Sync {
     /// the learning rate changes by `ratio = eta_new / eta_old`.
     fn rescale_momentum(&mut self, ratio: f32) {
         let _ = ratio;
+    }
+
+    /// A worker joins the cluster: allocate per-worker state for it and
+    /// return the slot id ([`claim_slot`] rule: lowest retired slot, else
+    /// append).  Shared-state rules keep the default, which is a no-op
+    /// returning [`ANY_SLOT`] — the server assigns the slot itself.
+    ///
+    /// A joiner always starts with zero momentum, so for the DANA family
+    /// v⁰ = Σ live vᶦ holds across the join without touching v⁰.
+    fn add_worker(&mut self) -> usize {
+        ANY_SLOT
+    }
+
+    /// A worker leaves the cluster: retire its per-worker state.  `policy`
+    /// decides the fate of its momentum (see [`LeavePolicy`]); the DANA
+    /// family must keep v⁰ = Σ live vᶦ exact through the removal.  Default:
+    /// no-op (shared-state rules).  Callers (the servers) validate that
+    /// `worker` is live before delegating here.
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) {
+        let _ = (worker, policy);
     }
 
     /// Overwrite master parameters (checkpoint restore / tests).
@@ -325,6 +456,41 @@ mod tests {
             a,
             ApplyStats { msg_norm2: 1.5, g_avg_norm2: 2.25, prev_dot: 0.0, prev_norm2: 5.0 }
         );
+    }
+
+    #[test]
+    fn claim_slot_reuses_lowest_retired() {
+        let mut live = vec![true, false, true, false];
+        assert_eq!(claim_slot(&mut live), 1);
+        assert_eq!(claim_slot(&mut live), 3);
+        assert_eq!(claim_slot(&mut live), 4, "full house appends");
+        assert_eq!(live, vec![true; 5]);
+    }
+
+    #[test]
+    fn leave_policy_parses() {
+        assert_eq!("retire".parse::<LeavePolicy>().unwrap(), LeavePolicy::Retire);
+        assert_eq!("FOLD".parse::<LeavePolicy>().unwrap(), LeavePolicy::Fold);
+        assert!("meld".parse::<LeavePolicy>().is_err());
+        assert_eq!(LeavePolicy::default(), LeavePolicy::Retire);
+    }
+
+    #[test]
+    fn shared_state_rules_default_membership_noops() {
+        // Asgd/NagAsgd/DanaSlim/YellowFin keep no per-worker vectors: join
+        // returns the ANY_SLOT sentinel and leave is a no-op.
+        let theta0 = vec![1.0f32; 4];
+        for kind in [
+            AlgorithmKind::Asgd,
+            AlgorithmKind::NagAsgd,
+            AlgorithmKind::DanaSlim,
+            AlgorithmKind::YellowFin,
+        ] {
+            let mut alg = make_algorithm(kind, &theta0, 2);
+            assert_eq!(alg.add_worker(), ANY_SLOT, "{kind}");
+            alg.remove_worker(0, LeavePolicy::Retire);
+            assert_eq!(alg.theta(), &theta0[..], "{kind}: membership touched theta");
+        }
     }
 
     #[test]

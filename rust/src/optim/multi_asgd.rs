@@ -7,13 +7,15 @@
 //! per-worker momentum alone is not sufficient — the look-ahead is what
 //! closes the gap.
 
-use super::{Algorithm, AlgorithmKind, Step};
+use super::{Algorithm, AlgorithmKind, LeavePolicy, Step};
 use crate::math;
 
 #[derive(Debug, Clone)]
 pub struct MultiAsgd {
     theta: Vec<f32>,
     v: Vec<Vec<f32>>,
+    /// Slot liveness (elastic membership).
+    live: Vec<bool>,
 }
 
 impl MultiAsgd {
@@ -21,6 +23,7 @@ impl MultiAsgd {
         MultiAsgd {
             theta: theta0.to_vec(),
             v: vec![vec![0.0; theta0.len()]; n_workers],
+            live: vec![true; n_workers],
         }
     }
 
@@ -49,6 +52,16 @@ impl Algorithm for MultiAsgd {
         }
     }
 
+    fn add_worker(&mut self) -> usize {
+        super::join_momentum_slot(&mut self.live, &mut self.v, self.theta.len())
+    }
+
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) {
+        // No v⁰ here (vsum: None): Retire simply drops the leaver's
+        // momentum; Fold merges it into the lowest surviving slot.
+        super::retire_momentum_slot(&mut self.live, &mut self.v, worker, policy, None);
+    }
+
     fn set_theta(&mut self, theta: &[f32]) {
         self.theta.copy_from_slice(theta);
     }
@@ -57,6 +70,21 @@ impl Algorithm for MultiAsgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn leave_and_rejoin_resets_slot_momentum() {
+        let mut a = MultiAsgd::new(&[0.0], 2);
+        let s = Step { eta: 1.0, gamma: 0.5, lambda: 0.0 };
+        a.master_apply(1, &[1.0], &[0.0], s);
+        a.remove_worker(1, LeavePolicy::Retire);
+        assert_eq!(a.add_worker(), 1);
+        assert_eq!(a.velocity(1), &[0.0]);
+        // fold path: survivor inherits
+        a.master_apply(0, &[2.0], &[0.0], s);
+        a.master_apply(1, &[4.0], &[0.0], s);
+        a.remove_worker(0, LeavePolicy::Fold);
+        assert_eq!(a.velocity(1), &[6.0]);
+    }
 
     #[test]
     fn momenta_are_isolated_per_worker() {

@@ -14,7 +14,10 @@
 pub mod metrics;
 pub mod sharded;
 
-use crate::optim::{make_algorithm, Algorithm, AlgorithmKind, LrSchedule, Step, WorkerState};
+use crate::optim::{
+    claim_slot, make_algorithm, Algorithm, AlgorithmKind, LeavePolicy, LrSchedule, Step,
+    WorkerState, ANY_SLOT,
+};
 use metrics::{MetricRow, MetricsRecorder};
 pub use sharded::{shard_bounds, ShardedParameterServer};
 
@@ -22,9 +25,24 @@ pub use sharded::{shard_bounds, ShardedParameterServer};
 /// are generic over the server layout.  Method names are distinct from the
 /// concrete servers' inherent methods (which keep their richer signatures,
 /// e.g. [`ParameterServer::pull`] returning a borrowed slice).
+///
+/// Membership is dynamic: [`Master::add_worker`] / [`Master::remove_worker`]
+/// grow and retire worker slots mid-run.  `workers()` counts *slots* (the
+/// high-water capacity); `live_workers()` counts the current cluster.
 pub trait Master: Send {
     fn algo_kind(&self) -> AlgorithmKind;
+    /// Worker slots ever allocated (live + retired).
     fn workers(&self) -> usize;
+    /// Workers currently in the cluster.
+    fn live_workers(&self) -> usize;
+    /// Whether `worker` is a live slot.
+    fn is_live(&self, worker: usize) -> bool;
+    /// A worker joins: allocate (or recycle) a slot across the whole
+    /// server state and return its id.
+    fn add_worker(&mut self) -> usize;
+    /// A worker leaves: retire its slot; `policy` decides the fate of its
+    /// momentum.  Errors when `worker` is not live.
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()>;
     /// Master steps applied so far.
     fn steps_done(&self) -> u64;
     /// Total parameter count k.
@@ -39,8 +57,11 @@ pub trait Master: Send {
     /// trainer's hot loop reuses one k-length buffer per worker instead of
     /// allocating every master step).
     fn pull_into(&mut self, worker: usize, out: &mut [f32]);
-    /// Worker delivers its message; returns the applied [`Step`].
-    fn push_update(&mut self, worker: usize, msg: &[f32]) -> Step;
+    /// Worker delivers its message; returns the applied [`Step`].  A push
+    /// from an unknown or retired slot — a straggler whose update was in
+    /// flight when it left — is a *recoverable* error: the server state is
+    /// untouched and the caller may simply drop the message.
+    fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step>;
     /// Fresh worker-local optimizer state.
     fn make_worker_state(&self) -> WorkerState;
     /// Worker-side message transform (DANA-Slim's local momentum).
@@ -82,6 +103,8 @@ pub struct ParameterServer {
     pulled_at: Vec<u64>,
     /// Whether each worker holds valid pulled parameters.
     has_pulled: Vec<bool>,
+    /// Slot liveness (elastic membership).
+    live: Vec<bool>,
     master_step: u64,
     last_eta: f32,
     momentum_correction: bool,
@@ -98,6 +121,7 @@ impl ParameterServer {
             sent: vec![vec![0.0; k]; n_workers],
             pulled_at: vec![0; n_workers],
             has_pulled: vec![false; n_workers],
+            live: vec![true; n_workers],
             master_step: 0,
             last_eta,
             momentum_correction: true,
@@ -110,8 +134,56 @@ impl ParameterServer {
         self
     }
 
+    /// Worker slots ever allocated (live + retired).
     pub fn n_workers(&self) -> usize {
         self.sent.len()
+    }
+
+    /// Workers currently in the cluster.
+    pub fn n_live(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    pub fn worker_is_live(&self, worker: usize) -> bool {
+        self.live.get(worker).copied().unwrap_or(false)
+    }
+
+    /// A worker joins the cluster: claim the lowest retired slot (or
+    /// append one), reset its bookkeeping, and grow the algorithm's
+    /// per-worker state.  Returns the slot id.
+    pub fn add_worker(&mut self) -> usize {
+        let slot = claim_slot(&mut self.live);
+        let k = self.alg.param_count();
+        if slot == self.sent.len() {
+            self.sent.push(vec![0.0; k]);
+            self.pulled_at.push(0);
+            self.has_pulled.push(false);
+        } else {
+            self.sent[slot].fill(0.0);
+            self.pulled_at[slot] = 0;
+            self.has_pulled[slot] = false;
+        }
+        let alg_slot = self.alg.add_worker();
+        debug_assert!(
+            alg_slot == ANY_SLOT || alg_slot == slot,
+            "algorithm allocated slot {alg_slot}, server allocated {slot}"
+        );
+        slot
+    }
+
+    /// A worker leaves the cluster: retire its slot.  Its momentum is
+    /// handled per `policy`; subsequent pushes from the slot are rejected
+    /// as recoverable errors until it is reused by a joiner.
+    pub fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.worker_is_live(worker),
+            "remove_worker: worker {worker} is not live (slots: {})",
+            self.live.len()
+        );
+        self.live[worker] = false;
+        self.has_pulled[worker] = false;
+        self.alg.remove_worker(worker, policy);
+        Ok(())
     }
 
     pub fn master_step(&self) -> u64 {
@@ -146,8 +218,14 @@ impl ParameterServer {
 
     /// Worker `worker` pulls parameters: what it receives depends on the
     /// algorithm (θ for ASGD-style rules, the look-ahead θ̂ for DANA/LWP).
-    /// Returns a reference to the retained copy.
+    /// Returns a reference to the retained copy.  Pulls are master-side
+    /// initiated, so a pull for a retired slot is a caller bug (panics),
+    /// unlike the racy push path which errors recoverably.
     pub fn pull(&mut self, worker: usize) -> &[f32] {
+        assert!(
+            self.worker_is_live(worker),
+            "pull for retired/unknown worker {worker}"
+        );
         let s = self.current_step();
         // Send into the retained buffer, then hand out a view of it.
         let mut buf = std::mem::take(&mut self.sent[worker]);
@@ -161,8 +239,18 @@ impl ParameterServer {
     /// Worker `worker` delivers its message (gradient or update vector).
     /// Applies schedule + momentum correction, records metrics, advances
     /// the master step. Returns the [`Step`] that was applied.
-    pub fn push(&mut self, worker: usize, msg: &[f32]) -> Step {
-        assert!(
+    ///
+    /// A push from an unknown or retired worker — an in-flight update that
+    /// raced a leave — is a recoverable error: nothing is applied and the
+    /// caller may drop the message and continue.
+    pub fn push(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        anyhow::ensure!(
+            worker < self.live.len(),
+            "push from unknown worker {worker} (slots: {})",
+            self.live.len()
+        );
+        anyhow::ensure!(self.live[worker], "push from retired worker {worker}");
+        anyhow::ensure!(
             self.has_pulled[worker],
             "worker {worker} pushed before ever pulling"
         );
@@ -191,7 +279,7 @@ impl ParameterServer {
 
         self.alg.master_apply(worker, msg, &self.sent[worker], s);
         self.master_step += 1;
-        s
+        Ok(s)
     }
 }
 
@@ -202,6 +290,22 @@ impl Master for ParameterServer {
 
     fn workers(&self) -> usize {
         self.sent.len()
+    }
+
+    fn live_workers(&self) -> usize {
+        self.n_live()
+    }
+
+    fn is_live(&self, worker: usize) -> bool {
+        self.worker_is_live(worker)
+    }
+
+    fn add_worker(&mut self) -> usize {
+        ParameterServer::add_worker(self)
+    }
+
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
+        ParameterServer::remove_worker(self, worker, policy)
     }
 
     fn steps_done(&self) -> u64 {
@@ -228,7 +332,7 @@ impl Master for ParameterServer {
         out.copy_from_slice(self.pull(worker));
     }
 
-    fn push_update(&mut self, worker: usize, msg: &[f32]) -> Step {
+    fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
         self.push(worker, msg)
     }
 
@@ -271,16 +375,49 @@ mod tests {
         let mut ps = server(AlgorithmKind::Asgd, 2, 4);
         let p = ps.pull(0).to_vec();
         assert_eq!(p, vec![1.0; 4]);
-        ps.push(0, &[1.0; 4]);
+        ps.push(0, &[1.0; 4]).unwrap();
         assert_eq!(ps.master_step(), 1);
         assert!(ps.theta()[0] < 1.0);
     }
 
     #[test]
-    #[should_panic(expected = "pushed before ever pulling")]
-    fn push_without_pull_panics() {
+    fn push_without_pull_is_recoverable_error() {
         let mut ps = server(AlgorithmKind::Asgd, 2, 4);
-        ps.push(1, &[0.0; 4]);
+        let err = ps.push(1, &[0.0; 4]).unwrap_err();
+        assert!(err.to_string().contains("pushed before ever pulling"));
+        assert_eq!(ps.master_step(), 0, "failed push must not advance");
+        // the server is still usable afterwards
+        ps.pull(1);
+        ps.push(1, &[0.0; 4]).unwrap();
+    }
+
+    #[test]
+    fn push_from_retired_worker_is_recoverable_error() {
+        let mut ps = server(AlgorithmKind::DanaZero, 3, 4);
+        ps.pull(1);
+        ps.remove_worker(1, LeavePolicy::Retire).unwrap();
+        let err = ps.push(1, &[0.1; 4]).unwrap_err();
+        assert!(err.to_string().contains("retired worker 1"), "{err}");
+        assert!(ps.push(7, &[0.1; 4]).is_err(), "unknown slot rejected");
+        assert_eq!(ps.master_step(), 0);
+        // double-remove errors too
+        assert!(ps.remove_worker(1, LeavePolicy::Retire).is_err());
+    }
+
+    #[test]
+    fn membership_reuses_slots_and_counts_live() {
+        let mut ps = server(AlgorithmKind::MultiAsgd, 3, 4);
+        assert_eq!((ps.n_workers(), ps.n_live()), (3, 3));
+        ps.remove_worker(0, LeavePolicy::Retire).unwrap();
+        assert_eq!((ps.n_workers(), ps.n_live()), (3, 2));
+        assert_eq!(ps.add_worker(), 0, "lowest retired slot reused");
+        assert_eq!(ps.add_worker(), 3, "then append");
+        assert_eq!((ps.n_workers(), ps.n_live()), (4, 4));
+        // a rejoined slot must re-pull before pushing
+        let err = ps.push(0, &[0.0; 4]).unwrap_err();
+        assert!(err.to_string().contains("before ever pulling"));
+        ps.pull(0);
+        ps.push(0, &[1.0; 4]).unwrap();
     }
 
     #[test]
@@ -290,9 +427,9 @@ mod tests {
         ps.pull(0);
         ps.pull(1);
         ps.pull(2);
-        ps.push(1, &[0.1; 2]); // lag 0
-        ps.push(2, &[0.1; 2]); // lag 1
-        ps.push(0, &[0.1; 2]); // lag 2
+        ps.push(1, &[0.1; 2]).unwrap(); // lag 0
+        ps.push(2, &[0.1; 2]).unwrap(); // lag 1
+        ps.push(0, &[0.1; 2]).unwrap(); // lag 2
         let lags: Vec<u64> = ps.metrics.rows().iter().map(|r| r.lag).collect();
         assert_eq!(lags, vec![0, 1, 2]);
     }
@@ -302,11 +439,11 @@ mod tests {
         let mut ps = server(AlgorithmKind::Asgd, 1, 8);
         ps.metrics.set_every(1);
         ps.pull(0);
-        ps.push(0, &[0.5; 8]);
+        ps.push(0, &[0.5; 8]).unwrap();
         assert_eq!(ps.metrics.rows()[0].gap, 0.0);
         // second round: worker pulled fresh params, still no interleaving
         ps.pull(0);
-        ps.push(0, &[0.5; 8]);
+        ps.push(0, &[0.5; 8]).unwrap();
         assert_eq!(ps.metrics.rows()[1].gap, 0.0);
     }
 
@@ -316,8 +453,8 @@ mod tests {
         ps.metrics.set_every(1);
         ps.pull(0);
         ps.pull(1);
-        ps.push(1, &[1.0; 8]);
-        ps.push(0, &[1.0; 8]); // worker 0's params are now one update stale
+        ps.push(1, &[1.0; 8]).unwrap();
+        ps.push(0, &[1.0; 8]).unwrap(); // worker 0's params now one update stale
         let rows = ps.metrics.rows();
         assert_eq!(rows[0].gap, 0.0);
         assert!(rows[1].gap > 0.0);
@@ -342,9 +479,19 @@ mod tests {
             assert_eq!(m.algo_kind(), AlgorithmKind::DanaZero);
             let p = m.pull_params(0);
             assert_eq!(p, theta0);
-            m.push_update(0, &[1.0; 8]);
+            m.push_update(0, &[1.0; 8]).unwrap();
             assert_eq!(m.steps_done(), 1);
             assert!(m.theta_vec()[0] < 1.0);
+            // membership through the trait: join, leave, recoverable push
+            assert_eq!(m.live_workers(), 2);
+            let w = m.add_worker();
+            assert_eq!(w, 2);
+            m.pull_params(w);
+            m.push_update(w, &[0.5; 8]).unwrap();
+            m.remove_worker(w, LeavePolicy::Fold).unwrap();
+            assert!(!m.is_live(w));
+            assert!(m.push_update(w, &[0.5; 8]).is_err());
+            assert_eq!(m.live_workers(), 2);
         }
     }
 
@@ -370,8 +517,8 @@ mod tests {
                 assert!((x - y).abs() < 1e-6, "step {step}: {x} vs {y}");
             }
             let g: Vec<f32> = a.iter().map(|&x| 0.1 * x + 0.01).collect();
-            mono.push_update(w, &g);
-            shrd.push_update(w, &g);
+            mono.push_update(w, &g).unwrap();
+            shrd.push_update(w, &g).unwrap();
         }
     }
 
@@ -379,7 +526,7 @@ mod tests {
     fn dana_send_differs_from_theta_once_momentum_exists() {
         let mut ps = server(AlgorithmKind::DanaZero, 2, 4);
         ps.pull(0);
-        ps.push(0, &[1.0; 4]);
+        ps.push(0, &[1.0; 4]).unwrap();
         let theta = ps.theta().to_vec();
         let hat = ps.pull(1).to_vec();
         assert_ne!(theta, hat, "look-ahead must differ once v != 0");
@@ -404,7 +551,7 @@ mod tests {
         );
         for _ in 0..12 {
             ps.pull(0);
-            ps.push(0, &[1.0, 1.0]);
+            ps.push(0, &[1.0, 1.0]).unwrap();
         }
         // if we got here without NaN and theta is finite, correction applied;
         // detailed numeric equivalence is covered in optimizer tests.

@@ -35,7 +35,8 @@ use super::metrics::{MetricRow, MetricsRecorder};
 use super::Master;
 use crate::math;
 use crate::optim::{
-    make_algorithm, Algorithm, AlgorithmKind, ApplyStats, LrSchedule, Step, WorkerState,
+    claim_slot, make_algorithm, Algorithm, AlgorithmKind, ApplyStats, LeavePolicy, LrSchedule,
+    Step, WorkerState, ANY_SLOT,
 };
 use std::ops::Range;
 
@@ -77,6 +78,8 @@ pub struct ShardedParameterServer {
     pulled_at: Vec<u64>,
     /// Whether each worker holds valid pulled parameters.
     has_pulled: Vec<bool>,
+    /// Slot liveness (elastic membership), mirrored by every shard.
+    live: Vec<bool>,
     master_step: u64,
     last_eta: f32,
     momentum_correction: bool,
@@ -111,6 +114,7 @@ impl ShardedParameterServer {
             schedule,
             pulled_at: vec![0; n_workers],
             has_pulled: vec![false; n_workers],
+            live: vec![true; n_workers],
             master_step: 0,
             last_eta,
             momentum_correction: true,
@@ -140,8 +144,62 @@ impl ShardedParameterServer {
         self.shards.len()
     }
 
+    /// Worker slots ever allocated (live + retired).
     pub fn n_workers(&self) -> usize {
         self.pulled_at.len()
+    }
+
+    /// Workers currently in the cluster.
+    pub fn n_live(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    pub fn worker_is_live(&self, worker: usize) -> bool {
+        self.live.get(worker).copied().unwrap_or(false)
+    }
+
+    /// A worker joins: the membership change fans out across *all* shards
+    /// before this returns (single `&mut self` critical section), so the
+    /// sharded≡monolithic contract holds through churn — every shard
+    /// allocates the same slot ([`claim_slot`] is deterministic).
+    pub fn add_worker(&mut self) -> usize {
+        let slot = claim_slot(&mut self.live);
+        for sh in self.shards.iter_mut() {
+            let alg_slot = sh.alg.add_worker();
+            debug_assert!(
+                alg_slot == ANY_SLOT || alg_slot == slot,
+                "shard allocated slot {alg_slot}, server allocated {slot}"
+            );
+            if slot == sh.sent.len() {
+                sh.sent.push(vec![0.0; sh.range.len()]);
+            } else {
+                sh.sent[slot].fill(0.0);
+            }
+        }
+        if slot == self.pulled_at.len() {
+            self.pulled_at.push(0);
+            self.has_pulled.push(false);
+        } else {
+            self.pulled_at[slot] = 0;
+            self.has_pulled[slot] = false;
+        }
+        slot
+    }
+
+    /// A worker leaves: retire its slot on every shard atomically (w.r.t.
+    /// pushes/pulls, which also need `&mut self`).
+    pub fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.worker_is_live(worker),
+            "remove_worker: worker {worker} is not live (slots: {})",
+            self.live.len()
+        );
+        self.live[worker] = false;
+        self.has_pulled[worker] = false;
+        for sh in self.shards.iter_mut() {
+            sh.alg.remove_worker(worker, policy);
+        }
+        Ok(())
     }
 
     pub fn master_step(&self) -> u64 {
@@ -186,6 +244,10 @@ impl ShardedParameterServer {
 
     /// Allocation-free pull into a caller-retained k-length buffer.
     pub fn pull_into_buf(&mut self, worker: usize, out: &mut [f32]) {
+        assert!(
+            self.worker_is_live(worker),
+            "pull for retired/unknown worker {worker}"
+        );
         assert_eq!(
             out.len(),
             self.k,
@@ -222,14 +284,19 @@ impl ShardedParameterServer {
     /// server's push exactly: schedule + momentum correction, metric tap
     /// (reduced across shards), then the (possibly two-phase) apply fanned
     /// out over shards.  Returns the [`Step`] that was applied.
-    pub fn push(&mut self, worker: usize, msg: &[f32]) -> Step {
-        assert!(
+    pub fn push(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        anyhow::ensure!(
+            worker < self.live.len(),
+            "push from unknown worker {worker} (slots: {})",
+            self.live.len()
+        );
+        anyhow::ensure!(self.live[worker], "push from retired worker {worker}");
+        anyhow::ensure!(
             self.has_pulled[worker],
             "worker {worker} pushed before ever pulling"
         );
-        assert_eq!(
-            msg.len(),
-            self.k,
+        anyhow::ensure!(
+            msg.len() == self.k,
             "message length {} != parameter count {}",
             msg.len(),
             self.k
@@ -286,7 +353,7 @@ impl ShardedParameterServer {
             }
         });
         self.master_step += 1;
-        s
+        Ok(s)
     }
 }
 
@@ -297,6 +364,22 @@ impl Master for ShardedParameterServer {
 
     fn workers(&self) -> usize {
         self.n_workers()
+    }
+
+    fn live_workers(&self) -> usize {
+        self.n_live()
+    }
+
+    fn is_live(&self, worker: usize) -> bool {
+        self.worker_is_live(worker)
+    }
+
+    fn add_worker(&mut self) -> usize {
+        ShardedParameterServer::add_worker(self)
+    }
+
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
+        ShardedParameterServer::remove_worker(self, worker, policy)
     }
 
     fn steps_done(&self) -> u64 {
@@ -323,7 +406,7 @@ impl Master for ShardedParameterServer {
         self.pull_into_buf(worker, out);
     }
 
-    fn push_update(&mut self, worker: usize, msg: &[f32]) -> Step {
+    fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
         self.push(worker, msg)
     }
 
@@ -383,15 +466,14 @@ mod tests {
         );
         let p = ps.pull(0);
         assert_eq!(p, vec![1.0; 10]);
-        ps.push(0, &[1.0; 10]);
+        ps.push(0, &[1.0; 10]).unwrap();
         assert_eq!(ps.master_step(), 1);
         assert!(ps.theta_vec()[0] < 1.0);
         assert_eq!(ps.n_shards(), 3);
     }
 
     #[test]
-    #[should_panic(expected = "pushed before ever pulling")]
-    fn push_without_pull_panics() {
+    fn push_without_pull_is_recoverable_error() {
         let mut ps = ShardedParameterServer::new(
             AlgorithmKind::Asgd,
             &[1.0f32; 4],
@@ -399,7 +481,36 @@ mod tests {
             2,
             2,
         );
-        ps.push(1, &[0.0; 4]);
+        let err = ps.push(1, &[0.0; 4]).unwrap_err();
+        assert!(err.to_string().contains("pushed before ever pulling"));
+        ps.pull(1);
+        ps.push(1, &[0.0; 4]).unwrap();
+    }
+
+    #[test]
+    fn membership_fans_out_across_all_shards() {
+        let k = 9;
+        let mut ps = ShardedParameterServer::new(
+            AlgorithmKind::DanaZero,
+            &vec![0.0f32; k],
+            schedule(2),
+            2,
+            4,
+        );
+        ps.pull(0);
+        ps.push(0, &vec![1.0f32; k]).unwrap();
+        // worker 0 leaves (retire): every shard's v⁰ slice drops its vᶦ,
+        // so a fresh pull equals plain theta again (zero look-ahead).
+        ps.remove_worker(0, LeavePolicy::Retire).unwrap();
+        assert_eq!(ps.n_live(), 1);
+        assert!(ps.push(0, &vec![1.0f32; k]).is_err(), "retired push rejected");
+        let hat = ps.pull(1);
+        assert_eq!(hat, ps.theta_vec(), "v0 retired on every shard");
+        // rejoin reuses slot 0 on every shard
+        assert_eq!(ps.add_worker(), 0);
+        let p = ps.pull(0);
+        assert_eq!(p.len(), k);
+        ps.push(0, &vec![0.5f32; k]).unwrap();
     }
 
     #[test]
@@ -428,7 +539,7 @@ mod tests {
             4,
         );
         ps.pull(0);
-        ps.push(0, &vec![1.0f32; k]);
+        ps.push(0, &vec![1.0f32; k]).unwrap();
         let theta = ps.theta_vec();
         let hat = ps.pull(1);
         for i in 0..k {
@@ -466,8 +577,8 @@ mod tests {
             let pb = b.pull(w);
             assert_eq!(pa, pb, "sends diverged at step {step}");
             let g: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * 0.1).collect();
-            a.push(w, &g);
-            b.push(w, &g);
+            a.push(w, &g).unwrap();
+            b.push(w, &g).unwrap();
         }
         assert_eq!(a.theta_vec(), b.theta_vec());
     }

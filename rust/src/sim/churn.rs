@@ -1,0 +1,271 @@
+//! Declarative cluster-churn schedules.
+//!
+//! A [`ChurnSchedule`] is a list of membership events pinned to fractions
+//! of the run's master-step budget: workers join, leave, or suffer
+//! straggler onset (their mean batch time is rescaled).  The schedule is
+//! *declarative* — it names what happens and when, not which heap entries
+//! to touch — and the event stream ([`super::AsyncSchedule`]) materializes
+//! it deterministically: slot assignment follows the same
+//! lowest-retired-else-append rule as the servers and algorithms
+//! ([`crate::optim::claim_slot`]), and events that name no worker pick a
+//! random *live* one from the schedule's seeded RNG.
+//!
+//! Why this matters here: "Asynchrony begets Momentum" (Mitliagkas et al.
+//! 2016) shows the effective momentum of ASGD is a function of the number
+//! of live workers, so membership changes silently re-parameterize the
+//! optimization problem — exactly the regime in which DANA's per-worker
+//! momentum decomposition must keep v⁰ = Σ live vᶦ intact.
+//!
+//! CLI grammar (comma-separated events):
+//!
+//! ```text
+//! leave@0.3:2      worker 2 leaves at 30% of the run
+//! leave@0.3        a random live worker leaves at 30%
+//! join@0.5         a worker joins at 50% (slot: lowest retired, else new)
+//! slow@0.6:0=4x    worker 0's mean batch time x4 at 60% (straggler onset)
+//! slow@0.6=4x      same, random live victim
+//! ```
+
+/// One membership action.  `None` worker = pick a random live one at fire
+/// time (seeded by the event stream's RNG).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChurnAction {
+    /// A worker joins the cluster.
+    Join,
+    /// A worker leaves the cluster.
+    Leave(Option<usize>),
+    /// Straggler onset: the worker's mean execution time is multiplied by
+    /// the factor (>1 slower, <1 faster).
+    SpeedChange(Option<usize>, f64),
+}
+
+/// One scheduled event: fire `action` once `at` of the run's master steps
+/// have completed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    /// Fraction of the run's total master steps in [0, 1).
+    pub at: f64,
+    pub action: ChurnAction,
+}
+
+/// A declarative membership schedule (empty = fixed cluster, which is
+/// guaranteed to reproduce the pre-elastic trajectories bit-for-bit).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ChurnSchedule {
+    pub events: Vec<ChurnEvent>,
+}
+
+impl ChurnSchedule {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the CLI grammar (see module docs); `""` is the empty schedule.
+    pub fn parse(spec: &str) -> anyhow::Result<ChurnSchedule> {
+        let mut events = Vec::new();
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (kind, rest) = tok
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("churn event {tok:?}: missing '@<frac>'"))?;
+            // rest = frac[:worker][=factor[x]]
+            let (head, factor) = match rest.split_once('=') {
+                Some((h, f)) => {
+                    let f = f.trim_end_matches(['x', 'X']);
+                    (h, Some(f.parse::<f64>().map_err(|e| {
+                        anyhow::anyhow!("churn event {tok:?}: bad factor {f:?}: {e}")
+                    })?))
+                }
+                None => (rest, None),
+            };
+            let (frac, worker) = match head.split_once(':') {
+                Some((f, w)) => (f, Some(w.parse::<usize>().map_err(|e| {
+                    anyhow::anyhow!("churn event {tok:?}: bad worker {w:?}: {e}")
+                })?)),
+                None => (head, None),
+            };
+            let at: f64 = frac
+                .parse()
+                .map_err(|e| anyhow::anyhow!("churn event {tok:?}: bad fraction {frac:?}: {e}"))?;
+            anyhow::ensure!(
+                (0.0..1.0).contains(&at),
+                "churn event {tok:?}: fraction {at} outside [0, 1)"
+            );
+            let action = match kind.to_ascii_lowercase().as_str() {
+                "join" => {
+                    anyhow::ensure!(
+                        worker.is_none() && factor.is_none(),
+                        "churn event {tok:?}: join takes no worker or factor \
+                         (slots are assigned deterministically)"
+                    );
+                    ChurnAction::Join
+                }
+                "leave" => {
+                    anyhow::ensure!(factor.is_none(), "churn event {tok:?}: leave takes no factor");
+                    ChurnAction::Leave(worker)
+                }
+                "slow" => {
+                    let f = factor
+                        .ok_or_else(|| anyhow::anyhow!("churn event {tok:?}: slow needs '=<factor>[x]'"))?;
+                    anyhow::ensure!(f > 0.0, "churn event {tok:?}: factor must be > 0");
+                    ChurnAction::SpeedChange(worker, f)
+                }
+                other => anyhow::bail!("churn event {tok:?}: unknown kind {other:?} (join|leave|slow)"),
+            };
+            events.push(ChurnEvent { at, action });
+        }
+        Ok(ChurnSchedule { events })
+    }
+
+    /// Check the schedule can run over a cluster that starts with
+    /// `initial_workers`: the live count (which is independent of *which*
+    /// workers leave) must never reach zero, and explicitly named workers
+    /// must fit the slot capacity possible at that point (initial workers
+    /// plus joins fired so far — slots only grow on joins).  Which exact
+    /// slot is live at fire time can depend on random-victim leaves, so
+    /// the remaining fine-grained cases (e.g. leaving the same explicit
+    /// worker twice) are skipped gracefully at runtime instead.
+    pub fn validate(&self, initial_workers: usize) -> anyhow::Result<()> {
+        let mut live = initial_workers as i64;
+        let mut capacity = initial_workers;
+        for e in self.sorted() {
+            let named = match e.action {
+                ChurnAction::Join => {
+                    live += 1;
+                    capacity += 1;
+                    None
+                }
+                ChurnAction::Leave(w) => {
+                    live -= 1;
+                    anyhow::ensure!(
+                        live >= 1,
+                        "churn schedule empties the cluster at fraction {} \
+                         (started with {initial_workers} workers)",
+                        e.at
+                    );
+                    w
+                }
+                ChurnAction::SpeedChange(w, _) => w,
+            };
+            if let Some(w) = named {
+                anyhow::ensure!(
+                    w < capacity,
+                    "churn event at fraction {} names worker {w}, but at most \
+                     {capacity} slots can exist by then \
+                     ({initial_workers} initial + joins so far)",
+                    e.at
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Events sorted by firing fraction (stable: same-fraction events keep
+    /// their declaration order).
+    pub fn sorted(&self) -> Vec<ChurnEvent> {
+        let mut v = self.events.clone();
+        v.sort_by(|a, b| a.at.total_cmp(&b.at));
+        v
+    }
+
+    /// Translate fractions into absolute master-step thresholds for a run
+    /// of `total_steps`, sorted ascending.  Thresholds are clamped to
+    /// `total_steps - 1`: drivers only fire events strictly before the run
+    /// completes, so a late fraction (e.g. `0.999` of a short run, which
+    /// rounds up to the full budget) still fires before the final step
+    /// instead of silently never firing.
+    pub fn thresholds(&self, total_steps: u64) -> Vec<(u64, ChurnAction)> {
+        let cap = total_steps.saturating_sub(1);
+        self.sorted()
+            .into_iter()
+            .map(|e| (((e.at * total_steps as f64).round() as u64).min(cap), e.action))
+            .collect()
+    }
+}
+
+impl std::str::FromStr for ChurnSchedule {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        ChurnSchedule::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_readme_spec() {
+        let c = ChurnSchedule::parse("leave@0.3:2,join@0.5,slow@0.6:0=4x").unwrap();
+        assert_eq!(
+            c.events,
+            vec![
+                ChurnEvent { at: 0.3, action: ChurnAction::Leave(Some(2)) },
+                ChurnEvent { at: 0.5, action: ChurnAction::Join },
+                ChurnEvent { at: 0.6, action: ChurnAction::SpeedChange(Some(0), 4.0) },
+            ]
+        );
+        // random-victim + no-x-suffix forms
+        let c = ChurnSchedule::parse("leave@0.25, slow@0.5=2").unwrap();
+        assert_eq!(c.events[0].action, ChurnAction::Leave(None));
+        assert_eq!(c.events[1].action, ChurnAction::SpeedChange(None, 2.0));
+        assert!(ChurnSchedule::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "leave",           // no @
+            "leave@1.5",       // frac out of range
+            "join@0.5:3",      // join with explicit worker
+            "slow@0.5",        // slow without factor
+            "slow@0.5=0x",     // non-positive factor
+            "nap@0.5",         // unknown kind
+            "leave@x",         // unparsable frac
+        ] {
+            assert!(ChurnSchedule::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_cluster_emptying() {
+        let c = ChurnSchedule::parse("leave@0.2,leave@0.4").unwrap();
+        assert!(c.validate(2).is_err());
+        assert!(c.validate(3).is_ok());
+        // a join in between rescues it
+        let c = ChurnSchedule::parse("leave@0.2,join@0.3,leave@0.4").unwrap();
+        assert!(c.validate(2).is_ok());
+        // ordering is by fraction, not declaration order
+        let c = ChurnSchedule::parse("leave@0.4,join@0.3,leave@0.2").unwrap();
+        assert!(c.validate(2).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_workers() {
+        // worker 9 can never exist in a 4-worker cluster with no joins
+        let c = ChurnSchedule::parse("slow@0.5:9=2x").unwrap();
+        assert!(c.validate(4).is_err());
+        let c = ChurnSchedule::parse("leave@0.5:4").unwrap();
+        assert!(c.validate(4).is_err());
+        // ...but a join raises the possible slot capacity
+        let c = ChurnSchedule::parse("join@0.3,slow@0.5:4=2x").unwrap();
+        assert!(c.validate(4).is_ok());
+    }
+
+    #[test]
+    fn thresholds_scale_to_total_steps() {
+        let c = ChurnSchedule::parse("join@0.5,leave@0.25:1").unwrap();
+        let t = c.thresholds(200);
+        assert_eq!(t[0], (50, ChurnAction::Leave(Some(1))));
+        assert_eq!(t[1], (100, ChurnAction::Join));
+    }
+
+    #[test]
+    fn late_fractions_clamp_below_the_final_step() {
+        // 0.999 * 200 rounds to 200, which would never fire (drivers gate
+        // on step < total); it must clamp to 199.
+        let c = ChurnSchedule::parse("join@0.999").unwrap();
+        assert_eq!(c.thresholds(200)[0].0, 199);
+        assert_eq!(c.thresholds(0)[0].0, 0, "degenerate budget stays sane");
+    }
+}

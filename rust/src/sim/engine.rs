@@ -8,14 +8,24 @@
 //! *real* gradient computation (via the PJRT runtime) for each one, so the
 //! schedule is simulated but the learning dynamics are genuine.
 //!
+//! [`AsyncSchedule`] is a *cluster-event* stream, not just a completion
+//! stream: a declarative [`ChurnSchedule`] splices membership events —
+//! [`ClusterEvent::Join`], [`ClusterEvent::Leave`], straggler onset via
+//! [`ClusterEvent::SpeedChange`] — between completions, pinned to
+//! fractions of the run's master-step budget.  With an empty churn
+//! schedule the stream is bit-for-bit the pre-elastic completion stream
+//! (no extra RNG draws, same heap order), which the churn equivalence
+//! suite pins.
+//!
 //! Synchronous mode (SSGD) implements the barrier: a round completes when
 //! the slowest worker finishes, which is the mechanism behind Fig 12's
 //! speedup comparison.
 
+use super::churn::{ChurnAction, ChurnSchedule};
 use super::gamma::ExecTimeModel;
 use crate::util::rng::Rng;
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// One asynchronous completion: worker `worker` finishes a batch at `time`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -24,9 +34,27 @@ pub struct Completion {
     pub worker: usize,
 }
 
-// BinaryHeap is a max-heap; invert the order to pop the earliest event.
+/// One event of the simulated cluster, in virtual-time order.
 #[derive(Debug, Clone, Copy, PartialEq)]
-struct HeapItem(Completion);
+pub enum ClusterEvent {
+    /// Worker finished a batch (the only event an empty churn schedule
+    /// ever produces).
+    Completion(Completion),
+    /// A worker joined; `worker` is the slot the stream assigned (lowest
+    /// retired, else a brand-new slot — the same rule the servers use).
+    Join { time: f64, worker: usize },
+    /// A worker left; its in-flight batch is discarded.
+    Leave { time: f64, worker: usize },
+    /// Straggler onset: `worker`'s mean batch time was multiplied by
+    /// `factor` (future dispatches; the in-flight batch keeps its time).
+    SpeedChange { time: f64, worker: usize, factor: f64 },
+}
+
+// BinaryHeap is a max-heap; invert the order to pop the earliest event.
+// The dispatch generation rides along but does NOT participate in the
+// ordering, keeping the pop order identical to the pre-elastic engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct HeapItem(Completion, u32);
 
 impl Eq for HeapItem {}
 
@@ -46,12 +74,22 @@ impl PartialOrd for HeapItem {
     }
 }
 
-/// Asynchronous schedule generator: an infinite stream of completions.
+/// Asynchronous cluster-event generator: an infinite stream of completions
+/// interleaved with the (finite) churn events of a [`ChurnSchedule`].
 pub struct AsyncSchedule {
     model: ExecTimeModel,
     rng: Rng,
     heap: BinaryHeap<HeapItem>,
     now: f64,
+    /// Slot liveness; leaves retire slots, joins reuse the lowest retired.
+    live: Vec<bool>,
+    /// Dispatch generation per slot: bumped on leave so a stale in-flight
+    /// completion is discarded even if the slot is later reused.
+    gen: Vec<u32>,
+    /// Completions emitted so far (drives churn thresholds).
+    emitted: u64,
+    /// Churn events still to fire, as (master-step threshold, action).
+    pending: VecDeque<(u64, ChurnAction)>,
 }
 
 impl AsyncSchedule {
@@ -59,9 +97,28 @@ impl AsyncSchedule {
         let mut heap = BinaryHeap::new();
         for w in 0..model.n_workers() {
             let t = model.sample(w, &mut rng);
-            heap.push(HeapItem(Completion { time: t, worker: w }));
+            heap.push(HeapItem(Completion { time: t, worker: w }, 0));
         }
-        AsyncSchedule { model, rng, heap, now: 0.0 }
+        let n = model.n_workers();
+        AsyncSchedule {
+            model,
+            rng,
+            heap,
+            now: 0.0,
+            live: vec![true; n],
+            gen: vec![0; n],
+            emitted: 0,
+            pending: VecDeque::new(),
+        }
+    }
+
+    /// Attach a churn schedule for a run of `total_steps` master steps.
+    /// Validates that the cluster never empties.  Consumes no RNG, so an
+    /// empty schedule leaves the stream bit-for-bit unchanged.
+    pub fn with_churn(mut self, churn: &ChurnSchedule, total_steps: u64) -> anyhow::Result<Self> {
+        churn.validate(self.live.iter().filter(|&&l| l).count())?;
+        self.pending = churn.thresholds(total_steps).into();
+        Ok(self)
     }
 
     /// Simulated time of the most recent completion.
@@ -69,28 +126,145 @@ impl AsyncSchedule {
         self.now
     }
 
-    /// Pop the next completion and immediately re-dispatch that worker on
-    /// its next batch (workers never idle in ASGD).
+    /// Workers currently live in the simulated cluster.
+    pub fn live_workers(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    /// Pick the i-th live worker for a random-victim churn event.
+    fn random_live(&mut self) -> usize {
+        let n = self.live_workers() as u64;
+        debug_assert!(n > 0);
+        let nth = self.rng.below(n) as usize;
+        self.live
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l)
+            .nth(nth)
+            .map(|(w, _)| w)
+            .expect("live worker exists")
+    }
+
+    /// Materialize one churn action.  Returns `None` when the action is a
+    /// no-op at fire time — a leave or speed change naming a worker that is
+    /// already retired/unknown (the coarse cases are caught up front by
+    /// [`ChurnSchedule::validate`]; what remains is skipped with a note, in
+    /// the same spirit as the servers' recoverable retired-worker pushes).
+    fn fire_churn(&mut self, action: ChurnAction) -> Option<ClusterEvent> {
+        match action {
+            ChurnAction::Join => {
+                let slot = crate::optim::claim_slot(&mut self.live);
+                if slot == self.gen.len() {
+                    self.gen.push(0);
+                    let m = self.model.add_machine(&mut self.rng);
+                    debug_assert_eq!(m, slot);
+                } else {
+                    // a reused slot is new hardware: fresh machine mean, no
+                    // inherited straggler rescale
+                    self.model.reset_machine(slot, &mut self.rng);
+                }
+                // dispatch the joiner's first batch from `now`
+                let dur = self.model.sample(slot, &mut self.rng);
+                self.heap.push(HeapItem(
+                    Completion { time: self.now + dur, worker: slot },
+                    self.gen[slot],
+                ));
+                Some(ClusterEvent::Join { time: self.now, worker: slot })
+            }
+            ChurnAction::Leave(who) => {
+                let w = match who {
+                    Some(w) => {
+                        if !self.live.get(w).copied().unwrap_or(false) {
+                            eprintln!(
+                                "churn: skipping leave of retired/unknown worker {w}"
+                            );
+                            return None;
+                        }
+                        w
+                    }
+                    None => self.random_live(),
+                };
+                self.live[w] = false;
+                // invalidate the in-flight batch lazily via the generation
+                self.gen[w] = self.gen[w].wrapping_add(1);
+                Some(ClusterEvent::Leave { time: self.now, worker: w })
+            }
+            ChurnAction::SpeedChange(who, factor) => {
+                let w = match who {
+                    Some(w) => {
+                        // a retired machine never dispatches (and a joiner
+                        // reusing the slot gets a fresh one), so rescaling
+                        // it would be a silent no-op — skip like Leave does
+                        if !self.live.get(w).copied().unwrap_or(false) {
+                            eprintln!(
+                                "churn: skipping speed change of retired/unknown worker {w}"
+                            );
+                            return None;
+                        }
+                        w
+                    }
+                    None => self.random_live(),
+                };
+                self.model.rescale(w, factor);
+                Some(ClusterEvent::SpeedChange { time: self.now, worker: w, factor })
+            }
+        }
+    }
+
+    /// The next cluster event: a due churn event if one has come up,
+    /// otherwise the next completion (that worker is immediately
+    /// re-dispatched — workers never idle in ASGD).
+    pub fn next_event(&mut self) -> ClusterEvent {
+        while let Some(&(at, action)) = self.pending.front() {
+            if self.emitted < at {
+                break;
+            }
+            self.pending.pop_front();
+            if let Some(ev) = self.fire_churn(action) {
+                return ev;
+            }
+        }
+        loop {
+            let HeapItem(c, g) = self
+                .heap
+                .pop()
+                .expect("cluster has no live workers (churn validation should prevent this)");
+            if !self.live[c.worker] || g != self.gen[c.worker] {
+                continue; // stale: the worker left after this dispatch
+            }
+            self.now = c.time;
+            let dur = self.model.sample(c.worker, &mut self.rng);
+            self.heap
+                .push(HeapItem(Completion { time: c.time + dur, worker: c.worker }, g));
+            self.emitted += 1;
+            return ClusterEvent::Completion(c);
+        }
+    }
+
+    /// Pop the next *completion*, transparently applying any due churn
+    /// events along the way (membership-agnostic consumers: speedup sims,
+    /// the property suites).
     pub fn next_completion(&mut self) -> Completion {
-        let HeapItem(c) = self.heap.pop().expect("heap never empties");
-        self.now = c.time;
-        let dur = self.model.sample(c.worker, &mut self.rng);
-        self.heap.push(HeapItem(Completion { time: c.time + dur, worker: c.worker }));
-        c
+        loop {
+            if let ClusterEvent::Completion(c) = self.next_event() {
+                return c;
+            }
+        }
     }
 
     /// Materialize the next `n` completions (for schedule-replay tests).
-    pub fn take(&mut self, n: usize) -> Vec<Completion> {
+    /// Named `take_n` so it does not shadow `Iterator::take` on the
+    /// receiver.
+    pub fn take_n(&mut self, n: usize) -> Vec<Completion> {
         (0..n).map(|_| self.next_completion()).collect()
     }
 }
 
 /// The schedule is an infinite stream of completions; the iterator view
 /// lets consumers drive adapters over it (the equivalence property suite
-/// replays one gamma-model worker ordering into several servers).  Note
-/// the inherent [`AsyncSchedule::take`] shadows `Iterator::take` on the
-/// receiver itself — adapt through a borrow (`(&mut s).map(...)`) when the
-/// iterator combinators are wanted.
+/// replays one gamma-model worker ordering into several servers).  Churn
+/// events are applied transparently — use [`AsyncSchedule::next_event`]
+/// to observe them.
 impl Iterator for AsyncSchedule {
     type Item = Completion;
 
@@ -141,7 +315,7 @@ mod tests {
     fn completions_are_time_ordered() {
         let (m, rng) = model(Environment::Homogeneous, 8, 3);
         let mut s = AsyncSchedule::new(m, rng);
-        let evts = s.take(500);
+        let evts = s.take_n(500);
         for w in evts.windows(2) {
             assert!(w[0].time <= w[1].time);
         }
@@ -151,7 +325,7 @@ mod tests {
     fn all_workers_participate() {
         let (m, rng) = model(Environment::Homogeneous, 8, 4);
         let mut s = AsyncSchedule::new(m, rng);
-        let evts = s.take(200);
+        let evts = s.take_n(200);
         let mut seen = [0usize; 8];
         for e in &evts {
             seen[e.worker] += 1;
@@ -167,7 +341,7 @@ mod tests {
         let (m, rng) = model(Environment::Homogeneous, 8, 5);
         let mut s = AsyncSchedule::new(m, rng);
         let k = 4000;
-        let evts = s.take(k);
+        let evts = s.take_n(k);
         let total_time = evts.last().unwrap().time;
         let throughput = k as f64 / total_time; // completions per unit time
         let ideal = 8.0 / 128.0;
@@ -205,9 +379,117 @@ mod tests {
     fn deterministic_given_seed() {
         let (m1, r1) = model(Environment::Heterogeneous, 4, 9);
         let (m2, r2) = model(Environment::Heterogeneous, 4, 9);
-        let a = AsyncSchedule::new(m1, r1).take(100);
-        let b = AsyncSchedule::new(m2, r2).take(100);
+        let a = AsyncSchedule::new(m1, r1).take_n(100);
+        let b = AsyncSchedule::new(m2, r2).take_n(100);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_churn_is_bit_for_bit_identical() {
+        let (m1, r1) = model(Environment::Heterogeneous, 4, 13);
+        let (m2, r2) = model(Environment::Heterogeneous, 4, 13);
+        let mut plain = AsyncSchedule::new(m1, r1);
+        let mut churned = AsyncSchedule::new(m2, r2)
+            .with_churn(&crate::sim::ChurnSchedule::default(), 500)
+            .unwrap();
+        for _ in 0..500 {
+            assert_eq!(
+                ClusterEvent::Completion(plain.next_completion()),
+                churned.next_event()
+            );
+        }
+        assert_eq!(plain.now(), churned.now());
+    }
+
+    #[test]
+    fn leave_discards_in_flight_and_silences_worker() {
+        let (m, rng) = model(Environment::Homogeneous, 4, 17);
+        let churn = crate::sim::ChurnSchedule::parse("leave@0.1:2").unwrap();
+        let mut s = AsyncSchedule::new(m, rng).with_churn(&churn, 200).unwrap();
+        let mut left_at = None;
+        let mut steps = 0u64;
+        while steps < 200 {
+            match s.next_event() {
+                ClusterEvent::Completion(c) => {
+                    if left_at.is_some() {
+                        assert_ne!(c.worker, 2, "retired worker completed a batch");
+                    }
+                    steps += 1;
+                }
+                ClusterEvent::Leave { worker, .. } => {
+                    assert_eq!(worker, 2);
+                    left_at = Some(steps);
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        assert_eq!(left_at, Some(20));
+        assert_eq!(s.live_workers(), 3);
+    }
+
+    #[test]
+    fn join_reuses_retired_slot_then_appends() {
+        let (m, rng) = model(Environment::Homogeneous, 2, 19);
+        let churn = crate::sim::ChurnSchedule::parse("leave@0.1:0,join@0.3,join@0.5").unwrap();
+        let mut s = AsyncSchedule::new(m, rng).with_churn(&churn, 100).unwrap();
+        let mut joins = Vec::new();
+        let mut steps = 0;
+        let mut seen_after_rejoin = false;
+        while steps < 100 {
+            match s.next_event() {
+                ClusterEvent::Completion(c) => {
+                    steps += 1;
+                    if joins.len() == 2 && c.worker == 0 {
+                        seen_after_rejoin = true;
+                    }
+                }
+                ClusterEvent::Join { worker, .. } => joins.push(worker),
+                ClusterEvent::Leave { .. } => {}
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        assert_eq!(joins, vec![0, 2], "reuse slot 0, then append slot 2");
+        assert_eq!(s.live_workers(), 3);
+        assert!(seen_after_rejoin, "rejoined slot must produce completions");
+    }
+
+    #[test]
+    fn straggler_onset_shrinks_completion_share() {
+        let (m, rng) = model(Environment::Homogeneous, 4, 23);
+        let churn = crate::sim::ChurnSchedule::parse("slow@0.5:0=8x").unwrap();
+        let mut s = AsyncSchedule::new(m, rng).with_churn(&churn, 4000).unwrap();
+        let (mut before, mut after) = (0usize, 0usize);
+        let mut slowed = false;
+        let mut steps = 0;
+        while steps < 4000 {
+            match s.next_event() {
+                ClusterEvent::Completion(c) => {
+                    steps += 1;
+                    if c.worker == 0 {
+                        if slowed {
+                            after += 1;
+                        } else {
+                            before += 1;
+                        }
+                    }
+                }
+                ClusterEvent::SpeedChange { worker, factor, .. } => {
+                    assert_eq!((worker, factor), (0, 8.0));
+                    slowed = true;
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+        // equal share (~500 of 2000) before; ~1/8 the throughput after
+        assert!(before > 350, "before: {before}");
+        assert!(after < before / 3, "straggler kept its share: {before} -> {after}");
+    }
+
+    #[test]
+    fn emptying_churn_is_rejected_up_front() {
+        let (m, rng) = model(Environment::Homogeneous, 2, 29);
+        let churn = crate::sim::ChurnSchedule::parse("leave@0.1,leave@0.2").unwrap();
+        assert!(AsyncSchedule::new(m, rng).with_churn(&churn, 100).is_err());
     }
 
     #[test]
@@ -217,7 +499,7 @@ mod tests {
             .min_by(|&a, &b| m.machine_mean(a).total_cmp(&m.machine_mean(b)))
             .unwrap();
         let mut s = AsyncSchedule::new(m, rng);
-        let evts = s.take(1000);
+        let evts = s.take_n(1000);
         let counts = evts.iter().filter(|e| e.worker == fastest).count();
         assert!(counts > 250, "fastest worker should exceed fair share: {counts}");
     }

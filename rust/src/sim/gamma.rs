@@ -48,8 +48,14 @@ pub struct ExecTimeModel {
     alpha_task: f64,
     alpha_mach: f64,
     /// Per-machine scale β_task[j] (heterogeneous) or the shared machine
-    /// scale (homogeneous).
+    /// scale (homogeneous).  Mutated in place by [`ExecTimeModel::rescale`]
+    /// (straggler onset).
     beta_task: Vec<f64>,
+    /// The scale a *fresh* homogeneous machine receives (Alg 11's shared
+    /// q/α_mach, kept pristine so a rescaled machine 0 does not leak its
+    /// slowdown into joiners).  Unused in the heterogeneous regime, where
+    /// joiners sample their own persistent mean (Alg 12).
+    fresh_beta: f64,
 }
 
 impl ExecTimeModel {
@@ -63,20 +69,54 @@ impl ExecTimeModel {
         };
         let alpha_task = 1.0 / (V_TASK * V_TASK);
         let alpha_mach = 1.0 / (v_mach * v_mach);
-        let beta_task = match env {
+        let (beta_task, fresh_beta) = match env {
             Environment::Homogeneous => {
                 // Alg 11: q ~ G(alpha_task, mu/alpha_task) shared by all.
                 let q = rng.gamma(alpha_task, mu / alpha_task);
-                vec![q / alpha_mach; n_workers]
+                (vec![q / alpha_mach; n_workers], q / alpha_mach)
             }
             Environment::Heterogeneous => {
                 // Alg 12: p[j] ~ G(alpha_mach, mu/alpha_mach) per machine.
-                (0..n_workers)
+                let b: Vec<f64> = (0..n_workers)
                     .map(|_| rng.gamma(alpha_mach, mu / alpha_mach) / alpha_task)
-                    .collect()
+                    .collect();
+                (b, 0.0)
             }
         };
-        ExecTimeModel { env, mu, alpha_task, alpha_mach, beta_task }
+        ExecTimeModel { env, mu, alpha_task, alpha_mach, beta_task, fresh_beta }
+    }
+
+    /// A machine joins the cluster: appends a new slot and returns its
+    /// index.  Homogeneous: the joiner shares the cluster's mean (Alg 11);
+    /// heterogeneous: it draws its own persistent mean (Alg 12) from `rng`.
+    pub fn add_machine(&mut self, rng: &mut Rng) -> usize {
+        let beta = match self.env {
+            Environment::Homogeneous => self.fresh_beta,
+            Environment::Heterogeneous => {
+                rng.gamma(self.alpha_mach, self.mu / self.alpha_mach) / self.alpha_task
+            }
+        };
+        self.beta_task.push(beta);
+        self.beta_task.len() - 1
+    }
+
+    /// Straggler onset: multiply machine `j`'s mean execution time by
+    /// `factor` (>1 slower, <1 faster).  Applies to all future samples.
+    pub fn rescale(&mut self, j: usize, factor: f64) {
+        self.beta_task[j] *= factor;
+    }
+
+    /// Replace machine `j` with a fresh one (a joiner reusing a retired
+    /// slot is new hardware): homogeneous machines get the pristine shared
+    /// mean — any straggler rescale the old occupant suffered does not
+    /// leak — and heterogeneous ones draw a new persistent mean (Alg 12).
+    pub fn reset_machine(&mut self, j: usize, rng: &mut Rng) {
+        self.beta_task[j] = match self.env {
+            Environment::Homogeneous => self.fresh_beta,
+            Environment::Heterogeneous => {
+                rng.gamma(self.alpha_mach, self.mu / self.alpha_mach) / self.alpha_task
+            }
+        };
     }
 
     pub fn env(&self) -> Environment {
@@ -171,6 +211,35 @@ mod tests {
         for j in 1..4 {
             assert_eq!(m.machine_mean(0), m.machine_mean(j));
         }
+    }
+
+    #[test]
+    fn rescale_shifts_one_machine_mean() {
+        let mut rng = Rng::new(4);
+        let mut m = ExecTimeModel::new(Environment::Homogeneous, 4, 128, &mut rng);
+        let m0 = m.machine_mean(0);
+        m.rescale(0, 4.0);
+        assert!((m.machine_mean(0) / m0 - 4.0).abs() < 1e-9);
+        assert_eq!(m.machine_mean(1), m0, "other machines untouched");
+        // empirical check: samples track the new mean
+        let n = 4000;
+        let mean: f64 = (0..n).map(|_| m.sample(0, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean / (4.0 * m0) - 1.0).abs() < 0.1, "{mean} vs {}", 4.0 * m0);
+    }
+
+    #[test]
+    fn joining_machines_follow_the_regime() {
+        let mut rng = Rng::new(5);
+        let mut homo = ExecTimeModel::new(Environment::Homogeneous, 2, 128, &mut rng);
+        homo.rescale(0, 8.0); // must not leak into the joiner
+        let j = homo.add_machine(&mut rng);
+        assert_eq!(j, 2);
+        assert_eq!(homo.n_workers(), 3);
+        assert_eq!(homo.machine_mean(2), homo.machine_mean(1), "homo joiner shares the mean");
+        let mut het = ExecTimeModel::new(Environment::Heterogeneous, 2, 128, &mut rng);
+        let j = het.add_machine(&mut rng);
+        let mean = het.machine_mean(j);
+        assert!(mean > 0.0 && mean.is_finite());
     }
 
     #[test]

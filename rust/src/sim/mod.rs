@@ -1,9 +1,12 @@
-//! Cluster simulation: gamma execution-time model (Appendix A.4), event
-//! engine, and the theoretical speedup analysis (Fig 12).
+//! Cluster simulation: gamma execution-time model (Appendix A.4), the
+//! cluster-event engine (completions + membership churn), declarative
+//! churn schedules, and the theoretical speedup analysis (Fig 12).
 
+pub mod churn;
 pub mod engine;
 pub mod gamma;
 pub mod speedup;
 
-pub use engine::{AsyncSchedule, Completion, SyncSchedule};
+pub use churn::{ChurnAction, ChurnEvent, ChurnSchedule};
+pub use engine::{AsyncSchedule, ClusterEvent, Completion, SyncSchedule};
 pub use gamma::{Environment, ExecTimeModel};

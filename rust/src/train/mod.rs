@@ -47,12 +47,20 @@ pub struct TrainReport {
     pub steps: u64,
     /// True if any eval produced a non-finite loss (divergence guard).
     pub diverged: bool,
+    /// Workers that joined mid-run (cluster churn events).
+    pub workers_joined: usize,
+    /// Workers that left mid-run (cluster churn events).
+    pub workers_left: usize,
+    /// Worker threads lost to init/step failures (real-thread driver);
+    /// always 0 in the simulated drivers.
+    pub workers_lost: usize,
 }
 
 impl TrainReport {
-    /// Paper-style summary line.
+    /// Paper-style summary line; membership deltas are appended only when
+    /// the cluster actually changed.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{:<11} N={:<3} err={:6.2}% loss={:8.4} gap={:.2e} lag={:5.1} simt={:.0} ({:.1}s)",
             self.algorithm,
             self.n_workers,
@@ -62,6 +70,13 @@ impl TrainReport {
             self.mean_lag,
             self.sim_time,
             self.wall_secs
-        )
+        );
+        if self.workers_joined + self.workers_left + self.workers_lost > 0 {
+            s.push_str(&format!(
+                " churn(+{}/-{}/!{})",
+                self.workers_joined, self.workers_left, self.workers_lost
+            ));
+        }
+        s
     }
 }

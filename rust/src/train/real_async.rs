@@ -6,6 +6,18 @@
 //! push it replies with freshly pulled parameters, exactly the
 //! pull→compute→push cycle of Algorithm 1.
 //!
+//! Membership is elastic: a [`TrainConfig::churn`] schedule makes the
+//! driver spawn worker threads mid-run on `join` and stop them on `leave`
+//! (the master retires the slot, so a straggler's in-flight push is
+//! rejected as a recoverable error and dropped).  Worker failures are no
+//! longer invisible — a thread whose init or step errors *or panics*
+//! reports an exit message; the master retires its slot (its momentum follows
+//! `cfg.leave_policy`), counts it in [`TrainReport::workers_lost`], and
+//! fails fast with a clear error the moment no live thread remains to make
+//! FIFO progress, instead of hanging or erroring only when every sender is
+//! gone.  `slow@…` churn events are a no-op here: real threads run at
+//! hardware speed (the simulated drivers honor them).
+//!
 //! The driver is split from the gradient computation so the concurrency
 //! machinery is testable without PJRT:
 //!
@@ -19,15 +31,21 @@
 //! The worker-side optimizer transform (DANA-Slim's momentum) runs inside
 //! the worker thread via [`WorkerRule`] — state never crosses the channel,
 //! matching the paper's "completely eliminates the overhead at the master".
+//! The hot path is allocation-free on the master side: the worker's
+//! incoming message buffer is reused as its outgoing parameter buffer via
+//! [`crate::server::Master::pull_into`], and the Slim transform updates the gradient in
+//! place.
 
 use crate::config::TrainConfig;
 use crate::math;
 use crate::optim::{AlgorithmKind, LrSchedule};
 use crate::runtime::Engine;
 use crate::server::make_master;
+use crate::sim::ChurnAction;
 use crate::train::data_source::{evaluate, DataSource};
 use crate::train::{EvalPoint, TrainReport};
 use crate::util::rng::Rng;
+use std::collections::VecDeque;
 use std::sync::mpsc;
 
 /// Worker-side message transform, replicated per thread.
@@ -54,9 +72,8 @@ impl WorkerRule {
                 if v.len() != grad.len() {
                     *v = vec![0.0; grad.len()];
                 }
-                let mut send = vec![0.0f32; grad.len()];
-                math::slim_worker_update(&mut send, v, grad, gamma);
-                grad.copy_from_slice(&send);
+                // in place over the gradient buffer — no per-step scratch
+                math::slim_worker_update_inplace(v, grad, gamma);
             }
         }
     }
@@ -72,10 +89,23 @@ enum ToWorker {
     Stop,
 }
 
-struct FromWorker {
-    worker: usize,
-    msg: Vec<f32>,
-    loss: f32,
+/// Worker→master messages, tagged with the slot's spawn generation so a
+/// late message from a stopped incarnation cannot be misattributed to a
+/// joiner that reused the slot.
+enum FromWorker {
+    Update { worker: usize, gen: u32, msg: Vec<f32>, loss: f32 },
+    Exited { worker: usize, gen: u32, reason: String },
+}
+
+/// Best-effort message out of a caught panic payload.
+fn panic_reason(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panicked".to_string()
+    }
 }
 
 /// Run real-thread asynchronous training against the AOT/PJRT runtime.
@@ -125,6 +155,26 @@ pub fn synthetic_loss(theta: &[f32], curv: &[f32]) -> f64 {
     loss / theta.len().max(1) as f64
 }
 
+/// One noisy gradient draw of the synthetic objective:
+/// `out = curv ⊙ params + 0.01·N(0,1)` — the single definition every
+/// synthetic driver and test harness shares.
+pub fn synthetic_grad(params: &[f32], curv: &[f32], rng: &mut Rng, out: &mut [f32]) {
+    for ((g, &p), &c) in out.iter_mut().zip(params).zip(curv) {
+        *g = c * p + 0.01 * rng.normal() as f32;
+    }
+}
+
+/// The per-worker noise stream of the synthetic objective.
+pub fn synthetic_worker_rng(seed: u64, w: usize) -> Rng {
+    Rng::new(seed ^ (w as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// `(test loss, bounded % error proxy)` of the synthetic objective.
+pub fn synthetic_eval(theta: &[f32], curv: &[f32]) -> (f64, f64) {
+    let loss = synthetic_loss(theta, curv);
+    (loss, 100.0 * loss / (1.0 + loss))
+}
+
 /// Run real-thread asynchronous training on a seeded noisy quadratic —
 /// no PJRT, no artifacts.  Exercises the full channel/threading/server
 /// machinery; the reported test loss is [`synthetic_loss`] at the master
@@ -138,26 +188,27 @@ pub fn run_synthetic(cfg: &TrainConfig, k: usize) -> anyhow::Result<TrainReport>
         let curv = curv.clone();
         move |w: usize| -> anyhow::Result<StepFn> {
             let curv = curv.clone();
-            let mut rng = Rng::new(seed ^ (w as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+            let mut rng = synthetic_worker_rng(seed, w);
             Ok(Box::new(move |params: &[f32]| {
                 let mut g = vec![0.0f32; params.len()];
-                for ((g, &p), &c) in g.iter_mut().zip(params).zip(&curv) {
-                    *g = c * p + 0.01 * rng.normal() as f32;
-                }
+                synthetic_grad(params, &curv, &mut rng, &mut g);
                 Ok((synthetic_loss(params, &curv) as f32, g))
             }) as StepFn)
         }
     };
     run_core(cfg, &theta0, &make_step, move |theta| {
-        let loss = synthetic_loss(theta, &curv);
-        Ok((loss, 100.0 * loss / (1.0 + loss)))
+        Ok(synthetic_eval(theta, &curv))
     })
 }
 
-/// The generic driver: spawns `cfg.n_workers` threads, each built by
-/// `make_step`, and runs the master FIFO for `cfg.total_master_steps()`
-/// pushes.  `eval` maps master parameters to `(test loss, test error %)`.
-fn run_core<F>(
+/// The generic driver: spawns one thread per initial worker (and more on
+/// churn joins), each built by `make_step`, and runs the master FIFO for
+/// `cfg.total_master_steps()` pushes.  `eval` maps master parameters to
+/// `(test loss, test error %)`.
+///
+/// Public so external harnesses (the stress suite) can inject failing or
+/// custom gradient sources without PJRT.
+pub fn run_core<F>(
     cfg: &TrainConfig,
     theta0: &[f32],
     make_step: &F,
@@ -168,6 +219,7 @@ where
 {
     let t0 = std::time::Instant::now();
     let n = cfg.n_workers;
+    cfg.churn.validate(n)?;
     let mut server = make_master(
         cfg.algorithm,
         theta0,
@@ -181,9 +233,10 @@ where
     let gamma = cfg.schedule.gamma;
 
     let (tx_master, rx_master) = mpsc::channel::<FromWorker>();
-    let mut to_workers: Vec<mpsc::Sender<ToWorker>> = Vec::with_capacity(n);
 
     let total = cfg.total_master_steps();
+    let mut churn: VecDeque<(u64, ChurnAction)> = cfg.churn.thresholds(total).into();
+    let mut churn_rng = Rng::new(cfg.seed ^ 0x454C_4153_5449_43); // random leave victims
     let mut report = TrainReport {
         algorithm: cfg.algorithm.name().to_string(),
         n_workers: n,
@@ -196,74 +249,189 @@ where
     };
 
     std::thread::scope(|scope| -> anyhow::Result<()> {
-        for w in 0..n {
+        // Spawn (or respawn) the worker thread for a slot; used at kick-off
+        // and for mid-run joins.  `gen` tags every message the incarnation
+        // sends.  Init/step failures AND panics are caught and reported as
+        // `Exited` — a panicking gradient source must surface as a lost
+        // worker, not hang the master's recv (the master keeps a sender
+        // alive, so channel disconnection can never signal thread death).
+        let spawn_worker = |w: usize, gen: u32| -> mpsc::Sender<ToWorker> {
             let (tx_w, rx_w) = mpsc::channel::<ToWorker>();
-            to_workers.push(tx_w);
             let tx_master = tx_master.clone();
             scope.spawn(move || {
-                let mut step = match make_step(w) {
-                    Ok(s) => s,
-                    Err(e) => {
-                        eprintln!("worker {w}: init failed: {e}");
-                        return;
-                    }
+                let exit = |reason: String| {
+                    let _ = tx_master.send(FromWorker::Exited { worker: w, gen, reason });
+                };
+                let init =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| make_step(w)));
+                let mut step_fn = match init {
+                    Ok(Ok(s)) => s,
+                    Ok(Err(e)) => return exit(format!("init failed: {e}")),
+                    Err(p) => return exit(format!("init panicked: {}", panic_reason(p))),
                 };
                 let mut v_local: Vec<f32> = vec![];
-                while let Ok(ToWorker::Params(params)) = rx_w.recv() {
-                    match step(&params) {
-                        Ok((loss, mut msg)) => {
-                            rule.apply(&mut v_local, &mut msg, gamma);
-                            if tx_master
-                                .send(FromWorker { worker: w, msg, loss })
-                                .is_err()
-                            {
-                                break;
+                loop {
+                    match rx_w.recv() {
+                        Ok(ToWorker::Params(params)) => {
+                            let step = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || step_fn(&params),
+                            ));
+                            match step {
+                                Ok(Ok((loss, mut msg))) => {
+                                    rule.apply(&mut v_local, &mut msg, gamma);
+                                    if tx_master
+                                        .send(FromWorker::Update { worker: w, gen, msg, loss })
+                                        .is_err()
+                                    {
+                                        return;
+                                    }
+                                }
+                                Ok(Err(e)) => return exit(format!("step failed: {e}")),
+                                Err(p) => {
+                                    return exit(format!("step panicked: {}", panic_reason(p)))
+                                }
                             }
                         }
-                        Err(e) => {
-                            eprintln!("worker {w}: step failed: {e}");
-                            break;
-                        }
+                        // master-initiated stop (leave or end of run)
+                        Ok(ToWorker::Stop) | Err(_) => return,
                     }
                 }
             });
-        }
-        drop(tx_master);
+            tx_w
+        };
 
+        // `senders[w].is_some()` IS the thread-liveness state: a slot has a
+        // sender exactly while its current incarnation may still produce
+        // messages the master should honor.
+        let mut senders: Vec<Option<mpsc::Sender<ToWorker>>> = Vec::with_capacity(n);
+        let mut thread_gen: Vec<u32> = vec![0; n];
+        for w in 0..n {
+            senders.push(Some(spawn_worker(w, 0)));
+        }
         // Kick off: every worker gets initial (pulled) parameters.
-        for (w, tx) in to_workers.iter().enumerate() {
-            let p = server.pull_params(w);
-            tx.send(ToWorker::Params(p)).ok();
+        for (w, tx) in senders.iter().enumerate() {
+            if let Some(tx) = tx {
+                tx.send(ToWorker::Params(server.pull_params(w))).ok();
+            }
         }
 
         let loss_sample = (total / 200).max(1);
-        for step in 0..total {
-            let FromWorker { worker, msg, loss } = rx_master
-                .recv()
-                .map_err(|_| anyhow::anyhow!("all workers died before step {step}"))?;
-            debug_assert_eq!(server.steps_done(), step, "master step not monotone");
-            if step % loss_sample == 0 {
-                report.loss_curve.push((step, loss as f64));
+        let mut step: u64 = 0;
+        while step < total {
+            // Fire membership events due at this master step.
+            while churn.front().is_some_and(|&(at, _)| step >= at) {
+                let (_, action) = churn.pop_front().expect("front checked");
+                match action {
+                    ChurnAction::Join => {
+                        let slot = server.add_worker();
+                        if slot == senders.len() {
+                            senders.push(None);
+                            thread_gen.push(0);
+                        }
+                        thread_gen[slot] = thread_gen[slot].wrapping_add(1);
+                        let tx = spawn_worker(slot, thread_gen[slot]);
+                        tx.send(ToWorker::Params(server.pull_params(slot))).ok();
+                        senders[slot] = Some(tx);
+                        report.workers_joined += 1;
+                    }
+                    ChurnAction::Leave(who) => {
+                        // A named worker may already be gone (it crashed and
+                        // was retired as an implicit leave) and lost threads
+                        // may leave nobody to evict — both are no-ops, not
+                        // reasons to abort the surviving run.
+                        let victim = match who {
+                            Some(w) if server.is_live(w) => Some(w),
+                            Some(w) => {
+                                eprintln!("churn: skipping leave of worker {w} (already gone)");
+                                None
+                            }
+                            None => {
+                                let live: Vec<usize> = (0..server.workers())
+                                    .filter(|&i| server.is_live(i))
+                                    .collect();
+                                if live.is_empty() {
+                                    None
+                                } else {
+                                    Some(live[churn_rng.below(live.len() as u64) as usize])
+                                }
+                            }
+                        };
+                        if let Some(w) = victim {
+                            server.remove_worker(w, cfg.leave_policy)?;
+                            if let Some(tx) = senders[w].take() {
+                                tx.send(ToWorker::Stop).ok();
+                            }
+                            report.workers_left += 1;
+                        }
+                    }
+                    // real threads run at hardware speed; straggler onset
+                    // is only meaningful under the simulated clock
+                    ChurnAction::SpeedChange(..) => {}
+                }
             }
-            if !loss.is_finite() {
-                report.diverged = true;
-            }
-            server.push_update(worker, &msg);
-            if step + 1 < total {
-                let p = server.pull_params(worker);
-                to_workers[worker].send(ToWorker::Params(p)).ok();
-            }
-            if eval_every > 0 && (step + 1) % eval_every == 0 {
-                let (l, e) = eval(&server.theta_vec())?;
-                report.curve.push(EvalPoint {
-                    epoch: (step + 1) as f64 / cfg.schedule.steps_per_epoch as f64,
-                    test_loss: l,
-                    test_error: e,
-                    sim_time: t0.elapsed().as_secs_f64(),
-                });
+
+            // Fail fast: the FIFO cannot make progress once no live thread
+            // remains to produce updates.
+            anyhow::ensure!(
+                senders.iter().any(Option::is_some),
+                "no live workers left at master step {step}/{total} \
+                 ({} lost, {} left); aborting instead of deadlocking",
+                report.workers_lost,
+                report.workers_left
+            );
+
+            match rx_master.recv().expect("master keeps a sender; recv cannot fail") {
+                FromWorker::Exited { worker, gen, reason } => {
+                    if gen != thread_gen[worker] || senders[worker].is_none() {
+                        continue; // stale incarnation: already stopped/left
+                    }
+                    // A dying worker is an implicit leave: retire its slot
+                    // so its momentum doesn't linger frozen in v⁰.
+                    senders[worker] = None;
+                    if server.is_live(worker) {
+                        server.remove_worker(worker, cfg.leave_policy)?;
+                    }
+                    report.workers_lost += 1;
+                    eprintln!("worker {worker}: {reason}");
+                }
+                FromWorker::Update { worker, gen, mut msg, loss } => {
+                    if gen != thread_gen[worker] {
+                        continue; // late push from a stopped incarnation
+                    }
+                    if !server.is_live(worker) {
+                        // in-flight push raced a leave: recoverable, drop it
+                        continue;
+                    }
+                    debug_assert_eq!(server.steps_done(), step, "master step not monotone");
+                    if step % loss_sample == 0 {
+                        report.loss_curve.push((step, loss as f64));
+                    }
+                    if !loss.is_finite() {
+                        report.diverged = true;
+                    }
+                    server.push_update(worker, &msg)?;
+                    step += 1;
+                    if step < total {
+                        if let Some(tx) = &senders[worker] {
+                            // round-trip buffer reuse: the worker's message
+                            // buffer becomes its next parameter buffer
+                            server.pull_into(worker, &mut msg);
+                            tx.send(ToWorker::Params(msg)).ok();
+                        }
+                    }
+                    if eval_every > 0 && step % eval_every == 0 {
+                        let (l, e) = eval(&server.theta_vec())?;
+                        report.curve.push(EvalPoint {
+                            epoch: step as f64 / cfg.schedule.steps_per_epoch as f64,
+                            test_loss: l,
+                            test_error: e,
+                            sim_time: t0.elapsed().as_secs_f64(),
+                        });
+                    }
+                }
             }
         }
-        for tx in &to_workers {
+        for tx in senders.iter().flatten() {
             tx.send(ToWorker::Stop).ok();
         }
         Ok(())

@@ -11,28 +11,101 @@
 //! the same experiment against the sharded, lock-striped server — the
 //! equivalence suite guarantees an identical trajectory up to f32
 //! reassociation.
+//!
+//! The driver consumes *cluster events*, not just completions: a
+//! [`TrainConfig::churn`] schedule splices joins, leaves and straggler
+//! onsets into the run, and [`handle_event`] keeps the master's membership
+//! in lockstep with the simulator's.  An empty churn schedule reproduces
+//! the fixed-membership trajectories bit-for-bit (pinned by
+//! `rust/tests/churn.rs`).
+//!
+//! [`run_synthetic`] is the PJRT-free variant over the seeded noisy
+//! quadratic of [`super::real_async`] — the full master/schedule/churn
+//! machinery with no artifacts, used by the churn experiment sweep and the
+//! equivalence tests.
 
 use crate::config::TrainConfig;
-use crate::optim::LrSchedule;
+use crate::optim::{LeavePolicy, LrSchedule, WorkerState};
 use crate::runtime::Engine;
-use crate::server::make_master;
-use crate::sim::{AsyncSchedule, ExecTimeModel};
+use crate::server::{make_master, Master};
+use crate::sim::{AsyncSchedule, ClusterEvent, Completion, ExecTimeModel};
 use crate::train::data_source::{evaluate, DataSource};
-use crate::train::{EvalPoint, TrainReport};
+use crate::train::{real_async, EvalPoint, TrainReport};
 use crate::util::rng::Rng;
 
-/// Run one simulated asynchronous training experiment.
-pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
-    let t0 = std::time::Instant::now();
-    let model = engine.load_model(&cfg.variant_name())?;
-    let theta0 = engine.init_params(&cfg.variant_name())?;
-    let mut ds = DataSource::for_config(cfg);
-    let eval_set = ds.eval_set();
+/// Apply a membership event to the master and the per-worker local state,
+/// keeping the server's slot assignment in lockstep with the simulator's.
+/// Returns the completion to process, if the event was one.
+fn handle_event(
+    server: &mut dyn Master,
+    event: ClusterEvent,
+    local: &mut Vec<Vec<f32>>,
+    wstate: &mut Vec<WorkerState>,
+    policy: LeavePolicy,
+    report: &mut TrainReport,
+) -> anyhow::Result<Option<Completion>> {
+    match event {
+        ClusterEvent::Completion(c) => Ok(Some(c)),
+        ClusterEvent::Join { worker, .. } => {
+            let slot = server.add_worker();
+            anyhow::ensure!(
+                slot == worker,
+                "membership drift: schedule assigned slot {worker}, server {slot}"
+            );
+            if slot == local.len() {
+                local.push(vec![0.0; server.param_len()]);
+                wstate.push(server.make_worker_state());
+            } else {
+                wstate[slot] = server.make_worker_state();
+            }
+            // the joiner pulls fresh parameters for its first batch
+            server.pull_into(slot, &mut local[slot]);
+            report.workers_joined += 1;
+            Ok(None)
+        }
+        ClusterEvent::Leave { worker, .. } => {
+            server.remove_worker(worker, policy)?;
+            report.workers_left += 1;
+            Ok(None)
+        }
+        // the schedule already rescaled the worker's execution-time model;
+        // nothing changes master-side
+        ClusterEvent::SpeedChange { .. } => Ok(None),
+    }
+}
 
+/// Seed perturbation for the synthetic gradient-noise stream (independent
+/// of the cluster RNG streams, so the schedule is identical whatever the
+/// gradient source).  Public so the churn equivalence suite can replicate
+/// the stream in its pre-elastic reference driver.
+pub const SYNTH_GRAD_STREAM: u64 = 0x5EED_6AAD;
+
+/// The shared simulated-clock driver: cluster-event loop, membership
+/// handling, metric/report plumbing — generic over the gradient source.
+/// `grad_step(worker, params, msg, want_loss)` fills `msg` with the
+/// worker's message computed at `params` and returns the train loss; when
+/// `want_loss` is false the value is not recorded, so cheap sources may
+/// return 0.0 without computing it.  `eval` maps master parameters to
+/// `(test loss, test error %)` for the periodic and final evaluations.
+///
+/// Both [`run`] and [`run_synthetic`] drive THIS loop, which is what keeps
+/// their trajectories in lockstep — the churn equivalence suite pins its
+/// behavior bit-for-bit against the pre-elastic loop shape.
+fn run_sim_core<G, E>(
+    cfg: &TrainConfig,
+    theta0: &[f32],
+    mut grad_step: G,
+    mut eval: E,
+) -> anyhow::Result<TrainReport>
+where
+    G: FnMut(usize, &[f32], &mut Vec<f32>, bool) -> anyhow::Result<f64>,
+    E: FnMut(&[f32]) -> anyhow::Result<(f64, f64)>,
+{
+    let t0 = std::time::Instant::now();
     let n = cfg.n_workers;
     let mut server = make_master(
         cfg.algorithm,
-        &theta0,
+        theta0,
         LrSchedule::new(cfg.schedule.clone()),
         n,
         cfg.shards,
@@ -40,19 +113,20 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
     );
     server.metrics_mut().set_every(cfg.metrics_every);
 
+    let total = cfg.total_master_steps();
     let mut cluster_rng = Rng::new(cfg.seed);
     let exec_model = ExecTimeModel::new(cfg.env, n, cfg.batch(), &mut cluster_rng);
-    let mut schedule = AsyncSchedule::new(exec_model, cluster_rng.fork(1));
+    let mut schedule =
+        AsyncSchedule::new(exec_model, cluster_rng.fork(1)).with_churn(&cfg.churn, total)?;
 
     // Worker-local state: pulled parameters + optimizer state (DANA-Slim).
     let mut local: Vec<Vec<f32>> = Vec::with_capacity(n);
-    let mut wstate: Vec<_> = Vec::with_capacity(n);
+    let mut wstate: Vec<WorkerState> = Vec::with_capacity(n);
     for w in 0..n {
         local.push(server.pull_params(w));
         wstate.push(server.make_worker_state());
     }
 
-    let total = cfg.total_master_steps();
     let eval_every = if cfg.eval_every_epochs > 0.0 {
         (cfg.eval_every_epochs * cfg.schedule.steps_per_epoch as f64).round() as u64
     } else {
@@ -66,33 +140,47 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
         ..TrainReport::default()
     };
 
-    for step in 0..total {
-        let c = schedule.next_completion();
+    let mut msg = vec![0.0f32; theta0.len()];
+    let mut step: u64 = 0;
+    while step < total {
+        let event = schedule.next_event();
+        let Some(c) = handle_event(
+            server.as_mut(),
+            event,
+            &mut local,
+            &mut wstate,
+            cfg.leave_policy,
+            &mut report,
+        )?
+        else {
+            continue;
+        };
         let w = c.worker;
-        // Worker w finished a batch it started earlier: compute the real
-        // gradient at the parameters it pulled.
-        let batch = ds.next_train();
-        let (loss, mut msg) = model.train_step(&local[w], batch.input(), &batch.y)?;
-        if step % loss_sample == 0 {
-            report.loss_curve.push((step, loss as f64));
+        // Worker w finished a batch it started earlier: compute the
+        // message (gradient) at the parameters it pulled.
+        let want_loss = step % loss_sample == 0;
+        let loss = grad_step(w, &local[w], &mut msg, want_loss)?;
+        if want_loss {
+            report.loss_curve.push((step, loss));
         }
         if !loss.is_finite() {
             report.diverged = true;
         }
         let s = server.step_now();
         server.worker_transform(&mut wstate[w], &mut msg, s);
-        server.push_update(w, &msg);
+        server.push_update(w, &msg)?;
         // Immediately pull fresh parameters for the next batch (into the
         // retained per-worker buffer — no per-step allocation).
         server.pull_into(w, &mut local[w]);
+        step += 1;
 
-        if eval_every > 0 && (step + 1) % eval_every == 0 {
-            let (loss, err) = evaluate(&model, &server.theta_vec(), &eval_set)?;
+        if eval_every > 0 && step % eval_every == 0 {
+            let (loss, err) = eval(&server.theta_vec())?;
             if !loss.is_finite() {
                 report.diverged = true;
             }
             report.curve.push(EvalPoint {
-                epoch: (step + 1) as f64 / cfg.schedule.steps_per_epoch as f64,
+                epoch: step as f64 / cfg.schedule.steps_per_epoch as f64,
                 test_loss: loss,
                 test_error: err,
                 sim_time: schedule.now(),
@@ -100,7 +188,7 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
         }
     }
 
-    let (loss, err) = evaluate(&model, &server.theta_vec(), &eval_set)?;
+    let (loss, err) = eval(&server.theta_vec())?;
     report.final_test_loss = loss;
     report.final_test_error = err;
     if !loss.is_finite() {
@@ -108,6 +196,66 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
         // Paper convention: a diverged run scores chance accuracy.
         report.final_test_error = 100.0;
     }
+    finish_report(&mut report, server.as_ref(), &schedule, total, t0);
+    Ok(report)
+}
+
+/// Run one simulated asynchronous training experiment (real gradients
+/// through PJRT).
+pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
+    let model = engine.load_model(&cfg.variant_name())?;
+    let theta0 = engine.init_params(&cfg.variant_name())?;
+    let mut ds = DataSource::for_config(cfg);
+    let eval_set = ds.eval_set();
+    run_sim_core(
+        cfg,
+        &theta0,
+        |_w, params, msg: &mut Vec<f32>, _want_loss| {
+            // the train loss is a free byproduct here, so want_loss is moot
+            let batch = ds.next_train();
+            let (loss, g) = model.train_step(params, batch.input(), &batch.y)?;
+            *msg = g;
+            Ok(loss as f64)
+        },
+        |theta| evaluate(&model, theta, &eval_set),
+    )
+}
+
+/// Simulated-clock training on the seeded noisy quadratic — no PJRT, no
+/// artifacts.  The schedule (and its churn events) is identical to what
+/// [`run`] would see under the same config; gradients come from the
+/// synthetic objective of [`real_async`].  This is the artifact-free
+/// workload behind `dana experiment churn` and the churn equivalence
+/// suite.
+pub fn run_synthetic(cfg: &TrainConfig, k: usize) -> anyhow::Result<TrainReport> {
+    anyhow::ensure!(k > 0, "synthetic workload needs k > 0");
+    let curv = real_async::synthetic_curvature(k);
+    let grad_curv = curv.clone();
+    let mut grad_rng = Rng::new(cfg.seed ^ SYNTH_GRAD_STREAM);
+    run_sim_core(
+        cfg,
+        &real_async::synthetic_theta0(k),
+        move |_w, params, msg: &mut Vec<f32>, want_loss| {
+            real_async::synthetic_grad(params, &grad_curv, &mut grad_rng, msg);
+            // the loss costs another O(k) pass here, so honor want_loss
+            Ok(if want_loss {
+                real_async::synthetic_loss(params, &grad_curv)
+            } else {
+                0.0
+            })
+        },
+        move |theta| Ok(real_async::synthetic_eval(theta, &curv)),
+    )
+}
+
+/// Fold the server's metric taps and the schedule clock into the report.
+fn finish_report(
+    report: &mut TrainReport,
+    server: &dyn Master,
+    schedule: &AsyncSchedule,
+    total: u64,
+    t0: std::time::Instant,
+) {
     report.mean_gap = server.metrics().mean_gap();
     report.mean_lag = server.metrics().mean_lag();
     for r in server.metrics().rows() {
@@ -118,5 +266,4 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
     report.sim_time = schedule.now();
     report.steps = total;
     report.wall_secs = t0.elapsed().as_secs_f64();
-    Ok(report)
 }

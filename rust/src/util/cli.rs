@@ -169,6 +169,27 @@ mod tests {
     }
 
     #[test]
+    fn churn_flag_round_trips() {
+        // the `dana train --churn SPEC --leave-policy P` spelling
+        let mut a = parse("train --churn leave@0.3:2,join@0.5 --leave-policy fold", true);
+        let churn = a
+            .opt_parse::<crate::sim::ChurnSchedule>("churn")
+            .unwrap()
+            .unwrap();
+        assert_eq!(churn.events.len(), 2);
+        assert_eq!(
+            a.opt_parse::<crate::optim::LeavePolicy>("leave-policy")
+                .unwrap()
+                .unwrap(),
+            crate::optim::LeavePolicy::Fold
+        );
+        a.finish().unwrap();
+        // malformed specs surface the parse error through opt_parse
+        let mut b = parse("train --churn nap@0.5", true);
+        assert!(b.opt_parse::<crate::sim::ChurnSchedule>("churn").is_err());
+    }
+
+    #[test]
     fn unknown_option_rejected() {
         let mut a = parse("run --oops 1", true);
         let _ = a.flag("quick");

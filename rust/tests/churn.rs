@@ -1,0 +1,402 @@
+//! Elastic-membership equivalence obligations (ISSUE 2 acceptance):
+//!
+//! 1. An *empty* churn schedule reproduces the fixed-membership
+//!    trajectories bit-for-bit, for all 10 algorithm kinds × both server
+//!    layouts — the refactor must be invisible when nothing churns.
+//! 2. The DANA invariant v⁰ = Σ live vᶦ holds across randomized
+//!    join/leave sequences, under both leave policies.
+//! 3. Sharded ≡ monolithic (≤1e-5 rel) survives membership changes — the
+//!    change fans across all shards atomically.
+//! 4. The simulated-clock driver trains through mid-run join/leave/
+//!    straggler events: no deadlock, monotone steps, loss still descends.
+
+use dana::config::{TrainConfig, Workload};
+use dana::optim::dana_dc::DanaDc;
+use dana::optim::dana_zero::DanaZero;
+use dana::optim::{
+    make_algorithm, Algorithm, AlgorithmKind, LeavePolicy, LrSchedule, ScheduleConfig, Step,
+};
+use dana::server::{ParameterServer, ShardedParameterServer};
+use dana::sim::{AsyncSchedule, ChurnSchedule, ClusterEvent, Environment, ExecTimeModel};
+use dana::train::{real_async, sim_trainer};
+use dana::util::rng::Rng;
+
+fn cfg(alg: AlgorithmKind, workers: usize, epochs: f64, shards: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::preset(Workload::C10, alg, workers, epochs);
+    cfg.seed = 23;
+    cfg.metrics_every = 7;
+    cfg.shards = shards;
+    cfg
+}
+
+/// Replicates the pre-elastic sim driver loop over the synthetic
+/// quadratic: plain `next_completion` stream, no membership events, with
+/// the same RNG forks `sim_trainer::run_synthetic` uses.  Equality against
+/// it pins that the event-stream refactor changed nothing when nothing
+/// churns.
+fn legacy_synthetic(cfg: &TrainConfig, k: usize) -> (f64, Vec<(u64, f64)>, f64, f64) {
+    let theta0 = real_async::synthetic_theta0(k);
+    let curv = real_async::synthetic_curvature(k);
+    let n = cfg.n_workers;
+    let mut server = dana::server::make_master(
+        cfg.algorithm,
+        &theta0,
+        LrSchedule::new(cfg.schedule.clone()),
+        n,
+        cfg.shards,
+        dana::util::parallel::default_threads(),
+    );
+    server.metrics_mut().set_every(cfg.metrics_every);
+    let total = cfg.total_master_steps();
+    let mut cluster_rng = Rng::new(cfg.seed);
+    let exec_model = ExecTimeModel::new(cfg.env, n, cfg.batch(), &mut cluster_rng);
+    let mut schedule = AsyncSchedule::new(exec_model, cluster_rng.fork(1));
+    let mut grad_rng = Rng::new(cfg.seed ^ sim_trainer::SYNTH_GRAD_STREAM);
+
+    let mut local: Vec<Vec<f32>> = (0..n).map(|w| server.pull_params(w)).collect();
+    let mut wstate: Vec<_> = (0..n).map(|_| server.make_worker_state()).collect();
+    let loss_sample = (total / 200).max(1);
+    let mut loss_curve = Vec::new();
+    let mut msg = vec![0.0f32; k];
+    for step in 0..total {
+        let c = schedule.next_completion();
+        let w = c.worker;
+        for ((g, &p), &cv) in msg.iter_mut().zip(&local[w]).zip(&curv) {
+            *g = cv * p + 0.01 * grad_rng.normal() as f32;
+        }
+        if step % loss_sample == 0 {
+            loss_curve.push((step, real_async::synthetic_loss(&local[w], &curv)));
+        }
+        let s = server.step_now();
+        server.worker_transform(&mut wstate[w], &mut msg, s);
+        server.push_update(w, &msg).unwrap();
+        server.pull_into(w, &mut local[w]);
+    }
+    let final_loss = real_async::synthetic_loss(&server.theta_vec(), &curv);
+    (
+        final_loss,
+        loss_curve,
+        server.metrics().mean_gap(),
+        server.metrics().mean_lag(),
+    )
+}
+
+/// (1) churn-free equivalence: all 10 kinds × {monolithic, sharded}.
+#[test]
+fn empty_churn_reproduces_legacy_trajectories_bit_for_bit() {
+    let k = 96;
+    for kind in AlgorithmKind::ALL {
+        for shards in [1usize, 4] {
+            let c = cfg(kind, 4, 1.0, shards);
+            assert!(c.churn.is_empty());
+            let rep = sim_trainer::run_synthetic(&c, k).unwrap();
+            let (final_loss, loss_curve, gap, lag) = legacy_synthetic(&c, k);
+            assert_eq!(
+                rep.final_test_loss, final_loss,
+                "{kind} S={shards}: final loss diverged from pre-elastic driver"
+            );
+            assert_eq!(rep.loss_curve, loss_curve, "{kind} S={shards}: loss curve");
+            assert_eq!(rep.mean_gap, gap, "{kind} S={shards}: mean gap");
+            assert_eq!(rep.mean_lag, lag, "{kind} S={shards}: mean lag");
+            assert_eq!(rep.workers_joined + rep.workers_left + rep.workers_lost, 0);
+        }
+    }
+}
+
+/// Mini property driver (same shape as rust/tests/properties.rs).
+fn for_random_cases(cases: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC4A1 ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed for case seed={seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn rand_vec(rng: &mut Rng, k: usize, scale: f32) -> Vec<f32> {
+    (0..k).map(|_| scale * rng.normal() as f32).collect()
+}
+
+/// Drive a randomized apply/join/leave sequence (alternating leave
+/// policies) against `alg`, calling `check` after every membership change
+/// and at the end — the checker has the concrete type, so it can reach
+/// the DANA accessors.
+fn drive_membership_sequence<T: Algorithm>(
+    rng: &mut Rng,
+    alg: &mut T,
+    k: usize,
+    mut check: impl FnMut(&T),
+) {
+    let mut live: Vec<usize> = (0..3).collect();
+    let mut next_policy = LeavePolicy::Retire;
+    for _ in 0..120 {
+        let roll = rng.uniform();
+        if roll < 0.1 && live.len() > 1 {
+            // a random live worker leaves
+            let i = rng.below(live.len() as u64) as usize;
+            let w = live.swap_remove(i);
+            alg.remove_worker(w, next_policy);
+            next_policy = match next_policy {
+                LeavePolicy::Retire => LeavePolicy::Fold,
+                LeavePolicy::Fold => LeavePolicy::Retire,
+            };
+            check(alg);
+        } else if roll < 0.2 {
+            let w = alg.add_worker();
+            assert!(!live.contains(&w), "slot {w} double-allocated");
+            live.push(w);
+            check(alg);
+        } else {
+            let w = live[rng.below(live.len() as u64) as usize];
+            let s = Step {
+                eta: rng.uniform_range(0.001, 0.2) as f32,
+                gamma: rng.uniform_range(0.0, 0.99) as f32,
+                lambda: 1.0,
+            };
+            let g = rand_vec(rng, k, 1.0);
+            let sent = alg.theta().to_vec();
+            alg.master_apply(w, &g, &sent, s);
+        }
+    }
+    check(alg);
+}
+
+fn assert_vsum_invariant(vsum: &[f32], full: &[f32]) {
+    for (a, b) in vsum.iter().zip(full) {
+        assert!(
+            (a - b).abs() < 2e-3 * (1.0 + b.abs()),
+            "vsum invariant broken: {a} vs {b}"
+        );
+    }
+}
+
+/// (2) v⁰ = Σ live vᶦ across randomized join/leave — DANA-Zero.  Checked
+/// after *every* membership change, not just at the end.
+#[test]
+fn prop_dana_zero_vsum_invariant_under_churn() {
+    for_random_cases(20, |rng| {
+        let k = 1 + rng.below(48) as usize;
+        let mut d = DanaZero::new(&rand_vec(rng, k, 1.0), 3);
+        drive_membership_sequence(rng, &mut d, k, |d: &DanaZero| {
+            assert_vsum_invariant(d.velocity_sum(), &d.recompute_vsum());
+        });
+    });
+}
+
+/// (2) v⁰ = Σ live vᶦ across randomized join/leave — DANA-DC.
+#[test]
+fn prop_dana_dc_vsum_invariant_under_churn() {
+    for_random_cases(20, |rng| {
+        let k = 1 + rng.below(48) as usize;
+        let mut d = DanaDc::new(&rand_vec(rng, k, 1.0), 3);
+        drive_membership_sequence(rng, &mut d, k, |d: &DanaDc| {
+            assert_vsum_invariant(d.velocity_sum(), &d.recompute_vsum());
+        });
+    });
+}
+
+fn flat_schedule(n: usize) -> LrSchedule {
+    LrSchedule::new(ScheduleConfig {
+        base_eta: 0.05,
+        gamma: 0.9,
+        lambda: 1.0,
+        warmup_epochs: 0.0,
+        decay_epochs: vec![2.0],
+        decay_factor: 0.5,
+        steps_per_epoch: 20,
+        n_workers: n,
+        ..ScheduleConfig::default()
+    })
+}
+
+/// |a − b| ≤ abs + rel·|b| — the sharded-equivalence tolerance.
+fn assert_close(a: f32, b: f32, ctx: &str) {
+    let tol = 1e-6 + 1e-5 * b.abs() as f64;
+    assert!(
+        (a as f64 - b as f64).abs() <= tol,
+        "{ctx}: sharded {a} vs monolithic {b}"
+    );
+}
+
+/// (3) sharded ≡ monolithic through identical randomized pull/push/
+/// join/leave sequences, for every per-worker-state kind × S ∈ {2, 7}.
+#[test]
+fn prop_sharded_equals_monolithic_under_membership_churn() {
+    let kinds = [
+        AlgorithmKind::MultiAsgd,
+        AlgorithmKind::DcAsgd,
+        AlgorithmKind::DanaZero,
+        AlgorithmKind::DanaDc,
+        AlgorithmKind::Easgd,
+        AlgorithmKind::YellowFin, // shared state + two-phase apply
+    ];
+    for kind in kinds {
+        for &shards in &[2usize, 7] {
+            for_random_cases(2, |rng| {
+                let k = 5 + rng.below(40) as usize;
+                let n = 2 + rng.below(3) as usize;
+                let theta0 = rand_vec(rng, k, 1.0);
+                let mut mono =
+                    ParameterServer::new(make_algorithm(kind, &theta0, n), flat_schedule(n), n);
+                let mut shrd =
+                    ShardedParameterServer::new(kind, &theta0, flat_schedule(n), n, shards)
+                        .with_threads(1 + rng.below(3) as usize);
+                let mut live: Vec<usize> = (0..n).collect();
+                let mut pulled: Vec<bool> = vec![false; n];
+                for step in 0..120 {
+                    let roll = rng.uniform();
+                    if roll < 0.06 && live.len() > 1 {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let w = live.swap_remove(i);
+                        let policy = if rng.uniform() < 0.5 {
+                            LeavePolicy::Retire
+                        } else {
+                            LeavePolicy::Fold
+                        };
+                        mono.remove_worker(w, policy).unwrap();
+                        shrd.remove_worker(w, policy).unwrap();
+                        // both must now reject the straggler's push
+                        assert!(mono.push(w, &vec![0.1; k]).is_err());
+                        assert!(shrd.push(w, &vec![0.1; k]).is_err());
+                    } else if roll < 0.12 {
+                        let a = mono.add_worker();
+                        let b = shrd.add_worker();
+                        assert_eq!(a, b, "{kind} S={shards}: slot drift at step {step}");
+                        if a == pulled.len() {
+                            pulled.push(false);
+                        } else {
+                            pulled[a] = false;
+                        }
+                        live.push(a);
+                    } else {
+                        let w = live[rng.below(live.len() as u64) as usize];
+                        if !pulled[w] || rng.uniform() < 0.4 {
+                            let a = shrd.pull(w);
+                            let b = mono.pull(w).to_vec();
+                            for i in 0..k {
+                                assert_close(
+                                    a[i],
+                                    b[i],
+                                    &format!("{kind} S={shards} step {step} send[{i}]"),
+                                );
+                            }
+                            pulled[w] = true;
+                        } else {
+                            let g = rand_vec(rng, k, 0.5);
+                            shrd.push(w, &g).unwrap();
+                            mono.push(w, &g).unwrap();
+                        }
+                    }
+                }
+                let (a, b) = (shrd.theta_vec(), mono.theta().to_vec());
+                for i in 0..k {
+                    assert_close(a[i], b[i], &format!("{kind} S={shards} theta[{i}]"));
+                }
+            });
+        }
+    }
+}
+
+/// (3b) end-to-end: the simulated driver's trajectory under churn matches
+/// between layouts (schedule events are layout-independent).
+#[test]
+fn sim_driver_sharded_matches_monolithic_under_churn() {
+    let k = 64;
+    for kind in [AlgorithmKind::DanaZero, AlgorithmKind::DcAsgd] {
+        let mut mono_cfg = cfg(kind, 4, 1.0, 1);
+        mono_cfg.churn = ChurnSchedule::parse("leave@0.3:2,join@0.5,slow@0.7:0=3x").unwrap();
+        let mut shrd_cfg = mono_cfg.clone();
+        shrd_cfg.shards = 4;
+        let a = sim_trainer::run_synthetic(&mono_cfg, k).unwrap();
+        let b = sim_trainer::run_synthetic(&shrd_cfg, k).unwrap();
+        assert_eq!(a.workers_joined, 1);
+        assert_eq!(a.workers_left, 1);
+        assert_eq!((a.workers_joined, a.workers_left), (b.workers_joined, b.workers_left));
+        let tol = 1e-5 * (1.0 + a.final_test_loss.abs());
+        assert!(
+            (a.final_test_loss - b.final_test_loss).abs() <= tol,
+            "{kind}: mono {} vs sharded {}",
+            a.final_test_loss,
+            b.final_test_loss
+        );
+    }
+}
+
+/// (4) the simulated driver survives churn and still optimizes, for both
+/// leave policies.
+#[test]
+fn sim_driver_trains_through_join_leave_straggler() {
+    let k = 256;
+    let j0 = real_async::synthetic_loss(
+        &real_async::synthetic_theta0(k),
+        &real_async::synthetic_curvature(k),
+    );
+    for policy in [LeavePolicy::Retire, LeavePolicy::Fold] {
+        let mut c = cfg(AlgorithmKind::DanaZero, 6, 2.0, 1);
+        c.churn =
+            ChurnSchedule::parse("leave@0.2:1,join@0.35,slow@0.5:0=4x,leave@0.65,join@0.8")
+                .unwrap();
+        c.leave_policy = policy;
+        let rep = sim_trainer::run_synthetic(&c, k).unwrap();
+        assert_eq!(rep.steps, c.total_master_steps());
+        assert!(!rep.diverged);
+        assert_eq!(rep.workers_joined, 2);
+        assert_eq!(rep.workers_left, 2);
+        for w in rep.loss_curve.windows(2) {
+            assert!(w[0].0 < w[1].0, "loss curve steps not monotone: {w:?}");
+        }
+        assert!(
+            rep.final_test_loss < 0.1 * j0,
+            "{policy}: loss {} vs initial {j0}",
+            rep.final_test_loss
+        );
+    }
+}
+
+/// The event stream and the servers allocate join slots by the same rule
+/// even when leaves created multiple holes.
+#[test]
+fn schedule_and_server_slot_assignment_stay_in_lockstep() {
+    let k = 32;
+    let mut c = cfg(AlgorithmKind::MultiAsgd, 5, 1.0, 1);
+    // two holes (1 then 3), then three joins: reuse 1, reuse 3, append 5
+    c.churn =
+        ChurnSchedule::parse("leave@0.1:1,leave@0.2:3,join@0.4,join@0.5,join@0.6").unwrap();
+    let rep = sim_trainer::run_synthetic(&c, k).unwrap();
+    assert_eq!(rep.workers_joined, 3);
+    assert_eq!(rep.workers_left, 2);
+    assert_eq!(rep.steps, c.total_master_steps());
+}
+
+/// A churn schedule that would empty the cluster is rejected up front by
+/// both drivers.
+#[test]
+fn emptying_schedules_error_cleanly() {
+    let mut c = cfg(AlgorithmKind::Asgd, 2, 0.5, 1);
+    c.churn = ChurnSchedule::parse("leave@0.2,leave@0.4").unwrap();
+    assert!(sim_trainer::run_synthetic(&c, 16).is_err());
+    assert!(real_async::run_synthetic(&c, 16).is_err());
+}
+
+/// Churn events interleave with completions in declared order even when
+/// several fire at the same master step.
+#[test]
+fn same_step_events_fire_in_declaration_order() {
+    let mut rng = Rng::new(3);
+    let model = ExecTimeModel::new(Environment::Homogeneous, 2, 32, &mut rng);
+    let churn = ChurnSchedule::parse("join@0.5,leave@0.5:0").unwrap();
+    let mut s = AsyncSchedule::new(model, rng.fork(1)).with_churn(&churn, 10).unwrap();
+    let mut events = Vec::new();
+    let mut steps = 0;
+    while steps < 10 {
+        match s.next_event() {
+            ClusterEvent::Completion(_) => steps += 1,
+            ClusterEvent::Join { worker, .. } => events.push(format!("join:{worker}")),
+            ClusterEvent::Leave { worker, .. } => events.push(format!("leave:{worker}")),
+            ClusterEvent::SpeedChange { .. } => events.push("slow".into()),
+        }
+    }
+    assert_eq!(events, vec!["join:2", "leave:0"]);
+}

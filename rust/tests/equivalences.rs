@@ -69,14 +69,14 @@ fn dana_slim_trajectory_equals_dana_zero() {
         let w = rng.below(n as u64) as usize;
         // DANA-Zero worker: compute grad at received θ̂, send raw gradient.
         quad_grad(&zero_local[w], &ks, &mut g);
-        zero.push(w, &g);
+        zero.push(w, &g).unwrap();
         zero_local[w].copy_from_slice(zero.pull(w));
         // DANA-Slim worker: compute grad at received Θ, send γv+g.
         quad_grad(&slim_local[w], &ks, &mut g);
         let s = slim.current_step();
         let mut msg = g.clone();
         slim.algorithm().worker_message(&mut slim_ws[w], &mut msg, s);
-        slim.push(w, &msg);
+        slim.push(w, &msg).unwrap();
         slim_local[w].copy_from_slice(slim.pull(w));
 
         for i in 0..K {
@@ -116,7 +116,7 @@ fn single_worker_dana_is_nag_is_bengio() {
         // DANA through the server
         let sent = server.pull(0).to_vec();
         quad_grad(&sent, &ks, &mut g);
-        server.push(0, &g);
+        server.push(0, &g).unwrap();
         // sequential NAG
         nag.lookahead_params(&mut hat, eta, gamma);
         quad_grad(&hat, &ks, &mut g);
@@ -159,7 +159,7 @@ fn eq12_dana_gap_equals_asgd_gap_in_expectation() {
         let mut tail = Vec::new();
         for step in 0..600usize {
             let w = step % n;
-            ps.push(w, &constant_grad);
+            ps.push(w, &constant_grad).unwrap();
             // post-apply displacement vs what the worker computed on
             if step >= 300 {
                 tail.push(dana::util::stats::rmse(
@@ -205,7 +205,7 @@ fn nag_asgd_gap_is_momentum_inflated() {
         }
         for step in 0..600 {
             let w = step % n;
-            ps.push(w, &constant_grad);
+            ps.push(w, &constant_grad).unwrap();
             ps.pull(w);
         }
         let rows = ps.metrics.rows();
@@ -246,11 +246,11 @@ fn dana_dc_lambda0_is_dana_zero() {
         let w = rng.below(n as u64) as usize;
         let sent = dc.pull(w).to_vec();
         quad_grad(&sent, &ks, &mut g);
-        dc.push(w, &g);
+        dc.push(w, &g).unwrap();
         let sent_z = zero.pull(w).to_vec();
         assert_eq!(sent, sent_z);
         quad_grad(&sent_z, &ks, &mut g);
-        zero.push(w, &g);
+        zero.push(w, &g).unwrap();
     }
     for i in 0..K {
         assert!((dc.theta()[i] - zero.theta()[i]).abs() < 1e-5);
@@ -290,7 +290,7 @@ fn momentum_correction_prevents_decay_glitch() {
         for _ in 0..120 {
             let sent = ps.pull(0).to_vec();
             quad_grad(&sent, &ks, &mut g);
-            ps.push(0, &g);
+            ps.push(0, &g).unwrap();
         }
     }
     // both converge on a quadratic, but the corrected run must not be worse

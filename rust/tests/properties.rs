@@ -88,7 +88,7 @@ fn prop_lag_matches_interleaving() {
                 has[w] = true;
             } else {
                 expected.push(ps.master_step() - pulled_at[w]);
-                ps.push(w, &vec![0.01; k]);
+                ps.push(w, &vec![0.01; k]).unwrap();
                 // worker must re-pull before next push; model that here
                 ps.pull(w);
                 pulled_at[w] = ps.master_step();
@@ -123,9 +123,9 @@ fn prop_gap_definition() {
         let sent0 = ps.pull(0).to_vec();
         ps.pull(1);
         let g1 = rand_vec(rng, k, 1.0);
-        ps.push(1, &g1);
+        ps.push(1, &g1).unwrap();
         let eta = ps.current_step().eta; // constant schedule
-        ps.push(0, &rand_vec(rng, k, 1.0));
+        ps.push(0, &rand_vec(rng, k, 1.0)).unwrap();
         let rows = ps.metrics.rows();
         // worker 0's gap = ||theta_after_w1_update - sent0|| / sqrt(k)
         let expected = eta as f64 * dana::util::stats::rmse(&g1);
@@ -145,7 +145,7 @@ fn prop_schedule_fairness_and_monotonicity() {
         let mut crng = Rng::new(seed);
         let model = ExecTimeModel::new(Environment::Homogeneous, n, 64, &mut crng);
         let mut s = AsyncSchedule::new(model, crng.fork(1));
-        let events = s.take(200 * n);
+        let events = s.take_n(200 * n);
         let mut counts = vec![0usize; n];
         let mut last = 0.0;
         for e in &events {
@@ -253,8 +253,8 @@ fn prop_sharded_server_equals_monolithic() {
                         has_pulled[w] = true;
                     } else {
                         let g = rand_vec(rng, k, 0.5);
-                        shrd.push(w, &g);
-                        mono.push(w, &g);
+                        shrd.push(w, &g).unwrap();
+                        mono.push(w, &g).unwrap();
                         assert_eq!(shrd.master_step(), mono.master_step());
                     }
                 }
@@ -343,7 +343,7 @@ fn prop_all_algorithms_stay_finite_on_bounded_streams() {
                 let mut msg = rand_vec(rng, k, 0.3);
                 let s = ps.current_step();
                 ps.algorithm().worker_message(&mut ws[w], &mut msg, s);
-                ps.push(w, &msg);
+                ps.push(w, &msg).unwrap();
                 ps.pull(w);
             }
             assert!(

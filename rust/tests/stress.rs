@@ -2,17 +2,58 @@
 //! (`train/real_async.rs`): seeded synthetic workloads, real OS threads,
 //! no PJRT.  The assertions are the §5.4 driver's liveness and progress
 //! contract — termination (no deadlock on the channel FIFO), a monotone
-//! master step, and actual optimization progress on the quadratic.
+//! master step, and actual optimization progress on the quadratic — now
+//! also under elastic membership (mid-run join/leave via `cfg.churn`) and
+//! worker failures (per-worker exits surface in `workers_lost`; the driver
+//! fails fast instead of deadlocking when nobody is left).
 
 use dana::config::{TrainConfig, Workload};
-use dana::optim::AlgorithmKind;
-use dana::train::real_async;
+use dana::optim::{AlgorithmKind, LeavePolicy};
+use dana::sim::ChurnSchedule;
+use dana::train::real_async::{self, StepFn};
 
 fn stress_cfg(alg: AlgorithmKind, workers: usize, epochs: f64) -> TrainConfig {
     let mut cfg = TrainConfig::preset(Workload::C10, alg, workers, epochs);
     cfg.seed = 11;
     cfg.metrics_every = 7;
     cfg
+}
+
+/// A synthetic quadratic step factory where the workers in `bad` fail —
+/// at init (`fail_init`) or on their `fail_at`-th step.  Built on the
+/// shared synthetic objective helpers so the fault-injection harness
+/// tests the same workload the drivers run.
+fn flaky_quadratic(
+    k: usize,
+    seed: u64,
+    bad: Vec<usize>,
+    fail_init: bool,
+    fail_at: usize,
+) -> impl Fn(usize) -> anyhow::Result<StepFn> + Sync {
+    let curv = real_async::synthetic_curvature(k);
+    move |w: usize| -> anyhow::Result<StepFn> {
+        if bad.contains(&w) && fail_init {
+            anyhow::bail!("injected init failure for worker {w}");
+        }
+        let curv = curv.clone();
+        let is_bad = bad.contains(&w);
+        let mut rng = real_async::synthetic_worker_rng(seed, w);
+        let mut steps = 0usize;
+        Ok(Box::new(move |params: &[f32]| {
+            steps += 1;
+            if is_bad && steps >= fail_at {
+                anyhow::bail!("injected step failure for worker {w}");
+            }
+            let mut g = vec![0.0f32; params.len()];
+            real_async::synthetic_grad(params, &curv, &mut rng, &mut g);
+            Ok((real_async::synthetic_loss(params, &curv) as f32, g))
+        }) as StepFn)
+    }
+}
+
+fn quad_eval(k: usize) -> impl FnMut(&[f32]) -> anyhow::Result<(f64, f64)> {
+    let curv = real_async::synthetic_curvature(k);
+    move |theta: &[f32]| Ok(real_async::synthetic_eval(theta, &curv))
 }
 
 #[test]
@@ -94,4 +135,182 @@ fn real_async_slim_worker_rule_runs_worker_side() {
 fn run_synthetic_rejects_empty_parameter_vector() {
     let cfg = stress_cfg(AlgorithmKind::Asgd, 2, 0.1);
     assert!(real_async::run_synthetic(&cfg, 0).is_err());
+}
+
+#[test]
+fn real_async_survives_mid_run_join_and_leave() {
+    // Satellite (c): real OS threads spawned/stopped mid-run.  The leave
+    // retires a slot whose in-flight push must be dropped (not applied,
+    // not deadlocked on), the join spawns a brand-new thread, and the run
+    // still completes its full step budget and descends.
+    let k = 1024;
+    for policy in [LeavePolicy::Retire, LeavePolicy::Fold] {
+        let mut cfg = stress_cfg(AlgorithmKind::DanaZero, 6, 2.0); // 200 steps
+        cfg.churn = ChurnSchedule::parse("leave@0.2:1,join@0.4,leave@0.6,join@0.8").unwrap();
+        cfg.leave_policy = policy;
+        let j0 = real_async::synthetic_loss(
+            &real_async::synthetic_theta0(k),
+            &real_async::synthetic_curvature(k),
+        );
+        let rep = real_async::run_synthetic(&cfg, k).unwrap();
+        assert_eq!(rep.steps, cfg.total_master_steps());
+        assert!(!rep.diverged);
+        assert_eq!(rep.workers_joined, 2);
+        assert_eq!(rep.workers_left, 2);
+        assert_eq!(rep.workers_lost, 0);
+        for w in rep.loss_curve.windows(2) {
+            assert!(w[0].0 < w[1].0, "master step went backwards: {w:?}");
+        }
+        assert!(
+            rep.final_test_loss < 0.1 * j0,
+            "{policy}: final loss {} vs initial {j0}",
+            rep.final_test_loss
+        );
+    }
+}
+
+#[test]
+fn real_async_sharded_survives_churn() {
+    let k = 512;
+    let mut cfg = stress_cfg(AlgorithmKind::DanaDc, 6, 2.0);
+    cfg.shards = 4;
+    cfg.churn = ChurnSchedule::parse("leave@0.3:2,join@0.5").unwrap();
+    let rep = real_async::run_synthetic(&cfg, k).unwrap();
+    assert_eq!(rep.steps, cfg.total_master_steps());
+    assert!(!rep.diverged);
+    assert_eq!((rep.workers_joined, rep.workers_left), (1, 1));
+}
+
+#[test]
+fn lost_workers_surface_in_report_and_run_completes() {
+    // One worker's gradient source dies at init, another mid-run: the
+    // survivors finish the budget and the report counts both losses.
+    let k = 256;
+    let cfg = stress_cfg(AlgorithmKind::DanaZero, 5, 1.0); // 100 steps
+    let make_step = flaky_quadratic(k, cfg.seed, vec![0, 3], false, 4);
+    let rep = real_async::run_core(
+        &cfg,
+        &real_async::synthetic_theta0(k),
+        &make_step,
+        quad_eval(k),
+    )
+    .unwrap();
+    assert_eq!(rep.steps, cfg.total_master_steps());
+    assert_eq!(rep.workers_lost, 2, "both step-failures must be counted");
+    assert!(!rep.diverged);
+}
+
+#[test]
+fn init_failures_surface_in_report() {
+    let k = 128;
+    let cfg = stress_cfg(AlgorithmKind::Asgd, 4, 0.5); // 50 steps
+    let make_step = flaky_quadratic(k, cfg.seed, vec![1], true, 0);
+    let rep = real_async::run_core(
+        &cfg,
+        &real_async::synthetic_theta0(k),
+        &make_step,
+        quad_eval(k),
+    )
+    .unwrap();
+    assert_eq!(rep.steps, cfg.total_master_steps());
+    assert_eq!(rep.workers_lost, 1);
+}
+
+#[test]
+fn panicking_worker_surfaces_as_lost_instead_of_hanging() {
+    // A panic (not an Err) in the gradient source must be caught inside
+    // the worker thread and reported as an exit: before this was handled,
+    // the master — which keeps a sender alive for mid-run joins — would
+    // block on recv forever once the last panicked worker went silent.
+    let k = 64;
+    let make_step = {
+        let curv = real_async::synthetic_curvature(k);
+        move |w: usize| -> anyhow::Result<StepFn> {
+            let curv = curv.clone();
+            let mut rng = real_async::synthetic_worker_rng(17, w);
+            let mut steps = 0usize;
+            Ok(Box::new(move |params: &[f32]| {
+                steps += 1;
+                if w == 0 && steps >= 3 {
+                    panic!("injected panic in worker {w}");
+                }
+                let mut g = vec![0.0f32; params.len()];
+                real_async::synthetic_grad(params, &curv, &mut rng, &mut g);
+                Ok((real_async::synthetic_loss(params, &curv) as f32, g))
+            }) as StepFn)
+        }
+    };
+    let cfg = stress_cfg(AlgorithmKind::Asgd, 3, 1.0); // 100 steps
+    let rep = real_async::run_core(
+        &cfg,
+        &real_async::synthetic_theta0(k),
+        &make_step,
+        quad_eval(k),
+    )
+    .unwrap();
+    assert_eq!(rep.steps, cfg.total_master_steps());
+    assert_eq!(rep.workers_lost, 1, "the panicked worker must be counted");
+
+    // ...and when EVERY worker panics, the run errors out promptly.
+    let all_panic = |_w: usize| -> anyhow::Result<StepFn> {
+        Ok(Box::new(move |_params: &[f32]| panic!("boom")) as StepFn)
+    };
+    let err = real_async::run_core(
+        &cfg,
+        &real_async::synthetic_theta0(k),
+        &all_panic,
+        quad_eval(k),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("no live workers"), "{err}");
+}
+
+#[test]
+fn scheduled_leave_of_crashed_worker_is_skipped_not_fatal() {
+    // Worker 1 dies at init (implicit leave); the schedule later names it
+    // in an explicit leave.  The leave must be a no-op — the run finishes
+    // on the survivors with the crash counted once, in workers_lost.
+    let k = 128;
+    let mut cfg = stress_cfg(AlgorithmKind::DanaZero, 4, 1.0); // 100 steps
+    cfg.churn = ChurnSchedule::parse("leave@0.5:1").unwrap();
+    let make_step = flaky_quadratic(k, cfg.seed, vec![1], true, 0);
+    let rep = real_async::run_core(
+        &cfg,
+        &real_async::synthetic_theta0(k),
+        &make_step,
+        quad_eval(k),
+    )
+    .unwrap();
+    assert_eq!(rep.steps, cfg.total_master_steps());
+    assert_eq!(rep.workers_lost, 1);
+    assert_eq!(rep.workers_left, 0, "the skipped leave must not be counted");
+}
+
+#[test]
+fn all_workers_dead_fails_fast_instead_of_hanging() {
+    // Every worker fails at init: the master must error out promptly with
+    // a clear message, not hang waiting on the FIFO (a deadlock here would
+    // hit the test harness timeout).
+    let k = 64;
+    let cfg = stress_cfg(AlgorithmKind::Asgd, 3, 1.0);
+    let make_step = flaky_quadratic(k, cfg.seed, vec![0, 1, 2], true, 0);
+    let err = real_async::run_core(
+        &cfg,
+        &real_async::synthetic_theta0(k),
+        &make_step,
+        quad_eval(k),
+    )
+    .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("no live workers"), "unexpected error: {msg}");
+    // mid-run collective death fails fast too
+    let make_step = flaky_quadratic(k, cfg.seed, vec![0, 1, 2], false, 5);
+    let err = real_async::run_core(
+        &cfg,
+        &real_async::synthetic_theta0(k),
+        &make_step,
+        quad_eval(k),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("no live workers"), "{err}");
 }
