@@ -17,7 +17,7 @@
 //! Run: cargo bench --bench server [-- <filter>]
 
 use dana::optim::{make_algorithm, AlgorithmKind, LeavePolicy, LrSchedule, ScheduleConfig};
-use dana::server::{ParameterServer, ShardedParameterServer};
+use dana::server::{Master, ParameterServer, ShardedParameterServer};
 use dana::util::bench::BenchSuite;
 use dana::util::rng::Rng;
 
@@ -201,5 +201,46 @@ fn main() {
             );
         }
     }
+
+    // Loopback transport: the same pull→push cycle through `NetServer` +
+    // `RemoteMaster` over 127.0.0.1, vs the in-process rows above — the
+    // framing/syscall overhead a real deployment pays per master cycle
+    // (2 frames ≈ 2·4k bytes each way at k=101386).
+    for &k in &[4_096usize, K] {
+        let theta0: Vec<f32> = (0..k).map(|i| (i as f32 * 0.7).sin()).collect();
+        let grad: Vec<f32> = vec![0.01; k];
+        let label_k = if k >= 100_000 { "101k".to_string() } else { format!("{}k", k / 1024) };
+        let master: Box<dyn dana::server::Master> = Box::new(ParameterServer::new(
+            make_algorithm(AlgorithmKind::DanaZero, &theta0, 0),
+            schedule(),
+            0,
+        ));
+        let mut srv = dana::net::NetServer::start(
+            master,
+            "127.0.0.1:0",
+            dana::net::ServeOptions::default(),
+        )
+        .expect("bind loopback");
+        let mut rm =
+            dana::net::RemoteMaster::connect(&srv.url(), N).expect("connect loopback");
+        let mut buf = vec![0.0f32; k];
+        for w in 0..N {
+            rm.pull_into(w, &mut buf);
+        }
+        let mut w = 0usize;
+        b.bench_with_bytes(
+            &format!("loopback/dana-zero/k={label_k}"),
+            Some((k * 4 * 2) as u64),
+            || {
+                rm.push_update(w, &grad).unwrap();
+                rm.pull_into(w, &mut buf);
+                std::hint::black_box(&buf);
+                w = (w + 1) % N;
+            },
+        );
+        drop(rm);
+        srv.stop();
+    }
+
     b.finish();
 }

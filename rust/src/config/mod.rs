@@ -106,6 +106,12 @@ pub struct TrainConfig {
     /// What happens to a leaver's momentum (DANA family): retired from v⁰
     /// or folded into a surviving worker's slot.
     pub leave_policy: LeavePolicy,
+    /// Remote parameter server (`tcp://host:port` or `host:port`) started
+    /// with `dana serve`.  None = in-process master.  When set, the
+    /// trainers connect a [`crate::net::RemoteMaster`] instead of
+    /// constructing a local server; `shards` is then a server-side
+    /// setting and this field supersedes it.
+    pub master_addr: Option<String>,
 }
 
 impl TrainConfig {
@@ -168,6 +174,7 @@ impl TrainConfig {
             shards: 1,
             churn: ChurnSchedule::default(),
             leave_policy: LeavePolicy::default(),
+            master_addr: None,
         }
     }
 
@@ -261,6 +268,13 @@ impl TrainConfig {
                 .ok_or_else(|| anyhow::anyhow!("leave_policy must be a string"))?
                 .parse()?;
         }
+        if let Some(v) = j.get("master_addr") {
+            let addr = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("master_addr must be a string"))?;
+            anyhow::ensure!(!addr.is_empty(), "master_addr must not be empty");
+            self.master_addr = Some(addr.to_string());
+        }
         Ok(())
     }
 
@@ -319,6 +333,19 @@ mod tests {
         assert_eq!(c.shards, 8);
         assert_eq!(c.churn.events.len(), 2);
         assert_eq!(c.leave_policy, LeavePolicy::Fold);
+    }
+
+    #[test]
+    fn master_addr_applies_from_json() {
+        let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
+        assert!(c.master_addr.is_none(), "preset must default to in-process");
+        let j = Json::parse(r#"{"master_addr":"tcp://10.0.0.7:7700"}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.master_addr.as_deref(), Some("tcp://10.0.0.7:7700"));
+        let j = Json::parse(r#"{"master_addr":""}"#).unwrap();
+        assert!(c.apply_json(&j).is_err(), "empty address rejected");
+        let j = Json::parse(r#"{"master_addr":42}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
     }
 
     #[test]

@@ -7,9 +7,11 @@
 //!   coordinator: every update rule evaluated in the paper
 //!   ([`optim`]), the parameter server with gap/lag instrumentation —
 //!   monolithic and sharded/lock-striped layouts behind one [`server::Master`]
-//!   interface ([`server`]), the gamma execution-time cluster simulator
-//!   ([`sim`]), training drivers ([`train`]) and the experiment harness
-//!   that regenerates each paper table/figure ([`experiments`]).
+//!   interface ([`server`]), the TCP transport + checkpoint/restore
+//!   subsystem that makes the cluster multi-process ([`net`]), the gamma
+//!   execution-time cluster simulator ([`sim`]), training drivers
+//!   ([`train`]) and the experiment harness that regenerates each paper
+//!   table/figure ([`experiments`]).
 //! * **Layer 2/1 (python, build-time)** — JAX models whose dense hot paths
 //!   are Pallas kernels, AOT-lowered to HLO text in `artifacts/`.
 //! * **Runtime bridge** — [`runtime`] loads the artifacts through the PJRT
@@ -22,6 +24,7 @@ pub mod config;
 pub mod data;
 pub mod experiments;
 pub mod math;
+pub mod net;
 pub mod optim;
 pub mod runtime;
 pub mod server;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train       run one training experiment (async / ssgd / baseline)
+//!   serve       host a parameter server over TCP (see `--master`)
 //!   experiment  regenerate a paper table/figure (or `all`)
 //!   simulate    pure timing simulation (no model execution)
 //!   info        artifact manifest + platform report
@@ -9,13 +10,17 @@
 //! Examples:
 //!   dana train --algorithm dana-slim --workers 8 --epochs 10
 //!   dana train --mode real --algorithm dana-slim --workers 4 --workload lm
+//!   dana serve --listen 127.0.0.1:7700 --algorithm dana-zero --synthetic --k 256
+//!   dana train --synthetic --master tcp://127.0.0.1:7700 --algorithm dana-zero
 //!   dana experiment fig4 --full --seeds 3
 //!   dana simulate --env hetero --workers 32
 
 use dana::config::{TrainConfig, Workload};
 use dana::experiments::{self, ExpOptions};
-use dana::optim::AlgorithmKind;
+use dana::net::{self, NetServer, ServeOptions};
+use dana::optim::{AlgorithmKind, LrSchedule};
 use dana::runtime::Engine;
+use dana::server::make_master;
 use dana::sim::Environment;
 use dana::train::{baseline, real_async, sim_trainer, ssgd};
 use dana::util::cli::Args;
@@ -28,13 +33,18 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: dana <train|experiment|simulate|info> [options]
+const USAGE: &str = "usage: dana <train|serve|experiment|simulate|info> [options]
   train      --algorithm A --workers N [--workload c10|wrn_c10|c100|imagenet|lm]
              [--epochs E] [--env homo|hetero] [--mode sim|real|ssgd|baseline]
              [--seed S] [--eta X] [--gamma X] [--metrics-every K]
              [--shards S] [--churn \"leave@0.3:2,join@0.5,slow@0.6:0=4x\"]
              [--leave-policy retire|fold] [--config file.json] [--use-pallas]
+             [--synthetic] [--k K] [--master tcp://HOST:PORT]
              [--artifacts DIR]
+  serve      --listen HOST:PORT --algorithm A [--workload W | --synthetic --k K]
+             [--workers N] [--epochs E] [--shards S] [--leave-policy retire|fold]
+             [--checkpoint PATH] [--checkpoint-every STEPS] [--resume PATH]
+             [--metrics-every K] [--seed S] [--artifacts DIR]
   experiment <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|fig12|fig13|
               table1..table6|churn|all> [--full] [--seeds K] [--out DIR]
              [--artifacts DIR]
@@ -45,6 +55,7 @@ fn run() -> anyhow::Result<()> {
     let mut args = Args::parse_env(true)?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&mut args),
+        Some("serve") => cmd_serve(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("simulate") => cmd_simulate(&mut args),
         Some("info") => cmd_info(&mut args),
@@ -100,6 +111,11 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     cfg.use_pallas = args.flag("use-pallas");
     cfg.eval_every_epochs = args.parse_or::<f64>("eval-every", 0.0)?;
     cfg.artifacts_dir = artifacts_dir(args);
+    if let Some(addr) = args.opt_str("master") {
+        cfg.master_addr = Some(addr);
+    }
+    let synthetic = args.flag("synthetic");
+    let synth_k = args.parse_or::<usize>("k", 256)?;
     let mode = args.str_or("mode", "sim");
     args.finish()?;
     if cfg.shards > 1 && matches!(mode.as_str(), "ssgd" | "baseline") {
@@ -111,22 +127,47 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
         }
         cfg.churn.validate(cfg.n_workers)?;
     }
+    if (synthetic || cfg.master_addr.is_some())
+        && matches!(mode.as_str(), "ssgd" | "baseline")
+    {
+        anyhow::bail!("--synthetic/--master apply only to --mode sim|real (got --mode {mode})");
+    }
 
-    let engine = Engine::cpu(&cfg.artifacts_dir)?;
+    let workload = if synthetic {
+        format!("synthetic quadratic (k={synth_k})")
+    } else {
+        cfg.variant_name()
+    };
     println!(
-        "training {} / {} on {} worker(s), {} epochs ({} master steps), mode={mode}",
-        cfg.variant_name(),
+        "training {} / {} on {} worker(s), {} epochs ({} master steps), mode={mode}{}",
+        workload,
         cfg.algorithm.name(),
         cfg.n_workers,
         cfg.epochs,
-        cfg.total_master_steps()
+        cfg.total_master_steps(),
+        cfg.master_addr
+            .as_deref()
+            .map(|a| format!(", master={a}"))
+            .unwrap_or_default()
     );
-    let report = match mode.as_str() {
-        "sim" => sim_trainer::run(&cfg, &engine)?,
-        "real" => real_async::run(&cfg, &engine)?,
-        "ssgd" => ssgd::run(&cfg, &engine)?,
-        "baseline" => baseline::run(&cfg, &engine)?,
-        other => anyhow::bail!("unknown mode {other:?} (sim|real|ssgd|baseline)"),
+    // The synthetic drivers are artifact-free: skip PJRT engine
+    // construction entirely so `dana train --synthetic` works without
+    // compiled artifacts (and against the vendored xla stub).
+    let report = if synthetic {
+        match mode.as_str() {
+            "sim" => sim_trainer::run_synthetic(&cfg, synth_k)?,
+            "real" => real_async::run_synthetic(&cfg, synth_k)?,
+            other => anyhow::bail!("unknown mode {other:?} (sim|real)"),
+        }
+    } else {
+        let engine = Engine::cpu(&cfg.artifacts_dir)?;
+        match mode.as_str() {
+            "sim" => sim_trainer::run(&cfg, &engine)?,
+            "real" => real_async::run(&cfg, &engine)?,
+            "ssgd" => ssgd::run(&cfg, &engine)?,
+            "baseline" => baseline::run(&cfg, &engine)?,
+            other => anyhow::bail!("unknown mode {other:?} (sim|real|ssgd|baseline)"),
+        }
     };
     println!("{}", report.summary());
     for p in &report.curve {
@@ -135,6 +176,87 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
             p.epoch, p.test_error, p.test_loss
         );
     }
+    Ok(())
+}
+
+/// Host a parameter server over TCP.  Workers join by connecting
+/// (`dana train --master tcp://HOST:PORT`); the cluster starts empty
+/// unless `--resume` restores checkpointed membership, in which case
+/// reconnecting workers re-attach to their old slots (lowest first).
+fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
+    let listen = args.str_or("listen", "127.0.0.1:7700");
+    let algorithm: AlgorithmKind = args.str_or("algorithm", "dana-slim").parse()?;
+    // schedule hyperparameters (the server owns the LR schedule; workers
+    // only ever see the per-step eta/gamma/lambda in replies)
+    let workers = args.parse_or::<usize>("workers", 8)?;
+    let epochs = args.parse_or::<f64>("epochs", 10.0)?;
+    let workload: Workload = args.str_or("workload", "c10").parse()?;
+    let synthetic = args.flag("synthetic");
+    let synth_k = args.parse_or::<usize>("k", 256)?;
+    let shards = args.parse_or::<usize>("shards", 1)?.max(1);
+    let leave_policy =
+        args.parse_or::<dana::optim::LeavePolicy>("leave-policy", Default::default())?;
+    let checkpoint_path = args.opt_str("checkpoint").map(PathBuf::from);
+    let checkpoint_every = args.parse_or::<u64>("checkpoint-every", 0)?;
+    let resume = args.opt_str("resume").map(PathBuf::from);
+    let metrics_every = args.parse_or::<u64>("metrics-every", 0)?;
+    let seed = args.parse_or::<u64>("seed", 1)?;
+    let eta = args.opt_parse::<f32>("eta")?;
+    let gamma = args.opt_parse::<f32>("gamma")?;
+    let artifacts = artifacts_dir(args);
+    args.finish()?;
+    anyhow::ensure!(
+        checkpoint_every == 0 || checkpoint_path.is_some(),
+        "--checkpoint-every needs --checkpoint PATH"
+    );
+
+    let mut cfg = TrainConfig::preset(workload, algorithm, workers, epochs);
+    cfg.seed = seed;
+    if let Some(e) = eta {
+        cfg.schedule.base_eta = e;
+    }
+    if let Some(g) = gamma {
+        cfg.schedule.gamma = g;
+    }
+    let theta0 = if synthetic {
+        real_async::synthetic_theta0(synth_k)
+    } else {
+        Engine::cpu(&artifacts)?.init_params(&cfg.variant_name())?
+    };
+    let schedule = LrSchedule::new(cfg.schedule.clone());
+    let threads = dana::util::parallel::default_threads();
+    let mut master = match &resume {
+        Some(path) => {
+            let snap = net::checkpoint::read_snapshot(path)?;
+            // restore() re-validates; checking here gives a better message
+            snap.validate(algorithm, theta0.len())?;
+            let mut m = make_master(algorithm, &snap.theta, schedule, 0, shards, threads);
+            m.restore(&snap)?;
+            println!(
+                "resumed {} from {} at master step {} ({} live of {} slots awaiting reconnect)",
+                algorithm.name(),
+                path.display(),
+                m.steps_done(),
+                m.live_workers(),
+                m.workers()
+            );
+            m
+        }
+        // fresh cluster: zero slots, every connect is a join
+        None => make_master(algorithm, &theta0, schedule, 0, shards, threads),
+    };
+    master.metrics_mut().set_every(metrics_every);
+    let k = master.param_len();
+    let opts = ServeOptions { leave_policy, checkpoint_path, checkpoint_every };
+    let mut srv = NetServer::start(master, &listen, opts)?;
+    println!(
+        "dana serve: {} k={k} shards={shards} on {} — join with `dana train --master {}`",
+        algorithm.name(),
+        srv.addr(),
+        srv.url()
+    );
+    srv.wait();
+    println!("dana serve: shut down");
     Ok(())
 }
 

@@ -1,0 +1,275 @@
+//! Binary checkpoint format for [`MasterSnapshot`] — the fault-tolerance
+//! half of the `net/` subsystem.
+//!
+//! Layout (little-endian, building on the wire codec's primitives):
+//!
+//! ```text
+//! [b"DANACKPT"][u32 version]
+//! [str kind][u64 master_step][f32 last_eta]
+//! [u64 k][k × f32 theta]
+//! [u64 n_slots][n × u8 live][n × u64 pulled_at][n × u8 has_pulled]
+//! [n × (u64 len + f32s) sent]
+//! [u32 n_state_entries] then per entry:
+//!     [str name][u8 shape_tag]
+//!     tag 0 (Coord):     [u64 len + f32s]
+//!     tag 1 (PerWorker): [u64 count][count × (u64 len + f32s)]
+//!     tag 2 (Scalars):   [u64 len + f64s]
+//! [u64 fnv1a-64 of every byte above]
+//! ```
+//!
+//! Decoding is fail-closed exactly like the wire protocol: bad magic,
+//! unknown version, truncation, counts that exceed the remaining bytes,
+//! trailing bytes, or a checksum mismatch are all errors — a torn or
+//! corrupted file can never restore into a half-valid master.
+//!
+//! **Atomicity.**  [`write_atomic`] writes to `<path>.tmp` in the same
+//! directory, fsyncs, then `rename(2)`s over the target, so a crash
+//! mid-write leaves either the previous complete checkpoint or a stray
+//! `.tmp` — never a torn file at the resume path.  (The checksum is the
+//! second line of defense, for torn *copies* of the file.)
+
+use crate::net::wire::{put_f32, put_str, put_u32, put_u64, put_vec_f32, put_vec_f64, Dec};
+use crate::optim::{StateDict, StateVec};
+use crate::server::MasterSnapshot;
+use std::io::Write;
+use std::path::Path;
+
+/// Checkpoint file magic.
+pub const CKPT_MAGIC: [u8; 8] = *b"DANACKPT";
+/// Checkpoint format version.
+pub const CKPT_VERSION: u32 = 1;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a snapshot (checksum appended).
+pub fn encode_snapshot(s: &MasterSnapshot) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + s.theta.len() * 4 * (2 + s.slots()));
+    out.extend_from_slice(&CKPT_MAGIC);
+    put_u32(&mut out, CKPT_VERSION);
+    put_str(&mut out, s.kind.name());
+    put_u64(&mut out, s.master_step);
+    put_f32(&mut out, s.last_eta);
+    put_vec_f32(&mut out, &s.theta);
+    put_u64(&mut out, s.slots() as u64);
+    for &l in &s.live {
+        out.push(u8::from(l));
+    }
+    for &p in &s.pulled_at {
+        put_u64(&mut out, p);
+    }
+    for &h in &s.has_pulled {
+        out.push(u8::from(h));
+    }
+    for sent in &s.sent {
+        put_vec_f32(&mut out, sent);
+    }
+    put_u32(&mut out, s.state.len() as u32);
+    for (name, val) in &s.state {
+        put_str(&mut out, name);
+        match val {
+            StateVec::Coord(v) => {
+                out.push(0);
+                put_vec_f32(&mut out, v);
+            }
+            StateVec::PerWorker(vs) => {
+                out.push(1);
+                put_u64(&mut out, vs.len() as u64);
+                for v in vs {
+                    put_vec_f32(&mut out, v);
+                }
+            }
+            StateVec::Scalars(v) => {
+                out.push(2);
+                put_vec_f64(&mut out, v);
+            }
+        }
+    }
+    let sum = fnv1a(&out);
+    put_u64(&mut out, sum);
+    out
+}
+
+/// Decode a snapshot, verifying structure and checksum.  Fail-closed.
+pub fn decode_snapshot(bytes: &[u8]) -> anyhow::Result<MasterSnapshot> {
+    anyhow::ensure!(bytes.len() >= 8 + 4 + 8, "checkpoint truncated ({} bytes)", bytes.len());
+    let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes(sum_bytes.try_into().expect("8 bytes"));
+    anyhow::ensure!(
+        fnv1a(body) == stored,
+        "checkpoint checksum mismatch (torn or corrupted file)"
+    );
+    let mut d = Dec { b: body, i: 0 };
+    let magic = d.take(8)?;
+    anyhow::ensure!(magic == CKPT_MAGIC, "not a DANA checkpoint (magic {magic:02x?})");
+    let version = d.u32()?;
+    anyhow::ensure!(
+        version == CKPT_VERSION,
+        "checkpoint version {version} (this build reads {CKPT_VERSION})"
+    );
+    let kind = d.str()?.parse()?;
+    let master_step = d.u64()?;
+    let last_eta = d.f32()?;
+    let theta = d.vec_f32()?;
+    let n = d.u64()? as usize;
+    // n is bounded by the remaining bytes (1 byte per live flag minimum)
+    anyhow::ensure!(n <= body.len(), "slot count {n} exceeds file size");
+    let mut live = Vec::with_capacity(n);
+    for _ in 0..n {
+        live.push(d.u8()? != 0);
+    }
+    let mut pulled_at = Vec::with_capacity(n);
+    for _ in 0..n {
+        pulled_at.push(d.u64()?);
+    }
+    let mut has_pulled = Vec::with_capacity(n);
+    for _ in 0..n {
+        has_pulled.push(d.u8()? != 0);
+    }
+    let mut sent = Vec::with_capacity(n);
+    for _ in 0..n {
+        sent.push(d.vec_f32()?);
+    }
+    let n_state = d.u32()? as usize;
+    let mut state: StateDict = Vec::with_capacity(n_state.min(64));
+    for _ in 0..n_state {
+        let name = d.str()?.to_string();
+        let val = match d.u8()? {
+            0 => StateVec::Coord(d.vec_f32()?),
+            1 => {
+                let count = d.u64()? as usize;
+                anyhow::ensure!(count <= body.len(), "per-worker count {count} exceeds file");
+                let mut vs = Vec::with_capacity(count);
+                for _ in 0..count {
+                    vs.push(d.vec_f32()?);
+                }
+                StateVec::PerWorker(vs)
+            }
+            2 => StateVec::Scalars(d.vec_f64()?),
+            other => anyhow::bail!("unknown state shape tag {other}"),
+        };
+        state.push((name, val));
+    }
+    d.done()?;
+    let snap = MasterSnapshot {
+        kind,
+        master_step,
+        last_eta,
+        theta,
+        live,
+        sent,
+        pulled_at,
+        has_pulled,
+        state,
+    };
+    snap.validate(kind, snap.theta.len())?;
+    Ok(snap)
+}
+
+/// Write a snapshot to `path` atomically: `<path>.tmp` + fsync + rename.
+/// The `.tmp` suffix is *appended* (not substituted for the extension),
+/// so `run.ckpt` and `run.bin` in one directory never share a tmp file.
+pub fn write_atomic(path: &Path, snap: &MasterSnapshot) -> anyhow::Result<()> {
+    let bytes = encode_snapshot(snap);
+    let mut tmp_name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("checkpoint path {} has no file name", path.display()))?
+        .to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| anyhow::anyhow!("create {}: {e}", tmp.display()))?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+    Ok(())
+}
+
+/// Read and decode a checkpoint file.
+pub fn read_snapshot(path: &Path) -> anyhow::Result<MasterSnapshot> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("read checkpoint {}: {e}", path.display()))?;
+    decode_snapshot(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::AlgorithmKind;
+
+    fn sample() -> MasterSnapshot {
+        MasterSnapshot {
+            kind: AlgorithmKind::DanaZero,
+            master_step: 41,
+            last_eta: 0.0125,
+            theta: vec![1.5, -2.25, 0.0],
+            live: vec![true, false, true],
+            sent: vec![vec![0.5; 3], vec![0.0; 3], vec![-1.0; 3]],
+            pulled_at: vec![40, 0, 39],
+            has_pulled: vec![true, false, true],
+            state: vec![
+                (
+                    "v".to_string(),
+                    StateVec::PerWorker(vec![vec![0.1; 3], vec![0.0; 3], vec![-0.2; 3]]),
+                ),
+                ("vsum".to_string(), StateVec::Coord(vec![-0.1; 3])),
+            ],
+        }
+    }
+
+    #[test]
+    fn snapshot_codec_round_trips() {
+        let s = sample();
+        let bytes = encode_snapshot(&s);
+        let back = decode_snapshot(&bytes).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn corruption_is_rejected_not_panicked() {
+        let bytes = encode_snapshot(&sample());
+        // truncation at every prefix length
+        for cut in 0..bytes.len() {
+            assert!(decode_snapshot(&bytes[..cut]).is_err(), "cut={cut}");
+        }
+        // single-byte corruption anywhere trips the checksum (or a
+        // structural check)
+        for i in (0..bytes.len()).step_by(7) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(decode_snapshot(&bad).is_err(), "flip at {i}");
+        }
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(decode_snapshot(&long).is_err());
+    }
+
+    #[test]
+    fn atomic_write_round_trips_and_replaces() {
+        let dir = std::env::temp_dir().join(format!("dana-ckpt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        let mut s = sample();
+        write_atomic(&path, &s).unwrap();
+        assert_eq!(read_snapshot(&path).unwrap(), s);
+        s.master_step = 99;
+        write_atomic(&path, &s).unwrap();
+        assert_eq!(read_snapshot(&path).unwrap().master_step, 99);
+        assert!(!dir.join("ckpt.bin.tmp").exists(), "tmp cleaned up");
+        // distinct targets sharing a stem must not share a tmp file
+        let sibling = dir.join("ckpt.other");
+        write_atomic(&sibling, &s).unwrap();
+        assert!(read_snapshot(&sibling).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

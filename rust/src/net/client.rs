@@ -1,0 +1,519 @@
+//! `RemoteMaster` — the full [`Master`] trait spoken over the wire
+//! protocol, so both training drivers run **unchanged** against
+//! `--master tcp://host:port`.
+//!
+//! Topology: one TCP connection *per worker slot* (connect = join,
+//! disconnect = leave — the server maps the socket lifecycle onto
+//! membership directly) plus one control connection for cluster-wide
+//! reads (θ for eval, status) and operator requests (checkpoint,
+//! shutdown).  Local worker indices mirror the server's `claim_slot` rule
+//! (lowest free index, else append), so a single-client cluster keeps
+//! local index == server slot and the sim driver's membership-lockstep
+//! assertion holds across the network unchanged.
+//!
+//! Every reply piggybacks a [`wire::Header`] (master step, current
+//! schedule point, membership counts), which this client caches —
+//! [`Master::step_now`]/[`Master::steps_done`] are cache reads, not round
+//! trips.  The cache is exact for a single-client cluster (nothing
+//! advances the master between this client's own calls), which is what
+//! the bit-for-bit loopback equivalence relies on; with multiple clients
+//! it is eventually consistent, like any snapshot of a racing master.
+//!
+//! **Failure semantics.**  The [`Master`] trait keeps in-process
+//! signatures (`pull_params` returns a bare `Vec<f32>`), so transport
+//! loss surfaces in two ways: fallible methods (`push_update`,
+//! `remove_worker`) return errors after reconnection attempts are
+//! exhausted, and infallible ones panic with a clear message — the same
+//! contract as the in-process master, where a pull for a retired slot is
+//! a caller bug that panics.  Before giving up, every request transparently
+//! retries once after [`RemoteMaster::reconnect`] (bounded attempts with
+//! backoff), which re-runs the join handshake for all live workers —
+//! against a server restarted from `--resume` this re-attaches each
+//! worker to its checkpointed slot (lowest-first on both sides), i.e.
+//! *reconnect-as-join* fault recovery.  Worker-local optimizer state
+//! (DANA-Slim momentum) lives in the driver and survives reconnects
+//! untouched.
+//!
+//! Gap/lag metrics are recorded server-side (where θ lives); the local
+//! [`MetricsRecorder`] stays empty and reports zeros.
+
+use super::wire::{self, Header, Msg, Role};
+use crate::optim::{make_algorithm, Algorithm, AlgorithmKind, LeavePolicy, Step, WorkerState};
+use crate::server::metrics::MetricsRecorder;
+use crate::server::{Master, MasterSnapshot};
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+
+/// Strip the optional `tcp://` scheme from a master address.
+pub fn strip_scheme(addr: &str) -> &str {
+    addr.strip_prefix("tcp://").unwrap_or(addr)
+}
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    /// Server-side slot id (worker connections; `u64::MAX` for control).
+    slot: u64,
+    /// Generation the server assigned at attach; echoed in every Push.
+    gen: u32,
+}
+
+impl Conn {
+    fn open(
+        addr: &str,
+        role: Role,
+        reattach: bool,
+    ) -> anyhow::Result<(Conn, AlgorithmKind, usize, Header)> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("connect to master {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let mut conn = Conn {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+            slot: u64::MAX,
+            gen: 0,
+        };
+        match conn.roundtrip(&Msg::Hello { role, reattach })? {
+            Msg::HelloAck { slot, gen, kind, k, header } => {
+                conn.slot = slot;
+                conn.gen = gen;
+                Ok((conn, kind, k as usize, header))
+            }
+            Msg::Error { detail, .. } => anyhow::bail!("master refused hello: {detail}"),
+            other => anyhow::bail!("unexpected hello reply: {other:?}"),
+        }
+    }
+
+    fn roundtrip(&mut self, msg: &Msg) -> anyhow::Result<Msg> {
+        wire::write_frame(&mut self.writer, msg)?;
+        wire::read_frame(&mut self.reader)
+    }
+}
+
+/// See the module docs.  Construct with [`RemoteMaster::connect`].
+pub struct RemoteMaster {
+    addr: String,
+    kind: AlgorithmKind,
+    k: usize,
+    control: Conn,
+    /// Local worker index → connection (None = left/retired locally).
+    workers: Vec<Option<Conn>>,
+    /// Latest server header seen on any reply.
+    header: Header,
+    /// Local instance for the worker-side algorithm half (DANA-Slim's
+    /// momentum transform) — stateless master-side, never networked.
+    local_alg: Box<dyn Algorithm>,
+    metrics: MetricsRecorder,
+    /// Reconnect budget per failed request.
+    pub reconnect_attempts: u32,
+    /// Pause between reconnect attempts.
+    pub reconnect_delay: std::time::Duration,
+}
+
+impl RemoteMaster {
+    /// Connect to `addr` (`host:port` or `tcp://host:port`) and join
+    /// `n_workers` worker slots.  The initial joins are *reattaching*:
+    /// against a `--resume`d server they claim the checkpointed slots
+    /// (lowest first); against a fresh server they are plain joins.
+    pub fn connect(addr: &str, n_workers: usize) -> anyhow::Result<RemoteMaster> {
+        Self::connect_checked(addr, n_workers, None)
+    }
+
+    /// Like [`Self::connect`], but validates the server's algorithm kind
+    /// and parameter count from the control handshake **before** any
+    /// worker slot is joined — a misconfigured client is rejected without
+    /// ever perturbing a live cluster's membership.
+    pub fn connect_expect(
+        addr: &str,
+        n_workers: usize,
+        kind: AlgorithmKind,
+        k: usize,
+    ) -> anyhow::Result<RemoteMaster> {
+        Self::connect_checked(addr, n_workers, Some((kind, k)))
+    }
+
+    fn connect_checked(
+        addr: &str,
+        n_workers: usize,
+        expect: Option<(AlgorithmKind, usize)>,
+    ) -> anyhow::Result<RemoteMaster> {
+        let addr = strip_scheme(addr).to_string();
+        let (control, kind, k, header) = Conn::open(&addr, Role::Control, false)?;
+        anyhow::ensure!(k > 0, "master reports k=0 parameters");
+        if let Some((want_kind, want_k)) = expect {
+            anyhow::ensure!(
+                kind == want_kind,
+                "master at {addr} runs {}, this run is configured for {}",
+                kind.name(),
+                want_kind.name()
+            );
+            anyhow::ensure!(
+                k == want_k,
+                "master at {addr} has k={k}, this run's model has k={want_k}"
+            );
+        }
+        let local_alg = make_algorithm(kind, &vec![0.0f32; k], 0);
+        let mut rm = RemoteMaster {
+            addr,
+            kind,
+            k,
+            control,
+            workers: Vec::with_capacity(n_workers),
+            header,
+            local_alg,
+            metrics: MetricsRecorder::default(),
+            reconnect_attempts: 20,
+            reconnect_delay: std::time::Duration::from_millis(250),
+        };
+        for _ in 0..n_workers {
+            let conn = rm.open_worker(true)?;
+            rm.workers.push(Some(conn));
+        }
+        Ok(rm)
+    }
+
+    fn open_worker(&mut self, reattach: bool) -> anyhow::Result<Conn> {
+        let (conn, kind, k, header) = Conn::open(&self.addr, Role::Worker, reattach)?;
+        anyhow::ensure!(
+            kind == self.kind && k == self.k,
+            "master changed shape mid-run: {}/k={k} (expected {}/k={})",
+            kind.name(),
+            self.kind.name(),
+            self.k
+        );
+        self.header = header;
+        Ok(conn)
+    }
+
+    /// Point this client at a (possibly restarted) server and re-run the
+    /// join handshake for the control connection and every live worker,
+    /// in slot order.  Against a `--resume`d server the lowest-first
+    /// re-attachment hands each worker its checkpointed slot back.
+    pub fn reconnect_to(&mut self, addr: &str) -> anyhow::Result<()> {
+        self.addr = strip_scheme(addr).to_string();
+        self.reconnect()
+    }
+
+    /// Re-run the join handshake against the current address, with
+    /// bounded retries (the server may still be restarting).
+    ///
+    /// Semantics by scenario: against a **restarted** (`--resume`) server
+    /// this re-attaches every live worker to its checkpointed slot,
+    /// momentum intact.  Against a **still-live** server (a transient
+    /// socket failure) the stale connections are dropped *first*, so the
+    /// server processes our leaves before the rejoin — the same slots are
+    /// reclaimed under the claim-slot rule and the cluster never grows;
+    /// the bounce costs the workers their server-side momentum under the
+    /// configured leave policy, exactly like any other leave+rejoin.
+    pub fn reconnect(&mut self) -> anyhow::Result<()> {
+        let pattern: Vec<bool> = self.workers.iter().map(Option::is_some).collect();
+        let ours = pattern.iter().filter(|&&p| p).count() as u64;
+        let expected_live = self.header.live_workers.saturating_sub(ours);
+        // Drop stale connections up front (a no-op against a dead server:
+        // the sockets are already gone).
+        for w in self.workers.iter_mut() {
+            *w = None;
+        }
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..self.reconnect_attempts.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(self.reconnect_delay);
+            }
+            match self.try_reconnect(&pattern, expected_live) {
+                Ok(()) => return Ok(()),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow::anyhow!("reconnect failed")))
+    }
+
+    fn try_reconnect(&mut self, pattern: &[bool], expected_live: u64) -> anyhow::Result<()> {
+        let (mut control, kind, k, mut header) = Conn::open(&self.addr, Role::Control, false)?;
+        anyhow::ensure!(
+            kind == self.kind && k == self.k,
+            "reconnected master runs {}/k={k}, this run needs {}/k={}",
+            kind.name(),
+            self.kind.name(),
+            self.k
+        );
+        // Give a still-live server a moment to process our dropped
+        // connections' EOF-leaves, so the rejoin below reclaims the same
+        // retired slots instead of growing the cluster.  Against a
+        // restarted server the condition never holds and this times out
+        // quickly into the re-attachment path.
+        for _ in 0..20 {
+            if header.live_workers <= expected_live {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            header = match control.roundtrip(&Msg::Status)? {
+                Msg::Ack { header } => header,
+                Msg::Error { detail, .. } => anyhow::bail!("status refused: {detail}"),
+                other => anyhow::bail!("unexpected status reply: {other:?}"),
+            };
+        }
+        let mut fresh: Vec<Option<Conn>> = Vec::with_capacity(pattern.len());
+        for &had_worker in pattern {
+            fresh.push(if had_worker {
+                let (conn, ..) = Conn::open(&self.addr, Role::Worker, true)?;
+                Some(conn)
+            } else {
+                None
+            });
+        }
+        self.control = control;
+        self.workers = fresh;
+        self.header = header;
+        Ok(())
+    }
+
+    fn note(&mut self, header: &Header) {
+        self.header = *header;
+    }
+
+    /// One request on worker `w`'s connection, transparently reconnecting
+    /// once on transport failure.  `Err` after that means the master is
+    /// unreachable; a `Msg::Error` reply passes through as `Ok`.
+    fn worker_request(&mut self, w: usize, msg: &Msg) -> anyhow::Result<Msg> {
+        anyhow::ensure!(
+            w < self.workers.len() && self.workers[w].is_some(),
+            "request for retired local worker {w}"
+        );
+        let first = self.workers[w].as_mut().expect("checked above").roundtrip(msg);
+        let reply = match first {
+            Ok(r) => r,
+            Err(_) => {
+                self.reconnect()?;
+                // a Push's generation died with the old connection: retag
+                let retagged = match msg {
+                    Msg::Push { msg, .. } => Msg::Push {
+                        gen: self.workers[w].as_ref().expect("reconnected").gen,
+                        msg: msg.clone(),
+                    },
+                    other => other.clone(),
+                };
+                self.workers[w].as_mut().expect("reconnected").roundtrip(&retagged)?
+            }
+        };
+        if let Msg::Params { header, .. }
+        | Msg::PushAck { header, .. }
+        | Msg::Ack { header }
+        | Msg::Theta { header, .. } = &reply
+        {
+            let header = *header;
+            self.note(&header);
+        }
+        Ok(reply)
+    }
+
+    /// One request on the control connection, same retry contract.
+    fn control_request(&mut self, msg: &Msg) -> anyhow::Result<Msg> {
+        let reply = match self.control.roundtrip(msg) {
+            Ok(r) => r,
+            Err(_) => {
+                self.reconnect()?;
+                self.control.roundtrip(msg)?
+            }
+        };
+        if let Msg::Params { header, .. }
+        | Msg::PushAck { header, .. }
+        | Msg::Ack { header }
+        | Msg::Theta { header, .. } = &reply
+        {
+            let header = *header;
+            self.note(&header);
+        }
+        Ok(reply)
+    }
+
+    /// Ask the server to write a checkpoint now (requires the serve side
+    /// to have a `--checkpoint` path).
+    pub fn force_checkpoint(&mut self) -> anyhow::Result<()> {
+        match self.control_request(&Msg::Checkpoint)? {
+            Msg::Ack { .. } => Ok(()),
+            Msg::Error { detail, .. } => anyhow::bail!("checkpoint refused: {detail}"),
+            other => anyhow::bail!("unexpected checkpoint reply: {other:?}"),
+        }
+    }
+
+    /// Gracefully shut the server down (it checkpoints first when
+    /// configured).
+    pub fn shutdown_server(&mut self) -> anyhow::Result<()> {
+        match self.control_request(&Msg::Shutdown)? {
+            Msg::Ack { .. } => Ok(()),
+            Msg::Error { detail, .. } => anyhow::bail!("shutdown refused: {detail}"),
+            other => anyhow::bail!("unexpected shutdown reply: {other:?}"),
+        }
+    }
+
+    /// Refresh and return the latest server header (cluster-wide counts).
+    pub fn refresh_status(&mut self) -> anyhow::Result<Header> {
+        match self.control_request(&Msg::Status)? {
+            Msg::Ack { header } => Ok(header),
+            Msg::Error { detail, .. } => anyhow::bail!("status refused: {detail}"),
+            other => anyhow::bail!("unexpected status reply: {other:?}"),
+        }
+    }
+
+    /// Server slot backing local worker `w` (tests/diagnostics).
+    pub fn server_slot(&self, w: usize) -> Option<u64> {
+        self.workers.get(w).and_then(|c| c.as_ref().map(|c| c.slot))
+    }
+}
+
+impl Master for RemoteMaster {
+    fn algo_kind(&self) -> AlgorithmKind {
+        self.kind
+    }
+
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn live_workers(&self) -> usize {
+        self.workers.iter().filter(|c| c.is_some()).count()
+    }
+
+    fn is_live(&self, worker: usize) -> bool {
+        self.workers.get(worker).map(Option::is_some).unwrap_or(false)
+    }
+
+    fn add_worker(&mut self) -> usize {
+        // mirror claim_slot: lowest retired local index, else append
+        let local = self
+            .workers
+            .iter()
+            .position(Option::is_none)
+            .unwrap_or(self.workers.len());
+        // a churn join is a genuinely fresh worker — never reattach it to
+        // a checkpointed slot's momentum
+        let conn = self
+            .open_worker(false)
+            .unwrap_or_else(|e| panic!("join against master {} failed: {e:#}", self.addr));
+        if local == self.workers.len() {
+            self.workers.push(Some(conn));
+        } else {
+            self.workers[local] = Some(conn);
+        }
+        local
+    }
+
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.is_live(worker),
+            "remove_worker: local worker {worker} is not live"
+        );
+        let reply = self.worker_request(worker, &Msg::Leave { policy });
+        // the connection closes either way: dropping it is the leave
+        self.workers[worker] = None;
+        match reply? {
+            Msg::Ack { .. } => Ok(()),
+            Msg::Error { detail, .. } => anyhow::bail!("leave refused: {detail}"),
+            other => anyhow::bail!("unexpected leave reply: {other:?}"),
+        }
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.header.master_step
+    }
+
+    fn param_len(&self) -> usize {
+        self.k
+    }
+
+    fn step_now(&self) -> Step {
+        self.header.step()
+    }
+
+    fn theta_vec(&self) -> Vec<f32> {
+        // &self signature forces an interior-mutability-free workaround:
+        // a one-shot control connection per read, with the same bounded
+        // retry budget as every other request (an eval landing in a
+        // server-restart window must survive it, not abort the run).
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..self.reconnect_attempts.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(self.reconnect_delay);
+            }
+            let mut conn = match Conn::open(&self.addr, Role::Control, false) {
+                Ok((conn, ..)) => conn,
+                Err(e) => {
+                    last = Some(e);
+                    continue;
+                }
+            };
+            match conn.roundtrip(&Msg::GetTheta) {
+                Ok(Msg::Theta { theta, .. }) => return theta,
+                Ok(Msg::Error { detail, .. }) => panic!("master refused theta read: {detail}"),
+                Ok(other) => panic!("unexpected theta reply: {other:?}"),
+                Err(e) => last = Some(e),
+            }
+        }
+        panic!(
+            "theta read from master {} failed after retries: {:#}",
+            self.addr,
+            last.unwrap_or_else(|| anyhow::anyhow!("unreachable"))
+        )
+    }
+
+    fn pull_params(&mut self, worker: usize) -> Vec<f32> {
+        match self.worker_request(worker, &Msg::PullParams) {
+            Ok(Msg::Params { params, .. }) => {
+                assert_eq!(params.len(), self.k, "master sent {} of k={}", params.len(), self.k);
+                params
+            }
+            Ok(Msg::Error { detail, .. }) => {
+                // in-process pull for a retired slot is a caller-bug panic;
+                // keep the same contract over the wire
+                panic!("pull for worker {worker} refused: {detail}")
+            }
+            Ok(other) => panic!("unexpected pull reply: {other:?}"),
+            Err(e) => panic!("lost connection to master {}: {e:#}", self.addr),
+        }
+    }
+
+    fn pull_into(&mut self, worker: usize, out: &mut [f32]) {
+        let params = self.pull_params(worker);
+        out.copy_from_slice(&params);
+    }
+
+    fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        let gen = self.workers[worker]
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("push from retired local worker {worker}"))?
+            .gen;
+        let reply = self.worker_request(worker, &Msg::Push { gen, msg: msg.to_vec() })?;
+        match reply {
+            Msg::PushAck { eta, gamma, lambda, .. } => Ok(Step { eta, gamma, lambda }),
+            Msg::Error { detail, .. } => anyhow::bail!("push rejected: {detail}"),
+            other => anyhow::bail!("unexpected push reply: {other:?}"),
+        }
+    }
+
+    fn make_worker_state(&self) -> WorkerState {
+        self.local_alg.make_worker_state()
+    }
+
+    fn worker_transform(&self, ws: &mut WorkerState, grad: &mut [f32], s: Step) {
+        self.local_alg.worker_message(ws, grad, s);
+    }
+
+    fn metrics(&self) -> &MetricsRecorder {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut MetricsRecorder {
+        &mut self.metrics
+    }
+
+    fn snapshot(&self) -> anyhow::Result<MasterSnapshot> {
+        anyhow::bail!(
+            "a remote master checkpoints server-side — send the Checkpoint control \
+             frame (RemoteMaster::force_checkpoint) instead"
+        )
+    }
+
+    fn restore(&mut self, _snap: &MasterSnapshot) -> anyhow::Result<()> {
+        anyhow::bail!("a remote master restores server-side (`dana serve --resume PATH`)")
+    }
+}

@@ -1,0 +1,65 @@
+//! Network transport: multi-process DANA over TCP.
+//!
+//! The rest of the system emulates asynchrony inside one process (sim
+//! events or real threads); this subsystem puts the [`Master`] interface
+//! behind a wire so the asynchrony is *transported*, not emulated — gap
+//! and staleness then reflect real delivery delay, the quantity the
+//! paper's gap analysis (and SSP/Gap-Aware in the related work) is
+//! actually about.  std-only: no new dependencies.
+//!
+//! * [`wire`] — versioned, length-prefixed, fail-closed binary protocol;
+//! * [`server`] — `dana serve`: any [`Master`] behind a `TcpListener`,
+//!   thread-per-connection, connect = join / EOF = leave, generation
+//!   tags against straggler pushes;
+//! * [`client`] — [`RemoteMaster`], the full [`Master`] trait over a
+//!   connection, so both trainers run unchanged against
+//!   `--master tcp://host:port`;
+//! * [`checkpoint`] — atomic binary snapshots of the full master state
+//!   (θ, per-worker vᶦ, v⁰, liveness, step count) for
+//!   `dana serve --resume` + client reconnect-as-join fault recovery.
+//!
+//! See `DESIGN.md` §8 for the format and lifecycle reference.
+
+pub mod checkpoint;
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{strip_scheme, RemoteMaster};
+pub use server::{NetServer, ServeOptions};
+
+use crate::config::TrainConfig;
+use crate::optim::LrSchedule;
+use crate::server::{make_master, Master};
+
+/// Build the master a training driver runs against: in-process
+/// (monolithic or sharded per `cfg.shards`) by default, or a
+/// [`RemoteMaster`] when [`TrainConfig::master_addr`] names a `dana
+/// serve` endpoint.  The remote path validates that the server's
+/// algorithm and parameter count match this run's — a mismatched pairing
+/// fails fast instead of training garbage.
+pub fn master_for(cfg: &TrainConfig, theta0: &[f32]) -> anyhow::Result<Box<dyn Master>> {
+    match &cfg.master_addr {
+        Some(addr) => {
+            // kind/k are validated from the control handshake BEFORE any
+            // worker slot is joined: a misconfigured client never
+            // perturbs a live cluster's membership (or its auto-tuned
+            // α/τ) on its way to being rejected.
+            let rm = RemoteMaster::connect_expect(
+                addr,
+                cfg.n_workers,
+                cfg.algorithm,
+                theta0.len(),
+            )?;
+            Ok(Box::new(rm))
+        }
+        None => Ok(make_master(
+            cfg.algorithm,
+            theta0,
+            LrSchedule::new(cfg.schedule.clone()),
+            cfg.n_workers,
+            cfg.shards,
+            crate::util::parallel::default_threads(),
+        )),
+    }
+}

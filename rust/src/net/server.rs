@@ -1,0 +1,484 @@
+//! `NetServer` — any [`Master`] implementation behind a `TcpListener`.
+//!
+//! Connection lifecycle maps one-to-one onto the elastic-membership
+//! machinery PR 2 built:
+//!
+//! * **connect** (a [`wire::Role::Worker`] Hello) = [`Master::add_worker`]
+//!   — or, after a `--resume`, re-attachment to the lowest live slot left
+//!   unattached by the checkpoint, so a returning worker finds its
+//!   momentum vᶦ exactly where it left it (*reconnect-as-join*);
+//! * **disconnect / EOF** = [`Master::remove_worker`] under the server's
+//!   configured default [`LeavePolicy`] (an explicit [`wire::Msg::Leave`]
+//!   frame may override the policy per departure);
+//! * every attach bumps the slot's **generation**; a `Push` whose echoed
+//!   generation no longer matches is a straggler from a previous
+//!   incarnation of the slot and is rejected recoverably, exactly like
+//!   the in-process drivers drop late pushes after a leave.
+//!
+//! Threading: one OS thread per connection, all serialized through one
+//! mutex around the master — the FIFO discipline of the paper's Appendix
+//! A.1 falls out of lock acquisition order.  The master's own sharded
+//! parallelism (S shards fanned out per apply) still runs *inside* the
+//! lock, so `--shards` composes with the transport unchanged.
+//!
+//! Fault tolerance: with a checkpoint path configured the server writes a
+//! [`crate::net::checkpoint`] snapshot every `checkpoint_every` master
+//! steps (atomic rename; see that module for the torn-write guarantees),
+//! on demand (`Checkpoint` control frame), and on graceful `Shutdown`.  A
+//! hard [`NetServer::stop`] intentionally skips the final write — tests
+//! use it to simulate a crash, and a crashed process by definition keeps
+//! only its last periodic snapshot.
+
+use super::checkpoint;
+use super::wire::{self, Msg, Role};
+use crate::optim::LeavePolicy;
+use crate::server::{Master, MasterSnapshot};
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Server-side policy knobs (everything else lives in the [`Master`]).
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    /// Policy for a worker that disconnects without an explicit Leave.
+    pub leave_policy: LeavePolicy,
+    /// Checkpoint file path (None = checkpointing disabled).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Write a checkpoint every N master steps (0 = only on demand /
+    /// graceful shutdown).
+    pub checkpoint_every: u64,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    /// Serializes checkpoint file writes that happen *outside* the master
+    /// lock (periodic snapshots) and records the highest master step ever
+    /// written, so a slow write can never clobber a newer snapshot.
+    ckpt_gate: Mutex<u64>,
+}
+
+struct Inner {
+    master: Box<dyn Master>,
+    /// Whether a connection currently owns each slot.
+    attached: Vec<bool>,
+    /// Per-slot generation, bumped at every attach.
+    slot_gen: Vec<u32>,
+    opts: ServeOptions,
+    /// The bound address — the in-band Shutdown path dials it once to
+    /// wake the accept loop out of `accept(2)`.
+    addr: SocketAddr,
+    /// Once set (under the lock), no further request is served: handler
+    /// threads close their connections and the accept loop exits.
+    shutdown: bool,
+}
+
+impl Inner {
+    fn header(&self) -> wire::Header {
+        let s = self.master.step_now();
+        wire::Header {
+            master_step: self.master.steps_done(),
+            eta: s.eta,
+            gamma: s.gamma,
+            lambda: s.lambda,
+            live_workers: self.master.live_workers() as u64,
+            worker_slots: self.master.workers() as u64,
+        }
+    }
+
+    /// Claim a slot for a worker connection.  A *reattaching* worker is
+    /// handed the lowest live-but-unattached slot (restored from a
+    /// checkpoint) first — deterministic, so a client reconnecting its
+    /// workers in order gets its old slots (and their momentum) back.  A
+    /// fresh join never inherits such a slot: it always goes through
+    /// `Master::add_worker` (zero momentum, EASGD at the center, auto
+    /// α/τ retune), preserving PR 2's joiner semantics.
+    fn attach_worker(&mut self, reattach: bool) -> usize {
+        let resumable = if reattach {
+            (0..self.master.workers()).find(|&w| {
+                self.master.is_live(w) && !self.attached.get(w).copied().unwrap_or(false)
+            })
+        } else {
+            None
+        };
+        let slot = resumable.unwrap_or_else(|| self.master.add_worker());
+        if slot >= self.attached.len() {
+            self.attached.resize(slot + 1, false);
+            self.slot_gen.resize(slot + 1, 0);
+        }
+        self.attached[slot] = true;
+        self.slot_gen[slot] = self.slot_gen[slot].wrapping_add(1);
+        slot
+    }
+
+    /// Synchronous checkpoint (explicit `Checkpoint` frame / graceful
+    /// shutdown): snapshot + write under the master lock, so the reply
+    /// acknowledges a durable file.  Takes the write gate so it composes
+    /// with in-flight periodic writes (lock order inner → gate; the
+    /// periodic path takes only the gate).
+    fn write_checkpoint(&self, shared: &Shared) -> anyhow::Result<()> {
+        let path = self
+            .opts
+            .checkpoint_path
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no checkpoint path configured"))?;
+        let snap = self.master.snapshot()?;
+        let mut last = shared.ckpt_gate.lock().expect("ckpt gate poisoned");
+        checkpoint::write_atomic(path, &snap)?;
+        *last = (*last).max(snap.master_step);
+        Ok(())
+    }
+
+    /// Periodic-checkpoint trigger after a push: clone a consistent
+    /// snapshot under the master lock and hand it back — the expensive
+    /// encode + write + fsync runs *outside* the lock so worker traffic
+    /// is not stalled behind the disk.  Failures are logged, not fatal.
+    fn pending_checkpoint(&self) -> Option<(std::path::PathBuf, MasterSnapshot)> {
+        if self.opts.checkpoint_every == 0 {
+            return None;
+        }
+        let path = self.opts.checkpoint_path.as_ref()?;
+        if self.master.steps_done() % self.opts.checkpoint_every != 0 {
+            return None;
+        }
+        match self.master.snapshot() {
+            Ok(snap) => Some((path.clone(), snap)),
+            Err(e) => {
+                eprintln!("checkpoint failed at step {}: {e:#}", self.master.steps_done());
+                None
+            }
+        }
+    }
+}
+
+/// Write a periodic snapshot outside the master lock.  The gate both
+/// serializes concurrent writers and drops a snapshot that raced behind a
+/// newer one.
+fn write_pending_checkpoint(shared: &Shared, path: &std::path::Path, snap: &MasterSnapshot) {
+    let mut last = shared.ckpt_gate.lock().expect("ckpt gate poisoned");
+    if snap.master_step <= *last {
+        return; // a newer snapshot is already on disk
+    }
+    match checkpoint::write_atomic(path, snap) {
+        Ok(()) => *last = snap.master_step,
+        Err(e) => eprintln!("checkpoint failed at step {}: {e:#}", snap.master_step),
+    }
+}
+
+/// A running transport server.  Dropping it stops the accept loop (hard,
+/// without a final checkpoint — see the module docs).
+pub struct NetServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `master`.  Slots already live in the master (a
+    /// `--resume` restore) start *unattached* and are claimed by
+    /// reconnecting workers; a fresh master should be built with 0
+    /// workers so that connect == join.
+    pub fn start(
+        master: Box<dyn Master>,
+        listen: &str,
+        opts: ServeOptions,
+    ) -> anyhow::Result<NetServer> {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
+        let addr = listener.local_addr()?;
+        let slots = master.workers();
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner {
+                master,
+                attached: vec![false; slots],
+                slot_gen: vec![0; slots],
+                opts,
+                addr,
+                shutdown: false,
+            }),
+            ckpt_gate: Mutex::new(0),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::spawn(move || accept_loop(listener, accept_shared));
+        Ok(NetServer { addr, shared, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// `tcp://host:port` form, ready for `--master`.
+    pub fn url(&self) -> String {
+        format!("tcp://{}", self.addr)
+    }
+
+    /// Hard stop ("kill"): refuse all further requests and close the
+    /// listener.  No final checkpoint is written; in-flight client
+    /// requests observe EOF.  Blocks until the accept loop exits.
+    pub fn stop(&mut self) {
+        {
+            let mut g = self.shared.inner.lock().expect("net server poisoned");
+            if g.shutdown {
+                return;
+            }
+            g.shutdown = true;
+        }
+        // wake the accept loop so it observes the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the server shuts down (a `Shutdown` control frame).
+    pub fn wait(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Master steps applied so far (test/operator introspection).
+    pub fn steps_done(&self) -> u64 {
+        self.shared.inner.lock().expect("net server poisoned").master.steps_done()
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.inner.lock().expect("net server poisoned").shutdown {
+            break;
+        }
+        match stream {
+            Ok(s) => {
+                let conn_shared = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(s, conn_shared) {
+                        eprintln!("net: connection error: {e:#}");
+                    }
+                });
+            }
+            Err(_) => continue, // transient accept failure
+        }
+    }
+}
+
+/// One connection, handshake to EOF.  Returns Err only for reply-write
+/// failures worth logging; a client disconnect is a normal return.
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> anyhow::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+
+    // Handshake: the first frame must be Hello.
+    let (slot, gen) = match wire::read_frame(&mut reader) {
+        Ok(Msg::Hello { role, reattach }) => {
+            let ack = {
+                let mut g = shared.inner.lock().expect("net server poisoned");
+                if g.shutdown {
+                    return Ok(());
+                }
+                match role {
+                    Role::Worker => {
+                        let slot = g.attach_worker(reattach);
+                        let gen = g.slot_gen[slot];
+                        (
+                            Some((slot, gen)),
+                            Msg::HelloAck {
+                                slot: slot as u64,
+                                gen,
+                                kind: g.master.algo_kind(),
+                                k: g.master.param_len() as u64,
+                                header: g.header(),
+                            },
+                        )
+                    }
+                    Role::Control => (
+                        None,
+                        Msg::HelloAck {
+                            slot: u64::MAX,
+                            gen: 0,
+                            kind: g.master.algo_kind(),
+                            k: g.master.param_len() as u64,
+                            header: g.header(),
+                        },
+                    ),
+                }
+            };
+            wire::write_frame(&mut writer, &ack.1)?;
+            match ack.0 {
+                Some((s, g)) => (Some(s), g),
+                None => (None, 0),
+            }
+        }
+        Ok(_) => {
+            let _ = wire::write_frame(
+                &mut writer,
+                &Msg::Error { recoverable: false, detail: "expected Hello".into() },
+            );
+            return Ok(());
+        }
+        Err(_) => return Ok(()), // dropped before the handshake
+    };
+
+    let served = serve_requests(&mut reader, &mut writer, &shared, slot, gen);
+
+    // Disconnect = leave.  Only the *current* incarnation of the slot may
+    // retire it, and a shutdown freezes membership (so the state a crash
+    // leaves behind matches the last checkpoint's worldview).
+    if let Some(w) = slot {
+        let mut g = shared.inner.lock().expect("net server poisoned");
+        if g.slot_gen[w] == gen && g.attached[w] {
+            g.attached[w] = false;
+            if !g.shutdown && g.master.is_live(w) {
+                let policy = g.opts.leave_policy;
+                if let Err(e) = g.master.remove_worker(w, policy) {
+                    eprintln!("net: retire of disconnected worker {w} failed: {e:#}");
+                }
+            }
+        }
+    }
+    served
+}
+
+fn serve_requests(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    shared: &Arc<Shared>,
+    slot: Option<usize>,
+    gen: u32,
+) -> anyhow::Result<()> {
+    loop {
+        // EOF or a malformed (fail-closed) frame both end the connection.
+        let msg = match wire::read_frame(reader) {
+            Ok(m) => m,
+            Err(_) => return Ok(()),
+        };
+        let (reply, shutdown_after, pending) = {
+            let mut g = shared.inner.lock().expect("net server poisoned");
+            if g.shutdown {
+                return Ok(()); // close without a reply: the client sees EOF
+            }
+            dispatch(&mut g, shared, slot, gen, msg)
+        };
+        // periodic snapshot: the disk I/O happens with the master unlocked
+        if let Some((path, snap)) = pending {
+            write_pending_checkpoint(shared, &path, &snap);
+        }
+        wire::write_frame(writer, &reply)?;
+        if shutdown_after {
+            return Ok(());
+        }
+    }
+}
+
+/// Handle one request under the master lock.  Returns the reply, whether
+/// the connection should close after sending it (Shutdown), and a
+/// periodic snapshot the caller must write after releasing the lock.
+fn dispatch(
+    g: &mut Inner,
+    shared: &Shared,
+    slot: Option<usize>,
+    gen: u32,
+    msg: Msg,
+) -> (Msg, bool, Option<(std::path::PathBuf, MasterSnapshot)>) {
+    let recoverable = |detail: String| Msg::Error { recoverable: true, detail };
+    let fatal = |detail: &str| Msg::Error { recoverable: false, detail: detail.to_string() };
+    let mut pending = None;
+    let reply = match (msg, slot) {
+        (Msg::PullParams, Some(w)) => {
+            if g.slot_gen[w] != gen || !g.master.is_live(w) {
+                recoverable(format!("pull for retired worker slot {w}"))
+            } else {
+                let params = g.master.pull_params(w);
+                Msg::Params { header: g.header(), params }
+            }
+        }
+        (Msg::Push { gen: push_gen, msg }, Some(w)) => {
+            if push_gen != g.slot_gen[w] || g.slot_gen[w] != gen || !g.master.is_live(w) {
+                // a straggler from a previous incarnation of the slot
+                recoverable(format!("stale push for worker slot {w}"))
+            } else if msg.len() != g.master.param_len() {
+                fatal(&format!(
+                    "push length {} != parameter count {}",
+                    msg.len(),
+                    g.master.param_len()
+                ))
+            } else {
+                match g.master.push_update(w, &msg) {
+                    Ok(s) => {
+                        pending = g.pending_checkpoint();
+                        Msg::PushAck {
+                            header: g.header(),
+                            eta: s.eta,
+                            gamma: s.gamma,
+                            lambda: s.lambda,
+                        }
+                    }
+                    Err(e) => recoverable(format!("{e:#}")),
+                }
+            }
+        }
+        (Msg::Leave { policy }, Some(w)) => {
+            if g.slot_gen[w] != gen || !g.attached[w] || !g.master.is_live(w) {
+                recoverable(format!("leave for already-retired slot {w}"))
+            } else {
+                g.attached[w] = false;
+                match g.master.remove_worker(w, policy) {
+                    Ok(()) => Msg::Ack { header: g.header() },
+                    Err(e) => recoverable(format!("{e:#}")),
+                }
+            }
+        }
+        (Msg::Status, _) => Msg::Ack { header: g.header() },
+        (Msg::GetTheta, _) => Msg::Theta { header: g.header(), theta: g.master.theta_vec() },
+        (Msg::Checkpoint, None) => match g.write_checkpoint(shared) {
+            Ok(()) => Msg::Ack { header: g.header() },
+            Err(e) => fatal(&format!("{e:#}")),
+        },
+        (Msg::Shutdown, None) => {
+            // graceful: snapshot first (best effort), then stop the world
+            if g.opts.checkpoint_path.is_some() {
+                if let Err(e) = g.write_checkpoint(shared) {
+                    eprintln!("net: shutdown checkpoint failed: {e:#}");
+                }
+            }
+            g.shutdown = true;
+            wake(g.addr);
+            return (Msg::Ack { header: g.header() }, true, None);
+        }
+        (Msg::Checkpoint | Msg::Shutdown, Some(_)) => {
+            fatal("control-only request on a worker connection")
+        }
+        (Msg::PullParams | Msg::Push { .. } | Msg::Leave { .. }, None) => {
+            fatal("worker request on a control connection")
+        }
+        (Msg::Hello { .. }, _) => fatal("duplicate Hello"),
+        // server->client messages arriving at the server are protocol abuse
+        (
+            Msg::HelloAck { .. }
+            | Msg::Params { .. }
+            | Msg::PushAck { .. }
+            | Msg::Ack { .. }
+            | Msg::Theta { .. }
+            | Msg::Error { .. },
+            _,
+        ) => fatal("unexpected reply-type message"),
+    };
+    (reply, false, pending)
+}
+
+/// Wake any listener blocked in accept after an in-band Shutdown: the
+/// control client's connection closing is not enough, the loop needs one
+/// more incoming event.  Called by the shutdown path on a best-effort
+/// clone of the address.
+pub(crate) fn wake(addr: SocketAddr) {
+    let _ = TcpStream::connect(addr);
+}

@@ -1,0 +1,390 @@
+//! The DANA wire protocol — a versioned, length-prefixed binary framing
+//! over any `Read`/`Write` byte stream (TCP in practice).
+//!
+//! Frame layout (all integers little-endian):
+//!
+//! ```text
+//! [u32 body_len][b"DANA"][u8 version][u8 tag][payload...]
+//! ```
+//!
+//! Parameter payloads are raw little-endian f32s, so a loopback round trip
+//! is bit-exact — the loopback equivalence suite (`rust/tests/net.rs`)
+//! pins `RemoteMaster` trajectories bit-for-bit against the in-process
+//! drivers for every algorithm.
+//!
+//! Decoding is **fail-closed**: a truncated frame, wrong magic, unknown
+//! version, unknown tag, oversized length prefix, an inner count that
+//! exceeds the remaining bytes, or trailing bytes after the payload all
+//! produce an error (never a panic, never a partial message).  The peer
+//! that sent the bad frame is disconnected by the caller.
+//!
+//! Algorithm kinds and leave policies travel as their canonical names (the
+//! same strings the CLI parses), so the protocol does not depend on enum
+//! discriminant order; an unknown name is a decode error.
+
+use crate::optim::{AlgorithmKind, LeavePolicy, Step};
+use std::io::{Read, Write};
+
+/// Frame magic — rejects non-DANA peers and stream desync immediately.
+pub const MAGIC: [u8; 4] = *b"DANA";
+/// Protocol version; bumped on any incompatible change.
+pub const VERSION: u8 = 1;
+/// Upper bound on one frame body (1 GiB ≈ 256M f32 parameters).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// What a connection is for, declared in its first frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// The connection IS a worker: accepting it joins the cluster
+    /// (`add_worker`), EOF leaves it (`remove_worker`).
+    Worker,
+    /// Observer/operator connection: status, θ reads, checkpoint and
+    /// shutdown requests.  Never owns a worker slot.
+    Control,
+}
+
+/// Server state piggybacked on every reply, so clients track the master
+/// step and current schedule point without extra round trips (the sim
+/// driver's `step_now()` is a cache read, not a network call).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Header {
+    /// Master steps applied so far.
+    pub master_step: u64,
+    /// Schedule hyperparameters at `master_step` (the *next* apply).
+    pub eta: f32,
+    pub gamma: f32,
+    pub lambda: f32,
+    /// Live workers / slot high-water mark, cluster-wide.
+    pub live_workers: u64,
+    pub worker_slots: u64,
+}
+
+impl Header {
+    /// The schedule point as a [`Step`].
+    pub fn step(&self) -> Step {
+        Step { eta: self.eta, gamma: self.gamma, lambda: self.lambda }
+    }
+}
+
+/// Every message of the protocol.  Client→server requests first, then
+/// server→client replies.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// First frame on every connection.  `reattach` distinguishes a
+    /// returning worker (may claim a live slot a checkpoint restore left
+    /// unattached, inheriting its momentum) from a genuinely fresh join
+    /// (always `Master::add_worker`: zero momentum, EASGD at the center).
+    /// Control connections ignore the flag.
+    Hello { role: Role, reattach: bool },
+    /// Worker: pull parameters (the algorithm's send — θ or look-ahead).
+    PullParams,
+    /// Worker: deliver an update vector.  `gen` echoes the generation
+    /// assigned at [`Msg::HelloAck`]; a push whose generation no longer
+    /// matches the slot's (the slot was retired and reused while this
+    /// message was in flight) is rejected recoverably.
+    Push { gen: u32, msg: Vec<f32> },
+    /// Worker: leave the cluster deliberately, with an explicit policy
+    /// (EOF without Leave uses the server's configured default).
+    Leave { policy: LeavePolicy },
+    /// Control: force a checkpoint write now.
+    Checkpoint,
+    /// Control: refresh the header.
+    Status,
+    /// Control: fetch the master parameters (final eval).
+    GetTheta,
+    /// Control: stop accepting connections and wind the server down.
+    Shutdown,
+
+    /// Reply to [`Msg::Hello`].  For workers, `slot`/`gen` identify the
+    /// claimed worker slot; control connections get `slot == u64::MAX`.
+    HelloAck { slot: u64, gen: u32, kind: AlgorithmKind, k: u64, header: Header },
+    /// Reply to [`Msg::PullParams`].
+    Params { header: Header, params: Vec<f32> },
+    /// Reply to [`Msg::Push`]: the [`Step`] that was applied.
+    PushAck { header: Header, eta: f32, gamma: f32, lambda: f32 },
+    /// Generic success reply (Leave/Checkpoint/Shutdown/Status).
+    Ack { header: Header },
+    /// Reply to [`Msg::GetTheta`].
+    Theta { header: Header, theta: Vec<f32> },
+    /// Error reply.  `recoverable` distinguishes a droppable condition (a
+    /// straggler push after leave) from a fatal one (protocol misuse).
+    Error { recoverable: bool, detail: String },
+}
+
+// ---------------------------------------------------------------- encode
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub(crate) fn put_f32(out: &mut Vec<u8>, x: f32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub(crate) fn put_vec_f32(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    out.reserve(v.len() * 4);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_header(out: &mut Vec<u8>, h: &Header) {
+    put_u64(out, h.master_step);
+    put_f32(out, h.eta);
+    put_f32(out, h.gamma);
+    put_f32(out, h.lambda);
+    put_u64(out, h.live_workers);
+    put_u64(out, h.worker_slots);
+}
+
+impl Msg {
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::PullParams => 2,
+            Msg::Push { .. } => 3,
+            Msg::Leave { .. } => 4,
+            Msg::Checkpoint => 5,
+            Msg::Status => 6,
+            Msg::GetTheta => 7,
+            Msg::Shutdown => 8,
+            Msg::HelloAck { .. } => 16,
+            Msg::Params { .. } => 17,
+            Msg::PushAck { .. } => 18,
+            Msg::Ack { .. } => 19,
+            Msg::Theta { .. } => 20,
+            Msg::Error { .. } => 21,
+        }
+    }
+
+    /// Serialize into one frame (length prefix included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(64);
+        body.extend_from_slice(&MAGIC);
+        body.push(VERSION);
+        body.push(self.tag());
+        match self {
+            Msg::Hello { role, reattach } => {
+                body.push(match role {
+                    Role::Worker => 0,
+                    Role::Control => 1,
+                });
+                body.push(u8::from(*reattach));
+            }
+            Msg::PullParams | Msg::Checkpoint | Msg::Status | Msg::GetTheta | Msg::Shutdown => {}
+            Msg::Push { gen, msg } => {
+                put_u32(&mut body, *gen);
+                put_vec_f32(&mut body, msg);
+            }
+            Msg::Leave { policy } => put_str(&mut body, policy.name()),
+            Msg::HelloAck { slot, gen, kind, k, header } => {
+                put_u64(&mut body, *slot);
+                put_u32(&mut body, *gen);
+                put_str(&mut body, kind.name());
+                put_u64(&mut body, *k);
+                put_header(&mut body, header);
+            }
+            Msg::Params { header, params } => {
+                put_header(&mut body, header);
+                put_vec_f32(&mut body, params);
+            }
+            Msg::PushAck { header, eta, gamma, lambda } => {
+                put_header(&mut body, header);
+                put_f32(&mut body, *eta);
+                put_f32(&mut body, *gamma);
+                put_f32(&mut body, *lambda);
+            }
+            Msg::Ack { header } => put_header(&mut body, header),
+            Msg::Theta { header, theta } => {
+                put_header(&mut body, header);
+                put_vec_f32(&mut body, theta);
+            }
+            Msg::Error { recoverable, detail } => {
+                body.push(u8::from(*recoverable));
+                put_str(&mut body, detail);
+            }
+        }
+        let mut frame = Vec::with_capacity(4 + body.len());
+        put_u32(&mut frame, body.len() as u32);
+        frame.extend_from_slice(&body);
+        frame
+    }
+
+    /// Decode one frame *body* (magic/version/tag/payload, without the
+    /// length prefix).  Fail-closed; see the module docs.
+    pub fn decode(body: &[u8]) -> anyhow::Result<Msg> {
+        let mut d = Dec { b: body, i: 0 };
+        let magic = d.take(4)?;
+        anyhow::ensure!(magic == MAGIC, "bad magic {magic:02x?}");
+        let version = d.u8()?;
+        anyhow::ensure!(
+            version == VERSION,
+            "protocol version {version} (this build speaks {VERSION})"
+        );
+        let tag = d.u8()?;
+        let msg = match tag {
+            1 => Msg::Hello {
+                role: match d.u8()? {
+                    0 => Role::Worker,
+                    1 => Role::Control,
+                    other => anyhow::bail!("unknown role {other}"),
+                },
+                reattach: d.u8()? != 0,
+            },
+            2 => Msg::PullParams,
+            3 => Msg::Push { gen: d.u32()?, msg: d.vec_f32()? },
+            4 => Msg::Leave { policy: d.str()?.parse()? },
+            5 => Msg::Checkpoint,
+            6 => Msg::Status,
+            7 => Msg::GetTheta,
+            8 => Msg::Shutdown,
+            16 => Msg::HelloAck {
+                slot: d.u64()?,
+                gen: d.u32()?,
+                kind: d.str()?.parse()?,
+                k: d.u64()?,
+                header: d.header()?,
+            },
+            17 => Msg::Params { header: d.header()?, params: d.vec_f32()? },
+            18 => Msg::PushAck {
+                header: d.header()?,
+                eta: d.f32()?,
+                gamma: d.f32()?,
+                lambda: d.f32()?,
+            },
+            19 => Msg::Ack { header: d.header()? },
+            20 => Msg::Theta { header: d.header()?, theta: d.vec_f32()? },
+            21 => Msg::Error { recoverable: d.u8()? != 0, detail: d.str()?.to_string() },
+            other => anyhow::bail!("unknown message tag {other}"),
+        };
+        d.done()?;
+        Ok(msg)
+    }
+}
+
+/// Write one message as a frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> std::io::Result<()> {
+    w.write_all(&msg.encode())?;
+    w.flush()
+}
+
+/// Read one frame and decode it.  Any transport error (including EOF,
+/// which the servers treat as a worker leave) surfaces as `Err`.
+pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Msg> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len);
+    anyhow::ensure!(len <= MAX_FRAME, "frame length {len} exceeds cap {MAX_FRAME}");
+    anyhow::ensure!(len >= 6, "frame length {len} shorter than the header");
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    Msg::decode(&body)
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked little-endian cursor (fail-closed on truncation).
+pub(crate) struct Dec<'a> {
+    pub(crate) b: &'a [u8],
+    pub(crate) i: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub(crate) fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.b.len() - self.i,
+            "truncated: wanted {n} bytes, {} left",
+            self.b.len() - self.i
+        );
+        let out = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(out)
+    }
+
+    pub(crate) fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    pub(crate) fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    pub(crate) fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    pub(crate) fn str(&mut self) -> anyhow::Result<&'a str> {
+        let n = self.u32()? as usize;
+        Ok(std::str::from_utf8(self.take(n)?)?)
+    }
+
+    /// f32 vector with its count validated against the remaining bytes
+    /// *before* any allocation — an adversarial count cannot OOM us.
+    pub(crate) fn vec_f32(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let bytes = self.take(
+            n.checked_mul(4)
+                .ok_or_else(|| anyhow::anyhow!("f32 count {n} overflows"))?,
+        )?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+
+    /// f64 vector (checkpoint scalar sections).
+    pub(crate) fn vec_f64(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        let bytes = self.take(
+            n.checked_mul(8)
+                .ok_or_else(|| anyhow::anyhow!("f64 count {n} overflows"))?,
+        )?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect())
+    }
+
+    pub(crate) fn header(&mut self) -> anyhow::Result<Header> {
+        Ok(Header {
+            master_step: self.u64()?,
+            eta: self.f32()?,
+            gamma: self.f32()?,
+            lambda: self.f32()?,
+            live_workers: self.u64()?,
+            worker_slots: self.u64()?,
+        })
+    }
+
+    /// Reject trailing garbage after a complete payload.
+    pub(crate) fn done(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.i == self.b.len(),
+            "{} trailing bytes after payload",
+            self.b.len() - self.i
+        );
+        Ok(())
+    }
+}
+
+pub(crate) fn put_vec_f64(out: &mut Vec<u8>, v: &[f64]) {
+    put_u64(out, v.len() as u64);
+    out.reserve(v.len() * 8);
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}

@@ -6,7 +6,9 @@
 //! term accurate — the combination converges fastest in the paper's Fig 5
 //! and holds the highest accuracy at 128 workers (Table 5).
 
-use super::{Algorithm, AlgorithmKind, LeavePolicy, Step};
+use super::{
+    dict_coord, dict_per_worker, Algorithm, AlgorithmKind, LeavePolicy, StateDict, StateVec, Step,
+};
 use crate::math;
 
 #[derive(Debug, Clone)]
@@ -101,6 +103,19 @@ impl Algorithm for DanaDc {
             policy,
             Some(&mut self.vsum),
         );
+    }
+
+    fn state_dict(&self) -> StateDict {
+        vec![
+            ("v".to_string(), StateVec::PerWorker(self.v.clone())),
+            ("vsum".to_string(), StateVec::Coord(self.vsum.clone())),
+        ]
+    }
+
+    fn load_state_dict(&mut self, dict: &StateDict) -> anyhow::Result<()> {
+        self.v = dict_per_worker(dict, "v", self.v.len(), self.theta.len())?;
+        self.vsum = dict_coord(dict, "vsum", self.theta.len())?;
+        Ok(())
     }
 
     fn set_theta(&mut self, theta: &[f32]) {

@@ -18,7 +18,9 @@
 //! The apply path is a single fused pass ([`crate::math::dana_fused_update`],
 //! mirrored 1:1 by the L1 Pallas kernel `kernels/update.py`).
 
-use super::{Algorithm, AlgorithmKind, LeavePolicy, Step};
+use super::{
+    dict_coord, dict_per_worker, Algorithm, AlgorithmKind, LeavePolicy, StateDict, StateVec, Step,
+};
 use crate::math;
 
 #[derive(Debug, Clone)]
@@ -116,6 +118,19 @@ impl Algorithm for DanaZero {
             policy,
             Some(&mut self.vsum),
         );
+    }
+
+    fn state_dict(&self) -> StateDict {
+        vec![
+            ("v".to_string(), StateVec::PerWorker(self.v.clone())),
+            ("vsum".to_string(), StateVec::Coord(self.vsum.clone())),
+        ]
+    }
+
+    fn load_state_dict(&mut self, dict: &StateDict) -> anyhow::Result<()> {
+        self.v = dict_per_worker(dict, "v", self.v.len(), self.theta.len())?;
+        self.vsum = dict_coord(dict, "vsum", self.theta.len())?;
+        Ok(())
     }
 
     fn set_theta(&mut self, theta: &[f32]) {

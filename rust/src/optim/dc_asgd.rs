@@ -14,7 +14,7 @@
 //! in the paper's tables while DANA-DC (the same compensation applied on
 //! top of DANA's small gap) keeps working.
 
-use super::{Algorithm, AlgorithmKind, LeavePolicy, Step};
+use super::{dict_per_worker, Algorithm, AlgorithmKind, LeavePolicy, StateDict, StateVec, Step};
 use crate::math;
 
 #[derive(Debug, Clone)]
@@ -69,6 +69,15 @@ impl Algorithm for DcAsgd {
 
     fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) {
         super::retire_momentum_slot(&mut self.live, &mut self.v, worker, policy, None);
+    }
+
+    fn state_dict(&self) -> StateDict {
+        vec![("v".to_string(), StateVec::PerWorker(self.v.clone()))]
+    }
+
+    fn load_state_dict(&mut self, dict: &StateDict) -> anyhow::Result<()> {
+        self.v = dict_per_worker(dict, "v", self.v.len(), self.theta.len())?;
+        Ok(())
     }
 
     fn set_theta(&mut self, theta: &[f32]) {

@@ -22,7 +22,10 @@
 //! fitting the pull/push API.  The moving rate follows the authors'
 //! recommendation `alpha = beta / N` with `beta = 0.9`.
 
-use super::{claim_slot, Algorithm, AlgorithmKind, LeavePolicy, Step};
+use super::{
+    claim_slot, dict_per_worker, dict_scalars, Algorithm, AlgorithmKind, LeavePolicy, StateDict,
+    StateVec, Step,
+};
 use crate::math;
 
 #[derive(Debug, Clone)]
@@ -142,6 +145,33 @@ impl Algorithm for Easgd {
         }
         self.v[worker].fill(0.0);
         self.retune_alpha();
+    }
+
+    fn state_dict(&self) -> StateDict {
+        vec![
+            ("x".to_string(), StateVec::PerWorker(self.x.clone())),
+            ("v".to_string(), StateVec::PerWorker(self.v.clone())),
+            (
+                "alpha".to_string(),
+                StateVec::Scalars(vec![
+                    self.alpha as f64,
+                    if self.alpha_auto { 1.0 } else { 0.0 },
+                ]),
+            ),
+        ]
+    }
+
+    /// NB: callers restore θ via [`Algorithm::set_theta`] *before* loading
+    /// the dict — `set_theta` resets every replica to the center, and the
+    /// dict's per-worker `x` entries overwrite them afterwards.
+    fn load_state_dict(&mut self, dict: &StateDict) -> anyhow::Result<()> {
+        let k = self.center.len();
+        self.x = dict_per_worker(dict, "x", self.x.len(), k)?;
+        self.v = dict_per_worker(dict, "v", self.v.len(), k)?;
+        let s = dict_scalars(dict, "alpha", 2)?;
+        self.alpha = s[0] as f32;
+        self.alpha_auto = s[1] != 0.0;
+        Ok(())
     }
 
     fn set_theta(&mut self, theta: &[f32]) {

@@ -13,7 +13,10 @@
 //! expected lag of N equal workers (the N next updates the paper's DANA
 //! analysis predicts over).
 
-use super::{Algorithm, AlgorithmKind, LeavePolicy, Step, ANY_SLOT};
+use super::{
+    dict_coord, dict_scalars, Algorithm, AlgorithmKind, LeavePolicy, StateDict, StateVec, Step,
+    ANY_SLOT,
+};
 use crate::math;
 
 #[derive(Debug, Clone)]
@@ -93,6 +96,29 @@ impl Algorithm for Lwp {
         if self.tau_auto {
             self.tau = self.live.max(1) as f32;
         }
+    }
+
+    fn state_dict(&self) -> StateDict {
+        vec![
+            ("v".to_string(), StateVec::Coord(self.v.clone())),
+            (
+                "tau".to_string(),
+                StateVec::Scalars(vec![
+                    self.tau as f64,
+                    self.live as f64,
+                    if self.tau_auto { 1.0 } else { 0.0 },
+                ]),
+            ),
+        ]
+    }
+
+    fn load_state_dict(&mut self, dict: &StateDict) -> anyhow::Result<()> {
+        self.v = dict_coord(dict, "v", self.theta.len())?;
+        let s = dict_scalars(dict, "tau", 3)?;
+        self.tau = s[0] as f32;
+        self.live = s[1] as usize;
+        self.tau_auto = s[2] != 0.0;
+        Ok(())
     }
 
     fn set_theta(&mut self, theta: &[f32]) {

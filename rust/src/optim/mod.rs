@@ -105,6 +105,92 @@ impl std::fmt::Display for LeavePolicy {
     }
 }
 
+/// One named piece of checkpointable optimizer state (everything except θ,
+/// which the servers snapshot through [`Algorithm::theta`] /
+/// [`Algorithm::set_theta`]).
+///
+/// The three shapes matter to the sharded server: coordinate-aligned state
+/// is concatenated across shards at snapshot time and sliced back by
+/// [`crate::server::shard_bounds`] at restore time, while shard-replicated
+/// scalars (tuner EMAs, τ, α, step counters) are taken from shard 0 and
+/// broadcast back to every shard.  f32 state round-trips exactly through
+/// the f64 scalar channel (`f32 as f64 as f32` is lossless).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StateVec {
+    /// One f32 per master coordinate (length k), e.g. a shared momentum
+    /// vector or v⁰.
+    Coord(Vec<f32>),
+    /// Per-slot coordinate vectors (n_slots × k), e.g. the DANA family's
+    /// vᶦ.  Retired slots are present (zeroed), so the slot indexing of a
+    /// restored instance matches the snapshot's exactly.
+    PerWorker(Vec<Vec<f32>>),
+    /// Coordinate-independent scalars, identical on every shard.
+    Scalars(Vec<f64>),
+}
+
+/// Ordered, named state entries: what [`Algorithm::state_dict`] returns
+/// and [`Algorithm::load_state_dict`] consumes.  Order and names are part
+/// of the checkpoint format — load fails closed on any mismatch.
+pub type StateDict = Vec<(String, StateVec)>;
+
+/// Load-side helper: look up `name` in `dict` or fail closed.
+pub(crate) fn dict_get<'d>(dict: &'d StateDict, name: &str) -> anyhow::Result<&'d StateVec> {
+    dict.iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| v)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint state missing entry {name:?}"))
+}
+
+/// Load-side helper: a [`StateVec::Coord`] entry of exactly length `k`.
+pub(crate) fn dict_coord(dict: &StateDict, name: &str, k: usize) -> anyhow::Result<Vec<f32>> {
+    match dict_get(dict, name)? {
+        StateVec::Coord(v) => {
+            anyhow::ensure!(v.len() == k, "state {name:?}: length {} != k {k}", v.len());
+            Ok(v.clone())
+        }
+        other => anyhow::bail!("state {name:?}: expected Coord, got {other:?}"),
+    }
+}
+
+/// Load-side helper: a [`StateVec::PerWorker`] entry with `n_slots` vectors
+/// of exactly length `k`.
+pub(crate) fn dict_per_worker(
+    dict: &StateDict,
+    name: &str,
+    n_slots: usize,
+    k: usize,
+) -> anyhow::Result<Vec<Vec<f32>>> {
+    match dict_get(dict, name)? {
+        StateVec::PerWorker(vs) => {
+            anyhow::ensure!(
+                vs.len() == n_slots,
+                "state {name:?}: {} slots != expected {n_slots}",
+                vs.len()
+            );
+            for (i, v) in vs.iter().enumerate() {
+                anyhow::ensure!(
+                    v.len() == k,
+                    "state {name:?}[{i}]: length {} != k {k}",
+                    v.len()
+                );
+            }
+            Ok(vs.clone())
+        }
+        other => anyhow::bail!("state {name:?}: expected PerWorker, got {other:?}"),
+    }
+}
+
+/// Load-side helper: a [`StateVec::Scalars`] entry of exactly `n` values.
+pub(crate) fn dict_scalars(dict: &StateDict, name: &str, n: usize) -> anyhow::Result<Vec<f64>> {
+    match dict_get(dict, name)? {
+        StateVec::Scalars(v) => {
+            anyhow::ensure!(v.len() == n, "state {name:?}: {} scalars != expected {n}", v.len());
+            Ok(v.clone())
+        }
+        other => anyhow::bail!("state {name:?}: expected Scalars, got {other:?}"),
+    }
+}
+
 /// Sentinel returned by [`Algorithm::add_worker`] for shared-state rules:
 /// the rule keeps no per-worker vectors, so any slot id the caller assigns
 /// is acceptable.
@@ -305,6 +391,29 @@ pub trait Algorithm: Send + Sync {
 
     /// Overwrite master parameters (checkpoint restore / tests).
     fn set_theta(&mut self, theta: &[f32]);
+
+    /// Checkpointable auxiliary state — everything except θ (momenta, v⁰,
+    /// replicas, tuner statistics).  Stateless rules return an empty dict.
+    /// Slot liveness is NOT part of the dict: the servers replay
+    /// membership before loading, so per-worker entries only need the
+    /// right slot count (retired slots zeroed).
+    fn state_dict(&self) -> StateDict {
+        Vec::new()
+    }
+
+    /// Restore state produced by [`Self::state_dict`] onto an instance
+    /// with identical shape (same k, same slot count and liveness).
+    /// Fails closed on missing/extra entries or length mismatches; the
+    /// instance is left unspecified on error (callers discard it).
+    fn load_state_dict(&mut self, dict: &StateDict) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            dict.is_empty(),
+            "{}: unexpected checkpoint state entries: {:?}",
+            self.kind().name(),
+            dict.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>()
+        );
+        Ok(())
+    }
 }
 
 /// Which update rule to instantiate.
@@ -491,6 +600,63 @@ mod tests {
             alg.remove_worker(0, LeavePolicy::Retire);
             assert_eq!(alg.theta(), &theta0[..], "{kind}: membership touched theta");
         }
+    }
+
+    #[test]
+    fn state_dict_round_trips_for_all_kinds() {
+        // Drive updates + a membership change, snapshot, rebuild an
+        // identically-shaped instance, load, and require the continued
+        // trajectories to agree bit-for-bit.
+        let k = 13;
+        let theta0: Vec<f32> = (0..k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let s = Step { eta: 0.05, gamma: 0.9, lambda: 1.0 };
+        let mut rng = crate::util::rng::Rng::new(11);
+        for kind in AlgorithmKind::ALL {
+            let mut a = make_algorithm(kind, &theta0, 3);
+            for i in 0..25 {
+                let g: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+                let mut sent = vec![0.0f32; k];
+                a.master_send(i % 3, &mut sent, s);
+                a.master_apply(i % 3, &g, &sent, s);
+            }
+            a.remove_worker(1, LeavePolicy::Retire);
+            // restore path: same construction, same membership replay,
+            // then theta + dict
+            let mut b = make_algorithm(kind, &theta0, 3);
+            b.remove_worker(1, LeavePolicy::Retire);
+            b.set_theta(a.theta());
+            b.load_state_dict(&a.state_dict()).unwrap_or_else(|e| panic!("{kind}: {e}"));
+            assert_eq!(a.theta(), b.theta(), "{kind}: theta");
+            for i in 0..10 {
+                let w = [0, 2][i % 2];
+                let g: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+                let mut sa = vec![0.0f32; k];
+                let mut sb = vec![0.0f32; k];
+                a.master_send(w, &mut sa, s);
+                b.master_send(w, &mut sb, s);
+                assert_eq!(sa, sb, "{kind}: send diverged after restore");
+                a.master_apply(w, &g, &sa, s);
+                b.master_apply(w, &g, &sb, s);
+                assert_eq!(a.theta(), b.theta(), "{kind}: theta diverged after restore");
+            }
+        }
+    }
+
+    #[test]
+    fn load_state_dict_fails_closed() {
+        let theta0 = vec![0.0f32; 4];
+        // stateless rule rejects unexpected entries
+        let mut asgd = make_algorithm(AlgorithmKind::Asgd, &theta0, 1);
+        let junk: StateDict = vec![("v".to_string(), StateVec::Coord(vec![0.0; 4]))];
+        assert!(asgd.load_state_dict(&junk).is_err());
+        // stateful rule rejects missing entries and wrong lengths
+        let mut nag = make_algorithm(AlgorithmKind::NagAsgd, &theta0, 1);
+        assert!(nag.load_state_dict(&Vec::new()).is_err());
+        let short: StateDict = vec![("v".to_string(), StateVec::Coord(vec![0.0; 3]))];
+        assert!(nag.load_state_dict(&short).is_err());
+        let wrong_shape: StateDict =
+            vec![("v".to_string(), StateVec::PerWorker(vec![vec![0.0; 4]]))];
+        assert!(nag.load_state_dict(&wrong_shape).is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! per-worker momentum alone is not sufficient — the look-ahead is what
 //! closes the gap.
 
-use super::{Algorithm, AlgorithmKind, LeavePolicy, Step};
+use super::{dict_per_worker, Algorithm, AlgorithmKind, LeavePolicy, StateDict, StateVec, Step};
 use crate::math;
 
 #[derive(Debug, Clone)]
@@ -60,6 +60,15 @@ impl Algorithm for MultiAsgd {
         // No v⁰ here (vsum: None): Retire simply drops the leaver's
         // momentum; Fold merges it into the lowest surviving slot.
         super::retire_momentum_slot(&mut self.live, &mut self.v, worker, policy, None);
+    }
+
+    fn state_dict(&self) -> StateDict {
+        vec![("v".to_string(), StateVec::PerWorker(self.v.clone()))]
+    }
+
+    fn load_state_dict(&mut self, dict: &StateDict) -> anyhow::Result<()> {
+        self.v = dict_per_worker(dict, "v", self.v.len(), self.theta.len())?;
+        Ok(())
     }
 
     fn set_theta(&mut self, theta: &[f32]) {

@@ -6,7 +6,7 @@
 //! Tables 2–5 show divergence beyond ~12–16 workers; reproducing that
 //! failure shape is part of the evaluation.
 
-use super::{Algorithm, AlgorithmKind, Step};
+use super::{dict_coord, Algorithm, AlgorithmKind, StateDict, StateVec, Step};
 use crate::math;
 
 #[derive(Debug, Clone)]
@@ -41,6 +41,15 @@ impl Algorithm for NagAsgd {
 
     fn rescale_momentum(&mut self, ratio: f32) {
         math::scale(&mut self.v, ratio);
+    }
+
+    fn state_dict(&self) -> StateDict {
+        vec![("v".to_string(), StateVec::Coord(self.v.clone()))]
+    }
+
+    fn load_state_dict(&mut self, dict: &StateDict) -> anyhow::Result<()> {
+        self.v = dict_coord(dict, "v", self.theta.len())?;
+        Ok(())
     }
 
     fn set_theta(&mut self, theta: &[f32]) {

@@ -25,7 +25,10 @@
 //! defaults.  YellowFin is a *baseline* in this paper — the evaluation
 //! expects it to work at small N and degrade at scale (Tables 2–5).
 
-use super::{Algorithm, AlgorithmKind, ApplyStats, Step};
+use super::{
+    dict_coord, dict_get, dict_scalars, Algorithm, AlgorithmKind, ApplyStats, StateDict, StateVec,
+    Step,
+};
 use crate::math;
 use std::collections::VecDeque;
 
@@ -228,6 +231,66 @@ impl Algorithm for YellowFin {
 
     fn rescale_momentum(&mut self, ratio: f32) {
         math::scale(&mut self.v, ratio);
+    }
+
+    fn state_dict(&self) -> StateDict {
+        vec![
+            ("v".to_string(), StateVec::Coord(self.v.clone())),
+            ("g_avg".to_string(), StateVec::Coord(self.g_avg.clone())),
+            ("prev_update".to_string(), StateVec::Coord(self.prev_update.clone())),
+            (
+                "prev_prev_update".to_string(),
+                StateVec::Coord(self.prev_prev_update.clone()),
+            ),
+            (
+                "h_window".to_string(),
+                StateVec::Scalars(self.h_window.iter().copied().collect()),
+            ),
+            (
+                "tuner".to_string(),
+                StateVec::Scalars(vec![
+                    self.h_min_avg,
+                    self.h_max_avg,
+                    self.g_norm_avg,
+                    self.g_norm2_avg,
+                    self.dist_avg,
+                    self.lr,
+                    self.mu,
+                    self.mu_alg,
+                    self.steps as f64,
+                ]),
+            ),
+        ]
+    }
+
+    fn load_state_dict(&mut self, dict: &StateDict) -> anyhow::Result<()> {
+        let k = self.theta.len();
+        self.v = dict_coord(dict, "v", k)?;
+        self.g_avg = dict_coord(dict, "g_avg", k)?;
+        self.prev_update = dict_coord(dict, "prev_update", k)?;
+        self.prev_prev_update = dict_coord(dict, "prev_prev_update", k)?;
+        match dict_get(dict, "h_window")? {
+            StateVec::Scalars(w) => {
+                anyhow::ensure!(
+                    w.len() <= WINDOW,
+                    "h_window has {} entries (cap {WINDOW})",
+                    w.len()
+                );
+                self.h_window = w.iter().copied().collect();
+            }
+            other => anyhow::bail!("state \"h_window\": expected Scalars, got {other:?}"),
+        }
+        let s = dict_scalars(dict, "tuner", 9)?;
+        self.h_min_avg = s[0];
+        self.h_max_avg = s[1];
+        self.g_norm_avg = s[2];
+        self.g_norm2_avg = s[3];
+        self.dist_avg = s[4];
+        self.lr = s[5];
+        self.mu = s[6];
+        self.mu_alg = s[7];
+        self.steps = s[8] as u64;
+        Ok(())
     }
 
     fn set_theta(&mut self, theta: &[f32]) {

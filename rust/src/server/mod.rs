@@ -15,11 +15,77 @@ pub mod metrics;
 pub mod sharded;
 
 use crate::optim::{
-    claim_slot, make_algorithm, Algorithm, AlgorithmKind, LeavePolicy, LrSchedule, Step,
-    WorkerState, ANY_SLOT,
+    claim_slot, make_algorithm, Algorithm, AlgorithmKind, LeavePolicy, LrSchedule, StateDict,
+    Step, WorkerState, ANY_SLOT,
 };
 use metrics::{MetricRow, MetricsRecorder};
 pub use sharded::{shard_bounds, ShardedParameterServer};
+
+/// A complete, restorable image of a master's training state: θ, the
+/// algorithm's auxiliary state ([`StateDict`]), slot liveness, the per-slot
+/// `sent`/`pulled_at`/`has_pulled` bookkeeping, and the step counter.  The
+/// schedule is NOT part of the snapshot — it is reconstructed from the
+/// serve configuration at resume time (resuming under different flags is a
+/// config error the checkpoint header checks guard against).
+///
+/// Layout-independent: a snapshot taken from a monolithic server restores
+/// into a sharded one (and vice versa, or across different shard counts) —
+/// coordinate-aligned state is stored full-length and sliced by
+/// [`shard_bounds`] on the way back in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MasterSnapshot {
+    pub kind: AlgorithmKind,
+    pub master_step: u64,
+    pub last_eta: f32,
+    pub theta: Vec<f32>,
+    /// Slot liveness; length is the slot high-water mark.
+    pub live: Vec<bool>,
+    /// Per-slot parameters most recently sent (gap accounting + DC-ASGD).
+    pub sent: Vec<Vec<f32>>,
+    pub pulled_at: Vec<u64>,
+    pub has_pulled: Vec<bool>,
+    /// The algorithm's [`crate::optim::Algorithm::state_dict`].
+    pub state: StateDict,
+}
+
+impl MasterSnapshot {
+    /// Number of worker slots (live + retired) in the snapshot.
+    pub fn slots(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Internal-consistency + compatibility check against the restoring
+    /// server's algorithm kind and parameter count.  Fails closed.
+    pub fn validate(&self, kind: AlgorithmKind, k: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.kind == kind,
+            "snapshot is for {} but the server runs {}",
+            self.kind.name(),
+            kind.name()
+        );
+        anyhow::ensure!(
+            self.theta.len() == k,
+            "snapshot k={} but the server has k={k}",
+            self.theta.len()
+        );
+        let n = self.live.len();
+        anyhow::ensure!(
+            self.sent.len() == n && self.pulled_at.len() == n && self.has_pulled.len() == n,
+            "snapshot slot arrays disagree: live={n} sent={} pulled_at={} has_pulled={}",
+            self.sent.len(),
+            self.pulled_at.len(),
+            self.has_pulled.len()
+        );
+        for (w, s) in self.sent.iter().enumerate() {
+            anyhow::ensure!(
+                s.len() == k,
+                "snapshot sent[{w}] length {} != k {k}",
+                s.len()
+            );
+        }
+        Ok(())
+    }
+}
 
 /// Unified interface over the monolithic and sharded masters, so trainers
 /// are generic over the server layout.  Method names are distinct from the
@@ -68,6 +134,15 @@ pub trait Master: Send {
     fn worker_transform(&self, ws: &mut WorkerState, grad: &mut [f32], s: Step);
     fn metrics(&self) -> &MetricsRecorder;
     fn metrics_mut(&mut self) -> &mut MetricsRecorder;
+    /// A complete restorable image of the training state (fault
+    /// tolerance).  Errors for masters that hold no local state (a
+    /// [`crate::net::RemoteMaster`] checkpoints server-side).
+    fn snapshot(&self) -> anyhow::Result<MasterSnapshot>;
+    /// Restore a [`Self::snapshot`] image onto a freshly constructed
+    /// server (no steps applied, no membership changes yet) of the same
+    /// algorithm kind and parameter count.  Grows/retires slots to match
+    /// the snapshot, then overwrites θ, algorithm state and bookkeeping.
+    fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()>;
 }
 
 /// Build a master: monolithic for `n_shards <= 1`, sharded otherwise with
@@ -351,6 +426,54 @@ impl Master for ParameterServer {
     fn metrics_mut(&mut self) -> &mut MetricsRecorder {
         &mut self.metrics
     }
+
+    fn snapshot(&self) -> anyhow::Result<MasterSnapshot> {
+        Ok(MasterSnapshot {
+            kind: self.alg.kind(),
+            master_step: self.master_step,
+            last_eta: self.last_eta,
+            theta: self.alg.theta().to_vec(),
+            live: self.live.clone(),
+            sent: self.sent.clone(),
+            pulled_at: self.pulled_at.clone(),
+            has_pulled: self.has_pulled.clone(),
+            state: self.alg.state_dict(),
+        })
+    }
+
+    fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()> {
+        snap.validate(self.alg.kind(), self.alg.param_count())?;
+        anyhow::ensure!(
+            self.master_step == 0 && self.n_live() == self.n_workers(),
+            "restore target must be freshly constructed"
+        );
+        anyhow::ensure!(
+            self.n_workers() <= snap.slots(),
+            "restore target has {} slots, snapshot only {}",
+            self.n_workers(),
+            snap.slots()
+        );
+        // Replay membership so the algorithm's internal liveness (and any
+        // live-count-derived scalars like LWP's τ) matches the snapshot,
+        // then overwrite all state.  Retiring fresh (zero) slots is
+        // side-effect-free for every rule.
+        while self.sent.len() < snap.slots() {
+            ParameterServer::add_worker(self);
+        }
+        for (w, &alive) in snap.live.iter().enumerate() {
+            if !alive {
+                ParameterServer::remove_worker(self, w, LeavePolicy::Retire)?;
+            }
+        }
+        self.alg.set_theta(&snap.theta);
+        self.alg.load_state_dict(&snap.state)?;
+        self.sent = snap.sent.clone();
+        self.pulled_at = snap.pulled_at.clone();
+        self.has_pulled = snap.has_pulled.clone();
+        self.master_step = snap.master_step;
+        self.last_eta = snap.last_eta;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -520,6 +643,103 @@ mod tests {
             mono.push_update(w, &g).unwrap();
             shrd.push_update(w, &g).unwrap();
         }
+    }
+
+    #[test]
+    fn snapshot_restore_round_trips_across_layouts() {
+        // Drive a churned run, snapshot, restore into BOTH layouts (and a
+        // different shard count), and require identical continuations.
+        let k = 19;
+        let theta0: Vec<f32> = (0..k).map(|i| (i as f32 * 0.31).cos()).collect();
+        let sched = || {
+            LrSchedule::new(ScheduleConfig {
+                warmup_epochs: 0.0,
+                decay_epochs: vec![],
+                steps_per_epoch: 10,
+                n_workers: 3,
+                ..ScheduleConfig::default()
+            })
+        };
+        // Build a source at `src_shards`, drive 20 churned steps, and
+        // retire a worker — rebuilt fresh for every restore target so the
+        // continuation comparison starts from the snapshot both sides.
+        let build_src = |kind: AlgorithmKind, src_shards: usize| -> Box<dyn Master> {
+            let mut src = make_master(kind, &theta0, sched(), 3, src_shards, 2);
+            for i in 0..20 {
+                let w = i % 3;
+                let p = src.pull_params(w);
+                let g: Vec<f32> = p.iter().map(|&x| 0.1 * x + 0.02).collect();
+                src.push_update(w, &g).unwrap();
+            }
+            src.remove_worker(1, LeavePolicy::Retire).unwrap();
+            src
+        };
+        // Elementwise rules are bit-for-bit across shard counts; YellowFin
+        // restores exactly only into the same layout (its tuner reduces
+        // f64 sums in shard order; cross-layout is only ~1e-5 close — the
+        // property suite pins that tolerance).
+        for kind in [AlgorithmKind::DanaDc, AlgorithmKind::Easgd, AlgorithmKind::YellowFin] {
+            for src_shards in [1usize, 3] {
+                let dst_shard_choices: Vec<usize> = if kind == AlgorithmKind::YellowFin {
+                    vec![src_shards]
+                } else {
+                    vec![1, 2, 4, src_shards]
+                };
+                for dst_shards in dst_shard_choices {
+                    let mut src = build_src(kind, src_shards);
+                    let snap = src.snapshot().unwrap();
+                    assert_eq!(snap.slots(), 3);
+                    assert_eq!(snap.master_step, 20);
+                    let mut dst = make_master(kind, &theta0, sched(), 0, dst_shards, 2);
+                    dst.restore(&snap).unwrap();
+                    assert_eq!(dst.steps_done(), 20, "{kind} S={dst_shards}");
+                    assert_eq!(dst.theta_vec(), src.theta_vec(), "{kind} S={dst_shards}");
+                    assert_eq!(dst.live_workers(), 2);
+                    assert!(!dst.is_live(1));
+                    // continuation must match the source exactly
+                    for i in 0..10 {
+                        let w = [0, 2][i % 2];
+                        let a = src.pull_params(w);
+                        let b = dst.pull_params(w);
+                        assert_eq!(a, b, "{kind} S={dst_shards}: send diverged");
+                        let g: Vec<f32> = a.iter().map(|&x| 0.1 * x - 0.01).collect();
+                        src.push_update(w, &g).unwrap();
+                        dst.push_update(w, &g).unwrap();
+                    }
+                    assert_eq!(dst.theta_vec(), src.theta_vec(), "{kind} S={dst_shards}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn restore_fails_closed_on_mismatch() {
+        let theta0 = vec![1.0f32; 8];
+        let sched = || {
+            LrSchedule::new(ScheduleConfig {
+                warmup_epochs: 0.0,
+                decay_epochs: vec![],
+                steps_per_epoch: 10,
+                n_workers: 2,
+                ..ScheduleConfig::default()
+            })
+        };
+        let src = make_master(AlgorithmKind::DanaZero, &theta0, sched(), 2, 1, 1);
+        let snap = src.snapshot().unwrap();
+        // wrong algorithm
+        let mut dst = make_master(AlgorithmKind::Asgd, &theta0, sched(), 0, 1, 1);
+        assert!(dst.restore(&snap).is_err());
+        // wrong parameter count
+        let mut dst = make_master(AlgorithmKind::DanaZero, &[0.0; 4], sched(), 0, 1, 1);
+        assert!(dst.restore(&snap).is_err());
+        // non-fresh target
+        let mut dst = make_master(AlgorithmKind::DanaZero, &theta0, sched(), 2, 1, 1);
+        dst.pull_params(0);
+        dst.push_update(0, &[0.1; 8]).unwrap();
+        assert!(dst.restore(&snap).is_err());
+        // too many pre-allocated slots
+        let mut dst = make_master(AlgorithmKind::DanaZero, &theta0, sched(), 5, 1, 1);
+        assert!(dst.restore(&snap).is_err());
     }
 
     #[test]

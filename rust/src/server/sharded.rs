@@ -32,11 +32,11 @@
 //! permitted divergence).
 
 use super::metrics::{MetricRow, MetricsRecorder};
-use super::Master;
+use super::{Master, MasterSnapshot};
 use crate::math;
 use crate::optim::{
     claim_slot, make_algorithm, Algorithm, AlgorithmKind, ApplyStats, LeavePolicy, LrSchedule,
-    Step, WorkerState, ANY_SLOT,
+    StateDict, StateVec, Step, WorkerState, ANY_SLOT,
 };
 use std::ops::Range;
 
@@ -434,6 +434,114 @@ impl Master for ShardedParameterServer {
 
     fn metrics_mut(&mut self) -> &mut MetricsRecorder {
         &mut self.metrics
+    }
+
+    /// Assemble a layout-independent snapshot: coordinate-aligned state is
+    /// concatenated across shards in range order; shard-replicated scalars
+    /// are taken from shard 0 (every shard's copy is identical — the
+    /// membership fan-out and two-phase apply keep them in lockstep).
+    fn snapshot(&self) -> anyhow::Result<MasterSnapshot> {
+        let n = self.n_workers();
+        let mut sent: Vec<Vec<f32>> = vec![Vec::with_capacity(self.k); n];
+        let mut state: StateDict = Vec::new();
+        for (si, sh) in self.shards.iter().enumerate() {
+            for (w, out) in sent.iter_mut().enumerate() {
+                out.extend_from_slice(&sh.sent[w]);
+            }
+            let piece = sh.alg.state_dict();
+            if si == 0 {
+                state = piece;
+                continue;
+            }
+            anyhow::ensure!(
+                piece.len() == state.len(),
+                "shard {si} state entry count {} != shard 0's {}",
+                piece.len(),
+                state.len()
+            );
+            for ((name, acc), (pname, pval)) in state.iter_mut().zip(piece) {
+                anyhow::ensure!(
+                    *name == pname,
+                    "shard {si} state entry {pname:?} != shard 0's {name:?}"
+                );
+                match (acc, pval) {
+                    (StateVec::Coord(a), StateVec::Coord(b)) => a.extend_from_slice(&b),
+                    (StateVec::PerWorker(a), StateVec::PerWorker(b)) => {
+                        anyhow::ensure!(
+                            a.len() == b.len(),
+                            "shard {si} state {name:?}: slot count mismatch"
+                        );
+                        for (av, bv) in a.iter_mut().zip(b) {
+                            av.extend_from_slice(&bv);
+                        }
+                    }
+                    (StateVec::Scalars(_), StateVec::Scalars(_)) => {}
+                    _ => anyhow::bail!("shard {si} state {name:?}: shape mismatch"),
+                }
+            }
+        }
+        Ok(MasterSnapshot {
+            kind: self.kind,
+            master_step: self.master_step,
+            last_eta: self.last_eta,
+            theta: ShardedParameterServer::theta_vec(self),
+            live: self.live.clone(),
+            sent,
+            pulled_at: self.pulled_at.clone(),
+            has_pulled: self.has_pulled.clone(),
+            state,
+        })
+    }
+
+    fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()> {
+        snap.validate(self.kind, self.k)?;
+        anyhow::ensure!(
+            self.master_step == 0 && self.n_live() == self.n_workers(),
+            "restore target must be freshly constructed"
+        );
+        anyhow::ensure!(
+            self.n_workers() <= snap.slots(),
+            "restore target has {} slots, snapshot only {}",
+            self.n_workers(),
+            snap.slots()
+        );
+        while self.n_workers() < snap.slots() {
+            ShardedParameterServer::add_worker(self);
+        }
+        for (w, &alive) in snap.live.iter().enumerate() {
+            if !alive {
+                ShardedParameterServer::remove_worker(self, w, LeavePolicy::Retire)?;
+            }
+        }
+        for sh in self.shards.iter_mut() {
+            let r = sh.range.clone();
+            sh.alg.set_theta(&snap.theta[r.clone()]);
+            // Slice the full-length dict down to this shard's range;
+            // scalars broadcast verbatim.
+            let local: StateDict = snap
+                .state
+                .iter()
+                .map(|(name, val)| {
+                    let v = match val {
+                        StateVec::Coord(v) => StateVec::Coord(v[r.clone()].to_vec()),
+                        StateVec::PerWorker(vs) => StateVec::PerWorker(
+                            vs.iter().map(|v| v[r.clone()].to_vec()).collect(),
+                        ),
+                        StateVec::Scalars(s) => StateVec::Scalars(s.clone()),
+                    };
+                    (name.clone(), v)
+                })
+                .collect();
+            sh.alg.load_state_dict(&local)?;
+            for (w, full) in snap.sent.iter().enumerate() {
+                sh.sent[w] = full[r.clone()].to_vec();
+            }
+        }
+        self.pulled_at = snap.pulled_at.clone();
+        self.has_pulled = snap.has_pulled.clone();
+        self.master_step = snap.master_step;
+        self.last_eta = snap.last_eta;
+        Ok(())
     }
 }
 

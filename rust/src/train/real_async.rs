@@ -1,9 +1,10 @@
 //! Real-thread asynchronous training — the §5.4 setup scaled to this host.
 //!
 //! Every worker is an OS thread with its **own** gradient source; the
-//! master thread owns the parameter server (monolithic or sharded, per
-//! `cfg.shards`) and serves a plain FIFO over an mpsc channel; on every
-//! push it replies with freshly pulled parameters, exactly the
+//! master thread owns the parameter server (monolithic or sharded per
+//! `cfg.shards`, or a [`crate::net::RemoteMaster`] against
+//! `cfg.master_addr`) and serves a plain FIFO over an mpsc channel; on
+//! every push it replies with freshly pulled parameters, exactly the
 //! pull→compute→push cycle of Algorithm 1.
 //!
 //! Membership is elastic: a [`TrainConfig::churn`] schedule makes the
@@ -38,9 +39,8 @@
 
 use crate::config::TrainConfig;
 use crate::math;
-use crate::optim::{AlgorithmKind, LrSchedule};
+use crate::optim::AlgorithmKind;
 use crate::runtime::Engine;
-use crate::server::make_master;
 use crate::sim::ChurnAction;
 use crate::train::data_source::{evaluate, DataSource};
 use crate::train::{EvalPoint, TrainReport};
@@ -220,14 +220,8 @@ where
     let t0 = std::time::Instant::now();
     let n = cfg.n_workers;
     cfg.churn.validate(n)?;
-    let mut server = make_master(
-        cfg.algorithm,
-        theta0,
-        LrSchedule::new(cfg.schedule.clone()),
-        n,
-        cfg.shards,
-        crate::util::parallel::default_threads(),
-    );
+    // in-process master, or a RemoteMaster against `--master tcp://...`
+    let mut server = crate::net::master_for(cfg, theta0)?;
     server.metrics_mut().set_every(cfg.metrics_every);
     let rule = WorkerRule::for_algorithm(cfg.algorithm);
     let gamma = cfg.schedule.gamma;
@@ -402,7 +396,12 @@ where
                         // in-flight push raced a leave: recoverable, drop it
                         continue;
                     }
-                    debug_assert_eq!(server.steps_done(), step, "master step not monotone");
+                    // (a remote master may be shared with other clients,
+                    // whose pushes legitimately advance it between ours)
+                    debug_assert!(
+                        cfg.master_addr.is_some() || server.steps_done() == step,
+                        "master step not monotone"
+                    );
                     if step % loss_sample == 0 {
                         report.loss_curve.push((step, loss as f64));
                     }

@@ -7,10 +7,12 @@
 //! exactly the controlled comparison the paper runs ("all algorithms share
 //! the same worker update schedules and therefore have an identical lag").
 //!
-//! The master is built through [`make_master`], so `cfg.shards > 1` runs
-//! the same experiment against the sharded, lock-striped server — the
+//! The master is built through [`crate::net::master_for`]: `cfg.shards > 1`
+//! runs the same experiment against the sharded, lock-striped server (the
 //! equivalence suite guarantees an identical trajectory up to f32
-//! reassociation.
+//! reassociation), and [`crate::config::TrainConfig::master_addr`] runs it
+//! against a remote `dana serve` master over TCP — bit-for-bit identical
+//! over loopback (`rust/tests/net.rs`).
 //!
 //! The driver consumes *cluster events*, not just completions: a
 //! [`TrainConfig::churn`] schedule splices joins, leaves and straggler
@@ -25,9 +27,9 @@
 //! equivalence tests.
 
 use crate::config::TrainConfig;
-use crate::optim::{LeavePolicy, LrSchedule, WorkerState};
+use crate::optim::{LeavePolicy, WorkerState};
 use crate::runtime::Engine;
-use crate::server::{make_master, Master};
+use crate::server::Master;
 use crate::sim::{AsyncSchedule, ClusterEvent, Completion, ExecTimeModel};
 use crate::train::data_source::{evaluate, DataSource};
 use crate::train::{real_async, EvalPoint, TrainReport};
@@ -103,14 +105,8 @@ where
 {
     let t0 = std::time::Instant::now();
     let n = cfg.n_workers;
-    let mut server = make_master(
-        cfg.algorithm,
-        theta0,
-        LrSchedule::new(cfg.schedule.clone()),
-        n,
-        cfg.shards,
-        crate::util::parallel::default_threads(),
-    );
+    // in-process master, or a RemoteMaster against `--master tcp://...`
+    let mut server = crate::net::master_for(cfg, theta0)?;
     server.metrics_mut().set_every(cfg.metrics_every);
 
     let total = cfg.total_master_steps();
@@ -120,10 +116,15 @@ where
         AsyncSchedule::new(exec_model, cluster_rng.fork(1)).with_churn(&cfg.churn, total)?;
 
     // Worker-local state: pulled parameters + optimizer state (DANA-Slim).
+    // The locals are retained buffers, so seed them through the
+    // `pull_into` reuse path like every later pull (no `pull_params`
+    // double-copy in the loop).
     let mut local: Vec<Vec<f32>> = Vec::with_capacity(n);
     let mut wstate: Vec<WorkerState> = Vec::with_capacity(n);
     for w in 0..n {
-        local.push(server.pull_params(w));
+        let mut buf = vec![0.0f32; theta0.len()];
+        server.pull_into(w, &mut buf);
+        local.push(buf);
         wstate.push(server.make_worker_state());
     }
 

@@ -190,6 +190,27 @@ mod tests {
     }
 
     #[test]
+    fn net_flags_round_trip() {
+        // the `dana train --synthetic --master tcp://...` spelling
+        let mut a = parse("train --synthetic --master tcp://127.0.0.1:7700 --k 64", true);
+        assert!(a.flag("synthetic"));
+        assert_eq!(a.opt_str("master").as_deref(), Some("tcp://127.0.0.1:7700"));
+        assert_eq!(a.parse_or::<usize>("k", 256).unwrap(), 64);
+        a.finish().unwrap();
+        // the `dana serve` spelling
+        let mut b = parse(
+            "serve --listen 0.0.0.0:7700 --checkpoint ckpt.bin --checkpoint-every 500 \
+             --resume ckpt.bin",
+            true,
+        );
+        assert_eq!(b.str_or("listen", ""), "0.0.0.0:7700");
+        assert_eq!(b.opt_str("checkpoint").as_deref(), Some("ckpt.bin"));
+        assert_eq!(b.parse_or::<u64>("checkpoint-every", 0).unwrap(), 500);
+        assert_eq!(b.opt_str("resume").as_deref(), Some("ckpt.bin"));
+        b.finish().unwrap();
+    }
+
+    #[test]
     fn unknown_option_rejected() {
         let mut a = parse("run --oops 1", true);
         let _ = a.flag("quick");

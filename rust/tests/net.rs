@@ -1,0 +1,572 @@
+//! Network-transport equivalence obligations (ISSUE 3 acceptance):
+//!
+//! 1. Loopback end-to-end: `NetServer` on `127.0.0.1:0` + `RemoteMaster`
+//!    workers reproduce the in-process driver's trajectory **bit-for-bit**
+//!    for all 10 algorithms (the wire moves exact f32 bits and the master
+//!    runs the identical op sequence).
+//! 2. A mid-run client disconnect (EOF, no Leave frame) triggers the same
+//!    `LeavePolicy` state transition `rust/tests/churn.rs` asserts
+//!    in-process — verified by snapshot equality against an in-process
+//!    replica driven through the identical op sequence.
+//! 3. checkpoint → kill → `--resume` → reconnect continues from the
+//!    snapshot step, bit-for-bit against an uninterrupted reference, with
+//!    the v⁰ = Σ live vᶦ invariant intact at the end.
+//! 4. Stragglers from a previous incarnation of a slot (stale generation)
+//!    are rejected recoverably; protocol abuse is rejected fatally.
+
+use dana::config::{TrainConfig, Workload};
+use dana::net::checkpoint;
+use dana::net::wire::{read_frame, write_frame, Msg, Role};
+use dana::net::{NetServer, RemoteMaster, ServeOptions};
+use dana::optim::{AlgorithmKind, LeavePolicy, LrSchedule, StateVec};
+use dana::server::{make_master, Master, MasterSnapshot};
+use dana::sim::ChurnSchedule;
+use dana::train::{real_async, sim_trainer};
+use dana::util::rng::Rng;
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+fn cfg(kind: AlgorithmKind, workers: usize, epochs: f64, shards: usize) -> TrainConfig {
+    let mut c = TrainConfig::preset(Workload::C10, kind, workers, epochs);
+    c.seed = 31;
+    // gap/lag metrics live server-side on a remote run; keep them off so
+    // both sides of each comparison record nothing
+    c.metrics_every = 0;
+    c.shards = shards;
+    c
+}
+
+/// The master a `dana serve` for this config would host: zero slots
+/// (connect == join), same schedule, synthetic θ₀.
+fn serve_master(c: &TrainConfig, k: usize) -> Box<dyn Master> {
+    make_master(
+        c.algorithm,
+        &real_async::synthetic_theta0(k),
+        LrSchedule::new(c.schedule.clone()),
+        0,
+        c.shards,
+        2,
+    )
+}
+
+fn start_server(c: &TrainConfig, k: usize, opts: ServeOptions) -> NetServer {
+    NetServer::start(serve_master(c, k), "127.0.0.1:0", opts).unwrap()
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dana-net-{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ---------------------------------------------------------------- (1)
+
+/// Loopback `RemoteMaster` ≡ in-process master, all 10 kinds.
+#[test]
+fn loopback_sim_driver_matches_in_process_bit_for_bit_all_kinds() {
+    let k = 48;
+    for kind in AlgorithmKind::ALL {
+        let c = cfg(kind, 3, 0.6, 1);
+        let base = sim_trainer::run_synthetic(&c, k).unwrap();
+        let mut srv = start_server(&c, k, ServeOptions::default());
+        let mut rc = c.clone();
+        rc.master_addr = Some(srv.url());
+        let remote = sim_trainer::run_synthetic(&rc, k).unwrap();
+        assert_eq!(
+            remote.final_test_loss, base.final_test_loss,
+            "{kind}: final loss diverged across the wire"
+        );
+        assert_eq!(remote.loss_curve, base.loss_curve, "{kind}: loss curve");
+        assert_eq!(remote.steps, base.steps, "{kind}");
+        srv.stop();
+    }
+}
+
+/// `--shards` composes with the transport: a sharded master behind the
+/// wire equals the monolithic one (elementwise rule ⇒ exact).
+#[test]
+fn sharded_master_behind_the_wire_matches_monolithic() {
+    let k = 48;
+    let mono = cfg(AlgorithmKind::DanaDc, 3, 0.5, 1);
+    let shrd = cfg(AlgorithmKind::DanaDc, 3, 0.5, 4);
+    let mut reports = Vec::new();
+    for c in [&mono, &shrd] {
+        let mut srv = start_server(c, k, ServeOptions::default());
+        let mut rc = c.clone();
+        rc.master_addr = Some(srv.url());
+        reports.push(sim_trainer::run_synthetic(&rc, k).unwrap());
+        srv.stop();
+    }
+    assert_eq!(reports[0].final_test_loss, reports[1].final_test_loss);
+    assert_eq!(reports[0].loss_curve, reports[1].loss_curve);
+}
+
+/// Churn events flow through real sockets: joins open connections,
+/// leaves close them, and the trajectory still matches in-process.
+#[test]
+fn loopback_churn_matches_in_process() {
+    let k = 64;
+    for kind in [AlgorithmKind::DanaZero, AlgorithmKind::DanaSlim] {
+        let mut c = cfg(kind, 4, 1.0, 1);
+        c.churn = ChurnSchedule::parse("leave@0.3:2,join@0.5,leave@0.6,join@0.8").unwrap();
+        let base = sim_trainer::run_synthetic(&c, k).unwrap();
+        let mut srv = start_server(&c, k, ServeOptions::default());
+        let mut rc = c.clone();
+        rc.master_addr = Some(srv.url());
+        let remote = sim_trainer::run_synthetic(&rc, k).unwrap();
+        assert_eq!(remote.final_test_loss, base.final_test_loss, "{kind}: churn trajectory");
+        assert_eq!(remote.loss_curve, base.loss_curve, "{kind}");
+        assert_eq!(
+            (remote.workers_joined, remote.workers_left),
+            (base.workers_joined, base.workers_left),
+            "{kind}"
+        );
+        srv.stop();
+    }
+}
+
+/// The real-thread driver (OS threads + mpsc + churn) runs against a
+/// socket master end-to-end.  Thread timing is nondeterministic, so this
+/// asserts completion and descent rather than bit equality.
+#[test]
+fn real_thread_driver_runs_against_a_socket_master() {
+    let k = 96;
+    let mut c = cfg(AlgorithmKind::DanaSlim, 3, 1.0, 1);
+    c.churn = ChurnSchedule::parse("leave@0.3,join@0.6").unwrap();
+    let mut srv = start_server(&c, k, ServeOptions::default());
+    let mut rc = c.clone();
+    rc.master_addr = Some(srv.url());
+    let rep = real_async::run_synthetic(&rc, k).unwrap();
+    assert_eq!(rep.steps, rc.total_master_steps());
+    assert!(!rep.diverged);
+    assert_eq!((rep.workers_joined, rep.workers_left), (1, 1));
+    let j0 = real_async::synthetic_loss(
+        &real_async::synthetic_theta0(k),
+        &real_async::synthetic_curvature(k),
+    );
+    assert!(rep.final_test_loss < j0, "loss {} vs initial {j0}", rep.final_test_loss);
+    srv.stop();
+}
+
+// ------------------------------------------------- raw wire test rig
+
+struct RawConn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+    slot: u64,
+    gen: u32,
+}
+
+impl RawConn {
+    fn open(addr: &SocketAddr, role: Role) -> RawConn {
+        Self::open_with(addr, role, false)
+    }
+
+    fn open_with(addr: &SocketAddr, role: Role, reattach: bool) -> RawConn {
+        let s = TcpStream::connect(addr).unwrap();
+        let mut conn = RawConn {
+            r: BufReader::new(s.try_clone().unwrap()),
+            w: BufWriter::new(s),
+            slot: u64::MAX,
+            gen: 0,
+        };
+        match conn.req(&Msg::Hello { role, reattach }) {
+            Msg::HelloAck { slot, gen, .. } => {
+                conn.slot = slot;
+                conn.gen = gen;
+            }
+            other => panic!("handshake failed: {other:?}"),
+        }
+        conn
+    }
+
+    fn req(&mut self, m: &Msg) -> Msg {
+        write_frame(&mut self.w, m).unwrap();
+        read_frame(&mut self.r).unwrap()
+    }
+
+    fn pull(&mut self) -> Vec<f32> {
+        match self.req(&Msg::PullParams) {
+            Msg::Params { params, .. } => params,
+            other => panic!("pull failed: {other:?}"),
+        }
+    }
+
+    fn push_ok(&mut self, g: &[f32]) {
+        let gen = self.gen;
+        match self.req(&Msg::Push { gen, msg: g.to_vec() }) {
+            Msg::PushAck { .. } => {}
+            other => panic!("push failed: {other:?}"),
+        }
+    }
+}
+
+fn wait_for_live(ctl: &mut RawConn, want: u64) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        if let Msg::Ack { header } = ctl.req(&Msg::Status) {
+            if header.live_workers == want {
+                return;
+            }
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "server never reached {want} live workers"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+}
+
+// ---------------------------------------------------------------- (2)
+
+/// Abrupt disconnect (EOF, no Leave frame) = `remove_worker` under the
+/// server's configured policy — the server state afterwards equals an
+/// in-process replica driven through the identical op sequence, exactly.
+#[test]
+fn eof_disconnect_applies_the_configured_leave_policy() {
+    let k = 8;
+    let dir = tmpdir("eof");
+    for policy in [LeavePolicy::Retire, LeavePolicy::Fold] {
+        let c = cfg(AlgorithmKind::DanaZero, 3, 1.0, 1);
+        let ckpt = dir.join(format!("{}.ckpt", policy.name()));
+        let opts = ServeOptions {
+            leave_policy: policy,
+            checkpoint_path: Some(ckpt.clone()),
+            checkpoint_every: 0,
+        };
+        let mut srv = start_server(&c, k, opts);
+        let addr = srv.addr();
+
+        // in-process replica of the exact op sequence the server will see
+        let mut replica = serve_master(&c, k);
+
+        let mut workers: Vec<RawConn> =
+            (0..3).map(|_| RawConn::open(&addr, Role::Worker)).collect();
+        for (i, w) in workers.iter().enumerate() {
+            assert_eq!(w.slot, i as u64, "slots assigned in connect order");
+            assert_eq!(replica.add_worker(), i);
+        }
+        for _round in 0..2 {
+            for i in 0..3 {
+                let p = workers[i].pull();
+                let q = replica.pull_params(i);
+                assert_eq!(p, q, "{policy}: pull diverged");
+                let g: Vec<f32> = p.iter().map(|&x| 0.1 * x + (i as f32 + 1.0) * 0.01).collect();
+                workers[i].push_ok(&g);
+                replica.push_update(i, &g).unwrap();
+            }
+        }
+        // worker 1 vanishes without a Leave frame
+        drop(workers.remove(1));
+        let mut ctl = RawConn::open(&addr, Role::Control);
+        wait_for_live(&mut ctl, 2);
+        replica.remove_worker(1, policy).unwrap();
+
+        assert!(matches!(ctl.req(&Msg::Checkpoint), Msg::Ack { .. }));
+        let snap = checkpoint::read_snapshot(&ckpt).unwrap();
+        assert_eq!(snap.live, vec![true, false, true], "{policy}");
+        assert_eq!(
+            snap,
+            replica.snapshot().unwrap(),
+            "{policy}: socket-side leave state != in-process remove_worker state"
+        );
+        dana_invariant(&snap);
+        srv.stop();
+    }
+}
+
+// ---------------------------------------------------------------- (4)
+
+/// Straggler rejection: a retired slot's old connection keeps its stale
+/// generation and every push from it bounces recoverably — while the
+/// joiner that reused the slot trains on unharmed.
+#[test]
+fn stale_generation_pushes_are_rejected_recoverably() {
+    let k = 4;
+    let c = cfg(AlgorithmKind::DanaZero, 2, 1.0, 1);
+    let mut srv = start_server(&c, k, ServeOptions::default());
+    let addr = srv.addr();
+
+    let mut a = RawConn::open(&addr, Role::Worker);
+    assert_eq!(a.slot, 0);
+    a.pull();
+    a.push_ok(&[0.1; 4]);
+    // deliberate leave with a per-departure policy override
+    assert!(matches!(a.req(&Msg::Leave { policy: LeavePolicy::Fold }), Msg::Ack { .. }));
+
+    // push after own leave: recoverable, not fatal, nothing applied
+    let gen = a.gen;
+    let mut ctl = RawConn::open(&addr, Role::Control);
+    let steps_before = match ctl.req(&Msg::Status) {
+        Msg::Ack { header } => header.master_step,
+        other => panic!("{other:?}"),
+    };
+    match a.req(&Msg::Push { gen, msg: vec![0.5; 4] }) {
+        Msg::Error { recoverable: true, .. } => {}
+        other => panic!("expected recoverable rejection, got {other:?}"),
+    }
+
+    // a joiner reuses slot 0 with a bumped generation
+    let mut b = RawConn::open(&addr, Role::Worker);
+    assert_eq!(b.slot, 0, "lowest retired slot reused");
+    assert!(b.gen > a.gen, "generation must advance on reuse");
+    // the old incarnation still bounces
+    match a.req(&Msg::Push { gen, msg: vec![0.5; 4] }) {
+        Msg::Error { recoverable: true, .. } => {}
+        other => panic!("expected recoverable rejection, got {other:?}"),
+    }
+    // push-before-pull is the same recoverable server error as in-process
+    let bgen = b.gen;
+    match b.req(&Msg::Push { gen: bgen, msg: vec![0.5; 4] }) {
+        Msg::Error { recoverable: true, detail } => {
+            assert!(detail.contains("before ever pulling"), "{detail}");
+        }
+        other => panic!("{other:?}"),
+    }
+    b.pull();
+    b.push_ok(&[0.2; 4]);
+    match ctl.req(&Msg::Status) {
+        Msg::Ack { header } => {
+            assert_eq!(header.master_step, steps_before + 1, "only the valid push applied")
+        }
+        other => panic!("{other:?}"),
+    }
+    srv.stop();
+}
+
+/// Protocol misuse is rejected fatally (and never panics the server).
+#[test]
+fn server_rejects_protocol_abuse() {
+    let k = 4;
+    let c = cfg(AlgorithmKind::Asgd, 1, 1.0, 1);
+    let mut srv = start_server(&c, k, ServeOptions::default());
+    let addr = srv.addr();
+
+    // first frame must be Hello
+    {
+        let s = TcpStream::connect(addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut w = BufWriter::new(s);
+        write_frame(&mut w, &Msg::Status).unwrap();
+        match read_frame(&mut r).unwrap() {
+            Msg::Error { recoverable: false, detail } => {
+                assert!(detail.contains("Hello"), "{detail}")
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+    // control-only requests on a worker connection
+    let mut w = RawConn::open(&addr, Role::Worker);
+    assert!(matches!(
+        w.req(&Msg::Checkpoint),
+        Msg::Error { recoverable: false, .. }
+    ));
+    // wrong-length push is a protocol error, not a recoverable drop
+    let gen = w.gen;
+    assert!(matches!(
+        w.req(&Msg::Push { gen, msg: vec![0.0; k + 1] }),
+        Msg::Error { recoverable: false, .. }
+    ));
+    // worker requests on a control connection
+    let mut ctl = RawConn::open(&addr, Role::Control);
+    assert!(matches!(
+        ctl.req(&Msg::PullParams),
+        Msg::Error { recoverable: false, .. }
+    ));
+    // the server survived all of it
+    w.pull();
+    w.push_ok(&[0.1; 4]);
+    srv.stop();
+}
+
+// ---------------------------------------------------------------- (3)
+
+/// pull → noisy grad → push, round-robin over 2 workers (the resume test
+/// drives the reference and the remote master through this identically).
+fn drive(m: &mut dyn Master, curv: &[f32], rng: &mut Rng, steps: usize) {
+    let k = curv.len();
+    let mut buf = vec![0.0f32; k];
+    let mut g = vec![0.0f32; k];
+    for step in 0..steps {
+        let w = step % 2;
+        m.pull_into(w, &mut buf);
+        real_async::synthetic_grad(&buf, curv, rng, &mut g);
+        m.push_update(w, &g).unwrap();
+    }
+}
+
+fn dana_invariant(snap: &MasterSnapshot) {
+    let v = match &snap.state.iter().find(|(n, _)| n == "v").expect("v entry").1 {
+        StateVec::PerWorker(vs) => vs,
+        other => panic!("v has wrong shape: {other:?}"),
+    };
+    let vsum = match &snap.state.iter().find(|(n, _)| n == "vsum").expect("vsum entry").1 {
+        StateVec::Coord(s) => s,
+        other => panic!("vsum has wrong shape: {other:?}"),
+    };
+    for j in 0..vsum.len() {
+        let full: f32 = v.iter().map(|vi| vi[j]).sum();
+        assert!(
+            (vsum[j] - full).abs() < 2e-3 * (1.0 + full.abs()),
+            "v0 invariant broken at coord {j}: {} vs {full}",
+            vsum[j]
+        );
+    }
+}
+
+/// checkpoint → kill → resume → reconnect-as-join: the interrupted remote
+/// run continues bit-for-bit against an uninterrupted in-process
+/// reference, and the final full state (θ, vᶦ, v⁰, bookkeeping) is equal.
+#[test]
+fn checkpoint_kill_resume_reconnect_continues_bit_for_bit() {
+    let k = 32;
+    let c = cfg(AlgorithmKind::DanaZero, 2, 1.0, 1);
+    let dir = tmpdir("resume");
+    let ckpt = dir.join("server.ckpt");
+    let opts = ServeOptions {
+        leave_policy: LeavePolicy::Retire,
+        checkpoint_path: Some(ckpt.clone()),
+        checkpoint_every: 0,
+    };
+
+    let mut srv = start_server(&c, k, opts.clone());
+    let mut rm = RemoteMaster::connect(&srv.url(), 2).unwrap();
+
+    // uninterrupted in-process reference over the same op sequence
+    let mut reference = serve_master(&c, k);
+    assert_eq!(reference.add_worker(), 0);
+    assert_eq!(reference.add_worker(), 1);
+
+    let curv = real_async::synthetic_curvature(k);
+    let mut rng_ref = Rng::new(77);
+    let mut rng_net = Rng::new(77);
+
+    drive(&mut *reference, &curv, &mut rng_ref, 40);
+    drive(&mut rm, &curv, &mut rng_net, 40);
+    rm.force_checkpoint().unwrap();
+    assert_eq!(checkpoint::read_snapshot(&ckpt).unwrap().master_step, 40);
+
+    // hard kill: no final checkpoint, client connections go dead
+    srv.stop();
+    drop(srv);
+
+    // resume into a fresh server on a fresh port
+    let snap = checkpoint::read_snapshot(&ckpt).unwrap();
+    let mut resumed = serve_master(&c, k);
+    resumed.restore(&snap).unwrap();
+    assert_eq!(resumed.steps_done(), 40);
+    let mut srv2 = NetServer::start(resumed, "127.0.0.1:0", opts).unwrap();
+
+    // reconnect-as-join: both workers re-attach to their old slots
+    rm.reconnect_to(&srv2.url()).unwrap();
+    assert_eq!(rm.server_slot(0), Some(0));
+    assert_eq!(rm.server_slot(1), Some(1));
+
+    drive(&mut *reference, &curv, &mut rng_ref, 40);
+    drive(&mut rm, &curv, &mut rng_net, 40);
+
+    assert_eq!(rm.steps_done(), 80);
+    assert_eq!(
+        rm.theta_vec(),
+        reference.theta_vec(),
+        "trajectory diverged across the kill/resume cycle"
+    );
+    // final full state equality + the DANA invariant
+    rm.force_checkpoint().unwrap();
+    let fin = checkpoint::read_snapshot(&ckpt).unwrap();
+    assert_eq!(fin, reference.snapshot().unwrap());
+    dana_invariant(&fin);
+    srv2.stop();
+}
+
+/// After a resume, only *reattaching* workers may claim the checkpointed
+/// live slots — a genuinely fresh join (churn) never inherits a departed
+/// worker's momentum, even while resumed slots sit unclaimed.
+#[test]
+fn fresh_joins_never_inherit_resumed_slots() {
+    let k = 8;
+    let c = cfg(AlgorithmKind::DanaZero, 3, 1.0, 1);
+    // build a snapshot with 3 live slots carrying momentum
+    let mut src = serve_master(&c, k);
+    for w in 0..3 {
+        assert_eq!(src.add_worker(), w);
+        src.pull_params(w);
+        src.push_update(w, &vec![0.5; k]).unwrap();
+    }
+    let snap = src.snapshot().unwrap();
+    let mut resumed = serve_master(&c, k);
+    resumed.restore(&snap).unwrap();
+    let mut srv = NetServer::start(resumed, "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let addr = srv.addr();
+
+    // two workers reattach: lowest resumed slots, in order
+    let a = RawConn::open_with(&addr, Role::Worker, true);
+    let b = RawConn::open_with(&addr, Role::Worker, true);
+    assert_eq!((a.slot, b.slot), (0, 1));
+    // a fresh join must NOT be handed live slot 2 (and its momentum):
+    // it appends a brand-new slot instead
+    let c2 = RawConn::open_with(&addr, Role::Worker, false);
+    assert_eq!(c2.slot, 3, "fresh join inherited a resumed slot");
+    // a late reattacher still finds its slot
+    let d = RawConn::open_with(&addr, Role::Worker, true);
+    assert_eq!(d.slot, 2);
+    drop((a, b, c2, d));
+    srv.stop();
+}
+
+/// A graceful in-band Shutdown writes a final checkpoint, unblocks
+/// `wait()`, and refuses new connections.
+#[test]
+fn graceful_shutdown_checkpoints_and_stops_accepting() {
+    let k = 4;
+    let c = cfg(AlgorithmKind::NagAsgd, 1, 1.0, 1);
+    let dir = tmpdir("shutdown");
+    let ckpt = dir.join("final.ckpt");
+    let opts = ServeOptions {
+        leave_policy: LeavePolicy::Retire,
+        checkpoint_path: Some(ckpt.clone()),
+        checkpoint_every: 0,
+    };
+    let mut srv = start_server(&c, k, opts);
+    let addr = srv.addr();
+    let url = srv.url();
+
+    let mut w = RawConn::open(&addr, Role::Worker);
+    w.pull();
+    w.push_ok(&[0.3; 4]);
+    let mut ctl = RawConn::open(&addr, Role::Control);
+    assert!(matches!(ctl.req(&Msg::Shutdown), Msg::Ack { .. }));
+    srv.wait();
+
+    let snap = checkpoint::read_snapshot(&ckpt).unwrap();
+    assert_eq!(snap.master_step, 1, "shutdown checkpointed the final state");
+    assert!(
+        RemoteMaster::connect(&url, 1).is_err(),
+        "a stopped server must refuse new clusters"
+    );
+}
+
+/// Periodic checkpoints fire on the configured cadence.
+#[test]
+fn periodic_checkpoints_fire_every_n_steps() {
+    let k = 4;
+    let c = cfg(AlgorithmKind::Asgd, 1, 1.0, 1);
+    let dir = tmpdir("periodic");
+    let ckpt = dir.join("periodic.ckpt");
+    let opts = ServeOptions {
+        leave_policy: LeavePolicy::Retire,
+        checkpoint_path: Some(ckpt.clone()),
+        checkpoint_every: 5,
+    };
+    let mut srv = start_server(&c, k, opts);
+    let mut w = RawConn::open(&srv.addr(), Role::Worker);
+    for _ in 0..12 {
+        let p = w.pull();
+        w.push_ok(&vec![0.1; p.len()]);
+    }
+    // 12 pushes → checkpoints at steps 5 and 10; the file holds step 10
+    let snap = checkpoint::read_snapshot(&ckpt).unwrap();
+    assert_eq!(snap.master_step, 10);
+    srv.stop();
+}

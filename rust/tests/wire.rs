@@ -1,0 +1,216 @@
+//! Wire-protocol property suite (ISSUE 3 satellite): encode/decode
+//! round-trips for every message type — including empty and huge
+//! payloads — and *rejection* (never a panic) of truncated frames, bad
+//! magic, bad versions, oversized length prefixes, unknown tags, and
+//! trailing bytes.
+
+use dana::net::wire::{read_frame, write_frame, Header, Msg, Role, MAGIC, MAX_FRAME, VERSION};
+use dana::optim::{AlgorithmKind, LeavePolicy};
+use std::io::Cursor;
+
+fn sample_header() -> Header {
+    Header {
+        master_step: 123_456_789_012,
+        eta: 0.0125,
+        gamma: 0.9,
+        lambda: 1.0,
+        live_workers: 7,
+        worker_slots: 9,
+    }
+}
+
+/// One instance of every message variant, with assorted payload sizes.
+fn all_messages() -> Vec<Msg> {
+    let h = sample_header();
+    let mut msgs = vec![
+        Msg::Hello { role: Role::Worker, reattach: false },
+        Msg::Hello { role: Role::Worker, reattach: true },
+        Msg::Hello { role: Role::Control, reattach: false },
+        Msg::PullParams,
+        Msg::Push { gen: 0, msg: vec![] },
+        Msg::Push { gen: u32::MAX, msg: vec![f32::MIN, -0.0, 0.0, f32::MAX, 1.5e-42] },
+        Msg::Leave { policy: LeavePolicy::Retire },
+        Msg::Leave { policy: LeavePolicy::Fold },
+        Msg::Checkpoint,
+        Msg::Status,
+        Msg::GetTheta,
+        Msg::Shutdown,
+        Msg::HelloAck {
+            slot: u64::MAX,
+            gen: 7,
+            kind: AlgorithmKind::DanaSlim,
+            k: 101_386,
+            header: h,
+        },
+        Msg::Params { header: h, params: vec![] },
+        Msg::Params { header: h, params: (0..257).map(|i| (i as f32 * 0.7).sin()).collect() },
+        Msg::PushAck { header: h, eta: 0.05, gamma: 0.9, lambda: 2.0 },
+        Msg::Ack { header: h },
+        Msg::Theta { header: h, theta: vec![1.0; 3] },
+        Msg::Error { recoverable: true, detail: String::new() },
+        Msg::Error { recoverable: false, detail: "straggler push for slot 3 (gen 2 != 5)".into() },
+    ];
+    for kind in AlgorithmKind::ALL {
+        msgs.push(Msg::HelloAck { slot: 0, gen: 1, kind, k: 16, header: h });
+    }
+    // huge payload: ~1.2 MB of parameters round-trips bit-exactly
+    let huge: Vec<f32> = (0..300_000).map(|i| (i as f32).to_bits() as f32 * 1e-30).collect();
+    msgs.push(Msg::Push { gen: 3, msg: huge.clone() });
+    msgs.push(Msg::Theta { header: h, theta: huge });
+    msgs
+}
+
+#[test]
+fn every_message_round_trips_through_a_stream() {
+    // all messages written back-to-back on one stream, read back in order
+    let msgs = all_messages();
+    let mut buf = Vec::new();
+    for m in &msgs {
+        write_frame(&mut buf, m).unwrap();
+    }
+    let mut cur = Cursor::new(buf);
+    for want in &msgs {
+        let got = read_frame(&mut cur).unwrap();
+        assert_eq!(&got, want);
+    }
+    // clean EOF afterwards is an error (there is no frame to read)
+    assert!(read_frame(&mut cur).is_err());
+}
+
+#[test]
+fn f32_payloads_are_bit_exact() {
+    // NaNs and denormals survive the trip with their exact bit patterns
+    let weird = vec![
+        f32::NAN,
+        f32::from_bits(0x7FC0_1234), // payload-carrying NaN
+        f32::from_bits(0x0000_0001), // smallest denormal
+        f32::NEG_INFINITY,
+    ];
+    let mut buf = Vec::new();
+    write_frame(&mut buf, &Msg::Push { gen: 0, msg: weird.clone() }).unwrap();
+    match read_frame(&mut Cursor::new(buf)).unwrap() {
+        Msg::Push { msg, .. } => {
+            assert_eq!(msg.len(), weird.len());
+            for (a, b) in msg.iter().zip(&weird) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        other => panic!("wrong message back: {other:?}"),
+    }
+}
+
+#[test]
+fn truncation_at_every_length_is_rejected() {
+    for m in all_messages() {
+        let frame = m.encode();
+        if frame.len() > 4096 {
+            continue; // truncating the huge payloads at every byte is slow
+        }
+        for cut in 0..frame.len() {
+            let mut cur = Cursor::new(&frame[..cut]);
+            assert!(
+                read_frame(&mut cur).is_err(),
+                "truncated frame (cut={cut}/{}) must be rejected: {m:?}",
+                frame.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn bad_magic_and_version_are_rejected() {
+    let frame = Msg::PullParams.encode();
+    // body starts after the 4-byte length prefix
+    for i in 0..MAGIC.len() {
+        let mut bad = frame.clone();
+        bad[4 + i] ^= 0xFF;
+        assert!(read_frame(&mut Cursor::new(bad)).is_err(), "magic byte {i}");
+    }
+    let mut bad_version = frame.clone();
+    bad_version[4 + MAGIC.len()] = VERSION + 1;
+    let err = read_frame(&mut Cursor::new(bad_version)).unwrap_err();
+    assert!(err.to_string().contains("version"), "{err}");
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_allocation() {
+    // a length prefix over the cap must error out without trying to read
+    // (or allocate) the body
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+    let err = read_frame(&mut Cursor::new(frame)).unwrap_err();
+    assert!(err.to_string().contains("exceeds cap"), "{err}");
+    // undersized: shorter than the fixed header
+    let mut tiny = Vec::new();
+    tiny.extend_from_slice(&3u32.to_le_bytes());
+    tiny.extend_from_slice(&[0, 0, 0]);
+    assert!(read_frame(&mut Cursor::new(tiny)).is_err());
+}
+
+#[test]
+fn inner_count_beyond_frame_is_rejected() {
+    // a Push whose f32 count claims more elements than the frame holds
+    let mut body = Vec::new();
+    body.extend_from_slice(&MAGIC);
+    body.push(VERSION);
+    body.push(3); // Push tag
+    body.extend_from_slice(&0u32.to_le_bytes()); // gen
+    body.extend_from_slice(&(u64::MAX).to_le_bytes()); // absurd count
+    let err = Msg::decode(&body).unwrap_err();
+    assert!(
+        err.to_string().contains("overflow") || err.to_string().contains("truncated"),
+        "{err}"
+    );
+}
+
+#[test]
+fn unknown_tag_role_and_names_are_rejected() {
+    let make = |tag: u8, payload: &[u8]| {
+        let mut body = Vec::new();
+        body.extend_from_slice(&MAGIC);
+        body.push(VERSION);
+        body.push(tag);
+        body.extend_from_slice(payload);
+        body
+    };
+    assert!(Msg::decode(&make(99, &[])).is_err(), "unknown tag");
+    assert!(Msg::decode(&make(1, &[7, 0])).is_err(), "unknown role");
+    assert!(Msg::decode(&make(1, &[0])).is_err(), "hello without the reattach byte");
+    // Leave with an unknown policy name
+    let mut p = Vec::new();
+    p.extend_from_slice(&4u32.to_le_bytes());
+    p.extend_from_slice(b"meld");
+    assert!(Msg::decode(&make(4, &p)).is_err(), "unknown policy");
+    // HelloAck with an unknown algorithm name fails closed
+    let mut h = Vec::new();
+    h.extend_from_slice(&0u64.to_le_bytes()); // slot
+    h.extend_from_slice(&0u32.to_le_bytes()); // gen
+    h.extend_from_slice(&9u32.to_le_bytes());
+    h.extend_from_slice(b"quantum-9");
+    assert!(Msg::decode(&make(16, &h)).is_err(), "unknown algorithm");
+}
+
+#[test]
+fn trailing_bytes_are_rejected() {
+    for m in [Msg::PullParams, Msg::Status, Msg::Push { gen: 1, msg: vec![1.0, 2.0] }] {
+        let mut frame = m.encode();
+        // graft one extra byte into the body and fix up the length prefix
+        frame.push(0xAB);
+        let new_len = (frame.len() - 4) as u32;
+        frame[..4].copy_from_slice(&new_len.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(frame)).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{m:?}: {err}");
+    }
+}
+
+#[test]
+fn non_utf8_strings_are_rejected() {
+    let mut body = Vec::new();
+    body.extend_from_slice(&MAGIC);
+    body.push(VERSION);
+    body.push(21); // Error tag
+    body.push(1); // recoverable
+    body.extend_from_slice(&2u32.to_le_bytes());
+    body.extend_from_slice(&[0xFF, 0xFE]);
+    assert!(Msg::decode(&body).is_err());
+}
