@@ -14,10 +14,19 @@
 //! coordinates, fanned across shards in the sharded layout) and of a
 //! pull→push cycle running interleaved with continuous churn.
 //!
+//! The `concurrent/...` rows are the ISSUE 4 scaling sweep: W serving
+//! threads hammering one striped master (workers × shards grid), plus
+//! the pulls-under-push duel that shows reads no longer queue behind an
+//! in-flight apply on the striped backend.  Results land in
+//! `BENCH_serve.json` at the repo root so the perf trajectory is tracked
+//! in-tree from this PR on (CI refreshes the 2-worker smoke rows).
+//!
 //! Run: cargo bench --bench server [-- <filter>]
 
 use dana::optim::{make_algorithm, AlgorithmKind, LeavePolicy, LrSchedule, ScheduleConfig};
-use dana::server::{Master, ParameterServer, ShardedParameterServer};
+use dana::server::{
+    make_serving_master, Master, ParameterServer, ServingMaster, ShardedParameterServer,
+};
 use dana::util::bench::BenchSuite;
 use dana::util::rng::Rng;
 
@@ -242,5 +251,100 @@ fn main() {
         srv.stop();
     }
 
-    b.finish();
+    // Concurrent scaling sweep (workers × shards): W threads each run a
+    // full pull→push cycle per iteration against ONE striped master
+    // through the `&self` serving API — the thread interleaving the TCP
+    // server produces, minus the sockets.  Scoped-thread setup is part of
+    // each iteration (identical across rows, so the W/S trends stand).
+    {
+        let kc = 1_048_576usize;
+        let mut rng = Rng::new(5);
+        let theta0: Vec<f32> = (0..kc).map(|_| rng.normal() as f32).collect();
+        let grad: Vec<f32> = (0..kc).map(|_| 0.01 * rng.normal() as f32).collect();
+        for &shards in &[1usize, 4, 8] {
+            for &workers in &[1usize, 2, 4, 8] {
+                let ps = ShardedParameterServer::new(
+                    AlgorithmKind::DanaZero,
+                    &theta0,
+                    schedule(),
+                    workers,
+                    shards,
+                )
+                .with_threads(1);
+                for w in 0..workers {
+                    ps.pull_concurrent(w).unwrap();
+                }
+                // retained per-worker pull buffers: measure the server's
+                // memory traffic, not a per-cycle 4 MiB allocation
+                let bufs: Vec<std::sync::Mutex<Vec<f32>>> =
+                    (0..workers).map(|_| std::sync::Mutex::new(vec![0.0f32; kc])).collect();
+                // 7 streams/coordinate per cycle (see the sweep above),
+                // times W concurrent workers per iteration
+                let bytes = Some((kc * 4 * 7 * workers) as u64);
+                b.bench_with_bytes(
+                    &format!("concurrent/pull_push/w={workers}/S={shards}"),
+                    bytes,
+                    || {
+                        std::thread::scope(|s| {
+                            for w in 0..workers {
+                                let ps = &ps;
+                                let grad = &grad;
+                                let bufs = &bufs;
+                                s.spawn(move || {
+                                    ps.push_concurrent(w, grad).unwrap();
+                                    let mut buf = bufs[w].lock().unwrap();
+                                    ps.pull_into_concurrent(w, &mut buf).unwrap();
+                                    std::hint::black_box(&*buf);
+                                });
+                            }
+                        });
+                    },
+                );
+            }
+        }
+
+        // Pulls under a continuous push load: 3 readers + 1 writer per
+        // iteration.  On the global-lock backend every pull queues behind
+        // the writer's O(k) apply; on the striped backend pulls take
+        // per-shard read locks and only ever wait for the one shard
+        // currently being written.
+        for striped in [false, true] {
+            let mut sm = make_serving_master(
+                AlgorithmKind::DanaZero,
+                &theta0,
+                schedule(),
+                4,
+                8,
+                1,
+                striped,
+            );
+            sm.set_metrics_every(0);
+            let sm: &dyn ServingMaster = &*sm;
+            for w in 0..4 {
+                sm.pull(w).unwrap();
+            }
+            let label = if striped { "striped" } else { "locked" };
+            b.bench_with_bytes(
+                &format!("concurrent/pulls_under_push/{label}"),
+                Some((kc * 4 * 7 * 4) as u64),
+                || {
+                    std::thread::scope(|s| {
+                        let grad = &grad;
+                        s.spawn(move || {
+                            sm.push(0, grad).unwrap();
+                            sm.push(0, grad).unwrap();
+                        });
+                        for w in 1..4usize {
+                            s.spawn(move || {
+                                std::hint::black_box(sm.pull(w).unwrap());
+                                std::hint::black_box(sm.pull(w).unwrap());
+                            });
+                        }
+                    });
+                },
+            );
+        }
+    }
+
+    b.finish_json("BENCH_serve.json");
 }

@@ -112,6 +112,11 @@ pub struct TrainConfig {
     /// constructing a local server; `shards` is then a server-side
     /// setting and this field supersedes it.
     pub master_addr: Option<String>,
+    /// Move remote parameter traffic as per-shard `PullShard`/`PushShard`
+    /// frames (pipelined; bit-for-bit equivalent to monolithic frames —
+    /// see DESIGN.md §9).  Only meaningful with `master_addr` against a
+    /// server running `--shards > 1`; a no-op otherwise.
+    pub shard_frames: bool,
 }
 
 impl TrainConfig {
@@ -175,6 +180,7 @@ impl TrainConfig {
             churn: ChurnSchedule::default(),
             leave_policy: LeavePolicy::default(),
             master_addr: None,
+            shard_frames: false,
         }
     }
 
@@ -275,6 +281,10 @@ impl TrainConfig {
             anyhow::ensure!(!addr.is_empty(), "master_addr must not be empty");
             self.master_addr = Some(addr.to_string());
         }
+        if let Some(v) = j.get("shard_frames") {
+            self.shard_frames =
+                v.as_bool().ok_or_else(|| anyhow::anyhow!("bad shard_frames"))?;
+        }
         Ok(())
     }
 
@@ -339,9 +349,12 @@ mod tests {
     fn master_addr_applies_from_json() {
         let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
         assert!(c.master_addr.is_none(), "preset must default to in-process");
-        let j = Json::parse(r#"{"master_addr":"tcp://10.0.0.7:7700"}"#).unwrap();
+        assert!(!c.shard_frames, "preset must default to monolithic frames");
+        let j = Json::parse(r#"{"master_addr":"tcp://10.0.0.7:7700","shard_frames":true}"#)
+            .unwrap();
         c.apply_json(&j).unwrap();
         assert_eq!(c.master_addr.as_deref(), Some("tcp://10.0.0.7:7700"));
+        assert!(c.shard_frames);
         let j = Json::parse(r#"{"master_addr":""}"#).unwrap();
         assert!(c.apply_json(&j).is_err(), "empty address rejected");
         let j = Json::parse(r#"{"master_addr":42}"#).unwrap();

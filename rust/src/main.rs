@@ -20,7 +20,7 @@ use dana::experiments::{self, ExpOptions};
 use dana::net::{self, NetServer, ServeOptions};
 use dana::optim::{AlgorithmKind, LrSchedule};
 use dana::runtime::Engine;
-use dana::server::make_master;
+use dana::server::{make_serving_master, ServingMaster};
 use dana::sim::Environment;
 use dana::train::{baseline, real_async, sim_trainer, ssgd};
 use dana::util::cli::Args;
@@ -39,11 +39,12 @@ const USAGE: &str = "usage: dana <train|serve|experiment|simulate|info> [options
              [--seed S] [--eta X] [--gamma X] [--metrics-every K]
              [--shards S] [--churn \"leave@0.3:2,join@0.5,slow@0.6:0=4x\"]
              [--leave-policy retire|fold] [--config file.json] [--use-pallas]
-             [--synthetic] [--k K] [--master tcp://HOST:PORT]
+             [--synthetic] [--k K] [--master tcp://HOST:PORT] [--shard-frames]
              [--artifacts DIR]
   serve      --listen HOST:PORT --algorithm A [--workload W | --synthetic --k K]
-             [--workers N] [--epochs E] [--shards S] [--leave-policy retire|fold]
-             [--checkpoint PATH] [--checkpoint-every STEPS] [--resume PATH]
+             [--workers N] [--epochs E] [--shards S] [--serve-threads T]
+             [--leave-policy retire|fold] [--checkpoint PATH]
+             [--checkpoint-every STEPS] [--resume PATH]
              [--metrics-every K] [--seed S] [--artifacts DIR]
   experiment <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|fig12|fig13|
               table1..table6|churn|all> [--full] [--seeds K] [--out DIR]
@@ -114,6 +115,9 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     if let Some(addr) = args.opt_str("master") {
         cfg.master_addr = Some(addr);
     }
+    if args.flag("shard-frames") {
+        cfg.shard_frames = true;
+    }
     let synthetic = args.flag("synthetic");
     let synth_k = args.parse_or::<usize>("k", 256)?;
     let mode = args.str_or("mode", "sim");
@@ -183,6 +187,13 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
 /// (`dana train --master tcp://HOST:PORT`); the cluster starts empty
 /// unless `--resume` restores checkpointed membership, in which case
 /// reconnecting workers re-attach to their old slots (lowest first).
+///
+/// With `--shards S > 1` the server serves **lock-striped**: shards are
+/// the unit of concurrency from the socket down to the optimizer apply,
+/// so concurrent workers' pulls and pushes proceed in parallel.
+/// `--serve-threads T` caps the per-request shard fan-out (default 1 —
+/// connection threads already provide the parallelism); `--serve-threads
+/// 0` forces the legacy global-lock serving path.
 fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let listen = args.str_or("listen", "127.0.0.1:7700");
     let algorithm: AlgorithmKind = args.str_or("algorithm", "dana-slim").parse()?;
@@ -194,6 +205,7 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let synthetic = args.flag("synthetic");
     let synth_k = args.parse_or::<usize>("k", 256)?;
     let shards = args.parse_or::<usize>("shards", 1)?.max(1);
+    let serve_threads = args.parse_or::<usize>("serve-threads", 1)?;
     let leave_policy =
         args.parse_or::<dana::optim::LeavePolicy>("leave-policy", Default::default())?;
     let checkpoint_path = args.opt_str("checkpoint").map(PathBuf::from);
@@ -224,34 +236,44 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
         Engine::cpu(&artifacts)?.init_params(&cfg.variant_name())?
     };
     let schedule = LrSchedule::new(cfg.schedule.clone());
-    let threads = dana::util::parallel::default_threads();
+    // --serve-threads 0 = legacy global-lock serving, which keeps PR 3's
+    // intra-push shard fan-out (default_threads, inside the lock);
+    // otherwise shards serve lock-striped with the per-request fan-out
+    // capped at T (connection threads already provide the parallelism).
+    let striped = serve_threads > 0 && shards > 1;
+    let threads = if serve_threads == 0 {
+        dana::util::parallel::default_threads()
+    } else {
+        serve_threads
+    };
     let mut master = match &resume {
         Some(path) => {
             let snap = net::checkpoint::read_snapshot(path)?;
             // restore() re-validates; checking here gives a better message
             snap.validate(algorithm, theta0.len())?;
-            let mut m = make_master(algorithm, &snap.theta, schedule, 0, shards, threads);
+            let mut m =
+                make_serving_master(algorithm, &snap.theta, schedule, 0, shards, threads, striped);
             m.restore(&snap)?;
+            let (step, _, live, slots) = m.status();
             println!(
-                "resumed {} from {} at master step {} ({} live of {} slots awaiting reconnect)",
+                "resumed {} from {} at master step {step} ({live} live of {slots} slots \
+                 awaiting reconnect)",
                 algorithm.name(),
                 path.display(),
-                m.steps_done(),
-                m.live_workers(),
-                m.workers()
             );
             m
         }
         // fresh cluster: zero slots, every connect is a join
-        None => make_master(algorithm, &theta0, schedule, 0, shards, threads),
+        None => make_serving_master(algorithm, &theta0, schedule, 0, shards, threads, striped),
     };
-    master.metrics_mut().set_every(metrics_every);
+    master.set_metrics_every(metrics_every);
     let k = master.param_len();
     let opts = ServeOptions { leave_policy, checkpoint_path, checkpoint_every };
-    let mut srv = NetServer::start(master, &listen, opts)?;
+    let mut srv = NetServer::start_serving(master, &listen, opts)?;
     println!(
-        "dana serve: {} k={k} shards={shards} on {} — join with `dana train --master {}`",
+        "dana serve: {} k={k} shards={shards} ({}) on {} — join with `dana train --master {}`",
         algorithm.name(),
+        if striped { "lock-striped" } else { "global-lock" },
         srv.addr(),
         srv.url()
     );

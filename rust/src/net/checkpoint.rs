@@ -22,11 +22,15 @@
 //! trailing bytes, or a checksum mismatch are all errors — a torn or
 //! corrupted file can never restore into a half-valid master.
 //!
-//! **Atomicity.**  [`write_atomic`] writes to `<path>.tmp` in the same
-//! directory, fsyncs, then `rename(2)`s over the target, so a crash
-//! mid-write leaves either the previous complete checkpoint or a stray
-//! `.tmp` — never a torn file at the resume path.  (The checksum is the
-//! second line of defense, for torn *copies* of the file.)
+//! **Atomicity & durability.**  [`write_atomic`] writes to `<path>.tmp`
+//! in the same directory, fsyncs the file, `rename(2)`s over the target,
+//! and then fsyncs the **parent directory**.  The file fsync + rename
+//! makes the swap atomic (a crash mid-write leaves either the previous
+//! complete checkpoint or a stray `.tmp`, never a torn file); the
+//! directory fsync makes it *durable* — without it, a power loss after
+//! the rename can roll the directory entry back and lose the checkpoint
+//! entirely, even though the write was acknowledged.  (The checksum is
+//! the second line of defense, for torn *copies* of the file.)
 
 use crate::net::wire::{put_f32, put_str, put_u32, put_u64, put_vec_f32, put_vec_f64, Dec};
 use crate::optim::{StateDict, StateVec};
@@ -172,7 +176,28 @@ pub fn decode_snapshot(bytes: &[u8]) -> anyhow::Result<MasterSnapshot> {
     Ok(snap)
 }
 
-/// Write a snapshot to `path` atomically: `<path>.tmp` + fsync + rename.
+/// fsync the directory containing `path`, making a just-renamed entry
+/// durable.  On non-Unix platforms directory handles cannot be fsynced;
+/// there the rename itself is the best available barrier and this is a
+/// no-op.
+fn sync_parent_dir(path: &Path) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        let dir = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        std::fs::File::open(dir)?.sync_all()
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = path;
+        Ok(())
+    }
+}
+
+/// Write a snapshot to `path` atomically and durably:
+/// `<path>.tmp` + file fsync + rename + parent-directory fsync.
 /// The `.tmp` suffix is *appended* (not substituted for the extension),
 /// so `run.ckpt` and `run.bin` in one directory never share a tmp file.
 pub fn write_atomic(path: &Path, snap: &MasterSnapshot) -> anyhow::Result<()> {
@@ -191,6 +216,11 @@ pub fn write_atomic(path: &Path, snap: &MasterSnapshot) -> anyhow::Result<()> {
     }
     std::fs::rename(&tmp, path)
         .map_err(|e| anyhow::anyhow!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+    // The rename is atomic but not durable until the directory entry
+    // itself is on disk; failing here must fail the checkpoint LOUDLY —
+    // callers treat Ok as "safe to delete the previous generation".
+    sync_parent_dir(path)
+        .map_err(|e| anyhow::anyhow!("fsync parent dir of {}: {e}", path.display()))?;
     Ok(())
 }
 
@@ -252,6 +282,28 @@ mod tests {
         let mut long = bytes.clone();
         long.push(0);
         assert!(decode_snapshot(&long).is_err());
+    }
+
+    /// The durability sequence: tmp write + fsync, rename, parent-dir
+    /// fsync — and a parent fsync failure surfaces as a checkpoint error
+    /// instead of an acknowledged-but-volatile write.
+    #[test]
+    #[cfg(unix)]
+    fn rename_is_followed_by_a_parent_dir_fsync() {
+        let dir = std::env::temp_dir().join(format!("dana-ckpt-sync-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        write_atomic(&path, &sample()).unwrap();
+        // the tmp is gone (renamed, not left behind) and the entry reads
+        assert!(!dir.join("ckpt.bin.tmp").exists());
+        assert_eq!(read_snapshot(&path).unwrap(), sample());
+        // sync_parent_dir on the live file succeeds...
+        sync_parent_dir(&path).unwrap();
+        // ...and fails loudly when the parent directory cannot be opened,
+        // which write_atomic propagates (no silent volatile success)
+        let orphan = dir.join("no-such-subdir").join("ckpt.bin");
+        assert!(sync_parent_dir(&orphan).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -58,12 +58,17 @@ struct Conn {
     gen: u32,
 }
 
+/// What the server told us at handshake time.
+struct HelloInfo {
+    kind: AlgorithmKind,
+    k: usize,
+    /// Server-side slice granularity for PullShard/PushShard frames.
+    shards: usize,
+    header: Header,
+}
+
 impl Conn {
-    fn open(
-        addr: &str,
-        role: Role,
-        reattach: bool,
-    ) -> anyhow::Result<(Conn, AlgorithmKind, usize, Header)> {
+    fn open(addr: &str, role: Role, reattach: bool) -> anyhow::Result<(Conn, HelloInfo)> {
         let stream = TcpStream::connect(addr)
             .map_err(|e| anyhow::anyhow!("connect to master {addr}: {e}"))?;
         stream.set_nodelay(true).ok();
@@ -74,10 +79,10 @@ impl Conn {
             gen: 0,
         };
         match conn.roundtrip(&Msg::Hello { role, reattach })? {
-            Msg::HelloAck { slot, gen, kind, k, header } => {
+            Msg::HelloAck { slot, gen, kind, k, shards, header } => {
                 conn.slot = slot;
                 conn.gen = gen;
-                Ok((conn, kind, k as usize, header))
+                Ok((conn, HelloInfo { kind, k: k as usize, shards: shards as usize, header }))
             }
             Msg::Error { detail, .. } => anyhow::bail!("master refused hello: {detail}"),
             other => anyhow::bail!("unexpected hello reply: {other:?}"),
@@ -88,6 +93,17 @@ impl Conn {
         wire::write_frame(&mut self.writer, msg)?;
         wire::read_frame(&mut self.reader)
     }
+
+    /// Pipelined batch: write every request before reading any reply, so
+    /// a shard-sliced pull/push costs one round trip, not `S` — and the
+    /// server can start serving early slices while later ones are still
+    /// in flight.
+    fn roundtrip_batch(&mut self, msgs: &[Msg]) -> anyhow::Result<Vec<Msg>> {
+        for m in msgs {
+            wire::write_frame(&mut self.writer, m)?;
+        }
+        msgs.iter().map(|_| wire::read_frame(&mut self.reader)).collect()
+    }
 }
 
 /// See the module docs.  Construct with [`RemoteMaster::connect`].
@@ -95,6 +111,12 @@ pub struct RemoteMaster {
     addr: String,
     kind: AlgorithmKind,
     k: usize,
+    /// Server-side shard count (slice granularity for shard frames).
+    server_shards: usize,
+    /// Move parameters as per-shard PullShard/PushShard frames (pipelined,
+    /// one round trip) instead of one monolithic frame.  Off by default;
+    /// a no-op when the server serves unsliced (`server_shards <= 1`).
+    shard_frames: bool,
     control: Conn,
     /// Local worker index → connection (None = left/retired locally).
     workers: Vec<Option<Conn>>,
@@ -138,7 +160,8 @@ impl RemoteMaster {
         expect: Option<(AlgorithmKind, usize)>,
     ) -> anyhow::Result<RemoteMaster> {
         let addr = strip_scheme(addr).to_string();
-        let (control, kind, k, header) = Conn::open(&addr, Role::Control, false)?;
+        let (control, info) = Conn::open(&addr, Role::Control, false)?;
+        let (kind, k, header) = (info.kind, info.k, info.header);
         anyhow::ensure!(k > 0, "master reports k=0 parameters");
         if let Some((want_kind, want_k)) = expect {
             anyhow::ensure!(
@@ -157,6 +180,8 @@ impl RemoteMaster {
             addr,
             kind,
             k,
+            server_shards: info.shards.max(1),
+            shard_frames: false,
             control,
             workers: Vec::with_capacity(n_workers),
             header,
@@ -173,16 +198,37 @@ impl RemoteMaster {
     }
 
     fn open_worker(&mut self, reattach: bool) -> anyhow::Result<Conn> {
-        let (conn, kind, k, header) = Conn::open(&self.addr, Role::Worker, reattach)?;
+        let (conn, info) = Conn::open(&self.addr, Role::Worker, reattach)?;
         anyhow::ensure!(
-            kind == self.kind && k == self.k,
-            "master changed shape mid-run: {}/k={k} (expected {}/k={})",
-            kind.name(),
+            info.kind == self.kind && info.k == self.k,
+            "master changed shape mid-run: {}/k={} (expected {}/k={})",
+            info.kind.name(),
+            info.k,
             self.kind.name(),
             self.k
         );
-        self.header = header;
+        self.server_shards = info.shards.max(1);
+        self.header = info.header;
         Ok(conn)
+    }
+
+    /// Switch parameter traffic to per-shard frames (pipelined: all `S`
+    /// slices of a pull or push are written before the first reply is
+    /// read, so the round-trip count is unchanged while the striped
+    /// server overlaps slice service with other workers' traffic).  The
+    /// assembled trajectories are bit-for-bit the monolithic-frame ones —
+    /// pinned in `rust/tests/striped.rs`.
+    pub fn set_shard_frames(&mut self, on: bool) {
+        self.shard_frames = on;
+    }
+
+    /// Server-side shard count (1 = the server serves unsliced).
+    pub fn server_shards(&self) -> usize {
+        self.server_shards
+    }
+
+    fn sliced(&self) -> bool {
+        self.shard_frames && self.server_shards > 1
     }
 
     /// Point this client at a (possibly restarted) server and re-run the
@@ -228,14 +274,17 @@ impl RemoteMaster {
     }
 
     fn try_reconnect(&mut self, pattern: &[bool], expected_live: u64) -> anyhow::Result<()> {
-        let (mut control, kind, k, mut header) = Conn::open(&self.addr, Role::Control, false)?;
+        let (mut control, info) = Conn::open(&self.addr, Role::Control, false)?;
+        let mut header = info.header;
         anyhow::ensure!(
-            kind == self.kind && k == self.k,
-            "reconnected master runs {}/k={k}, this run needs {}/k={}",
-            kind.name(),
+            info.kind == self.kind && info.k == self.k,
+            "reconnected master runs {}/k={}, this run needs {}/k={}",
+            info.kind.name(),
+            info.k,
             self.kind.name(),
             self.k
         );
+        self.server_shards = info.shards.max(1);
         // Give a still-live server a moment to process our dropped
         // connections' EOF-leaves, so the rejoin below reclaims the same
         // retired slots instead of growing the cluster.  Against a
@@ -304,6 +353,117 @@ impl RemoteMaster {
             self.note(&header);
         }
         Ok(reply)
+    }
+
+    /// A pipelined batch of requests on worker `w`'s connection, with the
+    /// same transparent reconnect-once contract as [`Self::worker_request`].
+    /// `make` builds the frames from the slot's *current* generation and
+    /// the server's *current* shard count, so a retry after
+    /// reconnect-as-join re-tags AND re-slices them — a server resumed
+    /// with a different `--shards` (layout-independent checkpoints allow
+    /// it) gets correctly shaped slices, not the old layout's.  A batch
+    /// interrupted mid-flight is safe to resend wholesale: the server
+    /// buffers push slices per connection and drops an incomplete group
+    /// with the dead socket (gather-then-apply).
+    fn worker_request_batch(
+        &mut self,
+        w: usize,
+        make: impl Fn(u32, usize) -> Vec<Msg>,
+    ) -> anyhow::Result<Vec<Msg>> {
+        anyhow::ensure!(
+            w < self.workers.len() && self.workers[w].is_some(),
+            "request for retired local worker {w}"
+        );
+        let first = {
+            let shards = self.server_shards;
+            let conn = self.workers[w].as_mut().expect("checked above");
+            let msgs = make(conn.gen, shards);
+            conn.roundtrip_batch(&msgs)
+        };
+        let replies = match first {
+            Ok(r) => r,
+            Err(_) => {
+                self.reconnect()?;
+                let shards = self.server_shards;
+                let conn = self.workers[w].as_mut().expect("reconnected");
+                let msgs = make(conn.gen, shards);
+                conn.roundtrip_batch(&msgs)?
+            }
+        };
+        for reply in &replies {
+            if let Msg::Params { header, .. }
+            | Msg::ShardParams { header, .. }
+            | Msg::PushAck { header, .. }
+            | Msg::Ack { header }
+            | Msg::Theta { header, .. } = reply
+            {
+                let header = *header;
+                self.note(&header);
+            }
+        }
+        Ok(replies)
+    }
+
+    /// Shard-sliced pull: one pipelined `PullShard` round per shard,
+    /// assembled into the full parameter vector.
+    fn pull_sliced(&mut self, worker: usize) -> anyhow::Result<Vec<f32>> {
+        let replies = self.worker_request_batch(worker, |_, shards| {
+            (0..shards as u32).map(|shard| Msg::PullShard { shard }).collect()
+        })?;
+        // recompute AFTER the batch: a mid-batch reconnect may have
+        // landed on a server with a different shard count
+        let ranges = crate::server::shard_bounds(self.k, self.server_shards);
+        let mut out = vec![0.0f32; self.k];
+        for reply in replies {
+            match reply {
+                Msg::ShardParams { shard, params, .. } => {
+                    let r = ranges
+                        .get(shard as usize)
+                        .ok_or_else(|| anyhow::anyhow!("server sent unknown shard {shard}"))?
+                        .clone();
+                    anyhow::ensure!(
+                        params.len() == r.len(),
+                        "shard {shard} slice length {} != {}",
+                        params.len(),
+                        r.len()
+                    );
+                    out[r].copy_from_slice(&params);
+                }
+                Msg::Error { detail, .. } => anyhow::bail!("sliced pull refused: {detail}"),
+                other => anyhow::bail!("unexpected sliced-pull reply: {other:?}"),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Shard-sliced push: the update travels as one pipelined `PushShard`
+    /// frame per shard; the server applies the assembled update as a
+    /// single master step when the last slice lands.
+    fn push_sliced(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        let k = self.k;
+        let replies = self.worker_request_batch(worker, |gen, shards| {
+            crate::server::shard_bounds(k, shards)
+                .into_iter()
+                .enumerate()
+                .map(|(shard, r)| Msg::PushShard {
+                    gen,
+                    shard: shard as u32,
+                    msg: msg[r].to_vec(),
+                })
+                .collect()
+        })?;
+        let mut step = None;
+        for reply in replies {
+            match reply {
+                Msg::Ack { .. } => {}
+                Msg::PushAck { eta, gamma, lambda, .. } => {
+                    step = Some(Step { eta, gamma, lambda })
+                }
+                Msg::Error { detail, .. } => anyhow::bail!("push rejected: {detail}"),
+                other => anyhow::bail!("unexpected sliced-push reply: {other:?}"),
+            }
+        }
+        step.ok_or_else(|| anyhow::anyhow!("sliced push never completed (no PushAck)"))
     }
 
     /// One request on the control connection, same retry contract.
@@ -457,6 +617,11 @@ impl Master for RemoteMaster {
     }
 
     fn pull_params(&mut self, worker: usize) -> Vec<f32> {
+        if self.sliced() {
+            return self
+                .pull_sliced(worker)
+                .unwrap_or_else(|e| panic!("sliced pull for worker {worker} failed: {e:#}"));
+        }
         match self.worker_request(worker, &Msg::PullParams) {
             Ok(Msg::Params { params, .. }) => {
                 assert_eq!(params.len(), self.k, "master sent {} of k={}", params.len(), self.k);
@@ -482,6 +647,9 @@ impl Master for RemoteMaster {
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("push from retired local worker {worker}"))?
             .gen;
+        if self.sliced() {
+            return self.push_sliced(worker, msg);
+        }
         let reply = self.worker_request(worker, &Msg::Push { gen, msg: msg.to_vec() })?;
         match reply {
             Msg::PushAck { eta, gamma, lambda, .. } => Ok(Step { eta, gamma, lambda }),

@@ -8,9 +8,11 @@
 //! actually about.  std-only: no new dependencies.
 //!
 //! * [`wire`] — versioned, length-prefixed, fail-closed binary protocol;
-//! * [`server`] — `dana serve`: any [`Master`] behind a `TcpListener`,
-//!   thread-per-connection, connect = join / EOF = leave, generation
-//!   tags against straggler pushes;
+//! * [`server`] — `dana serve`: a [`crate::server::ServingMaster`]
+//!   behind a `TcpListener`, thread-per-connection, connect = join /
+//!   EOF = leave, generation tags against straggler pushes.  With the
+//!   lock-striped backend, shards are the unit of concurrency from the
+//!   socket to the optimizer apply (see DESIGN.md §9);
 //! * [`client`] — [`RemoteMaster`], the full [`Master`] trait over a
 //!   connection, so both trainers run unchanged against
 //!   `--master tcp://host:port`;
@@ -45,12 +47,15 @@ pub fn master_for(cfg: &TrainConfig, theta0: &[f32]) -> anyhow::Result<Box<dyn M
             // worker slot is joined: a misconfigured client never
             // perturbs a live cluster's membership (or its auto-tuned
             // α/τ) on its way to being rejected.
-            let rm = RemoteMaster::connect_expect(
+            let mut rm = RemoteMaster::connect_expect(
                 addr,
                 cfg.n_workers,
                 cfg.algorithm,
                 theta0.len(),
             )?;
+            // per-shard parameter frames (no-op unless the server is
+            // sharded); trajectories are bit-for-bit either way
+            rm.set_shard_frames(cfg.shard_frames);
             Ok(Box::new(rm))
         }
         None => Ok(make_master(

@@ -1,13 +1,13 @@
-//! `NetServer` — any [`Master`] implementation behind a `TcpListener`.
+//! `NetServer` — a [`ServingMaster`] behind a `TcpListener`.
 //!
 //! Connection lifecycle maps one-to-one onto the elastic-membership
 //! machinery PR 2 built:
 //!
-//! * **connect** (a [`wire::Role::Worker`] Hello) = [`Master::add_worker`]
+//! * **connect** (a [`wire::Role::Worker`] Hello) = [`ServingMaster::join`]
 //!   — or, after a `--resume`, re-attachment to the lowest live slot left
 //!   unattached by the checkpoint, so a returning worker finds its
 //!   momentum vᶦ exactly where it left it (*reconnect-as-join*);
-//! * **disconnect / EOF** = [`Master::remove_worker`] under the server's
+//! * **disconnect / EOF** = [`ServingMaster::leave`] under the server's
 //!   configured default [`LeavePolicy`] (an explicit [`wire::Msg::Leave`]
 //!   frame may override the policy per departure);
 //! * every attach bumps the slot's **generation**; a `Push` whose echoed
@@ -15,16 +15,41 @@
 //!   incarnation of the slot and is rejected recoverably, exactly like
 //!   the in-process drivers drop late pushes after a leave.
 //!
-//! Threading: one OS thread per connection, all serialized through one
-//! mutex around the master — the FIFO discipline of the paper's Appendix
-//! A.1 falls out of lock acquisition order.  The master's own sharded
-//! parallelism (S shards fanned out per apply) still runs *inside* the
-//! lock, so `--shards` composes with the transport unchanged.
+//! Threading: one OS thread per connection, but — unlike the PR 3 version
+//! of this file — **no global lock in front of the master**.  Connection
+//! bookkeeping (attachment, generations, the shutdown flag) lives under
+//! one small mutex held for O(1) work; pulls and pushes then run against
+//! the [`ServingMaster`] concurrently.  With the lock-striped backend
+//! ([`crate::server::ShardedParameterServer`]) two workers' applies
+//! pipeline across shards and pulls run under per-shard read locks, so
+//! the sharded layout finally buys throughput *through the wire*; the
+//! global-lock backend ([`crate::server::LockedMaster`]) is preserved as
+//! the reference path and serializes exactly like PR 3.  This is safe
+//! without widening the gen-check critical section because a slot is only
+//! retired by the connection that owns its current generation — the very
+//! thread executing the request — so a gen check at dispatch time cannot
+//! be invalidated mid-request by another thread.
+//!
+//! Shard-sliced frames: a client may fetch parameters shard-by-shard
+//! ([`Msg::PullShard`]) and deliver updates the same way
+//! ([`Msg::PushShard`]).  Push slices are buffered *per connection* and
+//! applied as one master step when the last slice lands
+//! (gather-then-apply): a worker dying mid-group leaves no partial
+//! update, and the slices of different workers interleave freely on the
+//! striped backend.
+//!
+//! Failure containment: every lock is taken through the poison-recovering
+//! helpers in [`crate::util::sync`], and a panicking request handler is
+//! caught ([`std::panic::catch_unwind`]), logged, and turned into the
+//! normal disconnect path — the offending slot is retired and the rest of
+//! the cluster keeps training.  (The PR 3 version `.expect()`ed on every
+//! lock, so one panicking connection thread poisoned the master mutex and
+//! permanently killed the whole cluster.)
 //!
 //! Fault tolerance: with a checkpoint path configured the server writes a
 //! [`crate::net::checkpoint`] snapshot every `checkpoint_every` master
-//! steps (atomic rename; see that module for the torn-write guarantees),
-//! on demand (`Checkpoint` control frame), and on graceful `Shutdown`.  A
+//! steps (atomic rename + parent-directory fsync; see that module), on
+//! demand (`Checkpoint` control frame), and on graceful `Shutdown`.  A
 //! hard [`NetServer::stop`] intentionally skips the final write — tests
 //! use it to simulate a crash, and a crashed process by definition keeps
 //! only its last periodic snapshot.
@@ -32,13 +57,15 @@
 use super::checkpoint;
 use super::wire::{self, Msg, Role};
 use crate::optim::LeavePolicy;
-use crate::server::{Master, MasterSnapshot};
+use crate::server::{LockedMaster, Master, ServingMaster};
+use crate::util::sync;
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
-/// Server-side policy knobs (everything else lives in the [`Master`]).
+/// Server-side policy knobs (everything else lives in the master).
 #[derive(Debug, Clone, Default)]
 pub struct ServeOptions {
     /// Policy for a worker that disconnects without an explicit Leave.
@@ -50,39 +77,41 @@ pub struct ServeOptions {
     pub checkpoint_every: u64,
 }
 
-struct Shared {
-    inner: Mutex<Inner>,
-    /// Serializes checkpoint file writes that happen *outside* the master
-    /// lock (periodic snapshots) and records the highest master step ever
-    /// written, so a slow write can never clobber a newer snapshot.
-    ckpt_gate: Mutex<u64>,
-}
-
-struct Inner {
-    master: Box<dyn Master>,
+/// Connection bookkeeping, under one short mutex (never held across a
+/// master data operation).
+struct Conns {
     /// Whether a connection currently owns each slot.
     attached: Vec<bool>,
     /// Per-slot generation, bumped at every attach.
     slot_gen: Vec<u32>,
+    /// Once set, no further request is served: handler threads close
+    /// their connections and the accept loop exits.
+    shutdown: bool,
+}
+
+struct Shared {
+    master: Box<dyn ServingMaster>,
+    conns: Mutex<Conns>,
     opts: ServeOptions,
     /// The bound address — the in-band Shutdown path dials it once to
     /// wake the accept loop out of `accept(2)`.
     addr: SocketAddr,
-    /// Once set (under the lock), no further request is served: handler
-    /// threads close their connections and the accept loop exits.
-    shutdown: bool,
+    /// Serializes checkpoint file writes and records the highest master
+    /// step ever written, so a slow write can never clobber a newer
+    /// snapshot.
+    ckpt_gate: Mutex<u64>,
 }
 
-impl Inner {
+impl Shared {
     fn header(&self) -> wire::Header {
-        let s = self.master.step_now();
+        let (master_step, s, live, slots) = self.master.status();
         wire::Header {
-            master_step: self.master.steps_done(),
+            master_step,
             eta: s.eta,
             gamma: s.gamma,
             lambda: s.lambda,
-            live_workers: self.master.live_workers() as u64,
-            worker_slots: self.master.workers() as u64,
+            live_workers: live as u64,
+            worker_slots: slots as u64,
         }
     }
 
@@ -91,77 +120,114 @@ impl Inner {
     /// checkpoint) first — deterministic, so a client reconnecting its
     /// workers in order gets its old slots (and their momentum) back.  A
     /// fresh join never inherits such a slot: it always goes through
-    /// `Master::add_worker` (zero momentum, EASGD at the center, auto
+    /// [`ServingMaster::join`] (zero momentum, EASGD at the center, auto
     /// α/τ retune), preserving PR 2's joiner semantics.
-    fn attach_worker(&mut self, reattach: bool) -> usize {
+    /// Returns None when the server is already shutting down (the check
+    /// happens under the conns lock, so no join can slip in after a
+    /// graceful shutdown froze membership and wrote its final snapshot).
+    fn attach_worker(&self, reattach: bool) -> Option<(usize, u32)> {
+        let mut c = sync::lock(&self.conns);
+        if c.shutdown {
+            return None;
+        }
+        let (_, _, _, slots) = self.master.status();
         let resumable = if reattach {
-            (0..self.master.workers()).find(|&w| {
-                self.master.is_live(w) && !self.attached.get(w).copied().unwrap_or(false)
+            (0..slots).find(|&w| {
+                self.master.is_live(w) && !c.attached.get(w).copied().unwrap_or(false)
             })
         } else {
             None
         };
-        let slot = resumable.unwrap_or_else(|| self.master.add_worker());
-        if slot >= self.attached.len() {
-            self.attached.resize(slot + 1, false);
-            self.slot_gen.resize(slot + 1, 0);
+        let slot = resumable.unwrap_or_else(|| self.master.join());
+        if slot >= c.attached.len() {
+            c.attached.resize(slot + 1, false);
+            c.slot_gen.resize(slot + 1, 0);
         }
-        self.attached[slot] = true;
-        self.slot_gen[slot] = self.slot_gen[slot].wrapping_add(1);
-        slot
+        c.attached[slot] = true;
+        c.slot_gen[slot] = c.slot_gen[slot].wrapping_add(1);
+        Some((slot, c.slot_gen[slot]))
     }
 
     /// Synchronous checkpoint (explicit `Checkpoint` frame / graceful
-    /// shutdown): snapshot + write under the master lock, so the reply
-    /// acknowledges a durable file.  Takes the write gate so it composes
-    /// with in-flight periodic writes (lock order inner → gate; the
-    /// periodic path takes only the gate).
-    fn write_checkpoint(&self, shared: &Shared) -> anyhow::Result<()> {
+    /// shutdown): the reply acknowledges a durable file.  Returns the
+    /// snapshotted master step.
+    fn write_checkpoint(&self) -> anyhow::Result<u64> {
         let path = self
             .opts
             .checkpoint_path
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("no checkpoint path configured"))?;
         let snap = self.master.snapshot()?;
-        let mut last = shared.ckpt_gate.lock().expect("ckpt gate poisoned");
+        let mut last = sync::lock(&self.ckpt_gate);
         checkpoint::write_atomic(path, &snap)?;
         *last = (*last).max(snap.master_step);
-        Ok(())
+        Ok(snap.master_step)
     }
 
-    /// Periodic-checkpoint trigger after a push: clone a consistent
-    /// snapshot under the master lock and hand it back — the expensive
-    /// encode + write + fsync runs *outside* the lock so worker traffic
-    /// is not stalled behind the disk.  Failures are logged, not fatal.
-    fn pending_checkpoint(&self) -> Option<(std::path::PathBuf, MasterSnapshot)> {
-        if self.opts.checkpoint_every == 0 {
-            return None;
-        }
-        let path = self.opts.checkpoint_path.as_ref()?;
-        if self.master.steps_done() % self.opts.checkpoint_every != 0 {
-            return None;
-        }
-        match self.master.snapshot() {
-            Ok(snap) => Some((path.clone(), snap)),
-            Err(e) => {
-                eprintln!("checkpoint failed at step {}: {e:#}", self.master.steps_done());
-                None
+    /// Final checkpoint for a graceful shutdown.  The shutdown flag is
+    /// already set, so no *new* request is admitted — but a push that
+    /// passed the gate before the flag may still be in flight and will
+    /// still be PushAck'd; re-snapshot until the step count is stable so
+    /// every acknowledged update is in the final file.  Terminates: the
+    /// in-flight set only shrinks once the flag is up.
+    fn write_final_checkpoint(&self) {
+        loop {
+            match self.write_checkpoint() {
+                Ok(step) => {
+                    if self.master.steps_done() == step {
+                        return;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => {
+                    eprintln!("net: shutdown checkpoint failed: {e:#}");
+                    return;
+                }
             }
         }
     }
-}
 
-/// Write a periodic snapshot outside the master lock.  The gate both
-/// serializes concurrent writers and drops a snapshot that raced behind a
-/// newer one.
-fn write_pending_checkpoint(shared: &Shared, path: &std::path::Path, snap: &MasterSnapshot) {
-    let mut last = shared.ckpt_gate.lock().expect("ckpt gate poisoned");
-    if snap.master_step <= *last {
-        return; // a newer snapshot is already on disk
-    }
-    match checkpoint::write_atomic(path, snap) {
-        Ok(()) => *last = snap.master_step,
-        Err(e) => eprintln!("checkpoint failed at step {}: {e:#}", snap.master_step),
+    /// Periodic-checkpoint trigger after a push.  Fires when the step
+    /// count has advanced `checkpoint_every` past the last *written*
+    /// snapshot (the gate value) — a monotone condition, so concurrent
+    /// pushes racing the counter past a multiple cannot skip a cadence
+    /// point the way a `% every == 0` check could.  The snapshot quiesces
+    /// the master briefly; the expensive encode + write + fsync runs with
+    /// no master state locked, behind the step-ordered write gate (which
+    /// both serializes concurrent writers and drops a snapshot that raced
+    /// behind a newer one).  Failures are logged, not fatal.
+    fn maybe_periodic_checkpoint(&self) {
+        if self.opts.checkpoint_every == 0 {
+            return;
+        }
+        let Some(path) = self.opts.checkpoint_path.as_ref() else { return };
+        {
+            // Check-and-claim under the gate: while one thread snapshots
+            // and writes, every other push crossing the threshold sees
+            // the claimed step and skips — no redundant whole-server
+            // quiesce + snapshot per racing push.
+            let mut last = sync::lock(&self.ckpt_gate);
+            let steps = self.master.steps_done();
+            if steps < *last + self.opts.checkpoint_every {
+                return;
+            }
+            *last = steps;
+        }
+        let snap = match self.master.snapshot() {
+            Ok(snap) => snap,
+            Err(e) => {
+                eprintln!("checkpoint failed at step {}: {e:#}", self.master.steps_done());
+                return;
+            }
+        };
+        // Write under the gate (serializes with synchronous checkpoints);
+        // the claim above may undershoot the snapshot's real step, so
+        // record the max.
+        let mut last = sync::lock(&self.ckpt_gate);
+        match checkpoint::write_atomic(path, &snap) {
+            Ok(()) => *last = (*last).max(snap.master_step),
+            Err(e) => eprintln!("checkpoint failed at step {}: {e:#}", snap.master_step),
+        }
     }
 }
 
@@ -174,29 +240,42 @@ pub struct NetServer {
 }
 
 impl NetServer {
+    /// Bind `listen` and serve `master` behind one global lock — the
+    /// PR 3 reference path, kept for any [`Master`] implementation.  Use
+    /// [`NetServer::start_serving`] with a
+    /// [`crate::server::make_serving_master`] product for lock-striped
+    /// concurrent serving.
+    pub fn start(
+        master: Box<dyn Master>,
+        listen: &str,
+        opts: ServeOptions,
+    ) -> anyhow::Result<NetServer> {
+        Self::start_serving(Box::new(LockedMaster::new(master)), listen, opts)
+    }
+
     /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
     /// start serving `master`.  Slots already live in the master (a
     /// `--resume` restore) start *unattached* and are claimed by
     /// reconnecting workers; a fresh master should be built with 0
     /// workers so that connect == join.
-    pub fn start(
-        master: Box<dyn Master>,
+    pub fn start_serving(
+        master: Box<dyn ServingMaster>,
         listen: &str,
         opts: ServeOptions,
     ) -> anyhow::Result<NetServer> {
         let listener = TcpListener::bind(listen)
             .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
         let addr = listener.local_addr()?;
-        let slots = master.workers();
+        let (_, _, _, slots) = master.status();
         let shared = Arc::new(Shared {
-            inner: Mutex::new(Inner {
-                master,
+            master,
+            conns: Mutex::new(Conns {
                 attached: vec![false; slots],
                 slot_gen: vec![0; slots],
-                opts,
-                addr,
                 shutdown: false,
             }),
+            opts,
+            addr,
             ckpt_gate: Mutex::new(0),
         });
         let accept_shared = Arc::clone(&shared);
@@ -219,11 +298,11 @@ impl NetServer {
     /// requests observe EOF.  Blocks until the accept loop exits.
     pub fn stop(&mut self) {
         {
-            let mut g = self.shared.inner.lock().expect("net server poisoned");
-            if g.shutdown {
+            let mut c = sync::lock(&self.shared.conns);
+            if c.shutdown {
                 return;
             }
-            g.shutdown = true;
+            c.shutdown = true;
         }
         // wake the accept loop so it observes the flag
         let _ = TcpStream::connect(self.addr);
@@ -241,7 +320,7 @@ impl NetServer {
 
     /// Master steps applied so far (test/operator introspection).
     pub fn steps_done(&self) -> u64 {
-        self.shared.inner.lock().expect("net server poisoned").master.steps_done()
+        self.shared.master.steps_done()
     }
 }
 
@@ -253,7 +332,7 @@ impl Drop for NetServer {
 
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     for stream in listener.incoming() {
-        if shared.inner.lock().expect("net server poisoned").shutdown {
+        if sync::lock(&shared.conns).shutdown {
             break;
         }
         match stream {
@@ -270,6 +349,45 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     }
 }
 
+/// Conn-local reassembly buffer for a shard-sliced push (gather-then-
+/// apply: nothing reaches the master until every slice has landed, so a
+/// disconnect mid-group drops the group with no partial update).
+struct PushGroup {
+    buf: Vec<f32>,
+    got: Vec<bool>,
+    n_got: usize,
+}
+
+impl PushGroup {
+    fn new(k: usize, shards: usize) -> PushGroup {
+        PushGroup { buf: vec![0.0; k], got: vec![false; shards], n_got: 0 }
+    }
+
+    fn reset(&mut self) {
+        self.got.fill(false);
+        self.n_got = 0;
+    }
+
+    fn open(&self) -> bool {
+        self.n_got > 0
+    }
+
+    /// Record one slice; `Ok(true)` when the group is complete.
+    fn add(&mut self, shard: usize, range: Range<usize>, msg: &[f32]) -> anyhow::Result<bool> {
+        anyhow::ensure!(!self.got[shard], "duplicate slice for shard {shard} in one push");
+        anyhow::ensure!(
+            msg.len() == range.len(),
+            "shard {shard} slice length {} != shard length {}",
+            msg.len(),
+            range.len()
+        );
+        self.buf[range].copy_from_slice(msg);
+        self.got[shard] = true;
+        self.n_got += 1;
+        Ok(self.n_got == self.got.len())
+    }
+}
+
 /// One connection, handshake to EOF.  Returns Err only for reply-write
 /// failures worth logging; a client disconnect is a normal return.
 fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> anyhow::Result<()> {
@@ -280,43 +398,28 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> anyhow::Result<()> {
     // Handshake: the first frame must be Hello.
     let (slot, gen) = match wire::read_frame(&mut reader) {
         Ok(Msg::Hello { role, reattach }) => {
-            let ack = {
-                let mut g = shared.inner.lock().expect("net server poisoned");
-                if g.shutdown {
-                    return Ok(());
-                }
-                match role {
-                    Role::Worker => {
-                        let slot = g.attach_worker(reattach);
-                        let gen = g.slot_gen[slot];
-                        (
-                            Some((slot, gen)),
-                            Msg::HelloAck {
-                                slot: slot as u64,
-                                gen,
-                                kind: g.master.algo_kind(),
-                                k: g.master.param_len() as u64,
-                                header: g.header(),
-                            },
-                        )
+            let (slot, gen) = match role {
+                Role::Worker => match shared.attach_worker(reattach) {
+                    Some((s, g)) => (Some(s), g),
+                    None => return Ok(()), // shutting down: refuse the join
+                },
+                Role::Control => {
+                    if sync::lock(&shared.conns).shutdown {
+                        return Ok(());
                     }
-                    Role::Control => (
-                        None,
-                        Msg::HelloAck {
-                            slot: u64::MAX,
-                            gen: 0,
-                            kind: g.master.algo_kind(),
-                            k: g.master.param_len() as u64,
-                            header: g.header(),
-                        },
-                    ),
+                    (None, 0)
                 }
             };
-            wire::write_frame(&mut writer, &ack.1)?;
-            match ack.0 {
-                Some((s, g)) => (Some(s), g),
-                None => (None, 0),
-            }
+            let ack = Msg::HelloAck {
+                slot: slot.map(|s| s as u64).unwrap_or(u64::MAX),
+                gen,
+                kind: shared.master.algo_kind(),
+                k: shared.master.param_len() as u64,
+                shards: shared.master.shard_count() as u32,
+                header: shared.header(),
+            };
+            wire::write_frame(&mut writer, &ack)?;
+            (slot, gen)
         }
         Ok(_) => {
             let _ = wire::write_frame(
@@ -328,18 +431,38 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> anyhow::Result<()> {
         Err(_) => return Ok(()), // dropped before the handshake
     };
 
-    let served = serve_requests(&mut reader, &mut writer, &shared, slot, gen);
+    // A panic while serving must not leak the slot (or poison anything for
+    // good): catch it, log it, and fall through to the disconnect path so
+    // the offending slot is retired like any other dead connection.
+    let served = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        serve_requests(&mut reader, &mut writer, &shared, slot, gen)
+    }));
+    let served = match served {
+        Ok(result) => result,
+        Err(panic) => {
+            let what = panic
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("non-string panic payload");
+            eprintln!(
+                "net: request handler panicked ({what}); retiring slot {slot:?} and \
+                 keeping the server up"
+            );
+            Ok(())
+        }
+    };
 
     // Disconnect = leave.  Only the *current* incarnation of the slot may
     // retire it, and a shutdown freezes membership (so the state a crash
     // leaves behind matches the last checkpoint's worldview).
     if let Some(w) = slot {
-        let mut g = shared.inner.lock().expect("net server poisoned");
-        if g.slot_gen[w] == gen && g.attached[w] {
-            g.attached[w] = false;
-            if !g.shutdown && g.master.is_live(w) {
-                let policy = g.opts.leave_policy;
-                if let Err(e) = g.master.remove_worker(w, policy) {
+        let mut c = sync::lock(&shared.conns);
+        if c.slot_gen[w] == gen && c.attached[w] {
+            c.attached[w] = false;
+            if !c.shutdown && shared.master.is_live(w) {
+                let policy = shared.opts.leave_policy;
+                if let Err(e) = shared.master.leave(w, policy) {
                     eprintln!("net: retire of disconnected worker {w} failed: {e:#}");
                 }
             }
@@ -355,23 +478,18 @@ fn serve_requests(
     slot: Option<usize>,
     gen: u32,
 ) -> anyhow::Result<()> {
+    let ranges = shared.master.shard_ranges();
+    let mut group = PushGroup::new(shared.master.param_len(), ranges.len());
     loop {
         // EOF or a malformed (fail-closed) frame both end the connection.
         let msg = match wire::read_frame(reader) {
             Ok(m) => m,
             Err(_) => return Ok(()),
         };
-        let (reply, shutdown_after, pending) = {
-            let mut g = shared.inner.lock().expect("net server poisoned");
-            if g.shutdown {
-                return Ok(()); // close without a reply: the client sees EOF
-            }
-            dispatch(&mut g, shared, slot, gen, msg)
-        };
-        // periodic snapshot: the disk I/O happens with the master unlocked
-        if let Some((path, snap)) = pending {
-            write_pending_checkpoint(shared, &path, &snap);
+        if sync::lock(&shared.conns).shutdown {
+            return Ok(()); // close without a reply: the client sees EOF
         }
+        let (reply, shutdown_after) = dispatch(shared, slot, gen, msg, &ranges, &mut group);
         wire::write_frame(writer, &reply)?;
         if shutdown_after {
             return Ok(());
@@ -379,44 +497,76 @@ fn serve_requests(
     }
 }
 
-/// Handle one request under the master lock.  Returns the reply, whether
-/// the connection should close after sending it (Shutdown), and a
-/// periodic snapshot the caller must write after releasing the lock.
+/// Validate a worker-slot request against the slot's current generation
+/// and liveness.  O(1) under the conns mutex; the master operation that
+/// follows runs without it.  This is race-free because only the
+/// connection owning the current generation — the caller itself — can
+/// retire or reuse the slot.
+fn slot_ok(shared: &Shared, w: usize, gen: u32, push_gen: Option<u32>) -> bool {
+    let c = sync::lock(&shared.conns);
+    c.slot_gen[w] == gen
+        && push_gen.map(|g| g == c.slot_gen[w]).unwrap_or(true)
+        && shared.master.is_live(w)
+}
+
+/// Handle one request.  Returns the reply and whether the connection
+/// should close after sending it (Shutdown).
 fn dispatch(
-    g: &mut Inner,
     shared: &Shared,
     slot: Option<usize>,
     gen: u32,
     msg: Msg,
-) -> (Msg, bool, Option<(std::path::PathBuf, MasterSnapshot)>) {
+    ranges: &[Range<usize>],
+    group: &mut PushGroup,
+) -> (Msg, bool) {
     let recoverable = |detail: String| Msg::Error { recoverable: true, detail };
     let fatal = |detail: &str| Msg::Error { recoverable: false, detail: detail.to_string() };
-    let mut pending = None;
+    // ANY non-slice frame interleaved into an open sliced push is a
+    // client bug; fail it closed and drop the half-built group (a
+    // misbehaving client must not be able to complete it afterwards).
+    if group.open() && slot.is_some() && !matches!(msg, Msg::PushShard { .. }) {
+        group.reset();
+        return (fatal("request interleaved into an incomplete sharded push"), false);
+    }
     let reply = match (msg, slot) {
         (Msg::PullParams, Some(w)) => {
-            if g.slot_gen[w] != gen || !g.master.is_live(w) {
+            if !slot_ok(shared, w, gen, None) {
                 recoverable(format!("pull for retired worker slot {w}"))
             } else {
-                let params = g.master.pull_params(w);
-                Msg::Params { header: g.header(), params }
+                match shared.master.pull(w) {
+                    Ok(params) => Msg::Params { header: shared.header(), params },
+                    Err(e) => recoverable(format!("{e:#}")),
+                }
+            }
+        }
+        (Msg::PullShard { shard }, Some(w)) => {
+            if shard as usize >= ranges.len() {
+                fatal(&format!("pull for shard {shard} of {}", ranges.len()))
+            } else if !slot_ok(shared, w, gen, None) {
+                recoverable(format!("pull for retired worker slot {w}"))
+            } else {
+                match shared.master.pull_shard(w, shard as usize) {
+                    Ok(params) => Msg::ShardParams { header: shared.header(), shard, params },
+                    Err(e) => recoverable(format!("{e:#}")),
+                }
             }
         }
         (Msg::Push { gen: push_gen, msg }, Some(w)) => {
-            if push_gen != g.slot_gen[w] || g.slot_gen[w] != gen || !g.master.is_live(w) {
+            if !slot_ok(shared, w, gen, Some(push_gen)) {
                 // a straggler from a previous incarnation of the slot
                 recoverable(format!("stale push for worker slot {w}"))
-            } else if msg.len() != g.master.param_len() {
+            } else if msg.len() != shared.master.param_len() {
                 fatal(&format!(
                     "push length {} != parameter count {}",
                     msg.len(),
-                    g.master.param_len()
+                    shared.master.param_len()
                 ))
             } else {
-                match g.master.push_update(w, &msg) {
+                match shared.master.push(w, &msg) {
                     Ok(s) => {
-                        pending = g.pending_checkpoint();
+                        shared.maybe_periodic_checkpoint();
                         Msg::PushAck {
-                            header: g.header(),
+                            header: shared.header(),
                             eta: s.eta,
                             gamma: s.gamma,
                             lambda: s.lambda,
@@ -426,45 +576,85 @@ fn dispatch(
                 }
             }
         }
+        (Msg::PushShard { gen: push_gen, shard, msg }, Some(w)) => {
+            if shard as usize >= ranges.len() {
+                group.reset();
+                fatal(&format!("push for shard {shard} of {}", ranges.len()))
+            } else if !slot_ok(shared, w, gen, Some(push_gen)) {
+                group.reset();
+                recoverable(format!("stale push for worker slot {w}"))
+            } else {
+                match group.add(shard as usize, ranges[shard as usize].clone(), &msg) {
+                    Err(e) => {
+                        group.reset();
+                        fatal(&format!("{e:#}"))
+                    }
+                    Ok(false) => Msg::Ack { header: shared.header() },
+                    Ok(true) => {
+                        // reset clears only the slice bookkeeping; the
+                        // assembled buffer is applied below
+                        group.reset();
+                        match shared.master.push(w, &group.buf) {
+                            Ok(s) => {
+                                shared.maybe_periodic_checkpoint();
+                                Msg::PushAck {
+                                    header: shared.header(),
+                                    eta: s.eta,
+                                    gamma: s.gamma,
+                                    lambda: s.lambda,
+                                }
+                            }
+                            Err(e) => recoverable(format!("{e:#}")),
+                        }
+                    }
+                }
+            }
+        }
         (Msg::Leave { policy }, Some(w)) => {
-            if g.slot_gen[w] != gen || !g.attached[w] || !g.master.is_live(w) {
+            let mut c = sync::lock(&shared.conns);
+            if c.slot_gen[w] != gen || !c.attached[w] || !shared.master.is_live(w) {
                 recoverable(format!("leave for already-retired slot {w}"))
             } else {
-                g.attached[w] = false;
-                match g.master.remove_worker(w, policy) {
-                    Ok(()) => Msg::Ack { header: g.header() },
+                c.attached[w] = false;
+                match shared.master.leave(w, policy) {
+                    Ok(()) => Msg::Ack { header: shared.header() },
                     Err(e) => recoverable(format!("{e:#}")),
                 }
             }
         }
-        (Msg::Status, _) => Msg::Ack { header: g.header() },
-        (Msg::GetTheta, _) => Msg::Theta { header: g.header(), theta: g.master.theta_vec() },
-        (Msg::Checkpoint, None) => match g.write_checkpoint(shared) {
-            Ok(()) => Msg::Ack { header: g.header() },
+        (Msg::Status, _) => Msg::Ack { header: shared.header() },
+        (Msg::GetTheta, _) => {
+            Msg::Theta { header: shared.header(), theta: shared.master.theta() }
+        }
+        (Msg::Checkpoint, None) => match shared.write_checkpoint() {
+            Ok(_) => Msg::Ack { header: shared.header() },
             Err(e) => fatal(&format!("{e:#}")),
         },
         (Msg::Shutdown, None) => {
-            // graceful: snapshot first (best effort), then stop the world
-            if g.opts.checkpoint_path.is_some() {
-                if let Err(e) = g.write_checkpoint(shared) {
-                    eprintln!("net: shutdown checkpoint failed: {e:#}");
-                }
+            // freeze membership/state first, then snapshot the final
+            // world (best effort, draining in-flight acknowledged
+            // pushes), then wake the accept loop
+            sync::lock(&shared.conns).shutdown = true;
+            if shared.opts.checkpoint_path.is_some() {
+                shared.write_final_checkpoint();
             }
-            g.shutdown = true;
-            wake(g.addr);
-            return (Msg::Ack { header: g.header() }, true, None);
+            wake(shared.addr);
+            return (Msg::Ack { header: shared.header() }, true);
         }
         (Msg::Checkpoint | Msg::Shutdown, Some(_)) => {
             fatal("control-only request on a worker connection")
         }
-        (Msg::PullParams | Msg::Push { .. } | Msg::Leave { .. }, None) => {
-            fatal("worker request on a control connection")
-        }
+        (
+            Msg::PullParams | Msg::Push { .. } | Msg::PullShard { .. } | Msg::PushShard { .. }
+            | Msg::Leave { .. },
+            None,
+        ) => fatal("worker request on a control connection"),
         (Msg::Hello { .. }, _) => fatal("duplicate Hello"),
         // server->client messages arriving at the server are protocol abuse
         (
             Msg::HelloAck { .. }
             | Msg::Params { .. }
+            | Msg::ShardParams { .. }
             | Msg::PushAck { .. }
             | Msg::Ack { .. }
             | Msg::Theta { .. }
@@ -472,7 +662,7 @@ fn dispatch(
             _,
         ) => fatal("unexpected reply-type message"),
     };
-    (reply, false, pending)
+    (reply, false)
 }
 
 /// Wake any listener blocked in accept after an in-band Shutdown: the

@@ -16,7 +16,19 @@
 //! version, unknown tag, oversized length prefix, an inner count that
 //! exceeds the remaining bytes, or trailing bytes after the payload all
 //! produce an error (never a panic, never a partial message).  The peer
-//! that sent the bad frame is disconnected by the caller.
+//! that sent the bad frame is disconnected by the caller.  Encoding is
+//! fail-closed *symmetrically*: [`write_frame`] computes the exact body
+//! length up front ([`Msg::body_len`]) and refuses a frame over
+//! [`MAX_FRAME`] before serializing a byte — the length prefix can never
+//! silently truncate into something the decoder then misparses.
+//!
+//! Version 2 adds shard-sliced transfers for the lock-striped server:
+//! [`Msg::HelloAck`] carries the server's shard count, [`Msg::PullShard`]
+//! fetches one shard's parameter slice ([`Msg::ShardParams`] reply), and
+//! [`Msg::PushShard`] delivers one shard's slice of an update — the
+//! server assembles a worker's slices and applies them as a single master
+//! step when the last one lands (gather-then-apply, so a worker dying
+//! mid-group leaves no partial update).
 //!
 //! Algorithm kinds and leave policies travel as their canonical names (the
 //! same strings the CLI parses), so the protocol does not depend on enum
@@ -27,8 +39,9 @@ use std::io::{Read, Write};
 
 /// Frame magic — rejects non-DANA peers and stream desync immediately.
 pub const MAGIC: [u8; 4] = *b"DANA";
-/// Protocol version; bumped on any incompatible change.
-pub const VERSION: u8 = 1;
+/// Protocol version; bumped on any incompatible change (2: shard-sliced
+/// PullShard/PushShard/ShardParams frames + shard count in HelloAck).
+pub const VERSION: u8 = 2;
 /// Upper bound on one frame body (1 GiB ≈ 256M f32 parameters).
 pub const MAX_FRAME: u32 = 1 << 30;
 
@@ -86,6 +99,18 @@ pub enum Msg {
     /// Worker: leave the cluster deliberately, with an explicit policy
     /// (EOF without Leave uses the server's configured default).
     Leave { policy: LeavePolicy },
+    /// Worker: pull one shard's parameter slice (shard indices are
+    /// `0..HelloAck::shards`; ranges follow
+    /// [`crate::server::shard_bounds`]).  A worker's sliced pulls count
+    /// as one full pull once every shard has been fetched.
+    PullShard { shard: u32 },
+    /// Worker: one shard's slice of an update.  Slices of one logical
+    /// push may arrive in any order, each shard at most once; the server
+    /// buffers them per connection and applies the assembled update as a
+    /// single master step when the last slice lands (that slice is
+    /// answered with [`Msg::PushAck`], earlier ones with [`Msg::Ack`]).
+    /// `gen` echoes the slot generation exactly like [`Msg::Push`].
+    PushShard { gen: u32, shard: u32, msg: Vec<f32> },
     /// Control: force a checkpoint write now.
     Checkpoint,
     /// Control: refresh the header.
@@ -97,9 +122,13 @@ pub enum Msg {
 
     /// Reply to [`Msg::Hello`].  For workers, `slot`/`gen` identify the
     /// claimed worker slot; control connections get `slot == u64::MAX`.
-    HelloAck { slot: u64, gen: u32, kind: AlgorithmKind, k: u64, header: Header },
+    /// `shards` is the server's slice granularity for
+    /// [`Msg::PullShard`]/[`Msg::PushShard`] (1 = unsliced serving).
+    HelloAck { slot: u64, gen: u32, kind: AlgorithmKind, k: u64, shards: u32, header: Header },
     /// Reply to [`Msg::PullParams`].
     Params { header: Header, params: Vec<f32> },
+    /// Reply to [`Msg::PullShard`].
+    ShardParams { header: Header, shard: u32, params: Vec<f32> },
     /// Reply to [`Msg::Push`]: the [`Step`] that was applied.
     PushAck { header: Header, eta: f32, gamma: f32, lambda: f32 },
     /// Generic success reply (Leave/Checkpoint/Shutdown/Status).
@@ -158,16 +187,45 @@ impl Msg {
             Msg::Status => 6,
             Msg::GetTheta => 7,
             Msg::Shutdown => 8,
+            Msg::PullShard { .. } => 9,
+            Msg::PushShard { .. } => 10,
             Msg::HelloAck { .. } => 16,
             Msg::Params { .. } => 17,
             Msg::PushAck { .. } => 18,
             Msg::Ack { .. } => 19,
             Msg::Theta { .. } => 20,
             Msg::Error { .. } => 21,
+            Msg::ShardParams { .. } => 22,
         }
     }
 
-    /// Serialize into one frame (length prefix included).
+    /// Exact encoded body length (magic + version + tag + payload, without
+    /// the length prefix), computed arithmetically — [`write_frame`] uses
+    /// it to reject an oversized frame *before* serializing anything.
+    pub fn body_len(&self) -> usize {
+        const HDR: usize = 8 + 4 + 4 + 4 + 8 + 8; // Header
+        let payload = match self {
+            Msg::Hello { .. } => 2,
+            Msg::PullParams | Msg::Checkpoint | Msg::Status | Msg::GetTheta | Msg::Shutdown => 0,
+            Msg::Push { msg, .. } => 4 + 8 + 4 * msg.len(),
+            Msg::Leave { policy } => 4 + policy.name().len(),
+            Msg::PullShard { .. } => 4,
+            Msg::PushShard { msg, .. } => 4 + 4 + 8 + 4 * msg.len(),
+            Msg::HelloAck { kind, .. } => 8 + 4 + (4 + kind.name().len()) + 8 + 4 + HDR,
+            Msg::Params { params, .. } => HDR + 8 + 4 * params.len(),
+            Msg::ShardParams { params, .. } => HDR + 4 + 8 + 4 * params.len(),
+            Msg::PushAck { .. } => HDR + 12,
+            Msg::Ack { .. } => HDR,
+            Msg::Theta { theta, .. } => HDR + 8 + 4 * theta.len(),
+            Msg::Error { detail, .. } => 1 + 4 + detail.len(),
+        };
+        4 + 1 + 1 + payload // magic + version + tag
+    }
+
+    /// Serialize into one frame (length prefix included).  Callers that
+    /// reach a wire go through [`write_frame`], which enforces
+    /// [`MAX_FRAME`]; this method itself asserts only internal
+    /// consistency with [`Self::body_len`].
     pub fn encode(&self) -> Vec<u8> {
         let mut body = Vec::with_capacity(64);
         body.extend_from_slice(&MAGIC);
@@ -187,15 +245,27 @@ impl Msg {
                 put_vec_f32(&mut body, msg);
             }
             Msg::Leave { policy } => put_str(&mut body, policy.name()),
-            Msg::HelloAck { slot, gen, kind, k, header } => {
+            Msg::PullShard { shard } => put_u32(&mut body, *shard),
+            Msg::PushShard { gen, shard, msg } => {
+                put_u32(&mut body, *gen);
+                put_u32(&mut body, *shard);
+                put_vec_f32(&mut body, msg);
+            }
+            Msg::HelloAck { slot, gen, kind, k, shards, header } => {
                 put_u64(&mut body, *slot);
                 put_u32(&mut body, *gen);
                 put_str(&mut body, kind.name());
                 put_u64(&mut body, *k);
+                put_u32(&mut body, *shards);
                 put_header(&mut body, header);
             }
             Msg::Params { header, params } => {
                 put_header(&mut body, header);
+                put_vec_f32(&mut body, params);
+            }
+            Msg::ShardParams { header, shard, params } => {
+                put_header(&mut body, header);
+                put_u32(&mut body, *shard);
                 put_vec_f32(&mut body, params);
             }
             Msg::PushAck { header, eta, gamma, lambda } => {
@@ -214,6 +284,7 @@ impl Msg {
                 put_str(&mut body, detail);
             }
         }
+        debug_assert_eq!(body.len(), self.body_len(), "body_len out of sync with encode");
         let mut frame = Vec::with_capacity(4 + body.len());
         put_u32(&mut frame, body.len() as u32);
         frame.extend_from_slice(&body);
@@ -248,14 +319,22 @@ impl Msg {
             6 => Msg::Status,
             7 => Msg::GetTheta,
             8 => Msg::Shutdown,
+            9 => Msg::PullShard { shard: d.u32()? },
+            10 => Msg::PushShard { gen: d.u32()?, shard: d.u32()?, msg: d.vec_f32()? },
             16 => Msg::HelloAck {
                 slot: d.u64()?,
                 gen: d.u32()?,
                 kind: d.str()?.parse()?,
                 k: d.u64()?,
+                shards: d.u32()?,
                 header: d.header()?,
             },
             17 => Msg::Params { header: d.header()?, params: d.vec_f32()? },
+            22 => Msg::ShardParams {
+                header: d.header()?,
+                shard: d.u32()?,
+                params: d.vec_f32()?,
+            },
             18 => Msg::PushAck {
                 header: d.header()?,
                 eta: d.f32()?,
@@ -272,8 +351,18 @@ impl Msg {
     }
 }
 
-/// Write one message as a frame and flush.
+/// Write one message as a frame and flush.  Fail-closed symmetrically
+/// with [`read_frame`]: a body over [`MAX_FRAME`] is refused *before*
+/// serialization — without this, the `u32` length prefix would silently
+/// truncate and the peer's fail-closed decoder would tear the stream.
 pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> std::io::Result<()> {
+    let n = msg.body_len();
+    if n > MAX_FRAME as usize {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("refusing to encode a {n}-byte frame body (cap {MAX_FRAME})"),
+        ));
+    }
     w.write_all(&msg.encode())?;
     w.flush()
 }

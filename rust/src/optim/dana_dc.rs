@@ -80,7 +80,7 @@ impl Algorithm for DanaDc {
         );
     }
 
-    fn master_send(&mut self, _worker: usize, out: &mut [f32], s: Step) {
+    fn master_send(&self, _worker: usize, out: &mut [f32], s: Step) {
         math::lookahead(out, &self.theta, &self.vsum, s.gamma, s.eta);
     }
 

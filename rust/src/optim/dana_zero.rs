@@ -91,7 +91,7 @@ impl Algorithm for DanaZero {
         );
     }
 
-    fn master_send(&mut self, _worker: usize, out: &mut [f32], s: Step) {
+    fn master_send(&self, _worker: usize, out: &mut [f32], s: Step) {
         math::lookahead(out, &self.theta, &self.vsum, s.gamma, s.eta);
     }
 

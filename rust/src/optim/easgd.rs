@@ -108,7 +108,7 @@ impl Algorithm for Easgd {
     }
 
     /// The worker receives its own replica (it trains xᶦ, not x̃).
-    fn master_send(&mut self, worker: usize, out: &mut [f32], _s: Step) {
+    fn master_send(&self, worker: usize, out: &mut [f32], _s: Step) {
         out.copy_from_slice(&self.x[worker]);
     }
 

@@ -68,7 +68,7 @@ impl Algorithm for Lwp {
         math::momentum_step(&mut self.theta, &mut self.v, msg, s.gamma, s.eta);
     }
 
-    fn master_send(&mut self, _worker: usize, out: &mut [f32], s: Step) {
+    fn master_send(&self, _worker: usize, out: &mut [f32], s: Step) {
         // theta_hat = theta - tau*eta*v
         let c = self.tau * s.eta;
         for ((o, &t), &v) in out.iter_mut().zip(&self.theta).zip(&self.v) {

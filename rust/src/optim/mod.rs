@@ -344,7 +344,12 @@ pub trait Algorithm: Send + Sync {
 
     /// Master: write the parameters to send to `worker` into `out`.
     /// Default: the current master parameters (plain ASGD behaviour).
-    fn master_send(&mut self, worker: usize, out: &mut [f32], s: Step) {
+    ///
+    /// Takes `&self`: every send is a pure read of master state (θ, v⁰,
+    /// replicas), which is what lets the striped server serve pulls under
+    /// per-shard *read* locks, concurrently with each other and with other
+    /// shards' applies.
+    fn master_send(&self, worker: usize, out: &mut [f32], s: Step) {
         let _ = worker;
         let _ = s;
         out.copy_from_slice(self.theta());

@@ -1,5 +1,8 @@
 //! Gap / lag / gradient-norm instrumentation (paper Section 3, Fig 2 & 11).
 
+use crate::util::sync;
+use std::sync::Mutex;
+
 /// One sampled master-apply event.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MetricRow {
@@ -17,10 +20,17 @@ pub struct MetricRow {
 }
 
 /// Sampling recorder: keeps every `every`-th master step (0 = disabled).
+///
+/// Recording is `&self` (rows behind a mutex) so the striped server's
+/// concurrent pushes can record without holding any master-state lock;
+/// configuration (`set_every`) stays `&mut self` — it happens before the
+/// server is shared.  Under concurrent pushes rows land in completion
+/// order; serial drivers (the equivalence suites) observe step order
+/// exactly as before.
 #[derive(Debug, Default)]
 pub struct MetricsRecorder {
     every: u64,
-    rows: Vec<MetricRow>,
+    rows: Mutex<Vec<MetricRow>>,
 }
 
 impl MetricsRecorder {
@@ -32,32 +42,36 @@ impl MetricsRecorder {
         self.every > 0 && step % self.every == 0
     }
 
-    pub fn record(&mut self, row: MetricRow) {
-        self.rows.push(row);
+    pub fn record(&self, row: MetricRow) {
+        sync::lock(&self.rows).push(row);
     }
 
-    pub fn rows(&self) -> &[MetricRow] {
-        &self.rows
+    /// Snapshot of the recorded rows (sampled sparsely; the copy is cheap
+    /// next to the O(k) traffic it measures).
+    pub fn rows(&self) -> Vec<MetricRow> {
+        sync::lock(&self.rows).clone()
     }
 
     pub fn take_rows(&mut self) -> Vec<MetricRow> {
-        std::mem::take(&mut self.rows)
+        std::mem::take(&mut *sync::lock(&self.rows))
     }
 
     /// Mean gap over all recorded rows (Fig 2b summary statistic).
     pub fn mean_gap(&self) -> f64 {
-        if self.rows.is_empty() {
+        let rows = sync::lock(&self.rows);
+        if rows.is_empty() {
             return 0.0;
         }
-        self.rows.iter().map(|r| r.gap).sum::<f64>() / self.rows.len() as f64
+        rows.iter().map(|r| r.gap).sum::<f64>() / rows.len() as f64
     }
 
     /// Mean lag over all recorded rows.
     pub fn mean_lag(&self) -> f64 {
-        if self.rows.is_empty() {
+        let rows = sync::lock(&self.rows);
+        if rows.is_empty() {
             return 0.0;
         }
-        self.rows.iter().map(|r| r.lag as f64).sum::<f64>() / self.rows.len() as f64
+        rows.iter().map(|r| r.lag as f64).sum::<f64>() / rows.len() as f64
     }
 }
 
@@ -90,5 +104,24 @@ mod tests {
         m.record(row(1, 3.0, 4));
         assert_eq!(m.mean_gap(), 2.0);
         assert_eq!(m.mean_lag(), 3.0);
+    }
+
+    #[test]
+    fn concurrent_recording_keeps_every_row() {
+        let mut m = MetricsRecorder::default();
+        m.set_every(1);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 0..50 {
+                        m.record(row(t * 100 + i, 0.0, 0));
+                    }
+                });
+            }
+        });
+        assert_eq!(m.rows().len(), 200);
+        assert_eq!(m.take_rows().len(), 200);
+        assert!(m.rows().is_empty());
     }
 }

@@ -18,8 +18,11 @@ use crate::optim::{
     claim_slot, make_algorithm, Algorithm, AlgorithmKind, LeavePolicy, LrSchedule, StateDict,
     Step, WorkerState, ANY_SLOT,
 };
+use crate::util::sync;
 use metrics::{MetricRow, MetricsRecorder};
 pub use sharded::{shard_bounds, ShardedParameterServer};
+use std::ops::Range;
+use std::sync::Mutex;
 
 /// A complete, restorable image of a master's training state: θ, the
 /// algorithm's auxiliary state ([`StateDict`]), slot liveness, the per-slot
@@ -143,6 +146,249 @@ pub trait Master: Send {
     /// algorithm kind and parameter count.  Grows/retires slots to match
     /// the snapshot, then overwrites θ, algorithm state and bookkeeping.
     fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()>;
+}
+
+/// The `&self` interface a transport server drives a master through, from
+/// many connection threads at once.  Two implementations:
+///
+/// * [`LockedMaster`] — any [`Master`] behind one process-wide mutex: the
+///   PR 3 serving path, kept as the simple/reference backend (strict FIFO
+///   falls out of lock-acquisition order);
+/// * [`ShardedParameterServer`] — natively concurrent: per-shard locks,
+///   ticket-ordered applies, membership under an epoch lock.  Any thread
+///   interleaving is bit-for-bit equivalent to the FIFO of its ticket
+///   order, which `rust/tests/striped.rs` pins against the locked path.
+///
+/// Setup-time methods (`restore`, `set_metrics_every`) take `&mut self`:
+/// they run before the server is shared with connection threads.
+pub trait ServingMaster: Send + Sync {
+    fn algo_kind(&self) -> AlgorithmKind;
+    fn param_len(&self) -> usize;
+    /// Shards the serving layer may slice pulls/pushes by (1 = unsliced).
+    fn shard_count(&self) -> usize;
+    /// The contiguous coordinate range of each shard, in order.
+    fn shard_ranges(&self) -> Vec<Range<usize>>;
+    fn steps_done(&self) -> u64;
+    /// One consistent `(master_step, schedule point, live workers, worker
+    /// slots)` read — reply headers are built from this.
+    fn status(&self) -> (u64, Step, usize, usize);
+    fn is_live(&self, worker: usize) -> bool;
+    /// A worker joins (see [`Master::add_worker`]).
+    fn join(&self) -> usize;
+    /// A worker leaves (see [`Master::remove_worker`]).
+    fn leave(&self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()>;
+    /// Full-length pull.  Errors (rather than panicking) for a retired
+    /// slot — over the wire that is a racy-but-recoverable condition.
+    fn pull(&self, worker: usize) -> anyhow::Result<Vec<f32>>;
+    /// One shard's slice of a pull (wire `PullShard`).
+    fn pull_shard(&self, worker: usize, shard: usize) -> anyhow::Result<Vec<f32>>;
+    fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<Step>;
+    fn theta(&self) -> Vec<f32>;
+    fn snapshot(&self) -> anyhow::Result<MasterSnapshot>;
+    fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()>;
+    fn set_metrics_every(&mut self, every: u64);
+}
+
+/// Any [`Master`] behind one mutex — the global-lock serving backend.
+/// Every request serializes on the lock; the master's own sharded apply
+/// fan-out (if it is a [`ShardedParameterServer`]) still runs inside it.
+pub struct LockedMaster {
+    inner: Mutex<Box<dyn Master>>,
+    /// Shard count for slice-framed requests (the inner master's S, or 1).
+    shards: usize,
+}
+
+impl LockedMaster {
+    pub fn new(inner: Box<dyn Master>) -> Self {
+        LockedMaster { inner: Mutex::new(inner), shards: 1 }
+    }
+
+    /// Like [`Self::new`], declaring the inner master's shard count so
+    /// slice-framed clients can address it (the lock still serializes).
+    pub fn with_shards(inner: Box<dyn Master>, shards: usize) -> Self {
+        LockedMaster { inner: Mutex::new(inner), shards: shards.max(1) }
+    }
+}
+
+impl ServingMaster for LockedMaster {
+    fn algo_kind(&self) -> AlgorithmKind {
+        sync::lock(&self.inner).algo_kind()
+    }
+
+    fn param_len(&self) -> usize {
+        sync::lock(&self.inner).param_len()
+    }
+
+    fn shard_count(&self) -> usize {
+        // shard_bounds clamps to k; advertise what shard_ranges() really
+        // has so HelloAck can never name a shard that does not exist
+        self.shard_ranges().len()
+    }
+
+    fn shard_ranges(&self) -> Vec<Range<usize>> {
+        shard_bounds(self.param_len(), self.shards)
+    }
+
+    fn steps_done(&self) -> u64 {
+        sync::lock(&self.inner).steps_done()
+    }
+
+    fn status(&self) -> (u64, Step, usize, usize) {
+        let m = sync::lock(&self.inner);
+        (m.steps_done(), m.step_now(), m.live_workers(), m.workers())
+    }
+
+    fn is_live(&self, worker: usize) -> bool {
+        sync::lock(&self.inner).is_live(worker)
+    }
+
+    fn join(&self) -> usize {
+        sync::lock(&self.inner).add_worker()
+    }
+
+    fn leave(&self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
+        sync::lock(&self.inner).remove_worker(worker, policy)
+    }
+
+    fn pull(&self, worker: usize) -> anyhow::Result<Vec<f32>> {
+        let mut m = sync::lock(&self.inner);
+        // the in-process pull contract panics for a retired slot; convert
+        // to the serving contract (recoverable error) before delegating
+        anyhow::ensure!(m.is_live(worker), "pull for retired/unknown worker {worker}");
+        Ok(m.pull_params(worker))
+    }
+
+    /// Reference-backend limitation: the [`Master`] trait has no sliced
+    /// pull, so each slice is cut from a *full* pull — O(S·k) for a full
+    /// sliced group, and the inner master's `has_pulled`/`pulled_at` are
+    /// set per slice rather than at group completion.  For clients that
+    /// fetch complete groups (every shipped client does) the assembled
+    /// result and all subsequent state are identical to the striped
+    /// backend's; only the push-before-*complete*-pull guard is laxer
+    /// here.  The striped backend is the production path for sliced
+    /// traffic.
+    fn pull_shard(&self, worker: usize, shard: usize) -> anyhow::Result<Vec<f32>> {
+        let mut m = sync::lock(&self.inner);
+        anyhow::ensure!(m.is_live(worker), "pull for retired/unknown worker {worker}");
+        let full = m.pull_params(worker);
+        let ranges = shard_bounds(full.len(), self.shards);
+        let r = ranges
+            .get(shard)
+            .ok_or_else(|| anyhow::anyhow!("pull for shard {shard} of {}", ranges.len()))?
+            .clone();
+        Ok(full[r].to_vec())
+    }
+
+    fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        sync::lock(&self.inner).push_update(worker, msg)
+    }
+
+    fn theta(&self) -> Vec<f32> {
+        sync::lock(&self.inner).theta_vec()
+    }
+
+    fn snapshot(&self) -> anyhow::Result<MasterSnapshot> {
+        sync::lock(&self.inner).snapshot()
+    }
+
+    fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()> {
+        sync::lock(&self.inner).restore(snap)
+    }
+
+    fn set_metrics_every(&mut self, every: u64) {
+        sync::lock(&self.inner).metrics_mut().set_every(every);
+    }
+}
+
+impl ServingMaster for ShardedParameterServer {
+    fn algo_kind(&self) -> AlgorithmKind {
+        self.kind()
+    }
+
+    fn param_len(&self) -> usize {
+        self.param_count()
+    }
+
+    fn shard_count(&self) -> usize {
+        self.n_shards()
+    }
+
+    fn shard_ranges(&self) -> Vec<Range<usize>> {
+        ShardedParameterServer::shard_ranges(self)
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.master_step()
+    }
+
+    fn status(&self) -> (u64, Step, usize, usize) {
+        self.status_concurrent()
+    }
+
+    fn is_live(&self, worker: usize) -> bool {
+        self.worker_is_live(worker)
+    }
+
+    fn join(&self) -> usize {
+        self.add_worker_concurrent()
+    }
+
+    fn leave(&self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
+        self.remove_worker_concurrent(worker, policy)
+    }
+
+    fn pull(&self, worker: usize) -> anyhow::Result<Vec<f32>> {
+        self.pull_concurrent(worker)
+    }
+
+    fn pull_shard(&self, worker: usize, shard: usize) -> anyhow::Result<Vec<f32>> {
+        self.pull_shard_concurrent(worker, shard)
+    }
+
+    fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        self.push_concurrent(worker, msg)
+    }
+
+    fn theta(&self) -> Vec<f32> {
+        self.theta_vec()
+    }
+
+    fn snapshot(&self) -> anyhow::Result<MasterSnapshot> {
+        self.snapshot_concurrent()
+    }
+
+    fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()> {
+        self.restore_concurrent(snap)
+    }
+
+    fn set_metrics_every(&mut self, every: u64) {
+        self.metrics.set_every(every);
+    }
+}
+
+/// Build the master a transport server hosts: lock-striped (shards are
+/// the unit of concurrency wire-to-apply) when `striped`, else the
+/// global-lock backend over [`make_master`]'s layout choice.
+pub fn make_serving_master(
+    kind: AlgorithmKind,
+    theta0: &[f32],
+    schedule: LrSchedule,
+    n_workers: usize,
+    n_shards: usize,
+    threads: usize,
+    striped: bool,
+) -> Box<dyn ServingMaster> {
+    if striped {
+        Box::new(
+            ShardedParameterServer::new(kind, theta0, schedule, n_workers, n_shards)
+                .with_threads(threads),
+        )
+    } else {
+        Box::new(LockedMaster::with_shards(
+            make_master(kind, theta0, schedule, n_workers, n_shards, threads),
+            n_shards.max(1),
+        ))
+    }
 }
 
 /// Build a master: monolithic for `n_shards <= 1`, sharded otherwise with

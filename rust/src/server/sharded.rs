@@ -1,35 +1,52 @@
 //! Sharded, lock-striped parameter server — the master's O(k) hot path
-//! split across S contiguous shards and applied in parallel.
+//! split across S contiguous shards, applied in parallel, and (since
+//! ISSUE 4) **concurrently callable**: shards are the unit of locking all
+//! the way down to [`Algorithm`] applies, so many serving threads can
+//! drive one server at once without a global lock.
 //!
 //! The paper's scaling argument (§4.1, Appendix C.1) is that the master
 //! must stay O(k) per update or it becomes the bottleneck before the
-//! workers do; on a multicore host the next constant-factor lever is
-//! memory parallelism, so this server splits θ and *all* per-worker
-//! auxiliary state — momentum vectors vᶦ, the incremental v⁰, the
-//! retained `sent` copies DC-ASGD needs — into S contiguous shards, each
-//! owned by an independent [`Algorithm`] instance over its coordinate
-//! range.  `push`/`pull` fan the shards out over scoped threads; there is
-//! no shared mutable state between shards, so no locks are taken on the
-//! apply path (lock-striping degenerates to pure ownership).
+//! workers do.  PR 1 bought memory parallelism (shards fanned over scoped
+//! threads, still one `&mut self` caller); serving over TCP then put one
+//! process-wide mutex in front of it, which serialized everything again.
+//! This version removes that mutex: all state is striped or sequenced —
 //!
-//! **Equivalence contract.**  Every update rule in `optim/` is elementwise
-//! over its state vectors, so a shard restricted to coordinates `[a, b)`
-//! performs bit-for-bit the operations the monolithic server performs on
-//! those coordinates — except for whole-vector *reductions*.  Two appear
-//! in the system:
+//! * **per-shard state** (θ, vᶦ, v⁰ slices, the shard's [`Algorithm`]):
+//!   one `RwLock` per shard.  Pulls take *read* locks ([`Algorithm::
+//!   master_send`] is a pure read), applies take the write lock of one
+//!   shard at a time — a pull never queues behind a push except on the
+//!   single shard currently being written, and two pushes write different
+//!   shards concurrently;
+//! * **sequencer** (`master_step`, schedule point, momentum-correction
+//!   trigger, `pulled_at`/`has_pulled`, liveness): one small mutex held
+//!   for O(1) work.  Every push takes a **ticket** (its master step) here;
+//!   per-shard *gates* (`Mutex<u64>` + condvar) then admit applies to each
+//!   shard in strict ticket order.  Any interleaving of serving threads
+//!   therefore produces exactly the FIFO trajectory of the ticket order —
+//!   bit-for-bit the monolithic/global-lock behaviour for that order;
+//! * **per-worker `sent` copies** (gap accounting + DC-ASGD): full-length
+//!   vectors, one mutex per worker slot.  A worker's own requests are
+//!   serial, so this lock is effectively uncontended;
+//! * **membership epoch lock**: an outer `RwLock<()>`.  Pulls/pushes hold
+//!   it for read; join/leave/restore/snapshot take it for write, so a
+//!   membership change fans across *all* shards atomically while the data
+//!   path pays one uncontended read-lock acquisition.
 //!
-//! * gap/lag metrics: ‖θ−θ_sent‖ and ‖msg‖ are reduced across shards as
-//!   partial sums of squares ([`crate::math::sub_norm_sq`]);
-//! * YellowFin's tuner: handled by the two-phase apply protocol on the
-//!   trait ([`Algorithm::apply_stats`] → merge →
-//!   [`Algorithm::master_apply_with`]), which feeds every shard the same
-//!   globally reduced statistics so all shard-local scalar tuner states
-//!   evolve in lockstep with the monolithic instance.
-//!
-//! The property suite in `rust/tests/properties.rs` pins this contract for
-//! all ten `AlgorithmKind`s × S ∈ {1, 2, 7, 16} to ≤1e-5 relative
-//! tolerance (f64 reassociation across shard boundaries is the only
-//! permitted divergence).
+//! **Equivalence contract.**  Unchanged from PR 1 and now concurrency-
+//! hardened: a shard restricted to `[a, b)` performs bit-for-bit the
+//! monolithic operations on those coordinates; whole-vector reductions
+//! (gap metrics, YellowFin's tuner via the two-phase
+//! [`Algorithm::apply_stats`] → merge → [`Algorithm::master_apply_with`]
+//! protocol) are reduced across shards in shard order.  YellowFin's
+//! global phase holds every shard's gate through both phases, so the
+//! stats any apply sees are exactly the monolithic ones.  Torn reads are
+//! possible only where asynchrony already permits them: a pull racing a
+//! push may observe some shards pre- and some post-apply — the same
+//! staleness the paper's gap measures — and never a torn single shard.
+//! `rust/tests/properties.rs` pins sharded≡monolithic for all ten
+//! `AlgorithmKind`s × S ∈ {1, 2, 7, 16}; `rust/tests/striped.rs` pins
+//! striped-serving ≡ global-lock-serving bit-for-bit and hammers the
+//! ticket protocol from many threads.
 
 use super::metrics::{MetricRow, MetricsRecorder};
 use super::{Master, MasterSnapshot};
@@ -38,7 +55,9 @@ use crate::optim::{
     claim_slot, make_algorithm, Algorithm, AlgorithmKind, ApplyStats, LeavePolicy, LrSchedule,
     StateDict, StateVec, Step, WorkerState, ANY_SLOT,
 };
+use crate::util::{parallel, sync};
 use std::ops::Range;
+use std::sync::{Condvar, Mutex, RwLock};
 
 /// Split `0..k` into `n_shards` contiguous near-equal ranges (lengths
 /// differ by at most one; shard count is clamped to `max(k, 1)` so no
@@ -58,35 +77,109 @@ pub fn shard_bounds(k: usize, n_shards: usize) -> Vec<Range<usize>> {
     out
 }
 
-/// One shard: an algorithm instance over a contiguous coordinate range
-/// plus the per-worker `sent` copies restricted to that range.
-struct Shard {
-    alg: Box<dyn Algorithm>,
-    /// Parameters most recently sent to each worker, this shard's slice.
-    sent: Vec<Vec<f32>>,
+/// One shard: an algorithm instance over a contiguous coordinate range,
+/// its own reader-writer lock, and the ticket gate that admits applies in
+/// master-step order.
+struct ShardCell {
     range: Range<usize>,
+    alg: RwLock<Box<dyn Algorithm>>,
+    /// The next master step this shard will admit for apply.
+    gate: Mutex<u64>,
+    gate_cv: Condvar,
 }
 
-/// Sharded drop-in for [`super::ParameterServer`]: same FIFO discipline,
-/// same schedule/momentum-correction/metrics semantics, state split into
-/// [`shard_bounds`] ranges and applied in parallel.
-pub struct ShardedParameterServer {
-    kind: AlgorithmKind,
-    shards: Vec<Shard>,
+impl ShardCell {
+    /// Block until this shard has applied every push before `ticket`.
+    fn wait_ticket(&self, ticket: u64) {
+        let mut g = sync::lock(&self.gate);
+        while *g < ticket {
+            g = sync::wait(&self.gate_cv, g);
+        }
+    }
+}
+
+/// RAII gate bump: releases the shard to the next ticket even if the
+/// apply panics, so one poisoned apply can wedge neither the gate chain
+/// nor the whole server (the shard's lock recovery is handled by
+/// [`crate::util::sync`]).
+struct TicketBump<'a> {
+    cell: &'a ShardCell,
+    next: u64,
+}
+
+impl Drop for TicketBump<'_> {
+    fn drop(&mut self) {
+        *sync::lock(&self.cell.gate) = self.next;
+        self.cell.gate_cv.notify_all();
+    }
+}
+
+/// Whole-push unwind repair: if a push panics after taking its ticket,
+/// shards it never reached would hold the gate chain at the dead ticket
+/// forever.  This guard runs after the per-shard bumps (a no-op on the
+/// normal path, where every gate already advanced) and releases any
+/// shard still below `next`.  It is declared outside the scoped-thread
+/// fan-out, and `std::thread::scope` joins all workers before unwinding,
+/// so no apply for this ticket can still be running when it fires.
+struct GateRepair<'a> {
+    shards: &'a [ShardCell],
+    next: u64,
+}
+
+impl Drop for GateRepair<'_> {
+    fn drop(&mut self) {
+        for sh in self.shards {
+            let mut g = sync::lock(&sh.gate);
+            if *g < self.next {
+                *g = self.next;
+                sh.gate_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// O(1) sequencing state, under one short mutex.
+struct Seq {
     schedule: LrSchedule,
+    master_step: u64,
+    last_eta: f32,
     /// Master step at which each worker last pulled.
     pulled_at: Vec<u64>,
     /// Whether each worker holds valid pulled parameters.
     has_pulled: Vec<bool>,
-    /// Slot liveness (elastic membership), mirrored by every shard.
+    /// Slot liveness (elastic membership), authoritative copy.
     live: Vec<bool>,
-    master_step: u64,
-    last_eta: f32,
-    momentum_correction: bool,
-    /// Scoped-thread fan-out width for push/pull (1 = serial).
-    threads: usize,
+    /// Per-worker mask of shards fetched since the last completed
+    /// shard-sliced pull group (wire `PullShard` frames); a group counts
+    /// as a full pull once every shard has been fetched.
+    shard_pulled: Vec<Vec<bool>>,
+}
+
+/// Sharded drop-in for [`super::ParameterServer`]: same FIFO discipline,
+/// same schedule/momentum-correction/metrics semantics, state split into
+/// [`shard_bounds`] ranges — and every data-path method also available as
+/// a `*_concurrent` `&self` variant safe to call from many threads (the
+/// [`Master`] impl and the inherent `&mut self` methods delegate to
+/// those, so single-threaded callers pay only uncontended lock traffic).
+pub struct ShardedParameterServer {
+    kind: AlgorithmKind,
     /// Total parameter count k.
     k: usize,
+    /// Scoped-thread fan-out width for a single push/pull (1 = serial;
+    /// concurrent callers usually provide the parallelism themselves).
+    threads: usize,
+    momentum_correction: bool,
+    /// Cached `needs_apply_stats` of the algorithm (true only for rules
+    /// with whole-vector reductions — YellowFin).
+    needs_stats: bool,
+    /// Membership epoch lock: read = data path, write = join/leave/
+    /// restore/snapshot (fans across all shards atomically).
+    epoch: RwLock<()>,
+    seq: Mutex<Seq>,
+    shards: Vec<ShardCell>,
+    /// Parameters most recently sent to each worker, full length; the
+    /// outer RwLock only guards slot-vector growth at joins.
+    sent: RwLock<Vec<Mutex<Vec<f32>>>>,
     pub metrics: MetricsRecorder,
 }
 
@@ -99,33 +192,50 @@ impl ShardedParameterServer {
         n_shards: usize,
     ) -> Self {
         let bounds = shard_bounds(theta0.len(), n_shards);
-        let shards: Vec<Shard> = bounds
+        let n_shards = bounds.len();
+        let algs: Vec<Box<dyn Algorithm>> = bounds
             .iter()
-            .map(|r| Shard {
-                alg: make_algorithm(kind, &theta0[r.clone()], n_workers),
-                sent: vec![vec![0.0; r.len()]; n_workers],
-                range: r.clone(),
+            .map(|r| make_algorithm(kind, &theta0[r.clone()], n_workers))
+            .collect();
+        let needs_stats = algs[0].needs_apply_stats();
+        let shards: Vec<ShardCell> = bounds
+            .into_iter()
+            .zip(algs)
+            .map(|(range, alg)| ShardCell {
+                range,
+                alg: RwLock::new(alg),
+                gate: Mutex::new(0),
+                gate_cv: Condvar::new(),
             })
             .collect();
         let last_eta = schedule.eta_at(0);
         ShardedParameterServer {
             kind,
-            shards,
-            schedule,
-            pulled_at: vec![0; n_workers],
-            has_pulled: vec![false; n_workers],
-            live: vec![true; n_workers],
-            master_step: 0,
-            last_eta,
-            momentum_correction: true,
-            threads: crate::util::parallel::default_threads(),
             k: theta0.len(),
+            threads: crate::util::parallel::default_threads(),
+            momentum_correction: true,
+            needs_stats,
+            epoch: RwLock::new(()),
+            seq: Mutex::new(Seq {
+                schedule,
+                master_step: 0,
+                last_eta,
+                pulled_at: vec![0; n_workers],
+                has_pulled: vec![false; n_workers],
+                live: vec![true; n_workers],
+                shard_pulled: vec![vec![false; n_shards]; n_workers],
+            }),
+            shards,
+            sent: RwLock::new(
+                (0..n_workers).map(|_| Mutex::new(vec![0.0; theta0.len()])).collect(),
+            ),
             metrics: MetricsRecorder::default(),
         }
     }
 
-    /// Cap the scoped-thread fan-out (1 = serial shard loop; useful for
-    /// benchmarking the partition overhead in isolation).
+    /// Cap the scoped-thread fan-out of ONE push/pull (1 = serial shard
+    /// loop).  Concurrent serving threads each fan out independently, so
+    /// serving configurations usually want 1 here.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
         self
@@ -144,185 +254,275 @@ impl ShardedParameterServer {
         self.shards.len()
     }
 
+    /// The contiguous coordinate ranges of the shards, in order.
+    pub fn shard_ranges(&self) -> Vec<Range<usize>> {
+        self.shards.iter().map(|sh| sh.range.clone()).collect()
+    }
+
     /// Worker slots ever allocated (live + retired).
     pub fn n_workers(&self) -> usize {
-        self.pulled_at.len()
+        sync::lock(&self.seq).pulled_at.len()
     }
 
     /// Workers currently in the cluster.
     pub fn n_live(&self) -> usize {
-        self.live.iter().filter(|&&l| l).count()
+        sync::lock(&self.seq).live.iter().filter(|&&l| l).count()
     }
 
     pub fn worker_is_live(&self, worker: usize) -> bool {
-        self.live.get(worker).copied().unwrap_or(false)
-    }
-
-    /// A worker joins: the membership change fans out across *all* shards
-    /// before this returns (single `&mut self` critical section), so the
-    /// sharded≡monolithic contract holds through churn — every shard
-    /// allocates the same slot ([`claim_slot`] is deterministic).
-    pub fn add_worker(&mut self) -> usize {
-        let slot = claim_slot(&mut self.live);
-        for sh in self.shards.iter_mut() {
-            let alg_slot = sh.alg.add_worker();
-            debug_assert!(
-                alg_slot == ANY_SLOT || alg_slot == slot,
-                "shard allocated slot {alg_slot}, server allocated {slot}"
-            );
-            if slot == sh.sent.len() {
-                sh.sent.push(vec![0.0; sh.range.len()]);
-            } else {
-                sh.sent[slot].fill(0.0);
-            }
-        }
-        if slot == self.pulled_at.len() {
-            self.pulled_at.push(0);
-            self.has_pulled.push(false);
-        } else {
-            self.pulled_at[slot] = 0;
-            self.has_pulled[slot] = false;
-        }
-        slot
-    }
-
-    /// A worker leaves: retire its slot on every shard atomically (w.r.t.
-    /// pushes/pulls, which also need `&mut self`).
-    pub fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            self.worker_is_live(worker),
-            "remove_worker: worker {worker} is not live (slots: {})",
-            self.live.len()
-        );
-        self.live[worker] = false;
-        self.has_pulled[worker] = false;
-        for sh in self.shards.iter_mut() {
-            sh.alg.remove_worker(worker, policy);
-        }
-        Ok(())
+        sync::lock(&self.seq).live.get(worker).copied().unwrap_or(false)
     }
 
     pub fn master_step(&self) -> u64 {
-        self.master_step
+        sync::lock(&self.seq).master_step
     }
 
     pub fn param_count(&self) -> usize {
         self.k
     }
 
-    pub fn schedule(&self) -> &LrSchedule {
-        &self.schedule
-    }
-
     /// Hyperparameters for the *current* master step.
     pub fn current_step(&self) -> Step {
-        self.schedule.step_at(self.master_step)
+        let q = sync::lock(&self.seq);
+        q.schedule.step_at(q.master_step)
     }
 
-    /// Shard `i`'s algorithm instance (tests / introspection).
-    pub fn shard_algorithm(&self, i: usize) -> &dyn Algorithm {
-        self.shards[i].alg.as_ref()
+    /// One consistent (step, schedule point, live, slots) read — the wire
+    /// server builds its reply headers from this with a single lock trip.
+    pub fn status_concurrent(&self) -> (u64, Step, usize, usize) {
+        let q = sync::lock(&self.seq);
+        (
+            q.master_step,
+            q.schedule.step_at(q.master_step),
+            q.live.iter().filter(|&&l| l).count(),
+            q.live.len(),
+        )
     }
 
-    /// Assemble the master parameters from all shards.
+    /// Assemble the master parameters from all shards.  Concurrent-safe;
+    /// racing pushes may be visible on some shards and not others (the
+    /// usual asynchronous staleness), never within a shard.
     pub fn theta_vec(&self) -> Vec<f32> {
+        let _e = sync::read(&self.epoch);
         let mut out = vec![0.0f32; self.k];
         for sh in &self.shards {
-            out[sh.range.clone()].copy_from_slice(sh.alg.theta());
+            out[sh.range.clone()].copy_from_slice(sync::read(&sh.alg).theta());
         }
         out
     }
 
-    /// Worker `worker` pulls parameters: each shard runs its algorithm's
-    /// `master_send` into the retained `sent` slice, in parallel, and the
-    /// slices are assembled into one contiguous vector.
-    pub fn pull(&mut self, worker: usize) -> Vec<f32> {
+    // ------------------------------------------------ concurrent data path
+
+    /// Worker `worker` pulls parameters (owned).  See [`Self::pull_into_concurrent`].
+    pub fn pull_concurrent(&self, worker: usize) -> anyhow::Result<Vec<f32>> {
         let mut out = vec![0.0f32; self.k];
-        self.pull_into_buf(worker, &mut out);
-        out
+        self.pull_into_concurrent(worker, &mut out)?;
+        Ok(out)
     }
 
-    /// Allocation-free pull into a caller-retained k-length buffer.
-    pub fn pull_into_buf(&mut self, worker: usize, out: &mut [f32]) {
-        assert!(
-            self.worker_is_live(worker),
-            "pull for retired/unknown worker {worker}"
-        );
-        assert_eq!(
-            out.len(),
-            self.k,
+    /// Allocation-free concurrent pull: each shard runs its algorithm's
+    /// (read-only) `master_send` under the shard's *read* lock, so pulls
+    /// proceed in parallel with each other and with applies on other
+    /// shards.  The retained `sent` copy is updated under the worker's
+    /// own slot mutex.
+    pub fn pull_into_concurrent(&self, worker: usize, out: &mut [f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            out.len() == self.k,
             "pull buffer length {} != parameter count {}",
             out.len(),
             self.k
         );
-        let s = self.schedule.step_at(self.master_step);
-        {
-            // Pre-split the output buffer into per-shard slots so each
-            // scoped thread owns disjoint destinations.
-            let mut pairs: Vec<(&mut Shard, &mut [f32])> = Vec::with_capacity(self.shards.len());
-            let mut rest: &mut [f32] = out;
-            for sh in self.shards.iter_mut() {
-                let take = std::mem::take(&mut rest);
-                let (slot, remainder) = take.split_at_mut(sh.range.len());
-                pairs.push((sh, slot));
-                rest = remainder;
+        let _e = sync::read(&self.epoch);
+        let s = {
+            let mut q = sync::lock(&self.seq);
+            anyhow::ensure!(
+                q.live.get(worker).copied().unwrap_or(false),
+                "pull for retired/unknown worker {worker}"
+            );
+            let t = q.master_step;
+            q.pulled_at[worker] = t;
+            q.has_pulled[worker] = true;
+            // a full pull supersedes any half-finished sliced pull group
+            q.shard_pulled[worker].fill(false);
+            q.schedule.step_at(t)
+        };
+        let slots = sync::read(&self.sent);
+        let mut sent = sync::lock(&slots[worker]);
+        // Pre-split both buffers so each scoped thread owns disjoint
+        // destinations.
+        let mut work: Vec<(&ShardCell, &mut [f32], &mut [f32])> =
+            Vec::with_capacity(self.shards.len());
+        let mut out_rest: &mut [f32] = out;
+        let mut sent_rest: &mut [f32] = &mut sent;
+        for sh in &self.shards {
+            let (o, o_rem) = std::mem::take(&mut out_rest).split_at_mut(sh.range.len());
+            let (c, c_rem) = std::mem::take(&mut sent_rest).split_at_mut(sh.range.len());
+            work.push((sh, o, c));
+            out_rest = o_rem;
+            sent_rest = c_rem;
+        }
+        parallel::par_chunks_mut(&mut work, self.threads, |_, group| {
+            for (sh, o, c) in group.iter_mut() {
+                let alg = sync::read(&sh.alg);
+                alg.master_send(worker, o, s);
+                c.copy_from_slice(o);
             }
-            crate::util::parallel::par_chunks_mut(&mut pairs, self.threads, |_, group| {
-                for (sh, slot) in group.iter_mut() {
-                    let mut buf = std::mem::take(&mut sh.sent[worker]);
-                    sh.alg.master_send(worker, &mut buf, s);
-                    slot.copy_from_slice(&buf);
-                    sh.sent[worker] = buf;
+        });
+        Ok(())
+    }
+
+    /// One shard slice of a pull (wire `PullShard`): same read-lock path
+    /// restricted to shard `shard`.  A worker's sliced pulls count as a
+    /// full pull (for the push-before-pull guard and lag accounting) once
+    /// every shard has been fetched.
+    pub fn pull_shard_concurrent(&self, worker: usize, shard: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            shard < self.shards.len(),
+            "pull for shard {shard} of {}",
+            self.shards.len()
+        );
+        let _e = sync::read(&self.epoch);
+        let s = {
+            let mut q = sync::lock(&self.seq);
+            anyhow::ensure!(
+                q.live.get(worker).copied().unwrap_or(false),
+                "pull for retired/unknown worker {worker}"
+            );
+            let t = q.master_step;
+            q.shard_pulled[worker][shard] = true;
+            if q.shard_pulled[worker].iter().all(|&m| m) {
+                q.pulled_at[worker] = t;
+                q.has_pulled[worker] = true;
+                q.shard_pulled[worker].fill(false);
+            }
+            q.schedule.step_at(t)
+        };
+        let sh = &self.shards[shard];
+        let mut out = vec![0.0f32; sh.range.len()];
+        let slots = sync::read(&self.sent);
+        let mut sent = sync::lock(&slots[worker]);
+        {
+            let alg = sync::read(&sh.alg);
+            alg.master_send(worker, &mut out, s);
+        }
+        sent[sh.range.clone()].copy_from_slice(&out);
+        Ok(out)
+    }
+
+    /// Concurrent push: take a ticket under the sequencer, then apply to
+    /// each shard under its write lock in strict ticket order (the gates
+    /// make any thread interleaving equivalent to the ticket-order FIFO).
+    /// Mirrors the monolithic push exactly: validation, schedule +
+    /// momentum correction, metric tap (reduced across shards in shard
+    /// order), then the (possibly two-phase) apply.
+    pub fn push_concurrent(&self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        let _e = sync::read(&self.epoch);
+        // All failure paths must precede ticket assignment: a taken ticket
+        // is always applied, or the gate chain would wedge.
+        let (ticket, s, rescale, want_metrics, lag) = {
+            let mut q = sync::lock(&self.seq);
+            anyhow::ensure!(
+                worker < q.live.len(),
+                "push from unknown worker {worker} (slots: {})",
+                q.live.len()
+            );
+            anyhow::ensure!(q.live[worker], "push from retired worker {worker}");
+            anyhow::ensure!(
+                q.has_pulled[worker],
+                "worker {worker} pushed before ever pulling"
+            );
+            anyhow::ensure!(
+                msg.len() == self.k,
+                "message length {} != parameter count {}",
+                msg.len(),
+                self.k
+            );
+            let t = q.master_step;
+            let s = q.schedule.step_at(t);
+            let rescale = if self.momentum_correction && s.eta != q.last_eta && q.last_eta > 0.0
+            {
+                Some(s.eta / q.last_eta)
+            } else {
+                None
+            };
+            q.last_eta = s.eta;
+            let lag = t - q.pulled_at[worker];
+            q.master_step = t + 1;
+            (t, s, rescale, self.metrics.wants(t), lag)
+        };
+        let _repair = GateRepair { shards: &self.shards, next: ticket + 1 };
+        let slots = sync::read(&self.sent);
+        let sent = sync::lock(&slots[worker]);
+        // (gap_sq, msg_sq) partials per shard, reduced in shard order.
+        let mut partials: Vec<(f64, f64)> = vec![(0.0, 0.0); self.shards.len()];
+
+        if self.needs_stats {
+            // Whole-vector reductions (YellowFin): hold every shard's gate
+            // through both phases so the globally merged statistics are
+            // exactly what the monolithic apply would compute.
+            for sh in &self.shards {
+                sh.wait_ticket(ticket);
+            }
+            let mut stats = ApplyStats::default();
+            for (i, sh) in self.shards.iter().enumerate() {
+                let r = sh.range.clone();
+                let mut alg = sync::write(&sh.alg);
+                if let Some(ratio) = rescale {
+                    alg.rescale_momentum(ratio);
+                }
+                if want_metrics {
+                    partials[i] = (
+                        math::sub_norm_sq(alg.theta(), &sent[r.clone()]),
+                        math::norm2_sq(&msg[r.clone()]),
+                    );
+                }
+                stats.merge(&alg.apply_stats(worker, &msg[r.clone()], &sent[r]));
+            }
+            for sh in &self.shards {
+                let _bump = TicketBump { cell: sh, next: ticket + 1 };
+                let r = sh.range.clone();
+                let mut alg = sync::write(&sh.alg);
+                alg.master_apply_with(worker, &msg[r.clone()], &sent[r], s, &stats);
+            }
+        } else {
+            // Elementwise rules: one ticket-ordered pass per shard, fanned
+            // out over scoped threads.  Each shard's gate admits tickets
+            // in order, so overlapping pushes pipeline across shards.
+            let stats = ApplyStats::default();
+            let sent_ref: &[f32] = &sent;
+            let mut work: Vec<(&ShardCell, &mut (f64, f64))> =
+                self.shards.iter().zip(partials.iter_mut()).collect();
+            parallel::par_chunks_mut(&mut work, self.threads, |_, group| {
+                for (sh, partial) in group.iter_mut() {
+                    sh.wait_ticket(ticket);
+                    let _bump = TicketBump { cell: sh, next: ticket + 1 };
+                    let r = sh.range.clone();
+                    let mut alg = sync::write(&sh.alg);
+                    if let Some(ratio) = rescale {
+                        alg.rescale_momentum(ratio);
+                    }
+                    if want_metrics {
+                        **partial = (
+                            math::sub_norm_sq(alg.theta(), &sent_ref[r.clone()]),
+                            math::norm2_sq(&msg[r.clone()]),
+                        );
+                    }
+                    alg.master_apply_with(worker, &msg[r.clone()], &sent_ref[r], s, &stats);
                 }
             });
         }
-        self.pulled_at[worker] = self.master_step;
-        self.has_pulled[worker] = true;
-    }
 
-    /// Worker `worker` delivers its message.  Mirrors the monolithic
-    /// server's push exactly: schedule + momentum correction, metric tap
-    /// (reduced across shards), then the (possibly two-phase) apply fanned
-    /// out over shards.  Returns the [`Step`] that was applied.
-    pub fn push(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
-        anyhow::ensure!(
-            worker < self.live.len(),
-            "push from unknown worker {worker} (slots: {})",
-            self.live.len()
-        );
-        anyhow::ensure!(self.live[worker], "push from retired worker {worker}");
-        anyhow::ensure!(
-            self.has_pulled[worker],
-            "worker {worker} pushed before ever pulling"
-        );
-        anyhow::ensure!(
-            msg.len() == self.k,
-            "message length {} != parameter count {}",
-            msg.len(),
-            self.k
-        );
-        let s = self.schedule.step_at(self.master_step);
-        if self.momentum_correction && s.eta != self.last_eta && self.last_eta > 0.0 {
-            let ratio = s.eta / self.last_eta;
-            for sh in self.shards.iter_mut() {
-                sh.alg.rescale_momentum(ratio);
-            }
-        }
-        self.last_eta = s.eta;
-
-        if self.metrics.wants(self.master_step) {
-            let mut gap_sq = 0.0f64;
-            let mut msg_sq = 0.0f64;
-            for sh in &self.shards {
-                gap_sq += math::sub_norm_sq(sh.alg.theta(), &sh.sent[worker]);
-                msg_sq += math::norm2_sq(&msg[sh.range.clone()]);
+        if want_metrics {
+            let (mut gap_sq, mut msg_sq) = (0.0f64, 0.0f64);
+            for (g, m) in &partials {
+                gap_sq += g;
+                msg_sq += m;
             }
             let kf = self.k as f64;
             let gap = gap_sq.sqrt() / kf.sqrt();
             let msg_norm = msg_sq.sqrt();
-            let lag = self.master_step - self.pulled_at[worker];
             self.metrics.record(MetricRow {
-                step: self.master_step,
+                step: ticket,
                 worker,
                 gap,
                 norm_gap: if msg_norm > 0.0 { gap * kf.sqrt() / msg_norm } else { 0.0 },
@@ -331,124 +531,93 @@ impl ShardedParameterServer {
                 msg_norm,
             });
         }
-
-        // Phase 1: whole-vector statistics, reduced across shards.  Only
-        // rules with global reductions (YellowFin) pay for this pass; it is
-        // read-only, so it fans out like phase 2.
-        let mut stats = ApplyStats::default();
-        if self.shards[0].alg.needs_apply_stats() {
-            let partials = crate::util::parallel::par_map(&self.shards, self.threads, |sh| {
-                sh.alg.apply_stats(worker, &msg[sh.range.clone()], &sh.sent[worker])
-            });
-            for partial in &partials {
-                stats.merge(partial);
-            }
-        }
-
-        // Phase 2: elementwise apply, shards in parallel.
-        crate::util::parallel::par_chunks_mut(&mut self.shards, self.threads, |_, group| {
-            for sh in group.iter_mut() {
-                let r = sh.range.clone();
-                sh.alg.master_apply_with(worker, &msg[r], &sh.sent[worker], s, &stats);
-            }
-        });
-        self.master_step += 1;
         Ok(s)
     }
-}
 
-impl Master for ShardedParameterServer {
-    fn algo_kind(&self) -> AlgorithmKind {
-        self.kind
+    // ------------------------------------------------ membership (epoch)
+
+    /// A worker joins: the membership change fans out across *all* shards
+    /// under the epoch write lock (no pull/push in flight), so the
+    /// sharded≡monolithic contract holds through churn — every shard
+    /// allocates the same slot ([`claim_slot`] is deterministic).
+    pub fn add_worker_concurrent(&self) -> usize {
+        let _e = sync::write(&self.epoch);
+        let mut q = sync::lock(&self.seq);
+        let mut sent = sync::write(&self.sent);
+        self.add_worker_inner(&mut q, &mut sent)
     }
 
-    fn workers(&self) -> usize {
-        self.n_workers()
-    }
-
-    fn live_workers(&self) -> usize {
-        self.n_live()
-    }
-
-    fn is_live(&self, worker: usize) -> bool {
-        self.worker_is_live(worker)
-    }
-
-    fn add_worker(&mut self) -> usize {
-        ShardedParameterServer::add_worker(self)
-    }
-
-    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
-        ShardedParameterServer::remove_worker(self, worker, policy)
-    }
-
-    fn steps_done(&self) -> u64 {
-        self.master_step
-    }
-
-    fn param_len(&self) -> usize {
-        self.k
-    }
-
-    fn step_now(&self) -> Step {
-        self.current_step()
-    }
-
-    fn theta_vec(&self) -> Vec<f32> {
-        ShardedParameterServer::theta_vec(self)
-    }
-
-    fn pull_params(&mut self, worker: usize) -> Vec<f32> {
-        self.pull(worker)
-    }
-
-    fn pull_into(&mut self, worker: usize, out: &mut [f32]) {
-        self.pull_into_buf(worker, out);
-    }
-
-    fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
-        self.push(worker, msg)
-    }
-
-    fn make_worker_state(&self) -> WorkerState {
-        // Worker state is full-length, not shard-length: size the momentum
-        // buffer to k when the algorithm keeps one (DANA-Slim).  The
-        // worker-side transform re-sizes on first use anyway, so this only
-        // preserves the monolithic server's eager allocation.
-        let mut ws = self.shards[0].alg.make_worker_state();
-        if !ws.v.is_empty() {
-            ws.v = vec![0.0; self.k];
+    fn add_worker_inner(&self, q: &mut Seq, sent: &mut Vec<Mutex<Vec<f32>>>) -> usize {
+        let slot = claim_slot(&mut q.live);
+        for sh in &self.shards {
+            let alg_slot = sync::write(&sh.alg).add_worker();
+            debug_assert!(
+                alg_slot == ANY_SLOT || alg_slot == slot,
+                "shard allocated slot {alg_slot}, server allocated {slot}"
+            );
         }
-        ws
+        if slot == sent.len() {
+            sent.push(Mutex::new(vec![0.0; self.k]));
+            q.pulled_at.push(0);
+            q.has_pulled.push(false);
+            q.shard_pulled.push(vec![false; self.shards.len()]);
+        } else {
+            sync::lock(&sent[slot]).fill(0.0);
+            q.pulled_at[slot] = 0;
+            q.has_pulled[slot] = false;
+            q.shard_pulled[slot].fill(false);
+        }
+        slot
     }
 
-    fn worker_transform(&self, ws: &mut WorkerState, grad: &mut [f32], s: Step) {
-        // The worker half is shard-agnostic (it only touches worker-local
-        // state and the full gradient), so any shard's instance serves.
-        self.shards[0].alg.worker_message(ws, grad, s);
+    /// A worker leaves: retire its slot on every shard atomically under
+    /// the epoch write lock.
+    pub fn remove_worker_concurrent(
+        &self,
+        worker: usize,
+        policy: LeavePolicy,
+    ) -> anyhow::Result<()> {
+        let _e = sync::write(&self.epoch);
+        let mut q = sync::lock(&self.seq);
+        self.remove_worker_inner(&mut q, worker, policy)
     }
 
-    fn metrics(&self) -> &MetricsRecorder {
-        &self.metrics
+    fn remove_worker_inner(
+        &self,
+        q: &mut Seq,
+        worker: usize,
+        policy: LeavePolicy,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            q.live.get(worker).copied().unwrap_or(false),
+            "remove_worker: worker {worker} is not live (slots: {})",
+            q.live.len()
+        );
+        q.live[worker] = false;
+        q.has_pulled[worker] = false;
+        q.shard_pulled[worker].fill(false);
+        for sh in &self.shards {
+            sync::write(&sh.alg).remove_worker(worker, policy);
+        }
+        Ok(())
     }
 
-    fn metrics_mut(&mut self) -> &mut MetricsRecorder {
-        &mut self.metrics
-    }
-
-    /// Assemble a layout-independent snapshot: coordinate-aligned state is
-    /// concatenated across shards in range order; shard-replicated scalars
-    /// are taken from shard 0 (every shard's copy is identical — the
-    /// membership fan-out and two-phase apply keep them in lockstep).
-    fn snapshot(&self) -> anyhow::Result<MasterSnapshot> {
-        let n = self.n_workers();
-        let mut sent: Vec<Vec<f32>> = vec![Vec::with_capacity(self.k); n];
+    /// Assemble a layout-independent snapshot under the epoch write lock
+    /// (quiescent: no pull/push in flight): coordinate-aligned state is
+    /// concatenated across shards in range order; shard-replicated
+    /// scalars are taken from shard 0 (membership fan-out and the
+    /// two-phase apply keep every shard's copy in lockstep).
+    pub fn snapshot_concurrent(&self) -> anyhow::Result<MasterSnapshot> {
+        let _e = sync::write(&self.epoch);
+        let q = sync::lock(&self.seq);
+        let slots = sync::read(&self.sent);
+        let sent: Vec<Vec<f32>> = slots.iter().map(|m| sync::lock(m).clone()).collect();
+        let mut theta = vec![0.0f32; self.k];
         let mut state: StateDict = Vec::new();
         for (si, sh) in self.shards.iter().enumerate() {
-            for (w, out) in sent.iter_mut().enumerate() {
-                out.extend_from_slice(&sh.sent[w]);
-            }
-            let piece = sh.alg.state_dict();
+            let alg = sync::read(&sh.alg);
+            theta[sh.range.clone()].copy_from_slice(alg.theta());
+            let piece = alg.state_dict();
             if si == 0 {
                 state = piece;
                 continue;
@@ -482,40 +651,55 @@ impl Master for ShardedParameterServer {
         }
         Ok(MasterSnapshot {
             kind: self.kind,
-            master_step: self.master_step,
-            last_eta: self.last_eta,
-            theta: ShardedParameterServer::theta_vec(self),
-            live: self.live.clone(),
+            master_step: q.master_step,
+            last_eta: q.last_eta,
+            theta,
+            live: q.live.clone(),
             sent,
-            pulled_at: self.pulled_at.clone(),
-            has_pulled: self.has_pulled.clone(),
+            pulled_at: q.pulled_at.clone(),
+            has_pulled: q.has_pulled.clone(),
             state,
         })
     }
 
-    fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()> {
+    /// Restore a snapshot onto a freshly constructed server; see
+    /// [`Master::restore`].  Also fast-forwards every shard's ticket gate
+    /// to the snapshot's master step.
+    pub fn restore_concurrent(&self, snap: &MasterSnapshot) -> anyhow::Result<()> {
         snap.validate(self.kind, self.k)?;
+        let _e = sync::write(&self.epoch);
+        let mut q = sync::lock(&self.seq);
         anyhow::ensure!(
-            self.master_step == 0 && self.n_live() == self.n_workers(),
+            q.master_step == 0 && q.live.iter().all(|&l| l),
             "restore target must be freshly constructed"
         );
         anyhow::ensure!(
-            self.n_workers() <= snap.slots(),
+            q.live.len() <= snap.slots(),
             "restore target has {} slots, snapshot only {}",
-            self.n_workers(),
+            q.live.len(),
             snap.slots()
         );
-        while self.n_workers() < snap.slots() {
-            ShardedParameterServer::add_worker(self);
-        }
-        for (w, &alive) in snap.live.iter().enumerate() {
-            if !alive {
-                ShardedParameterServer::remove_worker(self, w, LeavePolicy::Retire)?;
+        {
+            // Replay membership so the algorithms' internal liveness (and
+            // any live-count-derived scalars like LWP's τ) matches the
+            // snapshot, then overwrite all state.
+            let mut sent = sync::write(&self.sent);
+            while q.live.len() < snap.slots() {
+                self.add_worker_inner(&mut q, &mut sent);
+            }
+            for (w, &alive) in snap.live.iter().enumerate() {
+                if !alive {
+                    self.remove_worker_inner(&mut q, w, LeavePolicy::Retire)?;
+                }
+            }
+            for (slot, full) in sent.iter().zip(&snap.sent) {
+                sync::lock(slot).copy_from_slice(full);
             }
         }
-        for sh in self.shards.iter_mut() {
+        for sh in &self.shards {
             let r = sh.range.clone();
-            sh.alg.set_theta(&snap.theta[r.clone()]);
+            let mut alg = sync::write(&sh.alg);
+            alg.set_theta(&snap.theta[r.clone()]);
             // Slice the full-length dict down to this shard's range;
             // scalars broadcast verbatim.
             let local: StateDict = snap
@@ -532,16 +716,129 @@ impl Master for ShardedParameterServer {
                     (name.clone(), v)
                 })
                 .collect();
-            sh.alg.load_state_dict(&local)?;
-            for (w, full) in snap.sent.iter().enumerate() {
-                sh.sent[w] = full[r.clone()].to_vec();
-            }
+            alg.load_state_dict(&local)?;
+            *sync::lock(&sh.gate) = snap.master_step;
         }
-        self.pulled_at = snap.pulled_at.clone();
-        self.has_pulled = snap.has_pulled.clone();
-        self.master_step = snap.master_step;
-        self.last_eta = snap.last_eta;
+        q.pulled_at = snap.pulled_at.clone();
+        q.has_pulled = snap.has_pulled.clone();
+        q.master_step = snap.master_step;
+        q.last_eta = snap.last_eta;
         Ok(())
+    }
+
+    // ------------------------------------------------ single-caller API
+
+    /// Worker `worker` pulls parameters (single-caller convenience).
+    pub fn pull(&mut self, worker: usize) -> Vec<f32> {
+        self.pull_concurrent(worker).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Allocation-free pull into a caller-retained k-length buffer.
+    pub fn pull_into_buf(&mut self, worker: usize, out: &mut [f32]) {
+        if let Err(e) = self.pull_into_concurrent(worker, out) {
+            panic!("{e}");
+        }
+    }
+
+    /// Worker `worker` delivers its message; see [`Self::push_concurrent`].
+    pub fn push(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        self.push_concurrent(worker, msg)
+    }
+
+    pub fn add_worker(&mut self) -> usize {
+        self.add_worker_concurrent()
+    }
+
+    pub fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
+        self.remove_worker_concurrent(worker, policy)
+    }
+}
+
+impl Master for ShardedParameterServer {
+    fn algo_kind(&self) -> AlgorithmKind {
+        self.kind
+    }
+
+    fn workers(&self) -> usize {
+        self.n_workers()
+    }
+
+    fn live_workers(&self) -> usize {
+        self.n_live()
+    }
+
+    fn is_live(&self, worker: usize) -> bool {
+        self.worker_is_live(worker)
+    }
+
+    fn add_worker(&mut self) -> usize {
+        self.add_worker_concurrent()
+    }
+
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
+        self.remove_worker_concurrent(worker, policy)
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.master_step()
+    }
+
+    fn param_len(&self) -> usize {
+        self.k
+    }
+
+    fn step_now(&self) -> Step {
+        self.current_step()
+    }
+
+    fn theta_vec(&self) -> Vec<f32> {
+        ShardedParameterServer::theta_vec(self)
+    }
+
+    fn pull_params(&mut self, worker: usize) -> Vec<f32> {
+        self.pull(worker)
+    }
+
+    fn pull_into(&mut self, worker: usize, out: &mut [f32]) {
+        self.pull_into_buf(worker, out);
+    }
+
+    fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        self.push_concurrent(worker, msg)
+    }
+
+    fn make_worker_state(&self) -> WorkerState {
+        // Worker state is full-length, not shard-length: size the momentum
+        // buffer to k when the algorithm keeps one (DANA-Slim).  The
+        // worker-side transform re-sizes on first use anyway, so this only
+        // preserves the monolithic server's eager allocation.
+        let mut ws = sync::read(&self.shards[0].alg).make_worker_state();
+        if !ws.v.is_empty() {
+            ws.v = vec![0.0; self.k];
+        }
+        ws
+    }
+
+    fn worker_transform(&self, ws: &mut WorkerState, grad: &mut [f32], s: Step) {
+        // The worker half is shard-agnostic (it only touches worker-local
+        // state and the full gradient), so any shard's instance serves.
+        sync::read(&self.shards[0].alg).worker_message(ws, grad, s);
+    }
+
+    fn metrics(&self) -> &MetricsRecorder {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut MetricsRecorder {
+        &mut self.metrics
+    }
+
+    fn snapshot(&self) -> anyhow::Result<MasterSnapshot> {
+        self.snapshot_concurrent()
+    }
+
+    fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()> {
+        self.restore_concurrent(snap)
     }
 }
 
@@ -591,6 +888,7 @@ mod tests {
         );
         let err = ps.push(1, &[0.0; 4]).unwrap_err();
         assert!(err.to_string().contains("pushed before ever pulling"));
+        assert_eq!(ps.master_step(), 0, "failed push must not take a ticket");
         ps.pull(1);
         ps.push(1, &[0.0; 4]).unwrap();
     }
@@ -689,5 +987,85 @@ mod tests {
             b.push(w, &g).unwrap();
         }
         assert_eq!(a.theta_vec(), b.theta_vec());
+    }
+
+    #[test]
+    fn sliced_pull_group_counts_as_a_full_pull() {
+        let k = 10;
+        let ps = ShardedParameterServer::new(
+            AlgorithmKind::DanaZero,
+            &vec![1.0f32; k],
+            schedule(1),
+            1,
+            3,
+        );
+        // pushing before the sliced group completes is still rejected
+        assert!(ps.push_concurrent(0, &vec![0.1; k]).is_err());
+        let ranges = ps.shard_ranges();
+        let mut assembled = vec![0.0f32; k];
+        for (j, r) in ranges.iter().enumerate().rev() {
+            let slice = ps.pull_shard_concurrent(0, j).unwrap();
+            assert_eq!(slice.len(), r.len());
+            assembled[r.clone()].copy_from_slice(&slice);
+            if j > 0 {
+                assert!(
+                    ps.push_concurrent(0, &vec![0.1; k]).is_err(),
+                    "group incomplete after shard {j}"
+                );
+            }
+        }
+        assert_eq!(assembled, vec![1.0; k]);
+        ps.push_concurrent(0, &vec![0.1; k]).unwrap();
+        assert_eq!(ps.master_step(), 1);
+    }
+
+    #[test]
+    fn concurrent_pushes_are_ticket_ordered_exactly() {
+        // 4 threads hammer one striped server with IDENTICAL messages:
+        // the ticket gates make any interleaving equal to the serial
+        // trajectory bit-for-bit (same message at every step ⇒ the
+        // per-step float ops are identical regardless of which thread
+        // lands which ticket).  Decaying eta exercises the momentum
+        // correction inside the gated region too.
+        let k = 23;
+        let theta0: Vec<f32> = (0..k).map(|i| (i as f32 * 0.17).cos()).collect();
+        let sched = || {
+            LrSchedule::new(ScheduleConfig {
+                warmup_epochs: 0.0,
+                decay_epochs: vec![2.0],
+                decay_factor: 0.1,
+                steps_per_epoch: 10,
+                n_workers: 4,
+                ..ScheduleConfig::default()
+            })
+        };
+        let g = vec![0.01f32; k];
+        let threads = 4usize;
+        let per = 25usize;
+        for kind in [AlgorithmKind::Asgd, AlgorithmKind::NagAsgd] {
+            let ps = ShardedParameterServer::new(kind, &theta0, sched(), threads, 7)
+                .with_threads(1);
+            std::thread::scope(|s| {
+                for w in 0..threads {
+                    let ps = &ps;
+                    let g = &g;
+                    s.spawn(move || {
+                        let mut buf = vec![0.0f32; k];
+                        ps.pull_into_concurrent(w, &mut buf).unwrap();
+                        for _ in 0..per {
+                            ps.push_concurrent(w, g).unwrap();
+                        }
+                    });
+                }
+            });
+            assert_eq!(ps.master_step(), (threads * per) as u64, "{kind}");
+            // serial replica of the same push count
+            let mut serial = ShardedParameterServer::new(kind, &theta0, sched(), 1, 7);
+            serial.pull(0);
+            for _ in 0..threads * per {
+                serial.push(0, &g).unwrap();
+            }
+            assert_eq!(ps.theta_vec(), serial.theta_vec(), "{kind}: hammer diverged");
+        }
     }
 }

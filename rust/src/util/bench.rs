@@ -116,6 +116,55 @@ impl BenchSuite {
         );
         self.results
     }
+
+    /// Like [`Self::finish`], but also write the results as JSON to
+    /// `path` (e.g. `BENCH_serve.json` at the repo root) so the perf
+    /// trajectory is tracked in-tree run over run.  A filtered run
+    /// (`cargo bench -- <filter>`) writes only the rows it ran.
+    pub fn finish_json(self, path: &str) -> Vec<CaseResult> {
+        let json = results_json(&self.group, &self.results);
+        match std::fs::write(path, &json) {
+            Ok(()) => println!("{}: wrote {path}", self.group),
+            Err(e) => eprintln!("{}: could not write {path}: {e}", self.group),
+        }
+        self.finish()
+    }
+}
+
+/// Serialize results as a stable, diff-friendly JSON document (no serde
+/// in the offline registry — see `util/json.rs` for the reader side).
+fn results_json(group: &str, results: &[CaseResult]) -> String {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"group\": \"{}\",\n", esc(group)));
+    out.push_str("  \"unit\": \"ns_per_iter\",\n");
+    out.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let bytes = r
+            .bytes_per_iter
+            .map(|b| b.to_string())
+            .unwrap_or_else(|| "null".to_string());
+        let gbps = r
+            .bytes_per_iter
+            .map(|b| format!("{:.3}", b as f64 / r.mean_ns))
+            .unwrap_or_else(|| "null".to_string());
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"std_ns\": {:.1}, \
+             \"samples\": {}, \"iters_per_sample\": {}, \"bytes_per_iter\": {}, \
+             \"gb_per_s\": {}}}{}\n",
+            esc(&r.name),
+            r.mean_ns,
+            r.std_ns,
+            r.samples,
+            r.iters_per_sample,
+            bytes,
+            gbps,
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
 }
 
 fn format_result(group: &str, r: &CaseResult) -> String {
@@ -166,6 +215,34 @@ mod tests {
         let res = b.finish();
         assert_eq!(res.len(), 1);
         assert!(res[0].mean_ns > 0.0);
+    }
+
+    #[test]
+    fn json_output_is_parseable_and_complete() {
+        let results = vec![
+            CaseResult {
+                name: "a\"quoted\"".into(),
+                mean_ns: 123.4,
+                std_ns: 5.6,
+                samples: 3,
+                iters_per_sample: 10,
+                bytes_per_iter: Some(400),
+            },
+            CaseResult {
+                name: "plain".into(),
+                mean_ns: 1.0,
+                std_ns: 0.0,
+                samples: 1,
+                iters_per_sample: 1,
+                bytes_per_iter: None,
+            },
+        ];
+        let s = results_json("serve", &results);
+        let j = crate::util::json::Json::parse(&s).expect("bench JSON must parse");
+        assert_eq!(j.get("group").and_then(|g| g.as_str()), Some("serve"));
+        let rows = j.get("results").and_then(|r| r.as_arr()).expect("results array");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("bytes_per_iter").and_then(|b| b.as_usize()), Some(400));
     }
 
     #[test]

@@ -1,0 +1,94 @@
+//! Poison-recovering lock primitives.
+//!
+//! `std`'s locks poison when a holder panics, and every subsequent
+//! `.lock().unwrap()` then panics too — so one crashed connection thread
+//! would take the whole serving process down with it.  For a parameter
+//! server the right failure model is the opposite: a panic while holding a
+//! lock may leave *that* operation torn (the slot is retired, the incident
+//! logged), but the cluster keeps serving.  Every protected structure here
+//! is either repaired by its owner (the net server retires the offending
+//! slot) or self-consistent per field (counters, masks, coordinate
+//! vectors), so taking the guard out of a [`PoisonError`] is sound.
+//!
+//! These helpers are the single place the recovery decision lives; all
+//! server/net code locks through them instead of `.expect("poisoned")`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Log the first recovery only — a poisoned lock is touched by every
+/// subsequent operation and would otherwise flood the log.
+static POISON_SEEN: AtomicBool = AtomicBool::new(false);
+
+fn note_poison(what: &str) {
+    if !POISON_SEEN.swap(true, Ordering::Relaxed) {
+        eprintln!("warn: recovered a poisoned {what} (a holder panicked); continuing");
+    }
+}
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| {
+        note_poison("mutex");
+        e.into_inner()
+    })
+}
+
+/// Read-lock, recovering from poison.
+pub fn read<T: ?Sized>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| {
+        note_poison("rwlock");
+        e.into_inner()
+    })
+}
+
+/// Write-lock, recovering from poison.
+pub fn write<T: ?Sized>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| {
+        note_poison("rwlock");
+        e.into_inner()
+    })
+}
+
+/// Condvar wait that re-acquires through poison like [`lock`].
+pub fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| {
+        note_poison("condvar mutex");
+        e.into_inner()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex, RwLock};
+
+    #[test]
+    fn mutex_recovers_after_holder_panic() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("die holding the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        // plain lock().unwrap() would panic here; the helper recovers
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recovers_after_holder_panic() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("die holding the write lock");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        write(&l).push(4);
+        assert_eq!(read(&l).len(), 4);
+    }
+}

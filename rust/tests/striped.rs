@@ -1,0 +1,474 @@
+//! Striped-serving equivalence suite (ISSUE 4 acceptance):
+//!
+//! 1. The lock-striped serving path (per-shard locks, ticket-ordered
+//!    applies, no global mutex) is **bit-for-bit** identical to the PR 3
+//!    global-lock serving path for all 10 algorithms × {mono, sharded
+//!    S ∈ {2, 7, 16}} × {in-process, loopback TCP} — including under
+//!    churn and through a checkpoint → kill → resume → reconnect cycle.
+//! 2. Shard-sliced parameter traffic (`PullShard`/`PushShard` frames)
+//!    assembles to exactly the monolithic-frame trajectories, on both
+//!    serving backends.
+//! 3. A many-thread hammer: concurrent clients pushing disjoint shards
+//!    through real sockets leave the striped server in exactly the
+//!    serial-FIFO state of its ticket order.
+//! 4. Sliced-push protocol discipline: duplicate slices and interleaved
+//!    requests fail closed; a dead connection's half-sent group is
+//!    dropped, never half-applied.
+
+use dana::config::{TrainConfig, Workload};
+use dana::net::checkpoint;
+use dana::net::wire::{read_frame, write_frame, Msg, Role};
+use dana::net::{NetServer, RemoteMaster, ServeOptions};
+use dana::optim::{AlgorithmKind, LeavePolicy, LrSchedule, ScheduleConfig};
+use dana::server::{make_master, make_serving_master, Master, ServingMaster, ShardedParameterServer};
+use dana::sim::ChurnSchedule;
+use dana::train::{real_async, sim_trainer};
+use dana::util::rng::Rng;
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+
+fn cfg(kind: AlgorithmKind, workers: usize, epochs: f64, shards: usize) -> TrainConfig {
+    let mut c = TrainConfig::preset(Workload::C10, kind, workers, epochs);
+    c.seed = 47;
+    // gap/lag metrics live server-side on a remote run; keep them off so
+    // both sides of each comparison record nothing
+    c.metrics_every = 0;
+    c.shards = shards;
+    c
+}
+
+fn schedule_of(c: &TrainConfig) -> LrSchedule {
+    LrSchedule::new(c.schedule.clone())
+}
+
+/// A `dana serve` master for this config (zero slots: connect == join),
+/// on the chosen serving backend.
+fn start_backend(c: &TrainConfig, k: usize, striped: bool, opts: ServeOptions) -> NetServer {
+    let master = make_serving_master(
+        c.algorithm,
+        &real_async::synthetic_theta0(k),
+        schedule_of(c),
+        0,
+        c.shards,
+        1,
+        striped,
+    );
+    NetServer::start_serving(master, "127.0.0.1:0", opts).unwrap()
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dana-striped-{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ---------------------------------------------------------------- (1)
+
+/// Striped serving ≡ global-lock serving ≡ in-process, bit-for-bit, all
+/// 10 algorithms × mono + sharded layouts.  Both serving backends host
+/// the identical shard math, so even YellowFin's f64 tuner reductions
+/// agree exactly.
+#[test]
+fn striped_serving_matches_global_lock_serving_all_kinds() {
+    let k = 48;
+    for kind in AlgorithmKind::ALL {
+        for shards in [1usize, 2, 7, 16] {
+            let c = cfg(kind, 3, 0.4, shards);
+            let in_process = sim_trainer::run_synthetic(&c, k).unwrap();
+            let mut reports = Vec::new();
+            for striped in [false, true] {
+                let mut srv = start_backend(&c, k, striped, ServeOptions::default());
+                let mut rc = c.clone();
+                rc.master_addr = Some(srv.url());
+                reports.push(sim_trainer::run_synthetic(&rc, k).unwrap());
+                srv.stop();
+            }
+            let (locked, striped) = (&reports[0], &reports[1]);
+            assert_eq!(
+                striped.final_test_loss, locked.final_test_loss,
+                "{kind} S={shards}: striped vs global-lock final loss"
+            );
+            assert_eq!(
+                striped.loss_curve, locked.loss_curve,
+                "{kind} S={shards}: striped vs global-lock curve"
+            );
+            assert_eq!(striped.steps, locked.steps, "{kind} S={shards}");
+            assert_eq!(
+                striped.final_test_loss, in_process.final_test_loss,
+                "{kind} S={shards}: wire vs in-process"
+            );
+            assert_eq!(striped.loss_curve, in_process.loss_curve, "{kind} S={shards}");
+        }
+    }
+}
+
+/// The config-plumbed sliced path (`--shard-frames` / JSON
+/// `"shard_frames"`): a full trainer run over PullShard/PushShard frames
+/// equals the monolithic-frame run bit-for-bit.
+#[test]
+fn config_enabled_shard_frames_match_monolithic_run() {
+    let k = 48;
+    let c = cfg(AlgorithmKind::DanaZero, 3, 0.4, 7);
+    let base = sim_trainer::run_synthetic(&c, k).unwrap();
+    let mut srv = start_backend(&c, k, true, ServeOptions::default());
+    let mut rc = c.clone();
+    rc.master_addr = Some(srv.url());
+    rc.shard_frames = true;
+    let remote = sim_trainer::run_synthetic(&rc, k).unwrap();
+    assert_eq!(remote.final_test_loss, base.final_test_loss);
+    assert_eq!(remote.loss_curve, base.loss_curve);
+    srv.stop();
+}
+
+/// Same equivalence with cluster churn flowing through real sockets:
+/// joins/leaves fan across all shards atomically under the epoch lock.
+#[test]
+fn striped_serving_matches_under_churn() {
+    let k = 64;
+    for kind in [AlgorithmKind::DanaZero, AlgorithmKind::Easgd] {
+        let mut c = cfg(kind, 4, 1.0, 7);
+        c.churn = ChurnSchedule::parse("leave@0.3:2,join@0.5,leave@0.6,join@0.8").unwrap();
+        let base = sim_trainer::run_synthetic(&c, k).unwrap();
+        for striped in [false, true] {
+            let mut srv = start_backend(&c, k, striped, ServeOptions::default());
+            let mut rc = c.clone();
+            rc.master_addr = Some(srv.url());
+            let remote = sim_trainer::run_synthetic(&rc, k).unwrap();
+            assert_eq!(
+                remote.final_test_loss, base.final_test_loss,
+                "{kind} striped={striped}: churn trajectory"
+            );
+            assert_eq!(remote.loss_curve, base.loss_curve, "{kind} striped={striped}");
+            assert_eq!(
+                (remote.workers_joined, remote.workers_left),
+                (base.workers_joined, base.workers_left),
+                "{kind} striped={striped}"
+            );
+            srv.stop();
+        }
+    }
+}
+
+/// In-process: the concurrent `&self` API and the `&mut self` [`Master`]
+/// trait are the same machine — serial driving is bit-for-bit.
+#[test]
+fn concurrent_api_matches_master_trait_serially() {
+    let k = 31;
+    let theta0: Vec<f32> = (0..k).map(|i| (i as f32 * 0.23).sin()).collect();
+    let sched = || {
+        LrSchedule::new(ScheduleConfig {
+            steps_per_epoch: 10,
+            n_workers: 2,
+            ..ScheduleConfig::default()
+        })
+    };
+    for kind in AlgorithmKind::ALL {
+        let shared = ShardedParameterServer::new(kind, &theta0, sched(), 2, 5);
+        let mut owned = ShardedParameterServer::new(kind, &theta0, sched(), 2, 5);
+        let mut rng = Rng::new(13);
+        for step in 0..40 {
+            let w = step % 2;
+            let a = shared.pull_concurrent(w).unwrap();
+            let b = owned.pull(w);
+            assert_eq!(a, b, "{kind} step {step}: pulls diverged");
+            let g: Vec<f32> = (0..k).map(|_| rng.normal() as f32 * 0.1).collect();
+            let sa = shared.push_concurrent(w, &g).unwrap();
+            let sb = owned.push(w, &g).unwrap();
+            assert_eq!(sa, sb, "{kind} step {step}: applied steps diverged");
+        }
+        assert_eq!(shared.theta_vec(), owned.theta_vec(), "{kind}");
+        assert_eq!(
+            shared.snapshot_concurrent().unwrap(),
+            owned.snapshot_concurrent().unwrap(),
+            "{kind}: full state diverged"
+        );
+    }
+}
+
+// ---------------------------------------------------------------- (2)
+
+/// pull → noisy grad → push over 2 workers (shared with the resume test).
+fn drive(m: &mut dyn Master, curv: &[f32], rng: &mut Rng, steps: usize) {
+    let k = curv.len();
+    let mut buf = vec![0.0f32; k];
+    let mut g = vec![0.0f32; k];
+    for step in 0..steps {
+        let w = step % 2;
+        m.pull_into(w, &mut buf);
+        real_async::synthetic_grad(&buf, curv, rng, &mut g);
+        m.push_update(w, &g).unwrap();
+    }
+}
+
+/// Shard-sliced frames ≡ monolithic frames, against both backends.
+#[test]
+fn sliced_frames_match_monolithic_frames_bit_for_bit() {
+    let k = 45; // not divisible by 7: uneven shard lengths on the wire
+    for striped in [false, true] {
+        let c = cfg(AlgorithmKind::DanaDc, 2, 1.0, 7);
+        let mut srv_a = start_backend(&c, k, striped, ServeOptions::default());
+        let mut srv_b = start_backend(&c, k, striped, ServeOptions::default());
+        let mut full = RemoteMaster::connect(&srv_a.url(), 2).unwrap();
+        let mut sliced = RemoteMaster::connect(&srv_b.url(), 2).unwrap();
+        assert_eq!(sliced.server_shards(), 7);
+        sliced.set_shard_frames(true);
+        let curv = real_async::synthetic_curvature(k);
+        let (mut rng_a, mut rng_b) = (Rng::new(5), Rng::new(5));
+        let mut buf_a = vec![0.0f32; k];
+        let mut buf_b = vec![0.0f32; k];
+        for step in 0..60 {
+            let w = step % 2;
+            full.pull_into(w, &mut buf_a);
+            sliced.pull_into(w, &mut buf_b);
+            assert_eq!(buf_a, buf_b, "striped={striped} step {step}: pulls diverged");
+            let mut ga = vec![0.0f32; k];
+            let mut gb = vec![0.0f32; k];
+            real_async::synthetic_grad(&buf_a, &curv, &mut rng_a, &mut ga);
+            real_async::synthetic_grad(&buf_b, &curv, &mut rng_b, &mut gb);
+            let sa = full.push_update(w, &ga).unwrap();
+            let sb = sliced.push_update(w, &gb).unwrap();
+            assert_eq!(sa, sb, "striped={striped} step {step}: applied steps diverged");
+        }
+        assert_eq!(
+            full.theta_vec(),
+            sliced.theta_vec(),
+            "striped={striped}: final parameters diverged"
+        );
+        assert_eq!(full.steps_done(), sliced.steps_done());
+        srv_a.stop();
+        srv_b.stop();
+    }
+}
+
+// ---------------------------------------------------------------- (1c)
+
+/// checkpoint → kill → resume → reconnect on the striped backend, with a
+/// shard-sliced client, continues bit-for-bit against an uninterrupted
+/// in-process reference of the same shard layout.
+#[test]
+fn checkpoint_kill_resume_reconnect_on_striped_backend() {
+    let k = 32;
+    let c = cfg(AlgorithmKind::DanaZero, 2, 1.0, 7);
+    let dir = tmpdir("resume");
+    let ckpt = dir.join("striped.ckpt");
+    let opts = ServeOptions {
+        leave_policy: LeavePolicy::Retire,
+        checkpoint_path: Some(ckpt.clone()),
+        checkpoint_every: 0,
+    };
+
+    let mut srv = start_backend(&c, k, true, opts.clone());
+    let mut rm = RemoteMaster::connect(&srv.url(), 2).unwrap();
+    rm.set_shard_frames(true);
+
+    // uninterrupted in-process reference over the same op sequence
+    let mut reference = make_master(
+        c.algorithm,
+        &real_async::synthetic_theta0(k),
+        schedule_of(&c),
+        0,
+        c.shards,
+        1,
+    );
+    assert_eq!(reference.add_worker(), 0);
+    assert_eq!(reference.add_worker(), 1);
+
+    let curv = real_async::synthetic_curvature(k);
+    let mut rng_ref = Rng::new(91);
+    let mut rng_net = Rng::new(91);
+
+    drive(&mut *reference, &curv, &mut rng_ref, 40);
+    drive(&mut rm, &curv, &mut rng_net, 40);
+    rm.force_checkpoint().unwrap();
+    assert_eq!(checkpoint::read_snapshot(&ckpt).unwrap().master_step, 40);
+
+    // hard kill: no final checkpoint, client connections go dead
+    srv.stop();
+    drop(srv);
+
+    // resume into a fresh striped server on a fresh port
+    let snap = checkpoint::read_snapshot(&ckpt).unwrap();
+    let mut resumed = make_serving_master(
+        c.algorithm,
+        &real_async::synthetic_theta0(k),
+        schedule_of(&c),
+        0,
+        c.shards,
+        1,
+        true,
+    );
+    resumed.restore(&snap).unwrap();
+    let mut srv2 = NetServer::start_serving(resumed, "127.0.0.1:0", opts).unwrap();
+
+    // reconnect-as-join: both workers re-attach to their old slots
+    rm.reconnect_to(&srv2.url()).unwrap();
+    assert_eq!(rm.server_slot(0), Some(0));
+    assert_eq!(rm.server_slot(1), Some(1));
+
+    drive(&mut *reference, &curv, &mut rng_ref, 40);
+    drive(&mut rm, &curv, &mut rng_net, 40);
+
+    assert_eq!(rm.steps_done(), 80);
+    assert_eq!(
+        rm.theta_vec(),
+        reference.theta_vec(),
+        "trajectory diverged across the kill/resume cycle"
+    );
+    // final full state equality (θ, vᶦ, v⁰, bookkeeping)
+    rm.force_checkpoint().unwrap();
+    let fin = checkpoint::read_snapshot(&ckpt).unwrap();
+    assert_eq!(fin, reference.snapshot().unwrap());
+    srv2.stop();
+}
+
+// ---------------------------------------------------------------- (3)
+
+/// Many-thread hammer through real sockets: clients (half sliced, half
+/// monolithic) concurrently push IDENTICAL messages; the ticket gates
+/// make any interleaving equal to the serial trajectory bit-for-bit
+/// (identical messages ⇒ the per-step float ops don't depend on which
+/// client lands which ticket).
+#[test]
+fn hammer_concurrent_clients_equal_serial_fifo() {
+    let k = 53;
+    let c = cfg(AlgorithmKind::Asgd, 6, 1.0, 8);
+    let srv = start_backend(&c, k, true, ServeOptions::default());
+    let url = srv.url();
+    let clients = 6usize;
+    let per = 30usize;
+    let g = vec![0.004f32; k];
+    std::thread::scope(|s| {
+        for t in 0..clients {
+            let url = url.clone();
+            let g = &g;
+            s.spawn(move || {
+                let mut rm = RemoteMaster::connect(&url, 1).unwrap();
+                rm.set_shard_frames(t % 2 == 0);
+                let mut buf = vec![0.0f32; k];
+                rm.pull_into(0, &mut buf);
+                for _ in 0..per {
+                    rm.push_update(0, g).unwrap();
+                }
+                // leave deliberately so the scope can't hang on EOF races
+                rm.remove_worker(0, LeavePolicy::Retire).unwrap();
+            });
+        }
+    });
+    assert_eq!(srv.steps_done(), (clients * per) as u64);
+
+    // serial replica: same push count, same message, same schedule
+    let mut serial = ShardedParameterServer::new(
+        c.algorithm,
+        &real_async::synthetic_theta0(k),
+        schedule_of(&c),
+        1,
+        8,
+    );
+    serial.pull(0);
+    for _ in 0..clients * per {
+        serial.push(0, &g).unwrap();
+    }
+    // read the final parameters over the wire, then stop
+    let mut ctl = RemoteMaster::connect(&url, 0).unwrap();
+    assert_eq!(ctl.theta_vec(), serial.theta_vec(), "hammer diverged from serial FIFO");
+    drop(ctl);
+    drop(srv);
+}
+
+// ---------------------------------------------------------------- (4)
+
+struct RawConn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+    gen: u32,
+}
+
+impl RawConn {
+    fn open(addr: &SocketAddr, role: Role) -> RawConn {
+        let s = TcpStream::connect(addr).unwrap();
+        let mut conn = RawConn {
+            r: BufReader::new(s.try_clone().unwrap()),
+            w: BufWriter::new(s),
+            gen: 0,
+        };
+        match conn.req(&Msg::Hello { role, reattach: false }) {
+            Msg::HelloAck { gen, .. } => conn.gen = gen,
+            other => panic!("handshake failed: {other:?}"),
+        }
+        conn
+    }
+
+    fn req(&mut self, m: &Msg) -> Msg {
+        write_frame(&mut self.w, m).unwrap();
+        read_frame(&mut self.r).unwrap()
+    }
+}
+
+/// Sliced-push discipline: duplicate slices and interleaved worker
+/// requests fail closed (dropping the half-built group), and a half-sent
+/// group dies with its connection — never half-applied.
+#[test]
+fn sliced_push_protocol_fails_closed() {
+    let k = 12;
+    let c = cfg(AlgorithmKind::Asgd, 2, 1.0, 3);
+    let srv = start_backend(&c, k, true, ServeOptions::default());
+    let addr = srv.addr();
+    let slice0 = vec![0.1f32; 4]; // shard_bounds(12, 3) = three slices of 4
+
+    let mut w = RawConn::open(&addr, Role::Worker);
+    // must pull before pushing, like any worker
+    for shard in 0..3u32 {
+        assert!(matches!(w.req(&Msg::PullShard { shard }), Msg::ShardParams { .. }));
+    }
+    // wrong-length slice: fatal
+    let gen = w.gen;
+    assert!(matches!(
+        w.req(&Msg::PushShard { gen, shard: 0, msg: vec![0.1; 5] }),
+        Msg::Error { recoverable: false, .. }
+    ));
+    let slice_req = |w: &mut RawConn, shard: u32| {
+        w.req(&Msg::PushShard { gen, shard, msg: slice0.clone() })
+    };
+    // duplicate slice in one group: fatal, group dropped
+    assert!(matches!(slice_req(&mut w, 0), Msg::Ack { .. }));
+    assert!(matches!(slice_req(&mut w, 0), Msg::Error { recoverable: false, .. }));
+    // interleaving a full Push into an open group: fatal, group dropped
+    assert!(matches!(slice_req(&mut w, 1), Msg::Ack { .. }));
+    assert!(matches!(
+        w.req(&Msg::Push { gen, msg: vec![0.1; k] }),
+        Msg::Error { recoverable: false, .. }
+    ));
+    assert_eq!(srv.steps_done(), 0, "no partial group may apply");
+    // a clean complete group still applies afterwards
+    assert!(matches!(slice_req(&mut w, 0), Msg::Ack { .. }));
+    assert!(matches!(slice_req(&mut w, 2), Msg::Ack { .. }));
+    assert!(matches!(slice_req(&mut w, 1), Msg::PushAck { .. }));
+    assert_eq!(srv.steps_done(), 1);
+
+    // a second worker abandons a group mid-flight: dropped with the conn
+    let mut dying = RawConn::open(&addr, Role::Worker);
+    for shard in 0..3u32 {
+        assert!(matches!(dying.req(&Msg::PullShard { shard }), Msg::ShardParams { .. }));
+    }
+    let dgen = dying.gen;
+    assert!(matches!(
+        dying.req(&Msg::PushShard { gen: dgen, shard: 0, msg: slice0.clone() }),
+        Msg::Ack { .. }
+    ));
+    drop(dying); // EOF with one slice buffered
+    // give the server a moment to process the disconnect
+    let mut ctl = RawConn::open(&addr, Role::Control);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    loop {
+        if let Msg::Ack { header } = ctl.req(&Msg::Status) {
+            if header.live_workers == 1 {
+                break;
+            }
+        }
+        assert!(std::time::Instant::now() < deadline, "leave never processed");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(srv.steps_done(), 1, "abandoned group must not apply");
+    drop(srv);
+}

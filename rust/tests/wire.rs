@@ -1,8 +1,10 @@
-//! Wire-protocol property suite (ISSUE 3 satellite): encode/decode
-//! round-trips for every message type — including empty and huge
-//! payloads — and *rejection* (never a panic) of truncated frames, bad
-//! magic, bad versions, oversized length prefixes, unknown tags, and
-//! trailing bytes.
+//! Wire-protocol property suite (ISSUE 3 satellite, extended for the v2
+//! shard-sliced frames in ISSUE 4): encode/decode round-trips for every
+//! message type — including empty and huge payloads — and *rejection*
+//! (never a panic) of truncated frames, bad magic, bad versions,
+//! oversized length prefixes, unknown tags, and trailing bytes; plus the
+//! encode-side symmetry: `write_frame` refuses an over-cap body before
+//! serializing, instead of letting the `u32` length prefix truncate.
 
 use dana::net::wire::{read_frame, write_frame, Header, Msg, Role, MAGIC, MAX_FRAME, VERSION};
 use dana::optim::{AlgorithmKind, LeavePolicy};
@@ -35,15 +37,22 @@ fn all_messages() -> Vec<Msg> {
         Msg::Status,
         Msg::GetTheta,
         Msg::Shutdown,
+        Msg::PullShard { shard: 0 },
+        Msg::PullShard { shard: u32::MAX },
+        Msg::PushShard { gen: 0, shard: 0, msg: vec![] },
+        Msg::PushShard { gen: 9, shard: 6, msg: vec![-1.5, 0.25, f32::MAX] },
         Msg::HelloAck {
             slot: u64::MAX,
             gen: 7,
             kind: AlgorithmKind::DanaSlim,
             k: 101_386,
+            shards: 16,
             header: h,
         },
         Msg::Params { header: h, params: vec![] },
         Msg::Params { header: h, params: (0..257).map(|i| (i as f32 * 0.7).sin()).collect() },
+        Msg::ShardParams { header: h, shard: 3, params: vec![0.5; 11] },
+        Msg::ShardParams { header: h, shard: 0, params: vec![] },
         Msg::PushAck { header: h, eta: 0.05, gamma: 0.9, lambda: 2.0 },
         Msg::Ack { header: h },
         Msg::Theta { header: h, theta: vec![1.0; 3] },
@@ -51,7 +60,7 @@ fn all_messages() -> Vec<Msg> {
         Msg::Error { recoverable: false, detail: "straggler push for slot 3 (gen 2 != 5)".into() },
     ];
     for kind in AlgorithmKind::ALL {
-        msgs.push(Msg::HelloAck { slot: 0, gen: 1, kind, k: 16, header: h });
+        msgs.push(Msg::HelloAck { slot: 0, gen: 1, kind, k: 16, shards: 1, header: h });
     }
     // huge payload: ~1.2 MB of parameters round-trips bit-exactly
     let huge: Vec<f32> = (0..300_000).map(|i| (i as f32).to_bits() as f32 * 1e-30).collect();
@@ -201,6 +210,44 @@ fn trailing_bytes_are_rejected() {
         let err = read_frame(&mut Cursor::new(frame)).unwrap_err();
         assert!(err.to_string().contains("trailing"), "{m:?}: {err}");
     }
+}
+
+#[test]
+fn body_len_matches_the_encoder_for_every_message() {
+    // write_frame's oversize rejection is only sound if the arithmetic
+    // body_len agrees with what encode actually produces
+    for m in all_messages() {
+        assert_eq!(m.encode().len(), 4 + m.body_len(), "{m:?}");
+    }
+}
+
+#[test]
+fn oversize_encode_is_rejected_before_serialization() {
+    // A payload whose frame body would exceed MAX_FRAME: the u32 length
+    // prefix would silently truncate it without the encode-side guard.
+    // (The vec is zero-initialized — the allocator maps it lazily and
+    // write_frame must refuse before ever touching the data.)
+    let n = MAX_FRAME as usize / 4;
+    type Make = fn(Vec<f32>) -> Msg;
+    let cases: [Make; 3] = [
+        |v| Msg::Push { gen: 1, msg: v },
+        |v| Msg::PushShard { gen: 1, shard: 0, msg: v },
+        |v| Msg::Theta { header: sample_header(), theta: v },
+    ];
+    for make in cases {
+        // one lazily-mapped buffer at a time; never cloned, never read
+        let msg = make(vec![0.0f32; n]);
+        assert!(msg.body_len() > MAX_FRAME as usize, "test premise");
+        let mut sink = Vec::new();
+        let err = write_frame(&mut sink, &msg).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err}");
+        assert!(sink.is_empty(), "nothing may reach the wire");
+    }
+    // symmetric with the decoder: an under-cap frame still flows
+    let ok = Msg::Push { gen: 1, msg: vec![0.0; 64] };
+    let mut sink = Vec::new();
+    write_frame(&mut sink, &ok).unwrap();
+    assert_eq!(read_frame(&mut Cursor::new(sink)).unwrap(), ok);
 }
 
 #[test]
