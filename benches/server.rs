@@ -347,4 +347,58 @@ fn main() {
     }
 
     b.finish_json("BENCH_serve.json");
+
+    // ---------------------------------------------------------- train
+    // Worker-cycle rows (BENCH_train.json): one full pipelined worker
+    // cycle — push + pull — against a loopback TCP master, sync (D=0,
+    // blocking round trips) vs pipelined (D∈{1,2}, deferred-ack sends:
+    // the push frame goes out, the following pull harvests its ack, so a
+    // cycle costs ONE combined round trip).  The in-process row prices
+    // the master work alone, bounding what the transport adds.
+    let mut bt = BenchSuite::new("train");
+    let kt = 65_536usize;
+    let theta0: Vec<f32> = (0..kt).map(|i| (i as f32 * 0.7).sin()).collect();
+    let grad: Vec<f32> = vec![0.01; kt];
+    {
+        let mut ps = ParameterServer::new(
+            make_algorithm(AlgorithmKind::DanaZero, &theta0, 1),
+            schedule(),
+            1,
+        );
+        ps.pull(0);
+        bt.bench_with_bytes("cycle/in_process/dana-zero", Some((kt * 4 * 7) as u64), || {
+            ps.push(0, &grad).unwrap();
+            std::hint::black_box(ps.pull(0));
+        });
+    }
+    for &depth in &[0usize, 1, 2] {
+        let master: Box<dyn Master> = Box::new(ParameterServer::new(
+            make_algorithm(AlgorithmKind::DanaZero, &theta0, 0),
+            schedule(),
+            0,
+        ));
+        let opts = dana::net::ServeOptions { pipeline_depth: depth, ..Default::default() };
+        let mut srv =
+            dana::net::NetServer::start(master, "127.0.0.1:0", opts).expect("bind loopback");
+        let mut rm = dana::net::RemoteMaster::connect(&srv.url(), 1).expect("connect loopback");
+        rm.set_pipeline_depth(depth);
+        let mut buf = vec![0.0f32; kt];
+        for _ in 0..=depth {
+            rm.pull_into(0, &mut buf); // prime the pipeline window
+        }
+        let label = if depth == 0 { "sync" } else { "pipelined" };
+        bt.bench_with_bytes(
+            &format!("cycle/loopback/{label}/D={depth}"),
+            Some((kt * 4 * 2) as u64),
+            || {
+                rm.push_update(0, &grad).unwrap();
+                rm.pull_into(0, &mut buf);
+                std::hint::black_box(&buf);
+            },
+        );
+        rm.drain_inflight().unwrap();
+        drop(rm);
+        srv.stop();
+    }
+    bt.finish_json("BENCH_train.json");
 }

@@ -117,6 +117,19 @@ pub struct TrainConfig {
     /// see DESIGN.md §9).  Only meaningful with `master_addr` against a
     /// server running `--shards > 1`; a no-op otherwise.
     pub shard_frames: bool,
+    /// Worker pipeline depth D: each worker keeps D+1 batches in flight,
+    /// overlapping its push/pull round trip with the next gradient
+    /// computation, at the cost of D extra *own* steps of (known,
+    /// deterministic) staleness — which DANA's look-ahead extrapolates
+    /// for (`Algorithm::set_staleness_hint`).  0 = the classic
+    /// synchronous pull→compute→push cycle, bit-for-bit (DESIGN.md §10).
+    pub pipeline_depth: usize,
+    /// Simulated pull→params round-trip time in the gamma clock's units
+    /// (`--rtt`; sim drivers only).  0 = communication is free, the
+    /// classic schedule.  With rtt > 0 the completion schedule charges a
+    /// depth-0 worker one rtt per cycle and lets a pipelined worker hide
+    /// it behind compute — the timing half of the pipeline model.
+    pub rtt: f64,
 }
 
 impl TrainConfig {
@@ -181,6 +194,8 @@ impl TrainConfig {
             leave_policy: LeavePolicy::default(),
             master_addr: None,
             shard_frames: false,
+            pipeline_depth: 0,
+            rtt: 0.0,
         }
     }
 
@@ -285,6 +300,23 @@ impl TrainConfig {
             self.shard_frames =
                 v.as_bool().ok_or_else(|| anyhow::anyhow!("bad shard_frames"))?;
         }
+        if let Some(v) = j.get("pipeline_depth") {
+            self.pipeline_depth =
+                v.as_usize().ok_or_else(|| anyhow::anyhow!("bad pipeline_depth"))?;
+            anyhow::ensure!(
+                self.pipeline_depth < crate::server::MAX_PULL_WINDOW,
+                "pipeline_depth {} exceeds the supported window ({})",
+                self.pipeline_depth,
+                crate::server::MAX_PULL_WINDOW - 1
+            );
+        }
+        if let Some(v) = j.get("rtt") {
+            self.rtt = v.as_f64().ok_or_else(|| anyhow::anyhow!("bad rtt"))?;
+            anyhow::ensure!(
+                self.rtt.is_finite() && self.rtt >= 0.0,
+                "rtt must be finite and >= 0"
+            );
+        }
         Ok(())
     }
 
@@ -343,6 +375,21 @@ mod tests {
         assert_eq!(c.shards, 8);
         assert_eq!(c.churn.events.len(), 2);
         assert_eq!(c.leave_policy, LeavePolicy::Fold);
+    }
+
+    #[test]
+    fn pipeline_depth_applies_from_json() {
+        let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
+        assert_eq!(c.pipeline_depth, 0, "preset must default to the synchronous cycle");
+        assert_eq!(c.rtt, 0.0, "preset must default to free communication");
+        let j = Json::parse(r#"{"pipeline_depth":2,"rtt":32.5}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.pipeline_depth, 2);
+        assert_eq!(c.rtt, 32.5);
+        let j = Json::parse(r#"{"pipeline_depth":1000}"#).unwrap();
+        assert!(c.apply_json(&j).is_err(), "absurd depth rejected");
+        let j = Json::parse(r#"{"rtt":-1.0}"#).unwrap();
+        assert!(c.apply_json(&j).is_err(), "negative rtt rejected");
     }
 
     #[test]

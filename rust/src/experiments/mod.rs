@@ -6,6 +6,7 @@ pub mod churn;
 pub mod gap;
 pub mod hetero;
 pub mod imagenet;
+pub mod pipeline;
 pub mod speedup;
 
 use std::path::PathBuf;
@@ -32,11 +33,12 @@ impl Default for ExpOptions {
 }
 
 /// All experiment ids, in paper order, plus this repo's own extensions
-/// (`churn`: the elastic-membership sweep, artifact-free).
+/// (`churn`: the elastic-membership sweep; `pipeline`: the worker
+/// pipeline depth × workers sweep — both artifact-free).
 pub const ALL_IDS: &[&str] = &[
     "fig2a", "fig2b", "fig3", "fig4", "fig5", "fig6", "fig7", "fig9", "fig10",
     "fig11", "fig12", "fig13", "table1", "table2", "table3", "table4", "table5",
-    "table6", "churn",
+    "table6", "churn", "pipeline",
 ];
 
 /// Run one experiment by id.
@@ -61,6 +63,7 @@ pub fn run(id: &str, opts: &ExpOptions) -> anyhow::Result<()> {
         "fig13" => hetero::fig13(opts),
         "table6" => hetero::table6(opts),
         "churn" => churn::churn(opts),
+        "pipeline" => pipeline::pipeline(opts),
         "all" => {
             for id in ALL_IDS {
                 println!("=== {id} ===");

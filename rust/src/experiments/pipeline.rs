@@ -1,0 +1,129 @@
+//! Pipeline-depth sweep: what does compute/communication overlap buy, and
+//! what does its extra staleness cost?
+//!
+//! The pipelined worker runtime (`--pipeline-depth D`, DESIGN.md §10)
+//! trades exactly `D` extra *own* steps of deterministic staleness for
+//! hiding the master round trip behind compute.  This sweep quantifies
+//! both sides on the seeded synthetic quadratic (artifact-free, simulated
+//! clock with `--rtt > 0` so communication actually costs time): for each
+//! algorithm × worker count × depth it reports the simulated time to run
+//! the step budget (the throughput win), the final loss (the staleness
+//! cost), and the mean gap/lag (the paper's staleness measurements,
+//! which shift by ~`D·N` master steps).  The question it answers: does
+//! DANA's depth-extrapolated look-ahead keep the loss flat where the
+//! momentum baselines degrade as `D` grows?
+//!
+//! Run: `dana experiment pipeline [--full] [--out DIR]` → `pipeline.csv`
+//! + a printed table.
+
+use super::ExpOptions;
+use crate::config::{TrainConfig, Workload};
+use crate::optim::AlgorithmKind;
+use crate::train::sim_trainer;
+use crate::util::csvw::{fnum, CsvWriter};
+
+/// Parameter count of the synthetic quadratic (matches the churn sweep).
+const K: usize = 2048;
+
+/// Simulated pull→params round-trip time, in the gamma clock's units
+/// (mean batch time is ~the per-worker batch size, 128): a depth-0
+/// worker loses ~25% of its cycle to communication, which a depth-1
+/// pipeline mostly hides.
+const RTT: f64 = 32.0;
+
+fn sweep_cfg(
+    alg: AlgorithmKind,
+    workers: usize,
+    depth: usize,
+    epochs: f64,
+    seed: u64,
+) -> TrainConfig {
+    let mut cfg = TrainConfig::preset(Workload::C10, alg, workers, epochs);
+    cfg.seed = seed;
+    cfg.metrics_every = 5;
+    cfg.pipeline_depth = depth;
+    cfg.rtt = RTT;
+    cfg
+}
+
+/// The depth × workers sweep (registered as experiment id `pipeline`).
+pub fn pipeline(opts: &ExpOptions) -> anyhow::Result<()> {
+    let epochs = if opts.quick { 4.0 } else { 16.0 };
+    let (depths, workers): (&[usize], &[usize]) = if opts.quick {
+        (&[0, 1, 2], &[4, 8])
+    } else {
+        (&[0, 1, 2, 4], &[4, 8, 16])
+    };
+    let algs = [
+        AlgorithmKind::DanaZero,
+        AlgorithmKind::DanaDc,
+        AlgorithmKind::DanaSlim,
+        AlgorithmKind::NagAsgd,
+        AlgorithmKind::Lwp,
+        AlgorithmKind::Asgd,
+    ];
+    let mut w = CsvWriter::create(
+        &opts.out_dir.join("pipeline.csv"),
+        &[
+            "algorithm",
+            "n_workers",
+            "depth",
+            "rtt",
+            "seed",
+            "final_loss",
+            "dloss_vs_d0",
+            "mean_gap",
+            "mean_lag",
+            "sim_time",
+            "speedup_vs_d0",
+        ],
+    )?;
+    println!(
+        "pipeline sweep: {} algorithms x workers {workers:?} x depth {depths:?}, rtt={RTT}, k={K}",
+        algs.len()
+    );
+    println!(
+        "{:<11} {:>3} {:>3} {:>11} {:>10} {:>8} {:>10} {:>8}",
+        "algorithm", "N", "D", "final_loss", "dloss", "lag", "sim_time", "speedup"
+    );
+    for &alg in &algs {
+        for &n in workers {
+            for seed in 1..=opts.seeds {
+                let mut d0: Option<(f64, f64)> = None; // (loss, sim_time) at D=0
+                for &depth in depths {
+                    let rep =
+                        sim_trainer::run_synthetic(&sweep_cfg(alg, n, depth, epochs, seed), K)?;
+                    let (base_loss, base_time) =
+                        *d0.get_or_insert((rep.final_test_loss, rep.sim_time));
+                    let dloss = rep.final_test_loss - base_loss;
+                    let speedup = base_time / rep.sim_time.max(1e-12);
+                    println!(
+                        "{:<11} {:>3} {:>3} {:>11.3e} {:>+10.2e} {:>8.1} {:>10.0} {:>8.2}x",
+                        alg.name(),
+                        n,
+                        depth,
+                        rep.final_test_loss,
+                        dloss,
+                        rep.mean_lag,
+                        rep.sim_time,
+                        speedup
+                    );
+                    w.row(&[
+                        alg.name().to_string(),
+                        n.to_string(),
+                        depth.to_string(),
+                        fnum(RTT),
+                        seed.to_string(),
+                        fnum(rep.final_test_loss),
+                        fnum(dloss),
+                        fnum(rep.mean_gap),
+                        fnum(rep.mean_lag),
+                        fnum(rep.sim_time),
+                        fnum(speedup),
+                    ])?;
+                }
+            }
+        }
+    }
+    Ok(())
+}

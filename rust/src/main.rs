@@ -40,11 +40,11 @@ const USAGE: &str = "usage: dana <train|serve|experiment|simulate|info> [options
              [--shards S] [--churn \"leave@0.3:2,join@0.5,slow@0.6:0=4x\"]
              [--leave-policy retire|fold] [--config file.json] [--use-pallas]
              [--synthetic] [--k K] [--master tcp://HOST:PORT] [--shard-frames]
-             [--artifacts DIR]
+             [--pipeline-depth D] [--rtt T] [--artifacts DIR]
   serve      --listen HOST:PORT --algorithm A [--workload W | --synthetic --k K]
              [--workers N] [--epochs E] [--shards S] [--serve-threads T]
-             [--leave-policy retire|fold] [--checkpoint PATH]
-             [--checkpoint-every STEPS] [--resume PATH]
+             [--pipeline-depth D] [--leave-policy retire|fold]
+             [--checkpoint PATH] [--checkpoint-every STEPS] [--resume PATH]
              [--metrics-every K] [--seed S] [--artifacts DIR]
   experiment <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|fig12|fig13|
               table1..table6|churn|all> [--full] [--seeds K] [--out DIR]
@@ -118,10 +118,25 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     if args.flag("shard-frames") {
         cfg.shard_frames = true;
     }
+    if let Some(d) = args.opt_parse::<usize>("pipeline-depth")? {
+        anyhow::ensure!(
+            d < dana::server::MAX_PULL_WINDOW,
+            "--pipeline-depth {d} exceeds the supported window ({})",
+            dana::server::MAX_PULL_WINDOW - 1
+        );
+        cfg.pipeline_depth = d;
+    }
+    if let Some(rtt) = args.opt_parse::<f64>("rtt")? {
+        anyhow::ensure!(rtt.is_finite() && rtt >= 0.0, "--rtt must be finite and >= 0");
+        cfg.rtt = rtt;
+    }
     let synthetic = args.flag("synthetic");
     let synth_k = args.parse_or::<usize>("k", 256)?;
     let mode = args.str_or("mode", "sim");
     args.finish()?;
+    if cfg.pipeline_depth > 0 && matches!(mode.as_str(), "ssgd" | "baseline") {
+        anyhow::bail!("--pipeline-depth applies only to --mode sim|real (got --mode {mode})");
+    }
     if cfg.shards > 1 && matches!(mode.as_str(), "ssgd" | "baseline") {
         anyhow::bail!("--shards applies only to --mode sim|real (got --mode {mode})");
     }
@@ -206,6 +221,12 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let synth_k = args.parse_or::<usize>("k", 256)?;
     let shards = args.parse_or::<usize>("shards", 1)?.max(1);
     let serve_threads = args.parse_or::<usize>("serve-threads", 1)?;
+    let pipeline_depth = args.parse_or::<usize>("pipeline-depth", 0)?;
+    anyhow::ensure!(
+        pipeline_depth < dana::server::MAX_PULL_WINDOW,
+        "--pipeline-depth {pipeline_depth} exceeds the supported window ({})",
+        dana::server::MAX_PULL_WINDOW - 1
+    );
     let leave_policy =
         args.parse_or::<dana::optim::LeavePolicy>("leave-policy", Default::default())?;
     let checkpoint_path = args.opt_str("checkpoint").map(PathBuf::from);
@@ -268,10 +289,11 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     };
     master.set_metrics_every(metrics_every);
     let k = master.param_len();
-    let opts = ServeOptions { leave_policy, checkpoint_path, checkpoint_every };
+    let opts = ServeOptions { leave_policy, checkpoint_path, checkpoint_every, pipeline_depth };
     let mut srv = NetServer::start_serving(master, &listen, opts)?;
     println!(
-        "dana serve: {} k={k} shards={shards} ({}) on {} — join with `dana train --master {}`",
+        "dana serve: {} k={k} shards={shards} ({}) pipeline-depth={pipeline_depth} on {} — \
+         join with `dana train --master {}`",
         algorithm.name(),
         if striped { "lock-striped" } else { "global-lock" },
         srv.addr(),

@@ -150,6 +150,59 @@ pub fn lookahead(hat: &mut [f32], theta: &[f32], vsum: &[f32], gamma: f32, eta: 
     }
 }
 
+/// DANA look-ahead extrapolated `depth` *extra* momentum-only steps
+/// (pipelined workers): starting from (θ, v⁰), apply `depth` gradient-free
+/// momentum steps `v ← γv; θ ← θ − ηv`, then the usual Eq 11 look-ahead at
+/// the extrapolated point.  `depth = 0` performs exactly the operations of
+/// [`lookahead`] (bit-for-bit — the pipelined driver at `--pipeline-depth
+/// 0` must reproduce the synchronous trajectory exactly), and `depth = D`
+/// is bit-for-bit `D` literal momentum-only applications followed by the
+/// plain look-ahead, which `rust/tests/pipeline.rs` pins per coordinate.
+pub fn lookahead_extrapolated(
+    hat: &mut [f32],
+    theta: &[f32],
+    vsum: &[f32],
+    gamma: f32,
+    eta: f32,
+    depth: usize,
+) {
+    debug_assert!(hat.len() == theta.len() && theta.len() == vsum.len());
+    let c = eta * gamma;
+    for ((h, &t0), &v0) in hat.iter_mut().zip(theta).zip(vsum) {
+        let mut t = t0;
+        let mut v = v0;
+        for _ in 0..depth {
+            v = gamma * v;
+            t -= eta * v;
+        }
+        *h = t - c * v;
+    }
+}
+
+/// Momentum-only position extrapolation: where θ lands after `depth`
+/// gradient-free steps of `v ← γv; θ ← θ − ηv` — the future position a
+/// shared-momentum rule (NAG-ASGD) sends to a worker whose gradient will
+/// settle `depth` of its own steps in the future.  `depth = 0` copies θ.
+pub fn extrapolate_position(
+    out: &mut [f32],
+    theta: &[f32],
+    v: &[f32],
+    gamma: f32,
+    eta: f32,
+    depth: usize,
+) {
+    debug_assert!(out.len() == theta.len() && theta.len() == v.len());
+    for ((o, &t0), &v0) in out.iter_mut().zip(theta).zip(v) {
+        let mut t = t0;
+        let mut vv = v0;
+        for _ in 0..depth {
+            vv = gamma * vv;
+            t -= eta * vv;
+        }
+        *o = t;
+    }
+}
+
 /// DC-ASGD gradient adjustment (Eq 17):
 /// `g_hat = g + lambda * g⊙g⊙(theta_master - theta_sent)`, in place on `g`.
 pub fn dc_adjust(g: &mut [f32], theta_master: &[f32], theta_sent: &[f32], lambda: f32) {
@@ -398,6 +451,47 @@ mod tests {
         let split = sub_norm_sq(&a[..40], &b[..40]) + sub_norm_sq(&a[40..], &b[40..]);
         assert!((whole - split).abs() < 1e-12 * (1.0 + whole));
         assert!((sub_norm(&a, &b) - whole.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn extrapolated_lookahead_depth_zero_is_plain_lookahead() {
+        let k = 67;
+        let theta = v(k, |i| (i as f32 * 0.13).cos());
+        let vsum = v(k, |i| (i as f32 * 0.29).sin() * 3.0);
+        let mut a = vec![0.0f32; k];
+        let mut b = vec![0.0f32; k];
+        lookahead(&mut a, &theta, &vsum, 0.9, 0.05);
+        lookahead_extrapolated(&mut b, &theta, &vsum, 0.9, 0.05, 0);
+        assert_eq!(a, b, "depth 0 must be bit-for-bit the plain look-ahead");
+        extrapolate_position(&mut b, &theta, &vsum, 0.9, 0.05, 0);
+        assert_eq!(b, theta, "depth 0 extrapolation is the identity");
+    }
+
+    #[test]
+    fn extrapolated_lookahead_equals_literal_momentum_applications() {
+        // depth D ≡ D gradient-free momentum steps then the plain
+        // look-ahead, exactly (the same per-coordinate op sequence).
+        let k = 41;
+        let (gamma, eta) = (0.9f32, 0.05f32);
+        for depth in [1usize, 2, 5] {
+            let theta0 = v(k, |i| (i as f32 * 0.17).sin());
+            let vsum0 = v(k, |i| (i as f32 * 0.23).cos() * 2.0);
+            let (mut t, mut vs) = (theta0.clone(), vsum0.clone());
+            for _ in 0..depth {
+                for (ti, vi) in t.iter_mut().zip(vs.iter_mut()) {
+                    *vi = gamma * *vi;
+                    *ti -= eta * *vi;
+                }
+            }
+            let mut want = vec![0.0f32; k];
+            lookahead(&mut want, &t, &vs, gamma, eta);
+            let mut got = vec![0.0f32; k];
+            lookahead_extrapolated(&mut got, &theta0, &vsum0, gamma, eta, depth);
+            assert_eq!(got, want, "depth {depth}");
+            let mut pos = vec![0.0f32; k];
+            extrapolate_position(&mut pos, &theta0, &vsum0, gamma, eta, depth);
+            assert_eq!(pos, t, "depth {depth}: position");
+        }
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //! [b"DANACKPT"][u32 version]
 //! [str kind][u64 master_step][f32 last_eta]
 //! [u64 k][k × f32 theta]
-//! [u64 n_slots][n × u8 live][n × u64 pulled_at][n × u8 has_pulled]
-//! [n × (u64 len + f32s) sent]
+//! [u64 n_slots][n × u8 live]
+//! [n × (u64 window; window × ([u64 pulled_at][u64 len + f32s params]))]
 //! [u32 n_state_entries] then per entry:
 //!     [str name][u8 shape_tag]
 //!     tag 0 (Coord):     [u64 len + f32s]
@@ -40,8 +40,13 @@ use std::path::Path;
 
 /// Checkpoint file magic.
 pub const CKPT_MAGIC: [u8; 8] = *b"DANACKPT";
-/// Checkpoint format version.
-pub const CKPT_VERSION: u32 = 1;
+/// Checkpoint format version (2: per-slot pull *windows* — the pipelined
+/// driver keeps up to `--pipeline-depth + 1` outstanding pulls per worker
+/// — replacing v1's single sent/pulled_at/has_pulled triple).  v1 files
+/// are still READ: the old triple maps losslessly onto a one-entry
+/// window, so a pre-pipeline cluster's checkpoint resumes into this
+/// build; writes are always v2.
+pub const CKPT_VERSION: u32 = 2;
 
 fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -65,14 +70,12 @@ pub fn encode_snapshot(s: &MasterSnapshot) -> Vec<u8> {
     for &l in &s.live {
         out.push(u8::from(l));
     }
-    for &p in &s.pulled_at {
-        put_u64(&mut out, p);
-    }
-    for &h in &s.has_pulled {
-        out.push(u8::from(h));
-    }
-    for sent in &s.sent {
-        put_vec_f32(&mut out, sent);
+    for window in &s.pulls {
+        put_u64(&mut out, window.len() as u64);
+        for (at, params) in window {
+            put_u64(&mut out, *at);
+            put_vec_f32(&mut out, params);
+        }
     }
     put_u32(&mut out, s.state.len() as u32);
     for (name, val) in &s.state {
@@ -114,8 +117,8 @@ pub fn decode_snapshot(bytes: &[u8]) -> anyhow::Result<MasterSnapshot> {
     anyhow::ensure!(magic == CKPT_MAGIC, "not a DANA checkpoint (magic {magic:02x?})");
     let version = d.u32()?;
     anyhow::ensure!(
-        version == CKPT_VERSION,
-        "checkpoint version {version} (this build reads {CKPT_VERSION})"
+        version == 1 || version == CKPT_VERSION,
+        "checkpoint version {version} (this build reads 1..={CKPT_VERSION})"
     );
     let kind = d.str()?.parse()?;
     let master_step = d.u64()?;
@@ -128,18 +131,37 @@ pub fn decode_snapshot(bytes: &[u8]) -> anyhow::Result<MasterSnapshot> {
     for _ in 0..n {
         live.push(d.u8()? != 0);
     }
-    let mut pulled_at = Vec::with_capacity(n);
-    for _ in 0..n {
-        pulled_at.push(d.u64()?);
-    }
-    let mut has_pulled = Vec::with_capacity(n);
-    for _ in 0..n {
-        has_pulled.push(d.u8()? != 0);
-    }
-    let mut sent = Vec::with_capacity(n);
-    for _ in 0..n {
-        sent.push(d.vec_f32()?);
-    }
+    let pulls = if version == 1 {
+        // v1 migration: the single sent/pulled_at/has_pulled triple is a
+        // one-entry pull window (empty when the slot never pulled)
+        let mut pulled_at = Vec::with_capacity(n);
+        for _ in 0..n {
+            pulled_at.push(d.u64()?);
+        }
+        let mut has_pulled = Vec::with_capacity(n);
+        for _ in 0..n {
+            has_pulled.push(d.u8()? != 0);
+        }
+        let mut pulls = Vec::with_capacity(n);
+        for w in 0..n {
+            let sent = d.vec_f32()?;
+            pulls.push(if has_pulled[w] { vec![(pulled_at[w], sent)] } else { vec![] });
+        }
+        pulls
+    } else {
+        let mut pulls = Vec::with_capacity(n);
+        for _ in 0..n {
+            let window = d.u64()? as usize;
+            anyhow::ensure!(window <= body.len(), "pull window {window} exceeds file size");
+            let mut q = Vec::with_capacity(window.min(64));
+            for _ in 0..window {
+                let at = d.u64()?;
+                q.push((at, d.vec_f32()?));
+            }
+            pulls.push(q);
+        }
+        pulls
+    };
     let n_state = d.u32()? as usize;
     let mut state: StateDict = Vec::with_capacity(n_state.min(64));
     for _ in 0..n_state {
@@ -167,9 +189,7 @@ pub fn decode_snapshot(bytes: &[u8]) -> anyhow::Result<MasterSnapshot> {
         last_eta,
         theta,
         live,
-        sent,
-        pulled_at,
-        has_pulled,
+        pulls,
         state,
     };
     snap.validate(kind, snap.theta.len())?;
@@ -243,9 +263,13 @@ mod tests {
             last_eta: 0.0125,
             theta: vec![1.5, -2.25, 0.0],
             live: vec![true, false, true],
-            sent: vec![vec![0.5; 3], vec![0.0; 3], vec![-1.0; 3]],
-            pulled_at: vec![40, 0, 39],
-            has_pulled: vec![true, false, true],
+            // slot 0 carries a depth-2 pipeline window, slot 1 is retired
+            // (empty window), slot 2 the classic single entry
+            pulls: vec![
+                vec![(39, vec![0.5; 3]), (40, vec![0.25; 3])],
+                vec![],
+                vec![(39, vec![-1.0; 3])],
+            ],
             state: vec![
                 (
                     "v".to_string(),
@@ -262,6 +286,55 @@ mod tests {
         let bytes = encode_snapshot(&s);
         let back = decode_snapshot(&bytes).unwrap();
         assert_eq!(back, s);
+    }
+
+    #[test]
+    fn v1_checkpoints_migrate_to_one_entry_windows() {
+        // Hand-encode the v1 layout (single sent/pulled_at/has_pulled
+        // triple per slot): a pre-pipeline cluster's checkpoint must
+        // resume into this build, each slot migrating to a one-entry
+        // window (empty when it never pulled).
+        let mut out = Vec::new();
+        out.extend_from_slice(&CKPT_MAGIC);
+        put_u32(&mut out, 1);
+        put_str(&mut out, "dana-zero");
+        put_u64(&mut out, 41); // master_step
+        put_f32(&mut out, 0.0125); // last_eta
+        put_vec_f32(&mut out, &[1.5, -2.25, 0.0]);
+        put_u64(&mut out, 3); // slots
+        for l in [1u8, 0, 1] {
+            out.push(l);
+        }
+        for p in [40u64, 0, 39] {
+            put_u64(&mut out, p);
+        }
+        for h in [1u8, 0, 1] {
+            out.push(h);
+        }
+        for sent in [[0.5f32; 3], [0.0; 3], [-1.0; 3]] {
+            put_vec_f32(&mut out, &sent);
+        }
+        put_u32(&mut out, 2); // state entries
+        put_str(&mut out, "v");
+        out.push(1);
+        put_u64(&mut out, 3);
+        for v in [[0.1f32; 3], [0.0; 3], [-0.2f32; 3]] {
+            put_vec_f32(&mut out, &v);
+        }
+        put_str(&mut out, "vsum");
+        out.push(0);
+        put_vec_f32(&mut out, &[-0.1f32; 3]);
+        let sum = fnv1a(&out);
+        put_u64(&mut out, sum);
+
+        let snap = decode_snapshot(&out).unwrap();
+        assert_eq!(snap.master_step, 41);
+        assert_eq!(snap.live, vec![true, false, true]);
+        assert_eq!(snap.pulls[0], vec![(40, vec![0.5; 3])]);
+        assert!(snap.pulls[1].is_empty(), "never-pulled slot → empty window");
+        assert_eq!(snap.pulls[2], vec![(39, vec![-1.0; 3])]);
+        // and the v2 re-encode of the migrated snapshot round-trips
+        assert_eq!(decode_snapshot(&encode_snapshot(&snap)).unwrap(), snap);
     }
 
     #[test]

@@ -34,6 +34,22 @@
 //! (DANA-Slim momentum) lives in the driver and survives reconnects
 //! untouched.
 //!
+//! **Pipelined pushes (deferred acks).**  With
+//! [`Master::set_pipeline_depth`] `> 0` (and monolithic frames) a push is
+//! a *send*: the frame is written and flushed, the ack left unread, and
+//! the round trip overlaps the worker's next computation.  Replies are
+//! FIFO per connection, so the harvest is free of ambiguity: each
+//! connection tracks how many reply frames it is owed, and any later
+//! request writes its own frame first, THEN drains the owed acks, then
+//! reads its reply — the driver's push-then-pull cycle thus pays ONE
+//! combined round trip instead of two (the pull frame chases the push
+//! frame onto the wire).
+//! [`Master::drain_inflight`] settles everything explicitly (the drivers
+//! call it before θ reads, which go over a separate control connection
+//! and would otherwise race the unharvested pushes).  A connection lost
+//! with acks owed abandons them (logged; the server may or may not have
+//! applied those pushes — its `Status` drop counter tells).
+//!
 //! Gap/lag metrics are recorded server-side (where θ lives); the local
 //! [`MetricsRecorder`] stays empty and reports zeros.
 
@@ -49,6 +65,28 @@ pub fn strip_scheme(addr: &str) -> &str {
     addr.strip_prefix("tcp://").unwrap_or(addr)
 }
 
+/// A deferred (pipelined) push was REJECTED by the master — a protocol
+/// outcome, not a transport failure.  The driver already counted that
+/// push as a completed step, so this must propagate and end the run (the
+/// in-process drivers abort on a push error too); the reconnect-and-retry
+/// wrapper checks for this marker and refuses to retry it away.
+#[derive(Debug)]
+struct DeferredPushRejected(String);
+
+impl std::fmt::Display for DeferredPushRejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "deferred push rejected by the master: {}", self.0)
+    }
+}
+
+impl std::error::Error for DeferredPushRejected {}
+
+/// True when `e` is a [`DeferredPushRejected`] — i.e. retrying/reconnecting
+/// cannot help and the error must surface to the driver.
+fn is_rejection(e: &anyhow::Error) -> bool {
+    e.downcast_ref::<DeferredPushRejected>().is_some()
+}
+
 struct Conn {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
@@ -56,6 +94,11 @@ struct Conn {
     slot: u64,
     /// Generation the server assigned at attach; echoed in every Push.
     gen: u32,
+    /// Reply frames still owed on this connection: deferred (pipelined)
+    /// pushes whose `PushAck` has not been read yet.  Replies arrive in
+    /// request order, so the next `owed` frames are push acks and only
+    /// the frame after them answers a new request.
+    owed: usize,
 }
 
 /// What the server told us at handshake time.
@@ -64,6 +107,8 @@ struct HelloInfo {
     k: usize,
     /// Server-side slice granularity for PullShard/PushShard frames.
     shards: usize,
+    /// Server-side pipeline window depth (`dana serve --pipeline-depth`).
+    pipeline: usize,
     header: Header,
 }
 
@@ -77,12 +122,22 @@ impl Conn {
             writer: BufWriter::new(stream),
             slot: u64::MAX,
             gen: 0,
+            owed: 0,
         };
         match conn.roundtrip(&Msg::Hello { role, reattach })? {
-            Msg::HelloAck { slot, gen, kind, k, shards, header } => {
+            Msg::HelloAck { slot, gen, kind, k, shards, pipeline, header } => {
                 conn.slot = slot;
                 conn.gen = gen;
-                Ok((conn, HelloInfo { kind, k: k as usize, shards: shards as usize, header }))
+                Ok((
+                    conn,
+                    HelloInfo {
+                        kind,
+                        k: k as usize,
+                        shards: shards as usize,
+                        pipeline: pipeline as usize,
+                        header,
+                    },
+                ))
             }
             Msg::Error { detail, .. } => anyhow::bail!("master refused hello: {detail}"),
             other => anyhow::bail!("unexpected hello reply: {other:?}"),
@@ -93,17 +148,6 @@ impl Conn {
         wire::write_frame(&mut self.writer, msg)?;
         wire::read_frame(&mut self.reader)
     }
-
-    /// Pipelined batch: write every request before reading any reply, so
-    /// a shard-sliced pull/push costs one round trip, not `S` — and the
-    /// server can start serving early slices while later ones are still
-    /// in flight.
-    fn roundtrip_batch(&mut self, msgs: &[Msg]) -> anyhow::Result<Vec<Msg>> {
-        for m in msgs {
-            wire::write_frame(&mut self.writer, m)?;
-        }
-        msgs.iter().map(|_| wire::read_frame(&mut self.reader)).collect()
-    }
 }
 
 /// See the module docs.  Construct with [`RemoteMaster::connect`].
@@ -113,10 +157,20 @@ pub struct RemoteMaster {
     k: usize,
     /// Server-side shard count (slice granularity for shard frames).
     server_shards: usize,
+    /// Server-side pipeline window depth (for the mismatch warning).
+    server_pipeline: usize,
     /// Move parameters as per-shard PullShard/PushShard frames (pipelined,
     /// one round trip) instead of one monolithic frame.  Off by default;
     /// a no-op when the server serves unsliced (`server_shards <= 1`).
     shard_frames: bool,
+    /// Pipeline depth ([`Master::set_pipeline_depth`]): with `pipeline >
+    /// 0` (and monolithic frames) `push_update` writes the Push frame and
+    /// returns WITHOUT reading the ack — the send path.  Owed acks are
+    /// harvested by the next request on the same connection (replies are
+    /// FIFO), by [`Master::drain_inflight`], or when the un-acked window
+    /// would exceed the depth — the deferred-ack harvest.  0 = classic
+    /// blocking round trip, bit-for-bit.
+    pipeline: usize,
     control: Conn,
     /// Local worker index → connection (None = left/retired locally).
     workers: Vec<Option<Conn>>,
@@ -181,7 +235,9 @@ impl RemoteMaster {
             kind,
             k,
             server_shards: info.shards.max(1),
+            server_pipeline: info.pipeline,
             shard_frames: false,
+            pipeline: 0,
             control,
             workers: Vec::with_capacity(n_workers),
             header,
@@ -208,6 +264,7 @@ impl RemoteMaster {
             self.k
         );
         self.server_shards = info.shards.max(1);
+        self.server_pipeline = info.pipeline;
         self.header = info.header;
         Ok(conn)
     }
@@ -255,6 +312,17 @@ impl RemoteMaster {
         let pattern: Vec<bool> = self.workers.iter().map(Option::is_some).collect();
         let ours = pattern.iter().filter(|&&p| p).count() as u64;
         let expected_live = self.header.live_workers.saturating_sub(ours);
+        // Deferred acks die with their connections: the server may or may
+        // not have applied those pushes (reconnect-as-join re-attaches the
+        // slot either way; the uncertainty is the price of a mid-pipeline
+        // transport loss, and the server's Status drop counter tells).
+        let lost: usize = self.workers.iter().flatten().map(|c| c.owed).sum();
+        if lost > 0 {
+            eprintln!(
+                "net: reconnect abandons {lost} un-acked pipelined push(es) to {}",
+                self.addr
+            );
+        }
         // Drop stale connections up front (a no-op against a dead server:
         // the sockets are already gone).
         for w in self.workers.iter_mut() {
@@ -285,6 +353,7 @@ impl RemoteMaster {
             self.k
         );
         self.server_shards = info.shards.max(1);
+        self.server_pipeline = info.pipeline;
         // Give a still-live server a moment to process our dropped
         // connections' EOF-leaves, so the rejoin below reclaims the same
         // retired slots instead of growing the cluster.  Against a
@@ -320,6 +389,54 @@ impl RemoteMaster {
         self.header = *header;
     }
 
+    /// Read and account every reply frame still owed on worker `w`'s
+    /// connection (deferred push acknowledgements) — replies arrive in
+    /// request order, so after this the next frame read answers the next
+    /// request.  An `Error` reply means a deferred push was rejected
+    /// server-side; the driver already counted that push as a step, so it
+    /// surfaces as a hard, NON-retryable error ([`DeferredPushRejected`] —
+    /// the retry wrappers propagate it instead of reconnecting it away).
+    fn harvest_acks(&mut self, w: usize) -> anyhow::Result<()> {
+        let conn = self.workers[w]
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("harvest for retired local worker {w}"))?;
+        let mut latest: Option<Header> = None;
+        while conn.owed > 0 {
+            let reply = wire::read_frame(&mut conn.reader)?;
+            conn.owed -= 1;
+            match reply {
+                Msg::PushAck { header, .. } => latest = Some(header),
+                Msg::Error { detail, .. } => {
+                    return Err(anyhow::Error::new(DeferredPushRejected(format!(
+                        "worker {w}: {detail}"
+                    ))));
+                }
+                other => anyhow::bail!("unexpected deferred-push reply: {other:?}"),
+            }
+        }
+        if let Some(h) = latest {
+            self.note(&h);
+        }
+        Ok(())
+    }
+
+    /// Write one request on worker `w`'s connection, drain any owed
+    /// deferred-push acks (their replies precede ours — FIFO), then read
+    /// the request's own reply.  Writing BEFORE draining is what lets a
+    /// pipelined cycle's push and pull share one round trip: the pull
+    /// frame chases the push frame onto the wire, and the client then
+    /// reads the push ack and the pull reply back to back.  With nothing
+    /// owed this is exactly a classic blocking round trip.
+    fn send_harvest_read(&mut self, w: usize, msg: &Msg) -> anyhow::Result<Msg> {
+        {
+            let conn = self.workers[w].as_mut().expect("validated by caller");
+            wire::write_frame(&mut conn.writer, msg)?;
+        }
+        self.harvest_acks(w)?;
+        let conn = self.workers[w].as_mut().expect("validated by caller");
+        wire::read_frame(&mut conn.reader)
+    }
+
     /// One request on worker `w`'s connection, transparently reconnecting
     /// once on transport failure.  `Err` after that means the master is
     /// unreachable; a `Msg::Error` reply passes through as `Ok`.
@@ -328,9 +445,12 @@ impl RemoteMaster {
             w < self.workers.len() && self.workers[w].is_some(),
             "request for retired local worker {w}"
         );
-        let first = self.workers[w].as_mut().expect("checked above").roundtrip(msg);
+        let first = self.send_harvest_read(w, msg);
         let reply = match first {
             Ok(r) => r,
+            // a rejected deferred push is a protocol outcome, not a
+            // transport failure: reconnecting cannot help
+            Err(e) if is_rejection(&e) => return Err(e),
             Err(_) => {
                 self.reconnect()?;
                 // a Push's generation died with the old connection: retag
@@ -374,20 +494,13 @@ impl RemoteMaster {
             w < self.workers.len() && self.workers[w].is_some(),
             "request for retired local worker {w}"
         );
-        let first = {
-            let shards = self.server_shards;
-            let conn = self.workers[w].as_mut().expect("checked above");
-            let msgs = make(conn.gen, shards);
-            conn.roundtrip_batch(&msgs)
-        };
+        let first = self.send_batch_harvest_read(w, &make);
         let replies = match first {
             Ok(r) => r,
+            Err(e) if is_rejection(&e) => return Err(e),
             Err(_) => {
                 self.reconnect()?;
-                let shards = self.server_shards;
-                let conn = self.workers[w].as_mut().expect("reconnected");
-                let msgs = make(conn.gen, shards);
-                conn.roundtrip_batch(&msgs)?
+                self.send_batch_harvest_read(w, &make)?
             }
         };
         for reply in &replies {
@@ -402,6 +515,29 @@ impl RemoteMaster {
             }
         }
         Ok(replies)
+    }
+
+    /// Batch variant of [`Self::send_harvest_read`]: write every frame of
+    /// the batch before reading any reply (one round trip for a whole
+    /// shard-sliced group), drain owed deferred-push acks, then read the
+    /// batch's replies in order.
+    fn send_batch_harvest_read(
+        &mut self,
+        w: usize,
+        make: &impl Fn(u32, usize) -> Vec<Msg>,
+    ) -> anyhow::Result<Vec<Msg>> {
+        let n = {
+            let shards = self.server_shards;
+            let conn = self.workers[w].as_mut().expect("validated by caller");
+            let msgs = make(conn.gen, shards);
+            for m in &msgs {
+                wire::write_frame(&mut conn.writer, m)?;
+            }
+            msgs.len()
+        };
+        self.harvest_acks(w)?;
+        let conn = self.workers[w].as_mut().expect("validated by caller");
+        (0..n).map(|_| wire::read_frame(&mut conn.reader)).collect()
     }
 
     /// Shard-sliced pull: one pipelined `PullShard` round per shard,
@@ -519,6 +655,70 @@ impl RemoteMaster {
     pub fn server_slot(&self, w: usize) -> Option<u64> {
         self.workers.get(w).and_then(|c| c.as_ref().map(|c| c.slot))
     }
+
+    /// Un-acked deferred pushes currently in flight on worker `w`'s
+    /// connection (tests/diagnostics).
+    pub fn inflight_pushes(&self, w: usize) -> usize {
+        self.workers
+            .get(w)
+            .and_then(|c| c.as_ref().map(|c| c.owed))
+            .unwrap_or(0)
+    }
+
+    /// The deferred (pipelined) push: write the frame, flush, return
+    /// without reading the ack — the round trip overlaps the worker's
+    /// next gradient computation.  The ack is harvested by the next
+    /// request on this connection (the driver's following pull, which
+    /// thereby costs ONE combined round trip per cycle instead of two),
+    /// by [`Master::drain_inflight`], or here when the un-acked window
+    /// would exceed the pipeline depth.
+    ///
+    /// The returned [`Step`] is the latest *known* schedule point (both
+    /// drivers read the schedule via `step_now()` before the push and
+    /// ignore this value); the exact applied step arrives with the ack.
+    fn push_deferred(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        if self.inflight_pushes(worker) >= self.pipeline {
+            if let Err(e) = self.harvest_acks(worker) {
+                if is_rejection(&e) {
+                    return Err(e);
+                }
+                self.reconnect()?;
+            }
+        }
+        let step = self.header.step();
+        let sent = {
+            let conn = self.workers[worker]
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("push from retired local worker {worker}"))?;
+            let frame = Msg::Push { gen: conn.gen, msg: msg.to_vec() };
+            match wire::write_frame(&mut conn.writer, &frame) {
+                Ok(()) => {
+                    conn.owed += 1;
+                    true
+                }
+                Err(_) => false,
+            }
+        };
+        if !sent {
+            // the write died mid-pipeline: reconnect and retry once as a
+            // plain blocking push under the fresh generation
+            self.reconnect()?;
+            let gen = self.workers[worker].as_ref().expect("reconnected").gen;
+            let reply = self.workers[worker]
+                .as_mut()
+                .expect("reconnected")
+                .roundtrip(&Msg::Push { gen, msg: msg.to_vec() })?;
+            return match reply {
+                Msg::PushAck { header, eta, gamma, lambda, .. } => {
+                    self.note(&header);
+                    Ok(Step { eta, gamma, lambda })
+                }
+                Msg::Error { detail, .. } => anyhow::bail!("push rejected: {detail}"),
+                other => anyhow::bail!("unexpected push reply: {other:?}"),
+            };
+        }
+        Ok(step)
+    }
 }
 
 impl Master for RemoteMaster {
@@ -633,7 +833,9 @@ impl Master for RemoteMaster {
                 panic!("pull for worker {worker} refused: {detail}")
             }
             Ok(other) => panic!("unexpected pull reply: {other:?}"),
-            Err(e) => panic!("lost connection to master {}: {e:#}", self.addr),
+            // transport loss after retries, or a rejected deferred push
+            // surfacing through the harvest — either ends the run
+            Err(e) => panic!("pull for worker {worker} against master {} failed: {e:#}", self.addr),
         }
     }
 
@@ -648,7 +850,12 @@ impl Master for RemoteMaster {
             .ok_or_else(|| anyhow::anyhow!("push from retired local worker {worker}"))?
             .gen;
         if self.sliced() {
+            // sliced pushes stay blocking: a deferred multi-frame group
+            // would have to be resent wholesale on any mid-group failure
             return self.push_sliced(worker, msg);
+        }
+        if self.pipeline > 0 {
+            return self.push_deferred(worker, msg);
         }
         let reply = self.worker_request(worker, &Msg::Push { gen, msg: msg.to_vec() })?;
         match reply {
@@ -656,6 +863,28 @@ impl Master for RemoteMaster {
             Msg::Error { detail, .. } => anyhow::bail!("push rejected: {detail}"),
             other => anyhow::bail!("unexpected push reply: {other:?}"),
         }
+    }
+
+    fn set_pipeline_depth(&mut self, depth: usize) {
+        self.pipeline = depth;
+        if depth != self.server_pipeline {
+            eprintln!(
+                "net: this run pipelines at depth {depth} but the master at {} is configured \
+                 for depth {} — its pull-window (lag/gap/DC-ASGD) accounting and DANA's \
+                 look-ahead extrapolation follow the server setting; start the server with \
+                 `--pipeline-depth {depth}` to align",
+                self.addr, self.server_pipeline
+            );
+        }
+    }
+
+    fn drain_inflight(&mut self) -> anyhow::Result<()> {
+        for w in 0..self.workers.len() {
+            if self.workers[w].as_ref().map(|c| c.owed > 0).unwrap_or(false) {
+                self.harvest_acks(w)?;
+            }
+        }
+        Ok(())
     }
 
     fn make_worker_state(&self) -> WorkerState {

@@ -63,6 +63,7 @@ use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::ops::Range;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Server-side policy knobs (everything else lives in the master).
@@ -75,6 +76,11 @@ pub struct ServeOptions {
     /// Write a checkpoint every N master steps (0 = only on demand /
     /// graceful shutdown).
     pub checkpoint_every: u64,
+    /// Pipeline depth the clients run at (`dana serve --pipeline-depth`):
+    /// sizes the master's per-slot pull windows, forwards the staleness
+    /// hint to the algorithm, and is reported in `HelloAck` so a
+    /// mismatched client can warn.  0 = classic synchronous serving.
+    pub pipeline_depth: usize,
 }
 
 /// Connection bookkeeping, under one short mutex (never held across a
@@ -100,6 +106,11 @@ struct Shared {
     /// step ever written, so a slow write can never clobber a newer
     /// snapshot.
     ckpt_gate: Mutex<u64>,
+    /// Pushes dropped (recoverably rejected) over this server's lifetime:
+    /// stale-generation stragglers and retired-slot races.  Surfaced in
+    /// every reply header, so `Status` makes silently discarded work
+    /// visible instead of vanishing into `eprintln`-less rejections.
+    drops: AtomicU64,
 }
 
 impl Shared {
@@ -112,7 +123,14 @@ impl Shared {
             lambda: s.lambda,
             live_workers: live as u64,
             worker_slots: slots as u64,
+            pushes_dropped: self.drops.load(Ordering::Relaxed),
         }
+    }
+
+    /// Count one dropped push and build the recoverable error reply.
+    fn drop_push(&self, detail: String) -> Msg {
+        self.drops.fetch_add(1, Ordering::Relaxed);
+        Msg::Error { recoverable: true, detail }
     }
 
     /// Claim a slot for a worker connection.  A *reattaching* worker is
@@ -259,13 +277,16 @@ impl NetServer {
     /// reconnecting workers; a fresh master should be built with 0
     /// workers so that connect == join.
     pub fn start_serving(
-        master: Box<dyn ServingMaster>,
+        mut master: Box<dyn ServingMaster>,
         listen: &str,
         opts: ServeOptions,
     ) -> anyhow::Result<NetServer> {
         let listener = TcpListener::bind(listen)
             .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
         let addr = listener.local_addr()?;
+        // size the pull windows before the master is shared with
+        // connection threads (0 = classic serving, bit-for-bit)
+        master.set_pipeline_hint(opts.pipeline_depth);
         let (_, _, _, slots) = master.status();
         let shared = Arc::new(Shared {
             master,
@@ -277,6 +298,7 @@ impl NetServer {
             opts,
             addr,
             ckpt_gate: Mutex::new(0),
+            drops: AtomicU64::new(0),
         });
         let accept_shared = Arc::clone(&shared);
         let accept = std::thread::spawn(move || accept_loop(listener, accept_shared));
@@ -416,6 +438,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> anyhow::Result<()> {
                 kind: shared.master.algo_kind(),
                 k: shared.master.param_len() as u64,
                 shards: shared.master.shard_count() as u32,
+                pipeline: shared.opts.pipeline_depth as u32,
                 header: shared.header(),
             };
             wire::write_frame(&mut writer, &ack)?;
@@ -554,7 +577,7 @@ fn dispatch(
         (Msg::Push { gen: push_gen, msg }, Some(w)) => {
             if !slot_ok(shared, w, gen, Some(push_gen)) {
                 // a straggler from a previous incarnation of the slot
-                recoverable(format!("stale push for worker slot {w}"))
+                shared.drop_push(format!("stale push for worker slot {w}"))
             } else if msg.len() != shared.master.param_len() {
                 fatal(&format!(
                     "push length {} != parameter count {}",
@@ -563,16 +586,17 @@ fn dispatch(
                 ))
             } else {
                 match shared.master.push(w, &msg) {
-                    Ok(s) => {
+                    Ok((s, settled)) => {
                         shared.maybe_periodic_checkpoint();
                         Msg::PushAck {
                             header: shared.header(),
+                            step: settled,
                             eta: s.eta,
                             gamma: s.gamma,
                             lambda: s.lambda,
                         }
                     }
-                    Err(e) => recoverable(format!("{e:#}")),
+                    Err(e) => shared.drop_push(format!("{e:#}")),
                 }
             }
         }
@@ -582,7 +606,7 @@ fn dispatch(
                 fatal(&format!("push for shard {shard} of {}", ranges.len()))
             } else if !slot_ok(shared, w, gen, Some(push_gen)) {
                 group.reset();
-                recoverable(format!("stale push for worker slot {w}"))
+                shared.drop_push(format!("stale push for worker slot {w}"))
             } else {
                 match group.add(shard as usize, ranges[shard as usize].clone(), &msg) {
                     Err(e) => {
@@ -595,16 +619,17 @@ fn dispatch(
                         // assembled buffer is applied below
                         group.reset();
                         match shared.master.push(w, &group.buf) {
-                            Ok(s) => {
+                            Ok((s, settled)) => {
                                 shared.maybe_periodic_checkpoint();
                                 Msg::PushAck {
                                     header: shared.header(),
+                                    step: settled,
                                     eta: s.eta,
                                     gamma: s.gamma,
                                     lambda: s.lambda,
                                 }
                             }
-                            Err(e) => recoverable(format!("{e:#}")),
+                            Err(e) => shared.drop_push(format!("{e:#}")),
                         }
                     }
                 }

@@ -30,6 +30,16 @@
 //! step when the last one lands (gather-then-apply, so a worker dying
 //! mid-group leaves no partial update).
 //!
+//! Version 3 is the pipelined-worker addition: [`Msg::PushAck`] carries
+//! the master step the push *settled as* (its ticket), so a pipelined
+//! client harvesting deferred acknowledgements knows exactly which
+//! in-flight push each ack settles; [`Header`] carries the server's
+//! cumulative dropped-push count (stale-generation / retired-slot
+//! rejections) so `Status` surfaces silently discarded work; and
+//! [`Msg::HelloAck`] carries the server's configured pipeline depth so a
+//! client can warn when its `--pipeline-depth` disagrees with the
+//! server's window accounting.
+//!
 //! Algorithm kinds and leave policies travel as their canonical names (the
 //! same strings the CLI parses), so the protocol does not depend on enum
 //! discriminant order; an unknown name is a decode error.
@@ -40,8 +50,10 @@ use std::io::{Read, Write};
 /// Frame magic — rejects non-DANA peers and stream desync immediately.
 pub const MAGIC: [u8; 4] = *b"DANA";
 /// Protocol version; bumped on any incompatible change (2: shard-sliced
-/// PullShard/PushShard/ShardParams frames + shard count in HelloAck).
-pub const VERSION: u8 = 2;
+/// PullShard/PushShard/ShardParams frames + shard count in HelloAck;
+/// 3: settled step in PushAck, dropped-push count in Header, pipeline
+/// depth in HelloAck).
+pub const VERSION: u8 = 3;
 /// Upper bound on one frame body (1 GiB ≈ 256M f32 parameters).
 pub const MAX_FRAME: u32 = 1 << 30;
 
@@ -70,6 +82,11 @@ pub struct Header {
     /// Live workers / slot high-water mark, cluster-wide.
     pub live_workers: u64,
     pub worker_slots: u64,
+    /// Pushes the server has dropped (recoverably rejected) so far:
+    /// stale-generation stragglers and retired-slot races.  Cumulative
+    /// over the server's lifetime, so deltas across `Status` reads count
+    /// drops in a window.
+    pub pushes_dropped: u64,
 }
 
 impl Header {
@@ -123,14 +140,26 @@ pub enum Msg {
     /// Reply to [`Msg::Hello`].  For workers, `slot`/`gen` identify the
     /// claimed worker slot; control connections get `slot == u64::MAX`.
     /// `shards` is the server's slice granularity for
-    /// [`Msg::PullShard`]/[`Msg::PushShard`] (1 = unsliced serving).
-    HelloAck { slot: u64, gen: u32, kind: AlgorithmKind, k: u64, shards: u32, header: Header },
+    /// [`Msg::PullShard`]/[`Msg::PushShard`] (1 = unsliced serving);
+    /// `pipeline` is the server's configured pull-window depth
+    /// (`dana serve --pipeline-depth`).
+    HelloAck {
+        slot: u64,
+        gen: u32,
+        kind: AlgorithmKind,
+        k: u64,
+        shards: u32,
+        pipeline: u32,
+        header: Header,
+    },
     /// Reply to [`Msg::PullParams`].
     Params { header: Header, params: Vec<f32> },
     /// Reply to [`Msg::PullShard`].
     ShardParams { header: Header, shard: u32, params: Vec<f32> },
-    /// Reply to [`Msg::Push`]: the [`Step`] that was applied.
-    PushAck { header: Header, eta: f32, gamma: f32, lambda: f32 },
+    /// Reply to [`Msg::Push`]: the [`Step`] that was applied and `step`,
+    /// the master step the push settled as (its ticket) — what a
+    /// pipelined client's deferred-ack harvest accounts against.
+    PushAck { header: Header, step: u64, eta: f32, gamma: f32, lambda: f32 },
     /// Generic success reply (Leave/Checkpoint/Shutdown/Status).
     Ack { header: Header },
     /// Reply to [`Msg::GetTheta`].
@@ -174,6 +203,7 @@ fn put_header(out: &mut Vec<u8>, h: &Header) {
     put_f32(out, h.lambda);
     put_u64(out, h.live_workers);
     put_u64(out, h.worker_slots);
+    put_u64(out, h.pushes_dropped);
 }
 
 impl Msg {
@@ -203,7 +233,7 @@ impl Msg {
     /// the length prefix), computed arithmetically — [`write_frame`] uses
     /// it to reject an oversized frame *before* serializing anything.
     pub fn body_len(&self) -> usize {
-        const HDR: usize = 8 + 4 + 4 + 4 + 8 + 8; // Header
+        const HDR: usize = 8 + 4 + 4 + 4 + 8 + 8 + 8; // Header
         let payload = match self {
             Msg::Hello { .. } => 2,
             Msg::PullParams | Msg::Checkpoint | Msg::Status | Msg::GetTheta | Msg::Shutdown => 0,
@@ -211,10 +241,10 @@ impl Msg {
             Msg::Leave { policy } => 4 + policy.name().len(),
             Msg::PullShard { .. } => 4,
             Msg::PushShard { msg, .. } => 4 + 4 + 8 + 4 * msg.len(),
-            Msg::HelloAck { kind, .. } => 8 + 4 + (4 + kind.name().len()) + 8 + 4 + HDR,
+            Msg::HelloAck { kind, .. } => 8 + 4 + (4 + kind.name().len()) + 8 + 4 + 4 + HDR,
             Msg::Params { params, .. } => HDR + 8 + 4 * params.len(),
             Msg::ShardParams { params, .. } => HDR + 4 + 8 + 4 * params.len(),
-            Msg::PushAck { .. } => HDR + 12,
+            Msg::PushAck { .. } => HDR + 8 + 12,
             Msg::Ack { .. } => HDR,
             Msg::Theta { theta, .. } => HDR + 8 + 4 * theta.len(),
             Msg::Error { detail, .. } => 1 + 4 + detail.len(),
@@ -251,12 +281,13 @@ impl Msg {
                 put_u32(&mut body, *shard);
                 put_vec_f32(&mut body, msg);
             }
-            Msg::HelloAck { slot, gen, kind, k, shards, header } => {
+            Msg::HelloAck { slot, gen, kind, k, shards, pipeline, header } => {
                 put_u64(&mut body, *slot);
                 put_u32(&mut body, *gen);
                 put_str(&mut body, kind.name());
                 put_u64(&mut body, *k);
                 put_u32(&mut body, *shards);
+                put_u32(&mut body, *pipeline);
                 put_header(&mut body, header);
             }
             Msg::Params { header, params } => {
@@ -268,8 +299,9 @@ impl Msg {
                 put_u32(&mut body, *shard);
                 put_vec_f32(&mut body, params);
             }
-            Msg::PushAck { header, eta, gamma, lambda } => {
+            Msg::PushAck { header, step, eta, gamma, lambda } => {
                 put_header(&mut body, header);
+                put_u64(&mut body, *step);
                 put_f32(&mut body, *eta);
                 put_f32(&mut body, *gamma);
                 put_f32(&mut body, *lambda);
@@ -327,6 +359,7 @@ impl Msg {
                 kind: d.str()?.parse()?,
                 k: d.u64()?,
                 shards: d.u32()?,
+                pipeline: d.u32()?,
                 header: d.header()?,
             },
             17 => Msg::Params { header: d.header()?, params: d.vec_f32()? },
@@ -337,6 +370,7 @@ impl Msg {
             },
             18 => Msg::PushAck {
                 header: d.header()?,
+                step: d.u64()?,
                 eta: d.f32()?,
                 gamma: d.f32()?,
                 lambda: d.f32()?,
@@ -456,6 +490,7 @@ impl<'a> Dec<'a> {
             lambda: self.f32()?,
             live_workers: self.u64()?,
             worker_slots: self.u64()?,
+            pushes_dropped: self.u64()?,
         })
     }
 

@@ -21,6 +21,9 @@ pub struct DanaDc {
     vsum: Vec<f32>,
     /// Slot liveness (elastic membership).
     live: Vec<bool>,
+    /// Pipeline staleness hint: extra momentum-only steps to extrapolate
+    /// the Eq 11 look-ahead by ([`Algorithm::set_staleness_hint`]).
+    pipeline: usize,
 }
 
 impl DanaDc {
@@ -30,6 +33,7 @@ impl DanaDc {
             v: vec![vec![0.0; theta0.len()]; n_workers],
             vsum: vec![0.0; theta0.len()],
             live: vec![true; n_workers],
+            pipeline: 0,
         }
     }
 
@@ -81,7 +85,11 @@ impl Algorithm for DanaDc {
     }
 
     fn master_send(&self, _worker: usize, out: &mut [f32], s: Step) {
-        math::lookahead(out, &self.theta, &self.vsum, s.gamma, s.eta);
+        math::lookahead_extrapolated(out, &self.theta, &self.vsum, s.gamma, s.eta, self.pipeline);
+    }
+
+    fn set_staleness_hint(&mut self, extra_steps: usize) {
+        self.pipeline = extra_steps;
     }
 
     fn rescale_momentum(&mut self, ratio: f32) {

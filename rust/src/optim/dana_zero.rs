@@ -34,6 +34,10 @@ pub struct DanaZero {
     vsum: Vec<f32>,
     /// Slot liveness (elastic membership).
     live: Vec<bool>,
+    /// Pipeline staleness hint: extra momentum-only steps to extrapolate
+    /// the Eq 11 look-ahead by ([`Algorithm::set_staleness_hint`]).  0 =
+    /// the plain look-ahead, bit-for-bit.
+    pipeline: usize,
 }
 
 impl DanaZero {
@@ -43,6 +47,7 @@ impl DanaZero {
             v: vec![vec![0.0; theta0.len()]; n_workers],
             vsum: vec![0.0; theta0.len()],
             live: vec![true; n_workers],
+            pipeline: 0,
         }
     }
 
@@ -92,7 +97,11 @@ impl Algorithm for DanaZero {
     }
 
     fn master_send(&self, _worker: usize, out: &mut [f32], s: Step) {
-        math::lookahead(out, &self.theta, &self.vsum, s.gamma, s.eta);
+        math::lookahead_extrapolated(out, &self.theta, &self.vsum, s.gamma, s.eta, self.pipeline);
+    }
+
+    fn set_staleness_hint(&mut self, extra_steps: usize) {
+        self.pipeline = extra_steps;
     }
 
     fn rescale_momentum(&mut self, ratio: f32) {

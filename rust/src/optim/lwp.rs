@@ -29,6 +29,11 @@ pub struct Lwp {
     /// equal workers) unless [`Lwp::with_tau`] pinned τ explicitly.
     live: usize,
     tau_auto: bool,
+    /// Pipeline staleness hint: each worker keeps `pipeline + 1` batches
+    /// in flight, so the expected lag — and the auto-τ — scales by the
+    /// in-flight multiplicity (the Zhang et al. staleness-aware scaling
+    /// applied to the prediction horizon).  0 leaves τ = N exactly.
+    pipeline: usize,
 }
 
 impl Lwp {
@@ -46,11 +51,20 @@ impl Lwp {
             tau,
             live: tau.max(1.0) as usize,
             tau_auto: false,
+            pipeline: 0,
         }
     }
 
     pub fn tau(&self) -> f32 {
         self.tau
+    }
+
+    /// Auto-τ: steady-state expected lag of `live` equal workers with
+    /// `pipeline + 1` batches in flight each.
+    fn retune_tau(&mut self) {
+        if self.tau_auto {
+            self.tau = (self.live.max(1) * (self.pipeline + 1)) as f32;
+        }
     }
 }
 
@@ -85,17 +99,18 @@ impl Algorithm for Lwp {
     /// lag changes with the cluster size).
     fn add_worker(&mut self) -> usize {
         self.live += 1;
-        if self.tau_auto {
-            self.tau = self.live as f32;
-        }
+        self.retune_tau();
         ANY_SLOT
     }
 
     fn remove_worker(&mut self, _worker: usize, _policy: LeavePolicy) {
         self.live = self.live.saturating_sub(1);
-        if self.tau_auto {
-            self.tau = self.live.max(1) as f32;
-        }
+        self.retune_tau();
+    }
+
+    fn set_staleness_hint(&mut self, extra_steps: usize) {
+        self.pipeline = extra_steps;
+        self.retune_tau();
     }
 
     fn state_dict(&self) -> StateDict {
@@ -150,6 +165,21 @@ mod tests {
         assert_eq!(l.tau(), 3.0);
         let mut pinned = Lwp::with_tau(&[0.0], 7.0);
         pinned.add_worker();
+        assert_eq!(pinned.tau(), 7.0);
+    }
+
+    #[test]
+    fn pipeline_hint_scales_auto_tau_by_inflight_multiplicity() {
+        let mut l = Lwp::new(&[0.0], 4);
+        l.set_staleness_hint(2); // 3 batches in flight per worker
+        assert_eq!(l.tau(), 12.0);
+        l.add_worker();
+        assert_eq!(l.tau(), 15.0);
+        l.set_staleness_hint(0);
+        assert_eq!(l.tau(), 5.0, "hint 0 restores tau = N exactly");
+        // pinned tau ignores the hint, like it ignores membership
+        let mut pinned = Lwp::with_tau(&[0.0], 7.0);
+        pinned.set_staleness_hint(3);
         assert_eq!(pinned.tau(), 7.0);
     }
 

@@ -374,6 +374,21 @@ pub trait Algorithm: Send + Sync {
         let _ = ratio;
     }
 
+    /// Pipeline staleness hint: every pull this rule serves will be
+    /// consumed `extra_steps` additional *own* steps in the future (the
+    /// worker keeps `extra_steps + 1` batches in flight).  Prediction-based
+    /// rules compensate — DANA/DANA-DC extrapolate their Eq 11 look-ahead
+    /// `extra_steps` further momentum-only steps, NAG-ASGD sends the
+    /// momentum-extrapolated future position, and LWP stretches its
+    /// prediction horizon τ by the in-flight multiplicity — while
+    /// gradient-difference rules (DC-ASGD's Taylor term is computed from
+    /// the *actual* θ−θ_sent displacement at apply time) are already
+    /// self-scaling.  Default: no-op; `extra_steps = 0` MUST leave every
+    /// rule bit-for-bit at its unhinted behavior.
+    fn set_staleness_hint(&mut self, extra_steps: usize) {
+        let _ = extra_steps;
+    }
+
     /// A worker joins the cluster: allocate per-worker state for it and
     /// return the slot id ([`claim_slot`] rule: lowest retired slot, else
     /// append).  Shared-state rules keep the default, which is a no-op

@@ -13,11 +13,16 @@ use crate::math;
 pub struct NagAsgd {
     theta: Vec<f32>,
     v: Vec<f32>,
+    /// Pipeline staleness hint ([`Algorithm::set_staleness_hint`]): with
+    /// `pipeline > 0` the send extrapolates θ by that many momentum-only
+    /// steps of the shared v (the future position the gradient will land
+    /// on); 0 sends plain θ (Algorithm 8 exactly).
+    pipeline: usize,
 }
 
 impl NagAsgd {
     pub fn new(theta0: &[f32]) -> Self {
-        NagAsgd { theta: theta0.to_vec(), v: vec![0.0; theta0.len()] }
+        NagAsgd { theta: theta0.to_vec(), v: vec![0.0; theta0.len()], pipeline: 0 }
     }
 
     pub fn velocity(&self) -> &[f32] {
@@ -37,6 +42,19 @@ impl Algorithm for NagAsgd {
     fn master_apply(&mut self, _worker: usize, msg: &[f32], _sent: &[f32], s: Step) {
         // v <- gamma*v + g ; theta <- theta - eta*v   (shared v)
         math::momentum_step(&mut self.theta, &mut self.v, msg, s.gamma, s.eta);
+    }
+
+    fn master_send(&self, _worker: usize, out: &mut [f32], s: Step) {
+        if self.pipeline == 0 {
+            // Algorithm 8: send plain θ (the default behavior, exactly).
+            out.copy_from_slice(&self.theta);
+        } else {
+            math::extrapolate_position(out, &self.theta, &self.v, s.gamma, s.eta, self.pipeline);
+        }
+    }
+
+    fn set_staleness_hint(&mut self, extra_steps: usize) {
+        self.pipeline = extra_steps;
     }
 
     fn rescale_momentum(&mut self, ratio: f32) {

@@ -63,6 +63,16 @@ impl Nag {
         math::lookahead(out, &self.theta, &self.v, gamma, eta);
     }
 
+    /// Look-ahead extrapolated `depth` *extra* momentum-only steps — where
+    /// a gradient issued now lands when `depth` more of this worker's own
+    /// steps settle first (the pipelined-driver case).  `depth = 0` is
+    /// [`Self::lookahead_params`] bit-for-bit; `depth = D` equals `D`
+    /// literal zero-gradient [`Self::apply`] calls followed by the plain
+    /// look-ahead (pinned exactly in `rust/tests/pipeline.rs`).
+    pub fn lookahead_extrapolated(&self, out: &mut [f32], eta: f32, gamma: f32, depth: usize) {
+        math::lookahead_extrapolated(out, &self.theta, &self.v, gamma, eta, depth);
+    }
+
     /// Apply a gradient computed at the look-ahead point.
     pub fn apply(&mut self, g: &[f32], eta: f32, gamma: f32) {
         math::momentum_step(&mut self.theta, &mut self.v, g, gamma, eta);

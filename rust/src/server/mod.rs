@@ -21,15 +21,16 @@ use crate::optim::{
 use crate::util::sync;
 use metrics::{MetricRow, MetricsRecorder};
 pub use sharded::{shard_bounds, ShardedParameterServer};
+use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::Mutex;
 
 /// A complete, restorable image of a master's training state: θ, the
 /// algorithm's auxiliary state ([`StateDict`]), slot liveness, the per-slot
-/// `sent`/`pulled_at`/`has_pulled` bookkeeping, and the step counter.  The
-/// schedule is NOT part of the snapshot — it is reconstructed from the
-/// serve configuration at resume time (resuming under different flags is a
-/// config error the checkpoint header checks guard against).
+/// pull-window bookkeeping, and the step counter.  The schedule is NOT part
+/// of the snapshot — it is reconstructed from the serve configuration at
+/// resume time (resuming under different flags is a config error the
+/// checkpoint header checks guard against).
 ///
 /// Layout-independent: a snapshot taken from a monolithic server restores
 /// into a sharded one (and vice versa, or across different shard counts) —
@@ -43,10 +44,12 @@ pub struct MasterSnapshot {
     pub theta: Vec<f32>,
     /// Slot liveness; length is the slot high-water mark.
     pub live: Vec<bool>,
-    /// Per-slot parameters most recently sent (gap accounting + DC-ASGD).
-    pub sent: Vec<Vec<f32>>,
-    pub pulled_at: Vec<u64>,
-    pub has_pulled: Vec<bool>,
+    /// Per-slot pull window, oldest first: `(master step at pull, the
+    /// parameters that were sent)`.  The front entry is what the slot's
+    /// next push is judged against (gap, lag, DC-ASGD's θ_sent); depth >
+    /// 1 appears only under a pipelined driver (`--pipeline-depth D`
+    /// keeps up to D+1 pulls outstanding per worker).
+    pub pulls: Vec<Vec<(u64, Vec<f32>)>>,
     /// The algorithm's [`crate::optim::Algorithm::state_dict`].
     pub state: StateDict,
 }
@@ -73,22 +76,32 @@ impl MasterSnapshot {
         );
         let n = self.live.len();
         anyhow::ensure!(
-            self.sent.len() == n && self.pulled_at.len() == n && self.has_pulled.len() == n,
-            "snapshot slot arrays disagree: live={n} sent={} pulled_at={} has_pulled={}",
-            self.sent.len(),
-            self.pulled_at.len(),
-            self.has_pulled.len()
+            self.pulls.len() == n,
+            "snapshot slot arrays disagree: live={n} pulls={}",
+            self.pulls.len()
         );
-        for (w, s) in self.sent.iter().enumerate() {
+        for (w, q) in self.pulls.iter().enumerate() {
             anyhow::ensure!(
-                s.len() == k,
-                "snapshot sent[{w}] length {} != k {k}",
-                s.len()
+                q.len() <= MAX_PULL_WINDOW,
+                "snapshot pulls[{w}] window {} exceeds the cap {MAX_PULL_WINDOW}",
+                q.len()
             );
+            for (i, (_, p)) in q.iter().enumerate() {
+                anyhow::ensure!(
+                    p.len() == k,
+                    "snapshot pulls[{w}][{i}] length {} != k {k}",
+                    p.len()
+                );
+            }
         }
         Ok(())
     }
 }
+
+/// Hard ceiling on the per-slot pull window (pipeline depth + 1): bounds
+/// server memory against a malicious or misconfigured client no matter
+/// what depth it claims, and gives checkpoint validation a sane bound.
+pub const MAX_PULL_WINDOW: usize = 33;
 
 /// Unified interface over the monolithic and sharded masters, so trainers
 /// are generic over the server layout.  Method names are distinct from the
@@ -131,6 +144,22 @@ pub trait Master: Send {
     /// flight when it left — is a *recoverable* error: the server state is
     /// untouched and the caller may simply drop the message.
     fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step>;
+    /// Configure the pipeline window: each worker will keep `depth + 1`
+    /// pulls outstanding (the `--pipeline-depth` of the driver).  Local
+    /// masters size their per-slot pull windows and forward the staleness
+    /// hint to the algorithm ([`crate::optim::Algorithm::set_staleness_hint`]);
+    /// a remote master switches its push path to deferred-ack harvesting.
+    /// `depth = 0` (the default) MUST leave behavior bit-for-bit unchanged.
+    fn set_pipeline_depth(&mut self, depth: usize) {
+        let _ = depth;
+    }
+    /// Settle every in-flight deferred acknowledgement (pipelined remote
+    /// masters): after this returns, every push issued so far has been
+    /// applied and acknowledged, so a θ read observes all of them.  No-op
+    /// for local masters (pushes apply synchronously).
+    fn drain_inflight(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
     /// Fresh worker-local optimizer state.
     fn make_worker_state(&self) -> WorkerState;
     /// Worker-side message transform (DANA-Slim's local momentum).
@@ -182,11 +211,18 @@ pub trait ServingMaster: Send + Sync {
     fn pull(&self, worker: usize) -> anyhow::Result<Vec<f32>>;
     /// One shard's slice of a pull (wire `PullShard`).
     fn pull_shard(&self, worker: usize, shard: usize) -> anyhow::Result<Vec<f32>>;
-    fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<Step>;
+    /// Apply a push; returns the applied [`Step`] and the master step the
+    /// update *settled as* (its ticket — exact even under concurrency),
+    /// which `PushAck` reports back to pipelined clients.
+    fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<(Step, u64)>;
     fn theta(&self) -> Vec<f32>;
     fn snapshot(&self) -> anyhow::Result<MasterSnapshot>;
     fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()>;
     fn set_metrics_every(&mut self, every: u64);
+    /// Setup-time pipeline hint (`dana serve --pipeline-depth`): sizes the
+    /// per-slot pull windows and forwards the staleness hint to the
+    /// algorithm.  Runs before the server is shared with connections.
+    fn set_pipeline_hint(&mut self, depth: usize);
 }
 
 /// Any [`Master`] behind one mutex — the global-lock serving backend.
@@ -196,17 +232,40 @@ pub struct LockedMaster {
     inner: Mutex<Box<dyn Master>>,
     /// Shard count for slice-framed requests (the inner master's S, or 1).
     shards: usize,
+    /// Per-worker open slice-framed pull group: ONE inner full pull per
+    /// group, sliced locally, so the inner pull-window accounting sees one
+    /// pull per completed group — matching the striped backend instead of
+    /// the pre-pipeline behavior of one full pull per slice.
+    sliced: Mutex<Vec<Option<SliceGroup>>>,
+}
+
+struct SliceGroup {
+    fetched: Vec<bool>,
+    full: Vec<f32>,
 }
 
 impl LockedMaster {
     pub fn new(inner: Box<dyn Master>) -> Self {
-        LockedMaster { inner: Mutex::new(inner), shards: 1 }
+        Self::with_shards(inner, 1)
     }
 
     /// Like [`Self::new`], declaring the inner master's shard count so
     /// slice-framed clients can address it (the lock still serializes).
     pub fn with_shards(inner: Box<dyn Master>, shards: usize) -> Self {
-        LockedMaster { inner: Mutex::new(inner), shards: shards.max(1) }
+        LockedMaster {
+            inner: Mutex::new(inner),
+            shards: shards.max(1),
+            sliced: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Drop any open slice group for `worker` (full pull, join, leave —
+    /// a stale half-group must never serve a slot's next incarnation).
+    fn clear_group(&self, worker: usize) {
+        let mut groups = sync::lock(&self.sliced);
+        if let Some(g) = groups.get_mut(worker) {
+            *g = None;
+        }
     }
 }
 
@@ -243,14 +302,19 @@ impl ServingMaster for LockedMaster {
     }
 
     fn join(&self) -> usize {
-        sync::lock(&self.inner).add_worker()
+        let slot = sync::lock(&self.inner).add_worker();
+        self.clear_group(slot);
+        slot
     }
 
     fn leave(&self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
+        self.clear_group(worker);
         sync::lock(&self.inner).remove_worker(worker, policy)
     }
 
     fn pull(&self, worker: usize) -> anyhow::Result<Vec<f32>> {
+        // a full pull supersedes any half-finished sliced group
+        self.clear_group(worker);
         let mut m = sync::lock(&self.inner);
         // the in-process pull contract panics for a retired slot; convert
         // to the serving contract (recoverable error) before delegating
@@ -258,29 +322,48 @@ impl ServingMaster for LockedMaster {
         Ok(m.pull_params(worker))
     }
 
-    /// Reference-backend limitation: the [`Master`] trait has no sliced
-    /// pull, so each slice is cut from a *full* pull — O(S·k) for a full
-    /// sliced group, and the inner master's `has_pulled`/`pulled_at` are
-    /// set per slice rather than at group completion.  For clients that
-    /// fetch complete groups (every shipped client does) the assembled
-    /// result and all subsequent state are identical to the striped
-    /// backend's; only the push-before-*complete*-pull guard is laxer
-    /// here.  The striped backend is the production path for sliced
-    /// traffic.
+    /// Reference-backend sliced pull: the first slice of a group performs
+    /// ONE inner full pull and caches it; the remaining slices are cut
+    /// from the cache, so the inner pull-window accounting counts one
+    /// pull per group exactly like the striped backend.  The cached
+    /// slices are a point-in-time snapshot — pushes interleaving within
+    /// a group are reflected on the striped backend's later slices but
+    /// not here, which is the same cross-slice staleness a pull already
+    /// tolerates (DESIGN.md §9); serial driving is bit-for-bit equal.
     fn pull_shard(&self, worker: usize, shard: usize) -> anyhow::Result<Vec<f32>> {
         let mut m = sync::lock(&self.inner);
         anyhow::ensure!(m.is_live(worker), "pull for retired/unknown worker {worker}");
-        let full = m.pull_params(worker);
-        let ranges = shard_bounds(full.len(), self.shards);
+        let ranges = shard_bounds(m.param_len(), self.shards);
         let r = ranges
             .get(shard)
             .ok_or_else(|| anyhow::anyhow!("pull for shard {shard} of {}", ranges.len()))?
             .clone();
-        Ok(full[r].to_vec())
+        let mut groups = sync::lock(&self.sliced);
+        if groups.len() <= worker {
+            groups.resize_with(worker + 1, || None);
+        }
+        if groups[worker].is_none() {
+            groups[worker] = Some(SliceGroup {
+                fetched: vec![false; ranges.len()],
+                full: m.pull_params(worker),
+            });
+        }
+        let (out, complete) = {
+            let g = groups[worker].as_mut().expect("just ensured");
+            g.fetched[shard] = true;
+            (g.full[r].to_vec(), g.fetched.iter().all(|&f| f))
+        };
+        if complete {
+            groups[worker] = None;
+        }
+        Ok(out)
     }
 
-    fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
-        sync::lock(&self.inner).push_update(worker, msg)
+    fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<(Step, u64)> {
+        let mut m = sync::lock(&self.inner);
+        let settled = m.steps_done();
+        let s = m.push_update(worker, msg)?;
+        Ok((s, settled))
     }
 
     fn theta(&self) -> Vec<f32> {
@@ -297,6 +380,10 @@ impl ServingMaster for LockedMaster {
 
     fn set_metrics_every(&mut self, every: u64) {
         sync::lock(&self.inner).metrics_mut().set_every(every);
+    }
+
+    fn set_pipeline_hint(&mut self, depth: usize) {
+        sync::lock(&self.inner).set_pipeline_depth(depth);
     }
 }
 
@@ -345,7 +432,7 @@ impl ServingMaster for ShardedParameterServer {
         self.pull_shard_concurrent(worker, shard)
     }
 
-    fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+    fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<(Step, u64)> {
         self.push_concurrent(worker, msg)
     }
 
@@ -363,6 +450,10 @@ impl ServingMaster for ShardedParameterServer {
 
     fn set_metrics_every(&mut self, every: u64) {
         self.metrics.set_every(every);
+    }
+
+    fn set_pipeline_hint(&mut self, depth: usize) {
+        self.set_pipeline(depth);
     }
 }
 
@@ -415,17 +506,39 @@ pub fn make_master(
     }
 }
 
+/// One retained pull: the master step it happened at and the parameters
+/// that were sent (gap/lag accounting + DC-ASGD's θ_sent).
+#[derive(Debug, Clone)]
+struct PullRec {
+    at: u64,
+    params: Vec<f32>,
+}
+
 pub struct ParameterServer {
     alg: Box<dyn Algorithm>,
     schedule: LrSchedule,
-    /// Parameters most recently sent to each worker (for gap + DC-ASGD).
-    sent: Vec<Vec<f32>>,
-    /// Master step at which each worker last pulled.
-    pulled_at: Vec<u64>,
-    /// Whether each worker holds valid pulled parameters.
-    has_pulled: Vec<bool>,
+    /// Per-slot pull window, oldest first.  Capacity is `pipeline + 1`: a
+    /// pull beyond the cap *refreshes* the newest entry in place instead
+    /// of growing the window — at the default depth 0 that is exactly the
+    /// classic single-`sent` semantics (every pull overwrites; a worker
+    /// may push again against its latest pull).  A push is judged against
+    /// the *front* (the oldest outstanding pull — the parameters its
+    /// gradient was actually computed on under a pipelined driver) and
+    /// pops it, unless it is the only entry (classic re-push reuse).
+    ///
+    /// INVARIANT LOCKSTEP: the striped server implements the same
+    /// discipline under its per-slot mutexes (`sharded.rs::SlotPulls`);
+    /// any change here must be mirrored there — the
+    /// `pipelined_window_matches_monolithic_exactly` test in sharded.rs
+    /// pins the two against each other (sends, θ, and lag rows).
+    pulls: Vec<VecDeque<PullRec>>,
+    /// Recycled per-slot buffer so the steady-state pull path allocates
+    /// nothing (a pop hands its buffer here; the next append takes it).
+    spare: Vec<Option<Vec<f32>>>,
     /// Slot liveness (elastic membership).
     live: Vec<bool>,
+    /// Pipeline depth hint (window cap − 1); see [`Master::set_pipeline_depth`].
+    pipeline: usize,
     master_step: u64,
     last_eta: f32,
     momentum_correction: bool,
@@ -439,10 +552,10 @@ impl ParameterServer {
         ParameterServer {
             alg,
             schedule,
-            sent: vec![vec![0.0; k]; n_workers],
-            pulled_at: vec![0; n_workers],
-            has_pulled: vec![false; n_workers],
+            pulls: vec![VecDeque::new(); n_workers],
+            spare: vec![Some(vec![0.0; k]); n_workers],
             live: vec![true; n_workers],
+            pipeline: 0,
             master_step: 0,
             last_eta,
             momentum_correction: true,
@@ -457,7 +570,18 @@ impl ParameterServer {
 
     /// Worker slots ever allocated (live + retired).
     pub fn n_workers(&self) -> usize {
-        self.sent.len()
+        self.pulls.len()
+    }
+
+    /// The pull-window capacity (pipeline depth + 1), bounded by
+    /// [`MAX_PULL_WINDOW`].
+    fn window_cap(&self) -> usize {
+        (self.pipeline + 1).min(MAX_PULL_WINDOW)
+    }
+
+    /// Outstanding pulls for `worker` (window occupancy; tests/diagnostics).
+    pub fn outstanding_pulls(&self, worker: usize) -> usize {
+        self.pulls.get(worker).map(VecDeque::len).unwrap_or(0)
     }
 
     /// Workers currently in the cluster.
@@ -475,14 +599,14 @@ impl ParameterServer {
     pub fn add_worker(&mut self) -> usize {
         let slot = claim_slot(&mut self.live);
         let k = self.alg.param_count();
-        if slot == self.sent.len() {
-            self.sent.push(vec![0.0; k]);
-            self.pulled_at.push(0);
-            self.has_pulled.push(false);
+        if slot == self.pulls.len() {
+            self.pulls.push(VecDeque::new());
+            self.spare.push(Some(vec![0.0; k]));
         } else {
-            self.sent[slot].fill(0.0);
-            self.pulled_at[slot] = 0;
-            self.has_pulled[slot] = false;
+            self.pulls[slot].clear();
+            if self.spare[slot].is_none() {
+                self.spare[slot] = Some(vec![0.0; k]);
+            }
         }
         let alg_slot = self.alg.add_worker();
         debug_assert!(
@@ -494,7 +618,8 @@ impl ParameterServer {
 
     /// A worker leaves the cluster: retire its slot.  Its momentum is
     /// handled per `policy`; subsequent pushes from the slot are rejected
-    /// as recoverable errors until it is reused by a joiner.
+    /// as recoverable errors until it is reused by a joiner.  The slot's
+    /// pull window is discarded — a rejoiner must pull before pushing.
     pub fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.worker_is_live(worker),
@@ -502,7 +627,10 @@ impl ParameterServer {
             self.live.len()
         );
         self.live[worker] = false;
-        self.has_pulled[worker] = false;
+        if let Some(rec) = self.pulls[worker].pop_front() {
+            self.spare[worker] = Some(rec.params);
+        }
+        self.pulls[worker].clear();
         self.alg.remove_worker(worker, policy);
         Ok(())
     }
@@ -542,19 +670,33 @@ impl ParameterServer {
     /// Returns a reference to the retained copy.  Pulls are master-side
     /// initiated, so a pull for a retired slot is a caller bug (panics),
     /// unlike the racy push path which errors recoverably.
+    ///
+    /// Window discipline: below the cap (`pipeline + 1`) the pull appends
+    /// a new outstanding entry; at the cap it refreshes the newest entry
+    /// in place — which at depth 0 is exactly the pre-pipeline overwrite
+    /// semantics, bit for bit.
     pub fn pull(&mut self, worker: usize) -> &[f32] {
         assert!(
             self.worker_is_live(worker),
             "pull for retired/unknown worker {worker}"
         );
         let s = self.current_step();
-        // Send into the retained buffer, then hand out a view of it.
-        let mut buf = std::mem::take(&mut self.sent[worker]);
-        self.alg.master_send(worker, &mut buf, s);
-        self.sent[worker] = buf;
-        self.pulled_at[worker] = self.master_step;
-        self.has_pulled[worker] = true;
-        &self.sent[worker]
+        let t = self.master_step;
+        let cap = self.window_cap();
+        if self.pulls[worker].len() >= cap {
+            // refresh the newest pull in place (retained-buffer reuse;
+            // master_send is &self, so the disjoint field borrows coexist)
+            let rec = self.pulls[worker].back_mut().expect("cap >= 1");
+            rec.at = t;
+            self.alg.master_send(worker, &mut rec.params, s);
+        } else {
+            let k = self.alg.param_count();
+            let mut buf = self.spare[worker].take().unwrap_or_default();
+            buf.resize(k, 0.0);
+            self.alg.master_send(worker, &mut buf, s);
+            self.pulls[worker].push_back(PullRec { at: t, params: buf });
+        }
+        &self.pulls[worker].back().expect("just written").params
     }
 
     /// Worker `worker` delivers its message (gradient or update vector).
@@ -564,6 +706,12 @@ impl ParameterServer {
     /// A push from an unknown or retired worker — an in-flight update that
     /// raced a leave — is a recoverable error: nothing is applied and the
     /// caller may drop the message and continue.
+    ///
+    /// The push is judged against the *oldest* outstanding pull (the
+    /// parameters its gradient was computed on under a pipelined driver)
+    /// and consumes it, unless it is the only entry — the classic
+    /// semantics where a worker may push repeatedly against its latest
+    /// pull.
     pub fn push(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
         anyhow::ensure!(
             worker < self.live.len(),
@@ -572,7 +720,7 @@ impl ParameterServer {
         );
         anyhow::ensure!(self.live[worker], "push from retired worker {worker}");
         anyhow::ensure!(
-            self.has_pulled[worker],
+            !self.pulls[worker].is_empty(),
             "worker {worker} pushed before ever pulling"
         );
         let s = self.schedule.step_at(self.master_step);
@@ -582,11 +730,12 @@ impl ParameterServer {
         self.last_eta = s.eta;
 
         if self.metrics.wants(self.master_step) {
-            let sent = &self.sent[worker];
+            let front = self.pulls[worker].front().expect("validated non-empty");
+            let sent = &front.params;
             let k = sent.len() as f64;
             let gap = crate::math::sub_norm(self.alg.theta(), sent) / k.sqrt();
             let msg_norm = crate::math::norm2_sq(msg).sqrt();
-            let lag = self.master_step - self.pulled_at[worker];
+            let lag = self.master_step - front.at;
             self.metrics.record(MetricRow {
                 step: self.master_step,
                 worker,
@@ -598,8 +747,13 @@ impl ParameterServer {
             });
         }
 
-        self.alg.master_apply(worker, msg, &self.sent[worker], s);
+        let sent = &self.pulls[worker].front().expect("validated non-empty").params;
+        self.alg.master_apply(worker, msg, sent, s);
         self.master_step += 1;
+        if self.pulls[worker].len() > 1 {
+            let rec = self.pulls[worker].pop_front().expect("len > 1");
+            self.spare[worker] = Some(rec.params);
+        }
         Ok(s)
     }
 }
@@ -610,7 +764,7 @@ impl Master for ParameterServer {
     }
 
     fn workers(&self) -> usize {
-        self.sent.len()
+        self.pulls.len()
     }
 
     fn live_workers(&self) -> usize {
@@ -657,6 +811,11 @@ impl Master for ParameterServer {
         self.push(worker, msg)
     }
 
+    fn set_pipeline_depth(&mut self, depth: usize) {
+        self.pipeline = depth.min(MAX_PULL_WINDOW - 1);
+        self.alg.set_staleness_hint(self.pipeline);
+    }
+
     fn make_worker_state(&self) -> WorkerState {
         self.alg.make_worker_state()
     }
@@ -680,9 +839,11 @@ impl Master for ParameterServer {
             last_eta: self.last_eta,
             theta: self.alg.theta().to_vec(),
             live: self.live.clone(),
-            sent: self.sent.clone(),
-            pulled_at: self.pulled_at.clone(),
-            has_pulled: self.has_pulled.clone(),
+            pulls: self
+                .pulls
+                .iter()
+                .map(|q| q.iter().map(|r| (r.at, r.params.clone())).collect())
+                .collect(),
             state: self.alg.state_dict(),
         })
     }
@@ -703,7 +864,7 @@ impl Master for ParameterServer {
         // live-count-derived scalars like LWP's τ) matches the snapshot,
         // then overwrite all state.  Retiring fresh (zero) slots is
         // side-effect-free for every rule.
-        while self.sent.len() < snap.slots() {
+        while self.pulls.len() < snap.slots() {
             ParameterServer::add_worker(self);
         }
         for (w, &alive) in snap.live.iter().enumerate() {
@@ -713,9 +874,15 @@ impl Master for ParameterServer {
         }
         self.alg.set_theta(&snap.theta);
         self.alg.load_state_dict(&snap.state)?;
-        self.sent = snap.sent.clone();
-        self.pulled_at = snap.pulled_at.clone();
-        self.has_pulled = snap.has_pulled.clone();
+        self.pulls = snap
+            .pulls
+            .iter()
+            .map(|q| {
+                q.iter()
+                    .map(|(at, p)| PullRec { at: *at, params: p.clone() })
+                    .collect()
+            })
+            .collect();
         self.master_step = snap.master_step;
         self.last_eta = snap.last_eta;
         Ok(())
@@ -986,6 +1153,92 @@ mod tests {
         // too many pre-allocated slots
         let mut dst = make_master(AlgorithmKind::DanaZero, &theta0, sched(), 5, 1, 1);
         assert!(dst.restore(&snap).is_err());
+    }
+
+    #[test]
+    fn depth_zero_window_keeps_classic_overwrite_semantics() {
+        // repeated pulls overwrite the single window entry, and a worker
+        // may push repeatedly against its latest pull — exactly the
+        // pre-pipeline behavior.
+        let mut ps = server(AlgorithmKind::Asgd, 2, 4);
+        ps.metrics.set_every(1);
+        ps.pull(0);
+        ps.pull(0);
+        assert_eq!(ps.outstanding_pulls(0), 1, "depth 0 window never grows");
+        ps.push(0, &[0.1; 4]).unwrap();
+        ps.push(0, &[0.1; 4]).unwrap();
+        let lags: Vec<u64> = ps.metrics.rows().iter().map(|r| r.lag).collect();
+        assert_eq!(lags, vec![0, 1], "re-push reuses the latest pull's step");
+    }
+
+    #[test]
+    fn pipeline_window_judges_push_against_oldest_pull() {
+        let mut ps = server(AlgorithmKind::Asgd, 1, 2);
+        ps.set_pipeline_depth(2);
+        ps.metrics.set_every(1);
+        for _ in 0..3 {
+            ps.pull(0); // prime the depth-2 window (cap 3)
+        }
+        assert_eq!(ps.outstanding_pulls(0), 3);
+        ps.pull(0); // beyond the cap: refreshes the newest, window stays 3
+        assert_eq!(ps.outstanding_pulls(0), 3);
+        for _ in 0..5 {
+            ps.push(0, &[0.1; 2]).unwrap();
+            ps.pull(0);
+        }
+        let lags: Vec<u64> = ps.metrics.rows().iter().map(|r| r.lag).collect();
+        // primed pulls all at step 0 → lags ramp 0,1,2 then settle at the
+        // pipeline depth: the +D staleness shift, exactly.
+        assert_eq!(lags, vec![0, 1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn pipelined_dc_compensates_against_the_pull_it_was_computed_on() {
+        // DC-ASGD's Taylor term uses θ_sent: under a depth-1 window the
+        // second push must be compensated toward the SECOND pull — not
+        // the most recent one.
+        let theta0 = vec![1.0f32; 8];
+        let mut ps = server(AlgorithmKind::DcAsgd, 2, 8);
+        ps.set_pipeline_depth(1);
+        let mut reference = make_algorithm(AlgorithmKind::DcAsgd, &theta0, 2);
+        let s = ps.current_step(); // flat schedule: constant Step
+        let p1 = ps.pull(0).to_vec();
+        // another worker's push lands between worker 0's windowed pulls
+        let q1 = ps.pull(1).to_vec();
+        ps.push(1, &[0.5; 8]).unwrap();
+        reference.master_apply(1, &[0.5; 8], &q1, s);
+        let p2 = ps.pull(0).to_vec();
+        assert_ne!(p1, p2, "test premise: the windowed pulls must differ");
+        ps.push(0, &[0.3; 8]).unwrap();
+        reference.master_apply(0, &[0.3; 8], &p1, s);
+        assert_eq!(ps.theta(), reference.theta(), "first push judged against p1");
+        ps.pull(0);
+        ps.push(0, &[0.2; 8]).unwrap();
+        reference.master_apply(0, &[0.2; 8], &p2, s);
+        assert_eq!(ps.theta(), reference.theta(), "second push judged against p2");
+    }
+
+    #[test]
+    fn pipelined_window_round_trips_through_snapshot() {
+        let mut ps = server(AlgorithmKind::DanaZero, 2, 4);
+        ps.set_pipeline_depth(1);
+        ps.pull(0);
+        ps.pull(0);
+        ps.pull(1);
+        ps.push(0, &[0.2; 4]).unwrap();
+        let snap = ps.snapshot().unwrap();
+        assert_eq!(snap.pulls[0].len(), 1, "push consumed the oldest entry");
+        assert_eq!(snap.pulls[1].len(), 1);
+        let mut dst = server(AlgorithmKind::DanaZero, 2, 4);
+        dst.set_pipeline_depth(1);
+        dst.restore(&snap).unwrap();
+        // continuation equality: same pushes against the restored window
+        ps.push(0, &[0.1; 4]).unwrap();
+        dst.push(0, &[0.1; 4]).unwrap();
+        ps.push(1, &[0.4; 4]).unwrap();
+        dst.push(1, &[0.4; 4]).unwrap();
+        assert_eq!(ps.theta(), dst.theta());
+        assert_eq!(ps.snapshot().unwrap(), dst.snapshot().unwrap());
     }
 
     #[test]

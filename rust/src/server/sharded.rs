@@ -18,14 +18,15 @@
 //!   single shard currently being written, and two pushes write different
 //!   shards concurrently;
 //! * **sequencer** (`master_step`, schedule point, momentum-correction
-//!   trigger, `pulled_at`/`has_pulled`, liveness): one small mutex held
+//!   trigger, liveness, sliced-pull group masks): one small mutex held
 //!   for O(1) work.  Every push takes a **ticket** (its master step) here;
 //!   per-shard *gates* (`Mutex<u64>` + condvar) then admit applies to each
 //!   shard in strict ticket order.  Any interleaving of serving threads
 //!   therefore produces exactly the FIFO trajectory of the ticket order —
 //!   bit-for-bit the monolithic/global-lock behaviour for that order;
-//! * **per-worker `sent` copies** (gap accounting + DC-ASGD): full-length
-//!   vectors, one mutex per worker slot.  A worker's own requests are
+//! * **per-worker pull windows** (gap/lag accounting + DC-ASGD's θ_sent):
+//!   full-length retained copies of up to `pipeline + 1` outstanding
+//!   pulls, one mutex per worker slot.  A worker's own requests are
 //!   serial, so this lock is effectively uncontended;
 //! * **membership epoch lock**: an outer `RwLock<()>`.  Pulls/pushes hold
 //!   it for read; join/leave/restore/snapshot take it for write, so a
@@ -49,13 +50,14 @@
 //! ticket protocol from many threads.
 
 use super::metrics::{MetricRow, MetricsRecorder};
-use super::{Master, MasterSnapshot};
+use super::{Master, MasterSnapshot, MAX_PULL_WINDOW};
 use crate::math;
 use crate::optim::{
     claim_slot, make_algorithm, Algorithm, AlgorithmKind, ApplyStats, LeavePolicy, LrSchedule,
     StateDict, StateVec, Step, WorkerState, ANY_SLOT,
 };
 use crate::util::{parallel, sync};
+use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::{Condvar, Mutex, RwLock};
 
@@ -143,16 +145,45 @@ struct Seq {
     schedule: LrSchedule,
     master_step: u64,
     last_eta: f32,
-    /// Master step at which each worker last pulled.
-    pulled_at: Vec<u64>,
-    /// Whether each worker holds valid pulled parameters.
-    has_pulled: Vec<bool>,
     /// Slot liveness (elastic membership), authoritative copy.
     live: Vec<bool>,
     /// Per-worker mask of shards fetched since the last completed
     /// shard-sliced pull group (wire `PullShard` frames); a group counts
     /// as a full pull once every shard has been fetched.
     shard_pulled: Vec<Vec<bool>>,
+    /// Pipeline depth hint: per-slot pull windows hold up to
+    /// `pipeline + 1` outstanding pulls (see [`SlotPulls`]).
+    pipeline: usize,
+}
+
+/// Per-slot pull window, under the slot's own mutex (a worker's requests
+/// are serial on its connection, so this lock is effectively uncontended).
+/// Same discipline as the monolithic server: below the cap a pull appends,
+/// at the cap it refreshes the newest entry (the classic depth-0 overwrite
+/// semantics); a push is judged against the front and pops it unless it is
+/// the only entry.
+///
+/// INVARIANT LOCKSTEP with `server/mod.rs::ParameterServer::pulls`: any
+/// change to the window discipline must be mirrored there — the
+/// `pipelined_window_matches_monolithic_exactly` test below pins the two
+/// implementations against each other.
+struct SlotPulls {
+    /// Outstanding pulls, oldest first: (master step at pull, parameters).
+    queue: VecDeque<(u64, Vec<f32>)>,
+    /// Recycled buffer for the next append.
+    spare: Option<Vec<f32>>,
+    /// Partially assembled shard-sliced pull group (wire `PullShard`).
+    building: Option<Vec<f32>>,
+}
+
+impl SlotPulls {
+    fn fresh(k: usize) -> SlotPulls {
+        SlotPulls {
+            queue: VecDeque::new(),
+            spare: Some(vec![0.0; k]),
+            building: None,
+        }
+    }
 }
 
 /// Sharded drop-in for [`super::ParameterServer`]: same FIFO discipline,
@@ -177,9 +208,10 @@ pub struct ShardedParameterServer {
     epoch: RwLock<()>,
     seq: Mutex<Seq>,
     shards: Vec<ShardCell>,
-    /// Parameters most recently sent to each worker, full length; the
-    /// outer RwLock only guards slot-vector growth at joins.
-    sent: RwLock<Vec<Mutex<Vec<f32>>>>,
+    /// Per-slot pull windows, full length; the outer RwLock only guards
+    /// slot-vector growth at joins.  Lock order: slot mutex before `seq`
+    /// (both pull and push follow it; nothing acquires them reversed).
+    pulls: RwLock<Vec<Mutex<SlotPulls>>>,
     pub metrics: MetricsRecorder,
 }
 
@@ -220,16 +252,29 @@ impl ShardedParameterServer {
                 schedule,
                 master_step: 0,
                 last_eta,
-                pulled_at: vec![0; n_workers],
-                has_pulled: vec![false; n_workers],
                 live: vec![true; n_workers],
                 shard_pulled: vec![vec![false; n_shards]; n_workers],
+                pipeline: 0,
             }),
             shards,
-            sent: RwLock::new(
-                (0..n_workers).map(|_| Mutex::new(vec![0.0; theta0.len()])).collect(),
+            pulls: RwLock::new(
+                (0..n_workers)
+                    .map(|_| Mutex::new(SlotPulls::fresh(theta0.len())))
+                    .collect(),
             ),
             metrics: MetricsRecorder::default(),
+        }
+    }
+
+    /// Configure the pipeline window (depth = `--pipeline-depth`): sizes
+    /// the per-slot pull windows to `depth + 1` and forwards the staleness
+    /// hint to every shard's algorithm.  Setup-time (before the server is
+    /// shared), but `&self` so both trait paths can reach it.
+    pub fn set_pipeline(&self, depth: usize) {
+        let depth = depth.min(MAX_PULL_WINDOW - 1);
+        sync::lock(&self.seq).pipeline = depth;
+        for sh in &self.shards {
+            sync::write(&sh.alg).set_staleness_hint(depth);
         }
     }
 
@@ -261,7 +306,7 @@ impl ShardedParameterServer {
 
     /// Worker slots ever allocated (live + retired).
     pub fn n_workers(&self) -> usize {
-        sync::lock(&self.seq).pulled_at.len()
+        sync::lock(&self.seq).live.len()
     }
 
     /// Workers currently in the cluster.
@@ -323,8 +368,8 @@ impl ShardedParameterServer {
     /// Allocation-free concurrent pull: each shard runs its algorithm's
     /// (read-only) `master_send` under the shard's *read* lock, so pulls
     /// proceed in parallel with each other and with applies on other
-    /// shards.  The retained `sent` copy is updated under the worker's
-    /// own slot mutex.
+    /// shards.  The retained copy lands in the slot's pull window under
+    /// the worker's own slot mutex (window discipline: see [`SlotPulls`]).
     pub fn pull_into_concurrent(&self, worker: usize, out: &mut [f32]) -> anyhow::Result<()> {
         anyhow::ensure!(
             out.len() == self.k,
@@ -333,33 +378,45 @@ impl ShardedParameterServer {
             self.k
         );
         let _e = sync::read(&self.epoch);
-        let s = {
+        let slots = sync::read(&self.pulls);
+        anyhow::ensure!(
+            worker < slots.len(),
+            "pull for retired/unknown worker {worker}"
+        );
+        let mut sp = sync::lock(&slots[worker]);
+        let (t, s, cap) = {
             let mut q = sync::lock(&self.seq);
             anyhow::ensure!(
                 q.live.get(worker).copied().unwrap_or(false),
                 "pull for retired/unknown worker {worker}"
             );
             let t = q.master_step;
-            q.pulled_at[worker] = t;
-            q.has_pulled[worker] = true;
             // a full pull supersedes any half-finished sliced pull group
             q.shard_pulled[worker].fill(false);
-            q.schedule.step_at(t)
+            (t, q.schedule.step_at(t), q.pipeline + 1)
         };
-        let slots = sync::read(&self.sent);
-        let mut sent = sync::lock(&slots[worker]);
+        // destination for the retained copy: refresh the newest window
+        // entry at the cap, else append (recycling the spare buffer)
+        let mut keep = if sp.queue.len() >= cap {
+            let (_, buf) = sp.queue.pop_back().expect("cap >= 1");
+            buf
+        } else {
+            let mut buf = sp.spare.take().unwrap_or_default();
+            buf.resize(self.k, 0.0);
+            buf
+        };
         // Pre-split both buffers so each scoped thread owns disjoint
         // destinations.
         let mut work: Vec<(&ShardCell, &mut [f32], &mut [f32])> =
             Vec::with_capacity(self.shards.len());
         let mut out_rest: &mut [f32] = out;
-        let mut sent_rest: &mut [f32] = &mut sent;
+        let mut keep_rest: &mut [f32] = &mut keep;
         for sh in &self.shards {
             let (o, o_rem) = std::mem::take(&mut out_rest).split_at_mut(sh.range.len());
-            let (c, c_rem) = std::mem::take(&mut sent_rest).split_at_mut(sh.range.len());
+            let (c, c_rem) = std::mem::take(&mut keep_rest).split_at_mut(sh.range.len());
             work.push((sh, o, c));
             out_rest = o_rem;
-            sent_rest = c_rem;
+            keep_rest = c_rem;
         }
         parallel::par_chunks_mut(&mut work, self.threads, |_, group| {
             for (sh, o, c) in group.iter_mut() {
@@ -368,12 +425,14 @@ impl ShardedParameterServer {
                 c.copy_from_slice(o);
             }
         });
+        sp.queue.push_back((t, keep));
         Ok(())
     }
 
     /// One shard slice of a pull (wire `PullShard`): same read-lock path
-    /// restricted to shard `shard`.  A worker's sliced pulls count as a
-    /// full pull (for the push-before-pull guard and lag accounting) once
+    /// restricted to shard `shard`.  A worker's sliced pulls assemble in
+    /// the slot's `building` buffer and count as one full pull (one window
+    /// entry, for the push-before-pull guard and lag accounting) once
     /// every shard has been fetched.
     pub fn pull_shard_concurrent(&self, worker: usize, shard: usize) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(
@@ -382,7 +441,13 @@ impl ShardedParameterServer {
             self.shards.len()
         );
         let _e = sync::read(&self.epoch);
-        let s = {
+        let slots = sync::read(&self.pulls);
+        anyhow::ensure!(
+            worker < slots.len(),
+            "pull for retired/unknown worker {worker}"
+        );
+        let mut sp = sync::lock(&slots[worker]);
+        let (t, s, cap, complete) = {
             let mut q = sync::lock(&self.seq);
             anyhow::ensure!(
                 q.live.get(worker).copied().unwrap_or(false),
@@ -390,22 +455,32 @@ impl ShardedParameterServer {
             );
             let t = q.master_step;
             q.shard_pulled[worker][shard] = true;
-            if q.shard_pulled[worker].iter().all(|&m| m) {
-                q.pulled_at[worker] = t;
-                q.has_pulled[worker] = true;
+            let complete = q.shard_pulled[worker].iter().all(|&m| m);
+            if complete {
                 q.shard_pulled[worker].fill(false);
             }
-            q.schedule.step_at(t)
+            (t, q.schedule.step_at(t), q.pipeline + 1, complete)
         };
         let sh = &self.shards[shard];
         let mut out = vec![0.0f32; sh.range.len()];
-        let slots = sync::read(&self.sent);
-        let mut sent = sync::lock(&slots[worker]);
         {
             let alg = sync::read(&sh.alg);
             alg.master_send(worker, &mut out, s);
         }
-        sent[sh.range.clone()].copy_from_slice(&out);
+        let mut building = sp.building.take().unwrap_or_default();
+        building.resize(self.k, 0.0);
+        building[sh.range.clone()].copy_from_slice(&out);
+        if complete {
+            // the assembled group becomes one window entry, pulled at the
+            // completion step (matching the monolithic accounting)
+            if sp.queue.len() >= cap {
+                let (_, old) = sp.queue.pop_back().expect("cap >= 1");
+                sp.spare = Some(old);
+            }
+            sp.queue.push_back((t, building));
+        } else {
+            sp.building = Some(building);
+        }
         Ok(out)
     }
 
@@ -414,21 +489,27 @@ impl ShardedParameterServer {
     /// make any thread interleaving equivalent to the ticket-order FIFO).
     /// Mirrors the monolithic push exactly: validation, schedule +
     /// momentum correction, metric tap (reduced across shards in shard
-    /// order), then the (possibly two-phase) apply.
-    pub fn push_concurrent(&self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+    /// order), then the (possibly two-phase) apply — judged against the
+    /// *front* of the slot's pull window (the parameters the gradient was
+    /// computed on under a pipelined driver), which is consumed unless it
+    /// is the only entry.  Returns the applied [`Step`] and the ticket
+    /// (the master step the push settled as).
+    pub fn push_concurrent(&self, worker: usize, msg: &[f32]) -> anyhow::Result<(Step, u64)> {
         let _e = sync::read(&self.epoch);
+        let slots = sync::read(&self.pulls);
+        anyhow::ensure!(
+            worker < slots.len(),
+            "push from unknown worker {worker} (slots: {})",
+            slots.len()
+        );
+        let mut sp = sync::lock(&slots[worker]);
         // All failure paths must precede ticket assignment: a taken ticket
         // is always applied, or the gate chain would wedge.
         let (ticket, s, rescale, want_metrics, lag) = {
             let mut q = sync::lock(&self.seq);
-            anyhow::ensure!(
-                worker < q.live.len(),
-                "push from unknown worker {worker} (slots: {})",
-                q.live.len()
-            );
             anyhow::ensure!(q.live[worker], "push from retired worker {worker}");
             anyhow::ensure!(
-                q.has_pulled[worker],
+                !sp.queue.is_empty(),
                 "worker {worker} pushed before ever pulling"
             );
             anyhow::ensure!(
@@ -446,13 +527,12 @@ impl ShardedParameterServer {
                 None
             };
             q.last_eta = s.eta;
-            let lag = t - q.pulled_at[worker];
+            let lag = t - sp.queue.front().expect("validated non-empty").0;
             q.master_step = t + 1;
             (t, s, rescale, self.metrics.wants(t), lag)
         };
         let _repair = GateRepair { shards: &self.shards, next: ticket + 1 };
-        let slots = sync::read(&self.sent);
-        let sent = sync::lock(&slots[worker]);
+        let sent: &[f32] = &sp.queue.front().expect("validated non-empty").1;
         // (gap_sq, msg_sq) partials per shard, reduced in shard order.
         let mut partials: Vec<(f64, f64)> = vec![(0.0, 0.0); self.shards.len()];
 
@@ -489,7 +569,7 @@ impl ShardedParameterServer {
             // out over scoped threads.  Each shard's gate admits tickets
             // in order, so overlapping pushes pipeline across shards.
             let stats = ApplyStats::default();
-            let sent_ref: &[f32] = &sent;
+            let sent_ref: &[f32] = sent;
             let mut work: Vec<(&ShardCell, &mut (f64, f64))> =
                 self.shards.iter().zip(partials.iter_mut()).collect();
             parallel::par_chunks_mut(&mut work, self.threads, |_, group| {
@@ -531,7 +611,13 @@ impl ShardedParameterServer {
                 msg_norm,
             });
         }
-        Ok(s)
+        // consume the front entry unless it is the only one (the classic
+        // re-push-against-latest-pull semantics at depth 0)
+        if sp.queue.len() > 1 {
+            let (_, buf) = sp.queue.pop_front().expect("len > 1");
+            sp.spare = Some(buf);
+        }
+        Ok((s, ticket))
     }
 
     // ------------------------------------------------ membership (epoch)
@@ -543,11 +629,11 @@ impl ShardedParameterServer {
     pub fn add_worker_concurrent(&self) -> usize {
         let _e = sync::write(&self.epoch);
         let mut q = sync::lock(&self.seq);
-        let mut sent = sync::write(&self.sent);
-        self.add_worker_inner(&mut q, &mut sent)
+        let mut pulls = sync::write(&self.pulls);
+        self.add_worker_inner(&mut q, &mut pulls)
     }
 
-    fn add_worker_inner(&self, q: &mut Seq, sent: &mut Vec<Mutex<Vec<f32>>>) -> usize {
+    fn add_worker_inner(&self, q: &mut Seq, pulls: &mut Vec<Mutex<SlotPulls>>) -> usize {
         let slot = claim_slot(&mut q.live);
         for sh in &self.shards {
             let alg_slot = sync::write(&sh.alg).add_worker();
@@ -556,15 +642,11 @@ impl ShardedParameterServer {
                 "shard allocated slot {alg_slot}, server allocated {slot}"
             );
         }
-        if slot == sent.len() {
-            sent.push(Mutex::new(vec![0.0; self.k]));
-            q.pulled_at.push(0);
-            q.has_pulled.push(false);
+        if slot == pulls.len() {
+            pulls.push(Mutex::new(SlotPulls::fresh(self.k)));
             q.shard_pulled.push(vec![false; self.shards.len()]);
         } else {
-            sync::lock(&sent[slot]).fill(0.0);
-            q.pulled_at[slot] = 0;
-            q.has_pulled[slot] = false;
+            *sync::lock(&pulls[slot]) = SlotPulls::fresh(self.k);
             q.shard_pulled[slot].fill(false);
         }
         slot
@@ -579,12 +661,14 @@ impl ShardedParameterServer {
     ) -> anyhow::Result<()> {
         let _e = sync::write(&self.epoch);
         let mut q = sync::lock(&self.seq);
-        self.remove_worker_inner(&mut q, worker, policy)
+        let pulls = sync::write(&self.pulls);
+        self.remove_worker_inner(&mut q, &pulls, worker, policy)
     }
 
     fn remove_worker_inner(
         &self,
         q: &mut Seq,
+        pulls: &[Mutex<SlotPulls>],
         worker: usize,
         policy: LeavePolicy,
     ) -> anyhow::Result<()> {
@@ -594,8 +678,9 @@ impl ShardedParameterServer {
             q.live.len()
         );
         q.live[worker] = false;
-        q.has_pulled[worker] = false;
         q.shard_pulled[worker].fill(false);
+        // the leaver's pull window dies with it: a rejoiner must pull
+        *sync::lock(&pulls[worker]) = SlotPulls::fresh(self.k);
         for sh in &self.shards {
             sync::write(&sh.alg).remove_worker(worker, policy);
         }
@@ -610,8 +695,13 @@ impl ShardedParameterServer {
     pub fn snapshot_concurrent(&self) -> anyhow::Result<MasterSnapshot> {
         let _e = sync::write(&self.epoch);
         let q = sync::lock(&self.seq);
-        let slots = sync::read(&self.sent);
-        let sent: Vec<Vec<f32>> = slots.iter().map(|m| sync::lock(m).clone()).collect();
+        let slots = sync::read(&self.pulls);
+        // half-assembled sliced groups are connection state, not training
+        // state — only the completed pull windows are snapshotted
+        let pulls: Vec<Vec<(u64, Vec<f32>)>> = slots
+            .iter()
+            .map(|m| sync::lock(m).queue.iter().cloned().collect())
+            .collect();
         let mut theta = vec![0.0f32; self.k];
         let mut state: StateDict = Vec::new();
         for (si, sh) in self.shards.iter().enumerate() {
@@ -655,9 +745,7 @@ impl ShardedParameterServer {
             last_eta: q.last_eta,
             theta,
             live: q.live.clone(),
-            sent,
-            pulled_at: q.pulled_at.clone(),
-            has_pulled: q.has_pulled.clone(),
+            pulls,
             state,
         })
     }
@@ -683,17 +771,19 @@ impl ShardedParameterServer {
             // Replay membership so the algorithms' internal liveness (and
             // any live-count-derived scalars like LWP's τ) matches the
             // snapshot, then overwrite all state.
-            let mut sent = sync::write(&self.sent);
+            let mut pulls = sync::write(&self.pulls);
             while q.live.len() < snap.slots() {
-                self.add_worker_inner(&mut q, &mut sent);
+                self.add_worker_inner(&mut q, &mut pulls);
             }
             for (w, &alive) in snap.live.iter().enumerate() {
                 if !alive {
-                    self.remove_worker_inner(&mut q, w, LeavePolicy::Retire)?;
+                    self.remove_worker_inner(&mut q, &pulls, w, LeavePolicy::Retire)?;
                 }
             }
-            for (slot, full) in sent.iter().zip(&snap.sent) {
-                sync::lock(slot).copy_from_slice(full);
+            for (slot, window) in pulls.iter().zip(&snap.pulls) {
+                let mut sp = sync::lock(slot);
+                sp.queue = window.iter().cloned().collect();
+                sp.building = None;
             }
         }
         for sh in &self.shards {
@@ -719,8 +809,6 @@ impl ShardedParameterServer {
             alg.load_state_dict(&local)?;
             *sync::lock(&sh.gate) = snap.master_step;
         }
-        q.pulled_at = snap.pulled_at.clone();
-        q.has_pulled = snap.has_pulled.clone();
         q.master_step = snap.master_step;
         q.last_eta = snap.last_eta;
         Ok(())
@@ -741,8 +829,18 @@ impl ShardedParameterServer {
     }
 
     /// Worker `worker` delivers its message; see [`Self::push_concurrent`].
-    pub fn push(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+    /// Returns the applied [`Step`] and the settled master step.
+    pub fn push(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<(Step, u64)> {
         self.push_concurrent(worker, msg)
+    }
+
+    /// Outstanding pulls in `worker`'s window (tests/diagnostics).
+    pub fn outstanding_pulls(&self, worker: usize) -> usize {
+        let slots = sync::read(&self.pulls);
+        slots
+            .get(worker)
+            .map(|m| sync::lock(m).queue.len())
+            .unwrap_or(0)
     }
 
     pub fn add_worker(&mut self) -> usize {
@@ -804,7 +902,11 @@ impl Master for ShardedParameterServer {
     }
 
     fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
-        self.push_concurrent(worker, msg)
+        self.push_concurrent(worker, msg).map(|(s, _)| s)
+    }
+
+    fn set_pipeline_depth(&mut self, depth: usize) {
+        self.set_pipeline(depth);
     }
 
     fn make_worker_state(&self) -> WorkerState {
@@ -1017,6 +1119,81 @@ mod tests {
         assert_eq!(assembled, vec![1.0; k]);
         ps.push_concurrent(0, &vec![0.1; k]).unwrap();
         assert_eq!(ps.master_step(), 1);
+    }
+
+    #[test]
+    fn pipelined_window_matches_monolithic_exactly() {
+        // depth-1 windows: striped ≡ monolithic through the identical
+        // pipelined pull/push sequence — sends, θ, and lag rows.
+        let k = 13;
+        let theta0: Vec<f32> = (0..k).map(|i| (i as f32 * 0.3).sin()).collect();
+        let mut mono = crate::server::ParameterServer::new(
+            make_algorithm(AlgorithmKind::DcAsgd, &theta0, 2),
+            schedule(2),
+            2,
+        );
+        let mut shrd =
+            ShardedParameterServer::new(AlgorithmKind::DcAsgd, &theta0, schedule(2), 2, 4);
+        Master::set_pipeline_depth(&mut mono, 1);
+        shrd.set_pipeline(1);
+        mono.metrics.set_every(1);
+        shrd.metrics.set_every(1);
+        for w in 0..2 {
+            for _ in 0..2 {
+                let a = mono.pull(w).to_vec();
+                let b = shrd.pull(w);
+                assert_eq!(a, b, "prime pull diverged for worker {w}");
+            }
+        }
+        let mut rng = crate::util::rng::Rng::new(41);
+        for step in 0..30 {
+            let w = step % 2;
+            let g: Vec<f32> = (0..k).map(|_| 0.1 * rng.normal() as f32).collect();
+            mono.push(w, &g).unwrap();
+            shrd.push(w, &g).unwrap();
+            let a = mono.pull(w).to_vec();
+            let b = shrd.pull(w);
+            for i in 0..k {
+                assert!((a[i] - b[i]).abs() < 1e-6, "step {step} send[{i}]: {} vs {}", a[i], b[i]);
+            }
+        }
+        let (ra, rb) = (shrd.metrics.rows(), mono.metrics.rows());
+        assert_eq!(ra.len(), rb.len());
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!((x.step, x.worker, x.lag), (y.step, y.worker, y.lag));
+        }
+        let (a, b) = (shrd.theta_vec(), mono.theta().to_vec());
+        for i in 0..k {
+            assert!((a[i] - b[i]).abs() < 1e-5, "theta[{i}]: {} vs {}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn sliced_groups_fill_the_pipeline_window_in_order() {
+        let k = 10;
+        let ps = ShardedParameterServer::new(
+            AlgorithmKind::Asgd,
+            &vec![1.0f32; k],
+            schedule(1),
+            1,
+            3,
+        );
+        ps.set_pipeline(1); // window cap 2
+        let pull_group = |ps: &ShardedParameterServer| {
+            for shard in 0..3 {
+                ps.pull_shard_concurrent(0, shard).unwrap();
+            }
+        };
+        pull_group(&ps);
+        assert_eq!(ps.outstanding_pulls(0), 1);
+        pull_group(&ps);
+        assert_eq!(ps.outstanding_pulls(0), 2);
+        pull_group(&ps); // at the cap: refreshes the newest entry
+        assert_eq!(ps.outstanding_pulls(0), 2);
+        ps.push_concurrent(0, &vec![0.1; k]).unwrap();
+        assert_eq!(ps.outstanding_pulls(0), 1, "push consumed the oldest group");
+        ps.push_concurrent(0, &vec![0.1; k]).unwrap();
+        assert_eq!(ps.outstanding_pulls(0), 1, "the last entry is retained");
     }
 
     #[test]

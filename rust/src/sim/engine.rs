@@ -90,6 +90,17 @@ pub struct AsyncSchedule {
     emitted: u64,
     /// Churn events still to fire, as (master-step threshold, action).
     pending: VecDeque<(u64, ChurnAction)>,
+    /// Pull→params round-trip time (communication latency); 0 = the
+    /// classic schedule where communication is free.
+    rtt: f64,
+    /// Per-worker ring of the issue times of outstanding pulls, oldest
+    /// first (length = pipeline depth while a batch computes): batch n+1
+    /// can start once it is both free AND `front + rtt` has passed —
+    /// pipelining hides the round trip behind compute.  Unused when
+    /// `rtt == 0` (the schedule is then bit-for-bit depth-independent).
+    pull_ring: Vec<VecDeque<f64>>,
+    /// Pipeline depth D (D+1 batches in flight per worker).
+    depth: usize,
 }
 
 impl AsyncSchedule {
@@ -109,7 +120,47 @@ impl AsyncSchedule {
             gen: vec![0; n],
             emitted: 0,
             pending: VecDeque::new(),
+            rtt: 0.0,
+            pull_ring: vec![VecDeque::new(); n],
+            depth: 0,
         }
+    }
+
+    /// Model a pipelined worker runtime: each worker keeps `depth + 1`
+    /// batches in flight and every pull costs `rtt` time units of
+    /// communication.  With `rtt == 0` the completion stream is
+    /// bit-for-bit the classic one at ANY depth (communication is free,
+    /// and ASGD workers never idle); with `rtt > 0` a depth-0 worker
+    /// stalls `rtt` per cycle (pull→compute→push round trips) while a
+    /// deep-enough pipeline hides the latency behind compute entirely.
+    /// Consumes no RNG.  Must be applied before any event is consumed.
+    pub fn with_pipeline(mut self, depth: usize, rtt: f64) -> Self {
+        assert_eq!(self.emitted, 0, "with_pipeline must precede event consumption");
+        assert!(rtt >= 0.0 && rtt.is_finite(), "rtt must be finite and >= 0");
+        self.depth = depth;
+        self.rtt = rtt;
+        if rtt > 0.0 {
+            // the priming pulls (batches 1..=D+1) are all issued at t=0;
+            // one is consumed by each worker's first dispatch, so the
+            // ring holds D entries while batch 1 computes
+            for ring in &mut self.pull_ring {
+                ring.clear();
+                for _ in 0..depth {
+                    ring.push_back(0.0);
+                }
+            }
+            // initial dispatches (drawn in `new`) wait for their primed
+            // pull to arrive: shift every in-flight completion by rtt
+            // (a uniform shift — heap order is unchanged)
+            let items: Vec<HeapItem> = self.heap.drain().collect();
+            self.heap = items
+                .into_iter()
+                .map(|HeapItem(c, g)| {
+                    HeapItem(Completion { time: c.time + rtt, worker: c.worker }, g)
+                })
+                .collect();
+        }
+        self
     }
 
     /// Attach a churn schedule for a run of `total_steps` master steps.
@@ -156,6 +207,7 @@ impl AsyncSchedule {
                 let slot = crate::optim::claim_slot(&mut self.live);
                 if slot == self.gen.len() {
                     self.gen.push(0);
+                    self.pull_ring.push(VecDeque::new());
                     let m = self.model.add_machine(&mut self.rng);
                     debug_assert_eq!(m, slot);
                 } else {
@@ -163,10 +215,23 @@ impl AsyncSchedule {
                     // inherited straggler rescale
                     self.model.reset_machine(slot, &mut self.rng);
                 }
-                // dispatch the joiner's first batch from `now`
+                // dispatch the joiner's first batch from `now` (after the
+                // priming pull's round trip under an rtt model; its D
+                // remaining primed pulls are also issued at `now`)
+                let stall = if self.rtt > 0.0 {
+                    let now = self.now;
+                    let ring = &mut self.pull_ring[slot];
+                    ring.clear();
+                    for _ in 0..self.depth {
+                        ring.push_back(now);
+                    }
+                    self.rtt
+                } else {
+                    0.0
+                };
                 let dur = self.model.sample(slot, &mut self.rng);
                 self.heap.push(HeapItem(
-                    Completion { time: self.now + dur, worker: slot },
+                    Completion { time: self.now + stall + dur, worker: slot },
                     self.gen[slot],
                 ));
                 Some(ClusterEvent::Join { time: self.now, worker: slot })
@@ -233,9 +298,22 @@ impl AsyncSchedule {
                 continue; // stale: the worker left after this dispatch
             }
             self.now = c.time;
+            // Pipeline/RTT model: the push for this batch (and the pull
+            // for batch n+D+1) go out now; the next batch starts once its
+            // own params — pulled at the ring's front — have arrived.
+            // With rtt == 0 this is exactly the classic instant
+            // re-dispatch, whatever the depth.
+            let start = if self.rtt > 0.0 {
+                let ring = &mut self.pull_ring[c.worker];
+                ring.push_back(c.time);
+                let pulled = ring.pop_front().unwrap_or(c.time);
+                c.time.max(pulled + self.rtt)
+            } else {
+                c.time
+            };
             let dur = self.model.sample(c.worker, &mut self.rng);
             self.heap
-                .push(HeapItem(Completion { time: c.time + dur, worker: c.worker }, g));
+                .push(HeapItem(Completion { time: start + dur, worker: c.worker }, g));
             self.emitted += 1;
             return ClusterEvent::Completion(c);
         }
@@ -382,6 +460,93 @@ mod tests {
         let a = AsyncSchedule::new(m1, r1).take_n(100);
         let b = AsyncSchedule::new(m2, r2).take_n(100);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn free_communication_pipeline_is_bit_for_bit_identical() {
+        // rtt == 0: the completion stream is depth-independent and equals
+        // the classic schedule exactly (no extra RNG, same heap order).
+        let (m1, r1) = model(Environment::Heterogeneous, 4, 31);
+        let (m2, r2) = model(Environment::Heterogeneous, 4, 31);
+        let plain = AsyncSchedule::new(m1, r1).take_n(300);
+        let piped = AsyncSchedule::new(m2, r2).with_pipeline(3, 0.0).take_n(300);
+        assert_eq!(plain, piped);
+    }
+
+    #[test]
+    fn pipelining_hides_the_round_trip() {
+        // N=1, rtt far below the mean batch time: depth 0 pays rtt per
+        // cycle, depth 1 pays it once (the priming pull) and then hides
+        // it behind compute entirely.
+        let n = 200;
+        let rtt = 10.0;
+        let runs: Vec<f64> = [None, Some(0), Some(1)]
+            .into_iter()
+            .map(|depth| {
+                let (m, r) = model(Environment::Homogeneous, 1, 77);
+                let mut s = match depth {
+                    None => AsyncSchedule::new(m, r),
+                    Some(d) => AsyncSchedule::new(m, r).with_pipeline(d, rtt),
+                };
+                s.take_n(n).last().unwrap().time
+            })
+            .collect();
+        let (plain, d0, d1) = (runs[0], runs[1], runs[2]);
+        let close = |a: f64, b: f64| (a - b).abs() < 1e-6 * (1.0 + b.abs());
+        assert!(close(d0, plain + n as f64 * rtt), "depth 0 pays rtt per cycle: {d0} vs {plain}");
+        assert!(close(d1, plain + rtt), "depth 1 hides all but the priming rtt: {d1} vs {plain}");
+    }
+
+    #[test]
+    fn shallow_pipeline_pays_partial_stalls_when_compute_is_short() {
+        // rtt ABOVE the mean batch time: depth 1 can only hide one batch
+        // of compute, so throughput sits strictly between depth 0 and a
+        // deep pipeline.
+        let n = 400;
+        let rtt = 300.0; // mean batch time is 128
+        let time_at = |depth: usize| {
+            let (m, r) = model(Environment::Homogeneous, 2, 13);
+            AsyncSchedule::new(m, r)
+                .with_pipeline(depth, rtt)
+                .take_n(n)
+                .last()
+                .unwrap()
+                .time
+        };
+        let (t0, t1, t4) = (time_at(0), time_at(1), time_at(4));
+        assert!(t1 < t0 * 0.8, "depth 1 must hide a chunk of the rtt: {t1} vs {t0}");
+        assert!(t4 < t1 * 0.8, "a deep pipeline must hide more: {t4} vs {t1}");
+    }
+
+    #[test]
+    fn pipelined_churn_join_primes_from_now() {
+        // a joiner under an rtt model must not complete before now + rtt
+        let (m, rng) = model(Environment::Homogeneous, 2, 19);
+        let churn = crate::sim::ChurnSchedule::parse("join@0.3").unwrap();
+        let mut s = AsyncSchedule::new(m, rng)
+            .with_pipeline(1, 50.0)
+            .with_churn(&churn, 100)
+            .unwrap();
+        let mut join_at = None;
+        let mut steps = 0;
+        while steps < 100 {
+            match s.next_event() {
+                ClusterEvent::Completion(c) => {
+                    steps += 1;
+                    if let Some(at) = join_at {
+                        if c.worker == 2 {
+                            assert!(c.time >= at + 50.0, "joiner beat its priming pull");
+                            join_at = None; // only the first completion matters
+                        }
+                    }
+                }
+                ClusterEvent::Join { time, worker } => {
+                    assert_eq!(worker, 2);
+                    join_at = Some(time);
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -32,12 +32,8 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
     let mut nag = Nag::new(&theta0);
     let mut hat = vec![0.0f32; theta0.len()];
     let total = cfg.total_master_steps();
-    let eval_every = if cfg.eval_every_epochs > 0.0 {
-        (cfg.eval_every_epochs * cfg.schedule.steps_per_epoch as f64).round() as u64
-    } else {
-        0
-    };
-    let loss_sample = (total / 200).max(1);
+    let eval_every = crate::train::driver::eval_cadence(cfg);
+    let loss_sample = crate::train::driver::loss_sample_every(total);
 
     let mut report = TrainReport {
         algorithm: "baseline".to_string(),
@@ -67,9 +63,7 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
     }
 
     let (loss, err) = evaluate(&model, &nag.theta, &eval_set)?;
-    report.final_test_loss = loss;
-    report.final_test_error = err;
-    report.diverged = !loss.is_finite();
+    crate::train::driver::finish_eval(&mut report, loss, err);
     report.sim_time = sim_time;
     report.steps = total;
     report.wall_secs = t0.elapsed().as_secs_f64();

@@ -1,0 +1,666 @@
+//! The unified pipelined worker driver — ONE training loop beneath every
+//! asynchronous backend.
+//!
+//! Before this module, the repo carried three near-copies of the worker
+//! loop (`sim_trainer`, `real_async`, plus the shared scaffolding in
+//! `ssgd`/`baseline`), every one of them strictly synchronous: pull →
+//! compute → push, each cycle eating a full master round trip of idle
+//! time.  This driver folds them into one engine with a configurable
+//! **pipeline window** `--pipeline-depth D`: a worker keeps `D + 1`
+//! batches in flight, issuing the pull for batch `n + D + 1` while the
+//! push for batch `n` is still settling — communication overlaps compute,
+//! at the cost of exactly `D` extra *own* steps of known, deterministic
+//! staleness.  That is precisely the staleness DANA's look-ahead is built
+//! to absorb: the driver forwards the depth to the master
+//! ([`Master::set_pipeline_depth`]), DANA/DANA-DC extrapolate their Eq 11
+//! prediction `D` extra momentum-only steps, NAG-ASGD sends the
+//! extrapolated future position, LWP stretches τ by the in-flight
+//! multiplicity, and the servers judge each push against the pull its
+//! gradient was actually computed on (per-slot pull windows).
+//!
+//! Two [`WorkerBackend`]s drive the same cycle:
+//!
+//! * [`run_sim`] — the simulated-clock backend (§5.1/§5.2): completions
+//!   come from the gamma execution-time model via
+//!   [`AsyncSchedule`] (which models the pipeline's timing too — with
+//!   `--rtt > 0` a depth-0 worker stalls a round trip per cycle while a
+//!   pipelined one hides it), gradients are computed on the driver
+//!   thread, and the pipeline window is the explicit [`PullWindow`];
+//! * [`run_threads`] — the real-thread backend (§5.4): one OS thread per
+//!   worker over an mpsc FIFO; the pipeline window *is* the worker's
+//!   channel queue (the master keeps `D + 1` parameter messages in
+//!   flight per worker).
+//!
+//! Both run unchanged against an in-process master (monolithic or
+//! sharded) or a [`crate::net::RemoteMaster`] — where depth `D ≥ 1`
+//! additionally switches pushes to the deferred-ack send path, so a
+//! worker cycle costs one combined round trip instead of two.
+//!
+//! **`D = 0` is bit-for-bit the pre-pipeline synchronous driver** for
+//! every algorithm and backend: the window degenerates to one buffer
+//! rotated in place, the schedule is untouched (`rtt = 0` leaves the
+//! completion stream identical at any depth), the staleness hints are
+//! exact no-ops at zero, and the servers' pull windows reproduce the
+//! classic single-`sent` overwrite semantics.  The churn/net/striped
+//! equivalence suites pin this; `rust/tests/pipeline.rs` pins the `D ≥ 1`
+//! determinism and the `+D` lag-histogram shift.
+
+use crate::config::TrainConfig;
+use crate::optim::WorkerState;
+use crate::server::Master;
+use crate::sim::{AsyncSchedule, ChurnAction, ClusterEvent, Completion, ExecTimeModel};
+use crate::train::real_async::{StepFn, WorkerRule};
+use crate::train::{EvalPoint, TrainReport};
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+use std::sync::mpsc;
+
+// ------------------------------------------------------------ shared
+// bookkeeping (also used by the synchronous ssgd/baseline drivers)
+
+/// Periodic-eval cadence in master steps (0 = only the final eval).
+pub(crate) fn eval_cadence(cfg: &TrainConfig) -> u64 {
+    if cfg.eval_every_epochs > 0.0 {
+        (cfg.eval_every_epochs * cfg.schedule.steps_per_epoch as f64).round() as u64
+    } else {
+        0
+    }
+}
+
+/// Train-loss subsampling stride: ~200 points over the run.
+pub(crate) fn loss_sample_every(total: u64) -> u64 {
+    (total / 200).max(1)
+}
+
+/// Final-eval epilogue shared by every driver: record the last
+/// evaluation and apply the divergence convention (a non-finite loss
+/// scores chance accuracy, the paper's convention).
+pub(crate) fn finish_eval(report: &mut TrainReport, loss: f64, err: f64) {
+    report.final_test_loss = loss;
+    report.final_test_error = err;
+    if !loss.is_finite() {
+        report.diverged = true;
+        report.final_test_error = 100.0;
+    }
+}
+
+/// Fold the server's metric taps into the report (simulated backends,
+/// where the full rows are available locally).
+fn fold_metrics(report: &mut TrainReport, server: &dyn Master) {
+    report.mean_gap = server.metrics().mean_gap();
+    report.mean_lag = server.metrics().mean_lag();
+    for r in server.metrics().rows() {
+        report.gap_curve.push((r.step, r.gap));
+        report.norm_gap_curve.push((r.step, r.norm_gap));
+        report.grad_norm_curve.push((r.step, r.msg_norm));
+        report.lag_curve.push((r.step, r.worker, r.lag));
+    }
+}
+
+/// Which backend a [`TrainConfig`] run executes on — the names the CLI
+/// and experiment harness use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerBackend {
+    /// Virtual gamma-model clock, gradients on the driver thread.
+    SimClock,
+    /// One OS thread per worker over an mpsc FIFO.
+    Threads,
+}
+
+/// Artifact-free training on the seeded noisy quadratic, on either
+/// backend — ONE definition of the synthetic harness behind `dana train
+/// --synthetic`, the experiment sweeps, and the equivalence suites
+/// (previously duplicated across `sim_trainer` and `real_async`).
+pub fn run_synthetic(
+    cfg: &TrainConfig,
+    k: usize,
+    backend: WorkerBackend,
+) -> anyhow::Result<TrainReport> {
+    use crate::train::real_async as ra;
+    anyhow::ensure!(k > 0, "synthetic workload needs k > 0");
+    let theta0 = ra::synthetic_theta0(k);
+    let curv = ra::synthetic_curvature(k);
+    match backend {
+        WorkerBackend::SimClock => {
+            let grad_curv = curv.clone();
+            let mut grad_rng =
+                Rng::new(cfg.seed ^ crate::train::sim_trainer::SYNTH_GRAD_STREAM);
+            run_sim(
+                cfg,
+                &theta0,
+                move |_w, params, msg: &mut Vec<f32>, want_loss| {
+                    ra::synthetic_grad(params, &grad_curv, &mut grad_rng, msg);
+                    // the loss costs another O(k) pass here, so honor want_loss
+                    Ok(if want_loss {
+                        ra::synthetic_loss(params, &grad_curv)
+                    } else {
+                        0.0
+                    })
+                },
+                move |theta| Ok(ra::synthetic_eval(theta, &curv)),
+            )
+        }
+        WorkerBackend::Threads => {
+            let seed = cfg.seed;
+            let make_step = {
+                let curv = curv.clone();
+                move |w: usize| -> anyhow::Result<StepFn> {
+                    let curv = curv.clone();
+                    let mut rng = ra::synthetic_worker_rng(seed, w);
+                    Ok(Box::new(move |params: &[f32]| {
+                        let mut g = vec![0.0f32; params.len()];
+                        ra::synthetic_grad(params, &curv, &mut rng, &mut g);
+                        Ok((ra::synthetic_loss(params, &curv) as f32, g))
+                    }) as StepFn)
+                }
+            };
+            run_threads(cfg, &theta0, &make_step, move |theta| {
+                Ok(ra::synthetic_eval(theta, &curv))
+            })
+        }
+    }
+}
+
+// ------------------------------------------------------------ the
+// pipeline window (sim-clock backend; the thread backend's window lives
+// in each worker's channel)
+
+/// Per-worker FIFO of pulled parameter buffers, depth `D + 1`: the front
+/// is what the worker's *currently completing* batch was computed on;
+/// the pull issued after each push lands at the back, `D` batches ahead.
+struct PullWindow {
+    depth: usize,
+    k: usize,
+    bufs: Vec<VecDeque<Vec<f32>>>,
+}
+
+impl PullWindow {
+    /// Prime every worker's window: `D + 1` pulls each, issued
+    /// round-robin (worker-major per round) so the kickoff order matches
+    /// the thread backend's and, at `D = 0`, the pre-pipeline drivers'.
+    fn prime(server: &mut dyn Master, n: usize, depth: usize, k: usize) -> PullWindow {
+        let mut w = PullWindow {
+            depth,
+            k,
+            bufs: (0..n).map(|_| VecDeque::with_capacity(depth + 1)).collect(),
+        };
+        for _ in 0..=depth {
+            for slot in 0..n {
+                w.pull_one(server, slot);
+            }
+        }
+        w
+    }
+
+    fn pull_one(&mut self, server: &mut dyn Master, slot: usize) {
+        let mut buf = vec![0.0f32; self.k];
+        server.pull_into(slot, &mut buf);
+        self.bufs[slot].push_back(buf);
+    }
+
+    /// A joiner primes its own window (all pulls at the join step).
+    fn prime_slot(&mut self, server: &mut dyn Master, slot: usize) {
+        if slot == self.bufs.len() {
+            self.bufs.push(VecDeque::with_capacity(self.depth + 1));
+        } else {
+            self.bufs[slot].clear();
+        }
+        for _ in 0..=self.depth {
+            self.pull_one(server, slot);
+        }
+    }
+
+    /// The parameters worker `slot`'s completing batch was computed on.
+    fn front(&self, slot: usize) -> &[f32] {
+        self.bufs[slot].front().expect("pull window primed")
+    }
+
+    /// Consume the front (its batch just pushed) and issue the next pull
+    /// into the recycled buffer — the allocation-free steady state.
+    fn rotate(&mut self, server: &mut dyn Master, slot: usize) {
+        let mut buf = self.bufs[slot].pop_front().expect("pull window primed");
+        server.pull_into(slot, &mut buf);
+        self.bufs[slot].push_back(buf);
+    }
+
+    fn retire(&mut self, slot: usize) {
+        self.bufs[slot].clear();
+    }
+}
+
+// ------------------------------------------------------------ sim-clock
+// backend
+
+/// Apply a membership event to the master and the worker-local state,
+/// keeping the server's slot assignment in lockstep with the simulator's.
+/// Returns the completion to process, if the event was one.
+fn handle_event(
+    server: &mut dyn Master,
+    event: ClusterEvent,
+    window: &mut PullWindow,
+    wstate: &mut Vec<WorkerState>,
+    policy: crate::optim::LeavePolicy,
+    report: &mut TrainReport,
+) -> anyhow::Result<Option<Completion>> {
+    match event {
+        ClusterEvent::Completion(c) => Ok(Some(c)),
+        ClusterEvent::Join { worker, .. } => {
+            let slot = server.add_worker();
+            anyhow::ensure!(
+                slot == worker,
+                "membership drift: schedule assigned slot {worker}, server {slot}"
+            );
+            if slot == wstate.len() {
+                wstate.push(server.make_worker_state());
+            } else {
+                wstate[slot] = server.make_worker_state();
+            }
+            // the joiner pulls (its whole window of) fresh parameters
+            window.prime_slot(server, slot);
+            report.workers_joined += 1;
+            Ok(None)
+        }
+        ClusterEvent::Leave { worker, .. } => {
+            server.remove_worker(worker, policy)?;
+            window.retire(worker);
+            report.workers_left += 1;
+            Ok(None)
+        }
+        // the schedule already rescaled the worker's execution-time model;
+        // nothing changes master-side
+        ClusterEvent::SpeedChange { .. } => Ok(None),
+    }
+}
+
+/// The simulated-clock worker loop: cluster events from the gamma model,
+/// gradients via `grad_step(worker, params, msg, want_loss)` (computed at
+/// the window's *front* — the pull that batch was issued against), one
+/// push + one window rotation per completion.  `eval` maps master
+/// parameters to `(test loss, test error %)`.
+pub fn run_sim<G, E>(
+    cfg: &TrainConfig,
+    theta0: &[f32],
+    mut grad_step: G,
+    mut eval: E,
+) -> anyhow::Result<TrainReport>
+where
+    G: FnMut(usize, &[f32], &mut Vec<f32>, bool) -> anyhow::Result<f64>,
+    E: FnMut(&[f32]) -> anyhow::Result<(f64, f64)>,
+{
+    let t0 = std::time::Instant::now();
+    let n = cfg.n_workers;
+    // in-process master, or a RemoteMaster against `--master tcp://...`
+    let mut server = crate::net::master_for(cfg, theta0)?;
+    server.metrics_mut().set_every(cfg.metrics_every);
+    server.set_pipeline_depth(cfg.pipeline_depth);
+
+    let total = cfg.total_master_steps();
+    let mut cluster_rng = Rng::new(cfg.seed);
+    let exec_model = ExecTimeModel::new(cfg.env, n, cfg.batch(), &mut cluster_rng);
+    let mut schedule = AsyncSchedule::new(exec_model, cluster_rng.fork(1))
+        .with_pipeline(cfg.pipeline_depth, cfg.rtt)
+        .with_churn(&cfg.churn, total)?;
+
+    // Worker-local state: the pipeline window of pulled parameters plus
+    // optimizer state (DANA-Slim's momentum).
+    let mut window = PullWindow::prime(server.as_mut(), n, cfg.pipeline_depth, theta0.len());
+    let mut wstate: Vec<WorkerState> = (0..n).map(|_| server.make_worker_state()).collect();
+
+    let eval_every = eval_cadence(cfg);
+    let loss_sample = loss_sample_every(total);
+
+    let mut report = TrainReport {
+        algorithm: cfg.algorithm.name().to_string(),
+        n_workers: n,
+        ..TrainReport::default()
+    };
+
+    let mut msg = vec![0.0f32; theta0.len()];
+    let mut step: u64 = 0;
+    while step < total {
+        let event = schedule.next_event();
+        let Some(c) = handle_event(
+            server.as_mut(),
+            event,
+            &mut window,
+            &mut wstate,
+            cfg.leave_policy,
+            &mut report,
+        )?
+        else {
+            continue;
+        };
+        let w = c.worker;
+        // Worker w finished a batch it started earlier: compute the
+        // message (gradient) at the parameters it pulled for that batch.
+        let want_loss = step % loss_sample == 0;
+        let loss = grad_step(w, window.front(w), &mut msg, want_loss)?;
+        if want_loss {
+            report.loss_curve.push((step, loss));
+        }
+        if !loss.is_finite() {
+            report.diverged = true;
+        }
+        let s = server.step_now();
+        server.worker_transform(&mut wstate[w], &mut msg, s);
+        server.push_update(w, &msg)?;
+        // The pull for the batch `D + 1` ahead goes out with the push
+        // (one combined round trip on a pipelined remote master).
+        window.rotate(server.as_mut(), w);
+        step += 1;
+
+        if eval_every > 0 && step % eval_every == 0 {
+            // settle deferred acks so the θ read observes every push
+            server.drain_inflight()?;
+            let (loss, err) = eval(&server.theta_vec())?;
+            if !loss.is_finite() {
+                report.diverged = true;
+            }
+            report.curve.push(EvalPoint {
+                epoch: step as f64 / cfg.schedule.steps_per_epoch as f64,
+                test_loss: loss,
+                test_error: err,
+                sim_time: schedule.now(),
+            });
+        }
+    }
+
+    server.drain_inflight()?;
+    let (loss, err) = eval(&server.theta_vec())?;
+    finish_eval(&mut report, loss, err);
+    fold_metrics(&mut report, server.as_ref());
+    report.sim_time = schedule.now();
+    report.steps = total;
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+// ------------------------------------------------------------ thread
+// backend
+
+enum ToWorker {
+    Params(Vec<f32>),
+    Stop,
+}
+
+/// Worker→master messages, tagged with the slot's spawn generation so a
+/// late message from a stopped incarnation cannot be misattributed to a
+/// joiner that reused the slot.
+enum FromWorker {
+    Update { worker: usize, gen: u32, msg: Vec<f32>, loss: f32 },
+    Exited { worker: usize, gen: u32, reason: String },
+}
+
+/// Best-effort message out of a caught panic payload.
+fn panic_reason(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panicked".to_string()
+    }
+}
+
+/// The real-thread worker loop: spawns one thread per initial worker (and
+/// more on churn joins), each built by `make_step`, and runs the master
+/// FIFO for `cfg.total_master_steps()` pushes.  The pipeline window is
+/// the worker's channel: the master keeps `D + 1` parameter messages in
+/// flight per worker (kickoff sends `D + 1`, then one per settled push),
+/// and the worker consumes them FIFO — so its message for batch `n` is
+/// computed at the pull issued after push `n − D − 1`, exactly like the
+/// sim-clock backend.  `eval` maps master parameters to `(test loss,
+/// test error %)`.
+///
+/// Public so external harnesses (the stress suite) can inject failing or
+/// custom gradient sources without PJRT.
+pub fn run_threads<F>(
+    cfg: &TrainConfig,
+    theta0: &[f32],
+    make_step: &F,
+    mut eval: impl FnMut(&[f32]) -> anyhow::Result<(f64, f64)>,
+) -> anyhow::Result<TrainReport>
+where
+    F: Fn(usize) -> anyhow::Result<StepFn> + Sync,
+{
+    let t0 = std::time::Instant::now();
+    let n = cfg.n_workers;
+    cfg.churn.validate(n)?;
+    let depth = cfg.pipeline_depth;
+    // in-process master, or a RemoteMaster against `--master tcp://...`
+    let mut server = crate::net::master_for(cfg, theta0)?;
+    server.metrics_mut().set_every(cfg.metrics_every);
+    server.set_pipeline_depth(depth);
+    let rule = WorkerRule::for_algorithm(cfg.algorithm);
+    let gamma = cfg.schedule.gamma;
+
+    let (tx_master, rx_master) = mpsc::channel::<FromWorker>();
+
+    let total = cfg.total_master_steps();
+    let mut churn: VecDeque<(u64, ChurnAction)> = cfg.churn.thresholds(total).into();
+    let mut churn_rng = Rng::new(cfg.seed ^ 0x454C_4153_5449_43); // random leave victims
+    let mut report = TrainReport {
+        algorithm: cfg.algorithm.name().to_string(),
+        n_workers: n,
+        ..TrainReport::default()
+    };
+    let eval_every = eval_cadence(cfg);
+    let loss_sample = loss_sample_every(total);
+
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        // Spawn (or respawn) the worker thread for a slot; used at kick-off
+        // and for mid-run joins.  `gen` tags every message the incarnation
+        // sends.  Init/step failures AND panics are caught and reported as
+        // `Exited` — a panicking gradient source must surface as a lost
+        // worker, not hang the master's recv (the master keeps a sender
+        // alive, so channel disconnection can never signal thread death).
+        let spawn_worker = |w: usize, gen: u32| -> mpsc::Sender<ToWorker> {
+            let (tx_w, rx_w) = mpsc::channel::<ToWorker>();
+            let tx_master = tx_master.clone();
+            scope.spawn(move || {
+                let exit = |reason: String| {
+                    let _ = tx_master.send(FromWorker::Exited { worker: w, gen, reason });
+                };
+                let init =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| make_step(w)));
+                let mut step_fn = match init {
+                    Ok(Ok(s)) => s,
+                    Ok(Err(e)) => return exit(format!("init failed: {e}")),
+                    Err(p) => return exit(format!("init panicked: {}", panic_reason(p))),
+                };
+                let mut v_local: Vec<f32> = vec![];
+                loop {
+                    match rx_w.recv() {
+                        Ok(ToWorker::Params(params)) => {
+                            let step = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || step_fn(&params),
+                            ));
+                            match step {
+                                Ok(Ok((loss, mut msg))) => {
+                                    rule.apply(&mut v_local, &mut msg, gamma);
+                                    if tx_master
+                                        .send(FromWorker::Update { worker: w, gen, msg, loss })
+                                        .is_err()
+                                    {
+                                        return;
+                                    }
+                                }
+                                Ok(Err(e)) => return exit(format!("step failed: {e}")),
+                                Err(p) => {
+                                    return exit(format!("step panicked: {}", panic_reason(p)))
+                                }
+                            }
+                        }
+                        // master-initiated stop (leave or end of run)
+                        Ok(ToWorker::Stop) | Err(_) => return,
+                    }
+                }
+            });
+            tx_w
+        };
+
+        // `senders[w].is_some()` IS the thread-liveness state: a slot has a
+        // sender exactly while its current incarnation may still produce
+        // messages the master should honor.
+        let mut senders: Vec<Option<mpsc::Sender<ToWorker>>> = Vec::with_capacity(n);
+        let mut thread_gen: Vec<u32> = vec![0; n];
+        for w in 0..n {
+            senders.push(Some(spawn_worker(w, 0)));
+        }
+        // Kick off: every worker gets D+1 initial (pulled) parameter
+        // messages — its pipeline window, queued in its channel.  Issued
+        // round-robin so the pull order matches the sim backend's prime.
+        for _ in 0..=depth {
+            for (w, tx) in senders.iter().enumerate() {
+                if let Some(tx) = tx {
+                    tx.send(ToWorker::Params(server.pull_params(w))).ok();
+                }
+            }
+        }
+
+        let mut step: u64 = 0;
+        while step < total {
+            // Fire membership events due at this master step.
+            while churn.front().is_some_and(|&(at, _)| step >= at) {
+                let (_, action) = churn.pop_front().expect("front checked");
+                match action {
+                    ChurnAction::Join => {
+                        let slot = server.add_worker();
+                        if slot == senders.len() {
+                            senders.push(None);
+                            thread_gen.push(0);
+                        }
+                        thread_gen[slot] = thread_gen[slot].wrapping_add(1);
+                        let tx = spawn_worker(slot, thread_gen[slot]);
+                        // the joiner primes its whole pipeline window
+                        for _ in 0..=depth {
+                            tx.send(ToWorker::Params(server.pull_params(slot))).ok();
+                        }
+                        senders[slot] = Some(tx);
+                        report.workers_joined += 1;
+                    }
+                    ChurnAction::Leave(who) => {
+                        // A named worker may already be gone (it crashed and
+                        // was retired as an implicit leave) and lost threads
+                        // may leave nobody to evict — both are no-ops, not
+                        // reasons to abort the surviving run.
+                        let victim = match who {
+                            Some(w) if server.is_live(w) => Some(w),
+                            Some(w) => {
+                                eprintln!("churn: skipping leave of worker {w} (already gone)");
+                                None
+                            }
+                            None => {
+                                let live: Vec<usize> = (0..server.workers())
+                                    .filter(|&i| server.is_live(i))
+                                    .collect();
+                                if live.is_empty() {
+                                    None
+                                } else {
+                                    Some(live[churn_rng.below(live.len() as u64) as usize])
+                                }
+                            }
+                        };
+                        if let Some(w) = victim {
+                            server.remove_worker(w, cfg.leave_policy)?;
+                            if let Some(tx) = senders[w].take() {
+                                tx.send(ToWorker::Stop).ok();
+                            }
+                            report.workers_left += 1;
+                        }
+                    }
+                    // real threads run at hardware speed; straggler onset
+                    // is only meaningful under the simulated clock
+                    ChurnAction::SpeedChange(..) => {}
+                }
+            }
+
+            // Fail fast: the FIFO cannot make progress once no live thread
+            // remains to produce updates.
+            anyhow::ensure!(
+                senders.iter().any(Option::is_some),
+                "no live workers left at master step {step}/{total} \
+                 ({} lost, {} left); aborting instead of deadlocking",
+                report.workers_lost,
+                report.workers_left
+            );
+
+            match rx_master.recv().expect("master keeps a sender; recv cannot fail") {
+                FromWorker::Exited { worker, gen, reason } => {
+                    if gen != thread_gen[worker] || senders[worker].is_none() {
+                        continue; // stale incarnation: already stopped/left
+                    }
+                    // A dying worker is an implicit leave: retire its slot
+                    // so its momentum doesn't linger frozen in v⁰.
+                    senders[worker] = None;
+                    if server.is_live(worker) {
+                        server.remove_worker(worker, cfg.leave_policy)?;
+                    }
+                    report.workers_lost += 1;
+                    eprintln!("worker {worker}: {reason}");
+                }
+                FromWorker::Update { worker, gen, mut msg, loss } => {
+                    if gen != thread_gen[worker] {
+                        // late push from a stopped incarnation
+                        report.pushes_dropped += 1;
+                        continue;
+                    }
+                    if !server.is_live(worker) {
+                        // in-flight push raced a leave: recoverable, drop it
+                        report.pushes_dropped += 1;
+                        continue;
+                    }
+                    // (a remote master may be shared with other clients,
+                    // whose pushes legitimately advance it between ours)
+                    debug_assert!(
+                        cfg.master_addr.is_some() || server.steps_done() == step,
+                        "master step not monotone"
+                    );
+                    if step % loss_sample == 0 {
+                        report.loss_curve.push((step, loss as f64));
+                    }
+                    if !loss.is_finite() {
+                        report.diverged = true;
+                    }
+                    server.push_update(worker, &msg)?;
+                    step += 1;
+                    if step < total {
+                        if let Some(tx) = &senders[worker] {
+                            // round-trip buffer reuse: the worker's message
+                            // buffer becomes its next parameter buffer
+                            server.pull_into(worker, &mut msg);
+                            tx.send(ToWorker::Params(msg)).ok();
+                        }
+                    }
+                    if eval_every > 0 && step % eval_every == 0 {
+                        server.drain_inflight()?;
+                        let (l, e) = eval(&server.theta_vec())?;
+                        report.curve.push(EvalPoint {
+                            epoch: step as f64 / cfg.schedule.steps_per_epoch as f64,
+                            test_loss: l,
+                            test_error: e,
+                            sim_time: t0.elapsed().as_secs_f64(),
+                        });
+                    }
+                }
+            }
+        }
+        // Stop every worker.  A pipelined worker may still hold up to D
+        // queued parameter messages; the Stop queues behind them, so it
+        // computes (and the master discards) at most that much overhang.
+        for tx in senders.iter().flatten() {
+            tx.send(ToWorker::Stop).ok();
+        }
+        Ok(())
+    })?;
+
+    server.drain_inflight()?;
+    let (loss, err) = eval(&server.theta_vec())?;
+    finish_eval(&mut report, loss, err);
+    report.mean_gap = server.metrics().mean_gap();
+    report.mean_lag = server.metrics().mean_lag();
+    report.steps = total;
+    report.wall_secs = t0.elapsed().as_secs_f64();
+    report.sim_time = report.wall_secs; // real time is the clock here
+    Ok(report)
+}

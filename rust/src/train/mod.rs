@@ -1,9 +1,11 @@
-//! Training drivers: simulated-clock asynchronous training (the paper's
-//! §5.1/§5.2 methodology), real-thread asynchronous training (§5.4), the
-//! synchronous SSGD baseline and the single-worker baseline.
+//! Training drivers: the unified pipelined asynchronous driver
+//! ([`driver`], shared by the simulated-clock §5.1/§5.2 and real-thread
+//! §5.4 backends), the synchronous SSGD baseline and the single-worker
+//! baseline.
 
 pub mod baseline;
 pub mod data_source;
+pub mod driver;
 pub mod real_async;
 pub mod sim_trainer;
 pub mod ssgd;
@@ -35,6 +37,10 @@ pub struct TrainReport {
     pub mean_lag: f64,
     /// Gap trace (master_step, gap) when metrics were enabled.
     pub gap_curve: Vec<(u64, f64)>,
+    /// Lag trace (master_step, worker, lag) when metrics were enabled —
+    /// the per-push staleness histogram (`rust/tests/pipeline.rs` pins
+    /// its exact +D shift under a pipelined driver).
+    pub lag_curve: Vec<(u64, usize, u64)>,
     /// Normalized gap trace (Appendix B.3).
     pub norm_gap_curve: Vec<(u64, f64)>,
     /// Gradient-norm trace (Fig 11a).
@@ -54,6 +60,12 @@ pub struct TrainReport {
     /// Worker threads lost to init/step failures (real-thread driver);
     /// always 0 in the simulated drivers.
     pub workers_lost: usize,
+    /// Pushes the driver dropped instead of applying: late messages from
+    /// stopped worker incarnations and in-flight pushes that raced a
+    /// leave (real-thread backend; the simulated clock discards a
+    /// leaver's batch before it is ever computed).  A remote server's own
+    /// drop count travels in the wire `Status` header instead.
+    pub pushes_dropped: u64,
 }
 
 impl TrainReport {
@@ -76,6 +88,9 @@ impl TrainReport {
                 " churn(+{}/-{}/!{})",
                 self.workers_joined, self.workers_left, self.workers_lost
             ));
+        }
+        if self.pushes_dropped > 0 {
+            s.push_str(&format!(" dropped={}", self.pushes_dropped));
         }
         s
     }

@@ -3,50 +3,43 @@
 //! Every worker is an OS thread with its **own** gradient source; the
 //! master thread owns the parameter server (monolithic or sharded per
 //! `cfg.shards`, or a [`crate::net::RemoteMaster`] against
-//! `cfg.master_addr`) and serves a plain FIFO over an mpsc channel; on
-//! every push it replies with freshly pulled parameters, exactly the
-//! pull→compute→push cycle of Algorithm 1.
+//! `cfg.master_addr`) and serves a plain FIFO over an mpsc channel.  Since
+//! the pipelined-runtime refactor the loop itself lives in
+//! [`super::driver::run_threads`], shared with the simulated-clock
+//! backend: on every settled push the master replies with freshly pulled
+//! parameters, and `--pipeline-depth D` keeps `D + 1` parameter messages
+//! in flight per worker (the worker's channel IS its pipeline window), so
+//! compute overlaps the master round trip — exactly the
+//! pull→compute→push cycle of Algorithm 1 at `D = 0`, bit for bit.
 //!
-//! Membership is elastic: a [`TrainConfig::churn`] schedule makes the
-//! driver spawn worker threads mid-run on `join` and stop them on `leave`
-//! (the master retires the slot, so a straggler's in-flight push is
-//! rejected as a recoverable error and dropped).  Worker failures are no
-//! longer invisible — a thread whose init or step errors *or panics*
-//! reports an exit message; the master retires its slot (its momentum follows
-//! `cfg.leave_policy`), counts it in [`TrainReport::workers_lost`], and
-//! fails fast with a clear error the moment no live thread remains to make
-//! FIFO progress, instead of hanging or erroring only when every sender is
-//! gone.  `slow@…` churn events are a no-op here: real threads run at
-//! hardware speed (the simulated drivers honor them).
-//!
-//! The driver is split from the gradient computation so the concurrency
-//! machinery is testable without PJRT:
+//! This module keeps the worker-side halves and the PJRT/synthetic
+//! wiring:
 //!
 //! * [`run`] wires a PJRT client + compiled executable per worker thread
 //!   (the `xla` wrapper types are not `Send`, and separate clients avoid
 //!   any contention on the execution path — the analogue of one process
 //!   per GPU in the paper's Fig 8);
 //! * [`run_synthetic`] wires a seeded noisy quadratic objective — the
-//!   deterministic concurrency stress harness used by `rust/tests/stress.rs`.
+//!   deterministic concurrency stress harness used by `rust/tests/stress.rs`;
+//! * [`WorkerRule`] — the worker-side optimizer transform (DANA-Slim's
+//!   momentum), replicated per thread: state never crosses the channel,
+//!   matching the paper's "completely eliminates the overhead at the
+//!   master".
 //!
-//! The worker-side optimizer transform (DANA-Slim's momentum) runs inside
-//! the worker thread via [`WorkerRule`] — state never crosses the channel,
-//! matching the paper's "completely eliminates the overhead at the master".
-//! The hot path is allocation-free on the master side: the worker's
-//! incoming message buffer is reused as its outgoing parameter buffer via
-//! [`crate::server::Master::pull_into`], and the Slim transform updates the gradient in
-//! place.
+//! Failure semantics (unchanged by the refactor): worker init/step errors
+//! *and panics* surface as lost workers ([`crate::train::TrainReport::workers_lost`]),
+//! late pushes from stopped incarnations and leave races are counted in
+//! [`crate::train::TrainReport::pushes_dropped`], and the driver fails
+//! fast when no live thread remains.
 
 use crate::config::TrainConfig;
 use crate::math;
 use crate::optim::AlgorithmKind;
 use crate::runtime::Engine;
-use crate::sim::ChurnAction;
 use crate::train::data_source::{evaluate, DataSource};
-use crate::train::{EvalPoint, TrainReport};
+use crate::train::driver::{self, WorkerBackend};
+use crate::train::TrainReport;
 use crate::util::rng::Rng;
-use std::collections::VecDeque;
-use std::sync::mpsc;
 
 /// Worker-side message transform, replicated per thread.
 #[derive(Debug, Clone, Copy)]
@@ -65,7 +58,7 @@ impl WorkerRule {
         }
     }
 
-    fn apply(self, v: &mut Vec<f32>, grad: &mut [f32], gamma: f32) {
+    pub(crate) fn apply(self, v: &mut Vec<f32>, grad: &mut [f32], gamma: f32) {
         match self {
             WorkerRule::Passthrough => {}
             WorkerRule::Slim => {
@@ -83,30 +76,6 @@ impl WorkerRule {
 /// Created *inside* the worker thread (so it may hold non-`Send` handles
 /// like a PJRT client) and never crosses threads.
 pub type StepFn = Box<dyn FnMut(&[f32]) -> anyhow::Result<(f32, Vec<f32>)>>;
-
-enum ToWorker {
-    Params(Vec<f32>),
-    Stop,
-}
-
-/// Worker→master messages, tagged with the slot's spawn generation so a
-/// late message from a stopped incarnation cannot be misattributed to a
-/// joiner that reused the slot.
-enum FromWorker {
-    Update { worker: usize, gen: u32, msg: Vec<f32>, loss: f32 },
-    Exited { worker: usize, gen: u32, reason: String },
-}
-
-/// Best-effort message out of a caught panic payload.
-fn panic_reason(p: Box<dyn std::any::Any + Send>) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "panicked".to_string()
-    }
-}
 
 /// Run real-thread asynchronous training against the AOT/PJRT runtime.
 pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
@@ -180,273 +149,21 @@ pub fn synthetic_eval(theta: &[f32], curv: &[f32]) -> (f64, f64) {
 /// machinery; the reported test loss is [`synthetic_loss`] at the master
 /// parameters (test error is a bounded percent proxy of the same).
 pub fn run_synthetic(cfg: &TrainConfig, k: usize) -> anyhow::Result<TrainReport> {
-    anyhow::ensure!(k > 0, "synthetic workload needs k > 0");
-    let theta0 = synthetic_theta0(k);
-    let curv = synthetic_curvature(k);
-    let seed = cfg.seed;
-    let make_step = {
-        let curv = curv.clone();
-        move |w: usize| -> anyhow::Result<StepFn> {
-            let curv = curv.clone();
-            let mut rng = synthetic_worker_rng(seed, w);
-            Ok(Box::new(move |params: &[f32]| {
-                let mut g = vec![0.0f32; params.len()];
-                synthetic_grad(params, &curv, &mut rng, &mut g);
-                Ok((synthetic_loss(params, &curv) as f32, g))
-            }) as StepFn)
-        }
-    };
-    run_core(cfg, &theta0, &make_step, move |theta| {
-        Ok(synthetic_eval(theta, &curv))
-    })
+    driver::run_synthetic(cfg, k, WorkerBackend::Threads)
 }
 
-/// The generic driver: spawns one thread per initial worker (and more on
-/// churn joins), each built by `make_step`, and runs the master FIFO for
-/// `cfg.total_master_steps()` pushes.  `eval` maps master parameters to
-/// `(test loss, test error %)`.
-///
-/// Public so external harnesses (the stress suite) can inject failing or
+/// The generic real-thread driver — a shim over
+/// [`super::driver::run_threads`], kept under its historical name so
+/// external harnesses (the stress suite) keep injecting failing or
 /// custom gradient sources without PJRT.
 pub fn run_core<F>(
     cfg: &TrainConfig,
     theta0: &[f32],
     make_step: &F,
-    mut eval: impl FnMut(&[f32]) -> anyhow::Result<(f64, f64)>,
+    eval: impl FnMut(&[f32]) -> anyhow::Result<(f64, f64)>,
 ) -> anyhow::Result<TrainReport>
 where
     F: Fn(usize) -> anyhow::Result<StepFn> + Sync,
 {
-    let t0 = std::time::Instant::now();
-    let n = cfg.n_workers;
-    cfg.churn.validate(n)?;
-    // in-process master, or a RemoteMaster against `--master tcp://...`
-    let mut server = crate::net::master_for(cfg, theta0)?;
-    server.metrics_mut().set_every(cfg.metrics_every);
-    let rule = WorkerRule::for_algorithm(cfg.algorithm);
-    let gamma = cfg.schedule.gamma;
-
-    let (tx_master, rx_master) = mpsc::channel::<FromWorker>();
-
-    let total = cfg.total_master_steps();
-    let mut churn: VecDeque<(u64, ChurnAction)> = cfg.churn.thresholds(total).into();
-    let mut churn_rng = Rng::new(cfg.seed ^ 0x454C_4153_5449_43); // random leave victims
-    let mut report = TrainReport {
-        algorithm: cfg.algorithm.name().to_string(),
-        n_workers: n,
-        ..TrainReport::default()
-    };
-    let eval_every = if cfg.eval_every_epochs > 0.0 {
-        (cfg.eval_every_epochs * cfg.schedule.steps_per_epoch as f64).round() as u64
-    } else {
-        0
-    };
-
-    std::thread::scope(|scope| -> anyhow::Result<()> {
-        // Spawn (or respawn) the worker thread for a slot; used at kick-off
-        // and for mid-run joins.  `gen` tags every message the incarnation
-        // sends.  Init/step failures AND panics are caught and reported as
-        // `Exited` — a panicking gradient source must surface as a lost
-        // worker, not hang the master's recv (the master keeps a sender
-        // alive, so channel disconnection can never signal thread death).
-        let spawn_worker = |w: usize, gen: u32| -> mpsc::Sender<ToWorker> {
-            let (tx_w, rx_w) = mpsc::channel::<ToWorker>();
-            let tx_master = tx_master.clone();
-            scope.spawn(move || {
-                let exit = |reason: String| {
-                    let _ = tx_master.send(FromWorker::Exited { worker: w, gen, reason });
-                };
-                let init =
-                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| make_step(w)));
-                let mut step_fn = match init {
-                    Ok(Ok(s)) => s,
-                    Ok(Err(e)) => return exit(format!("init failed: {e}")),
-                    Err(p) => return exit(format!("init panicked: {}", panic_reason(p))),
-                };
-                let mut v_local: Vec<f32> = vec![];
-                loop {
-                    match rx_w.recv() {
-                        Ok(ToWorker::Params(params)) => {
-                            let step = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                                || step_fn(&params),
-                            ));
-                            match step {
-                                Ok(Ok((loss, mut msg))) => {
-                                    rule.apply(&mut v_local, &mut msg, gamma);
-                                    if tx_master
-                                        .send(FromWorker::Update { worker: w, gen, msg, loss })
-                                        .is_err()
-                                    {
-                                        return;
-                                    }
-                                }
-                                Ok(Err(e)) => return exit(format!("step failed: {e}")),
-                                Err(p) => {
-                                    return exit(format!("step panicked: {}", panic_reason(p)))
-                                }
-                            }
-                        }
-                        // master-initiated stop (leave or end of run)
-                        Ok(ToWorker::Stop) | Err(_) => return,
-                    }
-                }
-            });
-            tx_w
-        };
-
-        // `senders[w].is_some()` IS the thread-liveness state: a slot has a
-        // sender exactly while its current incarnation may still produce
-        // messages the master should honor.
-        let mut senders: Vec<Option<mpsc::Sender<ToWorker>>> = Vec::with_capacity(n);
-        let mut thread_gen: Vec<u32> = vec![0; n];
-        for w in 0..n {
-            senders.push(Some(spawn_worker(w, 0)));
-        }
-        // Kick off: every worker gets initial (pulled) parameters.
-        for (w, tx) in senders.iter().enumerate() {
-            if let Some(tx) = tx {
-                tx.send(ToWorker::Params(server.pull_params(w))).ok();
-            }
-        }
-
-        let loss_sample = (total / 200).max(1);
-        let mut step: u64 = 0;
-        while step < total {
-            // Fire membership events due at this master step.
-            while churn.front().is_some_and(|&(at, _)| step >= at) {
-                let (_, action) = churn.pop_front().expect("front checked");
-                match action {
-                    ChurnAction::Join => {
-                        let slot = server.add_worker();
-                        if slot == senders.len() {
-                            senders.push(None);
-                            thread_gen.push(0);
-                        }
-                        thread_gen[slot] = thread_gen[slot].wrapping_add(1);
-                        let tx = spawn_worker(slot, thread_gen[slot]);
-                        tx.send(ToWorker::Params(server.pull_params(slot))).ok();
-                        senders[slot] = Some(tx);
-                        report.workers_joined += 1;
-                    }
-                    ChurnAction::Leave(who) => {
-                        // A named worker may already be gone (it crashed and
-                        // was retired as an implicit leave) and lost threads
-                        // may leave nobody to evict — both are no-ops, not
-                        // reasons to abort the surviving run.
-                        let victim = match who {
-                            Some(w) if server.is_live(w) => Some(w),
-                            Some(w) => {
-                                eprintln!("churn: skipping leave of worker {w} (already gone)");
-                                None
-                            }
-                            None => {
-                                let live: Vec<usize> = (0..server.workers())
-                                    .filter(|&i| server.is_live(i))
-                                    .collect();
-                                if live.is_empty() {
-                                    None
-                                } else {
-                                    Some(live[churn_rng.below(live.len() as u64) as usize])
-                                }
-                            }
-                        };
-                        if let Some(w) = victim {
-                            server.remove_worker(w, cfg.leave_policy)?;
-                            if let Some(tx) = senders[w].take() {
-                                tx.send(ToWorker::Stop).ok();
-                            }
-                            report.workers_left += 1;
-                        }
-                    }
-                    // real threads run at hardware speed; straggler onset
-                    // is only meaningful under the simulated clock
-                    ChurnAction::SpeedChange(..) => {}
-                }
-            }
-
-            // Fail fast: the FIFO cannot make progress once no live thread
-            // remains to produce updates.
-            anyhow::ensure!(
-                senders.iter().any(Option::is_some),
-                "no live workers left at master step {step}/{total} \
-                 ({} lost, {} left); aborting instead of deadlocking",
-                report.workers_lost,
-                report.workers_left
-            );
-
-            match rx_master.recv().expect("master keeps a sender; recv cannot fail") {
-                FromWorker::Exited { worker, gen, reason } => {
-                    if gen != thread_gen[worker] || senders[worker].is_none() {
-                        continue; // stale incarnation: already stopped/left
-                    }
-                    // A dying worker is an implicit leave: retire its slot
-                    // so its momentum doesn't linger frozen in v⁰.
-                    senders[worker] = None;
-                    if server.is_live(worker) {
-                        server.remove_worker(worker, cfg.leave_policy)?;
-                    }
-                    report.workers_lost += 1;
-                    eprintln!("worker {worker}: {reason}");
-                }
-                FromWorker::Update { worker, gen, mut msg, loss } => {
-                    if gen != thread_gen[worker] {
-                        continue; // late push from a stopped incarnation
-                    }
-                    if !server.is_live(worker) {
-                        // in-flight push raced a leave: recoverable, drop it
-                        continue;
-                    }
-                    // (a remote master may be shared with other clients,
-                    // whose pushes legitimately advance it between ours)
-                    debug_assert!(
-                        cfg.master_addr.is_some() || server.steps_done() == step,
-                        "master step not monotone"
-                    );
-                    if step % loss_sample == 0 {
-                        report.loss_curve.push((step, loss as f64));
-                    }
-                    if !loss.is_finite() {
-                        report.diverged = true;
-                    }
-                    server.push_update(worker, &msg)?;
-                    step += 1;
-                    if step < total {
-                        if let Some(tx) = &senders[worker] {
-                            // round-trip buffer reuse: the worker's message
-                            // buffer becomes its next parameter buffer
-                            server.pull_into(worker, &mut msg);
-                            tx.send(ToWorker::Params(msg)).ok();
-                        }
-                    }
-                    if eval_every > 0 && step % eval_every == 0 {
-                        let (l, e) = eval(&server.theta_vec())?;
-                        report.curve.push(EvalPoint {
-                            epoch: step as f64 / cfg.schedule.steps_per_epoch as f64,
-                            test_loss: l,
-                            test_error: e,
-                            sim_time: t0.elapsed().as_secs_f64(),
-                        });
-                    }
-                }
-            }
-        }
-        for tx in senders.iter().flatten() {
-            tx.send(ToWorker::Stop).ok();
-        }
-        Ok(())
-    })?;
-
-    let (loss, err) = eval(&server.theta_vec())?;
-    report.final_test_loss = loss;
-    report.final_test_error = err;
-    if !loss.is_finite() {
-        report.diverged = true;
-        report.final_test_error = 100.0;
-    }
-    report.mean_gap = server.metrics().mean_gap();
-    report.mean_lag = server.metrics().mean_lag();
-    report.steps = total;
-    report.wall_secs = t0.elapsed().as_secs_f64();
-    report.sim_time = report.wall_secs; // real time is the clock here
-    Ok(report)
+    driver::run_threads(cfg, theta0, make_step, eval)
 }

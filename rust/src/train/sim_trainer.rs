@@ -7,199 +7,36 @@
 //! exactly the controlled comparison the paper runs ("all algorithms share
 //! the same worker update schedules and therefore have an identical lag").
 //!
-//! The master is built through [`crate::net::master_for`]: `cfg.shards > 1`
-//! runs the same experiment against the sharded, lock-striped server (the
-//! equivalence suite guarantees an identical trajectory up to f32
-//! reassociation), and [`crate::config::TrainConfig::master_addr`] runs it
-//! against a remote `dana serve` master over TCP — bit-for-bit identical
-//! over loopback (`rust/tests/net.rs`).
+//! Since the pipelined-runtime refactor this module is a thin shim: the
+//! actual worker loop — cluster events, membership handling, the pipeline
+//! window (`--pipeline-depth`), metric/report plumbing — is
+//! [`super::driver::run_sim`], shared with the real-thread backend.  The
+//! master is built through [`crate::net::master_for`]: `cfg.shards > 1`
+//! runs the same experiment against the sharded, lock-striped server and
+//! [`crate::config::TrainConfig::master_addr`] runs it against a remote
+//! `dana serve` master over TCP — bit-for-bit identical over loopback
+//! (`rust/tests/net.rs`), with `--pipeline-depth ≥ 1` switching pushes to
+//! the deferred-ack send path.
 //!
-//! The driver consumes *cluster events*, not just completions: a
-//! [`TrainConfig::churn`] schedule splices joins, leaves and straggler
-//! onsets into the run, and [`handle_event`] keeps the master's membership
-//! in lockstep with the simulator's.  An empty churn schedule reproduces
-//! the fixed-membership trajectories bit-for-bit (pinned by
-//! `rust/tests/churn.rs`).
+//! An empty churn schedule and depth 0 reproduce the pre-elastic,
+//! pre-pipeline trajectories bit-for-bit (pinned by `rust/tests/churn.rs`
+//! and `rust/tests/pipeline.rs`).
 //!
 //! [`run_synthetic`] is the PJRT-free variant over the seeded noisy
-//! quadratic of [`super::real_async`] — the full master/schedule/churn
-//! machinery with no artifacts, used by the churn experiment sweep and the
-//! equivalence tests.
+//! quadratic — the full master/schedule/churn machinery with no
+//! artifacts, used by the experiment sweeps and the equivalence tests.
 
 use crate::config::TrainConfig;
-use crate::optim::{LeavePolicy, WorkerState};
 use crate::runtime::Engine;
-use crate::server::Master;
-use crate::sim::{AsyncSchedule, ClusterEvent, Completion, ExecTimeModel};
 use crate::train::data_source::{evaluate, DataSource};
-use crate::train::{real_async, EvalPoint, TrainReport};
-use crate::util::rng::Rng;
-
-/// Apply a membership event to the master and the per-worker local state,
-/// keeping the server's slot assignment in lockstep with the simulator's.
-/// Returns the completion to process, if the event was one.
-fn handle_event(
-    server: &mut dyn Master,
-    event: ClusterEvent,
-    local: &mut Vec<Vec<f32>>,
-    wstate: &mut Vec<WorkerState>,
-    policy: LeavePolicy,
-    report: &mut TrainReport,
-) -> anyhow::Result<Option<Completion>> {
-    match event {
-        ClusterEvent::Completion(c) => Ok(Some(c)),
-        ClusterEvent::Join { worker, .. } => {
-            let slot = server.add_worker();
-            anyhow::ensure!(
-                slot == worker,
-                "membership drift: schedule assigned slot {worker}, server {slot}"
-            );
-            if slot == local.len() {
-                local.push(vec![0.0; server.param_len()]);
-                wstate.push(server.make_worker_state());
-            } else {
-                wstate[slot] = server.make_worker_state();
-            }
-            // the joiner pulls fresh parameters for its first batch
-            server.pull_into(slot, &mut local[slot]);
-            report.workers_joined += 1;
-            Ok(None)
-        }
-        ClusterEvent::Leave { worker, .. } => {
-            server.remove_worker(worker, policy)?;
-            report.workers_left += 1;
-            Ok(None)
-        }
-        // the schedule already rescaled the worker's execution-time model;
-        // nothing changes master-side
-        ClusterEvent::SpeedChange { .. } => Ok(None),
-    }
-}
+use crate::train::driver::{self, WorkerBackend};
+use crate::train::TrainReport;
 
 /// Seed perturbation for the synthetic gradient-noise stream (independent
 /// of the cluster RNG streams, so the schedule is identical whatever the
 /// gradient source).  Public so the churn equivalence suite can replicate
 /// the stream in its pre-elastic reference driver.
 pub const SYNTH_GRAD_STREAM: u64 = 0x5EED_6AAD;
-
-/// The shared simulated-clock driver: cluster-event loop, membership
-/// handling, metric/report plumbing — generic over the gradient source.
-/// `grad_step(worker, params, msg, want_loss)` fills `msg` with the
-/// worker's message computed at `params` and returns the train loss; when
-/// `want_loss` is false the value is not recorded, so cheap sources may
-/// return 0.0 without computing it.  `eval` maps master parameters to
-/// `(test loss, test error %)` for the periodic and final evaluations.
-///
-/// Both [`run`] and [`run_synthetic`] drive THIS loop, which is what keeps
-/// their trajectories in lockstep — the churn equivalence suite pins its
-/// behavior bit-for-bit against the pre-elastic loop shape.
-fn run_sim_core<G, E>(
-    cfg: &TrainConfig,
-    theta0: &[f32],
-    mut grad_step: G,
-    mut eval: E,
-) -> anyhow::Result<TrainReport>
-where
-    G: FnMut(usize, &[f32], &mut Vec<f32>, bool) -> anyhow::Result<f64>,
-    E: FnMut(&[f32]) -> anyhow::Result<(f64, f64)>,
-{
-    let t0 = std::time::Instant::now();
-    let n = cfg.n_workers;
-    // in-process master, or a RemoteMaster against `--master tcp://...`
-    let mut server = crate::net::master_for(cfg, theta0)?;
-    server.metrics_mut().set_every(cfg.metrics_every);
-
-    let total = cfg.total_master_steps();
-    let mut cluster_rng = Rng::new(cfg.seed);
-    let exec_model = ExecTimeModel::new(cfg.env, n, cfg.batch(), &mut cluster_rng);
-    let mut schedule =
-        AsyncSchedule::new(exec_model, cluster_rng.fork(1)).with_churn(&cfg.churn, total)?;
-
-    // Worker-local state: pulled parameters + optimizer state (DANA-Slim).
-    // The locals are retained buffers, so seed them through the
-    // `pull_into` reuse path like every later pull (no `pull_params`
-    // double-copy in the loop).
-    let mut local: Vec<Vec<f32>> = Vec::with_capacity(n);
-    let mut wstate: Vec<WorkerState> = Vec::with_capacity(n);
-    for w in 0..n {
-        let mut buf = vec![0.0f32; theta0.len()];
-        server.pull_into(w, &mut buf);
-        local.push(buf);
-        wstate.push(server.make_worker_state());
-    }
-
-    let eval_every = if cfg.eval_every_epochs > 0.0 {
-        (cfg.eval_every_epochs * cfg.schedule.steps_per_epoch as f64).round() as u64
-    } else {
-        0
-    };
-    let loss_sample = (total / 200).max(1);
-
-    let mut report = TrainReport {
-        algorithm: cfg.algorithm.name().to_string(),
-        n_workers: n,
-        ..TrainReport::default()
-    };
-
-    let mut msg = vec![0.0f32; theta0.len()];
-    let mut step: u64 = 0;
-    while step < total {
-        let event = schedule.next_event();
-        let Some(c) = handle_event(
-            server.as_mut(),
-            event,
-            &mut local,
-            &mut wstate,
-            cfg.leave_policy,
-            &mut report,
-        )?
-        else {
-            continue;
-        };
-        let w = c.worker;
-        // Worker w finished a batch it started earlier: compute the
-        // message (gradient) at the parameters it pulled.
-        let want_loss = step % loss_sample == 0;
-        let loss = grad_step(w, &local[w], &mut msg, want_loss)?;
-        if want_loss {
-            report.loss_curve.push((step, loss));
-        }
-        if !loss.is_finite() {
-            report.diverged = true;
-        }
-        let s = server.step_now();
-        server.worker_transform(&mut wstate[w], &mut msg, s);
-        server.push_update(w, &msg)?;
-        // Immediately pull fresh parameters for the next batch (into the
-        // retained per-worker buffer — no per-step allocation).
-        server.pull_into(w, &mut local[w]);
-        step += 1;
-
-        if eval_every > 0 && step % eval_every == 0 {
-            let (loss, err) = eval(&server.theta_vec())?;
-            if !loss.is_finite() {
-                report.diverged = true;
-            }
-            report.curve.push(EvalPoint {
-                epoch: step as f64 / cfg.schedule.steps_per_epoch as f64,
-                test_loss: loss,
-                test_error: err,
-                sim_time: schedule.now(),
-            });
-        }
-    }
-
-    let (loss, err) = eval(&server.theta_vec())?;
-    report.final_test_loss = loss;
-    report.final_test_error = err;
-    if !loss.is_finite() {
-        report.diverged = true;
-        // Paper convention: a diverged run scores chance accuracy.
-        report.final_test_error = 100.0;
-    }
-    finish_report(&mut report, server.as_ref(), &schedule, total, t0);
-    Ok(report)
-}
 
 /// Run one simulated asynchronous training experiment (real gradients
 /// through PJRT).
@@ -208,7 +45,7 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
     let theta0 = engine.init_params(&cfg.variant_name())?;
     let mut ds = DataSource::for_config(cfg);
     let eval_set = ds.eval_set();
-    run_sim_core(
+    driver::run_sim(
         cfg,
         &theta0,
         |_w, params, msg: &mut Vec<f32>, _want_loss| {
@@ -223,48 +60,9 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
 }
 
 /// Simulated-clock training on the seeded noisy quadratic — no PJRT, no
-/// artifacts.  The schedule (and its churn events) is identical to what
-/// [`run`] would see under the same config; gradients come from the
-/// synthetic objective of [`real_async`].  This is the artifact-free
-/// workload behind `dana experiment churn` and the churn equivalence
-/// suite.
+/// artifacts.  The schedule (and its churn/pipeline events) is identical
+/// to what [`run`] would see under the same config; gradients come from
+/// the synthetic objective of [`crate::train::real_async`].
 pub fn run_synthetic(cfg: &TrainConfig, k: usize) -> anyhow::Result<TrainReport> {
-    anyhow::ensure!(k > 0, "synthetic workload needs k > 0");
-    let curv = real_async::synthetic_curvature(k);
-    let grad_curv = curv.clone();
-    let mut grad_rng = Rng::new(cfg.seed ^ SYNTH_GRAD_STREAM);
-    run_sim_core(
-        cfg,
-        &real_async::synthetic_theta0(k),
-        move |_w, params, msg: &mut Vec<f32>, want_loss| {
-            real_async::synthetic_grad(params, &grad_curv, &mut grad_rng, msg);
-            // the loss costs another O(k) pass here, so honor want_loss
-            Ok(if want_loss {
-                real_async::synthetic_loss(params, &grad_curv)
-            } else {
-                0.0
-            })
-        },
-        move |theta| Ok(real_async::synthetic_eval(theta, &curv)),
-    )
-}
-
-/// Fold the server's metric taps and the schedule clock into the report.
-fn finish_report(
-    report: &mut TrainReport,
-    server: &dyn Master,
-    schedule: &AsyncSchedule,
-    total: u64,
-    t0: std::time::Instant,
-) {
-    report.mean_gap = server.metrics().mean_gap();
-    report.mean_lag = server.metrics().mean_lag();
-    for r in server.metrics().rows() {
-        report.gap_curve.push((r.step, r.gap));
-        report.norm_gap_curve.push((r.step, r.norm_gap));
-        report.grad_norm_curve.push((r.step, r.msg_norm));
-    }
-    report.sim_time = schedule.now();
-    report.steps = total;
-    report.wall_secs = t0.elapsed().as_secs_f64();
+    driver::run_synthetic(cfg, k, WorkerBackend::SimClock)
 }

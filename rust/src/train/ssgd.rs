@@ -37,7 +37,7 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
         0
     }
     .max(if cfg.eval_every_epochs > 0.0 { 1 } else { 0 });
-    let loss_sample = (rounds / 200).max(1);
+    let loss_sample = crate::train::driver::loss_sample_every(rounds as u64) as usize;
 
     let mut report = TrainReport {
         algorithm: "ssgd".to_string(),
@@ -72,9 +72,7 @@ pub fn run(cfg: &TrainConfig, engine: &Engine) -> anyhow::Result<TrainReport> {
     }
 
     let (loss, err) = evaluate(&model, sync.theta(), &eval_set)?;
-    report.final_test_loss = loss;
-    report.final_test_error = err;
-    report.diverged = !loss.is_finite();
+    crate::train::driver::finish_eval(&mut report, loss, err);
     report.sim_time = rounds_clock.now();
     report.steps = total;
     report.wall_secs = t0.elapsed().as_secs_f64();

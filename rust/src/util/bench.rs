@@ -122,6 +122,12 @@ impl BenchSuite {
     /// trajectory is tracked in-tree run over run.  A filtered run
     /// (`cargo bench -- <filter>`) writes only the rows it ran.
     pub fn finish_json(self, path: &str) -> Vec<CaseResult> {
+        if self.results.is_empty() && self.filter.is_some() {
+            // a filtered run that matched none of this suite's rows must
+            // not clobber the tracked file with an empty result set
+            println!("{}: filter matched no case, keeping {path}", self.group);
+            return self.finish();
+        }
         let json = results_json(&self.group, &self.results);
         match std::fs::write(path, &json) {
             Ok(()) => println!("{}: wrote {path}", self.group),

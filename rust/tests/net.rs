@@ -102,6 +102,37 @@ fn sharded_master_behind_the_wire_matches_monolithic() {
     assert_eq!(reports[0].loss_curve, reports[1].loss_curve);
 }
 
+/// The pipelined driver (depth ≥ 1, deferred-ack pushes) over loopback ≡
+/// in-process, bit-for-bit, for look-ahead and baseline rules alike —
+/// the server op sequence is identical, only the ack timing moves.
+#[test]
+fn loopback_pipelined_driver_matches_in_process_bit_for_bit() {
+    let k = 48;
+    for depth in [1usize, 2] {
+        for kind in [
+            AlgorithmKind::DanaZero,
+            AlgorithmKind::DanaDc,
+            AlgorithmKind::DcAsgd,
+            AlgorithmKind::Lwp,
+        ] {
+            let mut c = cfg(kind, 3, 0.6, 1);
+            c.pipeline_depth = depth;
+            let base = sim_trainer::run_synthetic(&c, k).unwrap();
+            let opts = ServeOptions { pipeline_depth: depth, ..Default::default() };
+            let mut srv = NetServer::start(serve_master(&c, k), "127.0.0.1:0", opts).unwrap();
+            let mut rc = c.clone();
+            rc.master_addr = Some(srv.url());
+            let remote = sim_trainer::run_synthetic(&rc, k).unwrap();
+            assert_eq!(
+                remote.final_test_loss, base.final_test_loss,
+                "{kind} D={depth}: pipelined trajectory diverged across the wire"
+            );
+            assert_eq!(remote.loss_curve, base.loss_curve, "{kind} D={depth}");
+            srv.stop();
+        }
+    }
+}
+
 /// Churn events flow through real sockets: joins open connections,
 /// leaves close them, and the trajectory still matches in-process.
 #[test]
@@ -234,6 +265,7 @@ fn eof_disconnect_applies_the_configured_leave_policy() {
             leave_policy: policy,
             checkpoint_path: Some(ckpt.clone()),
             checkpoint_every: 0,
+            ..Default::default()
         };
         let mut srv = start_server(&c, k, opts);
         let addr = srv.addr();
@@ -298,10 +330,11 @@ fn stale_generation_pushes_are_rejected_recoverably() {
     // push after own leave: recoverable, not fatal, nothing applied
     let gen = a.gen;
     let mut ctl = RawConn::open(&addr, Role::Control);
-    let steps_before = match ctl.req(&Msg::Status) {
-        Msg::Ack { header } => header.master_step,
+    let (steps_before, drops_before) = match ctl.req(&Msg::Status) {
+        Msg::Ack { header } => (header.master_step, header.pushes_dropped),
         other => panic!("{other:?}"),
     };
+    assert_eq!(drops_before, 0, "no push dropped yet");
     match a.req(&Msg::Push { gen, msg: vec![0.5; 4] }) {
         Msg::Error { recoverable: true, .. } => {}
         other => panic!("expected recoverable rejection, got {other:?}"),
@@ -328,7 +361,11 @@ fn stale_generation_pushes_are_rejected_recoverably() {
     b.push_ok(&[0.2; 4]);
     match ctl.req(&Msg::Status) {
         Msg::Ack { header } => {
-            assert_eq!(header.master_step, steps_before + 1, "only the valid push applied")
+            assert_eq!(header.master_step, steps_before + 1, "only the valid push applied");
+            // ISSUE 5 satellite: dropped work is counted, not silent —
+            // the two straggler pushes and the push-before-pull all
+            // surface in the Status header
+            assert_eq!(header.pushes_dropped, 3, "dropped pushes must be counted");
         }
         other => panic!("{other:?}"),
     }
@@ -428,6 +465,7 @@ fn checkpoint_kill_resume_reconnect_continues_bit_for_bit() {
         leave_policy: LeavePolicy::Retire,
         checkpoint_path: Some(ckpt.clone()),
         checkpoint_every: 0,
+        ..Default::default()
     };
 
     let mut srv = start_server(&c, k, opts.clone());
@@ -527,6 +565,7 @@ fn graceful_shutdown_checkpoints_and_stops_accepting() {
         leave_policy: LeavePolicy::Retire,
         checkpoint_path: Some(ckpt.clone()),
         checkpoint_every: 0,
+        ..Default::default()
     };
     let mut srv = start_server(&c, k, opts);
     let addr = srv.addr();
@@ -558,6 +597,7 @@ fn periodic_checkpoints_fire_every_n_steps() {
         leave_policy: LeavePolicy::Retire,
         checkpoint_path: Some(ckpt.clone()),
         checkpoint_every: 5,
+        ..Default::default()
     };
     let mut srv = start_server(&c, k, opts);
     let mut w = RawConn::open(&srv.addr(), Role::Worker);

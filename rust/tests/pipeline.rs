@@ -1,0 +1,335 @@
+//! Pipelined worker runtime obligations (ISSUE 5 acceptance):
+//!
+//! 1. DANA's look-ahead extrapolated `D` extra steps equals `D` literal
+//!    momentum-only applications followed by the plain look-ahead —
+//!    exact f32, for DANA-Zero / DANA-DC / NAG (the satellite property).
+//! 2. `--pipeline-depth D ≥ 1` runs are deterministic per seed, and
+//!    their staleness histogram is the `D = 0` histogram shifted by
+//!    exactly the pipeline window: every recorded lag matches the
+//!    closed-form prediction reconstructed from the `D = 0` run's own
+//!    push schedule (the schedules are identical — at `rtt = 0` the
+//!    completion stream is depth-independent).
+//! 3. A single pipelined worker's lag ramps 0,1,…,D and then sits at
+//!    exactly D — the "+D known, deterministic staleness" claim, pinned.
+//! 4. The thread backend pipelines (channel-window) and still descends;
+//!    dropped-push accounting stays zero without churn.
+//! 5. Loopback smoke (run in CI on every push): D ∈ {0, 1} over TCP with
+//!    deferred-ack pushes reproduces the in-process trajectories
+//!    bit-for-bit, and D = 1 actually defers (the client reports acks in
+//!    flight between push and pull).
+
+use dana::config::{TrainConfig, Workload};
+use dana::net::{NetServer, ServeOptions};
+use dana::optim::dana_dc::DanaDc;
+use dana::optim::dana_zero::DanaZero;
+use dana::optim::sgd::Nag;
+use dana::optim::{make_algorithm, Algorithm, AlgorithmKind, LrSchedule, Step};
+use dana::server::{make_master, Master};
+use dana::train::{real_async, sim_trainer};
+use dana::util::rng::Rng;
+
+fn cfg(kind: AlgorithmKind, workers: usize, epochs: f64, depth: usize) -> TrainConfig {
+    let mut c = TrainConfig::preset(Workload::C10, kind, workers, epochs);
+    c.seed = 53;
+    c.metrics_every = 0;
+    c.pipeline_depth = depth;
+    c
+}
+
+fn rand_vec(rng: &mut Rng, k: usize, scale: f32) -> Vec<f32> {
+    (0..k).map(|_| scale * rng.normal() as f32).collect()
+}
+
+// ---------------------------------------------------------------- (1)
+
+/// Reference: `depth` literal momentum-only steps (`v ← γv; θ ← θ − ηv`)
+/// applied to owned copies of (θ, v).
+fn literal_extrapolate(theta: &[f32], v: &[f32], eta: f32, gamma: f32, depth: usize) -> (Vec<f32>, Vec<f32>) {
+    let (mut t, mut vv) = (theta.to_vec(), v.to_vec());
+    for _ in 0..depth {
+        for (ti, vi) in t.iter_mut().zip(vv.iter_mut()) {
+            *vi = gamma * *vi;
+            *ti -= eta * *vi;
+        }
+    }
+    (t, vv)
+}
+
+#[test]
+fn nag_extrapolated_lookahead_equals_literal_momentum_applications() {
+    let k = 37;
+    let (eta, gamma) = (0.05f32, 0.9f32);
+    let mut rng = Rng::new(7);
+    for depth in [0usize, 1, 2, 5] {
+        let mut nag = Nag::new(&rand_vec(&mut rng, k, 1.0));
+        // build nonzero momentum with a few real applies
+        for _ in 0..4 {
+            let g = rand_vec(&mut rng, k, 1.0);
+            nag.apply(&g, eta, gamma);
+        }
+        // literal: D zero-gradient applies on a copy, then the plain
+        // look-ahead (Nag::apply with g = 0 IS the momentum-only step)
+        let mut literal = nag.clone();
+        let zeros = vec![0.0f32; k];
+        for _ in 0..depth {
+            literal.apply(&zeros, eta, gamma);
+        }
+        let mut want = vec![0.0f32; k];
+        literal.lookahead_params(&mut want, eta, gamma);
+        let mut got = vec![0.0f32; k];
+        nag.lookahead_extrapolated(&mut got, eta, gamma, depth);
+        assert_eq!(got, want, "depth {depth}: extrapolation != literal (exact f32)");
+    }
+}
+
+#[test]
+fn dana_extrapolated_send_equals_literal_momentum_applications() {
+    let k = 29;
+    let s = Step { eta: 0.05, gamma: 0.9, lambda: 1.0 };
+    let mut rng = Rng::new(11);
+    for depth in [0usize, 1, 3] {
+        // DANA-Zero
+        let mut dz = DanaZero::new(&rand_vec(&mut rng, k, 1.0), 2);
+        for i in 0..6 {
+            let g = rand_vec(&mut rng, k, 1.0);
+            let sent = dz.theta().to_vec();
+            dz.master_apply(i % 2, &g, &sent, s);
+        }
+        let (t, v) = literal_extrapolate(dz.theta(), dz.velocity_sum(), s.eta, s.gamma, depth);
+        let mut want = vec![0.0f32; k];
+        dana::math::lookahead(&mut want, &t, &v, s.gamma, s.eta);
+        dz.set_staleness_hint(depth);
+        let mut got = vec![0.0f32; k];
+        dz.master_send(0, &mut got, s);
+        assert_eq!(got, want, "dana-zero depth {depth}");
+
+        // DANA-DC shares the same send
+        let mut dc = DanaDc::new(&rand_vec(&mut rng, k, 1.0), 2);
+        for i in 0..6 {
+            let g = rand_vec(&mut rng, k, 1.0);
+            let sent = dc.theta().to_vec();
+            dc.master_apply(i % 2, &g, &sent, s);
+        }
+        let (t, v) = literal_extrapolate(dc.theta(), dc.velocity_sum(), s.eta, s.gamma, depth);
+        let mut want = vec![0.0f32; k];
+        dana::math::lookahead(&mut want, &t, &v, s.gamma, s.eta);
+        dc.set_staleness_hint(depth);
+        let mut got = vec![0.0f32; k];
+        dc.master_send(1, &mut got, s);
+        assert_eq!(got, want, "dana-dc depth {depth}");
+    }
+}
+
+#[test]
+fn nag_asgd_hint_sends_the_extrapolated_position() {
+    let k = 17;
+    let s = Step { eta: 0.1, gamma: 0.9, lambda: 0.0 };
+    let mut rng = Rng::new(13);
+    let mut a = make_algorithm(AlgorithmKind::NagAsgd, &rand_vec(&mut rng, k, 1.0), 2);
+    for i in 0..5 {
+        let g = rand_vec(&mut rng, k, 1.0);
+        let sent = a.theta().to_vec();
+        a.master_apply(i % 2, &g, &sent, s);
+    }
+    // hint 0: plain θ (Algorithm 8 exactly)
+    let mut send0 = vec![0.0f32; k];
+    a.master_send(0, &mut send0, s);
+    assert_eq!(send0, a.theta().to_vec());
+    // hint 2: the momentum-only 2-step future position
+    a.set_staleness_hint(2);
+    let mut send2 = vec![0.0f32; k];
+    a.master_send(0, &mut send2, s);
+    assert_ne!(send2, send0, "hinted send must move");
+    // reference via the concrete momentum vector is internal; check the
+    // defining property instead: hint 0 restored == plain θ again
+    a.set_staleness_hint(0);
+    let mut back = vec![0.0f32; k];
+    a.master_send(0, &mut back, s);
+    assert_eq!(back, send0, "hint 0 must be an exact no-op");
+}
+
+// ---------------------------------------------------------------- (2)
+
+#[test]
+fn pipelined_runs_are_deterministic_per_seed() {
+    let k = 96;
+    for kind in [AlgorithmKind::DanaZero, AlgorithmKind::DanaSlim, AlgorithmKind::Asgd] {
+        let mut c = cfg(kind, 4, 0.6, 2);
+        c.metrics_every = 3;
+        let a = sim_trainer::run_synthetic(&c, k).unwrap();
+        let b = sim_trainer::run_synthetic(&c, k).unwrap();
+        assert_eq!(a.final_test_loss, b.final_test_loss, "{kind}");
+        assert_eq!(a.loss_curve, b.loss_curve, "{kind}");
+        assert_eq!(a.lag_curve, b.lag_curve, "{kind}");
+        // and the pipeline actually changes the trajectory vs D=0
+        let d0 = sim_trainer::run_synthetic(&cfg(kind, 4, 0.6, 0), k).unwrap();
+        assert_ne!(
+            a.final_test_loss, d0.final_test_loss,
+            "{kind}: depth 2 must train on staler parameters than depth 0"
+        );
+    }
+}
+
+#[test]
+fn lag_histogram_shifts_by_exactly_the_pipeline_depth() {
+    // The completion schedule is depth-independent (rtt = 0), so the
+    // depth-D run visits the same (step, worker) sequence as depth 0 and
+    // its lags follow in closed form: batch i of worker w (0-based) was
+    // pulled at step 0 while i <= D (the primed window) and right after
+    // w's push i-D-1 otherwise.
+    let k = 48;
+    let n = 4;
+    let depth = 2;
+    let mut c0 = cfg(AlgorithmKind::DanaZero, n, 1.0, 0);
+    c0.metrics_every = 1;
+    let mut cd = c0.clone();
+    cd.pipeline_depth = depth;
+    let base = sim_trainer::run_synthetic(&c0, k).unwrap();
+    let piped = sim_trainer::run_synthetic(&cd, k).unwrap();
+    assert_eq!(base.lag_curve.len(), piped.lag_curve.len());
+    // the push schedule itself is identical
+    let sched0: Vec<(u64, usize)> = base.lag_curve.iter().map(|&(s, w, _)| (s, w)).collect();
+    let schedd: Vec<(u64, usize)> = piped.lag_curve.iter().map(|&(s, w, _)| (s, w)).collect();
+    assert_eq!(sched0, schedd, "completion schedule must be depth-independent");
+    // reconstruct per-worker push-step sequences from the D=0 run
+    let mut pushes: Vec<Vec<u64>> = vec![Vec::new(); n];
+    for &(step, w, _) in &base.lag_curve {
+        pushes[w].push(step);
+    }
+    let mut idx = vec![0usize; n];
+    for (row, &(step, w, lag)) in piped.lag_curve.iter().enumerate() {
+        let i = idx[w];
+        idx[w] += 1;
+        let pulled_at = if i <= depth { 0 } else { pushes[w][i - depth - 1] + 1 };
+        assert_eq!(
+            lag,
+            step - pulled_at,
+            "row {row}: worker {w} batch {i} at step {step}"
+        );
+    }
+    // and the sanity check on the base run itself (D = 0 formula)
+    let mut idx = vec![0usize; n];
+    for &(step, w, lag) in &base.lag_curve {
+        let i = idx[w];
+        idx[w] += 1;
+        let pulled_at = if i == 0 { 0 } else { pushes[w][i - 1] + 1 };
+        assert_eq!(lag, step - pulled_at, "depth-0 self-consistency");
+    }
+    // net effect: mean lag strictly grows with the depth
+    assert!(
+        piped.mean_lag > base.mean_lag,
+        "depth {depth} must raise the mean lag: {} vs {}",
+        piped.mean_lag,
+        base.mean_lag
+    );
+}
+
+// ---------------------------------------------------------------- (3)
+
+#[test]
+fn single_worker_lag_ramps_to_exactly_the_depth() {
+    let k = 16;
+    for depth in [0usize, 1, 3] {
+        let mut c = cfg(AlgorithmKind::Asgd, 1, 1.0, depth);
+        c.metrics_every = 1;
+        let rep = sim_trainer::run_synthetic(&c, k).unwrap();
+        for (i, &(_, w, lag)) in rep.lag_curve.iter().enumerate() {
+            assert_eq!(w, 0);
+            assert_eq!(
+                lag,
+                (i as u64).min(depth as u64),
+                "depth {depth}: lag at push {i}"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- (4)
+
+#[test]
+fn thread_backend_pipelines_and_descends() {
+    let k = 512;
+    let j0 = real_async::synthetic_loss(
+        &real_async::synthetic_theta0(k),
+        &real_async::synthetic_curvature(k),
+    );
+    for depth in [1usize, 2] {
+        let mut c = cfg(AlgorithmKind::DanaZero, 4, 2.0, depth);
+        c.metrics_every = 7;
+        let rep = real_async::run_synthetic(&c, k).unwrap();
+        assert_eq!(rep.steps, c.total_master_steps());
+        assert!(!rep.diverged);
+        assert_eq!(rep.pushes_dropped, 0, "no churn, nothing to drop");
+        for w in rep.loss_curve.windows(2) {
+            assert!(w[0].0 < w[1].0, "master step went backwards: {w:?}");
+        }
+        assert!(
+            rep.final_test_loss < 0.1 * j0,
+            "depth {depth}: loss {} vs initial {j0}",
+            rep.final_test_loss
+        );
+    }
+}
+
+// ---------------------------------------------------------------- (5)
+
+/// The `dana serve` master for a config (zero slots: connect == join).
+fn serve_master(c: &TrainConfig, k: usize) -> Box<dyn Master> {
+    make_master(
+        c.algorithm,
+        &real_async::synthetic_theta0(k),
+        LrSchedule::new(c.schedule.clone()),
+        0,
+        c.shards,
+        1,
+    )
+}
+
+#[test]
+fn loopback_smoke_depth_0_and_1_match_in_process_bit_for_bit() {
+    let k = 48;
+    for depth in [0usize, 1] {
+        for kind in [AlgorithmKind::DanaZero, AlgorithmKind::DanaSlim] {
+            let c = cfg(kind, 3, 0.6, depth);
+            let base = sim_trainer::run_synthetic(&c, k).unwrap();
+            let opts = ServeOptions { pipeline_depth: depth, ..Default::default() };
+            let mut srv = NetServer::start(serve_master(&c, k), "127.0.0.1:0", opts).unwrap();
+            let mut rc = c.clone();
+            rc.master_addr = Some(srv.url());
+            let remote = sim_trainer::run_synthetic(&rc, k).unwrap();
+            assert_eq!(
+                remote.final_test_loss, base.final_test_loss,
+                "{kind} D={depth}: final loss diverged across the wire"
+            );
+            assert_eq!(remote.loss_curve, base.loss_curve, "{kind} D={depth}: loss curve");
+            assert_eq!(remote.steps, base.steps, "{kind} D={depth}");
+            srv.stop();
+        }
+    }
+}
+
+#[test]
+fn deferred_ack_push_actually_defers() {
+    // Between a pipelined push and the next request, the client holds an
+    // un-harvested ack; a blocking (D=0) push never does.
+    let k = 8;
+    let c = cfg(AlgorithmKind::Asgd, 1, 1.0, 1);
+    let opts = ServeOptions { pipeline_depth: 1, ..Default::default() };
+    let mut srv = NetServer::start(serve_master(&c, k), "127.0.0.1:0", opts).unwrap();
+    let mut rm = dana::net::RemoteMaster::connect(&srv.url(), 1).unwrap();
+    rm.set_pipeline_depth(1);
+    let mut buf = vec![0.0f32; k];
+    rm.pull_into(0, &mut buf);
+    rm.pull_into(0, &mut buf);
+    assert_eq!(rm.inflight_pushes(0), 0);
+    rm.push_update(0, &vec![0.1; k]).unwrap();
+    assert_eq!(rm.inflight_pushes(0), 1, "the push must not block on its ack");
+    // the next pull harvests it transparently
+    rm.pull_into(0, &mut buf);
+    assert_eq!(rm.inflight_pushes(0), 0, "the pull must harvest the owed ack");
+    assert_eq!(rm.steps_done(), 1, "the harvested header reflects the applied push");
+    // drain on an idle connection is a no-op
+    rm.drain_inflight().unwrap();
+    drop(rm);
+    srv.stop();
+}

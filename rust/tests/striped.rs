@@ -121,6 +121,40 @@ fn config_enabled_shard_frames_match_monolithic_run() {
     srv.stop();
 }
 
+/// The pipelined driver against BOTH serving backends — including
+/// shard-sliced frames on the striped path — reproduces the in-process
+/// depth-D trajectory bit-for-bit (`--pipeline-depth` composes with
+/// `--shards` and `--shard-frames`).
+#[test]
+fn pipelined_driver_matches_on_both_backends_with_sliced_frames() {
+    let k = 45; // not divisible by 7: uneven shard lengths on the wire
+    let depth = 1;
+    for kind in [AlgorithmKind::DanaZero, AlgorithmKind::DcAsgd] {
+        let mut c = cfg(kind, 3, 0.5, 7);
+        c.pipeline_depth = depth;
+        let in_process = sim_trainer::run_synthetic(&c, k).unwrap();
+        for striped in [false, true] {
+            for sliced in [false, true] {
+                let opts = ServeOptions { pipeline_depth: depth, ..Default::default() };
+                let mut srv = start_backend(&c, k, striped, opts);
+                let mut rc = c.clone();
+                rc.master_addr = Some(srv.url());
+                rc.shard_frames = sliced;
+                let remote = sim_trainer::run_synthetic(&rc, k).unwrap();
+                assert_eq!(
+                    remote.final_test_loss, in_process.final_test_loss,
+                    "{kind} striped={striped} sliced={sliced}: pipelined trajectory"
+                );
+                assert_eq!(
+                    remote.loss_curve, in_process.loss_curve,
+                    "{kind} striped={striped} sliced={sliced}"
+                );
+                srv.stop();
+            }
+        }
+    }
+}
+
 /// Same equivalence with cluster churn flowing through real sockets:
 /// joins/leaves fan across all shards atomically under the epoch lock.
 #[test]
@@ -256,6 +290,7 @@ fn checkpoint_kill_resume_reconnect_on_striped_backend() {
         leave_policy: LeavePolicy::Retire,
         checkpoint_path: Some(ckpt.clone()),
         checkpoint_every: 0,
+        ..Default::default()
     };
 
     let mut srv = start_backend(&c, k, true, opts.clone());

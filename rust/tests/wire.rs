@@ -18,6 +18,7 @@ fn sample_header() -> Header {
         lambda: 1.0,
         live_workers: 7,
         worker_slots: 9,
+        pushes_dropped: 3,
     }
 }
 
@@ -47,20 +48,29 @@ fn all_messages() -> Vec<Msg> {
             kind: AlgorithmKind::DanaSlim,
             k: 101_386,
             shards: 16,
+            pipeline: 2,
             header: h,
         },
         Msg::Params { header: h, params: vec![] },
         Msg::Params { header: h, params: (0..257).map(|i| (i as f32 * 0.7).sin()).collect() },
         Msg::ShardParams { header: h, shard: 3, params: vec![0.5; 11] },
         Msg::ShardParams { header: h, shard: 0, params: vec![] },
-        Msg::PushAck { header: h, eta: 0.05, gamma: 0.9, lambda: 2.0 },
+        Msg::PushAck { header: h, step: 123_456_789_011, eta: 0.05, gamma: 0.9, lambda: 2.0 },
         Msg::Ack { header: h },
         Msg::Theta { header: h, theta: vec![1.0; 3] },
         Msg::Error { recoverable: true, detail: String::new() },
         Msg::Error { recoverable: false, detail: "straggler push for slot 3 (gen 2 != 5)".into() },
     ];
     for kind in AlgorithmKind::ALL {
-        msgs.push(Msg::HelloAck { slot: 0, gen: 1, kind, k: 16, shards: 1, header: h });
+        msgs.push(Msg::HelloAck {
+            slot: 0,
+            gen: 1,
+            kind,
+            k: 16,
+            shards: 1,
+            pipeline: 0,
+            header: h,
+        });
     }
     // huge payload: ~1.2 MB of parameters round-trips bit-exactly
     let huge: Vec<f32> = (0..300_000).map(|i| (i as f32).to_bits() as f32 * 1e-30).collect();
