@@ -27,11 +27,17 @@ use dana::optim::{make_algorithm, AlgorithmKind, LeavePolicy, LrSchedule, Schedu
 use dana::server::{
     make_serving_master, Master, ParameterServer, ServingMaster, ShardedParameterServer,
 };
-use dana::util::bench::BenchSuite;
+use dana::util::bench::{BenchSuite, CaseResult, NoCaseMatched};
 use dana::util::rng::Rng;
 
 const K: usize = 101_386;
 const N: usize = 8;
+
+/// True when a suite's [`BenchSuite::finish_json`] failed only because
+/// the `cargo bench -- <filter>` filter emptied it.
+fn no_match(r: &anyhow::Result<Vec<CaseResult>>) -> bool {
+    matches!(r, Err(e) if e.downcast_ref::<NoCaseMatched>().is_some())
+}
 
 fn schedule() -> LrSchedule {
     LrSchedule::new(ScheduleConfig {
@@ -346,7 +352,7 @@ fn main() {
         }
     }
 
-    b.finish_json("BENCH_serve.json");
+    let serve_written = b.finish_json("BENCH_serve.json");
 
     // ---------------------------------------------------------- train
     // Worker-cycle rows (BENCH_train.json): one full pipelined worker
@@ -400,5 +406,26 @@ fn main() {
         drop(rm);
         srv.stop();
     }
-    bt.finish_json("BENCH_train.json");
+    let train_written = bt.finish_json("BENCH_train.json");
+
+    // A filter legitimately empties ONE suite (CI runs `-- w=2` and
+    // `-- cycle` against this binary, each hitting a single suite); a
+    // filter that matched nothing ANYWHERE is a typo and must fail the
+    // run, not leave CI green with stale tracked files.
+    if no_match(&serve_written) && no_match(&train_written) {
+        eprintln!("bench filter matched no case in any suite");
+        std::process::exit(1);
+    }
+    for r in [serve_written, train_written] {
+        match r {
+            Ok(_) => {}
+            Err(e) if e.downcast_ref::<NoCaseMatched>().is_some() => {
+                println!("{e}; the filter ran in the other suite");
+            }
+            Err(e) => {
+                eprintln!("bench error: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
 }

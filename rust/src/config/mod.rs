@@ -130,6 +130,14 @@ pub struct TrainConfig {
     /// depth-0 worker one rtt per cycle and lets a pipelined worker hide
     /// it behind compute — the timing half of the pipeline model.
     pub rtt: f64,
+    /// Crash-loop supervision budget (`--max-restarts`; real-thread
+    /// driver): a worker thread that dies is restarted in place up to
+    /// this many times before being permanently retired as lost.  0 =
+    /// the classic retire-on-first-death behavior, bit-for-bit.
+    pub max_restarts: u32,
+    /// Base supervision backoff in milliseconds (`--restart-backoff-ms`):
+    /// restart attempt `a` waits `base << (a-1)`, capped at 5 s.
+    pub restart_backoff_ms: u64,
 }
 
 impl TrainConfig {
@@ -196,6 +204,8 @@ impl TrainConfig {
             shard_frames: false,
             pipeline_depth: 0,
             rtt: 0.0,
+            max_restarts: 0,
+            restart_backoff_ms: 50,
         }
     }
 
@@ -317,6 +327,14 @@ impl TrainConfig {
                 "rtt must be finite and >= 0"
             );
         }
+        if let Some(v) = j.get("max_restarts") {
+            self.max_restarts =
+                v.as_usize().ok_or_else(|| anyhow::anyhow!("bad max_restarts"))? as u32;
+        }
+        if let Some(v) = j.get("restart_backoff_ms") {
+            self.restart_backoff_ms =
+                v.as_usize().ok_or_else(|| anyhow::anyhow!("bad restart_backoff_ms"))? as u64;
+        }
         Ok(())
     }
 
@@ -390,6 +408,19 @@ mod tests {
         assert!(c.apply_json(&j).is_err(), "absurd depth rejected");
         let j = Json::parse(r#"{"rtt":-1.0}"#).unwrap();
         assert!(c.apply_json(&j).is_err(), "negative rtt rejected");
+    }
+
+    #[test]
+    fn supervision_knobs_apply_from_json() {
+        let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
+        assert_eq!(c.max_restarts, 0, "preset must default to retire-on-first-death");
+        assert_eq!(c.restart_backoff_ms, 50);
+        let j = Json::parse(r#"{"max_restarts":3,"restart_backoff_ms":10}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.max_restarts, 3);
+        assert_eq!(c.restart_backoff_ms, 10);
+        let j = Json::parse(r#"{"max_restarts":"lots"}"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
     }
 
     #[test]

@@ -40,11 +40,13 @@ const USAGE: &str = "usage: dana <train|serve|experiment|simulate|info> [options
              [--shards S] [--churn \"leave@0.3:2,join@0.5,slow@0.6:0=4x\"]
              [--leave-policy retire|fold] [--config file.json] [--use-pallas]
              [--synthetic] [--k K] [--master tcp://HOST:PORT] [--shard-frames]
-             [--pipeline-depth D] [--rtt T] [--artifacts DIR]
+             [--pipeline-depth D] [--rtt T] [--max-restarts R]
+             [--restart-backoff-ms MS] [--artifacts DIR]
   serve      --listen HOST:PORT --algorithm A [--workload W | --synthetic --k K]
              [--workers N] [--epochs E] [--shards S] [--serve-threads T]
              [--pipeline-depth D] [--leave-policy retire|fold]
              [--checkpoint PATH] [--checkpoint-every STEPS] [--resume PATH]
+             [--keep-last N] [--keep-hourly H] [--status-addr HOST:PORT]
              [--metrics-every K] [--seed S] [--artifacts DIR]
   experiment <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|fig12|fig13|
               table1..table6|churn|all> [--full] [--seeds K] [--out DIR]
@@ -129,6 +131,14 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     if let Some(rtt) = args.opt_parse::<f64>("rtt")? {
         anyhow::ensure!(rtt.is_finite() && rtt >= 0.0, "--rtt must be finite and >= 0");
         cfg.rtt = rtt;
+    }
+    // crash-loop supervision (real-thread mode; the sim clock has no
+    // threads to lose)
+    if let Some(r) = args.opt_parse::<u32>("max-restarts")? {
+        cfg.max_restarts = r;
+    }
+    if let Some(ms) = args.opt_parse::<u64>("restart-backoff-ms")? {
+        cfg.restart_backoff_ms = ms;
     }
     let synthetic = args.flag("synthetic");
     let synth_k = args.parse_or::<usize>("k", 256)?;
@@ -232,6 +242,11 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let checkpoint_path = args.opt_str("checkpoint").map(PathBuf::from);
     let checkpoint_every = args.parse_or::<u64>("checkpoint-every", 0)?;
     let resume = args.opt_str("resume").map(PathBuf::from);
+    let status_addr = args.opt_str("status-addr");
+    let retention = dana::net::RetentionPolicy {
+        keep_last: args.parse_or::<usize>("keep-last", 0)?,
+        keep_hourly: args.parse_or::<usize>("keep-hourly", 0)?,
+    };
     let metrics_every = args.parse_or::<u64>("metrics-every", 0)?;
     let seed = args.parse_or::<u64>("seed", 1)?;
     let eta = args.opt_parse::<f32>("eta")?;
@@ -241,6 +256,10 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     anyhow::ensure!(
         checkpoint_every == 0 || checkpoint_path.is_some(),
         "--checkpoint-every needs --checkpoint PATH"
+    );
+    anyhow::ensure!(
+        !retention.enabled() || checkpoint_path.is_some(),
+        "--keep-last/--keep-hourly need --checkpoint PATH"
     );
 
     let mut cfg = TrainConfig::preset(workload, algorithm, workers, epochs);
@@ -289,7 +308,14 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     };
     master.set_metrics_every(metrics_every);
     let k = master.param_len();
-    let opts = ServeOptions { leave_policy, checkpoint_path, checkpoint_every, pipeline_depth };
+    let opts = ServeOptions {
+        leave_policy,
+        checkpoint_path,
+        checkpoint_every,
+        pipeline_depth,
+        status_addr,
+        retention,
+    };
     let mut srv = NetServer::start_serving(master, &listen, opts)?;
     println!(
         "dana serve: {} k={k} shards={shards} ({}) pipeline-depth={pipeline_depth} on {} — \
@@ -299,6 +325,9 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
         srv.addr(),
         srv.url()
     );
+    if let Some(sa) = srv.status_addr() {
+        println!("dana serve: status endpoint on http://{sa} (/metrics, /status)");
+    }
     srv.wait();
     println!("dana serve: shut down");
     Ok(())

@@ -199,8 +199,9 @@ pub fn decode_snapshot(bytes: &[u8]) -> anyhow::Result<MasterSnapshot> {
 /// fsync the directory containing `path`, making a just-renamed entry
 /// durable.  On non-Unix platforms directory handles cannot be fsynced;
 /// there the rename itself is the best available barrier and this is a
-/// no-op.
-fn sync_parent_dir(path: &Path) -> std::io::Result<()> {
+/// no-op.  `pub(crate)`: retention GC (`net/retention.rs`) uses the same
+/// barrier after unlinking expired archives.
+pub(crate) fn sync_parent_dir(path: &Path) -> std::io::Result<()> {
     #[cfg(unix)]
     {
         let dir = match path.parent() {

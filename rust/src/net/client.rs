@@ -180,6 +180,13 @@ pub struct RemoteMaster {
     /// momentum transform) — stateless master-side, never networked.
     local_alg: Box<dyn Algorithm>,
     metrics: MetricsRecorder,
+    /// Deferred (pipelined) pushes whose acks were abandoned by
+    /// reconnects over this client's lifetime: each one may or may not
+    /// have been applied server-side.  Surfaced through
+    /// [`Master::pushes_lost`] so the drivers fold the uncertainty into
+    /// [`crate::train::TrainReport::pushes_dropped`] instead of leaving
+    /// it buried in a log line.
+    abandoned_pushes: u64,
     /// Reconnect budget per failed request.
     pub reconnect_attempts: u32,
     /// Pause between reconnect attempts.
@@ -243,6 +250,7 @@ impl RemoteMaster {
             header,
             local_alg,
             metrics: MetricsRecorder::default(),
+            abandoned_pushes: 0,
             reconnect_attempts: 20,
             reconnect_delay: std::time::Duration::from_millis(250),
         };
@@ -318,6 +326,7 @@ impl RemoteMaster {
         // transport loss, and the server's Status drop counter tells).
         let lost: usize = self.workers.iter().flatten().map(|c| c.owed).sum();
         if lost > 0 {
+            self.abandoned_pushes += lost as u64;
             eprintln!(
                 "net: reconnect abandons {lost} un-acked pipelined push(es) to {}",
                 self.addr
@@ -656,6 +665,12 @@ impl RemoteMaster {
         self.workers.get(w).and_then(|c| c.as_ref().map(|c| c.slot))
     }
 
+    /// Deferred-push acks abandoned by reconnects so far (also exposed as
+    /// [`Master::pushes_lost`]).
+    pub fn abandoned_pushes(&self) -> u64 {
+        self.abandoned_pushes
+    }
+
     /// Un-acked deferred pushes currently in flight on worker `w`'s
     /// connection (tests/diagnostics).
     pub fn inflight_pushes(&self, w: usize) -> usize {
@@ -885,6 +900,10 @@ impl Master for RemoteMaster {
             }
         }
         Ok(())
+    }
+
+    fn pushes_lost(&self) -> u64 {
+        self.abandoned_pushes
     }
 
     fn make_worker_state(&self) -> WorkerState {

@@ -1,0 +1,707 @@
+//! Std-only HTTP/1.1 status endpoint for `dana serve` (`--status-addr`).
+//!
+//! A monitoring scrape must never be able to hurt training, so the
+//! listener is isolated from the serving threads on every axis:
+//!
+//! * **its own thread + socket** — the wire protocol's accept loop and
+//!   serving threads are untouched; a wedged scraper wedges only itself
+//!   (2 s read/write timeouts, one connection served at a time,
+//!   `Connection: close`);
+//! * **lock-free data sources** — `GET /metrics` renders exclusively
+//!   from [`crate::server::metrics::MetricsHub`] atomics and the atomic
+//!   gate/membership mirrors ([`StatusSource::metrics_snapshot`]), so a
+//!   scrape takes no lock `push_concurrent` wants.  `GET /status`
+//!   additionally reads the per-slot tables under their own (effectively
+//!   uncontended) mutexes;
+//! * **fail-closed parsing** — same posture as the wire decoder
+//!   (`net/wire.rs`): bounded request line, bounded header block, `GET`
+//!   only, exact path match.  A malformed request is answered and the
+//!   connection dropped *without ever touching the master* (the snapshot
+//!   is taken only after the request fully validates).
+//!
+//! Hand-rolled HTTP/1.1 because the offline registry has no HTTP crate;
+//! the surface is deliberately tiny (two read-only GET endpoints).
+
+use crate::server::metrics::HistogramSnapshot;
+use crate::util::json::Json;
+use std::io::{self, BufRead, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Longest accepted request line (`GET /metrics HTTP/1.1` is 24 bytes;
+/// anything near the cap is an attack or a bug).
+pub const MAX_REQUEST_LINE: usize = 1024;
+/// Total header block budget.
+pub const MAX_HEADER_BYTES: usize = 8 * 1024;
+/// Maximum number of header lines.
+pub const MAX_HEADER_LINES: usize = 64;
+
+/// A fully validated request — the only two things this server serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HttpRequest {
+    Metrics,
+    Status,
+}
+
+/// Why a request was refused.  Fail-closed: every variant is answered
+/// with a final status and the connection is closed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HttpError {
+    BadRequest(&'static str),
+    NotFound,
+    MethodNotAllowed,
+}
+
+impl HttpError {
+    pub fn status_line(&self) -> &'static str {
+        match self {
+            HttpError::BadRequest(_) => "400 Bad Request",
+            HttpError::NotFound => "404 Not Found",
+            HttpError::MethodNotAllowed => "405 Method Not Allowed",
+        }
+    }
+
+    pub fn message(&self) -> &'static str {
+        match self {
+            HttpError::BadRequest(m) => m,
+            HttpError::NotFound => "not found (try /metrics or /status)",
+            HttpError::MethodNotAllowed => "method not allowed (GET only)",
+        }
+    }
+}
+
+/// One row of the per-worker slot table (`GET /status`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotRow {
+    pub slot: usize,
+    /// Connection generation (bumped on every (re)attach; 0 = never
+    /// attached over the wire).
+    pub generation: u32,
+    pub live: bool,
+    /// Outstanding pulls in the slot's pipeline window.
+    pub window: usize,
+    /// Master step count right after the slot's last applied push
+    /// (0 = never pushed).
+    pub last_push: u64,
+}
+
+/// Last durable checkpoint, as the daemon remembers writing it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CheckpointInfo {
+    pub step: u64,
+    pub bytes: u64,
+    pub age_secs: f64,
+}
+
+/// Everything the renderers need, gathered in one place so both
+/// endpoints and their tests work from plain data.
+#[derive(Debug, Clone)]
+pub struct StatusSnapshot {
+    pub uptime_secs: f64,
+    pub master_step: u64,
+    pub live_workers: usize,
+    pub total_slots: usize,
+    pub pushes_total: u64,
+    pub pushes_dropped: u64,
+    /// Filled by the listener from the delta between scrapes (0.0 on the
+    /// first scrape).
+    pub pushes_per_sec: f64,
+    pub gap: HistogramSnapshot,
+    pub lag: HistogramSnapshot,
+    /// Per-shard (gate position, ticket backlog); empty on the
+    /// global-lock backend.
+    pub shard_gates: Vec<(u64, u64)>,
+    pub checkpoint: Option<CheckpointInfo>,
+    /// Per-slot rows; left empty for `/metrics` (which must not take
+    /// slot locks) and filled via [`StatusSource::slot_rows`] for
+    /// `/status`.
+    pub slots: Vec<SlotRow>,
+}
+
+/// What the daemon exposes to the listener.  Implemented by the wire
+/// server's shared state; mocked in tests.
+pub trait StatusSource: Send + Sync {
+    /// Everything `GET /metrics` needs, from lock-free sources only.
+    /// `slots` must be left empty and `pushes_per_sec` zero (the
+    /// listener fills it from scrape-to-scrape deltas).
+    fn metrics_snapshot(&self) -> StatusSnapshot;
+
+    /// Per-slot rows for `GET /status`.  May take short per-slot /
+    /// connection-table locks — never the sequencer or a shard lock.
+    fn slot_rows(&self) -> Vec<SlotRow>;
+}
+
+// ------------------------------------------------------------ parsing
+
+/// Read one `\n`-terminated line of at most `max` bytes (CR/LF
+/// stripped).  Longer lines, EOF mid-line, and non-UTF-8 all fail.
+fn read_line_bounded<R: BufRead>(r: &mut R, max: usize) -> Result<String, HttpError> {
+    let mut buf = Vec::new();
+    let n = (&mut *r)
+        .take(max as u64 + 1)
+        .read_until(b'\n', &mut buf)
+        .map_err(|_| HttpError::BadRequest("read error"))?;
+    if n == 0 {
+        return Err(HttpError::BadRequest("unexpected end of stream"));
+    }
+    if buf.last() != Some(&b'\n') || buf.len() > max {
+        return Err(HttpError::BadRequest("line too long"));
+    }
+    while matches!(buf.last(), Some(b'\n' | b'\r')) {
+        buf.pop();
+    }
+    String::from_utf8(buf).map_err(|_| HttpError::BadRequest("non-utf8 bytes"))
+}
+
+/// Parse one request, fail-closed.  The caller takes a master snapshot
+/// only on `Ok`, so malformed traffic never touches training state.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<HttpRequest, HttpError> {
+    let line = read_line_bounded(r, MAX_REQUEST_LINE)?;
+    let mut parts = line.split_whitespace();
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => (m, t, v),
+            _ => return Err(HttpError::BadRequest("malformed request line")),
+        };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::BadRequest("unsupported protocol"));
+    }
+    // Drain the header block under hard bounds before judging the
+    // method/path (one response per connection either way).
+    let mut lines = 0usize;
+    let mut total = 0usize;
+    loop {
+        let h = read_line_bounded(r, MAX_HEADER_BYTES)?;
+        if h.is_empty() {
+            break;
+        }
+        lines += 1;
+        total += h.len();
+        if lines > MAX_HEADER_LINES || total > MAX_HEADER_BYTES {
+            return Err(HttpError::BadRequest("header block too large"));
+        }
+        if !h.contains(':') {
+            return Err(HttpError::BadRequest("malformed header"));
+        }
+    }
+    if method != "GET" {
+        return Err(HttpError::MethodNotAllowed);
+    }
+    match target {
+        "/metrics" => Ok(HttpRequest::Metrics),
+        "/status" => Ok(HttpRequest::Status),
+        _ => Err(HttpError::NotFound),
+    }
+}
+
+/// Write one complete HTTP/1.1 response and flush.
+pub fn write_response(
+    w: &mut dyn Write,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    w.flush()
+}
+
+// ---------------------------------------------------------- rendering
+
+fn render_histogram(o: &mut String, name: &str, h: &HistogramSnapshot) {
+    use std::fmt::Write as _;
+    let _ = writeln!(o, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, &n) in h.buckets.iter().enumerate() {
+        cum += n;
+        if i < h.bounds.len() {
+            let _ = writeln!(o, "{name}_bucket{{le=\"{}\"}} {cum}", h.bounds[i]);
+        } else {
+            let _ = writeln!(o, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        }
+    }
+    let _ = writeln!(o, "{name}_sum {}", h.sum);
+    let _ = writeln!(o, "{name}_count {}", h.count);
+    for q in [0.5, 0.9, 0.99] {
+        let _ = writeln!(o, "{name}_quantile{{q=\"{q}\"}} {}", h.quantile(q));
+    }
+}
+
+/// Prometheus text exposition (format version 0.0.4).
+pub fn render_prometheus(s: &StatusSnapshot) -> String {
+    use std::fmt::Write as _;
+    let mut o = String::with_capacity(4096);
+    let _ = writeln!(o, "# TYPE dana_uptime_seconds gauge");
+    let _ = writeln!(o, "dana_uptime_seconds {}", s.uptime_secs);
+    let _ = writeln!(o, "# TYPE dana_master_step gauge");
+    let _ = writeln!(o, "dana_master_step {}", s.master_step);
+    let _ = writeln!(o, "# TYPE dana_pushes_total counter");
+    let _ = writeln!(o, "dana_pushes_total {}", s.pushes_total);
+    let _ = writeln!(o, "# TYPE dana_pushes_per_second gauge");
+    let _ = writeln!(o, "dana_pushes_per_second {}", s.pushes_per_sec);
+    let _ = writeln!(o, "# TYPE dana_pushes_dropped_total counter");
+    let _ = writeln!(o, "dana_pushes_dropped_total {}", s.pushes_dropped);
+    let _ = writeln!(o, "# TYPE dana_workers_live gauge");
+    let _ = writeln!(o, "dana_workers_live {}", s.live_workers);
+    let _ = writeln!(o, "# TYPE dana_workers_total gauge");
+    let _ = writeln!(o, "dana_workers_total {}", s.total_slots);
+    let _ = writeln!(o, "# TYPE dana_workers_retired gauge");
+    let _ = writeln!(
+        o,
+        "dana_workers_retired {}",
+        s.total_slots.saturating_sub(s.live_workers)
+    );
+    if !s.shard_gates.is_empty() {
+        let _ = writeln!(o, "# TYPE dana_shard_gate_position gauge");
+        for (i, &(pos, _)) in s.shard_gates.iter().enumerate() {
+            let _ = writeln!(o, "dana_shard_gate_position{{shard=\"{i}\"}} {pos}");
+        }
+        let _ = writeln!(o, "# TYPE dana_shard_ticket_backlog gauge");
+        for (i, &(_, backlog)) in s.shard_gates.iter().enumerate() {
+            let _ = writeln!(o, "dana_shard_ticket_backlog{{shard=\"{i}\"}} {backlog}");
+        }
+    }
+    render_histogram(&mut o, "dana_gap", &s.gap);
+    render_histogram(&mut o, "dana_lag", &s.lag);
+    if let Some(c) = &s.checkpoint {
+        let _ = writeln!(o, "# TYPE dana_checkpoint_step gauge");
+        let _ = writeln!(o, "dana_checkpoint_step {}", c.step);
+        let _ = writeln!(o, "# TYPE dana_checkpoint_bytes gauge");
+        let _ = writeln!(o, "dana_checkpoint_bytes {}", c.bytes);
+        let _ = writeln!(o, "# TYPE dana_checkpoint_age_seconds gauge");
+        let _ = writeln!(o, "dana_checkpoint_age_seconds {}", c.age_secs);
+    }
+    o
+}
+
+fn histogram_json(h: &HistogramSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count as f64)),
+        ("sum", Json::num(h.sum)),
+        ("p50", Json::num(h.quantile(0.5))),
+        ("p90", Json::num(h.quantile(0.9))),
+        ("p99", Json::num(h.quantile(0.99))),
+    ])
+}
+
+/// `GET /status` body: the same data as `/metrics` plus the per-worker
+/// slot table, as one JSON object.
+pub fn render_status_json(s: &StatusSnapshot) -> String {
+    let slots: Vec<Json> = s
+        .slots
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("slot", Json::num(r.slot as f64)),
+                ("generation", Json::num(r.generation as f64)),
+                ("live", Json::Bool(r.live)),
+                ("window", Json::num(r.window as f64)),
+                ("last_push", Json::num(r.last_push as f64)),
+            ])
+        })
+        .collect();
+    let shards: Vec<Json> = s
+        .shard_gates
+        .iter()
+        .enumerate()
+        .map(|(i, &(pos, backlog))| {
+            Json::obj(vec![
+                ("shard", Json::num(i as f64)),
+                ("gate_position", Json::num(pos as f64)),
+                ("ticket_backlog", Json::num(backlog as f64)),
+            ])
+        })
+        .collect();
+    let checkpoint = match &s.checkpoint {
+        Some(c) => Json::obj(vec![
+            ("step", Json::num(c.step as f64)),
+            ("bytes", Json::num(c.bytes as f64)),
+            ("age_secs", Json::num(c.age_secs)),
+        ]),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("uptime_secs", Json::num(s.uptime_secs)),
+        ("master_step", Json::num(s.master_step as f64)),
+        ("workers_live", Json::num(s.live_workers as f64)),
+        ("workers_total", Json::num(s.total_slots as f64)),
+        ("pushes_total", Json::num(s.pushes_total as f64)),
+        ("pushes_dropped", Json::num(s.pushes_dropped as f64)),
+        ("pushes_per_sec", Json::num(s.pushes_per_sec)),
+        ("gap", histogram_json(&s.gap)),
+        ("lag", histogram_json(&s.lag)),
+        ("shards", Json::Arr(shards)),
+        ("checkpoint", checkpoint),
+        ("slots", Json::Arr(slots)),
+    ])
+    .to_string()
+}
+
+// ----------------------------------------------------------- listener
+
+/// The status listener: one thread, one connection at a time, owned
+/// socket.  Stop by flag + self-connect wake, same idiom as the wire
+/// server's accept loop.
+pub struct StatusServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl StatusServer {
+    pub fn start(addr: &str, source: Arc<dyn StatusSource>) -> anyhow::Result<StatusServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("status listener bind {addr}: {e}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("dana-status".into())
+            .spawn(move || serve_loop(&listener, source.as_ref(), &flag))?;
+        Ok(StatusServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Idempotent shutdown: raise the flag, wake the accept loop with a
+    /// throwaway connection, join the thread.
+    pub fn stop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(self.addr);
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for StatusServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_loop(listener: &TcpListener, source: &dyn StatusSource, stop: &AtomicBool) {
+    // pushes/s needs scrape-to-scrape memory; it lives here so the
+    // source stays stateless.
+    let mut last_scrape: Option<(Instant, u64)> = None;
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // A rude client (timeout, reset, garbage) hurts only its own
+        // connection; nothing to do but move on.
+        if let Ok(stream) = conn {
+            let _ = handle_conn(stream, source, &mut last_scrape);
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    source: &dyn StatusSource,
+    last_scrape: &mut Option<(Instant, u64)>,
+) -> io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    let mut reader = io::BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    match read_request(&mut reader) {
+        Err(e) => write_response(
+            &mut writer,
+            e.status_line(),
+            "text/plain",
+            &format!("{}\n", e.message()),
+        ),
+        Ok(req) => {
+            // Only a fully validated request reaches the master's
+            // (lock-free) scrape surface.
+            let mut snap = source.metrics_snapshot();
+            let now = Instant::now();
+            if let Some((t0, n0)) = *last_scrape {
+                let dt = now.duration_since(t0).as_secs_f64();
+                if dt > 0.0 && snap.pushes_total >= n0 {
+                    snap.pushes_per_sec = (snap.pushes_total - n0) as f64 / dt;
+                }
+            }
+            *last_scrape = Some((now, snap.pushes_total));
+            match req {
+                HttpRequest::Metrics => write_response(
+                    &mut writer,
+                    "200 OK",
+                    "text/plain; version=0.0.4",
+                    &render_prometheus(&snap),
+                ),
+                HttpRequest::Status => {
+                    snap.slots = source.slot_rows();
+                    write_response(
+                        &mut writer,
+                        "200 OK",
+                        "application/json",
+                        &render_status_json(&snap),
+                    )
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::metrics::{AtomicHistogram, GAP_BOUNDS, LAG_BOUNDS};
+    use std::io::{Cursor, Read as _};
+    use std::sync::atomic::AtomicUsize;
+
+    fn parse(req: &str) -> Result<HttpRequest, HttpError> {
+        read_request(&mut Cursor::new(req.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn valid_requests_parse() {
+        assert_eq!(
+            parse("GET /metrics HTTP/1.1\r\nHost: x\r\nAccept: */*\r\n\r\n").unwrap(),
+            HttpRequest::Metrics
+        );
+        assert_eq!(parse("GET /status HTTP/1.0\r\n\r\n").unwrap(), HttpRequest::Status);
+        // bare-LF line endings are tolerated (curl never sends them, but
+        // the parser strips CR and LF alike)
+        assert_eq!(parse("GET /metrics HTTP/1.1\n\n").unwrap(), HttpRequest::Metrics);
+    }
+
+    #[test]
+    fn malformed_requests_fail_closed() {
+        for (req, want) in [
+            ("BLAH\r\n\r\n", HttpError::BadRequest("malformed request line")),
+            ("\r\n\r\n", HttpError::BadRequest("malformed request line")),
+            (
+                "GET /metrics HTTP/1.1 extra\r\n\r\n",
+                HttpError::BadRequest("malformed request line"),
+            ),
+            ("GET /metrics SPDY/3\r\n\r\n", HttpError::BadRequest("unsupported protocol")),
+            (
+                "GET /metrics HTTP/1.1\r\nno-colon\r\n\r\n",
+                HttpError::BadRequest("malformed header"),
+            ),
+            ("POST /metrics HTTP/1.1\r\n\r\n", HttpError::MethodNotAllowed),
+            ("GET /secrets HTTP/1.1\r\n\r\n", HttpError::NotFound),
+            ("GET / HTTP/1.1\r\n\r\n", HttpError::NotFound),
+        ] {
+            assert_eq!(parse(req), Err(want), "{req:?}");
+        }
+        // truncated stream (no blank line) fails rather than hanging
+        assert_eq!(
+            parse("GET /metrics HTTP/1.1\r\n"),
+            Err(HttpError::BadRequest("unexpected end of stream"))
+        );
+    }
+
+    #[test]
+    fn oversized_requests_fail_closed() {
+        let long_line = format!("GET /{} HTTP/1.1\r\n\r\n", "x".repeat(MAX_REQUEST_LINE));
+        assert_eq!(parse(&long_line), Err(HttpError::BadRequest("line too long")));
+        let many_headers = format!(
+            "GET /metrics HTTP/1.1\r\n{}\r\n",
+            "a: b\r\n".repeat(MAX_HEADER_LINES + 1)
+        );
+        assert_eq!(parse(&many_headers), Err(HttpError::BadRequest("header block too large")));
+        let fat_headers = format!(
+            "GET /metrics HTTP/1.1\r\n{}\r\n",
+            format!("a: {}\r\n", "y".repeat(4096)).repeat(3)
+        );
+        assert_eq!(parse(&fat_headers), Err(HttpError::BadRequest("header block too large")));
+    }
+
+    fn synthetic_snapshot() -> StatusSnapshot {
+        let gap = AtomicHistogram::new(GAP_BOUNDS);
+        for v in [1e-6, 1e-6, 0.05] {
+            gap.observe(v);
+        }
+        let lag = AtomicHistogram::new(LAG_BOUNDS);
+        for v in [0.0, 1.0, 1.0, 3.0] {
+            lag.observe(v);
+        }
+        StatusSnapshot {
+            uptime_secs: 12.5,
+            master_step: 40,
+            live_workers: 3,
+            total_slots: 4,
+            pushes_total: 40,
+            pushes_dropped: 2,
+            pushes_per_sec: 8.0,
+            gap: gap.snapshot(),
+            lag: lag.snapshot(),
+            shard_gates: vec![(40, 0), (39, 1)],
+            checkpoint: Some(CheckpointInfo { step: 32, bytes: 1024, age_secs: 3.0 }),
+            slots: vec![
+                SlotRow { slot: 0, generation: 1, live: true, window: 2, last_push: 40 },
+                SlotRow { slot: 1, generation: 3, live: false, window: 0, last_push: 17 },
+            ],
+        }
+    }
+
+    #[test]
+    fn prometheus_rendering_is_pinned() {
+        let text = render_prometheus(&synthetic_snapshot());
+        for line in [
+            "dana_uptime_seconds 12.5",
+            "dana_master_step 40",
+            "dana_pushes_total 40",
+            "dana_pushes_per_second 8",
+            "dana_pushes_dropped_total 2",
+            "dana_workers_live 3",
+            "dana_workers_total 4",
+            "dana_workers_retired 1",
+            "dana_shard_gate_position{shard=\"0\"} 40",
+            "dana_shard_ticket_backlog{shard=\"1\"} 1",
+            // cumulative le-buckets: two 1e-6 gaps, one 0.05
+            "dana_gap_bucket{le=\"0.000001\"} 2",
+            "dana_gap_bucket{le=\"0.1\"} 3",
+            "dana_gap_bucket{le=\"+Inf\"} 3",
+            "dana_gap_count 3",
+            // lag: one 0, two 1s, one 3 ⇒ cum 1, 3, 3, 4
+            "dana_lag_bucket{le=\"0\"} 1",
+            "dana_lag_bucket{le=\"1\"} 3",
+            "dana_lag_bucket{le=\"4\"} 4",
+            "dana_lag_count 4",
+            "dana_lag_sum 5",
+            "dana_checkpoint_step 32",
+            "dana_checkpoint_bytes 1024",
+            "dana_checkpoint_age_seconds 3",
+        ] {
+            assert!(text.contains(line), "missing {line:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn status_json_round_trips() {
+        let s = synthetic_snapshot();
+        let v = Json::parse(&render_status_json(&s)).unwrap();
+        assert_eq!(v.at(&["master_step"]).unwrap().as_usize().unwrap(), 40);
+        assert_eq!(v.at(&["workers_live"]).unwrap().as_usize().unwrap(), 3);
+        assert_eq!(v.at(&["pushes_dropped"]).unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.at(&["checkpoint", "step"]).unwrap().as_usize().unwrap(), 32);
+        let slots = v.at(&["slots"]).unwrap().as_arr().unwrap();
+        assert_eq!(slots.len(), 2);
+        assert_eq!(slots[1].get("generation").unwrap().as_usize().unwrap(), 3);
+        assert!(!slots[1].get("live").unwrap().as_bool().unwrap());
+        assert_eq!(slots[1].get("last_push").unwrap().as_usize().unwrap(), 17);
+        let shards = v.at(&["shards"]).unwrap().as_arr().unwrap();
+        assert_eq!(shards[1].get("ticket_backlog").unwrap().as_usize().unwrap(), 1);
+        // lag histogram quantiles survive the trip
+        assert!(v.at(&["lag", "p50"]).unwrap().as_f64().unwrap() <= 1.0);
+    }
+
+    #[test]
+    fn empty_snapshot_renders_without_shard_or_checkpoint_series() {
+        let s = StatusSnapshot {
+            uptime_secs: 0.0,
+            master_step: 0,
+            live_workers: 0,
+            total_slots: 0,
+            pushes_total: 0,
+            pushes_dropped: 0,
+            pushes_per_sec: 0.0,
+            gap: AtomicHistogram::new(GAP_BOUNDS).snapshot(),
+            lag: AtomicHistogram::new(LAG_BOUNDS).snapshot(),
+            shard_gates: Vec::new(),
+            checkpoint: None,
+            slots: Vec::new(),
+        };
+        let text = render_prometheus(&s);
+        assert!(!text.contains("dana_shard_gate_position"));
+        assert!(!text.contains("dana_checkpoint_step"));
+        assert!(text.contains("dana_pushes_total 0"));
+        let v = Json::parse(&render_status_json(&s)).unwrap();
+        assert_eq!(v.at(&["checkpoint"]).unwrap(), &Json::Null);
+    }
+
+    /// Counts how often the master surface was touched — the fail-closed
+    /// tests pin that malformed requests never reach it.
+    struct MockSource {
+        scrapes: AtomicUsize,
+        slot_reads: AtomicUsize,
+    }
+
+    impl StatusSource for MockSource {
+        fn metrics_snapshot(&self) -> StatusSnapshot {
+            self.scrapes.fetch_add(1, Ordering::SeqCst);
+            let mut s = synthetic_snapshot();
+            s.slots = Vec::new();
+            s.pushes_per_sec = 0.0;
+            s
+        }
+
+        fn slot_rows(&self) -> Vec<SlotRow> {
+            self.slot_reads.fetch_add(1, Ordering::SeqCst);
+            synthetic_snapshot().slots
+        }
+    }
+
+    fn roundtrip(addr: SocketAddr, request: &str) -> String {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(request.as_bytes()).unwrap();
+        let mut reply = String::new();
+        conn.read_to_string(&mut reply).unwrap();
+        reply
+    }
+
+    #[test]
+    fn server_serves_both_endpoints_and_fails_closed() {
+        let source = Arc::new(MockSource {
+            scrapes: AtomicUsize::new(0),
+            slot_reads: AtomicUsize::new(0),
+        });
+        let mut srv = StatusServer::start("127.0.0.1:0", source.clone()).unwrap();
+        let addr = srv.addr();
+
+        let metrics = roundtrip(addr, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(metrics.starts_with("HTTP/1.1 200 OK"), "{metrics}");
+        assert!(metrics.contains("dana_pushes_total 40"));
+        assert_eq!(source.scrapes.load(Ordering::SeqCst), 1);
+        assert_eq!(source.slot_reads.load(Ordering::SeqCst), 0, "/metrics skips slot locks");
+
+        let status = roundtrip(addr, "GET /status HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert!(status.starts_with("HTTP/1.1 200 OK"), "{status}");
+        assert!(status.contains("application/json"));
+        assert!(status.contains("\"generation\""));
+        assert_eq!(source.slot_reads.load(Ordering::SeqCst), 1);
+
+        // malformed / unknown / wrong-method requests are answered and
+        // never touch the source
+        let before = source.scrapes.load(Ordering::SeqCst);
+        assert!(roundtrip(addr, "BLAH\r\n\r\n").starts_with("HTTP/1.1 400"));
+        assert!(roundtrip(addr, "GET /x HTTP/1.1\r\n\r\n").starts_with("HTTP/1.1 404"));
+        assert!(roundtrip(addr, "POST /metrics HTTP/1.1\r\n\r\n").starts_with("HTTP/1.1 405"));
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "z".repeat(MAX_REQUEST_LINE));
+        assert!(roundtrip(addr, &long).starts_with("HTTP/1.1 400"));
+        assert_eq!(source.scrapes.load(Ordering::SeqCst), before, "fail-closed scrapes");
+
+        // second scrape fills pushes/s from the delta (same totals ⇒ 0)
+        let again = roundtrip(addr, "GET /metrics HTTP/1.1\r\n\r\n");
+        assert!(again.contains("dana_pushes_per_second 0"), "{again}");
+
+        srv.stop();
+        srv.stop(); // idempotent
+        assert!(TcpStream::connect(addr).is_err() || {
+            // the OS may briefly accept on a dead listener's backlog;
+            // a full request must at least go unanswered
+            let mut c = TcpStream::connect(addr).unwrap();
+            c.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+            let _ = c.write_all(b"GET /metrics HTTP/1.1\r\n\r\n");
+            let mut buf = [0u8; 1];
+            !matches!(c.read(&mut buf), Ok(n) if n > 0)
+        });
+    }
+}

@@ -18,16 +18,26 @@
 //!   `--master tcp://host:port`;
 //! * [`checkpoint`] — atomic binary snapshots of the full master state
 //!   (θ, per-worker vᶦ, v⁰, liveness, step count) for
-//!   `dana serve --resume` + client reconnect-as-join fault recovery.
+//!   `dana serve --resume` + client reconnect-as-join fault recovery;
+//! * [`http`] — std-only HTTP/1.1 status listener (`--status-addr`):
+//!   `GET /metrics` (Prometheus text) and `GET /status` (JSON) off
+//!   lock-free scrape mirrors, fail-closed like the wire decoder;
+//! * [`retention`] — `--keep-last`/`--keep-hourly` checkpoint archive
+//!   GC, same atomicity discipline as [`checkpoint`].
 //!
-//! See `DESIGN.md` §8 for the format and lifecycle reference.
+//! See `DESIGN.md` §8 for the format and lifecycle reference, §11 for
+//! the daemon (status endpoint, retention, supervision).
 
 pub mod checkpoint;
 pub mod client;
+pub mod http;
+pub mod retention;
 pub mod server;
 pub mod wire;
 
 pub use client::{strip_scheme, RemoteMaster};
+pub use http::StatusServer;
+pub use retention::RetentionPolicy;
 pub use server::{NetServer, ServeOptions};
 
 use crate::config::TrainConfig;

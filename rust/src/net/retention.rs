@@ -1,0 +1,324 @@
+//! Checkpoint retention: bounded disk for a long-running daemon.
+//!
+//! With retention enabled (`--keep-last N` / `--keep-hourly H`) the wire
+//! server writes every snapshot TWICE: the plain base path (what
+//! `--resume` reads — always the newest state) and a step-stamped
+//! archive `<base>.<step:012>`, both via [`checkpoint::write_atomic`]'s
+//! tmp + fsync + rename + parent-fsync discipline.  A GC pass then
+//! deletes expired archives and fsyncs the parent directory once.
+//!
+//! Safety invariants, pinned by the tests below:
+//!
+//! * the plain base path is **never** a GC candidate (its name has no
+//!   numeric suffix, so [`list_archives`] cannot even see it);
+//! * the newest-by-step archive always survives, whatever the policy —
+//!   [`plan_gc`] inserts it into the keep set unconditionally;
+//! * GC is idempotent and crash-safe: every delete is independent, a
+//!   file already gone is not an error, and a crash mid-pass just
+//!   leaves extra archives for the next pass (nothing is ever renamed
+//!   or rewritten during GC).
+//!
+//! `--keep-last N` keeps the N newest archives by step; `--keep-hourly
+//! H` additionally keeps the newest archive inside each of the H newest
+//! distinct wall-clock hours (mtime-bucketed), so an operator retains
+//! both fine recent history and coarse long-range restore points.
+
+use crate::net::checkpoint::sync_parent_dir;
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// What to keep.  `Default` (all zeros) disables retention entirely —
+/// no archives are written and nothing is ever deleted.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RetentionPolicy {
+    /// Keep this many newest archives (by step).
+    pub keep_last: usize,
+    /// Additionally keep the newest archive of each of this many newest
+    /// distinct hours (by file mtime).
+    pub keep_hourly: usize,
+}
+
+impl RetentionPolicy {
+    pub fn enabled(&self) -> bool {
+        self.keep_last > 0 || self.keep_hourly > 0
+    }
+}
+
+/// One step-stamped checkpoint archive on disk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Archive {
+    pub path: PathBuf,
+    pub step: u64,
+    pub modified: SystemTime,
+}
+
+/// The archive path for a snapshot settled at `step`: the numeric
+/// suffix is appended to the full file name (`run.ckpt` →
+/// `run.ckpt.000000000032`), zero-padded so lexical and numeric order
+/// agree.
+pub fn archive_path(base: &Path, step: u64) -> PathBuf {
+    let mut name = base
+        .file_name()
+        .expect("checkpoint path has a file name")
+        .to_os_string();
+    name.push(format!(".{step:012}"));
+    base.with_file_name(name)
+}
+
+/// Enumerate `base`'s archives: siblings named `<base>.<digits>`.  The
+/// plain base, `.tmp` leftovers and unrelated files are skipped.
+/// Sorted by step ascending.
+pub fn list_archives(base: &Path) -> anyhow::Result<Vec<Archive>> {
+    let dir = match base.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let stem = base
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("checkpoint path {} has no file name", base.display()))?
+        .to_string_lossy()
+        .into_owned();
+    let prefix = format!("{stem}.");
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(&dir)
+        .map_err(|e| anyhow::anyhow!("list archives in {}: {e}", dir.display()))?
+    {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let Some(suffix) = name.strip_prefix(&prefix) else { continue };
+        if suffix.is_empty() || !suffix.bytes().all(|b| b.is_ascii_digit()) {
+            continue; // the plain base, `.tmp`, or an unrelated sibling
+        }
+        let Ok(step) = suffix.parse::<u64>() else { continue };
+        let modified = entry.metadata()?.modified()?;
+        out.push(Archive { path: entry.path(), step, modified });
+    }
+    out.sort_by_key(|a| (a.step, a.path.clone()));
+    Ok(out)
+}
+
+/// Decide what to delete.  Pure over the listing, so the policy logic
+/// is testable without a filesystem; returns doomed paths in step
+/// order.  The newest-by-step archive is kept unconditionally.
+pub fn plan_gc(archives: &[Archive], policy: RetentionPolicy) -> Vec<PathBuf> {
+    if !policy.enabled() || archives.is_empty() {
+        return Vec::new();
+    }
+    let mut by_step: Vec<&Archive> = archives.iter().collect();
+    by_step.sort_by_key(|a| a.step);
+    let mut keep: BTreeSet<&Path> = BTreeSet::new();
+    keep.insert(by_step.last().expect("non-empty").path.as_path());
+    for a in by_step.iter().rev().take(policy.keep_last) {
+        keep.insert(a.path.as_path());
+    }
+    if policy.keep_hourly > 0 {
+        // ascending-step iteration ⇒ the last insert per hour bucket is
+        // that hour's newest archive
+        let mut best_of_hour: BTreeMap<u64, &Archive> = BTreeMap::new();
+        for a in &by_step {
+            let hour = a
+                .modified
+                .duration_since(UNIX_EPOCH)
+                .unwrap_or_default()
+                .as_secs()
+                / 3600;
+            best_of_hour.insert(hour, a);
+        }
+        for a in best_of_hour.values().rev().take(policy.keep_hourly) {
+            keep.insert(a.path.as_path());
+        }
+    }
+    by_step
+        .iter()
+        .filter(|a| !keep.contains(a.path.as_path()))
+        .map(|a| a.path.clone())
+        .collect()
+}
+
+/// One GC pass: delete everything [`plan_gc`] condemns, then fsync the
+/// parent directory once so the unlinks are durable.  Idempotent — a
+/// file already gone (crash midway through a previous pass) is skipped,
+/// not an error.  Returns the number of archives removed.
+pub fn collect_garbage(base: &Path, policy: RetentionPolicy) -> anyhow::Result<usize> {
+    let doomed = plan_gc(&list_archives(base)?, policy);
+    let mut removed = 0usize;
+    for path in &doomed {
+        match std::fs::remove_file(path) {
+            Ok(()) => removed += 1,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => anyhow::bail!("retention gc: remove {}: {e}", path.display()),
+        }
+    }
+    if removed > 0 {
+        sync_parent_dir(base)
+            .map_err(|e| anyhow::anyhow!("retention gc: fsync {}: {e}", base.display()))?;
+    }
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dana-retention-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Write a fake archive and stamp its mtime `hours_ago` back.
+    fn fake_archive(base: &Path, step: u64, hours_ago: u64) -> PathBuf {
+        let path = archive_path(base, step);
+        std::fs::write(&path, step.to_le_bytes()).unwrap();
+        let when = SystemTime::now() - Duration::from_secs(hours_ago * 3600 + (step % 60));
+        let f = std::fs::File::options().write(true).open(&path).unwrap();
+        f.set_modified(when).unwrap();
+        path
+    }
+
+    #[test]
+    fn listing_sees_only_numeric_archives() {
+        let dir = scratch("list");
+        let base = dir.join("run.ckpt");
+        std::fs::write(&base, b"plain").unwrap();
+        std::fs::write(dir.join("run.ckpt.tmp"), b"torn").unwrap();
+        std::fs::write(dir.join("other.ckpt.000000000001"), b"x").unwrap();
+        fake_archive(&base, 20, 0);
+        fake_archive(&base, 3, 1);
+        let got = list_archives(&base).unwrap();
+        assert_eq!(got.iter().map(|a| a.step).collect::<Vec<_>>(), vec![3, 20]);
+        assert_eq!(got[1].path, archive_path(&base, 20));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn keep_last_retains_the_newest_n() {
+        let dir = scratch("keeplast");
+        let base = dir.join("run.ckpt");
+        for step in [1u64, 5, 9, 13, 17] {
+            fake_archive(&base, step, 0);
+        }
+        let archives = list_archives(&base).unwrap();
+        let doomed = plan_gc(&archives, RetentionPolicy { keep_last: 2, keep_hourly: 0 });
+        assert_eq!(
+            doomed,
+            vec![
+                archive_path(&base, 1),
+                archive_path(&base, 5),
+                archive_path(&base, 9)
+            ]
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn keep_hourly_retains_the_newest_per_hour() {
+        let dir = scratch("hourly");
+        let base = dir.join("run.ckpt");
+        // two archives in each of three hour buckets
+        fake_archive(&base, 10, 2);
+        fake_archive(&base, 20, 2);
+        fake_archive(&base, 30, 1);
+        fake_archive(&base, 40, 1);
+        fake_archive(&base, 50, 0);
+        fake_archive(&base, 60, 0);
+        let archives = list_archives(&base).unwrap();
+        let doomed = plan_gc(&archives, RetentionPolicy { keep_last: 0, keep_hourly: 2 });
+        // the two newest hours keep their newest archive (40, 60); the
+        // newest-by-step guard also covers 60
+        assert_eq!(
+            doomed,
+            vec![
+                archive_path(&base, 10),
+                archive_path(&base, 20),
+                archive_path(&base, 30),
+                archive_path(&base, 50)
+            ]
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn disabled_policy_deletes_nothing() {
+        let dir = scratch("disabled");
+        let base = dir.join("run.ckpt");
+        for step in 0..5u64 {
+            fake_archive(&base, step, 0);
+        }
+        assert!(plan_gc(&list_archives(&base).unwrap(), RetentionPolicy::default()).is_empty());
+        assert_eq!(collect_garbage(&base, RetentionPolicy::default()).unwrap(), 0);
+        assert_eq!(list_archives(&base).unwrap().len(), 5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Property: over randomized step/mtime layouts and policies, GC
+    /// never deletes the newest-by-step archive, never touches the
+    /// plain base, and keeps at least `min(keep_last, n)` archives.
+    #[test]
+    fn gc_never_deletes_the_newest_durable_snapshot() {
+        let mut rng = crate::util::rng::Rng::new(613);
+        for case in 0..25 {
+            let dir = scratch(&format!("prop{case}"));
+            let base = dir.join("run.ckpt");
+            std::fs::write(&base, b"plain").unwrap();
+            let n = 1 + rng.below(8) as usize;
+            let mut steps = BTreeSet::new();
+            while steps.len() < n {
+                steps.insert(rng.below(500));
+            }
+            for &step in &steps {
+                fake_archive(&base, step, rng.below(4));
+            }
+            let policy = RetentionPolicy {
+                keep_last: rng.below(4) as usize,
+                keep_hourly: rng.below(3) as usize,
+            };
+            let newest = *steps.iter().max().unwrap();
+            collect_garbage(&base, policy).unwrap();
+            let left = list_archives(&base).unwrap();
+            assert!(
+                left.iter().any(|a| a.step == newest),
+                "case {case}: newest archive {newest} was deleted (policy {policy:?})"
+            );
+            if policy.enabled() {
+                assert!(
+                    left.len() >= policy.keep_last.min(n).max(1),
+                    "case {case}: kept {} < keep_last {} (n={n})",
+                    left.len(),
+                    policy.keep_last
+                );
+            } else {
+                assert_eq!(left.len(), n, "case {case}: disabled policy must not GC");
+            }
+            assert!(base.exists(), "case {case}: plain base must never be touched");
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    /// A crash midway through a GC pass (some doomed files already
+    /// unlinked) leaves a state the next pass finishes cleanly.
+    #[test]
+    fn gc_survives_a_crash_mid_pass() {
+        let dir = scratch("crash");
+        let base = dir.join("run.ckpt");
+        for step in [1u64, 2, 3, 4, 5, 6] {
+            fake_archive(&base, step, 0);
+        }
+        let policy = RetentionPolicy { keep_last: 2, keep_hourly: 0 };
+        let doomed = plan_gc(&list_archives(&base).unwrap(), policy);
+        assert_eq!(doomed.len(), 4);
+        // "crash" after deleting half the doomed set
+        for path in &doomed[..2] {
+            std::fs::remove_file(path).unwrap();
+        }
+        // the next pass deletes the rest and is then a no-op
+        assert_eq!(collect_garbage(&base, policy).unwrap(), 2);
+        let left: Vec<u64> = list_archives(&base).unwrap().iter().map(|a| a.step).collect();
+        assert_eq!(left, vec![5, 6]);
+        assert_eq!(collect_garbage(&base, policy).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -55,16 +55,19 @@
 //! only its last periodic snapshot.
 
 use super::checkpoint;
+use super::http::{self, CheckpointInfo, SlotRow, StatusSnapshot};
+use super::retention::{self, RetentionPolicy};
 use super::wire::{self, Msg, Role};
 use crate::optim::LeavePolicy;
-use crate::server::{LockedMaster, Master, ServingMaster};
+use crate::server::{LockedMaster, Master, MasterSnapshot, ServingMaster};
 use crate::util::sync;
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::ops::Range;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Server-side policy knobs (everything else lives in the master).
 #[derive(Debug, Clone, Default)]
@@ -81,6 +84,12 @@ pub struct ServeOptions {
     /// hint to the algorithm, and is reported in `HelloAck` so a
     /// mismatched client can warn.  0 = classic synchronous serving.
     pub pipeline_depth: usize,
+    /// HTTP status listener address (`dana serve --status-addr`, e.g.
+    /// `"127.0.0.1:9633"`); None = no status endpoint.  See [`http`].
+    pub status_addr: Option<String>,
+    /// Checkpoint archive retention (`--keep-last`/`--keep-hourly`);
+    /// disabled by default.  See [`retention`].
+    pub retention: RetentionPolicy,
 }
 
 /// Connection bookkeeping, under one short mutex (never held across a
@@ -111,6 +120,19 @@ struct Shared {
     /// every reply header, so `Status` makes silently discarded work
     /// visible instead of vanishing into `eprintln`-less rejections.
     drops: AtomicU64,
+    /// When this server started serving (uptime / checkpoint-age base).
+    started: Instant,
+    /// Master step count at startup.  `/metrics` derives the current step
+    /// as `base_steps + hub.pushes_total()` — every applied push advances
+    /// the step by exactly one — so the scrape never touches
+    /// [`ServingMaster::status`] (whose seq lock the push path holds).
+    base_steps: u64,
+    /// Last checkpoint written: master step, file bytes, and write time as
+    /// millis since `started` (`u64::MAX` = never).  Plain atomics so the
+    /// scrape path shares no lock with checkpoint writers either.
+    ckpt_step: AtomicU64,
+    ckpt_bytes: AtomicU64,
+    ckpt_at_ms: AtomicU64,
 }
 
 impl Shared {
@@ -179,7 +201,32 @@ impl Shared {
         let mut last = sync::lock(&self.ckpt_gate);
         checkpoint::write_atomic(path, &snap)?;
         *last = (*last).max(snap.master_step);
+        self.after_checkpoint_write(path, &snap);
         Ok(snap.master_step)
+    }
+
+    /// Post-write bookkeeping shared by every checkpoint path (gate
+    /// held): stamp the scrape mirrors, then — with retention enabled —
+    /// write the step-stamped archive copy and run one GC pass.  Archive
+    /// and GC failures are logged, never propagated: the plain
+    /// `checkpoint_path` file is already durable by the time this runs,
+    /// so recovery is unaffected.
+    fn after_checkpoint_write(&self, path: &Path, snap: &MasterSnapshot) {
+        let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+        self.ckpt_step.store(snap.master_step, Ordering::Relaxed);
+        self.ckpt_bytes.store(bytes, Ordering::Relaxed);
+        self.ckpt_at_ms.store(self.started.elapsed().as_millis() as u64, Ordering::Relaxed);
+        if !self.opts.retention.enabled() {
+            return;
+        }
+        let archive = retention::archive_path(path, snap.master_step);
+        if let Err(e) = checkpoint::write_atomic(&archive, snap) {
+            eprintln!("net: checkpoint archive {}: {e:#}", archive.display());
+            return;
+        }
+        if let Err(e) = retention::collect_garbage(path, self.opts.retention) {
+            eprintln!("net: checkpoint retention gc: {e:#}");
+        }
     }
 
     /// Final checkpoint for a graceful shutdown.  The shutdown flag is
@@ -243,9 +290,72 @@ impl Shared {
         // record the max.
         let mut last = sync::lock(&self.ckpt_gate);
         match checkpoint::write_atomic(path, &snap) {
-            Ok(()) => *last = (*last).max(snap.master_step),
+            Ok(()) => {
+                *last = (*last).max(snap.master_step);
+                self.after_checkpoint_write(path, &snap);
+            }
             Err(e) => eprintln!("checkpoint failed at step {}: {e:#}", snap.master_step),
         }
+    }
+}
+
+/// The status listener's view of the server.  `metrics_snapshot` is the
+/// `/metrics` scrape path and reads *only* atomics (the metrics hub, the
+/// striped backend's gate/membership mirrors, the drop counter, the
+/// checkpoint stamps) — it shares no lock with
+/// [`crate::server::ShardedParameterServer::push_concurrent`].
+/// `slot_rows` backs `/status` only and may take the short conns mutex
+/// and per-slot locks, never a shard or seq lock.
+impl http::StatusSource for Shared {
+    fn metrics_snapshot(&self) -> StatusSnapshot {
+        let hub = self.master.metrics_hub();
+        let (live, slots) = self.master.worker_counts();
+        let pushes = hub.pushes_total();
+        StatusSnapshot {
+            uptime_secs: self.started.elapsed().as_secs_f64(),
+            master_step: self.base_steps + pushes,
+            live_workers: live,
+            total_slots: slots,
+            pushes_total: pushes,
+            pushes_dropped: self.drops.load(Ordering::Relaxed),
+            pushes_per_sec: 0.0, // filled in by the listener from deltas
+            gap: hub.gap_histogram(),
+            lag: hub.lag_histogram(),
+            shard_gates: self.master.shard_gates(),
+            checkpoint: self.checkpoint_info(),
+            slots: Vec::new(),
+        }
+    }
+
+    fn slot_rows(&self) -> Vec<SlotRow> {
+        let table = self.master.slot_table();
+        let gens: Vec<u32> = sync::lock(&self.conns).slot_gen.clone();
+        table
+            .iter()
+            .enumerate()
+            .map(|(slot, s)| SlotRow {
+                slot,
+                generation: gens.get(slot).copied().unwrap_or(0),
+                live: s.live,
+                window: s.window,
+                last_push: s.last_push,
+            })
+            .collect()
+    }
+}
+
+impl Shared {
+    fn checkpoint_info(&self) -> Option<CheckpointInfo> {
+        let at_ms = self.ckpt_at_ms.load(Ordering::Relaxed);
+        if at_ms == u64::MAX {
+            return None;
+        }
+        let now_ms = self.started.elapsed().as_millis() as u64;
+        Some(CheckpointInfo {
+            step: self.ckpt_step.load(Ordering::Relaxed),
+            bytes: self.ckpt_bytes.load(Ordering::Relaxed),
+            age_secs: now_ms.saturating_sub(at_ms) as f64 / 1000.0,
+        })
     }
 }
 
@@ -255,6 +365,7 @@ pub struct NetServer {
     addr: SocketAddr,
     shared: Arc<Shared>,
     accept: Option<std::thread::JoinHandle<()>>,
+    status: Option<http::StatusServer>,
 }
 
 impl NetServer {
@@ -287,7 +398,10 @@ impl NetServer {
         // size the pull windows before the master is shared with
         // connection threads (0 = classic serving, bit-for-bit)
         master.set_pipeline_hint(opts.pipeline_depth);
-        let (_, _, _, slots) = master.status();
+        let (base_steps, _, _, slots) = master.status();
+        // restored masters may carry steps the hub never saw; anchor the
+        // scrape-derived step count so base + pushes_total == steps_done
+        let base_steps = base_steps.saturating_sub(master.metrics_hub().pushes_total());
         let shared = Arc::new(Shared {
             master,
             conns: Mutex::new(Conns {
@@ -299,10 +413,25 @@ impl NetServer {
             addr,
             ckpt_gate: Mutex::new(0),
             drops: AtomicU64::new(0),
+            started: Instant::now(),
+            base_steps,
+            ckpt_step: AtomicU64::new(0),
+            ckpt_bytes: AtomicU64::new(0),
+            ckpt_at_ms: AtomicU64::new(u64::MAX),
         });
+        // the status listener binds before the accept thread spawns, so a
+        // bad --status-addr fails the whole start instead of leaking a
+        // half-started server
+        let status = match shared.opts.status_addr.clone() {
+            Some(saddr) => {
+                let source: Arc<dyn http::StatusSource> = Arc::clone(&shared);
+                Some(http::StatusServer::start(&saddr, source)?)
+            }
+            None => None,
+        };
         let accept_shared = Arc::clone(&shared);
         let accept = std::thread::spawn(move || accept_loop(listener, accept_shared));
-        Ok(NetServer { addr, shared, accept: Some(accept) })
+        Ok(NetServer { addr, shared, accept: Some(accept), status })
     }
 
     /// The bound address (resolves `:0` to the actual port).
@@ -315,6 +444,11 @@ impl NetServer {
         format!("tcp://{}", self.addr)
     }
 
+    /// The bound status-listener address, when `--status-addr` was given.
+    pub fn status_addr(&self) -> Option<SocketAddr> {
+        self.status.as_ref().map(|s| s.addr())
+    }
+
     /// Hard stop ("kill"): refuse all further requests and close the
     /// listener.  No final checkpoint is written; in-flight client
     /// requests observe EOF.  Blocks until the accept loop exits.
@@ -322,6 +456,10 @@ impl NetServer {
         {
             let mut c = sync::lock(&self.shared.conns);
             if c.shutdown {
+                if let Some(mut s) = self.status.take() {
+                    drop(c);
+                    s.stop();
+                }
                 return;
             }
             c.shutdown = true;
@@ -331,12 +469,18 @@ impl NetServer {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
+        if let Some(mut s) = self.status.take() {
+            s.stop();
+        }
     }
 
     /// Block until the server shuts down (a `Shutdown` control frame).
     pub fn wait(&mut self) {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
+        }
+        if let Some(mut s) = self.status.take() {
+            s.stop();
         }
     }
 

@@ -1,7 +1,22 @@
 //! Gap / lag / gradient-norm instrumentation (paper Section 3, Fig 2 & 11).
+//!
+//! Two tiers share this module:
+//!
+//! * [`MetricsRecorder`] — the sampled row log the experiment harness
+//!   reads back (`rows`/`take_rows`); unchanged semantics, every
+//!   `every`-th master step keeps a full [`MetricRow`].
+//! * [`MetricsHub`] — lock-free counters and fixed-bucket histograms for
+//!   the daemon's `/metrics` endpoint.  Everything in the hub is plain
+//!   atomics: the scrape path reads it without ever taking a lock the
+//!   push hot path wants (the recorder's row mutex included), so a slow
+//!   or stuck scraper cannot stall a single push.  `note_push` is O(1)
+//!   and fed on *every* apply; the gap histogram is fed from the sampled
+//!   `record` calls only, because the gap itself costs an O(k) norm pass
+//!   the server only pays on sampled steps.
 
 use crate::util::sync;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// One sampled master-apply event.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -19,6 +34,167 @@ pub struct MetricRow {
     pub msg_norm: f64,
 }
 
+/// Gap bucket bounds: log decades spanning collapsed (DANA, ~1e-5) to
+/// diverging (fixed-momentum ASGD at large N) gaps.
+pub const GAP_BOUNDS: &[f64] =
+    &[1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0];
+
+/// Lag bucket bounds: powers of two out to well past any sane
+/// N·(D+1) in-flight multiplicity.
+pub const LAG_BOUNDS: &[f64] =
+    &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0];
+
+/// Fixed-bucket histogram over atomics: `observe` is wait-free modulo
+/// the f64-sum CAS loop, `snapshot` is a plain load per bucket.  Bucket
+/// `i` counts observations `<= bounds[i]`; one extra bucket counts the
+/// overflow (+inf), Prometheus-style.
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    bounds: &'static [f64],
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum of observed values, stored as f64 bits (CAS-accumulated).
+    sum_bits: AtomicU64,
+}
+
+impl AtomicHistogram {
+    pub fn new(bounds: &'static [f64]) -> AtomicHistogram {
+        AtomicHistogram {
+            bounds,
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Consistent-enough copy for a scrape (individual loads are atomic;
+    /// a push landing mid-snapshot skews one bucket by one, which a
+    /// monitoring scrape tolerates by design).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            bounds: self.bounds,
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Point-in-time copy of an [`AtomicHistogram`].
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    pub bounds: &'static [f64],
+    /// Per-bucket (non-cumulative) counts; `buckets[bounds.len()]` is
+    /// the +inf overflow bucket.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// Approximate quantile by linear interpolation inside the bucket
+    /// holding the target rank.  The +inf bucket clamps to the last
+    /// finite bound (an upper-bound estimate is still monotone in q).
+    /// Returns 0.0 when nothing was observed.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            let next = cum + n;
+            if (next as f64) >= target {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    // +inf bucket: clamp to the largest finite bound
+                    return self.bounds[self.bounds.len() - 1];
+                };
+                let frac = ((target - cum as f64) / n as f64).clamp(0.0, 1.0);
+                return lo + (hi - lo) * frac;
+            }
+            cum = next;
+        }
+        self.bounds[self.bounds.len() - 1]
+    }
+}
+
+/// Lock-free metric sources for the `/metrics` scrape path: a push
+/// counter (every apply), a lag histogram (every apply, the lag is
+/// already computed O(1) on the push path) and a gap histogram (sampled
+/// applies only — the gap costs an O(k) norm pass).  Shared by `Arc` so
+/// the HTTP listener holds its own handle and never touches master
+/// state.
+#[derive(Debug)]
+pub struct MetricsHub {
+    pushes: AtomicU64,
+    gap: AtomicHistogram,
+    lag: AtomicHistogram,
+}
+
+impl Default for MetricsHub {
+    fn default() -> MetricsHub {
+        MetricsHub {
+            pushes: AtomicU64::new(0),
+            gap: AtomicHistogram::new(GAP_BOUNDS),
+            lag: AtomicHistogram::new(LAG_BOUNDS),
+        }
+    }
+}
+
+impl MetricsHub {
+    /// Count one applied push and record its lag.  O(1), atomics only.
+    pub fn note_push(&self, lag: u64) {
+        self.pushes.fetch_add(1, Ordering::Relaxed);
+        self.lag.observe(lag as f64);
+    }
+
+    /// Record one sampled gap observation.
+    pub fn note_gap(&self, gap: f64) {
+        self.gap.observe(gap);
+    }
+
+    pub fn pushes_total(&self) -> u64 {
+        self.pushes.load(Ordering::Relaxed)
+    }
+
+    pub fn gap_histogram(&self) -> HistogramSnapshot {
+        self.gap.snapshot()
+    }
+
+    pub fn lag_histogram(&self) -> HistogramSnapshot {
+        self.lag.snapshot()
+    }
+}
+
 /// Sampling recorder: keeps every `every`-th master step (0 = disabled).
 ///
 /// Recording is `&self` (rows behind a mutex) so the striped server's
@@ -27,10 +203,15 @@ pub struct MetricRow {
 /// server is shared.  Under concurrent pushes rows land in completion
 /// order; serial drivers (the equivalence suites) observe step order
 /// exactly as before.
+///
+/// The recorder also owns a [`MetricsHub`] handle: `record` feeds the
+/// hub's gap histogram and `note_push` its push counter + lag histogram,
+/// so both server backends export scrape data through one tap.
 #[derive(Debug, Default)]
 pub struct MetricsRecorder {
     every: u64,
     rows: Mutex<Vec<MetricRow>>,
+    hub: Arc<MetricsHub>,
 }
 
 impl MetricsRecorder {
@@ -42,7 +223,19 @@ impl MetricsRecorder {
         self.every > 0 && step % self.every == 0
     }
 
+    /// Clone the lock-free hub handle for a scrape endpoint.
+    pub fn hub_handle(&self) -> Arc<MetricsHub> {
+        Arc::clone(&self.hub)
+    }
+
+    /// Forwarded to [`MetricsHub::note_push`] — call once per applied
+    /// push, whether or not the step is sampled.
+    pub fn note_push(&self, lag: u64) {
+        self.hub.note_push(lag);
+    }
+
     pub fn record(&self, row: MetricRow) {
+        self.hub.note_gap(row.gap);
         sync::lock(&self.rows).push(row);
     }
 
@@ -123,5 +316,70 @@ mod tests {
         assert_eq!(m.rows().len(), 200);
         assert_eq!(m.take_rows().len(), 200);
         assert!(m.rows().is_empty());
+    }
+
+    #[test]
+    fn histogram_buckets_and_sum_are_exact() {
+        let h = AtomicHistogram::new(LAG_BOUNDS);
+        for lag in [0u64, 0, 1, 2, 3, 5, 2000] {
+            h.observe(lag as f64);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 7);
+        assert_eq!(s.sum, 2011.0);
+        assert_eq!(s.buckets[0], 2, "two zeros in the <=0 bucket");
+        assert_eq!(s.buckets[1], 1, "one in (0,1]");
+        assert_eq!(s.buckets[2], 1, "one in (1,2]");
+        assert_eq!(s.buckets[3], 1, "3 lands in (2,4]");
+        assert_eq!(s.buckets[4], 1, "5 lands in (4,8]");
+        assert_eq!(*s.buckets.last().unwrap(), 1, "2000 overflows to +inf");
+    }
+
+    #[test]
+    fn quantile_interpolates_and_clamps() {
+        let h = AtomicHistogram::new(LAG_BOUNDS);
+        assert_eq!(h.snapshot().quantile(0.5), 0.0, "empty histogram reads 0");
+        for _ in 0..100 {
+            h.observe(1.0);
+        }
+        let s = h.snapshot();
+        let q50 = s.quantile(0.5);
+        assert!((0.0..=1.0).contains(&q50), "median of all-1s in (0,1]: {q50}");
+        assert!(s.quantile(1.0) <= 1.0);
+        // overflow observations clamp to the last finite bound
+        let o = AtomicHistogram::new(LAG_BOUNDS);
+        o.observe(1e9);
+        assert_eq!(o.snapshot().quantile(0.99), *LAG_BOUNDS.last().unwrap());
+    }
+
+    #[test]
+    fn hub_counts_every_push_without_locks() {
+        let hub = MetricsHub::default();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let hub = &hub;
+                s.spawn(move || {
+                    for lag in 0..50u64 {
+                        hub.note_push(lag);
+                    }
+                });
+            }
+        });
+        assert_eq!(hub.pushes_total(), 200);
+        let lags = hub.lag_histogram();
+        assert_eq!(lags.count, 200);
+        assert_eq!(lags.sum, 4.0 * (0..50).sum::<u64>() as f64);
+    }
+
+    #[test]
+    fn recorder_feeds_hub_gap_on_record_and_lag_on_note_push() {
+        let mut m = MetricsRecorder::default();
+        m.set_every(1);
+        m.record(row(0, 0.5, 3));
+        m.note_push(3);
+        let hub = m.hub_handle();
+        assert_eq!(hub.gap_histogram().count, 1);
+        assert_eq!(hub.pushes_total(), 1);
+        assert_eq!(hub.lag_histogram().sum, 3.0);
     }
 }

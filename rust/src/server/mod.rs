@@ -19,11 +19,12 @@ use crate::optim::{
     Step, WorkerState, ANY_SLOT,
 };
 use crate::util::sync;
-use metrics::{MetricRow, MetricsRecorder};
+use metrics::{MetricRow, MetricsHub, MetricsRecorder};
 pub use sharded::{shard_bounds, ShardedParameterServer};
 use std::collections::VecDeque;
 use std::ops::Range;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// A complete, restorable image of a master's training state: θ, the
 /// algorithm's auxiliary state ([`StateDict`]), slot liveness, the per-slot
@@ -166,6 +167,20 @@ pub trait Master: Send {
     fn worker_transform(&self, ws: &mut WorkerState, grad: &mut [f32], s: Step);
     fn metrics(&self) -> &MetricsRecorder;
     fn metrics_mut(&mut self) -> &mut MetricsRecorder;
+    /// Pushes this master knows were lost in transit: deferred-push
+    /// acknowledgements a [`crate::net::RemoteMaster`] abandoned on
+    /// reconnect.  Always 0 for local masters (pushes apply
+    /// synchronously, nothing can be lost between push and ack).
+    fn pushes_lost(&self) -> u64 {
+        0
+    }
+    /// Per-slot scrape row: `(outstanding pull-window depth, master step
+    /// count right after the slot's last applied push — 0 = never
+    /// pushed)`.  Masters that do not track the table report `(0, 0)`.
+    fn slot_stats(&self, worker: usize) -> (usize, u64) {
+        let _ = worker;
+        (0, 0)
+    }
     /// A complete restorable image of the training state (fault
     /// tolerance).  Errors for masters that hold no local state (a
     /// [`crate::net::RemoteMaster`] checkpoints server-side).
@@ -223,6 +238,42 @@ pub trait ServingMaster: Send + Sync {
     /// per-slot pull windows and forwards the staleness hint to the
     /// algorithm.  Runs before the server is shared with connections.
     fn set_pipeline_hint(&mut self, depth: usize);
+    /// Handle to the lock-free metric sources (push counter, gap/lag
+    /// histograms) for a scrape endpoint.  The handle is an `Arc` of
+    /// atomics: reading it never contends with the push hot path.
+    fn metrics_hub(&self) -> Arc<MetricsHub>;
+    /// `(live workers, worker slots)` from atomic membership mirrors —
+    /// scrape-safe: never takes a lock the data path wants.  May lag a
+    /// concurrent join/leave by one scrape, which monitoring tolerates.
+    fn worker_counts(&self) -> (usize, usize);
+    /// Per-shard `(applied ticket position, issued-but-unapplied ticket
+    /// backlog)` for lock-striped backends, read from atomic mirrors of
+    /// the ticket gates.  Empty when the backend has no shard gates (the
+    /// global-lock path applies synchronously under its mutex).
+    fn shard_gates(&self) -> Vec<(u64, u64)> {
+        Vec::new()
+    }
+    /// Per-slot `/status` table rows.  Unlike the `/metrics` accessors
+    /// this may take short per-slot locks (never the whole-master or
+    /// sequencer locks on the striped backend).
+    fn slot_table(&self) -> Vec<SlotStatus> {
+        let (_, _, _, slots) = self.status();
+        (0..slots)
+            .map(|w| SlotStatus { live: self.is_live(w), window: 0, last_push: 0 })
+            .collect()
+    }
+}
+
+/// One `/status` row for a worker slot (the wire generation is tracked by
+/// the transport layer and joined in there).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SlotStatus {
+    pub live: bool,
+    /// Outstanding pull-window occupancy (owed window depth).
+    pub window: usize,
+    /// Master step count right after the slot's last applied push
+    /// (0 = never pushed; a push settling as step t records t+1).
+    pub last_push: u64,
 }
 
 /// Any [`Master`] behind one mutex — the global-lock serving backend.
@@ -237,6 +288,14 @@ pub struct LockedMaster {
     /// pull per completed group — matching the striped backend instead of
     /// the pre-pipeline behavior of one full pull per slice.
     sliced: Mutex<Vec<Option<SliceGroup>>>,
+    /// Lock-free handle to the inner master's metric hub, captured at
+    /// construction so a scrape never has to take the master mutex.
+    hub: Arc<MetricsHub>,
+    /// Atomic membership mirrors for [`ServingMaster::worker_counts`]:
+    /// refreshed under the master mutex on every join/leave/restore, read
+    /// without it on the scrape path.
+    live_mirror: AtomicUsize,
+    slots_mirror: AtomicUsize,
 }
 
 struct SliceGroup {
@@ -252,11 +311,24 @@ impl LockedMaster {
     /// Like [`Self::new`], declaring the inner master's shard count so
     /// slice-framed clients can address it (the lock still serializes).
     pub fn with_shards(inner: Box<dyn Master>, shards: usize) -> Self {
+        let hub = inner.metrics().hub_handle();
+        let live = inner.live_workers();
+        let slots = inner.workers();
         LockedMaster {
             inner: Mutex::new(inner),
             shards: shards.max(1),
             sliced: Mutex::new(Vec::new()),
+            hub,
+            live_mirror: AtomicUsize::new(live),
+            slots_mirror: AtomicUsize::new(slots),
         }
+    }
+
+    /// Refresh the membership mirrors; call with the master lock held
+    /// right after any membership change so the mirrors stay exact.
+    fn refresh_mirrors(&self, m: &dyn Master) {
+        self.live_mirror.store(m.live_workers(), Ordering::Relaxed);
+        self.slots_mirror.store(m.workers(), Ordering::Relaxed);
     }
 
     /// Drop any open slice group for `worker` (full pull, join, leave —
@@ -302,14 +374,22 @@ impl ServingMaster for LockedMaster {
     }
 
     fn join(&self) -> usize {
-        let slot = sync::lock(&self.inner).add_worker();
+        let slot = {
+            let mut m = sync::lock(&self.inner);
+            let slot = m.add_worker();
+            self.refresh_mirrors(m.as_ref());
+            slot
+        };
         self.clear_group(slot);
         slot
     }
 
     fn leave(&self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
         self.clear_group(worker);
-        sync::lock(&self.inner).remove_worker(worker, policy)
+        let mut m = sync::lock(&self.inner);
+        let res = m.remove_worker(worker, policy);
+        self.refresh_mirrors(m.as_ref());
+        res
     }
 
     fn pull(&self, worker: usize) -> anyhow::Result<Vec<f32>> {
@@ -375,7 +455,10 @@ impl ServingMaster for LockedMaster {
     }
 
     fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()> {
-        sync::lock(&self.inner).restore(snap)
+        let mut m = sync::lock(&self.inner);
+        let res = m.restore(snap);
+        self.refresh_mirrors(m.as_ref());
+        res
     }
 
     fn set_metrics_every(&mut self, every: u64) {
@@ -384,6 +467,27 @@ impl ServingMaster for LockedMaster {
 
     fn set_pipeline_hint(&mut self, depth: usize) {
         sync::lock(&self.inner).set_pipeline_depth(depth);
+    }
+
+    fn metrics_hub(&self) -> Arc<MetricsHub> {
+        Arc::clone(&self.hub)
+    }
+
+    fn worker_counts(&self) -> (usize, usize) {
+        (
+            self.live_mirror.load(Ordering::Relaxed),
+            self.slots_mirror.load(Ordering::Relaxed),
+        )
+    }
+
+    fn slot_table(&self) -> Vec<SlotStatus> {
+        let m = sync::lock(&self.inner);
+        (0..m.workers())
+            .map(|w| {
+                let (window, last_push) = m.slot_stats(w);
+                SlotStatus { live: m.is_live(w), window, last_push }
+            })
+            .collect()
     }
 }
 
@@ -454,6 +558,22 @@ impl ServingMaster for ShardedParameterServer {
 
     fn set_pipeline_hint(&mut self, depth: usize) {
         self.set_pipeline(depth);
+    }
+
+    fn metrics_hub(&self) -> Arc<MetricsHub> {
+        self.metrics.hub_handle()
+    }
+
+    fn worker_counts(&self) -> (usize, usize) {
+        self.worker_counts_relaxed()
+    }
+
+    fn shard_gates(&self) -> Vec<(u64, u64)> {
+        self.shard_gate_stats()
+    }
+
+    fn slot_table(&self) -> Vec<SlotStatus> {
+        self.slot_table_concurrent()
     }
 }
 
@@ -537,6 +657,11 @@ pub struct ParameterServer {
     spare: Vec<Option<Vec<f32>>>,
     /// Slot liveness (elastic membership).
     live: Vec<bool>,
+    /// Master step count immediately after each slot's last applied push
+    /// (`/status` table; 0 = never pushed, so a push settling as step t
+    /// records t+1).  Not part of the snapshot — a resumed server
+    /// restarts the table at zero.
+    last_push: Vec<u64>,
     /// Pipeline depth hint (window cap − 1); see [`Master::set_pipeline_depth`].
     pipeline: usize,
     master_step: u64,
@@ -555,6 +680,7 @@ impl ParameterServer {
             pulls: vec![VecDeque::new(); n_workers],
             spare: vec![Some(vec![0.0; k]); n_workers],
             live: vec![true; n_workers],
+            last_push: vec![0; n_workers],
             pipeline: 0,
             master_step: 0,
             last_eta,
@@ -602,8 +728,10 @@ impl ParameterServer {
         if slot == self.pulls.len() {
             self.pulls.push(VecDeque::new());
             self.spare.push(Some(vec![0.0; k]));
+            self.last_push.push(0);
         } else {
             self.pulls[slot].clear();
+            self.last_push[slot] = 0;
             if self.spare[slot].is_none() {
                 self.spare[slot] = Some(vec![0.0; k]);
             }
@@ -728,6 +856,8 @@ impl ParameterServer {
             self.alg.rescale_momentum(s.eta / self.last_eta);
         }
         self.last_eta = s.eta;
+        let lag =
+            self.master_step - self.pulls[worker].front().expect("validated non-empty").at;
 
         if self.metrics.wants(self.master_step) {
             let front = self.pulls[worker].front().expect("validated non-empty");
@@ -735,7 +865,6 @@ impl ParameterServer {
             let k = sent.len() as f64;
             let gap = crate::math::sub_norm(self.alg.theta(), sent) / k.sqrt();
             let msg_norm = crate::math::norm2_sq(msg).sqrt();
-            let lag = self.master_step - front.at;
             self.metrics.record(MetricRow {
                 step: self.master_step,
                 worker,
@@ -749,7 +878,9 @@ impl ParameterServer {
 
         let sent = &self.pulls[worker].front().expect("validated non-empty").params;
         self.alg.master_apply(worker, msg, sent, s);
+        self.metrics.note_push(lag);
         self.master_step += 1;
+        self.last_push[worker] = self.master_step;
         if self.pulls[worker].len() > 1 {
             let rec = self.pulls[worker].pop_front().expect("len > 1");
             self.spare[worker] = Some(rec.params);
@@ -830,6 +961,13 @@ impl Master for ParameterServer {
 
     fn metrics_mut(&mut self) -> &mut MetricsRecorder {
         &mut self.metrics
+    }
+
+    fn slot_stats(&self, worker: usize) -> (usize, u64) {
+        (
+            self.outstanding_pulls(worker),
+            self.last_push.get(worker).copied().unwrap_or(0),
+        )
     }
 
     fn snapshot(&self) -> anyhow::Result<MasterSnapshot> {
@@ -1239,6 +1377,66 @@ mod tests {
         dst.push(1, &[0.4; 4]).unwrap();
         assert_eq!(ps.theta(), dst.theta());
         assert_eq!(ps.snapshot().unwrap(), dst.snapshot().unwrap());
+    }
+
+    #[test]
+    fn push_feeds_hub_and_slot_stats() {
+        let mut ps = server(AlgorithmKind::Asgd, 2, 4);
+        ps.pull(0);
+        ps.pull(1);
+        ps.push(0, &[0.1; 4]).unwrap(); // lag 0, settles as step 0
+        ps.push(1, &[0.1; 4]).unwrap(); // lag 1, settles as step 1
+        let hub = ps.metrics.hub_handle();
+        assert_eq!(hub.pushes_total(), 2, "every push counted, sampling off");
+        assert_eq!(hub.lag_histogram().count, 2);
+        assert_eq!(hub.lag_histogram().sum, 1.0, "lags 0 + 1");
+        assert_eq!(Master::slot_stats(&ps, 0), (1, 1));
+        assert_eq!(Master::slot_stats(&ps, 1), (1, 2));
+        assert_eq!(Master::slot_stats(&ps, 9), (0, 0), "unknown slot reads zero");
+    }
+
+    #[test]
+    fn serving_scrape_accessors_track_membership() {
+        let theta0 = vec![1.0f32; 8];
+        let sched = || {
+            LrSchedule::new(ScheduleConfig {
+                warmup_epochs: 0.0,
+                decay_epochs: vec![],
+                steps_per_epoch: 10,
+                n_workers: 2,
+                ..ScheduleConfig::default()
+            })
+        };
+        for striped in [false, true] {
+            let sm = make_serving_master(
+                AlgorithmKind::DanaZero,
+                &theta0,
+                sched(),
+                2,
+                2,
+                1,
+                striped,
+            );
+            assert_eq!(sm.worker_counts(), (2, 2), "striped={striped}");
+            let w = sm.join();
+            assert_eq!(sm.worker_counts(), (3, 3), "striped={striped}");
+            sm.pull(w).unwrap();
+            sm.push(w, &[0.1; 8]).unwrap();
+            assert_eq!(sm.metrics_hub().pushes_total(), 1, "striped={striped}");
+            let table = sm.slot_table();
+            assert_eq!(table.len(), 3, "striped={striped}");
+            assert!(table[w].live && table[w].window == 1 && table[w].last_push == 1);
+            sm.leave(w, LeavePolicy::Retire).unwrap();
+            assert_eq!(sm.worker_counts(), (2, 3), "striped={striped}");
+            assert!(!sm.slot_table()[w].live, "striped={striped}");
+            if striped {
+                let gates = sm.shard_gates();
+                assert_eq!(gates.len(), 2, "one gate pair per shard");
+                assert!(gates.iter().all(|&(pos, backlog)| pos == 1 && backlog == 0));
+            } else {
+                assert!(sm.shard_gates().is_empty(), "no gates on the locked path");
+            }
+        }
     }
 
     #[test]

@@ -50,7 +50,7 @@
 //! ticket protocol from many threads.
 
 use super::metrics::{MetricRow, MetricsRecorder};
-use super::{Master, MasterSnapshot, MAX_PULL_WINDOW};
+use super::{Master, MasterSnapshot, SlotStatus, MAX_PULL_WINDOW};
 use crate::math;
 use crate::optim::{
     claim_slot, make_algorithm, Algorithm, AlgorithmKind, ApplyStats, LeavePolicy, LrSchedule,
@@ -59,6 +59,7 @@ use crate::optim::{
 use crate::util::{parallel, sync};
 use std::collections::VecDeque;
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex, RwLock};
 
 /// Split `0..k` into `n_shards` contiguous near-equal ranges (lengths
@@ -88,6 +89,10 @@ struct ShardCell {
     /// The next master step this shard will admit for apply.
     gate: Mutex<u64>,
     gate_cv: Condvar,
+    /// Lock-free mirror of `gate` for the metrics scrape path, bumped
+    /// together with the mutexed value (monotone via `fetch_max`, so
+    /// racing bump/repair drops can land in either order).
+    gate_pos: AtomicU64,
 }
 
 impl ShardCell {
@@ -112,6 +117,7 @@ struct TicketBump<'a> {
 impl Drop for TicketBump<'_> {
     fn drop(&mut self) {
         *sync::lock(&self.cell.gate) = self.next;
+        self.cell.gate_pos.fetch_max(self.next, Ordering::Relaxed);
         self.cell.gate_cv.notify_all();
     }
 }
@@ -134,6 +140,7 @@ impl Drop for GateRepair<'_> {
             let mut g = sync::lock(&sh.gate);
             if *g < self.next {
                 *g = self.next;
+                sh.gate_pos.fetch_max(self.next, Ordering::Relaxed);
                 sh.gate_cv.notify_all();
             }
         }
@@ -174,6 +181,13 @@ struct SlotPulls {
     spare: Option<Vec<f32>>,
     /// Partially assembled shard-sliced pull group (wire `PullShard`).
     building: Option<Vec<f32>>,
+    /// Mirror of `Seq::live` for this slot, kept in lockstep under this
+    /// slot's mutex so the status scrape can read liveness without the
+    /// sequencer lock.
+    live: bool,
+    /// Master step count right after this slot's last applied push
+    /// (0 = never pushed since the slot was (re)claimed).
+    last_push: u64,
 }
 
 impl SlotPulls {
@@ -182,6 +196,8 @@ impl SlotPulls {
             queue: VecDeque::new(),
             spare: Some(vec![0.0; k]),
             building: None,
+            live: true,
+            last_push: 0,
         }
     }
 }
@@ -212,6 +228,12 @@ pub struct ShardedParameterServer {
     /// slot-vector growth at joins.  Lock order: slot mutex before `seq`
     /// (both pull and push follow it; nothing acquires them reversed).
     pulls: RwLock<Vec<Mutex<SlotPulls>>>,
+    /// Lock-free mirrors for the status scrape path (`GET /metrics` must
+    /// take no lock `push_concurrent` wants): tickets issued so far, and
+    /// live/total slot counts.
+    issued: AtomicU64,
+    live_ct: AtomicUsize,
+    slots_ct: AtomicUsize,
     pub metrics: MetricsRecorder,
 }
 
@@ -238,6 +260,7 @@ impl ShardedParameterServer {
                 alg: RwLock::new(alg),
                 gate: Mutex::new(0),
                 gate_cv: Condvar::new(),
+                gate_pos: AtomicU64::new(0),
             })
             .collect();
         let last_eta = schedule.eta_at(0);
@@ -262,6 +285,9 @@ impl ShardedParameterServer {
                     .map(|_| Mutex::new(SlotPulls::fresh(theta0.len())))
                     .collect(),
             ),
+            issued: AtomicU64::new(0),
+            live_ct: AtomicUsize::new(n_workers),
+            slots_ct: AtomicUsize::new(n_workers),
             metrics: MetricsRecorder::default(),
         }
     }
@@ -342,6 +368,59 @@ impl ShardedParameterServer {
             q.live.iter().filter(|&&l| l).count(),
             q.live.len(),
         )
+    }
+
+    /// Live/total worker counts from the atomic mirrors — scrape path,
+    /// takes no locks at all.
+    pub fn worker_counts_relaxed(&self) -> (usize, usize) {
+        (
+            self.live_ct.load(Ordering::Relaxed),
+            self.slots_ct.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Per-shard `(gate position, ticket backlog)` from the atomic
+    /// mirrors — scrape path, takes no locks at all.  The backlog is the
+    /// number of issued tickets the shard has not admitted yet; racing
+    /// pushes can make it transiently off by the race width, which is
+    /// exactly the queueing signal a monitor wants.
+    pub fn shard_gate_stats(&self) -> Vec<(u64, u64)> {
+        let issued = self.issued.load(Ordering::Relaxed);
+        self.shards
+            .iter()
+            .map(|sh| {
+                let pos = sh.gate_pos.load(Ordering::Relaxed);
+                (pos, issued.saturating_sub(pos))
+            })
+            .collect()
+    }
+
+    /// Per-slot status table for `GET /status`: liveness, window depth
+    /// and last-push step read under each slot's own mutex (effectively
+    /// uncontended — a worker's requests are serial on its connection),
+    /// never the sequencer lock.
+    pub fn slot_table_concurrent(&self) -> Vec<SlotStatus> {
+        let slots = sync::read(&self.pulls);
+        slots
+            .iter()
+            .map(|m| {
+                let sp = sync::lock(m);
+                SlotStatus {
+                    live: sp.live,
+                    window: sp.queue.len(),
+                    last_push: sp.last_push,
+                }
+            })
+            .collect()
+    }
+
+    /// Store the membership mirrors from the authoritative `Seq::live`
+    /// (callers hold the seq lock, so the stores publish a consistent
+    /// count).
+    fn refresh_membership_mirrors(&self, q: &Seq) {
+        self.live_ct
+            .store(q.live.iter().filter(|&&l| l).count(), Ordering::Relaxed);
+        self.slots_ct.store(q.live.len(), Ordering::Relaxed);
     }
 
     /// Assemble the master parameters from all shards.  Concurrent-safe;
@@ -531,6 +610,10 @@ impl ShardedParameterServer {
             q.master_step = t + 1;
             (t, s, rescale, self.metrics.wants(t), lag)
         };
+        // Scrape-path taps: `fetch_max` keeps `issued` monotone when
+        // concurrent pushes publish their tickets out of order.
+        self.issued.fetch_max(ticket + 1, Ordering::Relaxed);
+        self.metrics.note_push(lag);
         let _repair = GateRepair { shards: &self.shards, next: ticket + 1 };
         let sent: &[f32] = &sp.queue.front().expect("validated non-empty").1;
         // (gap_sq, msg_sq) partials per shard, reduced in shard order.
@@ -613,6 +696,7 @@ impl ShardedParameterServer {
         }
         // consume the front entry unless it is the only one (the classic
         // re-push-against-latest-pull semantics at depth 0)
+        sp.last_push = ticket + 1;
         if sp.queue.len() > 1 {
             let (_, buf) = sp.queue.pop_front().expect("len > 1");
             sp.spare = Some(buf);
@@ -649,6 +733,7 @@ impl ShardedParameterServer {
             *sync::lock(&pulls[slot]) = SlotPulls::fresh(self.k);
             q.shard_pulled[slot].fill(false);
         }
+        self.refresh_membership_mirrors(q);
         slot
     }
 
@@ -680,10 +765,15 @@ impl ShardedParameterServer {
         q.live[worker] = false;
         q.shard_pulled[worker].fill(false);
         // the leaver's pull window dies with it: a rejoiner must pull
-        *sync::lock(&pulls[worker]) = SlotPulls::fresh(self.k);
+        {
+            let mut sp = sync::lock(&pulls[worker]);
+            *sp = SlotPulls::fresh(self.k);
+            sp.live = false;
+        }
         for sh in &self.shards {
             sync::write(&sh.alg).remove_worker(worker, policy);
         }
+        self.refresh_membership_mirrors(q);
         Ok(())
     }
 
@@ -808,9 +898,11 @@ impl ShardedParameterServer {
                 .collect();
             alg.load_state_dict(&local)?;
             *sync::lock(&sh.gate) = snap.master_step;
+            sh.gate_pos.store(snap.master_step, Ordering::Relaxed);
         }
         q.master_step = snap.master_step;
         q.last_eta = snap.last_eta;
+        self.issued.store(snap.master_step, Ordering::Relaxed);
         Ok(())
     }
 
@@ -879,6 +971,17 @@ impl Master for ShardedParameterServer {
 
     fn steps_done(&self) -> u64 {
         self.master_step()
+    }
+
+    fn slot_stats(&self, worker: usize) -> (usize, u64) {
+        let slots = sync::read(&self.pulls);
+        slots
+            .get(worker)
+            .map(|m| {
+                let sp = sync::lock(m);
+                (sp.queue.len(), sp.last_push)
+            })
+            .unwrap_or((0, 0))
     }
 
     fn param_len(&self) -> usize {
@@ -1194,6 +1297,62 @@ mod tests {
         assert_eq!(ps.outstanding_pulls(0), 1, "push consumed the oldest group");
         ps.push_concurrent(0, &vec![0.1; k]).unwrap();
         assert_eq!(ps.outstanding_pulls(0), 1, "the last entry is retained");
+    }
+
+    #[test]
+    fn scrape_mirrors_track_gates_membership_and_slots() {
+        let k = 8;
+        let mut ps = ShardedParameterServer::new(
+            AlgorithmKind::DanaZero,
+            &vec![0.0f32; k],
+            schedule(2),
+            2,
+            2,
+        );
+        assert_eq!(ps.worker_counts_relaxed(), (2, 2));
+        assert_eq!(ps.shard_gate_stats(), vec![(0, 0), (0, 0)]);
+        ps.pull(0);
+        ps.push(0, &vec![1.0f32; k]).unwrap();
+        assert_eq!(ps.shard_gate_stats(), vec![(1, 0), (1, 0)]);
+        assert_eq!(ps.metrics.hub_handle().pushes_total(), 1);
+        let table = ps.slot_table_concurrent();
+        assert!(table[0].live && table[0].window == 1 && table[0].last_push == 1);
+        assert!(table[1].live && table[1].window == 0 && table[1].last_push == 0);
+        assert_eq!(Master::slot_stats(&ps, 0), (1, 1));
+        assert_eq!(Master::slot_stats(&ps, 9), (0, 0), "unknown slot is zeros");
+        ps.remove_worker(1, LeavePolicy::Retire).unwrap();
+        assert_eq!(ps.worker_counts_relaxed(), (1, 2));
+        assert!(!ps.slot_table_concurrent()[1].live);
+        ps.add_worker();
+        assert_eq!(ps.worker_counts_relaxed(), (2, 2));
+        let rejoined = ps.slot_table_concurrent()[1];
+        assert!(rejoined.live && rejoined.last_push == 0, "rejoin resets last push");
+    }
+
+    #[test]
+    fn restore_fast_forwards_scrape_mirrors() {
+        let k = 6;
+        let mut a = ShardedParameterServer::new(
+            AlgorithmKind::Asgd,
+            &vec![1.0f32; k],
+            schedule(1),
+            1,
+            3,
+        );
+        a.pull(0);
+        a.push(0, &vec![0.1f32; k]).unwrap();
+        a.push(0, &vec![0.1f32; k]).unwrap();
+        let snap = a.snapshot_concurrent().unwrap();
+        let b = ShardedParameterServer::new(
+            AlgorithmKind::Asgd,
+            &vec![1.0f32; k],
+            schedule(1),
+            1,
+            3,
+        );
+        b.restore_concurrent(&snap).unwrap();
+        assert_eq!(b.shard_gate_stats(), vec![(2, 0); 3]);
+        assert_eq!(b.worker_counts_relaxed(), (1, 1));
     }
 
     #[test]

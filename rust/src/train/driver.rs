@@ -84,16 +84,28 @@ pub(crate) fn finish_eval(report: &mut TrainReport, loss: f64, err: f64) {
     }
 }
 
+/// Hard cap on [`TrainReport::lag_curve`] points.  The per-push lag rows
+/// are the one report series that scales with *total steps × workers*
+/// rather than eval cadence; a long daemon-fed run used to grow it
+/// without bound (and serialize megabytes of JSON nobody plots).  Below
+/// the cap the curve is exact; above it, every stride-th row is kept —
+/// uniform in step order, so quantiles and plots are unbiased.
+pub(crate) const LAG_CURVE_CAP: usize = 50_000;
+
 /// Fold the server's metric taps into the report (simulated backends,
 /// where the full rows are available locally).
 fn fold_metrics(report: &mut TrainReport, server: &dyn Master) {
     report.mean_gap = server.metrics().mean_gap();
     report.mean_lag = server.metrics().mean_lag();
-    for r in server.metrics().rows() {
+    let rows = server.metrics().rows();
+    let stride = rows.len().div_ceil(LAG_CURVE_CAP).max(1);
+    for (i, r) in rows.iter().enumerate() {
         report.gap_curve.push((r.step, r.gap));
         report.norm_gap_curve.push((r.step, r.norm_gap));
         report.grad_norm_curve.push((r.step, r.msg_norm));
-        report.lag_curve.push((r.step, r.worker, r.lag));
+        if i % stride == 0 {
+            report.lag_curve.push((r.step, r.worker, r.lag));
+        }
     }
 }
 
@@ -369,6 +381,9 @@ where
     let (loss, err) = eval(&server.theta_vec())?;
     finish_eval(&mut report, loss, err);
     fold_metrics(&mut report, server.as_ref());
+    // pushes the master layer itself lost (e.g. deferred acks a remote
+    // reconnect abandoned) — invisible to the loop above, so fold them in
+    report.pushes_dropped += server.pushes_lost();
     report.sim_time = schedule.now();
     report.steps = total;
     report.wall_secs = t0.elapsed().as_secs_f64();
@@ -504,6 +519,9 @@ where
         // messages the master should honor.
         let mut senders: Vec<Option<mpsc::Sender<ToWorker>>> = Vec::with_capacity(n);
         let mut thread_gen: Vec<u32> = vec![0; n];
+        // Crash-loop supervision budget, per slot: how many times this
+        // slot's thread has been restarted after dying.
+        let mut restarts: Vec<u32> = vec![0; n];
         for w in 0..n {
             senders.push(Some(spawn_worker(w, 0)));
         }
@@ -529,6 +547,7 @@ where
                         if slot == senders.len() {
                             senders.push(None);
                             thread_gen.push(0);
+                            restarts.push(0);
                         }
                         thread_gen[slot] = thread_gen[slot].wrapping_add(1);
                         let tx = spawn_worker(slot, thread_gen[slot]);
@@ -590,14 +609,44 @@ where
                     if gen != thread_gen[worker] || senders[worker].is_none() {
                         continue; // stale incarnation: already stopped/left
                     }
-                    // A dying worker is an implicit leave: retire its slot
-                    // so its momentum doesn't linger frozen in v⁰.
                     senders[worker] = None;
-                    if server.is_live(worker) {
-                        server.remove_worker(worker, cfg.leave_policy)?;
+                    if restarts[worker] < cfg.max_restarts && server.is_live(worker) {
+                        // Crash-loop supervision: restart the thread in
+                        // place under a bounded exponential backoff.  The
+                        // slot stays live, so the new incarnation inherits
+                        // its momentum vᶦ — a restart is a hiccup, not a
+                        // leave/join (no v⁰ fold, no α/τ retune).  It
+                        // primes a fresh D+1 pull window exactly like a
+                        // churn join; the dead incarnation's undelivered
+                        // parameter messages died with its channel.
+                        restarts[worker] += 1;
+                        report.worker_restarts += 1;
+                        let attempt = restarts[worker];
+                        let backoff_ms = cfg
+                            .restart_backoff_ms
+                            .saturating_mul(1u64 << (attempt - 1).min(6))
+                            .min(5_000);
+                        eprintln!(
+                            "worker {worker}: {reason}; restart {attempt}/{} after {backoff_ms} ms",
+                            cfg.max_restarts
+                        );
+                        std::thread::sleep(std::time::Duration::from_millis(backoff_ms));
+                        thread_gen[worker] = thread_gen[worker].wrapping_add(1);
+                        let tx = spawn_worker(worker, thread_gen[worker]);
+                        for _ in 0..=depth {
+                            tx.send(ToWorker::Params(server.pull_params(worker))).ok();
+                        }
+                        senders[worker] = Some(tx);
+                    } else {
+                        // Restart budget exhausted (or the slot is already
+                        // retired): a dying worker is an implicit leave, so
+                        // its momentum doesn't linger frozen in v⁰.
+                        if server.is_live(worker) {
+                            server.remove_worker(worker, cfg.leave_policy)?;
+                        }
+                        report.workers_lost += 1;
+                        eprintln!("worker {worker}: {reason}");
                     }
-                    report.workers_lost += 1;
-                    eprintln!("worker {worker}: {reason}");
                 }
                 FromWorker::Update { worker, gen, mut msg, loss } => {
                     if gen != thread_gen[worker] {
@@ -659,6 +708,9 @@ where
     finish_eval(&mut report, loss, err);
     report.mean_gap = server.metrics().mean_gap();
     report.mean_lag = server.metrics().mean_lag();
+    // pushes the master layer itself lost (e.g. deferred acks a remote
+    // reconnect abandoned), on top of the driver-level drops counted above
+    report.pushes_dropped += server.pushes_lost();
     report.steps = total;
     report.wall_secs = t0.elapsed().as_secs_f64();
     report.sim_time = report.wall_secs; // real time is the clock here

@@ -58,13 +58,18 @@ pub struct TrainReport {
     /// Workers that left mid-run (cluster churn events).
     pub workers_left: usize,
     /// Worker threads lost to init/step failures (real-thread driver);
-    /// always 0 in the simulated drivers.
+    /// always 0 in the simulated drivers.  A worker only counts as lost
+    /// once its crash-loop restart budget (`--max-restarts`) is spent.
     pub workers_lost: usize,
+    /// Worker-thread restarts performed by the crash-loop supervisor
+    /// (real-thread driver, `--max-restarts > 0`).
+    pub worker_restarts: usize,
     /// Pushes the driver dropped instead of applying: late messages from
-    /// stopped worker incarnations and in-flight pushes that raced a
-    /// leave (real-thread backend; the simulated clock discards a
-    /// leaver's batch before it is ever computed).  A remote server's own
-    /// drop count travels in the wire `Status` header instead.
+    /// stopped worker incarnations, in-flight pushes that raced a leave
+    /// (real-thread backend; the simulated clock discards a leaver's
+    /// batch before it is ever computed), and deferred-push acks a
+    /// remote-master reconnect abandoned.  A remote server's own drop
+    /// count travels in the wire `Status` header instead.
     pub pushes_dropped: u64,
 }
 
@@ -88,6 +93,9 @@ impl TrainReport {
                 " churn(+{}/-{}/!{})",
                 self.workers_joined, self.workers_left, self.workers_lost
             ));
+        }
+        if self.worker_restarts > 0 {
+            s.push_str(&format!(" restarts={}", self.worker_restarts));
         }
         if self.pushes_dropped > 0 {
             s.push_str(&format!(" dropped={}", self.pushes_dropped));

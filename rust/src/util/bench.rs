@@ -121,21 +121,52 @@ impl BenchSuite {
     /// `path` (e.g. `BENCH_serve.json` at the repo root) so the perf
     /// trajectory is tracked in-tree run over run.  A filtered run
     /// (`cargo bench -- <filter>`) writes only the rows it ran.
-    pub fn finish_json(self, path: &str) -> Vec<CaseResult> {
-        if self.results.is_empty() && self.filter.is_some() {
-            // a filtered run that matched none of this suite's rows must
-            // not clobber the tracked file with an empty result set
-            println!("{}: filter matched no case, keeping {path}", self.group);
-            return self.finish();
+    ///
+    /// A filter that matched **no** case of this suite is an error
+    /// ([`NoCaseMatched`]): the tracked file is left untouched and the
+    /// caller decides whether that's fatal (a typo'd filter silently
+    /// "passing" in CI is how perf tracking rots) or fine (a multi-suite
+    /// binary where another suite ran the filtered case).  A failed
+    /// write is always an error — a bench run whose numbers vanished
+    /// must not look green.
+    pub fn finish_json(self, path: &str) -> anyhow::Result<Vec<CaseResult>> {
+        if self.results.is_empty() {
+            if let Some(filter) = self.filter.clone() {
+                return Err(anyhow::Error::new(NoCaseMatched {
+                    group: self.group.clone(),
+                    filter,
+                }));
+            }
         }
         let json = results_json(&self.group, &self.results);
-        match std::fs::write(path, &json) {
-            Ok(()) => println!("{}: wrote {path}", self.group),
-            Err(e) => eprintln!("{}: could not write {path}: {e}", self.group),
-        }
-        self.finish()
+        std::fs::write(path, &json)
+            .map_err(|e| anyhow::anyhow!("{}: could not write {path}: {e}", self.group))?;
+        println!("{}: wrote {path}", self.group);
+        Ok(self.finish())
     }
 }
+
+/// A `cargo bench -- <filter>` run whose filter matched none of a
+/// suite's cases.  Typed so a multi-suite bench binary can distinguish
+/// "this suite was filtered out" (fine when some other suite ran) from a
+/// filter that matched nothing anywhere (a typo — fail the run).
+#[derive(Debug, Clone)]
+pub struct NoCaseMatched {
+    pub group: String,
+    pub filter: String,
+}
+
+impl std::fmt::Display for NoCaseMatched {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bench suite {:?}: filter {:?} matched no case",
+            self.group, self.filter
+        )
+    }
+}
+
+impl std::error::Error for NoCaseMatched {}
 
 /// Serialize results as a stable, diff-friendly JSON document (no serde
 /// in the offline registry — see `util/json.rs` for the reader side).
@@ -249,6 +280,47 @@ mod tests {
         let rows = j.get("results").and_then(|r| r.as_arr()).expect("results array");
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].get("bytes_per_iter").and_then(|b| b.as_usize()), Some(400));
+    }
+
+    #[test]
+    fn filtered_empty_finish_json_errors_and_keeps_file() {
+        let dir = std::env::temp_dir().join(format!("dana-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_x.json");
+        std::fs::write(&path, "{\"group\":\"old\"}").unwrap();
+        let b = BenchSuite {
+            group: "empty".into(),
+            target_sample: Duration::from_millis(1),
+            samples: 1,
+            results: Vec::new(),
+            filter: Some("no-such-case".into()),
+        };
+        let err = b.finish_json(path.to_str().unwrap()).unwrap_err();
+        assert!(err.downcast_ref::<NoCaseMatched>().is_some(), "typed error: {err:#}");
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            "{\"group\":\"old\"}",
+            "tracked file must be left untouched"
+        );
+        // an UNfiltered empty suite legitimately writes an empty result set
+        let b = BenchSuite {
+            group: "empty".into(),
+            target_sample: Duration::from_millis(1),
+            samples: 1,
+            results: Vec::new(),
+            filter: None,
+        };
+        assert!(b.finish_json(path.to_str().unwrap()).is_ok());
+        // and an unwritable path is an error, not a shrug
+        let b = BenchSuite {
+            group: "empty".into(),
+            target_sample: Duration::from_millis(1),
+            samples: 1,
+            results: Vec::new(),
+            filter: None,
+        };
+        assert!(b.finish_json("/no-such-dir-dana/out.json").is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

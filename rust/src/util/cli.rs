@@ -211,6 +211,35 @@ mod tests {
     }
 
     #[test]
+    fn daemon_flags_round_trip() {
+        // the `dana serve --status-addr ... --keep-last N --keep-hourly H` spelling
+        let mut a = parse(
+            "serve --listen 0.0.0.0:7700 --checkpoint ckpt.bin --status-addr 127.0.0.1:9100 \
+             --keep-last 4 --keep-hourly 24",
+            true,
+        );
+        assert_eq!(a.opt_str("status-addr").as_deref(), Some("127.0.0.1:9100"));
+        assert_eq!(a.parse_or::<usize>("keep-last", 0).unwrap(), 4);
+        assert_eq!(a.parse_or::<usize>("keep-hourly", 0).unwrap(), 24);
+        let _ = a.opt_str("listen");
+        let _ = a.opt_str("checkpoint");
+        a.finish().unwrap();
+        // defaults when absent: no endpoint, retention disabled
+        let mut b = parse("serve --listen 0.0.0.0:7700", true);
+        assert_eq!(b.opt_str("status-addr"), None);
+        assert_eq!(b.parse_or::<usize>("keep-last", 0).unwrap(), 0);
+        assert_eq!(b.parse_or::<usize>("keep-hourly", 0).unwrap(), 0);
+        // the `dana train --max-restarts R --restart-backoff-ms MS` spelling
+        let mut c = parse("train --max-restarts 3 --restart-backoff-ms=10", true);
+        assert_eq!(c.opt_parse::<u32>("max-restarts").unwrap(), Some(3));
+        assert_eq!(c.opt_parse::<u64>("restart-backoff-ms").unwrap(), Some(10));
+        c.finish().unwrap();
+        // malformed counts surface the parse error
+        let mut d = parse("train --max-restarts many", true);
+        assert!(d.opt_parse::<u32>("max-restarts").is_err());
+    }
+
+    #[test]
     fn unknown_option_rejected() {
         let mut a = parse("run --oops 1", true);
         let _ = a.flag("quick");
