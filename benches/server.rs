@@ -377,34 +377,51 @@ fn main() {
             std::hint::black_box(ps.pull(0));
         });
     }
-    for &depth in &[0usize, 1, 2] {
-        let master: Box<dyn Master> = Box::new(ParameterServer::new(
-            make_algorithm(AlgorithmKind::DanaZero, &theta0, 0),
-            schedule(),
-            0,
-        ));
-        let opts = dana::net::ServeOptions { pipeline_depth: depth, ..Default::default() };
-        let mut srv =
-            dana::net::NetServer::start(master, "127.0.0.1:0", opts).expect("bind loopback");
-        let mut rm = dana::net::RemoteMaster::connect(&srv.url(), 1).expect("connect loopback");
-        rm.set_pipeline_depth(depth);
-        let mut buf = vec![0.0f32; kt];
-        for _ in 0..=depth {
-            rm.pull_into(0, &mut buf); // prime the pipeline window
-        }
-        let label = if depth == 0 { "sync" } else { "pipelined" };
-        bt.bench_with_bytes(
-            &format!("cycle/loopback/{label}/D={depth}"),
-            Some((kt * 4 * 2) as u64),
-            || {
+    // encoding axis (wire v4): exact f32 frames vs f16-quantized payloads
+    // — the f16 rows show the framing overhead at half the payload bytes.
+    for &enc in &[dana::net::Encoding::None, dana::net::Encoding::F16] {
+        for &depth in &[0usize, 1, 2] {
+            let master: Box<dyn Master> = Box::new(ParameterServer::new(
+                make_algorithm(AlgorithmKind::DanaZero, &theta0, 0),
+                schedule(),
+                0,
+            ));
+            let opts = dana::net::ServeOptions { pipeline_depth: depth, ..Default::default() };
+            let mut srv =
+                dana::net::NetServer::start(master, "127.0.0.1:0", opts).expect("bind loopback");
+            let mut rm = dana::net::RemoteMaster::connect_with(&srv.url(), 1, None, enc)
+                .expect("connect loopback");
+            rm.set_pipeline_depth(depth);
+            let mut buf = vec![0.0f32; kt];
+            for _ in 0..=depth {
+                rm.pull_into(0, &mut buf); // prime the pipeline window
+            }
+            // bytes/step from the client's own wire counters over a short
+            // calibration run — the JSON row carries measured two-way
+            // traffic per cycle, not a nominal payload estimate
+            let calib = 16u64;
+            let (tx0, rx0) = rm.wire_bytes();
+            for _ in 0..calib {
                 rm.push_update(0, &grad).unwrap();
                 rm.pull_into(0, &mut buf);
-                std::hint::black_box(&buf);
-            },
-        );
-        rm.drain_inflight().unwrap();
-        drop(rm);
-        srv.stop();
+            }
+            rm.drain_inflight().unwrap();
+            let (tx1, rx1) = rm.wire_bytes();
+            let bytes = Some(((tx1 - tx0) + (rx1 - rx0)) / calib);
+            let label = if depth == 0 { "sync" } else { "pipelined" };
+            bt.bench_with_bytes(
+                &format!("cycle/loopback/{label}/{enc}/D={depth}"),
+                bytes,
+                || {
+                    rm.push_update(0, &grad).unwrap();
+                    rm.pull_into(0, &mut buf);
+                    std::hint::black_box(&buf);
+                },
+            );
+            rm.drain_inflight().unwrap();
+            drop(rm);
+            srv.stop();
+        }
     }
     let train_written = bt.finish_json("BENCH_train.json");
 

@@ -138,6 +138,14 @@ pub struct TrainConfig {
     /// Base supervision backoff in milliseconds (`--restart-backoff-ms`):
     /// restart attempt `a` waits `base << (a-1)`, capped at 5 s.
     pub restart_backoff_ms: u64,
+    /// Requested gradient payload encoding (`--encoding`; wire v4):
+    /// `none` (exact f32, the default), `f16`/`bf16` quantization, or
+    /// `topk:K` sparsification with worker-side error feedback.  Over
+    /// the wire the request is granted only if the server advertises it
+    /// (falling back to `none`); in-process drivers apply the same
+    /// transform push-side so compression runs can be simulated without
+    /// a server.
+    pub encoding: crate::net::Encoding,
 }
 
 impl TrainConfig {
@@ -206,6 +214,7 @@ impl TrainConfig {
             rtt: 0.0,
             max_restarts: 0,
             restart_backoff_ms: 50,
+            encoding: crate::net::Encoding::None,
         }
     }
 
@@ -335,6 +344,12 @@ impl TrainConfig {
             self.restart_backoff_ms =
                 v.as_usize().ok_or_else(|| anyhow::anyhow!("bad restart_backoff_ms"))? as u64;
         }
+        if let Some(v) = j.get("encoding") {
+            self.encoding = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("encoding must be a string"))?
+                .parse()?;
+        }
         Ok(())
     }
 
@@ -437,6 +452,23 @@ mod tests {
         assert!(c.apply_json(&j).is_err(), "empty address rejected");
         let j = Json::parse(r#"{"master_addr":42}"#).unwrap();
         assert!(c.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn encoding_applies_from_json() {
+        use crate::net::Encoding;
+        let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
+        assert_eq!(c.encoding, Encoding::None, "preset must default to exact f32 frames");
+        let j = Json::parse(r#"{"encoding":"f16"}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.encoding, Encoding::F16);
+        let j = Json::parse(r#"{"encoding":"topk:64"}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.encoding, Encoding::TopK { k: 64 });
+        let j = Json::parse(r#"{"encoding":"mp3"}"#).unwrap();
+        assert!(c.apply_json(&j).is_err(), "unknown encoding rejected");
+        let j = Json::parse(r#"{"encoding":7}"#).unwrap();
+        assert!(c.apply_json(&j).is_err(), "non-string encoding rejected");
     }
 
     #[test]

@@ -19,6 +19,10 @@ pub struct ExpOptions {
     pub seeds: u64,
     pub out_dir: PathBuf,
     pub artifacts_dir: PathBuf,
+    /// Gradient payload encoding applied push-side in the sweeps that
+    /// support it (`--encoding`; wire v4 — see `net::codec`).  `None` =
+    /// the exact-f32 behavior every figure defaults to.
+    pub encoding: crate::net::Encoding,
 }
 
 impl Default for ExpOptions {
@@ -28,6 +32,7 @@ impl Default for ExpOptions {
             seeds: 2,
             out_dir: PathBuf::from("results"),
             artifacts_dir: crate::config::default_artifacts_dir(),
+            encoding: crate::net::Encoding::None,
         }
     }
 }

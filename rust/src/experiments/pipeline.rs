@@ -37,12 +37,14 @@ fn sweep_cfg(
     depth: usize,
     epochs: f64,
     seed: u64,
+    encoding: crate::net::Encoding,
 ) -> TrainConfig {
     let mut cfg = TrainConfig::preset(Workload::C10, alg, workers, epochs);
     cfg.seed = seed;
     cfg.metrics_every = 5;
     cfg.pipeline_depth = depth;
     cfg.rtt = RTT;
+    cfg.encoding = encoding;
     cfg
 }
 
@@ -69,6 +71,7 @@ pub fn pipeline(opts: &ExpOptions) -> anyhow::Result<()> {
             "n_workers",
             "depth",
             "rtt",
+            "encoding",
             "seed",
             "final_loss",
             "dloss_vs_d0",
@@ -79,8 +82,10 @@ pub fn pipeline(opts: &ExpOptions) -> anyhow::Result<()> {
         ],
     )?;
     println!(
-        "pipeline sweep: {} algorithms x workers {workers:?} x depth {depths:?}, rtt={RTT}, k={K}",
-        algs.len()
+        "pipeline sweep: {} algorithms x workers {workers:?} x depth {depths:?}, rtt={RTT}, \
+         k={K}, encoding={}",
+        algs.len(),
+        opts.encoding
     );
     println!(
         "{:<11} {:>3} {:>3} {:>11} {:>10} {:>8} {:>10} {:>8}",
@@ -91,8 +96,10 @@ pub fn pipeline(opts: &ExpOptions) -> anyhow::Result<()> {
             for seed in 1..=opts.seeds {
                 let mut d0: Option<(f64, f64)> = None; // (loss, sim_time) at D=0
                 for &depth in depths {
-                    let rep =
-                        sim_trainer::run_synthetic(&sweep_cfg(alg, n, depth, epochs, seed), K)?;
+                    let rep = sim_trainer::run_synthetic(
+                        &sweep_cfg(alg, n, depth, epochs, seed, opts.encoding),
+                        K,
+                    )?;
                     let (base_loss, base_time) =
                         *d0.get_or_insert((rep.final_test_loss, rep.sim_time));
                     let dloss = rep.final_test_loss - base_loss;
@@ -113,6 +120,7 @@ pub fn pipeline(opts: &ExpOptions) -> anyhow::Result<()> {
                         n.to_string(),
                         depth.to_string(),
                         fnum(RTT),
+                        opts.encoding.to_string(),
                         seed.to_string(),
                         fnum(rep.final_test_loss),
                         fnum(dloss),

@@ -41,16 +41,18 @@ const USAGE: &str = "usage: dana <train|serve|experiment|simulate|info> [options
              [--leave-policy retire|fold] [--config file.json] [--use-pallas]
              [--synthetic] [--k K] [--master tcp://HOST:PORT] [--shard-frames]
              [--pipeline-depth D] [--rtt T] [--max-restarts R]
-             [--restart-backoff-ms MS] [--artifacts DIR]
+             [--restart-backoff-ms MS] [--encoding none|f16|bf16|topk:K]
+             [--artifacts DIR]
   serve      --listen HOST:PORT --algorithm A [--workload W | --synthetic --k K]
              [--workers N] [--epochs E] [--shards S] [--serve-threads T]
              [--pipeline-depth D] [--leave-policy retire|fold]
              [--checkpoint PATH] [--checkpoint-every STEPS] [--resume PATH]
              [--keep-last N] [--keep-hourly H] [--status-addr HOST:PORT]
+             [--encodings none|f16|bf16|topk|all[,..]]
              [--metrics-every K] [--seed S] [--artifacts DIR]
   experiment <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|fig12|fig13|
               table1..table6|churn|all> [--full] [--seeds K] [--out DIR]
-             [--artifacts DIR]
+             [--encoding none|f16|bf16|topk:K] [--artifacts DIR]
   simulate   --workers N [--env homo|hetero] [--batches-per-worker K] [--batch B]
   info       [--artifacts DIR]";
 
@@ -139,6 +141,9 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     }
     if let Some(ms) = args.opt_parse::<u64>("restart-backoff-ms")? {
         cfg.restart_backoff_ms = ms;
+    }
+    if let Some(e) = args.opt_parse::<net::Encoding>("encoding")? {
+        cfg.encoding = e;
     }
     let synthetic = args.flag("synthetic");
     let synth_k = args.parse_or::<usize>("k", 256)?;
@@ -247,6 +252,8 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
         keep_last: args.parse_or::<usize>("keep-last", 0)?,
         keep_hourly: args.parse_or::<usize>("keep-hourly", 0)?,
     };
+    let encodings =
+        args.parse_or::<net::EncodingSet>("encodings", net::EncodingSet::ALL)?;
     let metrics_every = args.parse_or::<u64>("metrics-every", 0)?;
     let seed = args.parse_or::<u64>("seed", 1)?;
     let eta = args.opt_parse::<f32>("eta")?;
@@ -315,6 +322,7 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
         pipeline_depth,
         status_addr,
         retention,
+        encodings,
     };
     let mut srv = NetServer::start_serving(master, &listen, opts)?;
     println!(
@@ -344,6 +352,7 @@ fn cmd_experiment(args: &mut Args) -> anyhow::Result<()> {
         seeds: args.parse_or::<u64>("seeds", 2)?,
         out_dir: PathBuf::from(args.str_or("out", "results")),
         artifacts_dir: artifacts_dir(args),
+        encoding: args.parse_or::<net::Encoding>("encoding", net::Encoding::None)?,
     };
     args.finish()?;
     let t0 = std::time::Instant::now();

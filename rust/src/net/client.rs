@@ -50,15 +50,30 @@
 //! with acks owed abandons them (logged; the server may or may not have
 //! applied those pushes — its `Status` drop counter tells).
 //!
+//! **Compressed pushes (wire v4).**  [`RemoteMaster::connect_with`]
+//! requests a payload [`Encoding`]; the grant is computed from the
+//! server's advertised set in the handshake ([`codec::grant`] — an
+//! unadvertised request falls back to `none` with a warning, never an
+//! error).  f16/bf16 quantization happens inside the frame writers;
+//! top-k sparsification runs client-side first ([`Compressor`]), with
+//! one error-feedback residual per local worker slot.  Residuals are
+//! connection-soft state: a reconnect abandons them together with the
+//! owed acks (the banked noise belonged to pushes whose fate is already
+//! unknown), and a slot leave/join resets that slot's residual.
+//!
 //! Gap/lag metrics are recorded server-side (where θ lives); the local
-//! [`MetricsRecorder`] stays empty and reports zeros.
+//! [`MetricsRecorder`] stays empty and reports zeros.  Wire byte totals
+//! are tracked client-side ([`RemoteMaster::wire_bytes`]) for the
+//! benches and the compression smokes.
 
+use super::codec::{self, Compressor, Encoding, EncodingSet, WireStats};
 use super::wire::{self, Header, Msg, Role};
 use crate::optim::{make_algorithm, Algorithm, AlgorithmKind, LeavePolicy, Step, WorkerState};
 use crate::server::metrics::MetricsRecorder;
 use crate::server::{Master, MasterSnapshot};
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
+use std::sync::Arc;
 
 /// Strip the optional `tcp://` scheme from a master address.
 pub fn strip_scheme(addr: &str) -> &str {
@@ -99,6 +114,9 @@ struct Conn {
     /// request order, so the next `owed` frames are push acks and only
     /// the frame after them answers a new request.
     owed: usize,
+    /// Shared tx/rx byte counters (one [`WireStats`] per client, all its
+    /// connections feed it).
+    stats: Arc<WireStats>,
 }
 
 /// What the server told us at handshake time.
@@ -109,11 +127,19 @@ struct HelloInfo {
     shards: usize,
     /// Server-side pipeline window depth (`dana serve --pipeline-depth`).
     pipeline: usize,
+    /// Server-advertised payload-encoding set (bitmask; wire v4).
+    encodings: u32,
     header: Header,
 }
 
 impl Conn {
-    fn open(addr: &str, role: Role, reattach: bool) -> anyhow::Result<(Conn, HelloInfo)> {
+    fn open(
+        addr: &str,
+        role: Role,
+        reattach: bool,
+        encoding: Encoding,
+        stats: Arc<WireStats>,
+    ) -> anyhow::Result<(Conn, HelloInfo)> {
         let stream = TcpStream::connect(addr)
             .map_err(|e| anyhow::anyhow!("connect to master {addr}: {e}"))?;
         stream.set_nodelay(true).ok();
@@ -123,9 +149,10 @@ impl Conn {
             slot: u64::MAX,
             gen: 0,
             owed: 0,
+            stats,
         };
-        match conn.roundtrip(&Msg::Hello { role, reattach })? {
-            Msg::HelloAck { slot, gen, kind, k, shards, pipeline, header } => {
+        match conn.roundtrip(&Msg::Hello { role, reattach, encoding })? {
+            Msg::HelloAck { slot, gen, kind, k, shards, pipeline, encodings, header } => {
                 conn.slot = slot;
                 conn.gen = gen;
                 Ok((
@@ -135,6 +162,7 @@ impl Conn {
                         k: k as usize,
                         shards: shards as usize,
                         pipeline: pipeline as usize,
+                        encodings,
                         header,
                     },
                 ))
@@ -144,9 +172,40 @@ impl Conn {
         }
     }
 
+    /// Write one `Msg` frame, counting its bytes.
+    fn send(&mut self, msg: &Msg) -> std::io::Result<()> {
+        let n = wire::write_frame(&mut self.writer, msg)?;
+        self.stats.add_tx(n);
+        Ok(())
+    }
+
+    /// Read one frame, counting its bytes.
+    fn recv(&mut self) -> anyhow::Result<Msg> {
+        let (msg, n) = wire::read_frame_sized(&mut self.reader)?;
+        self.stats.add_rx(n);
+        Ok(msg)
+    }
+
+    /// Write a `Push` frame straight from a borrowed (already
+    /// transformed) slice under this connection's current generation —
+    /// the zero-copy hot path.
+    fn send_push(&mut self, enc: Encoding, msg: &[f32]) -> std::io::Result<()> {
+        let n = codec::write_push(&mut self.writer, self.gen, enc, msg)?;
+        self.stats.add_tx(n);
+        Ok(())
+    }
+
+    /// Write one `PushShard` slice from a borrowed subslice
+    /// (scatter-gather: all slices view ONE gradient buffer).
+    fn send_push_shard(&mut self, shard: u32, enc: Encoding, msg: &[f32]) -> std::io::Result<()> {
+        let n = codec::write_push_shard(&mut self.writer, self.gen, shard, enc, msg)?;
+        self.stats.add_tx(n);
+        Ok(())
+    }
+
     fn roundtrip(&mut self, msg: &Msg) -> anyhow::Result<Msg> {
-        wire::write_frame(&mut self.writer, msg)?;
-        wire::read_frame(&mut self.reader)
+        self.send(msg)?;
+        self.recv()
     }
 }
 
@@ -171,6 +230,19 @@ pub struct RemoteMaster {
     /// would exceed the depth — the deferred-ack harvest.  0 = classic
     /// blocking round trip, bit-for-bit.
     pipeline: usize,
+    /// Payload encoding this client *requested* (`--encoding`).
+    encoding: Encoding,
+    /// What the handshake granted ([`codec::grant`] of the request
+    /// against the server's advertised set); what pushes actually use.
+    granted: Encoding,
+    /// Client-side gradient transform for `granted` — top-k selection +
+    /// error-feedback residuals, keyed by local worker index.
+    compressor: Compressor,
+    /// Reused staging buffer for the top-k pre-transform (the quantizing
+    /// encodings write straight from the caller's slice instead).
+    push_scratch: Vec<f32>,
+    /// Byte counters shared with every connection.
+    stats: Arc<WireStats>,
     control: Conn,
     /// Local worker index → connection (None = left/retired locally).
     workers: Vec<Option<Conn>>,
@@ -199,7 +271,7 @@ impl RemoteMaster {
     /// against a `--resume`d server they claim the checkpointed slots
     /// (lowest first); against a fresh server they are plain joins.
     pub fn connect(addr: &str, n_workers: usize) -> anyhow::Result<RemoteMaster> {
-        Self::connect_checked(addr, n_workers, None)
+        Self::connect_with(addr, n_workers, None, Encoding::None)
     }
 
     /// Like [`Self::connect`], but validates the server's algorithm kind
@@ -212,16 +284,24 @@ impl RemoteMaster {
         kind: AlgorithmKind,
         k: usize,
     ) -> anyhow::Result<RemoteMaster> {
-        Self::connect_checked(addr, n_workers, Some((kind, k)))
+        Self::connect_with(addr, n_workers, Some((kind, k)), Encoding::None)
     }
 
-    fn connect_checked(
+    /// The full constructor: optional shape validation plus a requested
+    /// payload [`Encoding`] for this client's pushes (wire v4).  The
+    /// request is granted iff the server advertises it; otherwise the
+    /// client warns and falls back to `none` — negotiation never fails a
+    /// connection.
+    pub fn connect_with(
         addr: &str,
         n_workers: usize,
         expect: Option<(AlgorithmKind, usize)>,
+        encoding: Encoding,
     ) -> anyhow::Result<RemoteMaster> {
         let addr = strip_scheme(addr).to_string();
-        let (control, info) = Conn::open(&addr, Role::Control, false)?;
+        let stats = Arc::new(WireStats::default());
+        let (control, info) =
+            Conn::open(&addr, Role::Control, false, Encoding::None, stats.clone())?;
         let (kind, k, header) = (info.kind, info.k, info.header);
         anyhow::ensure!(k > 0, "master reports k=0 parameters");
         if let Some((want_kind, want_k)) = expect {
@@ -236,6 +316,14 @@ impl RemoteMaster {
                 "master at {addr} has k={k}, this run's model has k={want_k}"
             );
         }
+        let granted = codec::grant(EncodingSet(info.encodings), encoding);
+        if granted != encoding {
+            eprintln!(
+                "net: master at {addr} does not advertise encoding {encoding} (advertises \
+                 {}) — falling back to none",
+                EncodingSet(info.encodings)
+            );
+        }
         let local_alg = make_algorithm(kind, &vec![0.0f32; k], 0);
         let mut rm = RemoteMaster {
             addr,
@@ -245,6 +333,11 @@ impl RemoteMaster {
             server_pipeline: info.pipeline,
             shard_frames: false,
             pipeline: 0,
+            encoding,
+            granted,
+            compressor: Compressor::new(granted),
+            push_scratch: Vec::new(),
+            stats,
             control,
             workers: Vec::with_capacity(n_workers),
             header,
@@ -262,7 +355,8 @@ impl RemoteMaster {
     }
 
     fn open_worker(&mut self, reattach: bool) -> anyhow::Result<Conn> {
-        let (conn, info) = Conn::open(&self.addr, Role::Worker, reattach)?;
+        let (conn, info) =
+            Conn::open(&self.addr, Role::Worker, reattach, self.encoding, self.stats.clone())?;
         anyhow::ensure!(
             info.kind == self.kind && info.k == self.k,
             "master changed shape mid-run: {}/k={} (expected {}/k={})",
@@ -351,7 +445,8 @@ impl RemoteMaster {
     }
 
     fn try_reconnect(&mut self, pattern: &[bool], expected_live: u64) -> anyhow::Result<()> {
-        let (mut control, info) = Conn::open(&self.addr, Role::Control, false)?;
+        let (mut control, info) =
+            Conn::open(&self.addr, Role::Control, false, Encoding::None, self.stats.clone())?;
         let mut header = info.header;
         anyhow::ensure!(
             info.kind == self.kind && info.k == self.k,
@@ -382,12 +477,19 @@ impl RemoteMaster {
         let mut fresh: Vec<Option<Conn>> = Vec::with_capacity(pattern.len());
         for &had_worker in pattern {
             fresh.push(if had_worker {
-                let (conn, ..) = Conn::open(&self.addr, Role::Worker, true)?;
+                let (conn, ..) =
+                    Conn::open(&self.addr, Role::Worker, true, self.encoding, self.stats.clone())?;
                 Some(conn)
             } else {
                 None
             });
         }
+        // Re-grant against the (possibly restarted-with-different-flags)
+        // server's advertised set, and drop every error-feedback residual:
+        // the banked noise belonged to pushes whose acks died with the old
+        // connections (DESIGN.md §12).
+        self.granted = codec::grant(EncodingSet(info.encodings), self.encoding);
+        self.compressor = Compressor::new(self.granted);
         self.control = control;
         self.workers = fresh;
         self.header = header;
@@ -411,7 +513,7 @@ impl RemoteMaster {
             .ok_or_else(|| anyhow::anyhow!("harvest for retired local worker {w}"))?;
         let mut latest: Option<Header> = None;
         while conn.owed > 0 {
-            let reply = wire::read_frame(&mut conn.reader)?;
+            let reply = conn.recv()?;
             conn.owed -= 1;
             match reply {
                 Msg::PushAck { header, .. } => latest = Some(header),
@@ -439,11 +541,11 @@ impl RemoteMaster {
     fn send_harvest_read(&mut self, w: usize, msg: &Msg) -> anyhow::Result<Msg> {
         {
             let conn = self.workers[w].as_mut().expect("validated by caller");
-            wire::write_frame(&mut conn.writer, msg)?;
+            conn.send(msg)?;
         }
         self.harvest_acks(w)?;
         let conn = self.workers[w].as_mut().expect("validated by caller");
-        wire::read_frame(&mut conn.reader)
+        conn.recv()
     }
 
     /// One request on worker `w`'s connection, transparently reconnecting
@@ -462,15 +564,10 @@ impl RemoteMaster {
             Err(e) if is_rejection(&e) => return Err(e),
             Err(_) => {
                 self.reconnect()?;
-                // a Push's generation died with the old connection: retag
-                let retagged = match msg {
-                    Msg::Push { msg, .. } => Msg::Push {
-                        gen: self.workers[w].as_ref().expect("reconnected").gen,
-                        msg: msg.clone(),
-                    },
-                    other => other.clone(),
-                };
-                self.workers[w].as_mut().expect("reconnected").roundtrip(&retagged)?
+                // pushes carry their own generation handling (the codec
+                // writers tag from the fresh conn); everything routed here
+                // (pulls, leaves) is generation-free and resends verbatim
+                self.workers[w].as_mut().expect("reconnected").roundtrip(msg)?
             }
         };
         if let Msg::Params { header, .. }
@@ -540,13 +637,13 @@ impl RemoteMaster {
             let conn = self.workers[w].as_mut().expect("validated by caller");
             let msgs = make(conn.gen, shards);
             for m in &msgs {
-                wire::write_frame(&mut conn.writer, m)?;
+                conn.send(m)?;
             }
             msgs.len()
         };
         self.harvest_acks(w)?;
         let conn = self.workers[w].as_mut().expect("validated by caller");
-        (0..n).map(|_| wire::read_frame(&mut conn.reader)).collect()
+        (0..n).map(|_| conn.recv()).collect()
     }
 
     /// Shard-sliced pull: one pipelined `PullShard` round per shard,
@@ -581,27 +678,53 @@ impl RemoteMaster {
         Ok(out)
     }
 
+    /// Write every `PushShard` slice of one logical push (scatter-gather:
+    /// each frame borrows its subslice of the ONE gradient buffer — no
+    /// per-shard copies), drain owed acks, then read the group's replies.
+    /// Shard count and generation are read at call time, so a retry after
+    /// reconnect-as-join re-tags AND re-slices correctly even against a
+    /// server resumed with a different `--shards`.
+    fn send_sliced_push(&mut self, w: usize, data: &[f32]) -> anyhow::Result<Vec<Msg>> {
+        let enc = self.granted;
+        let n = {
+            let ranges = crate::server::shard_bounds(self.k, self.server_shards);
+            let conn = self.workers[w].as_mut().expect("validated by caller");
+            for (shard, r) in ranges.iter().enumerate() {
+                conn.send_push_shard(shard as u32, enc, &data[r.clone()])?;
+            }
+            ranges.len()
+        };
+        self.harvest_acks(w)?;
+        let conn = self.workers[w].as_mut().expect("validated by caller");
+        (0..n).map(|_| conn.recv()).collect()
+    }
+
     /// Shard-sliced push: the update travels as one pipelined `PushShard`
     /// frame per shard; the server applies the assembled update as a
-    /// single master step when the last slice lands.
-    fn push_sliced(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
-        let k = self.k;
-        let replies = self.worker_request_batch(worker, |gen, shards| {
-            crate::server::shard_bounds(k, shards)
-                .into_iter()
-                .enumerate()
-                .map(|(shard, r)| Msg::PushShard {
-                    gen,
-                    shard: shard as u32,
-                    msg: msg[r].to_vec(),
-                })
-                .collect()
-        })?;
+    /// single master step when the last slice lands.  A batch interrupted
+    /// mid-flight is safe to resend wholesale: the server buffers push
+    /// slices per connection and drops an incomplete group with the dead
+    /// socket (gather-then-apply).
+    fn push_sliced(&mut self, worker: usize, data: &[f32]) -> anyhow::Result<Step> {
+        anyhow::ensure!(
+            worker < self.workers.len() && self.workers[worker].is_some(),
+            "push from retired local worker {worker}"
+        );
+        let first = self.send_sliced_push(worker, data);
+        let replies = match first {
+            Ok(r) => r,
+            Err(e) if is_rejection(&e) => return Err(e),
+            Err(_) => {
+                self.reconnect()?;
+                self.send_sliced_push(worker, data)?
+            }
+        };
         let mut step = None;
         for reply in replies {
             match reply {
-                Msg::Ack { .. } => {}
-                Msg::PushAck { eta, gamma, lambda, .. } => {
+                Msg::Ack { header } => self.note(&header),
+                Msg::PushAck { header, eta, gamma, lambda, .. } => {
+                    self.note(&header);
                     step = Some(Step { eta, gamma, lambda })
                 }
                 Msg::Error { detail, .. } => anyhow::bail!("push rejected: {detail}"),
@@ -671,6 +794,19 @@ impl RemoteMaster {
         self.abandoned_pushes
     }
 
+    /// The payload encoding the handshake granted this client (what its
+    /// pushes actually use; `none` when the request wasn't advertised).
+    pub fn granted_encoding(&self) -> Encoding {
+        self.granted
+    }
+
+    /// (bytes sent, bytes received) over every connection this client has
+    /// opened — the counters the benches and the CI compression smoke
+    /// assert shrink under f16.
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        self.stats.totals()
+    }
+
     /// Un-acked deferred pushes currently in flight on worker `w`'s
     /// connection (tests/diagnostics).
     pub fn inflight_pushes(&self, w: usize) -> usize {
@@ -691,7 +827,7 @@ impl RemoteMaster {
     /// The returned [`Step`] is the latest *known* schedule point (both
     /// drivers read the schedule via `step_now()` before the push and
     /// ignore this value); the exact applied step arrives with the ack.
-    fn push_deferred(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+    fn push_deferred(&mut self, worker: usize, data: &[f32]) -> anyhow::Result<Step> {
         if self.inflight_pushes(worker) >= self.pipeline {
             if let Err(e) = self.harvest_acks(worker) {
                 if is_rejection(&e) {
@@ -701,12 +837,12 @@ impl RemoteMaster {
             }
         }
         let step = self.header.step();
+        let enc = self.granted;
         let sent = {
             let conn = self.workers[worker]
                 .as_mut()
                 .ok_or_else(|| anyhow::anyhow!("push from retired local worker {worker}"))?;
-            let frame = Msg::Push { gen: conn.gen, msg: msg.to_vec() };
-            match wire::write_frame(&mut conn.writer, &frame) {
+            match conn.send_push(enc, data) {
                 Ok(()) => {
                     conn.owed += 1;
                     true
@@ -716,13 +852,12 @@ impl RemoteMaster {
         };
         if !sent {
             // the write died mid-pipeline: reconnect and retry once as a
-            // plain blocking push under the fresh generation
+            // plain blocking push under the fresh generation (conn.gen)
             self.reconnect()?;
-            let gen = self.workers[worker].as_ref().expect("reconnected").gen;
-            let reply = self.workers[worker]
-                .as_mut()
-                .expect("reconnected")
-                .roundtrip(&Msg::Push { gen, msg: msg.to_vec() })?;
+            let enc = self.granted;
+            let conn = self.workers[worker].as_mut().expect("reconnected");
+            conn.send_push(enc, data)?;
+            let reply = conn.recv()?;
             return match reply {
                 Msg::PushAck { header, eta, gamma, lambda, .. } => {
                     self.note(&header);
@@ -733,6 +868,59 @@ impl RemoteMaster {
             };
         }
         Ok(step)
+    }
+
+    /// Route one already-transformed update to the right wire shape.
+    fn push_transformed(&mut self, worker: usize, data: &[f32]) -> anyhow::Result<Step> {
+        if self.sliced() {
+            // sliced pushes stay blocking: a deferred multi-frame group
+            // would have to be resent wholesale on any mid-group failure
+            return self.push_sliced(worker, data);
+        }
+        if self.pipeline > 0 {
+            return self.push_deferred(worker, data);
+        }
+        self.push_blocking(worker, data)
+    }
+
+    /// The classic blocking push, written straight from the borrowed
+    /// slice ([`Conn::send_push`]) with the same reconnect-once contract
+    /// as [`Self::worker_request`] — the retry picks up the fresh
+    /// generation from the reconnected connection automatically.
+    fn push_blocking(&mut self, w: usize, data: &[f32]) -> anyhow::Result<Step> {
+        let first = self.send_push_harvest_read(w, data);
+        let reply = match first {
+            Ok(r) => r,
+            Err(e) if is_rejection(&e) => return Err(e),
+            Err(_) => {
+                self.reconnect()?;
+                let enc = self.granted;
+                let conn = self.workers[w].as_mut().expect("reconnected");
+                conn.send_push(enc, data)?;
+                conn.recv()?
+            }
+        };
+        match reply {
+            Msg::PushAck { header, eta, gamma, lambda, .. } => {
+                self.note(&header);
+                Ok(Step { eta, gamma, lambda })
+            }
+            Msg::Error { detail, .. } => anyhow::bail!("push rejected: {detail}"),
+            other => anyhow::bail!("unexpected push reply: {other:?}"),
+        }
+    }
+
+    /// Push half of [`Self::send_harvest_read`]: write the frame from the
+    /// borrowed slice, drain owed deferred acks, read our reply.
+    fn send_push_harvest_read(&mut self, w: usize, data: &[f32]) -> anyhow::Result<Msg> {
+        let enc = self.granted;
+        {
+            let conn = self.workers[w].as_mut().expect("validated by caller");
+            conn.send_push(enc, data)?;
+        }
+        self.harvest_acks(w)?;
+        let conn = self.workers[w].as_mut().expect("validated by caller");
+        conn.recv()
     }
 }
 
@@ -770,6 +958,8 @@ impl Master for RemoteMaster {
         } else {
             self.workers[local] = Some(conn);
         }
+        // a fresh worker starts with no banked compression error
+        self.compressor.reset_slot(local);
         local
     }
 
@@ -779,8 +969,10 @@ impl Master for RemoteMaster {
             "remove_worker: local worker {worker} is not live"
         );
         let reply = self.worker_request(worker, &Msg::Leave { policy });
-        // the connection closes either way: dropping it is the leave
+        // the connection closes either way: dropping it is the leave —
+        // and the slot's error-feedback residual goes with it
         self.workers[worker] = None;
+        self.compressor.reset_slot(worker);
         match reply? {
             Msg::Ack { .. } => Ok(()),
             Msg::Error { detail, .. } => anyhow::bail!("leave refused: {detail}"),
@@ -810,7 +1002,13 @@ impl Master for RemoteMaster {
             if attempt > 0 {
                 std::thread::sleep(self.reconnect_delay);
             }
-            let mut conn = match Conn::open(&self.addr, Role::Control, false) {
+            let mut conn = match Conn::open(
+                &self.addr,
+                Role::Control,
+                false,
+                Encoding::None,
+                self.stats.clone(),
+            ) {
                 Ok((conn, ..)) => conn,
                 Err(e) => {
                     last = Some(e);
@@ -860,24 +1058,24 @@ impl Master for RemoteMaster {
     }
 
     fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
-        let gen = self.workers[worker]
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("push from retired local worker {worker}"))?
-            .gen;
-        if self.sliced() {
-            // sliced pushes stay blocking: a deferred multi-frame group
-            // would have to be resent wholesale on any mid-group failure
-            return self.push_sliced(worker, msg);
+        anyhow::ensure!(
+            worker < self.workers.len() && self.workers[worker].is_some(),
+            "push from retired local worker {worker}"
+        );
+        // Top-k runs its error-feedback selection client-side first (the
+        // residual fold must see the dense gradient); the quantizing
+        // encodings are applied inside the frame writers, straight from
+        // the caller's slice.
+        if matches!(self.granted, Encoding::TopK { .. }) {
+            let mut scratch = std::mem::take(&mut self.push_scratch);
+            scratch.clear();
+            scratch.extend_from_slice(msg);
+            self.compressor.transform(worker, &mut scratch);
+            let out = self.push_transformed(worker, &scratch);
+            self.push_scratch = scratch;
+            return out;
         }
-        if self.pipeline > 0 {
-            return self.push_deferred(worker, msg);
-        }
-        let reply = self.worker_request(worker, &Msg::Push { gen, msg: msg.to_vec() })?;
-        match reply {
-            Msg::PushAck { eta, gamma, lambda, .. } => Ok(Step { eta, gamma, lambda }),
-            Msg::Error { detail, .. } => anyhow::bail!("push rejected: {detail}"),
-            other => anyhow::bail!("unexpected push reply: {other:?}"),
-        }
+        self.push_transformed(worker, msg)
     }
 
     fn set_pipeline_depth(&mut self, depth: usize) {

@@ -1,0 +1,787 @@
+//! Wire v4 payload codecs: negotiated gradient compression plus the
+//! pooled scatter-gather frame writers behind the zero-allocation hot
+//! path.
+//!
+//! Every parameter-bearing frame (`Push`/`PushShard`/`Params`/
+//! `ShardParams`) carries a one-byte payload-encoding tag ahead of its
+//! vector:
+//!
+//! ```text
+//! tag 0  none   [u64 count][count x f32 LE]            (bit-exact)
+//! tag 1  f16    [u64 count][count x u16 LE]            (IEEE binary16)
+//! tag 2  bf16   [u64 count][count x u16 LE]            (bfloat16)
+//! tag 3  top-k  [u64 full_len][u64 nnz]
+//!               [nnz x u32 index LE, strictly increasing]
+//!               [nnz x f32 value LE]
+//! ```
+//!
+//! Frames are self-describing: the decoder densifies whatever tag it
+//! finds into a full-length `Vec<f32>` exactly once, so everything above
+//! the wire layer (the masters, the ticket gates, the tests) keeps
+//! seeing dense vectors.  What each side *sends* is negotiated in the
+//! handshake: the server advertises an [`EncodingSet`] in `HelloAck`,
+//! the client requests an [`Encoding`] in `Hello`, and both compute the
+//! same [`grant`] — an unadvertised request falls back to `none`, never
+//! to an error, so a v4 client always interoperates with a stricter
+//! server.  `encoding=none` is the default and is byte-identical to the
+//! uncompressed frames every equivalence suite pins.
+//!
+//! Decoding is fail-closed like the rest of the wire: an unknown payload
+//! tag, a truncated half/value array, a NaN-bearing f16/bf16 (a
+//! quantized gradient has no business carrying NaN; ±inf from overflow
+//! is legal), a top-k `full_len` past the frame cap (the densify would
+//! OOM), `nnz > full_len`, an out-of-range index, or a non-increasing
+//! index sequence all reject the frame.
+//!
+//! Top-k sparsification uses **error feedback**: the [`Compressor`]
+//! keeps one residual vector per worker slot, folds it into the next
+//! gradient before selection, and banks whatever didn't make the cut.
+//! Residuals are worker-local soft state — a reconnect abandons them
+//! together with the owed acks (DESIGN.md §12).
+
+use crate::net::wire::{self, Dec, Header, MAGIC, MAX_FRAME, VERSION};
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// ---------------------------------------------------------- negotiation
+
+/// A per-frame payload encoding (the v4 negotiation unit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Encoding {
+    /// Raw little-endian f32s — bit-exact, the v3-equivalent default.
+    #[default]
+    None,
+    /// IEEE binary16 quantization (round-to-nearest-even): half the
+    /// bytes, ~3 decimal digits, gradients under ~65504 in magnitude.
+    F16,
+    /// bfloat16 quantization (round-to-nearest-even): half the bytes,
+    /// full f32 exponent range, ~2 decimal digits.
+    Bf16,
+    /// Top-k magnitude sparsification with worker-side error-feedback
+    /// residuals; `k` is the number of coordinates kept per push.
+    TopK { k: u32 },
+}
+
+impl Encoding {
+    /// The one-byte wire tag ahead of each encoded payload.
+    pub fn tag(self) -> u8 {
+        match self {
+            Encoding::None => 0,
+            Encoding::F16 => 1,
+            Encoding::Bf16 => 2,
+            Encoding::TopK { .. } => 3,
+        }
+    }
+
+    /// The u32 parameter carried next to the tag in `Hello` (`k` for
+    /// top-k, 0 otherwise).
+    pub fn param(self) -> u32 {
+        match self {
+            Encoding::TopK { k } => k,
+            _ => 0,
+        }
+    }
+
+    /// This encoding's bit in an advertised [`EncodingSet`].
+    pub fn bit(self) -> u32 {
+        1 << self.tag()
+    }
+
+    /// Rebuild from the (tag, param) pair a `Hello` carries.
+    pub fn from_wire(tag: u8, param: u32) -> anyhow::Result<Encoding> {
+        match tag {
+            0 => Ok(Encoding::None),
+            1 => Ok(Encoding::F16),
+            2 => Ok(Encoding::Bf16),
+            3 => {
+                anyhow::ensure!(param >= 1, "top-k encoding needs k >= 1");
+                Ok(Encoding::TopK { k: param })
+            }
+            other => anyhow::bail!("unknown encoding tag {other}"),
+        }
+    }
+}
+
+impl std::fmt::Display for Encoding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Encoding::None => write!(f, "none"),
+            Encoding::F16 => write!(f, "f16"),
+            Encoding::Bf16 => write!(f, "bf16"),
+            Encoding::TopK { k } => write!(f, "topk:{k}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Encoding {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let s = s.to_ascii_lowercase();
+        match s.as_str() {
+            "none" => Ok(Encoding::None),
+            "f16" => Ok(Encoding::F16),
+            "bf16" => Ok(Encoding::Bf16),
+            other => match other.strip_prefix("topk:") {
+                Some(ks) => {
+                    let k: u32 = ks
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad top-k count {ks:?}: {e}"))?;
+                    anyhow::ensure!(k >= 1, "top-k needs k >= 1");
+                    Ok(Encoding::TopK { k })
+                }
+                None => anyhow::bail!("unknown encoding {other:?} (none|f16|bf16|topk:K)"),
+            },
+        }
+    }
+}
+
+/// The set of encodings a server is willing to receive/serve, advertised
+/// as a bitmask in `HelloAck` (`dana serve --encodings none,f16,...`).
+/// `none` is always a member — the protocol must stay speakable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EncodingSet(pub u32);
+
+impl EncodingSet {
+    /// Everything this build speaks.
+    pub const ALL: EncodingSet = EncodingSet(0b1111);
+    /// Uncompressed frames only.
+    pub const NONE_ONLY: EncodingSet = EncodingSet(0b0001);
+
+    pub fn contains(self, e: Encoding) -> bool {
+        self.0 & e.bit() != 0
+    }
+}
+
+impl Default for EncodingSet {
+    fn default() -> Self {
+        EncodingSet::ALL
+    }
+}
+
+impl std::str::FromStr for EncodingSet {
+    type Err = anyhow::Error;
+
+    /// Comma list of encoding classes (`none,f16,bf16,topk` or `all`);
+    /// `none` is implied even when omitted.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let mut bits = EncodingSet::NONE_ONLY.0;
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            bits |= match part.to_ascii_lowercase().as_str() {
+                "all" => EncodingSet::ALL.0,
+                "none" => Encoding::None.bit(),
+                "f16" => Encoding::F16.bit(),
+                "bf16" => Encoding::Bf16.bit(),
+                "topk" => Encoding::TopK { k: 1 }.bit(),
+                other => anyhow::bail!("unknown encoding class {other:?} (none|f16|bf16|topk|all)"),
+            };
+        }
+        Ok(EncodingSet(bits))
+    }
+}
+
+impl std::fmt::Display for EncodingSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for (bit, name) in [(0b0001, "none"), (0b0010, "f16"), (0b0100, "bf16"), (0b1000, "topk")] {
+            if self.0 & bit != 0 {
+                if !first {
+                    write!(f, ",")?;
+                }
+                write!(f, "{name}")?;
+                first = false;
+            }
+        }
+        if first {
+            write!(f, "none")?;
+        }
+        Ok(())
+    }
+}
+
+/// What a request resolves to against an advertised set: the request if
+/// advertised, else `none`.  Both sides compute this identically from
+/// the handshake, so no extra round trip carries the decision.
+pub fn grant(advertised: EncodingSet, req: Encoding) -> Encoding {
+    if advertised.contains(req) {
+        req
+    } else {
+        Encoding::None
+    }
+}
+
+/// The encoding the server uses for its parameter replies to a worker
+/// granted `enc`.  Quantizations compress both directions; top-k is
+/// push-only — sparsifying θ would discard parameters, not noise.
+pub fn reply_encoding(enc: Encoding) -> Encoding {
+    match enc {
+        Encoding::F16 | Encoding::Bf16 => enc,
+        _ => Encoding::None,
+    }
+}
+
+// ---------------------------------------------------------- f16 / bf16
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even (overflow → ±inf,
+/// NaN stays NaN).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xff) as i32;
+    let man = b & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN: keep NaN-ness with a nonzero mantissa
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7c00 | ((man >> 13) as u16).max(1) };
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow → signed zero
+        }
+        // subnormal half: shift the full 24-bit significand down,
+        // rounding to nearest-even on the dropped bits
+        let m = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let kept = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded =
+            if rem > halfway || (rem == halfway && kept & 1 == 1) { kept + 1 } else { kept };
+        return sign | rounded as u16; // carry into exp 1 is correct
+    }
+    let kept = (man >> 13) as u16;
+    let rem = man & 0x1fff;
+    let mut h = sign | ((e as u16) << 10) | kept;
+    if rem > 0x1000 || (rem == 0x1000 && h & 1 == 1) {
+        h += 1; // mantissa carry may roll into the exponent (→ inf): correct
+    }
+    h
+}
+
+/// IEEE binary16 bits → f32 (exact — every half is representable).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: normalize into an f32 normal
+            let mut m = man;
+            let mut e32 = 113u32; // f32 exponent field once bit 10 lands
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e32 -= 1;
+            }
+            sign | (e32 << 23) | ((m & 0x03ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16 bits, round-to-nearest-even (NaN stays NaN).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let b = x.to_bits();
+    if x.is_nan() {
+        return ((b >> 16) as u16) | 0x0040; // force a quiet, nonzero mantissa
+    }
+    (b.wrapping_add(0x7fff + ((b >> 16) & 1)) >> 16) as u16
+}
+
+/// bfloat16 bits → f32 (exact — bf16 is a truncated f32).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+// ---------------------------------------------------------- payload codec
+
+/// Exact on-wire length of `vals` under `enc`, including the tag byte —
+/// the frame writers size and cap-check bodies with this before
+/// serializing anything.
+pub fn payload_wire_len(enc: Encoding, vals: &[f32]) -> usize {
+    1 + match enc {
+        Encoding::None => 8 + 4 * vals.len(),
+        Encoding::F16 | Encoding::Bf16 => 8 + 2 * vals.len(),
+        Encoding::TopK { .. } => {
+            let nnz = vals.iter().filter(|x| **x != 0.0).count();
+            8 + 8 + 6 * nnz
+        }
+    }
+}
+
+/// Append the tagged payload for `vals` under `enc`.  For top-k the
+/// caller has already run the [`Compressor`] — `vals` is dense with
+/// zeros outside the selection, and only the nonzeros travel.
+pub(crate) fn put_payload(out: &mut Vec<u8>, enc: Encoding, vals: &[f32]) {
+    out.push(enc.tag());
+    match enc {
+        Encoding::None => wire::put_vec_f32(out, vals),
+        Encoding::F16 => {
+            wire::put_u64(out, vals.len() as u64);
+            out.reserve(2 * vals.len());
+            for &x in vals {
+                out.extend_from_slice(&f32_to_f16(x).to_le_bytes());
+            }
+        }
+        Encoding::Bf16 => {
+            wire::put_u64(out, vals.len() as u64);
+            out.reserve(2 * vals.len());
+            for &x in vals {
+                out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+            }
+        }
+        Encoding::TopK { .. } => {
+            let nnz = vals.iter().filter(|x| **x != 0.0).count();
+            wire::put_u64(out, vals.len() as u64);
+            wire::put_u64(out, nnz as u64);
+            out.reserve(6 * nnz);
+            for (i, &x) in vals.iter().enumerate() {
+                if x != 0.0 {
+                    wire::put_u32(out, i as u32);
+                }
+            }
+            for &x in vals {
+                if x != 0.0 {
+                    wire::put_f32(out, x);
+                }
+            }
+        }
+    }
+}
+
+/// Decode one tagged payload into a dense `Vec<f32>` — the single
+/// densify of a frame's lifetime.  Fail-closed; see the module docs.
+pub(crate) fn get_payload(d: &mut Dec<'_>) -> anyhow::Result<Vec<f32>> {
+    let tag = d.u8()?;
+    match tag {
+        0 => d.vec_f32(),
+        1 | 2 => {
+            let n = d.u64()? as usize;
+            let bytes = d.take(
+                n.checked_mul(2)
+                    .ok_or_else(|| anyhow::anyhow!("f16 count {n} overflows"))?,
+            )?;
+            let mut out = Vec::with_capacity(n);
+            for c in bytes.chunks_exact(2) {
+                let h = u16::from_le_bytes(c.try_into().expect("2 bytes"));
+                let x = if tag == 1 { f16_to_f32(h) } else { bf16_to_f32(h) };
+                anyhow::ensure!(
+                    !x.is_nan(),
+                    "NaN in a {}-encoded payload",
+                    if tag == 1 { "f16" } else { "bf16" }
+                );
+                out.push(x);
+            }
+            Ok(out)
+        }
+        3 => {
+            let full = d.u64()? as usize;
+            anyhow::ensure!(
+                full <= (MAX_FRAME / 4) as usize,
+                "top-k full length {full} exceeds the frame cap"
+            );
+            let nnz = d.u64()? as usize;
+            anyhow::ensure!(nnz <= full, "top-k nnz {nnz} exceeds full length {full}");
+            let idx = d.take(
+                nnz.checked_mul(4)
+                    .ok_or_else(|| anyhow::anyhow!("top-k nnz {nnz} overflows"))?,
+            )?;
+            let vals = d.take(4 * nnz)?;
+            let mut out = vec![0.0f32; full];
+            let mut prev: i64 = -1;
+            for (ic, vc) in idx.chunks_exact(4).zip(vals.chunks_exact(4)) {
+                let i = u32::from_le_bytes(ic.try_into().expect("4 bytes")) as i64;
+                anyhow::ensure!(
+                    (i as usize) < full,
+                    "top-k index {i} out of range (full length {full})"
+                );
+                anyhow::ensure!(i > prev, "top-k indices must be strictly increasing");
+                prev = i;
+                out[i as usize] = f32::from_le_bytes(vc.try_into().expect("4 bytes"));
+            }
+            Ok(out)
+        }
+        other => anyhow::bail!("unknown payload encoding tag {other}"),
+    }
+}
+
+// ---------------------------------------------------------- frame writers
+
+/// Write a `Push` frame straight from a borrowed gradient slice — the
+/// hot-loop equivalent of `write_frame(&Msg::Push {..})`, minus the
+/// `Vec<f32>` clone and the fresh frame allocation.  Byte-identical to
+/// the `Msg` path when `enc` is `none`.  Returns the frame's size on
+/// the wire (length prefix included).
+pub fn write_push<W: Write>(w: &mut W, gen: u32, enc: Encoding, msg: &[f32]) -> std::io::Result<usize> {
+    write_encoded(w, 3, 4, |b| wire::put_u32(b, gen), enc, msg)
+}
+
+/// Write one shard slice of a push (`PushShard`) from a borrowed slice —
+/// the scatter-gather half: `push_sliced` hands each shard's subslice of
+/// ONE gradient buffer to this writer, so slicing never copies.
+pub fn write_push_shard<W: Write>(
+    w: &mut W,
+    gen: u32,
+    shard: u32,
+    enc: Encoding,
+    msg: &[f32],
+) -> std::io::Result<usize> {
+    write_encoded(
+        w,
+        10,
+        8,
+        |b| {
+            wire::put_u32(b, gen);
+            wire::put_u32(b, shard);
+        },
+        enc,
+        msg,
+    )
+}
+
+/// Write a `Params` reply from the server's borrowed parameter buffer.
+pub fn write_params<W: Write>(
+    w: &mut W,
+    header: &Header,
+    enc: Encoding,
+    params: &[f32],
+) -> std::io::Result<usize> {
+    write_encoded(w, 17, HDR_LEN, |b| wire::put_header(b, header), enc, params)
+}
+
+/// Write a `ShardParams` reply from a borrowed slice.
+pub fn write_shard_params<W: Write>(
+    w: &mut W,
+    header: &Header,
+    shard: u32,
+    enc: Encoding,
+    params: &[f32],
+) -> std::io::Result<usize> {
+    write_encoded(
+        w,
+        22,
+        HDR_LEN + 4,
+        |b| {
+            wire::put_header(b, header);
+            wire::put_u32(b, shard);
+        },
+        enc,
+        params,
+    )
+}
+
+/// Encoded [`Header`] size (kept in sync with `Msg::body_len`'s HDR).
+const HDR_LEN: usize = 8 + 4 + 4 + 4 + 8 + 8 + 8;
+
+/// Shared frame writer: compute the exact body length, refuse an
+/// oversized frame before serializing (symmetric with the decoder),
+/// then build the whole frame in a pooled thread-local buffer and write
+/// it with one `write_all` + flush.
+fn write_encoded<W: Write>(
+    w: &mut W,
+    tag: u8,
+    prefix_len: usize,
+    prefix: impl FnOnce(&mut Vec<u8>),
+    enc: Encoding,
+    vals: &[f32],
+) -> std::io::Result<usize> {
+    let body_len = 4 + 1 + 1 + prefix_len + payload_wire_len(enc, vals);
+    if body_len > MAX_FRAME as usize {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("refusing to encode a {body_len}-byte frame body (cap {MAX_FRAME})"),
+        ));
+    }
+    wire::with_frame_buf(|buf| {
+        buf.clear();
+        buf.reserve(4 + body_len);
+        wire::put_u32(buf, body_len as u32);
+        buf.extend_from_slice(&MAGIC);
+        buf.push(VERSION);
+        buf.push(tag);
+        prefix(buf);
+        put_payload(buf, enc, vals);
+        debug_assert_eq!(buf.len(), 4 + body_len, "payload_wire_len out of sync with put_payload");
+        w.write_all(buf)?;
+        w.flush()?;
+        Ok(4 + body_len)
+    })
+}
+
+// ---------------------------------------------------------- compressor
+
+/// Worker-side gradient transform for a negotiated encoding.
+///
+/// * f16/bf16: quantize–dequantize in place, so the caller trains
+///   against exactly the values the wire will carry (used by the
+///   in-process drivers to simulate compression noise; the remote path
+///   lets the frame writer quantize, which produces identical bits).
+/// * top-k: fold in the slot's error-feedback residual, keep the `k`
+///   largest-magnitude coordinates, bank the rest.  The transformed
+///   gradient is dense-with-zeros — ready for [`write_push`]'s sparse
+///   encoding or a direct in-process apply.
+///
+/// Residuals are per-slot soft state: [`Compressor::reset_slot`] drops
+/// one on churn/reconnect (the update they were banked against is
+/// unaccounted), [`Compressor::reset_all`] on a full reconnect.
+pub struct Compressor {
+    enc: Encoding,
+    residuals: Vec<Option<Vec<f32>>>,
+    idx: Vec<u32>,
+}
+
+impl Compressor {
+    pub fn new(enc: Encoding) -> Self {
+        Compressor { enc, residuals: Vec::new(), idx: Vec::new() }
+    }
+
+    pub fn encoding(&self) -> Encoding {
+        self.enc
+    }
+
+    /// True when [`Compressor::transform`] changes anything.
+    pub fn is_active(&self) -> bool {
+        self.enc != Encoding::None
+    }
+
+    /// Transform `g` in place into what the master will actually apply.
+    pub fn transform(&mut self, slot: usize, g: &mut [f32]) {
+        match self.enc {
+            Encoding::None => {}
+            Encoding::F16 => {
+                for x in g.iter_mut() {
+                    *x = f16_to_f32(f32_to_f16(*x));
+                }
+            }
+            Encoding::Bf16 => {
+                for x in g.iter_mut() {
+                    *x = bf16_to_f32(f32_to_bf16(*x));
+                }
+            }
+            Encoding::TopK { k } => {
+                let n = g.len();
+                if slot >= self.residuals.len() {
+                    self.residuals.resize_with(slot + 1, || None);
+                }
+                let r = self.residuals[slot].get_or_insert_with(|| vec![0.0; n]);
+                if r.len() != n {
+                    *r = vec![0.0; n];
+                }
+                for (x, ri) in g.iter_mut().zip(r.iter_mut()) {
+                    *x += *ri;
+                    *ri = 0.0;
+                }
+                let kk = (k as usize).min(n);
+                if kk == 0 || kk >= n {
+                    return;
+                }
+                self.idx.clear();
+                self.idx.extend(0..n as u32);
+                // partition: the kk largest |g| land in idx[..kk]
+                self.idx.select_nth_unstable_by(kk - 1, |&a, &b| {
+                    g[b as usize].abs().total_cmp(&g[a as usize].abs())
+                });
+                for &i in &self.idx[kk..] {
+                    let i = i as usize;
+                    r[i] = g[i];
+                    g[i] = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Drop one slot's residual (the slot left, died, or was retagged).
+    pub fn reset_slot(&mut self, slot: usize) {
+        if let Some(r) = self.residuals.get_mut(slot) {
+            *r = None;
+        }
+    }
+
+    /// Drop every residual (full reconnect: all owed acks abandoned).
+    pub fn reset_all(&mut self) {
+        for r in &mut self.residuals {
+            *r = None;
+        }
+    }
+}
+
+// ---------------------------------------------------------- byte counters
+
+/// Lock-free tx/rx byte counters a connection owner shares with its
+/// conns — the client-side mirror of the server's `MetricsHub` bytes.
+#[derive(Debug, Default)]
+pub struct WireStats {
+    tx: AtomicU64,
+    rx: AtomicU64,
+}
+
+impl WireStats {
+    pub fn add_tx(&self, n: usize) {
+        self.tx.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn add_rx(&self, n: usize) {
+        self.rx.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// (bytes sent, bytes received) so far.
+    pub fn totals(&self) -> (u64, u64) {
+        (self.tx.load(Ordering::Relaxed), self.rx.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_round_trips_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 6.103_515_6e-5, 1.5, 0.099_975_586] {
+            let h = f32_to_f16(x);
+            assert_eq!(f16_to_f32(h), x, "{x} must survive (it is a half)");
+        }
+        // signs of zero survive the trip
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even_and_overflows_to_inf() {
+        // 1 + 2^-11 sits exactly between 1.0 and the next half (1+2^-10):
+        // ties-to-even keeps 1.0
+        assert_eq!(f16_to_f32(f32_to_f16(1.0 + 2.0f32.powi(-11))), 1.0);
+        // a hair above the tie rounds up
+        assert_eq!(
+            f16_to_f32(f32_to_f16(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20))),
+            1.0 + 2.0f32.powi(-10)
+        );
+        assert_eq!(f32_to_f16(70000.0), 0x7c00, "overflow is +inf");
+        assert_eq!(f32_to_f16(-70000.0), 0xfc00);
+        assert_eq!(f32_to_f16(1e-10), 0, "underflow is +0");
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+    }
+
+    #[test]
+    fn f16_subnormals_round_trip() {
+        // smallest positive half (2^-24) and a mid-range subnormal
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(f16_to_f32(f32_to_f16(tiny)), tiny);
+        let sub = 2.0f32.powi(-17);
+        assert_eq!(f16_to_f32(f32_to_f16(sub)), sub);
+    }
+
+    #[test]
+    fn bf16_truncates_with_rounding_and_keeps_nan() {
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0)), 1.0);
+        assert_eq!(bf16_to_f32(f32_to_bf16(-2.5)), -2.5);
+        // bf16 keeps the f32 exponent range
+        assert_eq!(bf16_to_f32(f32_to_bf16(1e30)), 1.0009766e30);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        let x = 1.0 + 2.0f32.powi(-8); // tie between 1.0 and 1+2^-7
+        assert_eq!(bf16_to_f32(f32_to_bf16(x)), 1.0, "ties to even");
+    }
+
+    #[test]
+    fn quantization_is_idempotent() {
+        // re-quantizing an already-quantized value is exact: the client
+        // pre-transform and the wire encoder agree bit-for-bit
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..1000 {
+            let x = rng.normal() as f32;
+            let q = f16_to_f32(f32_to_f16(x));
+            assert_eq!(f16_to_f32(f32_to_f16(q)).to_bits(), q.to_bits());
+            let qb = bf16_to_f32(f32_to_bf16(x));
+            assert_eq!(bf16_to_f32(f32_to_bf16(qb)).to_bits(), qb.to_bits());
+        }
+    }
+
+    #[test]
+    fn payload_round_trips_and_len_matches() {
+        let vals = [0.5f32, -1.25, 0.0, 3.0, -0.0078125, 2.0f32.powi(-14)];
+        for enc in [
+            Encoding::None,
+            Encoding::F16,
+            Encoding::Bf16,
+            Encoding::TopK { k: 3 },
+        ] {
+            let mut out = Vec::new();
+            put_payload(&mut out, enc, &vals);
+            assert_eq!(out.len(), payload_wire_len(enc, &vals), "{enc}");
+            let mut d = Dec { b: &out, i: 0 };
+            let back = get_payload(&mut d).unwrap();
+            d.done().unwrap();
+            assert_eq!(back.len(), vals.len(), "{enc}");
+            match enc {
+                Encoding::None | Encoding::TopK { .. } => {
+                    // the dense path is bit-exact; top-k here encodes the
+                    // already-sparse buffer, so nonzeros are bit-exact too
+                    assert_eq!(back, vals.to_vec(), "{enc}");
+                }
+                Encoding::F16 => {
+                    for (a, b) in back.iter().zip(vals.iter()) {
+                        assert_eq!(*a, f16_to_f32(f32_to_f16(*b)), "{enc}");
+                    }
+                }
+                Encoding::Bf16 => {
+                    for (a, b) in back.iter().zip(vals.iter()) {
+                        assert_eq!(*a, bf16_to_f32(f32_to_bf16(*b)), "{enc}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compressor_topk_keeps_largest_and_banks_the_rest() {
+        let mut c = Compressor::new(Encoding::TopK { k: 2 });
+        let mut g = vec![1.0f32, -4.0, 0.25, 3.0];
+        c.transform(0, &mut g);
+        assert_eq!(g, vec![0.0, -4.0, 0.0, 3.0]);
+        // the residual carries what was dropped, and folds into the next push
+        let mut g2 = vec![0.5f32, 0.0, 0.5, 0.0];
+        c.transform(0, &mut g2);
+        // g2 + residual = [1.5, 0, 0.75, 0]: top-2 keeps both nonzeros
+        assert_eq!(g2, vec![1.5, 0.0, 0.75, 0.0]);
+        // reset drops the (now empty) residual without touching others
+        c.reset_slot(0);
+        let mut g3 = vec![1.0f32, 2.0, 3.0, 4.0];
+        c.transform(0, &mut g3);
+        assert_eq!(g3, vec![0.0, 0.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn encoding_parse_round_trips() {
+        for e in [Encoding::None, Encoding::F16, Encoding::Bf16, Encoding::TopK { k: 64 }] {
+            assert_eq!(e.to_string().parse::<Encoding>().unwrap(), e);
+        }
+        assert!("topk:0".parse::<Encoding>().is_err());
+        assert!("fp8".parse::<Encoding>().is_err());
+        let set: EncodingSet = "f16,topk".parse().unwrap();
+        assert!(set.contains(Encoding::None), "none is always speakable");
+        assert!(set.contains(Encoding::F16));
+        assert!(set.contains(Encoding::TopK { k: 9 }));
+        assert!(!set.contains(Encoding::Bf16));
+        assert_eq!("all".parse::<EncodingSet>().unwrap(), EncodingSet::ALL);
+        assert_eq!(EncodingSet::default(), EncodingSet::ALL);
+        assert!("f16,quantum".parse::<EncodingSet>().is_err());
+    }
+
+    #[test]
+    fn grants_fall_back_to_none() {
+        assert_eq!(grant(EncodingSet::ALL, Encoding::F16), Encoding::F16);
+        assert_eq!(grant(EncodingSet::NONE_ONLY, Encoding::F16), Encoding::None);
+        let k = Encoding::TopK { k: 32 };
+        assert_eq!(grant(EncodingSet::ALL, k), k);
+        assert_eq!(reply_encoding(k), Encoding::None, "top-k never quantizes pulls");
+        assert_eq!(reply_encoding(Encoding::Bf16), Encoding::Bf16);
+    }
+}

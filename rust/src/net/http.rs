@@ -108,6 +108,13 @@ pub struct StatusSnapshot {
     /// Filled by the listener from the delta between scrapes (0.0 on the
     /// first scrape).
     pub pushes_per_sec: f64,
+    /// Wire bytes written / read by the serving threads (whole frames,
+    /// handshake included), from the `MetricsHub` byte counters.
+    pub bytes_tx: u64,
+    pub bytes_rx: u64,
+    /// tx-byte rate from the scrape-to-scrape delta, filled by the
+    /// listener like `pushes_per_sec` (0.0 on the first scrape).
+    pub bytes_per_second: f64,
     pub gap: HistogramSnapshot,
     pub lag: HistogramSnapshot,
     /// Per-shard (gate position, ticket backlog); empty on the
@@ -124,8 +131,9 @@ pub struct StatusSnapshot {
 /// server's shared state; mocked in tests.
 pub trait StatusSource: Send + Sync {
     /// Everything `GET /metrics` needs, from lock-free sources only.
-    /// `slots` must be left empty and `pushes_per_sec` zero (the
-    /// listener fills it from scrape-to-scrape deltas).
+    /// `slots` must be left empty and `pushes_per_sec` /
+    /// `bytes_per_second` zero (the listener fills them from
+    /// scrape-to-scrape deltas).
     fn metrics_snapshot(&self) -> StatusSnapshot;
 
     /// Per-slot rows for `GET /status`.  May take short per-slot /
@@ -247,6 +255,12 @@ pub fn render_prometheus(s: &StatusSnapshot) -> String {
     let _ = writeln!(o, "dana_pushes_per_second {}", s.pushes_per_sec);
     let _ = writeln!(o, "# TYPE dana_pushes_dropped_total counter");
     let _ = writeln!(o, "dana_pushes_dropped_total {}", s.pushes_dropped);
+    let _ = writeln!(o, "# TYPE dana_bytes_tx_total counter");
+    let _ = writeln!(o, "dana_bytes_tx_total {}", s.bytes_tx);
+    let _ = writeln!(o, "# TYPE dana_bytes_rx_total counter");
+    let _ = writeln!(o, "dana_bytes_rx_total {}", s.bytes_rx);
+    let _ = writeln!(o, "# TYPE dana_bytes_per_second gauge");
+    let _ = writeln!(o, "dana_bytes_per_second {}", s.bytes_per_second);
     let _ = writeln!(o, "# TYPE dana_workers_live gauge");
     let _ = writeln!(o, "dana_workers_live {}", s.live_workers);
     let _ = writeln!(o, "# TYPE dana_workers_total gauge");
@@ -334,6 +348,9 @@ pub fn render_status_json(s: &StatusSnapshot) -> String {
         ("pushes_total", Json::num(s.pushes_total as f64)),
         ("pushes_dropped", Json::num(s.pushes_dropped as f64)),
         ("pushes_per_sec", Json::num(s.pushes_per_sec)),
+        ("bytes_tx", Json::num(s.bytes_tx as f64)),
+        ("bytes_rx", Json::num(s.bytes_rx as f64)),
+        ("bytes_per_sec", Json::num(s.bytes_per_second)),
         ("gap", histogram_json(&s.gap)),
         ("lag", histogram_json(&s.lag)),
         ("shards", Json::Arr(shards)),
@@ -393,9 +410,9 @@ impl Drop for StatusServer {
 }
 
 fn serve_loop(listener: &TcpListener, source: &dyn StatusSource, stop: &AtomicBool) {
-    // pushes/s needs scrape-to-scrape memory; it lives here so the
-    // source stays stateless.
-    let mut last_scrape: Option<(Instant, u64)> = None;
+    // pushes/s and bytes/s need scrape-to-scrape memory; it lives here
+    // so the source stays stateless.
+    let mut last_scrape: Option<(Instant, u64, u64)> = None;
     for conn in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
@@ -411,7 +428,7 @@ fn serve_loop(listener: &TcpListener, source: &dyn StatusSource, stop: &AtomicBo
 fn handle_conn(
     stream: TcpStream,
     source: &dyn StatusSource,
-    last_scrape: &mut Option<(Instant, u64)>,
+    last_scrape: &mut Option<(Instant, u64, u64)>,
 ) -> io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(2)))?;
     stream.set_write_timeout(Some(Duration::from_secs(2)))?;
@@ -429,13 +446,16 @@ fn handle_conn(
             // (lock-free) scrape surface.
             let mut snap = source.metrics_snapshot();
             let now = Instant::now();
-            if let Some((t0, n0)) = *last_scrape {
+            if let Some((t0, n0, b0)) = *last_scrape {
                 let dt = now.duration_since(t0).as_secs_f64();
                 if dt > 0.0 && snap.pushes_total >= n0 {
                     snap.pushes_per_sec = (snap.pushes_total - n0) as f64 / dt;
                 }
+                if dt > 0.0 && snap.bytes_tx >= b0 {
+                    snap.bytes_per_second = (snap.bytes_tx - b0) as f64 / dt;
+                }
             }
-            *last_scrape = Some((now, snap.pushes_total));
+            *last_scrape = Some((now, snap.pushes_total, snap.bytes_tx));
             match req {
                 HttpRequest::Metrics => write_response(
                     &mut writer,
@@ -540,6 +560,9 @@ mod tests {
             pushes_total: 40,
             pushes_dropped: 2,
             pushes_per_sec: 8.0,
+            bytes_tx: 4096,
+            bytes_rx: 2048,
+            bytes_per_second: 512.0,
             gap: gap.snapshot(),
             lag: lag.snapshot(),
             shard_gates: vec![(40, 0), (39, 1)],
@@ -560,6 +583,9 @@ mod tests {
             "dana_pushes_total 40",
             "dana_pushes_per_second 8",
             "dana_pushes_dropped_total 2",
+            "dana_bytes_tx_total 4096",
+            "dana_bytes_rx_total 2048",
+            "dana_bytes_per_second 512",
             "dana_workers_live 3",
             "dana_workers_total 4",
             "dana_workers_retired 1",
@@ -591,6 +617,8 @@ mod tests {
         assert_eq!(v.at(&["master_step"]).unwrap().as_usize().unwrap(), 40);
         assert_eq!(v.at(&["workers_live"]).unwrap().as_usize().unwrap(), 3);
         assert_eq!(v.at(&["pushes_dropped"]).unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.at(&["bytes_tx"]).unwrap().as_usize().unwrap(), 4096);
+        assert_eq!(v.at(&["bytes_rx"]).unwrap().as_usize().unwrap(), 2048);
         assert_eq!(v.at(&["checkpoint", "step"]).unwrap().as_usize().unwrap(), 32);
         let slots = v.at(&["slots"]).unwrap().as_arr().unwrap();
         assert_eq!(slots.len(), 2);
@@ -613,6 +641,9 @@ mod tests {
             pushes_total: 0,
             pushes_dropped: 0,
             pushes_per_sec: 0.0,
+            bytes_tx: 0,
+            bytes_rx: 0,
+            bytes_per_second: 0.0,
             gap: AtomicHistogram::new(GAP_BOUNDS).snapshot(),
             lag: AtomicHistogram::new(LAG_BOUNDS).snapshot(),
             shard_gates: Vec::new(),
@@ -640,6 +671,7 @@ mod tests {
             let mut s = synthetic_snapshot();
             s.slots = Vec::new();
             s.pushes_per_sec = 0.0;
+            s.bytes_per_second = 0.0;
             s
         }
 

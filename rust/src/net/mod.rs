@@ -8,6 +8,11 @@
 //! actually about.  std-only: no new dependencies.
 //!
 //! * [`wire`] — versioned, length-prefixed, fail-closed binary protocol;
+//! * [`codec`] — wire-v4 payload encodings ([`Encoding`]): f16/bf16
+//!   quantization and top-k sparsification with worker-side
+//!   error-feedback residuals, negotiated per connection in the
+//!   handshake, plus the pooled borrowed-slice frame writers behind the
+//!   zero-allocation push path;
 //! * [`server`] — `dana serve`: a [`crate::server::ServingMaster`]
 //!   behind a `TcpListener`, thread-per-connection, connect = join /
 //!   EOF = leave, generation tags against straggler pushes.  With the
@@ -30,12 +35,14 @@
 
 pub mod checkpoint;
 pub mod client;
+pub mod codec;
 pub mod http;
 pub mod retention;
 pub mod server;
 pub mod wire;
 
 pub use client::{strip_scheme, RemoteMaster};
+pub use codec::{Encoding, EncodingSet};
 pub use http::StatusServer;
 pub use retention::RetentionPolicy;
 pub use server::{NetServer, ServeOptions};
@@ -57,11 +64,11 @@ pub fn master_for(cfg: &TrainConfig, theta0: &[f32]) -> anyhow::Result<Box<dyn M
             // worker slot is joined: a misconfigured client never
             // perturbs a live cluster's membership (or its auto-tuned
             // α/τ) on its way to being rejected.
-            let mut rm = RemoteMaster::connect_expect(
+            let mut rm = RemoteMaster::connect_with(
                 addr,
                 cfg.n_workers,
-                cfg.algorithm,
-                theta0.len(),
+                Some((cfg.algorithm, theta0.len())),
+                cfg.encoding,
             )?;
             // per-shard parameter frames (no-op unless the server is
             // sharded); trajectories are bit-for-bit either way

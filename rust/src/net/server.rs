@@ -55,6 +55,7 @@
 //! only its last periodic snapshot.
 
 use super::checkpoint;
+use super::codec::{self, Encoding, EncodingSet};
 use super::http::{self, CheckpointInfo, SlotRow, StatusSnapshot};
 use super::retention::{self, RetentionPolicy};
 use super::wire::{self, Msg, Role};
@@ -90,6 +91,11 @@ pub struct ServeOptions {
     /// Checkpoint archive retention (`--keep-last`/`--keep-hourly`);
     /// disabled by default.  See [`retention`].
     pub retention: RetentionPolicy,
+    /// Payload encodings this server advertises (`--encodings`, wire v4).
+    /// A worker's `Hello` request outside this set is granted `none`
+    /// instead ([`codec::grant`]).  Defaults to everything this build
+    /// speaks; `none` is always included.
+    pub encodings: EncodingSet,
 }
 
 /// Connection bookkeeping, under one short mutex (never held across a
@@ -319,6 +325,9 @@ impl http::StatusSource for Shared {
             pushes_total: pushes,
             pushes_dropped: self.drops.load(Ordering::Relaxed),
             pushes_per_sec: 0.0, // filled in by the listener from deltas
+            bytes_tx: hub.bytes_tx_total(),
+            bytes_rx: hub.bytes_rx_total(),
+            bytes_per_second: 0.0, // listener-filled, like pushes/s
             gap: hub.gap_histogram(),
             lag: hub.lag_histogram(),
             shard_gates: self.master.shard_gates(),
@@ -562,8 +571,10 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> anyhow::Result<()> {
     let mut writer = BufWriter::new(stream);
 
     // Handshake: the first frame must be Hello.
-    let (slot, gen) = match wire::read_frame(&mut reader) {
-        Ok(Msg::Hello { role, reattach }) => {
+    let hub = shared.master.metrics_hub();
+    let (slot, gen, reply_enc) = match wire::read_frame_sized(&mut reader) {
+        Ok((Msg::Hello { role, reattach, encoding }, nread)) => {
+            hub.note_rx(nread);
             let (slot, gen) = match role {
                 Role::Worker => match shared.attach_worker(reattach) {
                     Some((s, g)) => (Some(s), g),
@@ -576,6 +587,13 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> anyhow::Result<()> {
                     (None, 0)
                 }
             };
+            // Control connections stay exact (θ reads, status); a worker
+            // gets the codec::grant of its request against our advertised
+            // set — the client computes the same from the HelloAck mask.
+            let granted = match slot {
+                Some(_) => codec::grant(shared.opts.encodings, encoding),
+                None => Encoding::None,
+            };
             let ack = Msg::HelloAck {
                 slot: slot.map(|s| s as u64).unwrap_or(u64::MAX),
                 gen,
@@ -583,10 +601,11 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> anyhow::Result<()> {
                 k: shared.master.param_len() as u64,
                 shards: shared.master.shard_count() as u32,
                 pipeline: shared.opts.pipeline_depth as u32,
+                encodings: shared.opts.encodings.0,
                 header: shared.header(),
             };
-            wire::write_frame(&mut writer, &ack)?;
-            (slot, gen)
+            hub.note_tx(wire::write_frame(&mut writer, &ack)?);
+            (slot, gen, codec::reply_encoding(granted))
         }
         Ok(_) => {
             let _ = wire::write_frame(
@@ -602,7 +621,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>) -> anyhow::Result<()> {
     // good): catch it, log it, and fall through to the disconnect path so
     // the offending slot is retired like any other dead connection.
     let served = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        serve_requests(&mut reader, &mut writer, &shared, slot, gen)
+        serve_requests(&mut reader, &mut writer, &shared, slot, gen, reply_enc)
     }));
     let served = match served {
         Ok(result) => result,
@@ -644,20 +663,37 @@ fn serve_requests(
     shared: &Arc<Shared>,
     slot: Option<usize>,
     gen: u32,
+    reply_enc: Encoding,
 ) -> anyhow::Result<()> {
+    let hub = shared.master.metrics_hub();
     let ranges = shared.master.shard_ranges();
     let mut group = PushGroup::new(shared.master.param_len(), ranges.len());
     loop {
         // EOF or a malformed (fail-closed) frame both end the connection.
-        let msg = match wire::read_frame(reader) {
-            Ok(m) => m,
+        let msg = match wire::read_frame_sized(reader) {
+            Ok((m, nread)) => {
+                hub.note_rx(nread);
+                m
+            }
             Err(_) => return Ok(()),
         };
         if sync::lock(&shared.conns).shutdown {
             return Ok(()); // close without a reply: the client sees EOF
         }
         let (reply, shutdown_after) = dispatch(shared, slot, gen, msg, &ranges, &mut group);
-        wire::write_frame(writer, &reply)?;
+        // Parameter replies to a quantization-granted worker go through
+        // the codec writers (straight from the reply's buffer); everything
+        // else — and every `none` reply — is the byte-exact `Msg` path.
+        let nwrote = match &reply {
+            Msg::Params { header, params } if reply_enc != Encoding::None => {
+                codec::write_params(writer, header, reply_enc, params)?
+            }
+            Msg::ShardParams { header, shard, params } if reply_enc != Encoding::None => {
+                codec::write_shard_params(writer, header, *shard, reply_enc, params)?
+            }
+            other => wire::write_frame(writer, other)?,
+        };
+        hub.note_tx(nwrote);
         if shutdown_after {
             return Ok(());
         }

@@ -7,20 +7,23 @@
 //! [u32 body_len][b"DANA"][u8 version][u8 tag][payload...]
 //! ```
 //!
-//! Parameter payloads are raw little-endian f32s, so a loopback round trip
-//! is bit-exact — the loopback equivalence suite (`rust/tests/net.rs`)
-//! pins `RemoteMaster` trajectories bit-for-bit against the in-process
-//! drivers for every algorithm.
+//! Parameter payloads are *tagged* (see [`crate::net::codec`]): a
+//! one-byte encoding tag followed by the vector in that encoding.  The
+//! default encoding (`none`, tag 0) is raw little-endian f32s, so a
+//! loopback round trip is bit-exact — the loopback equivalence suite
+//! (`rust/tests/net.rs`) pins `RemoteMaster` trajectories bit-for-bit
+//! against the in-process drivers for every algorithm.
 //!
 //! Decoding is **fail-closed**: a truncated frame, wrong magic, unknown
-//! version, unknown tag, oversized length prefix, an inner count that
-//! exceeds the remaining bytes, or trailing bytes after the payload all
-//! produce an error (never a panic, never a partial message).  The peer
-//! that sent the bad frame is disconnected by the caller.  Encoding is
-//! fail-closed *symmetrically*: [`write_frame`] computes the exact body
-//! length up front ([`Msg::body_len`]) and refuses a frame over
-//! [`MAX_FRAME`] before serializing a byte — the length prefix can never
-//! silently truncate into something the decoder then misparses.
+//! version, unknown tag, unknown payload encoding, oversized length
+//! prefix, an inner count that exceeds the remaining bytes, or trailing
+//! bytes after the payload all produce an error (never a panic, never a
+//! partial message).  The peer that sent the bad frame is disconnected
+//! by the caller.  Encoding is fail-closed *symmetrically*:
+//! [`write_frame`] computes the exact body length up front
+//! ([`Msg::body_len`]) and refuses a frame over [`MAX_FRAME`] before
+//! serializing a byte — the length prefix can never silently truncate
+//! into something the decoder then misparses.
 //!
 //! Version 2 adds shard-sliced transfers for the lock-striped server:
 //! [`Msg::HelloAck`] carries the server's shard count, [`Msg::PullShard`]
@@ -40,11 +43,25 @@
 //! client can warn when its `--pipeline-depth` disagrees with the
 //! server's window accounting.
 //!
+//! Version 4 adds negotiated payload compression and the pooled
+//! zero-copy frame path: [`Msg::Hello`] carries the worker's requested
+//! [`Encoding`] and [`Msg::HelloAck`] the server's advertised
+//! [`crate::net::codec::EncodingSet`] (both sides compute the same
+//! [`crate::net::codec::grant`], so no extra round trip); the four
+//! vector-bearing frames (`Push`/`PushShard`/`Params`/`ShardParams`)
+//! carry the per-payload encoding tag described above; and frame
+//! building/reading goes through a thread-local buffer pool
+//! ([`with_frame_buf`]) plus [`Msg::encode_into`] /
+//! [`crate::net::codec::write_push`]-style borrowed-slice writers, so
+//! the steady-state worker cycle allocates nothing on the push path.
+//!
 //! Algorithm kinds and leave policies travel as their canonical names (the
 //! same strings the CLI parses), so the protocol does not depend on enum
 //! discriminant order; an unknown name is a decode error.
 
+use crate::net::codec::{self, Encoding};
 use crate::optim::{AlgorithmKind, LeavePolicy, Step};
+use std::cell::RefCell;
 use std::io::{Read, Write};
 
 /// Frame magic — rejects non-DANA peers and stream desync immediately.
@@ -52,8 +69,10 @@ pub const MAGIC: [u8; 4] = *b"DANA";
 /// Protocol version; bumped on any incompatible change (2: shard-sliced
 /// PullShard/PushShard/ShardParams frames + shard count in HelloAck;
 /// 3: settled step in PushAck, dropped-push count in Header, pipeline
-/// depth in HelloAck).
-pub const VERSION: u8 = 3;
+/// depth in HelloAck; 4: negotiated payload encodings — requested
+/// encoding in Hello, advertised set in HelloAck, a payload-encoding
+/// tag on every parameter vector).
+pub const VERSION: u8 = 4;
 /// Upper bound on one frame body (1 GiB ≈ 256M f32 parameters).
 pub const MAX_FRAME: u32 = 1 << 30;
 
@@ -104,8 +123,10 @@ pub enum Msg {
     /// returning worker (may claim a live slot a checkpoint restore left
     /// unattached, inheriting its momentum) from a genuinely fresh join
     /// (always `Master::add_worker`: zero momentum, EASGD at the center).
-    /// Control connections ignore the flag.
-    Hello { role: Role, reattach: bool },
+    /// `encoding` is the payload encoding this worker *requests* for its
+    /// pushes (granted iff the server advertises it; see
+    /// [`crate::net::codec::grant`]).  Control connections ignore both.
+    Hello { role: Role, reattach: bool, encoding: Encoding },
     /// Worker: pull parameters (the algorithm's send — θ or look-ahead).
     PullParams,
     /// Worker: deliver an update vector.  `gen` echoes the generation
@@ -142,7 +163,8 @@ pub enum Msg {
     /// `shards` is the server's slice granularity for
     /// [`Msg::PullShard`]/[`Msg::PushShard`] (1 = unsliced serving);
     /// `pipeline` is the server's configured pull-window depth
-    /// (`dana serve --pipeline-depth`).
+    /// (`dana serve --pipeline-depth`); `encodings` is the server's
+    /// advertised [`crate::net::codec::EncodingSet`] bitmask.
     HelloAck {
         slot: u64,
         gen: u32,
@@ -150,6 +172,7 @@ pub enum Msg {
         k: u64,
         shards: u32,
         pipeline: u32,
+        encodings: u32,
         header: Header,
     },
     /// Reply to [`Msg::PullParams`].
@@ -196,7 +219,7 @@ pub(crate) fn put_vec_f32(out: &mut Vec<u8>, v: &[f32]) {
     }
 }
 
-fn put_header(out: &mut Vec<u8>, h: &Header) {
+pub(crate) fn put_header(out: &mut Vec<u8>, h: &Header) {
     put_u64(out, h.master_step);
     put_f32(out, h.eta);
     put_f32(out, h.gamma);
@@ -231,19 +254,24 @@ impl Msg {
 
     /// Exact encoded body length (magic + version + tag + payload, without
     /// the length prefix), computed arithmetically — [`write_frame`] uses
-    /// it to reject an oversized frame *before* serializing anything.
+    /// it to reject an oversized frame *before* serializing anything, and
+    /// [`Msg::encode_into`] to reserve the whole frame in one shot.
+    /// Parameter vectors count 1 extra byte for the payload-encoding tag
+    /// (the `Msg` path always writes them as `none`; compressed frames go
+    /// through the [`crate::net::codec`] writers, which size themselves
+    /// with [`crate::net::codec::payload_wire_len`]).
     pub fn body_len(&self) -> usize {
         const HDR: usize = 8 + 4 + 4 + 4 + 8 + 8 + 8; // Header
         let payload = match self {
-            Msg::Hello { .. } => 2,
+            Msg::Hello { .. } => 2 + 1 + 4,
             Msg::PullParams | Msg::Checkpoint | Msg::Status | Msg::GetTheta | Msg::Shutdown => 0,
-            Msg::Push { msg, .. } => 4 + 8 + 4 * msg.len(),
+            Msg::Push { msg, .. } => 4 + 1 + 8 + 4 * msg.len(),
             Msg::Leave { policy } => 4 + policy.name().len(),
             Msg::PullShard { .. } => 4,
-            Msg::PushShard { msg, .. } => 4 + 4 + 8 + 4 * msg.len(),
-            Msg::HelloAck { kind, .. } => 8 + 4 + (4 + kind.name().len()) + 8 + 4 + 4 + HDR,
-            Msg::Params { params, .. } => HDR + 8 + 4 * params.len(),
-            Msg::ShardParams { params, .. } => HDR + 4 + 8 + 4 * params.len(),
+            Msg::PushShard { msg, .. } => 4 + 4 + 1 + 8 + 4 * msg.len(),
+            Msg::HelloAck { kind, .. } => 8 + 4 + (4 + kind.name().len()) + 8 + 4 + 4 + 4 + HDR,
+            Msg::Params { params, .. } => HDR + 1 + 8 + 4 * params.len(),
+            Msg::ShardParams { params, .. } => HDR + 4 + 1 + 8 + 4 * params.len(),
             Msg::PushAck { .. } => HDR + 8 + 12,
             Msg::Ack { .. } => HDR,
             Msg::Theta { theta, .. } => HDR + 8 + 4 * theta.len(),
@@ -252,79 +280,95 @@ impl Msg {
         4 + 1 + 1 + payload // magic + version + tag
     }
 
-    /// Serialize into one frame (length prefix included).  Callers that
-    /// reach a wire go through [`write_frame`], which enforces
+    /// Serialize one frame (length prefix included) into `frame`,
+    /// clearing it first.  The buffer is pre-reserved to the exact frame
+    /// size via [`Self::body_len`], so a pooled buffer reaches its
+    /// steady-state capacity once and never reallocates again.  Callers
+    /// that reach a wire go through [`write_frame`], which enforces
     /// [`MAX_FRAME`]; this method itself asserts only internal
     /// consistency with [`Self::body_len`].
-    pub fn encode(&self) -> Vec<u8> {
-        let mut body = Vec::with_capacity(64);
-        body.extend_from_slice(&MAGIC);
-        body.push(VERSION);
-        body.push(self.tag());
+    pub fn encode_into(&self, frame: &mut Vec<u8>) {
+        frame.clear();
+        let body_len = self.body_len();
+        frame.reserve(4 + body_len);
+        put_u32(frame, body_len as u32);
+        frame.extend_from_slice(&MAGIC);
+        frame.push(VERSION);
+        frame.push(self.tag());
         match self {
-            Msg::Hello { role, reattach } => {
-                body.push(match role {
+            Msg::Hello { role, reattach, encoding } => {
+                frame.push(match role {
                     Role::Worker => 0,
                     Role::Control => 1,
                 });
-                body.push(u8::from(*reattach));
+                frame.push(u8::from(*reattach));
+                frame.push(encoding.tag());
+                put_u32(frame, encoding.param());
             }
             Msg::PullParams | Msg::Checkpoint | Msg::Status | Msg::GetTheta | Msg::Shutdown => {}
             Msg::Push { gen, msg } => {
-                put_u32(&mut body, *gen);
-                put_vec_f32(&mut body, msg);
+                put_u32(frame, *gen);
+                codec::put_payload(frame, Encoding::None, msg);
             }
-            Msg::Leave { policy } => put_str(&mut body, policy.name()),
-            Msg::PullShard { shard } => put_u32(&mut body, *shard),
+            Msg::Leave { policy } => put_str(frame, policy.name()),
+            Msg::PullShard { shard } => put_u32(frame, *shard),
             Msg::PushShard { gen, shard, msg } => {
-                put_u32(&mut body, *gen);
-                put_u32(&mut body, *shard);
-                put_vec_f32(&mut body, msg);
+                put_u32(frame, *gen);
+                put_u32(frame, *shard);
+                codec::put_payload(frame, Encoding::None, msg);
             }
-            Msg::HelloAck { slot, gen, kind, k, shards, pipeline, header } => {
-                put_u64(&mut body, *slot);
-                put_u32(&mut body, *gen);
-                put_str(&mut body, kind.name());
-                put_u64(&mut body, *k);
-                put_u32(&mut body, *shards);
-                put_u32(&mut body, *pipeline);
-                put_header(&mut body, header);
+            Msg::HelloAck { slot, gen, kind, k, shards, pipeline, encodings, header } => {
+                put_u64(frame, *slot);
+                put_u32(frame, *gen);
+                put_str(frame, kind.name());
+                put_u64(frame, *k);
+                put_u32(frame, *shards);
+                put_u32(frame, *pipeline);
+                put_u32(frame, *encodings);
+                put_header(frame, header);
             }
             Msg::Params { header, params } => {
-                put_header(&mut body, header);
-                put_vec_f32(&mut body, params);
+                put_header(frame, header);
+                codec::put_payload(frame, Encoding::None, params);
             }
             Msg::ShardParams { header, shard, params } => {
-                put_header(&mut body, header);
-                put_u32(&mut body, *shard);
-                put_vec_f32(&mut body, params);
+                put_header(frame, header);
+                put_u32(frame, *shard);
+                codec::put_payload(frame, Encoding::None, params);
             }
             Msg::PushAck { header, step, eta, gamma, lambda } => {
-                put_header(&mut body, header);
-                put_u64(&mut body, *step);
-                put_f32(&mut body, *eta);
-                put_f32(&mut body, *gamma);
-                put_f32(&mut body, *lambda);
+                put_header(frame, header);
+                put_u64(frame, *step);
+                put_f32(frame, *eta);
+                put_f32(frame, *gamma);
+                put_f32(frame, *lambda);
             }
-            Msg::Ack { header } => put_header(&mut body, header),
+            Msg::Ack { header } => put_header(frame, header),
             Msg::Theta { header, theta } => {
-                put_header(&mut body, header);
-                put_vec_f32(&mut body, theta);
+                put_header(frame, header);
+                put_vec_f32(frame, theta);
             }
             Msg::Error { recoverable, detail } => {
-                body.push(u8::from(*recoverable));
-                put_str(&mut body, detail);
+                frame.push(u8::from(*recoverable));
+                put_str(frame, detail);
             }
         }
-        debug_assert_eq!(body.len(), self.body_len(), "body_len out of sync with encode");
-        let mut frame = Vec::with_capacity(4 + body.len());
-        put_u32(&mut frame, body.len() as u32);
-        frame.extend_from_slice(&body);
+        debug_assert_eq!(frame.len(), 4 + body_len, "body_len out of sync with encode");
+    }
+
+    /// Serialize into one freshly allocated frame (length prefix
+    /// included) — the non-pooled convenience over [`Self::encode_into`].
+    pub fn encode(&self) -> Vec<u8> {
+        let mut frame = Vec::new();
+        self.encode_into(&mut frame);
         frame
     }
 
     /// Decode one frame *body* (magic/version/tag/payload, without the
-    /// length prefix).  Fail-closed; see the module docs.
+    /// length prefix).  Fail-closed; see the module docs.  Parameter
+    /// payloads are densified to `Vec<f32>` here — exactly once per
+    /// frame, whatever their wire encoding — so everything above this
+    /// layer (masters, ticket gates, tests) sees dense vectors.
     pub fn decode(body: &[u8]) -> anyhow::Result<Msg> {
         let mut d = Dec { b: body, i: 0 };
         let magic = d.take(4)?;
@@ -343,16 +387,25 @@ impl Msg {
                     other => anyhow::bail!("unknown role {other}"),
                 },
                 reattach: d.u8()? != 0,
+                encoding: {
+                    let tag = d.u8()?;
+                    let param = d.u32()?;
+                    Encoding::from_wire(tag, param)?
+                },
             },
             2 => Msg::PullParams,
-            3 => Msg::Push { gen: d.u32()?, msg: d.vec_f32()? },
+            3 => Msg::Push { gen: d.u32()?, msg: codec::get_payload(&mut d)? },
             4 => Msg::Leave { policy: d.str()?.parse()? },
             5 => Msg::Checkpoint,
             6 => Msg::Status,
             7 => Msg::GetTheta,
             8 => Msg::Shutdown,
             9 => Msg::PullShard { shard: d.u32()? },
-            10 => Msg::PushShard { gen: d.u32()?, shard: d.u32()?, msg: d.vec_f32()? },
+            10 => Msg::PushShard {
+                gen: d.u32()?,
+                shard: d.u32()?,
+                msg: codec::get_payload(&mut d)?,
+            },
             16 => Msg::HelloAck {
                 slot: d.u64()?,
                 gen: d.u32()?,
@@ -360,13 +413,14 @@ impl Msg {
                 k: d.u64()?,
                 shards: d.u32()?,
                 pipeline: d.u32()?,
+                encodings: d.u32()?,
                 header: d.header()?,
             },
-            17 => Msg::Params { header: d.header()?, params: d.vec_f32()? },
+            17 => Msg::Params { header: d.header()?, params: codec::get_payload(&mut d)? },
             22 => Msg::ShardParams {
                 header: d.header()?,
                 shard: d.u32()?,
-                params: d.vec_f32()?,
+                params: codec::get_payload(&mut d)?,
             },
             18 => Msg::PushAck {
                 header: d.header()?,
@@ -385,11 +439,48 @@ impl Msg {
     }
 }
 
-/// Write one message as a frame and flush.  Fail-closed symmetrically
-/// with [`read_frame`]: a body over [`MAX_FRAME`] is refused *before*
-/// serialization — without this, the `u32` length prefix would silently
-/// truncate and the peer's fail-closed decoder would tear the stream.
-pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> std::io::Result<()> {
+// ------------------------------------------------------------ frame pool
+
+thread_local! {
+    /// Per-thread frame-buffer pool.  Every connection-handling loop and
+    /// every hot-path writer borrows scratch from here, so the second
+    /// and every later frame on a thread reuses the same steady-state
+    /// allocation instead of growing a fresh `Vec` per frame.
+    static FRAME_BUFS: RefCell<Vec<Vec<u8>>> = RefCell::new(Vec::new());
+}
+
+/// Keep at most this many buffers per thread…
+const POOL_BUFS: usize = 8;
+/// …and never pool a buffer that grew past this capacity (one giant
+/// `Theta` transfer must not pin gigabytes on a serving thread).
+const POOL_CAP: usize = 16 << 20;
+
+/// Run `f` with a pooled scratch buffer (contents undefined — clear it).
+/// Reentrancy-safe: the pool is a stack and the borrow is released
+/// before `f` runs, so nested calls simply take distinct buffers.
+pub(crate) fn with_frame_buf<T>(f: impl FnOnce(&mut Vec<u8>) -> T) -> T {
+    let mut buf = FRAME_BUFS.with(|p| p.borrow_mut().pop()).unwrap_or_default();
+    let out = f(&mut buf);
+    if buf.capacity() <= POOL_CAP {
+        FRAME_BUFS.with(|p| {
+            let mut p = p.borrow_mut();
+            if p.len() < POOL_BUFS {
+                buf.clear();
+                p.push(buf);
+            }
+        });
+    }
+    out
+}
+
+/// Write one message as a frame and flush, returning the frame's size on
+/// the wire (length prefix included) for byte accounting.  Fail-closed
+/// symmetrically with [`read_frame`]: a body over [`MAX_FRAME`] is
+/// refused *before* serialization — without this, the `u32` length
+/// prefix would silently truncate and the peer's fail-closed decoder
+/// would tear the stream.  The frame is built in a pooled buffer
+/// ([`with_frame_buf`]), so steady-state writes allocate nothing.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> std::io::Result<usize> {
     let n = msg.body_len();
     if n > MAX_FRAME as usize {
         return Err(std::io::Error::new(
@@ -397,21 +488,35 @@ pub fn write_frame<W: Write>(w: &mut W, msg: &Msg) -> std::io::Result<()> {
             format!("refusing to encode a {n}-byte frame body (cap {MAX_FRAME})"),
         ));
     }
-    w.write_all(&msg.encode())?;
-    w.flush()
+    with_frame_buf(|buf| {
+        msg.encode_into(buf);
+        w.write_all(buf)?;
+        w.flush()?;
+        Ok(4 + n)
+    })
 }
 
 /// Read one frame and decode it.  Any transport error (including EOF,
 /// which the servers treat as a worker leave) surfaces as `Err`.
 pub fn read_frame<R: Read>(r: &mut R) -> anyhow::Result<Msg> {
+    Ok(read_frame_sized(r)?.0)
+}
+
+/// [`read_frame`] plus the frame's size on the wire (length prefix
+/// included), for byte accounting.  The body is staged in a pooled
+/// buffer, so steady-state reads allocate only the decoded message.
+pub fn read_frame_sized<R: Read>(r: &mut R) -> anyhow::Result<(Msg, usize)> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
     let len = u32::from_le_bytes(len);
     anyhow::ensure!(len <= MAX_FRAME, "frame length {len} exceeds cap {MAX_FRAME}");
     anyhow::ensure!(len >= 6, "frame length {len} shorter than the header");
-    let mut body = vec![0u8; len as usize];
-    r.read_exact(&mut body)?;
-    Msg::decode(&body)
+    with_frame_buf(|body| {
+        body.clear();
+        body.resize(len as usize, 0);
+        r.read_exact(body)?;
+        Ok((Msg::decode(body)?, 4 + len as usize))
+    })
 }
 
 // ---------------------------------------------------------------- decode

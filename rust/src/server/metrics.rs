@@ -156,6 +156,10 @@ impl HistogramSnapshot {
 #[derive(Debug)]
 pub struct MetricsHub {
     pushes: AtomicU64,
+    /// Wire bytes sent / received by the transport server (frame bytes,
+    /// length prefixes included) — the compression smoke's ground truth.
+    bytes_tx: AtomicU64,
+    bytes_rx: AtomicU64,
     gap: AtomicHistogram,
     lag: AtomicHistogram,
 }
@@ -164,6 +168,8 @@ impl Default for MetricsHub {
     fn default() -> MetricsHub {
         MetricsHub {
             pushes: AtomicU64::new(0),
+            bytes_tx: AtomicU64::new(0),
+            bytes_rx: AtomicU64::new(0),
             gap: AtomicHistogram::new(GAP_BOUNDS),
             lag: AtomicHistogram::new(LAG_BOUNDS),
         }
@@ -180,6 +186,24 @@ impl MetricsHub {
     /// Record one sampled gap observation.
     pub fn note_gap(&self, gap: f64) {
         self.gap.observe(gap);
+    }
+
+    /// Count `n` wire bytes written to a client.
+    pub fn note_tx(&self, n: usize) {
+        self.bytes_tx.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Count `n` wire bytes read from a client.
+    pub fn note_rx(&self, n: usize) {
+        self.bytes_rx.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    pub fn bytes_tx_total(&self) -> u64 {
+        self.bytes_tx.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_rx_total(&self) -> u64 {
+        self.bytes_rx.load(Ordering::Relaxed)
     }
 
     pub fn pushes_total(&self) -> u64 {
@@ -369,6 +393,17 @@ mod tests {
         let lags = hub.lag_histogram();
         assert_eq!(lags.count, 200);
         assert_eq!(lags.sum, 4.0 * (0..50).sum::<u64>() as f64);
+    }
+
+    #[test]
+    fn hub_byte_counters_accumulate() {
+        let hub = MetricsHub::default();
+        assert_eq!((hub.bytes_tx_total(), hub.bytes_rx_total()), (0, 0));
+        hub.note_tx(100);
+        hub.note_tx(28);
+        hub.note_rx(7);
+        assert_eq!(hub.bytes_tx_total(), 128);
+        assert_eq!(hub.bytes_rx_total(), 7);
     }
 
     #[test]

@@ -46,6 +46,8 @@
 //! determinism and the `+D` lag-histogram shift.
 
 use crate::config::TrainConfig;
+use crate::net::codec::Compressor;
+use crate::net::Encoding;
 use crate::optim::WorkerState;
 use crate::server::Master;
 use crate::sim::{AsyncSchedule, ChurnAction, ClusterEvent, Completion, ExecTimeModel};
@@ -70,6 +72,17 @@ pub(crate) fn eval_cadence(cfg: &TrainConfig) -> u64 {
 /// Train-loss subsampling stride: ~200 points over the run.
 pub(crate) fn loss_sample_every(total: u64) -> u64 {
     (total / 200).max(1)
+}
+
+/// The push-side gradient compressor for an **in-process** run
+/// (`--encoding` without `--master`): the same quantize/sparsify +
+/// error-feedback transform [`crate::net::RemoteMaster`] applies on the
+/// wire, so compression experiments can be simulated without a server.
+/// Against a remote master the client owns the transform — the driver
+/// must never apply it a second time, so this returns an inert
+/// [`Encoding::None`] compressor there.
+fn in_process_compressor(cfg: &TrainConfig) -> Compressor {
+    Compressor::new(if cfg.master_addr.is_none() { cfg.encoding } else { Encoding::None })
 }
 
 /// Final-eval epilogue shared by every driver: record the last
@@ -251,6 +264,7 @@ fn handle_event(
     event: ClusterEvent,
     window: &mut PullWindow,
     wstate: &mut Vec<WorkerState>,
+    compressor: &mut Compressor,
     policy: crate::optim::LeavePolicy,
     report: &mut TrainReport,
 ) -> anyhow::Result<Option<Completion>> {
@@ -269,12 +283,15 @@ fn handle_event(
             }
             // the joiner pulls (its whole window of) fresh parameters
             window.prime_slot(server, slot);
+            // a reused slot must not inherit the leaver's error residual
+            compressor.reset_slot(slot);
             report.workers_joined += 1;
             Ok(None)
         }
         ClusterEvent::Leave { worker, .. } => {
             server.remove_worker(worker, policy)?;
             window.retire(worker);
+            compressor.reset_slot(worker);
             report.workers_left += 1;
             Ok(None)
         }
@@ -317,6 +334,7 @@ where
     // optimizer state (DANA-Slim's momentum).
     let mut window = PullWindow::prime(server.as_mut(), n, cfg.pipeline_depth, theta0.len());
     let mut wstate: Vec<WorkerState> = (0..n).map(|_| server.make_worker_state()).collect();
+    let mut compressor = in_process_compressor(cfg);
 
     let eval_every = eval_cadence(cfg);
     let loss_sample = loss_sample_every(total);
@@ -336,6 +354,7 @@ where
             event,
             &mut window,
             &mut wstate,
+            &mut compressor,
             cfg.leave_policy,
             &mut report,
         )?
@@ -355,6 +374,7 @@ where
         }
         let s = server.step_now();
         server.worker_transform(&mut wstate[w], &mut msg, s);
+        compressor.transform(w, &mut msg);
         server.push_update(w, &msg)?;
         // The pull for the batch `D + 1` ahead goes out with the push
         // (one combined round trip on a pipelined remote master).
@@ -461,6 +481,10 @@ where
     };
     let eval_every = eval_cadence(cfg);
     let loss_sample = loss_sample_every(total);
+    // Push-side compression lives on the master thread (the one place
+    // every update already passes through), keeping the per-slot
+    // error-feedback residuals single-threaded.
+    let mut compressor = in_process_compressor(cfg);
 
     std::thread::scope(|scope| -> anyhow::Result<()> {
         // Spawn (or respawn) the worker thread for a slot; used at kick-off
@@ -556,6 +580,8 @@ where
                             tx.send(ToWorker::Params(server.pull_params(slot))).ok();
                         }
                         senders[slot] = Some(tx);
+                        // a reused slot must not inherit a leaver's residual
+                        compressor.reset_slot(slot);
                         report.workers_joined += 1;
                     }
                     ChurnAction::Leave(who) => {
@@ -585,6 +611,7 @@ where
                             if let Some(tx) = senders[w].take() {
                                 tx.send(ToWorker::Stop).ok();
                             }
+                            compressor.reset_slot(w);
                             report.workers_left += 1;
                         }
                     }
@@ -637,6 +664,9 @@ where
                             tx.send(ToWorker::Params(server.pull_params(worker))).ok();
                         }
                         senders[worker] = Some(tx);
+                        // residuals are incarnation-local: abandoned with
+                        // the dead thread, like a remote reconnect's
+                        compressor.reset_slot(worker);
                     } else {
                         // Restart budget exhausted (or the slot is already
                         // retired): a dying worker is an implicit leave, so
@@ -671,6 +701,7 @@ where
                     if !loss.is_finite() {
                         report.diverged = true;
                     }
+                    compressor.transform(worker, &mut msg);
                     server.push_update(worker, &msg)?;
                     step += 1;
                     if step < total {

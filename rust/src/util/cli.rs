@@ -240,6 +240,34 @@ mod tests {
     }
 
     #[test]
+    fn encoding_flags_round_trip() {
+        use crate::net::{Encoding, EncodingSet};
+        // the `dana train --encoding E` spelling (wire v4)
+        let mut a = parse("train --encoding topk:32 --workers=8", true);
+        assert_eq!(
+            a.opt_parse::<Encoding>("encoding").unwrap(),
+            Some(Encoding::TopK { k: 32 })
+        );
+        let _ = a.parse_or::<usize>("workers", 1);
+        a.finish().unwrap();
+        // the `dana serve --encodings LIST` spelling
+        let mut b = parse("serve --encodings f16,bf16", true);
+        let set = b.parse_or::<EncodingSet>("encodings", EncodingSet::ALL).unwrap();
+        assert!(set.contains(Encoding::F16));
+        assert!(set.contains(Encoding::Bf16));
+        assert!(set.contains(Encoding::None), "none is always advertised");
+        assert!(!set.contains(Encoding::TopK { k: 1 }));
+        b.finish().unwrap();
+        // defaults and malformed values
+        let mut c = parse("train", true);
+        assert_eq!(c.opt_parse::<Encoding>("encoding").unwrap(), None);
+        let mut d = parse("train --encoding topk:0", true);
+        assert!(d.opt_parse::<Encoding>("encoding").is_err(), "topk needs k >= 1");
+        let mut e = parse("serve --encodings f16,flac", true);
+        assert!(e.parse_or::<EncodingSet>("encodings", EncodingSet::ALL).is_err());
+    }
+
+    #[test]
     fn unknown_option_rejected() {
         let mut a = parse("run --oops 1", true);
         let _ = a.flag("quick");

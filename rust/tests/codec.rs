@@ -1,0 +1,288 @@
+//! Wire-v4 codec acceptance (ISSUE 7):
+//!
+//! 1. `encoding=none` pooled frames are **byte-identical** to the legacy
+//!    `Msg::encode` path, and exact-f32 round trips preserve every bit
+//!    pattern (NaN payloads, denormals, signed zero).
+//! 2. f16/bf16 payloads round-trip within their format's rounding error,
+//!    and the decoded values are bit-for-bit what the in-process
+//!    [`Compressor`] simulation produces — the wire and the simulation
+//!    agree on the quantization noise.
+//! 3. Top-k error feedback conserves the gradient: over a window of
+//!    pushes, the sparsified updates plus the banked residual sum to
+//!    exactly the dense gradients (integer-valued, so equality is exact).
+//! 4. The payload decoder fails closed on malformed compression.
+//! 5. Negotiation over a real loopback socket: an unadvertised request
+//!    falls back to `none` (never an error), a granted f16 shrinks both
+//!    directions of the wire by >= 40%, and a granted top-k run is
+//!    bit-for-bit the in-process compression simulation.
+
+use dana::config::{TrainConfig, Workload};
+use dana::net::codec::{self, Compressor};
+use dana::net::wire::{read_frame, Msg, MAGIC, VERSION};
+use dana::net::{Encoding, EncodingSet, NetServer, RemoteMaster, ServeOptions};
+use dana::optim::{AlgorithmKind, LrSchedule};
+use dana::server::{make_master, Master};
+use dana::train::{real_async, sim_trainer};
+use dana::util::rng::Rng;
+use std::io::Cursor;
+
+fn cfg(kind: AlgorithmKind, workers: usize, epochs: f64) -> TrainConfig {
+    let mut c = TrainConfig::preset(Workload::C10, kind, workers, epochs);
+    c.seed = 61;
+    // gap/lag metrics live server-side on a remote run; keep them off so
+    // both sides of each comparison record nothing
+    c.metrics_every = 0;
+    c
+}
+
+/// The master a `dana serve` for this config would host: zero slots
+/// (connect == join), same schedule, synthetic θ₀.
+fn serve_master(c: &TrainConfig, k: usize) -> Box<dyn Master> {
+    make_master(
+        c.algorithm,
+        &real_async::synthetic_theta0(k),
+        LrSchedule::new(c.schedule.clone()),
+        0,
+        c.shards,
+        1,
+    )
+}
+
+// ------------------------------------------------------------- round trips
+
+#[test]
+fn none_pooled_frames_match_legacy_encode_bit_for_bit() {
+    let vals = vec![
+        f32::NAN,
+        f32::from_bits(0x7FC0_1234), // payload-carrying NaN
+        -0.0,
+        f32::from_bits(0x0000_0001), // smallest denormal
+        f32::MAX,
+        -3.25,
+    ];
+    let legacy = Msg::Push { gen: 42, msg: vals.clone() }.encode();
+    let mut pooled = Vec::new();
+    let n = codec::write_push(&mut pooled, 42, Encoding::None, &vals).unwrap();
+    assert_eq!(n, pooled.len(), "write_push must report the on-wire size");
+    assert_eq!(pooled, legacy, "encoding=none must be byte-identical to the legacy frame");
+    match read_frame(&mut Cursor::new(pooled)).unwrap() {
+        Msg::Push { gen, msg } => {
+            assert_eq!(gen, 42);
+            assert_eq!(msg.len(), vals.len());
+            for (a, b) in msg.iter().zip(&vals) {
+                assert_eq!(a.to_bits(), b.to_bits(), "exact-f32 must preserve every bit");
+            }
+        }
+        other => panic!("wrong message back: {other:?}"),
+    }
+}
+
+#[test]
+fn quantized_round_trip_error_is_bounded_and_matches_the_simulation() {
+    let mut rng = Rng::new(17);
+    let vals: Vec<f32> = (0..4096).map(|_| (rng.normal() * 8.0) as f32).collect();
+    // (encoding, relative error bound, absolute floor for subnormals)
+    let cases = [
+        (Encoding::F16, 2.0f32.powi(-11), 2.0f32.powi(-24)),
+        (Encoding::Bf16, 2.0f32.powi(-8), 2.0f32.powi(-133)),
+    ];
+    for (enc, rel, abs) in cases {
+        let mut buf = Vec::new();
+        codec::write_push(&mut buf, 0, enc, &vals).unwrap();
+        let exact = Msg::Push { gen: 0, msg: vals.clone() }.encode();
+        assert!(
+            buf.len() < exact.len() * 6 / 10,
+            "{enc}: a half-width payload must shrink the frame ({} vs {})",
+            buf.len(),
+            exact.len()
+        );
+        let back = match read_frame(&mut Cursor::new(buf)).unwrap() {
+            Msg::Push { msg, .. } => msg,
+            other => panic!("wrong message back: {other:?}"),
+        };
+        // bounded error vs the original...
+        for (q, x) in back.iter().zip(&vals) {
+            assert!(
+                (q - x).abs() <= rel * x.abs() + abs,
+                "{enc}: {x} decoded as {q}, outside the format's rounding error"
+            );
+        }
+        // ...and bit-for-bit agreement with the in-process simulation
+        let mut sim = vals.clone();
+        Compressor::new(enc).transform(0, &mut sim);
+        for (q, s) in back.iter().zip(&sim) {
+            assert_eq!(q.to_bits(), s.to_bits(), "{enc}: wire and Compressor disagree");
+        }
+    }
+}
+
+#[test]
+fn topk_error_feedback_conserves_the_gradient_sum() {
+    let n = 64usize;
+    let k = 8u32;
+    let mut c = Compressor::new(Encoding::TopK { k });
+    let mut rng = Rng::new(5);
+    let mut dense_sum = vec![0.0f32; n];
+    let mut sent_sum = vec![0.0f32; n];
+    for _ in 0..10 {
+        // integer-valued gradients in [-32, 32]: every partial sum stays
+        // far inside f32's exact-integer range, so conservation is exact
+        let g: Vec<f32> = (0..n).map(|_| rng.below(65) as f32 - 32.0).collect();
+        for (d, x) in dense_sum.iter_mut().zip(&g) {
+            *d += x;
+        }
+        let mut t = g.clone();
+        c.transform(0, &mut t);
+        let nnz = t.iter().filter(|x| **x != 0.0).count();
+        assert!(nnz <= k as usize, "top-k sent {nnz} > k={k} coordinates");
+        for (s, x) in sent_sum.iter_mut().zip(&t) {
+            *s += x;
+        }
+    }
+    // flush the residual: zero-gradient pushes drain at least k banked
+    // coordinates each, so ceil(n/k) rounds empty it completely
+    for _ in 0..n.div_ceil(k as usize) {
+        let mut z = vec![0.0f32; n];
+        c.transform(0, &mut z);
+        for (s, x) in sent_sum.iter_mut().zip(&z) {
+            *s += x;
+        }
+    }
+    assert_eq!(sent_sum, dense_sum, "sparsified + residual must equal the dense gradient");
+    // the residual is now empty, and a reset keeps it that way
+    c.reset_slot(0);
+    let mut z = vec![0.0f32; n];
+    c.transform(0, &mut z);
+    assert!(z.iter().all(|x| *x == 0.0), "a drained+reset slot has nothing banked");
+}
+
+// ------------------------------------------------------------- fail closed
+
+/// A syntactically valid v4 `Push` frame (gen 7) around an arbitrary
+/// payload blob — the decoder must judge the payload on its own merits.
+fn push_frame(payload: &[u8]) -> Vec<u8> {
+    let body_len = 4 + 1 + 1 + 4 + payload.len();
+    let mut f = Vec::with_capacity(4 + body_len);
+    f.extend_from_slice(&(body_len as u32).to_le_bytes());
+    f.extend_from_slice(&MAGIC);
+    f.push(VERSION);
+    f.push(3); // Push
+    f.extend_from_slice(&7u32.to_le_bytes()); // gen
+    f.extend_from_slice(payload);
+    f
+}
+
+#[test]
+fn payload_decoder_fails_closed_on_malformed_compression() {
+    let reject = |payload: &[u8], needle: &str| {
+        let err = read_frame(&mut Cursor::new(push_frame(payload))).unwrap_err();
+        assert!(err.to_string().contains(needle), "want {needle:?} in: {err}");
+    };
+    // unknown payload tag
+    reject(&[9], "unknown payload encoding");
+    // f16 declares 3 halves but carries only 2
+    let mut short = vec![1u8];
+    short.extend_from_slice(&3u64.to_le_bytes());
+    short.extend_from_slice(&[0u8; 4]);
+    assert!(read_frame(&mut Cursor::new(push_frame(&short))).is_err());
+    // a NaN half is rejected (quantized gradients never carry NaN)
+    let mut nan = vec![1u8];
+    nan.extend_from_slice(&1u64.to_le_bytes());
+    nan.extend_from_slice(&0x7E00u16.to_le_bytes());
+    reject(&nan, "NaN");
+    // top-k: an index past full_len
+    let mut oob = vec![3u8];
+    oob.extend_from_slice(&4u64.to_le_bytes()); // full
+    oob.extend_from_slice(&1u64.to_le_bytes()); // nnz
+    oob.extend_from_slice(&4u32.to_le_bytes()); // index 4 >= full 4
+    oob.extend_from_slice(&1.0f32.to_le_bytes());
+    reject(&oob, "out of range");
+    // top-k: nnz exceeding full_len
+    let mut fat = vec![3u8];
+    fat.extend_from_slice(&2u64.to_le_bytes());
+    fat.extend_from_slice(&3u64.to_le_bytes());
+    reject(&fat, "nnz");
+}
+
+// ------------------------------------------------------------- negotiation
+
+#[test]
+fn unadvertised_request_falls_back_to_none_and_still_serves() {
+    let k = 32;
+    let c = cfg(AlgorithmKind::Asgd, 1, 0.2);
+    let opts = ServeOptions { encodings: EncodingSet::NONE_ONLY, ..Default::default() };
+    let mut srv = NetServer::start(serve_master(&c, k), "127.0.0.1:0", opts).unwrap();
+    let mut rm = RemoteMaster::connect_with(&srv.url(), 1, None, Encoding::F16).unwrap();
+    assert_eq!(
+        rm.granted_encoding(),
+        Encoding::None,
+        "a strict server grants none, never an error"
+    );
+    let mut buf = vec![0.0f32; k];
+    rm.pull_into(0, &mut buf);
+    rm.push_update(0, &vec![0.5; k]).unwrap();
+    assert_eq!(rm.steps_done(), 1, "the uncompressed fallback must serve normally");
+    drop(rm);
+    srv.stop();
+}
+
+#[test]
+fn granted_f16_shrinks_both_wire_directions_by_40_percent() {
+    let k = 4096;
+    let c = cfg(AlgorithmKind::Asgd, 1, 0.2);
+    let mut measured = Vec::new();
+    for enc in [Encoding::None, Encoding::F16] {
+        let opts = ServeOptions::default();
+        let mut srv = NetServer::start(serve_master(&c, k), "127.0.0.1:0", opts).unwrap();
+        let mut rm = RemoteMaster::connect_with(&srv.url(), 1, None, enc).unwrap();
+        assert_eq!(rm.granted_encoding(), enc, "the default advertisement grants {enc}");
+        let mut buf = vec![0.0f32; k];
+        let g = vec![0.125f32; k];
+        let (t0, r0) = rm.wire_bytes();
+        for _ in 0..8 {
+            rm.pull_into(0, &mut buf);
+            rm.push_update(0, &g).unwrap();
+        }
+        let (t1, r1) = rm.wire_bytes();
+        measured.push((t1 - t0, r1 - r0));
+        drop(rm);
+        srv.stop();
+    }
+    let (none_tx, none_rx) = measured[0];
+    let (f16_tx, f16_rx) = measured[1];
+    assert!(
+        f16_tx * 10 <= none_tx * 6,
+        "f16 pushes must cut tx bytes/step by >= 40% ({f16_tx} vs {none_tx})"
+    );
+    assert!(
+        f16_rx * 10 <= none_rx * 6,
+        "f16 params replies must cut rx bytes/step by >= 40% ({f16_rx} vs {none_rx})"
+    );
+}
+
+#[test]
+fn topk_loopback_matches_the_in_process_simulation_bit_for_bit() {
+    // Top-k replies stay exact (reply_encoding), the sparse payload is
+    // bit-exact for its nonzeros, and both paths run the identical
+    // error-feedback transform keyed by worker index — so a compressed
+    // run over real sockets must reproduce the in-process simulation's
+    // trajectory exactly.
+    let k = 48;
+    for kind in [AlgorithmKind::Asgd, AlgorithmKind::DanaZero] {
+        let mut c = cfg(kind, 2, 0.4);
+        c.encoding = Encoding::TopK { k: 6 };
+        let base = sim_trainer::run_synthetic(&c, k).unwrap();
+        let opts = ServeOptions::default();
+        let mut srv = NetServer::start(serve_master(&c, k), "127.0.0.1:0", opts).unwrap();
+        let mut rc = c.clone();
+        rc.master_addr = Some(srv.url());
+        let remote = sim_trainer::run_synthetic(&rc, k).unwrap();
+        assert_eq!(
+            remote.final_test_loss, base.final_test_loss,
+            "{kind}: top-k final loss diverged across the wire"
+        );
+        assert_eq!(remote.loss_curve, base.loss_curve, "{kind}: top-k loss curve");
+        assert_eq!(remote.steps, base.steps, "{kind}");
+        srv.stop();
+    }
+}

@@ -17,7 +17,7 @@
 use dana::config::{TrainConfig, Workload};
 use dana::net::checkpoint;
 use dana::net::wire::{read_frame, write_frame, Msg, Role};
-use dana::net::{NetServer, RemoteMaster, ServeOptions};
+use dana::net::{Encoding, NetServer, RemoteMaster, ServeOptions};
 use dana::optim::{AlgorithmKind, LeavePolicy, LrSchedule, StateVec};
 use dana::server::{make_master, Master, MasterSnapshot};
 use dana::sim::ChurnSchedule;
@@ -202,7 +202,7 @@ impl RawConn {
             slot: u64::MAX,
             gen: 0,
         };
-        match conn.req(&Msg::Hello { role, reattach }) {
+        match conn.req(&Msg::Hello { role, reattach, encoding: Encoding::None }) {
             Msg::HelloAck { slot, gen, .. } => {
                 conn.slot = slot;
                 conn.gen = gen;

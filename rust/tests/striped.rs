@@ -18,7 +18,7 @@
 use dana::config::{TrainConfig, Workload};
 use dana::net::checkpoint;
 use dana::net::wire::{read_frame, write_frame, Msg, Role};
-use dana::net::{NetServer, RemoteMaster, ServeOptions};
+use dana::net::{Encoding, NetServer, RemoteMaster, ServeOptions};
 use dana::optim::{AlgorithmKind, LeavePolicy, LrSchedule, ScheduleConfig};
 use dana::server::{make_master, make_serving_master, Master, ServingMaster, ShardedParameterServer};
 use dana::sim::ChurnSchedule;
@@ -427,7 +427,7 @@ impl RawConn {
             w: BufWriter::new(s),
             gen: 0,
         };
-        match conn.req(&Msg::Hello { role, reattach: false }) {
+        match conn.req(&Msg::Hello { role, reattach: false, encoding: Encoding::None }) {
             Msg::HelloAck { gen, .. } => conn.gen = gen,
             other => panic!("handshake failed: {other:?}"),
         }

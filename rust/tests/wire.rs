@@ -1,11 +1,15 @@
 //! Wire-protocol property suite (ISSUE 3 satellite, extended for the v2
-//! shard-sliced frames in ISSUE 4): encode/decode round-trips for every
-//! message type — including empty and huge payloads — and *rejection*
-//! (never a panic) of truncated frames, bad magic, bad versions,
-//! oversized length prefixes, unknown tags, and trailing bytes; plus the
-//! encode-side symmetry: `write_frame` refuses an over-cap body before
-//! serializing, instead of letting the `u32` length prefix truncate.
+//! shard-sliced frames in ISSUE 4 and the v4 encoded payloads in ISSUE
+//! 7): encode/decode round-trips for every message type — including
+//! empty and huge payloads — and *rejection* (never a panic) of
+//! truncated frames, bad magic, bad versions, oversized length prefixes,
+//! unknown tags, and trailing bytes; plus the encode-side symmetry:
+//! `write_frame` refuses an over-cap body before serializing, instead of
+//! letting the `u32` length prefix truncate.  The v4 additions pin the
+//! encoded-payload frames byte-for-byte (none/f16/bf16/top-k) and the
+//! payload decoder's fail-closed posture against malformed compression.
 
+use dana::net::codec::{self, Encoding};
 use dana::net::wire::{read_frame, write_frame, Header, Msg, Role, MAGIC, MAX_FRAME, VERSION};
 use dana::optim::{AlgorithmKind, LeavePolicy};
 use std::io::Cursor;
@@ -26,9 +30,11 @@ fn sample_header() -> Header {
 fn all_messages() -> Vec<Msg> {
     let h = sample_header();
     let mut msgs = vec![
-        Msg::Hello { role: Role::Worker, reattach: false },
-        Msg::Hello { role: Role::Worker, reattach: true },
-        Msg::Hello { role: Role::Control, reattach: false },
+        Msg::Hello { role: Role::Worker, reattach: false, encoding: Encoding::None },
+        Msg::Hello { role: Role::Worker, reattach: true, encoding: Encoding::F16 },
+        Msg::Hello { role: Role::Worker, reattach: false, encoding: Encoding::Bf16 },
+        Msg::Hello { role: Role::Worker, reattach: true, encoding: Encoding::TopK { k: 777 } },
+        Msg::Hello { role: Role::Control, reattach: false, encoding: Encoding::None },
         Msg::PullParams,
         Msg::Push { gen: 0, msg: vec![] },
         Msg::Push { gen: u32::MAX, msg: vec![f32::MIN, -0.0, 0.0, f32::MAX, 1.5e-42] },
@@ -49,6 +55,7 @@ fn all_messages() -> Vec<Msg> {
             k: 101_386,
             shards: 16,
             pipeline: 2,
+            encodings: 0b1111,
             header: h,
         },
         Msg::Params { header: h, params: vec![] },
@@ -69,6 +76,7 @@ fn all_messages() -> Vec<Msg> {
             k: 16,
             shards: 1,
             pipeline: 0,
+            encodings: 0b0001,
             header: h,
         });
     }
@@ -174,6 +182,7 @@ fn inner_count_beyond_frame_is_rejected() {
     body.push(VERSION);
     body.push(3); // Push tag
     body.extend_from_slice(&0u32.to_le_bytes()); // gen
+    body.push(0); // payload encoding: none
     body.extend_from_slice(&(u64::MAX).to_le_bytes()); // absurd count
     let err = Msg::decode(&body).unwrap_err();
     assert!(
@@ -195,6 +204,15 @@ fn unknown_tag_role_and_names_are_rejected() {
     assert!(Msg::decode(&make(99, &[])).is_err(), "unknown tag");
     assert!(Msg::decode(&make(1, &[7, 0])).is_err(), "unknown role");
     assert!(Msg::decode(&make(1, &[0])).is_err(), "hello without the reattach byte");
+    assert!(Msg::decode(&make(1, &[0, 0])).is_err(), "hello without the encoding");
+    assert!(
+        Msg::decode(&make(1, &[0, 0, 9, 0, 0, 0, 0])).is_err(),
+        "hello with an unknown encoding tag"
+    );
+    assert!(
+        Msg::decode(&make(1, &[0, 0, 3, 0, 0, 0, 0])).is_err(),
+        "hello requesting top-k with k = 0"
+    );
     // Leave with an unknown policy name
     let mut p = Vec::new();
     p.extend_from_slice(&4u32.to_le_bytes());
@@ -258,6 +276,151 @@ fn oversize_encode_is_rejected_before_serialization() {
     let mut sink = Vec::new();
     write_frame(&mut sink, &ok).unwrap();
     assert_eq!(read_frame(&mut Cursor::new(sink)).unwrap(), ok);
+}
+
+/// Pin the v4 encoded `Push` frames byte-for-byte: the hand-built
+/// expected bytes, the `Msg` encoder (encoding `none` only), and the
+/// borrowed-slice `codec::write_push` writer must all agree — and the
+/// decoder must densify each back to the same `Vec<f32>`.
+#[test]
+fn v4_encoded_push_frames_are_pinned_byte_for_byte() {
+    let push_frame = |payload: &[u8]| {
+        let mut body = Vec::new();
+        body.extend_from_slice(&MAGIC);
+        body.push(VERSION);
+        body.push(3); // Push tag
+        body.extend_from_slice(&7u32.to_le_bytes()); // gen
+        body.extend_from_slice(payload);
+        let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&body);
+        frame
+    };
+
+    // none: payload tag 0 + u64 count + f32 LE words
+    let vals = [1.0f32, -2.5];
+    let mut p = vec![0u8];
+    p.extend_from_slice(&2u64.to_le_bytes());
+    p.extend_from_slice(&1.0f32.to_le_bytes());
+    p.extend_from_slice(&(-2.5f32).to_le_bytes());
+    let frame = push_frame(&p);
+    assert_eq!(Msg::Push { gen: 7, msg: vals.to_vec() }.encode(), frame);
+    let mut sink = Vec::new();
+    codec::write_push(&mut sink, 7, Encoding::None, &vals).unwrap();
+    assert_eq!(sink, frame, "borrowed-slice writer must match the Msg encoder");
+
+    // f16: payload tag 1 + u64 count + 2-byte halves
+    // (1.0 = 0x3C00, -2.5 = 0xC100 — both exactly representable)
+    let mut p = vec![1u8];
+    p.extend_from_slice(&2u64.to_le_bytes());
+    p.extend_from_slice(&0x3C00u16.to_le_bytes());
+    p.extend_from_slice(&0xC100u16.to_le_bytes());
+    let frame = push_frame(&p);
+    let mut sink = Vec::new();
+    codec::write_push(&mut sink, 7, Encoding::F16, &vals).unwrap();
+    assert_eq!(sink, frame);
+    match read_frame(&mut Cursor::new(frame)).unwrap() {
+        Msg::Push { gen, msg } => {
+            assert_eq!(gen, 7);
+            assert_eq!(msg, vals.to_vec());
+        }
+        other => panic!("wrong message back: {other:?}"),
+    }
+
+    // bf16: payload tag 2 + u64 count + truncated-rounded high halves
+    // (1.0 = 0x3F80, -2.5 = 0xC020)
+    let mut p = vec![2u8];
+    p.extend_from_slice(&2u64.to_le_bytes());
+    p.extend_from_slice(&0x3F80u16.to_le_bytes());
+    p.extend_from_slice(&0xC020u16.to_le_bytes());
+    let frame = push_frame(&p);
+    let mut sink = Vec::new();
+    codec::write_push(&mut sink, 7, Encoding::Bf16, &vals).unwrap();
+    assert_eq!(sink, frame);
+
+    // top-k: payload tag 3 + u64 full + u64 nnz + ascending u32 indices
+    // + f32 values (zeros never serialized)
+    let sparse = [0.0f32, 3.0, 0.0, -4.0];
+    let mut p = vec![3u8];
+    p.extend_from_slice(&4u64.to_le_bytes());
+    p.extend_from_slice(&2u64.to_le_bytes());
+    p.extend_from_slice(&1u32.to_le_bytes());
+    p.extend_from_slice(&3u32.to_le_bytes());
+    p.extend_from_slice(&3.0f32.to_le_bytes());
+    p.extend_from_slice(&(-4.0f32).to_le_bytes());
+    let frame = push_frame(&p);
+    let mut sink = Vec::new();
+    codec::write_push(&mut sink, 7, Encoding::TopK { k: 2 }, &sparse).unwrap();
+    assert_eq!(sink, frame);
+    match read_frame(&mut Cursor::new(frame)).unwrap() {
+        Msg::Push { msg, .. } => assert_eq!(msg, sparse.to_vec(), "densified exactly once"),
+        other => panic!("wrong message back: {other:?}"),
+    }
+}
+
+/// The payload decoder's fail-closed posture: every malformed encoded
+/// payload is rejected with an error (never a panic, never a partial
+/// vector) — unknown tag, length mismatch, NaN-bearing halves, and the
+/// top-k index abuses.
+#[test]
+fn v4_payload_decoder_fails_closed() {
+    let push_body = |payload: &[u8]| {
+        let mut body = Vec::new();
+        body.extend_from_slice(&MAGIC);
+        body.push(VERSION);
+        body.push(3); // Push tag
+        body.extend_from_slice(&0u32.to_le_bytes()); // gen
+        body.extend_from_slice(payload);
+        body
+    };
+    // unknown payload encoding tag
+    let mut p = vec![9u8];
+    p.extend_from_slice(&0u64.to_le_bytes());
+    let err = Msg::decode(&push_body(&p)).unwrap_err();
+    assert!(err.to_string().contains("unknown payload encoding"), "{err}");
+    // f16 length mismatch: count says 3 halves, only 2 present
+    let mut p = vec![1u8];
+    p.extend_from_slice(&3u64.to_le_bytes());
+    p.extend_from_slice(&[0u8; 4]);
+    assert!(Msg::decode(&push_body(&p)).is_err(), "truncated f16 payload");
+    // a NaN-bearing f16 half (0x7E00) fails closed — quantized momentum
+    // must never smuggle a NaN past the server's finite checks
+    let mut p = vec![1u8];
+    p.extend_from_slice(&1u64.to_le_bytes());
+    p.extend_from_slice(&0x7E00u16.to_le_bytes());
+    let err = Msg::decode(&push_body(&p)).unwrap_err();
+    assert!(err.to_string().contains("NaN"), "{err}");
+    // same for bf16 (0x7FC0)
+    let mut p = vec![2u8];
+    p.extend_from_slice(&1u64.to_le_bytes());
+    p.extend_from_slice(&0x7FC0u16.to_le_bytes());
+    assert!(Msg::decode(&push_body(&p)).is_err(), "bf16 NaN rejected");
+
+    let topk = |full: u64, nnz: u64, idx: &[u32], vals: &[f32]| {
+        let mut p = vec![3u8];
+        p.extend_from_slice(&full.to_le_bytes());
+        p.extend_from_slice(&nnz.to_le_bytes());
+        for i in idx {
+            p.extend_from_slice(&i.to_le_bytes());
+        }
+        for v in vals {
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+        push_body(&p)
+    };
+    // out-of-range index
+    let err = Msg::decode(&topk(4, 1, &[4], &[1.0])).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+    // non-increasing (duplicate) indices
+    let err = Msg::decode(&topk(4, 2, &[2, 2], &[1.0, 1.0])).unwrap_err();
+    assert!(err.to_string().contains("strictly increasing"), "{err}");
+    // nnz exceeding the full length
+    let err = Msg::decode(&topk(2, 3, &[0, 1, 2], &[1.0; 3])).unwrap_err();
+    assert!(err.to_string().contains("nnz"), "{err}");
+    // an absurd full length is rejected before the dense allocation
+    let err = Msg::decode(&topk(u64::MAX / 8, 0, &[], &[])).unwrap_err();
+    assert!(err.to_string().contains("frame cap"), "{err}");
+    // a well-formed sparse payload still flows
+    assert!(Msg::decode(&topk(4, 2, &[0, 3], &[1.0, 2.0])).is_ok());
 }
 
 #[test]
