@@ -1,0 +1,649 @@
+//! [`ClusterMaster`] — the fan-out [`Master`]: one training driver
+//! against a multi-server placement.
+//!
+//! Each placement group (one server hosting a contiguous shard range,
+//! see [`super::placement`]) gets its own [`RemoteMaster`]; every
+//! driver-facing operation fans its coordinate slices across all groups
+//! in **one overlapped round trip per server** — the split-phase
+//! begin/finish surface writes every group's request frame before the
+//! first reply is read, extending PR 5's deferred-ack machinery from
+//! one connection to the whole placement.  Membership and pipeline
+//! configuration fan to every group (slot indices stay aligned because
+//! every group sees the identical join/leave sequence).
+//!
+//! **Fail-over.**  Every successful reply carries the server's
+//! placement epoch; the cluster records the highest epoch seen per
+//! range and treats any lower one as a fenced zombie (a stale primary
+//! resurrected after its standby took the range over).  When a group's
+//! server fails — transport loss, or an epoch fence — the cluster
+//! probes the full endpoint list for a live primary claiming exactly
+//! that shard range at an epoch no older than the recorded one, and
+//! re-attaches the group's workers to it.  Pulls are retried against
+//! the claimant; pushes are **never** retried across a fail-over (the
+//! dead primary may have applied-and-archived the push before dying, so
+//! a retry could double-apply it) — they are counted in
+//! [`Master::pushes_lost`] instead, exactly like the deferred acks a
+//! reconnect abandons.
+//!
+//! **YellowFin.**  Rules whose apply needs whole-vector reductions
+//! ([`crate::optim::Algorithm::needs_apply_stats`]) push in two phases:
+//! stage the update on every group (read-only; returns each range's
+//! additive [`ApplyStats`] partials), sum the partials — exact, because
+//! every field is a plain coordinate sum — then commit everywhere under
+//! the global sums.  Both phases are overlapped across groups, so the
+//! split costs two round trips instead of one.  Staging always moves
+//! raw f32 payloads and ignores `--pipeline-depth` (the merge is a
+//! synchronization point by construction).
+
+use super::placement::{find_claimant, PlacementMap};
+use crate::net::client::{fetch_theta_once, is_rejection};
+use crate::net::{Encoding, RemoteMaster};
+use crate::optim::{
+    make_algorithm, Algorithm, AlgorithmKind, ApplyStats, LeavePolicy, Step, WorkerState,
+};
+use crate::server::metrics::MetricsRecorder;
+use crate::server::{Master, MasterSnapshot};
+use std::ops::Range;
+use std::time::Duration;
+
+struct Group {
+    rm: RemoteMaster,
+    shards: Range<u32>,
+    coords: Range<usize>,
+    /// Highest placement epoch observed for this range — the fence.
+    epoch: u64,
+}
+
+/// See the module docs.  Construct with [`ClusterMaster::connect`]
+/// (which [`crate::net::master_for`] does for a comma-separated
+/// `--master` list).
+pub struct ClusterMaster {
+    /// The endpoint list as given — primaries *and* standbys; the
+    /// fail-over search probes all of them.
+    endpoints: Vec<String>,
+    kind: AlgorithmKind,
+    k: usize,
+    total_shards: u32,
+    groups: Vec<Group>,
+    pipeline: usize,
+    /// Whole-vector-reduction rules (YellowFin) push via the two-phase
+    /// stage/commit path.
+    needs_stats: bool,
+    /// Per-shard parameter frames requested (`--shard-frames`): parameter
+    /// traffic goes through each group's own sliced path, sequentially.
+    shard_frames: bool,
+    local_alg: Box<dyn Algorithm>,
+    metrics: MetricsRecorder,
+    /// Pushes lost at the cluster layer: in flight to a group whose
+    /// server failed (never retried — double-apply hazard).  The groups'
+    /// own abandoned deferred acks are counted separately and summed in
+    /// [`Master::pushes_lost`].
+    lost: u64,
+    /// Fail-over probe budget: attempts × delay bounds how long a
+    /// takeover may take end to end (standby poll + restore + serve).
+    pub failover_attempts: u32,
+    pub failover_delay: Duration,
+}
+
+impl ClusterMaster {
+    /// Resolve the placement advertised by `endpoints` (see
+    /// [`PlacementMap::resolve`]), validate it against this run's
+    /// expected algorithm/parameter count, and join `n_workers` worker
+    /// slots on every group.
+    pub fn connect(
+        endpoints: &[String],
+        n_workers: usize,
+        expect: Option<(AlgorithmKind, usize)>,
+        encoding: Encoding,
+        shard_frames: bool,
+    ) -> anyhow::Result<ClusterMaster> {
+        let map = PlacementMap::resolve(endpoints)?;
+        if let Some((want_kind, want_k)) = expect {
+            anyhow::ensure!(
+                map.kind == want_kind,
+                "placement runs {}, this run is configured for {}",
+                map.kind.name(),
+                want_kind.name()
+            );
+            anyhow::ensure!(
+                map.k == want_k,
+                "placement hosts k={} in total, this run's model has k={}",
+                map.k,
+                want_k
+            );
+        }
+        let mut groups = Vec::with_capacity(map.groups.len());
+        for g in &map.groups {
+            let mut rm = RemoteMaster::connect_with(
+                &g.endpoint,
+                n_workers,
+                Some((map.kind, g.k_local)),
+                encoding,
+            )?;
+            rm.set_shard_frames(shard_frames);
+            // fail fast per group: the cluster layer owns endpoint
+            // re-resolution, so a group's internal same-address retries
+            // only need to ride out a socket blip, not a takeover
+            rm.reconnect_attempts = 3;
+            rm.reconnect_delay = Duration::from_millis(200);
+            let epoch = g.epoch.max(rm.last_header().epoch);
+            groups.push(Group { rm, shards: g.shards.clone(), coords: g.coords.clone(), epoch });
+        }
+        let local_alg = make_algorithm(map.kind, &vec![0.0f32; map.k], 0);
+        eprintln!(
+            "net: cluster placement resolved: {} group(s) over {} shard(s), k={} ({})",
+            groups.len(),
+            map.total_shards,
+            map.k,
+            groups
+                .iter()
+                .map(|g| format!("{}..{}@{}", g.shards.start, g.shards.end, g.rm.addr()))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        Ok(ClusterMaster {
+            endpoints: endpoints.to_vec(),
+            kind: map.kind,
+            k: map.k,
+            total_shards: map.total_shards,
+            needs_stats: local_alg.needs_apply_stats(),
+            groups,
+            pipeline: 0,
+            shard_frames,
+            local_alg,
+            metrics: MetricsRecorder::default(),
+            lost: 0,
+            failover_attempts: 60,
+            failover_delay: Duration::from_millis(500),
+        })
+    }
+
+    /// Number of placement groups (servers) this master fans out over.
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Check the epoch fence after a successful reply from group `g`:
+    /// a reply carrying an *older* epoch than the recorded one comes
+    /// from a fenced zombie (the group's connection quietly landed on a
+    /// stale primary) and is treated as a group failure.
+    fn check_epoch(&mut self, g: usize) -> anyhow::Result<()> {
+        let h = self.groups[g].rm.last_header();
+        anyhow::ensure!(
+            h.epoch >= self.groups[g].epoch,
+            "group {g} ({}) replied at epoch {} but epoch {} has been observed for \
+             shards {}..{} — stale primary fenced",
+            self.groups[g].rm.addr(),
+            h.epoch,
+            self.groups[g].epoch,
+            self.groups[g].shards.start,
+            self.groups[g].shards.end
+        );
+        self.groups[g].epoch = h.epoch;
+        Ok(())
+    }
+
+    /// Fail group `g` over: probe the endpoint list (plus the group's
+    /// current address) for a live primary claiming exactly this shard
+    /// range at `>=` the recorded epoch, and re-attach the group's
+    /// workers to it.  Deferred pushes owed on the old connections are
+    /// counted into the group's abandoned tally by the reconnect.
+    fn failover(&mut self, g: usize) -> anyhow::Result<()> {
+        let shards = self.groups[g].shards.clone();
+        let k_local = self.groups[g].coords.len();
+        let min_epoch = self.groups[g].epoch;
+        let mut probed: Vec<String> = self.endpoints.clone();
+        let current = self.groups[g].rm.addr().to_string();
+        if !probed.iter().any(|e| e == &current) {
+            probed.push(current);
+        }
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..self.failover_attempts.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(self.failover_delay);
+            }
+            let Some((addr, epoch)) =
+                find_claimant(&probed, &shards, self.total_shards, self.kind, k_local, min_epoch)
+            else {
+                continue;
+            };
+            match self.groups[g].rm.reconnect_to(&addr) {
+                Ok(()) => {
+                    self.groups[g].epoch = epoch.max(self.groups[g].rm.last_header().epoch);
+                    eprintln!(
+                        "net: cluster group {g} (shards {}..{}) failed over to {addr} at \
+                         epoch {}",
+                        shards.start, shards.end, self.groups[g].epoch
+                    );
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => e.context(format!(
+                "no server claims shards {}..{} at epoch >= {min_epoch}",
+                shards.start, shards.end
+            )),
+            None => anyhow::anyhow!(
+                "no server claims shards {}..{} at epoch >= {min_epoch} after {} probe \
+                 rounds",
+                shards.start,
+                shards.end,
+                self.failover_attempts.max(1)
+            ),
+        })
+    }
+
+    /// The sequential per-group fallback path is required whenever a
+    /// group's parameter traffic is transformed below the fan-out layer
+    /// (sliced shard frames, or a granted top-k compressor with its
+    /// error-feedback residuals).
+    fn sequential(&self) -> bool {
+        self.shard_frames
+            || self
+                .groups
+                .iter()
+                .any(|g| matches!(g.rm.granted_encoding(), Encoding::TopK { .. }))
+    }
+
+    /// Overlapped fan-out pull: begin on every group, then finish each
+    /// into its coordinate slice.  Failed groups fail over and re-pull
+    /// once (a pull is safe to retry: re-pulling only refreshes the
+    /// slot's window entry).
+    fn pull_fan(&mut self, worker: usize, out: &mut [f32]) -> anyhow::Result<()> {
+        anyhow::ensure!(out.len() == self.k, "pull buffer {} != k={}", out.len(), self.k);
+        if self.sequential() {
+            for g in 0..self.groups.len() {
+                let r = self.groups[g].coords.clone();
+                // the group's own sliced/compressed path; its internal
+                // retry budget applies, hard failure propagates as the
+                // usual pull panic
+                let params = self.groups[g].rm.pull_params(worker);
+                out[r].copy_from_slice(&params);
+                self.check_epoch(g)?;
+            }
+            return Ok(());
+        }
+        let n = self.groups.len();
+        let mut begun = vec![false; n];
+        let mut failed: Vec<usize> = Vec::new();
+        for g in 0..n {
+            match self.groups[g].rm.begin_pull(worker) {
+                Ok(()) => begun[g] = true,
+                Err(_) => failed.push(g),
+            }
+        }
+        for g in 0..n {
+            if !begun[g] {
+                continue;
+            }
+            let r = self.groups[g].coords.clone();
+            let ok = self.groups[g].rm.finish_pull_into(worker, &mut out[r]).is_ok()
+                && self.check_epoch(g).is_ok();
+            if !ok {
+                failed.push(g);
+            }
+        }
+        for g in failed {
+            self.failover(g)?;
+            let r = self.groups[g].coords.clone();
+            self.groups[g].rm.begin_pull(worker)?;
+            self.groups[g].rm.finish_pull_into(worker, &mut out[r])?;
+            self.check_epoch(g)?;
+        }
+        Ok(())
+    }
+
+    /// Overlapped fan-out push (elementwise rules, depth 0): begin on
+    /// every group, then collect each ack.  A failed group fails over
+    /// but the push is NOT retried there — it may already be applied
+    /// and archived on the dead primary, so a retry could double-apply;
+    /// it is counted lost instead.
+    fn push_fan(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        let n = self.groups.len();
+        let mut begun = vec![false; n];
+        let mut failed: Vec<usize> = Vec::new();
+        let mut step: Option<Step> = None;
+        for g in 0..n {
+            let r = self.groups[g].coords.clone();
+            match self.groups[g].rm.begin_push(worker, &msg[r]) {
+                Ok(()) => begun[g] = true,
+                Err(_) => failed.push(g),
+            }
+        }
+        for g in 0..n {
+            if !begun[g] {
+                continue;
+            }
+            match self.groups[g].rm.finish_push(worker) {
+                Ok(s) => {
+                    if self.check_epoch(g).is_ok() {
+                        // group 0's schedule is authoritative (all groups
+                        // run the same one in lock-step)
+                        if step.is_none() || g == 0 {
+                            step = Some(s);
+                        }
+                    } else {
+                        failed.push(g);
+                    }
+                }
+                Err(_) => failed.push(g),
+            }
+        }
+        for g in failed {
+            self.lost += 1;
+            self.failover(g)?;
+        }
+        step.ok_or_else(|| anyhow::anyhow!("push acknowledged by no placement group"))
+    }
+
+    /// Two-phase fan-out push for whole-vector-reduction rules: stage
+    /// everywhere (read-only — safe to retry across a fail-over), sum
+    /// the additive partials, commit everywhere under the global sums.
+    fn push_two_phase(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        let n = self.groups.len();
+        // ---- phase 1: stage (overlapped; retried once after fail-over)
+        let mut stats = ApplyStats::default();
+        for attempt in 0..2 {
+            let mut begun = vec![false; n];
+            let mut failed: Vec<usize> = Vec::new();
+            stats = ApplyStats::default();
+            for g in 0..n {
+                let r = self.groups[g].coords.clone();
+                match self.groups[g].rm.begin_push_stage(worker, &msg[r]) {
+                    Ok(()) => begun[g] = true,
+                    Err(_) => failed.push(g),
+                }
+            }
+            for g in 0..n {
+                if !begun[g] {
+                    continue;
+                }
+                match self.groups[g].rm.finish_push_stage(worker) {
+                    Ok(part) => {
+                        if self.check_epoch(g).is_ok() {
+                            stats.merge(&part);
+                        } else {
+                            failed.push(g);
+                        }
+                    }
+                    Err(_) => failed.push(g),
+                }
+            }
+            if failed.is_empty() {
+                break;
+            }
+            anyhow::ensure!(attempt == 0, "staged push failed on {} group(s) twice", failed.len());
+            for g in failed {
+                self.failover(g)?;
+            }
+        }
+        // ---- phase 2: commit (overlapped; never retried — see push_fan)
+        let mut begun = vec![false; n];
+        let mut failed: Vec<usize> = Vec::new();
+        let mut step: Option<Step> = None;
+        for g in 0..n {
+            let r = self.groups[g].coords.clone();
+            match self.groups[g].rm.begin_push_commit(worker, &stats, &msg[r]) {
+                Ok(()) => begun[g] = true,
+                Err(_) => failed.push(g),
+            }
+        }
+        for g in 0..n {
+            if !begun[g] {
+                continue;
+            }
+            match self.groups[g].rm.finish_push(worker) {
+                Ok(s) => {
+                    if self.check_epoch(g).is_ok() {
+                        if step.is_none() || g == 0 {
+                            step = Some(s);
+                        }
+                    } else {
+                        failed.push(g);
+                    }
+                }
+                Err(_) => failed.push(g),
+            }
+        }
+        for g in failed {
+            self.lost += 1;
+            self.failover(g)?;
+        }
+        step.ok_or_else(|| anyhow::anyhow!("committed push acknowledged by no placement group"))
+    }
+
+    /// Deferred fan-out push (depth > 0, or the sequential fallback):
+    /// each group's own [`Master::push_update`] handles deferral,
+    /// negotiated encodings, and shard frames for its slice.
+    fn push_per_group(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        let mut step: Option<Step> = None;
+        for g in 0..self.groups.len() {
+            let r = self.groups[g].coords.clone();
+            match self.groups[g].rm.push_update(worker, &msg[r]) {
+                Ok(s) => {
+                    self.check_epoch(g)?;
+                    if step.is_none() || g == 0 {
+                        step = Some(s);
+                    }
+                }
+                // a server-side rejection (stale generation) must surface
+                // to the driver exactly like the single-server path
+                Err(e) if is_rejection(&e) => return Err(e),
+                Err(_) => {
+                    self.lost += 1;
+                    self.failover(g)?;
+                    if step.is_none() {
+                        step = Some(self.groups[g].rm.step_now());
+                    }
+                }
+            }
+        }
+        step.ok_or_else(|| anyhow::anyhow!("push accepted by no placement group"))
+    }
+}
+
+impl Master for ClusterMaster {
+    fn algo_kind(&self) -> AlgorithmKind {
+        self.kind
+    }
+
+    fn workers(&self) -> usize {
+        self.groups[0].rm.workers()
+    }
+
+    fn live_workers(&self) -> usize {
+        self.groups[0].rm.live_workers()
+    }
+
+    fn is_live(&self, worker: usize) -> bool {
+        self.groups[0].rm.is_live(worker)
+    }
+
+    fn add_worker(&mut self) -> usize {
+        // membership fans to every group; the claim-slot rule is
+        // deterministic, so identical join/leave sequences keep local
+        // indices aligned across groups
+        let mut local: Option<usize> = None;
+        for g in 0..self.groups.len() {
+            let idx = self.groups[g].rm.add_worker();
+            match local {
+                None => local = Some(idx),
+                Some(first) => assert_eq!(
+                    idx, first,
+                    "placement groups disagree on the joined worker's slot ({idx} vs \
+                     {first}) — membership fan-out diverged"
+                ),
+            }
+        }
+        local.expect("placement has at least one group")
+    }
+
+    fn remove_worker(&mut self, worker: usize, policy: LeavePolicy) -> anyhow::Result<()> {
+        // attempt every group even after a failure, so the membership
+        // sequences (and thus slot alignment) cannot diverge
+        let mut first_err: Option<anyhow::Error> = None;
+        for g in 0..self.groups.len() {
+            if let Err(e) = self.groups[g].rm.remove_worker(worker, policy) {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.groups[0].rm.steps_done()
+    }
+
+    fn param_len(&self) -> usize {
+        self.k
+    }
+
+    fn step_now(&self) -> Step {
+        self.groups[0].rm.step_now()
+    }
+
+    fn theta_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k];
+        for (g, group) in self.groups.iter().enumerate() {
+            let r = group.coords.clone();
+            match group.rm.try_theta() {
+                Ok(theta) => out[r].copy_from_slice(&theta),
+                Err(e) => {
+                    // &self: cannot fail the group over here.  Read the
+                    // slice from whoever claims the range now; the next
+                    // fallible &mut operation performs the real fail-over.
+                    let (addr, _) = find_claimant(
+                        &self.endpoints,
+                        &group.shards,
+                        self.total_shards,
+                        self.kind,
+                        r.len(),
+                        group.epoch,
+                    )
+                    .unwrap_or_else(|| {
+                        panic!(
+                            "theta read: group {g} ({}) failed ({e:#}) and no server \
+                             claims shards {}..{}",
+                            group.rm.addr(),
+                            group.shards.start,
+                            group.shards.end
+                        )
+                    });
+                    let (_, theta) = fetch_theta_once(&addr).unwrap_or_else(|e2| {
+                        panic!("theta read from claimant {addr} failed: {e2:#}")
+                    });
+                    assert_eq!(theta.len(), r.len(), "claimant {addr} sent a wrong-size slice");
+                    out[r].copy_from_slice(&theta);
+                }
+            }
+        }
+        out
+    }
+
+    fn pull_params(&mut self, worker: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.k];
+        self.pull_fan(worker, &mut out)
+            .unwrap_or_else(|e| panic!("cluster pull for worker {worker} failed: {e:#}"));
+        out
+    }
+
+    fn pull_into(&mut self, worker: usize, out: &mut [f32]) {
+        self.pull_fan(worker, out)
+            .unwrap_or_else(|e| panic!("cluster pull for worker {worker} failed: {e:#}"));
+    }
+
+    fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        anyhow::ensure!(msg.len() == self.k, "push of {} values, k={}", msg.len(), self.k);
+        if self.needs_stats {
+            return self.push_two_phase(worker, msg);
+        }
+        if self.pipeline > 0 || self.sequential() {
+            return self.push_per_group(worker, msg);
+        }
+        self.push_fan(worker, msg)
+    }
+
+    fn set_pipeline_depth(&mut self, depth: usize) {
+        self.pipeline = depth;
+        for g in &mut self.groups {
+            g.rm.set_pipeline_depth(depth);
+        }
+        if depth > 0 && self.needs_stats {
+            eprintln!(
+                "net: cluster: {} pushes via the two-phase stage/commit path, which is a \
+                 synchronization point — --pipeline-depth {depth} does not overlap its \
+                 round trips",
+                self.kind.name()
+            );
+        }
+    }
+
+    fn drain_inflight(&mut self) -> anyhow::Result<()> {
+        for g in 0..self.groups.len() {
+            match self.groups[g].rm.drain_inflight() {
+                Ok(()) => self.check_epoch(g)?,
+                Err(e) if is_rejection(&e) => return Err(e),
+                // the owed acks were already counted abandoned by the
+                // group's reconnect path; just re-home the group
+                Err(_) => self.failover(g)?,
+            }
+        }
+        Ok(())
+    }
+
+    fn make_worker_state(&self) -> WorkerState {
+        self.local_alg.make_worker_state()
+    }
+
+    fn worker_transform(&self, ws: &mut WorkerState, grad: &mut [f32], s: Step) {
+        self.local_alg.worker_message(ws, grad, s);
+    }
+
+    fn metrics(&self) -> &MetricsRecorder {
+        &self.metrics
+    }
+
+    fn metrics_mut(&mut self) -> &mut MetricsRecorder {
+        &mut self.metrics
+    }
+
+    fn pushes_lost(&self) -> u64 {
+        self.lost + self.groups.iter().map(|g| g.rm.abandoned_pushes()).sum::<u64>()
+    }
+
+    fn placement_groups(&mut self) -> Vec<(String, u64)> {
+        let mut rows = Vec::with_capacity(self.groups.len());
+        for g in &mut self.groups {
+            let step = match g.rm.refresh_status() {
+                Ok(h) => h.master_step,
+                Err(_) => g.rm.last_header().master_step,
+            };
+            rows.push((g.rm.addr().to_string(), step));
+        }
+        rows
+    }
+
+    fn slot_stats(&self, worker: usize) -> (usize, u64) {
+        self.groups[0].rm.slot_stats(worker)
+    }
+
+    fn snapshot(&self) -> anyhow::Result<MasterSnapshot> {
+        anyhow::bail!(
+            "a cluster master checkpoints server-side: each group archives its own \
+             range (`dana serve --checkpoint`); stitch the per-range archives with \
+             cluster::snapshot::stitch_snapshots"
+        )
+    }
+
+    fn restore(&mut self, _snap: &MasterSnapshot) -> anyhow::Result<()> {
+        anyhow::bail!(
+            "a cluster master restores server-side: slice the full snapshot with \
+             cluster::snapshot::slice_snapshot and `dana serve --resume` each range"
+        )
+    }
+}

@@ -1,0 +1,43 @@
+//! Shard-group placement: the multi-server cluster layer (PR 8).
+//!
+//! PR 4 made the shard the unit of *concurrency* (lock striping inside
+//! one server); this subsystem promotes it to the unit of *placement*:
+//! the global shard space is tiled by contiguous per-server ranges, one
+//! `dana serve --shard-range A..B` process per range, and a training
+//! driver runs against the whole placement through one fan-out
+//! [`Master`](crate::server::Master) — `--master` with a
+//! comma-separated endpoint list.
+//!
+//! * [`placement`] — [`PlacementMap`]: resolve the placement by probing
+//!   endpoints for the shard range, placement epoch, and standby flag
+//!   each advertises in its handshake header (wire v5); fail-closed
+//!   validation (full coverage, no overlap, no empty range, shapes
+//!   consistent);
+//! * [`master`] — [`ClusterMaster`]: every pull/push fans coordinate
+//!   slices across all groups in one overlapped round trip per server;
+//!   membership fans to every group; epoch-fenced fail-over re-homes a
+//!   group to whichever server claims its range (pulls retry, pushes
+//!   are counted lost — never retried, the double-apply hazard);
+//!   YellowFin pushes in two overlapped phases (stage partials → merge
+//!   → commit under global sums) so whole-vector reductions stay exact
+//!   across the split;
+//! * [`snapshot`] — layout-independent checkpoint slicing: a 1-server
+//!   archive restores into an S-server split (and back) bit-for-bit;
+//! * [`standby`] — [`StandbyServer`] (`dana serve --standby-of ADDR`):
+//!   tails the primary's retention archives, takes its exact range over
+//!   on failure at epoch `last_seen + 1`, serving on the listener it
+//!   held from the start.
+//!
+//! A single-endpoint `--master` never touches this layer — that path
+//! stays the plain [`crate::net::RemoteMaster`], bit-for-bit.  See
+//! DESIGN.md §13.
+
+pub mod master;
+pub mod placement;
+pub mod snapshot;
+pub mod standby;
+
+pub use master::ClusterMaster;
+pub use placement::{PlacementMap, ResolvedGroup};
+pub use snapshot::{coord_range, slice_snapshot, stitch_snapshots};
+pub use standby::{StandbyConfig, StandbyServer};

@@ -1,0 +1,253 @@
+//! Placement resolution: which live server hosts which contiguous range
+//! of global shards.
+//!
+//! A placement promotes the shard from unit of *concurrency* (the
+//! lock-striped backend, DESIGN.md §9) to unit of *placement*: the
+//! global shard index space `0..total_shards` is tiled by contiguous
+//! per-server ranges, and a server hosting shards `[A, B)` holds
+//! exactly the coordinates `shard_bounds(k, total_shards)[A..B]` of the
+//! global model.  Nothing is configured client-side — the map is
+//! *resolved* by probing every `--master` endpoint and reading the
+//! hosted range, placement epoch, and standby flag each one advertises
+//! in its handshake header (wire v5).
+//!
+//! Resolution is fail-closed: the ranges must cover the whole shard
+//! space with no gap, no overlap, and no empty range, every server must
+//! agree on the algorithm and the global shard count, and each server's
+//! local parameter count must equal the span its range implies.  A
+//! standby answers probes but never claims its range, so listing
+//! standbys alongside primaries in `--master` is safe; when two servers
+//! claim the *same* range (a takeover raced a stale primary's
+//! resurrection) the higher placement epoch wins.
+
+use crate::net::client::probe;
+use crate::optim::AlgorithmKind;
+use crate::server::shard_bounds;
+use std::ops::Range;
+
+/// One placement group: a server endpoint and the contiguous slice of
+/// the model it hosts.
+#[derive(Debug, Clone)]
+pub struct ResolvedGroup {
+    /// Endpoint as listed in `--master` (scheme optional).
+    pub endpoint: String,
+    /// Hosted global shard range `[start, end)`.
+    pub shards: Range<u32>,
+    /// Global coordinate range the shard range spans.
+    pub coords: Range<usize>,
+    /// Placement epoch of the server's claim (monotone across
+    /// takeovers; see [`crate::net::wire::Header::epoch`]).
+    pub epoch: u64,
+    /// Local parameter count (== `coords.len()`).
+    pub k_local: usize,
+}
+
+/// A resolved, validated placement: groups in shard order tiling
+/// `0..total_shards`, with the global model shape they add up to.
+#[derive(Debug, Clone)]
+pub struct PlacementMap {
+    pub kind: AlgorithmKind,
+    /// Global parameter count (sum of the groups' local counts).
+    pub k: usize,
+    pub total_shards: u32,
+    /// Placement order: ascending, contiguous shard ranges.
+    pub groups: Vec<ResolvedGroup>,
+}
+
+impl PlacementMap {
+    /// Probe every endpoint and assemble the placement they jointly
+    /// advertise.  Unreachable endpoints and standbys are skipped (they
+    /// are reported only if the remainder fails validation); everything
+    /// else is strict.
+    pub fn resolve(endpoints: &[String]) -> anyhow::Result<PlacementMap> {
+        anyhow::ensure!(!endpoints.is_empty(), "placement needs at least one endpoint");
+        struct Cand {
+            endpoint: String,
+            shards: Range<u32>,
+            epoch: u64,
+            kind: AlgorithmKind,
+            k_local: usize,
+            total: u32,
+        }
+        let mut cands: Vec<Cand> = Vec::new();
+        let mut skipped: Vec<String> = Vec::new();
+        for ep in endpoints {
+            match probe(ep) {
+                Ok(info) => {
+                    let h = info.header;
+                    if h.standby != 0 {
+                        skipped.push(format!(
+                            "{ep}: standby watching shards {}..{} (epoch {})",
+                            h.shard_start,
+                            h.shard_start + h.shard_hosted,
+                            h.epoch
+                        ));
+                        continue;
+                    }
+                    anyhow::ensure!(
+                        h.total_shards > 0 && h.shard_hosted > 0,
+                        "placement endpoint {ep} advertises an empty shard range"
+                    );
+                    let end = h
+                        .shard_start
+                        .checked_add(h.shard_hosted)
+                        .filter(|&e| e <= h.total_shards)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "placement endpoint {ep} advertises shards {}..{} beyond the \
+                                 global count {}",
+                                h.shard_start,
+                                h.shard_start as u64 + h.shard_hosted as u64,
+                                h.total_shards
+                            )
+                        })?;
+                    cands.push(Cand {
+                        endpoint: ep.clone(),
+                        shards: h.shard_start..end,
+                        epoch: h.epoch,
+                        kind: info.kind,
+                        k_local: info.k,
+                        total: h.total_shards,
+                    });
+                }
+                Err(e) => skipped.push(format!("{ep}: {e:#}")),
+            }
+        }
+        let context = move |msg: String| {
+            if skipped.is_empty() {
+                msg
+            } else {
+                format!("{msg} (skipped endpoints: {})", skipped.join("; "))
+            }
+        };
+        anyhow::ensure!(
+            !cands.is_empty(),
+            "{}",
+            context("no placement endpoint answered as a primary".into())
+        );
+        let total = cands[0].total;
+        let kind = cands[0].kind;
+        for c in &cands {
+            anyhow::ensure!(
+                c.total == total,
+                "placement endpoints disagree on the global shard count: {} says {}, {} \
+                 says {}",
+                cands[0].endpoint,
+                total,
+                c.endpoint,
+                c.total
+            );
+            anyhow::ensure!(
+                c.kind == kind,
+                "placement endpoints disagree on the algorithm: {} runs {}, {} runs {}",
+                cands[0].endpoint,
+                kind.name(),
+                c.endpoint,
+                c.kind.name()
+            );
+        }
+        // identical ranges: the higher epoch wins (a resurrected stale
+        // primary loses to the standby that took its range over)
+        cands.sort_by_key(|c| (c.shards.start, c.shards.end, std::cmp::Reverse(c.epoch)));
+        cands.dedup_by_key(|c| (c.shards.start, c.shards.end));
+        // strict tiling of 0..total
+        anyhow::ensure!(
+            cands[0].shards.start == 0,
+            "{}",
+            context(format!(
+                "placement does not cover shards 0..{}: lowest hosted range starts at {}",
+                cands[0].shards.start, cands[0].shards.start
+            ))
+        );
+        for w in cands.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            anyhow::ensure!(
+                b.shards.start == a.shards.end,
+                "{}",
+                context(format!(
+                    "placement ranges {} ({}..{}) and {} ({}..{}) {}",
+                    a.endpoint,
+                    a.shards.start,
+                    a.shards.end,
+                    b.endpoint,
+                    b.shards.start,
+                    b.shards.end,
+                    if b.shards.start < a.shards.end { "overlap" } else { "leave a gap" }
+                ))
+            );
+        }
+        let last = cands.last().expect("validated non-empty");
+        anyhow::ensure!(
+            last.shards.end == total,
+            "{}",
+            context(format!(
+                "placement covers shards only up to {} of {} (highest range is {} at \
+                 {}..{})",
+                last.shards.end, total, last.endpoint, last.shards.start, last.shards.end
+            ))
+        );
+        // derive the global model shape and check each group spans
+        // exactly the coordinates its shard range implies
+        let k: usize = cands.iter().map(|c| c.k_local).sum();
+        anyhow::ensure!(
+            total as usize <= k,
+            "placement has more shards ({total}) than parameters ({k})"
+        );
+        let bounds = shard_bounds(k, total as usize);
+        let mut groups = Vec::with_capacity(cands.len());
+        for c in cands {
+            let coords = bounds[c.shards.start as usize].start
+                ..bounds[c.shards.end as usize - 1].end;
+            anyhow::ensure!(
+                coords.len() == c.k_local,
+                "placement endpoint {} hosts {} parameters but its shards {}..{} span \
+                 {} of k={}",
+                c.endpoint,
+                c.k_local,
+                c.shards.start,
+                c.shards.end,
+                coords.len(),
+                k
+            );
+            groups.push(ResolvedGroup {
+                endpoint: c.endpoint,
+                shards: c.shards,
+                coords,
+                epoch: c.epoch,
+                k_local: c.k_local,
+            });
+        }
+        Ok(PlacementMap { kind, k, total_shards: total, groups })
+    }
+}
+
+/// Probe `endpoints` for a live primary claiming exactly `shards` of a
+/// `total`-shard placement at an epoch no older than `min_epoch` —
+/// the fail-over search.  Returns the claimant with the highest epoch.
+/// Probes only; touches no membership, so it is safe from `&self`
+/// contexts (θ reads) as well as real fail-over.
+pub(crate) fn find_claimant(
+    endpoints: &[String],
+    shards: &Range<u32>,
+    total: u32,
+    kind: AlgorithmKind,
+    k_local: usize,
+    min_epoch: u64,
+) -> Option<(String, u64)> {
+    let mut best: Option<(String, u64)> = None;
+    for ep in endpoints {
+        let Ok(info) = probe(ep) else { continue };
+        let h = info.header;
+        let claims = h.standby == 0
+            && h.shard_start == shards.start
+            && h.shard_start.checked_add(h.shard_hosted) == Some(shards.end)
+            && h.total_shards == total
+            && h.epoch >= min_epoch
+            && info.kind == kind
+            && info.k == k_local;
+        if claims && best.as_ref().map(|(_, e)| h.epoch > *e).unwrap_or(true) {
+            best = Some((ep.clone(), h.epoch));
+        }
+    }
+    best
+}

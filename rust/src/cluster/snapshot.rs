@@ -1,0 +1,231 @@
+//! Layout-independent checkpoint slicing: cut a full-model
+//! [`MasterSnapshot`] into per-placement-range snapshots and stitch
+//! per-range snapshots back into a full-model one.
+//!
+//! The state a master holds is, coordinate-wise, *separable*: θ, the
+//! retained pull windows, and every [`StateVec::Coord`] /
+//! [`StateVec::PerWorker`] entry are per-coordinate vectors, while
+//! [`StateVec::Scalars`] entries are coordinate-independent and
+//! identical on every range (the sharded backend already relies on
+//! this; see `server/sharded.rs`).  That makes a placement split a pure
+//! re-slicing: a 1-server checkpoint restores into an S-server split —
+//! and back — bit-for-bit, for every update rule.  Stitching validates
+//! the cross-range invariants (same kind, step count, liveness, pull
+//! schedule, and bitwise-equal scalars) and fails closed on any skew,
+//! because skew means the ranges did not observe the same push
+//! sequence.
+
+use crate::optim::StateVec;
+use crate::server::{shard_bounds, MasterSnapshot};
+use std::ops::Range;
+
+/// The global coordinate range spanned by global shards
+/// `[shards.start, shards.end)` of a `total_shards`-shard placement
+/// over `k` parameters.
+pub fn coord_range(
+    k: usize,
+    total_shards: u32,
+    shards: &Range<u32>,
+) -> anyhow::Result<Range<usize>> {
+    anyhow::ensure!(total_shards > 0, "coord_range: zero total shards");
+    anyhow::ensure!(
+        shards.start < shards.end && shards.end <= total_shards,
+        "coord_range: shard range {}..{} invalid for {} total shards",
+        shards.start,
+        shards.end,
+        total_shards
+    );
+    anyhow::ensure!(
+        total_shards as usize <= k,
+        "coord_range: more shards ({total_shards}) than parameters ({k})"
+    );
+    let bounds = shard_bounds(k, total_shards as usize);
+    Ok(bounds[shards.start as usize].start..bounds[shards.end as usize - 1].end)
+}
+
+fn slice_coord(v: &[f32], k: usize, coords: &Range<usize>, what: &str) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(
+        v.len() == k,
+        "snapshot {what} has {} coordinates, expected k={k}",
+        v.len()
+    );
+    Ok(v[coords.clone()].to_vec())
+}
+
+/// Cut one global coordinate range out of a full-model snapshot,
+/// producing the snapshot the server hosting that range would have
+/// written itself.  Everything per-coordinate is sliced; scalars,
+/// liveness, the step count, and the pull schedule are replicated.
+pub fn slice_snapshot(
+    snap: &MasterSnapshot,
+    coords: &Range<usize>,
+) -> anyhow::Result<MasterSnapshot> {
+    let k = snap.theta.len();
+    anyhow::ensure!(
+        coords.start < coords.end && coords.end <= k,
+        "slice {}..{} out of bounds for k={k}",
+        coords.start,
+        coords.end
+    );
+    let mut pulls = Vec::with_capacity(snap.pulls.len());
+    for (w, window) in snap.pulls.iter().enumerate() {
+        let mut out = Vec::with_capacity(window.len());
+        for (at, params) in window {
+            out.push((*at, slice_coord(params, k, coords, &format!("pull window of slot {w}"))?));
+        }
+        pulls.push(out);
+    }
+    let mut state = Vec::with_capacity(snap.state.len());
+    for (name, v) in &snap.state {
+        let sliced = match v {
+            StateVec::Coord(c) => StateVec::Coord(slice_coord(c, k, coords, name)?),
+            StateVec::PerWorker(rows) => {
+                let mut out = Vec::with_capacity(rows.len());
+                for row in rows {
+                    out.push(slice_coord(row, k, coords, name)?);
+                }
+                StateVec::PerWorker(out)
+            }
+            StateVec::Scalars(s) => StateVec::Scalars(s.clone()),
+        };
+        state.push((name.clone(), sliced));
+    }
+    Ok(MasterSnapshot {
+        kind: snap.kind,
+        master_step: snap.master_step,
+        last_eta: snap.last_eta,
+        theta: snap.theta[coords.clone()].to_vec(),
+        live: snap.live.clone(),
+        pulls,
+        state,
+    })
+}
+
+/// Stitch per-range snapshots (in placement order) back into one
+/// full-model snapshot.  Every cross-range invariant is checked: the
+/// ranges must agree on kind, step count, η, slot liveness, the shape
+/// and timing of every pull window, the state-dict schema, and the
+/// bitwise value of every scalar entry — disagreement means the ranges
+/// did not see the same push sequence and the stitch would be garbage.
+pub fn stitch_snapshots(parts: &[MasterSnapshot]) -> anyhow::Result<MasterSnapshot> {
+    anyhow::ensure!(!parts.is_empty(), "stitch of zero snapshots");
+    let first = &parts[0];
+    for (i, p) in parts.iter().enumerate().skip(1) {
+        anyhow::ensure!(
+            p.kind == first.kind,
+            "range {i} snapshot is for {} but range 0 is for {}",
+            p.kind.name(),
+            first.kind.name()
+        );
+        anyhow::ensure!(
+            p.master_step == first.master_step,
+            "range {i} is at master step {} but range 0 is at {} — the ranges did not \
+             apply the same pushes",
+            p.master_step,
+            first.master_step
+        );
+        anyhow::ensure!(
+            p.last_eta.to_bits() == first.last_eta.to_bits(),
+            "range {i} last η {} != range 0 last η {}",
+            p.last_eta,
+            first.last_eta
+        );
+        anyhow::ensure!(
+            p.live == first.live,
+            "range {i} slot liveness differs from range 0"
+        );
+        anyhow::ensure!(
+            p.pulls.len() == first.pulls.len(),
+            "range {i} has {} pull windows, range 0 has {}",
+            p.pulls.len(),
+            first.pulls.len()
+        );
+        for (w, (a, b)) in first.pulls.iter().zip(&p.pulls).enumerate() {
+            anyhow::ensure!(
+                a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.0 == y.0),
+                "range {i} slot {w} pull window (depth/steps) differs from range 0"
+            );
+        }
+        anyhow::ensure!(
+            p.state.len() == first.state.len()
+                && p.state.iter().zip(&first.state).all(|((a, _), (b, _))| a == b),
+            "range {i} state-dict schema differs from range 0"
+        );
+    }
+    let mut theta = Vec::new();
+    for p in parts {
+        theta.extend_from_slice(&p.theta);
+    }
+    let mut pulls = Vec::with_capacity(first.pulls.len());
+    for w in 0..first.pulls.len() {
+        let mut window = Vec::with_capacity(first.pulls[w].len());
+        for d in 0..first.pulls[w].len() {
+            let at = first.pulls[w][d].0;
+            let mut params = Vec::new();
+            for p in parts {
+                params.extend_from_slice(&p.pulls[w][d].1);
+            }
+            window.push((at, params));
+        }
+        pulls.push(window);
+    }
+    let mut state = Vec::with_capacity(first.state.len());
+    for (e, (name, v0)) in first.state.iter().enumerate() {
+        let stitched = match v0 {
+            StateVec::Coord(_) => {
+                let mut out = Vec::new();
+                for p in parts {
+                    match &p.state[e].1 {
+                        StateVec::Coord(c) => out.extend_from_slice(c),
+                        _ => anyhow::bail!("state entry {name:?} changes variant across ranges"),
+                    }
+                }
+                StateVec::Coord(out)
+            }
+            StateVec::PerWorker(rows0) => {
+                let mut out: Vec<Vec<f32>> = vec![Vec::new(); rows0.len()];
+                for p in parts {
+                    match &p.state[e].1 {
+                        StateVec::PerWorker(rows) => {
+                            anyhow::ensure!(
+                                rows.len() == rows0.len(),
+                                "state entry {name:?} slot count differs across ranges"
+                            );
+                            for (dst, row) in out.iter_mut().zip(rows) {
+                                dst.extend_from_slice(row);
+                            }
+                        }
+                        _ => anyhow::bail!("state entry {name:?} changes variant across ranges"),
+                    }
+                }
+                StateVec::PerWorker(out)
+            }
+            StateVec::Scalars(s0) => {
+                for (i, p) in parts.iter().enumerate().skip(1) {
+                    match &p.state[e].1 {
+                        StateVec::Scalars(s) => anyhow::ensure!(
+                            s.len() == s0.len()
+                                && s.iter()
+                                    .zip(s0)
+                                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                            "scalar state entry {name:?} differs between range 0 and range \
+                             {i} — the ranges did not apply the same push sequence"
+                        ),
+                        _ => anyhow::bail!("state entry {name:?} changes variant across ranges"),
+                    }
+                }
+                StateVec::Scalars(s0.clone())
+            }
+        };
+        state.push((name.clone(), stitched));
+    }
+    Ok(MasterSnapshot {
+        kind: first.kind,
+        master_step: first.master_step,
+        last_eta: first.last_eta,
+        theta,
+        live: first.live.clone(),
+        pulls,
+        state,
+    })
+}

@@ -1,0 +1,480 @@
+//! [`StandbyServer`] — hot-standby fail-over for one placement range:
+//! `dana serve --standby-of ADDR`.
+//!
+//! A standby pairs with one primary.  It binds its main listener
+//! immediately (so its address is stable from the start and can be
+//! listed in every client's `--master`), but pre-takeover it answers
+//! only control traffic: probes get the watched range's placement
+//! header with `standby = 1`, worker hellos get a recoverable refusal.
+//! A monitor thread polls the primary's handshake header and tails its
+//! retention archives (`--keep-last` series on a shared filesystem),
+//! tracking how many steps the newest archive trails the primary's
+//! live count — the published `dana_standby_lag_steps`.
+//!
+//! When the primary misses `miss_budget` consecutive probes, the
+//! standby **takes over**: it restores the newest archive into a fresh
+//! backend, adopts the primary's exact shard range, and starts serving
+//! real traffic *on the very listener it has held all along* — at
+//! placement epoch `last_seen + 1`.  The epoch is the fence: clients
+//! that saw the takeover refuse older epochs for this range, so a
+//! resurrected stale primary cannot win its range back (see
+//! [`crate::net::wire::Header::epoch`]).
+//!
+//! **Why acked pushes survive.**  The serving loop archives *before*
+//! acknowledging (apply → periodic checkpoint → ack), so with
+//! `--checkpoint-every 1` every acknowledged push is in the archive the
+//! standby restores; only unacknowledged in-flight pushes can be lost,
+//! and the cluster client counts exactly those in
+//! [`crate::server::Master::pushes_lost`].  A coarser cadence widens
+//! the window to at most `checkpoint_every - 1` acked steps, traded
+//! deliberately for checkpoint bandwidth (DESIGN.md §13).
+
+use crate::net::client::probe;
+use crate::net::http::{ClusterStatus, SlotRow, StatusServer, StatusSnapshot, StatusSource};
+use crate::net::server::wake;
+use crate::net::wire::{self, Header, Msg, Role};
+use crate::net::{checkpoint, codec::EncodingSet, retention, NetServer, Placement, ServeOptions};
+use crate::optim::{AlgorithmKind, LrSchedule};
+use crate::server::make_serving_master;
+use crate::server::metrics::{AtomicHistogram, GAP_BOUNDS, LAG_BOUNDS};
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Everything a standby needs to watch one primary and take its range
+/// over.  The placement itself (shard range, epoch, algorithm, local k)
+/// is never configured — it is learned from the primary's own
+/// advertisement, so the pair cannot disagree.
+pub struct StandbyConfig {
+    /// Address to bind the (future) serving listener on.
+    pub listen: String,
+    /// The watched primary's serving address.
+    pub primary: String,
+    /// The primary's checkpoint base path (`--checkpoint` on the
+    /// primary); its step-stamped retention archives are tailed from
+    /// here, so primary and standby must share this filesystem.
+    pub archive_base: PathBuf,
+    /// LR schedule for the post-takeover server (must match the
+    /// primary's — the schedule is config, not checkpointed state).
+    pub schedule: LrSchedule,
+    /// Backend build knobs for the post-takeover server (the shard
+    /// count itself comes from the primary's advertised hosted range).
+    pub threads: usize,
+    /// Serve lock-striped after takeover — honored only when the taken
+    /// range spans more than one shard, mirroring `dana serve`.
+    pub striped: bool,
+    /// Serving options for the post-takeover server.  `status_addr` is
+    /// consumed by the standby itself (the endpoint is live from the
+    /// start and survives the takeover); `placement` is overwritten.
+    pub opts: ServeOptions,
+    /// Primary poll cadence.
+    pub poll: Duration,
+    /// Consecutive missed probes that declare the primary dead.
+    pub miss_budget: u32,
+}
+
+/// What the last successful primary probe advertised.
+#[derive(Debug, Clone, Copy)]
+struct PrimaryView {
+    kind: AlgorithmKind,
+    k: usize,
+    epoch: u64,
+    shard_start: u32,
+    shard_hosted: u32,
+    total_shards: u32,
+}
+
+/// State shared between the monitor thread, the control-answer loop,
+/// and the status listener.
+struct Watch {
+    stop: AtomicBool,
+    /// Raised to make the answer loop hand its listener back (takeover
+    /// or shutdown).
+    handoff: AtomicBool,
+    takeovers: AtomicU64,
+    /// Step of the newest tailed archive (what a takeover restores to).
+    archive_step: AtomicU64,
+    /// The primary's live step count, from the last successful probe.
+    primary_step: AtomicU64,
+    seen_primary: AtomicBool,
+    view: Mutex<Option<PrimaryView>>,
+    /// Post-takeover: the serving NetServer's own status source; the
+    /// standby's status listener delegates to it from then on.
+    served: Mutex<Option<Arc<dyn StatusSource>>>,
+}
+
+impl Watch {
+    fn view(&self) -> Option<PrimaryView> {
+        *crate::util::sync::lock(&self.view)
+    }
+
+    fn served(&self) -> Option<Arc<dyn StatusSource>> {
+        crate::util::sync::lock(&self.served).clone()
+    }
+
+    /// The header every pre-takeover control reply carries: the watched
+    /// range at the last-seen epoch, `standby = 1`, and the step the
+    /// newest archive would restore to.  Schedule fields are zero — a
+    /// standby applies nothing.
+    fn standby_header(&self, v: &PrimaryView) -> Header {
+        Header {
+            master_step: self.archive_step.load(Ordering::SeqCst),
+            eta: 0.0,
+            gamma: 0.0,
+            lambda: 0.0,
+            live_workers: 0,
+            worker_slots: 0,
+            pushes_dropped: 0,
+            epoch: v.epoch,
+            shard_start: v.shard_start,
+            shard_hosted: v.shard_hosted,
+            total_shards: v.total_shards,
+            standby: 1,
+        }
+    }
+}
+
+/// `/metrics` + `/status` source for the standby: role/epoch/lag gauges
+/// pre-takeover, a pure delegate to the serving server afterwards.
+struct StandbySource {
+    watch: Arc<Watch>,
+    started: Instant,
+}
+
+impl StatusSource for StandbySource {
+    fn metrics_snapshot(&self) -> StatusSnapshot {
+        if let Some(src) = self.watch.served() {
+            return src.metrics_snapshot();
+        }
+        let v = self.watch.view();
+        let archive = self.watch.archive_step.load(Ordering::SeqCst);
+        let lag = self
+            .watch
+            .seen_primary
+            .load(Ordering::SeqCst)
+            .then(|| self.watch.primary_step.load(Ordering::SeqCst).saturating_sub(archive));
+        StatusSnapshot {
+            uptime_secs: self.started.elapsed().as_secs_f64(),
+            master_step: archive,
+            live_workers: 0,
+            total_slots: 0,
+            pushes_total: 0,
+            pushes_dropped: 0,
+            pushes_per_sec: 0.0,
+            bytes_tx: 0,
+            bytes_rx: 0,
+            bytes_per_second: 0.0,
+            gap: AtomicHistogram::new(GAP_BOUNDS).snapshot(),
+            lag: AtomicHistogram::new(LAG_BOUNDS).snapshot(),
+            shard_gates: Vec::new(),
+            checkpoint: None,
+            cluster: ClusterStatus {
+                standby: true,
+                epoch: v.map(|v| v.epoch).unwrap_or(0),
+                takeovers: self.watch.takeovers.load(Ordering::SeqCst),
+                shard_start: v.map(|v| v.shard_start).unwrap_or(0),
+                shard_hosted: v.map(|v| v.shard_hosted).unwrap_or(0),
+                total_shards: v.map(|v| v.total_shards).unwrap_or(0),
+                standby_lag: lag,
+            },
+            slots: Vec::new(),
+        }
+    }
+
+    fn slot_rows(&self) -> Vec<SlotRow> {
+        self.watch.served().map(|s| s.slot_rows()).unwrap_or_default()
+    }
+}
+
+/// See the module docs.  [`StandbyServer::start`] returns immediately;
+/// [`StandbyServer::wait`] blocks through watch, takeover, and serving.
+pub struct StandbyServer {
+    addr: SocketAddr,
+    status: Option<StatusServer>,
+    watch: Arc<Watch>,
+    monitor: Option<JoinHandle<anyhow::Result<Option<NetServer>>>>,
+    net: Option<NetServer>,
+}
+
+impl StandbyServer {
+    pub fn start(mut cfg: StandbyConfig) -> anyhow::Result<StandbyServer> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| anyhow::anyhow!("bind {}: {e}", cfg.listen))?;
+        let addr = listener.local_addr()?;
+        let watch = Arc::new(Watch {
+            stop: AtomicBool::new(false),
+            handoff: AtomicBool::new(false),
+            takeovers: AtomicU64::new(0),
+            archive_step: AtomicU64::new(0),
+            primary_step: AtomicU64::new(0),
+            seen_primary: AtomicBool::new(false),
+            view: Mutex::new(None),
+            served: Mutex::new(None),
+        });
+        // the standby owns its status endpoint across the takeover; the
+        // post-takeover server must not try to bind a second one
+        let status = match cfg.opts.status_addr.take() {
+            Some(sa) => Some(StatusServer::start(
+                &sa,
+                Arc::new(StandbySource { watch: Arc::clone(&watch), started: Instant::now() }),
+            )?),
+            None => None,
+        };
+        let answer = {
+            let watch = Arc::clone(&watch);
+            std::thread::Builder::new()
+                .name("dana-standby-answer".into())
+                .spawn(move || answer_loop(listener, &watch))?
+        };
+        let monitor = {
+            let watch = Arc::clone(&watch);
+            std::thread::Builder::new()
+                .name("dana-standby".into())
+                .spawn(move || monitor_loop(cfg, addr, &watch, answer))?
+        };
+        Ok(StandbyServer { addr, status, watch, monitor: Some(monitor), net: None })
+    }
+
+    /// The main (future serving) listener address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// `tcp://host:port`, ready for a `--master` list.
+    pub fn url(&self) -> String {
+        format!("tcp://{}", self.addr)
+    }
+
+    pub fn status_addr(&self) -> Option<SocketAddr> {
+        self.status.as_ref().map(|s| s.addr())
+    }
+
+    /// Takeovers performed (0 while still watching).
+    pub fn takeovers(&self) -> u64 {
+        self.watch.takeovers.load(Ordering::SeqCst)
+    }
+
+    fn join_monitor(&mut self) {
+        if let Some(h) = self.monitor.take() {
+            match h.join() {
+                Ok(Ok(net)) => self.net = net,
+                Ok(Err(e)) => eprintln!("dana standby: {e:#}"),
+                Err(_) => eprintln!("dana standby: monitor thread panicked"),
+            }
+        }
+    }
+
+    /// Block through the whole lifecycle: watching, takeover, and — if
+    /// one happened — serving, until the served server winds down.
+    pub fn wait(&mut self) {
+        self.join_monitor();
+        if let Some(net) = self.net.as_mut() {
+            net.wait();
+        }
+        if let Some(mut s) = self.status.take() {
+            s.stop();
+        }
+    }
+
+    /// Stop watching (and, post-takeover, stop serving).  Idempotent.
+    pub fn stop(&mut self) {
+        self.watch.stop.store(true, Ordering::SeqCst);
+        self.watch.handoff.store(true, Ordering::SeqCst);
+        wake(self.addr);
+        self.join_monitor();
+        if let Some(net) = self.net.as_mut() {
+            net.stop();
+        }
+        if let Some(mut s) = self.status.take() {
+            s.stop();
+        }
+    }
+}
+
+impl Drop for StandbyServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Pre-takeover accept loop: answer control traffic with standby
+/// headers, refuse workers recoverably, and hand the listener back the
+/// moment `handoff` is raised (a [`wake`] connection unblocks accept).
+fn answer_loop(listener: TcpListener, watch: &Arc<Watch>) -> TcpListener {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if watch.handoff.load(Ordering::SeqCst) || watch.stop.load(Ordering::SeqCst) {
+                    return listener;
+                }
+                let watch = Arc::clone(watch);
+                let _ = std::thread::Builder::new()
+                    .name("dana-standby-conn".into())
+                    .spawn(move || answer_conn(stream, &watch));
+            }
+            Err(_) => {
+                if watch.handoff.load(Ordering::SeqCst) || watch.stop.load(Ordering::SeqCst) {
+                    return listener;
+                }
+            }
+        }
+    }
+}
+
+fn answer_conn(stream: TcpStream, watch: &Watch) {
+    stream.set_nodelay(true).ok();
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut r = BufReader::new(read_half);
+    let mut w = BufWriter::new(stream);
+    loop {
+        let Ok(msg) = wire::read_frame(&mut r) else { return };
+        let reply = match (msg, watch.view()) {
+            (Msg::Hello { role: Role::Control, .. }, Some(v)) => Msg::HelloAck {
+                slot: u64::MAX,
+                gen: 0,
+                kind: v.kind,
+                k: v.k as u64,
+                shards: v.shard_hosted,
+                pipeline: 0,
+                encodings: EncodingSet::ALL.0,
+                header: watch.standby_header(&v),
+            },
+            (Msg::Hello { role: Role::Control, .. }, None) => Msg::Error {
+                recoverable: true,
+                detail: "standby has not observed its primary yet".into(),
+            },
+            (Msg::Hello { .. }, _) => Msg::Error {
+                recoverable: true,
+                detail: "standby: not serving worker traffic (no takeover yet)".into(),
+            },
+            (Msg::Status, Some(v)) => Msg::Ack { header: watch.standby_header(&v) },
+            _ => Msg::Error {
+                recoverable: true,
+                detail: "standby: not serving (watching its primary)".into(),
+            },
+        };
+        if wire::write_frame(&mut w, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+fn monitor_loop(
+    cfg: StandbyConfig,
+    addr: SocketAddr,
+    watch: &Arc<Watch>,
+    answer: JoinHandle<TcpListener>,
+) -> anyhow::Result<Option<NetServer>> {
+    let reclaim = |watch: &Arc<Watch>| -> anyhow::Result<TcpListener> {
+        watch.handoff.store(true, Ordering::SeqCst);
+        wake(addr);
+        answer.join().map_err(|_| anyhow::anyhow!("standby answer loop panicked"))
+    };
+    let mut misses = 0u32;
+    loop {
+        if watch.stop.load(Ordering::SeqCst) {
+            let _ = reclaim(watch);
+            return Ok(None);
+        }
+        match probe(&cfg.primary) {
+            Ok(info) => {
+                let h = info.header;
+                if h.standby == 0 {
+                    misses = 0;
+                    let v = PrimaryView {
+                        kind: info.kind,
+                        k: info.k,
+                        epoch: h.epoch,
+                        shard_start: h.shard_start,
+                        shard_hosted: h.shard_hosted,
+                        total_shards: h.total_shards,
+                    };
+                    *crate::util::sync::lock(&watch.view) = Some(v);
+                    watch.primary_step.store(h.master_step, Ordering::SeqCst);
+                    watch.seen_primary.store(true, Ordering::SeqCst);
+                }
+            }
+            Err(_) => misses += 1,
+        }
+        if let Ok(archives) = retention::list_archives(&cfg.archive_base) {
+            if let Some(newest) = archives.iter().map(|a| a.step).max() {
+                watch.archive_step.store(newest, Ordering::SeqCst);
+            }
+        }
+        if misses >= cfg.miss_budget.max(1) {
+            let Some(view) = watch.view() else {
+                // never observed the primary: nothing to take over
+                let _ = reclaim(watch);
+                anyhow::bail!(
+                    "primary {} unreachable and never observed — no range to take over",
+                    cfg.primary
+                );
+            };
+            let listener = reclaim(watch)?;
+            let net = take_over(&cfg, view, listener, watch)?;
+            *crate::util::sync::lock(&watch.served) = Some(net.status_source());
+            return Ok(Some(net));
+        }
+        std::thread::sleep(cfg.poll);
+    }
+}
+
+/// Restore the newest archive and start serving the watched range on
+/// the standby's own listener, one epoch past the dead primary's.
+fn take_over(
+    cfg: &StandbyConfig,
+    view: PrimaryView,
+    listener: TcpListener,
+    watch: &Arc<Watch>,
+) -> anyhow::Result<NetServer> {
+    let archives = retention::list_archives(&cfg.archive_base)?;
+    let newest = archives
+        .iter()
+        .max_by_key(|a| a.step)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "takeover impossible: no archives under {} (primary must run with \
+                 --checkpoint + --keep-last)",
+                cfg.archive_base.display()
+            )
+        })?;
+    let snap = checkpoint::read_snapshot(&newest.path)?;
+    snap.validate(view.kind, view.k)?;
+    // local backend shards == hosted placement shards: the global→local
+    // shard-id mapping (and the sliced frame layout) depends on it
+    let mut master = make_serving_master(
+        view.kind,
+        &snap.theta,
+        cfg.schedule.clone(),
+        0,
+        view.shard_hosted as usize,
+        cfg.threads,
+        cfg.striped && view.shard_hosted > 1,
+    );
+    master.restore(&snap)?;
+    let epoch = view.epoch + 1;
+    let takeovers = watch.takeovers.fetch_add(1, Ordering::SeqCst) + 1;
+    let mut opts = cfg.opts.clone();
+    opts.placement = Placement {
+        shard_start: view.shard_start,
+        total_shards: view.total_shards,
+        epoch,
+        takeovers,
+    };
+    let net = NetServer::start_serving_on(listener, master, opts)?;
+    eprintln!(
+        "dana standby: took over shards {}..{} at epoch {epoch} (restored step {} from \
+         {}; primary {} last seen at step {})",
+        view.shard_start,
+        view.shard_start + view.shard_hosted,
+        snap.master_step,
+        newest.path.display(),
+        cfg.primary,
+        watch.primary_step.load(Ordering::SeqCst),
+    );
+    Ok(net)
+}

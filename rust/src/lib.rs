@@ -8,7 +8,9 @@
 //!   ([`optim`]), the parameter server with gap/lag instrumentation —
 //!   monolithic and sharded/lock-striped layouts behind one [`server::Master`]
 //!   interface ([`server`]), the TCP transport + checkpoint/restore
-//!   subsystem that makes the cluster multi-process ([`net`]), the gamma
+//!   subsystem that makes the cluster multi-process ([`net`]), the
+//!   shard-group placement layer — multi-server fan-out client and
+//!   hot-standby fail-over ([`cluster`]), the gamma
 //!   execution-time cluster simulator ([`sim`]), training drivers
 //!   ([`train`]) and the experiment harness that regenerates each paper
 //!   table/figure ([`experiments`]).
@@ -20,6 +22,7 @@
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for measured reproductions.
 
+pub mod cluster;
 pub mod config;
 pub mod data;
 pub mod experiments;

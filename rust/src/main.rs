@@ -39,7 +39,8 @@ const USAGE: &str = "usage: dana <train|serve|experiment|simulate|info> [options
              [--seed S] [--eta X] [--gamma X] [--metrics-every K]
              [--shards S] [--churn \"leave@0.3:2,join@0.5,slow@0.6:0=4x\"]
              [--leave-policy retire|fold] [--config file.json] [--use-pallas]
-             [--synthetic] [--k K] [--master tcp://HOST:PORT] [--shard-frames]
+             [--synthetic] [--k K] [--master tcp://H:P[,tcp://H:P..]]
+             [--shard-frames]
              [--pipeline-depth D] [--rtt T] [--max-restarts R]
              [--restart-backoff-ms MS] [--encoding none|f16|bf16|topk:K]
              [--artifacts DIR]
@@ -49,6 +50,9 @@ const USAGE: &str = "usage: dana <train|serve|experiment|simulate|info> [options
              [--checkpoint PATH] [--checkpoint-every STEPS] [--resume PATH]
              [--keep-last N] [--keep-hourly H] [--status-addr HOST:PORT]
              [--encodings none|f16|bf16|topk|all[,..]]
+             [--shard-range A..B] [--placement-epoch E]
+             [--standby-of tcp://HOST:PORT] [--standby-poll-ms MS]
+             [--standby-miss-budget N]
              [--metrics-every K] [--seed S] [--artifacts DIR]
   experiment <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|fig12|fig13|
               table1..table6|churn|all> [--full] [--seeds K] [--out DIR]
@@ -224,6 +228,15 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
 /// `--serve-threads T` caps the per-request shard fan-out (default 1 —
 /// connection threads already provide the parallelism); `--serve-threads
 /// 0` forces the legacy global-lock serving path.
+///
+/// With `--shard-range A..B` this process hosts only global shards
+/// `[A, B)` of an S-shard placement (`--shards S` is then the GLOBAL
+/// shard count); start one process per range so the ranges tile `0..S`,
+/// and point workers at the whole group with a comma-separated
+/// `--master` list.  `--standby-of ADDR` instead runs a hot standby:
+/// it tails the primary's retention archives (shared `--checkpoint`
+/// base) and takes the primary's exact range over on failure, one
+/// placement epoch up.
 fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let listen = args.str_or("listen", "127.0.0.1:7700");
     let algorithm: AlgorithmKind = args.str_or("algorithm", "dana-slim").parse()?;
@@ -235,6 +248,11 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     let synthetic = args.flag("synthetic");
     let synth_k = args.parse_or::<usize>("k", 256)?;
     let shards = args.parse_or::<usize>("shards", 1)?.max(1);
+    let shard_range = args.opt_str("shard-range");
+    let placement_epoch = args.parse_or::<u64>("placement-epoch", 0)?;
+    let standby_of = args.opt_str("standby-of");
+    let standby_poll_ms = args.parse_or::<u64>("standby-poll-ms", 250)?;
+    let standby_miss = args.parse_or::<u32>("standby-miss-budget", 4)?;
     let serve_threads = args.parse_or::<usize>("serve-threads", 1)?;
     let pipeline_depth = args.parse_or::<usize>("pipeline-depth", 0)?;
     anyhow::ensure!(
@@ -277,29 +295,125 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     if let Some(g) = gamma {
         cfg.schedule.gamma = g;
     }
-    let theta0 = if synthetic {
-        real_async::synthetic_theta0(synth_k)
-    } else {
-        Engine::cpu(&artifacts)?.init_params(&cfg.variant_name())?
-    };
     let schedule = LrSchedule::new(cfg.schedule.clone());
     // --serve-threads 0 = legacy global-lock serving, which keeps PR 3's
     // intra-push shard fan-out (default_threads, inside the lock);
     // otherwise shards serve lock-striped with the per-request fan-out
     // capped at T (connection threads already provide the parallelism).
-    let striped = serve_threads > 0 && shards > 1;
     let threads = if serve_threads == 0 {
         dana::util::parallel::default_threads()
     } else {
         serve_threads
     };
+
+    // Hot standby: no model init, no master — everything the takeover
+    // needs comes from the primary's handshake headers and archives.
+    if let Some(primary) = standby_of {
+        anyhow::ensure!(
+            resume.is_none() && shard_range.is_none(),
+            "--standby-of is exclusive with --resume/--shard-range (the standby learns \
+             its range from the primary)"
+        );
+        let archive_base = checkpoint_path.clone().ok_or_else(|| {
+            anyhow::anyhow!(
+                "--standby-of needs --checkpoint PATH: the primary's archive base \
+                 (run the primary with --checkpoint PATH --checkpoint-every N --keep-last K \
+                 on a filesystem both processes see)"
+            )
+        })?;
+        let opts = ServeOptions {
+            leave_policy,
+            checkpoint_path,
+            checkpoint_every,
+            pipeline_depth,
+            status_addr,
+            retention,
+            encodings,
+            placement: Default::default(),
+        };
+        let sbcfg = dana::cluster::StandbyConfig {
+            listen: listen.clone(),
+            primary: primary.clone(),
+            archive_base,
+            schedule,
+            threads,
+            striped: serve_threads > 0,
+            opts,
+            poll: std::time::Duration::from_millis(standby_poll_ms.max(10)),
+            miss_budget: standby_miss.max(1),
+        };
+        let mut sb = dana::cluster::StandbyServer::start(sbcfg)?;
+        println!(
+            "dana standby: holding {} for primary {primary} — takeover restores the \
+             newest archive at epoch last-seen+1",
+            sb.addr()
+        );
+        if let Some(sa) = sb.status_addr() {
+            println!("dana standby: status endpoint on http://{sa} (/metrics, /status)");
+        }
+        sb.wait();
+        println!("dana serve: standby shut down");
+        return Ok(());
+    }
+
+    let mut theta0 = if synthetic {
+        real_async::synthetic_theta0(synth_k)
+    } else {
+        Engine::cpu(&artifacts)?.init_params(&cfg.variant_name())?
+    };
+    // --shard-range A..B: host only that slice of the (identically
+    // seeded) full model; the local backend gets one shard per hosted
+    // global shard, so local and global shard boundaries coincide.
+    let full_k = theta0.len();
+    let mut placement = net::Placement::default();
+    let mut local_shards = shards;
+    let mut hosted = None;
+    if let Some(spec) = &shard_range {
+        let (a, b) = parse_shard_range(spec)?;
+        let total = shards as u32;
+        anyhow::ensure!(
+            b <= total,
+            "--shard-range {spec} exceeds --shards {shards} (with --shard-range, \
+             --shards is the GLOBAL shard count of the placement)"
+        );
+        let coords = dana::cluster::coord_range(full_k, total, &(a..b))?;
+        placement = net::Placement {
+            shard_start: a,
+            total_shards: total,
+            epoch: placement_epoch,
+            takeovers: 0,
+        };
+        local_shards = (b - a) as usize;
+        theta0 = theta0[coords.clone()].to_vec();
+        hosted = Some(coords);
+    }
+    let striped = serve_threads > 0 && local_shards > 1;
     let mut master = match &resume {
         Some(path) => {
-            let snap = net::checkpoint::read_snapshot(path)?;
+            let mut snap = net::checkpoint::read_snapshot(path)?;
+            if let Some(coords) = &hosted {
+                // A full-model archive (e.g. from a 1-server run, or a
+                // stitch) restores into this split transparently.
+                if snap.theta.len() == full_k && full_k != theta0.len() {
+                    snap = dana::cluster::slice_snapshot(&snap, coords)?;
+                    println!(
+                        "dana serve: sliced full-model snapshot to hosted coordinates \
+                         {}..{}",
+                        coords.start, coords.end
+                    );
+                }
+            }
             // restore() re-validates; checking here gives a better message
             snap.validate(algorithm, theta0.len())?;
-            let mut m =
-                make_serving_master(algorithm, &snap.theta, schedule, 0, shards, threads, striped);
+            let mut m = make_serving_master(
+                algorithm,
+                &snap.theta,
+                schedule,
+                0,
+                local_shards,
+                threads,
+                striped,
+            );
             m.restore(&snap)?;
             let (step, _, live, slots) = m.status();
             println!(
@@ -311,7 +425,9 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
             m
         }
         // fresh cluster: zero slots, every connect is a join
-        None => make_serving_master(algorithm, &theta0, schedule, 0, shards, threads, striped),
+        None => {
+            make_serving_master(algorithm, &theta0, schedule, 0, local_shards, threads, striped)
+        }
     };
     master.set_metrics_every(metrics_every);
     let k = master.param_len();
@@ -323,22 +439,49 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
         status_addr,
         retention,
         encodings,
+        placement,
     };
     let mut srv = NetServer::start_serving(master, &listen, opts)?;
     println!(
-        "dana serve: {} k={k} shards={shards} ({}) pipeline-depth={pipeline_depth} on {} — \
+        "dana serve: {} k={k} shards={local_shards} ({}) pipeline-depth={pipeline_depth} on {} — \
          join with `dana train --master {}`",
         algorithm.name(),
         if striped { "lock-striped" } else { "global-lock" },
         srv.addr(),
         srv.url()
     );
+    if placement.total_shards > 0 {
+        println!(
+            "dana serve: hosting global shards {}..{} of {} at placement epoch {}",
+            placement.shard_start,
+            placement.shard_start + local_shards as u32,
+            placement.total_shards,
+            placement.epoch
+        );
+    }
     if let Some(sa) = srv.status_addr() {
         println!("dana serve: status endpoint on http://{sa} (/metrics, /status)");
     }
     srv.wait();
     println!("dana serve: shut down");
     Ok(())
+}
+
+/// Parse `--shard-range A..B` (half-open, A < B).
+fn parse_shard_range(spec: &str) -> anyhow::Result<(u32, u32)> {
+    let (a, b) = spec
+        .split_once("..")
+        .ok_or_else(|| anyhow::anyhow!("--shard-range wants A..B, got {spec:?}"))?;
+    let a: u32 = a
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--shard-range start {a:?} is not a shard index"))?;
+    let b: u32 = b
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--shard-range end {b:?} is not a shard index"))?;
+    anyhow::ensure!(a < b, "--shard-range {spec:?} is empty (need A < B)");
+    Ok((a, b))
 }
 
 fn cmd_experiment(args: &mut Args) -> anyhow::Result<()> {

@@ -68,7 +68,7 @@
 
 use super::codec::{self, Compressor, Encoding, EncodingSet, WireStats};
 use super::wire::{self, Header, Msg, Role};
-use crate::optim::{make_algorithm, Algorithm, AlgorithmKind, LeavePolicy, Step, WorkerState};
+use crate::optim::{make_algorithm, Algorithm, AlgorithmKind, ApplyStats, LeavePolicy, Step, WorkerState};
 use crate::server::metrics::MetricsRecorder;
 use crate::server::{Master, MasterSnapshot};
 use std::io::{BufReader, BufWriter};
@@ -86,7 +86,7 @@ pub fn strip_scheme(addr: &str) -> &str {
 /// in-process drivers abort on a push error too); the reconnect-and-retry
 /// wrapper checks for this marker and refuses to retry it away.
 #[derive(Debug)]
-struct DeferredPushRejected(String);
+pub(crate) struct DeferredPushRejected(String);
 
 impl std::fmt::Display for DeferredPushRejected {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -98,7 +98,7 @@ impl std::error::Error for DeferredPushRejected {}
 
 /// True when `e` is a [`DeferredPushRejected`] — i.e. retrying/reconnecting
 /// cannot help and the error must surface to the driver.
-fn is_rejection(e: &anyhow::Error) -> bool {
+pub(crate) fn is_rejection(e: &anyhow::Error) -> bool {
     e.downcast_ref::<DeferredPushRejected>().is_some()
 }
 
@@ -119,17 +119,51 @@ struct Conn {
     stats: Arc<WireStats>,
 }
 
-/// What the server told us at handshake time.
-struct HelloInfo {
-    kind: AlgorithmKind,
-    k: usize,
+/// What the server told us at handshake time.  `pub(crate)` because the
+/// cluster layer's placement probe ([`probe`]) is exactly a handshake:
+/// the piggybacked header carries the hosted shard range, placement
+/// epoch, and standby flag (wire v5).
+pub(crate) struct HelloInfo {
+    pub(crate) kind: AlgorithmKind,
+    pub(crate) k: usize,
     /// Server-side slice granularity for PullShard/PushShard frames.
-    shards: usize,
+    pub(crate) shards: usize,
     /// Server-side pipeline window depth (`dana serve --pipeline-depth`).
-    pipeline: usize,
+    pub(crate) pipeline: usize,
     /// Server-advertised payload-encoding set (bitmask; wire v4).
-    encodings: u32,
-    header: Header,
+    pub(crate) encodings: u32,
+    pub(crate) header: Header,
+}
+
+/// One-shot placement probe: connect to `addr` as a control client, run
+/// the hello handshake, and return what the server advertised — hosted
+/// shard range, placement epoch, standby flag (all in
+/// [`HelloInfo::header`]), algorithm kind, and local parameter count.
+/// The connection is dropped immediately (a control hello never touches
+/// membership).  The cluster layer uses this to resolve a placement
+/// spec against live endpoints and to find the takeover claimant of a
+/// failed group's shard range.
+pub(crate) fn probe(addr: &str) -> anyhow::Result<HelloInfo> {
+    let stats = Arc::new(WireStats::default());
+    let (_conn, info) =
+        Conn::open(strip_scheme(addr), Role::Control, false, Encoding::None, stats)?;
+    Ok(info)
+}
+
+/// One-shot θ read: a throwaway control connection that pulls the full
+/// parameter vector from `addr` and returns it with the reply header.
+/// The cluster layer uses this when a group's own server died mid-eval —
+/// the claimant's θ can be read without disturbing any worker
+/// connection (the next fallible op performs the real fail-over).
+pub(crate) fn fetch_theta_once(addr: &str) -> anyhow::Result<(Header, Vec<f32>)> {
+    let stats = Arc::new(WireStats::default());
+    let (mut conn, _info) =
+        Conn::open(strip_scheme(addr), Role::Control, false, Encoding::None, stats)?;
+    match conn.roundtrip(&Msg::GetTheta)? {
+        Msg::Theta { header, theta } => Ok((header, theta)),
+        Msg::Error { detail, .. } => anyhow::bail!("theta read refused: {detail}"),
+        other => anyhow::bail!("unexpected theta reply: {other:?}"),
+    }
 }
 
 impl Conn {
@@ -922,6 +956,170 @@ impl RemoteMaster {
         let conn = self.workers[w].as_mut().expect("validated by caller");
         conn.recv()
     }
+
+    // ------------------------------------------------------------------
+    // Split-phase worker ops (cluster fan-out).
+    //
+    // `begin_*` writes and flushes the request frame on worker `w`'s
+    // connection WITHOUT reading the reply; the matching `finish_*`
+    // drains any owed deferred-push acks (FIFO — their replies precede
+    // ours) and reads it.  A `ClusterMaster` begins one op on EVERY
+    // placement group before finishing any, so a worker's cross-server
+    // pull or push costs one overlapped round trip instead of one per
+    // server.  Unlike `worker_request` these never reconnect
+    // internally: a transport error bubbles to the cluster layer, which
+    // owns endpoint re-resolution (the replacement server is usually a
+    // DIFFERENT address — the standby's).
+
+    fn worker_conn(&mut self, w: usize) -> anyhow::Result<&mut Conn> {
+        self.workers
+            .get_mut(w)
+            .and_then(Option::as_mut)
+            .ok_or_else(|| anyhow::anyhow!("request for retired local worker {w}"))
+    }
+
+    /// Send a `PullParams` frame on worker `w`'s connection; reply read
+    /// by [`Self::finish_pull_into`].
+    pub(crate) fn begin_pull(&mut self, w: usize) -> anyhow::Result<()> {
+        self.worker_conn(w)?.send(&Msg::PullParams)?;
+        Ok(())
+    }
+
+    /// Read the reply to [`Self::begin_pull`] into `out` (length `k`).
+    pub(crate) fn finish_pull_into(&mut self, w: usize, out: &mut [f32]) -> anyhow::Result<()> {
+        self.harvest_acks(w)?;
+        match self.worker_conn(w)?.recv()? {
+            Msg::Params { header, params } => {
+                anyhow::ensure!(
+                    params.len() == self.k && out.len() == self.k,
+                    "pull slice length {} (buffer {}) != k={}",
+                    params.len(),
+                    out.len(),
+                    self.k
+                );
+                out.copy_from_slice(&params);
+                self.note(&header);
+                Ok(())
+            }
+            Msg::Error { detail, .. } => anyhow::bail!("pull refused: {detail}"),
+            other => anyhow::bail!("unexpected pull reply: {other:?}"),
+        }
+    }
+
+    /// Send a blocking `Push` frame (this client's granted encoding) on
+    /// worker `w`'s connection; ack read by [`Self::finish_push`].
+    pub(crate) fn begin_push(&mut self, w: usize, data: &[f32]) -> anyhow::Result<()> {
+        let enc = self.granted;
+        self.worker_conn(w)?.send_push(enc, data)?;
+        Ok(())
+    }
+
+    /// Read the `PushAck` for [`Self::begin_push`] (or
+    /// [`Self::begin_push_commit`] — a commit acks like a push).
+    pub(crate) fn finish_push(&mut self, w: usize) -> anyhow::Result<Step> {
+        self.harvest_acks(w)?;
+        match self.worker_conn(w)?.recv()? {
+            Msg::PushAck { header, eta, gamma, lambda, .. } => {
+                self.note(&header);
+                Ok(Step { eta, gamma, lambda })
+            }
+            Msg::Error { detail, .. } => anyhow::bail!("push rejected: {detail}"),
+            other => anyhow::bail!("unexpected push reply: {other:?}"),
+        }
+    }
+
+    /// Phase 1 of the cluster's two-phase apply: send a `PushStage`
+    /// frame carrying this group's slice of the update (always raw f32 —
+    /// statistics are computed from exact coordinates).
+    pub(crate) fn begin_push_stage(&mut self, w: usize, data: &[f32]) -> anyhow::Result<()> {
+        let conn = self.worker_conn(w)?;
+        let gen = conn.gen;
+        conn.send(&Msg::PushStage { gen, msg: data.to_vec() })?;
+        Ok(())
+    }
+
+    /// Read the `StageStats` reply to [`Self::begin_push_stage`]: this
+    /// group's additive statistics partials, ready to merge.
+    pub(crate) fn finish_push_stage(&mut self, w: usize) -> anyhow::Result<ApplyStats> {
+        self.harvest_acks(w)?;
+        match self.worker_conn(w)?.recv()? {
+            Msg::StageStats { header, stats } => {
+                self.note(&header);
+                Ok(stats)
+            }
+            Msg::Error { detail, .. } => anyhow::bail!("push stage refused: {detail}"),
+            other => anyhow::bail!("unexpected stage reply: {other:?}"),
+        }
+    }
+
+    /// Phase 2 of the two-phase apply: send a `PushCommit` frame with
+    /// the globally merged statistics and the same slice again (the
+    /// server holds no staging state).  Ack via [`Self::finish_push`].
+    pub(crate) fn begin_push_commit(
+        &mut self,
+        w: usize,
+        stats: &ApplyStats,
+        data: &[f32],
+    ) -> anyhow::Result<()> {
+        let conn = self.worker_conn(w)?;
+        let gen = conn.gen;
+        conn.send(&Msg::PushCommit { gen, stats: *stats, msg: data.to_vec() })?;
+        Ok(())
+    }
+
+    /// The deferred (pipelined) push, for the cluster layer: same
+    /// contract as the trait path at depth > 0, including the internal
+    /// window-full harvest and reconnect-once.  The cluster layer keeps
+    /// this group's in-flight count via [`Self::inflight_pushes`].
+    pub(crate) fn push_deferred_raw(&mut self, w: usize, data: &[f32]) -> anyhow::Result<Step> {
+        self.push_deferred(w, data)
+    }
+
+    /// Latest server header seen on any reply — hosted shard range,
+    /// placement epoch, standby flag (wire v5), schedule point.
+    pub(crate) fn last_header(&self) -> Header {
+        self.header
+    }
+
+    /// The address this client is currently connected to.
+    pub(crate) fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Fallible θ read over a one-shot control connection (bounded
+    /// retries against the current address).  [`Master::theta_vec`]
+    /// panics on error; the cluster layer instead fails over and reads
+    /// the claimant.
+    pub(crate) fn try_theta(&self) -> anyhow::Result<Vec<f32>> {
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..self.reconnect_attempts.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(self.reconnect_delay);
+            }
+            let mut conn = match Conn::open(
+                &self.addr,
+                Role::Control,
+                false,
+                Encoding::None,
+                self.stats.clone(),
+            ) {
+                Ok((conn, ..)) => conn,
+                Err(e) => {
+                    last = Some(e);
+                    continue;
+                }
+            };
+            match conn.roundtrip(&Msg::GetTheta) {
+                Ok(Msg::Theta { theta, .. }) => return Ok(theta),
+                Ok(Msg::Error { detail, .. }) => {
+                    anyhow::bail!("master refused theta read: {detail}")
+                }
+                Ok(other) => anyhow::bail!("unexpected theta reply: {other:?}"),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow::anyhow!("theta read failed")))
+    }
 }
 
 impl Master for RemoteMaster {
@@ -997,36 +1195,9 @@ impl Master for RemoteMaster {
         // a one-shot control connection per read, with the same bounded
         // retry budget as every other request (an eval landing in a
         // server-restart window must survive it, not abort the run).
-        let mut last: Option<anyhow::Error> = None;
-        for attempt in 0..self.reconnect_attempts.max(1) {
-            if attempt > 0 {
-                std::thread::sleep(self.reconnect_delay);
-            }
-            let mut conn = match Conn::open(
-                &self.addr,
-                Role::Control,
-                false,
-                Encoding::None,
-                self.stats.clone(),
-            ) {
-                Ok((conn, ..)) => conn,
-                Err(e) => {
-                    last = Some(e);
-                    continue;
-                }
-            };
-            match conn.roundtrip(&Msg::GetTheta) {
-                Ok(Msg::Theta { theta, .. }) => return theta,
-                Ok(Msg::Error { detail, .. }) => panic!("master refused theta read: {detail}"),
-                Ok(other) => panic!("unexpected theta reply: {other:?}"),
-                Err(e) => last = Some(e),
-            }
-        }
-        panic!(
-            "theta read from master {} failed after retries: {:#}",
-            self.addr,
-            last.unwrap_or_else(|| anyhow::anyhow!("unreachable"))
-        )
+        self.try_theta().unwrap_or_else(|e| {
+            panic!("theta read from master {} failed after retries: {e:#}", self.addr)
+        })
     }
 
     fn pull_params(&mut self, worker: usize) -> Vec<f32> {

@@ -479,7 +479,7 @@ pub fn write_shard_params<W: Write>(
 }
 
 /// Encoded [`Header`] size (kept in sync with `Msg::body_len`'s HDR).
-const HDR_LEN: usize = 8 + 4 + 4 + 4 + 8 + 8 + 8;
+const HDR_LEN: usize = 8 + 4 + 4 + 4 + 8 + 8 + 8 + 8 + 4 + 4 + 4 + 1;
 
 /// Shared frame writer: compute the exact body length, refuse an
 /// oversized frame before serializing (symmetric with the decoder),

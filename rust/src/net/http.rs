@@ -95,6 +95,30 @@ pub struct CheckpointInfo {
     pub age_secs: f64,
 }
 
+/// Where this process sits in a multi-server placement (PR 8): its
+/// role, placement epoch, hosted shard range, and — for a standby —
+/// how far it trails its primary.  The default is a standalone primary
+/// at epoch 0 that has never taken over.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClusterStatus {
+    /// True while this process is a hot standby tailing a primary.
+    pub standby: bool,
+    /// Placement epoch served/observed (monotone across takeovers).
+    pub epoch: u64,
+    /// Takeovers performed by this process (`dana_takeovers_total`).
+    pub takeovers: u64,
+    /// First global shard hosted (primaries) or watched (standbys).
+    pub shard_start: u32,
+    /// Number of shards hosted/watched.
+    pub shard_hosted: u32,
+    /// Global shard count across the placement.
+    pub total_shards: u32,
+    /// Steps the newest tailed archive trails the primary's live step
+    /// count by; `None` for primaries (and for a standby that has not
+    /// seen its primary yet).
+    pub standby_lag: Option<u64>,
+}
+
 /// Everything the renderers need, gathered in one place so both
 /// endpoints and their tests work from plain data.
 #[derive(Debug, Clone)]
@@ -121,6 +145,8 @@ pub struct StatusSnapshot {
     /// global-lock backend.
     pub shard_gates: Vec<(u64, u64)>,
     pub checkpoint: Option<CheckpointInfo>,
+    /// Cluster placement: role, epoch, hosted range, takeovers.
+    pub cluster: ClusterStatus,
     /// Per-slot rows; left empty for `/metrics` (which must not take
     /// slot locks) and filled via [`StatusSource::slot_rows`] for
     /// `/status`.
@@ -291,6 +317,24 @@ pub fn render_prometheus(s: &StatusSnapshot) -> String {
         let _ = writeln!(o, "# TYPE dana_checkpoint_age_seconds gauge");
         let _ = writeln!(o, "dana_checkpoint_age_seconds {}", c.age_secs);
     }
+    let c = &s.cluster;
+    let _ = writeln!(o, "# TYPE dana_cluster_role gauge");
+    let _ = writeln!(o, "dana_cluster_role{{role=\"primary\"}} {}", u64::from(!c.standby));
+    let _ = writeln!(o, "dana_cluster_role{{role=\"standby\"}} {}", u64::from(c.standby));
+    let _ = writeln!(o, "# TYPE dana_placement_epoch gauge");
+    let _ = writeln!(o, "dana_placement_epoch {}", c.epoch);
+    let _ = writeln!(o, "# TYPE dana_takeovers_total counter");
+    let _ = writeln!(o, "dana_takeovers_total {}", c.takeovers);
+    let _ = writeln!(o, "# TYPE dana_shard_start gauge");
+    let _ = writeln!(o, "dana_shard_start {}", c.shard_start);
+    let _ = writeln!(o, "# TYPE dana_shards_hosted gauge");
+    let _ = writeln!(o, "dana_shards_hosted {}", c.shard_hosted);
+    let _ = writeln!(o, "# TYPE dana_shards_total gauge");
+    let _ = writeln!(o, "dana_shards_total {}", c.total_shards);
+    if let Some(lag) = c.standby_lag {
+        let _ = writeln!(o, "# TYPE dana_standby_lag_steps gauge");
+        let _ = writeln!(o, "dana_standby_lag_steps {lag}");
+    }
     o
 }
 
@@ -340,6 +384,22 @@ pub fn render_status_json(s: &StatusSnapshot) -> String {
         ]),
         None => Json::Null,
     };
+    let cl = &s.cluster;
+    let cluster = Json::obj(vec![
+        ("role", Json::Str(if cl.standby { "standby" } else { "primary" }.into())),
+        ("placement_epoch", Json::num(cl.epoch as f64)),
+        ("takeovers_total", Json::num(cl.takeovers as f64)),
+        ("shard_start", Json::num(cl.shard_start as f64)),
+        ("shards_hosted", Json::num(cl.shard_hosted as f64)),
+        ("shards_total", Json::num(cl.total_shards as f64)),
+        (
+            "standby_lag_steps",
+            match cl.standby_lag {
+                Some(lag) => Json::num(lag as f64),
+                None => Json::Null,
+            },
+        ),
+    ]);
     Json::obj(vec![
         ("uptime_secs", Json::num(s.uptime_secs)),
         ("master_step", Json::num(s.master_step as f64)),
@@ -355,6 +415,7 @@ pub fn render_status_json(s: &StatusSnapshot) -> String {
         ("lag", histogram_json(&s.lag)),
         ("shards", Json::Arr(shards)),
         ("checkpoint", checkpoint),
+        ("cluster", cluster),
         ("slots", Json::Arr(slots)),
     ])
     .to_string()
@@ -567,6 +628,15 @@ mod tests {
             lag: lag.snapshot(),
             shard_gates: vec![(40, 0), (39, 1)],
             checkpoint: Some(CheckpointInfo { step: 32, bytes: 1024, age_secs: 3.0 }),
+            cluster: ClusterStatus {
+                standby: false,
+                epoch: 2,
+                takeovers: 1,
+                shard_start: 0,
+                shard_hosted: 2,
+                total_shards: 4,
+                standby_lag: None,
+            },
             slots: vec![
                 SlotRow { slot: 0, generation: 1, live: true, window: 2, last_push: 40 },
                 SlotRow { slot: 1, generation: 3, live: false, window: 0, last_push: 17 },
@@ -605,9 +675,26 @@ mod tests {
             "dana_checkpoint_step 32",
             "dana_checkpoint_bytes 1024",
             "dana_checkpoint_age_seconds 3",
+            "dana_cluster_role{role=\"primary\"} 1",
+            "dana_cluster_role{role=\"standby\"} 0",
+            "dana_placement_epoch 2",
+            "dana_takeovers_total 1",
+            "dana_shard_start 0",
+            "dana_shards_hosted 2",
+            "dana_shards_total 4",
         ] {
             assert!(text.contains(line), "missing {line:?} in:\n{text}");
         }
+        // primaries expose no standby-lag series
+        assert!(!text.contains("dana_standby_lag_steps"));
+        // a standby flips the role series and exposes its lag
+        let mut standby = synthetic_snapshot();
+        standby.cluster.standby = true;
+        standby.cluster.standby_lag = Some(7);
+        let text = render_prometheus(&standby);
+        assert!(text.contains("dana_cluster_role{role=\"primary\"} 0"), "{text}");
+        assert!(text.contains("dana_cluster_role{role=\"standby\"} 1"), "{text}");
+        assert!(text.contains("dana_standby_lag_steps 7"), "{text}");
     }
 
     #[test]
@@ -627,6 +714,15 @@ mod tests {
         assert_eq!(slots[1].get("last_push").unwrap().as_usize().unwrap(), 17);
         let shards = v.at(&["shards"]).unwrap().as_arr().unwrap();
         assert_eq!(shards[1].get("ticket_backlog").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            v.at(&["cluster", "role"]).unwrap(),
+            &Json::str("primary"),
+            "role renders as a string"
+        );
+        assert_eq!(v.at(&["cluster", "placement_epoch"]).unwrap().as_usize().unwrap(), 2);
+        assert_eq!(v.at(&["cluster", "takeovers_total"]).unwrap().as_usize().unwrap(), 1);
+        assert_eq!(v.at(&["cluster", "shards_total"]).unwrap().as_usize().unwrap(), 4);
+        assert_eq!(v.at(&["cluster", "standby_lag_steps"]).unwrap(), &Json::Null);
         // lag histogram quantiles survive the trip
         assert!(v.at(&["lag", "p50"]).unwrap().as_f64().unwrap() <= 1.0);
     }
@@ -648,12 +744,15 @@ mod tests {
             lag: AtomicHistogram::new(LAG_BOUNDS).snapshot(),
             shard_gates: Vec::new(),
             checkpoint: None,
+            cluster: ClusterStatus::default(),
             slots: Vec::new(),
         };
         let text = render_prometheus(&s);
         assert!(!text.contains("dana_shard_gate_position"));
         assert!(!text.contains("dana_checkpoint_step"));
+        assert!(!text.contains("dana_standby_lag_steps"));
         assert!(text.contains("dana_pushes_total 0"));
+        assert!(text.contains("dana_cluster_role{role=\"primary\"} 1"));
         let v = Json::parse(&render_status_json(&s)).unwrap();
         assert_eq!(v.at(&["checkpoint"]).unwrap(), &Json::Null);
     }

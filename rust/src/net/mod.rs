@@ -45,20 +45,38 @@ pub use client::{strip_scheme, RemoteMaster};
 pub use codec::{Encoding, EncodingSet};
 pub use http::StatusServer;
 pub use retention::RetentionPolicy;
-pub use server::{NetServer, ServeOptions};
+pub use server::{NetServer, Placement, ServeOptions};
 
 use crate::config::TrainConfig;
 use crate::optim::LrSchedule;
 use crate::server::{make_master, Master};
 
 /// Build the master a training driver runs against: in-process
-/// (monolithic or sharded per `cfg.shards`) by default, or a
-/// [`RemoteMaster`] when [`TrainConfig::master_addr`] names a `dana
-/// serve` endpoint.  The remote path validates that the server's
-/// algorithm and parameter count match this run's — a mismatched pairing
-/// fails fast instead of training garbage.
+/// (monolithic or sharded per `cfg.shards`) by default, a
+/// [`RemoteMaster`] when [`TrainConfig::master_addr`] names ONE `dana
+/// serve` endpoint, or a [`crate::cluster::ClusterMaster`] when it
+/// names a comma-separated list of them (a multi-server placement).
+/// The single-endpoint path is untouched by the cluster layer — same
+/// construction, same wire traffic, bit-for-bit.  Both remote paths
+/// validate that the server's algorithm and parameter count match this
+/// run's — a mismatched pairing fails fast instead of training garbage.
 pub fn master_for(cfg: &TrainConfig, theta0: &[f32]) -> anyhow::Result<Box<dyn Master>> {
     match &cfg.master_addr {
+        Some(addr) if addr.contains(',') => {
+            let endpoints: Vec<String> = addr
+                .split(',')
+                .map(|e| e.trim().to_string())
+                .filter(|e| !e.is_empty())
+                .collect();
+            let cm = crate::cluster::ClusterMaster::connect(
+                &endpoints,
+                cfg.n_workers,
+                Some((cfg.algorithm, theta0.len())),
+                cfg.encoding,
+                cfg.shard_frames,
+            )?;
+            Ok(Box::new(cm))
+        }
         Some(addr) => {
             // kind/k are validated from the control handshake BEFORE any
             // worker slot is joined: a misconfigured client never

@@ -96,6 +96,35 @@ pub struct ServeOptions {
     /// instead ([`codec::grant`]).  Defaults to everything this build
     /// speaks; `none` is always included.
     pub encodings: EncodingSet,
+    /// Where this server sits in a multi-server placement (wire v5).
+    /// The default (`0..0 @ epoch 0`) is normalized at start into "all
+    /// shards, epoch 0" — a standalone server advertises itself as the
+    /// whole cluster and every existing single-endpoint flow is
+    /// unchanged.
+    pub placement: Placement,
+}
+
+/// This server's slice of a cluster-wide shard placement, advertised in
+/// every reply header (wire v5) so clients can resolve and re-resolve
+/// the cluster layout from any endpoint.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Placement {
+    /// First global shard hosted here (`dana serve --shard-range A..B`
+    /// sets A; the hosted count B−A is the master's own shard count).
+    pub shard_start: u32,
+    /// Global shard count across the whole placement (0 = standalone:
+    /// normalized to the master's shard count at start).
+    pub total_shards: u32,
+    /// Placement epoch this server serves under.  Strictly increases at
+    /// every takeover, so a client comparing epochs can fence a stale
+    /// primary: whichever server of a range advertises the highest epoch
+    /// is the authority, and replies carrying an older epoch than the
+    /// client has already seen for the range must be treated as stale.
+    pub epoch: u64,
+    /// Takeovers this process has performed (0 for a server that started
+    /// as a primary; a standby promotes with 1).  Surfaced as the
+    /// `dana_takeovers_total` counter.
+    pub takeovers: u64,
 }
 
 /// Connection bookkeeping, under one short mutex (never held across a
@@ -152,7 +181,29 @@ impl Shared {
             live_workers: live as u64,
             worker_slots: slots as u64,
             pushes_dropped: self.drops.load(Ordering::Relaxed),
+            epoch: self.opts.placement.epoch,
+            shard_start: self.opts.placement.shard_start,
+            shard_hosted: self.master.shard_count() as u32,
+            total_shards: self.opts.placement.total_shards,
+            standby: 0,
         }
+    }
+
+    /// Map a wire (global) shard id onto this server's local shard
+    /// table.  Out-of-range slices are a *recoverable* protocol error —
+    /// a client acting on a stale placement must get an error reply it
+    /// can re-resolve from, never a fatal close or an out-of-bounds
+    /// index into the local table.
+    fn local_shard(&self, shard: u32, n_local: usize) -> Result<usize, String> {
+        let start = self.opts.placement.shard_start;
+        let local = shard.wrapping_sub(start) as usize;
+        if shard < start || local >= n_local {
+            return Err(format!(
+                "shard {shard} is outside this server's hosted range {start}..{}",
+                start as usize + n_local
+            ));
+        }
+        Ok(local)
     }
 
     /// Count one dropped push and build the recoverable error reply.
@@ -332,6 +383,15 @@ impl http::StatusSource for Shared {
             lag: hub.lag_histogram(),
             shard_gates: self.master.shard_gates(),
             checkpoint: self.checkpoint_info(),
+            cluster: http::ClusterStatus {
+                standby: false,
+                epoch: self.opts.placement.epoch,
+                takeovers: self.opts.placement.takeovers,
+                shard_start: self.opts.placement.shard_start,
+                shard_hosted: self.master.shard_count() as u32,
+                total_shards: self.opts.placement.total_shards,
+                standby_lag: None,
+            },
             slots: Vec::new(),
         }
     }
@@ -397,13 +457,30 @@ impl NetServer {
     /// reconnecting workers; a fresh master should be built with 0
     /// workers so that connect == join.
     pub fn start_serving(
-        mut master: Box<dyn ServingMaster>,
+        master: Box<dyn ServingMaster>,
         listen: &str,
         opts: ServeOptions,
     ) -> anyhow::Result<NetServer> {
         let listener = TcpListener::bind(listen)
             .map_err(|e| anyhow::anyhow!("bind {listen}: {e}"))?;
+        Self::start_serving_on(listener, master, opts)
+    }
+
+    /// [`Self::start_serving`] on an already-bound listener.  A standby
+    /// that takes over morphs into a real server on the very listener it
+    /// has been answering placement probes on — no rebind, no window
+    /// where the advertised address refuses connections.
+    pub fn start_serving_on(
+        listener: TcpListener,
+        mut master: Box<dyn ServingMaster>,
+        mut opts: ServeOptions,
+    ) -> anyhow::Result<NetServer> {
         let addr = listener.local_addr()?;
+        // a standalone server IS the whole placement: all shards, as-is
+        if opts.placement.total_shards == 0 {
+            opts.placement.shard_start = 0;
+            opts.placement.total_shards = master.shard_count() as u32;
+        }
         // size the pull windows before the master is shared with
         // connection threads (0 = classic serving, bit-for-bit)
         master.set_pipeline_hint(opts.pipeline_depth);
@@ -496,6 +573,13 @@ impl NetServer {
     /// Master steps applied so far (test/operator introspection).
     pub fn steps_done(&self) -> u64 {
         self.shared.master.steps_done()
+    }
+
+    /// The `/metrics`–`/status` source backing this server.  A standby's
+    /// persistent status listener re-points here after its takeover, so
+    /// the scrape endpoint survives the role change.
+    pub(crate) fn status_source(&self) -> Arc<dyn http::StatusSource> {
+        Arc::clone(&self.shared) as Arc<dyn http::StatusSource>
     }
 }
 
@@ -743,14 +827,24 @@ fn dispatch(
             }
         }
         (Msg::PullShard { shard }, Some(w)) => {
-            if shard as usize >= ranges.len() {
-                fatal(&format!("pull for shard {shard} of {}", ranges.len()))
-            } else if !slot_ok(shared, w, gen, None) {
-                recoverable(format!("pull for retired worker slot {w}"))
-            } else {
-                match shared.master.pull_shard(w, shard as usize) {
-                    Ok(params) => Msg::ShardParams { header: shared.header(), shard, params },
-                    Err(e) => recoverable(format!("{e:#}")),
+            // wire shard ids are GLOBAL under the placement; map onto the
+            // local table (identity for a standalone server) and refuse
+            // out-of-range slices recoverably
+            match shared.local_shard(shard, ranges.len()) {
+                Err(detail) => recoverable(detail),
+                Ok(local) => {
+                    if !slot_ok(shared, w, gen, None) {
+                        recoverable(format!("pull for retired worker slot {w}"))
+                    } else {
+                        match shared.master.pull_shard(w, local) {
+                            Ok(params) => {
+                                // echo the global id: the client indexes
+                                // its own placement-wide ranges by it
+                                Msg::ShardParams { header: shared.header(), shard, params }
+                            }
+                            Err(e) => recoverable(format!("{e:#}")),
+                        }
+                    }
                 }
             }
         }
@@ -780,15 +874,65 @@ fn dispatch(
                 }
             }
         }
+        (Msg::PushStage { gen: push_gen, msg }, Some(w)) => {
+            // phase 1 of a cluster two-phase apply: compute this range's
+            // additive statistics partials against the worker's pending
+            // pull — read-only, nothing applied, nothing staged
+            if !slot_ok(shared, w, gen, Some(push_gen)) {
+                recoverable(format!("staged push for retired worker slot {w}"))
+            } else if msg.len() != shared.master.param_len() {
+                fatal(&format!(
+                    "staged push length {} != parameter count {}",
+                    msg.len(),
+                    shared.master.param_len()
+                ))
+            } else {
+                match shared.master.push_stats(w, &msg) {
+                    Ok(stats) => Msg::StageStats { header: shared.header(), stats },
+                    Err(e) => recoverable(format!("{e:#}")),
+                }
+            }
+        }
+        (Msg::PushCommit { gen: push_gen, stats, msg }, Some(w)) => {
+            // phase 2: apply the (re-sent) update under the globally
+            // merged statistics — acknowledged exactly like a plain Push
+            if !slot_ok(shared, w, gen, Some(push_gen)) {
+                shared.drop_push(format!("stale push commit for worker slot {w}"))
+            } else if msg.len() != shared.master.param_len() {
+                fatal(&format!(
+                    "push commit length {} != parameter count {}",
+                    msg.len(),
+                    shared.master.param_len()
+                ))
+            } else {
+                match shared.master.push_with_stats(w, &msg, &stats) {
+                    Ok((s, settled)) => {
+                        shared.maybe_periodic_checkpoint();
+                        Msg::PushAck {
+                            header: shared.header(),
+                            step: settled,
+                            eta: s.eta,
+                            gamma: s.gamma,
+                            lambda: s.lambda,
+                        }
+                    }
+                    Err(e) => shared.drop_push(format!("{e:#}")),
+                }
+            }
+        }
         (Msg::PushShard { gen: push_gen, shard, msg }, Some(w)) => {
-            if shard as usize >= ranges.len() {
-                group.reset();
-                fatal(&format!("push for shard {shard} of {}", ranges.len()))
-            } else if !slot_ok(shared, w, gen, Some(push_gen)) {
+            let local = match shared.local_shard(shard, ranges.len()) {
+                Ok(local) => local,
+                Err(detail) => {
+                    group.reset();
+                    return (shared.drop_push(detail), false);
+                }
+            };
+            if !slot_ok(shared, w, gen, Some(push_gen)) {
                 group.reset();
                 shared.drop_push(format!("stale push for worker slot {w}"))
             } else {
-                match group.add(shard as usize, ranges[shard as usize].clone(), &msg) {
+                match group.add(local, ranges[local].clone(), &msg) {
                     Err(e) => {
                         group.reset();
                         fatal(&format!("{e:#}"))
@@ -851,7 +995,7 @@ fn dispatch(
         }
         (
             Msg::PullParams | Msg::Push { .. } | Msg::PullShard { .. } | Msg::PushShard { .. }
-            | Msg::Leave { .. },
+            | Msg::PushStage { .. } | Msg::PushCommit { .. } | Msg::Leave { .. },
             None,
         ) => fatal("worker request on a control connection"),
         (Msg::Hello { .. }, _) => fatal("duplicate Hello"),
@@ -863,6 +1007,7 @@ fn dispatch(
             | Msg::PushAck { .. }
             | Msg::Ack { .. }
             | Msg::Theta { .. }
+            | Msg::StageStats { .. }
             | Msg::Error { .. },
             _,
         ) => fatal("unexpected reply-type message"),

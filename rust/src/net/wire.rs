@@ -55,12 +55,29 @@
 //! [`crate::net::codec::write_push`]-style borrowed-slice writers, so
 //! the steady-state worker cycle allocates nothing on the push path.
 //!
+//! Version 5 is the placement layer: [`Header`] — piggybacked on every
+//! reply — advertises the server's hosted shard *range* within the
+//! global placement (`shard_start`/`shard_hosted`/`total_shards`), its
+//! monotonically-increasing placement `epoch` (a standby that takes a
+//! dead primary's range over restarts it at `epoch + 1`, fencing the
+//! stale primary: a client that recorded a newer epoch for the range
+//! refuses to follow an older claimant), and a `standby` flag (a hot
+//! standby answers control probes but serves no workers until
+//! takeover).  Two new frames carry YellowFin's two-phase cluster
+//! apply: [`Msg::PushStage`] asks a server for the additive
+//! [`ApplyStats`] partials of an update *without applying it* (reply
+//! [`Msg::StageStats`]), and [`Msg::PushCommit`] applies the update
+//! under the globally-summed statistics — which is how a fan-out client
+//! keeps YellowFin's whole-vector tuner reductions exact when the
+//! coordinate range is split across servers.  Stage/commit payloads are
+//! always exact (never quantized): they exist for bit-equivalence.
+//!
 //! Algorithm kinds and leave policies travel as their canonical names (the
 //! same strings the CLI parses), so the protocol does not depend on enum
 //! discriminant order; an unknown name is a decode error.
 
 use crate::net::codec::{self, Encoding};
-use crate::optim::{AlgorithmKind, LeavePolicy, Step};
+use crate::optim::{AlgorithmKind, ApplyStats, LeavePolicy, Step};
 use std::cell::RefCell;
 use std::io::{Read, Write};
 
@@ -71,8 +88,11 @@ pub const MAGIC: [u8; 4] = *b"DANA";
 /// 3: settled step in PushAck, dropped-push count in Header, pipeline
 /// depth in HelloAck; 4: negotiated payload encodings — requested
 /// encoding in Hello, advertised set in HelloAck, a payload-encoding
-/// tag on every parameter vector).
-pub const VERSION: u8 = 4;
+/// tag on every parameter vector; 5: placement advertisement in Header
+/// — hosted shard range, placement epoch, standby flag — plus the
+/// PushStage/StageStats/PushCommit frames for the fan-out client's
+/// two-phase YellowFin apply).
+pub const VERSION: u8 = 5;
 /// Upper bound on one frame body (1 GiB ≈ 256M f32 parameters).
 pub const MAX_FRAME: u32 = 1 << 30;
 
@@ -106,6 +126,25 @@ pub struct Header {
     /// over the server's lifetime, so deltas across `Status` reads count
     /// drops in a window.
     pub pushes_dropped: u64,
+    /// Placement epoch of this server's claim on its shard range.
+    /// Monotonically increasing per range: a standby taking over
+    /// advertises the dead primary's last-seen epoch + 1.  Clients fence
+    /// on it — once a newer epoch has been observed for a range, replies
+    /// and claims carrying an older one are refused (a resurrected stale
+    /// primary cannot win its range back without a fresh, higher epoch).
+    pub epoch: u64,
+    /// First global placement shard hosted by this server.
+    pub shard_start: u32,
+    /// Number of contiguous global shards hosted here ([`shard_start`,
+    /// `shard_start + shard_hosted`)).
+    pub shard_hosted: u32,
+    /// Global placement shard count.  `shard_hosted == total_shards`
+    /// means the server hosts the whole model (standalone).
+    pub total_shards: u32,
+    /// 1 while the peer is a hot standby: it answers control probes
+    /// (this header included) but serves no worker traffic until it
+    /// takes its primary's range over.
+    pub standby: u8,
 }
 
 impl Header {
@@ -149,6 +188,17 @@ pub enum Msg {
     /// answered with [`Msg::PushAck`], earlier ones with [`Msg::Ack`]).
     /// `gen` echoes the slot generation exactly like [`Msg::Push`].
     PushShard { gen: u32, shard: u32, msg: Vec<f32> },
+    /// Worker: phase 1 of a two-phase (fan-out) push — compute the
+    /// additive [`ApplyStats`] partials this update would produce over
+    /// this server's coordinate range, *without applying anything*.
+    /// Reply: [`Msg::StageStats`].  The payload is always exact (raw
+    /// f32s, never the negotiated encoding): staging exists to keep
+    /// YellowFin's whole-vector reductions bit-equal across a split.
+    PushStage { gen: u32, msg: Vec<f32> },
+    /// Worker: phase 2 — apply the update as one master step using the
+    /// provided globally-summed statistics instead of locally computed
+    /// ones.  Reply: [`Msg::PushAck`], exactly like [`Msg::Push`].
+    PushCommit { gen: u32, stats: ApplyStats, msg: Vec<f32> },
     /// Control: force a checkpoint write now.
     Checkpoint,
     /// Control: refresh the header.
@@ -187,6 +237,9 @@ pub enum Msg {
     Ack { header: Header },
     /// Reply to [`Msg::GetTheta`].
     Theta { header: Header, theta: Vec<f32> },
+    /// Reply to [`Msg::PushStage`]: this server's additive statistics
+    /// partials for the staged update (nothing was applied).
+    StageStats { header: Header, stats: ApplyStats },
     /// Error reply.  `recoverable` distinguishes a droppable condition (a
     /// straggler push after leave) from a fatal one (protocol misuse).
     Error { recoverable: bool, detail: String },
@@ -219,6 +272,10 @@ pub(crate) fn put_vec_f32(out: &mut Vec<u8>, v: &[f32]) {
     }
 }
 
+pub(crate) fn put_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
 pub(crate) fn put_header(out: &mut Vec<u8>, h: &Header) {
     put_u64(out, h.master_step);
     put_f32(out, h.eta);
@@ -227,7 +284,23 @@ pub(crate) fn put_header(out: &mut Vec<u8>, h: &Header) {
     put_u64(out, h.live_workers);
     put_u64(out, h.worker_slots);
     put_u64(out, h.pushes_dropped);
+    put_u64(out, h.epoch);
+    put_u32(out, h.shard_start);
+    put_u32(out, h.shard_hosted);
+    put_u32(out, h.total_shards);
+    out.push(h.standby);
 }
+
+/// [`ApplyStats`] on the wire: four little-endian f64s.
+pub(crate) fn put_stats(out: &mut Vec<u8>, s: &ApplyStats) {
+    put_f64(out, s.msg_norm2);
+    put_f64(out, s.g_avg_norm2);
+    put_f64(out, s.prev_dot);
+    put_f64(out, s.prev_norm2);
+}
+
+/// Encoded size of [`put_stats`].
+pub(crate) const STATS_LEN: usize = 4 * 8;
 
 impl Msg {
     fn tag(&self) -> u8 {
@@ -242,6 +315,8 @@ impl Msg {
             Msg::Shutdown => 8,
             Msg::PullShard { .. } => 9,
             Msg::PushShard { .. } => 10,
+            Msg::PushStage { .. } => 11,
+            Msg::PushCommit { .. } => 12,
             Msg::HelloAck { .. } => 16,
             Msg::Params { .. } => 17,
             Msg::PushAck { .. } => 18,
@@ -249,6 +324,7 @@ impl Msg {
             Msg::Theta { .. } => 20,
             Msg::Error { .. } => 21,
             Msg::ShardParams { .. } => 22,
+            Msg::StageStats { .. } => 23,
         }
     }
 
@@ -261,7 +337,7 @@ impl Msg {
     /// through the [`crate::net::codec`] writers, which size themselves
     /// with [`crate::net::codec::payload_wire_len`]).
     pub fn body_len(&self) -> usize {
-        const HDR: usize = 8 + 4 + 4 + 4 + 8 + 8 + 8; // Header
+        const HDR: usize = 8 + 4 + 4 + 4 + 8 + 8 + 8 + 8 + 4 + 4 + 4 + 1; // Header
         let payload = match self {
             Msg::Hello { .. } => 2 + 1 + 4,
             Msg::PullParams | Msg::Checkpoint | Msg::Status | Msg::GetTheta | Msg::Shutdown => 0,
@@ -269,6 +345,9 @@ impl Msg {
             Msg::Leave { policy } => 4 + policy.name().len(),
             Msg::PullShard { .. } => 4,
             Msg::PushShard { msg, .. } => 4 + 4 + 1 + 8 + 4 * msg.len(),
+            Msg::PushStage { msg, .. } => 4 + 8 + 4 * msg.len(),
+            Msg::PushCommit { msg, .. } => 4 + STATS_LEN + 8 + 4 * msg.len(),
+            Msg::StageStats { .. } => HDR + STATS_LEN,
             Msg::HelloAck { kind, .. } => 8 + 4 + (4 + kind.name().len()) + 8 + 4 + 4 + 4 + HDR,
             Msg::Params { params, .. } => HDR + 1 + 8 + 4 * params.len(),
             Msg::ShardParams { params, .. } => HDR + 4 + 1 + 8 + 4 * params.len(),
@@ -316,6 +395,19 @@ impl Msg {
                 put_u32(frame, *gen);
                 put_u32(frame, *shard);
                 codec::put_payload(frame, Encoding::None, msg);
+            }
+            Msg::PushStage { gen, msg } => {
+                put_u32(frame, *gen);
+                put_vec_f32(frame, msg);
+            }
+            Msg::PushCommit { gen, stats, msg } => {
+                put_u32(frame, *gen);
+                put_stats(frame, stats);
+                put_vec_f32(frame, msg);
+            }
+            Msg::StageStats { header, stats } => {
+                put_header(frame, header);
+                put_stats(frame, stats);
             }
             Msg::HelloAck { slot, gen, kind, k, shards, pipeline, encodings, header } => {
                 put_u64(frame, *slot);
@@ -406,6 +498,9 @@ impl Msg {
                 shard: d.u32()?,
                 msg: codec::get_payload(&mut d)?,
             },
+            11 => Msg::PushStage { gen: d.u32()?, msg: d.vec_f32()? },
+            12 => Msg::PushCommit { gen: d.u32()?, stats: d.stats()?, msg: d.vec_f32()? },
+            23 => Msg::StageStats { header: d.header()?, stats: d.stats()? },
             16 => Msg::HelloAck {
                 slot: d.u64()?,
                 gen: d.u32()?,
@@ -555,6 +650,10 @@ impl<'a> Dec<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
     }
 
+    pub(crate) fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
     pub(crate) fn str(&mut self) -> anyhow::Result<&'a str> {
         let n = self.u32()? as usize;
         Ok(std::str::from_utf8(self.take(n)?)?)
@@ -588,7 +687,7 @@ impl<'a> Dec<'a> {
     }
 
     pub(crate) fn header(&mut self) -> anyhow::Result<Header> {
-        Ok(Header {
+        let h = Header {
             master_step: self.u64()?,
             eta: self.f32()?,
             gamma: self.f32()?,
@@ -596,6 +695,22 @@ impl<'a> Dec<'a> {
             live_workers: self.u64()?,
             worker_slots: self.u64()?,
             pushes_dropped: self.u64()?,
+            epoch: self.u64()?,
+            shard_start: self.u32()?,
+            shard_hosted: self.u32()?,
+            total_shards: self.u32()?,
+            standby: self.u8()?,
+        };
+        anyhow::ensure!(h.standby <= 1, "standby flag {} is not a bool", h.standby);
+        Ok(h)
+    }
+
+    pub(crate) fn stats(&mut self) -> anyhow::Result<ApplyStats> {
+        Ok(ApplyStats {
+            msg_norm2: self.f64()?,
+            g_avg_norm2: self.f64()?,
+            prev_dot: self.f64()?,
+            prev_norm2: self.f64()?,
         })
     }
 

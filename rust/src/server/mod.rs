@@ -15,8 +15,8 @@ pub mod metrics;
 pub mod sharded;
 
 use crate::optim::{
-    claim_slot, make_algorithm, Algorithm, AlgorithmKind, LeavePolicy, LrSchedule, StateDict,
-    Step, WorkerState, ANY_SLOT,
+    claim_slot, make_algorithm, Algorithm, AlgorithmKind, ApplyStats, LeavePolicy, LrSchedule,
+    StateDict, Step, WorkerState, ANY_SLOT,
 };
 use crate::util::sync;
 use metrics::{MetricRow, MetricsHub, MetricsRecorder};
@@ -145,6 +145,30 @@ pub trait Master: Send {
     /// flight when it left — is a *recoverable* error: the server state is
     /// untouched and the caller may simply drop the message.
     fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step>;
+    /// Phase 1 of a two-phase push: the additive [`ApplyStats`] partials
+    /// this update would produce, *without applying anything* (read-only
+    /// on the training state).  A fan-out client stages against every
+    /// server hosting a slice of the model, sums the partials (every
+    /// field is a plain coordinate sum), and commits with
+    /// [`Self::push_update_with`] — which is how YellowFin's whole-vector
+    /// tuner reductions stay exact across a placement split.  Masters
+    /// that cannot stage (there is only the single-phase apply) error.
+    fn push_stats(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<ApplyStats> {
+        let _ = (worker, msg);
+        anyhow::bail!("this master does not support staged apply statistics")
+    }
+    /// Phase 2 of a two-phase push: exactly [`Self::push_update`], but
+    /// applying under the caller's globally-summed statistics instead of
+    /// statistics computed over this master's own coordinates.
+    fn push_update_with(
+        &mut self,
+        worker: usize,
+        msg: &[f32],
+        stats: &ApplyStats,
+    ) -> anyhow::Result<Step> {
+        let _ = (worker, msg, stats);
+        anyhow::bail!("this master does not support staged apply statistics")
+    }
     /// Configure the pipeline window: each worker will keep `depth + 1`
     /// pulls outstanding (the `--pipeline-depth` of the driver).  Local
     /// masters size their per-slot pull windows and forward the staleness
@@ -173,6 +197,14 @@ pub trait Master: Send {
     /// synchronously, nothing can be lost between push and ack).
     fn pushes_lost(&self) -> u64 {
         0
+    }
+    /// Per-placement-group `(endpoint, master steps done)` rows for
+    /// fan-out masters (one row per server in the placement; the step
+    /// count is read fresh from each server).  Empty for masters with a
+    /// single home.  `&mut self` because reading fresh counts may take a
+    /// control round trip per group.
+    fn placement_groups(&mut self) -> Vec<(String, u64)> {
+        Vec::new()
     }
     /// Per-slot scrape row: `(outstanding pull-window depth, master step
     /// count right after the slot's last applied push — 0 = never
@@ -230,6 +262,18 @@ pub trait ServingMaster: Send + Sync {
     /// update *settled as* (its ticket — exact even under concurrency),
     /// which `PushAck` reports back to pipelined clients.
     fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<(Step, u64)>;
+    /// Phase 1 of the cluster's two-phase push (wire `PushStage`): the
+    /// additive [`ApplyStats`] partials over this server's coordinates,
+    /// without applying anything.  See [`Master::push_stats`].
+    fn push_stats(&self, worker: usize, msg: &[f32]) -> anyhow::Result<ApplyStats>;
+    /// Phase 2 (wire `PushCommit`): apply one push under the caller's
+    /// globally-summed statistics.  Same contract as [`Self::push`].
+    fn push_with_stats(
+        &self,
+        worker: usize,
+        msg: &[f32],
+        stats: &ApplyStats,
+    ) -> anyhow::Result<(Step, u64)>;
     fn theta(&self) -> Vec<f32>;
     fn snapshot(&self) -> anyhow::Result<MasterSnapshot>;
     fn restore(&mut self, snap: &MasterSnapshot) -> anyhow::Result<()>;
@@ -446,6 +490,22 @@ impl ServingMaster for LockedMaster {
         Ok((s, settled))
     }
 
+    fn push_stats(&self, worker: usize, msg: &[f32]) -> anyhow::Result<ApplyStats> {
+        sync::lock(&self.inner).push_stats(worker, msg)
+    }
+
+    fn push_with_stats(
+        &self,
+        worker: usize,
+        msg: &[f32],
+        stats: &ApplyStats,
+    ) -> anyhow::Result<(Step, u64)> {
+        let mut m = sync::lock(&self.inner);
+        let settled = m.steps_done();
+        let s = m.push_update_with(worker, msg, stats)?;
+        Ok((s, settled))
+    }
+
     fn theta(&self) -> Vec<f32> {
         sync::lock(&self.inner).theta_vec()
     }
@@ -538,6 +598,19 @@ impl ServingMaster for ShardedParameterServer {
 
     fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<(Step, u64)> {
         self.push_concurrent(worker, msg)
+    }
+
+    fn push_stats(&self, worker: usize, msg: &[f32]) -> anyhow::Result<ApplyStats> {
+        self.push_stats_concurrent(worker, msg)
+    }
+
+    fn push_with_stats(
+        &self,
+        worker: usize,
+        msg: &[f32],
+        stats: &ApplyStats,
+    ) -> anyhow::Result<(Step, u64)> {
+        self.push_concurrent_with(worker, msg, Some(stats))
     }
 
     fn theta(&self) -> Vec<f32> {
@@ -841,6 +914,55 @@ impl ParameterServer {
     /// semantics where a worker may push repeatedly against its latest
     /// pull.
     pub fn push(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
+        self.push_inner(worker, msg, None)
+    }
+
+    /// Like [`Self::push`], applying under caller-provided, globally
+    /// summed [`ApplyStats`] (phase 2 of the cluster's two-phase apply)
+    /// instead of statistics computed over this server's own range.
+    pub fn push_with(
+        &mut self,
+        worker: usize,
+        msg: &[f32],
+        stats: &ApplyStats,
+    ) -> anyhow::Result<Step> {
+        self.push_inner(worker, msg, Some(stats))
+    }
+
+    /// Phase 1 of the two-phase apply: validate the push exactly like
+    /// [`Self::push`] would, then return the additive statistics partials
+    /// it would produce — read-only, nothing is applied or consumed.
+    /// Staging runs *before* the commit's momentum correction; that is
+    /// exact because [`crate::optim::Algorithm::apply_stats`] never reads
+    /// the rescaled momentum buffer (pinned by the cluster equivalence
+    /// tests for YellowFin, the one rule with nontrivial stats).
+    pub fn push_stats(&self, worker: usize, msg: &[f32]) -> anyhow::Result<ApplyStats> {
+        anyhow::ensure!(
+            worker < self.live.len(),
+            "push from unknown worker {worker} (slots: {})",
+            self.live.len()
+        );
+        anyhow::ensure!(self.live[worker], "push from retired worker {worker}");
+        anyhow::ensure!(
+            !self.pulls[worker].is_empty(),
+            "worker {worker} pushed before ever pulling"
+        );
+        anyhow::ensure!(
+            msg.len() == self.alg.param_count(),
+            "staged push length {} != parameter count {}",
+            msg.len(),
+            self.alg.param_count()
+        );
+        let sent = &self.pulls[worker].front().expect("validated non-empty").params;
+        Ok(self.alg.apply_stats(worker, msg, sent))
+    }
+
+    fn push_inner(
+        &mut self,
+        worker: usize,
+        msg: &[f32],
+        stats: Option<&ApplyStats>,
+    ) -> anyhow::Result<Step> {
         anyhow::ensure!(
             worker < self.live.len(),
             "push from unknown worker {worker} (slots: {})",
@@ -877,7 +999,10 @@ impl ParameterServer {
         }
 
         let sent = &self.pulls[worker].front().expect("validated non-empty").params;
-        self.alg.master_apply(worker, msg, sent, s);
+        match stats {
+            Some(st) => self.alg.master_apply_with(worker, msg, sent, s, st),
+            None => self.alg.master_apply(worker, msg, sent, s),
+        }
         self.metrics.note_push(lag);
         self.master_step += 1;
         self.last_push[worker] = self.master_step;
@@ -940,6 +1065,19 @@ impl Master for ParameterServer {
 
     fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
         self.push(worker, msg)
+    }
+
+    fn push_stats(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<ApplyStats> {
+        ParameterServer::push_stats(self, worker, msg)
+    }
+
+    fn push_update_with(
+        &mut self,
+        worker: usize,
+        msg: &[f32],
+        stats: &ApplyStats,
+    ) -> anyhow::Result<Step> {
+        self.push_with(worker, msg, stats)
     }
 
     fn set_pipeline_depth(&mut self, depth: usize) {

@@ -574,6 +574,59 @@ impl ShardedParameterServer {
     /// is the only entry.  Returns the applied [`Step`] and the ticket
     /// (the master step the push settled as).
     pub fn push_concurrent(&self, worker: usize, msg: &[f32]) -> anyhow::Result<(Step, u64)> {
+        self.push_concurrent_with(worker, msg, None)
+    }
+
+    /// Phase 1 of the cluster's two-phase apply: the additive statistics
+    /// partials this push would produce over this server's coordinates,
+    /// merged across shards in shard order — read-only (shard *read*
+    /// locks, no ticket), nothing applied or consumed.  Coherent with the
+    /// later commit under the fan-out client's per-worker serialization
+    /// (a worker's stage and commit are one logical push; no other push
+    /// from that client interleaves between them).
+    pub fn push_stats_concurrent(&self, worker: usize, msg: &[f32]) -> anyhow::Result<ApplyStats> {
+        let _e = sync::read(&self.epoch);
+        let slots = sync::read(&self.pulls);
+        anyhow::ensure!(
+            worker < slots.len(),
+            "push from unknown worker {worker} (slots: {})",
+            slots.len()
+        );
+        let sp = sync::lock(&slots[worker]);
+        {
+            let q = sync::lock(&self.seq);
+            anyhow::ensure!(q.live[worker], "push from retired worker {worker}");
+        }
+        anyhow::ensure!(
+            !sp.queue.is_empty(),
+            "worker {worker} pushed before ever pulling"
+        );
+        anyhow::ensure!(
+            msg.len() == self.k,
+            "staged push length {} != parameter count {}",
+            msg.len(),
+            self.k
+        );
+        let sent: &[f32] = &sp.queue.front().expect("validated non-empty").1;
+        let mut stats = ApplyStats::default();
+        for sh in &self.shards {
+            let r = sh.range.clone();
+            let alg = sync::read(&sh.alg);
+            stats.merge(&alg.apply_stats(worker, &msg[r.clone()], &sent[r]));
+        }
+        Ok(stats)
+    }
+
+    /// [`Self::push_concurrent`] with an optional caller-provided global
+    /// statistics override (phase 2 of the cluster's two-phase apply).
+    /// With `Some(stats)` the local statistics pass is skipped entirely —
+    /// the provided sums stand in for it, elementwise fan-out applies.
+    pub fn push_concurrent_with(
+        &self,
+        worker: usize,
+        msg: &[f32],
+        provided: Option<&ApplyStats>,
+    ) -> anyhow::Result<(Step, u64)> {
         let _e = sync::read(&self.epoch);
         let slots = sync::read(&self.pulls);
         anyhow::ensure!(
@@ -619,7 +672,7 @@ impl ShardedParameterServer {
         // (gap_sq, msg_sq) partials per shard, reduced in shard order.
         let mut partials: Vec<(f64, f64)> = vec![(0.0, 0.0); self.shards.len()];
 
-        if self.needs_stats {
+        if self.needs_stats && provided.is_none() {
             // Whole-vector reductions (YellowFin): hold every shard's gate
             // through both phases so the globally merged statistics are
             // exactly what the monolithic apply would compute.
@@ -651,7 +704,10 @@ impl ShardedParameterServer {
             // Elementwise rules: one ticket-ordered pass per shard, fanned
             // out over scoped threads.  Each shard's gate admits tickets
             // in order, so overlapping pushes pipeline across shards.
-            let stats = ApplyStats::default();
+            // A provided override carries globally merged statistics from
+            // a cluster-wide staging pass, so even stats-hungry rules take
+            // this path when the caller supplies them.
+            let stats = provided.copied().unwrap_or_default();
             let sent_ref: &[f32] = sent;
             let mut work: Vec<(&ShardCell, &mut (f64, f64))> =
                 self.shards.iter().zip(partials.iter_mut()).collect();
@@ -1006,6 +1062,20 @@ impl Master for ShardedParameterServer {
 
     fn push_update(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<Step> {
         self.push_concurrent(worker, msg).map(|(s, _)| s)
+    }
+
+    fn push_stats(&mut self, worker: usize, msg: &[f32]) -> anyhow::Result<ApplyStats> {
+        self.push_stats_concurrent(worker, msg)
+    }
+
+    fn push_update_with(
+        &mut self,
+        worker: usize,
+        msg: &[f32],
+        stats: &ApplyStats,
+    ) -> anyhow::Result<Step> {
+        self.push_concurrent_with(worker, msg, Some(stats))
+            .map(|(s, _)| s)
     }
 
     fn set_pipeline_depth(&mut self, depth: usize) {

@@ -107,6 +107,25 @@ pub(crate) const LAG_CURVE_CAP: usize = 50_000;
 
 /// Fold the server's metric taps into the report (simulated backends,
 /// where the full rows are available locally).
+/// After the final drain, report per-server step counts for fan-out
+/// placements (empty — and silent — for masters with a single home).
+/// Counts are read fresh from each server, so the CI smoke can assert
+/// the client-side step count against this line.  Per-group counts may
+/// legitimately differ when pushes were lost to a failed group.
+fn print_placement(server: &mut dyn Master) {
+    let groups = server.placement_groups();
+    if groups.is_empty() {
+        return;
+    }
+    let detail: Vec<String> = groups.iter().map(|(ep, s)| format!("{ep}={s}")).collect();
+    println!(
+        "placement: {} groups, cluster steps {} [{}]",
+        groups.len(),
+        server.steps_done(),
+        detail.join(", ")
+    );
+}
+
 fn fold_metrics(report: &mut TrainReport, server: &dyn Master) {
     report.mean_gap = server.metrics().mean_gap();
     report.mean_lag = server.metrics().mean_lag();
@@ -398,6 +417,7 @@ where
     }
 
     server.drain_inflight()?;
+    print_placement(server.as_mut());
     let (loss, err) = eval(&server.theta_vec())?;
     finish_eval(&mut report, loss, err);
     fold_metrics(&mut report, server.as_ref());
@@ -735,6 +755,7 @@ where
     })?;
 
     server.drain_inflight()?;
+    print_placement(server.as_mut());
     let (loss, err) = eval(&server.theta_vec())?;
     finish_eval(&mut report, loss, err);
     report.mean_gap = server.metrics().mean_gap();

@@ -1,0 +1,491 @@
+//! Shard-group placement obligations (ISSUE 8 acceptance):
+//!
+//! 1. Placement resolution fails closed: a gap or an overlap in the
+//!    advertised shard ranges refuses to produce a `ClusterMaster`;
+//!    duplicate claims of one range resolve to the higher epoch.
+//! 2. Checkpoint slicing is layout-independent: a 1-server snapshot cut
+//!    into per-range snapshots and stitched back is the original
+//!    **bit-for-bit**, and each slice restores into a range-sized
+//!    backend that re-snapshots to the same bits — for all 10 rules.
+//! 3. A 2-server split behind real sockets reproduces the single-server
+//!    trajectory bit-for-bit for all 10 rules (`--encoding none`),
+//!    including YellowFin's whole-vector reductions (two-phase
+//!    stage/commit) and an asymmetric multi-shard split.
+//! 4. Hot-standby takeover: killing a primary mid-run under pipelined
+//!    D=1 push load promotes the standby (one epoch up), training
+//!    completes, no acked push is lost or double-applied, and the
+//!    v⁰ = Σ live vᶦ invariant holds on every surviving range.
+
+use dana::cluster::{coord_range, slice_snapshot, stitch_snapshots, ClusterMaster};
+use dana::cluster::{StandbyConfig, StandbyServer};
+use dana::config::{TrainConfig, Workload};
+use dana::net::{checkpoint, retention};
+use dana::net::{Encoding, NetServer, Placement, RemoteMaster, RetentionPolicy, ServeOptions};
+use dana::optim::{AlgorithmKind, LrSchedule, StateVec};
+use dana::server::{make_master, Master, MasterSnapshot};
+use dana::train::{real_async, sim_trainer};
+use dana::util::rng::Rng;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn cfg(kind: AlgorithmKind, workers: usize, epochs: f64) -> TrainConfig {
+    let mut c = TrainConfig::preset(Workload::C10, kind, workers, epochs);
+    c.seed = 31;
+    c.metrics_every = 0;
+    c
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dana-cluster-{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A `dana serve --shard-range a..b` master for this config: the
+/// identically-seeded full θ₀ sliced to the hosted coordinates, one
+/// local backend shard per hosted global shard.
+fn range_master(c: &TrainConfig, k: usize, total: u32, a: u32, b: u32) -> Box<dyn Master> {
+    let theta0 = real_async::synthetic_theta0(k);
+    let coords = coord_range(k, total, &(a..b)).unwrap();
+    make_master(
+        c.algorithm,
+        &theta0[coords],
+        LrSchedule::new(c.schedule.clone()),
+        0,
+        (b - a) as usize,
+        2,
+    )
+}
+
+fn start_range_server(
+    c: &TrainConfig,
+    k: usize,
+    total: u32,
+    a: u32,
+    b: u32,
+    mut opts: ServeOptions,
+) -> NetServer {
+    opts.placement = Placement {
+        shard_start: a,
+        total_shards: total,
+        epoch: opts.placement.epoch,
+        takeovers: 0,
+    };
+    NetServer::start(range_master(c, k, total, a, b), "127.0.0.1:0", opts).unwrap()
+}
+
+// ---------------------------------------------------------------- (1)
+
+/// A hole in the tiling (shard 1 unhosted) refuses to resolve, with a
+/// diagnosis naming the gap; an overlap likewise.
+#[test]
+fn placement_with_gap_or_overlap_fails_closed() {
+    let k = 24;
+    let c = cfg(AlgorithmKind::DanaZero, 2, 0.5);
+    // gap: 0..1 and 2..4 of a 4-shard placement
+    let mut s1 = start_range_server(&c, k, 4, 0, 1, ServeOptions::default());
+    let mut s2 = start_range_server(&c, k, 4, 2, 4, ServeOptions::default());
+    let urls = vec![s1.url(), s2.url()];
+    let err = ClusterMaster::connect(&urls, 2, None, Encoding::None, false)
+        .err()
+        .expect("a placement with a hole must not resolve");
+    assert!(format!("{err:#}").contains("gap"), "undiagnosed: {err:#}");
+    s1.stop();
+    s2.stop();
+
+    // overlap: 0..3 and 2..4
+    let mut s1 = start_range_server(&c, k, 4, 0, 3, ServeOptions::default());
+    let mut s2 = start_range_server(&c, k, 4, 2, 4, ServeOptions::default());
+    let urls = vec![s1.url(), s2.url()];
+    let err = ClusterMaster::connect(&urls, 2, None, Encoding::None, false)
+        .err()
+        .expect("overlapping ranges must not resolve");
+    assert!(format!("{err:#}").contains("overlap"), "undiagnosed: {err:#}");
+    s1.stop();
+    s2.stop();
+}
+
+/// Two servers claiming the same range resolve to the higher placement
+/// epoch — the client sides with the newest incarnation, never both.
+#[test]
+fn duplicate_range_resolves_to_highest_epoch() {
+    let k = 16;
+    let c = cfg(AlgorithmKind::Asgd, 1, 0.5);
+    let old = ServeOptions {
+        placement: Placement { epoch: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let new = ServeOptions {
+        placement: Placement { epoch: 3, ..Default::default() },
+        ..Default::default()
+    };
+    let mut stale = start_range_server(&c, k, 2, 0, 2, old);
+    let mut fresh = start_range_server(&c, k, 2, 0, 2, new);
+    let urls = vec![stale.url(), fresh.url()];
+    let cm = ClusterMaster::connect(&urls, 1, None, Encoding::None, false).unwrap();
+    assert_eq!(cm.group_count(), 1, "duplicate claims must dedup to one group");
+    // the chosen group is the epoch-3 server: pushing advances it, not the stale one
+    let mut cm = cm;
+    cm.pull_params(0);
+    cm.push_update(0, &vec![0.1; k]).unwrap();
+    assert_eq!(cm.steps_done(), 1);
+    let rows = cm.placement_groups();
+    assert_eq!(rows.len(), 1);
+    assert!(
+        rows[0].0.contains(&fresh.addr().port().to_string()),
+        "resolved to {} but the epoch-3 server is {}",
+        rows[0].0,
+        fresh.addr()
+    );
+    stale.stop();
+    fresh.stop();
+}
+
+// ---------------------------------------------------------------- (2)
+
+/// pull → noisy grad → push, round-robin over 2 workers.
+fn drive(m: &mut dyn Master, curv: &[f32], rng: &mut Rng, steps: usize) {
+    let k = curv.len();
+    let mut buf = vec![0.0f32; k];
+    let mut g = vec![0.0f32; k];
+    for step in 0..steps {
+        let w = step % 2;
+        m.pull_into(w, &mut buf);
+        real_async::synthetic_grad(&buf, curv, rng, &mut g);
+        m.push_update(w, &g).unwrap();
+    }
+}
+
+/// slice → stitch is the identity, and slice → restore → snapshot is
+/// the identity per range, for every update rule.
+#[test]
+fn snapshot_slice_stitch_roundtrip_all_kinds_bit_for_bit() {
+    let k = 48;
+    let curv = real_async::synthetic_curvature(k);
+    for kind in AlgorithmKind::ALL {
+        let c = cfg(kind, 2, 0.5);
+        let mut full = make_master(
+            kind,
+            &real_async::synthetic_theta0(k),
+            LrSchedule::new(c.schedule.clone()),
+            0,
+            1,
+            2,
+        );
+        assert_eq!(full.add_worker(), 0);
+        assert_eq!(full.add_worker(), 1);
+        let mut rng = Rng::new(7);
+        drive(&mut *full, &curv, &mut rng, 30);
+        let snap = full.snapshot().unwrap();
+
+        // 1-server → 3-server split (uneven: 48 coords over 3 shards)
+        let total = 3u32;
+        let mut parts = Vec::new();
+        for a in 0..total {
+            let coords = coord_range(k, total, &(a..a + 1)).unwrap();
+            let part = slice_snapshot(&snap, &coords).unwrap();
+            // each slice restores into a range-sized backend and
+            // re-snapshots to the same bits
+            let mut rm = make_master(
+                kind,
+                &real_async::synthetic_theta0(k)[coords],
+                LrSchedule::new(c.schedule.clone()),
+                0,
+                1,
+                2,
+            );
+            rm.restore(&part).unwrap();
+            assert_eq!(rm.steps_done(), 30, "{kind}: restored step count");
+            assert_eq!(
+                rm.snapshot().unwrap(),
+                part,
+                "{kind}: range {a} snapshot drifted through restore"
+            );
+            parts.push(part);
+        }
+        // …and back: the stitch is the original, bit-for-bit
+        let stitched = stitch_snapshots(&parts).unwrap();
+        assert_eq!(stitched, snap, "{kind}: slice→stitch is not the identity");
+    }
+}
+
+/// Stitching refuses ranges that did not apply the same push sequence.
+#[test]
+fn stitch_rejects_skewed_ranges() {
+    let k = 16;
+    let c = cfg(AlgorithmKind::DanaZero, 2, 0.5);
+    let curv = real_async::synthetic_curvature(k);
+    let mut m = make_master(
+        AlgorithmKind::DanaZero,
+        &real_async::synthetic_theta0(k),
+        LrSchedule::new(c.schedule.clone()),
+        0,
+        1,
+        2,
+    );
+    m.add_worker();
+    m.add_worker();
+    let mut rng = Rng::new(9);
+    drive(&mut *m, &curv, &mut rng, 10);
+    let snap = m.snapshot().unwrap();
+    let a = slice_snapshot(&snap, &coord_range(k, 2, &(0..1)).unwrap()).unwrap();
+    let mut b = slice_snapshot(&snap, &coord_range(k, 2, &(1..2)).unwrap()).unwrap();
+    b.master_step += 1;
+    let err = stitch_snapshots(&[a, b]).err().expect("skewed stitch must fail");
+    assert!(format!("{err:#}").contains("master step"), "undiagnosed: {err:#}");
+}
+
+// ---------------------------------------------------------------- (3)
+
+/// A 2-server split (`--encoding none`) behind real sockets ≡ the
+/// single-server trajectory, bit-for-bit, all 10 rules.  YellowFin
+/// exercises the two-phase stage/commit push.
+#[test]
+fn two_server_split_matches_single_server_bit_for_bit_all_kinds() {
+    let k = 48;
+    for kind in AlgorithmKind::ALL {
+        let c = cfg(kind, 3, 0.6);
+        let base = sim_trainer::run_synthetic(&c, k).unwrap();
+        let mut s1 = start_range_server(&c, k, 2, 0, 1, ServeOptions::default());
+        let mut s2 = start_range_server(&c, k, 2, 1, 2, ServeOptions::default());
+        let mut rc = c.clone();
+        rc.master_addr = Some(format!("{},{}", s1.url(), s2.url()));
+        let split = sim_trainer::run_synthetic(&rc, k).unwrap();
+        assert_eq!(
+            split.final_test_loss, base.final_test_loss,
+            "{kind}: final loss diverged across the 2-server split"
+        );
+        assert_eq!(split.loss_curve, base.loss_curve, "{kind}: loss curve");
+        assert_eq!(split.steps, base.steps, "{kind}");
+        s1.stop();
+        s2.stop();
+    }
+}
+
+/// An asymmetric split (1 + 3 shards of a 4-shard placement) is still
+/// exact — placement boundaries are invisible to the math.
+#[test]
+fn asymmetric_split_matches_single_server() {
+    let k = 48;
+    let c = cfg(AlgorithmKind::DanaDc, 3, 0.5);
+    let base = sim_trainer::run_synthetic(&c, k).unwrap();
+    let mut s1 = start_range_server(&c, k, 4, 0, 1, ServeOptions::default());
+    let mut s2 = start_range_server(&c, k, 4, 1, 4, ServeOptions::default());
+    let mut rc = c.clone();
+    rc.master_addr = Some(format!("{},{}", s1.url(), s2.url()));
+    let split = sim_trainer::run_synthetic(&rc, k).unwrap();
+    assert_eq!(split.final_test_loss, base.final_test_loss);
+    assert_eq!(split.loss_curve, base.loss_curve);
+    s1.stop();
+    s2.stop();
+}
+
+/// A wire shard id outside the hosted range is rejected recoverably
+/// (the connection survives), not by indexing out of bounds.
+#[test]
+fn out_of_range_shard_is_rejected_recoverably() {
+    use dana::net::wire::{read_frame, write_frame, Msg, Role};
+    use std::io::{BufReader, BufWriter};
+    use std::net::TcpStream;
+
+    let k = 24;
+    let c = cfg(AlgorithmKind::Asgd, 1, 0.5);
+    // hosts global shards 1..2 of 2 — global shard 0 is someone else's
+    let mut srv = start_range_server(&c, k, 2, 1, 2, ServeOptions::default());
+    let s = TcpStream::connect(srv.addr()).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut w = BufWriter::new(s);
+    let mut req = |m: &Msg| -> Msg {
+        write_frame(&mut w, m).unwrap();
+        read_frame(&mut r).unwrap()
+    };
+    let hello =
+        req(&Msg::Hello { role: Role::Worker, reattach: false, encoding: Encoding::None });
+    let (shards, header) = match hello {
+        Msg::HelloAck { shards, header, .. } => (shards, header),
+        other => panic!("handshake failed: {other:?}"),
+    };
+    // the handshake advertises the hosted range, not the whole space
+    assert_eq!((header.shard_start, header.shard_hosted, header.total_shards), (1, 1, 2));
+    assert_eq!(shards, 1);
+    match req(&Msg::PullShard { shard: 0 }) {
+        Msg::Error { recoverable, detail } => {
+            assert!(recoverable, "foreign shard must be refused recoverably: {detail}");
+            assert!(detail.contains("hosted range"), "undiagnosed: {detail}");
+        }
+        other => panic!("foreign shard was served: {other:?}"),
+    }
+    // the connection survived: the hosted shard still serves, echoing
+    // its global id
+    match req(&Msg::PullShard { shard: 1 }) {
+        Msg::ShardParams { shard, params, .. } => {
+            assert_eq!(shard, 1);
+            assert_eq!(params.len(), coord_range(k, 2, &(1..2)).unwrap().len());
+        }
+        other => panic!("hosted shard refused: {other:?}"),
+    }
+    srv.stop();
+}
+
+// ---------------------------------------------------------------- (4)
+
+fn dana_invariant(snap: &MasterSnapshot) {
+    let v = match &snap.state.iter().find(|(n, _)| n == "v").expect("v entry").1 {
+        StateVec::PerWorker(vs) => vs,
+        other => panic!("v has wrong shape: {other:?}"),
+    };
+    let vsum = match &snap.state.iter().find(|(n, _)| n == "vsum").expect("vsum entry").1 {
+        StateVec::Coord(s) => s,
+        other => panic!("vsum has wrong shape: {other:?}"),
+    };
+    for j in 0..vsum.len() {
+        let full: f32 = v.iter().map(|vi| vi[j]).sum();
+        assert!(
+            (vsum[j] - full).abs() < 2e-3 * (1.0 + full.abs()),
+            "v0 invariant broken at coord {j}: {} vs {full}",
+            vsum[j]
+        );
+    }
+}
+
+fn newest_archive(base: &std::path::Path) -> MasterSnapshot {
+    let archives = retention::list_archives(base).unwrap();
+    let newest = archives.iter().max_by_key(|a| a.step).expect("no archives written");
+    checkpoint::read_snapshot(&newest.path).unwrap()
+}
+
+/// Kill a primary under pipelined D=1 push load: the hot standby takes
+/// its exact range over one epoch up, the run completes, every acked
+/// push is applied exactly once (archive-before-ack at cadence 1), and
+/// v⁰ = Σ live vᶦ holds on both surviving ranges.
+#[test]
+fn standby_takeover_preserves_every_acked_push() {
+    let k = 32;
+    let c = cfg(AlgorithmKind::DanaZero, 2, 1.0);
+    let d1 = tmpdir("takeover-r0");
+    let d2 = tmpdir("takeover-r1");
+    let archived = |dir: &PathBuf| ServeOptions {
+        checkpoint_path: Some(dir.join("server.ckpt")),
+        checkpoint_every: 1,
+        retention: RetentionPolicy { keep_last: 64, keep_hourly: 0 },
+        pipeline_depth: 1,
+        ..Default::default()
+    };
+    let mut s1 = start_range_server(&c, k, 2, 0, 1, archived(&d1));
+    let mut s2 = start_range_server(&c, k, 2, 1, 2, archived(&d2));
+
+    // hot standby for s1, sharing its archive directory
+    let mut sb = StandbyServer::start(StandbyConfig {
+        listen: "127.0.0.1:0".into(),
+        primary: s1.url(),
+        archive_base: d1.join("server.ckpt"),
+        schedule: LrSchedule::new(c.schedule.clone()),
+        threads: 2,
+        striped: false,
+        opts: archived(&d1),
+        poll: Duration::from_millis(50),
+        miss_budget: 3,
+    })
+    .unwrap();
+
+    // the endpoint list includes the standby — resolution skips it,
+    // fail-over probes it
+    let urls = vec![s1.url(), s2.url(), sb.url()];
+    let mut cm =
+        ClusterMaster::connect(&urls, 2, Some((c.algorithm, k)), Encoding::None, false).unwrap();
+    cm.failover_attempts = 100;
+    cm.failover_delay = Duration::from_millis(100);
+    cm.set_pipeline_depth(1);
+
+    let curv = real_async::synthetic_curvature(k);
+    let mut rng = Rng::new(77);
+    drive(&mut cm, &curv, &mut rng, 20);
+
+    // hard-kill the range-0 primary mid-load and wait for the takeover
+    s1.stop();
+    let t0 = std::time::Instant::now();
+    while sb.takeovers() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(20), "standby never took over");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert_eq!(sb.takeovers(), 1);
+
+    // training continues through the fail-over (pulls re-resolve; the
+    // in-flight push is counted lost, never retried)
+    drive(&mut cm, &curv, &mut rng, 20);
+    cm.drain_inflight().unwrap();
+    let lost = cm.pushes_lost();
+    let rows = cm.placement_groups();
+    assert_eq!(rows.len(), 2);
+
+    // exactly-once accounting, per range: every push the client saw
+    // acked is applied (archive-before-ack ⇒ the newest archive has
+    // it), nothing is applied twice (lost pushes are never retried) —
+    // so each range's step count is the 40 attempts minus at most the
+    // pushes lost cluster-wide.
+    let final0 = newest_archive(&d1.join("server.ckpt"));
+    let final1 = newest_archive(&d2.join("server.ckpt"));
+    for (name, snap) in [("range 0 (taken over)", &final0), ("range 1", &final1)] {
+        assert!(
+            snap.master_step <= 40,
+            "{name}: {} steps from 40 pushes — a push was double-applied",
+            snap.master_step
+        );
+        assert!(
+            snap.master_step + lost >= 40,
+            "{name}: {} steps + {lost} lost < 40 pushes — an acked push vanished",
+            snap.master_step,
+        );
+        dana_invariant(snap);
+    }
+    // the promoted range serves one epoch up, and a fresh resolve of
+    // the same endpoint list lands on it without seeing s1 at all
+    let cm2 = ClusterMaster::connect(&urls, 0, Some((c.algorithm, k)), Encoding::None, false)
+        .unwrap();
+    assert_eq!(cm2.group_count(), 2);
+    drop(cm2);
+    drop(cm);
+    s2.stop();
+    sb.stop();
+}
+
+/// The standby answers placement probes while waiting (standby flag
+/// set, no worker traffic) — clients must not mistake it for a primary.
+#[test]
+fn standby_refuses_worker_traffic_before_takeover() {
+    let k = 16;
+    let c = cfg(AlgorithmKind::Asgd, 1, 0.5);
+    let dir = tmpdir("standby-idle");
+    let opts = ServeOptions {
+        checkpoint_path: Some(dir.join("server.ckpt")),
+        checkpoint_every: 1,
+        retention: RetentionPolicy { keep_last: 8, keep_hourly: 0 },
+        ..Default::default()
+    };
+    let mut s1 = start_range_server(&c, k, 1, 0, 1, opts.clone());
+    let mut sb = StandbyServer::start(StandbyConfig {
+        listen: "127.0.0.1:0".into(),
+        primary: s1.url(),
+        archive_base: dir.join("server.ckpt"),
+        schedule: LrSchedule::new(c.schedule.clone()),
+        threads: 2,
+        striped: false,
+        opts,
+        poll: Duration::from_millis(50),
+        miss_budget: 1000, // never promote during this test
+    })
+    .unwrap();
+    // give the standby one probe so it has a view to advertise
+    std::thread::sleep(Duration::from_millis(300));
+    assert!(
+        RemoteMaster::connect(&sb.url(), 1).is_err(),
+        "a standby must not accept worker joins before takeover"
+    );
+    // a placement resolve over {primary, standby} sees exactly one group
+    let urls = vec![s1.url(), sb.url()];
+    let cm = ClusterMaster::connect(&urls, 0, None, Encoding::None, false).unwrap();
+    assert_eq!(cm.group_count(), 1);
+    drop(cm);
+    sb.stop();
+    s1.stop();
+}

@@ -11,7 +11,7 @@
 
 use dana::net::codec::{self, Encoding};
 use dana::net::wire::{read_frame, write_frame, Header, Msg, Role, MAGIC, MAX_FRAME, VERSION};
-use dana::optim::{AlgorithmKind, LeavePolicy};
+use dana::optim::{AlgorithmKind, ApplyStats, LeavePolicy};
 use std::io::Cursor;
 
 fn sample_header() -> Header {
@@ -23,6 +23,11 @@ fn sample_header() -> Header {
         live_workers: 7,
         worker_slots: 9,
         pushes_dropped: 3,
+        epoch: 5,
+        shard_start: 4,
+        shard_hosted: 12,
+        total_shards: 16,
+        standby: 0,
     }
 }
 
@@ -48,6 +53,29 @@ fn all_messages() -> Vec<Msg> {
         Msg::PullShard { shard: u32::MAX },
         Msg::PushShard { gen: 0, shard: 0, msg: vec![] },
         Msg::PushShard { gen: 9, shard: 6, msg: vec![-1.5, 0.25, f32::MAX] },
+        // v5 two-phase cluster apply: stage (read-only partials) + commit
+        Msg::PushStage { gen: 0, msg: vec![] },
+        Msg::PushStage { gen: 4, msg: vec![0.25, -1.0, f32::MIN] },
+        Msg::PushCommit { gen: 0, stats: ApplyStats::default(), msg: vec![] },
+        Msg::PushCommit {
+            gen: 11,
+            stats: ApplyStats {
+                msg_norm2: 1.5e300,
+                g_avg_norm2: -0.0,
+                prev_dot: f64::MIN_POSITIVE,
+                prev_norm2: 42.0,
+            },
+            msg: vec![1.0, 2.0, 3.0],
+        },
+        Msg::StageStats {
+            header: h,
+            stats: ApplyStats {
+                msg_norm2: 0.5,
+                g_avg_norm2: 0.25,
+                prev_dot: -3.0,
+                prev_norm2: 9.0,
+            },
+        },
         Msg::HelloAck {
             slot: u64::MAX,
             gen: 7,
@@ -64,6 +92,8 @@ fn all_messages() -> Vec<Msg> {
         Msg::ShardParams { header: h, shard: 0, params: vec![] },
         Msg::PushAck { header: h, step: 123_456_789_011, eta: 0.05, gamma: 0.9, lambda: 2.0 },
         Msg::Ack { header: h },
+        // a standby's probe answer: flag set, extreme epoch
+        Msg::Ack { header: Header { standby: 1, epoch: u64::MAX, ..h } },
         Msg::Theta { header: h, theta: vec![1.0; 3] },
         Msg::Error { recoverable: true, detail: String::new() },
         Msg::Error { recoverable: false, detail: "straggler push for slot 3 (gen 2 != 5)".into() },
