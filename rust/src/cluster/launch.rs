@@ -1,0 +1,435 @@
+//! `dana cluster --manifest cluster.json` — launch and supervise a
+//! whole topology from one validated [`ClusterManifest`].
+//!
+//! The supervisor is deliberately dumb about *what* it runs: every
+//! child is this same binary re-invoked as `dana serve --manifest M
+//! --server NAME --run-dir D` (or `dana train --manifest M`), and each
+//! child re-parses the manifest through the same `from_manifest`
+//! constructors the CLI flags normalize into — so there is exactly one
+//! source of per-process configuration and no flag soup to regenerate.
+//!
+//! Lifecycle (DESIGN.md §14):
+//!
+//! 1. **validate** — [`ClusterManifest::load`] + artifact checksum
+//!    verification, all before any process spawns.  `--verify-only`
+//!    stops here.
+//! 2. **launch** — primaries first, then standbys, each with stdout and
+//!    stderr captured to `<run_dir>/logs/<name>.log`; then a health
+//!    gate: every primary must answer a placement probe (and every
+//!    standby must accept a connection) within the gate timeout, or the
+//!    whole launch is torn down.
+//! 3. **fleet** — the worker fleet (`dana train --manifest`) runs with
+//!    inherited stdio, so its `placement:` accounting lines land in the
+//!    supervisor's own output.
+//! 4. **supervise** — a process that dies is relaunched under its
+//!    manifest `restart` policy with the PR 6 bounded-exponential
+//!    backoff ([`crate::util::backoff_ms`]).  The default budget is 0:
+//!    a killed primary stays dead, which is what makes standby takeover
+//!    drills mean something.  Live pids are kept current in
+//!    `<run_dir>/logs/pids.json`.
+//! 5. **shutdown** — fleet success, fleet retirement, or SIGTERM/SIGINT
+//!    winds the cluster down gracefully: each server gets the in-band
+//!    `Shutdown` control frame (checkpoint-then-exit), stragglers are
+//!    killed after a grace period.
+
+use crate::cluster::manifest::{ClusterManifest, RestartPolicy};
+use crate::net::client::{probe, shutdown_once};
+use crate::util::backoff_ms;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// `dana cluster` options (see `util::cli` flag table in `main.rs`).
+#[derive(Debug, Clone)]
+pub struct LaunchOptions {
+    pub manifest_path: PathBuf,
+    /// Base directory for mutable state: checkpoints and logs resolve
+    /// against this, never against the committed manifest's directory.
+    pub run_dir: PathBuf,
+    /// Validate (structure + artifact checksums) and exit.
+    pub verify_only: bool,
+    /// Launch and supervise the servers but not the worker fleet (CI
+    /// drives `dana train --manifest` in the foreground itself).
+    pub no_fleet: bool,
+    /// Health-gate timeout for the whole topology.
+    pub health_timeout: Duration,
+}
+
+impl Default for LaunchOptions {
+    fn default() -> Self {
+        LaunchOptions {
+            manifest_path: PathBuf::from("cluster.json"),
+            run_dir: PathBuf::from("."),
+            verify_only: false,
+            no_fleet: false,
+            health_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Raised by the SIGTERM/SIGINT handler; polled by the supervise loop.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    // std-only signal hookup: the handler just raises a flag, the
+    // supervise loop does the actual (allocation-heavy) wind-down.
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(sig: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal as usize);
+        signal(SIGTERM, on_signal as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+/// One supervised child process.
+struct Proc {
+    name: String,
+    /// argv after the binary path, for respawns.
+    args: Vec<String>,
+    child: Option<Child>,
+    restart: RestartPolicy,
+    attempts: u32,
+    /// When a pending respawn becomes due (backoff in progress).
+    respawn_at: Option<Instant>,
+    /// Serving address, for the graceful in-band shutdown.
+    listen: Option<String>,
+    /// `<run_dir>/logs/<name>.log`, or None for inherited stdio.
+    log_path: Option<PathBuf>,
+    fleet: bool,
+    /// Permanently finished: clean exit or restart budget exhausted.
+    retired: bool,
+}
+
+impl Proc {
+    fn spawn(&mut self, exe: &Path) -> anyhow::Result<()> {
+        let mut cmd = Command::new(exe);
+        cmd.args(&self.args);
+        if let Some(log) = &self.log_path {
+            let out = std::fs::File::create(log)
+                .map_err(|e| anyhow::anyhow!("creating {}: {e}", log.display()))?;
+            let err = out.try_clone()?;
+            cmd.stdout(Stdio::from(out)).stderr(Stdio::from(err));
+        }
+        let child = cmd
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("spawning {}: {e}", self.name))?;
+        self.child = Some(child);
+        Ok(())
+    }
+
+    fn pid(&self) -> Option<u32> {
+        self.child.as_ref().map(|c| c.id())
+    }
+}
+
+/// Write `<run_dir>/logs/pids.json`: `{name: pid}` for every live
+/// child, so an operator (or the CI takeover drill) can signal a
+/// process by its manifest name.
+fn write_pids(logs: &Path, procs: &[Proc]) {
+    let mut map = BTreeMap::new();
+    for p in procs {
+        if let Some(pid) = p.pid() {
+            if !p.retired {
+                map.insert(p.name.clone(), crate::util::json::Json::Num(pid as f64));
+            }
+        }
+    }
+    let j = crate::util::json::Json::Obj(map);
+    let _ = std::fs::write(logs.join("pids.json"), j.to_string_pretty());
+}
+
+pub fn run(opts: &LaunchOptions) -> anyhow::Result<()> {
+    // ---- 1. validate: everything rejects before anything spawns ----
+    let m = ClusterManifest::load(&opts.manifest_path)?;
+    let verified = m.verify_artifacts()?;
+    println!("cluster manifest OK: {}", m.summary());
+    if verified > 0 {
+        println!("cluster manifest: {verified} artifact checksum(s) verified");
+    }
+    if opts.verify_only {
+        return Ok(());
+    }
+
+    let exe = std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("resolving own executable: {e}"))?;
+    let logs = opts.run_dir.join("logs");
+    std::fs::create_dir_all(&logs)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", logs.display()))?;
+    let manifest_arg = opts.manifest_path.display().to_string();
+    let run_dir_arg = opts.run_dir.display().to_string();
+    install_signal_handlers();
+
+    // ---- 2. launch: primaries, then standbys, then the health gate ----
+    let mut procs: Vec<Proc> = Vec::new();
+    let serve_args = |name: &str| {
+        vec![
+            "serve".to_string(),
+            "--manifest".to_string(),
+            manifest_arg.clone(),
+            "--server".to_string(),
+            name.to_string(),
+            "--run-dir".to_string(),
+            run_dir_arg.clone(),
+        ]
+    };
+    for s in &m.servers {
+        procs.push(Proc {
+            name: s.name.clone(),
+            args: serve_args(&s.name),
+            child: None,
+            restart: s.restart,
+            attempts: 0,
+            respawn_at: None,
+            listen: Some(s.listen.clone()),
+            log_path: Some(logs.join(format!("{}.log", s.name))),
+            fleet: false,
+            retired: false,
+        });
+    }
+    for s in &m.standbys {
+        procs.push(Proc {
+            name: s.name.clone(),
+            args: serve_args(&s.name),
+            child: None,
+            restart: s.restart,
+            attempts: 0,
+            respawn_at: None,
+            listen: Some(s.listen.clone()),
+            log_path: Some(logs.join(format!("{}.log", s.name))),
+            fleet: false,
+            retired: false,
+        });
+    }
+    for p in &mut procs {
+        p.spawn(&exe)?;
+        println!(
+            "dana cluster: launched {} (pid {}) → {}",
+            p.name,
+            p.pid().unwrap_or(0),
+            p.log_path.as_deref().map(|l| l.display().to_string()).unwrap_or_default()
+        );
+    }
+    write_pids(&logs, &procs);
+
+    // Health gate: every primary must answer a placement probe, every
+    // standby must at least accept a connection (a standby cannot probe
+    // OK until it has seen its primary's advertisement).
+    let gate_deadline = Instant::now() + opts.health_timeout;
+    let standby_names: Vec<&str> = m.standbys.iter().map(|s| s.name.as_str()).collect();
+    for (name, listen) in m
+        .servers
+        .iter()
+        .map(|s| (s.name.as_str(), s.listen.as_str()))
+        .chain(m.standbys.iter().map(|s| (s.name.as_str(), s.listen.as_str())))
+    {
+        let is_standby = standby_names.contains(&name);
+        loop {
+            let healthy = if is_standby {
+                std::net::TcpStream::connect(listen).is_ok()
+            } else {
+                probe(listen).is_ok()
+            };
+            if healthy {
+                break;
+            }
+            if Instant::now() >= gate_deadline {
+                teardown(&mut procs);
+                anyhow::bail!(
+                    "health gate: {name} ({listen}) not serving within {:?} — see {}",
+                    opts.health_timeout,
+                    logs.join(format!("{name}.log")).display()
+                );
+            }
+            if SHUTDOWN.load(Ordering::SeqCst) {
+                teardown(&mut procs);
+                anyhow::bail!("interrupted during launch");
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    println!(
+        "dana cluster: health gate passed ({} server(s), {} standby(s))",
+        m.servers.len(),
+        m.standbys.len()
+    );
+
+    // ---- 3. fleet ----
+    if let (false, Some(f)) = (opts.no_fleet, &m.fleet) {
+        procs.push(Proc {
+            name: "fleet".to_string(),
+            args: vec![
+                "train".to_string(),
+                "--manifest".to_string(),
+                manifest_arg.clone(),
+            ],
+            child: None,
+            restart: f.restart,
+            attempts: 0,
+            respawn_at: None,
+            listen: None,
+            // inherited stdio: the fleet's `placement:` step accounting
+            // is the run's primary observable output
+            log_path: None,
+            fleet: true,
+            retired: false,
+        });
+        let i = procs.len() - 1;
+        if let Err(e) = procs[i].spawn(&exe) {
+            teardown(&mut procs);
+            return Err(e);
+        }
+        println!("dana cluster: launched fleet (pid {})", procs[i].pid().unwrap_or(0));
+        write_pids(&logs, &procs);
+    }
+
+    // ---- 4. supervise ----
+    let mut fleet_outcome: Option<bool> = None;
+    loop {
+        if SHUTDOWN.load(Ordering::SeqCst) {
+            println!("dana cluster: signal received — winding down with checkpoints");
+            break;
+        }
+        let mut changed = false;
+        for p in &mut procs {
+            if p.retired {
+                continue;
+            }
+            // pending respawn due?
+            if let Some(at) = p.respawn_at {
+                if Instant::now() >= at {
+                    p.respawn_at = None;
+                    match p.spawn(&exe) {
+                        Ok(()) => {
+                            println!(
+                                "dana cluster: restarted {} (attempt {}/{}, pid {})",
+                                p.name,
+                                p.attempts,
+                                p.restart.max,
+                                p.pid().unwrap_or(0)
+                            );
+                            changed = true;
+                        }
+                        Err(e) => {
+                            eprintln!("dana cluster: respawn of {} failed: {e:#}", p.name);
+                            p.retired = true;
+                        }
+                    }
+                }
+                continue;
+            }
+            let Some(child) = p.child.as_mut() else { continue };
+            match child.try_wait() {
+                Ok(None) => {}
+                Ok(Some(status)) => {
+                    changed = true;
+                    let ok = status.success();
+                    if p.fleet && ok {
+                        println!("dana cluster: fleet completed");
+                        p.retired = true;
+                        fleet_outcome = Some(true);
+                    } else if p.attempts < p.restart.max {
+                        p.attempts += 1;
+                        let wait = backoff_ms(p.restart.backoff_ms, p.attempts);
+                        eprintln!(
+                            "dana cluster: {} exited ({status}); restarting in {wait} ms",
+                            p.name
+                        );
+                        p.respawn_at = Some(Instant::now() + Duration::from_millis(wait));
+                    } else {
+                        eprintln!(
+                            "dana cluster: {} exited ({status}); restart budget exhausted \
+                             ({}/{}) — retired",
+                            p.name, p.attempts, p.restart.max
+                        );
+                        p.retired = true;
+                        if p.fleet {
+                            fleet_outcome = Some(ok);
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("dana cluster: waiting on {}: {e}", p.name);
+                    p.retired = true;
+                }
+            }
+        }
+        if changed {
+            write_pids(&logs, &procs);
+        }
+        // fleet done (either way): the run is over, wind the servers down
+        if fleet_outcome.is_some() {
+            break;
+        }
+        // nothing left alive to supervise
+        if procs.iter().all(|p| p.retired) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // ---- 5. graceful shutdown-with-checkpoint ----
+    for p in &procs {
+        if p.retired {
+            continue;
+        }
+        if let Some(listen) = &p.listen {
+            match shutdown_once(listen) {
+                Ok(()) => println!("dana cluster: {} shut down (checkpointed)", p.name),
+                Err(e) => eprintln!("dana cluster: in-band shutdown of {}: {e:#}", p.name),
+            }
+        }
+    }
+    let grace = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut all_done = true;
+        for p in procs.iter_mut() {
+            if p.retired {
+                continue;
+            }
+            let exited = match p.child.as_mut() {
+                None => true,
+                Some(child) => matches!(child.try_wait(), Ok(Some(_)) | Err(_)),
+            };
+            if exited {
+                p.child = None;
+                p.retired = true;
+            } else {
+                all_done = false;
+            }
+        }
+        if all_done || Instant::now() >= grace {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    teardown(&mut procs);
+    write_pids(&logs, &procs);
+
+    match fleet_outcome {
+        Some(true) | None => Ok(()),
+        Some(false) => anyhow::bail!("fleet failed (restart budget exhausted)"),
+    }
+}
+
+/// Kill and reap everything still running.  Idempotent.
+fn teardown(procs: &mut [Proc]) {
+    for p in procs.iter_mut() {
+        if let Some(child) = p.child.as_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        p.child = None;
+    }
+}

@@ -1,0 +1,686 @@
+//! [`ClusterManifest`] — one fail-closed `cluster.json` describing a
+//! whole topology: server shard placement, hot-standby pairings, the
+//! worker fleet, checkpoint/retention, and sha256-pinned artifact
+//! references.
+//!
+//! The manifest is parsed with the same discipline as the wire decoder
+//! (DESIGN.md §8): **everything rejects**.  Unknown fields name the
+//! offending key, shard ranges must tile the global shard space exactly
+//! (the very [`validate_tiling`](super::placement::validate_tiling)
+//! rules live resolution applies — a manifest that parses is a topology
+//! that resolves), standbys must name an existing primary that archives
+//! checkpoints, listen/status addresses must be unique, and artifact
+//! checksums must be 64 hex chars that match the file's actual SHA-256.
+//! Validation happens entirely at parse time, *before any process
+//! spawns* (`dana cluster --verify-only` is exactly parse + checksum
+//! verification and nothing else).
+//!
+//! Everything a `dana serve`/`dana train` flag soup could express is a
+//! field here; the `from_manifest` constructors on
+//! [`crate::config::ServeSpec`], [`crate::config::TrainConfig`], and
+//! [`super::StandbyConfig`] normalize both spellings into the same
+//! structs, making flags the single-process special case.  See
+//! DESIGN.md §14.
+
+use crate::cluster::placement::validate_tiling;
+use crate::net::{Encoding, EncodingSet};
+use crate::optim::{AlgorithmKind, LeavePolicy};
+use crate::sim::ChurnSchedule;
+use crate::util::json::Json;
+use crate::util::sha256::sha256_file;
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+/// Process restart policy for the cluster supervisor (`dana cluster`):
+/// a supervised process that exits is relaunched up to `max` times
+/// under the bounded exponential backoff of
+/// [`crate::util::backoff_ms`].  The default (`max = 0`) never
+/// restarts — fail-over is the standby's job, and a `kill -9`d primary
+/// must stay dead for takeover drills to mean anything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RestartPolicy {
+    pub max: u32,
+    pub backoff_ms: u64,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy { max: 0, backoff_ms: 500 }
+    }
+}
+
+/// What the cluster trains: a synthetic quadratic (artifact-free) or an
+/// AOT workload proxy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSpec {
+    /// `{"synthetic": true, "k": K}` — the k-dim quadratic.
+    Synthetic { k: usize },
+    /// `{"workload": "c10"}` — an AOT artifact workload.
+    Workload(crate::config::Workload),
+}
+
+/// One primary server: a contiguous slice of the global shard space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerSpec {
+    pub name: String,
+    pub listen: String,
+    pub status_addr: Option<String>,
+    /// Hosted global shards `[start, end)` of the manifest's `shards`.
+    pub shard_range: Range<u32>,
+    pub placement_epoch: u64,
+    pub serve_threads: usize,
+    /// Checkpoint base path, relative to the launch run dir (None =
+    /// checkpointing off — then no standby may pair with this server).
+    pub checkpoint: Option<CheckpointSpec>,
+    pub restart: RestartPolicy,
+}
+
+/// Checkpoint + retention config for one server (`--checkpoint`,
+/// `--checkpoint-every`, `--keep-last`, `--keep-hourly`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointSpec {
+    /// Base path; relative paths resolve against the run dir at launch
+    /// time (mutable state never resolves against the committed
+    /// manifest's own directory).
+    pub path: PathBuf,
+    pub every: u64,
+    pub keep_last: usize,
+    pub keep_hourly: usize,
+}
+
+/// One hot standby, paired to a primary by name.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StandbySpec {
+    pub name: String,
+    /// Name of the [`ServerSpec`] this standby tails and takes over.
+    pub of: String,
+    pub listen: String,
+    pub status_addr: Option<String>,
+    pub poll_ms: u64,
+    pub miss_budget: u32,
+    pub restart: RestartPolicy,
+}
+
+/// The worker fleet: one `dana train` run against the whole placement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub workers: usize,
+    pub epochs: f64,
+    /// `real` (thread-per-worker over TCP) or `sim` (gamma clock).
+    pub mode: String,
+    pub encoding: Encoding,
+    pub churn: ChurnSchedule,
+    pub leave_policy: LeavePolicy,
+    /// Worker-thread crash-loop supervision inside the driver (PR 6).
+    pub max_restarts: u32,
+    pub restart_backoff_ms: u64,
+    pub metrics_every: u64,
+    pub seed: u64,
+    /// Process-level restart policy under `dana cluster`.
+    pub restart: RestartPolicy,
+}
+
+/// A content-pinned file reference: `{path, sha256}`.  Paths resolve
+/// against the manifest's own directory (artifacts are committed
+/// alongside it); verification fails closed on absence or mismatch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactRef {
+    pub path: PathBuf,
+    pub sha256: String,
+}
+
+/// The whole topology, validated.  See the module docs for the schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterManifest {
+    pub name: String,
+    pub algorithm: AlgorithmKind,
+    /// Global shard count the server ranges tile.
+    pub shards: u32,
+    pub model: ModelSpec,
+    /// Schedule length in epochs (the LR schedule is server-owned and
+    /// must agree across the placement; the fleet inherits it).
+    pub epochs: f64,
+    pub seed: u64,
+    pub eta: Option<f32>,
+    pub gamma: Option<f32>,
+    /// Cluster-wide pipeline depth D: sizes every server's pull windows
+    /// and the fleet's in-flight batches (they must match — DESIGN.md
+    /// §10).
+    pub pipeline_depth: usize,
+    pub leave_policy: LeavePolicy,
+    /// Payload encodings every server advertises.
+    pub encodings: EncodingSet,
+    pub metrics_every: u64,
+    pub servers: Vec<ServerSpec>,
+    pub standbys: Vec<StandbySpec>,
+    pub fleet: Option<FleetSpec>,
+    pub artifacts: Vec<ArtifactRef>,
+    /// Directory the manifest was loaded from (artifact references
+    /// resolve against it).  Not a JSON field.
+    pub base_dir: PathBuf,
+}
+
+// ---------------------------------------------------------------------
+// strict JSON walking
+// ---------------------------------------------------------------------
+
+/// One JSON object in the manifest, addressed by a human-readable
+/// section path (`"servers[0]"`, `"fleet"`).  Construction rejects
+/// non-objects and — the fail-closed heart — any key outside `known`,
+/// naming the offending field.
+struct Sect<'a> {
+    path: String,
+    map: &'a BTreeMap<String, Json>,
+}
+
+impl<'a> Sect<'a> {
+    fn new(j: &'a Json, path: &str, known: &[&str]) -> anyhow::Result<Sect<'a>> {
+        let map = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("cluster manifest: {path} must be a JSON object"))?;
+        for k in map.keys() {
+            anyhow::ensure!(
+                known.contains(&k.as_str()),
+                "cluster manifest: unknown field {k:?} in {path} (known: {})",
+                known.join(", ")
+            );
+        }
+        Ok(Sect { path: path.to_string(), map })
+    }
+
+    fn want<T>(&self, key: &str, what: &str, v: Option<T>) -> anyhow::Result<T> {
+        v.ok_or_else(|| {
+            anyhow::anyhow!("cluster manifest: {}.{key} must be {what}", self.path)
+        })
+    }
+
+    fn str(&self, key: &str) -> anyhow::Result<String> {
+        let v = self.want(key, "present", self.map.get(key))?;
+        Ok(self.want(key, "a string", v.as_str())?.to_string())
+    }
+
+    fn opt_str(&self, key: &str) -> anyhow::Result<Option<String>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(self.want(key, "a string", v.as_str())?.to_string())),
+        }
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => self.want(key, "a non-negative integer", v.as_usize()),
+        }
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        Ok(self.usize_or(key, default as usize)? as u64)
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => self.want(key, "a number", v.as_f64()),
+        }
+    }
+
+    fn opt_f32(&self, key: &str) -> anyhow::Result<Option<f32>> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(self.want(key, "a number", v.as_f64())? as f32)),
+        }
+    }
+
+    fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => self.want(key, "a boolean", v.as_bool()),
+        }
+    }
+
+    /// Parse a string-typed field through `FromStr` (algorithm kinds,
+    /// encodings, churn specs, leave policies — the CLI grammars).
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(key)? {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| {
+                anyhow::anyhow!("cluster manifest: {}.{key} {s:?}: {e}", self.path)
+            }),
+        }
+    }
+
+    fn arr(&self, key: &str) -> anyhow::Result<&'a [Json]> {
+        match self.map.get(key) {
+            None => Ok(&[]),
+            Some(v) => self.want(key, "an array", v.as_arr()),
+        }
+    }
+
+    fn restart(&self) -> anyhow::Result<RestartPolicy> {
+        match self.map.get("restart") {
+            None => Ok(RestartPolicy::default()),
+            Some(v) => {
+                let s =
+                    Sect::new(v, &format!("{}.restart", self.path), &["max", "backoff_ms"])?;
+                Ok(RestartPolicy {
+                    max: s.u64_or("max", 0)? as u32,
+                    backoff_ms: s.u64_or("backoff_ms", 500)?,
+                })
+            }
+        }
+    }
+}
+
+/// Parse `"A..B"` (half-open, `A < B`) — the `--shard-range` grammar,
+/// shared verbatim with the CLI.
+pub fn parse_shard_range(spec: &str) -> anyhow::Result<Range<u32>> {
+    let (a, b) = spec
+        .split_once("..")
+        .ok_or_else(|| anyhow::anyhow!("shard range wants A..B, got {spec:?}"))?;
+    let a: u32 = a
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("shard range start {a:?} is not a shard index"))?;
+    let b: u32 = b
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("shard range end {b:?} is not a shard index"))?;
+    anyhow::ensure!(a < b, "shard range {spec:?} is empty (need A < B)");
+    Ok(a..b)
+}
+
+impl ClusterManifest {
+    /// Load and fully validate `path`.  Everything but artifact
+    /// checksums (IO-bound; see [`ClusterManifest::verify_artifacts`])
+    /// is checked here.
+    pub fn load(path: &Path) -> anyhow::Result<ClusterManifest> {
+        let j = Json::parse_file(path)?;
+        let base = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        Self::from_json(&j, base).map_err(|e| anyhow::anyhow!("{}: {e:#}", path.display()))
+    }
+
+    /// Parse + validate from an already-parsed JSON value.
+    pub fn from_json(j: &Json, base_dir: PathBuf) -> anyhow::Result<ClusterManifest> {
+        const TOP: &[&str] = &[
+            "name",
+            "algorithm",
+            "shards",
+            "model",
+            "epochs",
+            "seed",
+            "eta",
+            "gamma",
+            "pipeline_depth",
+            "leave_policy",
+            "encodings",
+            "metrics_every",
+            "servers",
+            "standbys",
+            "fleet",
+            "artifacts",
+        ];
+        let top = Sect::new(j, "top level", TOP)?;
+        let algorithm: AlgorithmKind = top
+            .str("algorithm")?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("cluster manifest: algorithm: {e}"))?;
+        let shards = top.usize_or("shards", 0)? as u32;
+        anyhow::ensure!(shards > 0, "cluster manifest: shards must be >= 1");
+
+        let model_j = top
+            .map
+            .get("model")
+            .ok_or_else(|| anyhow::anyhow!("cluster manifest: missing \"model\" section"))?;
+        let ms = Sect::new(model_j, "model", &["synthetic", "k", "workload"])?;
+        let model = if ms.bool_or("synthetic", false)? {
+            let k = ms.usize_or("k", 0)?;
+            anyhow::ensure!(k > 0, "cluster manifest: model.k must be >= 1 for a synthetic model");
+            ModelSpec::Synthetic { k }
+        } else {
+            ModelSpec::Workload(ms.parse_or("workload", crate::config::Workload::C10)?)
+        };
+
+        let epochs = top.f64_or("epochs", 10.0)?;
+        anyhow::ensure!(
+            epochs.is_finite() && epochs > 0.0,
+            "cluster manifest: epochs must be finite and > 0"
+        );
+        let pipeline_depth = top.usize_or("pipeline_depth", 0)?;
+        anyhow::ensure!(
+            pipeline_depth < crate::server::MAX_PULL_WINDOW,
+            "cluster manifest: pipeline_depth {pipeline_depth} exceeds the supported window \
+             ({})",
+            crate::server::MAX_PULL_WINDOW - 1
+        );
+
+        const SERVER: &[&str] = &[
+            "name",
+            "listen",
+            "status_addr",
+            "shard_range",
+            "placement_epoch",
+            "serve_threads",
+            "checkpoint",
+            "restart",
+        ];
+        let mut servers = Vec::new();
+        for (i, sj) in top.arr("servers")?.iter().enumerate() {
+            let s = Sect::new(sj, &format!("servers[{i}]"), SERVER)?;
+            let name = s.str("name")?;
+            let range_spec = s.str("shard_range")?;
+            let shard_range = parse_shard_range(&range_spec).map_err(|e| {
+                anyhow::anyhow!("cluster manifest: servers[{i}].shard_range: {e}")
+            })?;
+            let checkpoint = match s.map.get("checkpoint") {
+                None => None,
+                Some(cj) => {
+                    let c = Sect::new(
+                        cj,
+                        &format!("servers[{i}].checkpoint"),
+                        &["path", "every", "keep_last", "keep_hourly"],
+                    )?;
+                    Some(CheckpointSpec {
+                        path: PathBuf::from(c.str("path")?),
+                        every: c.u64_or("every", 1)?,
+                        keep_last: c.usize_or("keep_last", 0)?,
+                        keep_hourly: c.usize_or("keep_hourly", 0)?,
+                    })
+                }
+            };
+            servers.push(ServerSpec {
+                name,
+                listen: s.str("listen")?,
+                status_addr: s.opt_str("status_addr")?,
+                shard_range,
+                placement_epoch: s.u64_or("placement_epoch", 0)?,
+                serve_threads: s.usize_or("serve_threads", 1)?,
+                checkpoint,
+                restart: s.restart()?,
+            });
+        }
+
+        const STANDBY: &[&str] =
+            &["name", "of", "listen", "status_addr", "poll_ms", "miss_budget", "restart"];
+        let mut standbys = Vec::new();
+        for (i, sj) in top.arr("standbys")?.iter().enumerate() {
+            let s = Sect::new(sj, &format!("standbys[{i}]"), STANDBY)?;
+            standbys.push(StandbySpec {
+                name: s.str("name")?,
+                of: s.str("of")?,
+                listen: s.str("listen")?,
+                status_addr: s.opt_str("status_addr")?,
+                poll_ms: s.u64_or("poll_ms", 250)?.max(10),
+                miss_budget: (s.u64_or("miss_budget", 4)? as u32).max(1),
+                restart: s.restart()?,
+            });
+        }
+
+        const FLEET: &[&str] = &[
+            "workers",
+            "epochs",
+            "mode",
+            "encoding",
+            "churn",
+            "leave_policy",
+            "max_restarts",
+            "restart_backoff_ms",
+            "metrics_every",
+            "seed",
+            "restart",
+        ];
+        let leave_policy: LeavePolicy = top.parse_or("leave_policy", LeavePolicy::default())?;
+        let seed = top.u64_or("seed", 1)?;
+        let fleet = match top.map.get("fleet") {
+            None => None,
+            Some(fj) => {
+                let f = Sect::new(fj, "fleet", FLEET)?;
+                let workers = f.usize_or("workers", 0)?;
+                anyhow::ensure!(workers >= 1, "cluster manifest: fleet.workers must be >= 1");
+                let mode = f.opt_str("mode")?.unwrap_or_else(|| "real".to_string());
+                anyhow::ensure!(
+                    matches!(mode.as_str(), "real" | "sim"),
+                    "cluster manifest: fleet.mode must be \"real\" or \"sim\" (got {mode:?})"
+                );
+                let churn: ChurnSchedule = f.parse_or("churn", ChurnSchedule::default())?;
+                churn
+                    .validate(workers)
+                    .map_err(|e| anyhow::anyhow!("cluster manifest: fleet.churn: {e:#}"))?;
+                Some(FleetSpec {
+                    workers,
+                    epochs: f.f64_or("epochs", epochs)?,
+                    mode,
+                    encoding: f.parse_or("encoding", Encoding::None)?,
+                    churn,
+                    leave_policy: f.parse_or("leave_policy", leave_policy)?,
+                    max_restarts: f.u64_or("max_restarts", 0)? as u32,
+                    restart_backoff_ms: f.u64_or("restart_backoff_ms", 50)?,
+                    metrics_every: f.u64_or("metrics_every", 0)?,
+                    seed: f.u64_or("seed", seed)?,
+                    restart: f.restart()?,
+                })
+            }
+        };
+
+        let mut artifacts = Vec::new();
+        for (i, aj) in top.arr("artifacts")?.iter().enumerate() {
+            let a = Sect::new(aj, &format!("artifacts[{i}]"), &["path", "sha256"])?;
+            let path = PathBuf::from(a.str("path")?);
+            let sha256 = a.str("sha256")?.to_ascii_lowercase();
+            anyhow::ensure!(
+                sha256.len() == 64 && sha256.bytes().all(|b| b.is_ascii_hexdigit()),
+                "cluster manifest: artifact {:?}: sha256 must be 64 hex characters",
+                path.display().to_string()
+            );
+            artifacts.push(ArtifactRef { path, sha256 });
+        }
+
+        let m = ClusterManifest {
+            name: top.opt_str("name")?.unwrap_or_default(),
+            algorithm,
+            shards,
+            model,
+            epochs,
+            seed,
+            eta: top.opt_f32("eta")?,
+            gamma: top.opt_f32("gamma")?,
+            pipeline_depth,
+            leave_policy,
+            encodings: top.parse_or("encodings", EncodingSet::ALL)?,
+            metrics_every: top.u64_or("metrics_every", 0)?,
+            servers,
+            standbys,
+            fleet,
+            artifacts,
+            base_dir,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural validation: tiling, pairings, address uniqueness.
+    /// Called by [`ClusterManifest::from_json`]; a constructed manifest
+    /// is always valid.
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.servers.is_empty(),
+            "cluster manifest: needs at least one entry in \"servers\""
+        );
+        // the exact fail-closed tiling rules live placement resolution
+        // applies (cluster/placement.rs) — no overlap, no gap, full
+        // coverage of 0..shards
+        let labeled: Vec<(String, Range<u32>)> = self
+            .servers
+            .iter()
+            .map(|s| (format!("{:?}", s.name), s.shard_range.clone()))
+            .collect();
+        validate_tiling("cluster manifest", &labeled, self.shards)?;
+
+        // unique process names, unique listen + status addresses
+        let mut names: BTreeMap<&str, &str> = BTreeMap::new();
+        let mut addrs: BTreeMap<&str, String> = BTreeMap::new();
+        for (who, name) in self
+            .servers
+            .iter()
+            .map(|s| ("server", s.name.as_str()))
+            .chain(self.standbys.iter().map(|s| ("standby", s.name.as_str())))
+        {
+            anyhow::ensure!(!name.is_empty(), "cluster manifest: a {who} has an empty name");
+            if let Some(prev) = names.insert(name, who) {
+                anyhow::bail!(
+                    "cluster manifest: duplicate process name {name:?} (a {prev} and a {who})"
+                );
+            }
+        }
+        for (addr, who) in self
+            .servers
+            .iter()
+            .flat_map(|s| {
+                std::iter::once((s.listen.as_str(), format!("server {:?}", s.name))).chain(
+                    s.status_addr
+                        .iter()
+                        .map(move |a| (a.as_str(), format!("server {:?} status", s.name))),
+                )
+            })
+            .chain(self.standbys.iter().flat_map(|s| {
+                std::iter::once((s.listen.as_str(), format!("standby {:?}", s.name))).chain(
+                    s.status_addr
+                        .iter()
+                        .map(move |a| (a.as_str(), format!("standby {:?} status", s.name))),
+                )
+            }))
+        {
+            anyhow::ensure!(!addr.is_empty(), "cluster manifest: {who} has an empty address");
+            if let Some(prev) = addrs.insert(addr, who.clone()) {
+                anyhow::bail!(
+                    "cluster manifest: duplicate listen address {addr:?} ({prev} and {who})"
+                );
+            }
+        }
+
+        // standby pairings: the primary must exist and must archive
+        for sb in &self.standbys {
+            let primary = self.servers.iter().find(|s| s.name == sb.of).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "cluster manifest: standby {:?} names unknown server {:?} (servers: {})",
+                    sb.name,
+                    sb.of,
+                    self.servers
+                        .iter()
+                        .map(|s| format!("{:?}", s.name))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+            let ck = primary.checkpoint.as_ref().filter(|c| c.every >= 1 && c.keep_last >= 1);
+            anyhow::ensure!(
+                ck.is_some(),
+                "cluster manifest: standby {:?}: its primary {:?} keeps no retention \
+                 archives to tail (give it checkpoint.path with every >= 1 and keep_last \
+                 >= 1)",
+                sb.name,
+                sb.of
+            );
+        }
+        Ok(())
+    }
+
+    /// Look up a primary by name.
+    pub fn server(&self, name: &str) -> Option<&ServerSpec> {
+        self.servers.iter().find(|s| s.name == name)
+    }
+
+    /// Look up a standby by name.
+    pub fn standby(&self, name: &str) -> Option<&StandbySpec> {
+        self.standbys.iter().find(|s| s.name == name)
+    }
+
+    /// The full `--master` endpoint list: every primary and standby,
+    /// in manifest order (standbys are skipped at resolution but probed
+    /// at fail-over, so clients list them from the start).
+    pub fn master_list(&self) -> String {
+        self.servers
+            .iter()
+            .map(|s| format!("tcp://{}", s.listen))
+            .chain(self.standbys.iter().map(|s| format!("tcp://{}", s.listen)))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// The synthetic model dimension, if this manifest is synthetic.
+    pub fn synthetic_k(&self) -> Option<usize> {
+        match self.model {
+            ModelSpec::Synthetic { k } => Some(k),
+            ModelSpec::Workload(_) => None,
+        }
+    }
+
+    /// Resolve a checkpoint base path against the launch run dir
+    /// (mutable state) — absolute paths pass through.
+    pub fn resolve_run_path(run_dir: &Path, p: &Path) -> PathBuf {
+        if p.is_absolute() {
+            p.to_path_buf()
+        } else {
+            run_dir.join(p)
+        }
+    }
+
+    /// Resolve an artifact reference against the manifest's directory
+    /// (committed content) — absolute paths pass through.
+    pub fn resolve_artifact_path(&self, p: &Path) -> PathBuf {
+        if p.is_absolute() {
+            p.to_path_buf()
+        } else {
+            self.base_dir.join(p)
+        }
+    }
+
+    /// Verify every artifact reference's SHA-256 against the file on
+    /// disk.  Fail-closed: a missing file or a mismatched digest is an
+    /// error naming the artifact.  Returns the number verified.
+    pub fn verify_artifacts(&self) -> anyhow::Result<usize> {
+        for a in &self.artifacts {
+            let full = self.resolve_artifact_path(&a.path);
+            let actual = sha256_file(&full)
+                .map_err(|e| anyhow::anyhow!("artifact {:?}: {e:#}", a.path.display().to_string()))?;
+            anyhow::ensure!(
+                actual == a.sha256,
+                "sha256 mismatch for {:?}: manifest pins {}, file is {actual}",
+                a.path.display().to_string(),
+                a.sha256
+            );
+        }
+        Ok(self.artifacts.len())
+    }
+
+    /// One-line human summary (`dana cluster --verify-only`).
+    pub fn summary(&self) -> String {
+        format!(
+            "{}{} · {} · {} global shard(s) tiled by {} server(s), {} standby(s){}{}",
+            if self.name.is_empty() { "cluster" } else { &self.name },
+            match &self.model {
+                ModelSpec::Synthetic { k } => format!(" (synthetic k={k})"),
+                ModelSpec::Workload(w) => format!(" ({})", w.name()),
+            },
+            self.algorithm.name(),
+            self.shards,
+            self.servers.len(),
+            self.standbys.len(),
+            match &self.fleet {
+                Some(f) => format!(
+                    ", fleet of {} worker(s) ({} mode, D={})",
+                    f.workers, f.mode, self.pipeline_depth
+                ),
+                None => ", no fleet".to_string(),
+            },
+            if self.artifacts.is_empty() {
+                String::new()
+            } else {
+                format!(", {} pinned artifact(s)", self.artifacts.len())
+            },
+        )
+    }
+}

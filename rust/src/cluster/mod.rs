@@ -26,17 +26,30 @@
 //! * [`standby`] — [`StandbyServer`] (`dana serve --standby-of ADDR`):
 //!   tails the primary's retention archives, takes its exact range over
 //!   on failure at epoch `last_seen + 1`, serving on the listener it
-//!   held from the start.
+//!   held from the start; pre-takeover it also answers read-only
+//!   `PullParams`/`GetTheta` from the restored archive, stamped
+//!   `standby = 1`;
+//! * [`manifest`] — [`ClusterManifest`]: one fail-closed `cluster.json`
+//!   describing the whole topology (placement, standby pairings, fleet,
+//!   checkpoints, sha256-pinned artifacts), validated with the same
+//!   tiling rules live resolution applies;
+//! * [`launch`] — `dana cluster --manifest`: launch, health-gate, and
+//!   supervise every process the manifest names, with crash-loop
+//!   restarts and graceful in-band shutdown-with-checkpoint.
 //!
 //! A single-endpoint `--master` never touches this layer — that path
 //! stays the plain [`crate::net::RemoteMaster`], bit-for-bit.  See
 //! DESIGN.md §13.
 
+pub mod launch;
+pub mod manifest;
 pub mod master;
 pub mod placement;
 pub mod snapshot;
 pub mod standby;
 
+pub use launch::LaunchOptions;
+pub use manifest::ClusterManifest;
 pub use master::ClusterMaster;
 pub use placement::{PlacementMap, ResolvedGroup};
 pub use snapshot::{coord_range, slice_snapshot, stitch_snapshots};

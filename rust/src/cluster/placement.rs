@@ -54,6 +54,66 @@ pub struct PlacementMap {
     pub groups: Vec<ResolvedGroup>,
 }
 
+/// Fail-closed tiling check, shared by live placement resolution and
+/// the cluster manifest (`cluster.json` validates statically with the
+/// *same* rules, so a manifest that parses is a topology that
+/// resolves).  `ranges` are (label, hosted shard range) pairs in any
+/// order; they must tile `0..total` exactly — no empty range, no
+/// overlap, no gap, nothing past the end.  `what` names the subject in
+/// error text ("placement", "cluster manifest").
+pub fn validate_tiling(
+    what: &str,
+    ranges: &[(String, Range<u32>)],
+    total: u32,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(total > 0, "{what} has no shards (global shard count is 0)");
+    anyhow::ensure!(!ranges.is_empty(), "{what} has no shard ranges to tile 0..{total}");
+    let mut sorted: Vec<&(String, Range<u32>)> = ranges.iter().collect();
+    sorted.sort_by_key(|(_, r)| (r.start, r.end));
+    for (label, r) in &sorted {
+        anyhow::ensure!(
+            r.start < r.end,
+            "{what} range {label} ({}..{}) is empty",
+            r.start,
+            r.end
+        );
+        anyhow::ensure!(
+            r.end <= total,
+            "{what} range {label} ({}..{}) exceeds the global shard count {total}",
+            r.start,
+            r.end
+        );
+    }
+    anyhow::ensure!(
+        sorted[0].1.start == 0,
+        "{what} does not cover shards 0..{total}: lowest hosted range starts at {}",
+        sorted[0].1.start
+    );
+    for w in sorted.windows(2) {
+        let (a_label, a) = w[0];
+        let (b_label, b) = w[1];
+        anyhow::ensure!(
+            b.start == a.end,
+            "{what} ranges {a_label} ({}..{}) and {b_label} ({}..{}) {}",
+            a.start,
+            a.end,
+            b.start,
+            b.end,
+            if b.start < a.end { "overlap" } else { "leave a gap" }
+        );
+    }
+    let (last_label, last) = sorted.last().expect("validated non-empty");
+    anyhow::ensure!(
+        last.end == total,
+        "{what} covers shards only up to {} of {total} (highest range is {last_label} at \
+         {}..{})",
+        last.end,
+        last.start,
+        last.end
+    );
+    Ok(())
+}
+
 impl PlacementMap {
     /// Probe every endpoint and assemble the placement they jointly
     /// advertise.  Unreachable endpoints and standbys are skipped (they
@@ -150,42 +210,14 @@ impl PlacementMap {
         // primary loses to the standby that took its range over)
         cands.sort_by_key(|c| (c.shards.start, c.shards.end, std::cmp::Reverse(c.epoch)));
         cands.dedup_by_key(|c| (c.shards.start, c.shards.end));
-        // strict tiling of 0..total
-        anyhow::ensure!(
-            cands[0].shards.start == 0,
-            "{}",
-            context(format!(
-                "placement does not cover shards 0..{}: lowest hosted range starts at {}",
-                cands[0].shards.start, cands[0].shards.start
-            ))
-        );
-        for w in cands.windows(2) {
-            let (a, b) = (&w[0], &w[1]);
-            anyhow::ensure!(
-                b.shards.start == a.shards.end,
-                "{}",
-                context(format!(
-                    "placement ranges {} ({}..{}) and {} ({}..{}) {}",
-                    a.endpoint,
-                    a.shards.start,
-                    a.shards.end,
-                    b.endpoint,
-                    b.shards.start,
-                    b.shards.end,
-                    if b.shards.start < a.shards.end { "overlap" } else { "leave a gap" }
-                ))
-            );
-        }
-        let last = cands.last().expect("validated non-empty");
-        anyhow::ensure!(
-            last.shards.end == total,
-            "{}",
-            context(format!(
-                "placement covers shards only up to {} of {} (highest range is {} at \
-                 {}..{})",
-                last.shards.end, total, last.endpoint, last.shards.start, last.shards.end
-            ))
-        );
+        // strict tiling of 0..total — the same fail-closed rules the
+        // cluster manifest applies statically (validate_tiling)
+        let labeled: Vec<(String, Range<u32>)> = cands
+            .iter()
+            .map(|c| (c.endpoint.clone(), c.shards.clone()))
+            .collect();
+        validate_tiling("placement", &labeled, total)
+            .map_err(|e| anyhow::anyhow!("{}", context(format!("{e:#}"))))?;
         // derive the global model shape and check each group spans
         // exactly the coordinates its shard range implies
         let k: usize = cands.iter().map(|c| c.k_local).sum();

@@ -77,6 +77,52 @@ pub struct StandbyConfig {
     pub miss_budget: u32,
 }
 
+impl StandbyConfig {
+    /// The standby config a manifest's `standbys[]` entry normalizes to
+    /// (`dana serve --manifest M --server NAME` for a standby name).
+    /// Everything pairing-sensitive — the primary's address, its archive
+    /// base, its retention — comes from the primary's own `servers[]`
+    /// entry, so the pair cannot disagree by construction.
+    pub fn from_manifest(
+        m: &crate::cluster::manifest::ClusterManifest,
+        name: &str,
+        run_dir: &std::path::Path,
+    ) -> anyhow::Result<StandbyConfig> {
+        use crate::cluster::manifest::ClusterManifest;
+        let sb = m
+            .standby(name)
+            .ok_or_else(|| anyhow::anyhow!("cluster manifest has no standby named {name:?}"))?;
+        let primary = m
+            .server(&sb.of)
+            .expect("manifest validation pairs every standby with a primary");
+        let ck = primary
+            .checkpoint
+            .as_ref()
+            .expect("manifest validation requires the watched primary to archive");
+        let cfg = crate::config::TrainConfig::from_manifest(m)?;
+        // the standby owns the status endpoint across the takeover; the
+        // placement itself is learned from the primary, never configured
+        let mut opts = ServeOptions::from_manifest(m, primary, run_dir);
+        opts.status_addr = sb.status_addr.clone();
+        opts.placement = Placement::default();
+        Ok(StandbyConfig {
+            listen: sb.listen.clone(),
+            primary: format!("tcp://{}", primary.listen),
+            archive_base: ClusterManifest::resolve_run_path(run_dir, &ck.path),
+            schedule: LrSchedule::new(cfg.schedule.clone()),
+            threads: if primary.serve_threads == 0 {
+                crate::util::parallel::default_threads()
+            } else {
+                primary.serve_threads
+            },
+            striped: primary.serve_threads > 0,
+            opts,
+            poll: Duration::from_millis(sb.poll_ms.max(10)),
+            miss_budget: sb.miss_budget.max(1),
+        })
+    }
+}
+
 /// What the last successful primary probe advertised.
 #[derive(Debug, Clone, Copy)]
 struct PrimaryView {
@@ -102,6 +148,12 @@ struct Watch {
     primary_step: AtomicU64,
     seen_primary: AtomicBool,
     view: Mutex<Option<PrimaryView>>,
+    /// θ restored from the newest tailed archive (at `archive_step`),
+    /// for read-only pre-takeover serving: `PullParams`/`GetTheta`
+    /// answered from the archive, stamped `standby = 1` so no client
+    /// mistakes the reply for a live primary's (and none can push — the
+    /// worker hello is still refused).
+    theta: Mutex<Option<Arc<Vec<f32>>>>,
     /// Post-takeover: the serving NetServer's own status source; the
     /// standby's status listener delegates to it from then on.
     served: Mutex<Option<Arc<dyn StatusSource>>>,
@@ -110,6 +162,10 @@ struct Watch {
 impl Watch {
     fn view(&self) -> Option<PrimaryView> {
         *crate::util::sync::lock(&self.view)
+    }
+
+    fn theta(&self) -> Option<Arc<Vec<f32>>> {
+        crate::util::sync::lock(&self.theta).clone()
     }
 
     fn served(&self) -> Option<Arc<dyn StatusSource>> {
@@ -213,6 +269,7 @@ impl StandbyServer {
             primary_step: AtomicU64::new(0),
             seen_primary: AtomicBool::new(false),
             view: Mutex::new(None),
+            theta: Mutex::new(None),
             served: Mutex::new(None),
         });
         // the standby owns its status endpoint across the takeover; the
@@ -352,6 +409,38 @@ fn answer_conn(stream: TcpStream, watch: &Watch) {
                 detail: "standby: not serving worker traffic (no takeover yet)".into(),
             },
             (Msg::Status, Some(v)) => Msg::Ack { header: watch.standby_header(&v) },
+            // read-only θ from the restored archive (standby = 1 in the
+            // header: placement resolution still skips this endpoint,
+            // and there is no slot to push through)
+            (Msg::PullParams, Some(v)) => match watch.theta() {
+                Some(theta) if theta.len() == v.k => {
+                    Msg::Params { header: watch.standby_header(&v), params: (*theta).clone() }
+                }
+                _ => Msg::Error {
+                    recoverable: true,
+                    detail: "standby: no archive restored yet (read-only θ unavailable)"
+                        .into(),
+                },
+            },
+            (Msg::GetTheta, Some(v)) => match watch.theta() {
+                Some(theta) if theta.len() == v.k => {
+                    Msg::Theta { header: watch.standby_header(&v), theta: (*theta).clone() }
+                }
+                _ => Msg::Error {
+                    recoverable: true,
+                    detail: "standby: no archive restored yet (read-only θ unavailable)"
+                        .into(),
+                },
+            },
+            // in-band graceful shutdown, same control frame the serving
+            // path honors — the cluster supervisor winds a watching
+            // standby down without a signal race
+            (Msg::Shutdown, v) => {
+                watch.stop.store(true, Ordering::SeqCst);
+                let header = v.map(|v| watch.standby_header(&v)).unwrap_or_default();
+                let _ = wire::write_frame(&mut w, &Msg::Ack { header });
+                return;
+            }
             _ => Msg::Error {
                 recoverable: true,
                 detail: "standby: not serving (watching its primary)".into(),
@@ -375,6 +464,8 @@ fn monitor_loop(
         answer.join().map_err(|_| anyhow::anyhow!("standby answer loop panicked"))
     };
     let mut misses = 0u32;
+    // step of the archive θ currently restored for read-only serving
+    let mut theta_step: Option<u64> = None;
     loop {
         if watch.stop.load(Ordering::SeqCst) {
             let _ = reclaim(watch);
@@ -401,8 +492,21 @@ fn monitor_loop(
             Err(_) => misses += 1,
         }
         if let Ok(archives) = retention::list_archives(&cfg.archive_base) {
-            if let Some(newest) = archives.iter().map(|a| a.step).max() {
-                watch.archive_step.store(newest, Ordering::SeqCst);
+            if let Some(newest) = archives.iter().max_by_key(|a| a.step) {
+                watch.archive_step.store(newest.step, Ordering::SeqCst);
+                // restore θ for read-only pre-takeover serving whenever a
+                // newer archive lands (a failed read — e.g. the archive
+                // GC'd between list and open — just retries next poll)
+                if theta_step != Some(newest.step) {
+                    if let (Ok(snap), Some(v)) = (checkpoint::read_snapshot(&newest.path), watch.view())
+                    {
+                        if snap.validate(v.kind, v.k).is_ok() {
+                            *crate::util::sync::lock(&watch.theta) =
+                                Some(Arc::new(snap.theta));
+                            theta_step = Some(newest.step);
+                        }
+                    }
+                }
             }
         }
         if misses >= cfg.miss_budget.max(1) {

@@ -12,6 +12,10 @@ use crate::sim::{ChurnSchedule, Environment};
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
 
+pub mod serve;
+
+pub use serve::{ServeSpec, StandbyOf};
+
 /// Which workload (model + dataset proxy) to train.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Workload {
@@ -257,8 +261,46 @@ impl TrainConfig {
         self.batch_override.unwrap_or(self.workload.default_batch())
     }
 
-    /// Apply overrides from a parsed JSON object (keys are optional).
+    /// Every key [`TrainConfig::apply_json`] understands.  The override
+    /// walker rejects anything else — a typo'd key used to be silently
+    /// ignored, which meant a config file could *look* like it set
+    /// `pipeline_depth` while the run quietly used the default.
+    pub const JSON_KEYS: &'static [&'static str] = &[
+        "workload",
+        "algorithm",
+        "n_workers",
+        "env",
+        "epochs",
+        "base_eta",
+        "gamma",
+        "seed",
+        "use_pallas",
+        "shards",
+        "churn",
+        "leave_policy",
+        "master_addr",
+        "shard_frames",
+        "pipeline_depth",
+        "rtt",
+        "max_restarts",
+        "restart_backoff_ms",
+        "encoding",
+    ];
+
+    /// Apply overrides from a parsed JSON object (keys are optional;
+    /// unknown keys are rejected by name — fail-closed, like the wire
+    /// decoder and the cluster manifest).
     pub fn apply_json(&mut self, j: &Json) -> anyhow::Result<()> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("config overrides must be a JSON object"))?;
+        for k in obj.keys() {
+            anyhow::ensure!(
+                Self::JSON_KEYS.contains(&k.as_str()),
+                "config: unknown key {k:?} (known: {})",
+                Self::JSON_KEYS.join(", ")
+            );
+        }
         if let Some(v) = j.get("workload") {
             self.workload = v
                 .as_str()
@@ -357,6 +399,50 @@ impl TrainConfig {
         let j = Json::parse_file(path)?;
         let mut cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
         cfg.apply_json(&j)?;
+        Ok(cfg)
+    }
+
+    /// The fleet's training config for a cluster manifest: the same
+    /// preset-plus-overrides normalization the CLI flags go through, so
+    /// `dana train --manifest` and a hand-rolled flag invocation produce
+    /// identical configs.  The master address is the manifest's full
+    /// endpoint list (primaries then standbys), so resolution and
+    /// fail-over see the whole topology.  The schedule is built from the
+    /// *manifest-wide* hyperparameters — the same ones every server's
+    /// [`ServeSpec`](crate::config::ServeSpec) uses — because schedule
+    /// agreement across the placement is config, not negotiated.
+    pub fn from_manifest(
+        m: &crate::cluster::manifest::ClusterManifest,
+    ) -> anyhow::Result<TrainConfig> {
+        use crate::cluster::manifest::ModelSpec;
+        let workload = match &m.model {
+            // synthetic runs still carry a schedule; the c10 preset is
+            // the schedule donor, exactly as the serve/train CLI default
+            ModelSpec::Synthetic { .. } => Workload::C10,
+            ModelSpec::Workload(w) => *w,
+        };
+        let fleet = m.fleet.as_ref();
+        let workers = fleet.map(|f| f.workers).unwrap_or(8);
+        let mut cfg = TrainConfig::preset(workload, m.algorithm, workers, m.epochs);
+        cfg.seed = fleet.map(|f| f.seed).unwrap_or(m.seed);
+        if let Some(eta) = m.eta {
+            cfg.schedule.base_eta = eta;
+        }
+        if let Some(g) = m.gamma {
+            cfg.schedule.gamma = g;
+        }
+        cfg.pipeline_depth = m.pipeline_depth;
+        cfg.leave_policy = m.leave_policy;
+        cfg.master_addr = Some(m.master_list());
+        if let Some(f) = fleet {
+            cfg.epochs = f.epochs;
+            cfg.encoding = f.encoding;
+            cfg.churn = f.churn.clone();
+            cfg.leave_policy = f.leave_policy;
+            cfg.max_restarts = f.max_restarts;
+            cfg.restart_backoff_ms = f.restart_backoff_ms;
+            cfg.metrics_every = f.metrics_every;
+        }
         Ok(cfg)
     }
 }
@@ -485,5 +571,23 @@ mod tests {
         let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
         let j = Json::parse(r#"{"algorithm":42}"#).unwrap();
         assert!(c.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn unknown_json_key_rejected_by_name() {
+        // the exact failure mode this guards: a typo'd key silently
+        // ignored, the run quietly using the default depth
+        let mut c = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 20.0);
+        let j = Json::parse(r#"{"pipline_depth":2}"#).unwrap();
+        let err = c.apply_json(&j).unwrap_err().to_string();
+        assert!(err.contains("unknown key \"pipline_depth\""), "got: {err}");
+        assert_eq!(c.pipeline_depth, 0, "typo'd override must not half-apply");
+        // non-object override documents are rejected too
+        let j = Json::parse(r#"[1,2]"#).unwrap();
+        assert!(c.apply_json(&j).is_err());
+        // the correctly-spelled key still applies
+        let j = Json::parse(r#"{"pipeline_depth":2}"#).unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.pipeline_depth, 2);
     }
 }

@@ -1,0 +1,144 @@
+//! [`ServeSpec`] — everything one `dana serve` process needs, as data.
+//!
+//! `dana serve` grew ~20 flags across PRs 5–8; the cluster manifest
+//! (DESIGN.md §14) expresses the same settings declaratively.  This
+//! struct is the normalization point: the flag parser fills one, and
+//! [`ServeSpec::from_manifest`] fills an identical one from a named
+//! `servers[]` entry — so a manifest-launched server and a hand-flagged
+//! server are the same code path from here down, and golden tests can
+//! compare the two spellings with `==`.
+
+use crate::cluster::manifest::ClusterManifest;
+use crate::config::Workload;
+use crate::net::{EncodingSet, RetentionPolicy};
+use crate::optim::{AlgorithmKind, LeavePolicy};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+/// Standby role: watch `primary` and take its range over on failure
+/// (`--standby-of`, or a manifest `standbys[]` entry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StandbyOf {
+    /// The watched primary's serving address (scheme optional).
+    pub primary: String,
+    pub poll_ms: u64,
+    pub miss_budget: u32,
+}
+
+/// One parameter-server process, fully specified.  See the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSpec {
+    pub listen: String,
+    pub algorithm: AlgorithmKind,
+    pub workload: Workload,
+    /// `Some(k)` = synthetic quadratic of dimension k (artifact-free).
+    pub synthetic_k: Option<usize>,
+    /// Schedule worker count (the server owns the LR schedule).
+    pub workers: usize,
+    pub epochs: f64,
+    pub seed: u64,
+    pub eta: Option<f32>,
+    pub gamma: Option<f32>,
+    /// Global shard count (local count unless `shard_range` narrows it).
+    pub shards: usize,
+    /// Hosted slice `[A, B)` of the global shard space (None = host all).
+    pub shard_range: Option<Range<u32>>,
+    pub placement_epoch: u64,
+    pub serve_threads: usize,
+    pub pipeline_depth: usize,
+    pub leave_policy: LeavePolicy,
+    pub checkpoint_path: Option<PathBuf>,
+    pub checkpoint_every: u64,
+    pub resume: Option<PathBuf>,
+    pub status_addr: Option<String>,
+    pub retention: RetentionPolicy,
+    pub encodings: EncodingSet,
+    pub metrics_every: u64,
+    pub artifacts_dir: PathBuf,
+    /// `Some` = this process is a hot standby, not a primary.
+    pub standby: Option<StandbyOf>,
+}
+
+impl ServeSpec {
+    /// The spec for the named `servers[]` or `standbys[]` entry of a
+    /// validated manifest.  Checkpoint paths resolve against `run_dir`
+    /// (mutable state never resolves against the committed manifest's
+    /// directory).  A standby inherits its primary's checkpoint base and
+    /// retention — that shared archive series IS the takeover channel.
+    pub fn from_manifest(
+        m: &ClusterManifest,
+        name: &str,
+        run_dir: &Path,
+    ) -> anyhow::Result<ServeSpec> {
+        let workload = match &m.model {
+            crate::cluster::manifest::ModelSpec::Synthetic { .. } => Workload::C10,
+            crate::cluster::manifest::ModelSpec::Workload(w) => *w,
+        };
+        let workers = m.fleet.as_ref().map(|f| f.workers).unwrap_or(8);
+        let common = |listen: String, status_addr: Option<String>| ServeSpec {
+            listen,
+            algorithm: m.algorithm,
+            workload,
+            synthetic_k: m.synthetic_k(),
+            workers,
+            epochs: m.epochs,
+            seed: m.seed,
+            eta: m.eta,
+            gamma: m.gamma,
+            shards: m.shards as usize,
+            shard_range: None,
+            placement_epoch: 0,
+            serve_threads: 1,
+            pipeline_depth: m.pipeline_depth,
+            leave_policy: m.leave_policy,
+            checkpoint_path: None,
+            checkpoint_every: 0,
+            resume: None,
+            status_addr,
+            retention: RetentionPolicy::default(),
+            encodings: m.encodings,
+            metrics_every: m.metrics_every,
+            artifacts_dir: crate::config::default_artifacts_dir(),
+            standby: None,
+        };
+        if let Some(s) = m.server(name) {
+            let mut spec = common(s.listen.clone(), s.status_addr.clone());
+            spec.shard_range = Some(s.shard_range.clone());
+            spec.placement_epoch = s.placement_epoch;
+            spec.serve_threads = s.serve_threads;
+            if let Some(ck) = &s.checkpoint {
+                spec.checkpoint_path = Some(ClusterManifest::resolve_run_path(run_dir, &ck.path));
+                spec.checkpoint_every = ck.every;
+                spec.retention =
+                    RetentionPolicy { keep_last: ck.keep_last, keep_hourly: ck.keep_hourly };
+            }
+            return Ok(spec);
+        }
+        if let Some(sb) = m.standby(name) {
+            let primary = m
+                .server(&sb.of)
+                .expect("manifest validation pairs every standby with a primary");
+            let ck = primary
+                .checkpoint
+                .as_ref()
+                .expect("manifest validation requires the watched primary to archive");
+            let mut spec = common(sb.listen.clone(), sb.status_addr.clone());
+            spec.serve_threads = primary.serve_threads;
+            spec.checkpoint_path = Some(ClusterManifest::resolve_run_path(run_dir, &ck.path));
+            spec.checkpoint_every = ck.every;
+            spec.retention =
+                RetentionPolicy { keep_last: ck.keep_last, keep_hourly: ck.keep_hourly };
+            spec.standby = Some(StandbyOf {
+                primary: format!("tcp://{}", primary.listen),
+                poll_ms: sb.poll_ms,
+                miss_budget: sb.miss_budget,
+            });
+            return Ok(spec);
+        }
+        anyhow::bail!(
+            "cluster manifest has no server or standby named {name:?} (servers: {}; standbys: {})",
+            m.servers.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", "),
+            m.standbys.iter().map(|s| s.name.as_str()).collect::<Vec<_>>().join(", "),
+        )
+    }
+}

@@ -3,19 +3,27 @@
 //! Subcommands:
 //!   train       run one training experiment (async / ssgd / baseline)
 //!   serve       host a parameter server over TCP (see `--master`)
+//!   cluster     launch + supervise a whole topology from cluster.json
 //!   experiment  regenerate a paper table/figure (or `all`)
 //!   simulate    pure timing simulation (no model execution)
 //!   info        artifact manifest + platform report
 //!
+//! Each subcommand's flags live in a declarative [`FlagTable`]
+//! (`util::cli`): one table generates the usage block and rejects
+//! unknown options with a uniform error style, so the subcommands
+//! cannot drift apart in how they parse or fail.
+//!
 //! Examples:
 //!   dana train --algorithm dana-slim --workers 8 --epochs 10
-//!   dana train --mode real --algorithm dana-slim --workers 4 --workload lm
 //!   dana serve --listen 127.0.0.1:7700 --algorithm dana-zero --synthetic --k 256
 //!   dana train --synthetic --master tcp://127.0.0.1:7700 --algorithm dana-zero
+//!   dana cluster --manifest examples/cluster/two_server.json --run-dir /tmp/run
+//!   dana serve --manifest cluster.json --server web0 --run-dir /tmp/run
 //!   dana experiment fig4 --full --seeds 3
-//!   dana simulate --env hetero --workers 32
 
-use dana::config::{TrainConfig, Workload};
+use dana::cluster::manifest::parse_shard_range;
+use dana::cluster::{ClusterManifest, LaunchOptions, StandbyConfig, StandbyServer};
+use dana::config::{ServeSpec, StandbyOf, TrainConfig, Workload};
 use dana::experiments::{self, ExpOptions};
 use dana::net::{self, NetServer, ServeOptions};
 use dana::optim::{AlgorithmKind, LrSchedule};
@@ -23,8 +31,9 @@ use dana::runtime::Engine;
 use dana::server::{make_serving_master, ServingMaster};
 use dana::sim::Environment;
 use dana::train::{baseline, real_async, sim_trainer, ssgd};
-use dana::util::cli::Args;
-use std::path::PathBuf;
+use dana::util::cli::{Args, FlagDef, FlagTable};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 fn main() {
     if let Err(e) = run() {
@@ -33,38 +42,148 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: dana <train|serve|experiment|simulate|info> [options]
-  train      --algorithm A --workers N [--workload c10|wrn_c10|c100|imagenet|lm]
-             [--epochs E] [--env homo|hetero] [--mode sim|real|ssgd|baseline]
-             [--seed S] [--eta X] [--gamma X] [--metrics-every K]
-             [--shards S] [--churn \"leave@0.3:2,join@0.5,slow@0.6:0=4x\"]
-             [--leave-policy retire|fold] [--config file.json] [--use-pallas]
-             [--synthetic] [--k K] [--master tcp://H:P[,tcp://H:P..]]
-             [--shard-frames]
-             [--pipeline-depth D] [--rtt T] [--max-restarts R]
-             [--restart-backoff-ms MS] [--encoding none|f16|bf16|topk:K]
-             [--artifacts DIR]
-  serve      --listen HOST:PORT --algorithm A [--workload W | --synthetic --k K]
-             [--workers N] [--epochs E] [--shards S] [--serve-threads T]
-             [--pipeline-depth D] [--leave-policy retire|fold]
-             [--checkpoint PATH] [--checkpoint-every STEPS] [--resume PATH]
-             [--keep-last N] [--keep-hourly H] [--status-addr HOST:PORT]
-             [--encodings none|f16|bf16|topk|all[,..]]
-             [--shard-range A..B] [--placement-epoch E]
-             [--standby-of tcp://HOST:PORT] [--standby-poll-ms MS]
-             [--standby-miss-budget N]
-             [--metrics-every K] [--seed S] [--artifacts DIR]
-  experiment <fig2a|fig2b|fig3|fig4|fig5|fig6|fig7|fig9|fig10|fig11|fig12|fig13|
-              table1..table6|churn|all> [--full] [--seeds K] [--out DIR]
-             [--encoding none|f16|bf16|topk:K] [--artifacts DIR]
-  simulate   --workers N [--env homo|hetero] [--batches-per-worker K] [--batch B]
-  info       [--artifacts DIR]";
+const USAGE: &str = "usage: dana <train|serve|cluster|experiment|simulate|info> [options]
+  train       run one training experiment (flags or --manifest)
+  serve       host a parameter server / hot standby over TCP
+  cluster     launch + supervise a whole topology from cluster.json
+  experiment  regenerate a paper table/figure (or `all`)
+  simulate    pure timing simulation (no model execution)
+  info        artifact manifest + platform report
+run `dana <subcommand> --oops` (any unknown flag) to see that
+subcommand's full flag table.";
+
+/// `m!` builds one [`FlagDef`] row; tables stay readable.
+macro_rules! flag {
+    ($name:literal, $value:literal, $help:literal) => {
+        FlagDef { name: $name, value: Some($value), help: $help }
+    };
+    ($name:literal, $help:literal) => {
+        FlagDef { name: $name, value: None, help: $help }
+    };
+}
+
+const TRAIN_TABLE: FlagTable = FlagTable {
+    cmd: "train",
+    summary: "run one training experiment",
+    flags: &[
+        flag!("manifest", "FILE", "run the fleet of a cluster manifest (sole config source)"),
+        flag!("workload", "W", "c10|wrn_c10|c100|imagenet|lm (default c10)"),
+        flag!("algorithm", "A", "dana-slim|dana|dana-zero|asgd|... (default dana-slim)"),
+        flag!("workers", "N", "cluster size (default 8)"),
+        flag!("epochs", "E", "run length in proxy epochs (default 10)"),
+        flag!("env", "ENV", "homo|hetero execution-time model (default homo)"),
+        flag!("mode", "M", "sim|real|ssgd|baseline (default sim)"),
+        flag!("seed", "S", "run seed (default 1)"),
+        flag!("eta", "X", "override base learning rate"),
+        flag!("gamma", "X", "override momentum"),
+        flag!("warmup", "E", "override warmup epochs"),
+        flag!("lambda", "X", "override DC strength"),
+        flag!("metrics-every", "K", "record gap/lag every K master steps"),
+        flag!("shards", "S", "parameter-server shards (in-process master)"),
+        flag!("churn", "SPEC", "membership events, e.g. leave@0.3:2,join@0.5"),
+        flag!("leave-policy", "P", "retire|fold a leaver's momentum"),
+        flag!("config", "FILE", "JSON overrides (fail-closed on unknown keys)"),
+        flag!("use-pallas", "use the Pallas-kernel artifact variant"),
+        flag!("eval-every", "E", "evaluate every E epochs"),
+        flag!("synthetic", "train the synthetic quadratic (artifact-free)"),
+        flag!("k", "K", "synthetic model dimension (default 256)"),
+        flag!("master", "URL[,URL..]", "remote parameter server(s); comma list = placement"),
+        flag!("shard-frames", "move remote traffic as per-shard frames"),
+        flag!("pipeline-depth", "D", "keep D+1 batches in flight per worker"),
+        flag!("rtt", "T", "simulated round-trip time (sim modes)"),
+        flag!("max-restarts", "R", "crash-loop budget per worker thread"),
+        flag!("restart-backoff-ms", "MS", "base worker restart backoff"),
+        flag!("encoding", "E", "none|f16|bf16|topk:K gradient payload encoding"),
+        flag!("artifacts", "DIR", "AOT artifact directory"),
+    ],
+};
+
+const SERVE_TABLE: FlagTable = FlagTable {
+    cmd: "serve",
+    summary: "host a parameter server (or hot standby) over TCP",
+    flags: &[
+        flag!("manifest", "FILE", "take this process's config from a cluster manifest"),
+        flag!("server", "NAME", "which servers[]/standbys[] entry this process is"),
+        flag!("run-dir", "DIR", "base for checkpoint paths in manifest mode (default .)"),
+        flag!("listen", "HOST:PORT", "serving address (default 127.0.0.1:7700)"),
+        flag!("algorithm", "A", "algorithm this server applies (default dana-slim)"),
+        flag!("workload", "W", "schedule/model donor workload (default c10)"),
+        flag!("synthetic", "serve the synthetic quadratic (artifact-free)"),
+        flag!("k", "K", "synthetic model dimension (default 256)"),
+        flag!("workers", "N", "schedule worker count (default 8)"),
+        flag!("epochs", "E", "schedule length (default 10)"),
+        flag!("eta", "X", "override base learning rate"),
+        flag!("gamma", "X", "override momentum"),
+        flag!("seed", "S", "θ-init seed (default 1)"),
+        flag!("shards", "S", "shard count (global count with --shard-range)"),
+        flag!("shard-range", "A..B", "host only global shards [A,B) of the placement"),
+        flag!("placement-epoch", "E", "epoch this server claims its range at"),
+        flag!("standby-of", "URL", "run a hot standby watching this primary"),
+        flag!("standby-poll-ms", "MS", "primary poll cadence (default 250)"),
+        flag!("standby-miss-budget", "N", "missed probes before takeover (default 4)"),
+        flag!("serve-threads", "T", "per-request shard fan-out cap (0 = global lock)"),
+        flag!("pipeline-depth", "D", "client pipeline depth to size pull windows for"),
+        flag!("leave-policy", "P", "retire|fold a leaver's momentum"),
+        flag!("checkpoint", "PATH", "checkpoint base path"),
+        flag!("checkpoint-every", "STEPS", "checkpoint cadence in master steps"),
+        flag!("resume", "PATH", "restore master state from a checkpoint"),
+        flag!("keep-last", "N", "retention: keep N newest archives"),
+        flag!("keep-hourly", "H", "retention: plus newest of H distinct hours"),
+        flag!("status-addr", "HOST:PORT", "HTTP /metrics + /status listener"),
+        flag!("encodings", "LIST", "advertised payload encodings (default all)"),
+        flag!("metrics-every", "K", "record gap/lag every K master steps"),
+        flag!("artifacts", "DIR", "AOT artifact directory"),
+    ],
+};
+
+const CLUSTER_TABLE: FlagTable = FlagTable {
+    cmd: "cluster",
+    summary: "launch and supervise a whole topology from one manifest",
+    flags: &[
+        flag!("manifest", "FILE", "the cluster.json to launch (required)"),
+        flag!("run-dir", "DIR", "base for checkpoints/logs/pids.json (default .)"),
+        flag!("verify-only", "validate structure + artifact checksums, then exit"),
+        flag!("no-fleet", "supervise servers only; run the fleet yourself"),
+        flag!("health-timeout-ms", "MS", "launch health-gate budget (default 30000)"),
+    ],
+};
+
+const EXPERIMENT_TABLE: FlagTable = FlagTable {
+    cmd: "experiment",
+    summary: "regenerate a paper table/figure (fig2a..fig13, table1..table6, churn, all)",
+    flags: &[
+        flag!("full", "full-size run (default is the quick preset)"),
+        flag!("seeds", "K", "seeds per configuration (default 2)"),
+        flag!("out", "DIR", "results directory (default results)"),
+        flag!("encoding", "E", "none|f16|bf16|topk:K gradient payload encoding"),
+        flag!("artifacts", "DIR", "AOT artifact directory"),
+    ],
+};
+
+const SIMULATE_TABLE: FlagTable = FlagTable {
+    cmd: "simulate",
+    summary: "pure timing simulation (no model execution)",
+    flags: &[
+        flag!("workers", "N", "cluster size (default 8)"),
+        flag!("env", "ENV", "homo|hetero execution-time model"),
+        flag!("batches-per-worker", "K", "work per worker (default 100)"),
+        flag!("batch", "B", "batch size (default 128)"),
+        flag!("seeds", "K", "seeds to average (default 5)"),
+    ],
+};
+
+const INFO_TABLE: FlagTable = FlagTable {
+    cmd: "info",
+    summary: "artifact manifest + platform report",
+    flags: &[flag!("artifacts", "DIR", "AOT artifact directory")],
+};
 
 fn run() -> anyhow::Result<()> {
     let mut args = Args::parse_env(true)?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&mut args),
         Some("serve") => cmd_serve(&mut args),
+        Some("cluster") => cmd_cluster(&mut args),
         Some("experiment") => cmd_experiment(&mut args),
         Some("simulate") => cmd_simulate(&mut args),
         Some("info") => cmd_info(&mut args),
@@ -82,14 +201,41 @@ fn artifacts_dir(args: &mut Args) -> PathBuf {
         .unwrap_or_else(dana::config::default_artifacts_dir)
 }
 
+/// In manifest mode only `allowed` flags may accompany `--manifest` —
+/// any other flag would silently lose to the manifest, so it rejects
+/// instead (the manifest is the single source of process config).
+fn manifest_excludes(args: &Args, allowed: &[&str]) -> anyhow::Result<()> {
+    for k in args.provided() {
+        anyhow::ensure!(
+            allowed.contains(&k),
+            "--{k} cannot be combined with --manifest (the manifest is the single source \
+             of config; allowed here: {})",
+            allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(", ")
+        );
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
+    TRAIN_TABLE.check(args)?;
+    // manifest mode: the fleet of a cluster manifest, exactly as `dana
+    // cluster` would launch it
+    if let Some(mp) = args.opt_str("manifest") {
+        manifest_excludes(args, &["manifest", "artifacts"])?;
+        let m = ClusterManifest::load(Path::new(&mp))?;
+        m.verify_artifacts()?;
+        let mut cfg = TrainConfig::from_manifest(&m)?;
+        cfg.artifacts_dir = artifacts_dir(args);
+        let mode = m.fleet.as_ref().map(|f| f.mode.clone()).unwrap_or_else(|| "real".into());
+        return run_train(cfg, m.synthetic_k(), &mode);
+    }
     let workload: Workload = args.str_or("workload", "c10").parse()?;
     let algorithm: AlgorithmKind = args.str_or("algorithm", "dana-slim").parse()?;
     let workers = args.parse_or::<usize>("workers", 8)?;
     let epochs = args.parse_or::<f64>("epochs", 10.0)?;
     let mut cfg = TrainConfig::preset(workload, algorithm, workers, epochs);
     if let Some(path) = args.opt_str("config") {
-        let j = dana::util::json::Json::parse_file(std::path::Path::new(&path))?;
+        let j = dana::util::json::Json::parse_file(Path::new(&path))?;
         cfg.apply_json(&j)?;
     }
     cfg.env = args.str_or("env", "homo").parse()?;
@@ -149,32 +295,33 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     if let Some(e) = args.opt_parse::<net::Encoding>("encoding")? {
         cfg.encoding = e;
     }
-    let synthetic = args.flag("synthetic");
-    let synth_k = args.parse_or::<usize>("k", 256)?;
+    let synth_k = args.flag("synthetic").then(|| args.parse_or::<usize>("k", 256)).transpose()?;
     let mode = args.str_or("mode", "sim");
-    args.finish()?;
-    if cfg.pipeline_depth > 0 && matches!(mode.as_str(), "ssgd" | "baseline") {
+    run_train(cfg, synth_k, &mode)
+}
+
+/// Run one training experiment from a fully-built config (flags,
+/// `--config` JSON, or a cluster manifest — all normalized upstream).
+fn run_train(cfg: TrainConfig, synth_k: Option<usize>, mode: &str) -> anyhow::Result<()> {
+    if cfg.pipeline_depth > 0 && matches!(mode, "ssgd" | "baseline") {
         anyhow::bail!("--pipeline-depth applies only to --mode sim|real (got --mode {mode})");
     }
-    if cfg.shards > 1 && matches!(mode.as_str(), "ssgd" | "baseline") {
+    if cfg.shards > 1 && matches!(mode, "ssgd" | "baseline") {
         anyhow::bail!("--shards applies only to --mode sim|real (got --mode {mode})");
     }
     if !cfg.churn.is_empty() {
-        if matches!(mode.as_str(), "ssgd" | "baseline") {
+        if matches!(mode, "ssgd" | "baseline") {
             anyhow::bail!("--churn applies only to --mode sim|real (got --mode {mode})");
         }
         cfg.churn.validate(cfg.n_workers)?;
     }
-    if (synthetic || cfg.master_addr.is_some())
-        && matches!(mode.as_str(), "ssgd" | "baseline")
-    {
+    if (synth_k.is_some() || cfg.master_addr.is_some()) && matches!(mode, "ssgd" | "baseline") {
         anyhow::bail!("--synthetic/--master apply only to --mode sim|real (got --mode {mode})");
     }
 
-    let workload = if synthetic {
-        format!("synthetic quadratic (k={synth_k})")
-    } else {
-        cfg.variant_name()
+    let workload = match synth_k {
+        Some(k) => format!("synthetic quadratic (k={k})"),
+        None => cfg.variant_name(),
     };
     println!(
         "training {} / {} on {} worker(s), {} epochs ({} master steps), mode={mode}{}",
@@ -191,15 +338,15 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     // The synthetic drivers are artifact-free: skip PJRT engine
     // construction entirely so `dana train --synthetic` works without
     // compiled artifacts (and against the vendored xla stub).
-    let report = if synthetic {
-        match mode.as_str() {
-            "sim" => sim_trainer::run_synthetic(&cfg, synth_k)?,
-            "real" => real_async::run_synthetic(&cfg, synth_k)?,
+    let report = if let Some(k) = synth_k {
+        match mode {
+            "sim" => sim_trainer::run_synthetic(&cfg, k)?,
+            "real" => real_async::run_synthetic(&cfg, k)?,
             other => anyhow::bail!("unknown mode {other:?} (sim|real)"),
         }
     } else {
         let engine = Engine::cpu(&cfg.artifacts_dir)?;
-        match mode.as_str() {
+        match mode {
             "sim" => sim_trainer::run(&cfg, &engine)?,
             "real" => real_async::run(&cfg, &engine)?,
             "ssgd" => ssgd::run(&cfg, &engine)?,
@@ -222,77 +369,124 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
 /// unless `--resume` restores checkpointed membership, in which case
 /// reconnecting workers re-attach to their old slots (lowest first).
 ///
-/// With `--shards S > 1` the server serves **lock-striped**: shards are
-/// the unit of concurrency from the socket down to the optimizer apply,
-/// so concurrent workers' pulls and pushes proceed in parallel.
-/// `--serve-threads T` caps the per-request shard fan-out (default 1 —
-/// connection threads already provide the parallelism); `--serve-threads
-/// 0` forces the legacy global-lock serving path.
-///
-/// With `--shard-range A..B` this process hosts only global shards
-/// `[A, B)` of an S-shard placement (`--shards S` is then the GLOBAL
-/// shard count); start one process per range so the ranges tile `0..S`,
-/// and point workers at the whole group with a comma-separated
-/// `--master` list.  `--standby-of ADDR` instead runs a hot standby:
-/// it tails the primary's retention archives (shared `--checkpoint`
-/// base) and takes the primary's exact range over on failure, one
-/// placement epoch up.
+/// With `--manifest FILE --server NAME` the whole spec comes from the
+/// named `servers[]`/`standbys[]` entry of a cluster manifest instead
+/// of flags — the two spellings normalize into the same [`ServeSpec`],
+/// so `dana cluster` children and hand-flagged servers are one code
+/// path.
 fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
-    let listen = args.str_or("listen", "127.0.0.1:7700");
-    let algorithm: AlgorithmKind = args.str_or("algorithm", "dana-slim").parse()?;
-    // schedule hyperparameters (the server owns the LR schedule; workers
-    // only ever see the per-step eta/gamma/lambda in replies)
-    let workers = args.parse_or::<usize>("workers", 8)?;
-    let epochs = args.parse_or::<f64>("epochs", 10.0)?;
-    let workload: Workload = args.str_or("workload", "c10").parse()?;
-    let synthetic = args.flag("synthetic");
-    let synth_k = args.parse_or::<usize>("k", 256)?;
-    let shards = args.parse_or::<usize>("shards", 1)?.max(1);
-    let shard_range = args.opt_str("shard-range");
-    let placement_epoch = args.parse_or::<u64>("placement-epoch", 0)?;
-    let standby_of = args.opt_str("standby-of");
+    SERVE_TABLE.check(args)?;
+    if let Some(mp) = args.opt_str("manifest") {
+        let name = args.opt_str("server").ok_or_else(|| {
+            anyhow::anyhow!(
+                "--manifest needs --server NAME: which servers[]/standbys[] entry this \
+                 process serves as"
+            )
+        })?;
+        let run_dir = PathBuf::from(args.str_or("run-dir", "."));
+        manifest_excludes(args, &["manifest", "server", "run-dir", "artifacts"])?;
+        let m = ClusterManifest::load(Path::new(&mp))?;
+        m.verify_artifacts()?;
+        // a standby entry normalizes straight to a StandbyConfig (its
+        // placement is learned from the primary, never configured)
+        if m.standby(&name).is_some() {
+            return run_standby(StandbyConfig::from_manifest(&m, &name, &run_dir)?);
+        }
+        let mut spec = ServeSpec::from_manifest(&m, &name, &run_dir)?;
+        spec.artifacts_dir = artifacts_dir(args);
+        return run_serve(spec);
+    }
+    let shard_range = match args.opt_str("shard-range") {
+        Some(spec) => Some(
+            parse_shard_range(&spec)
+                .map_err(|e| anyhow::anyhow!("--shard-range: {e:#}"))?,
+        ),
+        None => None,
+    };
     let standby_poll_ms = args.parse_or::<u64>("standby-poll-ms", 250)?;
     let standby_miss = args.parse_or::<u32>("standby-miss-budget", 4)?;
-    let serve_threads = args.parse_or::<usize>("serve-threads", 1)?;
-    let pipeline_depth = args.parse_or::<usize>("pipeline-depth", 0)?;
+    let standby = args.opt_str("standby-of").map(|primary| StandbyOf {
+        primary,
+        poll_ms: standby_poll_ms,
+        miss_budget: standby_miss,
+    });
+    let spec = ServeSpec {
+        listen: args.str_or("listen", "127.0.0.1:7700"),
+        algorithm: args.str_or("algorithm", "dana-slim").parse()?,
+        workload: args.str_or("workload", "c10").parse()?,
+        synthetic_k: args
+            .flag("synthetic")
+            .then(|| args.parse_or::<usize>("k", 256))
+            .transpose()?,
+        workers: args.parse_or::<usize>("workers", 8)?,
+        epochs: args.parse_or::<f64>("epochs", 10.0)?,
+        seed: args.parse_or::<u64>("seed", 1)?,
+        eta: args.opt_parse::<f32>("eta")?,
+        gamma: args.opt_parse::<f32>("gamma")?,
+        shards: args.parse_or::<usize>("shards", 1)?.max(1),
+        shard_range,
+        placement_epoch: args.parse_or::<u64>("placement-epoch", 0)?,
+        serve_threads: args.parse_or::<usize>("serve-threads", 1)?,
+        pipeline_depth: args.parse_or::<usize>("pipeline-depth", 0)?,
+        leave_policy: args
+            .parse_or::<dana::optim::LeavePolicy>("leave-policy", Default::default())?,
+        checkpoint_path: args.opt_str("checkpoint").map(PathBuf::from),
+        checkpoint_every: args.parse_or::<u64>("checkpoint-every", 0)?,
+        resume: args.opt_str("resume").map(PathBuf::from),
+        status_addr: args.opt_str("status-addr"),
+        retention: dana::net::RetentionPolicy {
+            keep_last: args.parse_or::<usize>("keep-last", 0)?,
+            keep_hourly: args.parse_or::<usize>("keep-hourly", 0)?,
+        },
+        encodings: args.parse_or::<net::EncodingSet>("encodings", net::EncodingSet::ALL)?,
+        metrics_every: args.parse_or::<u64>("metrics-every", 0)?,
+        artifacts_dir: artifacts_dir(args),
+        standby,
+    };
+    run_serve(spec)
+}
+
+/// Start a hot standby and block through watch/takeover/serving.
+fn run_standby(sbcfg: StandbyConfig) -> anyhow::Result<()> {
+    let primary = sbcfg.primary.clone();
+    let mut sb = StandbyServer::start(sbcfg)?;
+    println!(
+        "dana standby: holding {} for primary {primary} — takeover restores the \
+         newest archive at epoch last-seen+1",
+        sb.addr()
+    );
+    if let Some(sa) = sb.status_addr() {
+        println!("dana standby: status endpoint on http://{sa} (/metrics, /status)");
+    }
+    sb.wait();
+    println!("dana serve: standby shut down");
+    Ok(())
+}
+
+/// Serve one parameter-server process from a fully-built [`ServeSpec`].
+fn run_serve(spec: ServeSpec) -> anyhow::Result<()> {
     anyhow::ensure!(
-        pipeline_depth < dana::server::MAX_PULL_WINDOW,
-        "--pipeline-depth {pipeline_depth} exceeds the supported window ({})",
+        spec.pipeline_depth < dana::server::MAX_PULL_WINDOW,
+        "--pipeline-depth {} exceeds the supported window ({})",
+        spec.pipeline_depth,
         dana::server::MAX_PULL_WINDOW - 1
     );
-    let leave_policy =
-        args.parse_or::<dana::optim::LeavePolicy>("leave-policy", Default::default())?;
-    let checkpoint_path = args.opt_str("checkpoint").map(PathBuf::from);
-    let checkpoint_every = args.parse_or::<u64>("checkpoint-every", 0)?;
-    let resume = args.opt_str("resume").map(PathBuf::from);
-    let status_addr = args.opt_str("status-addr");
-    let retention = dana::net::RetentionPolicy {
-        keep_last: args.parse_or::<usize>("keep-last", 0)?,
-        keep_hourly: args.parse_or::<usize>("keep-hourly", 0)?,
-    };
-    let encodings =
-        args.parse_or::<net::EncodingSet>("encodings", net::EncodingSet::ALL)?;
-    let metrics_every = args.parse_or::<u64>("metrics-every", 0)?;
-    let seed = args.parse_or::<u64>("seed", 1)?;
-    let eta = args.opt_parse::<f32>("eta")?;
-    let gamma = args.opt_parse::<f32>("gamma")?;
-    let artifacts = artifacts_dir(args);
-    args.finish()?;
     anyhow::ensure!(
-        checkpoint_every == 0 || checkpoint_path.is_some(),
+        spec.checkpoint_every == 0 || spec.checkpoint_path.is_some(),
         "--checkpoint-every needs --checkpoint PATH"
     );
     anyhow::ensure!(
-        !retention.enabled() || checkpoint_path.is_some(),
+        !spec.retention.enabled() || spec.checkpoint_path.is_some(),
         "--keep-last/--keep-hourly need --checkpoint PATH"
     );
 
-    let mut cfg = TrainConfig::preset(workload, algorithm, workers, epochs);
-    cfg.seed = seed;
-    if let Some(e) = eta {
+    let mut cfg =
+        TrainConfig::preset(spec.workload, spec.algorithm, spec.workers, spec.epochs);
+    cfg.seed = spec.seed;
+    if let Some(e) = spec.eta {
         cfg.schedule.base_eta = e;
     }
-    if let Some(g) = gamma {
+    if let Some(g) = spec.gamma {
         cfg.schedule.gamma = g;
     }
     let schedule = LrSchedule::new(cfg.schedule.clone());
@@ -300,21 +494,21 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     // intra-push shard fan-out (default_threads, inside the lock);
     // otherwise shards serve lock-striped with the per-request fan-out
     // capped at T (connection threads already provide the parallelism).
-    let threads = if serve_threads == 0 {
+    let threads = if spec.serve_threads == 0 {
         dana::util::parallel::default_threads()
     } else {
-        serve_threads
+        spec.serve_threads
     };
 
     // Hot standby: no model init, no master — everything the takeover
     // needs comes from the primary's handshake headers and archives.
-    if let Some(primary) = standby_of {
+    if let Some(sb) = &spec.standby {
         anyhow::ensure!(
-            resume.is_none() && shard_range.is_none(),
+            spec.resume.is_none() && spec.shard_range.is_none(),
             "--standby-of is exclusive with --resume/--shard-range (the standby learns \
              its range from the primary)"
         );
-        let archive_base = checkpoint_path.clone().ok_or_else(|| {
+        let archive_base = spec.checkpoint_path.clone().ok_or_else(|| {
             anyhow::anyhow!(
                 "--standby-of needs --checkpoint PATH: the primary's archive base \
                  (run the primary with --checkpoint PATH --checkpoint-every N --keep-last K \
@@ -322,73 +516,62 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
             )
         })?;
         let opts = ServeOptions {
-            leave_policy,
-            checkpoint_path,
-            checkpoint_every,
-            pipeline_depth,
-            status_addr,
-            retention,
-            encodings,
+            leave_policy: spec.leave_policy,
+            checkpoint_path: spec.checkpoint_path.clone(),
+            checkpoint_every: spec.checkpoint_every,
+            pipeline_depth: spec.pipeline_depth,
+            status_addr: spec.status_addr.clone(),
+            retention: spec.retention,
+            encodings: spec.encodings,
             placement: Default::default(),
         };
-        let sbcfg = dana::cluster::StandbyConfig {
-            listen: listen.clone(),
-            primary: primary.clone(),
+        return run_standby(StandbyConfig {
+            listen: spec.listen.clone(),
+            primary: sb.primary.clone(),
             archive_base,
             schedule,
             threads,
-            striped: serve_threads > 0,
+            striped: spec.serve_threads > 0,
             opts,
-            poll: std::time::Duration::from_millis(standby_poll_ms.max(10)),
-            miss_budget: standby_miss.max(1),
-        };
-        let mut sb = dana::cluster::StandbyServer::start(sbcfg)?;
-        println!(
-            "dana standby: holding {} for primary {primary} — takeover restores the \
-             newest archive at epoch last-seen+1",
-            sb.addr()
-        );
-        if let Some(sa) = sb.status_addr() {
-            println!("dana standby: status endpoint on http://{sa} (/metrics, /status)");
-        }
-        sb.wait();
-        println!("dana serve: standby shut down");
-        return Ok(());
+            poll: Duration::from_millis(sb.poll_ms.max(10)),
+            miss_budget: sb.miss_budget.max(1),
+        });
     }
 
-    let mut theta0 = if synthetic {
-        real_async::synthetic_theta0(synth_k)
-    } else {
-        Engine::cpu(&artifacts)?.init_params(&cfg.variant_name())?
+    let mut theta0 = match spec.synthetic_k {
+        Some(k) => real_async::synthetic_theta0(k),
+        None => Engine::cpu(&spec.artifacts_dir)?.init_params(&cfg.variant_name())?,
     };
     // --shard-range A..B: host only that slice of the (identically
     // seeded) full model; the local backend gets one shard per hosted
     // global shard, so local and global shard boundaries coincide.
     let full_k = theta0.len();
     let mut placement = net::Placement::default();
-    let mut local_shards = shards;
+    let mut local_shards = spec.shards;
     let mut hosted = None;
-    if let Some(spec) = &shard_range {
-        let (a, b) = parse_shard_range(spec)?;
-        let total = shards as u32;
+    if let Some(r) = &spec.shard_range {
+        let total = spec.shards as u32;
         anyhow::ensure!(
-            b <= total,
-            "--shard-range {spec} exceeds --shards {shards} (with --shard-range, \
-             --shards is the GLOBAL shard count of the placement)"
+            r.end <= total,
+            "--shard-range {}..{} exceeds --shards {} (with --shard-range, --shards is \
+             the GLOBAL shard count of the placement)",
+            r.start,
+            r.end,
+            spec.shards
         );
-        let coords = dana::cluster::coord_range(full_k, total, &(a..b))?;
+        let coords = dana::cluster::coord_range(full_k, total, r)?;
         placement = net::Placement {
-            shard_start: a,
+            shard_start: r.start,
             total_shards: total,
-            epoch: placement_epoch,
+            epoch: spec.placement_epoch,
             takeovers: 0,
         };
-        local_shards = (b - a) as usize;
+        local_shards = (r.end - r.start) as usize;
         theta0 = theta0[coords.clone()].to_vec();
         hosted = Some(coords);
     }
-    let striped = serve_threads > 0 && local_shards > 1;
-    let mut master = match &resume {
+    let striped = spec.serve_threads > 0 && local_shards > 1;
+    let mut master = match &spec.resume {
         Some(path) => {
             let mut snap = net::checkpoint::read_snapshot(path)?;
             if let Some(coords) = &hosted {
@@ -404,9 +587,9 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
                 }
             }
             // restore() re-validates; checking here gives a better message
-            snap.validate(algorithm, theta0.len())?;
+            snap.validate(spec.algorithm, theta0.len())?;
             let mut m = make_serving_master(
-                algorithm,
+                spec.algorithm,
                 &snap.theta,
                 schedule,
                 0,
@@ -419,34 +602,41 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
             println!(
                 "resumed {} from {} at master step {step} ({live} live of {slots} slots \
                  awaiting reconnect)",
-                algorithm.name(),
+                spec.algorithm.name(),
                 path.display(),
             );
             m
         }
         // fresh cluster: zero slots, every connect is a join
-        None => {
-            make_serving_master(algorithm, &theta0, schedule, 0, local_shards, threads, striped)
-        }
+        None => make_serving_master(
+            spec.algorithm,
+            &theta0,
+            schedule,
+            0,
+            local_shards,
+            threads,
+            striped,
+        ),
     };
-    master.set_metrics_every(metrics_every);
+    master.set_metrics_every(spec.metrics_every);
     let k = master.param_len();
     let opts = ServeOptions {
-        leave_policy,
-        checkpoint_path,
-        checkpoint_every,
-        pipeline_depth,
-        status_addr,
-        retention,
-        encodings,
+        leave_policy: spec.leave_policy,
+        checkpoint_path: spec.checkpoint_path.clone(),
+        checkpoint_every: spec.checkpoint_every,
+        pipeline_depth: spec.pipeline_depth,
+        status_addr: spec.status_addr.clone(),
+        retention: spec.retention,
+        encodings: spec.encodings,
         placement,
     };
-    let mut srv = NetServer::start_serving(master, &listen, opts)?;
+    let mut srv = NetServer::start_serving(master, &spec.listen, opts)?;
     println!(
-        "dana serve: {} k={k} shards={local_shards} ({}) pipeline-depth={pipeline_depth} on {} — \
+        "dana serve: {} k={k} shards={local_shards} ({}) pipeline-depth={} on {} — \
          join with `dana train --master {}`",
-        algorithm.name(),
+        spec.algorithm.name(),
         if striped { "lock-striped" } else { "global-lock" },
+        spec.pipeline_depth,
         srv.addr(),
         srv.url()
     );
@@ -467,29 +657,31 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Parse `--shard-range A..B` (half-open, A < B).
-fn parse_shard_range(spec: &str) -> anyhow::Result<(u32, u32)> {
-    let (a, b) = spec
-        .split_once("..")
-        .ok_or_else(|| anyhow::anyhow!("--shard-range wants A..B, got {spec:?}"))?;
-    let a: u32 = a
-        .trim()
-        .parse()
-        .map_err(|_| anyhow::anyhow!("--shard-range start {a:?} is not a shard index"))?;
-    let b: u32 = b
-        .trim()
-        .parse()
-        .map_err(|_| anyhow::anyhow!("--shard-range end {b:?} is not a shard index"))?;
-    anyhow::ensure!(a < b, "--shard-range {spec:?} is empty (need A < B)");
-    Ok((a, b))
+/// `dana cluster --manifest cluster.json` — see [`dana::cluster::launch`].
+fn cmd_cluster(args: &mut Args) -> anyhow::Result<()> {
+    CLUSTER_TABLE.check(args)?;
+    let manifest_path = args.opt_str("manifest").ok_or_else(|| {
+        anyhow::anyhow!("--manifest cluster.json is required\n{}", CLUSTER_TABLE.usage())
+    })?;
+    let opts = LaunchOptions {
+        manifest_path: PathBuf::from(manifest_path),
+        run_dir: PathBuf::from(args.str_or("run-dir", ".")),
+        verify_only: args.flag("verify-only"),
+        no_fleet: args.flag("no-fleet"),
+        health_timeout: Duration::from_millis(
+            args.parse_or::<u64>("health-timeout-ms", 30_000)?,
+        ),
+    };
+    dana::cluster::launch::run(&opts)
 }
 
 fn cmd_experiment(args: &mut Args) -> anyhow::Result<()> {
+    EXPERIMENT_TABLE.check(args)?;
     let id = args
         .positional
         .first()
         .cloned()
-        .ok_or_else(|| anyhow::anyhow!("experiment id required\n{USAGE}"))?;
+        .ok_or_else(|| anyhow::anyhow!("experiment id required\n{}", EXPERIMENT_TABLE.usage()))?;
     let opts = ExpOptions {
         quick: !args.flag("full"),
         seeds: args.parse_or::<u64>("seeds", 2)?,
@@ -497,7 +689,6 @@ fn cmd_experiment(args: &mut Args) -> anyhow::Result<()> {
         artifacts_dir: artifacts_dir(args),
         encoding: args.parse_or::<net::Encoding>("encoding", net::Encoding::None)?,
     };
-    args.finish()?;
     let t0 = std::time::Instant::now();
     experiments::run(&id, &opts)?;
     println!(
@@ -509,12 +700,12 @@ fn cmd_experiment(args: &mut Args) -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
+    SIMULATE_TABLE.check(args)?;
     let workers = args.parse_or::<usize>("workers", 8)?;
     let env: Environment = args.str_or("env", "homo").parse()?;
     let bpw = args.parse_or::<usize>("batches-per-worker", 100)?;
     let batch = args.parse_or::<usize>("batch", 128)?;
     let seeds = args.parse_or::<u64>("seeds", 5)?;
-    args.finish()?;
     let pts = dana::sim::speedup::speedup_sweep(env, &[workers], batch, bpw, seeds);
     for p in pts {
         println!(
@@ -529,8 +720,8 @@ fn cmd_simulate(args: &mut Args) -> anyhow::Result<()> {
 }
 
 fn cmd_info(args: &mut Args) -> anyhow::Result<()> {
+    INFO_TABLE.check(args)?;
     let dir = artifacts_dir(args);
-    args.finish()?;
     let engine = Engine::cpu(&dir)?;
     println!("platform: {}", engine.platform());
     println!("artifacts: {}", dir.display());

@@ -166,6 +166,21 @@ pub(crate) fn fetch_theta_once(addr: &str) -> anyhow::Result<(Header, Vec<f32>)>
     }
 }
 
+/// One-shot graceful shutdown: a throwaway control connection that
+/// sends the in-band `Shutdown` frame and waits for the ack.  The
+/// server checkpoints first when configured, so this is how the cluster
+/// supervisor winds a placement down without losing acked pushes.
+pub(crate) fn shutdown_once(addr: &str) -> anyhow::Result<()> {
+    let stats = Arc::new(WireStats::default());
+    let (mut conn, _info) =
+        Conn::open(strip_scheme(addr), Role::Control, false, Encoding::None, stats)?;
+    match conn.roundtrip(&Msg::Shutdown)? {
+        Msg::Ack { .. } => Ok(()),
+        Msg::Error { detail, .. } => anyhow::bail!("shutdown refused: {detail}"),
+        other => anyhow::bail!("unexpected shutdown reply: {other:?}"),
+    }
+}
+
 impl Conn {
     fn open(
         addr: &str,

@@ -71,7 +71,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Server-side policy knobs (everything else lives in the master).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ServeOptions {
     /// Policy for a worker that disconnects without an explicit Leave.
     pub leave_policy: LeavePolicy,
@@ -125,6 +125,44 @@ pub struct Placement {
     /// as a primary; a standby promotes with 1).  Surfaced as the
     /// `dana_takeovers_total` counter.
     pub takeovers: u64,
+}
+
+impl ServeOptions {
+    /// The serving options a manifest's `servers[]` entry normalizes to
+    /// — the same struct the `dana serve` flags build, so golden tests
+    /// can compare the two spellings with `==`.  Checkpoint paths
+    /// resolve against `run_dir` (the committed manifest stays
+    /// portable).
+    pub fn from_manifest(
+        m: &crate::cluster::manifest::ClusterManifest,
+        server: &crate::cluster::manifest::ServerSpec,
+        run_dir: &std::path::Path,
+    ) -> ServeOptions {
+        use crate::cluster::manifest::ClusterManifest;
+        let (checkpoint_path, checkpoint_every, retention) = match &server.checkpoint {
+            Some(ck) => (
+                Some(ClusterManifest::resolve_run_path(run_dir, &ck.path)),
+                ck.every,
+                RetentionPolicy { keep_last: ck.keep_last, keep_hourly: ck.keep_hourly },
+            ),
+            None => (None, 0, RetentionPolicy::default()),
+        };
+        ServeOptions {
+            leave_policy: m.leave_policy,
+            checkpoint_path,
+            checkpoint_every,
+            pipeline_depth: m.pipeline_depth,
+            status_addr: server.status_addr.clone(),
+            retention,
+            encodings: m.encodings,
+            placement: Placement {
+                shard_start: server.shard_range.start,
+                total_shards: m.shards,
+                epoch: server.placement_epoch,
+                takeovers: 0,
+            },
+        }
+    }
 }
 
 /// Connection bookkeeping, under one short mutex (never held across a

@@ -669,10 +669,7 @@ where
                         restarts[worker] += 1;
                         report.worker_restarts += 1;
                         let attempt = restarts[worker];
-                        let backoff_ms = cfg
-                            .restart_backoff_ms
-                            .saturating_mul(1u64 << (attempt - 1).min(6))
-                            .min(5_000);
+                        let backoff_ms = crate::util::backoff_ms(cfg.restart_backoff_ms, attempt);
                         eprintln!(
                             "worker {worker}: {reason}; restart {attempt}/{} after {backoff_ms} ms",
                             cfg.max_restarts

@@ -117,6 +117,75 @@ impl Args {
         }
         Ok(())
     }
+
+    /// Every `--option` the caller provided (options with values and
+    /// bare flags alike) — what a [`FlagTable`] validates against.
+    pub fn provided(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(String::as_str).chain(self.flags.iter().map(String::as_str))
+    }
+}
+
+/// One flag a subcommand accepts: `--name METAVAR` (or a bare boolean
+/// flag when `value` is None) plus the one-line help shown in usage.
+pub struct FlagDef {
+    pub name: &'static str,
+    /// Metavar for the value (`"A..B"`, `"HOST:PORT"`); None = boolean.
+    pub value: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// Declarative flag table for one subcommand: generates the usage block
+/// and rejects unknown options up front with a uniform error style (and
+/// a did-you-mean suggestion), so `serve`/`train`/`cluster` cannot
+/// drift apart in how they parse or how they fail.  Validation runs
+/// BEFORE any accessor: a typo'd flag is named immediately instead of
+/// surfacing as "unknown option" after half the command already parsed.
+pub struct FlagTable {
+    /// Subcommand name (`"serve"`), used in error and usage text.
+    pub cmd: &'static str,
+    /// One-line summary for the usage header.
+    pub summary: &'static str,
+    pub flags: &'static [FlagDef],
+}
+
+impl FlagTable {
+    /// Reject any provided option not in the table.  Call this first,
+    /// then use the typed [`Args`] accessors as usual.
+    pub fn check(&self, args: &Args) -> anyhow::Result<()> {
+        for k in args.provided() {
+            if self.flags.iter().any(|f| f.name == k) {
+                continue;
+            }
+            let suggest = self
+                .flags
+                .iter()
+                .map(|f| f.name)
+                .find(|n| {
+                    let prefix = k.get(..k.len().min(3)).unwrap_or("");
+                    (!prefix.is_empty() && n.starts_with(prefix))
+                        || n.contains(k)
+                        || k.contains(n)
+                })
+                .map(|n| format!(" (did you mean --{n}?)"))
+                .unwrap_or_default();
+            anyhow::bail!("dana {}: unknown option --{k}{suggest}\n{}", self.cmd, self.usage());
+        }
+        Ok(())
+    }
+
+    /// The generated usage block for this subcommand.
+    pub fn usage(&self) -> String {
+        let mut out = format!("usage: dana {} — {}\n", self.cmd, self.summary);
+        for f in self.flags {
+            let head = match f.value {
+                Some(v) => format!("  --{} {v}", f.name),
+                None => format!("  --{}", f.name),
+            };
+            out.push_str(&format!("{head:<34} {}\n", f.help));
+        }
+        out.pop();
+        out
+    }
 }
 
 #[cfg(test)]
@@ -285,6 +354,29 @@ mod tests {
     fn double_dash_stops_parsing() {
         let a = parse("run -- --not-an-option", true);
         assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn flag_table_rejects_unknown_with_suggestion() {
+        const T: FlagTable = FlagTable {
+            cmd: "serve",
+            summary: "host a parameter server",
+            flags: &[
+                FlagDef { name: "listen", value: Some("HOST:PORT"), help: "bind address" },
+                FlagDef { name: "synthetic", value: None, help: "quadratic model" },
+            ],
+        };
+        let a = parse("serve --listen 0.0.0.0:7700 --synthetic", true);
+        T.check(&a).unwrap();
+        // unknown flag: uniform error naming the subcommand + suggestion
+        let b = parse("serve --listne 0.0.0.0:7700", true);
+        let err = T.check(&b).unwrap_err().to_string();
+        assert!(err.contains("dana serve: unknown option --listne"), "got: {err}");
+        assert!(err.contains("did you mean --listen?"), "got: {err}");
+        // usage block lists every flag with its metavar
+        let u = T.usage();
+        assert!(u.contains("--listen HOST:PORT"));
+        assert!(u.contains("--synthetic"));
     }
 
     #[test]

@@ -12,5 +12,15 @@ pub mod csvw;
 pub mod json;
 pub mod parallel;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 pub mod sync;
+
+/// Bounded exponential restart backoff (the PR 6 crash-loop discipline,
+/// shared by the in-process worker supervisor and the cluster process
+/// supervisor): attempt `a >= 1` waits `base << (a-1)`, capped at 5 s.
+pub fn backoff_ms(base_ms: u64, attempt: u32) -> u64 {
+    base_ms
+        .saturating_mul(1u64 << attempt.saturating_sub(1).min(6))
+        .min(5_000)
+}

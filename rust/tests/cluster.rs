@@ -15,6 +15,9 @@
 //!    D=1 push load promotes the standby (one epoch up), training
 //!    completes, no acked push is lost or double-applied, and the
 //!    v⁰ = Σ live vᶦ invariant holds on every surviving range.
+//! 5. Pre-takeover the standby serves read-only θ from the newest
+//!    restored archive, stamped `standby = 1`, while still refusing
+//!    worker joins (read-only never means joinable).
 
 use dana::cluster::{coord_range, slice_snapshot, stitch_snapshots, ClusterMaster};
 use dana::cluster::{StandbyConfig, StandbyServer};
@@ -486,6 +489,95 @@ fn standby_refuses_worker_traffic_before_takeover() {
     let cm = ClusterMaster::connect(&urls, 0, None, Encoding::None, false).unwrap();
     assert_eq!(cm.group_count(), 1);
     drop(cm);
+    sb.stop();
+    s1.stop();
+}
+
+/// Pre-takeover, the standby answers read-only `PullParams`/`GetTheta`
+/// from the newest restored archive, stamped `standby = 1` — a
+/// dashboard or a prefetching worker can read θ off the warm spare
+/// without the standby ever accepting a push.
+#[test]
+fn standby_serves_read_only_theta_before_takeover() {
+    use dana::net::wire::{read_frame, write_frame, Msg, Role};
+    use std::io::{BufReader, BufWriter};
+    use std::net::TcpStream;
+
+    let k = 16;
+    let c = cfg(AlgorithmKind::Asgd, 2, 0.5);
+    let dir = tmpdir("standby-read");
+    let opts = ServeOptions {
+        checkpoint_path: Some(dir.join("server.ckpt")),
+        checkpoint_every: 1,
+        retention: RetentionPolicy { keep_last: 8, keep_hourly: 0 },
+        ..Default::default()
+    };
+    let mut s1 = start_range_server(&c, k, 1, 0, 1, opts.clone());
+    let mut sb = StandbyServer::start(StandbyConfig {
+        listen: "127.0.0.1:0".into(),
+        primary: s1.url(),
+        archive_base: dir.join("server.ckpt"),
+        schedule: LrSchedule::new(c.schedule.clone()),
+        threads: 2,
+        striped: false,
+        opts,
+        poll: Duration::from_millis(25),
+        miss_budget: 1000, // never promote during this test
+    })
+    .unwrap();
+
+    // advance the primary so there are archives to tail
+    let curv = real_async::synthetic_curvature(k);
+    let mut rng = Rng::new(5);
+    let mut rm = RemoteMaster::connect(&s1.url(), 2).unwrap();
+    drive(&mut rm, &curv, &mut rng, 6);
+    let want = newest_archive(&dir.join("server.ckpt"));
+    assert_eq!(want.master_step, 6);
+
+    // raw-wire client against the standby: no handshake needed for the
+    // read-only path, and the reply must carry the newest archive's θ
+    let s = TcpStream::connect(sb.addr()).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut w = BufWriter::new(s);
+    let mut req = |m: &Msg| -> Msg {
+        write_frame(&mut w, m).unwrap();
+        read_frame(&mut r).unwrap()
+    };
+    let t0 = std::time::Instant::now();
+    let header = loop {
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "standby never restored the newest archive"
+        );
+        match req(&Msg::PullParams) {
+            Msg::Params { header, params } if params == want.theta => break header,
+            // an older archive or none yet: the tail catches up
+            Msg::Params { .. } => {}
+            Msg::Error { recoverable, detail } => {
+                assert!(recoverable, "must stay recoverable while waiting: {detail}");
+            }
+            other => panic!("unexpected reply: {other:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    };
+    assert_eq!(header.standby, 1, "read-only θ must be stamped standby = 1");
+    assert_eq!(header.master_step, 6, "the header carries the archive's step");
+    // GetTheta serves the same bits with the same stamp
+    match req(&Msg::GetTheta) {
+        Msg::Theta { header, theta } => {
+            assert_eq!(header.standby, 1);
+            assert_eq!(theta, want.theta);
+        }
+        other => panic!("GetTheta refused: {other:?}"),
+    }
+    // ...and worker traffic is still refused: read-only never means joinable
+    match req(&Msg::Hello { role: Role::Worker, reattach: false, encoding: Encoding::None }) {
+        Msg::Error { recoverable, detail } => {
+            assert!(recoverable && detail.contains("no takeover"), "got: {detail}");
+        }
+        other => panic!("a standby accepted a worker: {other:?}"),
+    }
+    drop(rm);
     sb.stop();
     s1.stop();
 }

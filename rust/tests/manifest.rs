@@ -1,0 +1,409 @@
+//! Cluster-manifest tests (DESIGN.md §14): golden parses of the
+//! committed example manifests into exact expected structs, pinned
+//! rejection text for every structural failure mode, and `==`
+//! equivalence between the manifest spelling and the flag spelling of
+//! the same process config (the `from_manifest` constructors).
+
+use dana::cluster::manifest::{
+    parse_shard_range, ArtifactRef, CheckpointSpec, ClusterManifest, FleetSpec, ModelSpec,
+    RestartPolicy, ServerSpec, StandbySpec,
+};
+use dana::cluster::StandbyConfig;
+use dana::config::{ServeSpec, StandbyOf, TrainConfig, Workload};
+use dana::net::{Encoding, EncodingSet, Placement, RetentionPolicy, ServeOptions};
+use dana::optim::{AlgorithmKind, LeavePolicy};
+use dana::sim::ChurnSchedule;
+use dana::util::json::Json;
+use dana::util::sha256::sha256_hex;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn repo(p: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join(p)
+}
+
+fn load_fixture(name: &str) -> anyhow::Result<ClusterManifest> {
+    ClusterManifest::load(&repo("rust/tests/fixtures/manifest").join(name))
+}
+
+/// Load must fail, and the error must carry the pinned substring (the
+/// fail-closed contract: every rejection names what is wrong).
+fn rejects(name: &str, substring: &str) {
+    let err = match load_fixture(name) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("{name} parsed — it must reject"),
+    };
+    assert!(err.contains(substring), "{name}: error {err:?} lacks {substring:?}");
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dana-manifest-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ------------------------------------------------------------- golden
+
+/// The committed two-server example parses to exactly this struct —
+/// field for field, defaults included.  Any schema drift (a renamed
+/// field, a changed default) breaks this test by construction.
+#[test]
+fn two_server_example_parses_to_expected_struct() {
+    let path = repo("examples/cluster/two_server.json");
+    let m = ClusterManifest::load(&path).unwrap();
+    let ck = |base: &str| {
+        Some(CheckpointSpec {
+            path: PathBuf::from(base),
+            every: 1,
+            keep_last: 8,
+            keep_hourly: 0,
+        })
+    };
+    let expected = ClusterManifest {
+        name: "two-server-takeover".into(),
+        algorithm: AlgorithmKind::DanaZero,
+        shards: 4,
+        model: ModelSpec::Synthetic { k: 4096 },
+        epochs: 10.0,
+        seed: 1,
+        eta: None,
+        gamma: None,
+        pipeline_depth: 1,
+        leave_policy: LeavePolicy::Retire,
+        encodings: EncodingSet::ALL,
+        metrics_every: 0,
+        servers: vec![
+            ServerSpec {
+                name: "r0".into(),
+                listen: "127.0.0.1:7795".into(),
+                status_addr: Some("127.0.0.1:9636".into()),
+                shard_range: 0..2,
+                placement_epoch: 0,
+                serve_threads: 1,
+                checkpoint: ck("r0.bin"),
+                restart: RestartPolicy::default(),
+            },
+            ServerSpec {
+                name: "r1".into(),
+                listen: "127.0.0.1:7796".into(),
+                status_addr: Some("127.0.0.1:9638".into()),
+                shard_range: 2..4,
+                placement_epoch: 0,
+                serve_threads: 1,
+                checkpoint: ck("r1.bin"),
+                restart: RestartPolicy::default(),
+            },
+        ],
+        standbys: vec![StandbySpec {
+            name: "sb0".into(),
+            of: "r0".into(),
+            listen: "127.0.0.1:7797".into(),
+            status_addr: Some("127.0.0.1:9637".into()),
+            poll_ms: 100,
+            miss_budget: 3,
+            restart: RestartPolicy::default(),
+        }],
+        fleet: Some(FleetSpec {
+            workers: 2,
+            epochs: 0.3,
+            mode: "real".into(),
+            encoding: Encoding::None,
+            churn: ChurnSchedule::default(),
+            leave_policy: LeavePolicy::Retire,
+            max_restarts: 0,
+            restart_backoff_ms: 50,
+            metrics_every: 0,
+            seed: 1,
+            restart: RestartPolicy::default(),
+        }),
+        artifacts: vec![],
+        base_dir: repo("examples/cluster"),
+    };
+    assert_eq!(m, expected);
+    assert_eq!(
+        m.master_list(),
+        "tcp://127.0.0.1:7795,tcp://127.0.0.1:7796,tcp://127.0.0.1:7797"
+    );
+    assert_eq!(m.synthetic_k(), Some(4096));
+}
+
+#[test]
+fn churny_fleet_example_parses() {
+    let m = ClusterManifest::load(&repo("examples/cluster/churny_fleet.json")).unwrap();
+    assert_eq!(m.algorithm, AlgorithmKind::Dana);
+    assert_eq!(m.leave_policy, LeavePolicy::Fold);
+    assert_eq!(m.servers[0].serve_threads, 2);
+    assert_eq!(m.servers[0].restart, RestartPolicy { max: 2, backoff_ms: 200 });
+    let f = m.fleet.as_ref().unwrap();
+    assert_eq!(f.workers, 4);
+    assert_eq!(f.churn.events.len(), 2);
+    assert_eq!(f.encoding, Encoding::F16);
+    // the fleet inherits the manifest-wide leave policy
+    assert_eq!(f.leave_policy, LeavePolicy::Fold);
+}
+
+// ------------------------------------------ from_manifest equivalence
+
+/// `ServeOptions::from_manifest` for a `servers[]` entry equals the
+/// hand-built options the equivalent `dana serve` flags produce.
+#[test]
+fn serve_options_from_manifest_match_flag_spelling() {
+    let m = ClusterManifest::load(&repo("examples/cluster/two_server.json")).unwrap();
+    let run = Path::new("/run/dana");
+    let got = ServeOptions::from_manifest(&m, m.server("r0").unwrap(), run);
+    let want = ServeOptions {
+        leave_policy: LeavePolicy::Retire,
+        checkpoint_path: Some(PathBuf::from("/run/dana/r0.bin")),
+        checkpoint_every: 1,
+        pipeline_depth: 1,
+        status_addr: Some("127.0.0.1:9636".into()),
+        retention: RetentionPolicy { keep_last: 8, keep_hourly: 0 },
+        encodings: EncodingSet::ALL,
+        placement: Placement { shard_start: 0, total_shards: 4, epoch: 0, takeovers: 0 },
+    };
+    assert_eq!(got, want);
+    // the second range starts where the first ends
+    let r1 = ServeOptions::from_manifest(&m, m.server("r1").unwrap(), run);
+    assert_eq!(r1.placement.shard_start, 2);
+    assert_eq!(r1.checkpoint_path, Some(PathBuf::from("/run/dana/r1.bin")));
+}
+
+#[test]
+fn serve_spec_from_manifest_matches_flag_spelling() {
+    let m = ClusterManifest::load(&repo("examples/cluster/two_server.json")).unwrap();
+    let run = Path::new("/run/dana");
+    let got = ServeSpec::from_manifest(&m, "r0", run).unwrap();
+    let want = ServeSpec {
+        listen: "127.0.0.1:7795".into(),
+        algorithm: AlgorithmKind::DanaZero,
+        workload: Workload::C10, // schedule donor for synthetic models
+        synthetic_k: Some(4096),
+        workers: 2,
+        epochs: 10.0,
+        seed: 1,
+        eta: None,
+        gamma: None,
+        shards: 4,
+        shard_range: Some(0..2),
+        placement_epoch: 0,
+        serve_threads: 1,
+        pipeline_depth: 1,
+        leave_policy: LeavePolicy::Retire,
+        checkpoint_path: Some(PathBuf::from("/run/dana/r0.bin")),
+        checkpoint_every: 1,
+        resume: None,
+        status_addr: Some("127.0.0.1:9636".into()),
+        retention: RetentionPolicy { keep_last: 8, keep_hourly: 0 },
+        encodings: EncodingSet::ALL,
+        metrics_every: 0,
+        artifacts_dir: got.artifacts_dir.clone(),
+        standby: None,
+    };
+    assert_eq!(got, want);
+    // a standby name yields the standby spelling: the primary's archive
+    // base and retention, the standby's own listener, and `standby` set
+    let sb = ServeSpec::from_manifest(&m, "sb0", run).unwrap();
+    assert_eq!(sb.listen, "127.0.0.1:7797");
+    assert_eq!(sb.checkpoint_path, Some(PathBuf::from("/run/dana/r0.bin")));
+    assert_eq!(sb.retention, RetentionPolicy { keep_last: 8, keep_hourly: 0 });
+    assert_eq!(
+        sb.standby,
+        Some(StandbyOf { primary: "tcp://127.0.0.1:7795".into(), poll_ms: 100, miss_budget: 3 })
+    );
+    // unknown names list what exists
+    let err = format!("{:#}", ServeSpec::from_manifest(&m, "nope", run).unwrap_err());
+    assert!(err.contains("no server or standby named \"nope\""), "got: {err}");
+    assert!(err.contains("r0") && err.contains("sb0"), "got: {err}");
+}
+
+#[test]
+fn train_config_from_manifest_matches_flag_spelling() {
+    let m = ClusterManifest::load(&repo("examples/cluster/two_server.json")).unwrap();
+    let cfg = TrainConfig::from_manifest(&m).unwrap();
+    // the flag spelling the CI smoke used: --algorithm dana-zero
+    // --workers 2 --epochs 0.3 --pipeline-depth 1 --master <list>
+    let mut want = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaZero, 2, 10.0);
+    want.epochs = 0.3; // fleet run length; epochs=10 stays the schedule
+    want.pipeline_depth = 1;
+    want.master_addr = Some(m.master_list());
+    assert_eq!(cfg, want);
+    assert_eq!(cfg.total_master_steps(), 30);
+}
+
+#[test]
+fn standby_config_from_manifest_pairs_with_primary() {
+    let m = ClusterManifest::load(&repo("examples/cluster/two_server.json")).unwrap();
+    let run = Path::new("/run/dana");
+    let sb = StandbyConfig::from_manifest(&m, "sb0", run).unwrap();
+    assert_eq!(sb.listen, "127.0.0.1:7797");
+    assert_eq!(sb.primary, "tcp://127.0.0.1:7795");
+    assert_eq!(sb.archive_base, PathBuf::from("/run/dana/r0.bin"));
+    assert_eq!(sb.poll, Duration::from_millis(100));
+    assert_eq!(sb.miss_budget, 3);
+    // the status endpoint is the standby's own, not the primary's
+    assert_eq!(sb.opts.status_addr, Some("127.0.0.1:9637".into()));
+    // the placement is learned from the primary at takeover, never
+    // configured up front
+    assert_eq!(sb.opts.placement, Placement::default());
+    let err =
+        format!("{:#}", StandbyConfig::from_manifest(&m, "r0", run).unwrap_err());
+    assert!(err.contains("no standby named \"r0\""), "got: {err}");
+}
+
+// --------------------------------------------------------- rejections
+
+#[test]
+fn overlapping_ranges_reject() {
+    rejects("overlap.json", "overlap");
+    rejects("overlap.json", "cluster manifest");
+}
+
+#[test]
+fn gappy_ranges_reject() {
+    rejects("gap.json", "leave a gap");
+}
+
+#[test]
+fn unknown_top_level_field_rejects_by_name() {
+    rejects("unknown_field.json", "unknown field \"pipline_depth\" in top level");
+}
+
+#[test]
+fn malformed_sha256_rejects() {
+    rejects("bad_sha256.json", "sha256 must be 64 hex characters");
+}
+
+#[test]
+fn duplicate_listen_address_rejects() {
+    rejects("duplicate_addr.json", "duplicate listen address \"127.0.0.1:7901\"");
+}
+
+#[test]
+fn standby_naming_unknown_primary_rejects() {
+    rejects("standby_of_unknown.json", "standby \"sb\" names unknown server \"ghost\"");
+}
+
+#[test]
+fn standby_of_unarchived_primary_rejects() {
+    rejects("standby_unarchived.json", "keeps no retention archives to tail");
+}
+
+/// The remaining structural failure modes, built from the valid example
+/// by mutation so the fixtures stay minimal.
+#[test]
+fn mutated_manifests_reject_with_pinned_text() {
+    let base = std::fs::read_to_string(repo("examples/cluster/two_server.json")).unwrap();
+    let dir = tmpdir("mutations");
+    let check = |tag: &str, from: &str, to: &str, substring: &str| {
+        let mutated = base.replacen(from, to, 1);
+        assert_ne!(mutated, base, "{tag}: mutation {from:?} did not apply");
+        let p = dir.join(format!("{tag}.json"));
+        std::fs::write(&p, mutated).unwrap();
+        let err = match ClusterManifest::load(&p) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("{tag} parsed — it must reject"),
+        };
+        assert!(err.contains(substring), "{tag}: error {err:?} lacks {substring:?}");
+        // load() prefixes the failing file's path
+        assert!(err.contains(&format!("{tag}.json")), "{tag}: error {err:?} lacks the path");
+    };
+    // coverage must reach the global shard count
+    check("short", "\"shards\": 4", "\"shards\": 5", "covers shards only up to 4 of 5");
+    // an empty range is named before tiling is even considered
+    check("empty", "\"0..2\"", "\"2..2\"", "is empty (need A < B)");
+    // unknown fields reject in nested sections too, naming the section
+    check(
+        "nested",
+        "\"poll_ms\": 100",
+        "\"pollms\": 100",
+        "unknown field \"pollms\" in standbys[0]",
+    );
+    // unknown enum values surface the inner FromStr error with context
+    check("algo", "\"dana-zero\"", "\"dana-9000\"", "algorithm");
+    // duplicate process names reject even with distinct addresses
+    check("dupname", "\"name\": \"r1\"", "\"name\": \"r0\"", "duplicate process name \"r0\"");
+    // pipeline depth must fit the pull-window budget
+    check(
+        "window",
+        "\"pipeline_depth\": 1",
+        "\"pipeline_depth\": 33",
+        "pipeline_depth 33 exceeds the supported window (32)",
+    );
+    // fleet mode is a closed enum
+    check("mode", "\"mode\": \"real\"", "\"mode\": \"fast\"", "fleet.mode must be \"real\" or \"sim\"");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shard_range_grammar_is_shared() {
+    assert_eq!(parse_shard_range("0..2").unwrap(), 0..2);
+    assert_eq!(parse_shard_range(" 3 .. 7 ").unwrap(), 3..7);
+    let err = parse_shard_range("3").unwrap_err().to_string();
+    assert!(err.contains("wants A..B"), "got: {err}");
+    let err = parse_shard_range("5..5").unwrap_err().to_string();
+    assert!(err.contains("is empty (need A < B)"), "got: {err}");
+}
+
+// ---------------------------------------------------------- artifacts
+
+/// Checksum verification fails closed — absent file, mismatched digest
+/// — and passes byte-identical content; `--verify-only` is exactly this
+/// plus the structural parse.
+#[test]
+fn artifact_checksums_verify_fail_closed() {
+    let dir = tmpdir("artifacts");
+    let body = b"not actually weights";
+    std::fs::write(dir.join("weights.bin"), body).unwrap();
+    let manifest = |digest: &str, file: &str| {
+        format!(
+            r#"{{
+              "algorithm": "dana-zero",
+              "shards": 1,
+              "model": {{"synthetic": true, "k": 64}},
+              "servers": [{{"name": "a", "listen": "127.0.0.1:7901", "shard_range": "0..1"}}],
+              "artifacts": [{{"path": "{file}", "sha256": "{digest}"}}]
+            }}"#
+        )
+    };
+    // pinned digest matches the file: verification counts it
+    let good = manifest(&sha256_hex(body), "weights.bin");
+    std::fs::write(dir.join("good.json"), good).unwrap();
+    let m = ClusterManifest::load(&dir.join("good.json")).unwrap();
+    assert_eq!(m.verify_artifacts().unwrap(), 1);
+    // artifact paths resolve against the manifest's own directory
+    assert_eq!(m.artifacts[0], ArtifactRef {
+        path: PathBuf::from("weights.bin"),
+        sha256: sha256_hex(body),
+    });
+
+    // wrong digest: rejected, naming both digests
+    let bad = manifest(&"0".repeat(64), "weights.bin");
+    std::fs::write(dir.join("bad.json"), bad).unwrap();
+    let m = ClusterManifest::load(&dir.join("bad.json")).unwrap();
+    let err = format!("{:#}", m.verify_artifacts().unwrap_err());
+    assert!(err.contains("sha256 mismatch for \"weights.bin\""), "got: {err}");
+    assert!(err.contains(&sha256_hex(body)), "got: {err}");
+
+    // absent file: rejected, naming the artifact
+    let gone = manifest(&"0".repeat(64), "missing.bin");
+    std::fs::write(dir.join("gone.json"), gone).unwrap();
+    let m = ClusterManifest::load(&dir.join("gone.json")).unwrap();
+    let err = format!("{:#}", m.verify_artifacts().unwrap_err());
+    assert!(err.contains("missing.bin"), "got: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------------------- strict overrides
+
+/// Satellite: `TrainConfig::apply_json` is fail-closed from a manifest
+/// context too — the `--config` path and the manifest share the
+/// rejection discipline.
+#[test]
+fn config_overrides_share_the_fail_closed_discipline() {
+    let mut cfg = TrainConfig::preset(Workload::C10, AlgorithmKind::DanaSlim, 8, 10.0);
+    let doc = Json::parse(r#"{"pipline_depth": 2}"#).unwrap();
+    let err = cfg.apply_json(&doc).unwrap_err().to_string();
+    assert!(err.contains("unknown key \"pipline_depth\""), "got: {err}");
+    assert_eq!(cfg.pipeline_depth, 0, "a rejected document must not half-apply");
+}
