@@ -23,11 +23,13 @@
 //!
 //! Run: cargo bench --bench server [-- <filter>]
 
+use dana::math::{self, KernelBackend};
 use dana::optim::{make_algorithm, AlgorithmKind, LeavePolicy, LrSchedule, ScheduleConfig};
 use dana::server::{
     make_serving_master, Master, ParameterServer, ServingMaster, ShardedParameterServer,
 };
 use dana::util::bench::{BenchSuite, CaseResult, NoCaseMatched};
+use dana::util::parallel::{self, WorkerPool};
 use dana::util::rng::Rng;
 
 const K: usize = 101_386;
@@ -350,6 +352,149 @@ fn main() {
                 },
             );
         }
+    }
+
+    // Kernel microbenches (PR 10): each dispatched hot kernel under the
+    // scalar reference and the widest SIMD backend this host can run, at
+    // k ∈ {1e4, 1e5, 1e6}.  The scalar-vs-SIMD ratio per row is the
+    // dispatch layer's whole payoff; the committed rows in
+    // BENCH_serve.json gate regressions in CI.  On a host whose widest
+    // backend IS scalar (no AVX2/NEON), only the scalar rows appear.
+    {
+        let widest = *math::available_backends().last().unwrap();
+        let mut backends = vec![KernelBackend::Scalar];
+        if widest != KernelBackend::Scalar {
+            backends.push(widest);
+        }
+        for &k in &[10_000usize, 100_000, 1_000_000] {
+            let label_k = match k {
+                10_000 => "10k",
+                100_000 => "100k",
+                _ => "1m",
+            };
+            let mut rng = Rng::new(7);
+            let g: Vec<f32> = (0..k).map(|_| 0.01 * rng.normal() as f32).collect();
+            let sent: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            let mut theta: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+            let mut vel = vec![0.0f32; k];
+            let mut vsum = vec![0.0f32; k];
+            let mut hat = vec![0.0f32; k];
+            let mut halves: Vec<u8> = Vec::new();
+            math::f16_encode_into(&mut halves, &theta); // decode-row fixture
+            for &backend in &backends {
+                let row = |name: &str| format!("kernels/{name}/k={label_k}/{backend}");
+                math::with_backend(backend, || {
+                    b.bench_with_bytes(&row("axpy"), Some((k * 4 * 3) as u64), || {
+                        math::axpy(&mut theta, -1e-6, &g);
+                        std::hint::black_box(&theta);
+                    });
+                    b.bench_with_bytes(&row("momentum_step"), Some((k * 4 * 5) as u64), || {
+                        math::momentum_step(&mut theta, &mut vel, &g, 0.9, 1e-4);
+                        std::hint::black_box(&theta);
+                    });
+                    b.bench_with_bytes(
+                        &row("dana_fused_update"),
+                        Some((k * 4 * 7) as u64),
+                        || {
+                            math::dana_fused_update(
+                                &mut theta, &mut vel, &mut vsum, &g, 0.9, 1e-4,
+                            );
+                            std::hint::black_box(&theta);
+                        },
+                    );
+                    b.bench_with_bytes(
+                        &row("dc_dana_fused_update"),
+                        Some((k * 4 * 9) as u64),
+                        || {
+                            math::dc_dana_fused_update(
+                                &mut theta, &mut vel, &mut vsum, &g, &sent, 0.9, 1e-4, 0.1,
+                            );
+                            std::hint::black_box(&theta);
+                        },
+                    );
+                    b.bench_with_bytes(&row("lookahead"), Some((k * 4 * 3) as u64), || {
+                        math::lookahead(&mut hat, &theta, &vsum, 0.9, 1e-4);
+                        std::hint::black_box(&hat);
+                    });
+                    b.bench_with_bytes(&row("dc_adjust"), Some((k * 4 * 4) as u64), || {
+                        let mut gg = std::hint::black_box(&g).clone();
+                        math::dc_adjust(&mut gg, &theta, &sent, 0.1);
+                        std::hint::black_box(&gg);
+                    });
+                    b.bench_with_bytes(
+                        &row("slim_worker_update_inplace"),
+                        Some((k * 4 * 4) as u64),
+                        || {
+                            let mut gg = std::hint::black_box(&g).clone();
+                            math::slim_worker_update_inplace(&mut vel, &mut gg, 0.9);
+                            std::hint::black_box(&gg);
+                        },
+                    );
+                    b.bench_with_bytes(&row("dot"), Some((k * 4 * 2) as u64), || {
+                        std::hint::black_box(math::dot(&theta, &g));
+                    });
+                    b.bench_with_bytes(&row("sub_norm_sq"), Some((k * 4 * 2) as u64), || {
+                        std::hint::black_box(math::sub_norm_sq(&theta, &sent));
+                    });
+                    b.bench_with_bytes(&row("f16_encode"), Some((k * 6) as u64), || {
+                        let mut out = Vec::with_capacity(2 * k);
+                        math::f16_encode_into(&mut out, &theta);
+                        std::hint::black_box(&out);
+                    });
+                    b.bench_with_bytes(&row("f16_decode"), Some((k * 6) as u64), || {
+                        let mut out = Vec::with_capacity(k);
+                        math::f16_decode_into(&mut out, &halves);
+                        std::hint::black_box(&out);
+                    });
+                    b.bench_with_bytes(&row("bf16_encode"), Some((k * 6) as u64), || {
+                        let mut out = Vec::with_capacity(2 * k);
+                        math::bf16_encode_into(&mut out, &theta);
+                        std::hint::black_box(&out);
+                    });
+                    b.bench_with_bytes(&row("bf16_decode"), Some((k * 6) as u64), || {
+                        let mut out = Vec::with_capacity(k);
+                        math::bf16_decode_into(&mut out, &halves);
+                        std::hint::black_box(&out);
+                    });
+                });
+            }
+        }
+    }
+
+    // Apply fan-out duel (PR 10): the same chunked elementwise apply at
+    // k=1e6, fanned out by spawn-per-call scoped threads vs the
+    // persistent parked `WorkerPool` — the pooled row should shed the
+    // per-apply thread spawn/teardown cost while the chunk boundaries
+    // (and therefore results) are identical.
+    {
+        let ka = 1_048_576usize;
+        let threads = parallel::default_threads().clamp(2, 8);
+        let mut rng = Rng::new(9);
+        let g: Vec<f32> = (0..ka).map(|_| 0.01 * rng.normal() as f32).collect();
+        let mut theta: Vec<f32> = (0..ka).map(|_| rng.normal() as f32).collect();
+        let chunk = ka.div_ceil(threads);
+        let body = |i: usize, c: &mut [f32]| {
+            let off = i * chunk;
+            math::axpy(c, -1e-6, &g[off..off + c.len()]);
+        };
+        let bytes = Some((ka * 4 * 3) as u64);
+        b.bench_with_bytes(
+            &format!("concurrent/apply_pool/scoped/T={threads}"),
+            bytes,
+            || {
+                parallel::par_chunks_mut(&mut theta, threads, &body);
+                std::hint::black_box(&theta);
+            },
+        );
+        let pool = WorkerPool::new(threads);
+        b.bench_with_bytes(
+            &format!("concurrent/apply_pool/pooled/T={threads}"),
+            bytes,
+            || {
+                pool.par_chunks_mut(&mut theta, &body);
+                std::hint::black_box(&theta);
+            },
+        );
     }
 
     let serve_written = b.finish_json("BENCH_serve.json");

@@ -84,6 +84,9 @@ fn install_signal_handlers() {
     }
     const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
+    // SAFETY: `signal(2)` with a valid signal number and an
+    // async-signal-safe handler (a single atomic store) is sound; the
+    // returned previous handler is deliberately discarded.
     unsafe {
         signal(SIGINT, on_signal as usize);
         signal(SIGTERM, on_signal as usize);

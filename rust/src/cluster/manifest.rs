@@ -151,6 +151,9 @@ pub struct ClusterManifest {
     pub leave_policy: LeavePolicy,
     /// Payload encodings every server advertises.
     pub encodings: EncodingSet,
+    /// Math kernel backend every process dispatches to (`auto` = widest
+    /// SIMD the host supports; pinned backends fail closed at launch).
+    pub kernels: crate::math::KernelChoice,
     pub metrics_every: u64,
     pub servers: Vec<ServerSpec>,
     pub standbys: Vec<StandbySpec>,
@@ -317,6 +320,7 @@ impl ClusterManifest {
             "pipeline_depth",
             "leave_policy",
             "encodings",
+            "kernels",
             "metrics_every",
             "servers",
             "standbys",
@@ -490,6 +494,7 @@ impl ClusterManifest {
             pipeline_depth,
             leave_policy,
             encodings: top.parse_or("encodings", EncodingSet::ALL)?,
+            kernels: top.parse_or("kernels", Default::default())?,
             metrics_every: top.u64_or("metrics_every", 0)?,
             servers,
             standbys,

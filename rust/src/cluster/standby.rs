@@ -224,6 +224,7 @@ impl StatusSource for StandbySource {
             bytes_tx: 0,
             bytes_rx: 0,
             bytes_per_second: 0.0,
+            kernels: crate::math::active_kernels().name(),
             gap: AtomicHistogram::new(GAP_BOUNDS).snapshot(),
             lag: AtomicHistogram::new(LAG_BOUNDS).snapshot(),
             shard_gates: Vec::new(),

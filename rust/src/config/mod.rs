@@ -150,6 +150,11 @@ pub struct TrainConfig {
     /// transform push-side so compression runs can be simulated without
     /// a server.
     pub encoding: crate::net::Encoding,
+    /// Math kernel backend (`--kernels`, JSON `"kernels"`): `auto`
+    /// detects the widest SIMD available; a pinned backend fails the run
+    /// closed when the host cannot execute it.  Every backend is
+    /// bit-for-bit identical, so this is a pure performance switch.
+    pub kernels: crate::math::KernelChoice,
 }
 
 impl TrainConfig {
@@ -219,6 +224,7 @@ impl TrainConfig {
             max_restarts: 0,
             restart_backoff_ms: 50,
             encoding: crate::net::Encoding::None,
+            kernels: crate::math::KernelChoice::Auto,
         }
     }
 
@@ -285,6 +291,7 @@ impl TrainConfig {
         "max_restarts",
         "restart_backoff_ms",
         "encoding",
+        "kernels",
     ];
 
     /// Apply overrides from a parsed JSON object (keys are optional;
@@ -392,6 +399,12 @@ impl TrainConfig {
                 .ok_or_else(|| anyhow::anyhow!("encoding must be a string"))?
                 .parse()?;
         }
+        if let Some(v) = j.get("kernels") {
+            self.kernels = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("kernels must be a string"))?
+                .parse()?;
+        }
         Ok(())
     }
 
@@ -433,6 +446,7 @@ impl TrainConfig {
         }
         cfg.pipeline_depth = m.pipeline_depth;
         cfg.leave_policy = m.leave_policy;
+        cfg.kernels = m.kernels;
         cfg.master_addr = Some(m.master_list());
         if let Some(f) = fleet {
             cfg.epochs = f.epochs;

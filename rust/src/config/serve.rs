@@ -10,6 +10,7 @@
 
 use crate::cluster::manifest::ClusterManifest;
 use crate::config::Workload;
+use crate::math::KernelChoice;
 use crate::net::{EncodingSet, RetentionPolicy};
 use crate::optim::{AlgorithmKind, LeavePolicy};
 use std::ops::Range;
@@ -53,6 +54,10 @@ pub struct ServeSpec {
     pub status_addr: Option<String>,
     pub retention: RetentionPolicy,
     pub encodings: EncodingSet,
+    /// Math kernel backend (`--kernels`, manifest `"kernels"`): `auto`
+    /// picks the widest SIMD the host supports; pinning an unavailable
+    /// backend fails the launch closed.
+    pub kernels: KernelChoice,
     pub metrics_every: u64,
     pub artifacts_dir: PathBuf,
     /// `Some` = this process is a hot standby, not a primary.
@@ -97,6 +102,7 @@ impl ServeSpec {
             status_addr,
             retention: RetentionPolicy::default(),
             encodings: m.encodings,
+            kernels: m.kernels,
             metrics_every: m.metrics_every,
             artifacts_dir: crate::config::default_artifacts_dir(),
             standby: None,

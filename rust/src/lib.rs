@@ -22,6 +22,13 @@
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for measured reproductions.
 
+// Every `unsafe` block must say why it is sound — the SIMD kernel
+// dispatch ([`math::simd`]) and the worker-pool fan-out
+// ([`util::parallel`]) are the only users, and both live or die by
+// their stated invariants.  CI runs clippy with `-D warnings`, so this
+// warn is a deny in practice.
+#![warn(clippy::undocumented_unsafe_blocks)]
+
 pub mod cluster;
 pub mod config;
 pub mod data;

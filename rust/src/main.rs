@@ -94,6 +94,7 @@ const TRAIN_TABLE: FlagTable = FlagTable {
         flag!("max-restarts", "R", "crash-loop budget per worker thread"),
         flag!("restart-backoff-ms", "MS", "base worker restart backoff"),
         flag!("encoding", "E", "none|f16|bf16|topk:K gradient payload encoding"),
+        flag!("kernels", "B", "auto|scalar|sse2|avx2|neon math kernel backend"),
         flag!("artifacts", "DIR", "AOT artifact directory"),
     ],
 };
@@ -131,6 +132,7 @@ const SERVE_TABLE: FlagTable = FlagTable {
         flag!("keep-hourly", "H", "retention: plus newest of H distinct hours"),
         flag!("status-addr", "HOST:PORT", "HTTP /metrics + /status listener"),
         flag!("encodings", "LIST", "advertised payload encodings (default all)"),
+        flag!("kernels", "B", "auto|scalar|sse2|avx2|neon math kernel backend"),
         flag!("metrics-every", "K", "record gap/lag every K master steps"),
         flag!("artifacts", "DIR", "AOT artifact directory"),
     ],
@@ -295,6 +297,9 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     if let Some(e) = args.opt_parse::<net::Encoding>("encoding")? {
         cfg.encoding = e;
     }
+    if let Some(kb) = args.opt_parse::<dana::math::KernelChoice>("kernels")? {
+        cfg.kernels = kb;
+    }
     let synth_k = args.flag("synthetic").then(|| args.parse_or::<usize>("k", 256)).transpose()?;
     let mode = args.str_or("mode", "sim");
     run_train(cfg, synth_k, &mode)
@@ -303,6 +308,11 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
 /// Run one training experiment from a fully-built config (flags,
 /// `--config` JSON, or a cluster manifest — all normalized upstream).
 fn run_train(cfg: TrainConfig, synth_k: Option<usize>, mode: &str) -> anyhow::Result<()> {
+    // Pin the math kernel backend first — every driver below dispatches
+    // through it, and a pinned-but-unavailable backend must fail the run
+    // before any state exists.
+    let backend = dana::math::set_kernels(cfg.kernels)?;
+    println!("math kernels: {backend} (requested {})", cfg.kernels);
     if cfg.pipeline_depth > 0 && matches!(mode, "ssgd" | "baseline") {
         anyhow::bail!("--pipeline-depth applies only to --mode sim|real (got --mode {mode})");
     }
@@ -439,6 +449,7 @@ fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
             keep_hourly: args.parse_or::<usize>("keep-hourly", 0)?,
         },
         encodings: args.parse_or::<net::EncodingSet>("encodings", net::EncodingSet::ALL)?,
+        kernels: args.parse_or::<dana::math::KernelChoice>("kernels", Default::default())?,
         metrics_every: args.parse_or::<u64>("metrics-every", 0)?,
         artifacts_dir: artifacts_dir(args),
         standby,
@@ -465,6 +476,10 @@ fn run_standby(sbcfg: StandbyConfig) -> anyhow::Result<()> {
 
 /// Serve one parameter-server process from a fully-built [`ServeSpec`].
 fn run_serve(spec: ServeSpec) -> anyhow::Result<()> {
+    // Kernel backend first: a pinned-but-unavailable backend must refuse
+    // to serve before any listener or state exists (fail-closed launch).
+    let kernel_backend = dana::math::set_kernels(spec.kernels)?;
+    println!("math kernels: {kernel_backend} (requested {})", spec.kernels);
     anyhow::ensure!(
         spec.pipeline_depth < dana::server::MAX_PULL_WINDOW,
         "--pipeline-depth {} exceeds the supported window ({})",

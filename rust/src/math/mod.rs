@@ -1,97 +1,281 @@
-//! Flat f32 vector kernels — the L3 request-path hot loops.
+//! Flat f32 vector kernels — the L3 request-path hot loops, behind a
+//! runtime-dispatched backend.
 //!
 //! Every master-side update rule in `optim/` is a composition of these
-//! single-pass fused loops over `f32[k]` state.  They are written as
-//! straight slice iterations (bounds-check-free via `zip`) so LLVM
-//! auto-vectorizes them; the perf pass (EXPERIMENTS.md §Perf) measures them
-//! against the memory-bandwidth roofline, and `benches/optimizer.rs` tracks
-//! regressions.  The fused DANA step mirrors the L1 Pallas kernel
-//! `python/compile/kernels/update.py` one-to-one.
+//! single-pass fused loops over `f32[k]`.  The module is split three ways
+//! (DESIGN.md §15):
+//!
+//! * [`scalar`] — the portable reference implementation.  Defines the
+//!   semantics; every other backend must match it **bit-for-bit**.
+//! * [`simd`] — explicit AVX2/SSE2 (x86_64) and NEON (aarch64) kernels,
+//!   written without FMA or re-association so each lane computes exactly
+//!   the scalar expression.  Reductions share one fixed 8-lane
+//!   strided-accumulation shape with scalar, so `dot`/`norm2_sq`/
+//!   `sub_norm_sq` are deterministic across backends too.
+//! * this file — the [`KernelBackend`] dispatch: detected once
+//!   (`is_x86_feature_detected!`), selectable end-to-end (`--kernels
+//!   auto|scalar|sse2|avx2|neon`, JSON `"kernels"`, manifest `kernels`,
+//!   `DANA_KERNELS` env) and observable (`/status` + `/metrics` report
+//!   [`active_kernels`]).
+//!
+//! The bit-for-bit contract means `--kernels scalar` is a pure
+//! performance switch: goldens, equivalence suites and wire tests pass
+//! identically under every backend (`rust/tests/kernels.rs` enforces
+//! this exhaustively, including NaN payloads, signed zeros, infinities
+//! and subnormals at every remainder length).  The fused DANA step
+//! mirrors the L1 Pallas kernel `python/compile/kernels/update.py`
+//! one-to-one; `benches/server.rs` (`kernels/` group) tracks the
+//! scalar-vs-SIMD ratio.
+
+pub mod scalar;
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+pub mod simd;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Fixed stride of every reduction (re-exported from [`scalar`]): 8
+/// independent f64 partials, a sequential tail, a left-to-right fold.
+pub use scalar::REDUCE_LANES;
+
+// ---------------------------------------------------------- dispatch
+
+/// One concrete kernel implementation set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum KernelBackend {
+    /// Portable scalar reference (always available).
+    Scalar = 1,
+    /// 4-lane SSE2 (x86_64 baseline).
+    Sse2 = 2,
+    /// 8-lane AVX2 (x86_64, runtime-detected).
+    Avx2 = 3,
+    /// 4-lane NEON (aarch64 baseline).
+    Neon = 4,
+}
+
+impl KernelBackend {
+    fn from_u8(v: u8) -> Option<KernelBackend> {
+        match v {
+            1 => Some(KernelBackend::Scalar),
+            2 => Some(KernelBackend::Sse2),
+            3 => Some(KernelBackend::Avx2),
+            4 => Some(KernelBackend::Neon),
+            _ => None,
+        }
+    }
+
+    /// Stable lower-case name (flag value, `/status` field, metric label).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Sse2 => "sse2",
+            KernelBackend::Avx2 => "avx2",
+            KernelBackend::Neon => "neon",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What `--kernels` / `"kernels"` / `DANA_KERNELS` accept: `auto`
+/// (detect the widest available backend) or one pinned backend, which
+/// **fails closed** at startup when the host cannot run it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    #[default]
+    Auto,
+    Fixed(KernelBackend),
+}
+
+impl std::fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelChoice::Auto => f.write_str("auto"),
+            KernelChoice::Fixed(b) => f.write_str(b.name()),
+        }
+    }
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelChoice::Auto),
+            "scalar" => Ok(KernelChoice::Fixed(KernelBackend::Scalar)),
+            "sse2" => Ok(KernelChoice::Fixed(KernelBackend::Sse2)),
+            "avx2" => Ok(KernelChoice::Fixed(KernelBackend::Avx2)),
+            "neon" => Ok(KernelChoice::Fixed(KernelBackend::Neon)),
+            other => anyhow::bail!("unknown kernel backend {other:?} (auto|scalar|sse2|avx2|neon)"),
+        }
+    }
+}
+
+/// Every backend this host can actually run, widest last.
+pub fn available_backends() -> Vec<KernelBackend> {
+    #[allow(unused_mut)] // non-SIMD arches keep just the scalar entry
+    let mut v = vec![KernelBackend::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        v.push(KernelBackend::Sse2);
+        if simd::avx2::available() {
+            v.push(KernelBackend::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        v.push(KernelBackend::Neon);
+    }
+    v
+}
+
+/// Resolve a choice against this host: `auto` picks the widest
+/// available backend; a pinned backend errors when unavailable.
+fn resolve(choice: KernelChoice) -> anyhow::Result<KernelBackend> {
+    let avail = available_backends();
+    match choice {
+        KernelChoice::Auto => Ok(*avail.last().expect("scalar is always available")),
+        KernelChoice::Fixed(b) => {
+            anyhow::ensure!(
+                avail.contains(&b),
+                "kernel backend {b} is not available on this host (available: {})",
+                avail.iter().map(|b| b.name()).collect::<Vec<_>>().join(", ")
+            );
+            Ok(b)
+        }
+    }
+}
+
+/// The process-wide active backend.  0 = not yet initialized; first use
+/// resolves `DANA_KERNELS` (or `auto`) lazily so tests and tools that
+/// never touch a CLI still dispatch correctly.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+/// Pin the process's kernel backend (the `--kernels` flag lands here
+/// before any serving/training starts).  Fails closed on a backend this
+/// host cannot run; returns what was selected so callers can log it.
+pub fn set_kernels(choice: KernelChoice) -> anyhow::Result<KernelBackend> {
+    let b = resolve(choice)?;
+    ACTIVE.store(b as u8, Ordering::SeqCst);
+    Ok(b)
+}
+
+/// The backend every `math::` call currently dispatches to.
+pub fn active_kernels() -> KernelBackend {
+    match KernelBackend::from_u8(ACTIVE.load(Ordering::Relaxed)) {
+        Some(b) => b,
+        None => init_from_env(),
+    }
+}
+
+#[cold]
+fn init_from_env() -> KernelBackend {
+    let choice = match std::env::var("DANA_KERNELS") {
+        Ok(s) => s
+            .parse::<KernelChoice>()
+            .unwrap_or_else(|e| panic!("DANA_KERNELS: {e}")),
+        Err(_) => KernelChoice::Auto,
+    };
+    let b = resolve(choice).unwrap_or_else(|e| panic!("DANA_KERNELS: {e}"));
+    // a concurrent first-use resolves the same value, so the race is benign
+    ACTIVE.store(b as u8, Ordering::SeqCst);
+    b
+}
+
+/// Run `f` with the backend forced to `b`, restoring the previous
+/// backend afterwards (panic-safe) — the equivalence suite's harness.
+/// Serialized internally: concurrent `with_backend` calls cannot observe
+/// each other's forced backend.  Panics if `b` cannot run here; gate
+/// with [`available_backends`].
+pub fn with_backend<R>(b: KernelBackend, f: impl FnOnce() -> R) -> R {
+    static GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            ACTIVE.store(self.0, Ordering::SeqCst);
+        }
+    }
+    assert!(
+        available_backends().contains(&b),
+        "kernel backend {b} is not available on this host"
+    );
+    let _g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    let restore = Restore(active_kernels() as u8);
+    ACTIVE.store(b as u8, Ordering::SeqCst);
+    let out = f();
+    drop(restore);
+    out
+}
+
+/// Routes one kernel call to the active backend.  The SIMD arms are
+/// unsafe calls into `#[target_feature]` functions; the safety argument
+/// is identical everywhere, so it lives here once.
+macro_rules! dispatch {
+    ($name:ident ( $($arg:expr),* )) => {
+        match active_kernels() {
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Avx2 => {
+                // SAFETY: Avx2 only becomes the active backend after
+                // `is_x86_feature_detected!("avx2")` succeeded in resolve().
+                unsafe { simd::avx2::$name($($arg),*) }
+            }
+            #[cfg(target_arch = "x86_64")]
+            KernelBackend::Sse2 => {
+                // SAFETY: SSE2 is unconditionally part of the x86_64 baseline.
+                unsafe { simd::sse2::$name($($arg),*) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            KernelBackend::Neon => {
+                // SAFETY: NEON is unconditionally part of the aarch64 baseline.
+                unsafe { simd::neon::$name($($arg),*) }
+            }
+            _ => scalar::$name($($arg),*),
+        }
+    };
+}
+
+// ---------------------------------------------------------- kernels
 
 /// y += a * x
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (y, x) in y.iter_mut().zip(x) {
-        *y += a * *x;
-    }
+    dispatch!(axpy(y, a, x))
 }
 
 /// y = x (memcpy wrapper for symmetry).
 pub fn copy(y: &mut [f32], x: &[f32]) {
-    y.copy_from_slice(x);
+    scalar::copy(y, x);
 }
 
 /// x *= a
 pub fn scale(x: &mut [f32], a: f32) {
-    for x in x.iter_mut() {
-        *x *= a;
-    }
+    scalar::scale(x, a);
 }
 
 /// out = a - b
 pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
-    debug_assert!(out.len() == a.len() && a.len() == b.len());
-    for ((o, a), b) in out.iter_mut().zip(a).zip(b) {
-        *o = a - b;
-    }
+    scalar::sub(out, a, b);
 }
 
-/// dot(a, b) with f64 accumulation (4-way unrolled: a single f64
-/// accumulator serializes the loop on its ~4-cycle add latency; four
-/// independent partials let the FMA pipes overlap — see §Perf).
+/// dot(a, b) with f64 accumulation over the fixed 8-lane stride —
+/// deterministic across backends and thread counts (DESIGN.md §15).
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; 4];
-    let (ac, ar) = a.split_at(a.len() & !3);
-    let (bc, br) = b.split_at(b.len() & !3);
-    for (ca, cb) in ac.chunks_exact(4).zip(bc.chunks_exact(4)) {
-        for i in 0..4 {
-            acc[i] += ca[i] as f64 * cb[i] as f64;
-        }
-    }
-    let mut tail = 0.0;
-    for (&x, &y) in ar.iter().zip(br) {
-        tail += x as f64 * y as f64;
-    }
-    acc[0] + acc[1] + acc[2] + acc[3] + tail
+    dispatch!(dot(a, b))
 }
 
-/// ||a||_2^2 in f64 (4-way unrolled, see [`dot`]).
+/// ||a||_2^2 in f64 (fixed 8-lane stride, see [`dot`]).
 pub fn norm2_sq(a: &[f32]) -> f64 {
-    let mut acc = [0.0f64; 4];
-    let (chunks, rest) = a.split_at(a.len() & !3);
-    for c in chunks.chunks_exact(4) {
-        for i in 0..4 {
-            acc[i] += c[i] as f64 * c[i] as f64;
-        }
-    }
-    let mut tail = 0.0;
-    for &x in rest {
-        tail += x as f64 * x as f64;
-    }
-    acc[0] + acc[1] + acc[2] + acc[3] + tail
+    dispatch!(norm2_sq(a))
 }
 
-/// ||a - b||_2^2 without materializing the difference (8-way unrolled,
-/// see [`dot`]).  Additive across contiguous shards: the sharded server
+/// ||a - b||_2^2 without materializing the difference (fixed 8-lane
+/// stride).  Additive across contiguous shards: the sharded server
 /// reduces per-shard partials with `+` before the final sqrt.
 pub fn sub_norm_sq(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f64; 8];
-    let (ac, ar) = a.split_at(a.len() & !7);
-    let (bc, br) = b.split_at(b.len() & !7);
-    for (ca, cb) in ac.chunks_exact(8).zip(bc.chunks_exact(8)) {
-        for i in 0..8 {
-            let d = ca[i] as f64 - cb[i] as f64;
-            acc[i] += d * d;
-        }
-    }
-    let mut tail = 0.0;
-    for (&x, &y) in ar.iter().zip(br) {
-        let d = x as f64 - y as f64;
-        tail += d * d;
-    }
-    acc.iter().sum::<f64>() + tail
+    dispatch!(sub_norm_sq(a, b))
 }
 
 /// ||a - b||_2 without materializing the difference (gap hot path).
@@ -102,12 +286,7 @@ pub fn sub_norm(a: &[f32], b: &[f32]) -> f64 {
 /// Momentum accumulate + SGD apply in one pass (Eq 2):
 /// `v = gamma*v + g; theta -= eta*v`.
 pub fn momentum_step(theta: &mut [f32], v: &mut [f32], g: &[f32], gamma: f32, eta: f32) {
-    debug_assert!(theta.len() == v.len() && v.len() == g.len());
-    for ((t, v), g) in theta.iter_mut().zip(v.iter_mut()).zip(g) {
-        let vn = gamma * *v + *g;
-        *v = vn;
-        *t -= eta * vn;
-    }
+    dispatch!(momentum_step(theta, v, g, gamma, eta))
 }
 
 /// Fused DANA-Zero master step (paper Eq 10/11 + Appendix A.2), mirroring
@@ -127,27 +306,12 @@ pub fn dana_fused_update(
     gamma: f32,
     eta: f32,
 ) {
-    debug_assert!(theta.len() == v.len() && v.len() == vsum.len() && vsum.len() == g.len());
-    for (((t, v), vs), g) in theta
-        .iter_mut()
-        .zip(v.iter_mut())
-        .zip(vsum.iter_mut())
-        .zip(g)
-    {
-        let v_new = gamma * *v + *g;
-        *t -= eta * v_new;
-        *vs += v_new - *v;
-        *v = v_new;
-    }
+    dispatch!(dana_fused_update(theta, v, vsum, g, gamma, eta))
 }
 
 /// DANA look-ahead send (Eq 11): `hat = theta - eta*gamma*vsum`.
 pub fn lookahead(hat: &mut [f32], theta: &[f32], vsum: &[f32], gamma: f32, eta: f32) {
-    debug_assert!(hat.len() == theta.len() && theta.len() == vsum.len());
-    let c = eta * gamma;
-    for ((h, t), vs) in hat.iter_mut().zip(theta).zip(vsum) {
-        *h = t - c * vs;
-    }
+    dispatch!(lookahead(hat, theta, vsum, gamma, eta))
 }
 
 /// DANA look-ahead extrapolated `depth` *extra* momentum-only steps
@@ -166,17 +330,7 @@ pub fn lookahead_extrapolated(
     eta: f32,
     depth: usize,
 ) {
-    debug_assert!(hat.len() == theta.len() && theta.len() == vsum.len());
-    let c = eta * gamma;
-    for ((h, &t0), &v0) in hat.iter_mut().zip(theta).zip(vsum) {
-        let mut t = t0;
-        let mut v = v0;
-        for _ in 0..depth {
-            v = gamma * v;
-            t -= eta * v;
-        }
-        *h = t - c * v;
-    }
+    dispatch!(lookahead_extrapolated(hat, theta, vsum, gamma, eta, depth))
 }
 
 /// Momentum-only position extrapolation: where θ lands after `depth`
@@ -191,25 +345,13 @@ pub fn extrapolate_position(
     eta: f32,
     depth: usize,
 ) {
-    debug_assert!(out.len() == theta.len() && theta.len() == v.len());
-    for ((o, &t0), &v0) in out.iter_mut().zip(theta).zip(v) {
-        let mut t = t0;
-        let mut vv = v0;
-        for _ in 0..depth {
-            vv = gamma * vv;
-            t -= eta * vv;
-        }
-        *o = t;
-    }
+    scalar::extrapolate_position(out, theta, v, gamma, eta, depth);
 }
 
 /// DC-ASGD gradient adjustment (Eq 17):
 /// `g_hat = g + lambda * g⊙g⊙(theta_master - theta_sent)`, in place on `g`.
 pub fn dc_adjust(g: &mut [f32], theta_master: &[f32], theta_sent: &[f32], lambda: f32) {
-    debug_assert!(g.len() == theta_master.len() && g.len() == theta_sent.len());
-    for ((g, &tm), &ts) in g.iter_mut().zip(theta_master).zip(theta_sent) {
-        *g += lambda * *g * *g * (tm - ts);
-    }
+    dispatch!(dc_adjust(g, theta_master, theta_sent, lambda))
 }
 
 /// DC-ASGD fused apply (Alg 10 lines 2–4 in one pass): compensate the
@@ -224,13 +366,7 @@ pub fn dc_momentum_step(
     eta: f32,
     lambda: f32,
 ) {
-    debug_assert!(theta.len() == v.len() && v.len() == g.len() && g.len() == sent.len());
-    for (((t, v), &g), &s) in theta.iter_mut().zip(v.iter_mut()).zip(g).zip(sent) {
-        let ghat = g + lambda * g * g * (*t - s);
-        let vn = gamma * *v + ghat;
-        *v = vn;
-        *t -= eta * vn;
-    }
+    scalar::dc_momentum_step(theta, v, g, sent, gamma, eta, lambda);
 }
 
 /// DANA-DC fused apply (Alg 7 in one pass): delay compensation + per-worker
@@ -246,25 +382,7 @@ pub fn dc_dana_fused_update(
     eta: f32,
     lambda: f32,
 ) {
-    debug_assert!(
-        theta.len() == v.len()
-            && v.len() == vsum.len()
-            && vsum.len() == g.len()
-            && g.len() == sent.len()
-    );
-    for ((((t, v), vs), &g), &s) in theta
-        .iter_mut()
-        .zip(v.iter_mut())
-        .zip(vsum.iter_mut())
-        .zip(g)
-        .zip(sent)
-    {
-        let ghat = g + lambda * g * g * (*t - s);
-        let v_new = gamma * *v + ghat;
-        *t -= eta * v_new;
-        *vs += v_new - *v;
-        *v = v_new;
-    }
+    dispatch!(dc_dana_fused_update(theta, v, vsum, g, sent, gamma, eta, lambda))
 }
 
 /// Bengio-NAG / DANA-Slim worker update vector (Alg 6 send):
@@ -272,12 +390,7 @@ pub fn dc_dana_fused_update(
 /// evaluated with the *new* v, i.e. `send = gamma*v_new + g`.
 /// Computes v in place and writes the send vector.
 pub fn slim_worker_update(send: &mut [f32], v: &mut [f32], g: &[f32], gamma: f32) {
-    debug_assert!(send.len() == v.len() && v.len() == g.len());
-    for ((s, v), g) in send.iter_mut().zip(v.iter_mut()).zip(g) {
-        let v_new = gamma * *v + *g;
-        *v = v_new;
-        *s = gamma * v_new + *g;
-    }
+    scalar::slim_worker_update(send, v, g, gamma);
 }
 
 /// In-place variant of [`slim_worker_update`]: the gradient buffer becomes
@@ -285,17 +398,44 @@ pub fn slim_worker_update(send: &mut [f32], v: &mut [f32], g: &[f32], gamma: f32
 /// arithmetic is bit-identical to the scratch-buffer version).  This is the
 /// per-step hot path of the DANA-Slim worker — no allocation.
 pub fn slim_worker_update_inplace(v: &mut [f32], g: &mut [f32], gamma: f32) {
-    debug_assert_eq!(v.len(), g.len());
-    for (v, g) in v.iter_mut().zip(g.iter_mut()) {
-        let v_new = gamma * *v + *g;
-        *v = v_new;
-        *g = gamma * v_new + *g;
-    }
+    dispatch!(slim_worker_update_inplace(v, g, gamma))
 }
 
 /// theta -= eta * u  (plain ASGD master apply).
 pub fn apply_update(theta: &mut [f32], u: &[f32], eta: f32) {
     axpy(theta, -eta, u);
+}
+
+// ------------------------------------------------- f16/bf16 batch codecs
+
+/// Append `vals` as little-endian IEEE binary16 bits (wire hot loop).
+pub fn f16_encode_into(out: &mut Vec<u8>, vals: &[f32]) {
+    dispatch!(f16_encode_into(out, vals))
+}
+
+/// Append `vals` as little-endian bfloat16 bits (wire hot loop).
+pub fn bf16_encode_into(out: &mut Vec<u8>, vals: &[f32]) {
+    dispatch!(bf16_encode_into(out, vals))
+}
+
+/// Decode little-endian f16 bytes, appending f32s (`bytes.len()` even).
+pub fn f16_decode_into(out: &mut Vec<f32>, bytes: &[u8]) {
+    dispatch!(f16_decode_into(out, bytes))
+}
+
+/// Decode little-endian bf16 bytes, appending f32s (`bytes.len()` even).
+pub fn bf16_decode_into(out: &mut Vec<f32>, bytes: &[u8]) {
+    dispatch!(bf16_decode_into(out, bytes))
+}
+
+/// Quantize–dequantize through f16 in place (compressor transform).
+pub fn f16_round_trip(g: &mut [f32]) {
+    dispatch!(f16_round_trip(g))
+}
+
+/// Quantize–dequantize through bf16 in place (compressor transform).
+pub fn bf16_round_trip(g: &mut [f32]) {
+    dispatch!(bf16_round_trip(g))
 }
 
 #[cfg(test)]
@@ -501,5 +641,40 @@ mod tests {
         momentum_step(&mut theta, &mut vel, &[2.0], 0.0, 0.5);
         assert_eq!(vel[0], 2.0);
         assert_eq!(theta[0], 0.0);
+    }
+
+    #[test]
+    fn backend_parse_and_display_round_trip() {
+        for s in ["auto", "scalar", "sse2", "avx2", "neon"] {
+            let c: KernelChoice = s.parse().unwrap();
+            assert_eq!(c.to_string(), s);
+        }
+        assert!("avx512".parse::<KernelChoice>().is_err());
+        assert_eq!(KernelChoice::default(), KernelChoice::Auto);
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_forcible() {
+        let avail = available_backends();
+        assert!(avail.contains(&KernelBackend::Scalar));
+        let got = with_backend(KernelBackend::Scalar, active_kernels);
+        assert_eq!(got, KernelBackend::Scalar);
+        // set_kernels(auto) resolves to the widest available backend
+        let auto = set_kernels(KernelChoice::Auto).unwrap();
+        assert_eq!(auto, *avail.last().unwrap());
+        assert_eq!(active_kernels(), auto);
+    }
+
+    #[test]
+    fn pinning_an_unavailable_backend_fails_closed() {
+        // at most one of neon/avx2 can exist on one host; whichever is
+        // absent must be rejected by name
+        for b in [KernelBackend::Neon, KernelBackend::Avx2, KernelBackend::Sse2] {
+            if !available_backends().contains(&b) {
+                let err = set_kernels(KernelChoice::Fixed(b)).unwrap_err().to_string();
+                assert!(err.contains("not available"), "{err}");
+                assert!(err.contains(b.name()), "{err}");
+            }
+        }
     }
 }

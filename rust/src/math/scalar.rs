@@ -1,0 +1,441 @@
+//! Portable scalar reference kernels — the semantics every other
+//! backend must reproduce **bit-for-bit**.
+//!
+//! The dispatch wrappers in [`super`] (`math::axpy` etc.) route here when
+//! the active [`super::KernelBackend`] is `Scalar`, and the SIMD backends
+//! in [`super::simd`] are required (and property-tested in
+//! `rust/tests/kernels.rs`) to produce identical bits for every input,
+//! including NaN payloads, signed zeros, infinities and subnormals:
+//!
+//! * The elementwise kernels are pure per-coordinate IEEE-754 f32
+//!   arithmetic with no re-association and no fused multiply-add, so a
+//!   vector lane computes exactly the scalar expression.
+//! * The reductions (`dot`, `norm2_sq`, `sub_norm_sq`) use one fixed
+//!   **8-lane strided accumulation** shape (8 independent f64 partials
+//!   over `chunks_exact(8)`, a sequential scalar tail, then a sequential
+//!   left-to-right fold `acc[0] + acc[1] + … + tail`).  The SIMD
+//!   backends implement the same shape with vertical f64 lane adds and
+//!   the same final fold order, so the reduction result is deterministic
+//!   across dispatch choices and thread counts (DESIGN.md §15).
+//!
+//! These loops are written as straight slice iterations
+//! (bounds-check-free via `zip`) so LLVM auto-vectorizes the scalar
+//! build too; the explicit backends exist to make the vector width a
+//! contract instead of an optimizer mood.
+
+/// Fixed stride of every reduction in this crate (see module docs).
+pub const REDUCE_LANES: usize = 8;
+
+/// y += a * x
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (y, x) in y.iter_mut().zip(x) {
+        *y += a * *x;
+    }
+}
+
+/// y = x (memcpy wrapper for symmetry).
+pub fn copy(y: &mut [f32], x: &[f32]) {
+    y.copy_from_slice(x);
+}
+
+/// x *= a
+pub fn scale(x: &mut [f32], a: f32) {
+    for x in x.iter_mut() {
+        *x *= a;
+    }
+}
+
+/// out = a - b
+pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert!(out.len() == a.len() && a.len() == b.len());
+    for ((o, a), b) in out.iter_mut().zip(a).zip(b) {
+        *o = a - b;
+    }
+}
+
+/// dot(a, b) with f64 accumulation over the fixed 8-lane stride.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; REDUCE_LANES];
+    let (ac, ar) = a.split_at(a.len() & !(REDUCE_LANES - 1));
+    let (bc, br) = b.split_at(b.len() & !(REDUCE_LANES - 1));
+    for (ca, cb) in ac.chunks_exact(REDUCE_LANES).zip(bc.chunks_exact(REDUCE_LANES)) {
+        for i in 0..REDUCE_LANES {
+            acc[i] += ca[i] as f64 * cb[i] as f64;
+        }
+    }
+    let mut tail = 0.0;
+    for (&x, &y) in ar.iter().zip(br) {
+        tail += x as f64 * y as f64;
+    }
+    fold_acc(&acc) + tail
+}
+
+/// ||a||_2^2 in f64 over the fixed 8-lane stride.
+pub fn norm2_sq(a: &[f32]) -> f64 {
+    let mut acc = [0.0f64; REDUCE_LANES];
+    let (chunks, rest) = a.split_at(a.len() & !(REDUCE_LANES - 1));
+    for c in chunks.chunks_exact(REDUCE_LANES) {
+        for i in 0..REDUCE_LANES {
+            acc[i] += c[i] as f64 * c[i] as f64;
+        }
+    }
+    let mut tail = 0.0;
+    for &x in rest {
+        tail += x as f64 * x as f64;
+    }
+    fold_acc(&acc) + tail
+}
+
+/// ||a - b||_2^2 without materializing the difference.  Additive across
+/// contiguous shards: the sharded server reduces per-shard partials with
+/// `+` before the final sqrt.
+pub fn sub_norm_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; REDUCE_LANES];
+    let (ac, ar) = a.split_at(a.len() & !(REDUCE_LANES - 1));
+    let (bc, br) = b.split_at(b.len() & !(REDUCE_LANES - 1));
+    for (ca, cb) in ac.chunks_exact(REDUCE_LANES).zip(bc.chunks_exact(REDUCE_LANES)) {
+        for i in 0..REDUCE_LANES {
+            let d = ca[i] as f64 - cb[i] as f64;
+            acc[i] += d * d;
+        }
+    }
+    let mut tail = 0.0;
+    for (&x, &y) in ar.iter().zip(br) {
+        let d = x as f64 - y as f64;
+        tail += d * d;
+    }
+    fold_acc(&acc) + tail
+}
+
+/// The one reduction fold order: a sequential left-to-right sum of the
+/// 8 partials.  Every backend finishes with exactly this.
+#[inline(always)]
+pub fn fold_acc(acc: &[f64; REDUCE_LANES]) -> f64 {
+    let mut s = 0.0;
+    for &a in acc {
+        s += a;
+    }
+    s
+}
+
+/// Momentum accumulate + SGD apply in one pass (Eq 2):
+/// `v = gamma*v + g; theta -= eta*v`.
+pub fn momentum_step(theta: &mut [f32], v: &mut [f32], g: &[f32], gamma: f32, eta: f32) {
+    debug_assert!(theta.len() == v.len() && v.len() == g.len());
+    for ((t, v), g) in theta.iter_mut().zip(v.iter_mut()).zip(g) {
+        let vn = gamma * *v + *g;
+        *v = vn;
+        *t -= eta * vn;
+    }
+}
+
+/// Fused DANA-Zero master step (paper Eq 10/11 + Appendix A.2).
+pub fn dana_fused_update(
+    theta: &mut [f32],
+    v: &mut [f32],
+    vsum: &mut [f32],
+    g: &[f32],
+    gamma: f32,
+    eta: f32,
+) {
+    debug_assert!(theta.len() == v.len() && v.len() == vsum.len() && vsum.len() == g.len());
+    for (((t, v), vs), g) in theta
+        .iter_mut()
+        .zip(v.iter_mut())
+        .zip(vsum.iter_mut())
+        .zip(g)
+    {
+        let v_new = gamma * *v + *g;
+        *t -= eta * v_new;
+        *vs += v_new - *v;
+        *v = v_new;
+    }
+}
+
+/// DANA look-ahead send (Eq 11): `hat = theta - eta*gamma*vsum`.
+pub fn lookahead(hat: &mut [f32], theta: &[f32], vsum: &[f32], gamma: f32, eta: f32) {
+    debug_assert!(hat.len() == theta.len() && theta.len() == vsum.len());
+    let c = eta * gamma;
+    for ((h, t), vs) in hat.iter_mut().zip(theta).zip(vsum) {
+        *h = t - c * vs;
+    }
+}
+
+/// DANA look-ahead extrapolated `depth` *extra* momentum-only steps.
+pub fn lookahead_extrapolated(
+    hat: &mut [f32],
+    theta: &[f32],
+    vsum: &[f32],
+    gamma: f32,
+    eta: f32,
+    depth: usize,
+) {
+    debug_assert!(hat.len() == theta.len() && theta.len() == vsum.len());
+    let c = eta * gamma;
+    for ((h, &t0), &v0) in hat.iter_mut().zip(theta).zip(vsum) {
+        let mut t = t0;
+        let mut v = v0;
+        for _ in 0..depth {
+            v = gamma * v;
+            t -= eta * v;
+        }
+        *h = t - c * v;
+    }
+}
+
+/// Momentum-only position extrapolation (`depth = 0` copies θ).
+pub fn extrapolate_position(
+    out: &mut [f32],
+    theta: &[f32],
+    v: &[f32],
+    gamma: f32,
+    eta: f32,
+    depth: usize,
+) {
+    debug_assert!(out.len() == theta.len() && theta.len() == v.len());
+    for ((o, &t0), &v0) in out.iter_mut().zip(theta).zip(v) {
+        let mut t = t0;
+        let mut vv = v0;
+        for _ in 0..depth {
+            vv = gamma * vv;
+            t -= eta * vv;
+        }
+        *o = t;
+    }
+}
+
+/// DC-ASGD gradient adjustment (Eq 17), in place on `g`.
+pub fn dc_adjust(g: &mut [f32], theta_master: &[f32], theta_sent: &[f32], lambda: f32) {
+    debug_assert!(g.len() == theta_master.len() && g.len() == theta_sent.len());
+    for ((g, &tm), &ts) in g.iter_mut().zip(theta_master).zip(theta_sent) {
+        *g += lambda * *g * *g * (tm - ts);
+    }
+}
+
+/// DC-ASGD fused apply (Alg 10 lines 2–4 in one pass).
+pub fn dc_momentum_step(
+    theta: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    sent: &[f32],
+    gamma: f32,
+    eta: f32,
+    lambda: f32,
+) {
+    debug_assert!(theta.len() == v.len() && v.len() == g.len() && g.len() == sent.len());
+    for (((t, v), &g), &s) in theta.iter_mut().zip(v.iter_mut()).zip(g).zip(sent) {
+        let ghat = g + lambda * g * g * (*t - s);
+        let vn = gamma * *v + ghat;
+        *v = vn;
+        *t -= eta * vn;
+    }
+}
+
+/// DANA-DC fused apply (Alg 7 in one pass).
+#[allow(clippy::too_many_arguments)]
+pub fn dc_dana_fused_update(
+    theta: &mut [f32],
+    v: &mut [f32],
+    vsum: &mut [f32],
+    g: &[f32],
+    sent: &[f32],
+    gamma: f32,
+    eta: f32,
+    lambda: f32,
+) {
+    debug_assert!(
+        theta.len() == v.len()
+            && v.len() == vsum.len()
+            && vsum.len() == g.len()
+            && g.len() == sent.len()
+    );
+    for ((((t, v), vs), &g), &s) in theta
+        .iter_mut()
+        .zip(v.iter_mut())
+        .zip(vsum.iter_mut())
+        .zip(g)
+        .zip(sent)
+    {
+        let ghat = g + lambda * g * g * (*t - s);
+        let v_new = gamma * *v + ghat;
+        *t -= eta * v_new;
+        *vs += v_new - *v;
+        *v = v_new;
+    }
+}
+
+/// Bengio-NAG / DANA-Slim worker update vector (Alg 6 send).
+pub fn slim_worker_update(send: &mut [f32], v: &mut [f32], g: &[f32], gamma: f32) {
+    debug_assert!(send.len() == v.len() && v.len() == g.len());
+    for ((s, v), g) in send.iter_mut().zip(v.iter_mut()).zip(g) {
+        let v_new = gamma * *v + *g;
+        *v = v_new;
+        *s = gamma * v_new + *g;
+    }
+}
+
+/// In-place variant of [`slim_worker_update`] (`g` becomes the send
+/// vector; `g[i]` is read before it is overwritten, so the arithmetic is
+/// bit-identical to the scratch-buffer version).
+pub fn slim_worker_update_inplace(v: &mut [f32], g: &mut [f32], gamma: f32) {
+    debug_assert_eq!(v.len(), g.len());
+    for (v, g) in v.iter_mut().zip(g.iter_mut()) {
+        let v_new = gamma * *v + *g;
+        *v = v_new;
+        *g = gamma * v_new + *g;
+    }
+}
+
+/// theta -= eta * u  (plain ASGD master apply).
+pub fn apply_update(theta: &mut [f32], u: &[f32], eta: f32) {
+    axpy(theta, -eta, u);
+}
+
+// ------------------------------------------------- f16 / bf16 reference
+//
+// The per-element converters live here (re-exported by `net::codec`, the
+// historical home) so the batch encode/decode kernels the wire hot path
+// dispatches can share one reference definition with the SIMD backends.
+
+/// f32 → IEEE binary16 bits, round-to-nearest-even (overflow → ±inf,
+/// NaN stays NaN with a nonzero mantissa).
+#[inline(always)]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xff) as i32;
+    let man = b & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN: keep NaN-ness with a nonzero mantissa
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7c00 | ((man >> 13) as u16).max(1) };
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflow → signed zero
+        }
+        // subnormal half: shift the full 24-bit significand down,
+        // rounding to nearest-even on the dropped bits
+        let m = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let kept = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded =
+            if rem > halfway || (rem == halfway && kept & 1 == 1) { kept + 1 } else { kept };
+        return sign | rounded as u16; // carry into exp 1 is correct
+    }
+    let kept = (man >> 13) as u16;
+    let rem = man & 0x1fff;
+    let mut h = sign | ((e as u16) << 10) | kept;
+    if rem > 0x1000 || (rem == 0x1000 && h & 1 == 1) {
+        h += 1; // mantissa carry may roll into the exponent (→ inf): correct
+    }
+    h
+}
+
+/// IEEE binary16 bits → f32 (exact — every half is representable).
+#[inline(always)]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: normalize into an f32 normal
+            let mut m = man;
+            let mut e32 = 113u32; // f32 exponent field once bit 10 lands
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e32 -= 1;
+            }
+            sign | (e32 << 23) | ((m & 0x03ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → bfloat16 bits, round-to-nearest-even (NaN stays NaN).
+#[inline(always)]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let b = x.to_bits();
+    if x.is_nan() {
+        return ((b >> 16) as u16) | 0x0040; // force a quiet, nonzero mantissa
+    }
+    (b.wrapping_add(0x7fff + ((b >> 16) & 1)) >> 16) as u16
+}
+
+/// bfloat16 bits → f32 (exact — bf16 is a truncated f32).
+#[inline(always)]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Append `vals` as little-endian f16 bits (the `put_payload` hot loop).
+#[inline(always)]
+pub fn f16_encode_into(out: &mut Vec<u8>, vals: &[f32]) {
+    out.reserve(2 * vals.len());
+    for &x in vals {
+        out.extend_from_slice(&f32_to_f16(x).to_le_bytes());
+    }
+}
+
+/// Append `vals` as little-endian bf16 bits.
+#[inline(always)]
+pub fn bf16_encode_into(out: &mut Vec<u8>, vals: &[f32]) {
+    out.reserve(2 * vals.len());
+    for &x in vals {
+        out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
+    }
+}
+
+/// Decode little-endian f16 bytes, appending f32s (the `get_payload`
+/// densify loop; `bytes.len()` must be even).  NaN *checking* stays with
+/// the fail-closed decoder in `net::codec`.
+#[inline(always)]
+pub fn f16_decode_into(out: &mut Vec<f32>, bytes: &[u8]) {
+    debug_assert_eq!(bytes.len() % 2, 0);
+    out.reserve(bytes.len() / 2);
+    for c in bytes.chunks_exact(2) {
+        out.push(f16_to_f32(u16::from_le_bytes([c[0], c[1]])));
+    }
+}
+
+/// Decode little-endian bf16 bytes, appending f32s.
+#[inline(always)]
+pub fn bf16_decode_into(out: &mut Vec<f32>, bytes: &[u8]) {
+    debug_assert_eq!(bytes.len() % 2, 0);
+    out.reserve(bytes.len() / 2);
+    for c in bytes.chunks_exact(2) {
+        out.push(bf16_to_f32(u16::from_le_bytes([c[0], c[1]])));
+    }
+}
+
+/// Quantize–dequantize through f16 in place (the `Compressor` transform:
+/// the caller trains against exactly the values the wire will carry).
+#[inline(always)]
+pub fn f16_round_trip(g: &mut [f32]) {
+    for x in g.iter_mut() {
+        *x = f16_to_f32(f32_to_f16(*x));
+    }
+}
+
+/// Quantize–dequantize through bf16 in place.
+#[inline(always)]
+pub fn bf16_round_trip(g: &mut [f32]) {
+    for x in g.iter_mut() {
+        *x = bf16_to_f32(f32_to_bf16(*x));
+    }
+}

@@ -1,0 +1,789 @@
+//! Explicit SIMD backends for the hot kernels — AVX2 and SSE2 on
+//! x86_64, NEON on aarch64.
+//!
+//! **Bit-for-bit contract** (DESIGN.md §15): every function here must
+//! produce exactly the bits of its [`super::scalar`] reference for every
+//! input, including NaN payloads, signed zeros, infinities and
+//! subnormals.  The rules that make that true by construction:
+//!
+//! * No fused multiply-add, ever.  The scalar kernels are written as
+//!   separate IEEE-754 multiplies and adds (`gamma * v + g` rounds the
+//!   product before the sum), so the vector code uses separate
+//!   `mul`/`add` intrinsics — an FMA would change the rounding.
+//! * No re-association.  Each lane evaluates the scalar expression in
+//!   the scalar's exact operation order; remainders fall through to the
+//!   scalar reference itself.
+//! * Reductions keep the fixed 8-lane strided-accumulation shape of
+//!   [`super::scalar`]: f64 lane `i` accumulates positions `8j + i`
+//!   vertically, the tail is sequential, and the final fold is the same
+//!   left-to-right `fold_acc`.  Lane counts below 8 (SSE2/NEON f64 is
+//!   2-wide, AVX2 4-wide) just mean the 8 accumulators span several
+//!   registers.
+//! * The f16/bf16 converters are *integer* algorithms (exact by nature).
+//!   The branch-heavy f16 special-case ladder is shipped as the scalar
+//!   body recompiled under the target feature (multiversioned blocks);
+//!   the branch-free bf16 conversions get real integer-SIMD fast paths
+//!   where the ISA makes them cheap (AVX2, NEON).  Either way the bits
+//!   are pinned against scalar by `rust/tests/kernels.rs`.
+//!
+//! Every function is `unsafe fn` with the same narrow contract: the
+//! caller must have verified the ISA feature is available (the dispatch
+//! layer in [`super`] only selects a backend after runtime detection,
+//! and the safe `available()` probes gate direct use in tests).
+
+#![allow(clippy::missing_safety_doc)] // every fn carries the module-level contract below
+#![allow(clippy::too_many_arguments)] // kernel signatures mirror scalar's
+
+/// Generates the f32 elementwise kernels, the fixed-8-lane reductions,
+/// and the multiversioned f16 conversion blocks for one ISA module.
+/// The module must define, above the invocation:
+///   `LANES`, `type Vf`, `loadf/storef/splatf/vadd/vsub/vmul`,
+///   `DLANES`, `type Vd`, `dzero/dadd/dsub/dmul/dload8/dstore8`.
+macro_rules! isa_kernels {
+    ($feat:literal) => {
+        /// y += a * x (see module contract).
+        #[target_feature(enable = $feat)]
+        pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+            debug_assert_eq!(y.len(), x.len());
+            let n = y.len();
+            let main = n & !(LANES - 1);
+            let av = splatf(a);
+            let yp = y.as_mut_ptr();
+            let xp = x.as_ptr();
+            let mut i = 0;
+            while i < main {
+                let yv = loadf(yp.add(i));
+                let xv = loadf(xp.add(i));
+                storef(yp.add(i), vadd(yv, vmul(av, xv)));
+                i += LANES;
+            }
+            crate::math::scalar::axpy(&mut y[main..], a, &x[main..]);
+        }
+
+        /// `v = gamma*v + g; theta -= eta*v` (Eq 2).
+        #[target_feature(enable = $feat)]
+        pub unsafe fn momentum_step(
+            theta: &mut [f32],
+            v: &mut [f32],
+            g: &[f32],
+            gamma: f32,
+            eta: f32,
+        ) {
+            debug_assert!(theta.len() == v.len() && v.len() == g.len());
+            let n = theta.len();
+            let main = n & !(LANES - 1);
+            let gv = splatf(gamma);
+            let ev = splatf(eta);
+            let tp = theta.as_mut_ptr();
+            let vp = v.as_mut_ptr();
+            let gp = g.as_ptr();
+            let mut i = 0;
+            while i < main {
+                let vn = vadd(vmul(gv, loadf(vp.add(i))), loadf(gp.add(i)));
+                storef(vp.add(i), vn);
+                storef(tp.add(i), vsub(loadf(tp.add(i)), vmul(ev, vn)));
+                i += LANES;
+            }
+            crate::math::scalar::momentum_step(
+                &mut theta[main..],
+                &mut v[main..],
+                &g[main..],
+                gamma,
+                eta,
+            );
+        }
+
+        /// Fused DANA-Zero master step (Eq 10/11 + Appendix A.2).
+        #[target_feature(enable = $feat)]
+        pub unsafe fn dana_fused_update(
+            theta: &mut [f32],
+            v: &mut [f32],
+            vsum: &mut [f32],
+            g: &[f32],
+            gamma: f32,
+            eta: f32,
+        ) {
+            debug_assert!(
+                theta.len() == v.len() && v.len() == vsum.len() && vsum.len() == g.len()
+            );
+            let n = theta.len();
+            let main = n & !(LANES - 1);
+            let gammav = splatf(gamma);
+            let etav = splatf(eta);
+            let tp = theta.as_mut_ptr();
+            let vp = v.as_mut_ptr();
+            let sp = vsum.as_mut_ptr();
+            let gp = g.as_ptr();
+            let mut i = 0;
+            while i < main {
+                let vold = loadf(vp.add(i));
+                let v_new = vadd(vmul(gammav, vold), loadf(gp.add(i)));
+                storef(tp.add(i), vsub(loadf(tp.add(i)), vmul(etav, v_new)));
+                storef(sp.add(i), vadd(loadf(sp.add(i)), vsub(v_new, vold)));
+                storef(vp.add(i), v_new);
+                i += LANES;
+            }
+            crate::math::scalar::dana_fused_update(
+                &mut theta[main..],
+                &mut v[main..],
+                &mut vsum[main..],
+                &g[main..],
+                gamma,
+                eta,
+            );
+        }
+
+        /// DANA-DC fused apply (Alg 7): `ghat = g + ((lambda*g)*g)*(t-s)`
+        /// in the scalar's left-associated order, then the DANA step.
+        #[target_feature(enable = $feat)]
+        pub unsafe fn dc_dana_fused_update(
+            theta: &mut [f32],
+            v: &mut [f32],
+            vsum: &mut [f32],
+            g: &[f32],
+            sent: &[f32],
+            gamma: f32,
+            eta: f32,
+            lambda: f32,
+        ) {
+            debug_assert!(
+                theta.len() == v.len()
+                    && v.len() == vsum.len()
+                    && vsum.len() == g.len()
+                    && g.len() == sent.len()
+            );
+            let n = theta.len();
+            let main = n & !(LANES - 1);
+            let gammav = splatf(gamma);
+            let etav = splatf(eta);
+            let lambdav = splatf(lambda);
+            let tp = theta.as_mut_ptr();
+            let vp = v.as_mut_ptr();
+            let sp = vsum.as_mut_ptr();
+            let gp = g.as_ptr();
+            let sentp = sent.as_ptr();
+            let mut i = 0;
+            while i < main {
+                let gv = loadf(gp.add(i));
+                let told = loadf(tp.add(i));
+                let corr = vmul(vmul(vmul(lambdav, gv), gv), vsub(told, loadf(sentp.add(i))));
+                let ghat = vadd(gv, corr);
+                let vold = loadf(vp.add(i));
+                let v_new = vadd(vmul(gammav, vold), ghat);
+                storef(tp.add(i), vsub(told, vmul(etav, v_new)));
+                storef(sp.add(i), vadd(loadf(sp.add(i)), vsub(v_new, vold)));
+                storef(vp.add(i), v_new);
+                i += LANES;
+            }
+            crate::math::scalar::dc_dana_fused_update(
+                &mut theta[main..],
+                &mut v[main..],
+                &mut vsum[main..],
+                &g[main..],
+                &sent[main..],
+                gamma,
+                eta,
+                lambda,
+            );
+        }
+
+        /// `hat = theta - (eta*gamma)*vsum` (Eq 11).
+        #[target_feature(enable = $feat)]
+        pub unsafe fn lookahead(
+            hat: &mut [f32],
+            theta: &[f32],
+            vsum: &[f32],
+            gamma: f32,
+            eta: f32,
+        ) {
+            debug_assert!(hat.len() == theta.len() && theta.len() == vsum.len());
+            let n = hat.len();
+            let main = n & !(LANES - 1);
+            let cv = splatf(eta * gamma);
+            let hp = hat.as_mut_ptr();
+            let tp = theta.as_ptr();
+            let sp = vsum.as_ptr();
+            let mut i = 0;
+            while i < main {
+                storef(hp.add(i), vsub(loadf(tp.add(i)), vmul(cv, loadf(sp.add(i)))));
+                i += LANES;
+            }
+            crate::math::scalar::lookahead(
+                &mut hat[main..],
+                &theta[main..],
+                &vsum[main..],
+                gamma,
+                eta,
+            );
+        }
+
+        /// Extrapolated look-ahead: `depth` momentum-only steps per lane,
+        /// then Eq 11 at the extrapolated point.
+        #[target_feature(enable = $feat)]
+        pub unsafe fn lookahead_extrapolated(
+            hat: &mut [f32],
+            theta: &[f32],
+            vsum: &[f32],
+            gamma: f32,
+            eta: f32,
+            depth: usize,
+        ) {
+            debug_assert!(hat.len() == theta.len() && theta.len() == vsum.len());
+            let n = hat.len();
+            let main = n & !(LANES - 1);
+            let gammav = splatf(gamma);
+            let etav = splatf(eta);
+            let cv = splatf(eta * gamma);
+            let hp = hat.as_mut_ptr();
+            let tp = theta.as_ptr();
+            let sp = vsum.as_ptr();
+            let mut i = 0;
+            while i < main {
+                let mut t = loadf(tp.add(i));
+                let mut v = loadf(sp.add(i));
+                for _ in 0..depth {
+                    v = vmul(gammav, v);
+                    t = vsub(t, vmul(etav, v));
+                }
+                storef(hp.add(i), vsub(t, vmul(cv, v)));
+                i += LANES;
+            }
+            crate::math::scalar::lookahead_extrapolated(
+                &mut hat[main..],
+                &theta[main..],
+                &vsum[main..],
+                gamma,
+                eta,
+                depth,
+            );
+        }
+
+        /// `g += ((lambda*g)*g)*(tm - ts)` (Eq 17, scalar association).
+        #[target_feature(enable = $feat)]
+        pub unsafe fn dc_adjust(
+            g: &mut [f32],
+            theta_master: &[f32],
+            theta_sent: &[f32],
+            lambda: f32,
+        ) {
+            debug_assert!(g.len() == theta_master.len() && g.len() == theta_sent.len());
+            let n = g.len();
+            let main = n & !(LANES - 1);
+            let lambdav = splatf(lambda);
+            let gp = g.as_mut_ptr();
+            let mp = theta_master.as_ptr();
+            let sp = theta_sent.as_ptr();
+            let mut i = 0;
+            while i < main {
+                let gv = loadf(gp.add(i));
+                let dv = vsub(loadf(mp.add(i)), loadf(sp.add(i)));
+                let corr = vmul(vmul(vmul(lambdav, gv), gv), dv);
+                storef(gp.add(i), vadd(gv, corr));
+                i += LANES;
+            }
+            crate::math::scalar::dc_adjust(
+                &mut g[main..],
+                &theta_master[main..],
+                &theta_sent[main..],
+                lambda,
+            );
+        }
+
+        /// DANA-Slim in-place worker update: `v = gamma*v + g` then
+        /// `g = gamma*v_new + g` (old g read before overwrite).
+        #[target_feature(enable = $feat)]
+        pub unsafe fn slim_worker_update_inplace(v: &mut [f32], g: &mut [f32], gamma: f32) {
+            debug_assert_eq!(v.len(), g.len());
+            let n = v.len();
+            let main = n & !(LANES - 1);
+            let gammav = splatf(gamma);
+            let vp = v.as_mut_ptr();
+            let gp = g.as_mut_ptr();
+            let mut i = 0;
+            while i < main {
+                let gv = loadf(gp.add(i));
+                let v_new = vadd(vmul(gammav, loadf(vp.add(i))), gv);
+                storef(vp.add(i), v_new);
+                storef(gp.add(i), vadd(vmul(gammav, v_new), gv));
+                i += LANES;
+            }
+            crate::math::scalar::slim_worker_update_inplace(&mut v[main..], &mut g[main..], gamma);
+        }
+
+        /// dot(a, b): fixed 8-lane strided f64 accumulation (lane `i`
+        /// sums positions `8j + i`), sequential tail, scalar fold order.
+        #[target_feature(enable = $feat)]
+        pub unsafe fn dot(a: &[f32], b: &[f32]) -> f64 {
+            debug_assert_eq!(a.len(), b.len());
+            let n = a.len();
+            let main = n & !(crate::math::scalar::REDUCE_LANES - 1);
+            let mut acc = [dzero(); crate::math::scalar::REDUCE_LANES / DLANES];
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut i = 0;
+            while i < main {
+                let av = dload8(ap.add(i));
+                let bv = dload8(bp.add(i));
+                for j in 0..acc.len() {
+                    acc[j] = dadd(acc[j], dmul(av[j], bv[j]));
+                }
+                i += crate::math::scalar::REDUCE_LANES;
+            }
+            let mut lanes = [0.0f64; crate::math::scalar::REDUCE_LANES];
+            dstore8(&mut lanes, acc);
+            let mut tail = 0.0;
+            for k in main..n {
+                tail += a[k] as f64 * b[k] as f64;
+            }
+            crate::math::scalar::fold_acc(&lanes) + tail
+        }
+
+        /// ||a||² with the same fixed 8-lane shape as [`dot`].
+        #[target_feature(enable = $feat)]
+        pub unsafe fn norm2_sq(a: &[f32]) -> f64 {
+            let n = a.len();
+            let main = n & !(crate::math::scalar::REDUCE_LANES - 1);
+            let mut acc = [dzero(); crate::math::scalar::REDUCE_LANES / DLANES];
+            let ap = a.as_ptr();
+            let mut i = 0;
+            while i < main {
+                let av = dload8(ap.add(i));
+                for j in 0..acc.len() {
+                    acc[j] = dadd(acc[j], dmul(av[j], av[j]));
+                }
+                i += crate::math::scalar::REDUCE_LANES;
+            }
+            let mut lanes = [0.0f64; crate::math::scalar::REDUCE_LANES];
+            dstore8(&mut lanes, acc);
+            let mut tail = 0.0;
+            for k in main..n {
+                tail += a[k] as f64 * a[k] as f64;
+            }
+            crate::math::scalar::fold_acc(&lanes) + tail
+        }
+
+        /// ||a - b||² with the same fixed 8-lane shape as [`dot`].
+        #[target_feature(enable = $feat)]
+        pub unsafe fn sub_norm_sq(a: &[f32], b: &[f32]) -> f64 {
+            debug_assert_eq!(a.len(), b.len());
+            let n = a.len();
+            let main = n & !(crate::math::scalar::REDUCE_LANES - 1);
+            let mut acc = [dzero(); crate::math::scalar::REDUCE_LANES / DLANES];
+            let ap = a.as_ptr();
+            let bp = b.as_ptr();
+            let mut i = 0;
+            while i < main {
+                let av = dload8(ap.add(i));
+                let bv = dload8(bp.add(i));
+                for j in 0..acc.len() {
+                    let d = dsub(av[j], bv[j]);
+                    acc[j] = dadd(acc[j], dmul(d, d));
+                }
+                i += crate::math::scalar::REDUCE_LANES;
+            }
+            let mut lanes = [0.0f64; crate::math::scalar::REDUCE_LANES];
+            dstore8(&mut lanes, acc);
+            let mut tail = 0.0;
+            for k in main..n {
+                let d = a[k] as f64 - b[k] as f64;
+                tail += d * d;
+            }
+            crate::math::scalar::fold_acc(&lanes) + tail
+        }
+
+        /// f16 encode: the scalar special-case ladder recompiled under
+        /// this ISA (multiversioned block — exact by construction; the
+        /// normal-range fast path vectorizes, the ladder stays scalar).
+        #[target_feature(enable = $feat)]
+        pub unsafe fn f16_encode_into(out: &mut Vec<u8>, vals: &[f32]) {
+            crate::math::scalar::f16_encode_into(out, vals);
+        }
+
+        /// f16 decode (multiversioned block, see [`f16_encode_into`]).
+        #[target_feature(enable = $feat)]
+        pub unsafe fn f16_decode_into(out: &mut Vec<f32>, bytes: &[u8]) {
+            crate::math::scalar::f16_decode_into(out, bytes);
+        }
+
+        /// f16 quantize–dequantize in place (multiversioned block).
+        #[target_feature(enable = $feat)]
+        pub unsafe fn f16_round_trip(g: &mut [f32]) {
+            crate::math::scalar::f16_round_trip(g);
+        }
+
+        /// bf16 quantize–dequantize in place, via this module's
+        /// encode/decode bit kernels' shared scalar reference.
+        #[target_feature(enable = $feat)]
+        pub unsafe fn bf16_round_trip(g: &mut [f32]) {
+            crate::math::scalar::bf16_round_trip(g);
+        }
+    };
+}
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Runtime probe — callers must check before touching anything else
+    /// in this module.
+    pub fn available() -> bool {
+        is_x86_feature_detected!("avx2")
+    }
+
+    const LANES: usize = 8;
+    const DLANES: usize = 4;
+
+    #[inline(always)]
+    unsafe fn loadf(p: *const f32) -> __m256 {
+        _mm256_loadu_ps(p)
+    }
+    #[inline(always)]
+    unsafe fn storef(p: *mut f32, v: __m256) {
+        _mm256_storeu_ps(p, v)
+    }
+    #[inline(always)]
+    unsafe fn splatf(a: f32) -> __m256 {
+        _mm256_set1_ps(a)
+    }
+    #[inline(always)]
+    unsafe fn vadd(a: __m256, b: __m256) -> __m256 {
+        _mm256_add_ps(a, b)
+    }
+    #[inline(always)]
+    unsafe fn vsub(a: __m256, b: __m256) -> __m256 {
+        _mm256_sub_ps(a, b)
+    }
+    #[inline(always)]
+    unsafe fn vmul(a: __m256, b: __m256) -> __m256 {
+        _mm256_mul_ps(a, b)
+    }
+
+    #[inline(always)]
+    unsafe fn dzero() -> __m256d {
+        _mm256_setzero_pd()
+    }
+    #[inline(always)]
+    unsafe fn dadd(a: __m256d, b: __m256d) -> __m256d {
+        _mm256_add_pd(a, b)
+    }
+    #[inline(always)]
+    unsafe fn dsub(a: __m256d, b: __m256d) -> __m256d {
+        _mm256_sub_pd(a, b)
+    }
+    #[inline(always)]
+    unsafe fn dmul(a: __m256d, b: __m256d) -> __m256d {
+        _mm256_mul_pd(a, b)
+    }
+    /// 8 consecutive f32 → two f64×4 groups, order-preserving.
+    #[inline(always)]
+    unsafe fn dload8(p: *const f32) -> [__m256d; 2] {
+        let v = _mm256_loadu_ps(p);
+        [
+            _mm256_cvtps_pd(_mm256_castps256_ps128(v)),
+            _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(v)),
+        ]
+    }
+    #[inline(always)]
+    unsafe fn dstore8(out: &mut [f64; 8], acc: [__m256d; 2]) {
+        _mm256_storeu_pd(out.as_mut_ptr(), acc[0]);
+        _mm256_storeu_pd(out.as_mut_ptr().add(4), acc[1]);
+    }
+
+    isa_kernels!("avx2");
+
+    /// bf16 encode, 8 lanes per iteration: the scalar round-to-nearest-
+    /// even add (`b + 0x7fff + ((b>>16)&1)`) and quiet-NaN forcing
+    /// (`(b>>16)|0x40`) as integer SIMD, narrowed and stored LE.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bf16_encode_into(out: &mut Vec<u8>, vals: &[f32]) {
+        let n = vals.len();
+        let start = out.len();
+        out.reserve(2 * n);
+        let dst = out.as_mut_ptr().add(start);
+        let src = vals.as_ptr();
+        let round = _mm256_set1_epi32(0x7fff);
+        let one = _mm256_set1_epi32(1);
+        let expmask = _mm256_set1_epi32(0x7f80_0000u32 as i32);
+        let manmask = _mm256_set1_epi32(0x007f_ffff);
+        let quiet = _mm256_set1_epi32(0x40);
+        let mut i = 0;
+        while i + 8 <= n {
+            let b = _mm256_loadu_si256(src.add(i) as *const __m256i);
+            let lsb = _mm256_and_si256(_mm256_srli_epi32::<16>(b), one);
+            let r = _mm256_add_epi32(b, _mm256_add_epi32(round, lsb));
+            let q = _mm256_srli_epi32::<16>(r);
+            // NaN lanes: exponent all-ones and a nonzero mantissa
+            let isexp = _mm256_cmpeq_epi32(_mm256_and_si256(b, expmask), expmask);
+            let manz = _mm256_cmpeq_epi32(_mm256_and_si256(b, manmask), _mm256_setzero_si256());
+            let nan = _mm256_andnot_si256(manz, isexp);
+            let nanres = _mm256_or_si256(_mm256_srli_epi32::<16>(b), quiet);
+            let res = _mm256_blendv_epi8(q, nanres, nan);
+            // u32 lanes (≤ 0xffff) → 8 contiguous u16, little-endian
+            let packed = _mm256_packus_epi32(res, res);
+            let ordered = _mm256_permute4x64_epi64::<0b1000>(packed);
+            _mm_storeu_si128(dst.add(2 * i) as *mut __m128i, _mm256_castsi256_si128(ordered));
+            i += 8;
+        }
+        while i < n {
+            let h = crate::math::scalar::f32_to_bf16(*src.add(i)).to_le_bytes();
+            *dst.add(2 * i) = h[0];
+            *dst.add(2 * i + 1) = h[1];
+            i += 1;
+        }
+        out.set_len(start + 2 * n);
+    }
+
+    /// bf16 decode, 8 lanes per iteration: widen u16→u32, shift left 16.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bf16_decode_into(out: &mut Vec<f32>, bytes: &[u8]) {
+        debug_assert_eq!(bytes.len() % 2, 0);
+        let n = bytes.len() / 2;
+        let start = out.len();
+        out.reserve(n);
+        let dst = out.as_mut_ptr().add(start);
+        let src = bytes.as_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let h = _mm_loadu_si128(src.add(2 * i) as *const __m128i);
+            let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h));
+            _mm256_storeu_ps(dst.add(i), _mm256_castsi256_ps(w));
+            i += 8;
+        }
+        while i < n {
+            let h = u16::from_le_bytes([*src.add(2 * i), *src.add(2 * i + 1)]);
+            *dst.add(i) = crate::math::scalar::bf16_to_f32(h);
+            i += 1;
+        }
+        out.set_len(start + n);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub mod sse2 {
+    use std::arch::x86_64::*;
+
+    /// SSE2 is part of the x86_64 baseline — always available.
+    pub fn available() -> bool {
+        true
+    }
+
+    const LANES: usize = 4;
+    const DLANES: usize = 2;
+
+    #[inline(always)]
+    unsafe fn loadf(p: *const f32) -> __m128 {
+        _mm_loadu_ps(p)
+    }
+    #[inline(always)]
+    unsafe fn storef(p: *mut f32, v: __m128) {
+        _mm_storeu_ps(p, v)
+    }
+    #[inline(always)]
+    unsafe fn splatf(a: f32) -> __m128 {
+        _mm_set1_ps(a)
+    }
+    #[inline(always)]
+    unsafe fn vadd(a: __m128, b: __m128) -> __m128 {
+        _mm_add_ps(a, b)
+    }
+    #[inline(always)]
+    unsafe fn vsub(a: __m128, b: __m128) -> __m128 {
+        _mm_sub_ps(a, b)
+    }
+    #[inline(always)]
+    unsafe fn vmul(a: __m128, b: __m128) -> __m128 {
+        _mm_mul_ps(a, b)
+    }
+
+    #[inline(always)]
+    unsafe fn dzero() -> __m128d {
+        _mm_setzero_pd()
+    }
+    #[inline(always)]
+    unsafe fn dadd(a: __m128d, b: __m128d) -> __m128d {
+        _mm_add_pd(a, b)
+    }
+    #[inline(always)]
+    unsafe fn dsub(a: __m128d, b: __m128d) -> __m128d {
+        _mm_sub_pd(a, b)
+    }
+    #[inline(always)]
+    unsafe fn dmul(a: __m128d, b: __m128d) -> __m128d {
+        _mm_mul_pd(a, b)
+    }
+    /// 8 consecutive f32 → four f64×2 groups, order-preserving.
+    #[inline(always)]
+    unsafe fn dload8(p: *const f32) -> [__m128d; 4] {
+        let lo = _mm_loadu_ps(p);
+        let hi = _mm_loadu_ps(p.add(4));
+        [
+            _mm_cvtps_pd(lo),
+            _mm_cvtps_pd(_mm_movehl_ps(lo, lo)),
+            _mm_cvtps_pd(hi),
+            _mm_cvtps_pd(_mm_movehl_ps(hi, hi)),
+        ]
+    }
+    #[inline(always)]
+    unsafe fn dstore8(out: &mut [f64; 8], acc: [__m128d; 4]) {
+        for (j, a) in acc.iter().enumerate() {
+            _mm_storeu_pd(out.as_mut_ptr().add(2 * j), *a);
+        }
+    }
+
+    isa_kernels!("sse2");
+
+    /// bf16 encode: the baseline build already targets SSE2, so this is
+    /// the scalar body (kept for dispatch-table uniformity).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn bf16_encode_into(out: &mut Vec<u8>, vals: &[f32]) {
+        crate::math::scalar::bf16_encode_into(out, vals);
+    }
+
+    /// bf16 decode (scalar body, see [`bf16_encode_into`]).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn bf16_decode_into(out: &mut Vec<f32>, bytes: &[u8]) {
+        crate::math::scalar::bf16_decode_into(out, bytes);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use std::arch::aarch64::*;
+
+    /// NEON is part of the aarch64 baseline — always available.
+    pub fn available() -> bool {
+        true
+    }
+
+    const LANES: usize = 4;
+    const DLANES: usize = 2;
+
+    #[inline(always)]
+    unsafe fn loadf(p: *const f32) -> float32x4_t {
+        vld1q_f32(p)
+    }
+    #[inline(always)]
+    unsafe fn storef(p: *mut f32, v: float32x4_t) {
+        vst1q_f32(p, v)
+    }
+    #[inline(always)]
+    unsafe fn splatf(a: f32) -> float32x4_t {
+        vdupq_n_f32(a)
+    }
+    #[inline(always)]
+    unsafe fn vadd(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vaddq_f32(a, b)
+    }
+    #[inline(always)]
+    unsafe fn vsub(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vsubq_f32(a, b)
+    }
+    #[inline(always)]
+    unsafe fn vmul(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vmulq_f32(a, b)
+    }
+
+    #[inline(always)]
+    unsafe fn dzero() -> float64x2_t {
+        vdupq_n_f64(0.0)
+    }
+    #[inline(always)]
+    unsafe fn dadd(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+        vaddq_f64(a, b)
+    }
+    #[inline(always)]
+    unsafe fn dsub(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+        vsubq_f64(a, b)
+    }
+    #[inline(always)]
+    unsafe fn dmul(a: float64x2_t, b: float64x2_t) -> float64x2_t {
+        vmulq_f64(a, b)
+    }
+    /// 8 consecutive f32 → four f64×2 groups, order-preserving.
+    #[inline(always)]
+    unsafe fn dload8(p: *const f32) -> [float64x2_t; 4] {
+        let lo = vld1q_f32(p);
+        let hi = vld1q_f32(p.add(4));
+        [
+            vcvt_f64_f32(vget_low_f32(lo)),
+            vcvt_f64_f32(vget_high_f32(lo)),
+            vcvt_f64_f32(vget_low_f32(hi)),
+            vcvt_f64_f32(vget_high_f32(hi)),
+        ]
+    }
+    #[inline(always)]
+    unsafe fn dstore8(out: &mut [f64; 8], acc: [float64x2_t; 4]) {
+        for (j, a) in acc.iter().enumerate() {
+            vst1q_f64(out.as_mut_ptr().add(2 * j), *a);
+        }
+    }
+
+    isa_kernels!("neon");
+
+    /// bf16 encode, 4 lanes per iteration (integer NEON; the scalar
+    /// RNE add and quiet-NaN forcing per lane, narrowed and stored LE).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn bf16_encode_into(out: &mut Vec<u8>, vals: &[f32]) {
+        let n = vals.len();
+        let start = out.len();
+        out.reserve(2 * n);
+        let dst = out.as_mut_ptr().add(start);
+        let src = vals.as_ptr();
+        let round = vdupq_n_u32(0x7fff);
+        let one = vdupq_n_u32(1);
+        let expmask = vdupq_n_u32(0x7f80_0000);
+        let manmask = vdupq_n_u32(0x007f_ffff);
+        let quiet = vdupq_n_u32(0x40);
+        let mut i = 0;
+        while i + 4 <= n {
+            let b = vreinterpretq_u32_f32(vld1q_f32(src.add(i)));
+            let lsb = vandq_u32(vshrq_n_u32::<16>(b), one);
+            let r = vaddq_u32(b, vaddq_u32(round, lsb));
+            let q = vshrq_n_u32::<16>(r);
+            let isexp = vceqq_u32(vandq_u32(b, expmask), expmask);
+            let manz = vceqq_u32(vandq_u32(b, manmask), vdupq_n_u32(0));
+            let nan = vbicq_u32(isexp, manz);
+            let nanres = vorrq_u32(vshrq_n_u32::<16>(b), quiet);
+            let res = vbslq_u32(nan, nanres, q);
+            let h = vmovn_u32(res);
+            let mut lanes = [0u16; 4];
+            vst1_u16(lanes.as_mut_ptr(), h);
+            // byte copy: the Vec<u8> destination has no u16 alignment
+            std::ptr::copy_nonoverlapping(lanes.as_ptr() as *const u8, dst.add(2 * i), 8);
+            i += 4;
+        }
+        while i < n {
+            let h = crate::math::scalar::f32_to_bf16(*src.add(i)).to_le_bytes();
+            *dst.add(2 * i) = h[0];
+            *dst.add(2 * i + 1) = h[1];
+            i += 1;
+        }
+        out.set_len(start + 2 * n);
+    }
+
+    /// bf16 decode, 4 lanes per iteration: widen u16→u32, shift left 16.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn bf16_decode_into(out: &mut Vec<f32>, bytes: &[u8]) {
+        debug_assert_eq!(bytes.len() % 2, 0);
+        let n = bytes.len() / 2;
+        let start = out.len();
+        out.reserve(n);
+        let dst = out.as_mut_ptr().add(start);
+        let src = bytes.as_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let mut lanes = [0u16; 4];
+            // byte copy: the source byte stream has no u16 alignment
+            std::ptr::copy_nonoverlapping(src.add(2 * i), lanes.as_mut_ptr() as *mut u8, 8);
+            let w = vshlq_n_u32::<16>(vmovl_u16(vld1_u16(lanes.as_ptr())));
+            vst1q_f32(dst.add(i), vreinterpretq_f32_u32(w));
+            i += 4;
+        }
+        while i < n {
+            let h = u16::from_le_bytes([*src.add(2 * i), *src.add(2 * i + 1)]);
+            *dst.add(i) = crate::math::scalar::bf16_to_f32(h);
+            i += 1;
+        }
+        out.set_len(start + n);
+    }
+}

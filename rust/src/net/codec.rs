@@ -221,85 +221,13 @@ pub fn reply_encoding(enc: Encoding) -> Encoding {
 }
 
 // ---------------------------------------------------------- f16 / bf16
+//
+// The per-element converters moved to `math::scalar` so the kernel
+// dispatch layer can share one reference definition between the scalar
+// and SIMD batch codecs; re-exported here (their historical home) with
+// identical signatures and bit behaviour, pinned by the tests below.
 
-/// f32 → IEEE binary16 bits, round-to-nearest-even (overflow → ±inf,
-/// NaN stays NaN).
-pub fn f32_to_f16(x: f32) -> u16 {
-    let b = x.to_bits();
-    let sign = ((b >> 16) & 0x8000) as u16;
-    let exp = ((b >> 23) & 0xff) as i32;
-    let man = b & 0x007f_ffff;
-    if exp == 0xff {
-        // inf / NaN: keep NaN-ness with a nonzero mantissa
-        return if man == 0 { sign | 0x7c00 } else { sign | 0x7c00 | ((man >> 13) as u16).max(1) };
-    }
-    let e = exp - 127 + 15;
-    if e >= 31 {
-        return sign | 0x7c00; // overflow → inf
-    }
-    if e <= 0 {
-        if e < -10 {
-            return sign; // underflow → signed zero
-        }
-        // subnormal half: shift the full 24-bit significand down,
-        // rounding to nearest-even on the dropped bits
-        let m = man | 0x0080_0000;
-        let shift = (14 - e) as u32; // 14..=24
-        let kept = m >> shift;
-        let rem = m & ((1u32 << shift) - 1);
-        let halfway = 1u32 << (shift - 1);
-        let rounded =
-            if rem > halfway || (rem == halfway && kept & 1 == 1) { kept + 1 } else { kept };
-        return sign | rounded as u16; // carry into exp 1 is correct
-    }
-    let kept = (man >> 13) as u16;
-    let rem = man & 0x1fff;
-    let mut h = sign | ((e as u16) << 10) | kept;
-    if rem > 0x1000 || (rem == 0x1000 && h & 1 == 1) {
-        h += 1; // mantissa carry may roll into the exponent (→ inf): correct
-    }
-    h
-}
-
-/// IEEE binary16 bits → f32 (exact — every half is representable).
-pub fn f16_to_f32(h: u16) -> f32 {
-    let sign = ((h & 0x8000) as u32) << 16;
-    let exp = ((h >> 10) & 0x1f) as u32;
-    let man = (h & 0x03ff) as u32;
-    let bits = if exp == 0 {
-        if man == 0 {
-            sign
-        } else {
-            // subnormal: normalize into an f32 normal
-            let mut m = man;
-            let mut e32 = 113u32; // f32 exponent field once bit 10 lands
-            while m & 0x0400 == 0 {
-                m <<= 1;
-                e32 -= 1;
-            }
-            sign | (e32 << 23) | ((m & 0x03ff) << 13)
-        }
-    } else if exp == 31 {
-        sign | 0x7f80_0000 | (man << 13)
-    } else {
-        sign | ((exp + 112) << 23) | (man << 13)
-    };
-    f32::from_bits(bits)
-}
-
-/// f32 → bfloat16 bits, round-to-nearest-even (NaN stays NaN).
-pub fn f32_to_bf16(x: f32) -> u16 {
-    let b = x.to_bits();
-    if x.is_nan() {
-        return ((b >> 16) as u16) | 0x0040; // force a quiet, nonzero mantissa
-    }
-    (b.wrapping_add(0x7fff + ((b >> 16) & 1)) >> 16) as u16
-}
-
-/// bfloat16 bits → f32 (exact — bf16 is a truncated f32).
-pub fn bf16_to_f32(h: u16) -> f32 {
-    f32::from_bits((h as u32) << 16)
-}
+pub use crate::math::scalar::{bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16};
 
 // ---------------------------------------------------------- payload codec
 
@@ -326,17 +254,11 @@ pub(crate) fn put_payload(out: &mut Vec<u8>, enc: Encoding, vals: &[f32]) {
         Encoding::None => wire::put_vec_f32(out, vals),
         Encoding::F16 => {
             wire::put_u64(out, vals.len() as u64);
-            out.reserve(2 * vals.len());
-            for &x in vals {
-                out.extend_from_slice(&f32_to_f16(x).to_le_bytes());
-            }
+            crate::math::f16_encode_into(out, vals);
         }
         Encoding::Bf16 => {
             wire::put_u64(out, vals.len() as u64);
-            out.reserve(2 * vals.len());
-            for &x in vals {
-                out.extend_from_slice(&f32_to_bf16(x).to_le_bytes());
-            }
+            crate::math::bf16_encode_into(out, vals);
         }
         Encoding::TopK { .. } => {
             let nnz = vals.iter().filter(|x| **x != 0.0).count();
@@ -370,16 +292,19 @@ pub(crate) fn get_payload(d: &mut Dec<'_>) -> anyhow::Result<Vec<f32>> {
                     .ok_or_else(|| anyhow::anyhow!("f16 count {n} overflows"))?,
             )?;
             let mut out = Vec::with_capacity(n);
-            for c in bytes.chunks_exact(2) {
-                let h = u16::from_le_bytes(c.try_into().expect("2 bytes"));
-                let x = if tag == 1 { f16_to_f32(h) } else { bf16_to_f32(h) };
-                anyhow::ensure!(
-                    !x.is_nan(),
-                    "NaN in a {}-encoded payload",
-                    if tag == 1 { "f16" } else { "bf16" }
-                );
-                out.push(x);
+            if tag == 1 {
+                crate::math::f16_decode_into(&mut out, bytes);
+            } else {
+                crate::math::bf16_decode_into(&mut out, bytes);
             }
+            // Fail-closed NaN scan after the batch decode (same rejection
+            // as the old per-element loop; the frame is dropped whole
+            // either way, so checking after densify is equivalent).
+            anyhow::ensure!(
+                !out.iter().any(|x| x.is_nan()),
+                "NaN in a {}-encoded payload",
+                if tag == 1 { "f16" } else { "bf16" }
+            );
             Ok(out)
         }
         3 => {
@@ -556,16 +481,8 @@ impl Compressor {
     pub fn transform(&mut self, slot: usize, g: &mut [f32]) {
         match self.enc {
             Encoding::None => {}
-            Encoding::F16 => {
-                for x in g.iter_mut() {
-                    *x = f16_to_f32(f32_to_f16(*x));
-                }
-            }
-            Encoding::Bf16 => {
-                for x in g.iter_mut() {
-                    *x = bf16_to_f32(f32_to_bf16(*x));
-                }
-            }
+            Encoding::F16 => crate::math::f16_round_trip(g),
+            Encoding::Bf16 => crate::math::bf16_round_trip(g),
             Encoding::TopK { k } => {
                 let n = g.len();
                 if slot >= self.residuals.len() {

@@ -139,6 +139,10 @@ pub struct StatusSnapshot {
     /// tx-byte rate from the scrape-to-scrape delta, filled by the
     /// listener like `pushes_per_sec` (0.0 on the first scrape).
     pub bytes_per_second: f64,
+    /// Active math kernel backend name (`scalar`/`sse2`/`avx2`/`neon`),
+    /// from [`crate::math::active_kernels`] — a scrape can tell at a
+    /// glance whether a deployment is running the SIMD path it expects.
+    pub kernels: &'static str,
     pub gap: HistogramSnapshot,
     pub lag: HistogramSnapshot,
     /// Per-shard (gate position, ticket backlog); empty on the
@@ -287,6 +291,8 @@ pub fn render_prometheus(s: &StatusSnapshot) -> String {
     let _ = writeln!(o, "dana_bytes_rx_total {}", s.bytes_rx);
     let _ = writeln!(o, "# TYPE dana_bytes_per_second gauge");
     let _ = writeln!(o, "dana_bytes_per_second {}", s.bytes_per_second);
+    let _ = writeln!(o, "# TYPE dana_kernel_backend gauge");
+    let _ = writeln!(o, "dana_kernel_backend{{backend=\"{}\"}} 1", s.kernels);
     let _ = writeln!(o, "# TYPE dana_workers_live gauge");
     let _ = writeln!(o, "dana_workers_live {}", s.live_workers);
     let _ = writeln!(o, "# TYPE dana_workers_total gauge");
@@ -411,6 +417,7 @@ pub fn render_status_json(s: &StatusSnapshot) -> String {
         ("bytes_tx", Json::num(s.bytes_tx as f64)),
         ("bytes_rx", Json::num(s.bytes_rx as f64)),
         ("bytes_per_sec", Json::num(s.bytes_per_second)),
+        ("kernels", Json::Str(s.kernels.into())),
         ("gap", histogram_json(&s.gap)),
         ("lag", histogram_json(&s.lag)),
         ("shards", Json::Arr(shards)),
@@ -624,6 +631,7 @@ mod tests {
             bytes_tx: 4096,
             bytes_rx: 2048,
             bytes_per_second: 512.0,
+            kernels: "scalar",
             gap: gap.snapshot(),
             lag: lag.snapshot(),
             shard_gates: vec![(40, 0), (39, 1)],
@@ -659,6 +667,7 @@ mod tests {
             "dana_workers_live 3",
             "dana_workers_total 4",
             "dana_workers_retired 1",
+            "dana_kernel_backend{backend=\"scalar\"} 1",
             "dana_shard_gate_position{shard=\"0\"} 40",
             "dana_shard_ticket_backlog{shard=\"1\"} 1",
             // cumulative le-buckets: two 1e-6 gaps, one 0.05
@@ -723,6 +732,7 @@ mod tests {
         assert_eq!(v.at(&["cluster", "takeovers_total"]).unwrap().as_usize().unwrap(), 1);
         assert_eq!(v.at(&["cluster", "shards_total"]).unwrap().as_usize().unwrap(), 4);
         assert_eq!(v.at(&["cluster", "standby_lag_steps"]).unwrap(), &Json::Null);
+        assert_eq!(v.at(&["kernels"]).unwrap(), &Json::str("scalar"));
         // lag histogram quantiles survive the trip
         assert!(v.at(&["lag", "p50"]).unwrap().as_f64().unwrap() <= 1.0);
     }
@@ -740,6 +750,7 @@ mod tests {
             bytes_tx: 0,
             bytes_rx: 0,
             bytes_per_second: 0.0,
+            kernels: "scalar",
             gap: AtomicHistogram::new(GAP_BOUNDS).snapshot(),
             lag: AtomicHistogram::new(LAG_BOUNDS).snapshot(),
             shard_gates: Vec::new(),

@@ -417,6 +417,7 @@ impl http::StatusSource for Shared {
             bytes_tx: hub.bytes_tx_total(),
             bytes_rx: hub.bytes_rx_total(),
             bytes_per_second: 0.0, // listener-filled, like pushes/s
+            kernels: crate::math::active_kernels().name(),
             gap: hub.gap_histogram(),
             lag: hub.lag_histogram(),
             shard_gates: self.master.shard_gates(),
@@ -790,6 +791,11 @@ fn serve_requests(
     let hub = shared.master.metrics_hub();
     let ranges = shared.master.shard_ranges();
     let mut group = PushGroup::new(shared.master.param_len(), ranges.len());
+    // Per-connection pull scratch: parameter replies borrow this one
+    // buffer instead of allocating a fresh Vec<f32> per pull (the reply's
+    // byte side already reuses the pooled `FrameBuf`).  It travels through
+    // the reply `Msg` by value and is reclaimed after the write.
+    let mut pull_scratch: Vec<f32> = Vec::new();
     loop {
         // EOF or a malformed (fail-closed) frame both end the connection.
         let msg = match wire::read_frame_sized(reader) {
@@ -802,7 +808,8 @@ fn serve_requests(
         if sync::lock(&shared.conns).shutdown {
             return Ok(()); // close without a reply: the client sees EOF
         }
-        let (reply, shutdown_after) = dispatch(shared, slot, gen, msg, &ranges, &mut group);
+        let (reply, shutdown_after) =
+            dispatch(shared, slot, gen, msg, &ranges, &mut group, &mut pull_scratch);
         // Parameter replies to a quantization-granted worker go through
         // the codec writers (straight from the reply's buffer); everything
         // else — and every `none` reply — is the byte-exact `Msg` path.
@@ -816,6 +823,14 @@ fn serve_requests(
             other => wire::write_frame(writer, other)?,
         };
         hub.note_tx(nwrote);
+        // Reclaim the scratch a parameter reply carried out (keeps its
+        // capacity for the next pull on this connection).
+        match reply {
+            Msg::Params { params, .. } | Msg::ShardParams { params, .. } => {
+                pull_scratch = params;
+            }
+            _ => {}
+        }
         if shutdown_after {
             return Ok(());
         }
@@ -843,6 +858,7 @@ fn dispatch(
     msg: Msg,
     ranges: &[Range<usize>],
     group: &mut PushGroup,
+    pull_scratch: &mut Vec<f32>,
 ) -> (Msg, bool) {
     let recoverable = |detail: String| Msg::Error { recoverable: true, detail };
     let fatal = |detail: &str| Msg::Error { recoverable: false, detail: detail.to_string() };
@@ -858,8 +874,11 @@ fn dispatch(
             if !slot_ok(shared, w, gen, None) {
                 recoverable(format!("pull for retired worker slot {w}"))
             } else {
-                match shared.master.pull(w) {
-                    Ok(params) => Msg::Params { header: shared.header(), params },
+                match shared.master.pull_into(w, pull_scratch) {
+                    Ok(()) => Msg::Params {
+                        header: shared.header(),
+                        params: std::mem::take(pull_scratch),
+                    },
                     Err(e) => recoverable(format!("{e:#}")),
                 }
             }
@@ -874,11 +893,15 @@ fn dispatch(
                     if !slot_ok(shared, w, gen, None) {
                         recoverable(format!("pull for retired worker slot {w}"))
                     } else {
-                        match shared.master.pull_shard(w, local) {
-                            Ok(params) => {
+                        match shared.master.pull_shard_into(w, local, pull_scratch) {
+                            Ok(()) => {
                                 // echo the global id: the client indexes
                                 // its own placement-wide ranges by it
-                                Msg::ShardParams { header: shared.header(), shard, params }
+                                Msg::ShardParams {
+                                    header: shared.header(),
+                                    shard,
+                                    params: std::mem::take(pull_scratch),
+                                }
                             }
                             Err(e) => recoverable(format!("{e:#}")),
                         }

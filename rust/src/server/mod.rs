@@ -256,8 +256,27 @@ pub trait ServingMaster: Send + Sync {
     /// Full-length pull.  Errors (rather than panicking) for a retired
     /// slot — over the wire that is a racy-but-recoverable condition.
     fn pull(&self, worker: usize) -> anyhow::Result<Vec<f32>>;
+    /// Full-length pull into a caller-retained buffer — the serving loop
+    /// keeps one scratch vector per connection so the reply hot path
+    /// allocates nothing (DESIGN.md §15).  `out` is resized to k; on
+    /// error its contents are unspecified.  Default delegates to
+    /// [`Self::pull`] for backends without an in-place path.
+    fn pull_into(&self, worker: usize, out: &mut Vec<f32>) -> anyhow::Result<()> {
+        *out = self.pull(worker)?;
+        Ok(())
+    }
     /// One shard's slice of a pull (wire `PullShard`).
     fn pull_shard(&self, worker: usize, shard: usize) -> anyhow::Result<Vec<f32>>;
+    /// Sharded pull into a caller-retained buffer (see [`Self::pull_into`]).
+    fn pull_shard_into(
+        &self,
+        worker: usize,
+        shard: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        *out = self.pull_shard(worker, shard)?;
+        Ok(())
+    }
     /// Apply a push; returns the applied [`Step`] and the master step the
     /// update *settled as* (its ticket — exact even under concurrency),
     /// which `PushAck` reports back to pipelined clients.
@@ -446,6 +465,15 @@ impl ServingMaster for LockedMaster {
         Ok(m.pull_params(worker))
     }
 
+    fn pull_into(&self, worker: usize, out: &mut Vec<f32>) -> anyhow::Result<()> {
+        self.clear_group(worker);
+        let mut m = sync::lock(&self.inner);
+        anyhow::ensure!(m.is_live(worker), "pull for retired/unknown worker {worker}");
+        out.resize(m.param_len(), 0.0);
+        m.pull_into(worker, out);
+        Ok(())
+    }
+
     /// Reference-backend sliced pull: the first slice of a group performs
     /// ONE inner full pull and caches it; the remaining slices are cut
     /// from the cache, so the inner pull-window accounting counts one
@@ -455,6 +483,17 @@ impl ServingMaster for LockedMaster {
     /// not here, which is the same cross-slice staleness a pull already
     /// tolerates (DESIGN.md §9); serial driving is bit-for-bit equal.
     fn pull_shard(&self, worker: usize, shard: usize) -> anyhow::Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.pull_shard_into(worker, shard, &mut out)?;
+        Ok(out)
+    }
+
+    fn pull_shard_into(
+        &self,
+        worker: usize,
+        shard: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
         let mut m = sync::lock(&self.inner);
         anyhow::ensure!(m.is_live(worker), "pull for retired/unknown worker {worker}");
         let ranges = shard_bounds(m.param_len(), self.shards);
@@ -472,15 +511,17 @@ impl ServingMaster for LockedMaster {
                 full: m.pull_params(worker),
             });
         }
-        let (out, complete) = {
+        let complete = {
             let g = groups[worker].as_mut().expect("just ensured");
             g.fetched[shard] = true;
-            (g.full[r].to_vec(), g.fetched.iter().all(|&f| f))
+            out.clear();
+            out.extend_from_slice(&g.full[r]);
+            g.fetched.iter().all(|&f| f)
         };
         if complete {
             groups[worker] = None;
         }
-        Ok(out)
+        Ok(())
     }
 
     fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<(Step, u64)> {
@@ -592,8 +633,22 @@ impl ServingMaster for ShardedParameterServer {
         self.pull_concurrent(worker)
     }
 
+    fn pull_into(&self, worker: usize, out: &mut Vec<f32>) -> anyhow::Result<()> {
+        out.resize(self.param_count(), 0.0);
+        self.pull_into_concurrent(worker, out)
+    }
+
     fn pull_shard(&self, worker: usize, shard: usize) -> anyhow::Result<Vec<f32>> {
         self.pull_shard_concurrent(worker, shard)
+    }
+
+    fn pull_shard_into(
+        &self,
+        worker: usize,
+        shard: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        self.pull_shard_into_concurrent(worker, shard, out)
     }
 
     fn push(&self, worker: usize, msg: &[f32]) -> anyhow::Result<(Step, u64)> {

@@ -212,9 +212,15 @@ pub struct ShardedParameterServer {
     kind: AlgorithmKind,
     /// Total parameter count k.
     k: usize,
-    /// Scoped-thread fan-out width for a single push/pull (1 = serial;
-    /// concurrent callers usually provide the parallelism themselves).
+    /// Fan-out width for a single push/pull (1 = serial; concurrent
+    /// callers usually provide the parallelism themselves).
     threads: usize,
+    /// Persistent parked workers for the fan-out (spawned once here, not
+    /// per apply); chunk boundaries match the scoped reference, so results
+    /// are identical.  The submitter participates in its own job, which
+    /// keeps ticket-gated push fan-outs deadlock-free (see
+    /// [`parallel::WorkerPool`]).
+    pool: parallel::WorkerPool,
     momentum_correction: bool,
     /// Cached `needs_apply_stats` of the algorithm (true only for rules
     /// with whole-vector reductions — YellowFin).
@@ -264,10 +270,12 @@ impl ShardedParameterServer {
             })
             .collect();
         let last_eta = schedule.eta_at(0);
+        let threads = crate::util::parallel::default_threads();
         ShardedParameterServer {
             kind,
             k: theta0.len(),
-            threads: crate::util::parallel::default_threads(),
+            threads,
+            pool: parallel::WorkerPool::new(threads),
             momentum_correction: true,
             needs_stats,
             epoch: RwLock::new(()),
@@ -304,11 +312,13 @@ impl ShardedParameterServer {
         }
     }
 
-    /// Cap the scoped-thread fan-out of ONE push/pull (1 = serial shard
-    /// loop).  Concurrent serving threads each fan out independently, so
-    /// serving configurations usually want 1 here.
+    /// Cap the worker-pool fan-out of ONE push/pull (1 = serial shard
+    /// loop, and the pool spawns no threads at all).  Concurrent serving
+    /// threads each fan out independently, so serving configurations
+    /// usually want 1 here.
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self.pool = parallel::WorkerPool::new(self.threads);
         self
     }
 
@@ -497,7 +507,7 @@ impl ShardedParameterServer {
             out_rest = o_rem;
             keep_rest = c_rem;
         }
-        parallel::par_chunks_mut(&mut work, self.threads, |_, group| {
+        self.pool.par_chunks_mut(&mut work, |_, group| {
             for (sh, o, c) in group.iter_mut() {
                 let alg = sync::read(&sh.alg);
                 alg.master_send(worker, o, s);
@@ -514,6 +524,20 @@ impl ShardedParameterServer {
     /// entry, for the push-before-pull guard and lag accounting) once
     /// every shard has been fetched.
     pub fn pull_shard_concurrent(&self, worker: usize, shard: usize) -> anyhow::Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.pull_shard_into_concurrent(worker, shard, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Self::pull_shard_concurrent`] into a caller-retained buffer (the
+    /// serving loop's per-connection scratch) — no allocation when the
+    /// buffer already has the shard's capacity.
+    pub fn pull_shard_into_concurrent(
+        &self,
+        worker: usize,
+        shard: usize,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
         anyhow::ensure!(
             shard < self.shards.len(),
             "pull for shard {shard} of {}",
@@ -541,14 +565,15 @@ impl ShardedParameterServer {
             (t, q.schedule.step_at(t), q.pipeline + 1, complete)
         };
         let sh = &self.shards[shard];
-        let mut out = vec![0.0f32; sh.range.len()];
+        out.clear();
+        out.resize(sh.range.len(), 0.0);
         {
             let alg = sync::read(&sh.alg);
-            alg.master_send(worker, &mut out, s);
+            alg.master_send(worker, out, s);
         }
         let mut building = sp.building.take().unwrap_or_default();
         building.resize(self.k, 0.0);
-        building[sh.range.clone()].copy_from_slice(&out);
+        building[sh.range.clone()].copy_from_slice(out);
         if complete {
             // the assembled group becomes one window entry, pulled at the
             // completion step (matching the monolithic accounting)
@@ -560,7 +585,7 @@ impl ShardedParameterServer {
         } else {
             sp.building = Some(building);
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Concurrent push: take a ticket under the sequencer, then apply to
@@ -702,7 +727,7 @@ impl ShardedParameterServer {
             }
         } else {
             // Elementwise rules: one ticket-ordered pass per shard, fanned
-            // out over scoped threads.  Each shard's gate admits tickets
+            // out over the worker pool.  Each shard's gate admits tickets
             // in order, so overlapping pushes pipeline across shards.
             // A provided override carries globally merged statistics from
             // a cluster-wide staging pass, so even stats-hungry rules take
@@ -711,7 +736,10 @@ impl ShardedParameterServer {
             let sent_ref: &[f32] = sent;
             let mut work: Vec<(&ShardCell, &mut (f64, f64))> =
                 self.shards.iter().zip(partials.iter_mut()).collect();
-            parallel::par_chunks_mut(&mut work, self.threads, |_, group| {
+            // Pool, not scope: parts below block in `wait_ticket`, and the
+            // pool's submitter-participation rule is what keeps concurrent
+            // gated pushes deadlock-free (see `parallel::WorkerPool`).
+            self.pool.par_chunks_mut(&mut work, |_, group| {
                 for (sh, partial) in group.iter_mut() {
                     sh.wait_ticket(ticket);
                     let _bump = TicketBump { cell: sh, next: ticket + 1 };

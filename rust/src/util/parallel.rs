@@ -1,12 +1,57 @@
-//! Scoped-thread data parallelism (rayon is not in the offline registry).
+//! Data parallelism for the master's O(k) fan-outs (rayon is not in the
+//! offline registry).
 //!
-//! The master's O(k) update loops are memory-bandwidth bound; for the param
-//! sizes in this repo (1e5..1e6 f32) single-thread is usually fastest, but
-//! the chunked helper lets the perf pass measure the crossover and the
-//! benches exercise both paths.
+//! Two execution strategies share one chunking rule (`chunk =
+//! n.div_ceil(threads)`, chunk `i` covering `[i*chunk, min((i+1)*chunk, n))`),
+//! so their parallel results are interchangeable:
+//!
+//! * [`par_chunks_mut`] — the original scoped-thread reference: spawns OS
+//!   threads per call.  Kept as the semantic baseline (the equivalence
+//!   tests pit the pool against it) and for one-shot callers.
+//! * [`WorkerPool`] — a persistent parked pool, spawned once per
+//!   [`crate::server::ShardedParameterServer`].  Spawning OS threads inside
+//!   every gated apply costs more than the memory-bound loop it fans out at
+//!   the 1e5–1e6-element sizes this repo targets; the pool parks instead.
+//!
+//! ## Why the submitter participates (deadlock freedom)
+//!
+//! Push fan-out parts block in `ShardCell::wait_ticket` until every earlier
+//! ticket has applied on that shard.  With a bounded shared pool, all pool
+//! workers could be parked inside parts of a *later*-ticket push while the
+//! earlier push's job sits queued — a deadlock the per-call `thread::scope`
+//! never had (it spawned unboundedly).  The pool therefore never makes a
+//! submitter depend on pool capacity: after enqueueing, the submitting
+//! thread claims parts *from its own job only* until none remain.  The push
+//! holding the minimum outstanding ticket never blocks in `wait_ticket`, so
+//! it can always drain its own job inline, bumping shard gates and waking
+//! any pool workers parked on later tickets.  Progress is guaranteed with
+//! any pool size, including zero workers.
+//!
+//! ## Panic containment
+//!
+//! A panicking part must not kill a pool worker (the pool outlives the
+//! request) and must not wedge the submitter (it waits for all parts to
+//! finish).  Each part runs under `catch_unwind`; the job counts panicked
+//! parts, the worker survives, and the submitter re-raises a panic once the
+//! job completes — the same observable contract as `thread::scope`, which
+//! propagates a child panic to the scope's owner.
 
-/// Number of worker threads to use by default (cores, capped).
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::sync;
+
+/// Number of worker threads to use by default: the `DANA_THREADS` env
+/// override when set (fail-closed on garbage — a typo'd tuning knob should
+/// abort, not silently fall back), else cores capped at 16.
 pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("DANA_THREADS") {
+        match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => return n,
+            _ => panic!("invalid DANA_THREADS {v:?} (want a positive integer)"),
+        }
+    }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
@@ -14,7 +59,8 @@ pub fn default_threads() -> usize {
 }
 
 /// Apply `f(chunk_index, chunk)` to disjoint mutable chunks of `data` in
-/// parallel across `threads` scoped threads.
+/// parallel across `threads` scoped threads (the spawn-per-call reference;
+/// see [`WorkerPool::par_chunks_mut`] for the persistent-pool equivalent).
 pub fn par_chunks_mut<T: Send, F>(data: &mut [T], threads: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Sync,
@@ -63,6 +109,266 @@ where
     out.into_iter().map(|o| o.unwrap()).collect()
 }
 
+// ------------------------------------------------------------ worker pool
+
+/// One queued fan-out.  Lives on the submitting thread's stack for the
+/// whole job (the submitter blocks in [`WorkerPool::run`] until
+/// `finished == parts`), so the raw pointers handed to pool workers stay
+/// valid.  All `Cell` fields are only touched under the pool's state mutex.
+struct JobInner {
+    /// Type-erased trampoline: calls the submitter's part closure.
+    call: unsafe fn(*const (), usize),
+    /// Points at a `&(dyn Fn(usize) + Sync)` on the submitter's stack.
+    ctx: *const (),
+    parts: usize,
+    /// Next part index to claim (== `parts` once fully claimed).
+    next: Cell<usize>,
+    /// Parts that have finished running (panicked or not).
+    finished: Cell<usize>,
+    /// Parts that panicked; the submitter re-raises after completion.
+    panicked: Cell<usize>,
+}
+
+struct JobPtr(*const JobInner);
+
+// SAFETY: the `JobInner` behind a `JobPtr` outlives its time in the queue —
+// the submitter keeps it on its stack until `finished == parts`, and a job
+// leaves the queue no later than its last part is claimed.  All mutation
+// goes through `Cell`s guarded by the pool's state mutex.
+unsafe impl Send for JobPtr {}
+
+struct PoolState {
+    queue: VecDeque<JobPtr>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Signals workers: a job was queued, or shutdown.
+    work: Condvar,
+    /// Signals submitters: some job's last part finished.
+    done: Condvar,
+}
+
+/// A persistent parked worker pool (see module docs for the design).
+///
+/// `WorkerPool::new(t)` spawns `t - 1` parked workers; the submitting
+/// thread is the `t`-th executor, so a fan-out runs on the same number of
+/// threads as the scoped reference with `threads = t`.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    threads: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Create a pool that fans out across `threads` executors (the
+    /// submitter plus `threads - 1` spawned workers).  `threads <= 1`
+    /// spawns nothing; fan-outs then run inline on the submitter.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dana-pool-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, threads, handles }
+    }
+
+    /// Fan-out width this pool was built for.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Apply `f(chunk_index, chunk)` to disjoint mutable chunks of `data`,
+    /// with chunk boundaries identical to [`par_chunks_mut`] at
+    /// `threads = self.threads()` — parallel results are unchanged, only
+    /// the execution vehicle differs (parked pool instead of spawns).
+    pub fn par_chunks_mut<T, F>(&self, data: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let n = data.len();
+        if n == 0 {
+            return;
+        }
+        let threads = self.threads.min(n);
+        if threads == 1 || self.handles.is_empty() {
+            // Same serial order as the reference's single-thread path when
+            // threads == 1; otherwise parts still run, just sequentially.
+            let chunk = n.div_ceil(threads);
+            for (i, c) in data.chunks_mut(chunk).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        let chunk = n.div_ceil(threads);
+        let parts = n.div_ceil(chunk);
+        let base = SendPtr(data.as_mut_ptr());
+        let f = &f;
+        let run_part = move |i: usize| {
+            let start = i * chunk;
+            let len = chunk.min(n - start);
+            // SAFETY: part indices partition `[0, n)` into disjoint
+            // `[i*chunk, i*chunk + len)` ranges of a `&mut [T]` that the
+            // submitter keeps borrowed until every part has finished; each
+            // index is claimed exactly once, so no two threads alias.
+            let c = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+            f(i, c);
+        };
+        self.run(parts, &run_part);
+    }
+
+    /// Queue `parts` invocations of `part_fn` and run them to completion,
+    /// claiming parts from this job (never another submitter's) on the
+    /// calling thread — the deadlock-freedom rule from the module docs.
+    fn run(&self, parts: usize, part_fn: &(dyn Fn(usize) + Sync)) {
+        /// Trampoline re-materializing the part closure from the erased
+        /// context pointer.
+        ///
+        /// # Safety
+        /// `ctx` must point at a live `&(dyn Fn(usize) + Sync)`; the
+        /// submitter keeps it on its stack until the job finishes.
+        unsafe fn call(ctx: *const (), i: usize) {
+            // SAFETY: upheld by the caller per the function contract above.
+            let f: &&(dyn Fn(usize) + Sync) = unsafe { &*ctx.cast() };
+            f(i);
+        }
+        let job = JobInner {
+            call,
+            ctx: std::ptr::addr_of!(part_fn).cast(),
+            parts,
+            next: Cell::new(0),
+            finished: Cell::new(0),
+            panicked: Cell::new(0),
+        };
+        {
+            let mut st = sync::lock(&self.shared.state);
+            st.queue.push_back(JobPtr(&job));
+            drop(st);
+            self.shared.work.notify_all();
+        }
+        // Participate: claim parts from our own job until none remain.
+        loop {
+            let i = {
+                let st = sync::lock(&self.shared.state);
+                let i = job.next.get();
+                if i >= parts {
+                    break;
+                }
+                job.next.set(i + 1);
+                if i + 1 == parts {
+                    // Fully claimed: out of the queue, workers move on.
+                    st_remove(st, &job);
+                }
+                i
+            };
+            run_one(&self.shared, &job, i);
+        }
+        // Wait for parts claimed by pool workers to finish.
+        let panicked = {
+            let mut st = sync::lock(&self.shared.state);
+            while job.finished.get() < parts {
+                st = sync::wait(&self.shared.done, st);
+            }
+            job.panicked.get()
+        };
+        if panicked > 0 {
+            panic!("{panicked} worker pool chunk(s) panicked");
+        }
+    }
+}
+
+/// Remove `job` from the queue (it may not be at the front when the
+/// submitter claims its last part while older jobs still drain).
+fn st_remove(mut st: std::sync::MutexGuard<'_, PoolState>, job: &JobInner) {
+    let target: *const JobInner = job;
+    st.queue.retain(|jp| !std::ptr::eq(jp.0, target));
+}
+
+/// Run one claimed part under `catch_unwind`, then account its completion.
+fn run_one(shared: &PoolShared, job: &JobInner, i: usize) {
+    let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // SAFETY: `call`/`ctx` were packed together by `run`; the job (and
+        // the closure `ctx` points at) is alive because our claimed part
+        // has not yet been counted finished, so the submitter still waits.
+        unsafe { (job.call)(job.ctx, i) }
+    }))
+    .is_err();
+    let st = sync::lock(&shared.state);
+    if hit {
+        job.panicked.set(job.panicked.get() + 1);
+    }
+    job.finished.set(job.finished.get() + 1);
+    let complete = job.finished.get() == job.parts;
+    drop(st);
+    if complete {
+        shared.done.notify_all();
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let (ptr, i) = {
+            let mut st = sync::lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(front) = st.queue.front() {
+                    let ptr = front.0;
+                    // SAFETY: queued jobs are alive (see `JobPtr`).
+                    let job = unsafe { &*ptr };
+                    let i = job.next.get();
+                    job.next.set(i + 1);
+                    if i + 1 == job.parts {
+                        st.queue.pop_front();
+                    }
+                    break (ptr, i);
+                }
+                st = sync::wait(&shared.work, st);
+            }
+        };
+        // SAFETY: our claimed part is not yet counted finished, so the
+        // submitter still has the job (and its closure) on its stack.
+        let job = unsafe { &*ptr };
+        run_one(shared, job, i);
+        // `job` must not be touched past `run_one`: once the last part is
+        // counted, the submitter may return and pop its stack frame.
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = sync::lock(&self.shared.state);
+            st.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A `*mut T` that may cross threads: the pool hands disjoint index ranges
+/// of one live `&mut [T]` to its executors.
+struct SendPtr<T>(*mut T);
+
+// SAFETY: only disjoint, exactly-once-claimed ranges are ever formed from
+// the pointer (see `par_chunks_mut`), and `T: Send` bounds the element.
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,5 +409,86 @@ mod tests {
         par_chunks_mut(&mut e, 4, |_, _| panic!("must not run"));
         let out = par_map::<u8, u8, _>(&[], 4, |_| 0);
         assert!(out.is_empty());
+        let pool = WorkerPool::new(4);
+        let mut e2: Vec<u8> = vec![];
+        pool.par_chunks_mut(&mut e2, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn pool_matches_scoped_chunking() {
+        // Same chunk boundaries as the scoped reference: record which
+        // chunk index touched every element under both vehicles.
+        for threads in [1usize, 2, 3, 4, 7] {
+            for n in [1usize, 2, 5, 16, 1003] {
+                let mut scoped = vec![usize::MAX; n];
+                par_chunks_mut(&mut scoped, threads, |i, c| c.fill(i));
+                let pool = WorkerPool::new(threads);
+                let mut pooled = vec![usize::MAX; n];
+                pool.par_chunks_mut(&mut pooled, |i, c| c.fill(i));
+                assert_eq!(scoped, pooled, "threads={threads} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_and_concurrent() {
+        let pool = WorkerPool::new(4);
+        for round in 0..50u32 {
+            let mut xs = vec![0u32; 257];
+            pool.par_chunks_mut(&mut xs, |_, c| {
+                for x in c {
+                    *x += round;
+                }
+            });
+            assert!(xs.iter().all(|&x| x == round));
+        }
+        // Concurrent submitters share the pool without interference.
+        let pool = std::sync::Arc::new(WorkerPool::new(3));
+        std::thread::scope(|s| {
+            for t in 0..4u32 {
+                let pool = std::sync::Arc::clone(&pool);
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let mut xs = vec![0u32; 101];
+                        pool.par_chunks_mut(&mut xs, |_, c| {
+                            for x in c {
+                                *x += t + 1;
+                            }
+                        });
+                        assert!(xs.iter().all(|&x| x == t + 1));
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn pool_propagates_part_panics_and_survives() {
+        let pool = WorkerPool::new(4);
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut xs = vec![0u8; 64];
+            pool.par_chunks_mut(&mut xs, |i, _| {
+                if i == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(hit.is_err(), "part panic must reach the submitter");
+        // The pool keeps working after a contained panic.
+        let mut xs = vec![0u32; 64];
+        pool.par_chunks_mut(&mut xs, |_, c| c.fill(9));
+        assert!(xs.iter().all(|&x| x == 9));
+    }
+
+    #[test]
+    fn default_threads_env_override() {
+        // Serialize against other env-reading tests in this binary by
+        // running the whole check in one test.
+        std::env::set_var("DANA_THREADS", "3");
+        assert_eq!(default_threads(), 3);
+        std::env::set_var("DANA_THREADS", " 12 ");
+        assert_eq!(default_threads(), 12);
+        std::env::remove_var("DANA_THREADS");
+        assert!(default_threads() >= 1);
     }
 }

@@ -1,0 +1,409 @@
+//! Kernel-dispatch equivalence obligations (PR 10 acceptance):
+//!
+//! 1. Every SIMD backend reproduces the scalar reference **bit-for-bit**
+//!    for every elementwise kernel, on adversarial inputs — NaN payloads
+//!    (quiet and signaling), signed zeros, infinities, subnormals, and
+//!    values straddling the f16 overflow/underflow ladders — at every
+//!    remainder length `0..=3 * lane_width`.
+//! 2. The f16/bf16 wire codecs are bit-identical across backends, with
+//!    the decode direction checked exhaustively over all 2^16 half bits.
+//! 3. The reductions (`dot`, `norm2_sq`, `sub_norm_sq`) return identical
+//!    f64 bits under every backend and from any execution context (the
+//!    fixed 8-lane strided shape of DESIGN.md §15), so `DANA_THREADS`
+//!    and `--kernels` never change a gap/lag measurement.
+//! 4. The persistent [`WorkerPool`] fans out over exactly the chunk
+//!    boundaries of the scoped `par_chunks_mut` reference, so pooled
+//!    applies are bit-identical to the spawn-per-call baseline.
+//! 5. Full stack: a loopback train run under `--kernels scalar` equals
+//!    the auto-dispatched run bit-for-bit (DANA-Zero and YellowFin — the
+//!    latter exercises the reduction paths end-to-end).
+
+use dana::config::{TrainConfig, Workload};
+use dana::math::{self, scalar, KernelBackend};
+use dana::net::{NetServer, ServeOptions};
+use dana::optim::{AlgorithmKind, LrSchedule};
+use dana::server::{make_master, Master};
+use dana::train::{real_async, sim_trainer};
+use dana::util::parallel::{self, WorkerPool};
+use dana::util::rng::Rng;
+
+/// Widest f32 lane count of any backend (AVX2); remainder sweeps cover
+/// `0..=3 * MAX_LANES` so every `main`/tail split shape is exercised.
+const MAX_LANES: usize = 8;
+
+/// Adversarial f32 bit patterns: zeros of both signs, infinities, NaNs
+/// with distinct payloads (one signaling), the subnormal extremes, the
+/// f32 extremes, and values that sit exactly on the f16 conversion
+/// ladder's branch points.
+const WEIRD: &[u32] = &[
+    0x0000_0000, // +0
+    0x8000_0000, // -0
+    0x7f80_0000, // +inf
+    0xff80_0000, // -inf
+    0x7fc0_0000, // canonical quiet NaN
+    0x7fc0_0001, // quiet NaN, payload 1
+    0xffc1_2345, // negative quiet NaN, fat payload
+    0x7f80_0001, // signaling NaN
+    0x0000_0001, // smallest subnormal
+    0x007f_ffff, // largest subnormal
+    0x0080_0000, // smallest normal
+    0x7f7f_ffff, // f32::MAX
+    0xff7f_ffff, // f32::MIN
+    0x3f80_0000, // 1.0
+    0xbf80_0000, // -1.0
+    0x477f_e000, // 65504.0 = f16::MAX
+    0x477f_f000, // rounds to +inf in f16
+    0x3880_0000, // 2^-14 = smallest f16 normal
+    0x387f_c000, // inside the f16 subnormal ladder
+    0x3300_0000, // 2^-25: the f16 round-to-zero boundary
+    0x3eaa_aaab, // 1/3 (inexact everywhere)
+    0xc2c8_0000, // -100.0
+];
+
+/// Every third element a weird pattern, the rest small pseudo-random
+/// normals — outputs mix exceptional and ordinary lanes in one vector.
+fn fill(n: usize, salt: u64) -> Vec<f32> {
+    let mut rng = Rng::new(0x5eed ^ salt);
+    (0..n)
+        .map(|i| {
+            if i % 3 == 0 {
+                f32::from_bits(WEIRD[(i / 3 + salt as usize) % WEIRD.len()])
+            } else {
+                rng.uniform_range(-2.0, 2.0) as f32
+            }
+        })
+        .collect()
+}
+
+/// Like [`fill`] but finite-only (for reference trajectories that must
+/// not collapse to all-NaN before the comparison happens).
+fn fill_finite(n: usize, salt: u64) -> Vec<f32> {
+    fill(n, salt)
+        .into_iter()
+        .map(|x| if x.is_finite() { x } else { 0.25 })
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The non-scalar backends this host can run (empty on exotic arches —
+/// the suite then still pins scalar self-consistency and the pool).
+fn simd_backends() -> Vec<KernelBackend> {
+    math::available_backends()
+        .into_iter()
+        .filter(|&b| b != KernelBackend::Scalar)
+        .collect()
+}
+
+fn lengths() -> Vec<usize> {
+    (0..=3 * MAX_LANES).chain([57, 251, 1003]).collect()
+}
+
+// ---------------------------------------------------------------- (1)
+
+#[test]
+fn elementwise_kernels_match_scalar_bit_for_bit_on_weird_inputs() {
+    let (gamma, eta, lambda) = (0.9f32, 0.05f32, 1.5f32);
+    for b in simd_backends() {
+        for n in lengths() {
+            let salt = n as u64;
+            let g = fill(n, salt);
+            let sent = fill(n, salt + 7);
+
+            // axpy (also covers apply_update = axpy(theta, -eta, u))
+            let mut want = fill(n, salt + 1);
+            let mut got = want.clone();
+            scalar::axpy(&mut want, -eta, &g);
+            math::with_backend(b, || math::axpy(&mut got, -eta, &g));
+            assert_eq!(bits(&want), bits(&got), "{b}: axpy n={n}");
+
+            // momentum_step
+            let (mut t_w, mut v_w) = (fill(n, salt + 2), fill(n, salt + 3));
+            let (mut t_g, mut v_g) = (t_w.clone(), v_w.clone());
+            scalar::momentum_step(&mut t_w, &mut v_w, &g, gamma, eta);
+            math::with_backend(b, || math::momentum_step(&mut t_g, &mut v_g, &g, gamma, eta));
+            assert_eq!(bits(&t_w), bits(&t_g), "{b}: momentum_step theta n={n}");
+            assert_eq!(bits(&v_w), bits(&v_g), "{b}: momentum_step v n={n}");
+
+            // dana_fused_update
+            let (mut t_w, mut v_w, mut s_w) =
+                (fill(n, salt + 2), fill(n, salt + 3), fill(n, salt + 4));
+            let (mut t_g, mut v_g, mut s_g) = (t_w.clone(), v_w.clone(), s_w.clone());
+            scalar::dana_fused_update(&mut t_w, &mut v_w, &mut s_w, &g, gamma, eta);
+            math::with_backend(b, || {
+                math::dana_fused_update(&mut t_g, &mut v_g, &mut s_g, &g, gamma, eta)
+            });
+            assert_eq!(bits(&t_w), bits(&t_g), "{b}: dana_fused theta n={n}");
+            assert_eq!(bits(&v_w), bits(&v_g), "{b}: dana_fused v n={n}");
+            assert_eq!(bits(&s_w), bits(&s_g), "{b}: dana_fused vsum n={n}");
+
+            // dc_dana_fused_update
+            let (mut t_w, mut v_w, mut s_w) =
+                (fill(n, salt + 2), fill(n, salt + 3), fill(n, salt + 4));
+            let (mut t_g, mut v_g, mut s_g) = (t_w.clone(), v_w.clone(), s_w.clone());
+            scalar::dc_dana_fused_update(
+                &mut t_w, &mut v_w, &mut s_w, &g, &sent, gamma, eta, lambda,
+            );
+            math::with_backend(b, || {
+                math::dc_dana_fused_update(
+                    &mut t_g, &mut v_g, &mut s_g, &g, &sent, gamma, eta, lambda,
+                )
+            });
+            assert_eq!(bits(&t_w), bits(&t_g), "{b}: dc_dana theta n={n}");
+            assert_eq!(bits(&v_w), bits(&v_g), "{b}: dc_dana v n={n}");
+            assert_eq!(bits(&s_w), bits(&s_g), "{b}: dc_dana vsum n={n}");
+
+            // lookahead + the extrapolated variant at several depths
+            let theta = fill(n, salt + 5);
+            let vsum = fill(n, salt + 6);
+            let mut want = vec![0.0f32; n];
+            let mut got = vec![0.0f32; n];
+            scalar::lookahead(&mut want, &theta, &vsum, gamma, eta);
+            math::with_backend(b, || math::lookahead(&mut got, &theta, &vsum, gamma, eta));
+            assert_eq!(bits(&want), bits(&got), "{b}: lookahead n={n}");
+            for depth in [0usize, 1, 3] {
+                scalar::lookahead_extrapolated(&mut want, &theta, &vsum, gamma, eta, depth);
+                math::with_backend(b, || {
+                    math::lookahead_extrapolated(&mut got, &theta, &vsum, gamma, eta, depth)
+                });
+                assert_eq!(bits(&want), bits(&got), "{b}: extrapolated d={depth} n={n}");
+            }
+
+            // dc_adjust
+            let mut g_w = g.clone();
+            let mut g_g = g.clone();
+            scalar::dc_adjust(&mut g_w, &theta, &sent, lambda);
+            math::with_backend(b, || math::dc_adjust(&mut g_g, &theta, &sent, lambda));
+            assert_eq!(bits(&g_w), bits(&g_g), "{b}: dc_adjust n={n}");
+
+            // slim_worker_update_inplace
+            let (mut v_w, mut g_w) = (fill(n, salt + 3), g.clone());
+            let (mut v_g, mut g_g) = (v_w.clone(), g_w.clone());
+            scalar::slim_worker_update_inplace(&mut v_w, &mut g_w, gamma);
+            math::with_backend(b, || {
+                math::slim_worker_update_inplace(&mut v_g, &mut g_g, gamma)
+            });
+            assert_eq!(bits(&v_w), bits(&v_g), "{b}: slim v n={n}");
+            assert_eq!(bits(&g_w), bits(&g_g), "{b}: slim send n={n}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- (2)
+
+#[test]
+fn f16_bf16_codecs_match_scalar_bit_for_bit() {
+    for b in simd_backends() {
+        for n in lengths() {
+            let vals = fill(n, n as u64 + 11);
+
+            let mut want = vec![0xAAu8; 3]; // nonempty: append semantics
+            let mut got = want.clone();
+            scalar::f16_encode_into(&mut want, &vals);
+            math::with_backend(b, || math::f16_encode_into(&mut got, &vals));
+            assert_eq!(want, got, "{b}: f16 encode n={n}");
+
+            let mut want = vec![0xAAu8; 3];
+            let mut got = want.clone();
+            scalar::bf16_encode_into(&mut want, &vals);
+            math::with_backend(b, || math::bf16_encode_into(&mut got, &vals));
+            assert_eq!(want, got, "{b}: bf16 encode n={n}");
+
+            let mut want = vals.clone();
+            let mut got = vals.clone();
+            scalar::f16_round_trip(&mut want);
+            math::with_backend(b, || math::f16_round_trip(&mut got));
+            assert_eq!(bits(&want), bits(&got), "{b}: f16 round trip n={n}");
+
+            let mut want = vals.clone();
+            let mut got = vals;
+            scalar::bf16_round_trip(&mut want);
+            math::with_backend(b, || math::bf16_round_trip(&mut got));
+            assert_eq!(bits(&want), bits(&got), "{b}: bf16 round trip n={n}");
+        }
+
+        // Decode: exhaustive over every possible half value in one shot,
+        // plus one extra half so the length is not a lane-count multiple
+        // and the remainder loop runs too.
+        let mut all: Vec<u8> = (0..=u16::MAX).flat_map(|h: u16| h.to_le_bytes()).collect();
+        all.extend_from_slice(&0x1234u16.to_le_bytes());
+        for decode in [true, false] {
+            let mut want: Vec<f32> = vec![9.0]; // nonempty: append semantics
+            let mut got = want.clone();
+            if decode {
+                scalar::f16_decode_into(&mut want, &all);
+                math::with_backend(b, || math::f16_decode_into(&mut got, &all));
+            } else {
+                scalar::bf16_decode_into(&mut want, &all);
+                math::with_backend(b, || math::bf16_decode_into(&mut got, &all));
+            }
+            assert_eq!(
+                bits(&want),
+                bits(&got),
+                "{b}: exhaustive {} decode",
+                if decode { "f16" } else { "bf16" }
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- (3)
+
+#[test]
+fn reductions_are_bit_identical_across_backends_and_thread_context() {
+    for n in lengths() {
+        let a = fill(n, n as u64 + 21);
+        let c = fill(n, n as u64 + 22);
+        let want = (
+            scalar::dot(&a, &c).to_bits(),
+            scalar::norm2_sq(&a).to_bits(),
+            scalar::sub_norm_sq(&a, &c).to_bits(),
+        );
+        for b in simd_backends() {
+            let got = math::with_backend(b, || {
+                (
+                    math::dot(&a, &c).to_bits(),
+                    math::norm2_sq(&a).to_bits(),
+                    math::sub_norm_sq(&a, &c).to_bits(),
+                )
+            });
+            assert_eq!(want, got, "{b}: reductions n={n}");
+        }
+        // The executing thread is irrelevant: the same reduction run from
+        // inside pool workers of any size returns the same bits.
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let mut out = vec![(0u64, 0u64, 0u64); 1];
+            pool.par_chunks_mut(&mut out, |_, slot| {
+                slot[0] = (
+                    scalar::dot(&a, &c).to_bits(),
+                    scalar::norm2_sq(&a).to_bits(),
+                    scalar::sub_norm_sq(&a, &c).to_bits(),
+                );
+            });
+            assert_eq!(want, out[0], "pool threads={threads} n={n}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- (4)
+
+/// One chunk's worth of work for the pooled-vs-scoped duel: a momentum
+/// step per element (a plain `fn` item so both vehicles get the exact
+/// same callee).
+fn duel_step(_i: usize, chunk: &mut [(f32, f32, f32)]) {
+    for (t, v, g) in chunk.iter_mut() {
+        let mut ts = [*t];
+        let mut vs = [*v];
+        scalar::momentum_step(&mut ts, &mut vs, &[*g], 0.9, 0.05);
+        (*t, *v) = (ts[0], vs[0]);
+    }
+}
+
+#[test]
+fn pooled_kernel_fanout_equals_scoped_reference() {
+    for threads in [1usize, 2, 3, 7] {
+        let pool = WorkerPool::new(threads);
+        for n in [1usize, 16, 257, 1003] {
+            let g = fill(n, n as u64 + 31);
+            let theta0 = fill(n, n as u64 + 32);
+            let v0 = fill(n, n as u64 + 33);
+            // Scoped reference: chunked momentum steps over paired state.
+            let mut scoped: Vec<(f32, f32, f32)> = theta0
+                .iter()
+                .zip(&v0)
+                .zip(&g)
+                .map(|((&t, &v), &g)| (t, v, g))
+                .collect();
+            let mut pooled = scoped.clone();
+            parallel::par_chunks_mut(&mut scoped, threads, duel_step);
+            pool.par_chunks_mut(&mut pooled, duel_step);
+            let key = |v: &[(f32, f32, f32)]| -> Vec<(u32, u32)> {
+                v.iter().map(|(t, v, _)| (t.to_bits(), v.to_bits())).collect()
+            };
+            assert_eq!(key(&scoped), key(&pooled), "threads={threads} n={n}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- (5)
+
+fn smoke_cfg(kind: AlgorithmKind, workers: usize, epochs: f64) -> TrainConfig {
+    let mut c = TrainConfig::preset(Workload::C10, kind, workers, epochs);
+    c.seed = 47;
+    c.metrics_every = 0;
+    c
+}
+
+fn start_server(c: &TrainConfig, k: usize) -> NetServer {
+    let master: Box<dyn Master> = make_master(
+        c.algorithm,
+        &real_async::synthetic_theta0(k),
+        LrSchedule::new(c.schedule.clone()),
+        0,
+        c.shards,
+        2,
+    );
+    NetServer::start(master, "127.0.0.1:0", ServeOptions::default()).unwrap()
+}
+
+/// `--kernels scalar` vs auto-dispatch, end to end over loopback: the
+/// trajectories must be bit-for-bit identical.  DANA-Zero covers the
+/// fused elementwise path; YellowFin additionally drives the reductions
+/// (curvature/variance statistics) through the dispatch layer.
+#[test]
+fn loopback_scalar_vs_auto_dispatch_is_bit_for_bit() {
+    let k = 48;
+    let widest = *math::available_backends().last().unwrap();
+    for kind in [AlgorithmKind::DanaZero, AlgorithmKind::YellowFin] {
+        let c = smoke_cfg(kind, 3, 0.6);
+        let run = |b: KernelBackend| {
+            math::with_backend(b, || {
+                let mut srv = start_server(&c, k);
+                let mut rc = c.clone();
+                rc.master_addr = Some(srv.url());
+                let report = sim_trainer::run_synthetic(&rc, k).unwrap();
+                srv.stop();
+                report
+            })
+        };
+        let scalar_run = run(KernelBackend::Scalar);
+        let auto_run = run(widest);
+        assert_eq!(
+            scalar_run.final_test_loss, auto_run.final_test_loss,
+            "{kind}: final loss diverged between scalar and {widest}"
+        );
+        assert_eq!(scalar_run.loss_curve, auto_run.loss_curve, "{kind}: loss curve");
+        assert_eq!(scalar_run.steps, auto_run.steps, "{kind}: steps");
+    }
+}
+
+/// The in-process (no wire) driver agrees across backends too — a faster
+/// bisection signal than the loopback pair when a backend regresses.
+#[test]
+fn in_process_trainer_is_backend_invariant() {
+    let k = 32;
+    let widest = *math::available_backends().last().unwrap();
+    let c = smoke_cfg(AlgorithmKind::DanaDc, 3, 0.5);
+    let a = math::with_backend(KernelBackend::Scalar, || {
+        sim_trainer::run_synthetic(&c, k).unwrap()
+    });
+    let b = math::with_backend(widest, || sim_trainer::run_synthetic(&c, k).unwrap());
+    assert_eq!(a.final_test_loss, b.final_test_loss);
+    assert_eq!(a.loss_curve, b.loss_curve);
+}
+
+/// Sanity on the harness itself: finite fills really are finite and the
+/// weird pool really contains NaNs/infs/subnormals (guards against a
+/// refactor silently defanging the adversarial inputs).
+#[test]
+fn weird_pool_is_actually_weird() {
+    let v = fill(3 * WEIRD.len(), 0);
+    assert!(v.iter().any(|x| x.is_nan()));
+    assert!(v.iter().any(|x| x.is_infinite()));
+    assert!(v.iter().any(|x| x.is_subnormal()));
+    assert!(v.iter().any(|&x| x == 0.0 && x.is_sign_negative()));
+    assert!(fill_finite(64, 1).iter().all(|x| x.is_finite()));
+}

@@ -72,6 +72,7 @@ fn two_server_example_parses_to_expected_struct() {
         pipeline_depth: 1,
         leave_policy: LeavePolicy::Retire,
         encodings: EncodingSet::ALL,
+        kernels: Default::default(),
         metrics_every: 0,
         servers: vec![
             ServerSpec {
@@ -196,6 +197,7 @@ fn serve_spec_from_manifest_matches_flag_spelling() {
         status_addr: Some("127.0.0.1:9636".into()),
         retention: RetentionPolicy { keep_last: 8, keep_hourly: 0 },
         encodings: EncodingSet::ALL,
+        kernels: Default::default(),
         metrics_every: 0,
         artifacts_dir: got.artifacts_dir.clone(),
         standby: None,
